@@ -1,0 +1,107 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): the paper's §3.2 customer-
+//! segmentation program — TPCx-BB Q26 — through ALL THREE LAYERS:
+//!
+//!   L3 rust: data generation → HFS files → parallel hyperslab reads →
+//!            optimized relational plan (pushdown, pruning, 1D_VAR) →
+//!            SPMD join/aggregate/filter → feature scaling →
+//!            matrix assembly (rebalance inserted automatically)
+//!   L2/L1:   k-means via the AOT-compiled JAX model calling the Pallas
+//!            distance kernel, executed from rust over PJRT
+//!
+//!     make artifacts && cargo run --release --example customer_segmentation
+
+use hiframes::bigbench::{self, q26};
+use hiframes::metrics::time_it;
+
+fn main() -> anyhow::Result<()> {
+    let workers = hiframes::config::default_workers();
+    let sf = std::env::var("HIFRAMES_SF")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    println!("customer segmentation (TPCx-BB Q26): sf={sf} workers={workers}");
+
+    // 1. generate and persist to HFS (the paper reads HDF5 files)
+    let db = bigbench::generate(&bigbench::GenOptions {
+        scale_factor: sf,
+        click_skew: 0.0,
+        seed: 7,
+    });
+    let dir = std::env::temp_dir().join("hiframes_e2e");
+    std::fs::create_dir_all(&dir)?;
+    let ss_path = dir.join("store_sales.hfs");
+    let item_path = dir.join("item.hfs");
+    hiframes::io::write_hfs(&ss_path, &db.store_sales)?;
+    hiframes::io::write_hfs(&item_path, &db.item)?;
+    println!(
+        "wrote {} sales rows + {} items to {}",
+        db.store_sales.num_rows(),
+        db.item.num_rows(),
+        dir.display()
+    );
+
+    // 2. the §3.2 program, reading from files
+    let hf = HiFrames::with_workers(workers);
+    let store_sales = hf.read_hfs("store_sales", &ss_path)?;
+    let item = hf.read_hfs("item", &item_path)?;
+
+    use hiframes::prelude::*;
+    let p = q26::Q26Params::default();
+    let books = item.filter(col("i_category").eq_(lit(p.category.as_str())));
+    let sale_items = store_sales.join(&books, "ss_item_sk", "i_item_sk");
+    let mut aggs = vec![AggExpr::new("cnt", AggFn::Count, col("i_class_id"))];
+    for k in 1..=q26::N_FEATURES {
+        aggs.push(AggExpr::new(
+            &format!("id{k}"),
+            AggFn::Sum,
+            col("i_class_id").eq_(lit(k)),
+        ));
+    }
+    let c_i_points = sale_items
+        .aggregate("ss_customer_sk", aggs)
+        .filter(col("cnt").gt(lit(p.min_count)));
+
+    let ((m, v), secs_scalar) = time_it(|| {
+        (
+            c_i_points.mean("id3").unwrap(),
+            c_i_points.var("id3").unwrap().max(1e-9),
+        )
+    });
+    let scaled = c_i_points.with_column("id3", col("id3").sub(lit(m)).div(lit(v)));
+
+    let (relational, secs_rel) = time_it(|| scaled.clone().collect().unwrap());
+    println!(
+        "relational stage: {} customers in {:.1} ms (+{:.1} ms scaling stats)",
+        relational.num_rows(),
+        secs_rel * 1e3,
+        secs_scalar * 1e3
+    );
+    println!("  throughput: {:.2} M input rows/s",
+        hiframes::metrics::mrows_per_sec(db.store_sales.num_rows(), secs_rel));
+
+    // 3. k-means through PJRT artifacts (fallback to the rust kernel when
+    //    artifacts are missing, so the example always runs)
+    let use_pjrt = hiframes::runtime::artifacts_available();
+    let feature_names: Vec<String> = std::iter::once("cnt".to_string())
+        .chain((1..=q26::N_FEATURES).map(|k| format!("id{k}")))
+        .collect();
+    let refs: Vec<&str> = feature_names.iter().map(|s| s.as_str()).collect();
+    let (centroids, secs_ml) = time_it(|| {
+        scaled
+            .matrix_assembly(&refs)
+            .kmeans(p.k, p.iters, use_pjrt)
+            .collect()
+            .unwrap()
+    });
+    println!(
+        "k-means ({}) in {:.1} ms:",
+        if use_pjrt {
+            "PJRT artifacts: L2 jax + L1 pallas"
+        } else {
+            "rust kernel — run `make artifacts` for the PJRT path"
+        },
+        secs_ml * 1e3
+    );
+    println!("{centroids}");
+    Ok(())
+}

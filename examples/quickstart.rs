@@ -1,0 +1,87 @@
+//! Quickstart: the HiFrames data-frame API on a small table — every row of
+//! the paper's Table 1 in one runnable program.
+//!
+//!     cargo run --release --example quickstart
+
+use hiframes::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // a small frame: integer key + two numeric columns (the paper's
+    // micro-benchmark schema)
+    let hf = HiFrames::with_workers(4);
+    let df1 = hf.table(
+        "df1",
+        Table::from_pairs(vec![
+            ("id", Column::I64(vec![1, 2, 3, 4, 5, 6, 7, 8])),
+            (
+                "x",
+                Column::F64(vec![0.5, 1.5, 0.7, 2.5, 0.2, 3.5, 0.9, 1.1]),
+            ),
+            (
+                "y",
+                Column::F64(vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0]),
+            ),
+        ])?,
+    );
+
+    // ---- projection: v = df[:id] -----------------------------------------
+    let ids = df1.select(&["id"]).collect()?;
+    println!("projection:\n{ids}");
+
+    // ---- filter: df2 = df[:id < 5] ----------------------------------------
+    let df2 = df1.filter(col("id").lt(lit(5i64)));
+    println!("filter id<5:\n{}", df2.collect()?);
+
+    // ---- join: df3 = join(df1, dfr, :id == :cid) ---------------------------
+    let dfr = hf.table(
+        "dfr",
+        Table::from_pairs(vec![
+            ("cid", Column::I64(vec![2, 4, 6, 8])),
+            ("label", Column::Str(vec!["a".into(), "b".into(), "c".into(), "d".into()])),
+        ])?,
+    );
+    let df3 = df1.join(&dfr, "id", "cid").sort_by("id");
+    println!("join:\n{}", df3.collect()?);
+
+    // ---- aggregate: df2 = aggregate(df1, :id, :xc = sum(:x<1.0), :ym = mean(:y))
+    let keyed = df1.with_column("id", col("id").rem(lit(3i64)));
+    let agg = keyed
+        .aggregate(
+            "id",
+            vec![
+                AggExpr::new("xc", AggFn::Sum, col("x").lt(lit(1.0))),
+                AggExpr::new("ym", AggFn::Mean, col("y")),
+            ],
+        )
+        .sort_by("id");
+    println!("aggregate:\n{}", agg.collect()?);
+
+    // ---- concatenation: df3 = [df1; df2] -----------------------------------
+    println!("concat rows: {}", df1.concat(&df1).count()?);
+
+    // ---- cumulative sum ----------------------------------------------------
+    let cs = df1.cumsum("x", "cumsum_x").select(&["cumsum_x"]);
+    println!("cumsum:\n{}", cs.collect()?);
+
+    // ---- SMA / WMA stencils (Table 1's stencil API) ------------------------
+    let sma = df1.sma("x", "sma3", 3).select(&["sma3"]).collect()?;
+    println!("SMA(3):\n{sma}");
+    let wma = df1.wma("x", "wma").select(&["wma"]).collect()?;
+    println!("WMA (x[-1]+2x[0]+x[1])/4:\n{wma}");
+
+    // ---- general array expressions + UDF inside a filter -------------------
+    let udf = Udf::new("norm", |a| (a[0] * a[0] + a[1] * a[1]).sqrt());
+    let fancy = df1.filter(
+        Expr::Udf(udf, vec![col("x"), col("y")]).lt(lit(50.0)),
+    );
+    println!("UDF filter rows: {}", fancy.count()?);
+
+    // the optimized plan for the join query, as the compiler sees it
+    println!("\noptimized plan for the join query:");
+    let optimized = hiframes::passes::optimize(
+        df3.plan().clone(),
+        &hiframes::passes::PassOptions::default(),
+    )?;
+    println!("{optimized}");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! TPCx-BB Q05 / Q25 / Q26 on both engines (paper §5.1, Fig. 11).
+//!
+//!     cargo run --release --example tpcx_bb -- --sf 1 --workers 4 [--skew 1.5]
+
+use hiframes::baseline::sparklike::SparkLike;
+use hiframes::bigbench::{self, q05, q25, q26};
+use hiframes::frame::HiFrames;
+use hiframes::metrics::time_it;
+
+fn arg(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let sf = arg("--sf", 1.0);
+    let workers = arg("--workers", hiframes::config::default_workers() as f64) as usize;
+    let skew = arg("--skew", 0.0);
+    println!("TPCx-BB: sf={sf} workers={workers} skew={skew}");
+
+    let db = bigbench::generate(&bigbench::GenOptions {
+        scale_factor: sf,
+        click_skew: skew,
+        seed: 42,
+    });
+    println!(
+        "generated: store_sales={} web_sales={} clicks={} items={} customers={}",
+        db.store_sales.num_rows(),
+        db.web_sales.num_rows(),
+        db.web_clickstream.num_rows(),
+        db.item.num_rows(),
+        db.customer.num_rows()
+    );
+
+    let hf = HiFrames::with_workers(workers);
+    let eng = SparkLike::new(workers, workers * 2);
+
+    // ---- Q26 ----------------------------------------------------------------
+    let p26 = q26::Q26Params::default();
+    let (ours, h) = time_it(|| {
+        q26::hiframes_relational(&hf, &db, &p26)
+            .collect()
+            .unwrap()
+    });
+    let (theirs, s) = time_it(|| {
+        eng.collect(&q26::sparklike_relational(&eng, &db, &p26).unwrap())
+            .unwrap()
+    });
+    println!(
+        "Q26  hiframes {:8.1} ms   sparklike {:8.1} ms   speedup {:4.1}x   rows {} / {}",
+        h * 1e3,
+        s * 1e3,
+        s / h,
+        ours.num_rows(),
+        theirs.num_rows()
+    );
+
+    // ---- Q25 ----------------------------------------------------------------
+    let (ours, h) = time_it(|| q25::hiframes_relational(&hf, &db).collect().unwrap());
+    let (theirs, s) = time_it(|| {
+        eng.collect(&q25::sparklike_relational(&eng, &db).unwrap())
+            .unwrap()
+    });
+    println!(
+        "Q25  hiframes {:8.1} ms   sparklike {:8.1} ms   speedup {:4.1}x   rows {} / {}",
+        h * 1e3,
+        s * 1e3,
+        s / h,
+        ours.num_rows(),
+        theirs.num_rows()
+    );
+
+    // ---- Q05 ----------------------------------------------------------------
+    let (ours, h) = time_it(|| q05::hiframes_relational(&hf, &db).collect().unwrap());
+    let (theirs, s) = time_it(|| {
+        eng.collect(&q05::sparklike_relational(&eng, &db).unwrap())
+            .unwrap()
+    });
+    println!(
+        "Q05  hiframes {:8.1} ms   sparklike {:8.1} ms   speedup {:4.1}x   rows {} / {}",
+        h * 1e3,
+        s * 1e3,
+        s / h,
+        ours.num_rows(),
+        theirs.num_rows()
+    );
+    if skew > 0.0 {
+        let (factor, counts) = q05::join_imbalance(&db, workers)?;
+        println!("Q05 skewed join imbalance: max/mean = {factor:.2} (per-rank rows {counts:?})");
+    }
+    Ok(())
+}

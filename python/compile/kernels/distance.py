@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: tiled pairwise squared distances.
+
+The k-means hot-spot. For points ``x (N, D)`` and centroids ``c (K, D)``
+computes ``dist[i, j] = ||x_i - c_j||^2`` via the MXU-friendly factored form
+
+    dist = |x|^2 - 2 x c^T + |c|^2
+
+so the inner loop is a matmul (``jnp.dot`` with
+``preferred_element_type=float32``) that maps onto the TPU MXU systolic
+array. The grid tiles N into ``TILE_N``-row blocks; each grid step holds one
+``(TILE_N, D)`` point tile plus the full ``(K, D)`` centroid block in VMEM —
+for the shipped config (TILE_N=512, D<=64, K<=64, f32) that is
+``512*64*4 + 64*64*4 + 512*64*4 = ~0.28 MiB``, far under the ~16 MiB VMEM
+budget, leaving room for double buffering (see DESIGN.md §Hardware-Adaptation
+and EXPERIMENTS.md §Perf for the utilization estimate).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of points processed per grid step.
+TILE_N = 512
+
+
+def _distance_kernel(x_ref, c_ref, o_ref):
+    """One grid step: distances of a point tile against all centroids."""
+    x = x_ref[...]  # (TILE_N, D)
+    c = c_ref[...]  # (K, D)
+    # |x|^2 row norms, |c|^2 col norms, cross term on the MXU
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (TILE_N, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # (TILE_N, K)
+    # clamp tiny negatives from cancellation so argmin/sqrt stay safe
+    o_ref[...] = jnp.maximum(x2 - 2.0 * cross + c2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pairwise_distances(x, c):
+    """``(N, D), (K, D) -> (N, K)`` squared distances via the Pallas kernel.
+
+    N must be a multiple of TILE_N or smaller than it (single block).
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    tile = min(TILE_N, n)
+    assert n % tile == 0, f"N={n} not a multiple of tile {tile}"
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _distance_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),  # stream point tiles
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids resident
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        interpret=True,
+    )(x.astype(jnp.float32), c.astype(jnp.float32))

@@ -1,0 +1,82 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the kernels match these within float tolerance, and the rust side's
+`ops::stencil_serial` / `ml::kmeans` implement the same formulas.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_distances_ref(x, c):
+    """(N, D), (K, D) -> (N, K) squared euclidean distances."""
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def wma_ref(x, w):
+    """Radius-1 weighted window with truncated+renormalized edges."""
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    n = x.shape[0]
+    wtotal = w.sum()
+    out = np.zeros(n)
+    for i in range(n):
+        acc, used = 0.0, 0.0
+        for j, wj in enumerate(w):
+            idx = i + j - 1
+            if 0 <= idx < n:
+                acc += wj * x[idx]
+                used += wj
+        out[i] = acc * wtotal / used if used != 0.0 else 0.0
+    return out.astype(np.float32)
+
+
+def kmeans_step_ref(points, mask, centroids):
+    """One masked k-means step: (sums (K,D), counts (K,), inertia)."""
+    points = np.asarray(points, np.float64)
+    mask = np.asarray(mask, np.float64)
+    centroids = np.asarray(centroids, np.float64)
+    k, d = centroids.shape
+    dist = ((points[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    assign = dist.argmin(axis=1)
+    sums = np.zeros((k, d))
+    counts = np.zeros(k)
+    inertia = 0.0
+    for i, a in enumerate(assign):
+        if mask[i] > 0:
+            sums[a] += points[i]
+            counts[a] += 1
+            inertia += dist[i, a]
+    return sums.astype(np.float32), counts.astype(np.float32), np.float32(inertia)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + np.exp(-z))
+
+
+def logreg_loss_grad_ref(xs, ys, mask, w):
+    """Masked-sum logistic loss and gradient (not averaged: partials)."""
+    xs = np.asarray(xs, np.float64)
+    ys = np.asarray(ys, np.float64)
+    mask = np.asarray(mask, np.float64)
+    w = np.asarray(w, np.float64)
+    d = xs.shape[1]
+    z = xs @ w[:d] + w[d]
+    p = sigmoid(z)
+    pc = np.clip(p, 1e-7, 1.0 - 1e-7)
+    loss = -np.sum(mask * (ys * np.log(pc) + (1 - ys) * np.log(1 - pc)))
+    err = (p - ys) * mask
+    grad = np.concatenate([xs.T @ err, [err.sum()]])
+    return np.float32(loss), grad.astype(np.float32)
+
+
+def standardize_ref(x):
+    """The paper's Q26 feature scaling: (x - mean) / var."""
+    x = np.asarray(x, np.float64)
+    m = x.mean()
+    v = x.var()
+    return ((x - m) / v).astype(np.float32)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: 1-D weighted window stencil (SMA/WMA).
+
+Semantics shared with the whole stack (rust `ops::stencil`, `ref.py`, the
+serial baselines): radius-1 window with weights ``w = (w0, w1, w2)``;
+interior points get ``w0*x[i-1] + w1*x[i] + w2*x[i+1]``; the two edge points
+use the truncated window renormalized by the weight mass actually used:
+
+    out[i] = (sum_valid w*x) * (sum_all w) / (sum_valid w)
+
+The kernel tiles the series into VMEM blocks; each grid step loads its block
+plus a one-element halo on each side (expressed by loading the *full* row
+block and shifting — on real TPU the HBM->VMEM pipeline would stream
+overlapping blocks via BlockSpec index_map; with interpret=True we keep one
+block per grid step and do the halo with jnp.roll + masking, which lowers to
+identical HLO numerics).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wma_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]  # (N,)
+    w = w_ref[...]  # (3,)
+    n = x.shape[0]
+    idx = jnp.arange(n)
+    # neighbor loads via roll; edges masked off below
+    left = jnp.roll(x, 1)
+    right = jnp.roll(x, -1)
+    has_left = idx > 0
+    has_right = idx < n - 1
+    num = (
+        jnp.where(has_left, w[0] * left, 0.0)
+        + w[1] * x
+        + jnp.where(has_right, w[2] * right, 0.0)
+    )
+    used = jnp.where(has_left, w[0], 0.0) + w[1] + jnp.where(has_right, w[2], 0.0)
+    wtotal = w[0] + w[1] + w[2]
+    o_ref[...] = num * wtotal / used
+
+
+def wma(x, w):
+    """``(N,), (3,) -> (N,)`` weighted moving average via the Pallas kernel."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        _wma_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,68 @@
+"""L2 — the JAX analytics model (build-time only; never on the query path).
+
+Entry points, each calling into the L1 Pallas kernels and AOT-lowered by
+`aot.py`:
+
+* ``kmeans_step(points, mask, centroids)`` — one masked k-means step
+  returning per-cluster (sums, counts) partials + inertia. Distances come
+  from the Pallas kernel (`kernels.distance`); the caller (rust `ml`)
+  allreduces the partials in distributed mode and performs the division.
+* ``logreg_step(xs, ys, mask, w)`` — logistic-regression loss + gradient.
+  The gradient is produced by ``jax.grad`` (fwd+bwd through XLA), so the
+  lowered artifact contains the backward pass — no Python at runtime.
+* ``wma(x, w)`` — the Pallas stencil kernel (SMA = equal weights).
+* ``standardize(x)`` — the paper's Q26 feature scaling `(x - mean)/var`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.distance import pairwise_distances
+from .kernels.stencil import wma as wma_kernel
+
+
+def kmeans_step(points, mask, centroids):
+    """One k-means assignment + partial-update step.
+
+    points (N, D) f32, mask (N,) f32 in {0,1}, centroids (K, D) f32
+    -> (sums (K, D), counts (K,), inertia ())
+    """
+    k = centroids.shape[0]
+    dist = pairwise_distances(points, centroids)  # Pallas kernel (N, K)
+    assign = jnp.argmin(dist, axis=1)
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * mask[:, None]
+    sums = jnp.dot(onehot.T, points, preferred_element_type=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    inertia = jnp.sum(jnp.min(dist, axis=1) * mask)
+    return sums, counts, inertia
+
+
+def _logreg_loss(w, xs, ys, mask):
+    d = xs.shape[1]
+    z = jnp.dot(xs, w[:d]) + w[d]
+    p = jax.nn.sigmoid(z)
+    pc = jnp.clip(p, 1e-7, 1.0 - 1e-7)
+    return -jnp.sum(mask * (ys * jnp.log(pc) + (1.0 - ys) * jnp.log(1.0 - pc)))
+
+
+def logreg_step(xs, ys, mask, w):
+    """Loss + gradient partials via jax.grad (the lowered bwd pass).
+
+    xs (N, D), ys (N,), mask (N,), w (D+1,) -> (grad (D+1,), loss ())
+    """
+    loss, grad = jax.value_and_grad(_logreg_loss)(w, xs, ys, mask)
+    return grad, loss
+
+
+def wma(x, w):
+    """Weighted moving average via the Pallas stencil kernel."""
+    return wma_kernel(x, w)
+
+
+def standardize(x):
+    """(x - mean) / var — population variance, matching rust `var_f64`."""
+    x = x.astype(jnp.float32)
+    m = jnp.mean(x)
+    v = jnp.mean((x - m) * (x - m))
+    return (x - m) / v

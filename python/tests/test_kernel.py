@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes and values; fixed cases pin the paper's examples
+(Table 1 WMA weights) and edge semantics.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.distance import pairwise_distances, TILE_N
+from compile.kernels.stencil import wma
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# pairwise distances
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 7, 32, 512, 1024]),
+    d=st.integers(min_value=1, max_value=8),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_distance_kernel_matches_ref(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) * 3.0
+    c = rng.normal(size=(k, d)).astype(np.float32) * 3.0
+    got = np.asarray(pairwise_distances(x, c))
+    want = np.asarray(ref.pairwise_distances_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_distance_kernel_tiled_path():
+    # exercise the multi-block grid (N > TILE_N)
+    rng = np.random.default_rng(0)
+    n = TILE_N * 3
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    c = rng.normal(size=(5, 4)).astype(np.float32)
+    got = np.asarray(pairwise_distances(x, c))
+    want = np.asarray(ref.pairwise_distances_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_distance_nonneg_and_zero_diagonal():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    got = np.asarray(pairwise_distances(x, x))
+    assert (got >= 0).all()
+    np.testing.assert_allclose(np.diag(got), 0.0, atol=1e-4)
+
+
+def test_distance_rejects_dim_mismatch():
+    x = np.zeros((4, 3), np.float32)
+    c = np.zeros((2, 5), np.float32)
+    with pytest.raises(AssertionError):
+        pairwise_distances(x, c)
+
+
+# ---------------------------------------------------------------------------
+# wma stencil
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    w0=st.floats(min_value=0.05, max_value=2.0),
+    w1=st.floats(min_value=0.05, max_value=2.0),
+    w2=st.floats(min_value=0.05, max_value=2.0),
+)
+def test_wma_kernel_matches_ref(n, seed, w0, w1, w2):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    w = np.array([w0, w1, w2], np.float32)
+    got = np.asarray(wma(x, w))
+    want = ref.wma_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_wma_paper_weights():
+    # Table 1's WMA: (x[-1] + 2 x[0] + x[1]) / 4
+    x = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    w = np.array([0.25, 0.5, 0.25], np.float32)
+    got = np.asarray(wma(x, w))
+    # interior: exact weighted average
+    np.testing.assert_allclose(got[1], 2.0, rtol=1e-5)
+    np.testing.assert_allclose(got[2], 3.0, rtol=1e-5)
+
+
+def test_sma_is_wma_with_equal_weights():
+    x = np.arange(10, dtype=np.float32)
+    w = np.array([1 / 3, 1 / 3, 1 / 3], np.float32)
+    got = np.asarray(wma(x, w))
+    # interior equals the centered mean
+    np.testing.assert_allclose(got[1:-1], x[1:-1], rtol=1e-5)
+    # edges: truncated + renormalized -> mean of the two available points
+    np.testing.assert_allclose(got[0], 0.5, atol=1e-5)
+    np.testing.assert_allclose(got[-1], 8.5, atol=1e-5)

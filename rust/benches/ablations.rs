@@ -1,0 +1,155 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. **predicate pushdown through join** on/off (paper §4.3's flagship
+//!    optimization, Fig. 6 workload shape);
+//! 2. **1D_VAR lazy rebalance** vs rebalance-after-every-relational-op
+//!    (paper §4.4: "this can be very costly");
+//! 3. **local pre-aggregation** vs raw shuffle (the decomposed partial
+//!    states of `expr::agg`);
+//! 4. **column pruning** on/off over a wide source.
+
+use hiframes::bench::*;
+use hiframes::datagen::micro_table;
+use hiframes::exec::{collect_optimized, ExecOptions};
+use hiframes::ops::aggregate::AggStrategy;
+use hiframes::passes::{optimize, PassOptions, RebalanceMode};
+use hiframes::prelude::*;
+
+fn main() {
+    bench_main("ablations", || {
+        let scale = bench_scale().min(0.01);
+        let workers = bench_workers();
+        let reps = bench_reps();
+        let rows = ((500e6 * scale) as usize).clamp(50_000, 2_000_000);
+        let mut table = BenchTable::new(
+            &format!("Ablations ({rows} rows, {workers} workers)"),
+            "off",
+        );
+
+        // ---- 1. predicate pushdown through join -----------------------------
+        let hf = HiFrames::with_workers(workers);
+        let customers = micro_table(rows / 10, rows as i64 / 10, 21);
+        let orders = {
+            let t = micro_table(rows, rows as i64 / 10, 22);
+            Table::from_pairs(vec![
+                ("customerId", t.column("id").unwrap().clone()),
+                ("amount", t.column("y").unwrap().clone()),
+            ])
+            .unwrap()
+        };
+        let q = hf
+            .table("customer", customers.clone())
+            .join(&hf.table("order", orders.clone()), "id", "customerId")
+            .filter(col("amount").gt(lit(90.0))); // selective predicate
+        let plan = q.plan().clone();
+        for (label, pushdown) in [("off", false), ("on", true)] {
+            let passes = PassOptions {
+                pushdown,
+                ..PassOptions::default()
+            };
+            let optimized = optimize(plan.clone(), &passes).unwrap();
+            let opts = ExecOptions {
+                workers,
+                passes,
+                agg_strategy: AggStrategy::RawShuffle,
+            };
+            table.run(label, "pushdown", rows, 1, reps, || {
+                collect_optimized(&optimized, &opts).unwrap().num_rows()
+            });
+        }
+
+        // ---- 2. lazy 1D_VAR vs always-rebalance ------------------------------
+        let t = micro_table(rows, 1000, 23);
+        let q = hf
+            .table("t", t.clone())
+            .filter(col("x").gt(lit(0.5)))
+            .filter(col("y").gt(lit(10.0)))
+            .sma("y", "s", 3);
+        let plan = q.plan().clone();
+        for (label, mode) in [("off", RebalanceMode::Always), ("on", RebalanceMode::Lazy)] {
+            let passes = PassOptions {
+                rebalance: mode,
+                fuse_filters: false, // keep two relational ops for Always mode
+                ..PassOptions::default()
+            };
+            let optimized = optimize(plan.clone(), &passes).unwrap();
+            let nreb = hiframes::passes::distributed::count_rebalances(&optimized);
+            eprintln!("  rebalance mode {mode:?}: {nreb} rebalance nodes");
+            let opts = ExecOptions {
+                workers,
+                passes,
+                agg_strategy: AggStrategy::RawShuffle,
+            };
+            table.run(label, "lazy-1dvar", rows, 1, reps, || {
+                collect_optimized(&optimized, &opts).unwrap().num_rows()
+            });
+        }
+
+        // ---- 3. pre-aggregation vs raw shuffle -------------------------------
+        // low-cardinality keys: pre-agg ships K states instead of N rows
+        let t = micro_table(rows, 100, 24);
+        let q = hf.table("t", t.clone()).aggregate(
+            "id",
+            vec![
+                AggExpr::new("s", AggFn::Sum, col("x")),
+                AggExpr::new("m", AggFn::Mean, col("y")),
+            ],
+        );
+        let plan = optimize(q.plan().clone(), &PassOptions::default()).unwrap();
+        for (label, strat) in [
+            ("off", AggStrategy::RawShuffle),
+            ("on", AggStrategy::PreAggregate),
+        ] {
+            let opts = ExecOptions {
+                workers,
+                passes: PassOptions::default(),
+                agg_strategy: strat,
+            };
+            table.run(label, "pre-agg", rows, 1, reps, || {
+                collect_optimized(&plan, &opts).unwrap().num_rows()
+            });
+        }
+
+        // ---- 4. column pruning over a wide source ----------------------------
+        let wide = {
+            let base = micro_table(rows, 1000, 25);
+            let mut pairs: Vec<(String, Column)> = vec![
+                ("id".into(), base.column("id").unwrap().clone()),
+                ("x".into(), base.column("x").unwrap().clone()),
+            ];
+            for i in 0..10 {
+                pairs.push((format!("pad{i}"), base.column("y").unwrap().clone()));
+            }
+            let refs: Vec<(&str, Column)> =
+                pairs.iter().map(|(n, c)| (n.as_str(), c.clone())).collect();
+            Table::from_pairs(refs).unwrap()
+        };
+        let q = hf
+            .table("wide", wide.clone())
+            .filter(col("x").lt(lit(0.5)))
+            .select(&["id"]);
+        let plan = q.plan().clone();
+        for (label, prune) in [("off", false), ("on", true)] {
+            let passes = PassOptions {
+                prune_columns: prune,
+                ..PassOptions::default()
+            };
+            let optimized = optimize(plan.clone(), &passes).unwrap();
+            let opts = ExecOptions {
+                workers,
+                passes,
+                agg_strategy: AggStrategy::RawShuffle,
+            };
+            table.run(label, "pruning", rows, 1, reps, || {
+                collect_optimized(&optimized, &opts).unwrap().num_rows()
+            });
+        }
+
+        table.print_summary();
+        for op in ["pushdown", "lazy-1dvar", "pre-agg", "pruning"] {
+            if let (Some(off), Some(on)) = (table.median("off", op), table.median("on", op)) {
+                println!("{op}: {:.2}x from the optimization", off / on);
+            }
+        }
+    });
+}

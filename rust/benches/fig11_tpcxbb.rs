@@ -1,0 +1,92 @@
+//! Fig. 11 — TPCx-BB Q26 / Q25 / Q05 across scale factors, HiFrames vs
+//! sparklike. Paper shape: HiFrames 3–7× (Q26), 5–10× (Q25), and for Q05 a
+//! skewed-join stress (we additionally report the hash-partition imbalance
+//! factor the paper attributes Spark's OOM to).
+//!
+//! Scale factors swept: {0.5, 1, 2} × HIFRAMES_BENCH_SCALE×1000 (default 1).
+
+use hiframes::baseline::sparklike::SparkLike;
+use hiframes::bench::*;
+use hiframes::bigbench::{self, q05, q25, q26};
+use hiframes::frame::HiFrames;
+
+fn main() {
+    bench_main("fig11", || {
+        let workers = bench_workers();
+        let reps = bench_reps();
+        let mult = (bench_scale() * 1000.0).max(0.1);
+        let sfs: Vec<f64> = [0.5, 1.0, 2.0].iter().map(|s| s * mult).collect();
+
+        let mut table = BenchTable::new(
+            &format!("Fig 11: TPCx-BB queries, sf sweep {sfs:?} ({workers} workers)"),
+            "sparklike",
+        );
+
+        for &sf in &sfs {
+            let db = bigbench::generate(&bigbench::GenOptions {
+                scale_factor: sf,
+                click_skew: 0.0,
+                seed: 42,
+            });
+            let rows = db.store_sales.num_rows();
+            let hf = HiFrames::with_workers(workers);
+
+            // Q26
+            let p26 = q26::Q26Params::default();
+            table.run("hiframes", &format!("q26/sf{sf}"), rows, 1, reps, || {
+                q26::hiframes_relational(&hf, &db, &p26)
+                    .collect()
+                    .unwrap()
+                    .num_rows()
+            });
+            {
+                let eng = SparkLike::new(workers, workers * 2);
+                table.run("sparklike", &format!("q26/sf{sf}"), rows, 1, reps, || {
+                    eng.collect(&q26::sparklike_relational(&eng, &db, &p26).unwrap())
+                        .unwrap()
+                        .num_rows()
+                });
+            }
+
+            // Q25
+            table.run("hiframes", &format!("q25/sf{sf}"), rows, 1, reps, || {
+                q25::hiframes_relational(&hf, &db).collect().unwrap().num_rows()
+            });
+            {
+                let eng = SparkLike::new(workers, workers * 2);
+                table.run("sparklike", &format!("q25/sf{sf}"), rows, 1, reps, || {
+                    eng.collect(&q25::sparklike_relational(&eng, &db).unwrap())
+                        .unwrap()
+                        .num_rows()
+                });
+            }
+
+            // Q05 (uniform keys)
+            let clicks = db.web_clickstream.num_rows();
+            table.run("hiframes", &format!("q05/sf{sf}"), clicks, 1, reps, || {
+                q05::hiframes_relational(&hf, &db).collect().unwrap().num_rows()
+            });
+            {
+                let eng = SparkLike::new(workers, workers * 2);
+                table.run("sparklike", &format!("q05/sf{sf}"), clicks, 1, reps, || {
+                    eng.collect(&q05::sparklike_relational(&eng, &db).unwrap())
+                        .unwrap()
+                        .num_rows()
+                });
+            }
+        }
+        table.print_summary();
+
+        // Q05 skew experiment: imbalance factor under Zipf keys
+        println!("\nQ05 skewed-join load imbalance (paper: Spark OOM > SF50):");
+        for skew in [0.0, 1.0, 1.5] {
+            let db = bigbench::generate(&bigbench::GenOptions {
+                scale_factor: sfs[1],
+                click_skew: skew,
+                seed: 42,
+            });
+            let (factor, counts) = q05::join_imbalance(&db, workers.max(2)).unwrap();
+            println!("  skew alpha={skew}: max/mean = {factor:5.2}  per-rank rows {counts:?}");
+        }
+    });
+}

@@ -1,0 +1,64 @@
+//! Fig. 12 — strong scaling of Q26: worker sweep at a fixed scale factor.
+//! Paper: HiFrames keeps scaling to 64 nodes while Spark SQL flattens and
+//! regresses past 16 (master bottleneck); 5× at 64 nodes.
+//!
+//! This box has few cores — the sweep tops out at 2× the physical count
+//! and the flattening point appears early; the *relative* shape (HiFrames
+//! scales to the core count, sparklike stalls sooner) is the reproduced
+//! claim. EXPERIMENTS.md records the hardware ceiling.
+
+use hiframes::baseline::sparklike::SparkLike;
+use hiframes::bench::*;
+use hiframes::bigbench::{self, q26};
+use hiframes::frame::HiFrames;
+
+fn main() {
+    bench_main("fig12", || {
+        let reps = bench_reps();
+        let mult = (bench_scale() * 1000.0).max(0.1);
+        let sf = 2.0 * mult;
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let mut sweep = vec![1usize, 2, 4, 8];
+        sweep.retain(|&w| w <= (cores * 2).max(2));
+
+        let db = bigbench::generate(&bigbench::GenOptions {
+            scale_factor: sf,
+            click_skew: 0.0,
+            seed: 42,
+        });
+        let rows = db.store_sales.num_rows();
+        let p = q26::Q26Params::default();
+
+        let mut table = BenchTable::new(
+            &format!("Fig 12: Q26 strong scaling, sf={sf} ({rows} sales rows, {cores} cores)"),
+            "sparklike",
+        );
+        for &w in &sweep {
+            let hf = HiFrames::with_workers(w);
+            table.run("hiframes", &format!("{w}w"), rows, 1, reps, || {
+                q26::hiframes_relational(&hf, &db, &p).collect().unwrap().num_rows()
+            });
+            let eng = SparkLike::new(w, w * 2);
+            table.run("sparklike", &format!("{w}w"), rows, 1, reps, || {
+                eng.collect(&q26::sparklike_relational(&eng, &db, &p).unwrap())
+                    .unwrap()
+                    .num_rows()
+            });
+        }
+        table.print_summary();
+        // speedup-vs-1-worker series (the figure's y axis)
+        for sys in ["hiframes", "sparklike"] {
+            if let Some(base) = table.median(sys, "1w") {
+                let series: Vec<String> = sweep
+                    .iter()
+                    .filter_map(|w| {
+                        table
+                            .median(sys, &format!("{w}w"))
+                            .map(|m| format!("{w}w:{:.2}x", base / m))
+                    })
+                    .collect();
+                println!("{sys} scaling: {}", series.join("  "));
+            }
+        }
+    });
+}

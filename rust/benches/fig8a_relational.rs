@@ -1,0 +1,99 @@
+//! Fig. 8a — basic relational operations: filter / join / aggregate on
+//! serial (Pandas/Julia stand-in), sparklike (Spark SQL stand-in) and
+//! HiFrames.
+//!
+//! Paper sizes: filter 2B rows, join 0.5M rows, aggregate 256M rows —
+//! scaled by HIFRAMES_BENCH_SCALE (default 0.001 → 2M / 0.5M / 256K).
+//! Expected shape (paper): HiFrames 3.8×/3.6×/70× vs Spark SQL and
+//! 177×/21×/3.5× vs Pandas.
+
+use hiframes::baseline::{serial, sparklike::SparkLike};
+use hiframes::bench::*;
+use hiframes::datagen::micro_table;
+use hiframes::prelude::*;
+
+fn main() {
+    bench_main("fig8a", || {
+        let scale = bench_scale().min(0.01);
+        let workers = bench_workers();
+        let reps = bench_reps();
+        let filter_rows = ((2e9 * scale) as usize).clamp(10_000, 4_000_000);
+        let join_rows = ((0.5e6 * (scale * 1000.0)) as usize).clamp(10_000, 500_000);
+        let agg_rows = ((256e6 * scale) as usize).clamp(10_000, 2_000_000);
+
+        let mut table = BenchTable::new(
+            &format!(
+                "Fig 8a: relational ops (filter {filter_rows} rows, join {join_rows}, \
+                 aggregate {agg_rows}; {workers} workers)"
+            ),
+            "sparklike",
+        );
+
+        // ---------------- filter ----------------
+        let t = micro_table(filter_rows, 1000, 1);
+        let pred = col("x").lt(lit(0.5));
+        table.run("serial", "filter", filter_rows, 1, reps, || {
+            serial::filter(&t, &pred).unwrap().num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&t);
+            table.run("sparklike", "filter", filter_rows, 1, reps, || {
+                eng.filter(&rdd, &pred).unwrap().num_rows()
+            });
+        }
+        let hf = HiFrames::with_workers(workers);
+        let df = hf.table("t", t.clone());
+        table.run("hiframes", "filter", filter_rows, 1, reps, || {
+            // count-style action: materialize the distributed result, no
+            // driver gather (sparklike/serial cells also stop there)
+            df.filter(pred.clone()).count().unwrap()
+        });
+        drop(df);
+        drop(t);
+
+        // ---------------- join ----------------
+        let l = micro_table(join_rows, join_rows as i64 / 2, 2);
+        let rt = micro_table(join_rows / 4, join_rows as i64 / 2, 3);
+        let r = rt.project(&["id"]).unwrap();
+        let r = Table::from_pairs(vec![("rid", r.column("id").unwrap().clone())]).unwrap();
+        table.run("serial", "join", join_rows, 1, reps, || {
+            serial::join(&l, &r, "id", "rid").unwrap().num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let (lr, rr) = (eng.parallelize(&l), eng.parallelize(&r));
+            table.run("sparklike", "join", join_rows, 1, reps, || {
+                eng.join(&lr, &rr, "id", "rid").unwrap().num_rows()
+            });
+        }
+        let dfl = hf.table("l", l.clone());
+        let dfr = hf.table("r", r.clone());
+        table.run("hiframes", "join", join_rows, 1, reps, || {
+            dfl.join(&dfr, "id", "rid").count().unwrap()
+        });
+
+        // ---------------- aggregate ----------------
+        let t = micro_table(agg_rows, 10_000, 4);
+        let aggs = vec![
+            AggExpr::new("xc", AggFn::Sum, col("x").lt(lit(0.5))),
+            AggExpr::new("ym", AggFn::Mean, col("y")),
+        ];
+        table.run("serial", "aggregate", agg_rows, 1, reps, || {
+            serial::aggregate(&t, "id", &aggs).unwrap().num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&t);
+            table.run("sparklike", "aggregate", agg_rows, 1, reps, || {
+                eng.aggregate(&rdd, "id", &aggs).unwrap().num_rows()
+            });
+        }
+        let df = hf.table("t", t.clone());
+        table.run("hiframes", "aggregate", agg_rows, 1, reps, || {
+            df.aggregate("id", aggs.clone()).count().unwrap()
+        });
+
+        table.print_summary();
+    });
+}

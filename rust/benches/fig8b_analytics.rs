@@ -1,0 +1,108 @@
+//! Fig. 8b — advanced analytics: cumsum / SMA / WMA.
+//!
+//! Paper: 256M-row column; sparklike must gather everything to ONE executor
+//! (map-reduce cannot scan/stencil), Pandas runs SMA vectorized but WMA
+//! through a row lambda. Expected shape: HiFrames ≫ sparklike (1330–20356×
+//! in the paper), Pandas SMA ≪ Pandas WMA.
+//! Scaled by HIFRAMES_BENCH_SCALE (default 0.001 → 256K rows).
+
+use hiframes::baseline::{serial, sparklike::SparkLike, sparklike::WindowKind};
+use hiframes::bench::*;
+use hiframes::ops::stencil::{sma_weights, wma_weights_124};
+use hiframes::prelude::*;
+use std::sync::Arc;
+
+fn main() {
+    bench_main("fig8b", || {
+        let scale = bench_scale().min(0.01);
+        let workers = bench_workers();
+        let reps = bench_reps();
+        let rows = ((256e6 * scale) as usize).clamp(10_000, 4_000_000);
+
+        let mut table = BenchTable::new(
+            &format!("Fig 8b: analytics ops ({rows} rows, {workers} workers)"),
+            "sparklike",
+        );
+        let t = Table::from_pairs(vec![("x", hiframes::datagen::series(rows, 7))]).unwrap();
+
+        // ---------------- cumsum ----------------
+        table.run("serial", "cumsum", rows, 1, reps, || {
+            serial::cumsum(&t, "x", "cs").unwrap().num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&t);
+            table.run("sparklike", "cumsum", rows, 0, reps, || {
+                eng.window_one_executor(&rdd, "x", "cs", WindowKind::Cumsum)
+                    .unwrap()
+                    .num_rows()
+            });
+        }
+        let hf = HiFrames::with_workers(workers);
+        let df = hf.table("t", t.clone());
+        table.run("hiframes", "cumsum", rows, 1, reps, || {
+            df.cumsum("x", "cs").count().unwrap()
+        });
+
+        // ---------------- SMA ----------------
+        table.run("serial", "sma", rows, 1, reps, || {
+            serial::sma(&t, "x", "s", 3).unwrap().num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&t);
+            table.run("sparklike", "sma", rows, 0, reps, || {
+                eng.window_one_executor(&rdd, "x", "s", WindowKind::Stencil(sma_weights(3)))
+                    .unwrap()
+                    .num_rows()
+            });
+        }
+        table.run("hiframes", "sma", rows, 1, reps, || {
+            df.sma("x", "s", 3).count().unwrap()
+        });
+
+        // ---------------- WMA ----------------
+        // serial WMA through a row lambda — the Pandas rolling.apply path
+        table.run("serial-lambda", "wma", rows, 0, reps, || {
+            serial::rolling_apply(&t, "x", "w", 3, &|win| {
+                if win.len() == 3 {
+                    (win[0] + 2.0 * win[1] + win[2]) / 4.0
+                } else {
+                    win.iter().sum::<f64>() / win.len() as f64
+                }
+            })
+            .unwrap()
+            .num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&t);
+            table.run("sparklike", "wma", rows, 0, reps, || {
+                eng.window_one_executor(
+                    &rdd,
+                    "x",
+                    "w",
+                    WindowKind::StencilUdf {
+                        window: 3,
+                        func: Arc::new(|win: &[f64]| {
+                            if win.len() == 3 {
+                                (win[0] + 2.0 * win[1] + win[2]) / 4.0
+                            } else {
+                                win.iter().sum::<f64>() / win.len() as f64
+                            }
+                        }),
+                    },
+                )
+                .unwrap()
+                .num_rows()
+            });
+        }
+        table.run("hiframes", "wma", rows, 1, reps, || {
+            df.stencil("x", "w", wma_weights_124())
+                .count()
+                .unwrap()
+        });
+
+        table.print_summary();
+    });
+}

@@ -1,0 +1,25 @@
+//! Comparison engines (substrates for the paper's evaluation):
+//!
+//! * [`sparklike`] — a faithful architectural model of the Spark SQL
+//!   execution the paper benchmarks against: a master/driver with a
+//!   centrally scheduled task queue (the sequential bottleneck of §2.2),
+//!   row-oriented partitions, fully serialized shuffles through a shuffle
+//!   store, map-side combiners for aggregation, window functions executed
+//!   on a *single* executor after a gather (the §5 "Spark SQL gathers all
+//!   the data on a single executor" behaviour), and boxed per-row UDFs
+//!   (the Fig. 9/10 overhead).
+//! * [`serial`] — the Pandas/Julia stand-in: single-threaded, eager,
+//!   vectorized columnar ops, plus a row-lambda `rolling_apply` mode that
+//!   reproduces the Pandas `rolling().apply(lambda)` slow path.
+//!
+//! Neither engine shares operator code with the HiFrames executor, so the
+//! engine-agreement tests are meaningful cross-checks.
+
+pub mod rowexpr;
+pub mod serial;
+pub mod sparklike;
+
+use crate::types::Value;
+
+/// A row in the row-oriented baseline engine.
+pub type Row = Vec<Value>;

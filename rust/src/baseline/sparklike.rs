@@ -1,0 +1,751 @@
+//! Sparklike — an architectural model of the Spark SQL execution engine the
+//! paper compares against (§2.2, §2.3, §5).
+//!
+//! What is modeled (and measured, not simulated with sleeps):
+//!
+//! * **master/driver bottleneck** — a single work queue behind a mutex;
+//!   every task dispatch and result return serializes through it.
+//! * **per-task scheduling** — stages are split into one task per
+//!   partition; workers pull tasks one at a time.
+//! * **row-oriented processing** — partitions are `Vec<Row>` with `Value`
+//!   cells (deserialized JVM objects), not columnar arrays.
+//! * **serialized shuffle** — map outputs are encoded to bytes into a
+//!   shuffle store keyed `(shuffle_id, map, reduce)` and decoded by the
+//!   reduce side (Spark's shuffle write/read).
+//! * **map-reduce-only communication** — no scan or halo primitives:
+//!   `cumsum`/window ops repartition everything to ONE partition and run
+//!   sequentially (exactly the behaviour the paper measures in Fig. 8b).
+//! * **boxed per-row UDFs** vs built-in expressions (Fig. 9/10).
+//!
+//! Map-side combiners for aggregation ARE implemented (Spark has them) so
+//! the comparison is not a strawman.
+
+use super::rowexpr::{compile_row_expr, eval_row, RowExpr};
+use super::Row;
+use crate::column::Column;
+use crate::expr::{AggExpr, AggFn, AggState, Expr};
+use crate::table::{Schema, Table};
+use crate::types::{DType, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Scheduler / shuffle statistics (reported by benches).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub tasks_scheduled: AtomicU64,
+    pub shuffle_bytes: AtomicU64,
+    pub stages: AtomicU64,
+}
+
+/// The driver: owns the executor pool and the shuffle store.
+pub struct SparkLike {
+    job_tx: Sender<Job>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub partitions: usize,
+    pub stats: Arc<EngineStats>,
+}
+
+impl SparkLike {
+    /// `workers` executor threads, `partitions` partitions per RDD.
+    pub fn new(workers: usize, partitions: usize) -> SparkLike {
+        assert!(workers > 0 && partitions > 0);
+        let (tx, rx) = channel::<Job>();
+        // ONE shared receiver behind a mutex: the central scheduler all
+        // executors contend on — the master bottleneck, made concrete
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let rx = rx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break,
+                }
+            }));
+        }
+        SparkLike {
+            job_tx: tx,
+            handles,
+            partitions,
+            stats: Arc::new(EngineStats::default()),
+        }
+    }
+
+    /// Run one stage: one task per input item, results in input order.
+    fn run_stage<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        self.stats.stages.fetch_add(1, Ordering::Relaxed);
+        let n = items.len();
+        let f = Arc::new(f);
+        let (res_tx, res_rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            self.stats.tasks_scheduled.fetch_add(1, Ordering::Relaxed);
+            let f = f.clone();
+            let res_tx = res_tx.clone();
+            self.job_tx
+                .send(Box::new(move || {
+                    let r = f(i, item);
+                    let _ = res_tx.send((i, r));
+                }))
+                .expect("executor pool is gone");
+        }
+        drop(res_tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = res_rx.recv().expect("task lost");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Create an RDD from a table (split into `partitions` row blocks).
+    pub fn parallelize(&self, table: &Table) -> Rdd {
+        let n = table.num_rows();
+        let mut parts = Vec::with_capacity(self.partitions);
+        for p in 0..self.partitions {
+            let (start, len) = crate::comm::block_range(n, self.partitions, p);
+            let mut rows = Vec::with_capacity(len);
+            for i in start..start + len {
+                rows.push(table.row(i));
+            }
+            parts.push(rows);
+        }
+        Rdd {
+            schema: table.schema().clone(),
+            parts,
+        }
+    }
+
+    /// Built-in (non-UDF) filter.
+    pub fn filter(&self, rdd: &Rdd, predicate: &Expr) -> Result<Rdd> {
+        let compiled = compile_row_expr(predicate, &rdd.schema)?;
+        let parts = self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
+            rows.into_iter()
+                .filter(|r| {
+                    eval_row(&compiled, r)
+                        .ok()
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false)
+                })
+                .collect::<Vec<Row>>()
+        });
+        Ok(Rdd {
+            schema: rdd.schema.clone(),
+            parts,
+        })
+    }
+
+    /// Add/replace a column from an expression (`withColumn`).
+    pub fn with_column(&self, rdd: &Rdd, name: &str, expr: &Expr) -> Result<Rdd> {
+        let compiled = compile_row_expr(expr, &rdd.schema)?;
+        let dt = expr.dtype(&rdd.schema)?;
+        let replace_at = rdd.schema.index_of(name);
+        let parts = self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
+            rows.into_iter()
+                .map(|mut r| {
+                    let v = eval_row(&compiled, &r).expect("row eval");
+                    match replace_at {
+                        Some(i) => r[i] = v,
+                        None => r.push(v),
+                    }
+                    r
+                })
+                .collect::<Vec<Row>>()
+        });
+        let mut fields = rdd.schema.fields().to_vec();
+        match replace_at {
+            Some(i) => fields[i].1 = dt,
+            None => fields.push((name.to_string(), dt)),
+        }
+        Ok(Rdd {
+            schema: Schema::new(fields),
+            parts,
+        })
+    }
+
+    /// Projection.
+    pub fn select(&self, rdd: &Rdd, columns: &[&str]) -> Result<Rdd> {
+        let idx: Vec<usize> = columns
+            .iter()
+            .map(|c| {
+                rdd.schema
+                    .index_of(c)
+                    .with_context(|| format!("select: no column {c}"))
+            })
+            .collect::<Result<_>>()?;
+        let idx2 = idx.clone();
+        let parts = self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
+            rows.into_iter()
+                .map(|r| idx2.iter().map(|&i| r[i].clone()).collect::<Row>())
+                .collect::<Vec<Row>>()
+        });
+        let fields = idx
+            .iter()
+            .map(|&i| rdd.schema.fields()[i].clone())
+            .collect();
+        Ok(Rdd {
+            schema: Schema::new(fields),
+            parts,
+        })
+    }
+
+    // ---- shuffle machinery -------------------------------------------------
+
+    /// Serialize rows into per-reduce-partition buffers, then decode — the
+    /// shuffle write/read boundary with real ser/de cost.
+    fn shuffle_rows(
+        &self,
+        rdd_parts: Vec<Vec<(i64, Row)>>,
+        nreduce: usize,
+    ) -> Vec<Vec<(i64, Row)>> {
+        let stats = self.stats.clone();
+        // map side: encode each partition's output per reduce bucket
+        let written: Vec<Vec<Vec<u8>>> =
+            self.run_stage(rdd_parts, move |_, rows: Vec<(i64, Row)>| {
+                let mut bufs: Vec<Vec<u8>> = (0..nreduce).map(|_| Vec::new()).collect();
+                for (k, row) in rows {
+                    let dst = (k.rem_euclid(nreduce as i64)) as usize;
+                    encode_row(k, &row, &mut bufs[dst]);
+                }
+                for b in &bufs {
+                    stats.shuffle_bytes.fetch_add(b.len() as u64, Ordering::Relaxed);
+                }
+                bufs
+            });
+        // shuffle store hand-off + reduce side decode
+        let written = Arc::new(written);
+        let w2 = written.clone();
+        self.run_stage(
+            (0..nreduce).collect::<Vec<usize>>(),
+            move |_, reduce_id: usize| {
+                let mut rows = Vec::new();
+                for map_out in w2.iter() {
+                    decode_rows(&map_out[reduce_id], &mut rows);
+                }
+                rows
+            },
+        )
+    }
+
+    /// Inner equi-join via hash shuffle on both sides.
+    pub fn join(&self, left: &Rdd, right: &Rdd, lk: &str, rk: &str) -> Result<Rdd> {
+        let li = left
+            .schema
+            .index_of(lk)
+            .with_context(|| format!("join: no column {lk}"))?;
+        let ri = right
+            .schema
+            .index_of(rk)
+            .with_context(|| format!("join: no column {rk}"))?;
+        let keyed_l: Vec<Vec<(i64, Row)>> = self.run_stage(left.parts.clone(), move |_, rows| {
+            keyed_by(rows, li)
+        });
+        let keyed_r: Vec<Vec<(i64, Row)>> = self.run_stage(right.parts.clone(), move |_, rows| {
+            keyed_by(rows, ri)
+        });
+        let nreduce = self.partitions;
+        let lparts = self.shuffle_rows(keyed_l, nreduce);
+        let rparts = self.shuffle_rows(keyed_r, nreduce);
+        // reduce side: per-partition hash join
+        let joined: Vec<Vec<Row>> = self.run_stage(
+            lparts.into_iter().zip(rparts).collect::<Vec<_>>(),
+            move |_, (lrows, rrows): (Vec<(i64, Row)>, Vec<(i64, Row)>)| {
+                let mut index: HashMap<i64, Vec<Row>> = HashMap::new();
+                for (k, row) in rrows {
+                    let mut slim = row;
+                    slim.remove(ri);
+                    index.entry(k).or_default().push(slim);
+                }
+                let mut out = Vec::new();
+                for (k, lrow) in lrows {
+                    if let Some(matches) = index.get(&k) {
+                        for m in matches {
+                            let mut row = lrow.clone();
+                            row.extend(m.iter().cloned());
+                            out.push(row);
+                        }
+                    }
+                }
+                out
+            },
+        );
+        let mut fields = left.schema.fields().to_vec();
+        for (n, t) in right.schema.fields() {
+            if n == rk {
+                continue;
+            }
+            if left.schema.dtype_of(n).is_some() {
+                bail!("join: column {n} on both sides");
+            }
+            fields.push((n.clone(), *t));
+        }
+        Ok(Rdd {
+            schema: Schema::new(fields),
+            parts: joined,
+        })
+    }
+
+    /// Group-by aggregation with map-side combine.
+    pub fn aggregate(&self, rdd: &Rdd, key: &str, aggs: &[AggExpr]) -> Result<Rdd> {
+        let ki = rdd
+            .schema
+            .index_of(key)
+            .with_context(|| format!("aggregate: no column {key}"))?;
+        let compiled: Vec<(RowExpr, AggFn, DType)> = aggs
+            .iter()
+            .map(|a| {
+                Ok((
+                    compile_row_expr(&a.input, &rdd.schema)?,
+                    a.func,
+                    a.input.dtype(&rdd.schema)?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let compiled = Arc::new(compiled);
+        let c2 = compiled.clone();
+        // map side: partial states per key (the combiner)
+        let combined: Vec<Vec<(i64, Row)>> =
+            self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
+                let mut table: HashMap<i64, Vec<AggState>> = HashMap::new();
+                for row in rows {
+                    let k = row[ki].as_i64().expect("agg key not int");
+                    let states = table.entry(k).or_insert_with(|| {
+                        c2.iter()
+                            .map(|(_, f, dt)| AggState::new(*f, *dt))
+                            .collect()
+                    });
+                    for ((e, _, _), s) in c2.iter().zip(states.iter_mut()) {
+                        s.update(&eval_row(e, &row).expect("agg expr"));
+                    }
+                }
+                // partial states travel the shuffle as encoded rows
+                table
+                    .into_iter()
+                    .map(|(k, states)| {
+                        let mut buf = Vec::new();
+                        for s in &states {
+                            s.encode(&mut buf);
+                        }
+                        (k, vec![Value::Str(unsafe_bytes_to_str(buf))])
+                    })
+                    .collect()
+            });
+        let merged = self.shuffle_rows(combined, self.partitions);
+        let c3 = compiled.clone();
+        let parts: Vec<Vec<Row>> = self.run_stage(merged, move |_, rows: Vec<(i64, Row)>| {
+            let mut table: HashMap<i64, Vec<AggState>> = HashMap::new();
+            for (k, row) in rows {
+                let Value::Str(ref encoded) = row[0] else {
+                    panic!("agg shuffle row")
+                };
+                let bytes = str_to_bytes(encoded);
+                let mut pos = 0usize;
+                let incoming: Vec<AggState> = c3
+                    .iter()
+                    .map(|(_, f, dt)| AggState::decode(*f, *dt, &bytes, &mut pos))
+                    .collect();
+                match table.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        for (a, b) in e.get_mut().iter_mut().zip(&incoming) {
+                            a.merge(b);
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(incoming);
+                    }
+                }
+            }
+            let mut keys: Vec<i64> = table.keys().copied().collect();
+            keys.sort_unstable();
+            keys.into_iter()
+                .map(|k| {
+                    let mut row: Row = vec![Value::I64(k)];
+                    for s in &table[&k] {
+                        row.push(s.finish());
+                    }
+                    row
+                })
+                .collect()
+        });
+        let mut fields = vec![(key.to_string(), DType::I64)];
+        for a in aggs {
+            fields.push((a.out.clone(), a.output_dtype(&rdd.schema)?));
+        }
+        Ok(Rdd {
+            schema: Schema::new(fields),
+            parts,
+        })
+    }
+
+    /// Window/scan operations: repartition EVERYTHING to one partition and
+    /// run sequentially — the map-reduce limitation of §5/Fig. 8b.
+    pub fn window_one_executor(
+        &self,
+        rdd: &Rdd,
+        column: &str,
+        out: &str,
+        kind: WindowKind,
+    ) -> Result<Rdd> {
+        let ci = rdd
+            .schema
+            .index_of(column)
+            .with_context(|| format!("window: no column {column}"))?;
+        // gather: key everything to partition 0 through the shuffle store
+        // (serialization cost included, as in Spark)
+        let keyed: Vec<Vec<(i64, Row)>> = self.run_stage(rdd.parts.clone(), move |pi, rows| {
+            rows.into_iter()
+                .map(|r| ((pi as i64) << 32, r)) // preserve partition order in key high bits
+                .collect()
+        });
+        let mut gathered = self.shuffle_rows(keyed, 1);
+        let mut rows = std::mem::take(&mut gathered[0]);
+        rows.sort_by_key(|(k, _)| *k); // restore global order
+        let mut rows: Vec<Row> = rows.into_iter().map(|(_, r)| r).collect();
+        // sequential computation on the single executor
+        let xs: Vec<f64> = rows
+            .iter()
+            .map(|r| r[ci].as_f64().context("window col"))
+            .collect::<Result<_>>()?;
+        let vals: Vec<f64> = match &kind {
+            WindowKind::Cumsum => {
+                let mut acc = 0.0;
+                xs.iter()
+                    .map(|&x| {
+                        acc += x;
+                        acc
+                    })
+                    .collect()
+            }
+            WindowKind::Stencil(weights) => crate::ops::stencil_serial(&xs, weights),
+            WindowKind::StencilUdf { window, func } => {
+                let r = window / 2;
+                let n = xs.len();
+                (0..n)
+                    .map(|i| {
+                        let lo = i.saturating_sub(r);
+                        let hi = (i + r + 1).min(n);
+                        let win: Vec<f64> = xs[lo..hi].to_vec();
+                        func(&win)
+                    })
+                    .collect()
+            }
+        };
+        for (row, v) in rows.iter_mut().zip(vals) {
+            row.push(Value::F64(v));
+        }
+        let mut fields = rdd.schema.fields().to_vec();
+        fields.push((out.to_string(), DType::F64));
+        // output stays on ONE partition (Spark leaves it that way too)
+        let mut parts: Vec<Vec<Row>> = (0..self.partitions).map(|_| Vec::new()).collect();
+        parts[0] = rows;
+        Ok(Rdd {
+            schema: Schema::new(fields),
+            parts,
+        })
+    }
+
+    /// Materialize an RDD back on the driver.
+    pub fn collect(&self, rdd: &Rdd) -> Result<Table> {
+        let mut cols: Vec<Column> = rdd
+            .schema
+            .fields()
+            .iter()
+            .map(|(_, t)| Column::new_empty(*t))
+            .collect();
+        for part in &rdd.parts {
+            for row in part {
+                for (c, v) in cols.iter_mut().zip(row) {
+                    c.push(v);
+                }
+            }
+        }
+        Table::new(rdd.schema.clone(), cols)
+    }
+}
+
+impl Drop for SparkLike {
+    fn drop(&mut self) {
+        // close the queue and join executors
+        let (tx, _) = channel();
+        let old = std::mem::replace(&mut self.job_tx, tx);
+        drop(old);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Window computation kinds for [`SparkLike::window_one_executor`].
+pub enum WindowKind {
+    Cumsum,
+    Stencil(Vec<f64>),
+    StencilUdf {
+        window: usize,
+        func: Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>,
+    },
+}
+
+/// A row-oriented distributed collection.
+#[derive(Debug, Clone)]
+pub struct Rdd {
+    pub schema: Schema,
+    pub parts: Vec<Vec<Row>>,
+}
+
+impl Rdd {
+    pub fn num_rows(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).sum()
+    }
+}
+
+fn keyed_by(rows: Vec<Row>, key_idx: usize) -> Vec<(i64, Row)> {
+    rows.into_iter()
+        .map(|r| {
+            let k = r[key_idx].as_i64().expect("join key not int");
+            (k, r)
+        })
+        .collect()
+}
+
+// row wire format: key + cell-tagged values
+fn encode_row(key: i64, row: &Row, buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&key.to_le_bytes());
+    buf.extend_from_slice(&(row.len() as u16).to_le_bytes());
+    for v in row {
+        match v {
+            Value::I64(x) => {
+                buf.push(0);
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            Value::F64(x) => {
+                buf.push(1);
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            Value::Bool(x) => {
+                buf.push(2);
+                buf.push(*x as u8);
+            }
+            Value::Str(s) => {
+                buf.push(3);
+                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                buf.extend_from_slice(s.as_bytes());
+            }
+        }
+    }
+}
+
+fn decode_rows(buf: &[u8], out: &mut Vec<(i64, Row)>) {
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        let key = i64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let n = u16::from_le_bytes(buf[pos..pos + 2].try_into().unwrap()) as usize;
+        pos += 2;
+        let mut row = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tag = buf[pos];
+            pos += 1;
+            match tag {
+                0 => {
+                    row.push(Value::I64(i64::from_le_bytes(
+                        buf[pos..pos + 8].try_into().unwrap(),
+                    )));
+                    pos += 8;
+                }
+                1 => {
+                    row.push(Value::F64(f64::from_le_bytes(
+                        buf[pos..pos + 8].try_into().unwrap(),
+                    )));
+                    pos += 8;
+                }
+                2 => {
+                    row.push(Value::Bool(buf[pos] != 0));
+                    pos += 1;
+                }
+                3 => {
+                    let len =
+                        u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+                    pos += 4;
+                    row.push(Value::Str(
+                        String::from_utf8_lossy(&buf[pos..pos + len]).into_owned(),
+                    ));
+                    pos += len;
+                }
+                t => panic!("bad row tag {t}"),
+            }
+        }
+        out.push((key, row));
+    }
+}
+
+// agg partial states ride in a Str cell; latin-1-safe transport
+fn unsafe_bytes_to_str(bytes: Vec<u8>) -> String {
+    bytes.iter().map(|&b| b as char).collect()
+}
+
+fn str_to_bytes(s: &str) -> Vec<u8> {
+    s.chars().map(|c| c as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{col, lit};
+
+    fn table() -> Table {
+        Table::from_pairs(vec![
+            ("id", Column::I64(vec![0, 1, 2, 3, 4, 5, 6, 7])),
+            (
+                "x",
+                Column::F64(vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]),
+            ),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn filter_and_collect() {
+        let eng = SparkLike::new(2, 4);
+        let rdd = eng.parallelize(&table());
+        let f = eng.filter(&rdd, &col("x").lt(lit(0.35))).unwrap();
+        let t = eng.collect(&f).unwrap();
+        assert_eq!(t.column("id").unwrap().as_i64(), &[0, 1, 2, 3]);
+        assert!(eng.stats.tasks_scheduled.load(Ordering::Relaxed) >= 4);
+    }
+
+    #[test]
+    fn join_matches_serial() {
+        let eng = SparkLike::new(3, 3);
+        let right = Table::from_pairs(vec![
+            ("rid", Column::I64(vec![1, 3, 5, 9])),
+            ("tag", Column::I64(vec![10, 30, 50, 90])),
+        ])
+        .unwrap();
+        let j = eng
+            .join(
+                &eng.parallelize(&table()),
+                &eng.parallelize(&right),
+                "id",
+                "rid",
+            )
+            .unwrap();
+        let t = eng.collect(&j).unwrap().sorted_by("id").unwrap();
+        assert_eq!(t.column("id").unwrap().as_i64(), &[1, 3, 5]);
+        assert_eq!(t.column("tag").unwrap().as_i64(), &[10, 30, 50]);
+        assert!(eng.stats.shuffle_bytes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn aggregate_with_combiner() {
+        let eng = SparkLike::new(2, 4);
+        let rdd = eng.parallelize(&table());
+        let keyed = eng
+            .with_column(&rdd, "id", &col("id").rem(lit(2i64)))
+            .unwrap();
+        let agg = eng
+            .aggregate(
+                &keyed,
+                "id",
+                &[
+                    AggExpr::new("s", AggFn::Sum, col("x")),
+                    AggExpr::new("n", AggFn::Count, col("x")),
+                ],
+            )
+            .unwrap();
+        let t = eng.collect(&agg).unwrap().sorted_by("id").unwrap();
+        assert_eq!(t.column("id").unwrap().as_i64(), &[0, 1]);
+        let s = t.column("s").unwrap().as_f64();
+        assert!((s[0] - 1.2).abs() < 1e-9);
+        assert!((s[1] - 1.6).abs() < 1e-9);
+        assert_eq!(t.column("n").unwrap().as_i64(), &[4, 4]);
+    }
+
+    #[test]
+    fn window_gathers_to_one_partition() {
+        let eng = SparkLike::new(2, 4);
+        let rdd = eng.parallelize(&table());
+        let w = eng
+            .window_one_executor(&rdd, "x", "cs", WindowKind::Cumsum)
+            .unwrap();
+        // everything on partition 0 — the map-reduce limitation
+        assert_eq!(w.parts[0].len(), 8);
+        assert!(w.parts[1..].iter().all(|p| p.is_empty()));
+        let t = eng.collect(&w).unwrap();
+        let cs = t.column("cs").unwrap().as_f64();
+        assert!((cs[7] - 2.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_stencil_matches_hiframes_semantics() {
+        let eng = SparkLike::new(2, 3);
+        let rdd = eng.parallelize(&table());
+        let w = eng
+            .window_one_executor(
+                &rdd,
+                "x",
+                "sma",
+                WindowKind::Stencil(crate::ops::stencil::sma_weights(3)),
+            )
+            .unwrap();
+        let t = eng.collect(&w).unwrap();
+        let expect = crate::ops::stencil_serial(
+            &table().column("x").unwrap().to_f64_vec(),
+            &crate::ops::stencil::sma_weights(3),
+        );
+        for (a, b) in t.column("sma").unwrap().as_f64().iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn select_and_udf_window() {
+        let eng = SparkLike::new(2, 2);
+        let rdd = eng.parallelize(&table());
+        let s = eng.select(&rdd, &["x"]).unwrap();
+        assert_eq!(s.schema.names(), vec!["x"]);
+        let w = eng
+            .window_one_executor(
+                &s,
+                "x",
+                "wma",
+                WindowKind::StencilUdf {
+                    window: 3,
+                    func: Arc::new(|w: &[f64]| w.iter().sum::<f64>() / w.len() as f64),
+                },
+            )
+            .unwrap();
+        assert_eq!(eng.collect(&w).unwrap().num_rows(), 8);
+    }
+
+    #[test]
+    fn string_roundtrip_through_shuffle() {
+        let eng = SparkLike::new(2, 2);
+        let t = Table::from_pairs(vec![
+            ("id", Column::I64(vec![1, 2, 3, 4])),
+            (
+                "s",
+                Column::Str(vec!["a".into(), "b".into(), "c".into(), "d".into()]),
+            ),
+        ])
+        .unwrap();
+        let r = Table::from_pairs(vec![("rid", Column::I64(vec![2, 4]))]).unwrap();
+        let j = eng
+            .join(&eng.parallelize(&t), &eng.parallelize(&r), "id", "rid")
+            .unwrap();
+        let out = eng.collect(&j).unwrap().sorted_by("id").unwrap();
+        assert_eq!(out.column("s").unwrap().as_str_col(), &["b".to_string(), "d".into()]);
+    }
+}

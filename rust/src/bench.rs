@@ -1,0 +1,218 @@
+//! Bench harness support — the criterion stand-in (offline image has no
+//! criterion). Each `rust/benches/*.rs` target sets `harness = false` and
+//! drives [`BenchTable`] to print the rows/series of one paper figure.
+//!
+//! Environment knobs (all benches):
+//! * `HIFRAMES_BENCH_SCALE` — fraction of the paper's dataset sizes
+//!   (default 0.01: e.g. Fig 8a filter 2B rows → 20M).
+//! * `HIFRAMES_BENCH_WORKERS` — rank count for HiFrames/sparklike engines.
+//! * `HIFRAMES_BENCH_REPS` — measured repetitions per cell (default 3).
+
+use crate::metrics::{measure, Stats};
+
+pub fn bench_scale() -> f64 {
+    std::env::var("HIFRAMES_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.01)
+}
+
+pub fn bench_workers() -> usize {
+    std::env::var("HIFRAMES_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(crate::config::default_workers)
+}
+
+pub fn bench_reps() -> usize {
+    std::env::var("HIFRAMES_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Quick-mode guard: `cargo test --benches` style smoke runs can set
+/// `HIFRAMES_BENCH_SMOKE=1` to shrink everything aggressively.
+pub fn bench_smoke() -> bool {
+    std::env::var("HIFRAMES_BENCH_SMOKE").is_ok()
+}
+
+/// A named measurement cell: system × operation.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: String,
+    pub op: String,
+    pub stats: Stats,
+    pub rows: usize,
+}
+
+/// Collects cells and prints a paper-style table with speedup columns.
+pub struct BenchTable {
+    pub title: String,
+    pub baseline_system: String,
+    cells: Vec<Cell>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str, baseline_system: &str) -> BenchTable {
+        eprintln!("\n=== {title} ===");
+        BenchTable {
+            title: title.to_string(),
+            baseline_system: baseline_system.to_string(),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Measure `f` and record it as `system` doing `op` over `rows` rows.
+    pub fn run<R>(
+        &mut self,
+        system: &str,
+        op: &str,
+        rows: usize,
+        warmup: usize,
+        reps: usize,
+        f: impl FnMut() -> R,
+    ) {
+        let stats = measure(warmup, reps, f);
+        eprintln!(
+            "  {system:<14} {op:<12} {:>12} rows  {}",
+            rows,
+            stats.display_ms()
+        );
+        self.cells.push(Cell {
+            system: system.to_string(),
+            op: op.to_string(),
+            stats,
+            rows,
+        });
+    }
+
+    /// Record an externally-measured sample set.
+    pub fn record(&mut self, system: &str, op: &str, rows: usize, samples: Vec<f64>) {
+        let stats = Stats::from_samples(samples);
+        eprintln!(
+            "  {system:<14} {op:<12} {:>12} rows  {}",
+            rows,
+            stats.display_ms()
+        );
+        self.cells.push(Cell {
+            system: system.to_string(),
+            op: op.to_string(),
+            stats,
+            rows,
+        });
+    }
+
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    /// Median time of a cell, if present.
+    pub fn median(&self, system: &str, op: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.system == system && c.op == op)
+            .map(|c| c.stats.median)
+    }
+
+    /// Print the final figure table: one row per op, one column per system,
+    /// plus speedup of every system relative to `baseline_system`.
+    pub fn print_summary(&self) {
+        println!("\n## {}", self.title);
+        let mut ops: Vec<&str> = Vec::new();
+        let mut systems: Vec<&str> = Vec::new();
+        for c in &self.cells {
+            if !ops.contains(&c.op.as_str()) {
+                ops.push(&c.op);
+            }
+            if !systems.contains(&c.system.as_str()) {
+                systems.push(&c.system);
+            }
+        }
+        print!("{:<14}", "op");
+        for s in &systems {
+            print!(" | {s:>16}");
+        }
+        print!(" | {:>20}", format!("speedup vs {}", self.baseline_system));
+        println!();
+        for op in &ops {
+            print!("{op:<14}");
+            let base = self.median(&self.baseline_system, op);
+            let mut best_speedup = None;
+            for s in &systems {
+                match self.median(s, op) {
+                    Some(m) => {
+                        print!(" | {:>14.1}ms", m * 1e3);
+                        if let Some(b) = base {
+                            if *s != self.baseline_system {
+                                let sp = b / m;
+                                if best_speedup.map_or(true, |x: f64| sp > x) {
+                                    best_speedup = Some(sp);
+                                }
+                            }
+                        }
+                    }
+                    None => print!(" | {:>16}", "-"),
+                }
+            }
+            match (base, self.median("hiframes", op)) {
+                (Some(b), Some(h)) => print!(" | {:>19.1}x", b / h),
+                _ => print!(" | {:>20}", "-"),
+            }
+            println!();
+        }
+    }
+}
+
+/// Parse and ignore the args cargo-bench passes (`--bench`, filters).
+pub fn bench_main(figure: &str, run: impl FnOnce()) {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench -- --list` must answer instantly for tooling.
+    if args.iter().any(|a| a == "--list") {
+        println!("{figure}: bench");
+        return;
+    }
+    eprintln!(
+        "[{figure}] scale={} workers={} reps={}",
+        bench_scale(),
+        bench_workers(),
+        bench_reps()
+    );
+    run();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_collects_and_summarizes() {
+        let mut t = BenchTable::new("test-table", "base");
+        t.record("base", "op1", 100, vec![0.2, 0.2, 0.2]);
+        t.record("hiframes", "op1", 100, vec![0.1, 0.1, 0.1]);
+        assert_eq!(t.median("base", "op1"), Some(0.2));
+        assert_eq!(t.median("hiframes", "op1"), Some(0.1));
+        assert_eq!(t.median("nope", "op1"), None);
+        t.print_summary(); // smoke: must not panic
+        assert_eq!(t.cells().len(), 2);
+    }
+
+    #[test]
+    fn env_defaults() {
+        assert!(bench_scale() > 0.0);
+        assert!(bench_workers() >= 1);
+        assert!(bench_reps() >= 1);
+    }
+
+    #[test]
+    fn run_measures() {
+        let mut t = BenchTable::new("t2", "a");
+        let mut x = 0u64;
+        t.run("a", "inc", 1, 0, 2, || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(t.cells().len(), 1);
+        assert_eq!(t.cells()[0].stats.samples.len(), 2);
+    }
+}

@@ -1,0 +1,269 @@
+//! Deterministic TPCx-BB-shaped data generator.
+//!
+//! Cardinalities (rows per scale factor) follow TPCx-BB's linear growth for
+//! fact tables and sublinear growth for dimensions; the Q05 clickstream can
+//! be generated with Zipf-skewed item keys to reproduce the paper's skewed
+//! join experiment ("a join on a large table with highly skewed data").
+
+use crate::column::Column;
+use crate::datagen::{Rng, Zipf};
+use crate::table::Table;
+
+/// Item categories (subset of TPCx-BB's).
+pub const CATEGORIES: [&str; 6] = [
+    "Books",
+    "Electronics",
+    "Home & Kitchen",
+    "Clothing",
+    "Sports",
+    "Toys",
+];
+
+/// Number of item classes referenced by Q26 features.
+pub const N_CLASSES: i64 = 15;
+
+/// Date surrogate-key range (days).
+pub const DATE_MIN: i64 = 36_000;
+pub const DATE_MAX: i64 = 38_000;
+/// Q25's recency cutoff ('2002-01-02' in the real kit).
+pub const Q25_CUTOFF: i64 = 37_000;
+
+/// Generation options.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    pub scale_factor: f64,
+    /// Zipf exponent for clickstream item keys (0.0 = uniform). The paper's
+    /// Q05 skew experiment uses a heavily skewed distribution.
+    pub click_skew: f64,
+    pub seed: u64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions {
+            scale_factor: 1.0,
+            click_skew: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// The generated database.
+#[derive(Debug, Clone)]
+pub struct BbTables {
+    pub store_sales: Table,
+    pub web_sales: Table,
+    pub web_clickstream: Table,
+    pub item: Table,
+    pub customer: Table,
+    pub customer_demographics: Table,
+}
+
+/// Row counts at a scale factor (fact tables linear, dims sublinear).
+pub fn sizes(sf: f64) -> (usize, usize, usize, usize, usize) {
+    let store_sales = (30_000.0 * sf) as usize;
+    let web_sales = (15_000.0 * sf) as usize;
+    let clicks = (50_000.0 * sf) as usize;
+    let items = (400.0 + 120.0 * sf.sqrt() * 10.0).min(4000.0) as usize;
+    let customers = (2_000.0 * sf.sqrt() * 2.0).max(200.0) as usize;
+    (store_sales, web_sales, clicks, items, customers)
+}
+
+/// Generate the database.
+pub fn generate(opts: &GenOptions) -> BbTables {
+    let mut rng = Rng::new(opts.seed);
+    let (n_ss, n_ws, n_clicks, n_items, n_cust) = sizes(opts.scale_factor);
+
+    // ---- item dimension ---------------------------------------------------
+    let mut i_item_sk = Vec::with_capacity(n_items);
+    let mut i_class_id = Vec::with_capacity(n_items);
+    let mut i_category_id = Vec::with_capacity(n_items);
+    let mut i_category = Vec::with_capacity(n_items);
+    for sk in 0..n_items as i64 {
+        i_item_sk.push(sk);
+        i_class_id.push(rng.i64_range(1, N_CLASSES + 1));
+        let cat = rng.usize(CATEGORIES.len());
+        i_category_id.push(cat as i64 + 1);
+        i_category.push(CATEGORIES[cat].to_string());
+    }
+    let item = Table::from_pairs(vec![
+        ("i_item_sk", Column::I64(i_item_sk)),
+        ("i_class_id", Column::I64(i_class_id)),
+        ("i_category_id", Column::I64(i_category_id)),
+        ("i_category", Column::Str(i_category)),
+    ])
+    .expect("item table");
+
+    // ---- customer + demographics ------------------------------------------
+    let mut c_customer_sk = Vec::with_capacity(n_cust);
+    let mut c_current_cdemo_sk = Vec::with_capacity(n_cust);
+    for sk in 0..n_cust as i64 {
+        c_customer_sk.push(sk);
+        c_current_cdemo_sk.push(sk); // 1:1 demographics
+    }
+    let customer = Table::from_pairs(vec![
+        ("c_customer_sk", Column::I64(c_customer_sk)),
+        ("c_current_cdemo_sk", Column::I64(c_current_cdemo_sk)),
+    ])
+    .expect("customer table");
+
+    let mut cd_demo_sk = Vec::with_capacity(n_cust);
+    let mut cd_gender = Vec::with_capacity(n_cust);
+    let mut cd_education = Vec::with_capacity(n_cust);
+    for sk in 0..n_cust as i64 {
+        cd_demo_sk.push(sk);
+        cd_gender.push(rng.i64_range(0, 2));
+        cd_education.push(rng.i64_range(0, 7));
+    }
+    let customer_demographics = Table::from_pairs(vec![
+        ("cd_demo_sk", Column::I64(cd_demo_sk)),
+        ("cd_gender", Column::I64(cd_gender)),
+        ("cd_education", Column::I64(cd_education)),
+    ])
+    .expect("demographics table");
+
+    // ---- store_sales fact --------------------------------------------------
+    // ticket numbers group ~3 line items per basket (Q25's count-distinct)
+    let mut ss_item_sk = Vec::with_capacity(n_ss);
+    let mut ss_customer_sk = Vec::with_capacity(n_ss);
+    let mut ss_ticket_number = Vec::with_capacity(n_ss);
+    let mut ss_sold_date_sk = Vec::with_capacity(n_ss);
+    let mut ss_net_paid = Vec::with_capacity(n_ss);
+    for i in 0..n_ss {
+        ss_item_sk.push(rng.i64_range(0, n_items as i64));
+        ss_customer_sk.push(rng.i64_range(0, n_cust as i64));
+        ss_ticket_number.push((i / 3) as i64);
+        ss_sold_date_sk.push(rng.i64_range(DATE_MIN, DATE_MAX));
+        ss_net_paid.push((rng.f64() * 200.0 * 100.0).round() / 100.0);
+    }
+    let store_sales = Table::from_pairs(vec![
+        ("ss_item_sk", Column::I64(ss_item_sk)),
+        ("ss_customer_sk", Column::I64(ss_customer_sk)),
+        ("ss_ticket_number", Column::I64(ss_ticket_number)),
+        ("ss_sold_date_sk", Column::I64(ss_sold_date_sk)),
+        ("ss_net_paid", Column::F64(ss_net_paid)),
+    ])
+    .expect("store_sales table");
+
+    // ---- web_sales fact ----------------------------------------------------
+    let mut ws_item_sk = Vec::with_capacity(n_ws);
+    let mut ws_bill_customer_sk = Vec::with_capacity(n_ws);
+    let mut ws_order_number = Vec::with_capacity(n_ws);
+    let mut ws_sold_date_sk = Vec::with_capacity(n_ws);
+    let mut ws_net_paid = Vec::with_capacity(n_ws);
+    for i in 0..n_ws {
+        ws_item_sk.push(rng.i64_range(0, n_items as i64));
+        ws_bill_customer_sk.push(rng.i64_range(0, n_cust as i64));
+        ws_order_number.push((i / 2) as i64);
+        ws_sold_date_sk.push(rng.i64_range(DATE_MIN, DATE_MAX));
+        ws_net_paid.push((rng.f64() * 150.0 * 100.0).round() / 100.0);
+    }
+    let web_sales = Table::from_pairs(vec![
+        ("ws_item_sk", Column::I64(ws_item_sk)),
+        ("ws_bill_customer_sk", Column::I64(ws_bill_customer_sk)),
+        ("ws_order_number", Column::I64(ws_order_number)),
+        ("ws_sold_date_sk", Column::I64(ws_sold_date_sk)),
+        ("ws_net_paid", Column::F64(ws_net_paid)),
+    ])
+    .expect("web_sales table");
+
+    // ---- web_clickstream fact (optionally skewed item keys) ----------------
+    let zipf = (opts.click_skew > 0.0).then(|| Zipf::new(n_items, opts.click_skew));
+    let mut wcs_item_sk = Vec::with_capacity(n_clicks);
+    let mut wcs_user_sk = Vec::with_capacity(n_clicks);
+    let mut wcs_click_date_sk = Vec::with_capacity(n_clicks);
+    for _ in 0..n_clicks {
+        let item_sk = match &zipf {
+            Some(z) => z.sample(&mut rng) as i64,
+            None => rng.i64_range(0, n_items as i64),
+        };
+        wcs_item_sk.push(item_sk);
+        wcs_user_sk.push(rng.i64_range(0, n_cust as i64));
+        wcs_click_date_sk.push(rng.i64_range(DATE_MIN, DATE_MAX));
+    }
+    let web_clickstream = Table::from_pairs(vec![
+        ("wcs_item_sk", Column::I64(wcs_item_sk)),
+        ("wcs_user_sk", Column::I64(wcs_user_sk)),
+        ("wcs_click_date_sk", Column::I64(wcs_click_date_sk)),
+    ])
+    .expect("web_clickstream table");
+
+    BbTables {
+        store_sales,
+        web_sales,
+        web_clickstream,
+        item,
+        customer,
+        customer_demographics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(&GenOptions::default());
+        let b = generate(&GenOptions::default());
+        assert_eq!(a.store_sales, b.store_sales);
+        assert_eq!(a.item, b.item);
+    }
+
+    #[test]
+    fn cardinalities_scale() {
+        let small = generate(&GenOptions {
+            scale_factor: 0.5,
+            ..Default::default()
+        });
+        let big = generate(&GenOptions {
+            scale_factor: 2.0,
+            ..Default::default()
+        });
+        assert!(big.store_sales.num_rows() > 3 * small.store_sales.num_rows());
+        assert!(big.item.num_rows() >= small.item.num_rows());
+    }
+
+    #[test]
+    fn referential_integrity() {
+        let db = generate(&GenOptions::default());
+        let n_items = db.item.num_rows() as i64;
+        let n_cust = db.customer.num_rows() as i64;
+        assert!(db
+            .store_sales
+            .column("ss_item_sk")
+            .unwrap()
+            .as_i64()
+            .iter()
+            .all(|&k| (0..n_items).contains(&k)));
+        assert!(db
+            .web_clickstream
+            .column("wcs_user_sk")
+            .unwrap()
+            .as_i64()
+            .iter()
+            .all(|&k| (0..n_cust).contains(&k)));
+        // demographics keys match customer fk
+        assert!(db
+            .customer
+            .column("c_current_cdemo_sk")
+            .unwrap()
+            .as_i64()
+            .iter()
+            .all(|&k| (0..n_cust).contains(&k)));
+    }
+
+    #[test]
+    fn skew_concentrates_clicks() {
+        let uniform = generate(&GenOptions::default());
+        let skewed = generate(&GenOptions {
+            click_skew: 1.5,
+            ..Default::default()
+        });
+        let count_top = |t: &Table| {
+            let keys = t.column("wcs_item_sk").unwrap().as_i64();
+            keys.iter().filter(|&&k| k == 0).count()
+        };
+        assert!(count_top(&skewed.web_clickstream) > 10 * count_top(&uniform.web_clickstream));
+    }
+}

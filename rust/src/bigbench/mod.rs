@@ -1,0 +1,17 @@
+//! TPCx-BB (BigBench) workload substrate (paper §5.1).
+//!
+//! The paper evaluates Q05, Q25 and Q26 using the official data generator;
+//! we synthesize the same *relational structure* — schemas, join
+//! cardinalities, key skew — with a deterministic generator ([`gen`]) whose
+//! row counts scale linearly in the scale factor (DESIGN.md §3 documents
+//! the substitution). Each query module provides both the HiFrames
+//! implementation and the sparklike one so every Fig. 11 bar has its two
+//! systems, plus the ML tail (k-means for Q25/Q26, logistic regression for
+//! Q05) used by the end-to-end example.
+
+pub mod gen;
+pub mod q05;
+pub mod q25;
+pub mod q26;
+
+pub use gen::{generate, BbTables, GenOptions};

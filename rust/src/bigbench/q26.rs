@@ -1,0 +1,159 @@
+//! TPCx-BB Q26 — the paper's running example (§3.2): cluster customers by
+//! their in-category purchase behaviour.
+//!
+//! Relational stage (timed for Fig. 11a / Fig. 12):
+//! 1. filter `item` to one category ("Books", as in the kit);
+//! 2. `sale_items = join(store_sales, item, :ss_item_sk == :i_item_sk)`;
+//! 3. `aggregate(sale_items, :ss_customer_sk, :cnt = length(...),
+//!    :id1..:id5 = sum(:i_class_id == k))`;
+//! 4. filter `:cnt > min_count`;
+//! 5. feature-scale `:id3` by mean/var (the paper's §3.2 example).
+//!
+//! ML tail (excluded from the relational timing, as in the paper):
+//! matrix assembly + k-means.
+
+use super::BbTables;
+use crate::baseline::sparklike::{Rdd, SparkLike};
+use crate::expr::{col, lit, AggExpr, AggFn};
+use crate::frame::{DataFrame, HiFrames};
+use crate::table::Table;
+use anyhow::Result;
+
+/// Q26 parameters (kit defaults scaled down).
+#[derive(Debug, Clone)]
+pub struct Q26Params {
+    pub category: String,
+    pub min_count: i64,
+    pub k: usize,
+    pub iters: usize,
+}
+
+impl Default for Q26Params {
+    fn default() -> Self {
+        Q26Params {
+            category: "Books".to_string(),
+            min_count: 1,
+            k: 8,
+            iters: 10,
+        }
+    }
+}
+
+/// Number of class-count features (id1..idN).
+pub const N_FEATURES: i64 = 5;
+
+/// The relational stage as a HiFrames data frame (lazy).
+pub fn hiframes_relational(hf: &HiFrames, db: &BbTables, p: &Q26Params) -> DataFrame {
+    let store_sales = hf.table("store_sales", db.store_sales.clone());
+    let item = hf.table("item", db.item.clone());
+
+    let books = item.filter(col("i_category").eq_(lit(p.category.as_str())));
+    let sale_items = store_sales.join(&books, "ss_item_sk", "i_item_sk");
+
+    let mut aggs = vec![AggExpr::new("cnt", AggFn::Count, col("i_class_id"))];
+    for k in 1..=N_FEATURES {
+        aggs.push(AggExpr::new(
+            &format!("id{k}"),
+            AggFn::Sum,
+            col("i_class_id").eq_(lit(k)),
+        ));
+    }
+    sale_items
+        .aggregate("ss_customer_sk", aggs)
+        .filter(col("cnt").gt(lit(p.min_count)))
+}
+
+/// Full HiFrames Q26: relational stage + feature scaling + k-means.
+/// Returns `(relational result, centroids table)`.
+pub fn hiframes_full(
+    hf: &HiFrames,
+    db: &BbTables,
+    p: &Q26Params,
+    use_pjrt: bool,
+) -> Result<(Table, Table)> {
+    let c_i_points = hiframes_relational(hf, db, p);
+    // feature scaling on :id3 — §3.2's (id3 - mean) / var
+    let m = c_i_points.mean("id3")?;
+    let v = c_i_points.var("id3")?.max(1e-9);
+    let scaled = c_i_points.with_column("id3", col("id3").sub(lit(m)).div(lit(v)));
+    let relational = scaled.clone().sort_by("ss_customer_sk").collect()?;
+    let feature_names: Vec<String> = std::iter::once("cnt".to_string())
+        .chain((1..=N_FEATURES).map(|k| format!("id{k}")))
+        .collect();
+    let feature_refs: Vec<&str> = feature_names.iter().map(|s| s.as_str()).collect();
+    let centroids = scaled
+        .matrix_assembly(&feature_refs)
+        .kmeans(p.k, p.iters, use_pjrt)
+        .collect()?;
+    Ok((relational, centroids))
+}
+
+/// The relational stage on the sparklike engine.
+pub fn sparklike_relational(eng: &SparkLike, db: &BbTables, p: &Q26Params) -> Result<Rdd> {
+    let store_sales = eng.parallelize(&db.store_sales);
+    let item = eng.parallelize(&db.item);
+    let books = eng.filter(&item, &col("i_category").eq_(lit(p.category.as_str())))?;
+    let sale_items = eng.join(&store_sales, &books, "ss_item_sk", "i_item_sk")?;
+    let mut aggs = vec![AggExpr::new("cnt", AggFn::Count, col("i_class_id"))];
+    for k in 1..=N_FEATURES {
+        aggs.push(AggExpr::new(
+            &format!("id{k}"),
+            AggFn::Sum,
+            col("i_class_id").eq_(lit(k)),
+        ));
+    }
+    let agg = eng.aggregate(&sale_items, "ss_customer_sk", &aggs)?;
+    eng.filter(&agg, &col("cnt").gt(lit(p.min_count)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigbench::{generate, GenOptions};
+
+    #[test]
+    fn engines_agree_on_q26_relational() {
+        let db = generate(&GenOptions {
+            scale_factor: 0.2,
+            ..Default::default()
+        });
+        let p = Q26Params::default();
+        let hf = HiFrames::with_workers(3);
+        let ours = hiframes_relational(&hf, &db, &p)
+            .sort_by("ss_customer_sk")
+            .collect()
+            .unwrap();
+        let eng = SparkLike::new(2, 4);
+        let theirs = eng
+            .collect(&sparklike_relational(&eng, &db, &p).unwrap())
+            .unwrap()
+            .sorted_by("ss_customer_sk")
+            .unwrap();
+        assert!(ours.num_rows() > 0, "empty Q26 result");
+        assert_eq!(ours.num_rows(), theirs.num_rows());
+        assert_eq!(
+            ours.column("ss_customer_sk").unwrap(),
+            theirs.column("ss_customer_sk").unwrap()
+        );
+        assert_eq!(ours.column("cnt").unwrap(), theirs.column("cnt").unwrap());
+        assert_eq!(ours.column("id3").unwrap(), theirs.column("id3").unwrap());
+    }
+
+    #[test]
+    fn full_pipeline_produces_centroids() {
+        let db = generate(&GenOptions {
+            scale_factor: 0.3,
+            ..Default::default()
+        });
+        let p = Q26Params {
+            k: 4,
+            iters: 5,
+            ..Default::default()
+        };
+        let hf = HiFrames::with_workers(2);
+        let (rel, cents) = hiframes_full(&hf, &db, &p, false).unwrap();
+        assert!(rel.num_rows() >= p.k);
+        assert_eq!(cents.num_rows(), 4);
+        assert_eq!(cents.num_cols(), N_FEATURES as usize + 2); // cnt + id1..5 + cluster
+    }
+}

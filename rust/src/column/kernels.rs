@@ -1,0 +1,415 @@
+//! Vectorized numeric kernels over columns — the element-wise operations
+//! ParallelAccelerator recognizes as having *map* semantics (paper §2.4:
+//! `.+`, `.<`, `log`, `exp`, `sin`, …) plus the reductions used by
+//! aggregate decomposition (`sum`, `count`, `min`, `max`).
+//!
+//! These are the only place arithmetic on raw slices happens; the expression
+//! evaluator dispatches here so the hot loops stay monomorphic and
+//! auto-vectorizable.
+
+use super::Column;
+use crate::types::DType;
+
+/// Binary arithmetic operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArithOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+}
+
+/// Binary comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Unary math function (map semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MathFn {
+    Log,
+    Exp,
+    Sqrt,
+    Sin,
+    Cos,
+    Abs,
+    Neg,
+}
+
+macro_rules! zip_arith {
+    ($a:expr, $b:expr, $op:expr) => {{
+        debug_assert_eq!($a.len(), $b.len());
+        $a.iter()
+            .zip($b.iter())
+            .map(|(&x, &y)| apply_arith(x, y, $op))
+            .collect()
+    }};
+}
+
+#[inline(always)]
+fn apply_arith<T>(x: T, y: T, op: ArithOp) -> T
+where
+    T: Copy
+        + std::ops::Add<Output = T>
+        + std::ops::Sub<Output = T>
+        + std::ops::Mul<Output = T>
+        + std::ops::Div<Output = T>
+        + std::ops::Rem<Output = T>,
+{
+    match op {
+        ArithOp::Add => x + y,
+        ArithOp::Sub => x - y,
+        ArithOp::Mul => x * y,
+        ArithOp::Div => x / y,
+        ArithOp::Mod => x % y,
+    }
+}
+
+/// Element-wise arithmetic between two columns with Julia-style promotion.
+pub fn arith(a: &Column, b: &Column, op: ArithOp) -> Column {
+    match (a, b) {
+        (Column::I64(x), Column::I64(y)) => Column::I64(zip_arith!(x, y, op)),
+        (Column::F64(x), Column::F64(y)) => Column::F64(zip_arith!(x, y, op)),
+        (Column::I64(x), Column::F64(y)) => {
+            let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            Column::F64(zip_arith!(xf, y, op))
+        }
+        (Column::F64(x), Column::I64(y)) => {
+            let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+            Column::F64(zip_arith!(x, yf, op))
+        }
+        _ => panic!(
+            "arith: unsupported dtypes {} {}",
+            a.dtype(),
+            b.dtype()
+        ),
+    }
+}
+
+/// Arithmetic against a scalar (broadcast) — the "simple mathematical
+/// operators instead of element-wise operators" sugar of paper §3.1.
+pub fn arith_scalar(a: &Column, s: f64, op: ArithOp, scalar_on_left: bool) -> Column {
+    match a {
+        Column::I64(x) if s.fract() == 0.0 && op != ArithOp::Div => {
+            let si = s as i64;
+            Column::I64(
+                x.iter()
+                    .map(|&v| {
+                        if scalar_on_left {
+                            apply_arith(si, v, op)
+                        } else {
+                            apply_arith(v, si, op)
+                        }
+                    })
+                    .collect(),
+            )
+        }
+        Column::I64(x) => Column::F64(
+            x.iter()
+                .map(|&v| {
+                    let v = v as f64;
+                    if scalar_on_left {
+                        apply_arith(s, v, op)
+                    } else {
+                        apply_arith(v, s, op)
+                    }
+                })
+                .collect(),
+        ),
+        Column::F64(x) => Column::F64(
+            x.iter()
+                .map(|&v| {
+                    if scalar_on_left {
+                        apply_arith(s, v, op)
+                    } else {
+                        apply_arith(v, s, op)
+                    }
+                })
+                .collect(),
+        ),
+        _ => panic!("arith_scalar: unsupported dtype {}", a.dtype()),
+    }
+}
+
+#[inline(always)]
+fn apply_cmp<T: PartialOrd>(x: T, y: T, op: CmpOp) -> bool {
+    match op {
+        CmpOp::Lt => x < y,
+        CmpOp::Le => x <= y,
+        CmpOp::Gt => x > y,
+        CmpOp::Ge => x >= y,
+        CmpOp::Eq => x == y,
+        CmpOp::Ne => x != y,
+    }
+}
+
+/// Element-wise comparison producing a boolean mask (filter expressions).
+pub fn compare(a: &Column, b: &Column, op: CmpOp) -> Column {
+    assert_eq!(a.len(), b.len(), "compare: length mismatch");
+    let mask: Vec<bool> = match (a, b) {
+        (Column::I64(x), Column::I64(y)) => {
+            x.iter().zip(y).map(|(&u, &v)| apply_cmp(u, v, op)).collect()
+        }
+        (Column::F64(x), Column::F64(y)) => {
+            x.iter().zip(y).map(|(&u, &v)| apply_cmp(u, v, op)).collect()
+        }
+        (Column::I64(x), Column::F64(y)) => x
+            .iter()
+            .zip(y)
+            .map(|(&u, &v)| apply_cmp(u as f64, v, op))
+            .collect(),
+        (Column::F64(x), Column::I64(y)) => x
+            .iter()
+            .zip(y)
+            .map(|(&u, &v)| apply_cmp(u, v as f64, op))
+            .collect(),
+        (Column::Str(x), Column::Str(y)) => {
+            x.iter().zip(y).map(|(u, v)| apply_cmp(u, v, op)).collect()
+        }
+        (Column::Bool(x), Column::Bool(y)) => {
+            x.iter().zip(y).map(|(&u, &v)| apply_cmp(u, v, op)).collect()
+        }
+        _ => panic!(
+            "compare: unsupported dtypes {} {}",
+            a.dtype(),
+            b.dtype()
+        ),
+    };
+    Column::Bool(mask)
+}
+
+/// Comparison against a scalar.
+pub fn compare_scalar_f64(a: &Column, s: f64, op: CmpOp) -> Column {
+    let mask: Vec<bool> = match a {
+        Column::I64(x) => x.iter().map(|&v| apply_cmp(v as f64, s, op)).collect(),
+        Column::F64(x) => x.iter().map(|&v| apply_cmp(v, s, op)).collect(),
+        _ => panic!("compare_scalar: unsupported dtype {}", a.dtype()),
+    };
+    Column::Bool(mask)
+}
+
+/// String equality against a constant (TPCx-BB category filters).
+pub fn compare_scalar_str(a: &Column, s: &str, op: CmpOp) -> Column {
+    let v = a.as_str_col();
+    let mask: Vec<bool> = match op {
+        CmpOp::Eq => v.iter().map(|x| x == s).collect(),
+        CmpOp::Ne => v.iter().map(|x| x != s).collect(),
+        _ => v.iter().map(|x| apply_cmp(x.as_str(), s, op)).collect(),
+    };
+    Column::Bool(mask)
+}
+
+/// Boolean combinators for composite predicates.
+pub fn bool_and(a: &Column, b: &Column) -> Column {
+    let (x, y) = (a.as_bool(), b.as_bool());
+    Column::Bool(x.iter().zip(y).map(|(&u, &v)| u && v).collect())
+}
+
+pub fn bool_or(a: &Column, b: &Column) -> Column {
+    let (x, y) = (a.as_bool(), b.as_bool());
+    Column::Bool(x.iter().zip(y).map(|(&u, &v)| u || v).collect())
+}
+
+pub fn bool_not(a: &Column) -> Column {
+    Column::Bool(a.as_bool().iter().map(|&u| !u).collect())
+}
+
+/// Unary math map.
+pub fn math(a: &Column, f: MathFn) -> Column {
+    match a {
+        Column::F64(x) => Column::F64(x.iter().map(|&v| apply_math(v, f)).collect()),
+        Column::I64(x) => match f {
+            MathFn::Abs => Column::I64(x.iter().map(|&v| v.abs()).collect()),
+            MathFn::Neg => Column::I64(x.iter().map(|&v| -v).collect()),
+            _ => Column::F64(x.iter().map(|&v| apply_math(v as f64, f)).collect()),
+        },
+        _ => panic!("math: unsupported dtype {}", a.dtype()),
+    }
+}
+
+#[inline(always)]
+fn apply_math(x: f64, f: MathFn) -> f64 {
+    match f {
+        MathFn::Log => x.ln(),
+        MathFn::Exp => x.exp(),
+        MathFn::Sqrt => x.sqrt(),
+        MathFn::Sin => x.sin(),
+        MathFn::Cos => x.cos(),
+        MathFn::Abs => x.abs(),
+        MathFn::Neg => -x,
+    }
+}
+
+// ----- local reductions (the per-rank halves of distributed aggregates) ----
+
+pub fn sum_f64(a: &Column) -> f64 {
+    match a {
+        Column::F64(x) => x.iter().sum(),
+        Column::I64(x) => x.iter().map(|&v| v as f64).sum(),
+        Column::Bool(x) => x.iter().map(|&b| b as i64 as f64).sum(),
+        _ => panic!("sum: unsupported dtype {}", a.dtype()),
+    }
+}
+
+pub fn min_f64(a: &Column) -> f64 {
+    match a {
+        Column::F64(x) => x.iter().copied().fold(f64::INFINITY, f64::min),
+        Column::I64(x) => x.iter().map(|&v| v as f64).fold(f64::INFINITY, f64::min),
+        _ => panic!("min: unsupported dtype {}", a.dtype()),
+    }
+}
+
+pub fn max_f64(a: &Column) -> f64 {
+    match a {
+        Column::F64(x) => x.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        Column::I64(x) => x.iter().map(|&v| v as f64).fold(f64::NEG_INFINITY, f64::max),
+        _ => panic!("max: unsupported dtype {}", a.dtype()),
+    }
+}
+
+pub fn mean_f64(a: &Column) -> f64 {
+    if a.is_empty() {
+        return f64::NAN;
+    }
+    sum_f64(a) / a.len() as f64
+}
+
+/// Population variance (the paper's feature-scaling `var`).
+pub fn var_f64(a: &Column) -> f64 {
+    if a.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean_f64(a);
+    let v = a.to_f64_vec();
+    v.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64
+}
+
+/// Cast helper used by aggregate expression arrays: bool -> i64 (so
+/// `sum(:i_class_id==1)` counts matches, per Table 1's aggregate example).
+pub fn bool_to_i64(a: &Column) -> Column {
+    Column::I64(a.as_bool().iter().map(|&b| b as i64).collect())
+}
+
+/// Infer the result dtype of `arith` without evaluating (expression typing).
+pub fn arith_result_dtype(a: DType, b: DType) -> Option<DType> {
+    a.promote(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arith_int_int() {
+        let a = Column::I64(vec![1, 2, 3]);
+        let b = Column::I64(vec![10, 20, 30]);
+        assert_eq!(arith(&a, &b, ArithOp::Add).as_i64(), &[11, 22, 33]);
+        assert_eq!(arith(&a, &b, ArithOp::Mul).as_i64(), &[10, 40, 90]);
+        assert_eq!(arith(&b, &a, ArithOp::Mod).as_i64(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn arith_promotes() {
+        let a = Column::I64(vec![1, 2]);
+        let b = Column::F64(vec![0.5, 0.5]);
+        assert_eq!(arith(&a, &b, ArithOp::Add).as_f64(), &[1.5, 2.5]);
+        assert_eq!(arith(&b, &a, ArithOp::Sub).as_f64(), &[-0.5, -1.5]);
+    }
+
+    #[test]
+    fn arith_scalar_keeps_int_when_exact() {
+        let a = Column::I64(vec![10, 20]);
+        assert_eq!(arith_scalar(&a, 3.0, ArithOp::Mod, false).as_i64(), &[1, 2]);
+        assert_eq!(
+            arith_scalar(&a, 2.0, ArithOp::Div, false).as_f64(),
+            &[5.0, 10.0]
+        );
+        // scalar on the left matters for non-commutative ops
+        assert_eq!(
+            arith_scalar(&a, 100.0, ArithOp::Sub, true).as_i64(),
+            &[90, 80]
+        );
+    }
+
+    #[test]
+    fn comparisons() {
+        let a = Column::I64(vec![1, 5, 9]);
+        assert_eq!(
+            compare_scalar_f64(&a, 5.0, CmpOp::Lt).as_bool(),
+            &[true, false, false]
+        );
+        assert_eq!(
+            compare_scalar_f64(&a, 5.0, CmpOp::Ge).as_bool(),
+            &[false, true, true]
+        );
+        let b = Column::F64(vec![1.0, 4.0, 10.0]);
+        assert_eq!(
+            compare(&a, &b, CmpOp::Eq).as_bool(),
+            &[true, false, false]
+        );
+    }
+
+    #[test]
+    fn string_compare() {
+        let c = Column::Str(vec!["ab".into(), "cd".into()]);
+        assert_eq!(
+            compare_scalar_str(&c, "ab", CmpOp::Eq).as_bool(),
+            &[true, false]
+        );
+        assert_eq!(
+            compare_scalar_str(&c, "b", CmpOp::Lt).as_bool(),
+            &[true, false]
+        );
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let a = Column::Bool(vec![true, true, false]);
+        let b = Column::Bool(vec![true, false, false]);
+        assert_eq!(bool_and(&a, &b).as_bool(), &[true, false, false]);
+        assert_eq!(bool_or(&a, &b).as_bool(), &[true, true, false]);
+        assert_eq!(bool_not(&a).as_bool(), &[false, false, true]);
+    }
+
+    #[test]
+    fn math_fns() {
+        let a = Column::F64(vec![1.0, 4.0]);
+        assert_eq!(math(&a, MathFn::Sqrt).as_f64(), &[1.0, 2.0]);
+        let b = Column::I64(vec![-3, 3]);
+        assert_eq!(math(&b, MathFn::Abs).as_i64(), &[3, 3]);
+        assert_eq!(math(&b, MathFn::Neg).as_i64(), &[3, -3]);
+        let e = math(&Column::I64(vec![0]), MathFn::Exp);
+        assert_eq!(e.as_f64(), &[1.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Column::F64(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(sum_f64(&a), 10.0);
+        assert_eq!(mean_f64(&a), 2.5);
+        assert_eq!(min_f64(&a), 1.0);
+        assert_eq!(max_f64(&a), 4.0);
+        assert_eq!(var_f64(&a), 1.25);
+        assert_eq!(sum_f64(&Column::Bool(vec![true, false, true])), 2.0);
+    }
+
+    #[test]
+    fn empty_reductions() {
+        assert!(mean_f64(&Column::F64(vec![])).is_nan());
+        assert!(var_f64(&Column::F64(vec![])).is_nan());
+        assert_eq!(sum_f64(&Column::F64(vec![])), 0.0);
+    }
+
+    #[test]
+    fn bool_cast() {
+        let m = Column::Bool(vec![true, false, true]);
+        assert_eq!(bool_to_i64(&m).as_i64(), &[1, 0, 1]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Typed columns — the "individual array variables" of the paper's dual
+//! representation (§4). Every data-frame column is one [`Column`]; data-frame
+//! structure exists only as IR metadata. All relational and analytics
+//! operators ultimately manipulate these flat arrays.
+
+mod codec;
+mod kernels;
+
+pub use codec::{decode_column, encode_column, encode_column_take, encoded_size};
+pub use kernels::*;
+
+use crate::types::{DType, Value};
+use std::fmt;
+
+/// A contiguous, homogeneously-typed array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Bool(Vec<bool>),
+    Str(Vec<String>),
+}
+
+impl Column {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::I64(_) => DType::I64,
+            Column::F64(_) => DType::F64,
+            Column::Bool(_) => DType::Bool,
+            Column::Str(_) => DType::Str,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::I64(v) => v.len(),
+            Column::F64(v) => v.len(),
+            Column::Bool(v) => v.len(),
+            Column::Str(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Allocate an empty column of the given dtype (the `alloc` calls in the
+    /// paper's generated C — Fig. 5).
+    pub fn new_empty(dtype: DType) -> Column {
+        match dtype {
+            DType::I64 => Column::I64(Vec::new()),
+            DType::F64 => Column::F64(Vec::new()),
+            DType::Bool => Column::Bool(Vec::new()),
+            DType::Str => Column::Str(Vec::new()),
+        }
+    }
+
+    /// Allocate with capacity, for shuffle receive buffers.
+    pub fn with_capacity(dtype: DType, cap: usize) -> Column {
+        match dtype {
+            DType::I64 => Column::I64(Vec::with_capacity(cap)),
+            DType::F64 => Column::F64(Vec::with_capacity(cap)),
+            DType::Bool => Column::Bool(Vec::with_capacity(cap)),
+            DType::Str => Column::Str(Vec::with_capacity(cap)),
+        }
+    }
+
+    pub fn get(&self, i: usize) -> Value {
+        match self {
+            Column::I64(v) => Value::I64(v[i]),
+            Column::F64(v) => Value::F64(v[i]),
+            Column::Bool(v) => Value::Bool(v[i]),
+            Column::Str(v) => Value::Str(v[i].clone()),
+        }
+    }
+
+    pub fn push(&mut self, v: &Value) {
+        match (self, v) {
+            (Column::I64(c), Value::I64(x)) => c.push(*x),
+            (Column::F64(c), Value::F64(x)) => c.push(*x),
+            (Column::Bool(c), Value::Bool(x)) => c.push(*x),
+            (Column::Str(c), Value::Str(x)) => c.push(x.clone()),
+            (c, v) => panic!("push: dtype mismatch {:?} <- {:?}", c.dtype(), v),
+        }
+    }
+
+    /// Take the rows at `idx` (gather). Used by sort-merge join output
+    /// materialization and by rebalance repacking.
+    pub fn take(&self, idx: &[usize]) -> Column {
+        match self {
+            Column::I64(v) => Column::I64(idx.iter().map(|&i| v[i]).collect()),
+            Column::F64(v) => Column::F64(idx.iter().map(|&i| v[i]).collect()),
+            Column::Bool(v) => Column::Bool(idx.iter().map(|&i| v[i]).collect()),
+            Column::Str(v) => Column::Str(idx.iter().map(|&i| v[i].clone()).collect()),
+        }
+    }
+
+    /// Keep only rows where `mask` is true — the filter kernel
+    /// (`HiFrames.API.filter`, paper §4.1).
+    pub fn filter(&self, mask: &[bool]) -> Column {
+        assert_eq!(mask.len(), self.len(), "filter: mask length mismatch");
+        match self {
+            Column::I64(v) => Column::I64(filter_vec(v, mask)),
+            Column::F64(v) => Column::F64(filter_vec(v, mask)),
+            Column::Bool(v) => Column::Bool(filter_vec(v, mask)),
+            Column::Str(v) => Column::Str(
+                v.iter()
+                    .zip(mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(x, _)| x.clone())
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Contiguous sub-range `[start, start+len)` — hyperslab slicing.
+    pub fn slice(&self, start: usize, len: usize) -> Column {
+        match self {
+            Column::I64(v) => Column::I64(v[start..start + len].to_vec()),
+            Column::F64(v) => Column::F64(v[start..start + len].to_vec()),
+            Column::Bool(v) => Column::Bool(v[start..start + len].to_vec()),
+            Column::Str(v) => Column::Str(v[start..start + len].to_vec()),
+        }
+    }
+
+    /// Append all of `other` (vertical concatenation, paper's `vcat`).
+    pub fn extend(&mut self, other: &Column) {
+        match (self, other) {
+            (Column::I64(a), Column::I64(b)) => a.extend_from_slice(b),
+            (Column::F64(a), Column::F64(b)) => a.extend_from_slice(b),
+            (Column::Bool(a), Column::Bool(b)) => a.extend_from_slice(b),
+            (Column::Str(a), Column::Str(b)) => a.extend_from_slice(b),
+            (a, b) => panic!("extend: dtype mismatch {:?} vs {:?}", a.dtype(), b.dtype()),
+        }
+    }
+
+    pub fn as_i64(&self) -> &[i64] {
+        match self {
+            Column::I64(v) => v,
+            other => panic!("expected Int64 column, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            Column::F64(v) => v,
+            other => panic!("expected Float64 column, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_bool(&self) -> &[bool] {
+        match self {
+            Column::Bool(v) => v,
+            other => panic!("expected Bool column, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_str_col(&self) -> &[String] {
+        match self {
+            Column::Str(v) => v,
+            other => panic!("expected String column, got {}", other.dtype()),
+        }
+    }
+
+    /// Cast to f64 (feature assembly before ML; Julia `typed_hcat(Float64,...)`).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Column::I64(v) => v.iter().map(|&x| x as f64).collect(),
+            Column::F64(v) => v.clone(),
+            Column::Bool(v) => v.iter().map(|&b| b as i64 as f64).collect(),
+            Column::Str(_) => panic!("cannot cast String column to Float64"),
+        }
+    }
+
+    /// Approximate heap size in bytes (metrics / spill accounting).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Column::I64(v) => v.len() * 8,
+            Column::F64(v) => v.len() * 8,
+            Column::Bool(v) => v.len(),
+            Column::Str(v) => v.iter().map(|s| s.len() + 8).sum(),
+        }
+    }
+}
+
+fn filter_vec<T: Copy>(v: &[T], mask: &[bool]) -> Vec<T> {
+    // Branch-friendly single pass; the perf pass found this ~2x faster than
+    // iterator zip+filter chains on 20M-row masks (EXPERIMENTS.md §Perf).
+    let mut out = Vec::with_capacity(count_true(mask));
+    for i in 0..v.len() {
+        if mask[i] {
+            out.push(v[i]);
+        }
+    }
+    out
+}
+
+/// Population count of a boolean mask.
+pub fn count_true(mask: &[bool]) -> usize {
+    mask.iter().map(|&b| b as usize).sum()
+}
+
+impl fmt::Display for Column {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = self.len().min(8);
+        write!(f, "{}[", self.dtype())?;
+        for i in 0..n {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}", self.get(i))?;
+        }
+        if self.len() > n {
+            write!(f, ", … ({} total)", self.len())?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let c = Column::I64(vec![1, 2, 3]);
+        assert_eq!(c.len(), 3);
+        assert!(!c.is_empty());
+        assert_eq!(c.dtype(), DType::I64);
+        assert_eq!(c.get(1), Value::I64(2));
+        assert_eq!(c.as_i64(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn filter_and_take() {
+        let c = Column::F64(vec![1.0, 2.0, 3.0, 4.0]);
+        let f = c.filter(&[true, false, true, false]);
+        assert_eq!(f, Column::F64(vec![1.0, 3.0]));
+        let t = c.take(&[3, 0, 0]);
+        assert_eq!(t, Column::F64(vec![4.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn filter_strings() {
+        let c = Column::Str(vec!["a".into(), "b".into(), "c".into()]);
+        let f = c.filter(&[false, true, true]);
+        assert_eq!(f.as_str_col(), &["b".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mask length mismatch")]
+    fn filter_length_mismatch_panics() {
+        Column::I64(vec![1, 2]).filter(&[true]);
+    }
+
+    #[test]
+    fn slice_and_extend() {
+        let mut a = Column::I64(vec![1, 2, 3]);
+        let b = Column::I64(vec![4, 5]);
+        a.extend(&b);
+        assert_eq!(a.as_i64(), &[1, 2, 3, 4, 5]);
+        assert_eq!(a.slice(1, 3).as_i64(), &[2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn extend_mismatch_panics() {
+        let mut a = Column::I64(vec![1]);
+        a.extend(&Column::F64(vec![1.0]));
+    }
+
+    #[test]
+    fn push_values() {
+        let mut c = Column::new_empty(DType::Str);
+        c.push(&Value::Str("x".into()));
+        assert_eq!(c.len(), 1);
+        let mut c = Column::with_capacity(DType::Bool, 4);
+        c.push(&Value::Bool(true));
+        assert_eq!(c.as_bool(), &[true]);
+    }
+
+    #[test]
+    fn to_f64_cast() {
+        assert_eq!(Column::I64(vec![1, 2]).to_f64_vec(), vec![1.0, 2.0]);
+        assert_eq!(Column::Bool(vec![true, false]).to_f64_vec(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Column::I64(vec![0; 10]).byte_size(), 80);
+        assert_eq!(Column::Bool(vec![false; 10]).byte_size(), 10);
+        assert!(Column::Str(vec!["ab".into()]).byte_size() >= 10);
+    }
+
+    #[test]
+    fn display_truncates() {
+        let c = Column::I64((0..20).collect());
+        let s = format!("{c}");
+        assert!(s.contains("(20 total)"));
+    }
+}

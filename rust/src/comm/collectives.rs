@@ -1,0 +1,373 @@
+//! Collective operations over [`Comm`] — the `MPI_*` calls the paper's
+//! CGen emits (§4.5), with identical semantics:
+//!
+//! * [`Comm::alltoallv_bytes`] — the shuffle primitive for join/aggregate.
+//!   The paper first runs an `MPI_Alltoall` of counts so receivers can size
+//!   buffers; our channels carry length-prefixed payloads so the counts
+//!   exchange is implicit, but we still expose [`Comm::alltoall_counts`]
+//!   because the rebalance planner needs it.
+//! * [`Comm::exscan_f64`] / [`Comm::exscan_i64`] — `MPI_Exscan` for cumsum.
+//! * [`Comm::allreduce_f64`] / [`Comm::allreduce_i64`] — sums/min/max of
+//!   scalars (feature scaling's `mean`/`var`, global row counts).
+//! * [`Comm::halo_exchange`] — near-neighbor exchange for stencils
+//!   (the `MPI_Isend/Irecv/Wait` pattern).
+//! * [`Comm::gather_bytes`] / [`Comm::bcast_bytes`] / [`Comm::allgather_bytes`].
+
+use super::Comm;
+
+/// Reduction operator for scalar collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl Comm {
+    /// Exchange one byte-buffer with every rank (including self).
+    /// `bufs[d]` is sent to rank `d`; returns `out[s]` = buffer from rank `s`.
+    pub fn alltoallv_bytes(&self, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(bufs.len(), self.nranks(), "alltoallv: need one buf per rank");
+        self.count_collective();
+        for (d, buf) in bufs.into_iter().enumerate() {
+            self.send(d, buf);
+        }
+        (0..self.nranks()).map(|s| self.recv(s)).collect()
+    }
+
+    /// `MPI_Alltoall` of one u64 per rank (the counts pre-exchange).
+    pub fn alltoall_counts(&self, counts: &[u64]) -> Vec<u64> {
+        assert_eq!(counts.len(), self.nranks());
+        self.count_collective();
+        for (d, &c) in counts.iter().enumerate() {
+            self.send(d, c.to_le_bytes().to_vec());
+        }
+        (0..self.nranks())
+            .map(|s| {
+                let b = self.recv(s);
+                u64::from_le_bytes(b.try_into().expect("counts: 8 bytes"))
+            })
+            .collect()
+    }
+
+    /// Exclusive scan: rank r receives `op` over ranks 0..r (0/identity on
+    /// rank 0). Matches `MPI_Exscan` with undefined-on-root replaced by the
+    /// identity, which is what the paper's cumsum codegen wants.
+    pub fn exscan_f64(&self, value: f64, op: ReduceOp) -> f64 {
+        self.count_collective();
+        // Post value to all higher ranks, then fold contributions from lower.
+        for d in self.rank() + 1..self.nranks() {
+            self.send(d, value.to_le_bytes().to_vec());
+        }
+        let mut acc = identity_f64(op);
+        for s in 0..self.rank() {
+            let b = self.recv(s);
+            let v = f64::from_le_bytes(b.try_into().expect("exscan: 8 bytes"));
+            acc = apply_f64(acc, v, op);
+        }
+        acc
+    }
+
+    pub fn exscan_i64(&self, value: i64, op: ReduceOp) -> i64 {
+        self.count_collective();
+        for d in self.rank() + 1..self.nranks() {
+            self.send(d, value.to_le_bytes().to_vec());
+        }
+        let mut acc = identity_i64(op);
+        for s in 0..self.rank() {
+            let b = self.recv(s);
+            let v = i64::from_le_bytes(b.try_into().expect("exscan: 8 bytes"));
+            acc = apply_i64(acc, v, op);
+        }
+        acc
+    }
+
+    /// Allreduce of one f64 (sum/min/max on every rank).
+    pub fn allreduce_f64(&self, value: f64, op: ReduceOp) -> f64 {
+        self.count_collective();
+        for d in 0..self.nranks() {
+            if d != self.rank() {
+                self.send(d, value.to_le_bytes().to_vec());
+            }
+        }
+        // fold strictly in rank order so every rank computes a bit-identical
+        // result (floating-point reduction order matters; HPAT-generated
+        // MPI_Allreduce has the same determinism guarantee per run)
+        let mut acc = identity_f64(op);
+        for s in 0..self.nranks() {
+            let v = if s == self.rank() {
+                value
+            } else {
+                let b = self.recv(s);
+                f64::from_le_bytes(b.try_into().expect("allreduce: 8 bytes"))
+            };
+            acc = apply_f64(acc, v, op);
+        }
+        acc
+    }
+
+    pub fn allreduce_i64(&self, value: i64, op: ReduceOp) -> i64 {
+        self.count_collective();
+        for d in 0..self.nranks() {
+            if d != self.rank() {
+                self.send(d, value.to_le_bytes().to_vec());
+            }
+        }
+        let mut acc = value;
+        for s in 0..self.nranks() {
+            if s != self.rank() {
+                let b = self.recv(s);
+                let v = i64::from_le_bytes(b.try_into().expect("allreduce: 8 bytes"));
+                acc = apply_i64(acc, v, op);
+            }
+        }
+        acc
+    }
+
+    /// Element-wise allreduce of an f64 vector (k-means centroid partials).
+    pub fn allreduce_f64_vec(&self, values: &[f64], op: ReduceOp) -> Vec<f64> {
+        self.count_collective();
+        let mut payload = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for d in 0..self.nranks() {
+            if d != self.rank() {
+                self.send(d, payload.clone());
+            }
+        }
+        // rank-ordered fold: bit-identical across ranks (see allreduce_f64)
+        let mut acc = vec![identity_f64(op); values.len()];
+        for s in 0..self.nranks() {
+            if s == self.rank() {
+                for (a, &v) in acc.iter_mut().zip(values) {
+                    *a = apply_f64(*a, v, op);
+                }
+            } else {
+                let b = self.recv(s);
+                assert_eq!(b.len(), values.len() * 8, "allreduce_vec: length mismatch");
+                for (i, chunk) in b.chunks_exact(8).enumerate() {
+                    let v = f64::from_le_bytes(chunk.try_into().unwrap());
+                    acc[i] = apply_f64(acc[i], v, op);
+                }
+            }
+        }
+        acc
+    }
+
+    /// Gather byte-buffers on `root`; non-root ranks get an empty vec.
+    pub fn gather_bytes(&self, root: usize, payload: Vec<u8>) -> Vec<Vec<u8>> {
+        self.count_collective();
+        if self.rank() == root {
+            let mut out: Vec<Vec<u8>> = (0..self.nranks()).map(|_| Vec::new()).collect();
+            out[root] = payload;
+            for s in 0..self.nranks() {
+                if s != root {
+                    out[s] = self.recv(s);
+                }
+            }
+            out
+        } else {
+            self.send(root, payload);
+            Vec::new()
+        }
+    }
+
+    /// Broadcast a byte-buffer from `root` to every rank.
+    pub fn bcast_bytes(&self, root: usize, payload: Vec<u8>) -> Vec<u8> {
+        self.count_collective();
+        if self.rank() == root {
+            for d in 0..self.nranks() {
+                if d != root {
+                    self.send(d, payload.clone());
+                }
+            }
+            payload
+        } else {
+            self.recv(root)
+        }
+    }
+
+    /// Allgather: every rank receives every rank's buffer, in rank order.
+    pub fn allgather_bytes(&self, payload: Vec<u8>) -> Vec<Vec<u8>> {
+        self.count_collective();
+        for d in 0..self.nranks() {
+            if d != self.rank() {
+                self.send(d, payload.clone());
+            }
+        }
+        let mut out: Vec<Vec<u8>> = (0..self.nranks()).map(|_| Vec::new()).collect();
+        for s in 0..self.nranks() {
+            if s == self.rank() {
+                out[s] = payload.clone();
+            } else {
+                out[s] = self.recv(s);
+            }
+        }
+        out
+    }
+
+    /// Near-neighbor halo exchange for 1-D stencils: send `to_prev` to rank
+    /// r-1 and `to_next` to rank r+1; receive `(from_prev, from_next)`.
+    /// Edge ranks get `None` on the missing side. The paper overlaps this
+    /// with computation via `MPI_Isend/Irecv`; our sends are already
+    /// non-blocking so the structure is identical.
+    pub fn halo_exchange(
+        &self,
+        to_prev: Vec<u8>,
+        to_next: Vec<u8>,
+    ) -> (Option<Vec<u8>>, Option<Vec<u8>>) {
+        self.count_collective();
+        let r = self.rank();
+        let n = self.nranks();
+        if r > 0 {
+            self.send(r - 1, to_prev);
+        }
+        if r + 1 < n {
+            self.send(r + 1, to_next);
+        }
+        let from_prev = (r > 0).then(|| self.recv(r - 1));
+        let from_next = (r + 1 < n).then(|| self.recv(r + 1));
+        (from_prev, from_next)
+    }
+}
+
+fn identity_f64(op: ReduceOp) -> f64 {
+    match op {
+        ReduceOp::Sum => 0.0,
+        ReduceOp::Min => f64::INFINITY,
+        ReduceOp::Max => f64::NEG_INFINITY,
+    }
+}
+
+fn identity_i64(op: ReduceOp) -> i64 {
+    match op {
+        ReduceOp::Sum => 0,
+        ReduceOp::Min => i64::MAX,
+        ReduceOp::Max => i64::MIN,
+    }
+}
+
+fn apply_f64(a: f64, b: f64, op: ReduceOp) -> f64 {
+    match op {
+        ReduceOp::Sum => a + b,
+        ReduceOp::Min => a.min(b),
+        ReduceOp::Max => a.max(b),
+    }
+}
+
+fn apply_i64(a: i64, b: i64, op: ReduceOp) -> i64 {
+    match op {
+        ReduceOp::Sum => a + b,
+        ReduceOp::Min => a.min(b),
+        ReduceOp::Max => a.max(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_spmd;
+
+    #[test]
+    fn alltoallv_transposes() {
+        let out = run_spmd(3, |c| {
+            let bufs: Vec<Vec<u8>> = (0..3)
+                .map(|d| vec![(c.rank() * 10 + d) as u8])
+                .collect();
+            c.alltoallv_bytes(bufs)
+        });
+        // rank r receives [s*10 + r for s in 0..3]
+        for (r, received) in out.iter().enumerate() {
+            for (s, buf) in received.iter().enumerate() {
+                assert_eq!(buf, &vec![(s * 10 + r) as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_counts_exchange() {
+        let out = run_spmd(4, |c| {
+            let counts: Vec<u64> = (0..4).map(|d| (c.rank() * 100 + d) as u64).collect();
+            c.alltoall_counts(&counts)
+        });
+        for (r, recv) in out.iter().enumerate() {
+            for (s, &v) in recv.iter().enumerate() {
+                assert_eq!(v, (s * 100 + r) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn exscan_matches_prefix() {
+        let out = run_spmd(5, |c| c.exscan_f64((c.rank() + 1) as f64, ReduceOp::Sum));
+        // rank r gets sum of 1..=r
+        assert_eq!(out, vec![0.0, 1.0, 3.0, 6.0, 10.0]);
+        let out = run_spmd(4, |c| c.exscan_i64(c.rank() as i64, ReduceOp::Max));
+        assert_eq!(out, vec![i64::MIN, 0, 1, 2]);
+    }
+
+    #[test]
+    fn allreduce_all_ops() {
+        let sums = run_spmd(4, |c| c.allreduce_f64(c.rank() as f64, ReduceOp::Sum));
+        assert!(sums.iter().all(|&s| s == 6.0));
+        let mins = run_spmd(4, |c| c.allreduce_i64(c.rank() as i64 + 5, ReduceOp::Min));
+        assert!(mins.iter().all(|&m| m == 5));
+        let maxs = run_spmd(3, |c| c.allreduce_f64(-(c.rank() as f64), ReduceOp::Max));
+        assert!(maxs.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn allreduce_vec_sums_elementwise() {
+        let out = run_spmd(3, |c| {
+            c.allreduce_f64_vec(&[c.rank() as f64, 1.0], ReduceOp::Sum)
+        });
+        for v in out {
+            assert_eq!(v, vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn gather_and_bcast() {
+        let out = run_spmd(3, |c| {
+            let gathered = c.gather_bytes(0, vec![c.rank() as u8]);
+            if c.rank() == 0 {
+                assert_eq!(gathered, vec![vec![0u8], vec![1], vec![2]]);
+            } else {
+                assert!(gathered.is_empty());
+            }
+            let b = c.bcast_bytes(0, if c.rank() == 0 { vec![42] } else { Vec::new() });
+            b[0]
+        });
+        assert_eq!(out, vec![42, 42, 42]);
+    }
+
+    #[test]
+    fn allgather_orders_by_rank() {
+        let out = run_spmd(4, |c| c.allgather_bytes(vec![c.rank() as u8; 2]));
+        for per_rank in out {
+            assert_eq!(
+                per_rank,
+                vec![vec![0u8, 0], vec![1, 1], vec![2, 2], vec![3, 3]]
+            );
+        }
+    }
+
+    #[test]
+    fn halo_exchange_neighbors() {
+        let out = run_spmd(4, |c| {
+            let (p, n) = c.halo_exchange(vec![c.rank() as u8], vec![c.rank() as u8]);
+            (p.map(|b| b[0]), n.map(|b| b[0]))
+        });
+        assert_eq!(out[0], (None, Some(1)));
+        assert_eq!(out[1], (Some(0), Some(2)));
+        assert_eq!(out[2], (Some(1), Some(3)));
+        assert_eq!(out[3], (Some(2), None));
+    }
+
+    #[test]
+    fn halo_exchange_single_rank() {
+        let out = run_spmd(1, |c| c.halo_exchange(vec![1], vec![2]));
+        assert_eq!(out[0], (None, None));
+    }
+}

@@ -1,0 +1,287 @@
+//! Simulated-MPI communicator — the distributed substrate.
+//!
+//! The paper generates MPI: `MPI_Alltoall(v)` for shuffles, `MPI_Exscan`
+//! for cumulative sums, `MPI_Isend/Irecv/Wait` for stencil halos (§4.5).
+//! This module reproduces those collective *semantics* with N rank-threads
+//! in one process connected by per-pair byte channels. Payload serialization
+//! is real (the column codec), so per-rank communication volumes — the
+//! quantity the paper's performance analysis turns on — are measured, not
+//! modeled. See DESIGN.md §3 for the substitution argument.
+//!
+//! Deadlock discipline: channels are unbounded, so sends never block; every
+//! collective is written as "post all sends, then drain receives", which is
+//! safe for any interleaving across ranks.
+
+mod collectives;
+
+pub use collectives::*;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Shared communication counters (read by benches and EXPERIMENTS.md runs).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub barriers: AtomicU64,
+    pub collectives: AtomicU64,
+}
+
+impl CommStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.messages.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.barriers.load(Ordering::Relaxed),
+            self.collectives.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One rank's endpoint of the world: `MPI_COMM_WORLD` from that rank's view.
+pub struct Comm {
+    rank: usize,
+    nranks: usize,
+    /// senders[d] sends to rank d.
+    senders: Vec<Sender<Vec<u8>>>,
+    /// receivers[s] receives from rank s.
+    receivers: Vec<Receiver<Vec<u8>>>,
+    barrier: Arc<Barrier>,
+    stats: Arc<CommStats>,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Point-to-point send (non-blocking, like a completed `MPI_Isend`).
+    pub fn send(&self, dst: usize, payload: Vec<u8>) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes
+            .fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.senders[dst]
+            .send(payload)
+            .expect("comm: send to dead rank");
+    }
+
+    /// Blocking receive from a specific source rank.
+    pub fn recv(&self, src: usize) -> Vec<u8> {
+        self.receivers[src]
+            .recv()
+            .expect("comm: recv from dead rank")
+    }
+
+    /// `MPI_Barrier`.
+    pub fn barrier(&self) {
+        self.stats.barriers.fetch_add(1, Ordering::Relaxed);
+        self.barrier.wait();
+    }
+
+    pub(crate) fn count_collective(&self) {
+        self.stats.collectives.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Create an `n`-rank world and run `f` on every rank concurrently,
+/// returning the per-rank results in rank order. This is the launcher the
+/// paper gets from `mpiexec`.
+pub fn run_spmd<R, F>(nranks: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Comm) -> R + Sync,
+{
+    assert!(nranks > 0, "run_spmd: need at least one rank");
+    let stats = Arc::new(CommStats::default());
+    let comms = build_world(nranks, stats);
+    let mut results: Vec<Option<R>> = (0..nranks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for comm in comms {
+            let fref = &f;
+            handles.push(scope.spawn(move || fref(comm)));
+        }
+        for (slot, h) in results.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("comm: rank panicked"));
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Like [`run_spmd`] but also returns the shared [`CommStats`].
+pub fn run_spmd_with_stats<R, F>(nranks: usize, f: F) -> (Vec<R>, Arc<CommStats>)
+where
+    R: Send,
+    F: Fn(Comm) -> R + Sync,
+{
+    let stats = Arc::new(CommStats::default());
+    let comms = build_world(nranks, stats.clone());
+    let mut results: Vec<Option<R>> = (0..nranks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for comm in comms {
+            let fref = &f;
+            handles.push(scope.spawn(move || fref(comm)));
+        }
+        for (slot, h) in results.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("comm: rank panicked"));
+        }
+    });
+    (results.into_iter().map(|r| r.unwrap()).collect(), stats)
+}
+
+fn build_world(nranks: usize, stats: Arc<CommStats>) -> Vec<Comm> {
+    // channels[s][d] is the (tx, rx) pair for s -> d.
+    let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..nranks)
+        .map(|_| (0..nranks).map(|_| None).collect())
+        .collect();
+    let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = (0..nranks)
+        .map(|_| (0..nranks).map(|_| None).collect())
+        .collect();
+    for s in 0..nranks {
+        for d in 0..nranks {
+            let (tx, rx) = channel();
+            txs[s][d] = Some(tx);
+            rxs[d][s] = Some(rx); // indexed by receiver, then source
+        }
+    }
+    let barrier = Arc::new(Barrier::new(nranks));
+    let mut comms = Vec::with_capacity(nranks);
+    for (r, (tx_row, rx_row)) in txs.into_iter().zip(rxs).enumerate() {
+        comms.push(Comm {
+            rank: r,
+            nranks,
+            senders: tx_row.into_iter().map(|t| t.unwrap()).collect(),
+            receivers: rx_row.into_iter().map(|r| r.unwrap()).collect(),
+            barrier: barrier.clone(),
+            stats: stats.clone(),
+        });
+    }
+    comms
+}
+
+/// Split `total` rows into `nranks` 1D_BLOCK chunks: all ranks get
+/// `ceil(total/nranks)` except possibly the last (paper §4.4: "all
+/// processors have equal chunks of data except possibly the last").
+pub fn block_range(total: usize, nranks: usize, rank: usize) -> (usize, usize) {
+    let chunk = total.div_ceil(nranks);
+    let start = (chunk * rank).min(total);
+    let end = (chunk * (rank + 1)).min(total);
+    (start, end - start)
+}
+
+/// A shared one-shot cell for returning a value computed on one rank to the
+/// caller of `run_spmd` without threading it through every rank's result.
+pub struct OnceCellSync<T>(Mutex<Option<T>>);
+
+impl<T> Default for OnceCellSync<T> {
+    fn default() -> Self {
+        OnceCellSync(Mutex::new(None))
+    }
+}
+
+impl<T> OnceCellSync<T> {
+    pub fn set(&self, v: T) {
+        *self.0.lock().unwrap() = Some(v);
+    }
+    pub fn take(&self) -> Option<T> {
+        self.0.lock().unwrap().take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmd_runs_all_ranks() {
+        let out = run_spmd(4, |c| c.rank() * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn point_to_point_ring() {
+        let out = run_spmd(4, |c| {
+            let next = (c.rank() + 1) % c.nranks();
+            let prev = (c.rank() + c.nranks() - 1) % c.nranks();
+            c.send(next, vec![c.rank() as u8]);
+            let got = c.recv(prev);
+            got[0] as usize
+        });
+        assert_eq!(out, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let flag = AtomicUsize::new(0);
+        run_spmd(4, |c| {
+            if c.rank() == 0 {
+                flag.store(1, Ordering::SeqCst);
+            }
+            c.barrier();
+            assert_eq!(flag.load(Ordering::SeqCst), 1);
+        });
+    }
+
+    #[test]
+    fn stats_count_messages() {
+        let (_, stats) = run_spmd_with_stats(2, |c| {
+            c.send(1 - c.rank(), vec![0u8; 100]);
+            c.recv(1 - c.rank());
+        });
+        let (msgs, bytes, _, _) = stats.snapshot();
+        assert_eq!(msgs, 2);
+        assert_eq!(bytes, 200);
+    }
+
+    #[test]
+    fn block_range_covers_exactly() {
+        for total in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8] {
+                let mut covered = 0;
+                let mut next_start = 0;
+                for r in 0..p {
+                    let (s, l) = block_range(total, p, r);
+                    assert_eq!(s, next_start.min(total));
+                    covered += l;
+                    next_start = s + l;
+                }
+                assert_eq!(covered, total, "total={total} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_range_equal_chunks_except_last() {
+        let (_, l0) = block_range(10, 4, 0);
+        let (_, l1) = block_range(10, 4, 1);
+        let (_, l2) = block_range(10, 4, 2);
+        let (_, l3) = block_range(10, 4, 3);
+        assert_eq!((l0, l1, l2, l3), (3, 3, 3, 1));
+    }
+
+    #[test]
+    fn single_rank_world() {
+        let out = run_spmd(1, |c| {
+            c.barrier();
+            c.nranks()
+        });
+        assert_eq!(out, vec![1]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Run configuration: a small `key = value` file format plus environment
+//! overrides (`HIFRAMES_<KEY>`). The launcher, examples and benches all
+//! read a [`Config`] so experiments are reproducible from checked-in files.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration map with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse from `key = value` text. `#` starts a comment; blank lines are
+    /// ignored; later keys override earlier ones.
+    pub fn from_str_cfg(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::from_str_cfg(&text)
+    }
+
+    /// Apply `HIFRAMES_<KEY>` environment overrides for every known key and
+    /// any extra keys listed in `extra_keys`.
+    pub fn with_env_overrides(mut self, extra_keys: &[&str]) -> Config {
+        let keys: Vec<String> = self
+            .values
+            .keys()
+            .cloned()
+            .chain(extra_keys.iter().map(|s| s.to_string()))
+            .collect();
+        for k in keys {
+            let env_key = format!("HIFRAMES_{}", k.to_uppercase());
+            if let Ok(v) = std::env::var(&env_key) {
+                self.values.insert(k, v);
+            }
+        }
+        self
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("config key {key}={v}: expected usize")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("config key {key}={v}: expected f64")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config key {key}={v}: expected bool"),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+}
+
+/// Default worker count for this machine: physical-ish parallelism capped
+/// at 8 (the benches sweep explicitly; this is just the default).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basics() {
+        let c = Config::from_str_cfg(
+            "workers = 4\n# comment\nrows=100  # trailing\n\nname = q26\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("workers", 0).unwrap(), 4);
+        assert_eq!(c.get_usize("rows", 0).unwrap(), 100);
+        assert_eq!(c.get_str("name", ""), "q26");
+        assert_eq!(c.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::from_str_cfg("novalue\n").is_err());
+        let c = Config::from_str_cfg("x = abc\n").unwrap();
+        assert!(c.get_usize("x", 0).is_err());
+        assert!(c.get_f64("x", 0.0).is_err());
+        assert!(c.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn bools_and_floats() {
+        let c = Config::from_str_cfg("a = true\nb = 0\nf = 2.5\n").unwrap();
+        assert!(c.get_bool("a", false).unwrap());
+        assert!(!c.get_bool("b", true).unwrap());
+        assert_eq!(c.get_f64("f", 0.0).unwrap(), 2.5);
+        assert!(c.get_bool("missing", true).unwrap());
+    }
+
+    #[test]
+    fn later_overrides_earlier() {
+        let c = Config::from_str_cfg("x = 1\nx = 2\n").unwrap();
+        assert_eq!(c.get_usize("x", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn env_override() {
+        std::env::set_var("HIFRAMES_TESTKEY_UNIQ", "99");
+        let c = Config::from_str_cfg("testkey_uniq = 1\n")
+            .unwrap()
+            .with_env_overrides(&[]);
+        assert_eq!(c.get_usize("testkey_uniq", 0).unwrap(), 99);
+        std::env::remove_var("HIFRAMES_TESTKEY_UNIQ");
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,283 @@
+//! Deterministic random data generation.
+//!
+//! The paper's micro-benchmarks use tables "randomly generated from uniform
+//! distribution to avoid load balance issues" (§5) and TPCx-BB's generator
+//! for the query benchmarks; Q05 additionally stresses *skewed* keys. We
+//! provide a seedable SplitMix64/xoshiro256** PRNG (the offline image has no
+//! `rand` crate) plus uniform/normal/Zipf samplers and table generators.
+
+use crate::column::Column;
+use crate::table::Table;
+
+/// SplitMix64 — used to seed xoshiro and as a cheap standalone generator.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the workhorse PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from Box–Muller.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = SplitMix64::new(seed);
+        Rng {
+            s: [
+                sm.next_u64(),
+                sm.next_u64(),
+                sm.next_u64(),
+                sm.next_u64(),
+            ],
+            cached_normal: None,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo);
+        let span = (hi - lo) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn usize(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let (mut u1, u2) = (self.f64(), self.f64());
+        if u1 <= f64::MIN_POSITIVE {
+            u1 = f64::MIN_POSITIVE;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(xs.len())]
+    }
+}
+
+/// Zipf(α) sampler over `{0, …, n-1}` via inverse-CDF on a precomputed
+/// table. Used to reproduce the Q05 skewed-join experiment (paper §5.1):
+/// "a join on a large table with highly skewed data".
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Zipf {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// The micro-benchmark table of §5: an integer key and two floats.
+/// `key_range` controls join/aggregate selectivity.
+pub fn micro_table(rows: usize, key_range: i64, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let mut id = Vec::with_capacity(rows);
+    let mut x = Vec::with_capacity(rows);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        id.push(rng.i64_range(0, key_range));
+        x.push(rng.f64());
+        y.push(rng.f64() * 100.0);
+    }
+    Table::from_pairs(vec![
+        ("id", Column::I64(id)),
+        ("x", Column::F64(x)),
+        ("y", Column::F64(y)),
+    ])
+    .expect("micro_table construction")
+}
+
+/// Single-column series for the advanced-analytics benchmarks (Fig. 8b).
+pub fn series(rows: usize, seed: u64) -> Column {
+    let mut rng = Rng::new(seed);
+    Column::F64((0..rows).map(|_| rng.normal()).collect())
+}
+
+/// Skewed key table for the Q05-style experiment.
+pub fn skewed_table(rows: usize, key_range: usize, alpha: f64, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(key_range, alpha);
+    let mut id = Vec::with_capacity(rows);
+    let mut x = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        id.push(zipf.sample(&mut rng) as i64);
+        x.push(rng.f64());
+    }
+    Table::from_pairs(vec![("id", Column::I64(id)), ("x", Column::F64(x))])
+        .expect("skewed_table construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let f = rng.f64();
+            assert!((0.0..1.0).contains(&f));
+            let k = rng.i64_range(-5, 5);
+            assert!((-5..5).contains(&k));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut rng = Rng::new(3);
+        let z = Zipf::new(1000, 1.2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // head key should dominate the tail decisively
+        assert!(counts[0] > 20 * counts[500].max(1));
+        // all samples in range (indexing above would have panicked)
+        assert_eq!(counts.iter().sum::<usize>(), 50_000);
+    }
+
+    #[test]
+    fn micro_table_shape() {
+        let t = micro_table(1000, 50, 9);
+        assert_eq!(t.num_rows(), 1000);
+        assert_eq!(t.num_cols(), 3);
+        let keys = t.column("id").unwrap().as_i64();
+        assert!(keys.iter().all(|&k| (0..50).contains(&k)));
+        // determinism
+        assert_eq!(t, micro_table(1000, 50, 9));
+    }
+
+    #[test]
+    fn series_len() {
+        assert_eq!(series(123, 0).len(), 123);
+    }
+
+    #[test]
+    fn skewed_table_range() {
+        let t = skewed_table(500, 100, 1.5, 4);
+        assert!(t
+            .column("id")
+            .unwrap()
+            .as_i64()
+            .iter()
+            .all(|&k| (0..100).contains(&k)));
+    }
+
+    #[test]
+    fn choose_covers() {
+        let mut rng = Rng::new(5);
+        let xs = [1, 2, 3];
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            seen.insert(*rng.choose(&xs));
+        }
+        assert_eq!(seen.len(), 3);
+    }
+}

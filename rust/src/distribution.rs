@@ -1,0 +1,153 @@
+//! The distribution meet-semilattice (paper §4.4, Fig. 7).
+//!
+//! HPAT's distribution analysis assigns each array and each parallel loop a
+//! distribution drawn from a meet-semilattice; HiFrames *extends* it with
+//! `1D_VAR` — one-dimensional block distribution with variable-length
+//! chunks — so relational outputs (whose sizes are data-dependent) stay
+//! parallel without immediate rebalancing:
+//!
+//! ```text
+//!        1D_BLOCK            (top: equal chunks, default)
+//!           |
+//!        1D_VAR              (new: variable-length chunks)
+//!           |
+//!        2D_BLOCK_CYCLIC     (linear-algebra layouts)
+//!           |
+//!          REP               (bottom: replicated / sequential)
+//! ```
+//!
+//! Inference runs a fixed-point dataflow where each IR node's transfer
+//! function *meets* the distributions of its inputs/outputs, so arrays can
+//! only move *down* the lattice — which guarantees termination.
+
+use std::fmt;
+
+/// A point in the distribution meet-semilattice. Order: `Rep < TwoD <
+/// OneDVar < OneD` (higher = more parallel structure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dist {
+    /// `1D_BLOCK`: equal contiguous chunks except possibly the last rank.
+    OneD,
+    /// `1D_VAR`: contiguous chunks of data-dependent length (the paper's
+    /// novel element; outputs of filter/join/aggregate).
+    OneDVar,
+    /// `2D_BLOCK_CYCLIC`: ScaLAPACK-style layouts.
+    TwoD,
+    /// `REP`: replicated on every rank — i.e. sequential.
+    Rep,
+}
+
+impl Dist {
+    /// Height in the lattice (larger = higher).
+    fn rank_in_lattice(self) -> u8 {
+        match self {
+            Dist::OneD => 3,
+            Dist::OneDVar => 2,
+            Dist::TwoD => 1,
+            Dist::Rep => 0,
+        }
+    }
+
+    /// The meet (greatest lower bound). The paper's transfer functions are
+    /// all expressed as meets, e.g.
+    /// `dist[out] = 1D_VAR ∧ dist[in1] ∧ dist[in2] …`.
+    pub fn meet(self, other: Dist) -> Dist {
+        if self.rank_in_lattice() <= other.rank_in_lattice() {
+            self
+        } else {
+            other
+        }
+    }
+
+    /// Fold `meet` over an iterator (identity = top = `OneD`).
+    pub fn meet_all(dists: impl IntoIterator<Item = Dist>) -> Dist {
+        dists.into_iter().fold(Dist::OneD, Dist::meet)
+    }
+
+    /// Is this distribution parallel (any form of partitioning)?
+    pub fn is_parallel(self) -> bool {
+        !matches!(self, Dist::Rep)
+    }
+
+    /// `a ⊑ b` — is `a` at or below `b` in the lattice?
+    pub fn le(self, other: Dist) -> bool {
+        self.rank_in_lattice() <= other.rank_in_lattice()
+    }
+}
+
+impl fmt::Display for Dist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dist::OneD => "1D_BLOCK",
+            Dist::OneDVar => "1D_VAR",
+            Dist::TwoD => "2D_BLOCK_CYCLIC",
+            Dist::Rep => "REP",
+        };
+        write!(f, "{s}")
+    }
+}
+
+pub const ALL_DISTS: [Dist; 4] = [Dist::OneD, Dist::OneDVar, Dist::TwoD, Dist::Rep];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meet_is_glb() {
+        assert_eq!(Dist::OneD.meet(Dist::OneDVar), Dist::OneDVar);
+        assert_eq!(Dist::OneDVar.meet(Dist::Rep), Dist::Rep);
+        assert_eq!(Dist::OneD.meet(Dist::OneD), Dist::OneD);
+        assert_eq!(Dist::TwoD.meet(Dist::OneDVar), Dist::TwoD);
+    }
+
+    #[test]
+    fn lattice_laws() {
+        // idempotent, commutative, associative — checked exhaustively
+        for a in ALL_DISTS {
+            assert_eq!(a.meet(a), a);
+            for b in ALL_DISTS {
+                assert_eq!(a.meet(b), b.meet(a));
+                for c in ALL_DISTS {
+                    assert_eq!(a.meet(b).meet(c), a.meet(b.meet(c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_is_identity() {
+        for a in ALL_DISTS {
+            assert_eq!(Dist::OneD.meet(a), a);
+        }
+        assert_eq!(Dist::meet_all([]), Dist::OneD);
+    }
+
+    #[test]
+    fn meet_all_folds() {
+        assert_eq!(
+            Dist::meet_all([Dist::OneD, Dist::OneDVar, Dist::OneD]),
+            Dist::OneDVar
+        );
+        assert_eq!(
+            Dist::meet_all([Dist::OneDVar, Dist::Rep]),
+            Dist::Rep
+        );
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Dist::Rep.le(Dist::OneD));
+        assert!(Dist::OneDVar.le(Dist::OneD));
+        assert!(!Dist::OneD.le(Dist::OneDVar));
+        assert!(Dist::Rep.is_parallel() == false);
+        assert!(Dist::OneDVar.is_parallel());
+    }
+
+    #[test]
+    fn display_names_match_paper() {
+        assert_eq!(Dist::OneD.to_string(), "1D_BLOCK");
+        assert_eq!(Dist::OneDVar.to_string(), "1D_VAR");
+        assert_eq!(Dist::Rep.to_string(), "REP");
+    }
+}

@@ -1,0 +1,686 @@
+//! SPMD execution — the CGen analogue (paper §4.5).
+//!
+//! Every rank interprets the *same* optimized plan over its partition of
+//! the data, calling into [`crate::ops`] wherever the paper's generated C
+//! would issue MPI collectives. The per-rank state is a [`LocalFrame`]:
+//! a flat `name → Column` environment, i.e. every data-frame column is an
+//! individual array variable (dual representation).
+
+use crate::column::{decode_column, encode_column, Column};
+use crate::comm::{block_range, run_spmd, Comm};
+use crate::expr::{eval, ColumnEnv};
+use crate::ir::{Plan, SourceRef};
+use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy};
+use crate::passes::{optimize, PassOptions};
+use crate::table::{Schema, Table};
+use crate::types::DType;
+use anyhow::{bail, Context, Result};
+
+/// Execution options: worker (rank) count, optimizer toggles and the
+/// aggregation strategy (ablations flip these).
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    pub workers: usize,
+    pub passes: PassOptions,
+    pub agg_strategy: AggStrategy,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            workers: crate::config::default_workers(),
+            passes: PassOptions::default(),
+            agg_strategy: AggStrategy::RawShuffle,
+        }
+    }
+}
+
+/// One rank's chunk of a distributed data frame.
+#[derive(Debug, Clone)]
+pub struct LocalFrame {
+    pub schema: Schema,
+    pub cols: Vec<Column>,
+}
+
+impl LocalFrame {
+    pub fn num_rows(&self) -> usize {
+        self.cols.first().map_or(0, |c| c.len())
+    }
+
+    pub fn col(&self, name: &str) -> Result<&Column> {
+        let i = self
+            .schema
+            .index_of(name)
+            .with_context(|| format!("local frame: no column :{name}"))?;
+        Ok(&self.cols[i])
+    }
+
+    fn take_col(&mut self, name: &str) -> Result<Column> {
+        let i = self
+            .schema
+            .index_of(name)
+            .with_context(|| format!("local frame: no column :{name}"))?;
+        Ok(self.cols[i].clone())
+    }
+
+    /// Materialize this rank's chunk as a table (debug/inspection).
+    pub fn into_table(self) -> Result<Table> {
+        Table::new(self.schema, self.cols)
+    }
+}
+
+impl ColumnEnv for LocalFrame {
+    fn column(&self, name: &str) -> Option<&Column> {
+        self.schema.index_of(name).map(|i| &self.cols[i])
+    }
+    fn num_rows(&self) -> usize {
+        LocalFrame::num_rows(self)
+    }
+}
+
+/// Optimize `plan` and execute it on `opts.workers` ranks; gather the
+/// result on the leader and return it as a table (rank-order concatenation
+/// preserves global row order for ordered plans).
+pub fn collect(plan: Plan, opts: &ExecOptions) -> Result<Table> {
+    let optimized = optimize(plan, &opts.passes)?;
+    collect_optimized(&optimized, opts)
+}
+
+/// Execute an already-optimized plan (ablations call this directly).
+pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
+    let schema = plan.schema()?;
+    let results: Vec<Result<Vec<u8>>> = run_spmd(opts.workers, |comm| -> Result<Vec<u8>> {
+        let frame = exec_node(plan, &comm, opts)?;
+        // every rank serializes its chunk; leader assembles
+        let mut buf = Vec::new();
+        for c in &frame.cols {
+            encode_column(c, &mut buf);
+        }
+        let gathered = comm.gather_bytes(0, buf);
+        if comm.is_root() {
+            // concatenate per-rank chunks column-wise, rank order
+            let mut cols: Vec<Column> = frame
+                .schema
+                .fields()
+                .iter()
+                .map(|(_, t)| Column::new_empty(*t))
+                .collect();
+            for rank_buf in gathered {
+                let mut pos = 0;
+                for c in cols.iter_mut() {
+                    let chunk = decode_column(&rank_buf, &mut pos)?;
+                    c.extend(&chunk);
+                }
+            }
+            let mut out = Vec::new();
+            for c in &cols {
+                encode_column(c, &mut out);
+            }
+            Ok(out)
+        } else {
+            Ok(Vec::new())
+        }
+    });
+    // take rank 0's assembled buffer
+    let root_buf = results.into_iter().next().context("no ranks ran")??;
+    let mut pos = 0;
+    let mut cols = Vec::new();
+    for _ in 0..schema.len() {
+        cols.push(decode_column(&root_buf, &mut pos)?);
+    }
+    Table::new(schema, cols)
+}
+
+/// Optimize and execute, returning only the global row count (no driver
+/// gather) — the fair timing primitive for operation benchmarks, analogous
+/// to Spark's `.count()` action.
+pub fn collect_count(plan: Plan, opts: &ExecOptions) -> Result<usize> {
+    let optimized = optimize(plan, &opts.passes)?;
+    let counts: Vec<Result<usize>> = run_spmd(opts.workers, |comm| -> Result<usize> {
+        let frame = exec_node(&optimized, &comm, opts)?;
+        Ok(frame.num_rows())
+    });
+    counts.into_iter().try_fold(0usize, |acc, r| r.map(|n| acc + n))
+}
+
+/// Interpret one plan node on this rank.
+pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFrame> {
+    match plan {
+        Plan::Source { src, schema, .. } => {
+            let names: Vec<&str> = schema.names();
+            exec_source(src, schema, &names, comm)
+        }
+        // pruning inserts Project(Source): read only the needed columns —
+        // this is where column pruning actually saves I/O
+        Plan::Project { input, columns } => {
+            if let Plan::Source { src, schema, .. } = input.as_ref() {
+                let names: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+                let sub = Schema::new(
+                    columns
+                        .iter()
+                        .map(|c| (c.clone(), schema.dtype_of(c).unwrap()))
+                        .collect(),
+                );
+                return exec_source(src, &sub, &names, comm);
+            }
+            let frame = exec_node(input, comm, opts)?;
+            let mut cols = Vec::new();
+            let mut fields = Vec::new();
+            for c in columns {
+                let i = frame
+                    .schema
+                    .index_of(c)
+                    .with_context(|| format!("project: no column :{c}"))?;
+                fields.push(frame.schema.fields()[i].clone());
+                cols.push(frame.cols[i].clone());
+            }
+            Ok(LocalFrame {
+                schema: Schema::new(fields),
+                cols,
+            })
+        }
+        Plan::Filter { input, predicate } => {
+            let frame = exec_node(input, comm, opts)?;
+            // expr_arr = map(pred, cols) — the paper's Fig. 4 expression
+            // array; eval_mask avoids cloning bare column refs (§Perf)
+            let mask = crate::expr::eval_mask(predicate, &frame)?;
+            let cols = frame.cols.iter().map(|c| c.filter(&mask)).collect();
+            Ok(LocalFrame {
+                schema: frame.schema.clone(),
+                cols,
+            })
+        }
+        Plan::WithColumn { input, name, expr } => {
+            let frame = exec_node(input, comm, opts)?;
+            let new_col = eval(expr, &frame)?;
+            let mut fields: Vec<(String, DType)> = Vec::new();
+            let mut cols = Vec::new();
+            for ((n, t), c) in frame.schema.fields().iter().zip(&frame.cols) {
+                if n != name {
+                    fields.push((n.clone(), *t));
+                    cols.push(c.clone());
+                }
+            }
+            fields.push((name.clone(), new_col.dtype()));
+            cols.push(new_col);
+            Ok(LocalFrame {
+                schema: Schema::new(fields),
+                cols,
+            })
+        }
+        Plan::Rename { input, from, to } => {
+            let frame = exec_node(input, comm, opts)?;
+            let fields = frame
+                .schema
+                .fields()
+                .iter()
+                .map(|(n, t)| {
+                    if n == from {
+                        (to.clone(), *t)
+                    } else {
+                        (n.clone(), *t)
+                    }
+                })
+                .collect();
+            Ok(LocalFrame {
+                schema: Schema::new(fields),
+                cols: frame.cols,
+            })
+        }
+        Plan::Join {
+            left,
+            right,
+            left_key,
+            right_key,
+        } => {
+            let lframe = exec_node(left, comm, opts)?;
+            let rframe = exec_node(right, comm, opts)?;
+            let lkeys = lframe.col(left_key)?.as_i64().to_vec();
+            let rkeys = rframe.col(right_key)?.as_i64().to_vec();
+            // payload columns exclude the key columns (reinserted after)
+            let lpay: Vec<Column> = lframe
+                .schema
+                .fields()
+                .iter()
+                .zip(&lframe.cols)
+                .filter(|((n, _), _)| n != left_key)
+                .map(|(_, c)| c.clone())
+                .collect();
+            let rpay: Vec<Column> = rframe
+                .schema
+                .fields()
+                .iter()
+                .zip(&rframe.cols)
+                .filter(|((n, _), _)| n != right_key)
+                .map(|(_, c)| c.clone())
+                .collect();
+            let (keys, lout, rout) =
+                ops::distributed_join(comm, &lkeys, &lpay, &rkeys, &rpay)?;
+            // assemble output per the join schema: left fields in order
+            // (key replaced by joined keys), then right minus key
+            let schema = plan.schema()?;
+            let mut cols = Vec::with_capacity(schema.len());
+            let mut li = 0usize;
+            for (n, _) in lframe.schema.fields() {
+                if n == left_key {
+                    cols.push(Column::I64(keys.clone()));
+                } else {
+                    cols.push(lout[li].clone());
+                    li += 1;
+                }
+            }
+            let mut ri = 0usize;
+            for (n, _) in rframe.schema.fields() {
+                if n == right_key {
+                    continue;
+                }
+                cols.push(rout[ri].clone());
+                ri += 1;
+            }
+            Ok(LocalFrame {
+                schema,
+                cols,
+            })
+        }
+        Plan::Aggregate { input, key, aggs } => {
+            let frame = exec_node(input, comm, opts)?;
+            let keys = frame.col(key)?.as_i64().to_vec();
+            // evaluate the expression array of every aggregate locally
+            // (pre-shuffle), exactly like the paper's desugaring
+            let mut expr_cols = Vec::with_capacity(aggs.len());
+            let mut specs = Vec::with_capacity(aggs.len());
+            for a in aggs {
+                let c = eval(&a.input, &frame)?;
+                specs.push(AggSpec {
+                    func: a.func,
+                    input_dtype: c.dtype(),
+                });
+                expr_cols.push(c);
+            }
+            let (out_keys, out_cols) =
+                ops::distributed_aggregate(comm, &keys, &expr_cols, &specs, opts.agg_strategy)?;
+            let schema = plan.schema()?;
+            let mut cols = vec![Column::I64(out_keys)];
+            cols.extend(out_cols);
+            Ok(LocalFrame { schema, cols })
+        }
+        Plan::Concat { inputs } => {
+            let mut frames = Vec::new();
+            for p in inputs {
+                frames.push(exec_node(p, comm, opts)?);
+            }
+            let first = frames.remove(0);
+            let mut cols = first.cols;
+            for f in frames {
+                for (a, b) in cols.iter_mut().zip(&f.cols) {
+                    a.extend(b);
+                }
+            }
+            Ok(LocalFrame {
+                schema: first.schema,
+                cols,
+            })
+        }
+        Plan::Cumsum { input, column, out } => {
+            let frame = exec_node(input, comm, opts)?;
+            let src = frame.col(column)?;
+            let new_col = match src {
+                Column::I64(v) => Column::I64(ops::cumsum_i64(comm, v)),
+                Column::F64(v) => Column::F64(ops::cumsum_f64(comm, v)),
+                other => bail!("cumsum over {} column", other.dtype()),
+            };
+            append_column(frame, out, new_col)
+        }
+        Plan::Stencil {
+            input,
+            column,
+            out,
+            weights,
+        } => {
+            let frame = exec_node(input, comm, opts)?;
+            let xs = frame.col(column)?.to_f64_vec();
+            let new_col = Column::F64(ops::stencil_1d(comm, &xs, weights));
+            append_column(frame, out, new_col)
+        }
+        Plan::Sort { input, key } => {
+            let mut frame = exec_node(input, comm, opts)?;
+            let keys = frame.take_col(key)?.as_i64().to_vec();
+            let others: Vec<Column> = frame
+                .schema
+                .fields()
+                .iter()
+                .zip(&frame.cols)
+                .filter(|((n, _), _)| n != key)
+                .map(|(_, c)| c.clone())
+                .collect();
+            let (skeys, scols) = ops::distributed_sort_by_key(comm, &keys, &others)?;
+            let mut cols = Vec::with_capacity(frame.cols.len());
+            let mut oi = 0usize;
+            for (n, _) in frame.schema.fields() {
+                if n == key {
+                    cols.push(Column::I64(skeys.clone()));
+                } else {
+                    cols.push(scols[oi].clone());
+                    oi += 1;
+                }
+            }
+            Ok(LocalFrame {
+                schema: frame.schema,
+                cols,
+            })
+        }
+        Plan::Rebalance { input } => {
+            let frame = exec_node(input, comm, opts)?;
+            let cols = ops::rebalance_block(comm, &frame.cols)?;
+            Ok(LocalFrame {
+                schema: frame.schema,
+                cols,
+            })
+        }
+        Plan::MatrixAssembly { input, columns } => {
+            let frame = exec_node(input, comm, opts)?;
+            let schema = plan.schema()?;
+            let cols: Vec<Column> = columns
+                .iter()
+                .map(|c| frame.col(c).map(|col| Column::F64(col.to_f64_vec())))
+                .collect::<Result<_>>()?;
+            Ok(LocalFrame { schema, cols })
+        }
+        Plan::MlCall { input, params } => {
+            let frame = exec_node(input, comm, opts)?;
+            let features: Vec<Vec<f64>> =
+                frame.cols.iter().map(|c| c.to_f64_vec()).collect();
+            let result = crate::ml::run_mlcall(comm, &features, params)?;
+            // result: k rows × (d features + cluster id), replicated
+            let schema = plan.schema()?;
+            let mut cols: Vec<Column> = result
+                .centroids
+                .into_iter()
+                .map(Column::F64)
+                .collect();
+            cols.push(Column::I64(result.cluster_ids));
+            if comm.is_root() {
+                Ok(LocalFrame { schema, cols })
+            } else {
+                // replicated output: only the leader reports it upward so the
+                // gather in `collect` doesn't duplicate rows
+                let empty = schema
+                    .fields()
+                    .iter()
+                    .map(|(_, t)| Column::new_empty(*t))
+                    .collect();
+                Ok(LocalFrame {
+                    schema,
+                    cols: empty,
+                })
+            }
+        }
+    }
+}
+
+fn exec_source(
+    src: &SourceRef,
+    schema: &Schema,
+    names: &[&str],
+    comm: &Comm,
+) -> Result<LocalFrame> {
+    match src {
+        SourceRef::InMemory(table) => {
+            let (start, len) = block_range(table.num_rows(), comm.nranks(), comm.rank());
+            let cols = names
+                .iter()
+                .map(|n| {
+                    table
+                        .column(n)
+                        .with_context(|| format!("source: no column :{n}"))
+                        .map(|c| c.slice(start, len))
+                })
+                .collect::<Result<_>>()?;
+            Ok(LocalFrame {
+                schema: schema.clone(),
+                cols,
+            })
+        }
+        SourceRef::Hfs(path) => {
+            let (_, nrows) = crate::io::read_hfs_schema(path)?;
+            let (start, len) = block_range(nrows, comm.nranks(), comm.rank());
+            let cols = crate::io::read_hfs_slice(path, names, start, len)?;
+            Ok(LocalFrame {
+                schema: schema.clone(),
+                cols,
+            })
+        }
+    }
+}
+
+fn append_column(frame: LocalFrame, out: &str, new_col: Column) -> Result<LocalFrame> {
+    let mut fields: Vec<(String, DType)> = Vec::new();
+    let mut cols = Vec::new();
+    for ((n, t), c) in frame.schema.fields().iter().zip(&frame.cols) {
+        if n != out {
+            fields.push((n.clone(), *t));
+            cols.push(c.clone());
+        }
+    }
+    fields.push((out.to_string(), new_col.dtype()));
+    cols.push(new_col);
+    Ok(LocalFrame {
+        schema: Schema::new(fields),
+        cols,
+    })
+}
+
+/// Serial reference execution of a plan (single rank) — the oracle the
+/// engine-agreement tests compare against.
+pub fn collect_serial(plan: Plan) -> Result<Table> {
+    let opts = ExecOptions {
+        workers: 1,
+        passes: PassOptions::none(),
+        agg_strategy: AggStrategy::RawShuffle,
+    };
+    let optimized = optimize(plan, &opts.passes)?;
+    collect_optimized(&optimized, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{col, lit, AggExpr, AggFn};
+    use crate::ir::source_mem;
+
+    fn table() -> Table {
+        Table::from_pairs(vec![
+            ("id", Column::I64(vec![0, 1, 2, 3, 4, 5, 6, 7])),
+            (
+                "x",
+                Column::F64(vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn opts(workers: usize) -> ExecOptions {
+        ExecOptions {
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn source_roundtrip_any_workers() {
+        for w in [1, 2, 3, 5] {
+            let t = collect(source_mem("t", table()), &opts(w)).unwrap();
+            assert_eq!(t, table(), "workers={w}");
+        }
+    }
+
+    #[test]
+    fn filter_matches_serial() {
+        let plan = Plan::Filter {
+            input: Box::new(source_mem("t", table())),
+            predicate: col("x").lt(lit(0.35)),
+        };
+        let got = collect(plan, &opts(3)).unwrap();
+        assert_eq!(got.column("id").unwrap().as_i64(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn withcolumn_and_project() {
+        let plan = Plan::Project {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(source_mem("t", table())),
+                name: "y".into(),
+                expr: col("x").mul(lit(10.0)),
+            }),
+            columns: vec!["y".into()],
+        };
+        let got = collect(plan, &opts(2)).unwrap();
+        let y = got.column("y").unwrap().as_f64();
+        for (i, v) in y.iter().enumerate() {
+            assert!((v - i as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn join_two_tables() {
+        let right = Table::from_pairs(vec![
+            ("rid", Column::I64(vec![1, 3, 5, 9])),
+            ("tag", Column::I64(vec![10, 30, 50, 90])),
+        ])
+        .unwrap();
+        let plan = Plan::Sort {
+            input: Box::new(Plan::Join {
+                left: Box::new(source_mem("t", table())),
+                right: Box::new(source_mem("r", right)),
+                left_key: "id".into(),
+                right_key: "rid".into(),
+            }),
+            key: "id".into(),
+        };
+        let got = collect(plan, &opts(3)).unwrap();
+        assert_eq!(got.column("id").unwrap().as_i64(), &[1, 3, 5]);
+        assert_eq!(got.column("tag").unwrap().as_i64(), &[10, 30, 50]);
+    }
+
+    #[test]
+    fn aggregate_both_strategies() {
+        for strat in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            let plan = Plan::Sort {
+                input: Box::new(Plan::Aggregate {
+                    input: Box::new(source_mem("t", table())),
+                    key: "id".into(),
+                    aggs: vec![AggExpr::new("s", AggFn::Sum, col("x"))],
+                }),
+                key: "id".into(),
+            };
+            let mut o = opts(4);
+            o.agg_strategy = strat;
+            // make ids collide: id % 2
+            let plan = match plan {
+                Plan::Sort { input, key } => {
+                    if let Plan::Aggregate { input: agg_in, aggs, .. } = *input {
+                        Plan::Sort {
+                            input: Box::new(Plan::Aggregate {
+                                input: Box::new(Plan::WithColumn {
+                                    input: agg_in,
+                                    name: "id".into(),
+                                    expr: col("id").rem(lit(2i64)),
+                                }),
+                                key: "id".into(),
+                                aggs,
+                            }),
+                            key,
+                        }
+                    } else {
+                        unreachable!()
+                    }
+                }
+                _ => unreachable!(),
+            };
+            let got = collect(plan, &o).unwrap();
+            assert_eq!(got.column("id").unwrap().as_i64(), &[0, 1]);
+            let s = got.column("s").unwrap().as_f64();
+            assert!((s[0] - 1.2).abs() < 1e-9, "{strat:?}: {s:?}");
+            assert!((s[1] - 1.6).abs() < 1e-9, "{strat:?}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn cumsum_ordered() {
+        let plan = Plan::Cumsum {
+            input: Box::new(source_mem("t", table())),
+            column: "id".into(),
+            out: "cs".into(),
+        };
+        let got = collect(plan, &opts(3)).unwrap();
+        assert_eq!(
+            got.column("cs").unwrap().as_i64(),
+            &[0, 1, 3, 6, 10, 15, 21, 28]
+        );
+    }
+
+    #[test]
+    fn stencil_after_filter_gets_rebalanced() {
+        // filter (1D_VAR) then stencil (needs 1D_BLOCK): the optimizer must
+        // insert a rebalance and the result must match the serial oracle
+        let plan = Plan::Stencil {
+            input: Box::new(Plan::Filter {
+                input: Box::new(source_mem("t", table())),
+                predicate: col("id").ne_(lit(3i64)),
+            }),
+            column: "x".into(),
+            out: "sma".into(),
+            weights: vec![1.0 / 3.0; 3],
+        };
+        let expect = collect_serial(plan.clone()).unwrap();
+        let got = collect(plan, &opts(4)).unwrap();
+        let (e, g) = (
+            expect.column("sma").unwrap().as_f64(),
+            got.column("sma").unwrap().as_f64(),
+        );
+        assert_eq!(e.len(), g.len());
+        for (a, b) in e.iter().zip(g) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn concat_multiset() {
+        let plan = Plan::Sort {
+            input: Box::new(Plan::Concat {
+                inputs: vec![
+                    Box::new(source_mem("a", table())),
+                    Box::new(source_mem("b", table())),
+                ],
+            }),
+            key: "id".into(),
+        };
+        let got = collect(plan, &opts(2)).unwrap();
+        assert_eq!(got.num_rows(), 16);
+        let ids = got.column("id").unwrap().as_i64();
+        assert_eq!(&ids[..4], &[0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn hfs_source_parallel_read() {
+        let dir = std::env::temp_dir().join("hiframes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exec_src.hfs");
+        crate::io::write_hfs(&p, &table()).unwrap();
+        let plan = crate::ir::source_hfs("t", p, table().schema().clone());
+        let got = collect(plan, &opts(3)).unwrap();
+        assert_eq!(got, table());
+    }
+
+    #[test]
+    fn pruned_source_reads_subset() {
+        // Project(Source) fast path
+        let plan = Plan::Project {
+            input: Box::new(source_mem("t", table())),
+            columns: vec!["x".into()],
+        };
+        let got = collect(plan, &opts(2)).unwrap();
+        assert_eq!(got.num_cols(), 1);
+        assert_eq!(got.num_rows(), 8);
+    }
+}

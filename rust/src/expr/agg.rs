@@ -1,0 +1,564 @@
+//! Aggregate expressions and their distributed decomposition.
+//!
+//! The paper's `aggregate(df, :key, :out = fn(expr), ...)` (§3.1, Table 1)
+//! desugars each output into *(expression array, reduction function)* tuples
+//! (§4.1). For distribution, non-trivial reductions are decomposed into
+//! partial states that commute with the shuffle: `mean → (sum, count)`,
+//! `var → (sum, sumsq, count)`. This is what makes local pre-aggregation
+//! before the `alltoallv` legal (a §Perf optimization, ablated in
+//! `benches/ablations.rs`).
+
+use super::Expr;
+use crate::table::Schema;
+use crate::types::{DType, Value};
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Reduction functions accepted by `aggregate`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggFn {
+    Sum,
+    Count,
+    Mean,
+    Min,
+    Max,
+    Var,
+    /// Count of *distinct* values of the expression (TPCx-BB Q25 needs
+    /// `count(distinct ...)`). Not decomposable into bounded partials;
+    /// pre-aggregation keeps a set per (key, column) instead.
+    CountDistinct,
+    /// First value encountered (used to carry group attributes through).
+    First,
+}
+
+impl fmt::Display for AggFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            AggFn::Sum => "sum",
+            AggFn::Count => "length",
+            AggFn::Mean => "mean",
+            AggFn::Min => "minimum",
+            AggFn::Max => "maximum",
+            AggFn::Var => "var",
+            AggFn::CountDistinct => "count_distinct",
+            AggFn::First => "first",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One output column of an aggregate: `:out = fn(expr)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggExpr {
+    pub out: String,
+    pub func: AggFn,
+    pub input: Expr,
+}
+
+impl AggExpr {
+    pub fn new(out: &str, func: AggFn, input: Expr) -> AggExpr {
+        AggExpr {
+            out: out.to_string(),
+            func,
+            input,
+        }
+    }
+
+    /// Output dtype under `schema` (the "dummy calls … to find the output
+    /// type" step of paper §4.1, done statically here).
+    pub fn output_dtype(&self, schema: &Schema) -> Result<DType> {
+        let in_dt = self.input.dtype(schema)?;
+        Ok(match self.func {
+            AggFn::Count | AggFn::CountDistinct => DType::I64,
+            AggFn::Sum => match in_dt {
+                DType::Bool | DType::I64 => DType::I64,
+                DType::F64 => DType::F64,
+                DType::Str => bail!("sum over String column"),
+            },
+            AggFn::Mean | AggFn::Var => {
+                if !(in_dt.is_numeric() || in_dt == DType::Bool) {
+                    bail!("{} over non-numeric column", self.func);
+                }
+                DType::F64
+            }
+            AggFn::Min | AggFn::Max => match in_dt {
+                DType::I64 => DType::I64,
+                DType::F64 => DType::F64,
+                _ => bail!("{} over non-numeric column", self.func),
+            },
+            AggFn::First => in_dt,
+        })
+    }
+}
+
+impl fmt::Display for AggExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, ":{} = {}({})", self.out, self.func, self.input)
+    }
+}
+
+/// Running state of one reduction for one group — supports both one-pass
+/// accumulation (post-shuffle) and partial-state merge (pre-aggregation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggState {
+    Sum { sum: f64, int: bool },
+    Count { n: i64 },
+    Mean { sum: f64, n: i64 },
+    Min { v: f64, int: bool },
+    Max { v: f64, int: bool },
+    Var { sum: f64, sumsq: f64, n: i64 },
+    CountDistinct { seen: std::collections::BTreeSet<i64> },
+    First { v: Option<Value> },
+}
+
+impl AggState {
+    pub fn new(func: AggFn, input_dtype: DType) -> AggState {
+        let int = input_dtype == DType::I64 || input_dtype == DType::Bool;
+        match func {
+            AggFn::Sum => AggState::Sum { sum: 0.0, int },
+            AggFn::Count => AggState::Count { n: 0 },
+            AggFn::Mean => AggState::Mean { sum: 0.0, n: 0 },
+            AggFn::Min => AggState::Min {
+                v: f64::INFINITY,
+                int,
+            },
+            AggFn::Max => AggState::Max {
+                v: f64::NEG_INFINITY,
+                int,
+            },
+            AggFn::Var => AggState::Var {
+                sum: 0.0,
+                sumsq: 0.0,
+                n: 0,
+            },
+            AggFn::CountDistinct => AggState::CountDistinct {
+                seen: Default::default(),
+            },
+            AggFn::First => AggState::First { v: None },
+        }
+    }
+
+    /// Typed fast-path update from a column cell — avoids constructing a
+    /// [`Value`] per row (§Perf: the hash-aggregate inner loop).
+    #[inline]
+    pub fn update_col(&mut self, col: &crate::column::Column, i: usize) {
+        use crate::column::Column as C;
+        match (self, col) {
+            (AggState::Count { n }, _) => *n += 1,
+            (AggState::Sum { sum, .. }, C::F64(v)) => *sum += v[i],
+            (AggState::Sum { sum, .. }, C::I64(v)) => *sum += v[i] as f64,
+            (AggState::Sum { sum, .. }, C::Bool(v)) => *sum += v[i] as i64 as f64,
+            (AggState::Mean { sum, n }, C::F64(v)) => {
+                *sum += v[i];
+                *n += 1;
+            }
+            (AggState::Mean { sum, n }, C::I64(v)) => {
+                *sum += v[i] as f64;
+                *n += 1;
+            }
+            (AggState::Min { v: m, .. }, C::F64(v)) => *m = m.min(v[i]),
+            (AggState::Min { v: m, .. }, C::I64(v)) => *m = m.min(v[i] as f64),
+            (AggState::Max { v: m, .. }, C::F64(v)) => *m = m.max(v[i]),
+            (AggState::Max { v: m, .. }, C::I64(v)) => *m = m.max(v[i] as f64),
+            (AggState::Var { sum, sumsq, n }, C::F64(v)) => {
+                let x = v[i];
+                *sum += x;
+                *sumsq += x * x;
+                *n += 1;
+            }
+            (AggState::Var { sum, sumsq, n }, C::I64(v)) => {
+                let x = v[i] as f64;
+                *sum += x;
+                *sumsq += x * x;
+                *n += 1;
+            }
+            (AggState::CountDistinct { seen }, C::I64(v)) => {
+                seen.insert(v[i]);
+            }
+            (s, c) => s.update(&c.get(i)),
+        }
+    }
+
+    /// Fold one row's expression value into the state.
+    pub fn update(&mut self, v: &Value) {
+        match self {
+            AggState::Sum { sum, .. } => *sum += v.as_f64().unwrap_or(0.0),
+            AggState::Count { n } => *n += 1,
+            AggState::Mean { sum, n } => {
+                *sum += v.as_f64().unwrap_or(0.0);
+                *n += 1;
+            }
+            AggState::Min { v: m, .. } => *m = m.min(v.as_f64().unwrap_or(f64::INFINITY)),
+            AggState::Max { v: m, .. } => *m = m.max(v.as_f64().unwrap_or(f64::NEG_INFINITY)),
+            AggState::Var { sum, sumsq, n } => {
+                let x = v.as_f64().unwrap_or(0.0);
+                *sum += x;
+                *sumsq += x * x;
+                *n += 1;
+            }
+            AggState::CountDistinct { seen } => {
+                // distinct over i64-representable values (keys / encoded cats)
+                if let Some(x) = v.as_i64() {
+                    seen.insert(x);
+                }
+            }
+            AggState::First { v: slot } => {
+                if slot.is_none() {
+                    *slot = Some(v.clone());
+                }
+            }
+        }
+    }
+
+    /// Merge another partial state (associative & commutative — the property
+    /// the distributed pre-aggregation relies on; property-tested).
+    pub fn merge(&mut self, other: &AggState) {
+        match (self, other) {
+            (AggState::Sum { sum: a, .. }, AggState::Sum { sum: b, .. }) => *a += b,
+            (AggState::Count { n: a }, AggState::Count { n: b }) => *a += b,
+            (AggState::Mean { sum: a, n: na }, AggState::Mean { sum: b, n: nb }) => {
+                *a += b;
+                *na += nb;
+            }
+            (AggState::Min { v: a, .. }, AggState::Min { v: b, .. }) => *a = a.min(*b),
+            (AggState::Max { v: a, .. }, AggState::Max { v: b, .. }) => *a = a.max(*b),
+            (
+                AggState::Var {
+                    sum: a,
+                    sumsq: qa,
+                    n: na,
+                },
+                AggState::Var {
+                    sum: b,
+                    sumsq: qb,
+                    n: nb,
+                },
+            ) => {
+                *a += b;
+                *qa += qb;
+                *na += nb;
+            }
+            (AggState::CountDistinct { seen: a }, AggState::CountDistinct { seen: b }) => {
+                a.extend(b.iter().copied());
+            }
+            (AggState::First { v: a }, AggState::First { v: b }) => {
+                if a.is_none() {
+                    *a = b.clone();
+                }
+            }
+            (a, b) => panic!("merge of mismatched agg states {a:?} vs {b:?}"),
+        }
+    }
+
+    /// Finish the reduction to a scalar.
+    pub fn finish(&self) -> Value {
+        match self {
+            AggState::Sum { sum, int } => {
+                if *int {
+                    Value::I64(*sum as i64)
+                } else {
+                    Value::F64(*sum)
+                }
+            }
+            AggState::Count { n } => Value::I64(*n),
+            AggState::Mean { sum, n } => Value::F64(if *n == 0 {
+                f64::NAN
+            } else {
+                sum / *n as f64
+            }),
+            AggState::Min { v, int } => {
+                if *int && v.is_finite() {
+                    Value::I64(*v as i64)
+                } else {
+                    Value::F64(*v)
+                }
+            }
+            AggState::Max { v, int } => {
+                if *int && v.is_finite() {
+                    Value::I64(*v as i64)
+                } else {
+                    Value::F64(*v)
+                }
+            }
+            AggState::Var { sum, sumsq, n } => Value::F64(if *n == 0 {
+                f64::NAN
+            } else {
+                let nf = *n as f64;
+                let m = sum / nf;
+                (sumsq / nf - m * m).max(0.0)
+            }),
+            AggState::CountDistinct { seen } => Value::I64(seen.len() as i64),
+            AggState::First { v } => v.clone().unwrap_or(Value::I64(0)),
+        }
+    }
+
+    /// Serialize partial state for the shuffle (pre-aggregation path).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            AggState::Sum { sum, .. } => buf.extend_from_slice(&sum.to_le_bytes()),
+            AggState::Count { n } => buf.extend_from_slice(&n.to_le_bytes()),
+            AggState::Mean { sum, n } => {
+                buf.extend_from_slice(&sum.to_le_bytes());
+                buf.extend_from_slice(&n.to_le_bytes());
+            }
+            AggState::Min { v, .. } | AggState::Max { v, .. } => {
+                buf.extend_from_slice(&v.to_le_bytes())
+            }
+            AggState::Var { sum, sumsq, n } => {
+                buf.extend_from_slice(&sum.to_le_bytes());
+                buf.extend_from_slice(&sumsq.to_le_bytes());
+                buf.extend_from_slice(&n.to_le_bytes());
+            }
+            AggState::CountDistinct { seen } => {
+                buf.extend_from_slice(&(seen.len() as u64).to_le_bytes());
+                for v in seen {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            AggState::First { v } => {
+                // only numeric Firsts survive the wire (enough for our queries)
+                let x = v.as_ref().and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Deserialize a partial state previously written by [`encode`].
+    pub fn decode(func: AggFn, input_dtype: DType, buf: &[u8], pos: &mut usize) -> AggState {
+        let int = input_dtype == DType::I64 || input_dtype == DType::Bool;
+        let f64_at = |p: &mut usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&buf[*p..*p + 8]);
+            *p += 8;
+            f64::from_le_bytes(b)
+        };
+        match func {
+            AggFn::Sum => AggState::Sum {
+                sum: f64_at(pos),
+                int,
+            },
+            AggFn::Count => {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                AggState::Count {
+                    n: i64::from_le_bytes(b),
+                }
+            }
+            AggFn::Mean => {
+                let sum = f64_at(pos);
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                AggState::Mean {
+                    sum,
+                    n: i64::from_le_bytes(b),
+                }
+            }
+            AggFn::Min => AggState::Min {
+                v: f64_at(pos),
+                int,
+            },
+            AggFn::Max => AggState::Max {
+                v: f64_at(pos),
+                int,
+            },
+            AggFn::Var => {
+                let sum = f64_at(pos);
+                let sumsq = f64_at(pos);
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                AggState::Var {
+                    sum,
+                    sumsq,
+                    n: i64::from_le_bytes(b),
+                }
+            }
+            AggFn::CountDistinct => {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                let n = u64::from_le_bytes(b) as usize;
+                let mut seen = std::collections::BTreeSet::new();
+                for _ in 0..n {
+                    let mut b = [0u8; 8];
+                    b.copy_from_slice(&buf[*pos..*pos + 8]);
+                    *pos += 8;
+                    seen.insert(i64::from_le_bytes(b));
+                }
+                AggState::CountDistinct { seen }
+            }
+            AggFn::First => {
+                let x = f64_at(pos);
+                AggState::First {
+                    v: if x.is_nan() {
+                        None
+                    } else if int {
+                        Some(Value::I64(x as i64))
+                    } else {
+                        Some(Value::F64(x))
+                    },
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{col, lit};
+
+    #[test]
+    fn output_dtypes() {
+        let s = Schema::of(&[("id", DType::I64), ("x", DType::F64)]);
+        let a = AggExpr::new("n", AggFn::Count, col("id"));
+        assert_eq!(a.output_dtype(&s).unwrap(), DType::I64);
+        let a = AggExpr::new("s", AggFn::Sum, col("x"));
+        assert_eq!(a.output_dtype(&s).unwrap(), DType::F64);
+        let a = AggExpr::new("s", AggFn::Sum, col("id").lt(lit(3i64)));
+        assert_eq!(a.output_dtype(&s).unwrap(), DType::I64); // sum of bools counts
+        let a = AggExpr::new("m", AggFn::Mean, col("id"));
+        assert_eq!(a.output_dtype(&s).unwrap(), DType::F64);
+    }
+
+    #[test]
+    fn sum_mean_var() {
+        let mut s = AggState::new(AggFn::Var, DType::F64);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.update(&Value::F64(x));
+        }
+        match s.finish() {
+            Value::F64(v) => assert!((v - 1.25).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+        let mut m = AggState::new(AggFn::Mean, DType::I64);
+        m.update(&Value::I64(2));
+        m.update(&Value::I64(4));
+        assert_eq!(m.finish(), Value::F64(3.0));
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        // split-update-merge must equal one-pass update (pre-agg soundness)
+        let data: Vec<f64> = (0..100).map(|i| (i as f64) * 0.37).collect();
+        for func in [AggFn::Sum, AggFn::Count, AggFn::Mean, AggFn::Min, AggFn::Max, AggFn::Var] {
+            let mut one = AggState::new(func, DType::F64);
+            for x in &data {
+                one.update(&Value::F64(*x));
+            }
+            let mut a = AggState::new(func, DType::F64);
+            let mut b = AggState::new(func, DType::F64);
+            for (i, x) in data.iter().enumerate() {
+                if i % 3 == 0 {
+                    a.update(&Value::F64(*x));
+                } else {
+                    b.update(&Value::F64(*x));
+                }
+            }
+            a.merge(&b);
+            let (va, vb) = (a.finish(), one.finish());
+            let (fa, fb) = (va.as_f64().unwrap(), vb.as_f64().unwrap());
+            assert!((fa - fb).abs() < 1e-9, "{func:?}: {fa} vs {fb}");
+        }
+    }
+
+    #[test]
+    fn count_distinct() {
+        let mut s = AggState::new(AggFn::CountDistinct, DType::I64);
+        for x in [1i64, 2, 2, 3, 1] {
+            s.update(&Value::I64(x));
+        }
+        assert_eq!(s.finish(), Value::I64(3));
+        let mut t = AggState::new(AggFn::CountDistinct, DType::I64);
+        t.update(&Value::I64(3));
+        t.update(&Value::I64(4));
+        s.merge(&t);
+        assert_eq!(s.finish(), Value::I64(4));
+    }
+
+    #[test]
+    fn first_semantics() {
+        let mut s = AggState::new(AggFn::First, DType::I64);
+        s.update(&Value::I64(9));
+        s.update(&Value::I64(7));
+        assert_eq!(s.finish(), Value::I64(9));
+    }
+
+    #[test]
+    fn update_col_equals_update_value() {
+        use crate::column::Column;
+        let cols = [
+            Column::F64(vec![1.5, -2.0, 3.25]),
+            Column::I64(vec![4, -5, 6]),
+            Column::Bool(vec![true, false, true]),
+        ];
+        for func in [
+            AggFn::Sum,
+            AggFn::Count,
+            AggFn::Mean,
+            AggFn::Min,
+            AggFn::Max,
+            AggFn::Var,
+            AggFn::CountDistinct,
+            AggFn::First,
+        ] {
+            for col in &cols {
+                if func == AggFn::Min || func == AggFn::Max {
+                    if col.dtype() == DType::Bool {
+                        continue;
+                    }
+                }
+                let mut a = AggState::new(func, col.dtype());
+                let mut b = AggState::new(func, col.dtype());
+                for i in 0..col.len() {
+                    a.update_col(col, i);
+                    b.update(&col.get(i));
+                }
+                assert_eq!(a.finish(), b.finish(), "{func:?} over {:?}", col.dtype());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let cases: Vec<(AggFn, DType, Vec<f64>)> = vec![
+            (AggFn::Sum, DType::F64, vec![1.5, 2.5]),
+            (AggFn::Count, DType::I64, vec![1.0, 1.0, 1.0]),
+            (AggFn::Mean, DType::F64, vec![2.0, 4.0]),
+            (AggFn::Min, DType::I64, vec![5.0, 3.0]),
+            (AggFn::Max, DType::F64, vec![5.0, 3.0]),
+            (AggFn::Var, DType::F64, vec![1.0, 2.0, 3.0]),
+            (AggFn::CountDistinct, DType::I64, vec![1.0, 2.0, 2.0]),
+            (AggFn::First, DType::F64, vec![42.0, 1.0]),
+        ];
+        for (func, dt, xs) in cases {
+            let mut s = AggState::new(func, dt);
+            for x in &xs {
+                let v = if dt == DType::I64 {
+                    Value::I64(*x as i64)
+                } else {
+                    Value::F64(*x)
+                };
+                s.update(&v);
+            }
+            let mut buf = Vec::new();
+            s.encode(&mut buf);
+            let mut pos = 0;
+            let back = AggState::decode(func, dt, &buf, &mut pos);
+            assert_eq!(pos, buf.len(), "{func:?} consumed {pos} of {}", buf.len());
+            assert_eq!(back.finish(), s.finish(), "{func:?}");
+        }
+    }
+
+    #[test]
+    fn empty_states() {
+        assert_eq!(AggState::new(AggFn::Count, DType::I64).finish(), Value::I64(0));
+        assert!(AggState::new(AggFn::Mean, DType::F64)
+            .finish()
+            .as_f64()
+            .unwrap()
+            .is_nan());
+    }
+}

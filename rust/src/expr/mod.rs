@@ -1,0 +1,505 @@
+//! Expression ASTs over data-frame columns.
+//!
+//! This is the analogue of the paper's Macro-Pass expression handling
+//! (§4.1): user-level expressions refer to columns by name and mix scalar
+//! and array operations; HiFrames rewrites scalar operators into
+//! element-wise ones (`replace_opr_vector`) and column references into the
+//! underlying arrays (`replace_column_refs`). Here the rewrite target is a
+//! vectorized evaluator over [`Column`]s, so *any* expression — including
+//! user-defined functions — compiles to the same array kernels. That is the
+//! paper's Fig. 9/10 point: HiFrames UDFs cost nothing because there is one
+//! language end-to-end.
+
+mod agg;
+mod eval;
+
+pub use agg::{AggExpr, AggFn, AggState};
+pub use eval::{eval, eval_mask, ColumnEnv, SliceEnv};
+
+use crate::column::{ArithOp, CmpOp, MathFn};
+use crate::table::Schema;
+use crate::types::{DType, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::Arc;
+
+/// Scalar user-defined function applied element-wise (all-numeric).
+#[derive(Clone)]
+pub struct Udf {
+    pub name: String,
+    pub func: Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>,
+}
+
+impl Udf {
+    pub fn new(name: &str, f: impl Fn(&[f64]) -> f64 + Send + Sync + 'static) -> Udf {
+        Udf {
+            name: name.to_string(),
+            func: Arc::new(f),
+        }
+    }
+}
+
+impl fmt::Debug for Udf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "udf:{}", self.name)
+    }
+}
+
+/// An expression tree over columns of one data frame.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// Column reference `:name`.
+    Col(String),
+    /// Literal scalar, broadcast to column length.
+    Lit(Value),
+    /// Element-wise arithmetic.
+    Arith(Box<Expr>, ArithOp, Box<Expr>),
+    /// Element-wise comparison → Bool column.
+    Cmp(Box<Expr>, CmpOp, Box<Expr>),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    /// Unary math map (`log`, `exp`, `sqrt`, …).
+    Math(MathFn, Box<Expr>),
+    /// Cast Bool → Int64 (inserted by desugaring of `sum(:x == k)`).
+    BoolToInt(Box<Expr>),
+    /// Scalar UDF applied element-wise over evaluated argument columns.
+    Udf(Udf, Vec<Expr>),
+}
+
+impl PartialEq for Expr {
+    fn eq(&self, other: &Self) -> bool {
+        use Expr::*;
+        match (self, other) {
+            (Col(a), Col(b)) => a == b,
+            (Lit(a), Lit(b)) => a == b,
+            (Arith(a1, o1, b1), Arith(a2, o2, b2)) => o1 == o2 && a1 == a2 && b1 == b2,
+            (Cmp(a1, o1, b1), Cmp(a2, o2, b2)) => o1 == o2 && a1 == a2 && b1 == b2,
+            (And(a1, b1), And(a2, b2)) | (Or(a1, b1), Or(a2, b2)) => a1 == a2 && b1 == b2,
+            (Not(a), Not(b)) => a == b,
+            (Math(f1, a), Math(f2, b)) => f1 == f2 && a == b,
+            (BoolToInt(a), BoolToInt(b)) => a == b,
+            (Udf(u1, a1), Udf(u2, a2)) => u1.name == u2.name && a1 == a2,
+            _ => false,
+        }
+    }
+}
+
+/// Builders mirroring the paper's surface syntax.
+pub fn col(name: &str) -> Expr {
+    Expr::Col(name.to_string())
+}
+pub fn lit<V: Into<Value>>(v: V) -> Expr {
+    Expr::Lit(v.into())
+}
+
+impl Expr {
+    pub fn add(self, rhs: Expr) -> Expr {
+        Expr::Arith(Box::new(self), ArithOp::Add, Box::new(rhs))
+    }
+    pub fn sub(self, rhs: Expr) -> Expr {
+        Expr::Arith(Box::new(self), ArithOp::Sub, Box::new(rhs))
+    }
+    pub fn mul(self, rhs: Expr) -> Expr {
+        Expr::Arith(Box::new(self), ArithOp::Mul, Box::new(rhs))
+    }
+    pub fn div(self, rhs: Expr) -> Expr {
+        Expr::Arith(Box::new(self), ArithOp::Div, Box::new(rhs))
+    }
+    pub fn rem(self, rhs: Expr) -> Expr {
+        Expr::Arith(Box::new(self), ArithOp::Mod, Box::new(rhs))
+    }
+    pub fn lt(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Lt, Box::new(rhs))
+    }
+    pub fn le(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Le, Box::new(rhs))
+    }
+    pub fn gt(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Gt, Box::new(rhs))
+    }
+    pub fn ge(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Ge, Box::new(rhs))
+    }
+    pub fn eq_(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Eq, Box::new(rhs))
+    }
+    pub fn ne_(self, rhs: Expr) -> Expr {
+        Expr::Cmp(Box::new(self), CmpOp::Ne, Box::new(rhs))
+    }
+    pub fn and(self, rhs: Expr) -> Expr {
+        Expr::And(Box::new(self), Box::new(rhs))
+    }
+    pub fn or(self, rhs: Expr) -> Expr {
+        Expr::Or(Box::new(self), Box::new(rhs))
+    }
+    pub fn not(self) -> Expr {
+        Expr::Not(Box::new(self))
+    }
+    pub fn math(self, f: MathFn) -> Expr {
+        Expr::Math(f, Box::new(self))
+    }
+
+    /// The set of column names this expression reads — the liveness facts
+    /// the DataFrame-Pass uses for pushdown validity and column pruning.
+    pub fn columns_used(&self) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        self.visit_cols(&mut |c| {
+            out.insert(c.to_string());
+        });
+        out
+    }
+
+    fn visit_cols(&self, f: &mut impl FnMut(&str)) {
+        match self {
+            Expr::Col(c) => f(c),
+            Expr::Lit(_) => {}
+            Expr::Arith(a, _, b) | Expr::Cmp(a, _, b) | Expr::And(a, b) | Expr::Or(a, b) => {
+                a.visit_cols(f);
+                b.visit_cols(f);
+            }
+            Expr::Not(a) | Expr::Math(_, a) | Expr::BoolToInt(a) => a.visit_cols(f),
+            Expr::Udf(_, args) => args.iter().for_each(|a| a.visit_cols(f)),
+        }
+    }
+
+    /// Rewrite column references through `rename` (used when pushing a
+    /// predicate through a join: output names → input-table names).
+    pub fn rename_columns(&self, rename: &dyn Fn(&str) -> Option<String>) -> Option<Expr> {
+        Some(match self {
+            Expr::Col(c) => Expr::Col(rename(c)?),
+            Expr::Lit(v) => Expr::Lit(v.clone()),
+            Expr::Arith(a, op, b) => Expr::Arith(
+                Box::new(a.rename_columns(rename)?),
+                *op,
+                Box::new(b.rename_columns(rename)?),
+            ),
+            Expr::Cmp(a, op, b) => Expr::Cmp(
+                Box::new(a.rename_columns(rename)?),
+                *op,
+                Box::new(b.rename_columns(rename)?),
+            ),
+            Expr::And(a, b) => Expr::And(
+                Box::new(a.rename_columns(rename)?),
+                Box::new(b.rename_columns(rename)?),
+            ),
+            Expr::Or(a, b) => Expr::Or(
+                Box::new(a.rename_columns(rename)?),
+                Box::new(b.rename_columns(rename)?),
+            ),
+            Expr::Not(a) => Expr::Not(Box::new(a.rename_columns(rename)?)),
+            Expr::Math(f, a) => Expr::Math(*f, Box::new(a.rename_columns(rename)?)),
+            Expr::BoolToInt(a) => Expr::BoolToInt(Box::new(a.rename_columns(rename)?)),
+            Expr::Udf(u, args) => Expr::Udf(
+                u.clone(),
+                args.iter()
+                    .map(|a| a.rename_columns(rename))
+                    .collect::<Option<Vec<_>>>()?,
+            ),
+        })
+    }
+
+    /// Static result dtype under `schema` — the Macro-Pass type annotation
+    /// step ("types of all variables should be available", §4.1).
+    pub fn dtype(&self, schema: &Schema) -> Result<DType> {
+        match self {
+            Expr::Col(c) => schema
+                .dtype_of(c)
+                .ok_or_else(|| anyhow::anyhow!("unknown column :{c} in {schema}")),
+            Expr::Lit(v) => Ok(v.dtype()),
+            Expr::Arith(a, _, b) => {
+                let (ta, tb) = (a.dtype(schema)?, b.dtype(schema)?);
+                match ta.promote(tb) {
+                    Some(t) => Ok(t),
+                    None => bail!("arith on non-numeric dtypes {ta} and {tb}"),
+                }
+            }
+            Expr::Cmp(a, _, b) => {
+                let (ta, tb) = (a.dtype(schema)?, b.dtype(schema)?);
+                let ok = ta.promote(tb).is_some()
+                    || (ta == DType::Str && tb == DType::Str)
+                    || (ta == DType::Bool && tb == DType::Bool);
+                if !ok {
+                    bail!("cannot compare {ta} with {tb}");
+                }
+                Ok(DType::Bool)
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                for (side, e) in [("lhs", a), ("rhs", b)] {
+                    if e.dtype(schema)? != DType::Bool {
+                        bail!("boolean op {side} is not Bool");
+                    }
+                }
+                Ok(DType::Bool)
+            }
+            Expr::Not(a) => {
+                if a.dtype(schema)? != DType::Bool {
+                    bail!("! applied to non-Bool");
+                }
+                Ok(DType::Bool)
+            }
+            Expr::Math(f, a) => {
+                let t = a.dtype(schema)?;
+                if !t.is_numeric() {
+                    bail!("math fn on non-numeric dtype {t}");
+                }
+                match (f, t) {
+                    (MathFn::Abs | MathFn::Neg, DType::I64) => Ok(DType::I64),
+                    _ => Ok(DType::F64),
+                }
+            }
+            Expr::BoolToInt(a) => {
+                if a.dtype(schema)? != DType::Bool {
+                    bail!("bool_to_int on non-Bool");
+                }
+                Ok(DType::I64)
+            }
+            Expr::Udf(_, args) => {
+                for a in args {
+                    let t = a.dtype(schema)?;
+                    if !t.is_numeric() {
+                        bail!("UDF argument has non-numeric dtype {t}");
+                    }
+                }
+                Ok(DType::F64)
+            }
+        }
+    }
+
+    /// Constant folding — one of the optimizations HiFrames gets "for free"
+    /// from the host compiler (paper §4.3); we implement the analogue.
+    pub fn fold_constants(&self) -> Expr {
+        match self {
+            Expr::Arith(a, op, b) => {
+                let (a, b) = (a.fold_constants(), b.fold_constants());
+                if let (Expr::Lit(x), Expr::Lit(y)) = (&a, &b) {
+                    if let (Some(xf), Some(yf)) = (x.as_f64(), y.as_f64()) {
+                        let r = match op {
+                            ArithOp::Add => xf + yf,
+                            ArithOp::Sub => xf - yf,
+                            ArithOp::Mul => xf * yf,
+                            ArithOp::Div => xf / yf,
+                            ArithOp::Mod => xf % yf,
+                        };
+                        // preserve integer-ness when both sides were ints
+                        if x.dtype() == DType::I64
+                            && y.dtype() == DType::I64
+                            && *op != ArithOp::Div
+                        {
+                            return Expr::Lit(Value::I64(r as i64));
+                        }
+                        return Expr::Lit(Value::F64(r));
+                    }
+                }
+                Expr::Arith(Box::new(a), *op, Box::new(b))
+            }
+            Expr::Cmp(a, op, b) => {
+                let (a, b) = (a.fold_constants(), b.fold_constants());
+                if let (Expr::Lit(x), Expr::Lit(y)) = (&a, &b) {
+                    if let (Some(xf), Some(yf)) = (x.as_f64(), y.as_f64()) {
+                        let r = match op {
+                            CmpOp::Lt => xf < yf,
+                            CmpOp::Le => xf <= yf,
+                            CmpOp::Gt => xf > yf,
+                            CmpOp::Ge => xf >= yf,
+                            CmpOp::Eq => xf == yf,
+                            CmpOp::Ne => xf != yf,
+                        };
+                        return Expr::Lit(Value::Bool(r));
+                    }
+                }
+                Expr::Cmp(Box::new(a), *op, Box::new(b))
+            }
+            Expr::And(a, b) => {
+                let (a, b) = (a.fold_constants(), b.fold_constants());
+                match (&a, &b) {
+                    (Expr::Lit(Value::Bool(true)), _) => b,
+                    (_, Expr::Lit(Value::Bool(true))) => a,
+                    (Expr::Lit(Value::Bool(false)), _) | (_, Expr::Lit(Value::Bool(false))) => {
+                        Expr::Lit(Value::Bool(false))
+                    }
+                    _ => Expr::And(Box::new(a), Box::new(b)),
+                }
+            }
+            Expr::Or(a, b) => {
+                let (a, b) = (a.fold_constants(), b.fold_constants());
+                match (&a, &b) {
+                    (Expr::Lit(Value::Bool(false)), _) => b,
+                    (_, Expr::Lit(Value::Bool(false))) => a,
+                    (Expr::Lit(Value::Bool(true)), _) | (_, Expr::Lit(Value::Bool(true))) => {
+                        Expr::Lit(Value::Bool(true))
+                    }
+                    _ => Expr::Or(Box::new(a), Box::new(b)),
+                }
+            }
+            Expr::Not(a) => {
+                let a = a.fold_constants();
+                if let Expr::Lit(Value::Bool(v)) = a {
+                    return Expr::Lit(Value::Bool(!v));
+                }
+                if let Expr::Not(inner) = a {
+                    return *inner;
+                }
+                Expr::Not(Box::new(a))
+            }
+            Expr::Math(f, a) => {
+                let a = a.fold_constants();
+                if let Expr::Lit(v) = &a {
+                    if let Some(x) = v.as_f64() {
+                        let r = match f {
+                            MathFn::Log => x.ln(),
+                            MathFn::Exp => x.exp(),
+                            MathFn::Sqrt => x.sqrt(),
+                            MathFn::Sin => x.sin(),
+                            MathFn::Cos => x.cos(),
+                            MathFn::Abs => x.abs(),
+                            MathFn::Neg => -x,
+                        };
+                        return Expr::Lit(Value::F64(r));
+                    }
+                }
+                Expr::Math(*f, Box::new(a))
+            }
+            Expr::BoolToInt(a) => Expr::BoolToInt(Box::new(a.fold_constants())),
+            Expr::Udf(u, args) => Expr::Udf(
+                u.clone(),
+                args.iter().map(|a| a.fold_constants()).collect(),
+            ),
+            other => other.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Col(c) => write!(f, ":{c}"),
+            Expr::Lit(v) => write!(f, "{v}"),
+            Expr::Arith(a, op, b) => {
+                let s = match op {
+                    ArithOp::Add => "+",
+                    ArithOp::Sub => "-",
+                    ArithOp::Mul => "*",
+                    ArithOp::Div => "/",
+                    ArithOp::Mod => "%",
+                };
+                write!(f, "({a} {s} {b})")
+            }
+            Expr::Cmp(a, op, b) => {
+                let s = match op {
+                    CmpOp::Lt => "<",
+                    CmpOp::Le => "<=",
+                    CmpOp::Gt => ">",
+                    CmpOp::Ge => ">=",
+                    CmpOp::Eq => "==",
+                    CmpOp::Ne => "!=",
+                };
+                write!(f, "({a} {s} {b})")
+            }
+            Expr::And(a, b) => write!(f, "({a} && {b})"),
+            Expr::Or(a, b) => write!(f, "({a} || {b})"),
+            Expr::Not(a) => write!(f, "!{a}"),
+            Expr::Math(m, a) => write!(f, "{m:?}({a})"),
+            Expr::BoolToInt(a) => write!(f, "int({a})"),
+            Expr::Udf(u, args) => {
+                write!(f, "{}(", u.name)?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn columns_used_collects() {
+        let e = col("a").add(col("b")).lt(lit(1.0)).and(col("c").gt(lit(0i64)));
+        let used = e.columns_used();
+        assert_eq!(
+            used.into_iter().collect::<Vec<_>>(),
+            vec!["a".to_string(), "b".into(), "c".into()]
+        );
+    }
+
+    #[test]
+    fn rename_total_or_none() {
+        let e = col("amount").gt(lit(100.0));
+        let r = e
+            .rename_columns(&|c| (c == "amount").then(|| "o_amount".to_string()))
+            .unwrap();
+        assert_eq!(r.columns_used().into_iter().next().unwrap(), "o_amount");
+        // a reference that cannot be renamed makes the whole rewrite fail
+        let e2 = col("amount").add(col("other")).gt(lit(1.0));
+        assert!(e2
+            .rename_columns(&|c| (c == "amount").then(|| "x".to_string()))
+            .is_none());
+    }
+
+    #[test]
+    fn dtype_inference() {
+        let s = Schema::of(&[
+            ("id", DType::I64),
+            ("x", DType::F64),
+            ("name", DType::Str),
+        ]);
+        assert_eq!(col("id").add(lit(1i64)).dtype(&s).unwrap(), DType::I64);
+        assert_eq!(col("id").add(col("x")).dtype(&s).unwrap(), DType::F64);
+        assert_eq!(col("x").lt(lit(1.0)).dtype(&s).unwrap(), DType::Bool);
+        assert_eq!(
+            col("name").eq_(lit("a")).dtype(&s).unwrap(),
+            DType::Bool
+        );
+        assert!(col("name").add(lit(1i64)).dtype(&s).is_err());
+        assert!(col("missing").dtype(&s).is_err());
+        assert!(col("x").and(col("id").lt(lit(0i64))).dtype(&s).is_err());
+    }
+
+    #[test]
+    fn fold_constants_arith() {
+        let e = lit(2i64).add(lit(3i64)).mul(col("x"));
+        let f = e.fold_constants();
+        assert_eq!(f, lit(5i64).mul(col("x")));
+        let e = lit(1.0).div(lit(4.0));
+        assert_eq!(e.fold_constants(), lit(0.25));
+    }
+
+    #[test]
+    fn fold_constants_bool() {
+        let e = lit(true).and(col("x").lt(lit(1.0)));
+        assert_eq!(e.fold_constants(), col("x").lt(lit(1.0)));
+        let e = lit(false).and(col("x").lt(lit(1.0)));
+        assert_eq!(e.fold_constants(), lit(false));
+        let e = col("x").lt(lit(1.0)).or(lit(true));
+        assert_eq!(e.fold_constants(), lit(true));
+        let e = col("m").not().not();
+        assert_eq!(e.fold_constants(), col("m"));
+    }
+
+    #[test]
+    fn fold_constants_cmp_math() {
+        assert_eq!(lit(2.0).lt(lit(3.0)).fold_constants(), lit(true));
+        assert_eq!(lit(4.0).math(MathFn::Sqrt).fold_constants(), lit(2.0));
+    }
+
+    #[test]
+    fn display_roundtrips_structure() {
+        let e = col("a").add(lit(1i64)).lt(col("b"));
+        assert_eq!(format!("{e}"), "((:a + 1) < :b)");
+    }
+
+    #[test]
+    fn udf_equality_by_name() {
+        let u1 = Expr::Udf(Udf::new("f", |a| a[0]), vec![col("x")]);
+        let u2 = Expr::Udf(Udf::new("f", |a| a[0] * 2.0), vec![col("x")]);
+        assert_eq!(u1, u2); // structural equality is by name
+    }
+}

@@ -1,0 +1,426 @@
+//! The user-facing HiFrames API (paper §3, Table 1).
+//!
+//! | Paper syntax                               | Here                                   |
+//! |--------------------------------------------|----------------------------------------|
+//! | `DataSource(DataFrame{...}, HDF5, file)`   | [`HiFrames::read_hfs`]                 |
+//! | `v = df[:id]` (projection)                 | [`DataFrame::select`]                  |
+//! | `df2 = df[:id < 100]`                      | [`DataFrame::filter`]                  |
+//! | `join(df1, df2, :id == :cid)`              | [`DataFrame::join`]                    |
+//! | `aggregate(df, :id, :xc = sum(:x < 1.0))`  | [`DataFrame::aggregate`]               |
+//! | `[df1; df2]`                               | [`DataFrame::concat`]                  |
+//! | `cumsum(df[:x])`                           | [`DataFrame::cumsum`]                  |
+//! | `stencil(x -> …, df[:x])` (SMA/WMA)        | [`DataFrame::stencil`] / [`sma`] / [`wma`] |
+//! | `df[:id3] = (…)/var(…)` (array compute)    | [`DataFrame::with_column`]             |
+//! | `transpose(typed_hcat(Float64, …))`        | [`DataFrame::matrix_assembly`]         |
+//! | `HPAT.Kmeans(samples, k)`                  | [`DataFrame::kmeans`]                  |
+//!
+//! A `DataFrame` is a lazy logical plan; [`DataFrame::collect`] compiles it
+//! through the full pass pipeline and runs it SPMD. Scalar helpers
+//! ([`DataFrame::mean`], [`DataFrame::var`]) mirror the paper's feature
+//! scaling idiom.
+
+use crate::exec::{collect, ExecOptions};
+use crate::expr::{AggExpr, Expr};
+use crate::ir::{source_hfs, source_mem, MlParams, Plan};
+use crate::ops::stencil::{sma_weights, wma_weights_124};
+use crate::table::{Schema, Table};
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// The HiFrames context: execution options shared by the frames it creates.
+#[derive(Clone)]
+pub struct HiFrames {
+    opts: Arc<ExecOptions>,
+}
+
+impl Default for HiFrames {
+    fn default() -> Self {
+        HiFrames::new(ExecOptions::default())
+    }
+}
+
+impl HiFrames {
+    pub fn new(opts: ExecOptions) -> HiFrames {
+        HiFrames {
+            opts: Arc::new(opts),
+        }
+    }
+
+    /// Context with `workers` ranks and default optimizations.
+    pub fn with_workers(workers: usize) -> HiFrames {
+        HiFrames::new(ExecOptions {
+            workers,
+            ..Default::default()
+        })
+    }
+
+    pub fn options(&self) -> &ExecOptions {
+        &self.opts
+    }
+
+    /// Wrap an in-memory table as a data frame source.
+    pub fn table(&self, name: &str, table: Table) -> DataFrame {
+        DataFrame {
+            ctx: self.clone(),
+            plan: source_mem(name, table),
+        }
+    }
+
+    /// Read a data frame from an HFS file (schema comes from the file;
+    /// the `DataSource` construct of §3.1).
+    pub fn read_hfs(&self, name: &str, path: &Path) -> Result<DataFrame> {
+        let (schema, _) = crate::io::read_hfs_schema(path)?;
+        Ok(DataFrame {
+            ctx: self.clone(),
+            plan: source_hfs(name, path.to_path_buf(), schema),
+        })
+    }
+
+    /// Read with an explicit expected schema (checked against the file) —
+    /// the typed `DataSource(DataFrame{:id=Int64,…})` form.
+    pub fn read_hfs_typed(&self, name: &str, path: &Path, schema: Schema) -> Result<DataFrame> {
+        let (actual, _) = crate::io::read_hfs_schema(path)?;
+        if !actual.same_as(&schema) {
+            anyhow::bail!("schema mismatch: file has {actual}, declared {schema}");
+        }
+        Ok(DataFrame {
+            ctx: self.clone(),
+            plan: source_hfs(name, path.to_path_buf(), schema),
+        })
+    }
+}
+
+/// A lazy, typed, distributed data frame.
+#[derive(Clone)]
+pub struct DataFrame {
+    ctx: HiFrames,
+    plan: Plan,
+}
+
+impl DataFrame {
+    /// The underlying logical plan (inspection / tests).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Output schema (type inference runs eagerly, like the Macro-Pass).
+    pub fn schema(&self) -> Result<Schema> {
+        self.plan.schema()
+    }
+
+    fn wrap(&self, plan: Plan) -> DataFrame {
+        DataFrame {
+            ctx: self.ctx.clone(),
+            plan,
+        }
+    }
+
+    /// `df[pred]`.
+    pub fn filter(&self, predicate: Expr) -> DataFrame {
+        self.wrap(Plan::Filter {
+            input: Box::new(self.plan.clone()),
+            predicate,
+        })
+    }
+
+    /// Projection: keep the listed columns.
+    pub fn select(&self, columns: &[&str]) -> DataFrame {
+        self.wrap(Plan::Project {
+            input: Box::new(self.plan.clone()),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    /// `df[:name] = expr` — array computation over columns.
+    pub fn with_column(&self, name: &str, expr: Expr) -> DataFrame {
+        self.wrap(Plan::WithColumn {
+            input: Box::new(self.plan.clone()),
+            name: name.to_string(),
+            expr,
+        })
+    }
+
+    /// `rename!(df, :from, :to)`.
+    pub fn rename(&self, from: &str, to: &str) -> DataFrame {
+        self.wrap(Plan::Rename {
+            input: Box::new(self.plan.clone()),
+            from: from.to_string(),
+            to: to.to_string(),
+        })
+    }
+
+    /// `join(self, other, :lk == :rk)` — inner equi-join; unlike Julia's
+    /// DataFrames.jl the two key columns may have different names (§3.1).
+    pub fn join(&self, other: &DataFrame, left_key: &str, right_key: &str) -> DataFrame {
+        self.wrap(Plan::Join {
+            left: Box::new(self.plan.clone()),
+            right: Box::new(other.plan.clone()),
+            left_key: left_key.to_string(),
+            right_key: right_key.to_string(),
+        })
+    }
+
+    /// `aggregate(df, :key, :out = fn(expr), …)`.
+    pub fn aggregate(&self, key: &str, aggs: Vec<AggExpr>) -> DataFrame {
+        self.wrap(Plan::Aggregate {
+            input: Box::new(self.plan.clone()),
+            key: key.to_string(),
+            aggs,
+        })
+    }
+
+    /// `[self; other]`.
+    pub fn concat(&self, other: &DataFrame) -> DataFrame {
+        self.wrap(Plan::Concat {
+            inputs: vec![Box::new(self.plan.clone()), Box::new(other.plan.clone())],
+        })
+    }
+
+    /// `df[:out] = cumsum(df[:col])`.
+    pub fn cumsum(&self, column: &str, out: &str) -> DataFrame {
+        self.wrap(Plan::Cumsum {
+            input: Box::new(self.plan.clone()),
+            column: column.to_string(),
+            out: out.to_string(),
+        })
+    }
+
+    /// General 1-D stencil with explicit weights.
+    pub fn stencil(&self, column: &str, out: &str, weights: Vec<f64>) -> DataFrame {
+        self.wrap(Plan::Stencil {
+            input: Box::new(self.plan.clone()),
+            column: column.to_string(),
+            out: out.to_string(),
+            weights,
+        })
+    }
+
+    /// Simple moving average of window `w` (`stencil(x->(x[-1]+x[0]+x[1])/3)`).
+    pub fn sma(&self, column: &str, out: &str, window: usize) -> DataFrame {
+        self.stencil(column, out, sma_weights(window))
+    }
+
+    /// The paper's weighted moving average `(x[-1]+2x[0]+x[1])/4`.
+    pub fn wma(&self, column: &str, out: &str) -> DataFrame {
+        self.stencil(column, out, wma_weights_124())
+    }
+
+    /// Global sort by an Int64 column.
+    pub fn sort_by(&self, key: &str) -> DataFrame {
+        self.wrap(Plan::Sort {
+            input: Box::new(self.plan.clone()),
+            key: key.to_string(),
+        })
+    }
+
+    /// `samples = transpose(typed_hcat(Float64, cols…))` — assemble the ML
+    /// feature matrix (pattern-matched into one node, §4.2).
+    pub fn matrix_assembly(&self, columns: &[&str]) -> DataFrame {
+        self.wrap(Plan::MatrixAssembly {
+            input: Box::new(self.plan.clone()),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    /// `HPAT.Kmeans(samples, k)` over the assembled matrix.
+    pub fn kmeans(&self, k: usize, iters: usize, use_pjrt: bool) -> DataFrame {
+        self.wrap(Plan::MlCall {
+            input: Box::new(self.plan.clone()),
+            params: MlParams {
+                model: "kmeans".to_string(),
+                k,
+                iters,
+                use_pjrt,
+            },
+        })
+    }
+
+    /// Compile (all passes) + SPMD execute + gather on the leader.
+    pub fn collect(&self) -> Result<Table> {
+        collect(self.plan.clone(), &self.ctx.opts)
+    }
+
+    /// Scalar mean of a column (the paper's `mean(c_i_points[:id3])` —
+    /// computed distributed via aggregate-to-scalar).
+    pub fn mean(&self, column: &str) -> Result<f64> {
+        let t = self
+            .with_column("__one", crate::expr::lit(0i64))
+            .aggregate(
+                "__one",
+                vec![AggExpr::new(
+                    "m",
+                    crate::expr::AggFn::Mean,
+                    crate::expr::col(column),
+                )],
+            )
+            .collect()?;
+        Ok(t.column("m").unwrap().as_f64()[0])
+    }
+
+    /// Scalar population variance of a column.
+    pub fn var(&self, column: &str) -> Result<f64> {
+        let t = self
+            .with_column("__one", crate::expr::lit(0i64))
+            .aggregate(
+                "__one",
+                vec![AggExpr::new(
+                    "v",
+                    crate::expr::AggFn::Var,
+                    crate::expr::col(column),
+                )],
+            )
+            .collect()?;
+        Ok(t.column("v").unwrap().as_f64()[0])
+    }
+
+    /// Row count (distributed execute + sum of local counts; no driver
+    /// gather of the data itself).
+    pub fn count(&self) -> Result<usize> {
+        crate::exec::collect_count(self.plan.clone(), &self.ctx.opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit, AggFn};
+
+    fn ctx() -> HiFrames {
+        HiFrames::with_workers(3)
+    }
+
+    fn df(hf: &HiFrames) -> DataFrame {
+        hf.table(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2, 1, 3, 2, 1])),
+                ("x", Column::F64(vec![0.5, 1.5, 2.5, 3.5, 4.5, 5.5])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn filter_select_collect() {
+        let hf = ctx();
+        let out = df(&hf)
+            .filter(col("x").gt(lit(2.0)))
+            .select(&["id"])
+            .collect()
+            .unwrap();
+        assert_eq!(out.column("id").unwrap().as_i64(), &[1, 3, 2, 1]);
+    }
+
+    #[test]
+    fn aggregate_table1_style() {
+        // Table 1: df2 = aggregate(df1, :id, :xc = sum(:x<1.0), :ym = mean(:y))
+        let hf = ctx();
+        let out = df(&hf)
+            .aggregate(
+                "id",
+                vec![
+                    AggExpr::new("xc", AggFn::Sum, col("x").lt(lit(3.0))),
+                    AggExpr::new("ym", AggFn::Mean, col("x")),
+                ],
+            )
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(out.column("id").unwrap().as_i64(), &[1, 2, 3]);
+        assert_eq!(out.column("xc").unwrap().as_i64(), &[2, 1, 0]);
+        let ym = out.column("ym").unwrap().as_f64();
+        assert!((ym[0] - (0.5 + 2.5 + 5.5) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn join_with_rename() {
+        let hf = ctx();
+        let other = hf.table(
+            "r",
+            Table::from_pairs(vec![
+                ("cid", Column::I64(vec![1, 2])),
+                ("w", Column::F64(vec![10.0, 20.0])),
+            ])
+            .unwrap(),
+        );
+        let out = df(&hf)
+            .join(&other, "id", "cid")
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(out.num_rows(), 5); // ids 1,1,1,2,2
+        assert_eq!(out.schema().names(), vec!["id", "x", "w"]);
+    }
+
+    #[test]
+    fn concat_and_count() {
+        let hf = ctx();
+        let d = df(&hf);
+        let c = d.concat(&d);
+        assert_eq!(c.count().unwrap(), 12);
+    }
+
+    #[test]
+    fn scalar_mean_var() {
+        let hf = ctx();
+        let m = df(&hf).mean("x").unwrap();
+        assert!((m - 3.0).abs() < 1e-9);
+        let v = df(&hf).var("x").unwrap();
+        // population variance of 0.5..5.5 step1 = 35/12
+        assert!((v - 35.0 / 12.0).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn cumsum_and_sma() {
+        let hf = ctx();
+        let out = df(&hf).cumsum("x", "cs").collect().unwrap();
+        let cs = out.column("cs").unwrap().as_f64();
+        assert!((cs[5] - 18.0).abs() < 1e-9);
+        let out = df(&hf).sma("x", "sma", 3).collect().unwrap();
+        let sma = out.column("sma").unwrap().as_f64();
+        assert!((sma[1] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feature_scaling_pipeline() {
+        // the paper's Q26 idiom: (col - mean) / var as array compute
+        let hf = ctx();
+        let d = df(&hf);
+        let (m, v) = (d.mean("x").unwrap(), d.var("x").unwrap());
+        let scaled = d.with_column("x", col("x").sub(lit(m)).div(lit(v)));
+        let out = scaled.collect().unwrap();
+        let xs = out.column("x").unwrap().as_f64();
+        assert!((xs.iter().sum::<f64>()).abs() < 1e-9); // centered
+    }
+
+    #[test]
+    fn kmeans_end_to_end_rust_kernel() {
+        let hf = HiFrames::with_workers(2);
+        let t = Table::from_pairs(vec![
+            ("a", Column::F64(vec![0.0, 0.1, 10.0, 10.1, 0.05, 9.95])),
+            ("b", Column::F64(vec![0.0, 0.1, 10.0, 10.1, 0.05, 9.95])),
+        ])
+        .unwrap();
+        let out = hf
+            .table("pts", t)
+            .matrix_assembly(&["a", "b"])
+            .kmeans(2, 10, false)
+            .collect()
+            .unwrap();
+        assert_eq!(out.num_rows(), 2);
+        assert_eq!(out.schema().names(), vec!["f0", "f1", "cluster"]);
+        let f0 = out.column("f0").unwrap().as_f64();
+        let mut c: Vec<f64> = f0.to_vec();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(c[0] < 1.0 && c[1] > 9.0);
+    }
+
+    #[test]
+    fn schema_errors_surface_eagerly() {
+        let hf = ctx();
+        assert!(df(&hf).filter(col("nope").lt(lit(1.0))).schema().is_err());
+        assert!(df(&hf).select(&["missing"]).schema().is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! CSV reader/writer (header row, comma-separated, no quoting of commas —
+//! enough for examples and external-tool interchange; HFS is the real
+//! storage format).
+
+use crate::column::Column;
+use crate::table::{Schema, Table};
+use crate::types::DType;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Write `table` as CSV with a `name:dtype` header line.
+pub fn write_csv(path: &Path, table: &Table) -> Result<()> {
+    let mut out = String::new();
+    let header: Vec<String> = table
+        .schema()
+        .fields()
+        .iter()
+        .map(|(n, t)| format!("{n}:{t}"))
+        .collect();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for i in 0..table.num_rows() {
+        let row: Vec<String> = table.row(i).iter().map(|v| v.to_string()).collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("csv write {}", path.display()))
+}
+
+/// Read a CSV produced by [`write_csv`] (typed header).
+pub fn read_csv(path: &Path) -> Result<Table> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("csv read {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("csv: empty file")?;
+    let mut fields = Vec::new();
+    for part in header.split(',') {
+        let Some((name, ty)) = part.split_once(':') else {
+            bail!("csv: header field {part:?} missing :dtype");
+        };
+        let dt = match ty {
+            "Int64" => DType::I64,
+            "Float64" => DType::F64,
+            "Bool" => DType::Bool,
+            "String" => DType::Str,
+            other => bail!("csv: unknown dtype {other}"),
+        };
+        fields.push((name.to_string(), dt));
+    }
+    let schema = Schema::new(fields);
+    let mut cols: Vec<Column> = schema
+        .fields()
+        .iter()
+        .map(|(_, t)| Column::new_empty(*t))
+        .collect();
+    for (lineno, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() != cols.len() {
+            bail!(
+                "csv line {}: {} fields, expected {}",
+                lineno + 2,
+                parts.len(),
+                cols.len()
+            );
+        }
+        for ((col, part), (_, dt)) in cols.iter_mut().zip(&parts).zip(schema.fields()) {
+            match dt {
+                DType::I64 => col.push(&crate::types::Value::I64(
+                    part.parse().with_context(|| format!("csv i64 {part:?}"))?,
+                )),
+                DType::F64 => col.push(&crate::types::Value::F64(
+                    part.parse().with_context(|| format!("csv f64 {part:?}"))?,
+                )),
+                DType::Bool => col.push(&crate::types::Value::Bool(match *part {
+                    "true" => true,
+                    "false" => false,
+                    other => bail!("csv bool {other:?}"),
+                })),
+                DType::Str => col.push(&crate::types::Value::Str(part.to_string())),
+            }
+        }
+    }
+    Table::new(schema, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("hiframes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        let t = Table::from_pairs(vec![
+            ("id", Column::I64(vec![1, 2])),
+            ("x", Column::F64(vec![0.5, 1.5])),
+            ("ok", Column::Bool(vec![true, false])),
+            ("s", Column::Str(vec!["a".into(), "b".into()])),
+        ])
+        .unwrap();
+        write_csv(&p, &t).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("hiframes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "a:Int64\n1,2\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::write(&p, "a:Nope\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::write(&p, "a\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! I/O substrates.
+//!
+//! * [`hfs`] — the HDF5 stand-in: a chunked columnar binary format with
+//!   per-column hyperslab reads, so ranks read exactly their 1D_BLOCK slice
+//!   (the paper's `H5Sselect_hyperslab` / `H5Dread` pattern, Fig. 5).
+//! * [`csv`] — plain-text interchange for examples and external tools.
+
+pub mod csv;
+pub mod hfs;
+
+pub use csv::{read_csv, write_csv};
+pub use hfs::{read_hfs_schema, read_hfs_slice, read_hfs_table, write_hfs};

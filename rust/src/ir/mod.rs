@@ -1,0 +1,622 @@
+//! The logical IR — the paper's Domain-Pass output (§4.2): relational
+//! operations as first-class plan nodes living in the *same* graph as
+//! non-relational array computations ([`Plan::WithColumn`]) and ML calls
+//! ([`Plan::MlCall`]). This is what lets the DataFrame-Pass build a "query
+//! tree over only the relational nodes while other nodes are ignored" and
+//! still validate transformations against the whole program (liveness).
+
+use crate::distribution::Dist;
+use crate::expr::{AggExpr, Expr};
+use crate::table::{Schema, Table};
+use crate::types::DType;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Where a source data frame's rows come from.
+#[derive(Debug, Clone)]
+pub enum SourceRef {
+    /// Shared in-memory table (tests, generated workloads).
+    InMemory(Arc<Table>),
+    /// HFS columnar file — ranks read their hyperslab (paper's
+    /// `H5Sselect_hyperslab` pattern, Fig. 5).
+    Hfs(PathBuf),
+}
+
+/// Parameters of an [`Plan::MlCall`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlParams {
+    /// `"kmeans"` or `"logreg"`.
+    pub model: String,
+    /// Number of clusters (kmeans) / classes (logreg).
+    pub k: usize,
+    pub iters: usize,
+    /// Execute via PJRT artifacts (L2/L1 path) or the pure-rust kernel.
+    pub use_pjrt: bool,
+}
+
+/// A logical plan tree. Each node's output is a data frame whose columns
+/// are, at execution time, individual arrays per rank (dual representation).
+#[derive(Debug, Clone)]
+pub enum Plan {
+    /// Read a named data frame (the `DataSource` construct, §3.1).
+    Source {
+        name: String,
+        src: SourceRef,
+        schema: Schema,
+    },
+    /// `df[pred]` — row filter.
+    Filter { input: Box<Plan>, predicate: Expr },
+    /// Keep a subset of columns (projection; also inserted by pruning).
+    Project {
+        input: Box<Plan>,
+        columns: Vec<String>,
+    },
+    /// `df[:new] = expr` — non-relational array computation on columns.
+    WithColumn {
+        input: Box<Plan>,
+        name: String,
+        expr: Expr,
+    },
+    /// Rename one column (used by pushdown plumbing and self-joins).
+    Rename {
+        input: Box<Plan>,
+        from: String,
+        to: String,
+    },
+    /// Inner equi-join `join(l, r, :lk == :rk)`.
+    Join {
+        left: Box<Plan>,
+        right: Box<Plan>,
+        left_key: String,
+        right_key: String,
+    },
+    /// `aggregate(df, :key, :out = fn(expr), …)`.
+    Aggregate {
+        input: Box<Plan>,
+        key: String,
+        aggs: Vec<AggExpr>,
+    },
+    /// Vertical concatenation `[df1; df2]` (same schema).
+    Concat { inputs: Vec<Box<Plan>> },
+    /// `cumsum(df[:col])` materialized as a new column.
+    Cumsum {
+        input: Box<Plan>,
+        column: String,
+        out: String,
+    },
+    /// 1-D stencil over a column (SMA/WMA): `out[i] = Σ w[j]·col[i+j-r]`.
+    Stencil {
+        input: Box<Plan>,
+        column: String,
+        out: String,
+        weights: Vec<f64>,
+    },
+    /// Global sort by an Int64 key (result canonicalization; TPCx-BB top-N).
+    Sort { input: Box<Plan>, key: String },
+    /// Redistribute a 1D_VAR frame to 1D_BLOCK (inserted by the
+    /// Distributed-Pass; never written by users).
+    Rebalance { input: Box<Plan> },
+    /// `transpose(typed_hcat(Float64, cols…))` — ML matrix assembly
+    /// (pattern-matched by Domain-Pass in the paper, §4.2).
+    MatrixAssembly {
+        input: Box<Plan>,
+        columns: Vec<String>,
+    },
+    /// Call into the AOT-compiled analytics model (k-means / logreg).
+    MlCall {
+        input: Box<Plan>,
+        params: MlParams,
+    },
+}
+
+impl Plan {
+    /// Output schema. Errors surface unknown columns / type errors — the
+    /// "complete type inference" requirement of the Macro-Pass (§4.1).
+    pub fn schema(&self) -> Result<Schema> {
+        match self {
+            Plan::Source { schema, .. } => Ok(schema.clone()),
+            Plan::Filter { input, predicate } => {
+                let s = input.schema()?;
+                let t = predicate.dtype(&s)?;
+                if t != DType::Bool {
+                    bail!("filter predicate has dtype {t}, expected Bool");
+                }
+                Ok(s)
+            }
+            Plan::Project { input, columns } => {
+                let s = input.schema()?;
+                let mut fields = Vec::new();
+                for c in columns {
+                    let dt = s
+                        .dtype_of(c)
+                        .with_context(|| format!("project: unknown column :{c}"))?;
+                    fields.push((c.clone(), dt));
+                }
+                Ok(Schema::new(fields))
+            }
+            Plan::WithColumn { input, name, expr } => {
+                let s = input.schema()?;
+                let dt = expr.dtype(&s)?;
+                let mut fields: Vec<(String, DType)> = s
+                    .fields()
+                    .iter()
+                    .filter(|(n, _)| n != name)
+                    .cloned()
+                    .collect();
+                fields.push((name.clone(), dt));
+                Ok(Schema::new(fields))
+            }
+            Plan::Rename { input, from, to } => {
+                let s = input.schema()?;
+                if s.dtype_of(from).is_none() {
+                    bail!("rename: unknown column :{from}");
+                }
+                if s.dtype_of(to).is_some() {
+                    bail!("rename: column :{to} already exists");
+                }
+                Ok(Schema::new(
+                    s.fields()
+                        .iter()
+                        .map(|(n, t)| {
+                            if n == from {
+                                (to.clone(), *t)
+                            } else {
+                                (n.clone(), *t)
+                            }
+                        })
+                        .collect(),
+                ))
+            }
+            Plan::Join {
+                left,
+                right,
+                left_key,
+                right_key,
+            } => {
+                let ls = left.schema()?;
+                let rs = right.schema()?;
+                let lk = ls
+                    .dtype_of(left_key)
+                    .with_context(|| format!("join: unknown left key :{left_key}"))?;
+                let rk = rs
+                    .dtype_of(right_key)
+                    .with_context(|| format!("join: unknown right key :{right_key}"))?;
+                if lk != DType::I64 || rk != DType::I64 {
+                    bail!("join keys must be Int64 (got {lk} and {rk})");
+                }
+                // output: all left columns, then right columns minus its key
+                let mut fields = ls.fields().to_vec();
+                for (n, t) in rs.fields() {
+                    if n == right_key {
+                        continue;
+                    }
+                    if ls.dtype_of(n).is_some() {
+                        bail!("join: column :{n} exists on both sides — rename first");
+                    }
+                    fields.push((n.clone(), *t));
+                }
+                Ok(Schema::new(fields))
+            }
+            Plan::Aggregate { input, key, aggs } => {
+                let s = input.schema()?;
+                let kt = s
+                    .dtype_of(key)
+                    .with_context(|| format!("aggregate: unknown key :{key}"))?;
+                if kt != DType::I64 {
+                    bail!("aggregate key :{key} must be Int64, got {kt}");
+                }
+                let mut fields = vec![(key.clone(), DType::I64)];
+                for a in aggs {
+                    if fields.iter().any(|(n, _)| n == &a.out) {
+                        bail!("aggregate: duplicate output column :{}", a.out);
+                    }
+                    fields.push((a.out.clone(), a.output_dtype(&s)?));
+                }
+                Ok(Schema::new(fields))
+            }
+            Plan::Concat { inputs } => {
+                let first = inputs
+                    .first()
+                    .context("concat: needs at least one input")?
+                    .schema()?;
+                for other in &inputs[1..] {
+                    let s = other.schema()?;
+                    if !first.same_as(&s) {
+                        bail!("concat: schema mismatch {first} vs {s}");
+                    }
+                }
+                Ok(first)
+            }
+            Plan::Cumsum { input, column, out } => {
+                let s = input.schema()?;
+                let dt = s
+                    .dtype_of(column)
+                    .with_context(|| format!("cumsum: unknown column :{column}"))?;
+                if !dt.is_numeric() {
+                    bail!("cumsum over non-numeric column :{column}");
+                }
+                let mut fields: Vec<(String, DType)> = s
+                    .fields()
+                    .iter()
+                    .filter(|(n, _)| n != out)
+                    .cloned()
+                    .collect();
+                fields.push((out.clone(), dt));
+                Ok(Schema::new(fields))
+            }
+            Plan::Stencil {
+                input,
+                column,
+                out,
+                weights,
+            } => {
+                let s = input.schema()?;
+                let dt = s
+                    .dtype_of(column)
+                    .with_context(|| format!("stencil: unknown column :{column}"))?;
+                if !dt.is_numeric() {
+                    bail!("stencil over non-numeric column :{column}");
+                }
+                if weights.is_empty() || weights.len() % 2 == 0 {
+                    bail!(
+                        "stencil weights must have odd length, got {}",
+                        weights.len()
+                    );
+                }
+                let mut fields: Vec<(String, DType)> = s
+                    .fields()
+                    .iter()
+                    .filter(|(n, _)| n != out)
+                    .cloned()
+                    .collect();
+                fields.push((out.clone(), DType::F64));
+                Ok(Schema::new(fields))
+            }
+            Plan::Sort { input, key } => {
+                let s = input.schema()?;
+                if s.dtype_of(key) != Some(DType::I64) {
+                    bail!("sort key :{key} must be Int64");
+                }
+                Ok(s)
+            }
+            Plan::Rebalance { input } => input.schema(),
+            Plan::MatrixAssembly { input, columns } => {
+                let s = input.schema()?;
+                let mut fields = Vec::new();
+                for (i, c) in columns.iter().enumerate() {
+                    let dt = s
+                        .dtype_of(c)
+                        .with_context(|| format!("matrix assembly: unknown column :{c}"))?;
+                    if !(dt.is_numeric() || dt == DType::Bool) {
+                        bail!("matrix assembly: column :{c} is {dt}, not castable");
+                    }
+                    fields.push((format!("f{i}"), DType::F64));
+                }
+                Ok(Schema::new(fields))
+            }
+            Plan::MlCall { input, params } => {
+                let s = input.schema()?;
+                // kmeans: k centroid rows over the input features, tagged
+                // with :cluster; logreg: one row of weights (+bias as f_n).
+                let mut fields = s.fields().to_vec();
+                fields.push(("cluster".to_string(), DType::I64));
+                let _ = params;
+                Ok(Schema::new(fields))
+            }
+        }
+    }
+
+    /// Children accessor (for generic traversals).
+    pub fn children(&self) -> Vec<&Plan> {
+        match self {
+            Plan::Source { .. } => vec![],
+            Plan::Filter { input, .. }
+            | Plan::Project { input, .. }
+            | Plan::WithColumn { input, .. }
+            | Plan::Rename { input, .. }
+            | Plan::Aggregate { input, .. }
+            | Plan::Cumsum { input, .. }
+            | Plan::Stencil { input, .. }
+            | Plan::Sort { input, .. }
+            | Plan::Rebalance { input }
+            | Plan::MatrixAssembly { input, .. }
+            | Plan::MlCall { input, .. } => vec![input],
+            Plan::Join { left, right, .. } => vec![left, right],
+            Plan::Concat { inputs } => inputs.iter().map(|b| b.as_ref()).collect(),
+        }
+    }
+
+    /// Distribution transfer function (paper §4.4): bottom-up meet over the
+    /// semilattice. A tree has no cycles, so one pass *is* the fixed point.
+    pub fn dist(&self) -> Dist {
+        match self {
+            Plan::Source { .. } => Dist::OneD,
+            // relational outputs have data-dependent sizes: meet with 1D_VAR
+            Plan::Filter { input, .. } => Dist::OneDVar.meet(input.dist()),
+            Plan::Join { left, right, .. } => {
+                Dist::OneDVar.meet(left.dist()).meet(right.dist())
+            }
+            Plan::Aggregate { input, .. } => Dist::OneDVar.meet(input.dist()),
+            Plan::Concat { inputs } => {
+                Dist::meet_all(inputs.iter().map(|p| p.dist())).meet(Dist::OneDVar)
+            }
+            // element-wise ops preserve their input's distribution
+            Plan::Project { input, .. }
+            | Plan::WithColumn { input, .. }
+            | Plan::Rename { input, .. }
+            | Plan::Cumsum { input, .. } => input.dist(),
+            Plan::Stencil { input, .. } => input.dist(),
+            // sort range-repartitions → chunk sizes are data-dependent
+            Plan::Sort { input, .. } => Dist::OneDVar.meet(input.dist()),
+            Plan::Rebalance { .. } => Dist::OneD,
+            Plan::MatrixAssembly { input, .. } => input.dist(),
+            // model output is replicated on every rank
+            Plan::MlCall { .. } => Dist::Rep,
+        }
+    }
+
+    /// Does this node require its input in `1D_BLOCK` (paper §4.4: "some
+    /// operations … require 1D_BLOCK distribution for their input arrays")?
+    pub fn requires_block_input(&self) -> bool {
+        matches!(self, Plan::MatrixAssembly { .. } | Plan::Stencil { .. })
+    }
+
+    /// Number of nodes (plan-size metric for pass tests).
+    pub fn size(&self) -> usize {
+        1 + self.children().iter().map(|c| c.size()).sum::<usize>()
+    }
+
+    fn fmt_indent(&self, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+        let pad = "  ".repeat(depth);
+        let dist = self.dist();
+        match self {
+            Plan::Source { name, .. } => writeln!(f, "{pad}Source({name}) [{dist}]")?,
+            Plan::Filter { predicate, .. } => writeln!(f, "{pad}Filter({predicate}) [{dist}]")?,
+            Plan::Project { columns, .. } => {
+                writeln!(f, "{pad}Project({}) [{dist}]", columns.join(", "))?
+            }
+            Plan::WithColumn { name, expr, .. } => {
+                writeln!(f, "{pad}WithColumn(:{name} = {expr}) [{dist}]")?
+            }
+            Plan::Rename { from, to, .. } => {
+                writeln!(f, "{pad}Rename(:{from} -> :{to}) [{dist}]")?
+            }
+            Plan::Join {
+                left_key,
+                right_key,
+                ..
+            } => writeln!(f, "{pad}Join(:{left_key} == :{right_key}) [{dist}]")?,
+            Plan::Aggregate { key, aggs, .. } => {
+                let parts: Vec<String> = aggs.iter().map(|a| a.to_string()).collect();
+                writeln!(f, "{pad}Aggregate(:{key}; {}) [{dist}]", parts.join(", "))?
+            }
+            Plan::Concat { inputs } => {
+                writeln!(f, "{pad}Concat({} inputs) [{dist}]", inputs.len())?
+            }
+            Plan::Cumsum { column, out, .. } => {
+                writeln!(f, "{pad}Cumsum(:{column} -> :{out}) [{dist}]")?
+            }
+            Plan::Stencil {
+                column,
+                out,
+                weights,
+                ..
+            } => writeln!(
+                f,
+                "{pad}Stencil(:{column} -> :{out}, w={weights:?}) [{dist}]"
+            )?,
+            Plan::Sort { key, .. } => writeln!(f, "{pad}Sort(:{key}) [{dist}]")?,
+            Plan::Rebalance { .. } => writeln!(f, "{pad}Rebalance [{dist}]")?,
+            Plan::MatrixAssembly { columns, .. } => {
+                writeln!(f, "{pad}MatrixAssembly({}) [{dist}]", columns.join(", "))?
+            }
+            Plan::MlCall { params, .. } => writeln!(
+                f,
+                "{pad}MlCall({}, k={}, iters={}, pjrt={}) [{dist}]",
+                params.model, params.k, params.iters, params.use_pjrt
+            )?,
+        }
+        for c in self.children() {
+            c.fmt_indent(f, depth + 1)?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Plan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.fmt_indent(f, 0)
+    }
+}
+
+/// Build an in-memory source node.
+pub fn source_mem(name: &str, table: Table) -> Plan {
+    let schema = table.schema().clone();
+    Plan::Source {
+        name: name.to_string(),
+        src: SourceRef::InMemory(Arc::new(table)),
+        schema,
+    }
+}
+
+/// Build an HFS file source node.
+pub fn source_hfs(name: &str, path: PathBuf, schema: Schema) -> Plan {
+    Plan::Source {
+        name: name.to_string(),
+        src: SourceRef::Hfs(path),
+        schema,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit, AggExpr, AggFn};
+
+    fn src() -> Plan {
+        source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2])),
+                ("x", Column::F64(vec![0.5, 1.5])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn schema_filter_ok_and_type_checked() {
+        let p = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0)),
+        };
+        assert_eq!(p.schema().unwrap().names(), vec!["id", "x"]);
+        let bad = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").add(lit(1.0)),
+        };
+        assert!(bad.schema().is_err());
+    }
+
+    #[test]
+    fn schema_join_merges_and_rejects_collisions() {
+        let right = source_mem(
+            "r",
+            Table::from_pairs(vec![
+                ("cid", Column::I64(vec![1])),
+                ("y", Column::F64(vec![2.0])),
+            ])
+            .unwrap(),
+        );
+        let j = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right),
+            left_key: "id".into(),
+            right_key: "cid".into(),
+        };
+        assert_eq!(j.schema().unwrap().names(), vec!["id", "x", "y"]);
+
+        let collide = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(src()),
+            left_key: "id".into(),
+            right_key: "id".into(),
+        };
+        assert!(collide.schema().is_err()); // :x on both sides
+    }
+
+    #[test]
+    fn schema_aggregate() {
+        let a = Plan::Aggregate {
+            input: Box::new(src()),
+            key: "id".into(),
+            aggs: vec![
+                AggExpr::new("n", AggFn::Count, col("x")),
+                AggExpr::new("m", AggFn::Mean, col("x")),
+            ],
+        };
+        let s = a.schema().unwrap();
+        assert_eq!(s.names(), vec!["id", "n", "m"]);
+        assert_eq!(s.dtype_of("n"), Some(DType::I64));
+        assert_eq!(s.dtype_of("m"), Some(DType::F64));
+    }
+
+    #[test]
+    fn schema_withcolumn_replaces() {
+        let p = Plan::WithColumn {
+            input: Box::new(src()),
+            name: "x".into(),
+            expr: col("x").mul(lit(2.0)),
+        };
+        let s = p.schema().unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.dtype_of("x"), Some(DType::F64));
+    }
+
+    #[test]
+    fn schema_stencil_weights_validated() {
+        let bad = Plan::Stencil {
+            input: Box::new(src()),
+            column: "x".into(),
+            out: "sma".into(),
+            weights: vec![0.5, 0.5],
+        };
+        assert!(bad.schema().is_err());
+        let good = Plan::Stencil {
+            input: Box::new(src()),
+            column: "x".into(),
+            out: "sma".into(),
+            weights: vec![1.0 / 3.0; 3],
+        };
+        assert_eq!(good.schema().unwrap().dtype_of("sma"), Some(DType::F64));
+    }
+
+    #[test]
+    fn dist_transfer_functions() {
+        let s = src();
+        assert_eq!(s.dist(), Dist::OneD);
+        let f = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0)),
+        };
+        assert_eq!(f.dist(), Dist::OneDVar);
+        let reb = Plan::Rebalance {
+            input: Box::new(f.clone()),
+        };
+        assert_eq!(reb.dist(), Dist::OneD);
+        let ml = Plan::MlCall {
+            input: Box::new(src()),
+            params: MlParams {
+                model: "kmeans".into(),
+                k: 2,
+                iters: 1,
+                use_pjrt: false,
+            },
+        };
+        assert_eq!(ml.dist(), Dist::Rep);
+    }
+
+    #[test]
+    fn requires_block() {
+        let st = Plan::Stencil {
+            input: Box::new(src()),
+            column: "x".into(),
+            out: "o".into(),
+            weights: vec![1.0],
+        };
+        assert!(st.requires_block_input());
+        assert!(!src().requires_block_input());
+    }
+
+    #[test]
+    fn display_tree() {
+        let f = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0)),
+        };
+        let txt = format!("{f}");
+        assert!(txt.contains("Filter"));
+        assert!(txt.contains("Source(t)"));
+        assert!(txt.contains("1D_VAR"));
+        assert_eq!(f.size(), 2);
+    }
+
+    #[test]
+    fn concat_schema_checked() {
+        let c = Plan::Concat {
+            inputs: vec![Box::new(src()), Box::new(src())],
+        };
+        assert!(c.schema().is_ok());
+        let other = source_mem(
+            "o",
+            Table::from_pairs(vec![("z", Column::I64(vec![1]))]).unwrap(),
+        );
+        let bad = Plan::Concat {
+            inputs: vec![Box::new(src()), Box::new(other)],
+        };
+        assert!(bad.schema().is_err());
+    }
+}

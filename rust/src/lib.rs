@@ -1,0 +1,55 @@
+//! # HiFrames (reproduction)
+//!
+//! A compiler-based distributed data-frame system, reproducing
+//! *HiFrames: High Performance Data Frames in a Scripting Language*
+//! (Totoni, Hassan, Anderson, Shpeisman — 2017) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the HiFrames compiler & runtime: a data-frame
+//!   API ([`frame`]) that builds a logical IR ([`ir`]), optimized by the
+//!   paper's passes ([`passes`]: predicate pushdown through join, column
+//!   pruning, distribution inference over the `1D_BLOCK/1D_VAR/2D/REP`
+//!   meet-semilattice), lowered to a physical SPMD plan ([`exec`]) whose
+//!   operators ([`ops`]) run on rank-threads over a simulated-MPI
+//!   communicator ([`comm`]).
+//! * **L2/L1 (python/compile)** — JAX analytics models (k-means step,
+//!   logistic regression) calling Pallas kernels, AOT-lowered to HLO text
+//!   and executed from Rust via PJRT ([`runtime`], [`ml`]).
+//!
+//! Comparison engines live in [`baseline`] (`sparklike` map-reduce engine,
+//! `serial` pandas-like engine) and the TPCx-BB workload in [`bigbench`].
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod baseline;
+pub mod bench;
+pub mod bigbench;
+pub mod column;
+pub mod comm;
+pub mod config;
+pub mod datagen;
+pub mod distribution;
+pub mod exec;
+pub mod expr;
+pub mod frame;
+pub mod fxhash;
+pub mod io;
+pub mod ir;
+pub mod metrics;
+pub mod ml;
+pub mod ops;
+pub mod passes;
+pub mod prop;
+pub mod runtime;
+pub mod table;
+pub mod types;
+
+/// Convenience re-exports for examples and tests.
+pub mod prelude {
+    pub use crate::column::{ArithOp, CmpOp, Column, MathFn};
+    pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf};
+    pub use crate::frame::*;
+    pub use crate::table::{Schema, Table};
+    pub use crate::types::{DType, Value};
+}

@@ -1,0 +1,322 @@
+//! `hiframes` — the launcher CLI (hand-rolled arg parsing; clap is not in
+//! the offline image).
+//!
+//! Subcommands:
+//!   gen-data   --sf <f> --out <dir> [--skew <a>]   generate TPCx-BB HFS files
+//!   query      --q <05|25|26> --sf <f> [--workers N] [--engine hiframes|sparklike]
+//!   plan       --q <05|25|26>                       show optimized logical plan
+//!   pipeline   [--sf f] [--workers N] [--pjrt]      Q26 end-to-end incl. k-means
+//!   micro      --op <filter|join|aggregate|cumsum|sma|wma> --rows N [--workers N]
+//!   info                                            environment + artifacts
+
+use anyhow::{bail, Context, Result};
+use hiframes::baseline::sparklike::SparkLike;
+use hiframes::bigbench::{self, q05, q25, q26};
+use hiframes::frame::HiFrames;
+use hiframes::metrics::time_it;
+use hiframes::prelude::*;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            match args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                Some(val) => {
+                    out.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+                None => {
+                    out.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    let workers = flag_usize(&flags, "workers", hiframes::config::default_workers());
+    match cmd.as_str() {
+        "gen-data" => gen_data(&flags),
+        "query" => query(&flags, workers),
+        "plan" => show_plan(&flags),
+        "pipeline" => pipeline(&flags, workers),
+        "micro" => micro(&flags, workers),
+        "info" => info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            bail!("unknown command {other}");
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "hiframes — compiler-based distributed data frames (HiFrames reproduction)\n\
+         usage: hiframes <gen-data|query|plan|pipeline|micro|info> [flags]\n\
+         \n\
+         gen-data  --sf <f> --out <dir> [--skew <a>]\n\
+         query     --q <05|25|26> [--sf f] [--workers N] [--engine hiframes|sparklike] [--skew a]\n\
+         plan      --q <05|25|26> [--no-opt]\n\
+         pipeline  [--sf f] [--workers N] [--pjrt]\n\
+         micro     --op <filter|join|aggregate|cumsum|sma|wma> [--rows N] [--workers N]\n\
+         info"
+    );
+}
+
+fn db_for(flags: &HashMap<String, String>) -> bigbench::BbTables {
+    bigbench::generate(&bigbench::GenOptions {
+        scale_factor: flag_f64(flags, "sf", 1.0),
+        click_skew: flag_f64(flags, "skew", 0.0),
+        seed: 42,
+    })
+}
+
+fn gen_data(flags: &HashMap<String, String>) -> Result<()> {
+    let out = flags.get("out").context("gen-data: need --out <dir>")?;
+    let dir = std::path::Path::new(out);
+    std::fs::create_dir_all(dir)?;
+    let db = db_for(flags);
+    for (name, t) in [
+        ("store_sales", &db.store_sales),
+        ("web_sales", &db.web_sales),
+        ("web_clickstream", &db.web_clickstream),
+        ("item", &db.item),
+        ("customer", &db.customer),
+        ("customer_demographics", &db.customer_demographics),
+    ] {
+        let p = dir.join(format!("{name}.hfs"));
+        hiframes::io::write_hfs(&p, t)?;
+        println!("{}: {} rows", p.display(), t.num_rows());
+    }
+    Ok(())
+}
+
+fn query(flags: &HashMap<String, String>, workers: usize) -> Result<()> {
+    let q = flags.get("q").context("query: need --q <05|25|26>")?;
+    let engine = flags.get("engine").map(|s| s.as_str()).unwrap_or("hiframes");
+    let db = db_for(flags);
+    let (rows, secs) = match (q.as_str(), engine) {
+        ("26", "hiframes") => {
+            let hf = HiFrames::with_workers(workers);
+            let p = q26::Q26Params::default();
+            time_it(|| {
+                q26::hiframes_relational(&hf, &db, &p)
+                    .collect()
+                    .unwrap()
+                    .num_rows()
+            })
+        }
+        ("26", "sparklike") => {
+            let eng = SparkLike::new(workers, workers * 2);
+            let p = q26::Q26Params::default();
+            time_it(|| {
+                eng.collect(&q26::sparklike_relational(&eng, &db, &p).unwrap())
+                    .unwrap()
+                    .num_rows()
+            })
+        }
+        ("25", "hiframes") => {
+            let hf = HiFrames::with_workers(workers);
+            time_it(|| q25::hiframes_relational(&hf, &db).collect().unwrap().num_rows())
+        }
+        ("25", "sparklike") => {
+            let eng = SparkLike::new(workers, workers * 2);
+            time_it(|| {
+                eng.collect(&q25::sparklike_relational(&eng, &db).unwrap())
+                    .unwrap()
+                    .num_rows()
+            })
+        }
+        ("05", "hiframes") => {
+            let hf = HiFrames::with_workers(workers);
+            time_it(|| q05::hiframes_relational(&hf, &db).collect().unwrap().num_rows())
+        }
+        ("05", "sparklike") => {
+            let eng = SparkLike::new(workers, workers * 2);
+            time_it(|| {
+                eng.collect(&q05::sparklike_relational(&eng, &db).unwrap())
+                    .unwrap()
+                    .num_rows()
+            })
+        }
+        (q, e) => bail!("unknown query/engine: {q}/{e}"),
+    };
+    println!("Q{q} on {engine}: {rows} rows in {:.1} ms ({workers} workers)", secs * 1e3);
+    Ok(())
+}
+
+fn show_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let q = flags.get("q").context("plan: need --q <05|25|26>")?;
+    let db = db_for(flags);
+    let hf = HiFrames::with_workers(2);
+    let plan = match q.as_str() {
+        "26" => q26::hiframes_relational(&hf, &db, &q26::Q26Params::default())
+            .plan()
+            .clone(),
+        "25" => q25::hiframes_relational(&hf, &db).plan().clone(),
+        "05" => q05::hiframes_relational(&hf, &db).plan().clone(),
+        other => bail!("unknown query {other}"),
+    };
+    if flags.contains_key("no-opt") {
+        println!("unoptimized plan:\n{plan}");
+    } else {
+        let opt = hiframes::passes::optimize(plan, &hiframes::passes::PassOptions::default())?;
+        println!("optimized plan:\n{opt}");
+    }
+    Ok(())
+}
+
+fn pipeline(flags: &HashMap<String, String>, workers: usize) -> Result<()> {
+    let db = db_for(flags);
+    let hf = HiFrames::with_workers(workers);
+    let use_pjrt =
+        flags.contains_key("pjrt") && hiframes::runtime::artifacts_available();
+    let p = q26::Q26Params::default();
+    let ((rel, cents), secs) = time_it(|| q26::hiframes_full(&hf, &db, &p, use_pjrt).unwrap());
+    println!(
+        "Q26 end-to-end ({}): {} customers -> {} centroids in {:.1} ms",
+        if use_pjrt { "pjrt" } else { "rust kernel" },
+        rel.num_rows(),
+        cents.num_rows(),
+        secs * 1e3
+    );
+    println!("{cents}");
+    Ok(())
+}
+
+fn micro(flags: &HashMap<String, String>, workers: usize) -> Result<()> {
+    let op = flags.get("op").context("micro: need --op")?;
+    let rows = flag_usize(flags, "rows", 1_000_000);
+    let hf = HiFrames::with_workers(workers);
+    let secs = match op.as_str() {
+        "filter" => {
+            let t = hiframes::datagen::micro_table(rows, 1000, 1);
+            let df = hf.table("t", t);
+            time_it(|| df.filter(col("x").lt(lit(0.5))).collect().unwrap()).1
+        }
+        "join" => {
+            let l = hiframes::datagen::micro_table(rows, rows as i64 / 2, 1);
+            let r = hiframes::datagen::micro_table(rows / 4, rows as i64 / 2, 2);
+            let rdf = hf.table("r", r).rename("id", "rid").select(&["rid"]);
+            let df = hf.table("l", l);
+            time_it(|| df.join(&rdf, "id", "rid").count().unwrap()).1
+        }
+        "aggregate" => {
+            let t = hiframes::datagen::micro_table(rows, 10_000, 1);
+            let df = hf.table("t", t);
+            time_it(|| {
+                df.aggregate(
+                    "id",
+                    vec![
+                        AggExpr::new("s", AggFn::Sum, col("x")),
+                        AggExpr::new("m", AggFn::Mean, col("y")),
+                    ],
+                )
+                .collect()
+                .unwrap()
+            })
+            .1
+        }
+        "cumsum" => {
+            let t = Table::from_pairs(vec![("x", hiframes::datagen::series(rows, 1))])?;
+            let df = hf.table("t", t);
+            time_it(|| df.cumsum("x", "cs").collect().unwrap()).1
+        }
+        "sma" => {
+            let t = Table::from_pairs(vec![("x", hiframes::datagen::series(rows, 1))])?;
+            let df = hf.table("t", t);
+            time_it(|| df.sma("x", "s", 3).collect().unwrap()).1
+        }
+        "wma" => {
+            let t = Table::from_pairs(vec![("x", hiframes::datagen::series(rows, 1))])?;
+            let df = hf.table("t", t);
+            time_it(|| df.wma("x", "w").collect().unwrap()).1
+        }
+        other => bail!("unknown op {other}"),
+    };
+    println!(
+        "{op} over {rows} rows on {workers} workers: {:.1} ms ({:.2} M rows/s)",
+        secs * 1e3,
+        hiframes::metrics::mrows_per_sec(rows, secs)
+    );
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("hiframes {} — HiFrames (2017) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("default workers: {}", hiframes::config::default_workers());
+    println!(
+        "artifacts: {}",
+        if hiframes::runtime::artifacts_available() {
+            "available"
+        } else {
+            "missing (run `make artifacts`)"
+        }
+    );
+    if hiframes::runtime::artifacts_available() {
+        let engine = hiframes::runtime::Engine::load_default()?;
+        let mut names = engine.entry_names();
+        names.sort();
+        for n in names {
+            let e = engine.entry(n)?;
+            println!("  entry {n}: {:?}", e.params);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(args: &[&str]) -> HashMap<String, String> {
+        parse_flags(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parse_flags_values_and_booleans() {
+        let f = flags(&["--sf", "2.5", "--pjrt", "--workers", "4"]);
+        assert_eq!(f.get("sf").map(|s| s.as_str()), Some("2.5"));
+        assert_eq!(f.get("pjrt").map(|s| s.as_str()), Some("true"));
+        assert_eq!(flag_usize(&f, "workers", 0), 4);
+        assert_eq!(flag_f64(&f, "sf", 0.0), 2.5);
+        assert_eq!(flag_usize(&f, "missing", 7), 7);
+    }
+
+    #[test]
+    fn parse_flags_trailing_boolean() {
+        let f = flags(&["--q", "26", "--no-opt"]);
+        assert_eq!(f.get("q").map(|s| s.as_str()), Some("26"));
+        assert!(f.contains_key("no-opt"));
+    }
+
+    #[test]
+    fn parse_flags_last_wins() {
+        let f = flags(&["--sf", "1", "--sf", "2"]);
+        assert_eq!(flag_f64(&f, "sf", 0.0), 2.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Timing and throughput instrumentation used by benches, examples and the
+//! EXPERIMENTS.md runs.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Measure `f`, returning `(result, seconds)`.
+pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_secs())
+}
+
+/// Run `f` `reps` times (after `warmup` unmeasured runs) and return summary
+/// statistics of the per-run seconds. This is our criterion stand-in.
+pub fn measure<R>(warmup: usize, reps: usize, mut f: impl FnMut() -> R) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        samples.push(t.elapsed_secs());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Summary statistics over per-run times (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let median = if samples.len() % 2 == 1 {
+            samples[samples.len() / 2]
+        } else {
+            0.5 * (samples[samples.len() / 2 - 1] + samples[samples.len() / 2])
+        };
+        Stats {
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            mean,
+            median,
+            stddev: var.sqrt(),
+            samples,
+        }
+    }
+
+    /// Render like `12.3ms ±0.4`.
+    pub fn display_ms(&self) -> String {
+        format!(
+            "{:9.3}ms ±{:.3}",
+            self.median * 1e3,
+            self.stddev * 1e3
+        )
+    }
+}
+
+/// Throughput in million rows per second.
+pub fn mrows_per_sec(rows: usize, secs: f64) -> f64 {
+    rows as f64 / secs / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn measure_collects_reps() {
+        let stats = measure(1, 5, || std::hint::black_box(1 + 1));
+        assert_eq!(stats.samples.len(), 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn throughput() {
+        assert_eq!(mrows_per_sec(2_000_000, 2.0), 1.0);
+    }
+}

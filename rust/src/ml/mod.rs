@@ -1,0 +1,526 @@
+//! ML drivers — the "call a library" tail of the paper's analytics
+//! pipelines (HPAT generates calls into DAAL/ScaLAPACK; we call our
+//! AOT-compiled JAX/Pallas artifacts through PJRT, or a pure-rust kernel).
+//!
+//! Two execution modes:
+//! * **distributed rust kernel** (default): each rank computes assignment
+//!   partials over its block; `allreduce` merges them — the HPAT-style
+//!   distributed ML path that scales with ranks.
+//! * **PJRT leader mode** (`use_pjrt`): features are gathered on the
+//!   leader, which drives the `kmeans_step` artifact (L2 JAX calling the
+//!   L1 Pallas distance kernel) and broadcasts the result. This is the
+//!   path that proves the three-layer AOT stack end-to-end.
+
+use crate::comm::{Comm, ReduceOp};
+use crate::ir::MlParams;
+use anyhow::{bail, Context, Result};
+
+/// Result of an [`crate::ir::Plan::MlCall`]: per-feature centroid columns
+/// (k rows each) plus cluster ids 0..k.
+#[derive(Debug, Clone)]
+pub struct MlResult {
+    pub centroids: Vec<Vec<f64>>,
+    pub cluster_ids: Vec<i64>,
+    pub inertia: f64,
+    pub iters_run: usize,
+}
+
+/// Entry point used by the executor.
+pub fn run_mlcall(comm: &Comm, features: &[Vec<f64>], params: &MlParams) -> Result<MlResult> {
+    match params.model.as_str() {
+        "kmeans" => {
+            if params.use_pjrt {
+                kmeans_pjrt_leader(comm, features, params.k, params.iters)
+            } else {
+                kmeans_distributed(comm, features, params.k, params.iters)
+            }
+        }
+        other => bail!("MlCall: unknown model {other}"),
+    }
+}
+
+// --------------------------------------------------------------------------
+// k-means
+// --------------------------------------------------------------------------
+
+/// Deterministic initialization: the first k global rows (gathered in rank
+/// order) — reproducible across worker counts.
+fn kmeans_init(comm: &Comm, features: &[Vec<f64>], k: usize) -> Result<Vec<Vec<f64>>> {
+    let d = features.len();
+    let n_local = features.first().map_or(0, |c| c.len());
+    // collective precondition check: every rank learns the global row count
+    // and bails *together*, keeping the collectives below aligned
+    let total = comm.allreduce_i64(n_local as i64, ReduceOp::Sum);
+    if (total as usize) < k {
+        bail!("kmeans: {total} rows total but k={k}");
+    }
+    let take = n_local.min(k);
+    let mut payload = Vec::with_capacity(take * d * 8);
+    for i in 0..take {
+        for c in features {
+            payload.extend_from_slice(&c[i].to_le_bytes());
+        }
+    }
+    let gathered = comm.gather_bytes(0, payload);
+    let mut init = Vec::new();
+    if comm.is_root() {
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for buf in gathered {
+            for row in buf.chunks_exact(d * 8) {
+                rows.push(
+                    row.chunks_exact(8)
+                        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                );
+            }
+        }
+        rows.truncate(k);
+        for row in rows {
+            for x in row {
+                init.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    let init = comm.bcast_bytes(0, init);
+    let flat: Vec<f64> = init
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    if flat.len() != k * d {
+        bail!("kmeans init: expected {} values, got {}", k * d, flat.len());
+    }
+    // column-major per feature: centroids[f][j]
+    let mut cents = vec![vec![0.0; k]; d];
+    for j in 0..k {
+        for (f, cf) in cents.iter_mut().enumerate() {
+            cf[j] = flat[j * d + f];
+        }
+    }
+    Ok(cents)
+}
+
+/// Assign each local row to its nearest centroid; accumulate per-cluster
+/// sums and counts (the partials the paper's generated code allreduces).
+fn assign_partials(
+    features: &[Vec<f64>],
+    centroids: &[Vec<f64>],
+    k: usize,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let d = features.len();
+    let n = features.first().map_or(0, |c| c.len());
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+    let mut inertia = 0.0f64;
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for j in 0..k {
+            let mut dist = 0.0;
+            for (f, col) in features.iter().enumerate() {
+                let diff = col[i] - centroids[f][j];
+                dist += diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = j;
+            }
+        }
+        inertia += best_d;
+        counts[best] += 1.0;
+        for (f, col) in features.iter().enumerate() {
+            sums[best * d + f] += col[i];
+        }
+    }
+    (sums, counts, inertia)
+}
+
+/// Distributed k-means over 1D-partitioned feature columns.
+pub fn kmeans_distributed(
+    comm: &Comm,
+    features: &[Vec<f64>],
+    k: usize,
+    iters: usize,
+) -> Result<MlResult> {
+    let d = features.len();
+    if d == 0 {
+        bail!("kmeans: no feature columns");
+    }
+    let mut centroids = kmeans_init(comm, features, k)?;
+    let mut inertia = f64::INFINITY;
+    let mut iters_run = 0;
+    for _ in 0..iters {
+        let (sums, counts, local_inertia) = assign_partials(features, &centroids, k);
+        // one allreduce for [sums | counts | inertia]
+        let mut partial = sums;
+        partial.extend_from_slice(&counts);
+        partial.push(local_inertia);
+        let total = comm.allreduce_f64_vec(&partial, ReduceOp::Sum);
+        let (sums, rest) = total.split_at(k * d);
+        let (counts, inertia_slice) = rest.split_at(k);
+        for j in 0..k {
+            if counts[j] > 0.0 {
+                for (f, cf) in centroids.iter_mut().enumerate() {
+                    cf[j] = sums[j * d + f] / counts[j];
+                }
+            }
+        }
+        let new_inertia = inertia_slice[0];
+        iters_run += 1;
+        if (inertia - new_inertia).abs() < 1e-12 * (1.0 + inertia.abs()) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    Ok(MlResult {
+        centroids,
+        cluster_ids: (0..k as i64).collect(),
+        inertia,
+        iters_run,
+    })
+}
+
+/// PJRT leader mode: gather → drive the `kmeans_step` artifact → broadcast.
+pub fn kmeans_pjrt_leader(
+    comm: &Comm,
+    features: &[Vec<f64>],
+    k: usize,
+    iters: usize,
+) -> Result<MlResult> {
+    let d = features.len();
+    let n_local = features.first().map_or(0, |c| c.len());
+    // gather row-major f64 blocks on the leader
+    let mut payload = Vec::with_capacity(n_local * d * 8);
+    for i in 0..n_local {
+        for c in features {
+            payload.extend_from_slice(&c[i].to_le_bytes());
+        }
+    }
+    let gathered = comm.gather_bytes(0, payload);
+
+    let mut result_payload = Vec::new();
+    let mut err: Option<String> = None;
+    if comm.is_root() {
+        match kmeans_pjrt_on_rows(&gathered, d, k, iters) {
+            Ok((cents_flat, inertia, iters_run)) => {
+                result_payload.extend_from_slice(&inertia.to_le_bytes());
+                result_payload.extend_from_slice(&(iters_run as u64).to_le_bytes());
+                for x in cents_flat {
+                    result_payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Err(e) => err = Some(format!("{e:#}")),
+        }
+    }
+    // propagate success/failure consistently to all ranks
+    let status = comm.bcast_bytes(0, if err.is_some() { vec![1] } else { vec![0] });
+    if status[0] == 1 {
+        let msg = comm.bcast_bytes(
+            0,
+            err.map(|s| s.into_bytes()).unwrap_or_default(),
+        );
+        bail!("kmeans pjrt: {}", String::from_utf8_lossy(&msg));
+    }
+    let result_payload = comm.bcast_bytes(0, result_payload);
+    let inertia = f64::from_le_bytes(result_payload[0..8].try_into().unwrap());
+    let iters_run = u64::from_le_bytes(result_payload[8..16].try_into().unwrap()) as usize;
+    let flat: Vec<f64> = result_payload[16..]
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let mut centroids = vec![vec![0.0; k]; d];
+    for j in 0..k {
+        for (f, cf) in centroids.iter_mut().enumerate() {
+            cf[j] = flat[j * d + f];
+        }
+    }
+    Ok(MlResult {
+        centroids,
+        cluster_ids: (0..k as i64).collect(),
+        inertia,
+        iters_run,
+    })
+}
+
+/// Leader-side PJRT k-means loop over gathered row-major blocks.
+fn kmeans_pjrt_on_rows(
+    gathered: &[Vec<u8>],
+    d: usize,
+    k: usize,
+    iters: usize,
+) -> Result<(Vec<f64>, f64, usize)> {
+    let engine = crate::runtime::Engine::load_default()
+        .context("loading artifacts (run `make artifacts`)")?;
+    let entry = engine.entry("kmeans_step")?;
+    let (cap_n, art_d, art_k) = (
+        entry.param("n")?,
+        entry.param("d")?,
+        entry.param("k")?,
+    );
+    if art_d != d || art_k != k {
+        bail!(
+            "kmeans artifact compiled for d={art_d}, k={art_k}; query needs d={d}, k={k} \
+             (re-run `make artifacts` with matching dims)"
+        );
+    }
+    let rows: Vec<f32> = gathered
+        .iter()
+        .flat_map(|b| {
+            b.chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+        })
+        .collect();
+    let n = rows.len() / d;
+    if n < k {
+        bail!("kmeans: {n} rows but k={k}");
+    }
+    if n > cap_n {
+        bail!("kmeans artifact capacity n={cap_n} exceeded ({n} rows); re-run aot with larger n");
+    }
+    // pad to artifact capacity with masked rows
+    let mut points = rows;
+    points.resize(cap_n * d, 0.0);
+    let mut mask = vec![1.0f32; n];
+    mask.resize(cap_n, 0.0);
+    // init: first k rows
+    let mut centroids: Vec<f32> = points[..k * d].to_vec();
+    let mut inertia = f64::INFINITY;
+    let mut iters_run = 0;
+    for _ in 0..iters {
+        let (sums, counts, step_inertia) = engine.kmeans_step(&points, &mask, &centroids)?;
+        for j in 0..k {
+            if counts[j] > 0.0 {
+                for f in 0..d {
+                    centroids[j * d + f] = sums[j * d + f] / counts[j];
+                }
+            }
+        }
+        iters_run += 1;
+        let ni = step_inertia as f64;
+        if (inertia - ni).abs() < 1e-7 * (1.0 + inertia.abs()) {
+            inertia = ni;
+            break;
+        }
+        inertia = ni;
+    }
+    Ok((
+        centroids.iter().map(|&x| x as f64).collect(),
+        inertia,
+        iters_run,
+    ))
+}
+
+// --------------------------------------------------------------------------
+// logistic regression (TPCx-BB Q05's model step)
+// --------------------------------------------------------------------------
+
+/// Result of logistic-regression training.
+#[derive(Debug, Clone)]
+pub struct LogRegResult {
+    /// weights[d] + bias at the end.
+    pub weights: Vec<f64>,
+    pub loss: f64,
+    pub iters_run: usize,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Local gradient/loss partials for binary logistic regression.
+fn logreg_partials(
+    features: &[Vec<f64>],
+    labels: &[f64],
+    weights: &[f64],
+) -> (Vec<f64>, f64) {
+    let d = features.len();
+    let n = labels.len();
+    let mut grad = vec![0.0; d + 1];
+    let mut loss = 0.0;
+    for i in 0..n {
+        let mut z = weights[d]; // bias
+        for (f, col) in features.iter().enumerate() {
+            z += weights[f] * col[i];
+        }
+        let p = sigmoid(z);
+        let err = p - labels[i];
+        for (f, col) in features.iter().enumerate() {
+            grad[f] += err * col[i];
+        }
+        grad[d] += err;
+        let p_clamped = p.clamp(1e-12, 1.0 - 1e-12);
+        loss -= labels[i] * p_clamped.ln() + (1.0 - labels[i]) * (1.0 - p_clamped).ln();
+    }
+    (grad, loss)
+}
+
+/// Distributed batch gradient descent.
+pub fn logreg_distributed(
+    comm: &Comm,
+    features: &[Vec<f64>],
+    labels: &[f64],
+    iters: usize,
+    lr: f64,
+) -> Result<LogRegResult> {
+    let d = features.len();
+    let n_total = comm.allreduce_i64(labels.len() as i64, ReduceOp::Sum) as f64;
+    if n_total == 0.0 {
+        bail!("logreg: no rows");
+    }
+    let mut weights = vec![0.0; d + 1];
+    let mut loss = f64::INFINITY;
+    let mut iters_run = 0;
+    for _ in 0..iters {
+        let (grad, local_loss) = logreg_partials(features, labels, &weights);
+        let mut partial = grad;
+        partial.push(local_loss);
+        let total = comm.allreduce_f64_vec(&partial, ReduceOp::Sum);
+        let (grad, loss_slice) = total.split_at(d + 1);
+        for (w, g) in weights.iter_mut().zip(grad) {
+            *w -= lr * g / n_total;
+        }
+        loss = loss_slice[0] / n_total;
+        iters_run += 1;
+    }
+    Ok(LogRegResult {
+        weights,
+        loss,
+        iters_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{block_range, run_spmd};
+    use crate::datagen::Rng;
+
+    /// Two well-separated blobs in 2-D.
+    fn blobs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let (cx, cy) = if i % 2 == 0 { (0.0, 0.0) } else { (10.0, 10.0) };
+            xs.push(cx + rng.normal() * 0.5);
+            ys.push(cy + rng.normal() * 0.5);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let (xs, ys) = blobs(200, 1);
+        for p in [1usize, 3] {
+            let out = run_spmd(p, |c| {
+                let (s, l) = block_range(xs.len(), p, c.rank());
+                let feats = vec![xs[s..s + l].to_vec(), ys[s..s + l].to_vec()];
+                kmeans_distributed(&c, &feats, 2, 20).unwrap()
+            });
+            let r = &out[0];
+            // all ranks agree (replicated output)
+            for other in &out[1..] {
+                assert_eq!(other.centroids, r.centroids);
+            }
+            // centroids near (0,0) and (10,10) in some order
+            let mut cs: Vec<(f64, f64)> = (0..2)
+                .map(|j| (r.centroids[0][j], r.centroids[1][j]))
+                .collect();
+            cs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            assert!(cs[0].0.abs() < 1.0 && cs[0].1.abs() < 1.0, "{cs:?}");
+            assert!((cs[1].0 - 10.0).abs() < 1.0 && (cs[1].1 - 10.0).abs() < 1.0);
+            assert!(r.inertia < 200.0);
+        }
+    }
+
+    #[test]
+    fn kmeans_deterministic_across_worker_counts() {
+        let (xs, ys) = blobs(120, 7);
+        let mut results = Vec::new();
+        for p in [1usize, 2, 4] {
+            let out = run_spmd(p, |c| {
+                let (s, l) = block_range(xs.len(), p, c.rank());
+                let feats = vec![xs[s..s + l].to_vec(), ys[s..s + l].to_vec()];
+                kmeans_distributed(&c, &feats, 2, 10).unwrap()
+            });
+            results.push(out[0].clone());
+        }
+        for r in &results[1..] {
+            for (a, b) in r.centroids.iter().flatten().zip(results[0].centroids.iter().flatten()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_k_larger_than_rows_errors() {
+        let out = run_spmd(2, |c| {
+            let feats = vec![vec![c.rank() as f64]];
+            kmeans_distributed(&c, &feats, 5, 3).map(|_| ()).is_err()
+        });
+        assert!(out.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn logreg_learns_separator() {
+        // y = 1 iff x0 + x1 > 10
+        let (xs, ys_feat) = blobs(300, 3);
+        let labels: Vec<f64> = xs
+            .iter()
+            .zip(&ys_feat)
+            .map(|(a, b)| ((a + b) > 10.0) as i64 as f64)
+            .collect();
+        let out = run_spmd(3, |c| {
+            let (s, l) = block_range(xs.len(), 3, c.rank());
+            let feats = vec![xs[s..s + l].to_vec(), ys_feat[s..s + l].to_vec()];
+            logreg_distributed(&c, &feats, &labels[s..s + l], 200, 0.5).unwrap()
+        });
+        let r = &out[0];
+        assert!(r.loss < 0.2, "loss {}", r.loss);
+        // replicated across ranks
+        for o in &out[1..] {
+            for (a, b) in o.weights.iter().zip(&r.weights) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+        // check classification accuracy on the training data
+        let mut correct = 0;
+        for i in 0..xs.len() {
+            let z = r.weights[0] * xs[i] + r.weights[1] * ys_feat[i] + r.weights[2];
+            if ((z > 0.0) as i64 as f64 - labels[i]).abs() < 0.5 {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / xs.len() as f64 > 0.95);
+    }
+
+    #[test]
+    fn mlcall_dispatch() {
+        let out = run_spmd(1, |c| {
+            let feats = vec![vec![0.0, 0.1, 10.0, 10.1]];
+            let params = MlParams {
+                model: "kmeans".into(),
+                k: 2,
+                iters: 5,
+                use_pjrt: false,
+            };
+            run_mlcall(&c, &feats, &params).unwrap().centroids
+        });
+        assert_eq!(out[0].len(), 1);
+        assert_eq!(out[0][0].len(), 2);
+        let bad = run_spmd(1, |c| {
+            run_mlcall(
+                &c,
+                &[vec![1.0]],
+                &MlParams {
+                    model: "nope".into(),
+                    k: 1,
+                    iters: 1,
+                    use_pjrt: false,
+                },
+            )
+            .is_err()
+        });
+        assert!(bad[0]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Distributed aggregation (paper §4.5): shuffle rows so equal keys meet on
+//! their owner rank, then hash-table aggregation (the paper's
+//! `agg1_table[key]` loop in Fig. 5).
+//!
+//! Two strategies, ablated in `benches/ablations.rs`:
+//! * **raw shuffle** — ship `(key, expr values)` rows, aggregate after.
+//!   This is exactly the paper's codegen.
+//! * **local pre-aggregation** — fold rows into decomposed partial states
+//!   ([`AggState`]) per key *before* the shuffle, ship states, merge after.
+//!   A classic combiner; wins when keys repeat within ranks (§Perf).
+
+use super::shuffle::{owner_of, shuffle_by_key};
+use crate::column::Column;
+use crate::comm::Comm;
+use crate::expr::{AggFn, AggState};
+use crate::types::DType;
+use anyhow::Result;
+use crate::fxhash::FxHashMap;
+
+/// Which aggregation strategy to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggStrategy {
+    RawShuffle,
+    PreAggregate,
+}
+
+/// One reduction spec: function + dtype of its (already evaluated)
+/// expression column.
+#[derive(Debug, Clone, Copy)]
+pub struct AggSpec {
+    pub func: AggFn,
+    pub input_dtype: DType,
+}
+
+/// Aggregate `expr_cols[i]` under `specs[i]` grouped by `keys`, distributed
+/// over `comm`. Returns the local shard of the result: unique keys owned by
+/// this rank plus one value column per spec. Output distribution: `1D_VAR`.
+pub fn distributed_aggregate(
+    comm: &Comm,
+    keys: &[i64],
+    expr_cols: &[Column],
+    specs: &[AggSpec],
+    strategy: AggStrategy,
+) -> Result<(Vec<i64>, Vec<Column>)> {
+    assert_eq!(expr_cols.len(), specs.len());
+    match strategy {
+        AggStrategy::RawShuffle => {
+            let (k, cols) = shuffle_by_key(comm, keys, expr_cols)?;
+            Ok(local_hash_aggregate(&k, &cols, specs))
+        }
+        AggStrategy::PreAggregate => {
+            // fold locally into partial states per key
+            let mut table: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
+            for (i, &k) in keys.iter().enumerate() {
+                let states = table
+                    .entry(k)
+                    .or_insert_with(|| new_states(specs));
+                for (s, c) in states.iter_mut().zip(expr_cols) {
+                    s.update_col(c, i);
+                }
+            }
+            // serialize per destination: [key, state0, state1, …] records
+            let p = comm.nranks();
+            let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+            for (k, states) in &table {
+                let buf = &mut bufs[owner_of(*k, p)];
+                buf.extend_from_slice(&k.to_le_bytes());
+                for s in states {
+                    s.encode(buf);
+                }
+            }
+            let received = comm.alltoallv_bytes(bufs);
+            // merge incoming partials
+            let mut merged: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
+            for buf in received {
+                let mut pos = 0;
+                while pos < buf.len() {
+                    let mut kb = [0u8; 8];
+                    kb.copy_from_slice(&buf[pos..pos + 8]);
+                    pos += 8;
+                    let k = i64::from_le_bytes(kb);
+                    let incoming: Vec<AggState> = specs
+                        .iter()
+                        .map(|sp| AggState::decode(sp.func, sp.input_dtype, &buf, &mut pos))
+                        .collect();
+                    match merged.entry(k) {
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            for (a, b) in e.get_mut().iter_mut().zip(&incoming) {
+                                a.merge(b);
+                            }
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(incoming);
+                        }
+                    }
+                }
+            }
+            Ok(finish_table(merged, specs))
+        }
+    }
+}
+
+/// Purely local hash aggregation (also the post-shuffle half and the serial
+/// baseline's implementation).
+pub fn local_hash_aggregate(
+    keys: &[i64],
+    expr_cols: &[Column],
+    specs: &[AggSpec],
+) -> (Vec<i64>, Vec<Column>) {
+    let mut table: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
+    for (i, &k) in keys.iter().enumerate() {
+        let states = table.entry(k).or_insert_with(|| new_states(specs));
+        for (s, c) in states.iter_mut().zip(expr_cols) {
+            s.update_col(c, i);
+        }
+    }
+    finish_table(table, specs)
+}
+
+fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
+    specs
+        .iter()
+        .map(|sp| AggState::new(sp.func, sp.input_dtype))
+        .collect()
+}
+
+fn finish_table(
+    table: FxHashMap<i64, Vec<AggState>>,
+    specs: &[AggSpec],
+) -> (Vec<i64>, Vec<Column>) {
+    // deterministic output order (sorted keys) so runs are reproducible
+    let mut keys: Vec<i64> = table.keys().copied().collect();
+    keys.sort_unstable();
+    let mut outs: Vec<Column> = specs
+        .iter()
+        .map(|sp| {
+            Column::new_empty(match (sp.func, sp.input_dtype) {
+                (AggFn::Count | AggFn::CountDistinct, _) => DType::I64,
+                (AggFn::Mean | AggFn::Var, _) => DType::F64,
+                (AggFn::Sum | AggFn::Min | AggFn::Max, DType::I64 | DType::Bool) => DType::I64,
+                (AggFn::Sum | AggFn::Min | AggFn::Max, _) => DType::F64,
+                (AggFn::First, dt) => dt,
+            })
+        })
+        .collect();
+    for k in &keys {
+        for (out, state) in outs.iter_mut().zip(&table[k]) {
+            out.push(&state.finish());
+        }
+    }
+    (keys, outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_spmd;
+
+    fn specs() -> Vec<AggSpec> {
+        vec![
+            AggSpec {
+                func: AggFn::Sum,
+                input_dtype: DType::F64,
+            },
+            AggSpec {
+                func: AggFn::Count,
+                input_dtype: DType::F64,
+            },
+            AggSpec {
+                func: AggFn::Mean,
+                input_dtype: DType::F64,
+            },
+        ]
+    }
+
+    #[test]
+    fn local_agg_basics() {
+        let keys = vec![1i64, 2, 1, 2, 1];
+        let vals = Column::F64(vec![1.0, 10.0, 2.0, 20.0, 3.0]);
+        let (k, outs) =
+            local_hash_aggregate(&keys, &[vals.clone(), vals.clone(), vals], &specs());
+        assert_eq!(k, vec![1, 2]);
+        assert_eq!(outs[0].as_f64(), &[6.0, 30.0]);
+        assert_eq!(outs[1].as_i64(), &[3, 2]);
+        assert_eq!(outs[2].as_f64(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn distributed_strategies_agree() {
+        for strategy in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            let out = run_spmd(3, |c| {
+                // every rank holds keys (rank..rank+6) % 4 with value = key
+                let keys: Vec<i64> = (0..6).map(|i| ((c.rank() + i) % 4) as i64).collect();
+                let vals = Column::F64(keys.iter().map(|&k| k as f64).collect());
+                let (k, outs) = distributed_aggregate(
+                    &c,
+                    &keys,
+                    &[vals.clone(), vals.clone(), vals],
+                    &specs(),
+                    strategy,
+                )
+                .unwrap();
+                (k, outs[0].as_f64().to_vec(), outs[1].as_i64().to_vec())
+            });
+            // collect global result
+            let mut rows: Vec<(i64, f64, i64)> = out
+                .iter()
+                .flat_map(|(k, s, n)| {
+                    k.iter()
+                        .zip(s.iter())
+                        .zip(n.iter())
+                        .map(|((&k, &s), &n)| (k, s, n))
+                })
+                .collect();
+            rows.sort_by_key(|r| r.0);
+            // serial oracle over the same global data
+            let mut all_keys = Vec::new();
+            for r in 0..3usize {
+                for i in 0..6usize {
+                    all_keys.push(((r + i) % 4) as i64);
+                }
+            }
+            let mut expect: std::collections::BTreeMap<i64, (f64, i64)> = Default::default();
+            for &k in &all_keys {
+                let e = expect.entry(k).or_insert((0.0, 0));
+                e.0 += k as f64;
+                e.1 += 1;
+            }
+            let expect: Vec<(i64, f64, i64)> =
+                expect.into_iter().map(|(k, (s, n))| (k, s, n)).collect();
+            assert_eq!(rows, expect, "strategy {strategy:?}");
+            // each key lives on exactly one rank
+            let mut owners = std::collections::HashSet::new();
+            for (k, _, _) in &rows {
+                assert!(owners.insert(*k), "key {k} appears on two ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn count_distinct_distributed() {
+        let spec = vec![AggSpec {
+            func: AggFn::CountDistinct,
+            input_dtype: DType::I64,
+        }];
+        for strategy in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            let out = run_spmd(2, |c| {
+                // key 0 sees values {rank, rank, 7} → distinct {0,1,7} globally
+                let keys = vec![0i64, 0, 0];
+                let vals = Column::I64(vec![c.rank() as i64, c.rank() as i64, 7]);
+                let (k, outs) =
+                    distributed_aggregate(&c, &keys, &[vals], &spec, strategy).unwrap();
+                (k, outs[0].as_i64().to_vec())
+            });
+            let all: Vec<(i64, i64)> = out
+                .iter()
+                .flat_map(|(k, v)| k.iter().zip(v.iter()).map(|(&k, &v)| (k, v)))
+                .collect();
+            assert_eq!(all, vec![(0, 3)], "strategy {strategy:?}");
+        }
+    }
+
+    #[test]
+    fn min_max_int_preserved() {
+        let spec = vec![
+            AggSpec {
+                func: AggFn::Min,
+                input_dtype: DType::I64,
+            },
+            AggSpec {
+                func: AggFn::Max,
+                input_dtype: DType::I64,
+            },
+        ];
+        let keys = vec![5i64, 5, 5];
+        let vals = Column::I64(vec![3, -2, 9]);
+        let (k, outs) = local_hash_aggregate(&keys, &[vals.clone(), vals], &spec);
+        assert_eq!(k, vec![5]);
+        assert_eq!(outs[0].as_i64(), &[-2]);
+        assert_eq!(outs[1].as_i64(), &[9]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let (k, outs) = local_hash_aggregate(&[], &[Column::F64(vec![])], &specs()[..1]);
+        assert!(k.is_empty());
+        assert_eq!(outs[0].len(), 0);
+    }
+}

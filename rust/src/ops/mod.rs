@@ -1,0 +1,31 @@
+//! Distributed relational & analytics operators — the runtime the paper's
+//! CGen emits (§4.5), one module per communication pattern:
+//!
+//! * [`shuffle`] — hash-partition + `alltoallv` (join/aggregate prologue;
+//!   the paper's Fig. 5 `_df_id[i] % npes` packing loop).
+//! * [`join`] — post-shuffle sort-merge join (Timsort-family stable sort,
+//!   matching the paper's choice).
+//! * [`aggregate`] — post-shuffle hash aggregation, with optional local
+//!   pre-aggregation (decomposed partial states).
+//! * [`scan`] — cumulative sum via local partials + `exscan`.
+//! * [`stencil`] — SMA/WMA windows via near-neighbor halo exchange.
+//! * [`rebalance`] — `1D_VAR` → `1D_BLOCK` redistribution preserving global
+//!   row order.
+//! * [`sort`] — sample-sort global ordering (result canonicalization,
+//!   TPCx-BB top-N steps).
+
+pub mod aggregate;
+pub mod join;
+pub mod rebalance;
+pub mod scan;
+pub mod shuffle;
+pub mod sort;
+pub mod stencil;
+
+pub use aggregate::distributed_aggregate;
+pub use join::{local_sort_merge_join, distributed_join};
+pub use rebalance::rebalance_block;
+pub use scan::{cumsum_f64, cumsum_i64};
+pub use shuffle::shuffle_by_key;
+pub use sort::distributed_sort_by_key;
+pub use stencil::{stencil_1d, stencil_serial};

@@ -1,0 +1,117 @@
+//! Rebalance: convert a `1D_VAR` frame (variable-length contiguous chunks)
+//! to `1D_BLOCK` (equal chunks) *preserving global row order* — the
+//! collective the Distributed-Pass inserts "only when necessary" (§4.4).
+
+use crate::column::{decode_column, encode_column, Column};
+use crate::comm::{block_range, Comm};
+use anyhow::Result;
+
+/// Redistribute `cols` (this rank's contiguous chunk of a globally ordered
+/// frame) into 1D_BLOCK. Returns the new local chunk.
+pub fn rebalance_block(comm: &Comm, cols: &[Column]) -> Result<Vec<Column>> {
+    let p = comm.nranks();
+    let local_len = cols.first().map_or(0, |c| c.len());
+
+    // establish global offsets: allgather chunk lengths
+    let lens: Vec<u64> = comm
+        .allgather_bytes((local_len as u64).to_le_bytes().to_vec())
+        .iter()
+        .map(|b| u64::from_le_bytes(b.as_slice().try_into().unwrap()))
+        .collect();
+    let total: usize = lens.iter().map(|&l| l as usize).sum();
+    let my_start: usize = lens[..comm.rank()].iter().map(|&l| l as usize).sum();
+
+    // ship each row range to the rank whose 1D_BLOCK target covers it
+    let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    for (dst, buf) in bufs.iter_mut().enumerate() {
+        let (tstart, tlen) = block_range(total, p, dst);
+        let tend = tstart + tlen;
+        // intersect [my_start, my_start+local_len) with [tstart, tend)
+        let lo = my_start.max(tstart);
+        let hi = (my_start + local_len).min(tend);
+        if lo < hi {
+            for c in cols {
+                encode_column(&c.slice(lo - my_start, hi - lo), buf);
+            }
+        } else {
+            // explicit empty marker: zero columns — receiver detects by len
+        }
+        let _ = dst;
+    }
+    let received = comm.alltoallv_bytes(bufs);
+
+    let mut out: Vec<Column> = cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    for buf in received {
+        if buf.is_empty() {
+            continue;
+        }
+        let mut pos = 0;
+        for oc in out.iter_mut() {
+            let c = decode_column(&buf, &mut pos)?;
+            oc.extend(&c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_spmd;
+
+    #[test]
+    fn rebalances_to_blocks_preserving_order() {
+        // rank r holds r+1 rows with globally increasing values
+        let out = run_spmd(4, |c| {
+            let start: i64 = (0..c.rank() as i64).map(|r| r + 1).sum();
+            let vals: Vec<i64> = (0..=c.rank() as i64).map(|i| start + i).collect();
+            let cols = vec![Column::I64(vals)];
+            let out = rebalance_block(&c, &cols).unwrap();
+            out[0].as_i64().to_vec()
+        });
+        // total = 1+2+3+4 = 10 rows → chunks of ceil(10/4)=3: 3,3,3,1
+        assert_eq!(out[0], vec![0, 1, 2]);
+        assert_eq!(out[1], vec![3, 4, 5]);
+        assert_eq!(out[2], vec![6, 7, 8]);
+        assert_eq!(out[3], vec![9]);
+    }
+
+    #[test]
+    fn already_balanced_is_stable() {
+        let out = run_spmd(2, |c| {
+            let vals: Vec<i64> = (0..3).map(|i| c.rank() as i64 * 3 + i).collect();
+            let cols = vec![Column::I64(vals.clone())];
+            let out = rebalance_block(&c, &cols).unwrap();
+            out[0].as_i64().to_vec()
+        });
+        assert_eq!(out[0], vec![0, 1, 2]);
+        assert_eq!(out[1], vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn extreme_skew_all_on_one_rank() {
+        let out = run_spmd(3, |c| {
+            let vals: Vec<i64> = if c.rank() == 2 { (0..9).collect() } else { vec![] };
+            let cols = vec![
+                Column::I64(vals.clone()),
+                Column::Str(vals.iter().map(|v| format!("s{v}")).collect()),
+            ];
+            let out = rebalance_block(&c, &cols).unwrap();
+            (out[0].as_i64().to_vec(), out[1].len())
+        });
+        assert_eq!(out[0].0, vec![0, 1, 2]);
+        assert_eq!(out[1].0, vec![3, 4, 5]);
+        assert_eq!(out[2].0, vec![6, 7, 8]);
+        assert!(out.iter().all(|(k, sl)| k.len() == *sl));
+    }
+
+    #[test]
+    fn empty_global_frame() {
+        let out = run_spmd(2, |c| {
+            let cols = vec![Column::F64(vec![])];
+            let out = rebalance_block(&c, &cols).unwrap();
+            out[0].len()
+        });
+        assert_eq!(out, vec![0, 0]);
+    }
+}

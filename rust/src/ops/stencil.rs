@@ -1,0 +1,204 @@
+//! 1-D stencils — SMA and WMA (paper §3.1, Table 1; §4.5: "stencils of
+//! HiFrames generate near neighbor communication and the associated border
+//! handling").
+//!
+//! Window semantics (shared by the serial oracle, the SPMD kernel, the
+//! baseline engines, `ref.py` and the Pallas kernel): radius `r =
+//! weights.len()/2`; interior points get `Σ w[j]·x[i+j-r]`; points within
+//! `r` of a *global* edge use the truncated window, renormalized by the
+//! weight mass actually used:
+//!
+//! ```text
+//!   out[i] = (Σ_valid w·x) · (Σ_all w) / (Σ_valid w)
+//! ```
+
+use crate::comm::Comm;
+
+/// Serial oracle (also the Pandas/Julia baseline implementation).
+pub fn stencil_serial(xs: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert!(weights.len() % 2 == 1, "stencil: odd window only");
+    let r = weights.len() / 2;
+    let wtotal: f64 = weights.iter().sum();
+    let n = xs.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut acc = 0.0;
+        let mut used = 0.0;
+        for (j, &w) in weights.iter().enumerate() {
+            let idx = i as isize + j as isize - r as isize;
+            if idx >= 0 && (idx as usize) < n {
+                acc += w * xs[idx as usize];
+                used += w;
+            }
+        }
+        out.push(if used != 0.0 { acc * wtotal / used } else { 0.0 });
+    }
+    out
+}
+
+/// Distributed stencil over this rank's contiguous block. Halo cells are
+/// exchanged with near neighbors (the paper's `MPI_Isend/Irecv/Wait`
+/// pattern). Requires `1D_BLOCK` input — the Distributed-Pass inserts a
+/// rebalance upstream when needed; tiny blocks (< radius) trigger a gather
+/// fallback that keeps the semantics exact.
+pub fn stencil_1d(comm: &Comm, local: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert!(weights.len() % 2 == 1, "stencil: odd window only");
+    let r = weights.len() / 2;
+    if comm.nranks() == 1 || r == 0 {
+        return stencil_serial(local, weights);
+    }
+
+    // blocks smaller than the radius cannot satisfy a 1-hop halo; fall back
+    // to gather-on-root (correctness first; never hit after rebalance on
+    // realistic sizes)
+    let min_len = comm.allreduce_i64(local.len() as i64, crate::comm::ReduceOp::Min);
+    if (min_len as usize) < r {
+        return stencil_gather_fallback(comm, local, weights);
+    }
+
+    // exchange r boundary elements with each neighbor
+    let to_prev: Vec<u8> = pack(&local[..r.min(local.len())]);
+    let to_next: Vec<u8> = pack(&local[local.len().saturating_sub(r)..]);
+    let (from_prev, from_next) = comm.halo_exchange(to_prev, to_next);
+    let left: Vec<f64> = from_prev.map(|b| unpack(&b)).unwrap_or_default();
+    let right: Vec<f64> = from_next.map(|b| unpack(&b)).unwrap_or_default();
+
+    // padded := [left halo | local | right halo]
+    let mut padded = Vec::with_capacity(left.len() + local.len() + right.len());
+    padded.extend_from_slice(&left);
+    padded.extend_from_slice(local);
+    padded.extend_from_slice(&right);
+
+    let wtotal: f64 = weights.iter().sum();
+    let n = padded.len();
+    let off = left.len();
+    let mut out = Vec::with_capacity(local.len());
+    for i in 0..local.len() {
+        let pi = i + off;
+        let mut acc = 0.0;
+        let mut used = 0.0;
+        for (j, &w) in weights.iter().enumerate() {
+            let idx = pi as isize + j as isize - r as isize;
+            // idx out of `padded` ⇔ out of the *global* array because the
+            // halo is exactly r wide on every interior boundary
+            if idx >= 0 && (idx as usize) < n {
+                acc += w * padded[idx as usize];
+                used += w;
+            }
+        }
+        out.push(if used != 0.0 { acc * wtotal / used } else { 0.0 });
+    }
+    out
+}
+
+fn stencil_gather_fallback(comm: &Comm, local: &[f64], weights: &[f64]) -> Vec<f64> {
+    let gathered = comm.gather_bytes(0, pack(local));
+    let full: Vec<f64> = if comm.is_root() {
+        let all: Vec<f64> = gathered.iter().flat_map(|b| unpack(b)).collect();
+        stencil_serial(&all, weights)
+    } else {
+        Vec::new()
+    };
+    // scatter results back by broadcasting and slicing (simple + correct)
+    let full = comm.bcast_bytes(0, pack(&full));
+    let full = unpack(&full);
+    // my global offset = exscan of my local length
+    let off = comm.exscan_i64(local.len() as i64, crate::comm::ReduceOp::Sum) as usize;
+    full[off..off + local.len()].to_vec()
+}
+
+fn pack(xs: &[f64]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+fn unpack(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// The SMA window of width `w` (equal weights summing to 1).
+pub fn sma_weights(w: usize) -> Vec<f64> {
+    assert!(w % 2 == 1);
+    vec![1.0 / w as f64; w]
+}
+
+/// The paper's WMA example: `(x[-1] + 2x[0] + x[1]) / 4`.
+pub fn wma_weights_124() -> Vec<f64> {
+    vec![0.25, 0.5, 0.25]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{block_range, run_spmd};
+
+    #[test]
+    fn serial_interior_matches_formula() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let out = stencil_serial(&xs, &sma_weights(3));
+        // interior: plain moving average
+        assert!((out[1] - 2.0).abs() < 1e-12);
+        assert!((out[2] - 3.0).abs() < 1e-12);
+        // edges: truncated + renormalized → mean of available neighbors
+        assert!((out[0] - 1.5).abs() < 1e-12);
+        assert!((out[4] - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_wma_paper_example() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let out = stencil_serial(&xs, &wma_weights_124());
+        // interior i=1: (1 + 2*2 + 3)/4 = 2
+        assert!((out[1] - 2.0).abs() < 1e-12);
+        assert!((out[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distributed_matches_serial() {
+        let xs: Vec<f64> = (0..41).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        for weights in [sma_weights(3), wma_weights_124(), sma_weights(5)] {
+            let expect = stencil_serial(&xs, &weights);
+            for p in [1usize, 2, 4] {
+                let out = run_spmd(p, |c| {
+                    let (s, l) = block_range(xs.len(), p, c.rank());
+                    stencil_1d(&c, &xs[s..s + l], &weights)
+                });
+                let got: Vec<f64> = out.into_iter().flatten().collect();
+                assert_eq!(got.len(), expect.len());
+                for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                    assert!(
+                        (g - e).abs() < 1e-9,
+                        "w={weights:?} p={p} i={i}: {g} vs {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_blocks_fallback() {
+        // 5 elements on 4 ranks with radius 2 → some blocks < r, fallback path
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let weights = sma_weights(5);
+        let expect = stencil_serial(&xs, &weights);
+        let out = run_spmd(4, |c| {
+            let (s, l) = block_range(xs.len(), 4, c.rank());
+            stencil_1d(&c, &xs[s..s + l], &weights)
+        });
+        let got: Vec<f64> = out.into_iter().flatten().collect();
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn width_one_is_identity() {
+        let xs = vec![3.0, 1.0, 4.0];
+        assert_eq!(stencil_serial(&xs, &[1.0]), xs);
+    }
+}

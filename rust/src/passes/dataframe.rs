@@ -1,0 +1,621 @@
+//! DataFrame-Pass (paper §4.3): relational optimizations over the general
+//! program IR.
+//!
+//! The paper builds a query tree of *only* the relational nodes, checks
+//! rewrite rules, and validates each candidate against the whole program
+//! with liveness analysis (array code may use a column between two
+//! relational operators). In our tree IR the intervening non-relational
+//! nodes are explicit ([`Plan::WithColumn`], [`Plan::Rename`], …), so the
+//! liveness check becomes a syntactic guard: a predicate may move past a
+//! node only if the columns it reads are untouched by that node.
+//!
+//! Implemented rewrites:
+//! * **push predicate through join** — the paper's flagship rule (Fig. 6).
+//! * **push predicate through with-column / rename / project** — the
+//!   "liveness" plumbing that lets predicates travel past array code.
+//! * **column pruning** — dead-column elimination with whole-program
+//!   knowledge ("ParallelAccelerator dead code elimination will remove
+//!   unused columns … while Spark SQL performs column pruning only within
+//!   the SQL context").
+
+use super::domain::map_plan;
+use crate::ir::Plan;
+use anyhow::Result;
+use std::collections::BTreeSet;
+
+/// Apply predicate pushdown rules to fixpoint (bounded by plan size).
+pub fn pushdown_predicates(plan: Plan) -> Plan {
+    let mut p = plan;
+    // each successful rewrite strictly moves a Filter toward the leaves, so
+    // size() iterations are enough for a fixpoint
+    for _ in 0..p.size() {
+        let before = format!("{p}");
+        p = map_plan(p, &push_one);
+        if format!("{p}") == before {
+            break;
+        }
+    }
+    p
+}
+
+/// One local pushdown step on a node (children already rewritten).
+fn push_one(node: Plan) -> Plan {
+    let Plan::Filter { input, predicate } = node else {
+        return node;
+    };
+    match *input {
+        // ---- the paper's rule: Filter(Join) → Join(Filter, ·) ----------
+        Plan::Join {
+            left,
+            right,
+            left_key,
+            right_key,
+        } => {
+            let used = predicate.columns_used();
+            let lnames: BTreeSet<String> = left
+                .schema()
+                .map(|s| s.names().iter().map(|n| n.to_string()).collect())
+                .unwrap_or_default();
+            let rnames: BTreeSet<String> = right
+                .schema()
+                .map(|s| s.names().iter().map(|n| n.to_string()).collect())
+                .unwrap_or_default();
+            if !used.is_empty() && used.is_subset(&lnames) {
+                // filter the left input instead (Fig. 6's transformation)
+                Plan::Join {
+                    left: Box::new(Plan::Filter {
+                        input: left,
+                        predicate,
+                    }),
+                    right,
+                    left_key,
+                    right_key,
+                }
+            } else {
+                // on the right side the join key is named `left_key` in the
+                // output; map it back to `right_key` before pushing
+                let renamed = predicate.rename_columns(&|c| {
+                    if c == left_key {
+                        Some(right_key.clone())
+                    } else if rnames.contains(c) && !lnames.contains(c) {
+                        Some(c.to_string())
+                    } else {
+                        None
+                    }
+                });
+                match renamed {
+                    Some(rpred) if !used.is_empty() => Plan::Join {
+                        left,
+                        right: Box::new(Plan::Filter {
+                            input: right,
+                            predicate: rpred,
+                        }),
+                        left_key,
+                        right_key,
+                    },
+                    _ => Plan::Filter {
+                        input: Box::new(Plan::Join {
+                            left,
+                            right,
+                            left_key,
+                            right_key,
+                        }),
+                        predicate,
+                    },
+                }
+            }
+        }
+        // ---- liveness plumbing: move past array code it doesn't read ----
+        Plan::WithColumn {
+            input: wc_input,
+            name,
+            expr,
+        } => {
+            if predicate.columns_used().contains(&name) {
+                // predicate reads the computed column: blocked (the paper's
+                // "transformation could change the result" case)
+                Plan::Filter {
+                    input: Box::new(Plan::WithColumn {
+                        input: wc_input,
+                        name,
+                        expr,
+                    }),
+                    predicate,
+                }
+            } else {
+                Plan::WithColumn {
+                    input: Box::new(Plan::Filter {
+                        input: wc_input,
+                        predicate,
+                    }),
+                    name,
+                    expr,
+                }
+            }
+        }
+        Plan::Rename {
+            input: rn_input,
+            from,
+            to,
+        } => {
+            let renamed = predicate.rename_columns(&|c| {
+                if c == to {
+                    Some(from.clone())
+                } else {
+                    Some(c.to_string())
+                }
+            });
+            match renamed {
+                Some(rpred) => Plan::Rename {
+                    input: Box::new(Plan::Filter {
+                        input: rn_input,
+                        predicate: rpred,
+                    }),
+                    from,
+                    to,
+                },
+                None => Plan::Filter {
+                    input: Box::new(Plan::Rename {
+                        input: rn_input,
+                        from,
+                        to,
+                    }),
+                    predicate,
+                },
+            }
+        }
+        Plan::Project {
+            input: pj_input,
+            columns,
+        } => Plan::Project {
+            input: Box::new(Plan::Filter {
+                input: pj_input,
+                predicate,
+            }),
+            columns,
+        },
+        // concat distributes the filter into every branch
+        Plan::Concat { inputs } => Plan::Concat {
+            inputs: inputs
+                .into_iter()
+                .map(|p| {
+                    Box::new(Plan::Filter {
+                        input: p,
+                        predicate: predicate.clone(),
+                    })
+                })
+                .collect(),
+        },
+        other => Plan::Filter {
+            input: Box::new(other),
+            predicate,
+        },
+    }
+}
+
+/// Column pruning: walk top-down with the set of columns each consumer
+/// needs; drop dead [`Plan::WithColumn`]s and insert projections over
+/// sources so ranks never materialize unused columns.
+pub fn prune_columns(plan: Plan) -> Result<Plan> {
+    let all: BTreeSet<String> = plan
+        .schema()?
+        .names()
+        .iter()
+        .map(|n| n.to_string())
+        .collect();
+    prune(plan, &all)
+}
+
+fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
+    Ok(match plan {
+        Plan::Source { name, src, schema } => {
+            let keep: Vec<String> = schema
+                .names()
+                .iter()
+                .filter(|n| needed.contains(**n))
+                .map(|n| n.to_string())
+                .collect();
+            let src_node = Plan::Source {
+                name,
+                src,
+                schema: schema.clone(),
+            };
+            if keep.len() < schema.len() && !keep.is_empty() {
+                Plan::Project {
+                    input: Box::new(src_node),
+                    columns: keep,
+                }
+            } else {
+                src_node
+            }
+        }
+        Plan::Filter { input, predicate } => {
+            let mut n = needed.clone();
+            n.extend(predicate.columns_used());
+            Plan::Filter {
+                input: Box::new(prune(*input, &n)?),
+                predicate,
+            }
+        }
+        Plan::Project { input, columns } => {
+            let keep: Vec<String> = columns
+                .iter()
+                .filter(|c| needed.contains(*c))
+                .cloned()
+                .collect();
+            let keep = if keep.is_empty() { columns } else { keep };
+            let n: BTreeSet<String> = keep.iter().cloned().collect();
+            Plan::Project {
+                input: Box::new(prune(*input, &n)?),
+                columns: keep,
+            }
+        }
+        Plan::WithColumn { input, name, expr } => {
+            if !needed.contains(&name) {
+                // dead column computation — eliminate entirely
+                prune(*input, needed)?
+            } else {
+                let mut n: BTreeSet<String> =
+                    needed.iter().filter(|c| **c != name).cloned().collect();
+                n.extend(expr.columns_used());
+                Plan::WithColumn {
+                    input: Box::new(prune(*input, &n)?),
+                    name,
+                    expr,
+                }
+            }
+        }
+        Plan::Rename { input, from, to } => {
+            let mut n: BTreeSet<String> = needed
+                .iter()
+                .map(|c| if c == &to { from.clone() } else { c.clone() })
+                .collect();
+            // keep `from` alive even if output name unused downstream
+            n.insert(from.clone());
+            Plan::Rename {
+                input: Box::new(prune(*input, &n)?),
+                from,
+                to,
+            }
+        }
+        Plan::Join {
+            left,
+            right,
+            left_key,
+            right_key,
+        } => {
+            let lnames: BTreeSet<String> = left
+                .schema()?
+                .names()
+                .iter()
+                .map(|n| n.to_string())
+                .collect();
+            let rnames: BTreeSet<String> = right
+                .schema()?
+                .names()
+                .iter()
+                .map(|n| n.to_string())
+                .collect();
+            let mut ln: BTreeSet<String> =
+                needed.intersection(&lnames).cloned().collect();
+            ln.insert(left_key.clone());
+            let mut rn: BTreeSet<String> =
+                needed.intersection(&rnames).cloned().collect();
+            rn.insert(right_key.clone());
+            Plan::Join {
+                left: Box::new(prune(*left, &ln)?),
+                right: Box::new(prune(*right, &rn)?),
+                left_key,
+                right_key,
+            }
+        }
+        Plan::Aggregate { input, key, aggs } => {
+            let kept: Vec<_> = aggs
+                .iter()
+                .filter(|a| needed.contains(&a.out))
+                .cloned()
+                .collect();
+            let aggs = if kept.is_empty() { aggs } else { kept };
+            let mut n = BTreeSet::new();
+            n.insert(key.clone());
+            for a in &aggs {
+                n.extend(a.input.columns_used());
+            }
+            Plan::Aggregate {
+                input: Box::new(prune(*input, &n)?),
+                key,
+                aggs,
+            }
+        }
+        Plan::Concat { inputs } => {
+            // all branches must keep identical schemas: prune each with the
+            // same needed set, but only if every column can be dropped from
+            // every branch (sources guarantee that here)
+            let mut out = Vec::new();
+            for p in inputs {
+                out.push(Box::new(prune(*p, needed)?));
+            }
+            Plan::Concat { inputs: out }
+        }
+        Plan::Cumsum { input, column, out } => {
+            if !needed.contains(&out) {
+                return prune(*input, needed);
+            }
+            let mut n: BTreeSet<String> =
+                needed.iter().filter(|c| **c != out).cloned().collect();
+            n.insert(column.clone());
+            Plan::Cumsum {
+                input: Box::new(prune(*input, &n)?),
+                column,
+                out,
+            }
+        }
+        Plan::Stencil {
+            input,
+            column,
+            out,
+            weights,
+        } => {
+            if !needed.contains(&out) {
+                return prune(*input, needed);
+            }
+            let mut n: BTreeSet<String> =
+                needed.iter().filter(|c| **c != out).cloned().collect();
+            n.insert(column.clone());
+            Plan::Stencil {
+                input: Box::new(prune(*input, &n)?),
+                column,
+                out,
+                weights,
+            }
+        }
+        Plan::Sort { input, key } => {
+            let mut n = needed.clone();
+            n.insert(key.clone());
+            Plan::Sort {
+                input: Box::new(prune(*input, &n)?),
+                key,
+            }
+        }
+        Plan::Rebalance { input } => Plan::Rebalance {
+            input: Box::new(prune(*input, needed)?),
+        },
+        Plan::MatrixAssembly { input, columns } => {
+            let n: BTreeSet<String> = columns.iter().cloned().collect();
+            Plan::MatrixAssembly {
+                input: Box::new(prune(*input, &n)?),
+                columns,
+            }
+        }
+        Plan::MlCall { input, params } => {
+            let n: BTreeSet<String> = input
+                .schema()?
+                .names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            Plan::MlCall {
+                input: Box::new(prune(*input, &n)?),
+                params,
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit, AggExpr, AggFn};
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn customer() -> Plan {
+        source_mem(
+            "customer",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2])),
+                ("phone", Column::I64(vec![555, 666])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn orders() -> Plan {
+        source_mem(
+            "order",
+            Table::from_pairs(vec![
+                ("customerId", Column::I64(vec![1, 2])),
+                ("amount", Column::F64(vec![50.0, 150.0])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    /// The paper's Fig. 6 example, verbatim.
+    #[test]
+    fn pushes_right_side_predicate_through_join() {
+        let plan = Plan::Filter {
+            input: Box::new(Plan::Join {
+                left: Box::new(customer()),
+                right: Box::new(orders()),
+                left_key: "id".into(),
+                right_key: "customerId".into(),
+            }),
+            predicate: col("amount").gt(lit(100.0)),
+        };
+        let opt = pushdown_predicates(plan);
+        // expect Join(customer, Filter(order))
+        match &opt {
+            Plan::Join { left, right, .. } => {
+                assert!(matches!(**left, Plan::Source { .. }));
+                assert!(matches!(**right, Plan::Filter { .. }));
+            }
+            other => panic!("expected join at root, got:\n{other}"),
+        }
+        assert!(opt.schema().is_ok());
+    }
+
+    #[test]
+    fn pushes_left_side_predicate_through_join() {
+        let plan = Plan::Filter {
+            input: Box::new(Plan::Join {
+                left: Box::new(customer()),
+                right: Box::new(orders()),
+                left_key: "id".into(),
+                right_key: "customerId".into(),
+            }),
+            predicate: col("phone").eq_(lit(555i64)),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Join { left, right, .. } => {
+                assert!(matches!(**left, Plan::Filter { .. }));
+                assert!(matches!(**right, Plan::Source { .. }));
+            }
+            other => panic!("expected join at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn key_predicate_pushes_with_rename() {
+        // :id is the output name of the join key; pushing right requires
+        // renaming it back to :customerId
+        let plan = Plan::Filter {
+            input: Box::new(Plan::Join {
+                left: Box::new(customer()),
+                right: Box::new(orders()),
+                left_key: "id".into(),
+                right_key: "customerId".into(),
+            }),
+            predicate: col("id").lt(lit(2i64)),
+        };
+        let opt = pushdown_predicates(plan);
+        // :id exists on the left, so it pushes left (left precedence)
+        match &opt {
+            Plan::Join { left, .. } => assert!(matches!(**left, Plan::Filter { .. })),
+            other => panic!("expected join at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn mixed_predicate_stays_above_join() {
+        let plan = Plan::Filter {
+            input: Box::new(Plan::Join {
+                left: Box::new(customer()),
+                right: Box::new(orders()),
+                left_key: "id".into(),
+                right_key: "customerId".into(),
+            }),
+            predicate: col("phone").lt(col("amount")), // reads both sides
+        };
+        let opt = pushdown_predicates(plan.clone());
+        match &opt {
+            Plan::Filter { input, .. } => assert!(matches!(**input, Plan::Join { .. })),
+            other => panic!("expected filter to stay, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn filter_moves_past_unrelated_withcolumn() {
+        // the paper's liveness case: array computation between relational ops
+        let plan = Plan::Filter {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(orders()),
+                name: "scaled".into(),
+                expr: col("amount").mul(lit(2.0)),
+            }),
+            predicate: col("customerId").lt(lit(10i64)),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::WithColumn { input, .. } => {
+                assert!(matches!(**input, Plan::Filter { .. }));
+            }
+            other => panic!("expected WithColumn at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn filter_blocked_by_dependent_withcolumn() {
+        let plan = Plan::Filter {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(orders()),
+                name: "scaled".into(),
+                expr: col("amount").mul(lit(2.0)),
+            }),
+            predicate: col("scaled").gt(lit(100.0)), // reads the new column
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, .. } => {
+                assert!(matches!(**input, Plan::WithColumn { .. }));
+            }
+            other => panic!("expected blocked filter, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn filter_distributes_into_concat() {
+        let plan = Plan::Filter {
+            input: Box::new(Plan::Concat {
+                inputs: vec![Box::new(orders()), Box::new(orders())],
+            }),
+            predicate: col("amount").gt(lit(100.0)),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Concat { inputs } => {
+                for p in inputs {
+                    assert!(matches!(**p, Plan::Filter { .. }));
+                }
+            }
+            other => panic!("expected concat at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn prune_inserts_projection_over_source() {
+        // only :amount survives to the root → :customerId must still be
+        // read (join key), :phone must be pruned from customer
+        let plan = Plan::Project {
+            input: Box::new(Plan::Join {
+                left: Box::new(customer()),
+                right: Box::new(orders()),
+                left_key: "id".into(),
+                right_key: "customerId".into(),
+            }),
+            columns: vec!["amount".into()],
+        };
+        let opt = prune_columns(plan).unwrap();
+        let txt = format!("{opt}");
+        // customer source must now be wrapped in Project(id) — no :phone
+        assert!(txt.contains("Project(id)"), "plan:\n{txt}");
+        assert!(opt.schema().unwrap().names() == vec!["amount"]);
+    }
+
+    #[test]
+    fn prune_drops_dead_withcolumn() {
+        let plan = Plan::Project {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(orders()),
+                name: "dead".into(),
+                expr: col("amount").mul(lit(0.5)),
+            }),
+            columns: vec!["amount".into()],
+        };
+        let opt = prune_columns(plan).unwrap();
+        assert!(!format!("{opt}").contains("dead"), "plan:\n{opt}");
+    }
+
+    #[test]
+    fn prune_keeps_agg_inputs() {
+        let plan = Plan::Aggregate {
+            input: Box::new(orders()),
+            key: "customerId".into(),
+            aggs: vec![AggExpr::new("total", AggFn::Sum, col("amount"))],
+        };
+        let opt = prune_columns(plan).unwrap();
+        assert_eq!(opt.schema().unwrap().names(), vec!["customerId", "total"]);
+    }
+}

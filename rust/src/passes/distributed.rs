@@ -1,0 +1,199 @@
+//! Distributed-Pass (paper §4.4): distribution inference + rebalance
+//! insertion.
+//!
+//! Inference itself lives on the IR ([`Plan::dist`]) since a tree needs only
+//! one bottom-up meet pass. What this pass *adds* is the paper's novel
+//! rebalancing policy: `1D_VAR` outputs flow freely until a consumer that
+//! requires `1D_BLOCK` (stencil, matrix assembly), where a [`Plan::Rebalance`]
+//! is inserted — "the best approach is to rebalance only when necessary".
+//! [`RebalanceMode::Always`] reproduces the costly alternative the paper
+//! rejects, for the ablation bench.
+
+use super::domain::map_plan;
+use super::RebalanceMode;
+use crate::distribution::Dist;
+use crate::ir::Plan;
+
+/// Insert [`Plan::Rebalance`] nodes per `mode`.
+pub fn insert_rebalances(plan: Plan, mode: RebalanceMode) -> Plan {
+    match mode {
+        RebalanceMode::Lazy => map_plan(plan, &lazy_rule),
+        RebalanceMode::Always => map_plan(plan, &always_rule),
+    }
+}
+
+fn needs_rebalance(child: &Plan) -> bool {
+    child.dist() == Dist::OneDVar
+}
+
+fn wrap(child: Box<Plan>) -> Box<Plan> {
+    Box::new(Plan::Rebalance { input: child })
+}
+
+/// Lazy: only consumers that require `1D_BLOCK` inputs get a rebalance.
+fn lazy_rule(node: Plan) -> Plan {
+    if !node.requires_block_input() {
+        return node;
+    }
+    match node {
+        Plan::Stencil {
+            input,
+            column,
+            out,
+            weights,
+        } => {
+            let input = if needs_rebalance(&input) {
+                wrap(input)
+            } else {
+                input
+            };
+            Plan::Stencil {
+                input,
+                column,
+                out,
+                weights,
+            }
+        }
+        Plan::MatrixAssembly { input, columns } => {
+            let input = if needs_rebalance(&input) {
+                wrap(input)
+            } else {
+                input
+            };
+            Plan::MatrixAssembly { input, columns }
+        }
+        other => other,
+    }
+}
+
+/// Always: every relational (1D_VAR-producing) node gets rebalanced right
+/// away — the strawman the paper argues against.
+fn always_rule(node: Plan) -> Plan {
+    let is_relational = matches!(
+        node,
+        Plan::Filter { .. } | Plan::Join { .. } | Plan::Aggregate { .. } | Plan::Concat { .. }
+    );
+    if is_relational && node.dist() == Dist::OneDVar {
+        Plan::Rebalance {
+            input: Box::new(node),
+        }
+    } else {
+        node
+    }
+}
+
+/// Count rebalance nodes (ablation metric).
+pub fn count_rebalances(plan: &Plan) -> usize {
+    let own = matches!(plan, Plan::Rebalance { .. }) as usize;
+    own + plan
+        .children()
+        .iter()
+        .map(|c| count_rebalances(c))
+        .sum::<usize>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit};
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn src() -> Plan {
+        source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2])),
+                ("x", Column::F64(vec![0.5, 1.5])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn filtered() -> Plan {
+        Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0)),
+        }
+    }
+
+    #[test]
+    fn lazy_inserts_before_stencil_only_when_var() {
+        // stencil directly over a source (1D_BLOCK): no rebalance
+        let p = Plan::Stencil {
+            input: Box::new(src()),
+            column: "x".into(),
+            out: "sma".into(),
+            weights: vec![1.0 / 3.0; 3],
+        };
+        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 0);
+
+        // stencil over a filter (1D_VAR): rebalance required
+        let p = Plan::Stencil {
+            input: Box::new(filtered()),
+            column: "x".into(),
+            out: "sma".into(),
+            weights: vec![1.0 / 3.0; 3],
+        };
+        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 1);
+        assert_eq!(opt.dist(), Dist::OneD);
+    }
+
+    #[test]
+    fn lazy_matrix_assembly() {
+        let p = Plan::MatrixAssembly {
+            input: Box::new(filtered()),
+            columns: vec!["x".into()],
+        };
+        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 1);
+    }
+
+    #[test]
+    fn lazy_leaves_relational_chains_alone() {
+        // filter → aggregate chain: no 1D_BLOCK consumers, no rebalances
+        let p = Plan::Aggregate {
+            input: Box::new(filtered()),
+            key: "id".into(),
+            aggs: vec![crate::expr::AggExpr::new(
+                "n",
+                crate::expr::AggFn::Count,
+                col("x"),
+            )],
+        };
+        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 0);
+    }
+
+    #[test]
+    fn always_rebalances_every_relational_node() {
+        let p = Plan::Aggregate {
+            input: Box::new(filtered()),
+            key: "id".into(),
+            aggs: vec![crate::expr::AggExpr::new(
+                "n",
+                crate::expr::AggFn::Count,
+                col("x"),
+            )],
+        };
+        let opt = insert_rebalances(p, RebalanceMode::Always);
+        assert_eq!(count_rebalances(&opt), 2); // after filter and aggregate
+        assert_eq!(opt.dist(), Dist::OneD);
+    }
+
+    #[test]
+    fn idempotent_on_lazy() {
+        let p = Plan::Stencil {
+            input: Box::new(filtered()),
+            column: "x".into(),
+            out: "o".into(),
+            weights: vec![1.0],
+        };
+        let once = insert_rebalances(p, RebalanceMode::Lazy);
+        let twice = insert_rebalances(once.clone(), RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&once), count_rebalances(&twice));
+    }
+}

@@ -1,0 +1,228 @@
+//! Domain-Pass analogue (paper §4.2): plan normalization that is not
+//! relational-specific — constant folding inside every expression (what the
+//! paper gets "for free" from the Julia compiler) and fusion of adjacent
+//! filters (the loop-fusion analogue for predicate maps: one pass over the
+//! data, one output allocation).
+
+use crate::expr::AggExpr;
+use crate::ir::Plan;
+
+/// Fold constants in every expression of the plan.
+pub fn fold_expressions(plan: Plan) -> Plan {
+    map_plan(plan, &|node| match node {
+        Plan::Filter { input, predicate } => Plan::Filter {
+            input,
+            predicate: predicate.fold_constants(),
+        },
+        Plan::WithColumn { input, name, expr } => Plan::WithColumn {
+            input,
+            name,
+            expr: expr.fold_constants(),
+        },
+        Plan::Aggregate { input, key, aggs } => Plan::Aggregate {
+            input,
+            key,
+            aggs: aggs
+                .into_iter()
+                .map(|a| AggExpr {
+                    input: a.input.fold_constants(),
+                    ..a
+                })
+                .collect(),
+        },
+        other => other,
+    })
+}
+
+/// `Filter(Filter(x, p1), p2)` → `Filter(x, p1 && p2)`.
+pub fn fuse_filters(plan: Plan) -> Plan {
+    map_plan(plan, &|node| match node {
+        Plan::Filter { input, predicate } => match *input {
+            Plan::Filter {
+                input: inner,
+                predicate: inner_pred,
+            } => Plan::Filter {
+                input: inner,
+                predicate: inner_pred.and(predicate),
+            },
+            other => Plan::Filter {
+                input: Box::new(other),
+                predicate,
+            },
+        },
+        other => other,
+    })
+}
+
+/// Bottom-up plan rewriting: children first, then `f` on the rebuilt node.
+/// Applied to fixpoint-free rewrites (each rule only ever shrinks or keeps
+/// plan height, so one bottom-up pass suffices for the rules above; the
+/// DataFrame-Pass runs its own loop).
+pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
+    let rebuilt = match plan {
+        Plan::Source { .. } => plan,
+        Plan::Filter { input, predicate } => Plan::Filter {
+            input: Box::new(map_plan(*input, f)),
+            predicate,
+        },
+        Plan::Project { input, columns } => Plan::Project {
+            input: Box::new(map_plan(*input, f)),
+            columns,
+        },
+        Plan::WithColumn { input, name, expr } => Plan::WithColumn {
+            input: Box::new(map_plan(*input, f)),
+            name,
+            expr,
+        },
+        Plan::Rename { input, from, to } => Plan::Rename {
+            input: Box::new(map_plan(*input, f)),
+            from,
+            to,
+        },
+        Plan::Join {
+            left,
+            right,
+            left_key,
+            right_key,
+        } => Plan::Join {
+            left: Box::new(map_plan(*left, f)),
+            right: Box::new(map_plan(*right, f)),
+            left_key,
+            right_key,
+        },
+        Plan::Aggregate { input, key, aggs } => Plan::Aggregate {
+            input: Box::new(map_plan(*input, f)),
+            key,
+            aggs,
+        },
+        Plan::Concat { inputs } => Plan::Concat {
+            inputs: inputs
+                .into_iter()
+                .map(|p| Box::new(map_plan(*p, f)))
+                .collect(),
+        },
+        Plan::Cumsum { input, column, out } => Plan::Cumsum {
+            input: Box::new(map_plan(*input, f)),
+            column,
+            out,
+        },
+        Plan::Stencil {
+            input,
+            column,
+            out,
+            weights,
+        } => Plan::Stencil {
+            input: Box::new(map_plan(*input, f)),
+            column,
+            out,
+            weights,
+        },
+        Plan::Sort { input, key } => Plan::Sort {
+            input: Box::new(map_plan(*input, f)),
+            key,
+        },
+        Plan::Rebalance { input } => Plan::Rebalance {
+            input: Box::new(map_plan(*input, f)),
+        },
+        Plan::MatrixAssembly { input, columns } => Plan::MatrixAssembly {
+            input: Box::new(map_plan(*input, f)),
+            columns,
+        },
+        Plan::MlCall { input, params } => Plan::MlCall {
+            input: Box::new(map_plan(*input, f)),
+            params,
+        },
+    };
+    f(rebuilt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit, Expr};
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn src() -> Plan {
+        source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1])),
+                ("x", Column::F64(vec![0.1])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn fold_inside_filter() {
+        let p = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0).add(lit(2.0))),
+        };
+        let folded = fold_expressions(p);
+        match folded {
+            Plan::Filter { predicate, .. } => {
+                assert_eq!(predicate, col("x").lt(lit(3.0)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuse_two_filters() {
+        let p = Plan::Filter {
+            input: Box::new(Plan::Filter {
+                input: Box::new(src()),
+                predicate: col("x").gt(lit(0.0)),
+            }),
+            predicate: col("id").lt(lit(5i64)),
+        };
+        let fused = fuse_filters(p);
+        assert_eq!(fused.size(), 2); // Filter + Source
+        match fused {
+            Plan::Filter { predicate, .. } => match predicate {
+                Expr::And(_, _) => {}
+                other => panic!("expected fused And, got {other:?}"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuse_three_filters() {
+        let mut p = src();
+        for i in 0..3 {
+            p = Plan::Filter {
+                input: Box::new(p),
+                predicate: col("id").ne_(lit(i as i64)),
+            };
+        }
+        let fused = fuse_filters(p);
+        assert_eq!(fused.size(), 2);
+    }
+
+    #[test]
+    fn map_plan_reaches_all_nodes() {
+        let p = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(Plan::Rename {
+                input: Box::new(src()),
+                from: "id".into(),
+                to: "cid".into(),
+            }),
+            left_key: "id".into(),
+            right_key: "cid".into(),
+        };
+        let mut count = 0usize;
+        // count via a side-channel: map_plan takes Fn, so use a Cell
+        let counter = std::cell::Cell::new(0usize);
+        let _ = map_plan(p, &|n| {
+            counter.set(counter.get() + 1);
+            n
+        });
+        count += counter.get();
+        assert_eq!(count, 4); // join, rename, two sources
+    }
+}

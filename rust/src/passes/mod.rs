@@ -1,0 +1,143 @@
+//! The HiFrames compiler pipeline (paper Fig. 1).
+//!
+//! | Paper pass        | Here                                             |
+//! |-------------------|--------------------------------------------------|
+//! | Macro-Pass        | expression desugaring/typing in [`crate::expr`] + [`domain::fold_expressions`] |
+//! | Domain-Pass       | [`domain`]: normalization, filter fusion, constant folding |
+//! | DataFrame-Pass    | [`dataframe`]: predicate pushdown through join, column pruning |
+//! | Distributed-Pass  | [`distributed`]: distribution inference + rebalance insertion |
+//! | CGen              | [`crate::exec`]: lowering to the SPMD physical interpreter |
+//!
+//! Every transformation is toggleable through [`PassOptions`] so the
+//! ablation benches can quantify each one (DESIGN.md §5).
+
+pub mod dataframe;
+pub mod distributed;
+pub mod domain;
+
+use crate::ir::Plan;
+use anyhow::Result;
+
+/// Rebalance-insertion policy (paper §4.4 discusses exactly this choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Insert only where a consumer requires `1D_BLOCK` (the paper's novel
+    /// `1D_VAR` approach — "rebalance only when necessary").
+    Lazy,
+    /// Rebalance after *every* relational operation ("one could rebalance
+    /// the data frames after every relational operation but this can be
+    /// very costly") — the ablation baseline.
+    Always,
+}
+
+/// Optimization toggles.
+#[derive(Debug, Clone)]
+pub struct PassOptions {
+    pub fold_constants: bool,
+    pub fuse_filters: bool,
+    pub pushdown: bool,
+    pub prune_columns: bool,
+    pub rebalance: RebalanceMode,
+}
+
+impl Default for PassOptions {
+    fn default() -> Self {
+        PassOptions {
+            fold_constants: true,
+            fuse_filters: true,
+            pushdown: true,
+            prune_columns: true,
+            rebalance: RebalanceMode::Lazy,
+        }
+    }
+}
+
+impl PassOptions {
+    /// Everything off — the "unoptimized" configuration for ablations.
+    pub fn none() -> PassOptions {
+        PassOptions {
+            fold_constants: false,
+            fuse_filters: false,
+            pushdown: false,
+            prune_columns: false,
+            rebalance: RebalanceMode::Lazy,
+        }
+    }
+}
+
+/// Run the full pipeline over a logical plan.
+pub fn optimize(plan: Plan, opts: &PassOptions) -> Result<Plan> {
+    // type-check the incoming plan first: passes assume a well-typed tree
+    plan.schema()?;
+    let mut p = plan;
+    if opts.fold_constants {
+        p = domain::fold_expressions(p);
+    }
+    if opts.fuse_filters {
+        p = domain::fuse_filters(p);
+    }
+    if opts.pushdown {
+        p = dataframe::pushdown_predicates(p);
+        if opts.fuse_filters {
+            // pushdown can stack filters on one input; re-fuse
+            p = domain::fuse_filters(p);
+        }
+    }
+    if opts.prune_columns {
+        p = dataframe::prune_columns(p)?;
+    }
+    p = distributed::insert_rebalances(p, opts.rebalance);
+    // the optimized plan must still type-check — cheap invariant guard
+    p.schema()?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit};
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn src() -> Plan {
+        source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2, 3])),
+                ("x", Column::F64(vec![0.1, 0.2, 0.3])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn optimize_preserves_schema() {
+        let plan = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(1.0).add(lit(1.0))),
+        };
+        let before = plan.schema().unwrap();
+        let opt = optimize(plan, &PassOptions::default()).unwrap();
+        assert!(before.same_as(&opt.schema().unwrap()));
+    }
+
+    #[test]
+    fn optimize_rejects_ill_typed() {
+        let plan = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").add(lit(1.0)), // not Bool
+        };
+        assert!(optimize(plan, &PassOptions::default()).is_err());
+    }
+
+    #[test]
+    fn options_none_is_identityish() {
+        let plan = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(2.0)),
+        };
+        let opt = optimize(plan.clone(), &PassOptions::none()).unwrap();
+        assert_eq!(opt.size(), plan.size());
+    }
+}

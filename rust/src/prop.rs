@@ -1,0 +1,185 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline image does not vendor `proptest`, so this module provides the
+//! subset we need: seeded generators, a `forall` driver that runs N cases,
+//! and on failure reports the seed + a best-effort shrink (halving vector
+//! inputs while the property still fails). Every property suite in
+//! `rust/tests/properties.rs` and the module-level invariant tests build on
+//! this.
+
+use crate::datagen::Rng;
+
+/// Number of cases per property (override with `HIFRAMES_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("HIFRAMES_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. Panics with the seed
+/// and debug representation of the (shrunk, if possible) counter-example.
+pub fn forall<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    forall_cases(name, default_cases(), gen, prop)
+}
+
+/// Like [`forall`] with an explicit case count.
+pub fn forall_cases<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base_seed = std::env::var("HIFRAMES_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                 counter-example: {input:?}\n\
+                 reproduce with HIFRAMES_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Shrinking `forall` for `Vec<T>` inputs: on failure, repeatedly try
+/// halves of the failing vector to present a smaller counter-example.
+pub fn forall_vec<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> Vec<T>,
+    P: Fn(&[T]) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base_seed = std::env::var("HIFRAMES_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let shrunk = shrink_vec(&input, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                 shrunk counter-example ({} of {} elems): {shrunk:?}",
+                shrunk.len(),
+                input.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec<T: Clone + std::fmt::Debug>(
+    failing: &[T],
+    prop: &impl Fn(&[T]) -> Result<(), String>,
+) -> Vec<T> {
+    let mut cur = failing.to_vec();
+    loop {
+        if cur.len() <= 1 {
+            return cur;
+        }
+        let half = cur.len() / 2;
+        let first = &cur[..half];
+        let second = &cur[half..];
+        if prop(first).is_err() {
+            cur = first.to_vec();
+        } else if prop(second).is_err() {
+            cur = second.to_vec();
+        } else {
+            return cur;
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::datagen::Rng;
+
+    pub fn vec_i64(rng: &mut Rng, max_len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let n = rng.usize(max_len + 1);
+        (0..n).map(|_| rng.i64_range(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(rng: &mut Rng, max_len: usize) -> Vec<f64> {
+        let n = rng.usize(max_len + 1);
+        (0..n).map(|_| rng.normal() * 10.0).collect()
+    }
+
+    pub fn mask(rng: &mut Rng, len: usize, p: f64) -> Vec<bool> {
+        (0..len).map(|_| rng.bool(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "reverse-reverse-id",
+            |rng| gen::vec_i64(rng, 50, -100, 100),
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports() {
+        forall(
+            "always-fails",
+            |rng| rng.i64_range(0, 10),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk counter-example")]
+    fn shrinker_reduces() {
+        forall_vec(
+            "has-a-negative",
+            |rng| gen::vec_i64(rng, 64, -5, 100),
+            |v| {
+                if v.iter().any(|&x| x < 0) {
+                    Err("found negative".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::datagen::Rng::new(1);
+        for _ in 0..100 {
+            let v = gen::vec_i64(&mut rng, 10, 0, 5);
+            assert!(v.len() <= 10);
+            assert!(v.iter().all(|&x| (0..5).contains(&x)));
+            let m = gen::mask(&mut rng, 8, 0.5);
+            assert_eq!(m.len(), 8);
+        }
+    }
+}

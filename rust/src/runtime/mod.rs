@@ -1,0 +1,295 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text**, see /opt/xla-example/README.md for why not serialized
+//! protos) and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs here: `make artifacts` is the only Python invocation,
+//! and the resulting `artifacts/*.hlo.txt` + `manifest.txt` are all this
+//! module needs. Executables are compiled once per process and cached.
+//!
+//! Shape discipline: every entry point was lowered at fixed shapes
+//! (recorded in the manifest). Callers pad row dimensions up to the
+//! artifact's `n` and pass a 0/1 mask so padded rows are inert — the same
+//! trick the L2 model uses to keep one executable per model variant.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One manifest entry: artifact file + integer parameters.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: PathBuf,
+    pub params: HashMap<String, usize>,
+}
+
+impl Entry {
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .with_context(|| format!("manifest entry missing param {key}"))
+    }
+}
+
+/// The artifact engine: manifest + lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    entries: HashMap<String, Entry>,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+/// Default artifacts directory: `$HIFRAMES_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("HIFRAMES_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Quick existence check so tests can skip gracefully before `make
+/// artifacts` has run.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+impl Engine {
+    /// Load the manifest in `dir` and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let Some("entry") = parts.next() else {
+                bail!("manifest: expected 'entry', got {line:?}");
+            };
+            let name = parts.next().context("manifest: missing entry name")?;
+            let mut file = None;
+            let mut params = HashMap::new();
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("manifest: bad kv {kv:?}"))?;
+                if k == "file" {
+                    file = Some(dir.join(v));
+                } else {
+                    params.insert(
+                        k.to_string(),
+                        v.parse::<usize>()
+                            .with_context(|| format!("manifest: non-integer {kv:?}"))?,
+                    );
+                }
+            }
+            entries.insert(
+                name.to_string(),
+                Entry {
+                    file: file.with_context(|| format!("manifest entry {name}: no file"))?,
+                    params,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine {
+            client,
+            entries,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&default_artifacts_dir())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no artifact entry {name}"))
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry
+                .file
+                .to_str()
+                .context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("hlo parse {}: {e:?}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("pjrt compile {name}: {e:?}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with the given input literals; returns the flattened
+    /// tuple of outputs (entry points are lowered with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("pjrt execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("pjrt readback {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("pjrt tuple {name}: {e:?}"))
+    }
+
+    /// One k-means step over (possibly padded) points. Inputs are f32
+    /// row-major; `mask[i] ∈ {0,1}` marks real rows. Returns
+    /// `(sums[k*d], counts[k], inertia)` — the *partials*, so the caller can
+    /// allreduce them in distributed mode before dividing.
+    pub fn kmeans_step(
+        &self,
+        points: &[f32],
+        mask: &[f32],
+        centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let e = self.entry("kmeans_step")?;
+        let (n, d, k) = (e.param("n")?, e.param("d")?, e.param("k")?);
+        if points.len() != n * d || mask.len() != n || centroids.len() != k * d {
+            bail!(
+                "kmeans_step: shape mismatch points={} (want {}), mask={} (want {n}), centroids={} (want {})",
+                points.len(),
+                n * d,
+                mask.len(),
+                centroids.len(),
+                k * d
+            );
+        }
+        let px = xla::Literal::vec1(points)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape points: {e:?}"))?;
+        let mx = xla::Literal::vec1(mask);
+        let cx = xla::Literal::vec1(centroids)
+            .reshape(&[k as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape centroids: {e:?}"))?;
+        let outs = self.execute("kmeans_step", &[px, mx, cx])?;
+        let sums = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("sums readback: {e:?}"))?;
+        let counts = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("counts readback: {e:?}"))?;
+        let inertia = outs[2]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("inertia readback: {e:?}"))?;
+        Ok((sums, counts, inertia))
+    }
+
+    /// One logistic-regression gradient step (padded, masked). Returns
+    /// `(grad[d+1], loss)` partials.
+    pub fn logreg_step(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        mask: &[f32],
+        weights: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let e = self.entry("logreg_step")?;
+        let (n, d) = (e.param("n")?, e.param("d")?);
+        if xs.len() != n * d || ys.len() != n || mask.len() != n || weights.len() != d + 1 {
+            bail!("logreg_step: shape mismatch");
+        }
+        let xl = xla::Literal::vec1(xs)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape xs: {e:?}"))?;
+        let yl = xla::Literal::vec1(ys);
+        let ml = xla::Literal::vec1(mask);
+        let wl = xla::Literal::vec1(weights);
+        let outs = self.execute("logreg_step", &[xl, yl, ml, wl])?;
+        let grad = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("grad readback: {e:?}"))?;
+        let loss = outs[1]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss readback: {e:?}"))?;
+        Ok((grad, loss))
+    }
+
+    /// Weighted moving average via the Pallas stencil kernel artifact.
+    /// `x` is padded to the artifact length; returns the same length.
+    pub fn wma(&self, x: &[f32], weights3: &[f32; 3]) -> Result<Vec<f32>> {
+        let e = self.entry("wma")?;
+        let n = e.param("n")?;
+        if x.len() != n {
+            bail!("wma: expected {n} samples, got {}", x.len());
+        }
+        let xl = xla::Literal::vec1(x);
+        let wl = xla::Literal::vec1(&weights3[..]);
+        let outs = self.execute("wma", &[xl, wl])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("wma readback: {e:?}"))
+    }
+
+    /// Feature standardization `(x - mean) / var` (the paper's Q26 step).
+    pub fn standardize(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let e = self.entry("standardize")?;
+        let n = e.param("n")?;
+        if x.len() != n {
+            bail!("standardize: expected {n} samples, got {}", x.len());
+        }
+        let xl = xla::Literal::vec1(x);
+        let outs = self.execute("standardize", &[xl])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("standardize readback: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("hiframes_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nentry foo file=foo.hlo.txt n=8 d=2\n\nentry bar file=b.hlo.txt k=3\n",
+        )
+        .unwrap();
+        let eng = Engine::load(&dir).unwrap();
+        let e = eng.entry("foo").unwrap();
+        assert_eq!(e.param("n").unwrap(), 8);
+        assert_eq!(e.param("d").unwrap(), 2);
+        assert!(e.param("zzz").is_err());
+        assert!(eng.entry("nope").is_err());
+        let mut names = eng.entry_names();
+        names.sort();
+        assert_eq!(names, vec!["bar", "foo"]);
+    }
+
+    #[test]
+    fn manifest_errors() {
+        let dir = std::env::temp_dir().join("hiframes_test_rt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "entry foo n=8\n").unwrap();
+        assert!(Engine::load(&dir).is_err()); // no file=
+        std::fs::write(dir.join("manifest.txt"), "bogus foo file=x\n").unwrap();
+        assert!(Engine::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "entry foo file=x n=abc\n").unwrap();
+        assert!(Engine::load(&dir).is_err());
+    }
+}

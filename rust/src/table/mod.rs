@@ -1,0 +1,327 @@
+//! Schemas and materialized tables.
+//!
+//! A [`Table`] is what a data frame *materializes to*: named columns of equal
+//! length. During execution nothing ever holds a `Table` on the hot path —
+//! the executor environment maps `name → Column` (dual representation) — but
+//! sources, sinks, tests and the baseline engines exchange `Table`s.
+
+use crate::column::Column;
+use crate::types::{DType, Value};
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// An ordered list of `(column name, dtype)` pairs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    fields: Vec<(String, DType)>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<(String, DType)>) -> Schema {
+        Schema { fields }
+    }
+
+    /// Convenience constructor: `Schema::of(&[("id", DType::I64), ...])`.
+    pub fn of(fields: &[(&str, DType)]) -> Schema {
+        Schema {
+            fields: fields.iter().map(|(n, t)| (n.to_string(), *t)).collect(),
+        }
+    }
+
+    pub fn fields(&self) -> &[(String, DType)] {
+        &self.fields
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.fields.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|(n, _)| n == name)
+    }
+
+    pub fn dtype_of(&self, name: &str) -> Option<DType> {
+        self.fields
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+    }
+
+    pub fn push(&mut self, name: &str, dtype: DType) {
+        self.fields.push((name.to_string(), dtype));
+    }
+
+    /// Schema equality up to column order is NOT allowed for concatenation —
+    /// the paper requires identical schemas for `[df1; df2]`.
+    pub fn same_as(&self, other: &Schema) -> bool {
+        self == other
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, (n, t)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, ":{n}={t}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// A materialized table: schema + columns of identical length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    schema: Schema,
+    columns: Vec<Column>,
+}
+
+impl Table {
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            bail!(
+                "table: {} fields but {} columns",
+                schema.len(),
+                columns.len()
+            );
+        }
+        let mut n = None;
+        for ((name, dt), col) in schema.fields().iter().zip(&columns) {
+            if col.dtype() != *dt {
+                bail!("table: column {name} declared {dt} but is {}", col.dtype());
+            }
+            match n {
+                None => n = Some(col.len()),
+                Some(m) if m != col.len() => {
+                    bail!("table: column {name} length {} != {m}", col.len())
+                }
+                _ => {}
+            }
+        }
+        Ok(Table { schema, columns })
+    }
+
+    /// Build from `(name, column)` pairs, inferring the schema.
+    pub fn from_pairs(pairs: Vec<(&str, Column)>) -> Result<Table> {
+        let schema = Schema::new(
+            pairs
+                .iter()
+                .map(|(n, c)| (n.to_string(), c.dtype()))
+                .collect(),
+        );
+        let columns = pairs.into_iter().map(|(_, c)| c).collect();
+        Table::new(schema, columns)
+    }
+
+    pub fn empty(schema: Schema) -> Table {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|(_, t)| Column::new_empty(*t))
+            .collect();
+        Table { schema, columns }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.columns.first().map_or(0, |c| c.len())
+    }
+
+    pub fn num_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.schema.index_of(name).map(|i| &self.columns[i])
+    }
+
+    pub fn column_at(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn into_columns(self) -> (Schema, Vec<Column>) {
+        (self.schema, self.columns)
+    }
+
+    pub fn row(&self, i: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.get(i)).collect()
+    }
+
+    /// Row-slice `[start, start+len)` of every column (1D_BLOCK partitioning).
+    pub fn slice(&self, start: usize, len: usize) -> Table {
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.slice(start, len)).collect(),
+        }
+    }
+
+    /// Filter all columns with one mask.
+    pub fn filter(&self, mask: &[bool]) -> Table {
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.filter(mask)).collect(),
+        }
+    }
+
+    /// Vertical concatenation (paper's `[df1; df2]`); schemas must match.
+    pub fn concat(&self, other: &Table) -> Result<Table> {
+        if !self.schema.same_as(&other.schema) {
+            bail!(
+                "concat: schema mismatch {} vs {}",
+                self.schema,
+                other.schema
+            );
+        }
+        let mut cols = self.columns.clone();
+        for (a, b) in cols.iter_mut().zip(&other.columns) {
+            a.extend(b);
+        }
+        Ok(Table {
+            schema: self.schema.clone(),
+            columns: cols,
+        })
+    }
+
+    /// Keep only `names`, in order (projection).
+    pub fn project(&self, names: &[&str]) -> Result<Table> {
+        let mut fields = Vec::new();
+        let mut cols = Vec::new();
+        for &n in names {
+            let Some(i) = self.schema.index_of(n) else {
+                bail!("project: unknown column {n}");
+            };
+            fields.push(self.schema.fields()[i].clone());
+            cols.push(self.columns[i].clone());
+        }
+        Ok(Table {
+            schema: Schema::new(fields),
+            columns: cols,
+        })
+    }
+
+    /// Sort the whole table by an I64 key column (ascending, stable) —
+    /// canonicalization for engine-agreement tests.
+    pub fn sorted_by(&self, key: &str) -> Result<Table> {
+        let Some(kc) = self.column(key) else {
+            bail!("sorted_by: unknown column {key}")
+        };
+        let keys = kc.as_i64();
+        let mut idx: Vec<usize> = (0..self.num_rows()).collect();
+        idx.sort_by_key(|&i| keys[i]);
+        Ok(Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
+        })
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{} ({} rows)", self.schema, self.num_rows())?;
+        let n = self.num_rows().min(10);
+        for i in 0..n {
+            let row: Vec<String> = self.row(i).iter().map(|v| v.to_string()).collect();
+            writeln!(f, "  {}", row.join(" | "))?;
+        }
+        if self.num_rows() > n {
+            writeln!(f, "  … {} more rows", self.num_rows() - n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::from_pairs(vec![
+            ("id", Column::I64(vec![3, 1, 2])),
+            ("x", Column::F64(vec![0.3, 0.1, 0.2])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_checks() {
+        assert!(Table::new(
+            Schema::of(&[("a", DType::I64)]),
+            vec![Column::F64(vec![1.0])]
+        )
+        .is_err());
+        assert!(Table::new(
+            Schema::of(&[("a", DType::I64), ("b", DType::I64)]),
+            vec![Column::I64(vec![1]), Column::I64(vec![1, 2])]
+        )
+        .is_err());
+        assert!(Table::new(Schema::of(&[("a", DType::I64)]), vec![]).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = t();
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.num_cols(), 2);
+        assert_eq!(t.column("id").unwrap().as_i64(), &[3, 1, 2]);
+        assert!(t.column("nope").is_none());
+        assert_eq!(t.row(0), vec![Value::I64(3), Value::F64(0.3)]);
+        assert_eq!(t.schema().dtype_of("x"), Some(DType::F64));
+    }
+
+    #[test]
+    fn slice_filter_concat() {
+        let t = t();
+        assert_eq!(t.slice(1, 2).column("id").unwrap().as_i64(), &[1, 2]);
+        let f = t.filter(&[true, false, true]);
+        assert_eq!(f.column("id").unwrap().as_i64(), &[3, 2]);
+        let c = t.concat(&t).unwrap();
+        assert_eq!(c.num_rows(), 6);
+        let other = Table::from_pairs(vec![("id", Column::I64(vec![1]))]).unwrap();
+        assert!(t.concat(&other).is_err());
+    }
+
+    #[test]
+    fn project_and_sort() {
+        let t = t();
+        let p = t.project(&["x"]).unwrap();
+        assert_eq!(p.num_cols(), 1);
+        assert!(t.project(&["zzz"]).is_err());
+        let s = t.sorted_by("id").unwrap();
+        assert_eq!(s.column("id").unwrap().as_i64(), &[1, 2, 3]);
+        assert_eq!(s.column("x").unwrap().as_f64(), &[0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn empty_table() {
+        let e = Table::empty(Schema::of(&[("a", DType::Str)]));
+        assert_eq!(e.num_rows(), 0);
+        assert_eq!(e.num_cols(), 1);
+    }
+
+    #[test]
+    fn display_smoke() {
+        let s = format!("{}", t());
+        assert!(s.contains("3 rows"));
+    }
+}

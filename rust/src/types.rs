@@ -1,0 +1,192 @@
+//! Scalar types shared across the whole stack.
+//!
+//! HiFrames (paper §4.1) annotates every data-frame column with a concrete
+//! element type at the macro stage so Julia's type inference succeeds. Our
+//! analogue: every [`crate::column::Column`] carries a [`DType`], and scalar
+//! constants in expressions are [`Value`]s that must unify with the column
+//! dtypes during expression type-checking.
+
+use std::fmt;
+
+/// Element type of a column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 64-bit signed integer (Julia `Int64`).
+    I64,
+    /// 64-bit float (Julia `Float64`).
+    F64,
+    /// Boolean (filter masks, comparison results).
+    Bool,
+    /// UTF-8 string (dictionary columns in TPCx-BB tables).
+    Str,
+}
+
+impl DType {
+    /// Fixed per-element byte width used by the shuffle codec; strings are
+    /// variable-width and report their average payload separately.
+    pub fn fixed_width(self) -> Option<usize> {
+        match self {
+            DType::I64 | DType::F64 => Some(8),
+            DType::Bool => Some(1),
+            DType::Str => None,
+        }
+    }
+
+    /// Is this a numeric type usable in arithmetic expressions?
+    pub fn is_numeric(self) -> bool {
+        matches!(self, DType::I64 | DType::F64)
+    }
+
+    /// The dtype arithmetic between two operands produces
+    /// (int ⊕ float → float, like Julia's promotion rules).
+    pub fn promote(self, other: DType) -> Option<DType> {
+        match (self, other) {
+            (DType::I64, DType::I64) => Some(DType::I64),
+            (DType::F64, DType::F64)
+            | (DType::I64, DType::F64)
+            | (DType::F64, DType::I64) => Some(DType::F64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::I64 => write!(f, "Int64"),
+            DType::F64 => write!(f, "Float64"),
+            DType::Bool => write!(f, "Bool"),
+            DType::Str => write!(f, "String"),
+        }
+    }
+}
+
+/// A scalar value: expression literals, aggregate results, row cells in the
+/// row-oriented baseline engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::I64(_) => DType::I64,
+            Value::F64(_) => DType::F64,
+            Value::Bool(_) => DType::Bool,
+            Value::Str(_) => DType::Str,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::I64(v) => Some(*v as f64),
+            Value::F64(v) => Some(*v),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(v) => Some(*v),
+            Value::F64(v) => Some(*v as i64),
+            Value::Bool(b) => Some(*b as i64),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::I64(v) => write!(f, "{v}"),
+            Value::F64(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::I64(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_promotion() {
+        assert_eq!(DType::I64.promote(DType::I64), Some(DType::I64));
+        assert_eq!(DType::I64.promote(DType::F64), Some(DType::F64));
+        assert_eq!(DType::F64.promote(DType::I64), Some(DType::F64));
+        assert_eq!(DType::Bool.promote(DType::I64), None);
+        assert_eq!(DType::Str.promote(DType::Str), None);
+    }
+
+    #[test]
+    fn dtype_widths() {
+        assert_eq!(DType::I64.fixed_width(), Some(8));
+        assert_eq!(DType::F64.fixed_width(), Some(8));
+        assert_eq!(DType::Bool.fixed_width(), Some(1));
+        assert_eq!(DType::Str.fixed_width(), None);
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::from(3i64).as_f64(), Some(3.0));
+        assert_eq!(Value::from(2.5f64).as_i64(), Some(2));
+        assert_eq!(Value::from(true).as_f64(), Some(1.0));
+        assert_eq!(Value::from("x").as_f64(), None);
+        assert_eq!(Value::from(false).as_bool(), Some(false));
+        assert_eq!(Value::from(1i64).as_bool(), None);
+    }
+
+    #[test]
+    fn value_dtype_roundtrip() {
+        for v in [
+            Value::I64(1),
+            Value::F64(1.0),
+            Value::Bool(true),
+            Value::Str("a".into()),
+        ] {
+            let d = v.dtype();
+            assert_eq!(format!("{d}").is_empty(), false);
+        }
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Value::I64(7).to_string(), "7");
+        assert_eq!(Value::Str("hi".into()).to_string(), "hi");
+        assert_eq!(DType::F64.to_string(), "Float64");
+    }
+}

@@ -1,0 +1,146 @@
+//! Table 1 of the paper, as executable assertions: every API row
+//! (projection, filter, join, aggregate, concatenation, cumsum, SMA, WMA)
+//! behaves like its Julia/SQL counterpart.
+
+use hiframes::prelude::*;
+
+fn hf() -> HiFrames {
+    HiFrames::with_workers(3)
+}
+
+fn df1(hf: &HiFrames) -> hiframes::frame::DataFrame {
+    hf.table(
+        "df1",
+        Table::from_pairs(vec![
+            ("id", Column::I64(vec![1, 2, 3, 1, 2, 3])),
+            ("x", Column::F64(vec![0.5, 1.5, 0.7, 2.5, 0.2, 3.5])),
+            ("y", Column::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+        ])
+        .unwrap(),
+    )
+}
+
+#[test]
+fn row_projection() {
+    // v = df[:id]  ≡  select id from t
+    let hf = hf();
+    let v = df1(&hf).select(&["id"]).collect().unwrap();
+    assert_eq!(v.schema().names(), vec!["id"]);
+    assert_eq!(v.column("id").unwrap().as_i64(), &[1, 2, 3, 1, 2, 3]);
+}
+
+#[test]
+fn row_filter() {
+    // df2 = df[:id < 100]  ≡  select * from t where id < 100
+    let hf = hf();
+    let out = df1(&hf).filter(col("id").lt(lit(3i64))).collect().unwrap();
+    assert_eq!(out.num_rows(), 4);
+    assert!(out.column("id").unwrap().as_i64().iter().all(|&i| i < 3));
+}
+
+#[test]
+fn row_join() {
+    // df3 = join(df1, df2, :id == :cid) — different key names allowed
+    let hf = hf();
+    let df2 = hf.table(
+        "df2",
+        Table::from_pairs(vec![
+            ("cid", Column::I64(vec![1, 3])),
+            ("z", Column::I64(vec![10, 30])),
+        ])
+        .unwrap(),
+    );
+    let out = df1(&hf).join(&df2, "id", "cid").sort_by("id").collect().unwrap();
+    assert_eq!(out.num_rows(), 4); // two id=1 rows + two id=3 rows
+    assert_eq!(out.schema().names(), vec!["id", "x", "y", "z"]);
+    assert_eq!(out.column("z").unwrap().as_i64(), &[10, 10, 30, 30]);
+}
+
+#[test]
+fn row_aggregate() {
+    // df2 = aggregate(df1, :id, :xc = sum(:x < 1.0), :ym = mean(:y))
+    let hf = hf();
+    let out = df1(&hf)
+        .aggregate(
+            "id",
+            vec![
+                AggExpr::new("xc", AggFn::Sum, col("x").lt(lit(1.0))),
+                AggExpr::new("ym", AggFn::Mean, col("y")),
+            ],
+        )
+        .sort_by("id")
+        .collect()
+        .unwrap();
+    assert_eq!(out.column("id").unwrap().as_i64(), &[1, 2, 3]);
+    assert_eq!(out.column("xc").unwrap().as_i64(), &[1, 1, 1]);
+    assert_eq!(out.column("ym").unwrap().as_f64(), &[2.5, 3.5, 4.5]);
+}
+
+#[test]
+fn row_concatenation() {
+    // df3 = [df1; df2]  ≡  union all
+    let hf = hf();
+    let d = df1(&hf);
+    let out = d.concat(&d).collect().unwrap();
+    assert_eq!(out.num_rows(), 12);
+    // schema mismatch must fail at planning time
+    let other = hf.table(
+        "o",
+        Table::from_pairs(vec![("id", Column::I64(vec![1]))]).unwrap(),
+    );
+    assert!(d.concat(&other).schema().is_err());
+}
+
+#[test]
+fn row_cumsum() {
+    // cumsum(df[:x]) — needs a scan, not map-reduce
+    let hf = hf();
+    let out = df1(&hf).cumsum("y", "cs").collect().unwrap();
+    assert_eq!(
+        out.column("cs").unwrap().as_f64(),
+        &[1.0, 3.0, 6.0, 10.0, 15.0, 21.0]
+    );
+}
+
+#[test]
+fn row_sma() {
+    // A = stencil(x -> (x[-1]+x[0]+x[1])/3.0, df[:x])
+    let hf = hf();
+    let out = df1(&hf).sma("y", "sma", 3).collect().unwrap();
+    let sma = out.column("sma").unwrap().as_f64();
+    for i in 1..5 {
+        assert!((sma[i] - (i as f64 + 1.0)).abs() < 1e-9); // mean of consecutive ints
+    }
+    // edges: truncated window, renormalized
+    assert!((sma[0] - 1.5).abs() < 1e-9);
+    assert!((sma[5] - 5.5).abs() < 1e-9);
+}
+
+#[test]
+fn row_wma() {
+    // A = stencil(x -> (x[-1]+2*x[0]+x[1])/4.0, df[:x])
+    let hf = hf();
+    let out = df1(&hf).wma("y", "wma").collect().unwrap();
+    let wma = out.column("wma").unwrap().as_f64();
+    for i in 1..5 {
+        // (v-1 + 2v + v+1)/4 = v for consecutive ints
+        assert!((wma[i] - (i as f64 + 1.0)).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn general_array_expressions_in_filter() {
+    // the paper: "any array expression that results in a boolean array can
+    // be used" — including math functions and UDFs
+    let hf = hf();
+    let out = df1(&hf)
+        .filter(
+            col("x")
+                .math(MathFn::Exp)
+                .gt(lit(2.0))
+                .and(col("y").le(lit(5.0))),
+        )
+        .collect()
+        .unwrap();
+    assert_eq!(out.num_rows(), 3); // exp(x)>2 ⇔ x>ln2: x∈{1.5,0.7,2.5} with y≤5
+}

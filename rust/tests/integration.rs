@@ -1,0 +1,259 @@
+//! Cross-module integration: optimizer ⇄ executor semantics, HFS sources,
+//! multi-operation pipelines, worker-count invariance, comm statistics.
+
+use hiframes::exec::{collect_optimized, ExecOptions};
+use hiframes::ops::aggregate::AggStrategy;
+use hiframes::passes::{optimize, PassOptions, RebalanceMode};
+use hiframes::prelude::*;
+
+fn micro(rows: usize) -> Table {
+    hiframes::datagen::micro_table(rows, 50, 99)
+}
+
+/// Build the paper's Fig. 6 query: filter over join.
+fn fig6_plan(hf: &HiFrames) -> hiframes::frame::DataFrame {
+    let customer = hf.table(
+        "customer",
+        Table::from_pairs(vec![
+            ("id", Column::I64((0..200).collect())),
+            ("phone", Column::I64((0..200).map(|i| i * 7).collect())),
+        ])
+        .unwrap(),
+    );
+    let order = hf.table(
+        "order",
+        Table::from_pairs(vec![
+            ("customerId", Column::I64((0..400).map(|i| i % 200).collect())),
+            (
+                "amount",
+                Column::F64((0..400).map(|i| (i as f64 * 13.7) % 200.0).collect()),
+            ),
+        ])
+        .unwrap(),
+    );
+    customer
+        .join(&order, "id", "customerId")
+        .filter(col("amount").gt(lit(100.0)))
+}
+
+#[test]
+fn optimized_and_unoptimized_agree() {
+    let hf = HiFrames::with_workers(3);
+    let q = fig6_plan(&hf).sort_by("id");
+    let plan = q.plan().clone();
+
+    let opts_on = ExecOptions {
+        workers: 3,
+        passes: PassOptions::default(),
+        agg_strategy: AggStrategy::RawShuffle,
+    };
+    let opts_off = ExecOptions {
+        workers: 3,
+        passes: PassOptions::none(),
+        agg_strategy: AggStrategy::RawShuffle,
+    };
+    let a = collect_optimized(&optimize(plan.clone(), &opts_on.passes).unwrap(), &opts_on).unwrap();
+    let b =
+        collect_optimized(&optimize(plan, &opts_off.passes).unwrap(), &opts_off).unwrap();
+    assert_eq!(a.num_rows(), b.num_rows());
+    assert_eq!(a.column("id").unwrap(), b.column("id").unwrap());
+    assert_eq!(a.column("amount").unwrap(), b.column("amount").unwrap());
+}
+
+#[test]
+fn pushdown_reduces_shuffled_rows() {
+    // with pushdown the filter runs before the join, so fewer rows shuffle
+    let hf = HiFrames::with_workers(2);
+    let plan = fig6_plan(&hf).plan().clone();
+    let optimized = optimize(plan.clone(), &PassOptions::default()).unwrap();
+    // optimized plan: filter is below the join
+    let txt = format!("{optimized}");
+    let join_pos = txt.find("Join").unwrap();
+    let filter_pos = txt.find("Filter").unwrap();
+    assert!(
+        filter_pos > join_pos,
+        "filter should be nested under join:\n{txt}"
+    );
+}
+
+#[test]
+fn rebalance_modes_same_result() {
+    let hf = HiFrames::with_workers(4);
+    let t = micro(997);
+    let df = hf
+        .table("t", t)
+        .filter(col("x").gt(lit(0.3)))
+        .sma("y", "s", 3);
+    for mode in [RebalanceMode::Lazy, RebalanceMode::Always] {
+        let opts = ExecOptions {
+            workers: 4,
+            passes: PassOptions {
+                rebalance: mode,
+                ..Default::default()
+            },
+            agg_strategy: AggStrategy::RawShuffle,
+        };
+        let optimized = optimize(df.plan().clone(), &opts.passes).unwrap();
+        let out = collect_optimized(&optimized, &opts).unwrap();
+        // compare against the serial oracle
+        let serial = hiframes::exec::collect_serial(df.plan().clone()).unwrap();
+        assert_eq!(out.num_rows(), serial.num_rows(), "{mode:?}");
+        for (a, b) in out
+            .column("s")
+            .unwrap()
+            .as_f64()
+            .iter()
+            .zip(serial.column("s").unwrap().as_f64())
+        {
+            assert!((a - b).abs() < 1e-9, "{mode:?}");
+        }
+    }
+}
+
+#[test]
+fn worker_count_invariance() {
+    // the same plan must produce identical results on 1..5 workers
+    let t = micro(1234);
+    let mut reference: Option<Table> = None;
+    for w in [1usize, 2, 3, 5] {
+        let hf = HiFrames::with_workers(w);
+        let out = hf
+            .table("t", t.clone())
+            .filter(col("x").lt(lit(0.7)))
+            .aggregate(
+                "id",
+                vec![
+                    AggExpr::new("n", AggFn::Count, col("x")),
+                    AggExpr::new("sy", AggFn::Sum, col("y")),
+                    AggExpr::new("mx", AggFn::Max, col("x")),
+                ],
+            )
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                assert_eq!(out.column("id").unwrap(), r.column("id").unwrap(), "w={w}");
+                assert_eq!(out.column("n").unwrap(), r.column("n").unwrap(), "w={w}");
+                for (a, b) in out
+                    .column("sy")
+                    .unwrap()
+                    .as_f64()
+                    .iter()
+                    .zip(r.column("sy").unwrap().as_f64())
+                {
+                    assert!((a - b).abs() < 1e-6, "w={w}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hfs_source_pipeline() {
+    let dir = std::env::temp_dir().join("hiframes_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("micro.hfs");
+    let t = micro(500);
+    hiframes::io::write_hfs(&p, &t).unwrap();
+
+    let hf = HiFrames::with_workers(3);
+    let df = hf.read_hfs("micro", &p).unwrap();
+    let out = df
+        .filter(col("id").lt(lit(25i64)))
+        .aggregate("id", vec![AggExpr::new("n", AggFn::Count, col("x"))])
+        .sort_by("id")
+        .collect()
+        .unwrap();
+    // oracle over the in-memory table
+    let serial = hiframes::baseline::serial::aggregate(
+        &hiframes::baseline::serial::filter(&t, &col("id").lt(lit(25i64))).unwrap(),
+        "id",
+        &[AggExpr::new("n", AggFn::Count, col("x"))],
+    )
+    .unwrap()
+    .sorted_by("id")
+    .unwrap();
+    assert_eq!(out.column("id").unwrap(), serial.column("id").unwrap());
+    assert_eq!(out.column("n").unwrap(), serial.column("n").unwrap());
+}
+
+#[test]
+fn typed_read_checks_schema() {
+    let dir = std::env::temp_dir().join("hiframes_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("typed.hfs");
+    hiframes::io::write_hfs(&p, &micro(10)).unwrap();
+    let hf = HiFrames::with_workers(1);
+    let good = Schema::of(&[
+        ("id", DType::I64),
+        ("x", DType::F64),
+        ("y", DType::F64),
+    ]);
+    assert!(hf.read_hfs_typed("t", &p, good).is_ok());
+    let bad = Schema::of(&[("id", DType::F64)]);
+    assert!(hf.read_hfs_typed("t", &p, bad).is_err());
+}
+
+#[test]
+fn multi_join_pipeline() {
+    // three-way join with interleaved array computation (the paper's point:
+    // relational + non-relational mix in one optimized program)
+    let hf = HiFrames::with_workers(3);
+    let a = hf.table(
+        "a",
+        Table::from_pairs(vec![
+            ("k1", Column::I64((0..60).collect())),
+            ("va", Column::F64((0..60).map(|i| i as f64).collect())),
+        ])
+        .unwrap(),
+    );
+    let b = hf.table(
+        "b",
+        Table::from_pairs(vec![
+            ("k2", Column::I64((0..60).rev().collect())),
+            ("vb", Column::F64((0..60).map(|i| i as f64 * 2.0).collect())),
+        ])
+        .unwrap(),
+    );
+    let c = hf.table(
+        "c",
+        Table::from_pairs(vec![
+            ("k3", Column::I64((0..30).collect())),
+            ("vc", Column::F64((0..30).map(|i| i as f64 * 3.0).collect())),
+        ])
+        .unwrap(),
+    );
+    let out = a
+        .join(&b, "k1", "k2")
+        .with_column("vab", col("va").add(col("vb")))
+        .join(&c, "k1", "k3")
+        .filter(col("vab").gt(lit(10.0)))
+        .sort_by("k1")
+        .collect()
+        .unwrap();
+    assert!(out.num_rows() > 0);
+    // spot-check one row: k1=20 -> va=20, vb = (59-20)*2... b's k2 is reversed
+    let k = out.column("k1").unwrap().as_i64();
+    let vab = out.column("vab").unwrap().as_f64();
+    for (i, &key) in k.iter().enumerate() {
+        let expect = key as f64 + (59 - key) as f64 * 2.0;
+        assert!((vab[i] - expect).abs() < 1e-9, "k={key}");
+    }
+}
+
+#[test]
+fn comm_stats_reported() {
+    let (out, stats) = hiframes::comm::run_spmd_with_stats(3, |c| {
+        let keys: Vec<i64> = (0..30).map(|i| i % 7).collect();
+        let vals = Column::F64(vec![1.0; 30]);
+        let (k, _) = hiframes::ops::shuffle_by_key(&c, &keys, &[vals]).unwrap();
+        k.len()
+    });
+    assert_eq!(out.iter().sum::<usize>(), 90);
+    let (msgs, bytes, _, colls) = stats.snapshot();
+    assert!(msgs >= 9); // 3x3 alltoallv
+    assert!(bytes > 0);
+    assert!(colls >= 3);
+}

@@ -1,0 +1,485 @@
+//! Property-based suites over the coordinator invariants (mini-prop
+//! harness; the offline image has no proptest — see DESIGN.md §3):
+//!
+//! * shuffle preserves the global (key, value) multiset and routes every
+//!   key to its owner;
+//! * distributed join ≡ nested-loop oracle, any worker count;
+//! * distributed aggregate ≡ serial fold, both strategies;
+//! * cumsum/stencil ≡ serial oracles on arbitrary splits;
+//! * rebalance yields 1D_BLOCK chunk sizes and preserves order;
+//! * sample-sort produces a globally sorted permutation;
+//! * optimizer passes preserve query semantics on randomized plans;
+//! * agg-state merge is associative-commutative (pre-agg soundness).
+
+use hiframes::column::Column;
+use hiframes::comm::{block_range, run_spmd};
+use hiframes::exec::{collect_optimized, ExecOptions};
+use hiframes::expr::{col, lit, AggExpr, AggFn, AggState};
+use hiframes::ops;
+use hiframes::passes::{optimize, PassOptions};
+use hiframes::prelude::*;
+use hiframes::prop::{forall, gen};
+use hiframes::types::DType;
+
+fn workers_for(seed: &[i64]) -> usize {
+    1 + (seed.len() % 4)
+}
+
+#[test]
+fn prop_shuffle_preserves_multiset_and_ownership() {
+    forall(
+        "shuffle-multiset",
+        |rng| {
+            let n = rng.usize(200);
+            let keys: Vec<i64> = (0..n).map(|_| rng.i64_range(-30, 30)).collect();
+            keys
+        },
+        |keys| {
+            let p = workers_for(keys);
+            let out = run_spmd(p, |c| {
+                let (s, l) = block_range(keys.len(), c.nranks(), c.rank());
+                let local = &keys[s..s + l];
+                let vals = Column::I64(local.iter().map(|&k| k * 31).collect());
+                let (k, cols) = ops::shuffle_by_key(&c, local, &[vals]).unwrap();
+                (c.rank(), k, cols[0].as_i64().to_vec())
+            });
+            let mut got: Vec<i64> = Vec::new();
+            for (rank, ks, vs) in &out {
+                for (k, v) in ks.iter().zip(vs) {
+                    if ops::shuffle::owner_of(*k, p) != *rank {
+                        return Err(format!("key {k} on wrong rank {rank}"));
+                    }
+                    if *v != k * 31 {
+                        return Err(format!("payload detached: {k} -> {v}"));
+                    }
+                    got.push(*k);
+                }
+            }
+            let mut want = keys.clone();
+            want.sort_unstable();
+            got.sort_unstable();
+            if got != want {
+                return Err("multiset changed".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_distributed_join_matches_nested_loop() {
+    forall(
+        "join-oracle",
+        |rng| {
+            let nl = rng.usize(80);
+            let nr = rng.usize(80);
+            let lk: Vec<i64> = (0..nl).map(|_| rng.i64_range(0, 15)).collect();
+            let rk: Vec<i64> = (0..nr).map(|_| rng.i64_range(0, 15)).collect();
+            (lk, rk)
+        },
+        |(lk, rk)| {
+            let p = 1 + (lk.len() + rk.len()) % 3;
+            let out = run_spmd(p, |c| {
+                let (ls, ll) = block_range(lk.len(), c.nranks(), c.rank());
+                let (rs, rl) = block_range(rk.len(), c.nranks(), c.rank());
+                let (keys, _, _) = ops::distributed_join(
+                    &c,
+                    &lk[ls..ls + ll],
+                    &[],
+                    &rk[rs..rs + rl],
+                    &[],
+                )
+                .unwrap();
+                keys
+            });
+            let mut got: Vec<i64> = out.into_iter().flatten().collect();
+            got.sort_unstable();
+            let mut want = Vec::new();
+            for &a in lk {
+                for &b in rk {
+                    if a == b {
+                        want.push(a);
+                    }
+                }
+            }
+            want.sort_unstable();
+            (got == want)
+                .then_some(())
+                .ok_or_else(|| format!("join sizes {} vs {}", got.len(), want.len()))
+        },
+    );
+}
+
+#[test]
+fn prop_aggregate_strategies_match_serial() {
+    use hiframes::ops::aggregate::{AggSpec, AggStrategy};
+    forall(
+        "aggregate-oracle",
+        |rng| {
+            let n = rng.usize(150);
+            let rows: Vec<(i64, f64)> = (0..n)
+                .map(|_| (rng.i64_range(0, 12), rng.normal() * 5.0))
+                .collect();
+            rows
+        },
+        |rows| {
+            let keys: Vec<i64> = rows.iter().map(|r| r.0).collect();
+            let vals: Vec<f64> = rows.iter().map(|r| r.1).collect();
+            // serial oracle
+            let mut oracle: std::collections::BTreeMap<i64, (f64, i64, f64)> = Default::default();
+            for (k, v) in rows {
+                let e = oracle.entry(*k).or_insert((0.0, 0, f64::NEG_INFINITY));
+                e.0 += v;
+                e.1 += 1;
+                e.2 = e.2.max(*v);
+            }
+            let specs = vec![
+                AggSpec { func: AggFn::Sum, input_dtype: DType::F64 },
+                AggSpec { func: AggFn::Count, input_dtype: DType::F64 },
+                AggSpec { func: AggFn::Max, input_dtype: DType::F64 },
+            ];
+            for strategy in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+                let p = 1 + keys.len() % 4;
+                let out = run_spmd(p, |c| {
+                    let (s, l) = block_range(keys.len(), c.nranks(), c.rank());
+                    let vcol = Column::F64(vals[s..s + l].to_vec());
+                    ops::distributed_aggregate(
+                        &c,
+                        &keys[s..s + l],
+                        &[vcol.clone(), vcol.clone(), vcol],
+                        &specs,
+                        strategy,
+                    )
+                    .unwrap()
+                });
+                let mut got: Vec<(i64, f64, i64, f64)> = Vec::new();
+                for (ks, cols) in &out {
+                    for (i, k) in ks.iter().enumerate() {
+                        got.push((
+                            *k,
+                            cols[0].as_f64()[i],
+                            cols[1].as_i64()[i],
+                            cols[2].as_f64()[i],
+                        ));
+                    }
+                }
+                got.sort_by_key(|r| r.0);
+                if got.len() != oracle.len() {
+                    return Err(format!("{strategy:?}: group count"));
+                }
+                for ((k, s, n, m), (ok, (os, on, om))) in got.iter().zip(oracle.iter()) {
+                    if k != ok || n != on {
+                        return Err(format!("{strategy:?}: key/count"));
+                    }
+                    if (s - os).abs() > 1e-6 || (m - om).abs() > 1e-9 {
+                        return Err(format!("{strategy:?}: sum/max"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cumsum_matches_serial() {
+    forall(
+        "cumsum-oracle",
+        |rng| gen::vec_f64(rng, 300),
+        |xs| {
+            let p = 1 + xs.len() % 5;
+            let got: Vec<f64> = run_spmd(p, |c| {
+                let (s, l) = block_range(xs.len(), c.nranks(), c.rank());
+                ops::cumsum_f64(&c, &xs[s..s + l])
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+            let mut acc = 0.0;
+            for (i, x) in xs.iter().enumerate() {
+                acc += x;
+                if (got[i] - acc).abs() > 1e-6 {
+                    return Err(format!("at {i}: {} vs {acc}", got[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stencil_matches_serial() {
+    forall(
+        "stencil-oracle",
+        |rng| {
+            let xs = gen::vec_f64(rng, 200);
+            let w = match rng.usize(3) {
+                0 => vec![1.0],
+                1 => vec![0.25, 0.5, 0.25],
+                _ => ops::stencil::sma_weights(5),
+            };
+            (xs, w)
+        },
+        |(xs, w)| {
+            let want = ops::stencil_serial(xs, w);
+            let p = 1 + xs.len() % 4;
+            let got: Vec<f64> = run_spmd(p, |c| {
+                let (s, l) = block_range(xs.len(), c.nranks(), c.rank());
+                ops::stencil_1d(&c, &xs[s..s + l], w)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+            if got.len() != want.len() {
+                return Err("length".into());
+            }
+            for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                if (g - e).abs() > 1e-6 {
+                    return Err(format!("at {i}: {g} vs {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rebalance_blocks_and_order() {
+    forall(
+        "rebalance-invariants",
+        |rng| {
+            // random per-rank chunk lengths
+            let p = 1 + rng.usize(4);
+            let lens: Vec<usize> = (0..p).map(|_| rng.usize(40)).collect();
+            lens
+        },
+        |lens| {
+            let p = lens.len();
+            let total: usize = lens.iter().sum();
+            let out = run_spmd(p, |c| {
+                let my_start: usize = lens[..c.rank()].iter().sum();
+                let vals: Vec<i64> =
+                    (0..lens[c.rank()]).map(|i| (my_start + i) as i64).collect();
+                let cols = vec![Column::I64(vals)];
+                let out = ops::rebalance_block(&c, &cols).unwrap();
+                out[0].as_i64().to_vec()
+            });
+            // chunk sizes must match block_range and order must be global
+            let mut all = Vec::new();
+            for (r, chunk) in out.iter().enumerate() {
+                let (_, l) = block_range(total, p, r);
+                if chunk.len() != l {
+                    return Err(format!("rank {r}: {} != {l}", chunk.len()));
+                }
+                all.extend_from_slice(chunk);
+            }
+            let want: Vec<i64> = (0..total as i64).collect();
+            (all == want).then_some(()).ok_or("order broken".into())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_is_sorted_permutation() {
+    forall(
+        "sample-sort",
+        |rng| gen::vec_i64(rng, 250, -1000, 1000),
+        |keys| {
+            let p = 1 + keys.len() % 4;
+            let got: Vec<i64> = run_spmd(p, |c| {
+                let (s, l) = block_range(keys.len(), c.nranks(), c.rank());
+                let (k, _) =
+                    ops::distributed_sort_by_key(&c, &keys[s..s + l], &[]).unwrap();
+                k
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+            let mut want = keys.clone();
+            want.sort_unstable();
+            (got == want).then_some(()).ok_or("not sorted".into())
+        },
+    );
+}
+
+#[test]
+fn prop_optimizer_preserves_semantics() {
+    // random filter+withcolumn+aggregate pipelines over random tables:
+    // optimized and unoptimized execution must agree
+    forall(
+        "optimizer-semantics",
+        |rng| {
+            let n = 20 + rng.usize(100);
+            let keys: Vec<i64> = (0..n).map(|_| rng.i64_range(0, 8)).collect();
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+            let threshold = rng.normal();
+            let use_join = rng.bool(0.5);
+            (keys, xs, threshold, use_join)
+        },
+        |(keys, xs, threshold, use_join)| {
+            let hf = HiFrames::with_workers(3);
+            let t = Table::from_pairs(vec![
+                ("id", Column::I64(keys.clone())),
+                ("x", Column::F64(xs.clone())),
+            ])
+            .unwrap();
+            let base = hf.table("t", t);
+            let dim = hf.table(
+                "dim",
+                Table::from_pairs(vec![
+                    ("did", Column::I64((0..8).collect())),
+                    ("w", Column::F64((0..8).map(|i| i as f64).collect())),
+                ])
+                .unwrap(),
+            );
+            let q = if *use_join {
+                base.join(&dim, "id", "did")
+                    .with_column("xw", col("x").mul(col("w")))
+                    .filter(col("x").gt(lit(*threshold)))
+                    .aggregate(
+                        "id",
+                        vec![
+                            AggExpr::new("n", AggFn::Count, col("xw")),
+                            AggExpr::new("s", AggFn::Sum, col("xw")),
+                        ],
+                    )
+                    .sort_by("id")
+            } else {
+                base.filter(col("x").gt(lit(*threshold)))
+                    .aggregate(
+                        "id",
+                        vec![
+                            AggExpr::new("n", AggFn::Count, col("x")),
+                            AggExpr::new("s", AggFn::Sum, col("x")),
+                        ],
+                    )
+                    .sort_by("id")
+            };
+            let plan = q.plan().clone();
+            let on = ExecOptions {
+                workers: 3,
+                passes: PassOptions::default(),
+                agg_strategy: hiframes::ops::aggregate::AggStrategy::PreAggregate,
+            };
+            let off = ExecOptions {
+                workers: 2,
+                passes: PassOptions::none(),
+                agg_strategy: hiframes::ops::aggregate::AggStrategy::RawShuffle,
+            };
+            let a = collect_optimized(&optimize(plan.clone(), &on.passes).unwrap(), &on)
+                .map_err(|e| e.to_string())?;
+            let b = collect_optimized(&optimize(plan, &off.passes).unwrap(), &off)
+                .map_err(|e| e.to_string())?;
+            if a.num_rows() != b.num_rows() {
+                return Err(format!("rows {} vs {}", a.num_rows(), b.num_rows()));
+            }
+            if a.column("id").unwrap() != b.column("id").unwrap()
+                || a.column("n").unwrap() != b.column("n").unwrap()
+            {
+                return Err("keys/counts differ".into());
+            }
+            for (x, y) in a
+                .column("s")
+                .unwrap()
+                .as_f64()
+                .iter()
+                .zip(b.column("s").unwrap().as_f64())
+            {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!("sum {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_agg_state_merge_commutative_associative() {
+    forall(
+        "agg-merge-laws",
+        |rng| {
+            let funcs = [AggFn::Sum, AggFn::Mean, AggFn::Min, AggFn::Max, AggFn::Var];
+            let f = *rng.choose(&funcs);
+            let xs = gen::vec_f64(rng, 60);
+            (f, xs)
+        },
+        |(f, xs)| {
+            let mk = |slice: &[f64]| {
+                let mut s = AggState::new(*f, DType::F64);
+                for x in slice {
+                    s.update(&Value::F64(*x));
+                }
+                s
+            };
+            if xs.len() < 3 {
+                return Ok(());
+            }
+            let third = xs.len() / 3;
+            let (a, b, c) = (
+                mk(&xs[..third]),
+                mk(&xs[third..2 * third]),
+                mk(&xs[2 * third..]),
+            );
+            // (a+b)+c == a+(b+c) and a+b == b+a, by finished value
+            let mut ab_c = a.clone();
+            ab_c.merge(&b);
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let close = |u: &AggState, v: &AggState| {
+                let (x, y) = (
+                    u.finish().as_f64().unwrap_or(f64::NAN),
+                    v.finish().as_f64().unwrap_or(f64::NAN),
+                );
+                (x.is_nan() && y.is_nan()) || (x - y).abs() < 1e-6 * (1.0 + x.abs())
+            };
+            if !close(&ab_c, &a_bc) {
+                return Err(format!("{f:?} not associative"));
+            }
+            if !close(&ab, &ba) {
+                return Err(format!("{f:?} not commutative"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_roundtrip_random_columns() {
+    forall(
+        "codec-roundtrip",
+        |rng| {
+            let n = rng.usize(100);
+            match rng.usize(4) {
+                0 => Column::I64((0..n).map(|_| rng.i64_range(i64::MIN / 2, i64::MAX / 2)).collect()),
+                1 => Column::F64((0..n).map(|_| rng.normal() * 1e6).collect()),
+                2 => Column::Bool((0..n).map(|_| rng.bool(0.5)).collect()),
+                _ => Column::Str(
+                    (0..n)
+                        .map(|_| "x".repeat(rng.usize(20)))
+                        .collect(),
+                ),
+            }
+        },
+        |col| {
+            let mut buf = Vec::new();
+            hiframes::column::encode_column(col, &mut buf);
+            if buf.len() != hiframes::column::encoded_size(col) {
+                return Err("size prediction wrong".into());
+            }
+            let mut pos = 0;
+            let back =
+                hiframes::column::decode_column(&buf, &mut pos).map_err(|e| e.to_string())?;
+            (back == *col && pos == buf.len())
+                .then_some(())
+                .ok_or("roundtrip mismatch".into())
+        },
+    );
+}

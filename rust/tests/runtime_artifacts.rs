@@ -1,0 +1,204 @@
+//! Integration: rust PJRT runtime ⇄ AOT artifacts produced by
+//! `python/compile/aot.py`. These tests exercise the full three-layer
+//! stack: Pallas kernel (L1) inside the jax model (L2) loaded and executed
+//! from rust (L3) — no Python at runtime.
+//!
+//! Skipped gracefully when `make artifacts` has not run yet.
+
+use hiframes::prelude::*;
+use hiframes::runtime::{artifacts_available, Engine};
+
+fn engine_or_skip() -> Option<Engine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load_default().expect("engine load"))
+}
+
+#[test]
+fn kmeans_step_matches_rust_oracle() {
+    let Some(engine) = engine_or_skip() else { return };
+    let e = engine.entry("kmeans_step").unwrap();
+    let (n, d, k) = (
+        e.param("n").unwrap(),
+        e.param("d").unwrap(),
+        e.param("k").unwrap(),
+    );
+    // two real rows per cluster + padding
+    let mut rng = hiframes::datagen::Rng::new(9);
+    let real = 64usize.min(n);
+    let mut points = vec![0.0f32; n * d];
+    let mut mask = vec![0.0f32; n];
+    for i in 0..real {
+        mask[i] = 1.0;
+        for f in 0..d {
+            let blob = if i % 2 == 0 { 0.0 } else { 5.0 };
+            points[i * d + f] = (blob + rng.normal() * 0.1) as f32;
+        }
+    }
+    let mut centroids = vec![0.0f32; k * d];
+    for f in 0..d {
+        centroids[d + f] = 5.0; // centroid 1 at the far blob
+    }
+    let (sums, counts, inertia) = engine.kmeans_step(&points, &mask, &centroids).unwrap();
+    // oracle: rust-side assignment over the same data
+    let mut osums = vec![0.0f64; k * d];
+    let mut ocounts = vec![0.0f64; k];
+    let mut oinertia = 0.0f64;
+    for i in 0..n {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for j in 0..k {
+            let mut dist = 0.0;
+            for f in 0..d {
+                let diff = points[i * d + f] as f64 - centroids[j * d + f] as f64;
+                dist += diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = j;
+            }
+        }
+        oinertia += best_d;
+        ocounts[best] += 1.0;
+        for f in 0..d {
+            osums[best * d + f] += points[i * d + f] as f64;
+        }
+    }
+    for j in 0..k {
+        assert!(
+            (counts[j] as f64 - ocounts[j]).abs() < 1e-3,
+            "counts[{j}]: {} vs {}",
+            counts[j],
+            ocounts[j]
+        );
+        for f in 0..d {
+            assert!(
+                (sums[j * d + f] as f64 - osums[j * d + f]).abs() < 1e-2,
+                "sums[{j},{f}]"
+            );
+        }
+    }
+    assert!((inertia as f64 - oinertia).abs() < 1e-2 * (1.0 + oinertia));
+}
+
+#[test]
+fn wma_artifact_matches_stencil_serial() {
+    let Some(engine) = engine_or_skip() else { return };
+    let e = engine.entry("wma").unwrap();
+    let n = e.param("n").unwrap();
+    let mut rng = hiframes::datagen::Rng::new(4);
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let weights = [0.25f32, 0.5, 0.25];
+    let got = engine.wma(&xs, &weights).unwrap();
+    let xs64: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    let want = hiframes::ops::stencil_serial(&xs64, &[0.25, 0.5, 0.25]);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (*g as f64 - w).abs() < 1e-3,
+            "wma[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn logreg_step_gradient_direction() {
+    let Some(engine) = engine_or_skip() else { return };
+    let e = engine.entry("logreg_step").unwrap();
+    let (n, d) = (e.param("n").unwrap(), e.param("d").unwrap());
+    let mut rng = hiframes::datagen::Rng::new(5);
+    let real = 256.min(n);
+    let mut xs = vec![0.0f32; n * d];
+    let mut ys = vec![0.0f32; n];
+    let mut mask = vec![0.0f32; n];
+    for i in 0..real {
+        mask[i] = 1.0;
+        let label = (i % 2) as f32;
+        ys[i] = label;
+        for f in 0..d {
+            xs[i * d + f] = (rng.normal() as f32) + label * 2.0;
+        }
+    }
+    let mut w = vec![0.0f32; d + 1];
+    let (_, loss0) = engine.logreg_step(&xs, &ys, &mask, &w).unwrap();
+    // a few GD steps must reduce the loss
+    for _ in 0..20 {
+        let (grad, _) = engine.logreg_step(&xs, &ys, &mask, &w).unwrap();
+        for (wi, g) in w.iter_mut().zip(&grad) {
+            *wi -= 0.01 * g / real as f32;
+        }
+    }
+    let (_, loss1) = engine.logreg_step(&xs, &ys, &mask, &w).unwrap();
+    assert!(
+        loss1 < loss0 * 0.9,
+        "GD did not reduce loss: {loss0} -> {loss1}"
+    );
+}
+
+#[test]
+fn standardize_artifact() {
+    let Some(engine) = engine_or_skip() else { return };
+    let e = engine.entry("standardize").unwrap();
+    let n = e.param("n").unwrap();
+    let mut rng = hiframes::datagen::Rng::new(6);
+    let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0 + 7.0) as f32).collect();
+    let got = engine.standardize(&xs).unwrap();
+    // mean ≈ 0 after centering
+    let mean: f64 = got.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    assert!(mean.abs() < 1e-3, "mean {mean}");
+}
+
+#[test]
+fn kmeans_pjrt_through_dataframe_api() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    // the full pipeline: frame -> matrix assembly -> kmeans(use_pjrt=true).
+    // d must match the artifact (Q26 dims: 6 features, k=8)
+    let engine = Engine::load_default().unwrap();
+    let e = engine.entry("kmeans_step").unwrap();
+    let (d, k) = (e.param("d").unwrap(), e.param("k").unwrap());
+    drop(engine);
+
+    let n = 128usize;
+    let mut rng = hiframes::datagen::Rng::new(8);
+    let mut cols: Vec<(String, Column)> = Vec::new();
+    for f in 0..d {
+        let vals: Vec<f64> = (0..n)
+            .map(|i| (i % k) as f64 * 10.0 + rng.normal() * 0.1 + f as f64)
+            .collect();
+        cols.push((format!("c{f}"), Column::F64(vals)));
+    }
+    let pairs: Vec<(&str, Column)> = cols
+        .iter()
+        .map(|(n, c)| (n.as_str(), c.clone()))
+        .collect();
+    let t = Table::from_pairs(pairs).unwrap();
+    let names: Vec<String> = (0..d).map(|f| format!("c{f}")).collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+
+    let hf = HiFrames::with_workers(2);
+    let out = hf
+        .table("pts", t)
+        .matrix_assembly(&refs)
+        .kmeans(k, 15, true)
+        .collect()
+        .unwrap();
+    assert_eq!(out.num_rows(), k);
+    // centroids must land near the k levels 0,10,…,10(k-1) (+feature offset)
+    let f0 = out.column("f0").unwrap().as_f64();
+    let mut levels: Vec<f64> = f0.to_vec();
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (j, v) in levels.iter().enumerate() {
+        assert!(
+            (v - (j as f64) * 10.0).abs() < 2.0,
+            "centroid {j}: {v}"
+        );
+    }
+}
