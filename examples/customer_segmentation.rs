@@ -1,4 +1,4 @@
-//! END-TO-END driver (EXPERIMENTS.md §E2E): the paper's §3.2 customer-
+//! END-TO-END driver: the paper's §3.2 customer-
 //! segmentation program — TPCx-BB Q26 — through ALL THREE LAYERS:
 //!
 //!   L3 rust: data generation → HFS files → parallel hyperslab reads →

@@ -76,6 +76,37 @@ fn main() -> anyhow::Result<()> {
     );
     println!("UDF filter rows: {}", fancy.count()?);
 
+    // ---- composite-key relational API --------------------------------------
+    // LEFT join against a sparse dimension: unmatched rows survive with
+    // NaN-promoted columns instead of disappearing
+    let sparse = hf.table(
+        "sparse",
+        Table::from_pairs(vec![
+            ("sid", Column::I64(vec![1, 4, 7])),
+            ("score", Column::I64(vec![100, 400, 700])),
+        ])?,
+    );
+    let left = df1
+        .join_on(&sparse, &[("id", "sid")], JoinType::Left)
+        .sort_by("id");
+    println!("left join (NaN = missing dimension row):\n{}", left.collect()?);
+
+    // multi-key group-by via the fluent builder, then a multi-key ORDER BY
+    // (count descending, key ascending)
+    let grouped = df1
+        .with_column("bucket", col("id").rem(lit(2i64)))
+        .with_column("half", col("id").rem(lit(3i64)))
+        .group_by(&["bucket", "half"])
+        .agg("n", AggFn::Count, col("x"))
+        .agg("sum_x", AggFn::Sum, col("x"))
+        .build()
+        .sort_by_keys(&[("n", SortOrder::Desc), ("bucket", SortOrder::Asc)]);
+    println!("multi-key group-by + sort:\n{}", grouped.collect()?);
+
+    // SEMI join: which rows have a matching dimension entry?
+    let semi = df1.join_on(&sparse, &[("id", "sid")], JoinType::Semi);
+    println!("semi join rows: {}", semi.count()?);
+
     // the optimized plan for the join query, as the compiler sees it
     println!("\noptimized plan for the join query:");
     let optimized = hiframes::passes::optimize(

@@ -5,7 +5,7 @@
 //! This box has few cores — the sweep tops out at 2× the physical count
 //! and the flattening point appears early; the *relative* shape (HiFrames
 //! scales to the core count, sparklike stalls sooner) is the reproduced
-//! claim. EXPERIMENTS.md records the hardware ceiling.
+//! claim.
 
 use hiframes::baseline::sparklike::SparkLike;
 use hiframes::bench::*;

@@ -8,10 +8,13 @@
 
 use crate::column::Column;
 use crate::expr::{eval, AggExpr, Expr};
-use crate::ops::aggregate::{local_hash_aggregate, AggSpec};
+use crate::ops::aggregate::{local_hash_aggregate_keys, AggSpec};
+use crate::ops::join::local_join_pairs;
+use crate::ops::keys::key_rows;
 use crate::ops::stencil::stencil_serial;
-use crate::table::Table;
-use anyhow::{Context, Result};
+use crate::table::{Schema, Table};
+use crate::types::JoinType;
+use anyhow::{bail, Context, Result};
 
 /// Vectorized filter (`df[df[:id] .< 100, :]`).
 pub fn filter(table: &Table, predicate: &Expr) -> Result<Table> {
@@ -41,40 +44,129 @@ pub fn filter_udf_rows(table: &Table, f: &dyn Fn(&[f64]) -> bool, cols: &[&str])
     Ok(table.filter(&mask))
 }
 
-/// Hash inner join (Pandas `merge`).
+/// Hash inner join (Pandas `merge`) — thin single-key wrapper over
+/// [`join_on`].
 pub fn join(left: &Table, right: &Table, lk: &str, rk: &str) -> Result<Table> {
-    let lkeys = left.column(lk).context("join: left key")?.as_i64();
-    let rkeys = right.column(rk).context("join: right key")?.as_i64();
-    let mut index: crate::fxhash::FxHashMap<i64, Vec<usize>> = Default::default();
-    for (j, &k) in rkeys.iter().enumerate() {
-        index.entry(k).or_default().push(j);
-    }
-    let mut li = Vec::new();
-    let mut ri = Vec::new();
-    for (i, &k) in lkeys.iter().enumerate() {
-        if let Some(matches) = index.get(&k) {
-            for &j in matches {
-                li.push(i);
-                ri.push(j);
-            }
-        }
-    }
-    let mut pairs: Vec<(&str, Column)> = Vec::new();
-    for (n, _) in left.schema().fields() {
-        pairs.push((n.as_str(), left.column(n).unwrap().take(&li)));
-    }
-    for (n, _) in right.schema().fields() {
-        if n == rk {
-            continue;
-        }
-        pairs.push((n.as_str(), right.column(n).unwrap().take(&ri)));
-    }
-    Table::from_pairs(pairs)
+    join_on(left, right, &[(lk, rk)], JoinType::Inner)
 }
 
-/// Group-by aggregation (Pandas `groupby().agg`).
+/// Composite-key hash join with join-type semantics (Pandas
+/// `merge(on=[...], how=...)`). Mirrors the HiFrames engine exactly: output
+/// key columns keep the left names and dtypes; the null-introduced side is
+/// promoted per [`crate::types::DType::null_joined`] (NaN / "" holes);
+/// Semi/Anti keep the left schema only.
+pub fn join_on(
+    left: &Table,
+    right: &Table,
+    on: &[(&str, &str)],
+    how: JoinType,
+) -> Result<Table> {
+    if on.is_empty() {
+        bail!("join: needs at least one key pair");
+    }
+    let lkey_cols: Vec<&Column> = on
+        .iter()
+        .map(|(lk, _)| left.column(lk).with_context(|| format!("join: left key {lk}")))
+        .collect::<Result<_>>()?;
+    let rkey_cols: Vec<&Column> = on
+        .iter()
+        .map(|(_, rk)| {
+            right
+                .column(rk)
+                .with_context(|| format!("join: right key {rk}"))
+        })
+        .collect::<Result<_>>()?;
+    for (lc, rc) in lkey_cols.iter().zip(&rkey_cols) {
+        if lc.dtype() != rc.dtype() {
+            bail!(
+                "join: key pair dtype mismatch {} vs {}",
+                lc.dtype(),
+                rc.dtype()
+            );
+        }
+        if !lc.dtype().is_groupable() {
+            bail!("join key must be Int64/Bool/String, got {}", lc.dtype());
+        }
+    }
+    let lrows = key_rows(&lkey_cols)?;
+    let rrows = key_rows(&rkey_cols)?;
+    let pairs = local_join_pairs(&lrows, &rrows, how);
+
+    let lidx: Vec<Option<usize>> = pairs.iter().map(|&(lo, _)| lo).collect();
+    let ridx: Vec<Option<usize>> = pairs.iter().map(|&(_, ro)| ro).collect();
+    // unwrapped index vectors for the non-null-introducing sides, built once
+    let li: Vec<usize> = if how.nullable_left() {
+        Vec::new()
+    } else {
+        lidx.iter().map(|o| o.expect("left index")).collect()
+    };
+    let ri: Vec<usize> = if how.nullable_right() || !how.keeps_right_columns() {
+        Vec::new()
+    } else {
+        ridx.iter().map(|o| o.expect("right index")).collect()
+    };
+
+    let mut fields: Vec<(String, crate::types::DType)> = Vec::new();
+    let mut cols: Vec<Column> = Vec::new();
+    for (n, t) in left.schema().fields() {
+        if let Some(j) = on.iter().position(|(lk, _)| *lk == n.as_str()) {
+            // key slot: value from whichever side is present
+            let mut kc = Column::new_empty(*t);
+            for &(lo, ro) in &pairs {
+                let v = match (lo, ro) {
+                    (Some(i), _) => lkey_cols[j].get(i),
+                    (None, Some(r)) => rkey_cols[j].get(r),
+                    (None, None) => unreachable!("join pair with no sides"),
+                };
+                kc.push(&v);
+            }
+            fields.push((n.clone(), *t));
+            cols.push(kc);
+        } else {
+            let src = left.column(n).unwrap();
+            let c = if how.nullable_left() {
+                src.take_nullable(&lidx)
+            } else {
+                src.take(&li)
+            };
+            fields.push((n.clone(), c.dtype()));
+            cols.push(c);
+        }
+    }
+    if how.keeps_right_columns() {
+        for (n, _) in right.schema().fields() {
+            if on.iter().any(|(_, rk)| *rk == n.as_str()) {
+                continue;
+            }
+            let src = right.column(n).unwrap();
+            let c = if how.nullable_right() {
+                src.take_nullable(&ridx)
+            } else {
+                src.take(&ri)
+            };
+            fields.push((n.clone(), c.dtype()));
+            cols.push(c);
+        }
+    }
+    Table::new(Schema::new(fields), cols)
+}
+
+/// Group-by aggregation (Pandas `groupby().agg`) — thin single-key wrapper
+/// over [`aggregate_by`].
 pub fn aggregate(table: &Table, key: &str, aggs: &[AggExpr]) -> Result<Table> {
-    let keys = table.column(key).context("aggregate: key")?.as_i64();
+    aggregate_by(table, &[key], aggs)
+}
+
+/// Composite-key group-by (Pandas `groupby([k1, k2]).agg`).
+pub fn aggregate_by(table: &Table, keys: &[&str], aggs: &[AggExpr]) -> Result<Table> {
+    let key_cols: Vec<&Column> = keys
+        .iter()
+        .map(|k| {
+            table
+                .column(k)
+                .with_context(|| format!("aggregate: key {k}"))
+        })
+        .collect::<Result<_>>()?;
     let mut expr_cols = Vec::with_capacity(aggs.len());
     let mut specs = Vec::with_capacity(aggs.len());
     for a in aggs {
@@ -85,8 +177,8 @@ pub fn aggregate(table: &Table, key: &str, aggs: &[AggExpr]) -> Result<Table> {
         });
         expr_cols.push(c);
     }
-    let (out_keys, out_cols) = local_hash_aggregate(keys, &expr_cols, &specs);
-    let mut pairs: Vec<(&str, Column)> = vec![(key, Column::I64(out_keys))];
+    let (key_out, out_cols) = local_hash_aggregate_keys(&key_cols, &expr_cols, &specs)?;
+    let mut pairs: Vec<(&str, Column)> = keys.iter().copied().zip(key_out).collect();
     for (a, c) in aggs.iter().zip(out_cols) {
         pairs.push((a.out.as_str(), c));
     }
@@ -222,6 +314,37 @@ mod tests {
         .unwrap();
         let s = a.sorted_by("id").unwrap();
         assert_eq!(s.column("n").unwrap().as_i64(), &[2, 1, 1]);
+    }
+
+    #[test]
+    fn left_join_and_multi_key_aggregate() {
+        let r = Table::from_pairs(vec![
+            ("cid", Column::I64(vec![1, 3])),
+            ("w", Column::I64(vec![10, 30])),
+        ])
+        .unwrap();
+        let j = join_on(&t(), &r, &[("id", "cid")], JoinType::Left).unwrap();
+        assert_eq!(j.num_rows(), 4); // all left rows survive
+        let w = j.column("w").unwrap().as_f64(); // promoted
+        // id column: [1, 2, 1, 3] → w = [10, NaN, 10, 30]
+        assert_eq!(w[0], 10.0);
+        assert!(w[1].is_nan());
+        assert_eq!(w[3], 30.0);
+        // multi-key aggregate: group by (id, x>1) pairs
+        let t2 = Table::from_pairs(vec![
+            ("k1", Column::I64(vec![1, 1, 2])),
+            ("k2", Column::I64(vec![0, 0, 1])),
+            ("x", Column::F64(vec![1.0, 2.0, 3.0])),
+        ])
+        .unwrap();
+        let a = aggregate_by(
+            &t2,
+            &["k1", "k2"],
+            &[AggExpr::new("s", AggFn::Sum, col("x"))],
+        )
+        .unwrap();
+        assert_eq!(a.num_rows(), 2);
+        assert_eq!(a.schema().names(), vec!["k1", "k2", "s"]);
     }
 
     #[test]

@@ -24,8 +24,10 @@ use super::rowexpr::{compile_row_expr, eval_row, RowExpr};
 use super::Row;
 use crate::column::Column;
 use crate::expr::{AggExpr, AggFn, AggState, Expr};
+use crate::ops::join::local_join_pairs;
+use crate::ops::keys::{hash_key_row, KeyRow, KeyVal};
 use crate::table::{Schema, Table};
-use crate::types::{DType, Value};
+use crate::types::{DType, JoinType, Value};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -240,70 +242,176 @@ impl SparkLike {
         )
     }
 
-    /// Inner equi-join via hash shuffle on both sides.
+    /// Inner equi-join via hash shuffle on both sides — thin single-key
+    /// wrapper over [`SparkLike::join_on`].
     pub fn join(&self, left: &Rdd, right: &Rdd, lk: &str, rk: &str) -> Result<Rdd> {
-        let li = left
-            .schema
-            .index_of(lk)
-            .with_context(|| format!("join: no column {lk}"))?;
-        let ri = right
-            .schema
-            .index_of(rk)
-            .with_context(|| format!("join: no column {rk}"))?;
-        let keyed_l: Vec<Vec<(i64, Row)>> = self.run_stage(left.parts.clone(), move |_, rows| {
-            keyed_by(rows, li)
-        });
-        let keyed_r: Vec<Vec<(i64, Row)>> = self.run_stage(right.parts.clone(), move |_, rows| {
-            keyed_by(rows, ri)
-        });
+        self.join_on(left, right, &[(lk, rk)], JoinType::Inner)
+    }
+
+    /// Composite-key join with join-type semantics. Rows route by the Fx
+    /// hash of their key tuple; the reduce side runs the same
+    /// [`local_join_pairs`] kernel as the HiFrames engine, then assembles
+    /// rows with the null-introducing promotions of the output schema.
+    pub fn join_on(
+        &self,
+        left: &Rdd,
+        right: &Rdd,
+        on: &[(&str, &str)],
+        how: JoinType,
+    ) -> Result<Rdd> {
+        if on.is_empty() {
+            bail!("join: needs at least one key pair");
+        }
+        let li: Vec<usize> = on
+            .iter()
+            .map(|(lk, _)| {
+                left.schema
+                    .index_of(lk)
+                    .with_context(|| format!("join: no column {lk}"))
+            })
+            .collect::<Result<_>>()?;
+        let ri: Vec<usize> = on
+            .iter()
+            .map(|(_, rk)| {
+                right
+                    .schema
+                    .index_of(rk)
+                    .with_context(|| format!("join: no column {rk}"))
+            })
+            .collect::<Result<_>>()?;
+        for (&l, &r) in li.iter().zip(&ri) {
+            let (lt, rt) = (left.schema.fields()[l].1, right.schema.fields()[r].1);
+            if lt != rt {
+                bail!("join: key pair dtype mismatch {lt} vs {rt}");
+            }
+            if !lt.is_groupable() {
+                bail!("join key must be Int64/Bool/String, got {lt}");
+            }
+        }
+        // output schema (mirrors the IR typing rule)
+        let mut fields: Vec<(String, DType)> = Vec::new();
+        for (n, t) in left.schema.fields() {
+            let is_key = on.iter().any(|(lk, _)| *lk == n.as_str());
+            let t = if !is_key && how.nullable_left() {
+                t.null_joined()
+            } else {
+                *t
+            };
+            fields.push((n.clone(), t));
+        }
+        if how.keeps_right_columns() {
+            for (n, t) in right.schema.fields() {
+                if on.iter().any(|(_, rk)| *rk == n.as_str()) {
+                    continue;
+                }
+                if left.schema.dtype_of(n).is_some() {
+                    bail!("join: column {n} on both sides");
+                }
+                let t = if how.nullable_right() { t.null_joined() } else { *t };
+                fields.push((n.clone(), t));
+            }
+        }
+        let schema = Schema::new(fields);
+
+        let li2 = li.clone();
+        let keyed_l: Vec<Vec<(i64, Row)>> =
+            self.run_stage(left.parts.clone(), move |_, rows| {
+                keyed_by_hash(rows, &li2)
+            });
+        let ri2 = ri.clone();
+        let keyed_r: Vec<Vec<(i64, Row)>> =
+            self.run_stage(right.parts.clone(), move |_, rows| {
+                keyed_by_hash(rows, &ri2)
+            });
         let nreduce = self.partitions;
         let lparts = self.shuffle_rows(keyed_l, nreduce);
         let rparts = self.shuffle_rows(keyed_r, nreduce);
-        // reduce side: per-partition hash join
+        // reduce side: per-partition typed hash join over key tuples
+        let lfields = left.schema.fields().to_vec();
+        let rfields = right.schema.fields().to_vec();
         let joined: Vec<Vec<Row>> = self.run_stage(
             lparts.into_iter().zip(rparts).collect::<Vec<_>>(),
             move |_, (lrows, rrows): (Vec<(i64, Row)>, Vec<(i64, Row)>)| {
-                let mut index: HashMap<i64, Vec<Row>> = HashMap::new();
-                for (k, row) in rrows {
-                    let mut slim = row;
-                    slim.remove(ri);
-                    index.entry(k).or_default().push(slim);
-                }
-                let mut out = Vec::new();
-                for (k, lrow) in lrows {
-                    if let Some(matches) = index.get(&k) {
-                        for m in matches {
-                            let mut row = lrow.clone();
-                            row.extend(m.iter().cloned());
-                            out.push(row);
+                let lrows: Vec<Row> = lrows.into_iter().map(|(_, r)| r).collect();
+                let rrows: Vec<Row> = rrows.into_iter().map(|(_, r)| r).collect();
+                let lkeys: Vec<KeyRow> = lrows.iter().map(|r| row_key(r, &li)).collect();
+                let rkeys: Vec<KeyRow> = rrows.iter().map(|r| row_key(r, &ri)).collect();
+                let pairs = local_join_pairs(&lkeys, &rkeys, how);
+                let mut out = Vec::with_capacity(pairs.len());
+                for (lo, ro) in pairs {
+                    let mut row: Row = Vec::new();
+                    // left slots, keys taken from whichever side is present
+                    for (ci, (_, t)) in lfields.iter().enumerate() {
+                        if let Some(kj) = li.iter().position(|&k| k == ci) {
+                            let v = match (lo, ro) {
+                                (Some(i), _) => lrows[i][ci].clone(),
+                                (None, Some(j)) => rrows[j][ri[kj]].clone(),
+                                (None, None) => unreachable!("join pair with no sides"),
+                            };
+                            row.push(v);
+                        } else if how.nullable_left() {
+                            row.push(match lo {
+                                Some(i) => null_promote_cell(&lrows[i][ci]),
+                                None => null_cell(*t),
+                            });
+                        } else {
+                            row.push(lrows[lo.expect("left row")][ci].clone());
                         }
                     }
+                    if how.keeps_right_columns() {
+                        for (ci, (_, t)) in rfields.iter().enumerate() {
+                            if ri.contains(&ci) {
+                                continue;
+                            }
+                            if how.nullable_right() {
+                                row.push(match ro {
+                                    Some(j) => null_promote_cell(&rrows[j][ci]),
+                                    None => null_cell(*t),
+                                });
+                            } else {
+                                row.push(rrows[ro.expect("right row")][ci].clone());
+                            }
+                        }
+                    }
+                    out.push(row);
                 }
                 out
             },
         );
-        let mut fields = left.schema.fields().to_vec();
-        for (n, t) in right.schema.fields() {
-            if n == rk {
-                continue;
-            }
-            if left.schema.dtype_of(n).is_some() {
-                bail!("join: column {n} on both sides");
-            }
-            fields.push((n.clone(), *t));
-        }
         Ok(Rdd {
-            schema: Schema::new(fields),
+            schema,
             parts: joined,
         })
     }
 
-    /// Group-by aggregation with map-side combine.
+    /// Group-by aggregation with map-side combine — thin single-key wrapper
+    /// over [`SparkLike::aggregate_by`].
     pub fn aggregate(&self, rdd: &Rdd, key: &str, aggs: &[AggExpr]) -> Result<Rdd> {
-        let ki = rdd
-            .schema
-            .index_of(key)
-            .with_context(|| format!("aggregate: no column {key}"))?;
+        self.aggregate_by(rdd, &[key], aggs)
+    }
+
+    /// Composite-key group-by aggregation with map-side combine. Partial
+    /// states travel the shuffle as encoded rows keyed by the hash of the
+    /// key tuple; the key cells ride along so the reduce side can merge by
+    /// the actual tuple.
+    pub fn aggregate_by(&self, rdd: &Rdd, keys: &[&str], aggs: &[AggExpr]) -> Result<Rdd> {
+        if keys.is_empty() {
+            bail!("aggregate: needs at least one key column");
+        }
+        let ki: Vec<usize> = keys
+            .iter()
+            .map(|k| {
+                rdd.schema
+                    .index_of(k)
+                    .with_context(|| format!("aggregate: no column {k}"))
+            })
+            .collect::<Result<_>>()?;
+        for &i in &ki {
+            let kt = rdd.schema.fields()[i].1;
+            if !kt.is_groupable() {
+                bail!("aggregate key must be Int64/Bool/String, got {kt}");
+            }
+        }
         let compiled: Vec<(RowExpr, AggFn, DType)> = aggs
             .iter()
             .map(|a| {
@@ -316,12 +424,13 @@ impl SparkLike {
             .collect::<Result<_>>()?;
         let compiled = Arc::new(compiled);
         let c2 = compiled.clone();
-        // map side: partial states per key (the combiner)
+        let ki2 = ki.clone();
+        // map side: partial states per key tuple (the combiner)
         let combined: Vec<Vec<(i64, Row)>> =
             self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
-                let mut table: HashMap<i64, Vec<AggState>> = HashMap::new();
+                let mut table: HashMap<KeyRow, Vec<AggState>> = HashMap::new();
                 for row in rows {
-                    let k = row[ki].as_i64().expect("agg key not int");
+                    let k = row_key(&row, &ki2);
                     let states = table.entry(k).or_insert_with(|| {
                         c2.iter()
                             .map(|(_, f, dt)| AggState::new(*f, *dt))
@@ -331,7 +440,8 @@ impl SparkLike {
                         s.update(&eval_row(e, &row).expect("agg expr"));
                     }
                 }
-                // partial states travel the shuffle as encoded rows
+                // partial states travel the shuffle as encoded rows: the key
+                // cells first, then the state bytes in one Str cell
                 table
                     .into_iter()
                     .map(|(k, states)| {
@@ -339,16 +449,24 @@ impl SparkLike {
                         for s in &states {
                             s.encode(&mut buf);
                         }
-                        (k, vec![Value::Str(unsafe_bytes_to_str(buf))])
+                        let hash = hash_key_row(&k) as i64;
+                        let mut row: Row = k.iter().map(|v| v.to_value()).collect();
+                        row.push(Value::Str(unsafe_bytes_to_str(buf)));
+                        (hash, row)
                     })
                     .collect()
             });
         let merged = self.shuffle_rows(combined, self.partitions);
         let c3 = compiled.clone();
+        let nkeys = ki.len();
         let parts: Vec<Vec<Row>> = self.run_stage(merged, move |_, rows: Vec<(i64, Row)>| {
-            let mut table: HashMap<i64, Vec<AggState>> = HashMap::new();
-            for (k, row) in rows {
-                let Value::Str(ref encoded) = row[0] else {
+            let mut table: HashMap<KeyRow, Vec<AggState>> = HashMap::new();
+            for (_, row) in rows {
+                let k: KeyRow = row[..nkeys]
+                    .iter()
+                    .map(|v| KeyVal::from_value(v).expect("agg key cell"))
+                    .collect();
+                let Value::Str(ref encoded) = row[nkeys] else {
                     panic!("agg shuffle row")
                 };
                 let bytes = str_to_bytes(encoded);
@@ -368,11 +486,12 @@ impl SparkLike {
                     }
                 }
             }
-            let mut keys: Vec<i64> = table.keys().copied().collect();
-            keys.sort_unstable();
-            keys.into_iter()
+            let mut krows: Vec<KeyRow> = table.keys().cloned().collect();
+            krows.sort();
+            krows
+                .into_iter()
                 .map(|k| {
-                    let mut row: Row = vec![Value::I64(k)];
+                    let mut row: Row = k.iter().map(|v| v.to_value()).collect();
                     for s in &table[&k] {
                         row.push(s.finish());
                     }
@@ -380,7 +499,11 @@ impl SparkLike {
                 })
                 .collect()
         });
-        let mut fields = vec![(key.to_string(), DType::I64)];
+        let mut fields: Vec<(String, DType)> = Vec::new();
+        for k in keys {
+            let kt = rdd.schema.dtype_of(k).unwrap();
+            fields.push((k.to_string(), kt));
+        }
         for a in aggs {
             fields.push((a.out.clone(), a.output_dtype(&rdd.schema)?));
         }
@@ -511,13 +634,42 @@ impl Rdd {
     }
 }
 
-fn keyed_by(rows: Vec<Row>, key_idx: usize) -> Vec<(i64, Row)> {
+/// Key tuple of one row (cells at `key_idx`). Panics on F64 key cells —
+/// callers validate key dtypes against the schema first.
+fn row_key(row: &Row, key_idx: &[usize]) -> KeyRow {
+    key_idx
+        .iter()
+        .map(|&i| KeyVal::from_value(&row[i]).expect("F64 join/group key"))
+        .collect()
+}
+
+/// Key every row by the Fx hash of its key tuple (routing only; the reduce
+/// side re-derives the tuple from the row cells).
+fn keyed_by_hash(rows: Vec<Row>, key_idx: &[usize]) -> Vec<(i64, Row)> {
     rows.into_iter()
         .map(|r| {
-            let k = r[key_idx].as_i64().expect("join key not int");
-            (k, r)
+            let h = hash_key_row(&row_key(&r, key_idx)) as i64;
+            (h, r)
         })
         .collect()
+}
+
+/// Null-side promotion for a present cell of a nullable join side
+/// (I64/Bool → F64, mirroring [`DType::null_joined`]).
+fn null_promote_cell(v: &Value) -> Value {
+    match v {
+        Value::I64(x) => Value::F64(*x as f64),
+        Value::Bool(b) => Value::F64(*b as i64 as f64),
+        other => other.clone(),
+    }
+}
+
+/// The missing value of a null-introduced column.
+fn null_cell(dt: DType) -> Value {
+    match dt {
+        DType::Str => Value::Str(String::new()),
+        _ => Value::F64(f64::NAN),
+    }
 }
 
 // row wire format: key + cell-tagged values
@@ -728,6 +880,66 @@ mod tests {
             )
             .unwrap();
         assert_eq!(eng.collect(&w).unwrap().num_rows(), 8);
+    }
+
+    #[test]
+    fn left_join_and_multi_key_aggregate_parity() {
+        let eng = SparkLike::new(2, 3);
+        let left = Table::from_pairs(vec![
+            ("id", Column::I64(vec![1, 2, 3, 4])),
+            ("x", Column::F64(vec![0.1, 0.2, 0.3, 0.4])),
+        ])
+        .unwrap();
+        let right = Table::from_pairs(vec![
+            ("rid", Column::I64(vec![2, 4])),
+            ("w", Column::I64(vec![20, 40])),
+        ])
+        .unwrap();
+        let j = eng
+            .join_on(
+                &eng.parallelize(&left),
+                &eng.parallelize(&right),
+                &[("id", "rid")],
+                JoinType::Left,
+            )
+            .unwrap();
+        assert_eq!(j.schema.dtype_of("w"), Some(DType::F64)); // promoted
+        let t = eng.collect(&j).unwrap().sorted_by("id").unwrap();
+        assert_eq!(t.num_rows(), 4);
+        let w = t.column("w").unwrap().as_f64();
+        assert!(w[0].is_nan() && w[2].is_nan());
+        assert_eq!(w[1], 20.0);
+        assert_eq!(w[3], 40.0);
+        // multi-key aggregate over (id % 2, id): 4 singleton groups in
+        // lexicographic tuple order
+        let keyed = eng
+            .with_column(
+                &eng.parallelize(&left),
+                "k2",
+                &col("id").rem(lit(2i64)),
+            )
+            .unwrap();
+        let agg = eng
+            .aggregate_by(
+                &keyed,
+                &["k2", "id"],
+                &[AggExpr::new("s", AggFn::Sum, col("x"))],
+            )
+            .unwrap();
+        assert_eq!(agg.schema.names(), vec!["k2", "id", "s"]);
+        let t = eng.collect(&agg).unwrap();
+        let t = t
+            .sorted_by_keys(&[
+                ("k2", crate::types::SortOrder::Asc),
+                ("id", crate::types::SortOrder::Asc),
+            ])
+            .unwrap();
+        assert_eq!(t.column("k2").unwrap().as_i64(), &[0, 0, 1, 1]);
+        assert_eq!(t.column("id").unwrap().as_i64(), &[2, 4, 1, 3]);
+        let s = t.column("s").unwrap().as_f64();
+        for (got, want) in s.iter().zip(&[0.2, 0.4, 0.1, 0.3]) {
+            assert!((got - want).abs() < 1e-9);
+        }
     }
 
     #[test]

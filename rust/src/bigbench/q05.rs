@@ -21,6 +21,7 @@ use crate::expr::{col, lit, AggExpr, AggFn};
 use crate::frame::{DataFrame, HiFrames};
 use crate::ml::LogRegResult;
 use crate::table::Table;
+use crate::types::JoinType;
 use anyhow::Result;
 
 /// The category whose clicks become the label.
@@ -50,7 +51,14 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
     }
     let user_cat = clicks_cat.aggregate("wcs_user_sk", aggs);
     let with_cust = user_cat.join(&customer, "wcs_user_sk", "c_customer_sk");
-    let with_demo = with_cust.join(&demo, "c_current_cdemo_sk", "cd_demo_sk");
+    // demographics is a *sparse* dimension: a LEFT join keeps users whose
+    // demo row is missing (their cd_* features become NaN and the derived
+    // 0/1 features fall back to 0 — NaN comparisons are false)
+    let with_demo = with_cust.join_on(
+        &demo,
+        &[("c_current_cdemo_sk", "cd_demo_sk")],
+        JoinType::Left,
+    );
     with_demo
         .with_column(
             "college_education",
@@ -123,7 +131,12 @@ pub fn sparklike_relational(eng: &SparkLike, db: &BbTables) -> Result<Rdd> {
     }
     let user_cat = eng.aggregate(&clicks_cat, "wcs_user_sk", &aggs)?;
     let with_cust = eng.join(&user_cat, &customer, "wcs_user_sk", "c_customer_sk")?;
-    let with_demo = eng.join(&with_cust, &demo, "c_current_cdemo_sk", "cd_demo_sk")?;
+    let with_demo = eng.join_on(
+        &with_cust,
+        &demo,
+        &[("c_current_cdemo_sk", "cd_demo_sk")],
+        JoinType::Left,
+    )?;
     let a = eng.with_column(
         &with_demo,
         "college_education",
@@ -194,6 +207,46 @@ mod tests {
         for c in ["wcs_user_sk", "label", "college_education", "male", "cat2"] {
             assert_eq!(ours.column(c).unwrap(), theirs.column(c).unwrap(), "{c}");
         }
+    }
+
+    #[test]
+    fn engines_agree_on_q05_with_sparse_demographics() {
+        // drop half the demographics rows: the LEFT join must keep every
+        // user, NaN-filling the missing cd_* features identically on both
+        // engines (the derived 0/1 features then agree exactly)
+        let mut db = generate(&GenOptions {
+            scale_factor: 0.15,
+            ..Default::default()
+        });
+        let full = db.customer_demographics.num_rows();
+        db.customer_demographics = db.customer_demographics.slice(0, full / 2);
+
+        let hf = HiFrames::with_workers(3);
+        let ours = hiframes_relational(&hf, &db)
+            .sort_by("wcs_user_sk")
+            .collect()
+            .unwrap();
+        let eng = SparkLike::new(2, 3);
+        let theirs = eng
+            .collect(&sparklike_relational(&eng, &db).unwrap())
+            .unwrap()
+            .sorted_by("wcs_user_sk")
+            .unwrap();
+        assert!(ours.num_rows() > 0);
+        assert_eq!(ours.num_rows(), theirs.num_rows());
+        for c in ["wcs_user_sk", "label", "college_education", "male"] {
+            assert_eq!(ours.column(c).unwrap(), theirs.column(c).unwrap(), "{c}");
+        }
+        // at least one user lost their demo row → their education is 0 even
+        // though some demo rows would have said otherwise
+        let missing = ours
+            .column("cd_education")
+            .unwrap()
+            .as_f64()
+            .iter()
+            .filter(|v| v.is_nan())
+            .count();
+        assert!(missing > 0, "expected NaN-filled demographics");
     }
 
     #[test]

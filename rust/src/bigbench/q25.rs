@@ -1,13 +1,17 @@
 //! TPCx-BB Q25 — customer RFM segmentation over store AND web sales.
 //!
-//! Relational stage (Fig. 11b):
+//! Relational stage (Fig. 11b), redesigned around the composite-key API:
 //! 1. filter both fact tables to `sold_date > cutoff`;
-//! 2. per-channel aggregate by customer:
-//!    `frequency = count_distinct(ticket/order)`, `totalspend = sum(net_paid)`,
-//!    `recency = max(sold_date)` — count-distinct is the "computationally
-//!    expensive operation" the paper credits for Q25's wider gap;
-//! 3. rename to a common schema, concat the two channels;
-//! 4. re-aggregate: `max(recency), sum(frequency), sum(totalspend)`.
+//! 2. normalize each channel to a common `(cid, ticket, date, paid)` schema
+//!    and tag it with a `chan` id (store = 0, web = 1);
+//! 3. concat the raw line items and aggregate **by the composite key
+//!    `(cid, chan)`**: `frequency = count_distinct(ticket)`,
+//!    `totalspend = sum(paid)`, `recency = max(date)` — count-distinct is
+//!    the "computationally expensive operation" the paper credits for
+//!    Q25's wider gap, and the channel key keeps ticket numbers from
+//!    colliding across channels;
+//! 4. re-aggregate by customer: `max(recency), sum(frequency),
+//!    sum(totalspend)`.
 //!
 //! ML tail: k-means over (recency, frequency, totalspend).
 
@@ -19,24 +23,31 @@ use crate::frame::{DataFrame, HiFrames};
 use crate::table::Table;
 use anyhow::Result;
 
-/// Per-channel aggregation, HiFrames side.
+/// The per-(customer, channel) RFM aggregates.
+fn rfm_aggs() -> Vec<AggExpr> {
+    vec![
+        AggExpr::new("recency", AggFn::Max, col("date")),
+        AggExpr::new("frequency", AggFn::CountDistinct, col("ticket")),
+        AggExpr::new("totalspend", AggFn::Sum, col("paid")),
+    ]
+}
+
+/// Normalize one channel to the common line-item schema, HiFrames side.
 fn channel_hiframes(
     df: &DataFrame,
     cust: &str,
     ticket: &str,
     date: &str,
     paid: &str,
+    chan: i64,
 ) -> DataFrame {
     df.filter(col(date).gt(lit(Q25_CUTOFF)))
-        .aggregate(
-            cust,
-            vec![
-                AggExpr::new("recency", AggFn::Max, col(date)),
-                AggExpr::new("frequency", AggFn::CountDistinct, col(ticket)),
-                AggExpr::new("totalspend", AggFn::Sum, col(paid)),
-            ],
-        )
         .rename(cust, "cid")
+        .rename(ticket, "ticket")
+        .rename(date, "date")
+        .rename(paid, "paid")
+        .select(&["cid", "ticket", "date", "paid"])
+        .with_column("chan", lit(chan))
 }
 
 /// The relational stage as a HiFrames data frame.
@@ -49,6 +60,7 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
         "ss_ticket_number",
         "ss_sold_date_sk",
         "ss_net_paid",
+        0,
     );
     let w = channel_hiframes(
         &ws,
@@ -56,15 +68,18 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
         "ws_order_number",
         "ws_sold_date_sk",
         "ws_net_paid",
+        1,
     );
-    s.concat(&w).aggregate(
-        "cid",
-        vec![
-            AggExpr::new("recency", AggFn::Max, col("recency")),
-            AggExpr::new("frequency", AggFn::Sum, col("frequency")),
-            AggExpr::new("totalspend", AggFn::Sum, col("totalspend")),
-        ],
-    )
+    s.concat(&w)
+        .aggregate_by(&["cid", "chan"], rfm_aggs())
+        .aggregate(
+            "cid",
+            vec![
+                AggExpr::new("recency", AggFn::Max, col("recency")),
+                AggExpr::new("frequency", AggFn::Sum, col("frequency")),
+                AggExpr::new("totalspend", AggFn::Sum, col("totalspend")),
+            ],
+        )
 }
 
 /// Full pipeline: relational + k-means.
@@ -84,6 +99,26 @@ pub fn hiframes_full(
     Ok((relational, centroids))
 }
 
+/// Rename columns of an RDD (schema metadata only — rows are positional).
+fn rename_rdd(rdd: Rdd, renames: &[(&str, &str)]) -> Rdd {
+    Rdd {
+        schema: crate::table::Schema::new(
+            rdd.schema
+                .fields()
+                .iter()
+                .map(|(n, t)| {
+                    match renames.iter().find(|(from, _)| *from == n.as_str()) {
+                        Some((_, to)) => (to.to_string(), *t),
+                        None => (n.clone(), *t),
+                    }
+                })
+                .collect(),
+        ),
+        parts: rdd.parts,
+    }
+}
+
+/// Normalize one channel to the common line-item schema, sparklike side.
 fn channel_sparklike(
     eng: &SparkLike,
     rdd: &Rdd,
@@ -91,35 +126,20 @@ fn channel_sparklike(
     ticket: &str,
     date: &str,
     paid: &str,
+    chan: i64,
 ) -> Result<Rdd> {
     let filtered = eng.filter(rdd, &col(date).gt(lit(Q25_CUTOFF)))?;
-    let agg = eng.aggregate(
-        &filtered,
-        cust,
+    let renamed = rename_rdd(
+        filtered,
         &[
-            AggExpr::new("recency", AggFn::Max, col(date)),
-            AggExpr::new("frequency", AggFn::CountDistinct, col(ticket)),
-            AggExpr::new("totalspend", AggFn::Sum, col(paid)),
+            (cust, "cid"),
+            (ticket, "ticket"),
+            (date, "date"),
+            (paid, "paid"),
         ],
-    )?;
-    // rename key column to the common name by projecting through withColumn
-    let renamed = Rdd {
-        schema: crate::table::Schema::new(
-            agg.schema
-                .fields()
-                .iter()
-                .map(|(n, t)| {
-                    if n == cust {
-                        ("cid".to_string(), *t)
-                    } else {
-                        (n.clone(), *t)
-                    }
-                })
-                .collect(),
-        ),
-        parts: agg.parts,
-    };
-    Ok(renamed)
+    );
+    let sel = eng.select(&renamed, &["cid", "ticket", "date", "paid"])?;
+    eng.with_column(&sel, "chan", &lit(chan))
 }
 
 /// The relational stage on the sparklike engine.
@@ -133,6 +153,7 @@ pub fn sparklike_relational(eng: &SparkLike, db: &BbTables) -> Result<Rdd> {
         "ss_ticket_number",
         "ss_sold_date_sk",
         "ss_net_paid",
+        0,
     )?;
     let w = channel_sparklike(
         eng,
@@ -141,14 +162,16 @@ pub fn sparklike_relational(eng: &SparkLike, db: &BbTables) -> Result<Rdd> {
         "ws_order_number",
         "ws_sold_date_sk",
         "ws_net_paid",
+        1,
     )?;
     // union: concat partition lists (schemas identical)
     let union = Rdd {
         schema: s.schema.clone(),
         parts: s.parts.into_iter().chain(w.parts).collect(),
     };
+    let per_chan = eng.aggregate_by(&union, &["cid", "chan"], &rfm_aggs())?;
     eng.aggregate(
-        &union,
+        &per_chan,
         "cid",
         &[
             AggExpr::new("recency", AggFn::Max, col("recency")),

@@ -17,6 +17,7 @@ use crate::baseline::sparklike::{Rdd, SparkLike};
 use crate::expr::{col, lit, AggExpr, AggFn};
 use crate::frame::{DataFrame, HiFrames};
 use crate::table::Table;
+use crate::types::SortOrder;
 use anyhow::Result;
 
 /// Q26 parameters (kit defaults scaled down).
@@ -50,17 +51,31 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables, p: &Q26Params) -> DataF
     let books = item.filter(col("i_category").eq_(lit(p.category.as_str())));
     let sale_items = store_sales.join(&books, "ss_item_sk", "i_item_sk");
 
-    let mut aggs = vec![AggExpr::new("cnt", AggFn::Count, col("i_class_id"))];
+    let mut gb = sale_items
+        .group_by(&["ss_customer_sk"])
+        .agg("cnt", AggFn::Count, col("i_class_id"));
     for k in 1..=N_FEATURES {
-        aggs.push(AggExpr::new(
-            &format!("id{k}"),
-            AggFn::Sum,
-            col("i_class_id").eq_(lit(k)),
-        ));
+        gb = gb.agg(&format!("id{k}"), AggFn::Sum, col("i_class_id").eq_(lit(k)));
     }
-    sale_items
-        .aggregate("ss_customer_sk", aggs)
-        .filter(col("cnt").gt(lit(p.min_count)))
+    gb.build().filter(col("cnt").gt(lit(p.min_count)))
+}
+
+/// Top-N customers by in-category purchase count — the kit's ORDER-BY-then-
+/// LIMIT tail, expressed as a multi-key distributed sort
+/// (`cnt` descending, customer ascending for determinism).
+pub fn top_customers(
+    hf: &HiFrames,
+    db: &BbTables,
+    p: &Q26Params,
+    n: usize,
+) -> Result<Table> {
+    let sorted = hiframes_relational(hf, db, p)
+        .sort_by_keys(&[
+            ("cnt", SortOrder::Desc),
+            ("ss_customer_sk", SortOrder::Asc),
+        ])
+        .collect()?;
+    Ok(sorted.slice(0, n.min(sorted.num_rows())))
 }
 
 /// Full HiFrames Q26: relational stage + feature scaling + k-means.
@@ -137,6 +152,36 @@ mod tests {
         );
         assert_eq!(ours.column("cnt").unwrap(), theirs.column("cnt").unwrap());
         assert_eq!(ours.column("id3").unwrap(), theirs.column("id3").unwrap());
+    }
+
+    #[test]
+    fn top_customers_matches_serial_order_by() {
+        let db = generate(&GenOptions {
+            scale_factor: 0.2,
+            ..Default::default()
+        });
+        let p = Q26Params::default();
+        let hf = HiFrames::with_workers(3);
+        let top = top_customers(&hf, &db, &p, 10).unwrap();
+        // serial oracle: collect unsorted, canonicalize with the Table-level
+        // multi-key sort, take the same prefix
+        let all = hiframes_relational(&hf, &db, &p).collect().unwrap();
+        let expect = all
+            .sorted_by_keys(&[
+                ("cnt", SortOrder::Desc),
+                ("ss_customer_sk", SortOrder::Asc),
+            ])
+            .unwrap()
+            .slice(0, top.num_rows());
+        assert!(top.num_rows() > 0);
+        assert_eq!(
+            top.column("ss_customer_sk").unwrap(),
+            expect.column("ss_customer_sk").unwrap()
+        );
+        assert_eq!(top.column("cnt").unwrap(), expect.column("cnt").unwrap());
+        // counts are non-increasing
+        let cnt = top.column("cnt").unwrap().as_i64();
+        assert!(cnt.windows(2).all(|w| w[0] >= w[1]));
     }
 
     #[test]

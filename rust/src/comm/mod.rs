@@ -20,7 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
-/// Shared communication counters (read by benches and EXPERIMENTS.md runs).
+/// Shared communication counters (read by the benches).
 #[derive(Debug, Default)]
 pub struct CommStats {
     pub messages: AtomicU64,

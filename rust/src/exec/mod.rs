@@ -13,7 +13,7 @@ use crate::ir::{Plan, SourceRef};
 use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy};
 use crate::passes::{optimize, PassOptions};
 use crate::table::{Schema, Table};
-use crate::types::DType;
+use crate::types::{DType, SortOrder};
 use anyhow::{bail, Context, Result};
 
 /// Execution options: worker (rank) count, optimizer toggles and the
@@ -53,14 +53,6 @@ impl LocalFrame {
             .index_of(name)
             .with_context(|| format!("local frame: no column :{name}"))?;
         Ok(&self.cols[i])
-    }
-
-    fn take_col(&mut self, name: &str) -> Result<Column> {
-        let i = self
-            .schema
-            .index_of(name)
-            .with_context(|| format!("local frame: no column :{name}"))?;
-        Ok(self.cols[i].clone())
     }
 
     /// Materialize this rank's chunk as a table (debug/inspection).
@@ -230,20 +222,26 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         Plan::Join {
             left,
             right,
-            left_key,
-            right_key,
+            on,
+            how,
         } => {
             let lframe = exec_node(left, comm, opts)?;
             let rframe = exec_node(right, comm, opts)?;
-            let lkeys = lframe.col(left_key)?.as_i64().to_vec();
-            let rkeys = rframe.col(right_key)?.as_i64().to_vec();
+            let lkey_cols: Vec<Column> = on
+                .iter()
+                .map(|(lk, _)| lframe.col(lk).map(|c| c.clone()))
+                .collect::<Result<_>>()?;
+            let rkey_cols: Vec<Column> = on
+                .iter()
+                .map(|(_, rk)| rframe.col(rk).map(|c| c.clone()))
+                .collect::<Result<_>>()?;
             // payload columns exclude the key columns (reinserted after)
             let lpay: Vec<Column> = lframe
                 .schema
                 .fields()
                 .iter()
                 .zip(&lframe.cols)
-                .filter(|((n, _), _)| n != left_key)
+                .filter(|((n, _), _)| !on.iter().any(|(lk, _)| lk == n))
                 .map(|(_, c)| c.clone())
                 .collect();
             let rpay: Vec<Column> = rframe
@@ -251,40 +249,44 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 .fields()
                 .iter()
                 .zip(&rframe.cols)
-                .filter(|((n, _), _)| n != right_key)
+                .filter(|((n, _), _)| !on.iter().any(|(_, rk)| rk == n))
                 .map(|(_, c)| c.clone())
                 .collect();
-            let (keys, lout, rout) =
-                ops::distributed_join(comm, &lkeys, &lpay, &rkeys, &rpay)?;
+            let (keys_out, lout, rout) = ops::distributed_join_on(
+                comm, &lkey_cols, &lpay, &rkey_cols, &rpay, *how,
+            )?;
             // assemble output per the join schema: left fields in order
-            // (key replaced by joined keys), then right minus key
+            // (each key slot takes its joined key column), then — unless the
+            // join type drops them — right fields minus the right keys
             let schema = plan.schema()?;
             let mut cols = Vec::with_capacity(schema.len());
             let mut li = 0usize;
             for (n, _) in lframe.schema.fields() {
-                if n == left_key {
-                    cols.push(Column::I64(keys.clone()));
+                if let Some(j) = on.iter().position(|(lk, _)| lk == n) {
+                    cols.push(keys_out[j].clone());
                 } else {
                     cols.push(lout[li].clone());
                     li += 1;
                 }
             }
-            let mut ri = 0usize;
-            for (n, _) in rframe.schema.fields() {
-                if n == right_key {
-                    continue;
+            if how.keeps_right_columns() {
+                let mut ri = 0usize;
+                for (n, _) in rframe.schema.fields() {
+                    if on.iter().any(|(_, rk)| rk == n) {
+                        continue;
+                    }
+                    cols.push(rout[ri].clone());
+                    ri += 1;
                 }
-                cols.push(rout[ri].clone());
-                ri += 1;
             }
-            Ok(LocalFrame {
-                schema,
-                cols,
-            })
+            Ok(LocalFrame { schema, cols })
         }
-        Plan::Aggregate { input, key, aggs } => {
+        Plan::Aggregate { input, keys, aggs } => {
             let frame = exec_node(input, comm, opts)?;
-            let keys = frame.col(key)?.as_i64().to_vec();
+            let key_cols: Vec<Column> = keys
+                .iter()
+                .map(|k| frame.col(k).map(|c| c.clone()))
+                .collect::<Result<_>>()?;
             // evaluate the expression array of every aggregate locally
             // (pre-shuffle), exactly like the paper's desugaring
             let mut expr_cols = Vec::with_capacity(aggs.len());
@@ -297,10 +299,15 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 });
                 expr_cols.push(c);
             }
-            let (out_keys, out_cols) =
-                ops::distributed_aggregate(comm, &keys, &expr_cols, &specs, opts.agg_strategy)?;
+            let (key_out, out_cols) = ops::distributed_aggregate_keys(
+                comm,
+                &key_cols,
+                &expr_cols,
+                &specs,
+                opts.agg_strategy,
+            )?;
             let schema = plan.schema()?;
-            let mut cols = vec![Column::I64(out_keys)];
+            let mut cols = key_out;
             cols.extend(out_cols);
             Ok(LocalFrame { schema, cols })
         }
@@ -342,23 +349,28 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             let new_col = Column::F64(ops::stencil_1d(comm, &xs, weights));
             append_column(frame, out, new_col)
         }
-        Plan::Sort { input, key } => {
-            let mut frame = exec_node(input, comm, opts)?;
-            let keys = frame.take_col(key)?.as_i64().to_vec();
+        Plan::Sort { input, keys } => {
+            let frame = exec_node(input, comm, opts)?;
+            let key_cols: Vec<Column> = keys
+                .iter()
+                .map(|(k, _)| frame.col(k).map(|c| c.clone()))
+                .collect::<Result<_>>()?;
+            let orders: Vec<SortOrder> = keys.iter().map(|(_, o)| *o).collect();
             let others: Vec<Column> = frame
                 .schema
                 .fields()
                 .iter()
                 .zip(&frame.cols)
-                .filter(|((n, _), _)| n != key)
+                .filter(|((n, _), _)| !keys.iter().any(|(k, _)| k == n))
                 .map(|(_, c)| c.clone())
                 .collect();
-            let (skeys, scols) = ops::distributed_sort_by_key(comm, &keys, &others)?;
+            let (skeys, scols) =
+                ops::distributed_sort_keys(comm, &key_cols, &orders, &others)?;
             let mut cols = Vec::with_capacity(frame.cols.len());
             let mut oi = 0usize;
             for (n, _) in frame.schema.fields() {
-                if n == key {
-                    cols.push(Column::I64(skeys.clone()));
+                if let Some(j) = keys.iter().position(|(k, _)| k == n) {
+                    cols.push(skeys[j].clone());
                 } else {
                     cols.push(scols[oi].clone());
                     oi += 1;
@@ -552,10 +564,10 @@ mod tests {
             input: Box::new(Plan::Join {
                 left: Box::new(source_mem("t", table())),
                 right: Box::new(source_mem("r", right)),
-                left_key: "id".into(),
-                right_key: "rid".into(),
+                on: vec![("id".into(), "rid".into())],
+                how: crate::ir::JoinType::Inner,
             }),
-            key: "id".into(),
+            keys: vec![("id".into(), SortOrder::Asc)],
         };
         let got = collect(plan, &opts(3)).unwrap();
         assert_eq!(got.column("id").unwrap().as_i64(), &[1, 3, 5]);
@@ -565,38 +577,21 @@ mod tests {
     #[test]
     fn aggregate_both_strategies() {
         for strat in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            // make ids collide: id % 2
             let plan = Plan::Sort {
                 input: Box::new(Plan::Aggregate {
-                    input: Box::new(source_mem("t", table())),
-                    key: "id".into(),
+                    input: Box::new(Plan::WithColumn {
+                        input: Box::new(source_mem("t", table())),
+                        name: "id".into(),
+                        expr: col("id").rem(lit(2i64)),
+                    }),
+                    keys: vec!["id".into()],
                     aggs: vec![AggExpr::new("s", AggFn::Sum, col("x"))],
                 }),
-                key: "id".into(),
+                keys: vec![("id".into(), SortOrder::Asc)],
             };
             let mut o = opts(4);
             o.agg_strategy = strat;
-            // make ids collide: id % 2
-            let plan = match plan {
-                Plan::Sort { input, key } => {
-                    if let Plan::Aggregate { input: agg_in, aggs, .. } = *input {
-                        Plan::Sort {
-                            input: Box::new(Plan::Aggregate {
-                                input: Box::new(Plan::WithColumn {
-                                    input: agg_in,
-                                    name: "id".into(),
-                                    expr: col("id").rem(lit(2i64)),
-                                }),
-                                key: "id".into(),
-                                aggs,
-                            }),
-                            key,
-                        }
-                    } else {
-                        unreachable!()
-                    }
-                }
-                _ => unreachable!(),
-            };
             let got = collect(plan, &o).unwrap();
             assert_eq!(got.column("id").unwrap().as_i64(), &[0, 1]);
             let s = got.column("s").unwrap().as_f64();
@@ -653,7 +648,7 @@ mod tests {
                     Box::new(source_mem("b", table())),
                 ],
             }),
-            key: "id".into(),
+            keys: vec![("id".into(), SortOrder::Asc)],
         };
         let got = collect(plan, &opts(2)).unwrap();
         assert_eq!(got.num_rows(), 16);

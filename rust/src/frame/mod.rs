@@ -1,12 +1,16 @@
-//! The user-facing HiFrames API (paper §3, Table 1).
+//! The user-facing HiFrames API (paper §3, Table 1), extended with the
+//! composite-key relational surface real TPCx-BB workloads need.
 //!
 //! | Paper syntax                               | Here                                   |
 //! |--------------------------------------------|----------------------------------------|
 //! | `DataSource(DataFrame{...}, HDF5, file)`   | [`HiFrames::read_hfs`]                 |
 //! | `v = df[:id]` (projection)                 | [`DataFrame::select`]                  |
 //! | `df2 = df[:id < 100]`                      | [`DataFrame::filter`]                  |
-//! | `join(df1, df2, :id == :cid)`              | [`DataFrame::join`]                    |
+//! | `join(df1, df2, :id == :cid)`              | [`DataFrame::join`] (inner, one key)   |
+//! | `join(df1, df2, [:a==:b, :c==:d], how)`    | [`DataFrame::join_on`] / [`DataFrame::join_with`] (builder) |
 //! | `aggregate(df, :id, :xc = sum(:x < 1.0))`  | [`DataFrame::aggregate`]               |
+//! | `aggregate(df, [:k1,:k2], …)`              | [`DataFrame::aggregate_by`] / [`DataFrame::group_by`] (builder) |
+//! | `sort(df, [:k1 desc, :k2])`                | [`DataFrame::sort_by_keys`] ([`DataFrame::sort_by`] = one key asc) |
 //! | `[df1; df2]`                               | [`DataFrame::concat`]                  |
 //! | `cumsum(df[:x])`                           | [`DataFrame::cumsum`]                  |
 //! | `stencil(x -> …, df[:x])` (SMA/WMA)        | [`DataFrame::stencil`] / [`sma`] / [`wma`] |
@@ -14,14 +18,18 @@
 //! | `transpose(typed_hcat(Float64, …))`        | [`DataFrame::matrix_assembly`]         |
 //! | `HPAT.Kmeans(samples, k)`                  | [`DataFrame::kmeans`]                  |
 //!
+//! Join types follow [`JoinType`]: `Inner`, `Left`, `Right`, `Outer`,
+//! `Semi`, `Anti`. Null-introduced columns of outer joins are promoted per
+//! [`crate::types::DType::null_joined`] (numerics → Float64 with NaN holes).
+//!
 //! A `DataFrame` is a lazy logical plan; [`DataFrame::collect`] compiles it
 //! through the full pass pipeline and runs it SPMD. Scalar helpers
 //! ([`DataFrame::mean`], [`DataFrame::var`]) mirror the paper's feature
 //! scaling idiom.
 
 use crate::exec::{collect, ExecOptions};
-use crate::expr::{AggExpr, Expr};
-use crate::ir::{source_hfs, source_mem, MlParams, Plan};
+use crate::expr::{AggExpr, AggFn, Expr};
+use crate::ir::{source_hfs, source_mem, JoinType, MlParams, Plan, SortOrder};
 use crate::ops::stencil::{sma_weights, wma_weights_124};
 use crate::table::{Schema, Table};
 use anyhow::Result;
@@ -152,22 +160,69 @@ impl DataFrame {
 
     /// `join(self, other, :lk == :rk)` — inner equi-join; unlike Julia's
     /// DataFrames.jl the two key columns may have different names (§3.1).
+    /// Thin single-key wrapper over [`DataFrame::join_on`].
     pub fn join(&self, other: &DataFrame, left_key: &str, right_key: &str) -> DataFrame {
+        self.join_on(other, &[(left_key, right_key)], JoinType::Inner)
+    }
+
+    /// Composite-key join with an explicit join type:
+    /// `join_on(&other, &[("a","b"), ("c","d")], JoinType::Left)`. Output
+    /// key columns keep the left names; Semi/Anti drop the right columns.
+    pub fn join_on(
+        &self,
+        other: &DataFrame,
+        on: &[(&str, &str)],
+        how: JoinType,
+    ) -> DataFrame {
         self.wrap(Plan::Join {
             left: Box::new(self.plan.clone()),
             right: Box::new(other.plan.clone()),
-            left_key: left_key.to_string(),
-            right_key: right_key.to_string(),
+            on: on
+                .iter()
+                .map(|(l, r)| (l.to_string(), r.to_string()))
+                .collect(),
+            how,
         })
     }
 
-    /// `aggregate(df, :key, :out = fn(expr), …)`.
+    /// Fluent join entry point:
+    /// `df.join_with(&other).on("a", "b").on("c", "d").how(JoinType::Left).build()`.
+    pub fn join_with(&self, other: &DataFrame) -> JoinBuilder {
+        JoinBuilder {
+            ctx: self.ctx.clone(),
+            left: self.plan.clone(),
+            right: other.plan.clone(),
+            on: Vec::new(),
+            how: JoinType::Inner,
+        }
+    }
+
+    /// `aggregate(df, :key, :out = fn(expr), …)` — thin single-key wrapper
+    /// over [`DataFrame::aggregate_by`].
     pub fn aggregate(&self, key: &str, aggs: Vec<AggExpr>) -> DataFrame {
+        self.aggregate_by(&[key], aggs)
+    }
+
+    /// Composite-key group-by: `aggregate_by(&["k1","k2"], aggs)`. The
+    /// output carries one column per key (dtypes preserved) followed by the
+    /// aggregate outputs.
+    pub fn aggregate_by(&self, keys: &[&str], aggs: Vec<AggExpr>) -> DataFrame {
         self.wrap(Plan::Aggregate {
             input: Box::new(self.plan.clone()),
-            key: key.to_string(),
+            keys: keys.iter().map(|k| k.to_string()).collect(),
             aggs,
         })
+    }
+
+    /// Fluent group-by entry point:
+    /// `df.group_by(&["k1","k2"]).agg("n", AggFn::Count, col("x")).build()`.
+    pub fn group_by(&self, keys: &[&str]) -> GroupBy {
+        GroupBy {
+            ctx: self.ctx.clone(),
+            input: self.plan.clone(),
+            keys: keys.iter().map(|k| k.to_string()).collect(),
+            aggs: Vec::new(),
+        }
     }
 
     /// `[self; other]`.
@@ -206,11 +261,18 @@ impl DataFrame {
         self.stencil(column, out, wma_weights_124())
     }
 
-    /// Global sort by an Int64 column.
+    /// Global sort by one key, ascending — thin wrapper over
+    /// [`DataFrame::sort_by_keys`].
     pub fn sort_by(&self, key: &str) -> DataFrame {
+        self.sort_by_keys(&[(key, SortOrder::Asc)])
+    }
+
+    /// Global sort by a composite key list with per-key directions:
+    /// `sort_by_keys(&[("cnt", SortOrder::Desc), ("id", SortOrder::Asc)])`.
+    pub fn sort_by_keys(&self, keys: &[(&str, SortOrder)]) -> DataFrame {
         self.wrap(Plan::Sort {
             input: Box::new(self.plan.clone()),
-            key: key.to_string(),
+            keys: keys.iter().map(|(k, o)| (k.to_string(), *o)).collect(),
         })
     }
 
@@ -278,6 +340,76 @@ impl DataFrame {
     /// gather of the data itself).
     pub fn count(&self) -> Result<usize> {
         crate::exec::collect_count(self.plan.clone(), &self.ctx.opts)
+    }
+}
+
+/// Fluent builder for composite-key joins (created by
+/// [`DataFrame::join_with`]). Accumulates `on` pairs and a [`JoinType`],
+/// then [`JoinBuilder::build`] yields the lazy joined frame.
+pub struct JoinBuilder {
+    ctx: HiFrames,
+    left: Plan,
+    right: Plan,
+    on: Vec<(String, String)>,
+    how: JoinType,
+}
+
+impl JoinBuilder {
+    /// Add one `left == right` key pair.
+    pub fn on(mut self, left_key: &str, right_key: &str) -> JoinBuilder {
+        self.on.push((left_key.to_string(), right_key.to_string()));
+        self
+    }
+
+    /// Set the join type (default [`JoinType::Inner`]).
+    pub fn how(mut self, how: JoinType) -> JoinBuilder {
+        self.how = how;
+        self
+    }
+
+    /// Finish: produce the lazy joined [`DataFrame`]. Key-pair validation
+    /// (non-empty, matching groupable dtypes) happens at schema time, like
+    /// every other plan error.
+    pub fn build(self) -> DataFrame {
+        DataFrame {
+            ctx: self.ctx,
+            plan: Plan::Join {
+                left: Box::new(self.left),
+                right: Box::new(self.right),
+                on: self.on,
+                how: self.how,
+            },
+        }
+    }
+}
+
+/// Fluent builder for composite-key group-bys (created by
+/// [`DataFrame::group_by`]). Accumulates aggregate outputs, then
+/// [`GroupBy::build`] yields the lazy aggregated frame.
+pub struct GroupBy {
+    ctx: HiFrames,
+    input: Plan,
+    keys: Vec<String>,
+    aggs: Vec<AggExpr>,
+}
+
+impl GroupBy {
+    /// Add one output column `:out = func(expr)`.
+    pub fn agg(mut self, out: &str, func: AggFn, input: Expr) -> GroupBy {
+        self.aggs.push(AggExpr::new(out, func, input));
+        self
+    }
+
+    /// Finish: produce the lazy aggregated [`DataFrame`].
+    pub fn build(self) -> DataFrame {
+        DataFrame {
+            ctx: self.ctx,
+            plan: Plan::Aggregate {
+                input: Box::new(self.input),
+                keys: self.keys,
+                aggs: self.aggs,
+            },
+        }
     }
 }
 
@@ -422,5 +554,143 @@ mod tests {
         let hf = ctx();
         assert!(df(&hf).filter(col("nope").lt(lit(1.0))).schema().is_err());
         assert!(df(&hf).select(&["missing"]).schema().is_err());
+        // composite-key validation is eager too
+        let other = df(&hf);
+        assert!(df(&hf)
+            .join_on(&other, &[], JoinType::Inner)
+            .schema()
+            .is_err());
+        assert!(df(&hf).aggregate_by(&["x"], vec![]).schema().is_err()); // F64 key
+    }
+
+    #[test]
+    fn multi_key_aggregate_collects() {
+        let hf = ctx();
+        let t = hf.table(
+            "t",
+            Table::from_pairs(vec![
+                ("k1", Column::I64(vec![1, 1, 2, 2, 1])),
+                ("k2", Column::I64(vec![0, 1, 0, 0, 0])),
+                ("x", Column::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0])),
+            ])
+            .unwrap(),
+        );
+        let out = t
+            .aggregate_by(
+                &["k1", "k2"],
+                vec![AggExpr::new("s", AggFn::Sum, col("x"))],
+            )
+            .sort_by_keys(&[("k1", SortOrder::Asc), ("k2", SortOrder::Asc)])
+            .collect()
+            .unwrap();
+        assert_eq!(out.schema().names(), vec!["k1", "k2", "s"]);
+        assert_eq!(out.column("k1").unwrap().as_i64(), &[1, 1, 2]);
+        assert_eq!(out.column("k2").unwrap().as_i64(), &[0, 1, 0]);
+        assert_eq!(out.column("s").unwrap().as_f64(), &[6.0, 2.0, 7.0]);
+    }
+
+    #[test]
+    fn left_join_fills_nan() {
+        let hf = ctx();
+        let left = hf.table(
+            "l",
+            Table::from_pairs(vec![("id", Column::I64(vec![1, 2, 3]))]).unwrap(),
+        );
+        let right = hf.table(
+            "r",
+            Table::from_pairs(vec![
+                ("rid", Column::I64(vec![1, 3])),
+                ("w", Column::I64(vec![10, 30])),
+            ])
+            .unwrap(),
+        );
+        let out = left
+            .join_on(&right, &[("id", "rid")], JoinType::Left)
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(out.column("id").unwrap().as_i64(), &[1, 2, 3]);
+        let w = out.column("w").unwrap().as_f64(); // null-promoted
+        assert_eq!(w[0], 10.0);
+        assert!(w[1].is_nan());
+        assert_eq!(w[2], 30.0);
+    }
+
+    #[test]
+    fn join_builder_and_group_by_builder() {
+        let hf = ctx();
+        let l = hf.table(
+            "l",
+            Table::from_pairs(vec![
+                ("a", Column::I64(vec![1, 1, 2])),
+                ("b", Column::I64(vec![7, 8, 7])),
+                ("x", Column::F64(vec![0.5, 1.5, 2.5])),
+            ])
+            .unwrap(),
+        );
+        let r = hf.table(
+            "r",
+            Table::from_pairs(vec![
+                ("ra", Column::I64(vec![1, 1, 2])),
+                ("rb", Column::I64(vec![7, 9, 7])),
+                ("w", Column::I64(vec![100, 200, 300])),
+            ])
+            .unwrap(),
+        );
+        // composite join: only (1,7) and (2,7) tuples match
+        let joined = l
+            .join_with(&r)
+            .on("a", "ra")
+            .on("b", "rb")
+            .how(JoinType::Inner)
+            .build()
+            .sort_by("a")
+            .collect()
+            .unwrap();
+        assert_eq!(joined.num_rows(), 2);
+        assert_eq!(joined.column("w").unwrap().as_i64(), &[100, 300]);
+        // group-by builder over two keys
+        let agg = l
+            .group_by(&["a", "b"])
+            .agg("n", AggFn::Count, col("x"))
+            .agg("s", AggFn::Sum, col("x"))
+            .build()
+            .sort_by_keys(&[("a", SortOrder::Asc), ("b", SortOrder::Asc)])
+            .collect()
+            .unwrap();
+        assert_eq!(agg.num_rows(), 3);
+        assert_eq!(agg.schema().names(), vec!["a", "b", "n", "s"]);
+    }
+
+    #[test]
+    fn semi_and_anti_join() {
+        let hf = ctx();
+        let left = df(&hf); // ids 1,2,1,3,2,1
+        let right = hf.table(
+            "r",
+            Table::from_pairs(vec![("cid", Column::I64(vec![2, 3]))]).unwrap(),
+        );
+        let semi = left
+            .join_on(&right, &[("id", "cid")], JoinType::Semi)
+            .collect()
+            .unwrap();
+        assert_eq!(semi.schema().names(), vec!["id", "x"]); // left schema only
+        assert_eq!(semi.num_rows(), 3); // ids 2,3,2
+        let anti = left
+            .join_on(&right, &[("id", "cid")], JoinType::Anti)
+            .collect()
+            .unwrap();
+        assert_eq!(anti.num_rows(), 3); // the three id=1 rows
+        assert!(anti.column("id").unwrap().as_i64().iter().all(|&i| i == 1));
+    }
+
+    #[test]
+    fn sort_by_keys_desc() {
+        let hf = ctx();
+        let out = df(&hf)
+            .sort_by_keys(&[("id", SortOrder::Desc)])
+            .collect()
+            .unwrap();
+        assert_eq!(out.column("id").unwrap().as_i64(), &[3, 2, 2, 1, 1, 1]);
     }
 }

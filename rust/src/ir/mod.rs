@@ -9,7 +9,9 @@ use crate::distribution::Dist;
 use crate::expr::{AggExpr, Expr};
 use crate::table::{Schema, Table};
 use crate::types::DType;
+pub use crate::types::{JoinType, SortOrder};
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -65,17 +67,23 @@ pub enum Plan {
         from: String,
         to: String,
     },
-    /// Inner equi-join `join(l, r, :lk == :rk)`.
+    /// Equi-join over a composite key list with a join type:
+    /// `join(l, r, [:lk1 == :rk1, :lk2 == :rk2], how)`. Output key columns
+    /// keep the left names; for Left/Right/Outer the nullable side's payload
+    /// columns are *null-introduced* ([`DType::null_joined`]); Semi/Anti
+    /// keep only the left schema.
     Join {
         left: Box<Plan>,
         right: Box<Plan>,
-        left_key: String,
-        right_key: String,
+        /// `(left_key, right_key)` pairs; equal, groupable dtypes per pair.
+        on: Vec<(String, String)>,
+        how: JoinType,
     },
-    /// `aggregate(df, :key, :out = fn(expr), …)`.
+    /// `aggregate(df, [:k1, :k2], :out = fn(expr), …)` — group-by over a
+    /// composite key list.
     Aggregate {
         input: Box<Plan>,
-        key: String,
+        keys: Vec<String>,
         aggs: Vec<AggExpr>,
     },
     /// Vertical concatenation `[df1; df2]` (same schema).
@@ -93,8 +101,12 @@ pub enum Plan {
         out: String,
         weights: Vec<f64>,
     },
-    /// Global sort by an Int64 key (result canonicalization; TPCx-BB top-N).
-    Sort { input: Box<Plan>, key: String },
+    /// Global sort by a composite key list with per-key directions (result
+    /// canonicalization; TPCx-BB multi-column ORDER BY / top-N).
+    Sort {
+        input: Box<Plan>,
+        keys: Vec<(String, SortOrder)>,
+    },
     /// Redistribute a 1D_VAR frame to 1D_BLOCK (inserted by the
     /// Distributed-Pass; never written by users).
     Rebalance { input: Box<Plan> },
@@ -172,42 +184,86 @@ impl Plan {
             Plan::Join {
                 left,
                 right,
-                left_key,
-                right_key,
+                on,
+                how,
             } => {
                 let ls = left.schema()?;
                 let rs = right.schema()?;
-                let lk = ls
-                    .dtype_of(left_key)
-                    .with_context(|| format!("join: unknown left key :{left_key}"))?;
-                let rk = rs
-                    .dtype_of(right_key)
-                    .with_context(|| format!("join: unknown right key :{right_key}"))?;
-                if lk != DType::I64 || rk != DType::I64 {
-                    bail!("join keys must be Int64 (got {lk} and {rk})");
+                if on.is_empty() {
+                    bail!("join: needs at least one key pair");
                 }
-                // output: all left columns, then right columns minus its key
-                let mut fields = ls.fields().to_vec();
+                let mut lkeys: BTreeSet<&str> = BTreeSet::new();
+                let mut rkeys: BTreeSet<&str> = BTreeSet::new();
+                for (lk, rk) in on {
+                    let lt = ls
+                        .dtype_of(lk)
+                        .with_context(|| format!("join: unknown left key :{lk}"))?;
+                    let rt = rs
+                        .dtype_of(rk)
+                        .with_context(|| format!("join: unknown right key :{rk}"))?;
+                    if lt != rt {
+                        bail!("join: key pair :{lk} ({lt}) vs :{rk} ({rt}) dtype mismatch");
+                    }
+                    if !lt.is_groupable() {
+                        bail!("join key :{lk} must be Int64/Bool/String, got {lt}");
+                    }
+                    if !lkeys.insert(lk.as_str()) {
+                        bail!("join: duplicate left key :{lk}");
+                    }
+                    if !rkeys.insert(rk.as_str()) {
+                        bail!("join: duplicate right key :{rk}");
+                    }
+                }
+                // Semi/Anti only filter the left side
+                if !how.keeps_right_columns() {
+                    return Ok(ls);
+                }
+                // output: all left columns in order (keys keep their dtype —
+                // an equi-join key is never null), then right columns minus
+                // its keys. The null-introducing side(s) get promoted dtypes.
+                let mut fields = Vec::new();
+                for (n, t) in ls.fields() {
+                    let t = if !lkeys.contains(n.as_str()) && how.nullable_left() {
+                        t.null_joined()
+                    } else {
+                        *t
+                    };
+                    fields.push((n.clone(), t));
+                }
                 for (n, t) in rs.fields() {
-                    if n == right_key {
+                    if rkeys.contains(n.as_str()) {
                         continue;
                     }
                     if ls.dtype_of(n).is_some() {
                         bail!("join: column :{n} exists on both sides — rename first");
                     }
-                    fields.push((n.clone(), *t));
+                    let t = if how.nullable_right() {
+                        t.null_joined()
+                    } else {
+                        *t
+                    };
+                    fields.push((n.clone(), t));
                 }
                 Ok(Schema::new(fields))
             }
-            Plan::Aggregate { input, key, aggs } => {
+            Plan::Aggregate { input, keys, aggs } => {
                 let s = input.schema()?;
-                let kt = s
-                    .dtype_of(key)
-                    .with_context(|| format!("aggregate: unknown key :{key}"))?;
-                if kt != DType::I64 {
-                    bail!("aggregate key :{key} must be Int64, got {kt}");
+                if keys.is_empty() {
+                    bail!("aggregate: needs at least one key column");
                 }
-                let mut fields = vec![(key.clone(), DType::I64)];
+                let mut fields = Vec::new();
+                for key in keys {
+                    let kt = s
+                        .dtype_of(key)
+                        .with_context(|| format!("aggregate: unknown key :{key}"))?;
+                    if !kt.is_groupable() {
+                        bail!("aggregate key :{key} must be Int64/Bool/String, got {kt}");
+                    }
+                    if fields.iter().any(|(n, _)| n == key) {
+                        bail!("aggregate: duplicate key :{key}");
+                    }
+                    fields.push((key.clone(), kt));
+                }
                 for a in aggs {
                     if fields.iter().any(|(n, _)| n == &a.out) {
                         bail!("aggregate: duplicate output column :{}", a.out);
@@ -274,10 +330,18 @@ impl Plan {
                 fields.push((out.clone(), DType::F64));
                 Ok(Schema::new(fields))
             }
-            Plan::Sort { input, key } => {
+            Plan::Sort { input, keys } => {
                 let s = input.schema()?;
-                if s.dtype_of(key) != Some(DType::I64) {
-                    bail!("sort key :{key} must be Int64");
+                if keys.is_empty() {
+                    bail!("sort: needs at least one key column");
+                }
+                for (key, _) in keys {
+                    let kt = s
+                        .dtype_of(key)
+                        .with_context(|| format!("sort: unknown key :{key}"))?;
+                    if !kt.is_groupable() {
+                        bail!("sort key :{key} must be Int64/Bool/String, got {kt}");
+                    }
                 }
                 Ok(s)
             }
@@ -383,14 +447,22 @@ impl Plan {
             Plan::Rename { from, to, .. } => {
                 writeln!(f, "{pad}Rename(:{from} -> :{to}) [{dist}]")?
             }
-            Plan::Join {
-                left_key,
-                right_key,
-                ..
-            } => writeln!(f, "{pad}Join(:{left_key} == :{right_key}) [{dist}]")?,
-            Plan::Aggregate { key, aggs, .. } => {
+            Plan::Join { on, how, .. } => {
+                let pairs: Vec<String> = on
+                    .iter()
+                    .map(|(lk, rk)| format!(":{lk} == :{rk}"))
+                    .collect();
+                writeln!(f, "{pad}Join({}, how={how}) [{dist}]", pairs.join(" && "))?
+            }
+            Plan::Aggregate { keys, aggs, .. } => {
+                let ks: Vec<String> = keys.iter().map(|k| format!(":{k}")).collect();
                 let parts: Vec<String> = aggs.iter().map(|a| a.to_string()).collect();
-                writeln!(f, "{pad}Aggregate(:{key}; {}) [{dist}]", parts.join(", "))?
+                writeln!(
+                    f,
+                    "{pad}Aggregate({}; {}) [{dist}]",
+                    ks.join(", "),
+                    parts.join(", ")
+                )?
             }
             Plan::Concat { inputs } => {
                 writeln!(f, "{pad}Concat({} inputs) [{dist}]", inputs.len())?
@@ -407,7 +479,13 @@ impl Plan {
                 f,
                 "{pad}Stencil(:{column} -> :{out}, w={weights:?}) [{dist}]"
             )?,
-            Plan::Sort { key, .. } => writeln!(f, "{pad}Sort(:{key}) [{dist}]")?,
+            Plan::Sort { keys, .. } => {
+                let ks: Vec<String> = keys
+                    .iter()
+                    .map(|(k, o)| format!(":{k} {o}"))
+                    .collect();
+                writeln!(f, "{pad}Sort({}) [{dist}]", ks.join(", "))?
+            }
             Plan::Rebalance { .. } => writeln!(f, "{pad}Rebalance [{dist}]")?,
             Plan::MatrixAssembly { columns, .. } => {
                 writeln!(f, "{pad}MatrixAssembly({}) [{dist}]", columns.join(", "))?
@@ -481,38 +559,118 @@ mod tests {
         assert!(bad.schema().is_err());
     }
 
-    #[test]
-    fn schema_join_merges_and_rejects_collisions() {
-        let right = source_mem(
+    fn right_src() -> Plan {
+        source_mem(
             "r",
             Table::from_pairs(vec![
                 ("cid", Column::I64(vec![1])),
                 ("y", Column::F64(vec![2.0])),
+                ("tag", Column::I64(vec![9])),
             ])
             .unwrap(),
-        );
+        )
+    }
+
+    #[test]
+    fn schema_join_merges_and_rejects_collisions() {
         let j = Plan::Join {
             left: Box::new(src()),
-            right: Box::new(right),
-            left_key: "id".into(),
-            right_key: "cid".into(),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into())],
+            how: JoinType::Inner,
         };
-        assert_eq!(j.schema().unwrap().names(), vec!["id", "x", "y"]);
+        assert_eq!(j.schema().unwrap().names(), vec!["id", "x", "y", "tag"]);
 
         let collide = Plan::Join {
             left: Box::new(src()),
             right: Box::new(src()),
-            left_key: "id".into(),
-            right_key: "id".into(),
+            on: vec![("id".into(), "id".into())],
+            how: JoinType::Inner,
         };
         assert!(collide.schema().is_err()); // :x on both sides
+    }
+
+    #[test]
+    fn schema_join_validates_key_pairs() {
+        // dtype mismatch across a pair
+        let bad = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("x".into(), "cid".into())],
+            how: JoinType::Inner,
+        };
+        assert!(bad.schema().is_err()); // F64 key and mismatch
+        // empty key list
+        let empty = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![],
+            how: JoinType::Inner,
+        };
+        assert!(empty.schema().is_err());
+        // duplicate left key
+        let dup = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into()), ("id".into(), "tag".into())],
+            how: JoinType::Inner,
+        };
+        assert!(dup.schema().is_err());
+    }
+
+    #[test]
+    fn schema_outer_joins_introduce_nulls() {
+        // Left join: right payload promoted (I64 tag → F64), keys keep dtype
+        let j = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into())],
+            how: JoinType::Left,
+        };
+        let s = j.schema().unwrap();
+        assert_eq!(s.dtype_of("id"), Some(DType::I64)); // key never null
+        assert_eq!(s.dtype_of("x"), Some(DType::F64)); // left side intact
+        assert_eq!(s.dtype_of("tag"), Some(DType::F64)); // promoted
+        // Right join: left payload promoted instead
+        let j = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into())],
+            how: JoinType::Right,
+        };
+        let s = j.schema().unwrap();
+        assert_eq!(s.dtype_of("id"), Some(DType::I64));
+        assert_eq!(s.dtype_of("tag"), Some(DType::I64)); // right side intact
+        // Outer: both payloads promoted
+        let j = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into())],
+            how: JoinType::Outer,
+        };
+        let s = j.schema().unwrap();
+        assert_eq!(s.dtype_of("id"), Some(DType::I64));
+        assert_eq!(s.dtype_of("tag"), Some(DType::F64));
+    }
+
+    #[test]
+    fn schema_semi_anti_keep_left_only() {
+        for how in [JoinType::Semi, JoinType::Anti] {
+            let j = Plan::Join {
+                left: Box::new(src()),
+                right: Box::new(right_src()),
+                on: vec![("id".into(), "cid".into())],
+                how,
+            };
+            assert_eq!(j.schema().unwrap().names(), vec!["id", "x"], "{how:?}");
+        }
     }
 
     #[test]
     fn schema_aggregate() {
         let a = Plan::Aggregate {
             input: Box::new(src()),
-            key: "id".into(),
+            keys: vec!["id".into()],
             aggs: vec![
                 AggExpr::new("n", AggFn::Count, col("x")),
                 AggExpr::new("m", AggFn::Mean, col("x")),
@@ -522,6 +680,40 @@ mod tests {
         assert_eq!(s.names(), vec!["id", "n", "m"]);
         assert_eq!(s.dtype_of("n"), Some(DType::I64));
         assert_eq!(s.dtype_of("m"), Some(DType::F64));
+    }
+
+    #[test]
+    fn schema_aggregate_multi_key() {
+        let input = source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("k1", Column::I64(vec![1])),
+                ("k2", Column::Str(vec!["a".into()])),
+                ("x", Column::F64(vec![0.5])),
+            ])
+            .unwrap(),
+        );
+        let a = Plan::Aggregate {
+            input: Box::new(input.clone()),
+            keys: vec!["k1".into(), "k2".into()],
+            aggs: vec![AggExpr::new("s", AggFn::Sum, col("x"))],
+        };
+        let s = a.schema().unwrap();
+        assert_eq!(s.names(), vec!["k1", "k2", "s"]);
+        assert_eq!(s.dtype_of("k2"), Some(DType::Str));
+        // F64 keys rejected; duplicate keys rejected
+        let bad = Plan::Aggregate {
+            input: Box::new(input.clone()),
+            keys: vec!["x".into()],
+            aggs: vec![],
+        };
+        assert!(bad.schema().is_err());
+        let dup = Plan::Aggregate {
+            input: Box::new(input),
+            keys: vec!["k1".into(), "k1".into()],
+            aggs: vec![],
+        };
+        assert!(dup.schema().is_err());
     }
 
     #[test]

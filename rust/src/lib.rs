@@ -19,8 +19,8 @@
 //! Comparison engines live in [`baseline`] (`sparklike` map-reduce engine,
 //! `serial` pandas-like engine) and the TPCx-BB workload in [`bigbench`].
 //!
-//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
-//! measured results.
+//! See `DESIGN.md` (repository root) for the module map and the pass
+//! pipeline.
 
 pub mod baseline;
 pub mod bench;
@@ -51,5 +51,5 @@ pub mod prelude {
     pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf};
     pub use crate::frame::*;
     pub use crate::table::{Schema, Table};
-    pub use crate::types::{DType, Value};
+    pub use crate::types::{DType, JoinType, SortOrder, Value};
 }

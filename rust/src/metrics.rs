@@ -1,5 +1,5 @@
 //! Timing and throughput instrumentation used by benches, examples and the
-//! EXPERIMENTS.md runs.
+//! bench runs.
 
 use std::time::{Duration, Instant};
 

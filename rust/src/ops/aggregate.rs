@@ -1,21 +1,26 @@
-//! Distributed aggregation (paper §4.5): shuffle rows so equal keys meet on
-//! their owner rank, then hash-table aggregation (the paper's
-//! `agg1_table[key]` loop in Fig. 5).
+//! Distributed aggregation over composite keys (paper §4.5): shuffle rows so
+//! equal key *tuples* meet on their owner rank, then hash-table aggregation
+//! (the paper's `agg1_table[key]` loop in Fig. 5, with the key generalized
+//! from one i64 to a [`KeyRow`]).
 //!
 //! Two strategies, ablated in `benches/ablations.rs`:
-//! * **raw shuffle** — ship `(key, expr values)` rows, aggregate after.
+//! * **raw shuffle** — ship `(key cols, expr values)` rows, aggregate after.
 //!   This is exactly the paper's codegen.
 //! * **local pre-aggregation** — fold rows into decomposed partial states
-//!   ([`AggState`]) per key *before* the shuffle, ship states, merge after.
-//!   A classic combiner; wins when keys repeat within ranks (§Perf).
+//!   ([`AggState`]) per key *before* the shuffle, ship
+//!   `[key row, states…]` records, merge after. A classic combiner; wins
+//!   when keys repeat within ranks (§Perf).
 
-use super::shuffle::{owner_of, shuffle_by_key};
+use super::keys::{
+    decode_key_row, encode_key_row, key_columns, key_rows, owner_of_key, KeyRow,
+};
+use super::shuffle::shuffle_by_owner;
 use crate::column::Column;
 use crate::comm::Comm;
 use crate::expr::{AggFn, AggState};
+use crate::fxhash::FxHashMap;
 use crate::types::DType;
 use anyhow::Result;
-use crate::fxhash::FxHashMap;
 
 /// Which aggregation strategy to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,53 +37,57 @@ pub struct AggSpec {
     pub input_dtype: DType,
 }
 
-/// Aggregate `expr_cols[i]` under `specs[i]` grouped by `keys`, distributed
-/// over `comm`. Returns the local shard of the result: unique keys owned by
-/// this rank plus one value column per spec. Output distribution: `1D_VAR`.
-pub fn distributed_aggregate(
+/// Aggregate `expr_cols[i]` under `specs[i]` grouped by the composite key
+/// columns, distributed over `comm`. Returns the local shard of the result:
+/// unique key tuples owned by this rank (one output column per key column,
+/// dtype preserved) plus one value column per spec. Output distribution:
+/// `1D_VAR`.
+pub fn distributed_aggregate_keys(
     comm: &Comm,
-    keys: &[i64],
+    key_cols: &[Column],
     expr_cols: &[Column],
     specs: &[AggSpec],
     strategy: AggStrategy,
-) -> Result<(Vec<i64>, Vec<Column>)> {
+) -> Result<(Vec<Column>, Vec<Column>)> {
     assert_eq!(expr_cols.len(), specs.len());
+    let p = comm.nranks();
+    let key_refs: Vec<&Column> = key_cols.iter().collect();
     match strategy {
         AggStrategy::RawShuffle => {
-            let (k, cols) = shuffle_by_key(comm, keys, expr_cols)?;
-            Ok(local_hash_aggregate(&k, &cols, specs))
+            let rows = key_rows(&key_refs)?;
+            let owners: Vec<usize> = rows.iter().map(|r| owner_of_key(r, p)).collect();
+            let mut all: Vec<Column> = key_cols.to_vec();
+            all.extend(expr_cols.iter().cloned());
+            let all = shuffle_by_owner(comm, &owners, &all)?;
+            let (kc, ec) = all.split_at(key_cols.len());
+            local_hash_aggregate_keys(&kc.iter().collect::<Vec<_>>(), ec, specs)
         }
         AggStrategy::PreAggregate => {
-            // fold locally into partial states per key
-            let mut table: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
-            for (i, &k) in keys.iter().enumerate() {
-                let states = table
-                    .entry(k)
-                    .or_insert_with(|| new_states(specs));
+            // fold locally into partial states per key tuple
+            let rows = key_rows(&key_refs)?;
+            let mut table: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
+            for (i, k) in rows.into_iter().enumerate() {
+                let states = table.entry(k).or_insert_with(|| new_states(specs));
                 for (s, c) in states.iter_mut().zip(expr_cols) {
                     s.update_col(c, i);
                 }
             }
-            // serialize per destination: [key, state0, state1, …] records
-            let p = comm.nranks();
+            // serialize per destination: [key row, state0, state1, …] records
             let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
             for (k, states) in &table {
-                let buf = &mut bufs[owner_of(*k, p)];
-                buf.extend_from_slice(&k.to_le_bytes());
+                let buf = &mut bufs[owner_of_key(k, p)];
+                encode_key_row(k, buf);
                 for s in states {
                     s.encode(buf);
                 }
             }
             let received = comm.alltoallv_bytes(bufs);
             // merge incoming partials
-            let mut merged: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
+            let mut merged: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
             for buf in received {
                 let mut pos = 0;
                 while pos < buf.len() {
-                    let mut kb = [0u8; 8];
-                    kb.copy_from_slice(&buf[pos..pos + 8]);
-                    pos += 8;
-                    let k = i64::from_le_bytes(kb);
+                    let k = decode_key_row(key_cols.len(), &buf, &mut pos)?;
                     let incoming: Vec<AggState> = specs
                         .iter()
                         .map(|sp| AggState::decode(sp.func, sp.input_dtype, &buf, &mut pos))
@@ -95,26 +104,58 @@ pub fn distributed_aggregate(
                     }
                 }
             }
-            Ok(finish_table(merged, specs))
+            Ok(finish_table(merged, specs, &key_refs))
         }
     }
 }
 
-/// Purely local hash aggregation (also the post-shuffle half and the serial
-/// baseline's implementation).
-pub fn local_hash_aggregate(
-    keys: &[i64],
+/// Purely local hash aggregation over composite keys (also the post-shuffle
+/// half and the serial baseline's implementation). Output rows are sorted by
+/// key tuple so runs are reproducible.
+pub fn local_hash_aggregate_keys(
+    key_cols: &[&Column],
     expr_cols: &[Column],
     specs: &[AggSpec],
-) -> (Vec<i64>, Vec<Column>) {
-    let mut table: FxHashMap<i64, Vec<AggState>> = FxHashMap::default();
-    for (i, &k) in keys.iter().enumerate() {
+) -> Result<(Vec<Column>, Vec<Column>)> {
+    let rows = key_rows(key_cols)?;
+    let mut table: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
+    for (i, k) in rows.into_iter().enumerate() {
         let states = table.entry(k).or_insert_with(|| new_states(specs));
         for (s, c) in states.iter_mut().zip(expr_cols) {
             s.update_col(c, i);
         }
     }
-    finish_table(table, specs)
+    Ok(finish_table(table, specs, key_cols))
+}
+
+/// Single-i64-key local aggregation — the seed API, kept as a wrapper.
+pub fn local_hash_aggregate(
+    keys: &[i64],
+    expr_cols: &[Column],
+    specs: &[AggSpec],
+) -> (Vec<i64>, Vec<Column>) {
+    let kc = Column::I64(keys.to_vec());
+    let (kcols, outs) = local_hash_aggregate_keys(&[&kc], expr_cols, specs)
+        .expect("i64 keys are always groupable");
+    (kcols[0].as_i64().to_vec(), outs)
+}
+
+/// Single-i64-key distributed aggregation — the seed API, kept as a wrapper.
+pub fn distributed_aggregate(
+    comm: &Comm,
+    keys: &[i64],
+    expr_cols: &[Column],
+    specs: &[AggSpec],
+    strategy: AggStrategy,
+) -> Result<(Vec<i64>, Vec<Column>)> {
+    let (kcols, outs) = distributed_aggregate_keys(
+        comm,
+        &[Column::I64(keys.to_vec())],
+        expr_cols,
+        specs,
+        strategy,
+    )?;
+    Ok((kcols[0].as_i64().to_vec(), outs))
 }
 
 fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
@@ -125,12 +166,14 @@ fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
 }
 
 fn finish_table(
-    table: FxHashMap<i64, Vec<AggState>>,
+    table: FxHashMap<KeyRow, Vec<AggState>>,
     specs: &[AggSpec],
-) -> (Vec<i64>, Vec<Column>) {
-    // deterministic output order (sorted keys) so runs are reproducible
-    let mut keys: Vec<i64> = table.keys().copied().collect();
-    keys.sort_unstable();
+    key_templates: &[&Column],
+) -> (Vec<Column>, Vec<Column>) {
+    // deterministic output order (lexicographically sorted key tuples) so
+    // runs are reproducible
+    let mut keys: Vec<&KeyRow> = table.keys().collect();
+    keys.sort();
     let mut outs: Vec<Column> = specs
         .iter()
         .map(|sp| {
@@ -144,11 +187,13 @@ fn finish_table(
         })
         .collect();
     for k in &keys {
-        for (out, state) in outs.iter_mut().zip(&table[k]) {
+        for (out, state) in outs.iter_mut().zip(&table[*k]) {
             out.push(&state.finish());
         }
     }
-    (keys, outs)
+    let sorted_rows: Vec<KeyRow> = keys.into_iter().cloned().collect();
+    let key_out = key_columns(&sorted_rows, key_templates);
+    (key_out, outs)
 }
 
 #[cfg(test)]
@@ -183,6 +228,24 @@ mod tests {
         assert_eq!(outs[0].as_f64(), &[6.0, 30.0]);
         assert_eq!(outs[1].as_i64(), &[3, 2]);
         assert_eq!(outs[2].as_f64(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn local_agg_composite_keys() {
+        // (k1, k2) pairs: (1,"a") twice, (1,"b") once, (2,"a") once
+        let k1 = Column::I64(vec![1, 1, 1, 2]);
+        let k2 = Column::Str(vec!["a".into(), "b".into(), "a".into(), "a".into()]);
+        let vals = Column::F64(vec![10.0, 20.0, 30.0, 40.0]);
+        let (kcols, outs) =
+            local_hash_aggregate_keys(&[&k1, &k2], &[vals], &specs()[..1]).unwrap();
+        // sorted key-tuple order: (1,a), (1,b), (2,a)
+        assert_eq!(kcols[0].as_i64(), &[1, 1, 2]);
+        assert_eq!(
+            kcols[1].as_str_col(),
+            &["a".to_string(), "b".into(), "a".into()]
+        );
+        assert_eq!(outs[0].as_f64(), &[40.0, 20.0, 40.0]);
+        // single-column grouping would have produced 2 groups, not 3
     }
 
     #[test]
@@ -233,6 +296,55 @@ mod tests {
             let mut owners = std::collections::HashSet::new();
             for (k, _, _) in &rows {
                 assert!(owners.insert(*k), "key {k} appears on two ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_composite_strategies_agree() {
+        // keys (i % 3, i % 2 as bool) with value i, over 3 ranks of 8 rows
+        let expected_groups = 6usize;
+        for strategy in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            let out = run_spmd(3, |c| {
+                let base = (c.rank() * 8) as i64;
+                let ids: Vec<i64> = (base..base + 8).collect();
+                let k1 = Column::I64(ids.iter().map(|i| i % 3).collect());
+                let k2 = Column::Bool(ids.iter().map(|i| i % 2 == 0).collect());
+                let vals = Column::F64(ids.iter().map(|&i| i as f64).collect());
+                let (kcols, outs) = distributed_aggregate_keys(
+                    &c,
+                    &[k1, k2],
+                    &[vals],
+                    &specs()[..1],
+                    strategy,
+                )
+                .unwrap();
+                (
+                    kcols[0].as_i64().to_vec(),
+                    kcols[1].as_bool().to_vec(),
+                    outs[0].as_f64().to_vec(),
+                )
+            });
+            let mut rows: Vec<(i64, bool, f64)> = out
+                .iter()
+                .flat_map(|(a, b, s)| {
+                    a.iter()
+                        .zip(b.iter())
+                        .zip(s.iter())
+                        .map(|((&a, &b), &s)| (a, b, s))
+                })
+                .collect();
+            rows.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+            assert_eq!(rows.len(), expected_groups, "strategy {strategy:?}");
+            // serial oracle
+            let mut expect: std::collections::BTreeMap<(i64, bool), f64> = Default::default();
+            for i in 0..24i64 {
+                *expect.entry((i % 3, i % 2 == 0)).or_insert(0.0) += i as f64;
+            }
+            let expect: Vec<((i64, bool), f64)> = expect.into_iter().collect();
+            for ((a, b, s), (ek, es)) in rows.iter().zip(&expect) {
+                assert_eq!((*a, *b), *ek, "strategy {strategy:?}");
+                assert!((s - es).abs() < 1e-9, "strategy {strategy:?}: {s} vs {es}");
             }
         }
     }

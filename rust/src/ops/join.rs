@@ -1,14 +1,28 @@
-//! Equi-join: hash-partition both sides by key, then local sort-merge
-//! (paper §4.5: "we use sort-merge for join, with Timsort as the sorting
-//! algorithm" — Rust's stable `sort_by_key` is a Timsort-family merge sort).
+//! Equi-join over composite keys with join types.
+//!
+//! Both sides are hash-partitioned by their key *tuple* so equal keys meet
+//! on `owner_of_key(keys)` (the paper's hash partitioning, Fig. 5,
+//! generalized from `_df_id[i] % npes` to an Fx hash over the key list).
+//! The local join is a hash join producing `(left, right)` index pairs where
+//! a missing side (`None`) marks the null-introduced rows of Left / Right /
+//! Outer joins. Because the shuffle colocates equal keys, the unmatched-row
+//! bookkeeping is purely rank-local.
+//!
+//! The seed's single-key sort-merge join ([`local_sort_merge_join`]) is kept
+//! both as the historical reference implementation and as an oracle in the
+//! property tests.
 
-use super::shuffle::shuffle_by_key;
+use super::keys::{key_rows, owner_of_key, KeyRow};
+use super::shuffle::shuffle_by_owner;
 use crate::column::Column;
 use crate::comm::Comm;
-use anyhow::Result;
+use crate::fxhash::FxHashMap;
+use crate::types::JoinType;
+use anyhow::{bail, Result};
 
-/// Local sort-merge join. Returns `(left_indices, right_indices)` — one
-/// entry per output row (the cross product within each equal-key group).
+/// Local sort-merge inner join over single i64 keys (the seed's kernel).
+/// Returns `(left_indices, right_indices)` — one entry per output row (the
+/// cross product within each equal-key group).
 pub fn local_sort_merge_join(lkeys: &[i64], rkeys: &[i64]) -> (Vec<usize>, Vec<usize>) {
     let mut lidx: Vec<usize> = (0..lkeys.len()).collect();
     let mut ridx: Vec<usize> = (0..rkeys.len()).collect();
@@ -48,10 +62,135 @@ pub fn local_sort_merge_join(lkeys: &[i64], rkeys: &[i64]) -> (Vec<usize>, Vec<u
     (out_l, out_r)
 }
 
-/// Distributed inner equi-join. Both sides are shuffled so equal keys meet
-/// on `owner_of(key)`; the local join follows. Output columns: joined key,
-/// then left payload columns, then right payload columns. Output
-/// distribution is `1D_VAR`.
+/// Local hash join over key tuples with join-type semantics. Returns one
+/// `(left, right)` index pair per output row; `None` marks the missing side
+/// of an unmatched row (never both `None`). Left rows are visited in input
+/// order; for Right/Outer the unmatched right rows follow in input order.
+pub fn local_join_pairs(
+    lkeys: &[KeyRow],
+    rkeys: &[KeyRow],
+    how: JoinType,
+) -> Vec<(Option<usize>, Option<usize>)> {
+    let mut index: FxHashMap<&KeyRow, Vec<usize>> = FxHashMap::default();
+    for (j, k) in rkeys.iter().enumerate() {
+        index.entry(k).or_default().push(j);
+    }
+    let mut out = Vec::new();
+    let mut right_matched = vec![false; rkeys.len()];
+    for (i, k) in lkeys.iter().enumerate() {
+        match index.get(k) {
+            Some(matches) => match how {
+                JoinType::Anti => {}
+                JoinType::Semi => out.push((Some(i), None)),
+                _ => {
+                    for &j in matches {
+                        right_matched[j] = true;
+                        out.push((Some(i), Some(j)));
+                    }
+                }
+            },
+            None => match how {
+                JoinType::Left | JoinType::Outer => out.push((Some(i), None)),
+                JoinType::Anti => out.push((Some(i), None)),
+                JoinType::Inner | JoinType::Right | JoinType::Semi => {}
+            },
+        }
+    }
+    if matches!(how, JoinType::Right | JoinType::Outer) {
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                out.push((None, Some(j)));
+            }
+        }
+    }
+    out
+}
+
+/// Distributed equi-join over composite keys.
+///
+/// `lkey_cols`/`rkey_cols` are the key columns in `on`-pair order (equal
+/// dtypes per pair, validated by plan typing); `lpay`/`rpay` the non-key
+/// payload columns. Returns:
+///
+/// * one output key column per pair (key dtype preserved — keys are never
+///   null in an equi-join: each output row has the key from whichever side
+///   is present);
+/// * the left payload columns (null-promoted via
+///   [`Column::take_nullable`] when `how.nullable_left()`);
+/// * the right payload columns (empty for Semi/Anti, null-promoted when
+///   `how.nullable_right()`).
+///
+/// Output distribution is `1D_VAR`.
+pub fn distributed_join_on(
+    comm: &Comm,
+    lkey_cols: &[Column],
+    lpay: &[Column],
+    rkey_cols: &[Column],
+    rpay: &[Column],
+    how: JoinType,
+) -> Result<(Vec<Column>, Vec<Column>, Vec<Column>)> {
+    if lkey_cols.len() != rkey_cols.len() || lkey_cols.is_empty() {
+        bail!("join: key column lists must be non-empty and equal length");
+    }
+    let p = comm.nranks();
+    // route both sides by the hash of their key tuple
+    let lrows_pre = key_rows(&lkey_cols.iter().collect::<Vec<_>>())?;
+    let rrows_pre = key_rows(&rkey_cols.iter().collect::<Vec<_>>())?;
+    let lowners: Vec<usize> = lrows_pre.iter().map(|r| owner_of_key(r, p)).collect();
+    let rowners: Vec<usize> = rrows_pre.iter().map(|r| owner_of_key(r, p)).collect();
+
+    let mut lall: Vec<Column> = lkey_cols.to_vec();
+    lall.extend(lpay.iter().cloned());
+    let mut rall: Vec<Column> = rkey_cols.to_vec();
+    rall.extend(rpay.iter().cloned());
+    let lall = shuffle_by_owner(comm, &lowners, &lall)?;
+    let rall = shuffle_by_owner(comm, &rowners, &rall)?;
+    let (lk, lc) = lall.split_at(lkey_cols.len());
+    let (rk, rc) = rall.split_at(rkey_cols.len());
+
+    let lrows = key_rows(&lk.iter().collect::<Vec<_>>())?;
+    let rrows = key_rows(&rk.iter().collect::<Vec<_>>())?;
+    let pairs = local_join_pairs(&lrows, &rrows, how);
+
+    // output key columns: value from whichever side is present
+    let mut keys_out: Vec<Column> =
+        lk.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    for &(lo, ro) in &pairs {
+        let row = match (lo, ro) {
+            (Some(i), _) => &lrows[i],
+            (None, Some(j)) => &rrows[j],
+            (None, None) => unreachable!("join pair with no sides"),
+        };
+        for (col, cell) in keys_out.iter_mut().zip(row) {
+            col.push(&cell.to_value());
+        }
+    }
+
+    let lidx: Vec<Option<usize>> = pairs.iter().map(|&(lo, _)| lo).collect();
+    let left_out: Vec<Column> = if how.nullable_left() {
+        lc.iter().map(|c| c.take_nullable(&lidx)).collect()
+    } else {
+        let li: Vec<usize> = lidx.iter().map(|o| o.expect("left index")).collect();
+        lc.iter().map(|c| c.take(&li)).collect()
+    };
+
+    let right_out: Vec<Column> = if !how.keeps_right_columns() {
+        Vec::new()
+    } else {
+        let ridx: Vec<Option<usize>> = pairs.iter().map(|&(_, ro)| ro).collect();
+        if how.nullable_right() {
+            rc.iter().map(|c| c.take_nullable(&ridx)).collect()
+        } else {
+            let ri: Vec<usize> = ridx.iter().map(|o| o.expect("right index")).collect();
+            rc.iter().map(|c| c.take(&ri)).collect()
+        }
+    };
+    Ok((keys_out, left_out, right_out))
+}
+
+/// Distributed inner equi-join over single i64 keys — the seed API, now a
+/// thin wrapper over [`distributed_join_on`]. Output columns: joined key,
+/// then left payload columns, then right payload columns.
 pub fn distributed_join(
     comm: &Comm,
     lkeys: &[i64],
@@ -59,19 +198,22 @@ pub fn distributed_join(
     rkeys: &[i64],
     rcols: &[Column],
 ) -> Result<(Vec<i64>, Vec<Column>, Vec<Column>)> {
-    let (lk, lc) = shuffle_by_key(comm, lkeys, lcols)?;
-    let (rk, rc) = shuffle_by_key(comm, rkeys, rcols)?;
-    let (li, ri) = local_sort_merge_join(&lk, &rk);
-    let keys: Vec<i64> = li.iter().map(|&i| lk[i]).collect();
-    let left_out: Vec<Column> = lc.iter().map(|c| c.take(&li)).collect();
-    let right_out: Vec<Column> = rc.iter().map(|c| c.take(&ri)).collect();
-    Ok((keys, left_out, right_out))
+    let (keys, lout, rout) = distributed_join_on(
+        comm,
+        &[Column::I64(lkeys.to_vec())],
+        lcols,
+        &[Column::I64(rkeys.to_vec())],
+        rcols,
+        JoinType::Inner,
+    )?;
+    Ok((keys[0].as_i64().to_vec(), lout, rout))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::run_spmd;
+    use crate::ops::keys::KeyVal;
 
     /// Brute-force oracle.
     fn nested_loop(lk: &[i64], rk: &[i64]) -> Vec<(i64, usize, usize)> {
@@ -85,6 +227,10 @@ mod tests {
         }
         out.sort();
         out
+    }
+
+    fn rows1(ks: &[i64]) -> Vec<KeyRow> {
+        ks.iter().map(|&k| vec![KeyVal::I64(k)]).collect()
     }
 
     #[test]
@@ -101,6 +247,15 @@ mod tests {
         assert_eq!(got, nested_loop(&lk, &rk));
         // 3 appears 3×2 = 6 times, 1 appears 1×1
         assert_eq!(li.len(), 7);
+
+        // the composite hash join agrees with the sort-merge oracle on Inner
+        let pairs = local_join_pairs(&rows1(&lk), &rows1(&rk), JoinType::Inner);
+        let mut got2: Vec<(i64, usize, usize)> = pairs
+            .iter()
+            .map(|&(l, r)| (lk[l.unwrap()], l.unwrap(), r.unwrap()))
+            .collect();
+        got2.sort();
+        assert_eq!(got2, nested_loop(&lk, &rk));
     }
 
     #[test]
@@ -109,12 +264,72 @@ mod tests {
         assert!(li.is_empty() && ri.is_empty());
         let (li, _) = local_sort_merge_join(&[1], &[]);
         assert!(li.is_empty());
+        assert!(local_join_pairs(&[], &rows1(&[1, 2]), JoinType::Inner).is_empty());
+        assert_eq!(
+            local_join_pairs(&rows1(&[1]), &[], JoinType::Left),
+            vec![(Some(0), None)]
+        );
     }
 
     #[test]
     fn local_join_no_matches() {
         let (li, _) = local_sort_merge_join(&[1, 2], &[3, 4]);
         assert!(li.is_empty());
+    }
+
+    #[test]
+    fn local_join_types_semantics() {
+        let lk = rows1(&[1, 2, 2, 5]);
+        let rk = rows1(&[2, 3]);
+        // Inner: two (2,2) matches
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Inner),
+            vec![(Some(1), Some(0)), (Some(2), Some(0))]
+        );
+        // Left: unmatched 1 and 5 survive with None right
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Left),
+            vec![
+                (Some(0), None),
+                (Some(1), Some(0)),
+                (Some(2), Some(0)),
+                (Some(3), None)
+            ]
+        );
+        // Right: unmatched 3 survives with None left, appended after
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Right),
+            vec![(Some(1), Some(0)), (Some(2), Some(0)), (None, Some(1))]
+        );
+        // Outer = Left ∪ unmatched right
+        let outer = local_join_pairs(&lk, &rk, JoinType::Outer);
+        assert_eq!(outer.len(), 5);
+        assert!(outer.contains(&(None, Some(1))));
+        // Semi: one row per matching left row
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Semi),
+            vec![(Some(1), None), (Some(2), None)]
+        );
+        // Anti: the non-matching left rows
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Anti),
+            vec![(Some(0), None), (Some(3), None)]
+        );
+    }
+
+    #[test]
+    fn local_join_composite_keys() {
+        let lk = vec![
+            vec![KeyVal::I64(1), KeyVal::Str("a".into())],
+            vec![KeyVal::I64(1), KeyVal::Str("b".into())],
+        ];
+        let rk = vec![vec![KeyVal::I64(1), KeyVal::Str("a".into())]];
+        // only the full tuple (1,"a") matches — single-column equality is
+        // not enough
+        assert_eq!(
+            local_join_pairs(&lk, &rk, JoinType::Inner),
+            vec![(Some(0), Some(0))]
+        );
     }
 
     #[test]
@@ -157,6 +372,78 @@ mod tests {
         for (k, l, r) in rows {
             assert_eq!(l, k * 10);
             assert_eq!(r, k * 100);
+        }
+    }
+
+    #[test]
+    fn distributed_left_join_null_fills() {
+        // left keys 0..6 over 2 ranks; right covers only even keys
+        let lk_all: Vec<i64> = (0..6).collect();
+        let rk_all: Vec<i64> = vec![0, 2, 4];
+        let out = run_spmd(2, |c| {
+            let (ls, ll) = crate::comm::block_range(lk_all.len(), 2, c.rank());
+            let (rs, rl) = crate::comm::block_range(rk_all.len(), 2, c.rank());
+            let lkc = Column::I64(lk_all[ls..ls + ll].to_vec());
+            let lval = Column::I64(lk_all[ls..ls + ll].iter().map(|k| k + 100).collect());
+            let rkc = Column::I64(rk_all[rs..rs + rl].to_vec());
+            let rval = Column::I64(rk_all[rs..rs + rl].iter().map(|k| k + 200).collect());
+            let (keys, lc, rc) = distributed_join_on(
+                &c,
+                &[lkc],
+                &[lval],
+                &[rkc],
+                &[rval],
+                JoinType::Left,
+            )
+            .unwrap();
+            (
+                keys[0].as_i64().to_vec(),
+                lc[0].as_i64().to_vec(),
+                rc[0].as_f64().to_vec(), // null-promoted
+            )
+        });
+        let mut rows: Vec<(i64, i64, String)> = out
+            .iter()
+            .flat_map(|(k, l, r)| {
+                k.iter()
+                    .zip(l.iter())
+                    .zip(r.iter())
+                    .map(|((&k, &l), &r)| (k, l, format!("{r}")))
+            })
+            .collect();
+        rows.sort();
+        assert_eq!(rows.len(), 6); // every left row survives
+        for (k, l, r) in &rows {
+            assert_eq!(*l, k + 100);
+            if k % 2 == 0 {
+                assert_eq!(r, &format!("{}", *k as f64 + 200.0));
+            } else {
+                assert_eq!(r, "NaN");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_semi_anti_partition_left() {
+        let lk_all: Vec<i64> = (0..8).collect();
+        let rk_all: Vec<i64> = vec![1, 3, 5, 7, 9];
+        for (how, expect) in [
+            (JoinType::Semi, vec![1, 3, 5, 7]),
+            (JoinType::Anti, vec![0, 2, 4, 6]),
+        ] {
+            let out = run_spmd(3, |c| {
+                let (ls, ll) = crate::comm::block_range(lk_all.len(), 3, c.rank());
+                let (rs, rl) = crate::comm::block_range(rk_all.len(), 3, c.rank());
+                let lkc = Column::I64(lk_all[ls..ls + ll].to_vec());
+                let rkc = Column::I64(rk_all[rs..rs + rl].to_vec());
+                let (keys, _, rc) =
+                    distributed_join_on(&c, &[lkc], &[], &[rkc], &[], how).unwrap();
+                assert!(rc.is_empty());
+                keys[0].as_i64().to_vec()
+            });
+            let mut got: Vec<i64> = out.into_iter().flatten().collect();
+            got.sort();
+            assert_eq!(got, expect, "{how:?}");
         }
     }
 }

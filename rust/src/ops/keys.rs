@@ -1,0 +1,265 @@
+//! Composite-key machinery shared by the distributed join / aggregate /
+//! sort operators and the baseline engines.
+//!
+//! A relational key in the redesigned API is a *list* of columns
+//! (`on: &[("lk","rk")]`, `aggregate(&["k1","k2"], …)`). At runtime one row's
+//! key is a [`KeyVal`] tuple: hashable (routing rows to their owner rank via
+//! [`hash_key_row`] — the composite generalization of the paper's
+//! `_df_id[i] % npes`), totally ordered (merge comparators, deterministic
+//! group output), and wire-encodable (sample-sort splitters, pre-aggregation
+//! records). Float64 columns are rejected as keys at plan-typing time, so
+//! every key cell has exact equality.
+
+use crate::column::Column;
+use crate::fxhash::FxHasher;
+use crate::types::{SortOrder, Value};
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::hash::{BuildHasher, BuildHasherDefault};
+
+/// One cell of a composite key. Variants cover exactly the groupable dtypes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KeyVal {
+    I64(i64),
+    Bool(bool),
+    Str(String),
+}
+
+impl KeyVal {
+    /// Convert from a row-engine [`Value`] cell (F64 keys are rejected).
+    pub fn from_value(v: &Value) -> Result<KeyVal> {
+        Ok(match v {
+            Value::I64(x) => KeyVal::I64(*x),
+            Value::Bool(x) => KeyVal::Bool(*x),
+            Value::Str(x) => KeyVal::Str(x.clone()),
+            Value::F64(_) => bail!("Float64 cannot be a relational key"),
+        })
+    }
+
+    pub fn to_value(&self) -> Value {
+        match self {
+            KeyVal::I64(x) => Value::I64(*x),
+            KeyVal::Bool(x) => Value::Bool(*x),
+            KeyVal::Str(x) => Value::Str(x.clone()),
+        }
+    }
+}
+
+/// A full key tuple for one row.
+pub type KeyRow = Vec<KeyVal>;
+
+/// Materialize per-row key tuples from the key columns (all equal length).
+pub fn key_rows(cols: &[&Column]) -> Result<Vec<KeyRow>> {
+    let n = cols.first().map_or(0, |c| c.len());
+    let mut out: Vec<KeyRow> = (0..n).map(|_| Vec::with_capacity(cols.len())).collect();
+    for c in cols {
+        match c {
+            Column::I64(v) => {
+                for (row, x) in out.iter_mut().zip(v) {
+                    row.push(KeyVal::I64(*x));
+                }
+            }
+            Column::Bool(v) => {
+                for (row, x) in out.iter_mut().zip(v) {
+                    row.push(KeyVal::Bool(*x));
+                }
+            }
+            Column::Str(v) => {
+                for (row, x) in out.iter_mut().zip(v) {
+                    row.push(KeyVal::Str(x.clone()));
+                }
+            }
+            Column::F64(_) => bail!("Float64 cannot be a relational key"),
+        }
+    }
+    Ok(out)
+}
+
+/// Fx hash of one key tuple — the composite-key owner function input.
+pub fn hash_key_row(row: &[KeyVal]) -> u64 {
+    let b: BuildHasherDefault<FxHasher> = Default::default();
+    b.hash_one(row)
+}
+
+/// Destination rank of a key tuple.
+pub fn owner_of_key(row: &[KeyVal], nranks: usize) -> usize {
+    (hash_key_row(row) % nranks as u64) as usize
+}
+
+/// Compare two key tuples under per-column sort directions. Missing
+/// directions default to ascending (group-by canonical order).
+pub fn cmp_key_rows(a: &[KeyVal], b: &[KeyVal], orders: &[SortOrder]) -> Ordering {
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let ord = x.cmp(y);
+        let ord = match orders.get(i).copied().unwrap_or(SortOrder::Asc) {
+            SortOrder::Asc => ord,
+            SortOrder::Desc => ord.reverse(),
+        };
+        if ord != Ordering::Equal {
+            return ord;
+        }
+    }
+    Ordering::Equal
+}
+
+/// Wire-encode one key tuple (tag byte + payload per cell).
+pub fn encode_key_row(row: &[KeyVal], buf: &mut Vec<u8>) {
+    for v in row {
+        match v {
+            KeyVal::I64(x) => {
+                buf.push(0);
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            KeyVal::Bool(x) => {
+                buf.push(1);
+                buf.push(*x as u8);
+            }
+            KeyVal::Str(x) => {
+                buf.push(2);
+                buf.extend_from_slice(&(x.len() as u32).to_le_bytes());
+                buf.extend_from_slice(x.as_bytes());
+            }
+        }
+    }
+}
+
+/// Decode an `ncols`-cell key tuple written by [`encode_key_row`].
+pub fn decode_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<KeyRow> {
+    let need = |pos: &usize, n: usize| -> Result<()> {
+        if *pos + n > buf.len() {
+            bail!("key row decode: truncated buffer");
+        }
+        Ok(())
+    };
+    let mut row = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        need(pos, 1)?;
+        let tag = buf[*pos];
+        *pos += 1;
+        match tag {
+            0 => {
+                need(pos, 8)?;
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                row.push(KeyVal::I64(i64::from_le_bytes(b)));
+            }
+            1 => {
+                need(pos, 1)?;
+                row.push(KeyVal::Bool(buf[*pos] != 0));
+                *pos += 1;
+            }
+            2 => {
+                need(pos, 4)?;
+                let mut b = [0u8; 4];
+                b.copy_from_slice(&buf[*pos..*pos + 4]);
+                *pos += 4;
+                let len = u32::from_le_bytes(b) as usize;
+                need(pos, len)?;
+                let s = String::from_utf8_lossy(&buf[*pos..*pos + len]).into_owned();
+                *pos += len;
+                row.push(KeyVal::Str(s));
+            }
+            t => bail!("key row decode: bad tag {t}"),
+        }
+    }
+    Ok(row)
+}
+
+/// Rebuild key columns (one per key position) from key tuples, pushing in
+/// row order. `templates` supplies the dtype of each position.
+pub fn key_columns(rows: &[KeyRow], templates: &[&Column]) -> Vec<Column> {
+    let mut cols: Vec<Column> = templates
+        .iter()
+        .map(|c| Column::new_empty(c.dtype()))
+        .collect();
+    for row in rows {
+        for (col, cell) in cols.iter_mut().zip(row) {
+            col.push(&cell.to_value());
+        }
+    }
+    cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_rows_and_hash() {
+        let a = Column::I64(vec![1, 1, 2]);
+        let b = Column::Str(vec!["x".into(), "y".into(), "x".into()]);
+        let rows = key_rows(&[&a, &b]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec![KeyVal::I64(1), KeyVal::Str("x".into())]);
+        assert_ne!(hash_key_row(&rows[0]), hash_key_row(&rows[1]));
+        assert_eq!(hash_key_row(&rows[0]), hash_key_row(&rows[0].clone()));
+        assert!(key_rows(&[&Column::F64(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn cmp_with_directions() {
+        let a = vec![KeyVal::I64(1), KeyVal::I64(9)];
+        let b = vec![KeyVal::I64(1), KeyVal::I64(3)];
+        use crate::types::SortOrder::*;
+        assert_eq!(cmp_key_rows(&a, &b, &[Asc, Asc]), Ordering::Greater);
+        assert_eq!(cmp_key_rows(&a, &b, &[Asc, Desc]), Ordering::Less);
+        assert_eq!(cmp_key_rows(&a, &a, &[Desc, Desc]), Ordering::Equal);
+        // first column dominates
+        let c = vec![KeyVal::I64(0), KeyVal::I64(100)];
+        assert_eq!(cmp_key_rows(&c, &b, &[Desc, Asc]), Ordering::Greater);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let row = vec![
+            KeyVal::I64(-7),
+            KeyVal::Bool(true),
+            KeyVal::Str("hello".into()),
+        ];
+        let mut buf = Vec::new();
+        encode_key_row(&row, &mut buf);
+        encode_key_row(&row, &mut buf);
+        let mut pos = 0;
+        assert_eq!(decode_key_row(3, &buf, &mut pos).unwrap(), row);
+        assert_eq!(decode_key_row(3, &buf, &mut pos).unwrap(), row);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn decode_truncated_errors_not_panics() {
+        let row = vec![KeyVal::I64(42), KeyVal::Str("abcdef".into())];
+        let mut buf = Vec::new();
+        encode_key_row(&row, &mut buf);
+        // every strict prefix must produce Err, never a panic
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            assert!(
+                decode_key_row(2, &buf[..cut], &mut pos).is_err(),
+                "cut={cut}"
+            );
+        }
+        // asking for more cells than encoded also errors
+        let mut pos = 0;
+        assert!(decode_key_row(3, &buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn key_columns_rebuild() {
+        let a = Column::I64(vec![4, 2]);
+        let b = Column::Str(vec!["p".into(), "q".into()]);
+        let rows = key_rows(&[&a, &b]).unwrap();
+        let cols = key_columns(&rows, &[&a, &b]);
+        assert_eq!(cols[0], a);
+        assert_eq!(cols[1], b);
+    }
+
+    #[test]
+    fn value_conversion() {
+        assert_eq!(
+            KeyVal::from_value(&Value::I64(3)).unwrap().to_value(),
+            Value::I64(3)
+        );
+        assert!(KeyVal::from_value(&Value::F64(1.0)).is_err());
+    }
+}

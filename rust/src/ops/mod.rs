@@ -2,11 +2,14 @@
 //! CGen emits (§4.5), one module per communication pattern:
 //!
 //! * [`shuffle`] — hash-partition + `alltoallv` (join/aggregate prologue;
-//!   the paper's Fig. 5 `_df_id[i] % npes` packing loop).
-//! * [`join`] — post-shuffle sort-merge join (Timsort-family stable sort,
-//!   matching the paper's choice).
-//! * [`aggregate`] — post-shuffle hash aggregation, with optional local
-//!   pre-aggregation (decomposed partial states).
+//!   the paper's Fig. 5 `_df_id[i] % npes` packing loop, generalized to
+//!   composite-key owners in [`shuffle::shuffle_by_owner`]).
+//! * [`keys`] — composite-key tuples: hashing, ordering, wire codec.
+//! * [`join`] — post-shuffle hash join over key tuples with
+//!   Inner/Left/Right/Outer/Semi/Anti semantics (plus the seed's single-key
+//!   sort-merge kernel as oracle).
+//! * [`aggregate`] — post-shuffle hash aggregation over key tuples, with
+//!   optional local pre-aggregation (decomposed partial states).
 //! * [`scan`] — cumulative sum via local partials + `exscan`.
 //! * [`stencil`] — SMA/WMA windows via near-neighbor halo exchange.
 //! * [`rebalance`] — `1D_VAR` → `1D_BLOCK` redistribution preserving global
@@ -16,16 +19,18 @@
 
 pub mod aggregate;
 pub mod join;
+pub mod keys;
 pub mod rebalance;
 pub mod scan;
 pub mod shuffle;
 pub mod sort;
 pub mod stencil;
 
-pub use aggregate::distributed_aggregate;
-pub use join::{local_sort_merge_join, distributed_join};
+pub use aggregate::{distributed_aggregate, distributed_aggregate_keys, local_hash_aggregate_keys};
+pub use join::{distributed_join, distributed_join_on, local_join_pairs, local_sort_merge_join};
+pub use keys::{KeyRow, KeyVal};
 pub use rebalance::rebalance_block;
 pub use scan::{cumsum_f64, cumsum_i64};
-pub use shuffle::shuffle_by_key;
-pub use sort::distributed_sort_by_key;
+pub use shuffle::{shuffle_by_key, shuffle_by_owner};
+pub use sort::{distributed_sort_by_key, distributed_sort_keys};
 pub use stencil::{stencil_1d, stencil_serial};

@@ -59,6 +59,52 @@ pub fn shuffle_by_key(comm: &Comm, keys: &[i64], cols: &[Column]) -> Result<(Vec
     Ok((out_keys, out_cols))
 }
 
+/// Shuffle `cols` (all of equal local length) with a precomputed destination
+/// rank per row — the composite-key generalization of [`shuffle_by_key`]:
+/// callers hash their key *tuple* (via [`crate::ops::keys::owner_of_key`])
+/// and ship key columns alongside the payload. Returns the received columns
+/// in the same column order, per-source chunks concatenated in rank order.
+pub fn shuffle_by_owner(
+    comm: &Comm,
+    owners: &[usize],
+    cols: &[Column],
+) -> Result<Vec<Column>> {
+    let p = comm.nranks();
+    debug_assert!(cols.iter().all(|c| c.len() == owners.len()));
+
+    let mut counts = vec![0usize; p];
+    for &d in owners {
+        counts[d] += 1;
+    }
+    let mut buckets: Vec<Vec<usize>> =
+        counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (i, &d) in owners.iter().enumerate() {
+        buckets[d].push(i);
+    }
+
+    let mut bufs = Vec::with_capacity(p);
+    for idx in &buckets {
+        let mut buf = Vec::new();
+        for c in cols {
+            encode_column_take(c, idx, &mut buf);
+        }
+        bufs.push(buf);
+    }
+
+    let received = comm.alltoallv_bytes(bufs);
+
+    let mut out_cols: Vec<Column> =
+        cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    for buf in received {
+        let mut pos = 0;
+        for oc in out_cols.iter_mut() {
+            let c = decode_column(&buf, &mut pos)?;
+            oc.extend(&c);
+        }
+    }
+    Ok(out_cols)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +168,31 @@ mod tests {
         assert_eq!(out[0].0.len(), 4);
         assert!(out[0].1.iter().all(|s| s == "a" || s == "c"));
         assert!(out[1].1.iter().all(|s| s == "b" || s == "d"));
+    }
+
+    #[test]
+    fn shuffle_by_owner_routes_and_preserves_multiset() {
+        let out = run_spmd(3, |c| {
+            // rows carry (key, val); destination precomputed per row
+            let keys: Vec<i64> = (0..9).map(|i| i + c.rank() as i64).collect();
+            let owners: Vec<usize> = keys.iter().map(|&k| (k as usize) % 3).collect();
+            let kcol = Column::I64(keys.clone());
+            let vcol = Column::I64(keys.iter().map(|&k| k * 11).collect());
+            let cols = shuffle_by_owner(&c, &owners, &[kcol, vcol]).unwrap();
+            (c.rank(), cols[0].as_i64().to_vec(), cols[1].as_i64().to_vec())
+        });
+        let mut all: Vec<i64> = Vec::new();
+        for (rank, ks, vs) in &out {
+            for (k, v) in ks.iter().zip(vs) {
+                assert_eq!((*k as usize) % 3, *rank, "key {k} on wrong rank");
+                assert_eq!(*v, *k * 11);
+                all.push(*k);
+            }
+        }
+        all.sort();
+        let mut expect: Vec<i64> = (0..3).flat_map(|r| (0..9).map(move |i| i + r)).collect();
+        expect.sort();
+        assert_eq!(all, expect);
     }
 
     #[test]

@@ -1,114 +1,156 @@
-//! Distributed sort by an Int64 key: sample-sort (local sort → regular
-//! sampling → splitter broadcast → range partition `alltoallv` → local
-//! merge). Used for global result canonicalization and TPCx-BB's ORDER BY
-//! steps. Output distribution: `1D_VAR` (range partitions are data
-//! dependent — the motivating case for the paper's 1D_VAR).
+//! Distributed sort over composite keys with per-key directions:
+//! sample-sort (local sort → regular sampling → splitter broadcast → range
+//! partition `alltoallv` → local merge). Used for global result
+//! canonicalization and TPCx-BB's multi-column ORDER BY steps. Output
+//! distribution: `1D_VAR` (range partitions are data dependent — the
+//! motivating case for the paper's 1D_VAR).
+//!
+//! Splitters are full key *tuples* shipped through the [`keys`] wire codec;
+//! ordering everywhere is [`cmp_key_rows`] so mixed Asc/Desc key lists
+//! range-partition correctly.
 
+use super::keys::{self, cmp_key_rows, decode_key_row, encode_key_row, KeyRow};
 use crate::column::{decode_column, encode_column, Column};
 use crate::comm::Comm;
+use crate::types::SortOrder;
 use anyhow::Result;
+use std::cmp::Ordering;
 
-/// Sort `(keys, cols)` globally ascending by key. Rank r ends up holding
-/// the r-th range of the sorted order (contiguous, 1D_VAR).
-pub fn distributed_sort_by_key(
+/// Sort `(key_cols, payload)` globally by the key tuples under `orders`
+/// (one direction per key column). Rank r ends up holding the r-th range of
+/// the sorted order (contiguous, 1D_VAR). Returns the sorted key columns
+/// (dtypes preserved) and payload columns.
+pub fn distributed_sort_keys(
     comm: &Comm,
-    keys: &[i64],
-    cols: &[Column],
-) -> Result<(Vec<i64>, Vec<Column>)> {
+    key_cols: &[Column],
+    orders: &[SortOrder],
+    payload: &[Column],
+) -> Result<(Vec<Column>, Vec<Column>)> {
     let p = comm.nranks();
+    let krows = keys::key_rows(&key_cols.iter().collect::<Vec<_>>())?;
     // local sort (stable — Timsort-family, as in the paper)
-    let mut idx: Vec<usize> = (0..keys.len()).collect();
-    idx.sort_by_key(|&i| keys[i]);
-    let skeys: Vec<i64> = idx.iter().map(|&i| keys[i]).collect();
-    let scols: Vec<Column> = cols.iter().map(|c| c.take(&idx)).collect();
+    let mut idx: Vec<usize> = (0..krows.len()).collect();
+    idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
+    let skrows: Vec<KeyRow> = idx.iter().map(|&i| krows[i].clone()).collect();
+    let skey_cols: Vec<Column> = key_cols.iter().map(|c| c.take(&idx)).collect();
+    let spay: Vec<Column> = payload.iter().map(|c| c.take(&idx)).collect();
 
     if p == 1 {
-        return Ok((skeys, scols));
+        return Ok((skey_cols, spay));
     }
 
-    // regular sampling: p samples per rank → root picks p-1 splitters
-    let mut sample = Vec::with_capacity(p);
-    for s in 0..p {
-        if !skeys.is_empty() {
-            let pos = (s * skeys.len()) / p;
-            sample.push(skeys[pos.min(skeys.len() - 1)]);
+    // regular sampling: p sample tuples per non-empty rank → root picks
+    // p-1 splitter tuples
+    let mut sample_buf = Vec::new();
+    if !skrows.is_empty() {
+        for s in 0..p {
+            let pos = ((s * skrows.len()) / p).min(skrows.len() - 1);
+            encode_key_row(&skrows[pos], &mut sample_buf);
         }
     }
-    let mut payload = Vec::new();
-    for s in &sample {
-        payload.extend_from_slice(&s.to_le_bytes());
-    }
-    let gathered = comm.gather_bytes(0, payload);
-    let splitters: Vec<i64> = if comm.is_root() {
-        let mut all: Vec<i64> = gathered
-            .iter()
-            .flat_map(|b| {
-                b.chunks_exact(8)
-                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
-            })
-            .collect();
-        all.sort_unstable();
-        if all.is_empty() {
-            vec![i64::MAX; p - 1] // nothing to sort anywhere: any splitters do
-        } else {
-            (1..p)
-                .map(|i| all[((i * all.len()) / p).min(all.len() - 1)])
-                .collect()
+    let gathered = comm.gather_bytes(0, sample_buf);
+    let mut splitter_buf = Vec::new();
+    if comm.is_root() {
+        let mut all: Vec<KeyRow> = Vec::new();
+        for buf in &gathered {
+            let mut pos = 0;
+            while pos < buf.len() {
+                all.push(decode_key_row(key_cols.len(), buf, &mut pos)?);
+            }
         }
-    } else {
-        Vec::new()
-    };
-    let mut spayload = Vec::new();
-    for s in &splitters {
-        spayload.extend_from_slice(&s.to_le_bytes());
+        all.sort_by(|a, b| cmp_key_rows(a, b, orders));
+        if !all.is_empty() {
+            for i in 1..p {
+                let pos = ((i * all.len()) / p).min(all.len() - 1);
+                encode_key_row(&all[pos], &mut splitter_buf);
+            }
+        }
+        // nothing to sort anywhere → broadcast zero splitters; every rank's
+        // (empty) data trivially lands in bucket 0
     }
-    let spayload = comm.bcast_bytes(0, spayload);
-    let splitters: Vec<i64> = spayload
-        .chunks_exact(8)
-        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
-        .collect();
+    let splitter_buf = comm.bcast_bytes(0, splitter_buf);
+    let mut splitters: Vec<KeyRow> = Vec::new();
+    {
+        let mut pos = 0;
+        while pos < splitter_buf.len() {
+            splitters.push(decode_key_row(key_cols.len(), &splitter_buf, &mut pos)?);
+        }
+    }
 
-    // range partition: dst = #splitters ≤ key (upper_bound)
+    // range partition: dst = #splitters ≤ key (upper_bound under `orders`)
     let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
     let mut start = 0usize;
     for dst in 0..p {
-        let end = if dst + 1 < p {
-            skeys.partition_point(|&k| k <= splitters[dst])
+        let end = if dst < splitters.len() {
+            start
+                + skrows[start..].partition_point(|k| {
+                    cmp_key_rows(k, &splitters[dst], orders) != Ordering::Greater
+                })
         } else {
-            skeys.len()
+            skrows.len()
         };
         if end > start {
             let buf = &mut bufs[dst];
-            encode_column(&Column::I64(skeys[start..end].to_vec()), buf);
-            for c in &scols {
+            for c in &skey_cols {
+                encode_column(&c.slice(start, end - start), buf);
+            }
+            for c in &spay {
                 encode_column(&c.slice(start, end - start), buf);
             }
         }
         start = end;
+        if start >= skrows.len() {
+            break;
+        }
     }
     let received = comm.alltoallv_bytes(bufs);
 
     // collect received runs and merge by one final local sort (runs are
     // sorted; a k-way merge is a §Perf refinement that measured <5% here)
-    let mut rkeys: Vec<i64> = Vec::new();
-    let mut rcols: Vec<Column> = cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    let mut rkeys: Vec<Column> = key_cols
+        .iter()
+        .map(|c| Column::new_empty(c.dtype()))
+        .collect();
+    let mut rpay: Vec<Column> = payload
+        .iter()
+        .map(|c| Column::new_empty(c.dtype()))
+        .collect();
     for buf in received {
         if buf.is_empty() {
             continue;
         }
         let mut pos = 0;
-        let kc = decode_column(&buf, &mut pos)?;
-        rkeys.extend_from_slice(kc.as_i64());
-        for oc in rcols.iter_mut() {
+        for oc in rkeys.iter_mut() {
+            let c = decode_column(&buf, &mut pos)?;
+            oc.extend(&c);
+        }
+        for oc in rpay.iter_mut() {
             let c = decode_column(&buf, &mut pos)?;
             oc.extend(&c);
         }
     }
-    let mut idx: Vec<usize> = (0..rkeys.len()).collect();
-    idx.sort_by_key(|&i| rkeys[i]);
-    let fkeys: Vec<i64> = idx.iter().map(|&i| rkeys[i]).collect();
-    let fcols: Vec<Column> = rcols.iter().map(|c| c.take(&idx)).collect();
-    Ok((fkeys, fcols))
+    let rrows = keys::key_rows(&rkeys.iter().collect::<Vec<_>>())?;
+    let mut idx: Vec<usize> = (0..rrows.len()).collect();
+    idx.sort_by(|&a, &b| cmp_key_rows(&rrows[a], &rrows[b], orders));
+    let fkeys: Vec<Column> = rkeys.iter().map(|c| c.take(&idx)).collect();
+    let fpay: Vec<Column> = rpay.iter().map(|c| c.take(&idx)).collect();
+    Ok((fkeys, fpay))
+}
+
+/// Sort `(keys, cols)` globally ascending by a single i64 key — the seed
+/// API, kept as a wrapper over [`distributed_sort_keys`].
+pub fn distributed_sort_by_key(
+    comm: &Comm,
+    keys: &[i64],
+    cols: &[Column],
+) -> Result<(Vec<i64>, Vec<Column>)> {
+    let (kcols, pay) = distributed_sort_keys(
+        comm,
+        &[Column::I64(keys.to_vec())],
+        &[SortOrder::Asc],
+        cols,
+    )?;
+    Ok((kcols[0].as_i64().to_vec(), pay))
 }
 
 #[cfg(test)]
@@ -139,6 +181,51 @@ mod tests {
                 assert_eq!(*v, *k * 2);
             }
         }
+    }
+
+    #[test]
+    fn sorts_descending_and_multi_key() {
+        let mut rng = Rng::new(23);
+        let a: Vec<i64> = (0..80).map(|_| rng.i64_range(0, 5)).collect();
+        let b: Vec<i64> = (0..80).map(|_| rng.i64_range(0, 100)).collect();
+        for p in [1usize, 3] {
+            let out = run_spmd(p, |c| {
+                let (s, l) = block_range(a.len(), p, c.rank());
+                let ka = Column::I64(a[s..s + l].to_vec());
+                let kb = Column::I64(b[s..s + l].to_vec());
+                let (kcols, _) = distributed_sort_keys(
+                    &c,
+                    &[ka, kb],
+                    &[SortOrder::Desc, SortOrder::Asc],
+                    &[],
+                )
+                .unwrap();
+                (kcols[0].as_i64().to_vec(), kcols[1].as_i64().to_vec())
+            });
+            let got: Vec<(i64, i64)> = out
+                .iter()
+                .flat_map(|(x, y)| x.iter().zip(y.iter()).map(|(&x, &y)| (x, y)))
+                .collect();
+            let mut expect: Vec<(i64, i64)> = a.iter().zip(&b).map(|(&x, &y)| (x, y)).collect();
+            expect.sort_by(|u, v| v.0.cmp(&u.0).then(u.1.cmp(&v.1)));
+            assert_eq!(got, expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sorts_string_keys() {
+        let words = ["pear", "apple", "fig", "apple", "date", "kiwi"];
+        let out = run_spmd(2, |c| {
+            let (s, l) = block_range(words.len(), 2, c.rank());
+            let kc = Column::Str(words[s..s + l].iter().map(|w| w.to_string()).collect());
+            let (kcols, _) =
+                distributed_sort_keys(&c, &[kc], &[SortOrder::Asc], &[]).unwrap();
+            kcols[0].as_str_col().to_vec()
+        });
+        let got: Vec<String> = out.into_iter().flatten().collect();
+        let mut expect: Vec<String> = words.iter().map(|w| w.to_string()).collect();
+        expect.sort();
+        assert_eq!(got, expect);
     }
 
     #[test]

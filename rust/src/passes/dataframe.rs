@@ -10,16 +10,24 @@
 //! node only if the columns it reads are untouched by that node.
 //!
 //! Implemented rewrites:
-//! * **push predicate through join** — the paper's flagship rule (Fig. 6).
+//! * **push predicate through join** — the paper's flagship rule (Fig. 6),
+//!   generalized to composite keys and join types: the predicate is split
+//!   into conjuncts and only the conjuncts that survive the join type move.
+//!   A conjunct over one side is *null-sensitive* when that side can be
+//!   null-introduced (Left join → right side, Right join → left side, Outer
+//!   → both): pre-join filtering would not remove the unmatched rows whose
+//!   null-filled columns make the post-join predicate false, so those
+//!   conjuncts must stay above the join.
 //! * **push predicate through with-column / rename / project** — the
 //!   "liveness" plumbing that lets predicates travel past array code.
 //! * **column pruning** — dead-column elimination with whole-program
 //!   knowledge ("ParallelAccelerator dead code elimination will remove
 //!   unused columns … while Spark SQL performs column pruning only within
-//!   the SQL context").
+//!   the SQL context"), over key *sets* for joins/aggregates/sorts.
 
 use super::domain::map_plan;
-use crate::ir::Plan;
+use crate::ir::{JoinType, Plan};
+use crate::expr::Expr;
 use anyhow::Result;
 use std::collections::BTreeSet;
 
@@ -38,20 +46,37 @@ pub fn pushdown_predicates(plan: Plan) -> Plan {
     p
 }
 
+/// Flatten nested `And`s into a conjunct list.
+fn split_conjuncts(e: Expr, out: &mut Vec<Expr>) {
+    match e {
+        Expr::And(a, b) => {
+            split_conjuncts(*a, out);
+            split_conjuncts(*b, out);
+        }
+        other => out.push(other),
+    }
+}
+
+/// Rebuild a predicate from conjuncts (left-folded `And` chain).
+fn and_all(mut conjs: Vec<Expr>) -> Expr {
+    let first = conjs.remove(0);
+    conjs.into_iter().fold(first, |acc, c| acc.and(c))
+}
+
 /// One local pushdown step on a node (children already rewritten).
 fn push_one(node: Plan) -> Plan {
     let Plan::Filter { input, predicate } = node else {
         return node;
     };
     match *input {
-        // ---- the paper's rule: Filter(Join) → Join(Filter, ·) ----------
+        // ---- the paper's rule: Filter(Join) → Join(Filter, ·),
+        // ---- generalized to join types via per-conjunct analysis --------
         Plan::Join {
             left,
             right,
-            left_key,
-            right_key,
+            on,
+            how,
         } => {
-            let used = predicate.columns_used();
             let lnames: BTreeSet<String> = left
                 .schema()
                 .map(|s| s.names().iter().map(|n| n.to_string()).collect())
@@ -60,48 +85,91 @@ fn push_one(node: Plan) -> Plan {
                 .schema()
                 .map(|s| s.names().iter().map(|n| n.to_string()).collect())
                 .unwrap_or_default();
-            if !used.is_empty() && used.is_subset(&lnames) {
-                // filter the left input instead (Fig. 6's transformation)
-                Plan::Join {
-                    left: Box::new(Plan::Filter {
-                        input: left,
-                        predicate,
-                    }),
-                    right,
-                    left_key,
-                    right_key,
+            // which sides accept pre-join filtering without changing the
+            // result? a side is off-limits once it can be null-introduced
+            // (its conjuncts are null-sensitive) or — for right pushes —
+            // when unmatched right rows must keep contributing (Left/Outer).
+            let can_left = matches!(
+                how,
+                JoinType::Inner | JoinType::Left | JoinType::Semi | JoinType::Anti
+            );
+            let can_right = matches!(how, JoinType::Inner | JoinType::Right);
+            let mut conjs = Vec::new();
+            split_conjuncts(predicate.clone(), &mut conjs);
+            let mut push_left = Vec::new();
+            let mut push_right = Vec::new();
+            let mut stay = Vec::new();
+            for c in conjs {
+                let used = c.columns_used();
+                if used.is_empty() {
+                    stay.push(c);
+                    continue;
                 }
-            } else {
-                // on the right side the join key is named `left_key` in the
-                // output; map it back to `right_key` before pushing
-                let renamed = predicate.rename_columns(&|c| {
-                    if c == left_key {
-                        Some(right_key.clone())
-                    } else if rnames.contains(c) && !lnames.contains(c) {
-                        Some(c.to_string())
-                    } else {
-                        None
+                if can_left && used.is_subset(&lnames) {
+                    // filter the left input instead (Fig. 6's transformation)
+                    push_left.push(c);
+                    continue;
+                }
+                if can_right {
+                    // in the output the join keys are named by their *left*
+                    // key; map them back to the right names before pushing
+                    let renamed = c.rename_columns(&|col| {
+                        if let Some((_, rk)) = on.iter().find(|(lk, _)| lk == col) {
+                            Some(rk.clone())
+                        } else if rnames.contains(col) && !lnames.contains(col) {
+                            Some(col.to_string())
+                        } else {
+                            None
+                        }
+                    });
+                    if let Some(rpred) = renamed {
+                        push_right.push(rpred);
+                        continue;
                     }
-                });
-                match renamed {
-                    Some(rpred) if !used.is_empty() => Plan::Join {
+                }
+                stay.push(c);
+            }
+            if push_left.is_empty() && push_right.is_empty() {
+                // nothing moves: keep the original predicate verbatim so the
+                // fixpoint loop's plan-text comparison stabilizes
+                return Plan::Filter {
+                    input: Box::new(Plan::Join {
                         left,
-                        right: Box::new(Plan::Filter {
-                            input: right,
-                            predicate: rpred,
-                        }),
-                        left_key,
-                        right_key,
-                    },
-                    _ => Plan::Filter {
-                        input: Box::new(Plan::Join {
-                            left,
-                            right,
-                            left_key,
-                            right_key,
-                        }),
-                        predicate,
-                    },
+                        right,
+                        on,
+                        how,
+                    }),
+                    predicate,
+                };
+            }
+            let left = if push_left.is_empty() {
+                left
+            } else {
+                Box::new(Plan::Filter {
+                    input: left,
+                    predicate: and_all(push_left),
+                })
+            };
+            let right = if push_right.is_empty() {
+                right
+            } else {
+                Box::new(Plan::Filter {
+                    input: right,
+                    predicate: and_all(push_right),
+                })
+            };
+            let join = Plan::Join {
+                left,
+                right,
+                on,
+                how,
+            };
+            if stay.is_empty() {
+                join
+            } else {
+                Plan::Filter {
+                    input: Box::new(join),
+                    predicate: and_all(stay),
                 }
             }
         }
@@ -281,8 +349,8 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
         Plan::Join {
             left,
             right,
-            left_key,
-            right_key,
+            on,
+            how,
         } => {
             let lnames: BTreeSet<String> = left
                 .schema()?
@@ -298,18 +366,25 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
                 .collect();
             let mut ln: BTreeSet<String> =
                 needed.intersection(&lnames).cloned().collect();
-            ln.insert(left_key.clone());
-            let mut rn: BTreeSet<String> =
-                needed.intersection(&rnames).cloned().collect();
-            rn.insert(right_key.clone());
+            // a Semi/Anti join only reads the right side's key columns, so
+            // everything else on the right is prunable regardless of `needed`
+            let mut rn: BTreeSet<String> = if how.keeps_right_columns() {
+                needed.intersection(&rnames).cloned().collect()
+            } else {
+                BTreeSet::new()
+            };
+            for (lk, rk) in &on {
+                ln.insert(lk.clone());
+                rn.insert(rk.clone());
+            }
             Plan::Join {
                 left: Box::new(prune(*left, &ln)?),
                 right: Box::new(prune(*right, &rn)?),
-                left_key,
-                right_key,
+                on,
+                how,
             }
         }
-        Plan::Aggregate { input, key, aggs } => {
+        Plan::Aggregate { input, keys, aggs } => {
             let kept: Vec<_> = aggs
                 .iter()
                 .filter(|a| needed.contains(&a.out))
@@ -317,13 +392,15 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
                 .collect();
             let aggs = if kept.is_empty() { aggs } else { kept };
             let mut n = BTreeSet::new();
-            n.insert(key.clone());
+            for key in &keys {
+                n.insert(key.clone());
+            }
             for a in &aggs {
                 n.extend(a.input.columns_used());
             }
             Plan::Aggregate {
                 input: Box::new(prune(*input, &n)?),
-                key,
+                keys,
                 aggs,
             }
         }
@@ -369,12 +446,14 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
                 weights,
             }
         }
-        Plan::Sort { input, key } => {
+        Plan::Sort { input, keys } => {
             let mut n = needed.clone();
-            n.insert(key.clone());
+            for (key, _) in &keys {
+                n.insert(key.clone());
+            }
             Plan::Sort {
                 input: Box::new(prune(*input, &n)?),
-                key,
+                keys,
             }
         }
         Plan::Rebalance { input } => Plan::Rebalance {
@@ -432,16 +511,20 @@ mod tests {
         )
     }
 
+    fn join_of(how: crate::ir::JoinType) -> Plan {
+        Plan::Join {
+            left: Box::new(customer()),
+            right: Box::new(orders()),
+            on: vec![("id".into(), "customerId".into())],
+            how,
+        }
+    }
+
     /// The paper's Fig. 6 example, verbatim.
     #[test]
     fn pushes_right_side_predicate_through_join() {
         let plan = Plan::Filter {
-            input: Box::new(Plan::Join {
-                left: Box::new(customer()),
-                right: Box::new(orders()),
-                left_key: "id".into(),
-                right_key: "customerId".into(),
-            }),
+            input: Box::new(join_of(JoinType::Inner)),
             predicate: col("amount").gt(lit(100.0)),
         };
         let opt = pushdown_predicates(plan);
@@ -459,12 +542,7 @@ mod tests {
     #[test]
     fn pushes_left_side_predicate_through_join() {
         let plan = Plan::Filter {
-            input: Box::new(Plan::Join {
-                left: Box::new(customer()),
-                right: Box::new(orders()),
-                left_key: "id".into(),
-                right_key: "customerId".into(),
-            }),
+            input: Box::new(join_of(JoinType::Inner)),
             predicate: col("phone").eq_(lit(555i64)),
         };
         let opt = pushdown_predicates(plan);
@@ -482,12 +560,7 @@ mod tests {
         // :id is the output name of the join key; pushing right requires
         // renaming it back to :customerId
         let plan = Plan::Filter {
-            input: Box::new(Plan::Join {
-                left: Box::new(customer()),
-                right: Box::new(orders()),
-                left_key: "id".into(),
-                right_key: "customerId".into(),
-            }),
+            input: Box::new(join_of(JoinType::Inner)),
             predicate: col("id").lt(lit(2i64)),
         };
         let opt = pushdown_predicates(plan);
@@ -501,18 +574,143 @@ mod tests {
     #[test]
     fn mixed_predicate_stays_above_join() {
         let plan = Plan::Filter {
-            input: Box::new(Plan::Join {
-                left: Box::new(customer()),
-                right: Box::new(orders()),
-                left_key: "id".into(),
-                right_key: "customerId".into(),
-            }),
+            input: Box::new(join_of(JoinType::Inner)),
             predicate: col("phone").lt(col("amount")), // reads both sides
         };
         let opt = pushdown_predicates(plan.clone());
         match &opt {
             Plan::Filter { input, .. } => assert!(matches!(**input, Plan::Join { .. })),
             other => panic!("expected filter to stay, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn conjuncts_split_across_join_sides() {
+        // (phone == 555) && (amount > 100): one conjunct per side, both push
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Inner)),
+            predicate: col("phone")
+                .eq_(lit(555i64))
+                .and(col("amount").gt(lit(100.0))),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Join { left, right, .. } => {
+                assert!(matches!(**left, Plan::Filter { .. }));
+                assert!(matches!(**right, Plan::Filter { .. }));
+            }
+            other => panic!("expected join at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn left_join_blocks_null_sensitive_right_conjunct() {
+        // amount > 100 over a LEFT join is null-sensitive: unmatched
+        // customers have amount = NaN post-join and must still be dropped by
+        // the filter, which a pre-join push would not do.
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Left)),
+            predicate: col("amount").gt(lit(100.0)),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, .. } => match &**input {
+                Plan::Join { right, .. } => {
+                    assert!(matches!(**right, Plan::Source { .. }), "right was filtered");
+                }
+                other => panic!("expected join under filter, got:\n{other}"),
+            },
+            other => panic!("expected filter to stay above left join, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn left_join_still_pushes_left_conjunct() {
+        // a left-side conjunct commutes with a LEFT join: each surviving
+        // left row's value is unchanged by the join
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Left)),
+            predicate: col("phone")
+                .eq_(lit(555i64))
+                .and(col("amount").gt(lit(100.0))),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, predicate } => {
+                // the null-sensitive amount conjunct stays…
+                assert!(predicate.columns_used().contains("amount"));
+                assert!(!predicate.columns_used().contains("phone"));
+                // …while the phone conjunct moved into the left input
+                match &**input {
+                    Plan::Join { left, .. } => {
+                        assert!(matches!(**left, Plan::Filter { .. }))
+                    }
+                    other => panic!("expected join, got:\n{other}"),
+                }
+            }
+            other => panic!("expected partial pushdown, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn right_join_blocks_left_conjunct_pushes_right() {
+        // mirror image: RIGHT join nulls the left side
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Right)),
+            predicate: col("phone")
+                .eq_(lit(555i64))
+                .and(col("amount").gt(lit(100.0))),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, predicate } => {
+                assert!(predicate.columns_used().contains("phone"));
+                match &**input {
+                    Plan::Join { left, right, .. } => {
+                        assert!(matches!(**left, Plan::Source { .. }));
+                        assert!(matches!(**right, Plan::Filter { .. }));
+                    }
+                    other => panic!("expected join, got:\n{other}"),
+                }
+            }
+            other => panic!("expected partial pushdown, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn outer_join_blocks_all_side_conjuncts() {
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Outer)),
+            predicate: col("phone")
+                .eq_(lit(555i64))
+                .and(col("amount").gt(lit(100.0))),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, .. } => match &**input {
+                Plan::Join { left, right, .. } => {
+                    assert!(matches!(**left, Plan::Source { .. }));
+                    assert!(matches!(**right, Plan::Source { .. }));
+                }
+                other => panic!("expected pristine join, got:\n{other}"),
+            },
+            other => panic!("expected filter to stay above outer join, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn semi_join_pushes_left_conjunct() {
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Semi)),
+            predicate: col("phone").eq_(lit(555i64)),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Join { left, how, .. } => {
+                assert_eq!(*how, JoinType::Semi);
+                assert!(matches!(**left, Plan::Filter { .. }));
+            }
+            other => panic!("expected semi join at root, got:\n{other}"),
         }
     }
 
@@ -579,12 +777,7 @@ mod tests {
         // only :amount survives to the root → :customerId must still be
         // read (join key), :phone must be pruned from customer
         let plan = Plan::Project {
-            input: Box::new(Plan::Join {
-                left: Box::new(customer()),
-                right: Box::new(orders()),
-                left_key: "id".into(),
-                right_key: "customerId".into(),
-            }),
+            input: Box::new(join_of(JoinType::Inner)),
             columns: vec!["amount".into()],
         };
         let opt = prune_columns(plan).unwrap();
@@ -592,6 +785,17 @@ mod tests {
         // customer source must now be wrapped in Project(id) — no :phone
         assert!(txt.contains("Project(id)"), "plan:\n{txt}");
         assert!(opt.schema().unwrap().names() == vec!["amount"]);
+    }
+
+    #[test]
+    fn prune_semi_join_right_to_keys_only() {
+        // a Semi join reads nothing but the right key column, whatever the
+        // consumer needs
+        let plan = join_of(JoinType::Semi);
+        let opt = prune_columns(plan).unwrap();
+        let txt = format!("{opt}");
+        assert!(txt.contains("Project(customerId)"), "plan:\n{txt}");
+        assert_eq!(opt.schema().unwrap().names(), vec!["id", "phone"]);
     }
 
     #[test]
@@ -612,10 +816,35 @@ mod tests {
     fn prune_keeps_agg_inputs() {
         let plan = Plan::Aggregate {
             input: Box::new(orders()),
-            key: "customerId".into(),
+            keys: vec!["customerId".into()],
             aggs: vec![AggExpr::new("total", AggFn::Sum, col("amount"))],
         };
         let opt = prune_columns(plan).unwrap();
         assert_eq!(opt.schema().unwrap().names(), vec!["customerId", "total"]);
+    }
+
+    #[test]
+    fn prune_keeps_all_keys_of_multi_key_aggregate() {
+        // wide source; aggregate by (id, phone) — both keys must survive the
+        // projection inserted over the source
+        let wide = source_mem(
+            "wide",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2])),
+                ("phone", Column::I64(vec![555, 666])),
+                ("x", Column::F64(vec![0.5, 1.5])),
+                ("unused", Column::F64(vec![9.0, 9.0])),
+            ])
+            .unwrap(),
+        );
+        let plan = Plan::Aggregate {
+            input: Box::new(wide),
+            keys: vec!["id".into(), "phone".into()],
+            aggs: vec![AggExpr::new("s", AggFn::Sum, col("x"))],
+        };
+        let opt = prune_columns(plan).unwrap();
+        let txt = format!("{opt}");
+        assert!(txt.contains("Project(id, phone, x)"), "plan:\n{txt}");
+        assert_eq!(opt.schema().unwrap().names(), vec!["id", "phone", "s"]);
     }
 }

@@ -157,7 +157,7 @@ mod tests {
         // filter → aggregate chain: no 1D_BLOCK consumers, no rebalances
         let p = Plan::Aggregate {
             input: Box::new(filtered()),
-            key: "id".into(),
+            keys: vec!["id".into()],
             aggs: vec![crate::expr::AggExpr::new(
                 "n",
                 crate::expr::AggFn::Count,
@@ -172,7 +172,7 @@ mod tests {
     fn always_rebalances_every_relational_node() {
         let p = Plan::Aggregate {
             input: Box::new(filtered()),
-            key: "id".into(),
+            keys: vec!["id".into()],
             aggs: vec![crate::expr::AggExpr::new(
                 "n",
                 crate::expr::AggFn::Count,
@@ -182,6 +182,45 @@ mod tests {
         let opt = insert_rebalances(p, RebalanceMode::Always);
         assert_eq!(count_rebalances(&opt), 2); // after filter and aggregate
         assert_eq!(opt.dist(), Dist::OneD);
+    }
+
+    #[test]
+    fn multi_key_aggregate_and_typed_joins_infer_one_d_var() {
+        // distribution inference is key-set agnostic: a composite-key
+        // aggregate's output size is data dependent, exactly like the
+        // single-key case, and every join type meets to 1D_VAR
+        let p = Plan::Aggregate {
+            input: Box::new(src()),
+            keys: vec!["id".into(), "x2".into()],
+            aggs: vec![],
+        };
+        // (schema would reject :x2 — dist() is schema-independent by design)
+        assert_eq!(p.dist(), Dist::OneDVar);
+        for how in [
+            crate::ir::JoinType::Inner,
+            crate::ir::JoinType::Left,
+            crate::ir::JoinType::Outer,
+            crate::ir::JoinType::Anti,
+        ] {
+            let j = Plan::Join {
+                left: Box::new(src()),
+                right: Box::new(src()),
+                on: vec![("id".into(), "id".into())],
+                how,
+            };
+            assert_eq!(j.dist(), Dist::OneDVar, "{how:?}");
+        }
+        // a rebalance after a multi-key aggregate restores 1D
+        let reb = Plan::Rebalance { input: Box::new(p) };
+        assert_eq!(reb.dist(), Dist::OneD);
+        // and the Always mode still wraps composite-key aggregates
+        let p2 = Plan::Aggregate {
+            input: Box::new(src()),
+            keys: vec!["id".into()],
+            aggs: vec![],
+        };
+        let opt = insert_rebalances(p2, RebalanceMode::Always);
+        assert_eq!(count_rebalances(&opt), 1);
     }
 
     #[test]

@@ -19,9 +19,9 @@ pub fn fold_expressions(plan: Plan) -> Plan {
             name,
             expr: expr.fold_constants(),
         },
-        Plan::Aggregate { input, key, aggs } => Plan::Aggregate {
+        Plan::Aggregate { input, keys, aggs } => Plan::Aggregate {
             input,
-            key,
+            keys,
             aggs: aggs
                 .into_iter()
                 .map(|a| AggExpr {
@@ -82,17 +82,17 @@ pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
         Plan::Join {
             left,
             right,
-            left_key,
-            right_key,
+            on,
+            how,
         } => Plan::Join {
             left: Box::new(map_plan(*left, f)),
             right: Box::new(map_plan(*right, f)),
-            left_key,
-            right_key,
+            on,
+            how,
         },
-        Plan::Aggregate { input, key, aggs } => Plan::Aggregate {
+        Plan::Aggregate { input, keys, aggs } => Plan::Aggregate {
             input: Box::new(map_plan(*input, f)),
-            key,
+            keys,
             aggs,
         },
         Plan::Concat { inputs } => Plan::Concat {
@@ -117,9 +117,9 @@ pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
             out,
             weights,
         },
-        Plan::Sort { input, key } => Plan::Sort {
+        Plan::Sort { input, keys } => Plan::Sort {
             input: Box::new(map_plan(*input, f)),
-            key,
+            keys,
         },
         Plan::Rebalance { input } => Plan::Rebalance {
             input: Box::new(map_plan(*input, f)),
@@ -212,8 +212,8 @@ mod tests {
                 from: "id".into(),
                 to: "cid".into(),
             }),
-            left_key: "id".into(),
-            right_key: "cid".into(),
+            on: vec![("id".into(), "cid".into())],
+            how: crate::ir::JoinType::Inner,
         };
         let mut count = 0usize;
         // count via a side-channel: map_plan takes Fn, so use a Cell

@@ -231,6 +231,26 @@ impl Table {
         })
     }
 
+    /// Sort by a composite key list with per-key directions (stable) — the
+    /// serial counterpart of the distributed `sort_by_keys`.
+    pub fn sorted_by_keys(&self, keys: &[(&str, crate::types::SortOrder)]) -> Result<Table> {
+        let key_cols: Vec<&Column> = keys
+            .iter()
+            .map(|(k, _)| {
+                self.column(k)
+                    .ok_or_else(|| anyhow::anyhow!("sorted_by_keys: unknown column {k}"))
+            })
+            .collect::<Result<_>>()?;
+        let orders: Vec<crate::types::SortOrder> = keys.iter().map(|(_, o)| *o).collect();
+        let rows = crate::ops::keys::key_rows(&key_cols)?;
+        let mut idx: Vec<usize> = (0..self.num_rows()).collect();
+        idx.sort_by(|&a, &b| crate::ops::keys::cmp_key_rows(&rows[a], &rows[b], &orders));
+        Ok(Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
+        })
+    }
+
     pub fn byte_size(&self) -> usize {
         self.columns.iter().map(|c| c.byte_size()).sum()
     }
@@ -310,6 +330,20 @@ mod tests {
         let s = t.sorted_by("id").unwrap();
         assert_eq!(s.column("id").unwrap().as_i64(), &[1, 2, 3]);
         assert_eq!(s.column("x").unwrap().as_f64(), &[0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn multi_key_sort_with_directions() {
+        let t = Table::from_pairs(vec![
+            ("g", Column::I64(vec![1, 2, 1, 2])),
+            ("x", Column::I64(vec![10, 20, 30, 40])),
+        ])
+        .unwrap();
+        use crate::types::SortOrder::*;
+        let s = t.sorted_by_keys(&[("g", Desc), ("x", Asc)]).unwrap();
+        assert_eq!(s.column("g").unwrap().as_i64(), &[2, 2, 1, 1]);
+        assert_eq!(s.column("x").unwrap().as_i64(), &[20, 40, 10, 30]);
+        assert!(t.sorted_by_keys(&[("nope", Asc)]).is_err());
     }
 
     #[test]

@@ -37,6 +37,23 @@ impl DType {
         matches!(self, DType::I64 | DType::F64)
     }
 
+    /// Can this dtype serve as a join / group-by / sort key? Keys need total
+    /// order and hashable equality, which excludes Float64 (NaN).
+    pub fn is_groupable(self) -> bool {
+        matches!(self, DType::I64 | DType::Bool | DType::Str)
+    }
+
+    /// The dtype a column takes when a Left/Right/Outer join makes its side
+    /// *null-introducing*. With no native null representation, numerics and
+    /// booleans are promoted to Float64 (missing = NaN, the Pandas rule for
+    /// int columns on outer merges) and strings stay strings (missing = "").
+    pub fn null_joined(self) -> DType {
+        match self {
+            DType::Str => DType::Str,
+            _ => DType::F64,
+        }
+    }
+
     /// The dtype arithmetic between two operands produces
     /// (int ⊕ float → float, like Julia's promotion rules).
     pub fn promote(self, other: DType) -> Option<DType> {
@@ -57,6 +74,75 @@ impl fmt::Display for DType {
             DType::F64 => write!(f, "Float64"),
             DType::Bool => write!(f, "Bool"),
             DType::Str => write!(f, "String"),
+        }
+    }
+}
+
+/// Join semantics of [`crate::ir::Plan::Join`] (the composite-key relational
+/// redesign). `Inner` is the paper's `join(df1, df2, :id == :cid)`; the
+/// others cover the TPCx-BB shapes the kit queries need (sparse dimensions →
+/// `Left`, existence tests → `Semi`/`Anti`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JoinType {
+    /// Keep only matching key pairs (cross product within equal keys).
+    Inner,
+    /// Every left row survives; unmatched rows get null-introduced right
+    /// columns (see [`DType::null_joined`]).
+    Left,
+    /// Every right row survives; unmatched rows get null-introduced left
+    /// columns.
+    Right,
+    /// Union of `Left` and `Right`.
+    Outer,
+    /// Left rows with at least one match; right columns are dropped.
+    Semi,
+    /// Left rows with no match; right columns are dropped.
+    Anti,
+}
+
+impl JoinType {
+    /// Do unmatched rows introduce nulls into *left*-side columns?
+    pub fn nullable_left(self) -> bool {
+        matches!(self, JoinType::Right | JoinType::Outer)
+    }
+
+    /// Do unmatched rows introduce nulls into *right*-side columns?
+    pub fn nullable_right(self) -> bool {
+        matches!(self, JoinType::Left | JoinType::Outer)
+    }
+
+    /// Does the output carry the right side's non-key columns at all?
+    pub fn keeps_right_columns(self) -> bool {
+        !matches!(self, JoinType::Semi | JoinType::Anti)
+    }
+}
+
+impl fmt::Display for JoinType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            JoinType::Inner => "inner",
+            JoinType::Left => "left",
+            JoinType::Right => "right",
+            JoinType::Outer => "outer",
+            JoinType::Semi => "semi",
+            JoinType::Anti => "anti",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Per-key sort direction for [`crate::ir::Plan::Sort`]'s key list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SortOrder {
+    Asc,
+    Desc,
+}
+
+impl fmt::Display for SortOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SortOrder::Asc => write!(f, "asc"),
+            SortOrder::Desc => write!(f, "desc"),
         }
     }
 }
@@ -150,6 +236,32 @@ mod tests {
         assert_eq!(DType::F64.promote(DType::I64), Some(DType::F64));
         assert_eq!(DType::Bool.promote(DType::I64), None);
         assert_eq!(DType::Str.promote(DType::Str), None);
+    }
+
+    #[test]
+    fn dtype_groupable_and_null_promotion() {
+        assert!(DType::I64.is_groupable());
+        assert!(DType::Str.is_groupable());
+        assert!(DType::Bool.is_groupable());
+        assert!(!DType::F64.is_groupable());
+        assert_eq!(DType::I64.null_joined(), DType::F64);
+        assert_eq!(DType::Bool.null_joined(), DType::F64);
+        assert_eq!(DType::F64.null_joined(), DType::F64);
+        assert_eq!(DType::Str.null_joined(), DType::Str);
+    }
+
+    #[test]
+    fn join_type_flags() {
+        assert!(JoinType::Left.nullable_right());
+        assert!(!JoinType::Left.nullable_left());
+        assert!(JoinType::Right.nullable_left());
+        assert!(JoinType::Outer.nullable_left() && JoinType::Outer.nullable_right());
+        assert!(!JoinType::Inner.nullable_left() && !JoinType::Inner.nullable_right());
+        assert!(!JoinType::Semi.keeps_right_columns());
+        assert!(!JoinType::Anti.keeps_right_columns());
+        assert!(JoinType::Left.keeps_right_columns());
+        assert_eq!(JoinType::Semi.to_string(), "semi");
+        assert_eq!(SortOrder::Desc.to_string(), "desc");
     }
 
     #[test]
