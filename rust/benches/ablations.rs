@@ -145,7 +145,7 @@ fn main() {
             });
         }
 
-        table.print_summary();
+        table.finish("ablations");
         for op in ["pushdown", "lazy-1dvar", "pre-agg", "pruning"] {
             if let (Some(off), Some(on)) = (table.median("off", op), table.median("on", op)) {
                 println!("{op}: {:.2}x from the optimization", off / on);

@@ -54,7 +54,7 @@ fn main() {
                     .unwrap()
             });
         }
-        table.print_summary();
+        table.finish("fig10");
         // overhead percentages, as the paper reports them
         for sys in ["sparklike", "hiframes"] {
             if let (Some(base), Some(with)) =

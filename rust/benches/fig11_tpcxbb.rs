@@ -75,7 +75,7 @@ fn main() {
                 });
             }
         }
-        table.print_summary();
+        table.finish("fig11");
 
         // Q05 skew experiment: imbalance factor under Zipf keys
         println!("\nQ05 skewed-join load imbalance (paper: Spark OOM > SF50):");

@@ -45,7 +45,7 @@ fn main() {
                     .num_rows()
             });
         }
-        table.print_summary();
+        table.finish("fig12");
         // speedup-vs-1-worker series (the figure's y axis)
         for sys in ["hiframes", "sparklike"] {
             if let Some(base) = table.median(sys, "1w") {

@@ -9,7 +9,10 @@
 
 use hiframes::baseline::{serial, sparklike::SparkLike};
 use hiframes::bench::*;
+use hiframes::column::Column;
 use hiframes::datagen::micro_table;
+use hiframes::fxhash::FxHashMap;
+use hiframes::ops::keys::{group_packed, key_rows, owner_of_key, KeyRow, PackedKeys};
 use hiframes::prelude::*;
 
 fn main() {
@@ -94,6 +97,66 @@ fn main() {
             df.aggregate("id", aggs.clone()).count().unwrap()
         });
 
-        table.print_summary();
+        table.finish("fig8a");
+
+        // ------------- key packing (packed vs. materialized) -------------
+        // The packed composite-key fast path measured against the KeyRow
+        // materialization it replaced: hash-routing and grouping over the
+        // aggregate cell's key volume. "materialized" is the old inner loop
+        // (one Vec<KeyVal> per row); "packed" is PackedKeys.
+        let n = agg_rows;
+        let ids: Vec<i64> = (0..n as i64).map(|i| i % 10_000).collect();
+        let k1 = Column::I64(ids.clone());
+        let k2 = Column::Bool(ids.iter().map(|&i| i % 3 == 0).collect());
+        let p = workers.max(2);
+        let mut kp = BenchTable::new(
+            &format!("Fig 8a addendum: composite-key packing ({n} rows, {p}-way routing)"),
+            "materialized",
+        );
+        kp.run("materialized", "route-i64", n, 1, reps, || {
+            let rows = key_rows(&[&k1]).unwrap();
+            let mut acc = 0usize;
+            for r in &rows {
+                acc += owner_of_key(r, p);
+            }
+            acc
+        });
+        kp.run("packed", "route-i64", n, 1, reps, || {
+            let packed = PackedKeys::pack(&[&k1]).unwrap();
+            let mut acc = 0usize;
+            for i in 0..packed.len() {
+                acc += packed.owner(i, p);
+            }
+            acc
+        });
+        kp.run("materialized", "route-multi", n, 1, reps, || {
+            let rows = key_rows(&[&k1, &k2]).unwrap();
+            let mut acc = 0usize;
+            for r in &rows {
+                acc += owner_of_key(r, p);
+            }
+            acc
+        });
+        kp.run("packed", "route-multi", n, 1, reps, || {
+            let packed = PackedKeys::pack(&[&k1, &k2]).unwrap();
+            let mut acc = 0usize;
+            for i in 0..packed.len() {
+                acc += packed.owner(i, p);
+            }
+            acc
+        });
+        kp.run("materialized", "group-multi", n, 1, reps, || {
+            let rows = key_rows(&[&k1, &k2]).unwrap();
+            let mut m: FxHashMap<KeyRow, u32> = FxHashMap::default();
+            for r in rows {
+                let next = m.len() as u32;
+                m.entry(r).or_insert(next);
+            }
+            m.len()
+        });
+        kp.run("packed", "group-multi", n, 1, reps, || {
+            group_packed(&PackedKeys::pack(&[&k1, &k2]).unwrap()).num_groups()
+        });
+        kp.finish("fig8a_keypack");
     });
 }

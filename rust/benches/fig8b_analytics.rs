@@ -103,6 +103,6 @@ fn main() {
                 .unwrap()
         });
 
-        table.print_summary();
+        table.finish("fig8b");
     });
 }

@@ -7,14 +7,24 @@
 //!   (default 0.01: e.g. Fig 8a filter 2B rows → 20M).
 //! * `HIFRAMES_BENCH_WORKERS` — rank count for HiFrames/sparklike engines.
 //! * `HIFRAMES_BENCH_REPS` — measured repetitions per cell (default 3).
+//! * `HIFRAMES_BENCH_SMOKE` — CI smoke mode: clamp scale, 1 rep.
+//! * `HIFRAMES_BENCH_OUT` — directory for the `BENCH_<figure>.json` result
+//!   files (default `.`), uploaded as workflow artifacts by the CI
+//!   `bench-smoke` job so the perf trajectory is tracked per PR.
 
 use crate::metrics::{measure, Stats};
 
 pub fn bench_scale() -> f64 {
-    std::env::var("HIFRAMES_BENCH_SCALE")
+    let scale = std::env::var("HIFRAMES_BENCH_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0.01)
+        .unwrap_or(0.01);
+    if bench_smoke() {
+        // smoke runs bound every figure to seconds, not minutes
+        scale.min(2e-4)
+    } else {
+        scale
+    }
 }
 
 pub fn bench_workers() -> usize {
@@ -28,11 +38,11 @@ pub fn bench_reps() -> usize {
     std::env::var("HIFRAMES_BENCH_REPS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(3)
+        .unwrap_or(if bench_smoke() { 1 } else { 3 })
 }
 
-/// Quick-mode guard: `cargo test --benches` style smoke runs can set
-/// `HIFRAMES_BENCH_SMOKE=1` to shrink everything aggressively.
+/// Quick-mode guard: CI smoke runs set `HIFRAMES_BENCH_SMOKE=1` to shrink
+/// everything aggressively (see [`bench_scale`] / [`bench_reps`]).
 pub fn bench_smoke() -> bool {
     std::env::var("HIFRAMES_BENCH_SMOKE").is_ok()
 }
@@ -164,6 +174,86 @@ impl BenchTable {
     }
 }
 
+impl BenchTable {
+    /// Print the summary table and write the machine-readable results file
+    /// (`BENCH_<figure>.json` under `HIFRAMES_BENCH_OUT`, default `.`).
+    pub fn finish(&self, figure: &str) {
+        self.print_summary();
+        match self.write_json(figure) {
+            Ok(path) => eprintln!("[{figure}] results written to {}", path.display()),
+            Err(e) => eprintln!("[{figure}] could not write results JSON: {e}"),
+        }
+    }
+
+    /// Serialize the collected cells as `BENCH_<figure>.json` under
+    /// `HIFRAMES_BENCH_OUT` (default `.`). Note cargo runs bench binaries
+    /// with the *package* root as cwd, so relative paths resolve under
+    /// `rust/` — CI passes an absolute path.
+    pub fn write_json(&self, figure: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("HIFRAMES_BENCH_OUT").unwrap_or_else(|_| ".".into());
+        self.write_json_to(std::path::Path::new(&dir), figure)
+    }
+
+    /// Serialize into an explicit directory (created if missing; hand-rolled
+    /// JSON — the offline image has no serde). Times are seconds.
+    pub fn write_json_to(
+        &self,
+        dir: &std::path::Path,
+        figure: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{figure}.json"));
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"figure\": {},\n", json_str(figure)));
+        s.push_str(&format!("  \"title\": {},\n", json_str(&self.title)));
+        s.push_str(&format!(
+            "  \"baseline\": {},\n",
+            json_str(&self.baseline_system)
+        ));
+        s.push_str(&format!("  \"smoke\": {},\n", bench_smoke()));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"system\": {}, \"op\": {}, \"rows\": {}, \
+                 \"median_s\": {:e}, \"mean_s\": {:e}, \"min_s\": {:e}, \
+                 \"max_s\": {:e}, \"stddev_s\": {:e}, \"samples\": {}}}{}\n",
+                json_str(&c.system),
+                json_str(&c.op),
+                c.rows,
+                c.stats.median,
+                c.stats.mean,
+                c.stats.min,
+                c.stats.max,
+                c.stats.stddev,
+                c.stats.samples.len(),
+                if i + 1 < self.cells.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+/// Minimal JSON string quoting (benches control their own names, so only
+/// quotes/backslashes/control characters need care).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Parse and ignore the args cargo-bench passes (`--bench`, filters).
 pub fn bench_main(figure: &str, run: impl FnOnce()) {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -195,6 +285,36 @@ mod tests {
         assert_eq!(t.median("nope", "op1"), None);
         t.print_summary(); // smoke: must not panic
         assert_eq!(t.cells().len(), 2);
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b"), "\"a\\\"b\"");
+        assert_eq!(json_str("a\\b"), "\"a\\\\b\"");
+        assert_eq!(json_str("a\nb"), "\"a\\nb\"");
+        assert_eq!(json_str("a\u{1}b"), "\"a\\u0001b\"");
+    }
+
+    #[test]
+    fn write_json_emits_cells() {
+        let dir = std::env::temp_dir().join("hiframes_bench_json_test");
+        let mut t = BenchTable::new("json \"table\"", "base");
+        t.record("base", "op1", 100, vec![0.2, 0.2]);
+        t.record("hiframes", "op1", 100, vec![0.1]);
+        let path = t.write_json_to(&dir, "testfig").unwrap();
+        assert_eq!(
+            path.file_name().unwrap().to_string_lossy(),
+            "BENCH_testfig.json"
+        );
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"figure\": \"testfig\""));
+        assert!(body.contains("\"system\": \"hiframes\""));
+        assert!(body.contains("\"samples\": 2"));
+        assert!(body.contains("json \\\"table\\\""));
+        // two cells → exactly one separating comma inside the array
+        assert_eq!(body.matches("},").count(), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -227,30 +227,32 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         } => {
             let lframe = exec_node(left, comm, opts)?;
             let rframe = exec_node(right, comm, opts)?;
-            let lkey_cols: Vec<Column> = on
+            // key/payload column *references* — the packed-key ops shuffle
+            // straight out of the frame, no clones at the exec boundary
+            let lkey_cols: Vec<&Column> = on
                 .iter()
-                .map(|(lk, _)| lframe.col(lk).map(|c| c.clone()))
+                .map(|(lk, _)| lframe.col(lk))
                 .collect::<Result<_>>()?;
-            let rkey_cols: Vec<Column> = on
+            let rkey_cols: Vec<&Column> = on
                 .iter()
-                .map(|(_, rk)| rframe.col(rk).map(|c| c.clone()))
+                .map(|(_, rk)| rframe.col(rk))
                 .collect::<Result<_>>()?;
             // payload columns exclude the key columns (reinserted after)
-            let lpay: Vec<Column> = lframe
+            let lpay: Vec<&Column> = lframe
                 .schema
                 .fields()
                 .iter()
                 .zip(&lframe.cols)
                 .filter(|((n, _), _)| !on.iter().any(|(lk, _)| lk == n))
-                .map(|(_, c)| c.clone())
+                .map(|(_, c)| c)
                 .collect();
-            let rpay: Vec<Column> = rframe
+            let rpay: Vec<&Column> = rframe
                 .schema
                 .fields()
                 .iter()
                 .zip(&rframe.cols)
                 .filter(|((n, _), _)| !on.iter().any(|(_, rk)| rk == n))
-                .map(|(_, c)| c.clone())
+                .map(|(_, c)| c)
                 .collect();
             let (keys_out, lout, rout) = ops::distributed_join_on(
                 comm, &lkey_cols, &lpay, &rkey_cols, &rpay, *how,
@@ -283,9 +285,9 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         }
         Plan::Aggregate { input, keys, aggs } => {
             let frame = exec_node(input, comm, opts)?;
-            let key_cols: Vec<Column> = keys
+            let key_cols: Vec<&Column> = keys
                 .iter()
-                .map(|k| frame.col(k).map(|c| c.clone()))
+                .map(|k| frame.col(k))
                 .collect::<Result<_>>()?;
             // evaluate the expression array of every aggregate locally
             // (pre-shuffle), exactly like the paper's desugaring
@@ -299,10 +301,11 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 });
                 expr_cols.push(c);
             }
+            let expr_refs: Vec<&Column> = expr_cols.iter().collect();
             let (key_out, out_cols) = ops::distributed_aggregate_keys(
                 comm,
                 &key_cols,
-                &expr_cols,
+                &expr_refs,
                 &specs,
                 opts.agg_strategy,
             )?;
@@ -351,18 +354,18 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         }
         Plan::Sort { input, keys } => {
             let frame = exec_node(input, comm, opts)?;
-            let key_cols: Vec<Column> = keys
+            let key_cols: Vec<&Column> = keys
                 .iter()
-                .map(|(k, _)| frame.col(k).map(|c| c.clone()))
+                .map(|(k, _)| frame.col(k))
                 .collect::<Result<_>>()?;
             let orders: Vec<SortOrder> = keys.iter().map(|(_, o)| *o).collect();
-            let others: Vec<Column> = frame
+            let others: Vec<&Column> = frame
                 .schema
                 .fields()
                 .iter()
                 .zip(&frame.cols)
                 .filter(|((n, _), _)| !keys.iter().any(|(k, _)| k == n))
-                .map(|(_, c)| c.clone())
+                .map(|(_, c)| c)
                 .collect();
             let (skeys, scols) =
                 ops::distributed_sort_keys(comm, &key_cols, &orders, &others)?;

@@ -52,6 +52,35 @@ impl FxHasher {
 /// `HashMap` with the Fx hasher.
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
 
+/// One-shot Fx hash of a single word (the packed single-I64 key path).
+#[inline]
+pub fn hash_u64(x: u64) -> u64 {
+    let mut h = FxHasher::default();
+    h.write_u64(x);
+    h.finish()
+}
+
+/// One-shot Fx hash of a byte string, folded 8 bytes at a time — the
+/// byte-at-a-time `write` loop dominated the packed-key routing profile.
+/// The length is mixed in so zero-padded tails of different lengths don't
+/// trivially collide.
+#[inline]
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = FxHasher::default();
+    let mut chunks = bytes.chunks_exact(8);
+    for c in chunks.by_ref() {
+        h.write_u64(u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        h.write_u64(u64::from_le_bytes(tail));
+    }
+    h.write_u64(bytes.len() as u64);
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +93,18 @@ mod tests {
         }
         assert_eq!(m.len(), 97);
         assert!(m.values().all(|&v| v > 0));
+    }
+
+    #[test]
+    fn one_shot_helpers_deterministic() {
+        assert_eq!(hash_u64(42), hash_u64(42));
+        assert_ne!(hash_u64(42), hash_u64(43));
+        let a = b"composite-key-bytes";
+        assert_eq!(hash_bytes(a), hash_bytes(a));
+        assert_ne!(hash_bytes(b"ab"), hash_bytes(b"ba"));
+        // length mixing: a zero tail is not the same as no tail
+        assert_ne!(hash_bytes(b"abcdefgh"), hash_bytes(b"abcdefgh\0"));
+        assert_eq!(hash_bytes(b""), hash_bytes(b""));
     }
 
     #[test]

@@ -12,15 +12,16 @@
 //!   when keys repeat within ranks (§Perf).
 
 use super::keys::{
-    decode_key_row, encode_key_row, key_columns, key_rows, owner_of_key, KeyRow,
+    cmp_key_rows, decode_key_row, encode_key_cells, group_packed, key_columns, key_rows,
+    skip_key_row, KeyRow, PackedKeys,
 };
-use super::shuffle::shuffle_by_owner;
+use super::shuffle::shuffle_by_packed;
 use crate::column::Column;
 use crate::comm::Comm;
 use crate::expr::{AggFn, AggState};
 use crate::fxhash::FxHashMap;
 use crate::types::DType;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Which aggregation strategy to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,55 +45,66 @@ pub struct AggSpec {
 /// `1D_VAR`.
 pub fn distributed_aggregate_keys(
     comm: &Comm,
-    key_cols: &[Column],
-    expr_cols: &[Column],
+    key_cols: &[&Column],
+    expr_cols: &[&Column],
     specs: &[AggSpec],
     strategy: AggStrategy,
 ) -> Result<(Vec<Column>, Vec<Column>)> {
     assert_eq!(expr_cols.len(), specs.len());
+    if key_cols.is_empty() {
+        bail!("aggregate: key column list must be non-empty");
+    }
     let p = comm.nranks();
-    let key_refs: Vec<&Column> = key_cols.iter().collect();
     match strategy {
         AggStrategy::RawShuffle => {
-            let rows = key_rows(&key_refs)?;
-            let owners: Vec<usize> = rows.iter().map(|r| owner_of_key(r, p)).collect();
-            let mut all: Vec<Column> = key_cols.to_vec();
-            all.extend(expr_cols.iter().cloned());
-            let all = shuffle_by_owner(comm, &owners, &all)?;
+            let packed = PackedKeys::pack(key_cols)?;
+            let mut all: Vec<&Column> = key_cols.to_vec();
+            all.extend_from_slice(expr_cols);
+            let all = shuffle_by_packed(comm, &packed, &all)?;
             let (kc, ec) = all.split_at(key_cols.len());
-            local_hash_aggregate_keys(&kc.iter().collect::<Vec<_>>(), ec, specs)
+            let krefs: Vec<&Column> = kc.iter().collect();
+            let erefs: Vec<&Column> = ec.iter().collect();
+            local_packed_aggregate(&krefs, &erefs, specs)
         }
         AggStrategy::PreAggregate => {
-            // fold locally into partial states per key tuple
-            let rows = key_rows(&key_refs)?;
-            let mut table: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
-            for (i, k) in rows.into_iter().enumerate() {
-                let states = table.entry(k).or_insert_with(|| new_states(specs));
-                for (s, c) in states.iter_mut().zip(expr_cols) {
+            // fold locally into partial states per packed key group
+            let packed = PackedKeys::pack(key_cols)?;
+            let groups = group_packed(&packed);
+            let mut states: Vec<Vec<AggState>> = Vec::with_capacity(groups.num_groups());
+            for (i, &g) in groups.group_of_row.iter().enumerate() {
+                if g as usize == states.len() {
+                    states.push(new_states(specs));
+                }
+                for (s, &c) in states[g as usize].iter_mut().zip(expr_cols) {
                     s.update_col(c, i);
                 }
             }
-            // serialize per destination: [key row, state0, state1, …] records
+            // serialize per destination: [key row, state0, state1, …]
+            // records, key cells wire-encoded straight from the columns
             let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
-            for (k, states) in &table {
-                let buf = &mut bufs[owner_of_key(k, p)];
-                encode_key_row(k, buf);
-                for s in states {
+            for (g, &rep) in groups.rep_rows.iter().enumerate() {
+                let buf = &mut bufs[packed.owner(rep as usize, p)];
+                encode_key_cells(key_cols, rep as usize, buf);
+                for s in &states[g] {
                     s.encode(buf);
                 }
             }
             let received = comm.alltoallv_bytes(bufs);
-            // merge incoming partials
-            let mut merged: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
+            // merge incoming partials, keyed on the raw encoded key bytes
+            // (the wire format is injective, so byte equality is tuple
+            // equality — one small allocation per distinct group, not per row)
+            let mut merged: FxHashMap<Vec<u8>, Vec<AggState>> = FxHashMap::default();
             for buf in received {
                 let mut pos = 0;
                 while pos < buf.len() {
-                    let k = decode_key_row(key_cols.len(), &buf, &mut pos)?;
+                    let kstart = pos;
+                    skip_key_row(key_cols.len(), &buf, &mut pos)?;
+                    let kbytes = buf[kstart..pos].to_vec();
                     let incoming: Vec<AggState> = specs
                         .iter()
                         .map(|sp| AggState::decode(sp.func, sp.input_dtype, &buf, &mut pos))
                         .collect();
-                    match merged.entry(k) {
+                    match merged.entry(kbytes) {
                         std::collections::hash_map::Entry::Occupied(mut e) => {
                             for (a, b) in e.get_mut().iter_mut().zip(&incoming) {
                                 a.merge(b);
@@ -104,14 +116,83 @@ pub fn distributed_aggregate_keys(
                     }
                 }
             }
-            Ok(finish_table(merged, specs, &key_refs))
+            // decode one tuple per surviving group; deterministic asc order
+            let mut entries: Vec<(KeyRow, Vec<AggState>)> = Vec::with_capacity(merged.len());
+            for (kb, st) in merged {
+                let mut pos = 0;
+                entries.push((decode_key_row(key_cols.len(), &kb, &mut pos)?, st));
+            }
+            entries.sort_by(|a, b| cmp_key_rows(&a.0, &b.0, &[]));
+            let mut rows: Vec<KeyRow> = Vec::with_capacity(entries.len());
+            let mut outs: Vec<Column> = specs
+                .iter()
+                .map(|sp| Column::new_empty(agg_output_dtype(sp)))
+                .collect();
+            for (k, st) in entries {
+                rows.push(k);
+                for (out, s) in outs.iter_mut().zip(&st) {
+                    out.push(&s.finish());
+                }
+            }
+            let key_out = key_columns(&rows, key_cols);
+            Ok((key_out, outs))
         }
     }
 }
 
-/// Purely local hash aggregation over composite keys (also the post-shuffle
-/// half and the serial baseline's implementation). Output rows are sorted by
-/// key tuple so runs are reproducible.
+/// Purely local aggregation over a *packed* key set — the HiFrames
+/// post-shuffle half: dense group ids from [`group_packed`], one state
+/// vector per group, key columns rebuilt by gathering the group
+/// representatives (no per-row tuple, no per-group re-push of cells).
+/// Output rows are sorted by ascending key tuple so runs are reproducible —
+/// the same order as the KeyRow reference path.
+pub fn local_packed_aggregate(
+    key_cols: &[&Column],
+    expr_cols: &[&Column],
+    specs: &[AggSpec],
+) -> Result<(Vec<Column>, Vec<Column>)> {
+    if key_cols.is_empty() {
+        bail!("aggregate: key column list must be non-empty");
+    }
+    let packed = PackedKeys::pack(key_cols)?;
+    let groups = group_packed(&packed);
+    let mut states: Vec<Vec<AggState>> = Vec::with_capacity(groups.num_groups());
+    for (i, &g) in groups.group_of_row.iter().enumerate() {
+        if g as usize == states.len() {
+            states.push(new_states(specs));
+        }
+        for (s, &c) in states[g as usize].iter_mut().zip(expr_cols) {
+            s.update_col(c, i);
+        }
+    }
+    // deterministic output order: ascending key tuples
+    let mut order: Vec<usize> = (0..groups.num_groups()).collect();
+    order.sort_by(|&a, &b| {
+        packed.cmp_rows(
+            groups.rep_rows[a] as usize,
+            &packed,
+            groups.rep_rows[b] as usize,
+        )
+    });
+    let rep_idx: Vec<usize> = order.iter().map(|&g| groups.rep_rows[g] as usize).collect();
+    let key_out: Vec<Column> = key_cols.iter().map(|c| c.take(&rep_idx)).collect();
+    let mut outs: Vec<Column> = specs
+        .iter()
+        .map(|sp| Column::new_empty(agg_output_dtype(sp)))
+        .collect();
+    for &g in &order {
+        for (out, s) in outs.iter_mut().zip(&states[g]) {
+            out.push(&s.finish());
+        }
+    }
+    Ok((key_out, outs))
+}
+
+/// Purely local hash aggregation over composite keys via materialized
+/// [`KeyRow`] tuples — the reference implementation, kept as the serial
+/// baseline's path so engine-agreement tests cross-check the packed fast
+/// path ([`local_packed_aggregate`]) against an independent one. Output rows
+/// are sorted by key tuple so runs are reproducible.
 pub fn local_hash_aggregate_keys(
     key_cols: &[&Column],
     expr_cols: &[Column],
@@ -148,13 +229,9 @@ pub fn distributed_aggregate(
     specs: &[AggSpec],
     strategy: AggStrategy,
 ) -> Result<(Vec<i64>, Vec<Column>)> {
-    let (kcols, outs) = distributed_aggregate_keys(
-        comm,
-        &[Column::I64(keys.to_vec())],
-        expr_cols,
-        specs,
-        strategy,
-    )?;
+    let kc = Column::I64(keys.to_vec());
+    let erefs: Vec<&Column> = expr_cols.iter().collect();
+    let (kcols, outs) = distributed_aggregate_keys(comm, &[&kc], &erefs, specs, strategy)?;
     Ok((kcols[0].as_i64().to_vec(), outs))
 }
 
@@ -163,6 +240,17 @@ fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
         .iter()
         .map(|sp| AggState::new(sp.func, sp.input_dtype))
         .collect()
+}
+
+/// Output dtype of one aggregation spec.
+fn agg_output_dtype(sp: &AggSpec) -> DType {
+    match (sp.func, sp.input_dtype) {
+        (AggFn::Count | AggFn::CountDistinct, _) => DType::I64,
+        (AggFn::Mean | AggFn::Var, _) => DType::F64,
+        (AggFn::Sum | AggFn::Min | AggFn::Max, DType::I64 | DType::Bool) => DType::I64,
+        (AggFn::Sum | AggFn::Min | AggFn::Max, _) => DType::F64,
+        (AggFn::First, dt) => dt,
+    }
 }
 
 fn finish_table(
@@ -176,15 +264,7 @@ fn finish_table(
     keys.sort();
     let mut outs: Vec<Column> = specs
         .iter()
-        .map(|sp| {
-            Column::new_empty(match (sp.func, sp.input_dtype) {
-                (AggFn::Count | AggFn::CountDistinct, _) => DType::I64,
-                (AggFn::Mean | AggFn::Var, _) => DType::F64,
-                (AggFn::Sum | AggFn::Min | AggFn::Max, DType::I64 | DType::Bool) => DType::I64,
-                (AggFn::Sum | AggFn::Min | AggFn::Max, _) => DType::F64,
-                (AggFn::First, dt) => dt,
-            })
-        })
+        .map(|sp| Column::new_empty(agg_output_dtype(sp)))
         .collect();
     for k in &keys {
         for (out, state) in outs.iter_mut().zip(&table[*k]) {
@@ -246,6 +326,33 @@ mod tests {
         );
         assert_eq!(outs[0].as_f64(), &[40.0, 20.0, 40.0]);
         // single-column grouping would have produced 2 groups, not 3
+    }
+
+    #[test]
+    fn packed_aggregate_matches_keyrow_reference() {
+        // composite (i64, str) keys → Bytes layout; (i64, bool) → Fixed;
+        // single i64 → zero-copy. All must agree with the KeyRow path.
+        let k1 = Column::I64(vec![2, 1, 2, 1, 2]);
+        let k2 = Column::Str(vec!["a".into(), "b".into(), "a".into(), "".into(), "b".into()]);
+        let k3 = Column::Bool(vec![true, false, true, false, true]);
+        let vals = Column::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let sp = specs();
+        for key_set in [vec![&k1], vec![&k1, &k3], vec![&k1, &k2], vec![&k1, &k2, &k3]] {
+            let (pk, po) = local_packed_aggregate(
+                &key_set,
+                &[&vals, &vals, &vals],
+                &sp,
+            )
+            .unwrap();
+            let (rk, ro) = local_hash_aggregate_keys(
+                &key_set,
+                &[vals.clone(), vals.clone(), vals.clone()],
+                &sp,
+            )
+            .unwrap();
+            assert_eq!(pk, rk, "key columns for {} keys", key_set.len());
+            assert_eq!(po, ro, "agg outputs for {} keys", key_set.len());
+        }
     }
 
     #[test]
@@ -313,8 +420,8 @@ mod tests {
                 let vals = Column::F64(ids.iter().map(|&i| i as f64).collect());
                 let (kcols, outs) = distributed_aggregate_keys(
                     &c,
-                    &[k1, k2],
-                    &[vals],
+                    &[&k1, &k2],
+                    &[&vals],
                     &specs()[..1],
                     strategy,
                 )

@@ -12,8 +12,8 @@
 //! both as the historical reference implementation and as an oracle in the
 //! property tests.
 
-use super::keys::{key_rows, owner_of_key, KeyRow};
-use super::shuffle::shuffle_by_owner;
+use super::keys::{KeyRow, PackedKeys};
+use super::shuffle::shuffle_by_packed;
 use crate::column::Column;
 use crate::comm::Comm;
 use crate::fxhash::FxHashMap;
@@ -60,6 +60,61 @@ pub fn local_sort_merge_join(lkeys: &[i64], rkeys: &[i64]) -> (Vec<usize>, Vec<u
         }
     }
     (out_l, out_r)
+}
+
+/// Local hash join over *packed* key sets with join-type semantics — the
+/// HiFrames hot path: the build table maps raw key hashes to candidate right
+/// rows and tuple equality against the packed bytes resolves collisions, so
+/// no per-row `Vec<KeyVal>` is ever allocated. Pair semantics and output
+/// order are identical to [`local_join_pairs`] (the KeyRow reference
+/// implementation, kept for the baseline engines and as the oracle in the
+/// property tests).
+pub fn packed_join_pairs(
+    lkeys: &PackedKeys<'_>,
+    rkeys: &PackedKeys<'_>,
+    how: JoinType,
+) -> Vec<(Option<usize>, Option<usize>)> {
+    let mut index: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+    for j in 0..rkeys.len() {
+        index.entry(rkeys.hash_row(j)).or_default().push(j as u32);
+    }
+    let mut out = Vec::new();
+    let mut right_matched = vec![false; rkeys.len()];
+    for i in 0..lkeys.len() {
+        let mut matched = false;
+        if let Some(cands) = index.get(&lkeys.hash_row(i)) {
+            for &j32 in cands {
+                let j = j32 as usize;
+                if !lkeys.eq_rows(i, rkeys, j) {
+                    continue; // hash collision between distinct tuples
+                }
+                matched = true;
+                match how {
+                    // Semi/Anti only need match existence
+                    JoinType::Semi | JoinType::Anti => break,
+                    _ => {
+                        right_matched[j] = true;
+                        out.push((Some(i), Some(j)));
+                    }
+                }
+            }
+        }
+        match (matched, how) {
+            (true, JoinType::Semi) => out.push((Some(i), None)),
+            (false, JoinType::Left | JoinType::Outer | JoinType::Anti) => {
+                out.push((Some(i), None))
+            }
+            _ => {}
+        }
+    }
+    if matches!(how, JoinType::Right | JoinType::Outer) {
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                out.push((None, Some(j)));
+            }
+        }
+    }
+    out
 }
 
 /// Local hash join over key tuples with join-type semantics. Returns one
@@ -123,48 +178,41 @@ pub fn local_join_pairs(
 /// Output distribution is `1D_VAR`.
 pub fn distributed_join_on(
     comm: &Comm,
-    lkey_cols: &[Column],
-    lpay: &[Column],
-    rkey_cols: &[Column],
-    rpay: &[Column],
+    lkey_cols: &[&Column],
+    lpay: &[&Column],
+    rkey_cols: &[&Column],
+    rpay: &[&Column],
     how: JoinType,
 ) -> Result<(Vec<Column>, Vec<Column>, Vec<Column>)> {
     if lkey_cols.len() != rkey_cols.len() || lkey_cols.is_empty() {
         bail!("join: key column lists must be non-empty and equal length");
     }
-    let p = comm.nranks();
-    // route both sides by the hash of their key tuple
-    let lrows_pre = key_rows(&lkey_cols.iter().collect::<Vec<_>>())?;
-    let rrows_pre = key_rows(&rkey_cols.iter().collect::<Vec<_>>())?;
-    let lowners: Vec<usize> = lrows_pre.iter().map(|r| owner_of_key(r, p)).collect();
-    let rowners: Vec<usize> = rrows_pre.iter().map(|r| owner_of_key(r, p)).collect();
-
-    let mut lall: Vec<Column> = lkey_cols.to_vec();
-    lall.extend(lpay.iter().cloned());
-    let mut rall: Vec<Column> = rkey_cols.to_vec();
-    rall.extend(rpay.iter().cloned());
-    let lall = shuffle_by_owner(comm, &lowners, &lall)?;
-    let rall = shuffle_by_owner(comm, &rowners, &rall)?;
+    // route both sides by the hash of their packed key set — no per-row
+    // tuples, and no column clones on the way into the shuffle
+    let lpacked_pre = PackedKeys::pack(lkey_cols)?;
+    let rpacked_pre = PackedKeys::pack(rkey_cols)?;
+    let mut lall: Vec<&Column> = lkey_cols.to_vec();
+    lall.extend_from_slice(lpay);
+    let mut rall: Vec<&Column> = rkey_cols.to_vec();
+    rall.extend_from_slice(rpay);
+    let lall = shuffle_by_packed(comm, &lpacked_pre, &lall)?;
+    let rall = shuffle_by_packed(comm, &rpacked_pre, &rall)?;
     let (lk, lc) = lall.split_at(lkey_cols.len());
     let (rk, rc) = rall.split_at(rkey_cols.len());
 
-    let lrows = key_rows(&lk.iter().collect::<Vec<_>>())?;
-    let rrows = key_rows(&rk.iter().collect::<Vec<_>>())?;
-    let pairs = local_join_pairs(&lrows, &rrows, how);
+    let lkrefs: Vec<&Column> = lk.iter().collect();
+    let rkrefs: Vec<&Column> = rk.iter().collect();
+    let lpacked = PackedKeys::pack(&lkrefs)?;
+    let rpacked = PackedKeys::pack(&rkrefs)?;
+    let pairs = packed_join_pairs(&lpacked, &rpacked, how);
 
-    // output key columns: value from whichever side is present
-    let mut keys_out: Vec<Column> =
-        lk.iter().map(|c| Column::new_empty(c.dtype())).collect();
-    for &(lo, ro) in &pairs {
-        let row = match (lo, ro) {
-            (Some(i), _) => &lrows[i],
-            (None, Some(j)) => &rrows[j],
-            (None, None) => unreachable!("join pair with no sides"),
-        };
-        for (col, cell) in keys_out.iter_mut().zip(row) {
-            col.push(&cell.to_value());
-        }
-    }
+    // output key columns: value from whichever side is present, gathered
+    // straight from the shuffled key columns
+    let keys_out: Vec<Column> = lk
+        .iter()
+        .zip(rk.iter())
+        .map(|(a, b)| take_merged(a, b, &pairs))
+        .collect();
 
     let lidx: Vec<Option<usize>> = pairs.iter().map(|&(lo, _)| lo).collect();
     let left_out: Vec<Column> = if how.nullable_left() {
@@ -188,6 +236,49 @@ pub fn distributed_join_on(
     Ok((keys_out, left_out, right_out))
 }
 
+/// Gather one output key column from a join's `(left, right)` index pairs:
+/// each output row takes the key cell from whichever side is present. Both
+/// columns have the key dtype (validated by plan typing), so the output
+/// dtype is preserved — join keys are never null.
+fn take_merged(
+    left: &Column,
+    right: &Column,
+    pairs: &[(Option<usize>, Option<usize>)],
+) -> Column {
+    fn pick<'v, T>(a: &'v [T], b: &'v [T], lo: Option<usize>, ro: Option<usize>) -> &'v T {
+        match (lo, ro) {
+            (Some(i), _) => &a[i],
+            (None, Some(j)) => &b[j],
+            (None, None) => unreachable!("join pair with no sides"),
+        }
+    }
+    match (left, right) {
+        (Column::I64(a), Column::I64(b)) => Column::I64(
+            pairs
+                .iter()
+                .map(|&(lo, ro)| *pick(a, b, lo, ro))
+                .collect(),
+        ),
+        (Column::Bool(a), Column::Bool(b)) => Column::Bool(
+            pairs
+                .iter()
+                .map(|&(lo, ro)| *pick(a, b, lo, ro))
+                .collect(),
+        ),
+        (Column::Str(a), Column::Str(b)) => Column::Str(
+            pairs
+                .iter()
+                .map(|&(lo, ro)| pick(a, b, lo, ro).clone())
+                .collect(),
+        ),
+        (a, b) => panic!(
+            "join key dtype mismatch: {:?} vs {:?}",
+            a.dtype(),
+            b.dtype()
+        ),
+    }
+}
+
 /// Distributed inner equi-join over single i64 keys — the seed API, now a
 /// thin wrapper over [`distributed_join_on`]. Output columns: joined key,
 /// then left payload columns, then right payload columns.
@@ -198,12 +289,16 @@ pub fn distributed_join(
     rkeys: &[i64],
     rcols: &[Column],
 ) -> Result<(Vec<i64>, Vec<Column>, Vec<Column>)> {
+    let lkc = Column::I64(lkeys.to_vec());
+    let rkc = Column::I64(rkeys.to_vec());
+    let lrefs: Vec<&Column> = lcols.iter().collect();
+    let rrefs: Vec<&Column> = rcols.iter().collect();
     let (keys, lout, rout) = distributed_join_on(
         comm,
-        &[Column::I64(lkeys.to_vec())],
-        lcols,
-        &[Column::I64(rkeys.to_vec())],
-        rcols,
+        &[&lkc],
+        &lrefs,
+        &[&rkc],
+        &rrefs,
         JoinType::Inner,
     )?;
     Ok((keys[0].as_i64().to_vec(), lout, rout))
@@ -318,6 +413,50 @@ mod tests {
     }
 
     #[test]
+    fn packed_join_matches_keyrow_oracle_all_types() {
+        use crate::ops::keys::key_rows;
+        // duplicate keys on both sides, unmatched rows on both sides
+        let lk1 = Column::I64(vec![1, 2, 2, 5, 7, 2]);
+        let lk2 = Column::Bool(vec![true, false, false, true, false, true]);
+        let rk1 = Column::I64(vec![2, 3, 2, 7]);
+        let rk2 = Column::Bool(vec![false, true, false, true]);
+        let lrows = key_rows(&[&lk1, &lk2]).unwrap();
+        let rrows = key_rows(&[&rk1, &rk2]).unwrap();
+        let lp = PackedKeys::pack(&[&lk1, &lk2]).unwrap();
+        let rp = PackedKeys::pack(&[&rk1, &rk2]).unwrap();
+        for how in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::Outer,
+            JoinType::Semi,
+            JoinType::Anti,
+        ] {
+            assert_eq!(
+                packed_join_pairs(&lp, &rp, how),
+                local_join_pairs(&lrows, &rrows, how),
+                "{how:?}"
+            );
+        }
+        // single-i64 (zero-copy layout) as well
+        let a = Column::I64(vec![3, 1, 3, 9]);
+        let b = Column::I64(vec![3, 4]);
+        let pa = PackedKeys::pack(&[&a]).unwrap();
+        let pb = PackedKeys::pack(&[&b]).unwrap();
+        for how in [JoinType::Inner, JoinType::Outer, JoinType::Anti] {
+            assert_eq!(
+                packed_join_pairs(&pa, &pb, how),
+                local_join_pairs(
+                    &rows1(a.as_i64()),
+                    &rows1(b.as_i64()),
+                    how
+                ),
+                "{how:?}"
+            );
+        }
+    }
+
+    #[test]
     fn local_join_composite_keys() {
         let lk = vec![
             vec![KeyVal::I64(1), KeyVal::Str("a".into())],
@@ -389,10 +528,10 @@ mod tests {
             let rval = Column::I64(rk_all[rs..rs + rl].iter().map(|k| k + 200).collect());
             let (keys, lc, rc) = distributed_join_on(
                 &c,
-                &[lkc],
-                &[lval],
-                &[rkc],
-                &[rval],
+                &[&lkc],
+                &[&lval],
+                &[&rkc],
+                &[&rval],
                 JoinType::Left,
             )
             .unwrap();
@@ -437,7 +576,7 @@ mod tests {
                 let lkc = Column::I64(lk_all[ls..ls + ll].to_vec());
                 let rkc = Column::I64(rk_all[rs..rs + rl].to_vec());
                 let (keys, _, rc) =
-                    distributed_join_on(&c, &[lkc], &[], &[rkc], &[], how).unwrap();
+                    distributed_join_on(&c, &[&lkc], &[], &[&rkc], &[], how).unwrap();
                 assert!(rc.is_empty());
                 keys[0].as_i64().to_vec()
             });

@@ -2,17 +2,29 @@
 //! sort operators and the baseline engines.
 //!
 //! A relational key in the redesigned API is a *list* of columns
-//! (`on: &[("lk","rk")]`, `aggregate(&["k1","k2"], …)`). At runtime one row's
-//! key is a [`KeyVal`] tuple: hashable (routing rows to their owner rank via
-//! [`hash_key_row`] — the composite generalization of the paper's
-//! `_df_id[i] % npes`), totally ordered (merge comparators, deterministic
-//! group output), and wire-encodable (sample-sort splitters, pre-aggregation
-//! records). Float64 columns are rejected as keys at plan-typing time, so
-//! every key cell has exact equality.
+//! (`on: &[("lk","rk")]`, `aggregate(&["k1","k2"], …)`). Two runtime
+//! representations coexist:
+//!
+//! * [`KeyVal`] / [`KeyRow`] — one boxed tuple per row. This is the
+//!   API/typing boundary representation, the wire format for splitters and
+//!   pre-aggregation records, and what the serial/sparklike baseline engines
+//!   use (keeping the engine-agreement tests a true cross-check).
+//! * [`PackedKeys`] — the HiFrames fast path: a columnar, allocation-free
+//!   encoding of the whole key column set at once. A single Int64 key is a
+//!   zero-copy borrow of the column; multi-column Int64/Bool keys byte-pack
+//!   into fixed-width order-preserving rows; keys containing String columns
+//!   fall back to variable-width order-preserving rows with a per-operator
+//!   string interner. Hashing (routing rows to their owner rank — the
+//!   composite generalization of the paper's `_df_id[i] % npes`), equality
+//!   and ascending tuple order are all answered without materializing a
+//!   single `Vec<KeyVal>`.
+//!
+//! Float64 columns are rejected as keys at plan-typing time, so every key
+//! cell has exact equality.
 
 use crate::column::Column;
-use crate::fxhash::FxHasher;
-use crate::types::{SortOrder, Value};
+use crate::fxhash::{self, FxHashMap, FxHasher};
+use crate::types::{DType, SortOrder, Value};
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
 use std::hash::{BuildHasher, BuildHasherDefault};
@@ -166,6 +178,417 @@ pub fn decode_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<KeyRo
     Ok(row)
 }
 
+/// Wire-encode the key cells of row `i` of `cols` — byte-identical to
+/// [`encode_key_row`] on the materialized tuple, without building it.
+pub fn encode_key_cells(cols: &[&Column], i: usize, buf: &mut Vec<u8>) {
+    for c in cols {
+        match c {
+            Column::I64(v) => {
+                buf.push(0);
+                buf.extend_from_slice(&v[i].to_le_bytes());
+            }
+            Column::Bool(v) => {
+                buf.push(1);
+                buf.push(v[i] as u8);
+            }
+            Column::Str(v) => {
+                buf.push(2);
+                buf.extend_from_slice(&(v[i].len() as u32).to_le_bytes());
+                buf.extend_from_slice(v[i].as_bytes());
+            }
+            Column::F64(_) => panic!("Float64 cannot be a relational key"),
+        }
+    }
+}
+
+/// Advance `pos` past an `ncols`-cell key tuple written by
+/// [`encode_key_row`] without materializing it (pre-aggregation merge keys
+/// stay raw bytes).
+pub fn skip_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<()> {
+    let need = |pos: &usize, n: usize| -> Result<()> {
+        if *pos + n > buf.len() {
+            bail!("key row skip: truncated buffer");
+        }
+        Ok(())
+    };
+    for _ in 0..ncols {
+        need(pos, 1)?;
+        let tag = buf[*pos];
+        *pos += 1;
+        match tag {
+            0 => {
+                need(pos, 8)?;
+                *pos += 8;
+            }
+            1 => {
+                need(pos, 1)?;
+                *pos += 1;
+            }
+            2 => {
+                need(pos, 4)?;
+                let mut b = [0u8; 4];
+                b.copy_from_slice(&buf[*pos..*pos + 4]);
+                *pos += 4;
+                let len = u32::from_le_bytes(b) as usize;
+                need(pos, len)?;
+                *pos += len;
+            }
+            t => bail!("key row skip: bad tag {t}"),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Packed composite keys — the fast path.
+// ---------------------------------------------------------------------------
+
+/// Sign-flipped big-endian encoding of an i64: byte-wise lexicographic
+/// comparison of the result equals integer comparison.
+#[inline]
+fn pack_i64_be(x: i64) -> [u8; 8] {
+    ((x as u64) ^ (1u64 << 63)).to_be_bytes()
+}
+
+/// Order-preserving string cell encoding: each 0x00 data byte becomes
+/// `0x00 0x01` and the cell ends with a `0x00 0x00` terminator. Byte-wise
+/// comparison of whole rows then equals tuple comparison even when the cell
+/// is followed by further cells: at the first divergence either the data
+/// bytes differ directly, or the terminator (`0x00 0x00`) loses to an escape
+/// (`0x00 0x01`) and to any real byte — i.e. a proper prefix string sorts
+/// first, before any following cell is ever inspected.
+fn escape_str_into(s: &str, out: &mut Vec<u8>) {
+    for &b in s.as_bytes() {
+        if b == 0 {
+            out.push(0);
+            out.push(1);
+        } else {
+            out.push(b);
+        }
+    }
+    out.push(0);
+    out.push(0);
+}
+
+/// Shared fixed-width packing loop (Int64/Bool columns only): concatenated
+/// order-preserving cells, with optional per-column bit inversion (the
+/// descending directions of [`SortKeys`]; missing entries mean no
+/// inversion). Returns `(row_width, packed_rows)`.
+fn pack_fixed(cols: &[&Column], invert: &[bool]) -> (usize, Vec<u8>) {
+    let n = cols.first().map_or(0, |c| c.len());
+    let width: usize = cols
+        .iter()
+        .map(|c| match c.dtype() {
+            DType::I64 => 8,
+            _ => 1,
+        })
+        .sum();
+    let mut data = vec![0u8; n * width];
+    let mut off = 0usize;
+    for (k, &c) in cols.iter().enumerate() {
+        let inv = invert.get(k).copied().unwrap_or(false);
+        match c {
+            Column::I64(v) => {
+                for (i, &x) in v.iter().enumerate() {
+                    let mut b = pack_i64_be(x);
+                    if inv {
+                        for byte in &mut b {
+                            *byte = !*byte;
+                        }
+                    }
+                    let at = i * width + off;
+                    data[at..at + 8].copy_from_slice(&b);
+                }
+                off += 8;
+            }
+            Column::Bool(v) => {
+                for (i, &x) in v.iter().enumerate() {
+                    let b = x as u8;
+                    data[i * width + off] = if inv { !b } else { b };
+                }
+                off += 1;
+            }
+            _ => unreachable!("fixed packing requires Int64/Bool columns"),
+        }
+    }
+    (width, data)
+}
+
+/// A whole key column set, packed once per operator. See the module docs for
+/// the three layouts. All accessors are per-row and allocation-free; two
+/// `PackedKeys` built from dtype-identical column lists (the two sides of a
+/// join) are mutually comparable.
+pub enum PackedKeys<'a> {
+    /// Single Int64 key column — zero-copy borrow, the seed's fast path.
+    I64(&'a [i64]),
+    /// Multi-column Int64/Bool keys: fixed-width order-preserving rows
+    /// (`data[i*width .. (i+1)*width]`).
+    Fixed { width: usize, data: Vec<u8> },
+    /// Keys containing String columns: variable-width order-preserving rows
+    /// with per-operator string interning (each distinct string is escaped
+    /// once).
+    Bytes { offsets: Vec<usize>, data: Vec<u8> },
+}
+
+impl<'a> PackedKeys<'a> {
+    /// Pack the key columns (all equal length; Float64 rejected).
+    pub fn pack(cols: &[&'a Column]) -> Result<PackedKeys<'a>> {
+        if cols.iter().any(|c| c.dtype() == DType::F64) {
+            bail!("Float64 cannot be a relational key");
+        }
+        if cols.len() == 1 {
+            if let Column::I64(v) = cols[0] {
+                return Ok(PackedKeys::I64(v.as_slice()));
+            }
+        }
+        let n = cols.first().map_or(0, |c| c.len());
+        debug_assert!(cols.iter().all(|c| c.len() == n));
+        if cols.iter().all(|c| matches!(c.dtype(), DType::I64 | DType::Bool)) {
+            let (width, data) = pack_fixed(cols, &[]);
+            return Ok(PackedKeys::Fixed { width, data });
+        }
+        // String fallback: variable-width rows; intern each distinct string's
+        // escaped encoding once for this operator.
+        let mut interned: FxHashMap<&'a str, Vec<u8>> = FxHashMap::default();
+        let mut data: Vec<u8> = Vec::new();
+        let mut offsets: Vec<usize> = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        for i in 0..n {
+            for &c in cols {
+                match c {
+                    Column::I64(v) => data.extend_from_slice(&pack_i64_be(v[i])),
+                    Column::Bool(v) => data.push(v[i] as u8),
+                    Column::Str(v) => {
+                        let enc = interned.entry(v[i].as_str()).or_insert_with(|| {
+                            let mut e = Vec::new();
+                            escape_str_into(&v[i], &mut e);
+                            e
+                        });
+                        data.extend_from_slice(enc);
+                    }
+                    Column::F64(_) => unreachable!("rejected above"),
+                }
+            }
+            offsets.push(data.len());
+        }
+        Ok(PackedKeys::Bytes { offsets, data })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PackedKeys::I64(v) => v.len(),
+            PackedKeys::Fixed { width, data } => {
+                if *width == 0 {
+                    0
+                } else {
+                    data.len() / width
+                }
+            }
+            PackedKeys::Bytes { offsets, .. } => offsets.len() - 1,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Byte view of one packed row (Fixed/Bytes layouts only).
+    #[inline]
+    fn row_bytes(&self, i: usize) -> &[u8] {
+        match self {
+            PackedKeys::I64(_) => unreachable!("I64 layout has no byte rows"),
+            PackedKeys::Fixed { width, data } => &data[i * width..(i + 1) * width],
+            PackedKeys::Bytes { offsets, data } => &data[offsets[i]..offsets[i + 1]],
+        }
+    }
+
+    /// Fx hash of row `i` — deterministic, so equal tuples land on the same
+    /// rank no matter which rank (or side of a join) hashed them.
+    #[inline]
+    pub fn hash_row(&self, i: usize) -> u64 {
+        match self {
+            PackedKeys::I64(v) => fxhash::hash_u64(v[i] as u64),
+            _ => fxhash::hash_bytes(self.row_bytes(i)),
+        }
+    }
+
+    /// Destination rank of row `i`.
+    #[inline]
+    pub fn owner(&self, i: usize, nranks: usize) -> usize {
+        (self.hash_row(i) % nranks as u64) as usize
+    }
+
+    /// Destination rank of every row (the shuffle routing vector).
+    pub fn owners(&self, nranks: usize) -> Vec<usize> {
+        (0..self.len()).map(|i| self.owner(i, nranks)).collect()
+    }
+
+    /// Tuple equality between row `i` of `self` and row `j` of `other`
+    /// (layouts must match — guaranteed for dtype-identical key lists).
+    #[inline]
+    pub fn eq_rows(&self, i: usize, other: &PackedKeys, j: usize) -> bool {
+        match (self, other) {
+            (PackedKeys::I64(a), PackedKeys::I64(b)) => a[i] == b[j],
+            (PackedKeys::Fixed { .. }, PackedKeys::Fixed { .. })
+            | (PackedKeys::Bytes { .. }, PackedKeys::Bytes { .. }) => {
+                self.row_bytes(i) == other.row_bytes(j)
+            }
+            _ => panic!("packed key layout mismatch"),
+        }
+    }
+
+    /// Ascending tuple order between row `i` of `self` and row `j` of
+    /// `other` — agrees with [`cmp_key_rows`] under all-ascending orders.
+    #[inline]
+    pub fn cmp_rows(&self, i: usize, other: &PackedKeys, j: usize) -> Ordering {
+        match (self, other) {
+            (PackedKeys::I64(a), PackedKeys::I64(b)) => a[i].cmp(&b[j]),
+            (PackedKeys::Fixed { .. }, PackedKeys::Fixed { .. })
+            | (PackedKeys::Bytes { .. }, PackedKeys::Bytes { .. }) => {
+                self.row_bytes(i).cmp(other.row_bytes(j))
+            }
+            _ => panic!("packed key layout mismatch"),
+        }
+    }
+}
+
+/// Dense group ids over a packed key set: `group_of_row[i]` is the group of
+/// row `i`, `rep_rows[g]` one representative row of group `g`. Group ids are
+/// assigned in first-seen row order.
+pub struct KeyGroups {
+    pub group_of_row: Vec<u32>,
+    pub rep_rows: Vec<u32>,
+}
+
+impl KeyGroups {
+    pub fn num_groups(&self) -> usize {
+        self.rep_rows.len()
+    }
+}
+
+/// Hash-group the rows of a packed key set (the group-by inner loop). The
+/// table maps hashes to candidate groups; tuple equality against the group
+/// representative resolves collisions, so no per-row key is ever
+/// materialized.
+pub fn group_packed(keys: &PackedKeys) -> KeyGroups {
+    let n = keys.len();
+    let mut table: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+    let mut group_of_row: Vec<u32> = Vec::with_capacity(n);
+    let mut rep_rows: Vec<u32> = Vec::new();
+    for i in 0..n {
+        let h = keys.hash_row(i);
+        let gids = table.entry(h).or_default();
+        let mut found = None;
+        for &g in gids.iter() {
+            if keys.eq_rows(i, keys, rep_rows[g as usize] as usize) {
+                found = Some(g);
+                break;
+            }
+        }
+        let g = match found {
+            Some(g) => g,
+            None => {
+                let g = rep_rows.len() as u32;
+                rep_rows.push(i as u32);
+                gids.push(g);
+                g
+            }
+        };
+        group_of_row.push(g);
+    }
+    KeyGroups {
+        group_of_row,
+        rep_rows,
+    }
+}
+
+/// Fixed-width, direction-aware packed sort keys: byte-wise row comparison
+/// equals [`cmp_key_rows`] under `orders`. Descending columns are packed
+/// bit-inverted. Returns `None` when a String key column forces the KeyRow
+/// fallback (variable-width cells are not safely invertible).
+pub struct SortKeys {
+    width: usize,
+    data: Vec<u8>,
+    len: usize,
+}
+
+impl SortKeys {
+    /// Pack `cols` under `orders` (missing directions default to ascending).
+    /// `Ok(None)` = String key present, use the KeyRow path.
+    pub fn pack(cols: &[&Column], orders: &[SortOrder]) -> Result<Option<SortKeys>> {
+        if cols.iter().any(|c| c.dtype() == DType::F64) {
+            bail!("Float64 cannot be a relational key");
+        }
+        if cols.iter().any(|c| c.dtype() == DType::Str) {
+            return Ok(None);
+        }
+        let n = cols.first().map_or(0, |c| c.len());
+        let invert: Vec<bool> = (0..cols.len())
+            .map(|k| {
+                matches!(
+                    orders.get(k).copied().unwrap_or(SortOrder::Asc),
+                    SortOrder::Desc
+                )
+            })
+            .collect();
+        let (width, data) = pack_fixed(cols, &invert);
+        Ok(Some(SortKeys {
+            width,
+            data,
+            len: n,
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Row width in bytes — a pure function of the key schema, so every rank
+    /// agrees on it (splitter wire format).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Byte view of one packed row; `row(a).cmp(row(b))` is the sort order.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Gather rows into a new `SortKeys` (reorder after an argsort).
+    pub fn take(&self, idx: &[usize]) -> SortKeys {
+        let mut data = Vec::with_capacity(idx.len() * self.width);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        SortKeys {
+            width: self.width,
+            data,
+            len: idx.len(),
+        }
+    }
+
+    /// Number of rows in the sorted range `[start, len)` whose packed bytes
+    /// are `<= limit` (range-partition upper bound against a splitter).
+    pub fn partition_le(&self, start: usize, limit: &[u8]) -> usize {
+        let mut lo = start;
+        let mut hi = self.len;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.row(mid) <= limit {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo - start
+    }
+}
+
 /// Rebuild key columns (one per key position) from key tuples, pushing in
 /// row order. `templates` supplies the dtype of each position.
 pub fn key_columns(rows: &[KeyRow], templates: &[&Column]) -> Vec<Column> {
@@ -252,6 +675,151 @@ mod tests {
         let cols = key_columns(&rows, &[&a, &b]);
         assert_eq!(cols[0], a);
         assert_eq!(cols[1], b);
+    }
+
+    #[test]
+    fn encode_key_cells_matches_encode_key_row() {
+        let a = Column::I64(vec![-7, 42]);
+        let b = Column::Bool(vec![true, false]);
+        let c = Column::Str(vec!["hello".into(), "".into()]);
+        let cols: Vec<&Column> = vec![&a, &b, &c];
+        let rows = key_rows(&cols).unwrap();
+        for i in 0..2 {
+            let mut via_cells = Vec::new();
+            encode_key_cells(&cols, i, &mut via_cells);
+            let mut via_row = Vec::new();
+            encode_key_row(&rows[i], &mut via_row);
+            assert_eq!(via_cells, via_row, "row {i}");
+            // skip advances exactly over one tuple
+            let mut pos = 0;
+            skip_key_row(3, &via_cells, &mut pos).unwrap();
+            assert_eq!(pos, via_cells.len());
+        }
+    }
+
+    #[test]
+    fn packed_layout_selection() {
+        let i = Column::I64(vec![1, 2]);
+        let b = Column::Bool(vec![true, false]);
+        let s = Column::Str(vec!["x".into(), "y".into()]);
+        assert!(matches!(
+            PackedKeys::pack(&[&i]).unwrap(),
+            PackedKeys::I64(_)
+        ));
+        assert!(matches!(
+            PackedKeys::pack(&[&i, &b]).unwrap(),
+            PackedKeys::Fixed { .. }
+        ));
+        assert!(matches!(
+            PackedKeys::pack(&[&i, &s]).unwrap(),
+            PackedKeys::Bytes { .. }
+        ));
+        assert!(PackedKeys::pack(&[&Column::F64(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn packed_agrees_with_key_rows() {
+        // mixed dtypes incl. extremes, empty strings and embedded NULs
+        let a = Column::I64(vec![i64::MIN, -1, 0, 1, i64::MAX, 0]);
+        let b = Column::Bool(vec![true, false, true, true, false, true]);
+        let s = Column::Str(vec![
+            "".into(),
+            "a".into(),
+            "a\0b".into(),
+            "a".into(),
+            "\0".into(),
+            "".into(),
+        ]);
+        for cols in [vec![&a, &b], vec![&a, &b, &s]] {
+            let packed = PackedKeys::pack(&cols).unwrap();
+            let rows = key_rows(&cols).unwrap();
+            assert_eq!(packed.len(), rows.len());
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    assert_eq!(
+                        packed.eq_rows(i, &packed, j),
+                        rows[i] == rows[j],
+                        "eq {i},{j}"
+                    );
+                    assert_eq!(
+                        packed.cmp_rows(i, &packed, j),
+                        cmp_key_rows(&rows[i], &rows[j], &[]),
+                        "cmp {i},{j}"
+                    );
+                    if rows[i] == rows[j] {
+                        assert_eq!(packed.hash_row(i), packed.hash_row(j));
+                        assert_eq!(packed.owner(i, 7), packed.owner(j, 7));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_single_i64_is_zero_copy_layout() {
+        let a = Column::I64(vec![3, -3, i64::MIN, i64::MAX]);
+        let packed = PackedKeys::pack(&[&a]).unwrap();
+        assert_eq!(packed.len(), 4);
+        assert!(packed.eq_rows(0, &packed, 0));
+        assert!(!packed.eq_rows(0, &packed, 1));
+        assert_eq!(packed.cmp_rows(2, &packed, 3), Ordering::Less);
+        // cross-instance comparability (two join sides)
+        let b = Column::I64(vec![-3]);
+        let other = PackedKeys::pack(&[&b]).unwrap();
+        assert!(packed.eq_rows(1, &other, 0));
+        assert_eq!(packed.owner(1, 5), other.owner(0, 5));
+    }
+
+    #[test]
+    fn group_packed_dense_ids() {
+        let a = Column::I64(vec![5, 7, 5, 5, 7, 9]);
+        let b = Column::Bool(vec![true, false, true, false, false, true]);
+        let packed = PackedKeys::pack(&[&a, &b]).unwrap();
+        let g = group_packed(&packed);
+        // groups: (5,T)=0, (7,F)=1, (5,F)=2, (9,T)=3 in first-seen order
+        assert_eq!(g.group_of_row, vec![0, 1, 0, 2, 1, 3]);
+        assert_eq!(g.rep_rows, vec![0, 1, 3, 5]);
+        assert_eq!(g.num_groups(), 4);
+    }
+
+    #[test]
+    fn sort_keys_directions() {
+        let a = Column::I64(vec![1, 1, 2, -1]);
+        let b = Column::Bool(vec![true, false, true, false]);
+        use crate::types::SortOrder::*;
+        let rows = key_rows(&[&a, &b]).unwrap();
+        for orders in [vec![Asc, Asc], vec![Desc, Asc], vec![Asc, Desc], vec![Desc, Desc]] {
+            let sk = SortKeys::pack(&[&a, &b], &orders).unwrap().unwrap();
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(
+                        sk.row(i).cmp(sk.row(j)),
+                        cmp_key_rows(&rows[i], &rows[j], &orders),
+                        "{orders:?} {i},{j}"
+                    );
+                }
+            }
+        }
+        // string keys force the fallback
+        let s = Column::Str(vec!["x".into()]);
+        assert!(SortKeys::pack(&[&s], &[Asc]).unwrap().is_none());
+        assert!(SortKeys::pack(&[&Column::F64(vec![0.0])], &[Asc]).is_err());
+    }
+
+    #[test]
+    fn sort_keys_take_and_partition() {
+        let a = Column::I64(vec![30, 10, 20]);
+        let sk = SortKeys::pack(&[&a], &[SortOrder::Asc]).unwrap().unwrap();
+        let mut idx: Vec<usize> = (0..3).collect();
+        idx.sort_by(|&x, &y| sk.row(x).cmp(sk.row(y)));
+        assert_eq!(idx, vec![1, 2, 0]);
+        let sorted = sk.take(&idx);
+        assert_eq!(sorted.len(), 3);
+        assert_eq!(sorted.width(), 8);
+        // splitter = packed 20: rows <= 20 from the start of sorted order
+        assert_eq!(sorted.partition_le(0, sk.row(2)), 2);
+        assert_eq!(sorted.partition_le(2, sk.row(2)), 0);
+        assert_eq!(sorted.partition_le(0, sk.row(0)), 3);
     }
 
     #[test]

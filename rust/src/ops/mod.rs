@@ -3,13 +3,15 @@
 //!
 //! * [`shuffle`] — hash-partition + `alltoallv` (join/aggregate prologue;
 //!   the paper's Fig. 5 `_df_id[i] % npes` packing loop, generalized to
-//!   composite-key owners in [`shuffle::shuffle_by_owner`]).
-//! * [`keys`] — composite-key tuples: hashing, ordering, wire codec.
-//! * [`join`] — post-shuffle hash join over key tuples with
+//!   packed composite-key routing in [`shuffle::shuffle_by_packed`]).
+//! * [`keys`] — composite keys: the packed fast path ([`keys::PackedKeys`],
+//!   [`keys::SortKeys`]) plus the materialized [`keys::KeyRow`] tuples used
+//!   at the API boundary, on the wire, and by the baseline engines.
+//! * [`join`] — post-shuffle hash join over packed keys with
 //!   Inner/Left/Right/Outer/Semi/Anti semantics (plus the seed's single-key
-//!   sort-merge kernel as oracle).
-//! * [`aggregate`] — post-shuffle hash aggregation over key tuples, with
-//!   optional local pre-aggregation (decomposed partial states).
+//!   sort-merge kernel and the KeyRow hash join as oracles).
+//! * [`aggregate`] — post-shuffle hash aggregation over packed key groups,
+//!   with optional local pre-aggregation (decomposed partial states).
 //! * [`scan`] — cumulative sum via local partials + `exscan`.
 //! * [`stencil`] — SMA/WMA windows via near-neighbor halo exchange.
 //! * [`rebalance`] — `1D_VAR` → `1D_BLOCK` redistribution preserving global
@@ -26,11 +28,17 @@ pub mod shuffle;
 pub mod sort;
 pub mod stencil;
 
-pub use aggregate::{distributed_aggregate, distributed_aggregate_keys, local_hash_aggregate_keys};
-pub use join::{distributed_join, distributed_join_on, local_join_pairs, local_sort_merge_join};
-pub use keys::{KeyRow, KeyVal};
+pub use aggregate::{
+    distributed_aggregate, distributed_aggregate_keys, local_hash_aggregate_keys,
+    local_packed_aggregate,
+};
+pub use join::{
+    distributed_join, distributed_join_on, local_join_pairs, local_sort_merge_join,
+    packed_join_pairs,
+};
+pub use keys::{group_packed, KeyGroups, KeyRow, KeyVal, PackedKeys, SortKeys};
 pub use rebalance::rebalance_block;
 pub use scan::{cumsum_f64, cumsum_i64};
-pub use shuffle::{shuffle_by_key, shuffle_by_owner};
+pub use shuffle::{shuffle_by_key, shuffle_by_owner, shuffle_by_packed};
 pub use sort::{distributed_sort_by_key, distributed_sort_keys};
 pub use stencil::{stencil_1d, stencil_serial};

@@ -61,13 +61,15 @@ pub fn shuffle_by_key(comm: &Comm, keys: &[i64], cols: &[Column]) -> Result<(Vec
 
 /// Shuffle `cols` (all of equal local length) with a precomputed destination
 /// rank per row — the composite-key generalization of [`shuffle_by_key`]:
-/// callers hash their key *tuple* (via [`crate::ops::keys::owner_of_key`])
-/// and ship key columns alongside the payload. Returns the received columns
-/// in the same column order, per-source chunks concatenated in rank order.
+/// callers route by their packed key set (via
+/// [`crate::ops::keys::PackedKeys::owners`]) and ship key columns alongside
+/// the payload. Takes column *references* so the exec layer never clones a
+/// column just to shuffle it. Returns the received columns in the same
+/// column order, per-source chunks concatenated in rank order.
 pub fn shuffle_by_owner(
     comm: &Comm,
     owners: &[usize],
-    cols: &[Column],
+    cols: &[&Column],
 ) -> Result<Vec<Column>> {
     let p = comm.nranks();
     debug_assert!(cols.iter().all(|c| c.len() == owners.len()));
@@ -85,7 +87,7 @@ pub fn shuffle_by_owner(
     let mut bufs = Vec::with_capacity(p);
     for idx in &buckets {
         let mut buf = Vec::new();
-        for c in cols {
+        for &c in cols {
             encode_column_take(c, idx, &mut buf);
         }
         bufs.push(buf);
@@ -103,6 +105,19 @@ pub fn shuffle_by_owner(
         }
     }
     Ok(out_cols)
+}
+
+/// Hash-partition shuffle over a packed key set: route every row of `cols`
+/// to the owner rank of its key tuple. The keys travel as ordinary columns
+/// (the leading ones of `cols`); only the routing vector comes from the
+/// packed representation, so no per-row key tuple is ever materialized.
+pub fn shuffle_by_packed(
+    comm: &Comm,
+    keys: &crate::ops::keys::PackedKeys<'_>,
+    cols: &[&Column],
+) -> Result<Vec<Column>> {
+    let owners = keys.owners(comm.nranks());
+    shuffle_by_owner(comm, &owners, cols)
 }
 
 #[cfg(test)]
@@ -178,7 +193,7 @@ mod tests {
             let owners: Vec<usize> = keys.iter().map(|&k| (k as usize) % 3).collect();
             let kcol = Column::I64(keys.clone());
             let vcol = Column::I64(keys.iter().map(|&k| k * 11).collect());
-            let cols = shuffle_by_owner(&c, &owners, &[kcol, vcol]).unwrap();
+            let cols = shuffle_by_owner(&c, &owners, &[&kcol, &vcol]).unwrap();
             (c.rank(), cols[0].as_i64().to_vec(), cols[1].as_i64().to_vec())
         });
         let mut all: Vec<i64> = Vec::new();
@@ -193,6 +208,33 @@ mod tests {
         let mut expect: Vec<i64> = (0..3).flat_map(|r| (0..9).map(move |i| i + r)).collect();
         expect.sort();
         assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn shuffle_by_packed_colocates_composite_keys() {
+        use crate::ops::keys::PackedKeys;
+        let out = run_spmd(3, |c| {
+            // composite (i64, bool) keys spread over every rank
+            let ids: Vec<i64> = (0..12).map(|i| (i + c.rank() as i64) % 4).collect();
+            let k1 = Column::I64(ids.clone());
+            let k2 = Column::Bool(ids.iter().map(|&i| i % 2 == 0).collect());
+            let packed = PackedKeys::pack(&[&k1, &k2]).unwrap();
+            let cols = shuffle_by_packed(&c, &packed, &[&k1, &k2]).unwrap();
+            (c.rank(), cols[0].as_i64().to_vec(), cols[1].as_bool().to_vec())
+        });
+        // every (k1,k2) tuple must live on exactly one rank
+        let mut owner_of_tuple: std::collections::HashMap<(i64, bool), usize> =
+            std::collections::HashMap::new();
+        let mut total = 0usize;
+        for (rank, k1s, k2s) in &out {
+            for (a, b) in k1s.iter().zip(k2s) {
+                total += 1;
+                if let Some(prev) = owner_of_tuple.insert((*a, *b), *rank) {
+                    assert_eq!(prev, *rank, "tuple ({a},{b}) split across ranks");
+                }
+            }
+        }
+        assert_eq!(total, 36);
     }
 
     #[test]

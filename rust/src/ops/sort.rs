@@ -5,15 +5,18 @@
 //! distribution: `1D_VAR` (range partitions are data dependent — the
 //! motivating case for the paper's 1D_VAR).
 //!
-//! Splitters are full key *tuples* shipped through the [`keys`] wire codec;
-//! ordering everywhere is [`cmp_key_rows`] so mixed Asc/Desc key lists
-//! range-partition correctly.
+//! Int64/Bool key lists take the packed fast path ([`SortKeys`]):
+//! direction-aware fixed-width byte rows where every comparison — local
+//! sort, splitter selection, range partition — is a `memcmp`, and splitters
+//! travel as raw packed rows. Key lists containing String columns fall back
+//! to materialized [`KeyRow`] tuples shipped through the [`keys`] wire
+//! codec, ordered by [`cmp_key_rows`].
 
-use super::keys::{self, cmp_key_rows, decode_key_row, encode_key_row, KeyRow};
+use super::keys::{self, cmp_key_rows, decode_key_row, encode_key_row, KeyRow, SortKeys};
 use crate::column::{decode_column, encode_column, Column};
 use crate::comm::Comm;
 use crate::types::SortOrder;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::cmp::Ordering;
 
 /// Sort `(key_cols, payload)` globally by the key tuples under `orders`
@@ -22,12 +25,18 @@ use std::cmp::Ordering;
 /// (dtypes preserved) and payload columns.
 pub fn distributed_sort_keys(
     comm: &Comm,
-    key_cols: &[Column],
+    key_cols: &[&Column],
     orders: &[SortOrder],
-    payload: &[Column],
+    payload: &[&Column],
 ) -> Result<(Vec<Column>, Vec<Column>)> {
+    if key_cols.is_empty() {
+        bail!("sort: key column list must be non-empty");
+    }
+    if let Some(sk) = SortKeys::pack(key_cols, orders)? {
+        return sort_packed(comm, sk, key_cols, orders, payload);
+    }
     let p = comm.nranks();
-    let krows = keys::key_rows(&key_cols.iter().collect::<Vec<_>>())?;
+    let krows = keys::key_rows(key_cols)?;
     // local sort (stable — Timsort-family, as in the paper)
     let mut idx: Vec<usize> = (0..krows.len()).collect();
     idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
@@ -137,6 +146,119 @@ pub fn distributed_sort_keys(
     Ok((fkeys, fpay))
 }
 
+/// Packed sample-sort (Int64/Bool keys): every ordering decision is a byte
+/// comparison of fixed-width direction-aware rows, and splitters are shipped
+/// as raw packed rows — no tuple materialization, no per-cell wire codec.
+fn sort_packed(
+    comm: &Comm,
+    sk: SortKeys,
+    key_cols: &[&Column],
+    orders: &[SortOrder],
+    payload: &[&Column],
+) -> Result<(Vec<Column>, Vec<Column>)> {
+    let p = comm.nranks();
+    let n = sk.len();
+    // local argsort (stable — Timsort-family, as in the paper)
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
+    let skey_cols: Vec<Column> = key_cols.iter().map(|c| c.take(&idx)).collect();
+    let spay: Vec<Column> = payload.iter().map(|c| c.take(&idx)).collect();
+
+    if p == 1 {
+        return Ok((skey_cols, spay));
+    }
+    let ssk = sk.take(&idx);
+    let w = ssk.width();
+
+    // regular sampling: p packed sample rows per non-empty rank → root
+    // picks p-1 splitter rows (raw bytes; width is schema-determined, so
+    // every rank slices the broadcast identically)
+    let mut sample_buf = Vec::new();
+    if n > 0 {
+        for s in 0..p {
+            let pos = ((s * n) / p).min(n - 1);
+            sample_buf.extend_from_slice(ssk.row(pos));
+        }
+    }
+    let gathered = comm.gather_bytes(0, sample_buf);
+    let mut splitter_buf = Vec::new();
+    if comm.is_root() {
+        let mut all: Vec<&[u8]> = Vec::new();
+        for buf in &gathered {
+            for chunk in buf.chunks_exact(w) {
+                all.push(chunk);
+            }
+        }
+        all.sort();
+        if !all.is_empty() {
+            for i in 1..p {
+                let pos = ((i * all.len()) / p).min(all.len() - 1);
+                splitter_buf.extend_from_slice(all[pos]);
+            }
+        }
+        // nothing to sort anywhere → broadcast zero splitters; every rank's
+        // (empty) data trivially lands in bucket 0
+    }
+    let splitter_buf = comm.bcast_bytes(0, splitter_buf);
+    let splitters: Vec<&[u8]> = splitter_buf.chunks_exact(w).collect();
+
+    // range partition: dst = #splitters ≤ row (upper_bound via memcmp)
+    let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    let mut start = 0usize;
+    for dst in 0..p {
+        let end = if dst < splitters.len() {
+            start + ssk.partition_le(start, splitters[dst])
+        } else {
+            n
+        };
+        if end > start {
+            let buf = &mut bufs[dst];
+            for c in &skey_cols {
+                encode_column(&c.slice(start, end - start), buf);
+            }
+            for c in &spay {
+                encode_column(&c.slice(start, end - start), buf);
+            }
+        }
+        start = end;
+        if start >= n {
+            break;
+        }
+    }
+    let received = comm.alltoallv_bytes(bufs);
+
+    // collect received runs and merge by one final packed local sort
+    let mut rkeys: Vec<Column> = key_cols
+        .iter()
+        .map(|c| Column::new_empty(c.dtype()))
+        .collect();
+    let mut rpay: Vec<Column> = payload
+        .iter()
+        .map(|c| Column::new_empty(c.dtype()))
+        .collect();
+    for buf in received {
+        if buf.is_empty() {
+            continue;
+        }
+        let mut pos = 0;
+        for oc in rkeys.iter_mut() {
+            let c = decode_column(&buf, &mut pos)?;
+            oc.extend(&c);
+        }
+        for oc in rpay.iter_mut() {
+            let c = decode_column(&buf, &mut pos)?;
+            oc.extend(&c);
+        }
+    }
+    let rrefs: Vec<&Column> = rkeys.iter().collect();
+    let rsk = SortKeys::pack(&rrefs, orders)?.expect("Int64/Bool keys stay packable");
+    let mut idx: Vec<usize> = (0..rsk.len()).collect();
+    idx.sort_by(|&a, &b| rsk.row(a).cmp(rsk.row(b)));
+    let fkeys: Vec<Column> = rkeys.iter().map(|c| c.take(&idx)).collect();
+    let fpay: Vec<Column> = rpay.iter().map(|c| c.take(&idx)).collect();
+    Ok((fkeys, fpay))
+}
+
 /// Sort `(keys, cols)` globally ascending by a single i64 key — the seed
 /// API, kept as a wrapper over [`distributed_sort_keys`].
 pub fn distributed_sort_by_key(
@@ -144,12 +266,9 @@ pub fn distributed_sort_by_key(
     keys: &[i64],
     cols: &[Column],
 ) -> Result<(Vec<i64>, Vec<Column>)> {
-    let (kcols, pay) = distributed_sort_keys(
-        comm,
-        &[Column::I64(keys.to_vec())],
-        &[SortOrder::Asc],
-        cols,
-    )?;
+    let kc = Column::I64(keys.to_vec());
+    let crefs: Vec<&Column> = cols.iter().collect();
+    let (kcols, pay) = distributed_sort_keys(comm, &[&kc], &[SortOrder::Asc], &crefs)?;
     Ok((kcols[0].as_i64().to_vec(), pay))
 }
 
@@ -195,7 +314,7 @@ mod tests {
                 let kb = Column::I64(b[s..s + l].to_vec());
                 let (kcols, _) = distributed_sort_keys(
                     &c,
-                    &[ka, kb],
+                    &[&ka, &kb],
                     &[SortOrder::Desc, SortOrder::Asc],
                     &[],
                 )
@@ -219,12 +338,54 @@ mod tests {
             let (s, l) = block_range(words.len(), 2, c.rank());
             let kc = Column::Str(words[s..s + l].iter().map(|w| w.to_string()).collect());
             let (kcols, _) =
-                distributed_sort_keys(&c, &[kc], &[SortOrder::Asc], &[]).unwrap();
+                distributed_sort_keys(&c, &[&kc], &[SortOrder::Asc], &[]).unwrap();
             kcols[0].as_str_col().to_vec()
         });
         let got: Vec<String> = out.into_iter().flatten().collect();
         let mut expect: Vec<String> = words.iter().map(|w| w.to_string()).collect();
         expect.sort();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn packed_sort_bool_key_and_directions() {
+        // (bool, i64) keys with Desc bool: all `true` rows first, then by id
+        let flags: Vec<bool> = (0..30).map(|i| i % 3 == 0).collect();
+        let ids: Vec<i64> = (0..30).map(|i| (37 * i) % 30).collect();
+        let out = run_spmd(3, |c| {
+            let (s, l) = block_range(flags.len(), 3, c.rank());
+            let kf = Column::Bool(flags[s..s + l].to_vec());
+            let ki = Column::I64(ids[s..s + l].to_vec());
+            let (kcols, _) = distributed_sort_keys(
+                &c,
+                &[&kf, &ki],
+                &[SortOrder::Desc, SortOrder::Asc],
+                &[],
+            )
+            .unwrap();
+            (kcols[0].as_bool().to_vec(), kcols[1].as_i64().to_vec())
+        });
+        let got: Vec<(bool, i64)> = out
+            .iter()
+            .flat_map(|(f, i)| f.iter().zip(i.iter()).map(|(&f, &i)| (f, i)))
+            .collect();
+        let mut expect: Vec<(bool, i64)> =
+            flags.iter().zip(&ids).map(|(&f, &i)| (f, i)).collect();
+        expect.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn packed_sort_extreme_i64_values() {
+        let data = vec![0i64, i64::MAX, i64::MIN, -1, 1, i64::MIN, i64::MAX];
+        let out = run_spmd(2, |c| {
+            let (s, l) = block_range(data.len(), 2, c.rank());
+            let (k, _) = distributed_sort_by_key(&c, &data[s..s + l], &[]).unwrap();
+            k
+        });
+        let got: Vec<i64> = out.into_iter().flatten().collect();
+        let mut expect = data.clone();
+        expect.sort_unstable();
         assert_eq!(got, expect);
     }
 

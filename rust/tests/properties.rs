@@ -9,17 +9,22 @@
 //! * rebalance yields 1D_BLOCK chunk sizes and preserves order;
 //! * sample-sort produces a globally sorted permutation;
 //! * optimizer passes preserve query semantics on randomized plans;
-//! * agg-state merge is associative-commutative (pre-agg soundness).
+//! * agg-state merge is associative-commutative (pre-agg soundness);
+//! * packed composite keys ≡ the KeyVal path on hash routing, equality and
+//!   sort order (incl. i64::MIN/MAX, empty strings, embedded NULs, mixed
+//!   dtypes — see `prop_packed_keys_*` / `prop_sort_keys_*`).
 
 use hiframes::column::Column;
 use hiframes::comm::{block_range, run_spmd};
+use hiframes::datagen::Rng;
 use hiframes::exec::{collect_optimized, ExecOptions};
 use hiframes::expr::{col, lit, AggExpr, AggFn, AggState};
 use hiframes::ops;
+use hiframes::ops::keys::{cmp_key_rows, key_rows, PackedKeys, SortKeys};
 use hiframes::passes::{optimize, PassOptions};
 use hiframes::prelude::*;
 use hiframes::prop::{forall, gen};
-use hiframes::types::DType;
+use hiframes::types::{DType, SortOrder};
 
 fn workers_for(seed: &[i64]) -> usize {
     1 + (seed.len() % 4)
@@ -445,6 +450,156 @@ fn prop_agg_state_merge_commutative_associative() {
             }
             if !close(&ab, &ba) {
                 return Err(format!("{f:?} not commutative"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One random key column with adversarial values: i64 extremes, empty
+/// strings and strings with embedded NUL bytes (`dtype`: 0 = I64, 1 = Bool,
+/// 2 = Str).
+fn gen_key_col(rng: &mut Rng, dtype: u8, n: usize) -> Column {
+    match dtype {
+        0 => {
+            let pool = [i64::MIN, i64::MAX, i64::MIN + 1, -1, 0, 1];
+            Column::I64(
+                (0..n)
+                    .map(|_| {
+                        if rng.bool(0.3) {
+                            *rng.choose(&pool)
+                        } else {
+                            rng.i64_range(-4, 4)
+                        }
+                    })
+                    .collect(),
+            )
+        }
+        1 => Column::Bool((0..n).map(|_| rng.bool(0.5)).collect()),
+        _ => {
+            let pool = ["", "a", "b", "ab", "aa", "\0", "a\0", "a\0b"];
+            Column::Str((0..n).map(|_| rng.choose(&pool).to_string()).collect())
+        }
+    }
+}
+
+#[test]
+fn prop_packed_keys_match_keyval_path() {
+    forall(
+        "packed-keys-agree",
+        |rng| {
+            let n = rng.usize(50);
+            let ncols = 1 + rng.usize(3);
+            let dtypes: Vec<u8> = (0..ncols).map(|_| rng.usize(3) as u8).collect();
+            let cols: Vec<Column> = dtypes.iter().map(|&d| gen_key_col(rng, d, n)).collect();
+            cols
+        },
+        |cols| {
+            let refs: Vec<&Column> = cols.iter().collect();
+            let packed = PackedKeys::pack(&refs).map_err(|e| e.to_string())?;
+            let rows = key_rows(&refs).map_err(|e| e.to_string())?;
+            if packed.len() != rows.len() {
+                return Err(format!("len {} vs {}", packed.len(), rows.len()));
+            }
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    let eq = packed.eq_rows(i, &packed, j);
+                    if eq != (rows[i] == rows[j]) {
+                        return Err(format!("equality mismatch at ({i},{j})"));
+                    }
+                    if packed.cmp_rows(i, &packed, j) != cmp_key_rows(&rows[i], &rows[j], &[]) {
+                        return Err(format!("sort-order mismatch at ({i},{j})"));
+                    }
+                    // hash routing must be a function of the tuple value
+                    if eq && packed.owner(i, 5) != packed.owner(j, 5) {
+                        return Err(format!("routing mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_keys_cross_instance_agreement() {
+    // the two sides of a join pack independently; equality, order and
+    // owner-routing must still agree across the instances
+    forall(
+        "packed-keys-cross",
+        |rng| {
+            let ncols = 1 + rng.usize(2);
+            let dtypes: Vec<u8> = (0..ncols).map(|_| rng.usize(3) as u8).collect();
+            let nl = rng.usize(30);
+            let nr = rng.usize(30);
+            let lcols: Vec<Column> =
+                dtypes.iter().map(|&d| gen_key_col(rng, d, nl)).collect();
+            let rcols: Vec<Column> =
+                dtypes.iter().map(|&d| gen_key_col(rng, d, nr)).collect();
+            (lcols, rcols)
+        },
+        |(lcols, rcols)| {
+            let lrefs: Vec<&Column> = lcols.iter().collect();
+            let rrefs: Vec<&Column> = rcols.iter().collect();
+            let lp = PackedKeys::pack(&lrefs).map_err(|e| e.to_string())?;
+            let rp = PackedKeys::pack(&rrefs).map_err(|e| e.to_string())?;
+            let lrows = key_rows(&lrefs).map_err(|e| e.to_string())?;
+            let rrows = key_rows(&rrefs).map_err(|e| e.to_string())?;
+            for i in 0..lrows.len() {
+                for j in 0..rrows.len() {
+                    let eq = lp.eq_rows(i, &rp, j);
+                    if eq != (lrows[i] == rrows[j]) {
+                        return Err(format!("cross equality mismatch at ({i},{j})"));
+                    }
+                    if eq && lp.owner(i, 7) != rp.owner(j, 7) {
+                        return Err(format!("cross routing mismatch at ({i},{j})"));
+                    }
+                    if lp.cmp_rows(i, &rp, j) != cmp_key_rows(&lrows[i], &rrows[j], &[]) {
+                        return Err(format!("cross order mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_keys_match_cmp_key_rows() {
+    forall(
+        "sort-keys-agree",
+        |rng| {
+            let n = rng.usize(40);
+            let ncols = 1 + rng.usize(3);
+            let cols: Vec<Column> = (0..ncols)
+                .map(|_| {
+                    let d = rng.usize(2) as u8; // I64 | Bool — the packed sort layouts
+                    gen_key_col(rng, d, n)
+                })
+                .collect();
+            let orders: Vec<SortOrder> = (0..ncols)
+                .map(|_| {
+                    if rng.bool(0.5) {
+                        SortOrder::Desc
+                    } else {
+                        SortOrder::Asc
+                    }
+                })
+                .collect();
+            (cols, orders)
+        },
+        |(cols, orders)| {
+            let refs: Vec<&Column> = cols.iter().collect();
+            let sk = SortKeys::pack(&refs, orders)
+                .map_err(|e| e.to_string())?
+                .ok_or("Int64/Bool keys must take the packed sort path")?;
+            let rows = key_rows(&refs).map_err(|e| e.to_string())?;
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    if sk.row(i).cmp(sk.row(j)) != cmp_key_rows(&rows[i], &rows[j], orders) {
+                        return Err(format!("direction-aware order mismatch at ({i},{j})"));
+                    }
+                }
             }
             Ok(())
         },
