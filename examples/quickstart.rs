@@ -78,7 +78,8 @@ fn main() -> anyhow::Result<()> {
 
     // ---- composite-key relational API --------------------------------------
     // LEFT join against a sparse dimension: unmatched rows survive with
-    // NaN-promoted columns instead of disappearing
+    // their native dtype — :score stays Int64, missing rows are NULL under
+    // the column's validity mask (no Float64/NaN promotion)
     let sparse = hf.table(
         "sparse",
         Table::from_pairs(vec![
@@ -89,7 +90,25 @@ fn main() -> anyhow::Result<()> {
     let left = df1
         .join_on(&sparse, &[("id", "sid")], JoinType::Left)
         .sort_by("id");
-    println!("left join (NaN = missing dimension row):\n{}", left.collect()?);
+    let left_t = left.collect()?;
+    println!("left join (null = missing dimension row):\n{left_t}");
+    println!(
+        ":score kept dtype {} with {} nulls",
+        left_t.schema().dtype_of("score").unwrap(),
+        left_t.null_count("score"),
+    );
+
+    // ---- null handling: is_null / fill_null / drop_null --------------------
+    // fill_null repairs the holes in place (column becomes non-nullable,
+    // dtype unchanged) …
+    let filled = left.fill_null("score", 0i64).sort_by("id").collect()?;
+    println!("fill_null(score, 0):\n{filled}");
+    // … drop_null keeps only rows with a real dimension entry …
+    let dropped = left.drop_null(&["score"]).sort_by("id").collect()?;
+    println!("drop_null([score]) rows: {}", dropped.num_rows());
+    // … and is_null exposes the missingness itself as a Bool feature
+    let probed = left.is_null("score").sort_by("id").collect()?;
+    println!("is_null(score):\n{}", probed.project(&["id", "score_is_null"])?);
 
     // multi-key group-by via the fluent builder, then a multi-key ORDER BY
     // (count descending, key ascending)

@@ -158,5 +158,59 @@ fn main() {
             group_packed(&PackedKeys::pack(&[&k1, &k2]).unwrap()).num_groups()
         });
         kp.finish("fig8a_keypack");
+
+        // ------------- null-ratio micro-bench (validity masks) -------------
+        // A left join whose right side covers only part of the key space,
+        // followed by a null-skipping aggregate over the null-introduced
+        // column: the whole nullable pipeline (flagged packed keys, masked
+        // shuffle wire, null-skipping reductions) at 0% / 10% / 50% nulls.
+        // 0% is the no-null baseline — it measures the overhead the
+        // subsystem adds when no mask exists (should be ~zero: fully valid
+        // columns stay mask-free end to end).
+        let nrows = (join_rows / 2).max(5_000);
+        let mut nulls = BenchTable::new(
+            &format!("Fig 8a addendum: null-ratio join+aggregate ({nrows} rows, {workers} workers)"),
+            "hiframes",
+        );
+        for (pct, ratio) in [(0usize, 0.0f64), (10, 0.1), (50, 0.5)] {
+            let ids: Vec<i64> = (0..nrows as i64).collect();
+            let l = Table::from_pairs(vec![
+                ("id", Column::I64(ids.clone())),
+                ("g", Column::I64(ids.iter().map(|i| i % 64).collect())),
+            ])
+            .unwrap();
+            // right side skips `ratio` of the keys → that fraction of left
+            // rows gets a null w after the left join
+            let keep: Vec<i64> = ids
+                .iter()
+                .copied()
+                .filter(|&i| (i as f64 / nrows as f64) >= ratio)
+                .collect();
+            let r = Table::from_pairs(vec![
+                ("rid", Column::I64(keep.clone())),
+                ("w", Column::I64(keep.iter().map(|&i| i * 3).collect())),
+            ])
+            .unwrap();
+            let dfl = hf.table("l", l);
+            let dfr = hf.table("r", r);
+            nulls.run(
+                "hiframes",
+                &format!("join-agg-{pct}"),
+                nrows,
+                1,
+                reps,
+                || {
+                    dfl.join_on(&dfr, &[("id", "rid")], JoinType::Left)
+                        .group_by(&["g"])
+                        .agg("n", AggFn::Count, col("w"))
+                        .agg("s", AggFn::Sum, col("w"))
+                        .agg("m", AggFn::Mean, col("w"))
+                        .build()
+                        .count()
+                        .unwrap()
+                },
+            );
+        }
+        nulls.finish("fig8a_nulls");
     });
 }

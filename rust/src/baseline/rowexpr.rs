@@ -29,6 +29,8 @@ pub enum RowExpr {
     Not(Box<RowExpr>),
     Math(MathFn, Box<RowExpr>),
     BoolToInt(Box<RowExpr>),
+    IsNull(Box<RowExpr>),
+    FillNull(Box<RowExpr>, Value),
     Udf(RowUdf, Vec<RowExpr>),
 }
 
@@ -69,6 +71,10 @@ pub fn compile_row_expr(expr: &Expr, schema: &Schema) -> Result<RowExpr> {
         Expr::Not(a) => RowExpr::Not(Box::new(compile_row_expr(a, schema)?)),
         Expr::Math(f, a) => RowExpr::Math(*f, Box::new(compile_row_expr(a, schema)?)),
         Expr::BoolToInt(a) => RowExpr::BoolToInt(Box::new(compile_row_expr(a, schema)?)),
+        Expr::IsNull(a) => RowExpr::IsNull(Box::new(compile_row_expr(a, schema)?)),
+        Expr::FillNull(a, v) => {
+            RowExpr::FillNull(Box::new(compile_row_expr(a, schema)?), v.clone())
+        }
         Expr::Udf(u, args) => RowExpr::Udf(
             RowUdf {
                 name: u.name.clone(),
@@ -81,13 +87,19 @@ pub fn compile_row_expr(expr: &Expr, schema: &Schema) -> Result<RowExpr> {
     })
 }
 
-/// Evaluate over one row.
+/// Evaluate over one row. Typed nulls propagate through every element-wise
+/// operator (null in ⇒ null out, mirroring the columnar validity AND);
+/// `IS NULL` / `fill_null` stop the propagation.
 pub fn eval_row(e: &RowExpr, row: &Row) -> Result<Value> {
     Ok(match e {
         RowExpr::Col(i) => row[*i].clone(),
         RowExpr::Lit(v) => v.clone(),
         RowExpr::Arith(a, op, b) => {
             let (x, y) = (eval_row(a, row)?, eval_row(b, row)?);
+            if x.is_null() || y.is_null() {
+                let dt = x.dtype().promote(y.dtype()).unwrap_or_else(|| x.dtype());
+                return Ok(Value::Null(dt));
+            }
             match (&x, &y) {
                 (Value::I64(xi), Value::I64(yi)) if *op != ArithOp::Div => {
                     let r = match op {
@@ -114,6 +126,9 @@ pub fn eval_row(e: &RowExpr, row: &Row) -> Result<Value> {
         }
         RowExpr::Cmp(a, op, b) => {
             let (x, y) = (eval_row(a, row)?, eval_row(b, row)?);
+            if x.is_null() || y.is_null() {
+                return Ok(Value::Null(crate::types::DType::Bool));
+            }
             let r = match (&x, &y) {
                 (Value::Str(xs), Value::Str(ys)) => match op {
                     CmpOp::Lt => xs < ys,
@@ -138,18 +153,52 @@ pub fn eval_row(e: &RowExpr, row: &Row) -> Result<Value> {
             };
             Value::Bool(r)
         }
-        RowExpr::And(a, b) => Value::Bool(
-            eval_row(a, row)?.as_bool().context("and lhs")?
-                && eval_row(b, row)?.as_bool().context("and rhs")?,
-        ),
-        RowExpr::Or(a, b) => Value::Bool(
-            eval_row(a, row)?.as_bool().context("or lhs")?
-                || eval_row(b, row)?.as_bool().context("or rhs")?,
-        ),
-        RowExpr::Not(a) => Value::Bool(!eval_row(a, row)?.as_bool().context("not")?),
+        RowExpr::And(a, b) => {
+            // SQL three-valued logic: FALSE AND NULL = FALSE, TRUE AND NULL
+            // = NULL (mirrors the columnar Kleene validity)
+            let (x, y) = (eval_row(a, row)?, eval_row(b, row)?);
+            if x.as_bool() == Some(false) || y.as_bool() == Some(false) {
+                return Ok(Value::Bool(false));
+            }
+            if x.is_null() || y.is_null() {
+                return Ok(Value::Null(crate::types::DType::Bool));
+            }
+            Value::Bool(x.as_bool().context("and lhs")? && y.as_bool().context("and rhs")?)
+        }
+        RowExpr::Or(a, b) => {
+            // SQL three-valued logic: TRUE OR NULL = TRUE, FALSE OR NULL =
+            // NULL (mirrors the columnar Kleene validity)
+            let (x, y) = (eval_row(a, row)?, eval_row(b, row)?);
+            if x.as_bool() == Some(true) || y.as_bool() == Some(true) {
+                return Ok(Value::Bool(true));
+            }
+            if x.is_null() || y.is_null() {
+                return Ok(Value::Null(crate::types::DType::Bool));
+            }
+            Value::Bool(x.as_bool().context("or lhs")? || y.as_bool().context("or rhs")?)
+        }
+        RowExpr::Not(a) => {
+            let x = eval_row(a, row)?;
+            if x.is_null() {
+                return Ok(Value::Null(crate::types::DType::Bool));
+            }
+            Value::Bool(!x.as_bool().context("not")?)
+        }
         RowExpr::Math(f, a) => {
-            let x = eval_row(a, row)?.as_f64().context("math arg")?;
-            Value::F64(match f {
+            let v = eval_row(a, row)?;
+            if v.is_null() {
+                // Abs/Neg keep Int64, everything else widens to Float64 —
+                // the columnar Math typing rule
+                let dt = match (f, v.dtype()) {
+                    (MathFn::Abs | MathFn::Neg, crate::types::DType::I64) => {
+                        crate::types::DType::I64
+                    }
+                    _ => crate::types::DType::F64,
+                };
+                return Ok(Value::Null(dt));
+            }
+            let x = v.as_f64().context("math arg")?;
+            let r = match f {
                 MathFn::Log => x.ln(),
                 MathFn::Exp => x.exp(),
                 MathFn::Sqrt => x.sqrt(),
@@ -157,16 +206,53 @@ pub fn eval_row(e: &RowExpr, row: &Row) -> Result<Value> {
                 MathFn::Cos => x.cos(),
                 MathFn::Abs => x.abs(),
                 MathFn::Neg => -x,
-            })
+            };
+            // match the columnar Math output dtype for Abs/Neg over Int64
+            match (f, &v) {
+                (MathFn::Abs | MathFn::Neg, Value::I64(_)) => Value::I64(r as i64),
+                _ => Value::F64(r),
+            }
         }
         RowExpr::BoolToInt(a) => {
-            Value::I64(eval_row(a, row)?.as_bool().context("bool_to_int")? as i64)
+            let v = eval_row(a, row)?;
+            if v.is_null() {
+                return Ok(Value::Null(crate::types::DType::I64));
+            }
+            Value::I64(v.as_bool().context("bool_to_int")? as i64)
+        }
+        RowExpr::IsNull(a) => Value::Bool(eval_row(a, row)?.is_null()),
+        RowExpr::FillNull(a, fill) => {
+            let v = eval_row(a, row)?;
+            match v {
+                // coerce the fill literal to the operand's dtype, like the
+                // columnar fill_null kernel
+                Value::Null(dt) => match dt {
+                    crate::types::DType::I64 => {
+                        Value::I64(fill.as_i64().context("fill_null int")?)
+                    }
+                    crate::types::DType::F64 => {
+                        Value::F64(fill.as_f64().context("fill_null float")?)
+                    }
+                    crate::types::DType::Bool => {
+                        Value::Bool(fill.as_bool().context("fill_null bool")?)
+                    }
+                    crate::types::DType::Str => match fill {
+                        Value::Str(s) => Value::Str(s.clone()),
+                        other => anyhow::bail!("fill_null: cannot fill String with {other:?}"),
+                    },
+                },
+                other => other,
+            }
         }
         RowExpr::Udf(u, args) => {
             // per-row argument buffer allocation: the measured UDF overhead
             let mut argv = Vec::with_capacity(args.len());
             for a in args {
-                argv.push(eval_row(a, row)?.as_f64().context("udf arg")?);
+                let v = eval_row(a, row)?;
+                if v.is_null() {
+                    return Ok(Value::Null(crate::types::DType::F64));
+                }
+                argv.push(v.as_f64().context("udf arg")?);
             }
             Value::F64((u.func)(&argv))
         }

@@ -6,20 +6,21 @@
 //! ([`filter_udf_rows`], [`rolling_apply`]) walk rows through boxed
 //! closures — reproducing the Pandas SMA-vs-WMA gap of Fig. 8b.
 
-use crate::column::Column;
-use crate::expr::{eval, AggExpr, Expr};
+use crate::column::{Column, NullableColumn, ValidityMask};
+use crate::expr::{eval_mask, eval_nullable, AggExpr, Expr};
 use crate::ops::aggregate::{local_hash_aggregate_keys, AggSpec};
 use crate::ops::join::local_join_pairs;
-use crate::ops::keys::key_rows;
+use crate::ops::keys::key_rows_nullable;
 use crate::ops::stencil::stencil_serial;
 use crate::table::{Schema, Table};
 use crate::types::JoinType;
 use anyhow::{bail, Context, Result};
 
-/// Vectorized filter (`df[df[:id] .< 100, :]`).
+/// Vectorized filter (`df[df[:id] .< 100, :]`). Null predicate lanes drop
+/// their row (SQL `WHERE` semantics) and column masks follow the filter.
 pub fn filter(table: &Table, predicate: &Expr) -> Result<Table> {
-    let mask = eval(predicate, table)?;
-    Ok(table.filter(mask.as_bool()))
+    let keep = eval_mask(predicate, table)?;
+    Ok(table.filter(&keep))
 }
 
 /// Row-lambda filter — the "any expression evaluating to Boolean" Pandas
@@ -52,9 +53,9 @@ pub fn join(left: &Table, right: &Table, lk: &str, rk: &str) -> Result<Table> {
 
 /// Composite-key hash join with join-type semantics (Pandas
 /// `merge(on=[...], how=...)`). Mirrors the HiFrames engine exactly: output
-/// key columns keep the left names and dtypes; the null-introduced side is
-/// promoted per [`crate::types::DType::null_joined`] (NaN / "" holes);
-/// Semi/Anti keep the left schema only.
+/// key columns keep the left names and dtypes; the null-introduced side
+/// keeps its native dtype and gains a validity mask; null keys match null
+/// keys; Semi/Anti keep the left schema only.
 pub fn join_on(
     left: &Table,
     right: &Table,
@@ -76,6 +77,10 @@ pub fn join_on(
                 .with_context(|| format!("join: right key {rk}"))
         })
         .collect::<Result<_>>()?;
+    let lkey_masks: Vec<Option<&ValidityMask>> =
+        on.iter().map(|(lk, _)| left.mask(lk)).collect();
+    let rkey_masks: Vec<Option<&ValidityMask>> =
+        on.iter().map(|(_, rk)| right.mask(rk)).collect();
     for (lc, rc) in lkey_cols.iter().zip(&rkey_cols) {
         if lc.dtype() != rc.dtype() {
             bail!(
@@ -88,8 +93,8 @@ pub fn join_on(
             bail!("join key must be Int64/Bool/String, got {}", lc.dtype());
         }
     }
-    let lrows = key_rows(&lkey_cols)?;
-    let rrows = key_rows(&rkey_cols)?;
+    let lrows = key_rows_nullable(&lkey_cols, &lkey_masks)?;
+    let rrows = key_rows_nullable(&rkey_cols, &rkey_masks)?;
     let pairs = local_join_pairs(&lrows, &rrows, how);
 
     let lidx: Vec<Option<usize>> = pairs.iter().map(|&(lo, _)| lo).collect();
@@ -106,49 +111,71 @@ pub fn join_on(
         ridx.iter().map(|o| o.expect("right index")).collect()
     };
 
+    // static nullable flags — the same rule as the IR's join typing, so
+    // engine-agreement tests can compare schemas exactly even when a
+    // nullable column happens to carry no nulls
     let mut fields: Vec<(String, crate::types::DType)> = Vec::new();
+    let mut nullable: Vec<bool> = Vec::new();
     let mut cols: Vec<Column> = Vec::new();
-    for (n, t) in left.schema().fields() {
+    let mut masks: Vec<Option<ValidityMask>> = Vec::new();
+    let mut push = |n: &str, nl: bool, c: NullableColumn| {
+        fields.push((n.to_string(), c.dtype()));
+        nullable.push(nl);
+        cols.push(c.values);
+        masks.push(c.validity);
+    };
+    for (i, (n, t)) in left.schema().fields().iter().enumerate() {
         if let Some(j) = on.iter().position(|(lk, _)| *lk == n.as_str()) {
-            // key slot: value from whichever side is present
+            // key slot: value + validity from whichever side is present
             let mut kc = Column::new_empty(*t);
+            let mut km = ValidityMask::new_null(0);
             for &(lo, ro) in &pairs {
                 let v = match (lo, ro) {
-                    (Some(i), _) => lkey_cols[j].get(i),
-                    (None, Some(r)) => rkey_cols[j].get(r),
+                    (Some(i), _) => kcell(lkey_cols[j], lkey_masks[j], i),
+                    (None, Some(r)) => kcell(rkey_cols[j], rkey_masks[j], r),
                     (None, None) => unreachable!("join pair with no sides"),
                 };
-                kc.push(&v);
+                crate::column::push_nullable(&mut kc, &mut km, &v);
             }
-            fields.push((n.clone(), *t));
-            cols.push(kc);
+            let nl = left.schema().nullable_at(i)
+                || right.schema().nullable_of(on[j].1).unwrap_or(false);
+            push(n, nl, NullableColumn::new(kc, Some(km)));
         } else {
             let src = left.column(n).unwrap();
+            let m = left.mask(n);
             let c = if how.nullable_left() {
-                src.take_nullable(&lidx)
+                src.take_opt_masked(m, &lidx)
             } else {
-                src.take(&li)
+                NullableColumn::new(src.take(&li), m.map(|m| m.take(&li)))
             };
-            fields.push((n.clone(), c.dtype()));
-            cols.push(c);
+            push(n, left.schema().nullable_at(i) || how.nullable_left(), c);
         }
     }
     if how.keeps_right_columns() {
-        for (n, _) in right.schema().fields() {
+        for (i, (n, _)) in right.schema().fields().iter().enumerate() {
             if on.iter().any(|(_, rk)| *rk == n.as_str()) {
                 continue;
             }
             let src = right.column(n).unwrap();
+            let m = right.mask(n);
             let c = if how.nullable_right() {
-                src.take_nullable(&ridx)
+                src.take_opt_masked(m, &ridx)
             } else {
-                src.take(&ri)
+                NullableColumn::new(src.take(&ri), m.map(|m| m.take(&ri)))
             };
-            fields.push((n.clone(), c.dtype()));
-            cols.push(c);
+            push(n, right.schema().nullable_at(i) || how.nullable_right(), c);
         }
     }
-    Table::new(Schema::new(fields), cols)
+    Table::new_masked(Schema::new_nullable(fields, nullable), cols, masks)
+}
+
+/// One key cell as a typed value (null when the mask bit is clear).
+fn kcell(col: &Column, mask: Option<&ValidityMask>, i: usize) -> crate::types::Value {
+    if mask.map_or(true, |m| m.get(i)) {
+        col.get(i)
+    } else {
+        crate::types::Value::Null(col.dtype())
+    }
 }
 
 /// Group-by aggregation (Pandas `groupby().agg`) — thin single-key wrapper
@@ -157,32 +184,55 @@ pub fn aggregate(table: &Table, key: &str, aggs: &[AggExpr]) -> Result<Table> {
     aggregate_by(table, &[key], aggs)
 }
 
-/// Composite-key group-by (Pandas `groupby([k1, k2]).agg`).
+/// Composite-key group-by (Pandas `groupby([k1, k2]).agg`). Null keys form
+/// their own group; null inputs are skipped by every reduction.
 pub fn aggregate_by(table: &Table, keys: &[&str], aggs: &[AggExpr]) -> Result<Table> {
-    let key_cols: Vec<&Column> = keys
+    let key_cols: Vec<(&Column, Option<&ValidityMask>)> = keys
         .iter()
         .map(|k| {
             table
                 .column(k)
+                .map(|c| (c, table.mask(k)))
                 .with_context(|| format!("aggregate: key {k}"))
         })
         .collect::<Result<_>>()?;
-    let mut expr_cols = Vec::with_capacity(aggs.len());
+    let mut expr_cols: Vec<(Column, Option<ValidityMask>)> = Vec::with_capacity(aggs.len());
     let mut specs = Vec::with_capacity(aggs.len());
     for a in aggs {
-        let c = eval(&a.input, table)?;
+        let (c, m) = eval_nullable(&a.input, table)?;
         specs.push(AggSpec {
             func: a.func,
             input_dtype: c.dtype(),
         });
-        expr_cols.push(c);
+        expr_cols.push((c, m));
     }
-    let (key_out, out_cols) = local_hash_aggregate_keys(&key_cols, &expr_cols, &specs)?;
-    let mut pairs: Vec<(&str, Column)> = keys.iter().copied().zip(key_out).collect();
-    for (a, c) in aggs.iter().zip(out_cols) {
-        pairs.push((a.out.as_str(), c));
+    let expr_refs: Vec<(&Column, Option<&ValidityMask>)> = expr_cols
+        .iter()
+        .map(|(c, m)| (c, m.as_ref()))
+        .collect();
+    let (key_out, out_cols) = local_hash_aggregate_keys(&key_cols, &expr_refs, &specs)?;
+    // static nullable flags, mirroring the IR's aggregate typing
+    let mut nullable: Vec<bool> = keys
+        .iter()
+        .map(|k| table.schema().nullable_of(k).unwrap_or(false))
+        .collect();
+    for a in aggs {
+        nullable.push(a.output_nullable(table.schema())?);
     }
-    Table::from_pairs(pairs)
+    let mut fields = Vec::new();
+    let mut cols = Vec::new();
+    let mut masks = Vec::new();
+    for (name, c) in keys
+        .iter()
+        .map(|k| k.to_string())
+        .chain(aggs.iter().map(|a| a.out.clone()))
+        .zip(key_out.into_iter().chain(out_cols))
+    {
+        fields.push((name, c.dtype()));
+        cols.push(c.values);
+        masks.push(c.validity);
+    }
+    Table::new_masked(Schema::new_nullable(fields, nullable), cols, masks)
 }
 
 /// Vertical concat.
@@ -325,11 +375,14 @@ mod tests {
         .unwrap();
         let j = join_on(&t(), &r, &[("id", "cid")], JoinType::Left).unwrap();
         assert_eq!(j.num_rows(), 4); // all left rows survive
-        let w = j.column("w").unwrap().as_f64(); // promoted
-        // id column: [1, 2, 1, 3] → w = [10, NaN, 10, 30]
-        assert_eq!(w[0], 10.0);
-        assert!(w[1].is_nan());
-        assert_eq!(w[3], 30.0);
+        // dtype preserved; the unmatched row is masked null
+        let w = j.column("w").unwrap().as_i64();
+        assert_eq!(j.schema().nullable_of("w"), Some(true));
+        // id column: [1, 2, 1, 3] → w = [10, null, 10, 30]
+        assert_eq!(w[0], 10);
+        assert!(!j.mask("w").unwrap().get(1));
+        assert_eq!(w[1], 0, "null lane holds the default");
+        assert_eq!(w[3], 30);
         // multi-key aggregate: group by (id, x>1) pairs
         let t2 = Table::from_pairs(vec![
             ("k1", Column::I64(vec![1, 1, 2])),

@@ -150,10 +150,12 @@ impl SparkLike {
         })
     }
 
-    /// Add/replace a column from an expression (`withColumn`).
+    /// Add/replace a column from an expression (`withColumn`). Nullability
+    /// follows the expression (null operands propagate through row eval).
     pub fn with_column(&self, rdd: &Rdd, name: &str, expr: &Expr) -> Result<Rdd> {
         let compiled = compile_row_expr(expr, &rdd.schema)?;
         let dt = expr.dtype(&rdd.schema)?;
+        let nl = expr.nullable(&rdd.schema)?;
         let replace_at = rdd.schema.index_of(name);
         let parts = self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
             rows.into_iter()
@@ -168,12 +170,19 @@ impl SparkLike {
                 .collect::<Vec<Row>>()
         });
         let mut fields = rdd.schema.fields().to_vec();
+        let mut nullable = rdd.schema.nullable_flags().to_vec();
         match replace_at {
-            Some(i) => fields[i].1 = dt,
-            None => fields.push((name.to_string(), dt)),
+            Some(i) => {
+                fields[i].1 = dt;
+                nullable[i] = nl;
+            }
+            None => {
+                fields.push((name.to_string(), dt));
+                nullable.push(nl);
+            }
         }
         Ok(Rdd {
-            schema: Schema::new(fields),
+            schema: Schema::new_nullable(fields, nullable),
             parts,
         })
     }
@@ -198,8 +207,9 @@ impl SparkLike {
             .iter()
             .map(|&i| rdd.schema.fields()[i].clone())
             .collect();
+        let nullable = idx.iter().map(|&i| rdd.schema.nullable_at(i)).collect();
         Ok(Rdd {
-            schema: Schema::new(fields),
+            schema: Schema::new_nullable(fields, nullable),
             parts,
         })
     }
@@ -288,30 +298,34 @@ impl SparkLike {
                 bail!("join key must be Int64/Bool/String, got {lt}");
             }
         }
-        // output schema (mirrors the IR typing rule)
+        // output schema (mirrors the IR typing rule): dtypes preserved,
+        // null-introduced sides become nullable
         let mut fields: Vec<(String, DType)> = Vec::new();
-        for (n, t) in left.schema.fields() {
-            let is_key = on.iter().any(|(lk, _)| *lk == n.as_str());
-            let t = if !is_key && how.nullable_left() {
-                t.null_joined()
+        let mut nullable: Vec<bool> = Vec::new();
+        for (i, (n, t)) in left.schema.fields().iter().enumerate() {
+            fields.push((n.clone(), *t));
+            if let Some((_, rk)) = on.iter().find(|(lk, _)| *lk == n.as_str()) {
+                nullable.push(
+                    left.schema.nullable_at(i)
+                        || right.schema.nullable_of(rk).unwrap_or(false),
+                );
             } else {
-                *t
-            };
-            fields.push((n.clone(), t));
+                nullable.push(left.schema.nullable_at(i) || how.nullable_left());
+            }
         }
         if how.keeps_right_columns() {
-            for (n, t) in right.schema.fields() {
+            for (i, (n, t)) in right.schema.fields().iter().enumerate() {
                 if on.iter().any(|(_, rk)| *rk == n.as_str()) {
                     continue;
                 }
                 if left.schema.dtype_of(n).is_some() {
                     bail!("join: column {n} on both sides");
                 }
-                let t = if how.nullable_right() { t.null_joined() } else { *t };
-                fields.push((n.clone(), t));
+                fields.push((n.clone(), *t));
+                nullable.push(right.schema.nullable_at(i) || how.nullable_right());
             }
         }
-        let schema = Schema::new(fields);
+        let schema = Schema::new_nullable(fields, nullable);
 
         let li2 = li.clone();
         let keyed_l: Vec<Vec<(i64, Row)>> =
@@ -351,8 +365,8 @@ impl SparkLike {
                             row.push(v);
                         } else if how.nullable_left() {
                             row.push(match lo {
-                                Some(i) => null_promote_cell(&lrows[i][ci]),
-                                None => null_cell(*t),
+                                Some(i) => lrows[i][ci].clone(),
+                                None => Value::Null(*t),
                             });
                         } else {
                             row.push(lrows[lo.expect("left row")][ci].clone());
@@ -365,8 +379,8 @@ impl SparkLike {
                             }
                             if how.nullable_right() {
                                 row.push(match ro {
-                                    Some(j) => null_promote_cell(&rrows[j][ci]),
-                                    None => null_cell(*t),
+                                    Some(j) => rrows[j][ci].clone(),
+                                    None => Value::Null(*t),
                                 });
                             } else {
                                 row.push(rrows[ro.expect("right row")][ci].clone());
@@ -425,6 +439,19 @@ impl SparkLike {
         let compiled = Arc::new(compiled);
         let c2 = compiled.clone();
         let ki2 = ki.clone();
+        let key_dts: Vec<DType> = ki.iter().map(|&i| rdd.schema.fields()[i].1).collect();
+        let key_dts2 = key_dts.clone();
+        // (output dtype, may-be-null) per aggregate — an all-null group's
+        // order/moment statistics come back as typed nulls
+        let out_meta: Vec<(DType, bool)> = aggs
+            .iter()
+            .map(|a| {
+                Ok((
+                    a.output_dtype(&rdd.schema)?,
+                    a.output_nullable(&rdd.schema)?,
+                ))
+            })
+            .collect::<Result<_>>()?;
         // map side: partial states per key tuple (the combiner)
         let combined: Vec<Vec<(i64, Row)>> =
             self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
@@ -450,7 +477,11 @@ impl SparkLike {
                             s.encode(&mut buf);
                         }
                         let hash = hash_key_row(&k) as i64;
-                        let mut row: Row = k.iter().map(|v| v.to_value()).collect();
+                        let mut row: Row = k
+                            .iter()
+                            .zip(&key_dts2)
+                            .map(|(v, dt)| v.to_value_typed(*dt))
+                            .collect();
                         row.push(Value::Str(unsafe_bytes_to_str(buf)));
                         (hash, row)
                     })
@@ -491,24 +522,35 @@ impl SparkLike {
             krows
                 .into_iter()
                 .map(|k| {
-                    let mut row: Row = k.iter().map(|v| v.to_value()).collect();
-                    for s in &table[&k] {
-                        row.push(s.finish());
+                    let mut row: Row = k
+                        .iter()
+                        .zip(&key_dts)
+                        .map(|(v, dt)| v.to_value_typed(*dt))
+                        .collect();
+                    for (s, (dt, nullable)) in table[&k].iter().zip(&out_meta) {
+                        if *nullable && s.is_empty() {
+                            row.push(Value::Null(*dt));
+                        } else {
+                            row.push(s.finish());
+                        }
                     }
                     row
                 })
                 .collect()
         });
         let mut fields: Vec<(String, DType)> = Vec::new();
+        let mut nullable: Vec<bool> = Vec::new();
         for k in keys {
             let kt = rdd.schema.dtype_of(k).unwrap();
             fields.push((k.to_string(), kt));
+            nullable.push(rdd.schema.nullable_of(k).unwrap_or(false));
         }
         for a in aggs {
             fields.push((a.out.clone(), a.output_dtype(&rdd.schema)?));
+            nullable.push(a.output_nullable(&rdd.schema)?);
         }
         Ok(Rdd {
-            schema: Schema::new(fields),
+            schema: Schema::new_nullable(fields, nullable),
             parts,
         })
     }
@@ -571,16 +613,19 @@ impl SparkLike {
         }
         let mut fields = rdd.schema.fields().to_vec();
         fields.push((out.to_string(), DType::F64));
+        let mut nullable = rdd.schema.nullable_flags().to_vec();
+        nullable.push(false);
         // output stays on ONE partition (Spark leaves it that way too)
         let mut parts: Vec<Vec<Row>> = (0..self.partitions).map(|_| Vec::new()).collect();
         parts[0] = rows;
         Ok(Rdd {
-            schema: Schema::new(fields),
+            schema: Schema::new_nullable(fields, nullable),
             parts,
         })
     }
 
-    /// Materialize an RDD back on the driver.
+    /// Materialize an RDD back on the driver. Null cells become cleared
+    /// validity bits over dtype-default values (canonical columnar form).
     pub fn collect(&self, rdd: &Rdd) -> Result<Table> {
         let mut cols: Vec<Column> = rdd
             .schema
@@ -588,14 +633,24 @@ impl SparkLike {
             .iter()
             .map(|(_, t)| Column::new_empty(*t))
             .collect();
+        let mut masks: Vec<crate::column::ValidityMask> = rdd
+            .schema
+            .fields()
+            .iter()
+            .map(|_| crate::column::ValidityMask::new_null(0))
+            .collect();
         for part in &rdd.parts {
             for row in part {
-                for (c, v) in cols.iter_mut().zip(row) {
-                    c.push(v);
+                for ((c, m), v) in cols.iter_mut().zip(masks.iter_mut()).zip(row) {
+                    crate::column::push_nullable(c, m, v);
                 }
             }
         }
-        Table::new(rdd.schema.clone(), cols)
+        Table::new_masked(
+            rdd.schema.clone(),
+            cols,
+            masks.into_iter().map(Some).collect(),
+        )
     }
 }
 
@@ -654,25 +709,7 @@ fn keyed_by_hash(rows: Vec<Row>, key_idx: &[usize]) -> Vec<(i64, Row)> {
         .collect()
 }
 
-/// Null-side promotion for a present cell of a nullable join side
-/// (I64/Bool → F64, mirroring [`DType::null_joined`]).
-fn null_promote_cell(v: &Value) -> Value {
-    match v {
-        Value::I64(x) => Value::F64(*x as f64),
-        Value::Bool(b) => Value::F64(*b as i64 as f64),
-        other => other.clone(),
-    }
-}
-
-/// The missing value of a null-introduced column.
-fn null_cell(dt: DType) -> Value {
-    match dt {
-        DType::Str => Value::Str(String::new()),
-        _ => Value::F64(f64::NAN),
-    }
-}
-
-// row wire format: key + cell-tagged values
+// row wire format: key + cell-tagged values (tag 4 = typed null)
 fn encode_row(key: i64, row: &Row, buf: &mut Vec<u8>) {
     buf.extend_from_slice(&key.to_le_bytes());
     buf.extend_from_slice(&(row.len() as u16).to_le_bytes());
@@ -694,6 +731,15 @@ fn encode_row(key: i64, row: &Row, buf: &mut Vec<u8>) {
                 buf.push(3);
                 buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
                 buf.extend_from_slice(s.as_bytes());
+            }
+            Value::Null(dt) => {
+                buf.push(4);
+                buf.push(match dt {
+                    DType::I64 => 0,
+                    DType::F64 => 1,
+                    DType::Bool => 2,
+                    DType::Str => 3,
+                });
             }
         }
     }
@@ -735,6 +781,17 @@ fn decode_rows(buf: &[u8], out: &mut Vec<(i64, Row)>) {
                         String::from_utf8_lossy(&buf[pos..pos + len]).into_owned(),
                     ));
                     pos += len;
+                }
+                4 => {
+                    let dt = match buf[pos] {
+                        0 => DType::I64,
+                        1 => DType::F64,
+                        2 => DType::Bool,
+                        3 => DType::Str,
+                        d => panic!("bad null dtype tag {d}"),
+                    };
+                    pos += 1;
+                    row.push(Value::Null(dt));
                 }
                 t => panic!("bad row tag {t}"),
             }
@@ -903,13 +960,17 @@ mod tests {
                 JoinType::Left,
             )
             .unwrap();
-        assert_eq!(j.schema.dtype_of("w"), Some(DType::F64)); // promoted
+        // dtype preserved, column marked nullable
+        assert_eq!(j.schema.dtype_of("w"), Some(DType::I64));
+        assert_eq!(j.schema.nullable_of("w"), Some(true));
         let t = eng.collect(&j).unwrap().sorted_by("id").unwrap();
         assert_eq!(t.num_rows(), 4);
-        let w = t.column("w").unwrap().as_f64();
-        assert!(w[0].is_nan() && w[2].is_nan());
-        assert_eq!(w[1], 20.0);
-        assert_eq!(w[3], 40.0);
+        let w = t.column("w").unwrap().as_i64();
+        let m = t.mask("w").unwrap();
+        assert!(!m.get(0) && !m.get(2), "unmatched ids 1 and 3 are null");
+        assert_eq!((w[0], w[2]), (0, 0), "null lanes hold the default");
+        assert_eq!(w[1], 20);
+        assert_eq!(w[3], 40);
         // multi-key aggregate over (id % 2, id): 4 singleton groups in
         // lexicographic tuple order
         let keyed = eng

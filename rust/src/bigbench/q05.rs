@@ -52,8 +52,10 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
     let user_cat = clicks_cat.aggregate("wcs_user_sk", aggs);
     let with_cust = user_cat.join(&customer, "wcs_user_sk", "c_customer_sk");
     // demographics is a *sparse* dimension: a LEFT join keeps users whose
-    // demo row is missing (their cd_* features become NaN and the derived
-    // 0/1 features fall back to 0 — NaN comparisons are false)
+    // demo row is missing. The cd_* columns stay Int64 and become nullable
+    // (validity masks); the derived 0/1 features use explicit IS NULL
+    // semantics — fill_null(0) — so a missing demo row contributes 0, which
+    // is what the old NaN-comparison fallback silently did.
     let with_demo = with_cust.join_on(
         &demo,
         &[("c_current_cdemo_sk", "cd_demo_sk")],
@@ -62,11 +64,15 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
     with_demo
         .with_column(
             "college_education",
-            crate::expr::Expr::BoolToInt(Box::new(col("cd_education").ge(lit(3i64)))),
+            crate::expr::Expr::BoolToInt(Box::new(
+                col("cd_education").fill_null(0i64).ge(lit(3i64)),
+            )),
         )
         .with_column(
             "male",
-            crate::expr::Expr::BoolToInt(Box::new(col("cd_gender").eq_(lit(1i64)))),
+            crate::expr::Expr::BoolToInt(Box::new(
+                col("cd_gender").fill_null(0i64).eq_(lit(1i64)),
+            )),
         )
         .with_column(
             "label",
@@ -140,12 +146,16 @@ pub fn sparklike_relational(eng: &SparkLike, db: &BbTables) -> Result<Rdd> {
     let a = eng.with_column(
         &with_demo,
         "college_education",
-        &crate::expr::Expr::BoolToInt(Box::new(col("cd_education").ge(lit(3i64)))),
+        &crate::expr::Expr::BoolToInt(Box::new(
+            col("cd_education").fill_null(0i64).ge(lit(3i64)),
+        )),
     )?;
     let b = eng.with_column(
         &a,
         "male",
-        &crate::expr::Expr::BoolToInt(Box::new(col("cd_gender").eq_(lit(1i64)))),
+        &crate::expr::Expr::BoolToInt(Box::new(
+            col("cd_gender").fill_null(0i64).eq_(lit(1i64)),
+        )),
     )?;
     eng.with_column(
         &b,
@@ -212,8 +222,9 @@ mod tests {
     #[test]
     fn engines_agree_on_q05_with_sparse_demographics() {
         // drop half the demographics rows: the LEFT join must keep every
-        // user, NaN-filling the missing cd_* features identically on both
-        // engines (the derived 0/1 features then agree exactly)
+        // user, null-masking the missing cd_* features identically on both
+        // engines (the derived 0/1 features then agree exactly via
+        // fill_null(0))
         let mut db = generate(&GenOptions {
             scale_factor: 0.15,
             ..Default::default()
@@ -222,10 +233,8 @@ mod tests {
         db.customer_demographics = db.customer_demographics.slice(0, full / 2);
 
         let hf = HiFrames::with_workers(3);
-        let ours = hiframes_relational(&hf, &db)
-            .sort_by("wcs_user_sk")
-            .collect()
-            .unwrap();
+        let frame = hiframes_relational(&hf, &db);
+        let ours = frame.sort_by("wcs_user_sk").collect().unwrap();
         let eng = SparkLike::new(2, 3);
         let theirs = eng
             .collect(&sparklike_relational(&eng, &db).unwrap())
@@ -237,16 +246,39 @@ mod tests {
         for c in ["wcs_user_sk", "label", "college_education", "male"] {
             assert_eq!(ours.column(c).unwrap(), theirs.column(c).unwrap(), "{c}");
         }
-        // at least one user lost their demo row → their education is 0 even
-        // though some demo rows would have said otherwise
-        let missing = ours
-            .column("cd_education")
+        // the cd_* features keep Int64 dtype and mark missing rows in their
+        // validity masks — no NaN promotion anywhere
+        assert_eq!(
+            ours.schema().dtype_of("cd_education"),
+            Some(crate::types::DType::I64)
+        );
+        let missing = ours.null_count("cd_education");
+        assert!(missing > 0, "expected null-masked demographics");
+        // engines agree on the null positions too (masks compare in ==)
+        assert_eq!(
+            ours.mask("cd_education"),
+            theirs.mask("cd_education"),
+            "null positions must agree"
+        );
+        // real IS NULL filtering: dropping users without demographics
+        // removes exactly the masked rows
+        let kept = frame
+            .drop_null(&["cd_education"])
+            .sort_by("wcs_user_sk")
+            .collect()
+            .unwrap();
+        assert_eq!(kept.num_rows(), ours.num_rows() - missing);
+        assert_eq!(kept.null_count("cd_education"), 0);
+        // and is_null exposes the same row set as a Bool feature
+        let flagged = frame.is_null("cd_education").collect().unwrap();
+        let nulls = flagged
+            .column("cd_education_is_null")
             .unwrap()
-            .as_f64()
+            .as_bool()
             .iter()
-            .filter(|v| v.is_nan())
+            .filter(|&&b| b)
             .count();
-        assert!(missing > 0, "expected NaN-filled demographics");
+        assert_eq!(nulls, missing);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! its cost is *measured*, not simulated — eliminating redundant copies here
 //! was a §Perf item.
 
-use super::Column;
+use super::{Column, ValidityMask};
 use anyhow::{bail, Context, Result};
 
 const TAG_I64: u8 = 0;
@@ -155,6 +155,69 @@ pub fn encode_column_take(col: &Column, idx: &[usize], buf: &mut Vec<u8>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Nullable wire format: masks travel with their columns.
+//
+//   u8  mask flag            (0 = no mask, 1 = mask follows)
+//   [mask: u64 row count + packed validity words]
+//   column                   (the plain format above)
+//
+// Shuffles, sorts, rebalance and the driver gather all use this framing so
+// null positions survive every redistribution.
+// ---------------------------------------------------------------------------
+
+/// Append the encoding of `(col, mask)` to `buf`.
+pub fn encode_nullable_column(col: &Column, mask: Option<&ValidityMask>, buf: &mut Vec<u8>) {
+    match mask {
+        Some(m) => {
+            debug_assert_eq!(m.len(), col.len(), "codec: mask length mismatch");
+            buf.push(1);
+            m.encode(buf);
+        }
+        None => buf.push(0),
+    }
+    encode_column(col, buf);
+}
+
+/// Decode one nullable column starting at `*pos`; advances `*pos` past it.
+pub fn decode_nullable_column(
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<(Column, Option<ValidityMask>)> {
+    let flag = *buf.get(*pos).context("codec: truncated (mask flag)")?;
+    *pos += 1;
+    let mask = match flag {
+        0 => None,
+        1 => Some(ValidityMask::decode(buf, pos)?),
+        f => bail!("codec: bad mask flag {f}"),
+    };
+    let col = decode_column(buf, pos)?;
+    if let Some(m) = &mask {
+        if m.len() != col.len() {
+            bail!("codec: mask length {} != column length {}", m.len(), col.len());
+        }
+    }
+    Ok((col, mask))
+}
+
+/// Encode only the rows at `idx` of `(col, mask)` — the nullable shuffle
+/// pack path, fused with the gather like [`encode_column_take`].
+pub fn encode_nullable_column_take(
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    idx: &[usize],
+    buf: &mut Vec<u8>,
+) {
+    match mask {
+        Some(m) => {
+            buf.push(1);
+            m.take(idx).encode(buf);
+        }
+        None => buf.push(0),
+    }
+    encode_column_take(col, idx, buf);
+}
+
 fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
     Ok(u64::from_le_bytes(read_8(buf, pos)?))
 }
@@ -244,6 +307,41 @@ mod tests {
         buf.truncate(buf.len() - 1);
         let mut pos = 0;
         assert!(decode_column(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn nullable_roundtrip_and_take() {
+        let col = Column::I64(vec![1, 0, 3, 0, 5]);
+        let mask = ValidityMask::from_bools(&[true, false, true, false, true]);
+        // with mask
+        let mut buf = Vec::new();
+        encode_nullable_column(&col, Some(&mask), &mut buf);
+        let mut pos = 0;
+        let (c, m) = decode_nullable_column(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(c, col);
+        assert_eq!(m, Some(mask.clone()));
+        // without mask
+        let mut buf = Vec::new();
+        encode_nullable_column(&col, None, &mut buf);
+        let mut pos = 0;
+        let (c, m) = decode_nullable_column(&buf, &mut pos).unwrap();
+        assert_eq!(c, col);
+        assert!(m.is_none());
+        // take path equals take-then-encode
+        let idx = vec![4usize, 1, 1, 0];
+        let mut a = Vec::new();
+        encode_nullable_column_take(&col, Some(&mask), &idx, &mut a);
+        let mut b = Vec::new();
+        encode_nullable_column(&col.take(&idx), Some(&mask.take(&idx)), &mut b);
+        assert_eq!(a, b);
+        // truncation anywhere errors, never panics
+        let mut full = Vec::new();
+        encode_nullable_column(&col, Some(&mask), &mut full);
+        for cut in 0..full.len() {
+            let mut pos = 0;
+            assert!(decode_nullable_column(&full[..cut], &mut pos).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

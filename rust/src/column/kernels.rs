@@ -7,8 +7,9 @@
 //! evaluator dispatches here so the hot loops stay monomorphic and
 //! auto-vectorizable.
 
-use super::Column;
-use crate::types::DType;
+use super::{Column, ValidityMask};
+use crate::types::{DType, Value};
+use anyhow::{bail, Result};
 
 /// Binary arithmetic operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -302,6 +303,67 @@ pub fn arith_result_dtype(a: DType, b: DType) -> Option<DType> {
     a.promote(b)
 }
 
+// ----- null kernels (validity-mask aware) ----------------------------------
+
+/// `IS NULL` as a Bool column: true where the mask bit is clear. A missing
+/// mask means no row is null.
+pub fn is_null_column(mask: Option<&ValidityMask>, len: usize) -> Column {
+    match mask {
+        Some(m) => {
+            debug_assert_eq!(m.len(), len);
+            Column::Bool((0..len).map(|i| !m.get(i)).collect())
+        }
+        None => Column::Bool(vec![false; len]),
+    }
+}
+
+/// `fill_null(col, v)`: replace null lanes with `v`, producing a fully
+/// valid column. The fill value must unify with the column dtype
+/// (I64 fills may be written as integer-valued floats and vice versa).
+pub fn fill_null(col: &Column, mask: Option<&ValidityMask>, v: &Value) -> Result<Column> {
+    let Some(m) = mask else {
+        return Ok(col.clone());
+    };
+    debug_assert_eq!(m.len(), col.len());
+    Ok(match (col, v) {
+        (Column::I64(xs), _) => {
+            let Some(f) = v.as_i64() else {
+                bail!("fill_null: cannot fill Int64 column with {v:?}");
+            };
+            Column::I64(
+                xs.iter()
+                    .enumerate()
+                    .map(|(i, &x)| if m.get(i) { x } else { f })
+                    .collect(),
+            )
+        }
+        (Column::F64(xs), _) => {
+            let Some(f) = v.as_f64() else {
+                bail!("fill_null: cannot fill Float64 column with {v:?}");
+            };
+            Column::F64(
+                xs.iter()
+                    .enumerate()
+                    .map(|(i, &x)| if m.get(i) { x } else { f })
+                    .collect(),
+            )
+        }
+        (Column::Bool(xs), Value::Bool(f)) => Column::Bool(
+            xs.iter()
+                .enumerate()
+                .map(|(i, &x)| if m.get(i) { x } else { *f })
+                .collect(),
+        ),
+        (Column::Str(xs), Value::Str(f)) => Column::Str(
+            xs.iter()
+                .enumerate()
+                .map(|(i, x)| if m.get(i) { x.clone() } else { f.clone() })
+                .collect(),
+        ),
+        (c, v) => bail!("fill_null: cannot fill {} column with {v:?}", c.dtype()),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,5 +473,29 @@ mod tests {
     fn bool_cast() {
         let m = Column::Bool(vec![true, false, true]);
         assert_eq!(bool_to_i64(&m).as_i64(), &[1, 0, 1]);
+    }
+
+    #[test]
+    fn null_kernels() {
+        let mask = ValidityMask::from_bools(&[true, false, true]);
+        assert_eq!(
+            is_null_column(Some(&mask), 3).as_bool(),
+            &[false, true, false]
+        );
+        assert_eq!(is_null_column(None, 2).as_bool(), &[false, false]);
+        // fill_null preserves dtype and fills only invalid lanes
+        let c = Column::I64(vec![7, 0, 9]);
+        let f = fill_null(&c, Some(&mask), &Value::I64(-1)).unwrap();
+        assert_eq!(f.as_i64(), &[7, -1, 9]);
+        // integer-valued fills unify across numeric dtypes
+        let f = fill_null(&c, Some(&mask), &Value::F64(3.0)).unwrap();
+        assert_eq!(f.as_i64(), &[7, 3, 9]);
+        let s = Column::Str(vec!["a".into(), "".into(), "c".into()]);
+        let f = fill_null(&s, Some(&mask), &Value::Str("?".into())).unwrap();
+        assert_eq!(f.as_str_col(), &["a".to_string(), "?".into(), "c".into()]);
+        // dtype mismatch errors
+        assert!(fill_null(&s, Some(&mask), &Value::I64(1)).is_err());
+        // no mask → clone
+        assert_eq!(fill_null(&c, None, &Value::I64(0)).unwrap(), c);
     }
 }

@@ -5,9 +5,17 @@
 
 mod codec;
 mod kernels;
+mod validity;
 
-pub use codec::{decode_column, encode_column, encode_column_take, encoded_size};
+pub use codec::{
+    decode_column, decode_nullable_column, encode_column, encode_column_take,
+    encode_nullable_column, encode_nullable_column_take, encoded_size,
+};
 pub use kernels::*;
+pub use validity::{
+    combine_masks, extend_opt_mask, normalize_mask, push_nullable, scrub_invalid,
+    NullableColumn, ValidityMask,
+};
 
 use crate::types::{DType, Value};
 use std::fmt;
@@ -80,6 +88,9 @@ impl Column {
             (Column::F64(c), Value::F64(x)) => c.push(*x),
             (Column::Bool(c), Value::Bool(x)) => c.push(*x),
             (Column::Str(c), Value::Str(x)) => c.push(x.clone()),
+            (_, Value::Null(_)) => {
+                panic!("push: Value::Null needs a validity mask — use push_nullable")
+            }
             (c, v) => panic!("push: dtype mismatch {:?} <- {:?}", c.dtype(), v),
         }
     }
@@ -96,26 +107,21 @@ impl Column {
     }
 
     /// Gather with optional indices — the null-introducing take used by
-    /// Left/Right/Outer join output assembly. `None` entries become the
-    /// missing value of the *null-joined* dtype ([`DType::null_joined`]):
-    /// numerics/booleans are promoted to Float64 with NaN holes, strings
-    /// keep their dtype with "" holes. The output dtype is promoted even
-    /// when every index is present, so schemas stay statically determined.
-    pub fn take_nullable(&self, idx: &[Option<usize>]) -> Column {
+    /// Left/Right/Outer join output assembly. The dtype is *preserved*:
+    /// `None` entries hold the dtype default and the companion
+    /// [`ValidityMask`] (built by [`Column::take_opt_masked`] or
+    /// [`ValidityMask::take_opt`]) marks them null.
+    pub fn take_opt(&self, idx: &[Option<usize>]) -> Column {
         match self {
-            Column::I64(v) => Column::F64(
-                idx.iter()
-                    .map(|o| o.map(|i| v[i] as f64).unwrap_or(f64::NAN))
-                    .collect(),
+            Column::I64(v) => Column::I64(
+                idx.iter().map(|o| o.map(|i| v[i]).unwrap_or(0)).collect(),
             ),
             Column::F64(v) => Column::F64(
-                idx.iter()
-                    .map(|o| o.map(|i| v[i]).unwrap_or(f64::NAN))
-                    .collect(),
+                idx.iter().map(|o| o.map(|i| v[i]).unwrap_or(0.0)).collect(),
             ),
-            Column::Bool(v) => Column::F64(
+            Column::Bool(v) => Column::Bool(
                 idx.iter()
-                    .map(|o| o.map(|i| v[i] as i64 as f64).unwrap_or(f64::NAN))
+                    .map(|o| o.map(|i| v[i]).unwrap_or(false))
                     .collect(),
             ),
             Column::Str(v) => Column::Str(
@@ -124,6 +130,30 @@ impl Column {
                     .collect(),
             ),
         }
+    }
+
+    /// Null-introducing gather of a nullable column: dtype-preserving values
+    /// plus the combined validity (`None` index ⇒ null; present index keeps
+    /// the source row's validity).
+    pub fn take_opt_masked(
+        &self,
+        mask: Option<&ValidityMask>,
+        idx: &[Option<usize>],
+    ) -> NullableColumn {
+        let values = self.take_opt(idx);
+        let validity = match mask {
+            Some(m) => m.take_opt(idx),
+            None => {
+                let mut v = ValidityMask::new_null(idx.len());
+                for (o, oi) in idx.iter().enumerate() {
+                    if oi.is_some() {
+                        v.set(o, true);
+                    }
+                }
+                v
+            }
+        };
+        NullableColumn::new(values, Some(validity))
     }
 
     /// Keep only rows where `mask` is true — the filter kernel
@@ -272,22 +302,27 @@ mod tests {
     }
 
     #[test]
-    fn take_nullable_promotes_and_fills() {
+    fn take_opt_preserves_dtype_and_masks_holes() {
         let c = Column::I64(vec![10, 20, 30]);
-        let out = c.take_nullable(&[Some(2), None, Some(0)]);
-        let v = out.as_f64();
-        assert_eq!(v[0], 30.0);
-        assert!(v[1].is_nan());
-        assert_eq!(v[2], 10.0);
-        // promoted dtype even with no holes
-        assert_eq!(c.take_nullable(&[Some(0)]).dtype(), DType::F64);
+        let out = c.take_opt_masked(None, &[Some(2), None, Some(0)]);
+        assert_eq!(out.dtype(), DType::I64); // no F64 promotion
+        assert_eq!(out.values.as_i64(), &[30, 0, 10]);
+        assert_eq!(out.validity.as_ref().unwrap().to_bools(), vec![true, false, true]);
+        // no holes → mask normalizes away, dtype still native
+        let full = c.take_opt_masked(None, &[Some(0), Some(1)]);
+        assert_eq!(full.dtype(), DType::I64);
+        assert!(full.validity.is_none());
         let b = Column::Bool(vec![true, false]);
-        let v = b.take_nullable(&[Some(0), None]);
-        assert_eq!(v.as_f64()[0], 1.0);
-        assert!(v.as_f64()[1].is_nan());
+        let v = b.take_opt_masked(None, &[Some(0), None]);
+        assert_eq!(v.values.as_bool(), &[true, false]);
+        assert!(!v.is_valid(1));
         let s = Column::Str(vec!["a".into()]);
-        let v = s.take_nullable(&[None, Some(0)]);
+        let v = s.take_opt(&[None, Some(0)]);
         assert_eq!(v.as_str_col(), &["".to_string(), "a".into()]);
+        // source validity propagates through a present index
+        let src_mask = ValidityMask::from_bools(&[false, true, true]);
+        let g = c.take_opt_masked(Some(&src_mask), &[Some(0), Some(1), None]);
+        assert_eq!(g.validity.unwrap().to_bools(), vec![false, true, false]);
     }
 
     #[test]

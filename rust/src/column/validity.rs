@@ -1,0 +1,576 @@
+//! Validity masks — the null model.
+//!
+//! A [`ValidityMask`] is a packed bitmap over one column's rows: bit = 1
+//! means the row holds a real value, bit = 0 means NULL. This is the
+//! Arrow-style representation that lets outer joins keep their native
+//! dtypes (Int64 stays Int64 with a mask) instead of the former stopgap of
+//! promoting to Float64 with NaN holes.
+//!
+//! Canonical form, relied on by the engine-agreement tests:
+//! * a column that is entirely valid carries **no** mask (`None`), never an
+//!   all-ones mask — [`normalize_mask`] enforces this at table boundaries;
+//! * the *values* under invalid bits are always the dtype default
+//!   (0 / 0.0 / false / "") — [`scrub_invalid`] enforces this after
+//!   kernels run over null-filled lanes.
+//!
+//! Bits beyond `len` in the last word are always zero, so word-wise
+//! equality, popcount and bitwise combination need no tail masking.
+
+use super::Column;
+use crate::types::Value;
+use anyhow::{bail, Result};
+
+/// Packed validity bitmap: bit i set ⇔ row i is valid (non-null).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidityMask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+#[inline]
+fn words_for(len: usize) -> usize {
+    (len + 63) / 64
+}
+
+impl ValidityMask {
+    /// All rows valid.
+    pub fn new_valid(len: usize) -> ValidityMask {
+        let mut m = ValidityMask {
+            words: vec![u64::MAX; words_for(len)],
+            len,
+        };
+        m.clear_tail();
+        m
+    }
+
+    /// All rows null.
+    pub fn new_null(len: usize) -> ValidityMask {
+        ValidityMask {
+            words: vec![0u64; words_for(len)],
+            len,
+        }
+    }
+
+    /// Build from a bool slice (`true` = valid).
+    pub fn from_bools(bits: &[bool]) -> ValidityMask {
+        let mut m = ValidityMask::new_null(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                m.set(i, true);
+            }
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Is row `i` valid?
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Set row `i`'s validity.
+    #[inline]
+    pub fn set(&mut self, i: usize, valid: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if valid {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, valid: bool) {
+        let i = self.len;
+        self.len += 1;
+        if self.words.len() < words_for(self.len) {
+            self.words.push(0);
+        }
+        if valid {
+            self.set(i, true);
+        }
+    }
+
+    /// Number of valid rows (popcount).
+    pub fn count_valid(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of null rows.
+    pub fn count_null(&self) -> usize {
+        self.len - self.count_valid()
+    }
+
+    /// Is every row valid? (A canonical table never stores such a mask —
+    /// see [`normalize_mask`].)
+    pub fn all_valid(&self) -> bool {
+        self.count_valid() == self.len
+    }
+
+    /// Bitwise AND (null if either is null) — the null-propagation rule of
+    /// element-wise kernels.
+    pub fn and(&self, other: &ValidityMask) -> ValidityMask {
+        assert_eq!(self.len, other.len, "validity and: length mismatch");
+        ValidityMask {
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .map(|(a, b)| a & b)
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// Bitwise OR (valid if either is valid).
+    pub fn or(&self, other: &ValidityMask) -> ValidityMask {
+        assert_eq!(self.len, other.len, "validity or: length mismatch");
+        ValidityMask {
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .map(|(a, b)| a | b)
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// Append all of `other` (vertical concatenation).
+    pub fn extend(&mut self, other: &ValidityMask) {
+        for i in 0..other.len {
+            self.push(other.get(i));
+        }
+    }
+
+    /// Append `n` valid rows.
+    pub fn extend_valid(&mut self, n: usize) {
+        for _ in 0..n {
+            self.push(true);
+        }
+    }
+
+    /// Gather rows at `idx`.
+    pub fn take(&self, idx: &[usize]) -> ValidityMask {
+        let mut m = ValidityMask::new_null(idx.len());
+        for (o, &i) in idx.iter().enumerate() {
+            if self.get(i) {
+                m.set(o, true);
+            }
+        }
+        m
+    }
+
+    /// Gather with optional indices: `None` entries become null — the
+    /// null-introducing gather of Left/Right/Outer join output assembly.
+    pub fn take_opt(&self, idx: &[Option<usize>]) -> ValidityMask {
+        let mut m = ValidityMask::new_null(idx.len());
+        for (o, oi) in idx.iter().enumerate() {
+            if let Some(i) = oi {
+                if self.get(*i) {
+                    m.set(o, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Keep rows where `keep` is true.
+    pub fn filter(&self, keep: &[bool]) -> ValidityMask {
+        assert_eq!(keep.len(), self.len, "validity filter: length mismatch");
+        let mut m = ValidityMask::new_null(0);
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                m.push(self.get(i));
+            }
+        }
+        m
+    }
+
+    /// Contiguous sub-range `[start, start+len)`.
+    pub fn slice(&self, start: usize, len: usize) -> ValidityMask {
+        let mut m = ValidityMask::new_null(len);
+        for o in 0..len {
+            if self.get(start + o) {
+                m.set(o, true);
+            }
+        }
+        m
+    }
+
+    /// Expand to one bool per row (`true` = valid).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Approximate heap size in bytes.
+    pub fn byte_size(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Wire-encode: u64 row count + packed words, little-endian.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&(self.len as u64).to_le_bytes());
+        for w in &self.words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    /// Decode a mask written by [`ValidityMask::encode`].
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<ValidityMask> {
+        if *pos + 8 > buf.len() {
+            bail!("validity decode: truncated length");
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[*pos..*pos + 8]);
+        *pos += 8;
+        let len = u64::from_le_bytes(b) as usize;
+        let nw = words_for(len);
+        if *pos + nw * 8 > buf.len() {
+            bail!("validity decode: truncated words");
+        }
+        let mut words = Vec::with_capacity(nw);
+        for _ in 0..nw {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&buf[*pos..*pos + 8]);
+            *pos += 8;
+            words.push(u64::from_le_bytes(b));
+        }
+        let mut m = ValidityMask { words, len };
+        m.clear_tail(); // defensive: canonical tail bits
+        Ok(m)
+    }
+
+    /// Exact encoded byte size.
+    pub fn encoded_size(&self) -> usize {
+        8 + self.words.len() * 8
+    }
+
+    fn clear_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+/// Canonicalize: an all-valid (or empty-presence) mask becomes `None`.
+pub fn normalize_mask(mask: Option<ValidityMask>) -> Option<ValidityMask> {
+    match mask {
+        Some(m) if m.all_valid() => None,
+        other => other,
+    }
+}
+
+/// AND-combine two optional masks of equal length (`None` = all valid) —
+/// the null-propagation rule for binary kernels.
+pub fn combine_masks(
+    a: Option<&ValidityMask>,
+    b: Option<&ValidityMask>,
+) -> Option<ValidityMask> {
+    match (a, b) {
+        (None, None) => None,
+        (Some(m), None) | (None, Some(m)) => Some(m.clone()),
+        (Some(x), Some(y)) => Some(x.and(y)),
+    }
+}
+
+/// Append `incoming` (over `incoming_len` rows) to `acc` (over `acc_len`
+/// rows), materializing an all-valid prefix/suffix only when one side has a
+/// mask — the column-concatenation rule for shuffles and gathers.
+pub fn extend_opt_mask(
+    acc: &mut Option<ValidityMask>,
+    acc_len: usize,
+    incoming: Option<&ValidityMask>,
+    incoming_len: usize,
+) {
+    match (acc.as_mut(), incoming) {
+        (None, None) => {}
+        (Some(a), Some(b)) => a.extend(b),
+        (Some(a), None) => a.extend_valid(incoming_len),
+        (None, Some(b)) => {
+            let mut m = ValidityMask::new_valid(acc_len);
+            m.extend(b);
+            *acc = Some(m);
+        }
+    }
+}
+
+/// Overwrite the values under invalid bits with the dtype default, putting
+/// the column in canonical form (engines must agree byte-for-byte on the
+/// values of null lanes).
+pub fn scrub_invalid(col: &mut Column, mask: &ValidityMask) {
+    assert_eq!(col.len(), mask.len(), "scrub: length mismatch");
+    match col {
+        Column::I64(v) => {
+            for (i, x) in v.iter_mut().enumerate() {
+                if !mask.get(i) {
+                    *x = 0;
+                }
+            }
+        }
+        Column::F64(v) => {
+            for (i, x) in v.iter_mut().enumerate() {
+                if !mask.get(i) {
+                    *x = 0.0;
+                }
+            }
+        }
+        Column::Bool(v) => {
+            for (i, x) in v.iter_mut().enumerate() {
+                if !mask.get(i) {
+                    *x = false;
+                }
+            }
+        }
+        Column::Str(v) => {
+            for (i, x) in v.iter_mut().enumerate() {
+                if !mask.get(i) {
+                    x.clear();
+                }
+            }
+        }
+    }
+}
+
+/// A column plus its optional validity mask — the unit the relational
+/// operators exchange once nulls exist. `validity: None` means every row is
+/// valid (the canonical form for non-nullable data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NullableColumn {
+    pub values: Column,
+    pub validity: Option<ValidityMask>,
+}
+
+impl NullableColumn {
+    /// Wrap a fully-valid column.
+    pub fn from_column(values: Column) -> NullableColumn {
+        NullableColumn {
+            values,
+            validity: None,
+        }
+    }
+
+    /// Wrap with a mask (normalized: all-valid masks are dropped).
+    pub fn new(values: Column, validity: Option<ValidityMask>) -> NullableColumn {
+        if let Some(m) = &validity {
+            assert_eq!(values.len(), m.len(), "nullable column: length mismatch");
+        }
+        NullableColumn {
+            values,
+            validity: normalize_mask(validity),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn dtype(&self) -> crate::types::DType {
+        self.values.dtype()
+    }
+
+    /// Is row `i` valid?
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity.as_ref().map_or(true, |m| m.get(i))
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity.as_ref().map_or(0, |m| m.count_null())
+    }
+
+    /// Row `i` as a typed value ([`Value::Null`] when invalid).
+    pub fn get(&self, i: usize) -> Value {
+        if self.is_valid(i) {
+            self.values.get(i)
+        } else {
+            Value::Null(self.values.dtype())
+        }
+    }
+
+    /// Borrowed `(values, mask)` view — the ops-layer argument shape.
+    pub fn as_masked(&self) -> (&Column, Option<&ValidityMask>) {
+        (&self.values, self.validity.as_ref())
+    }
+}
+
+/// Push a possibly-null row value: nulls push the dtype default into the
+/// column and clear the mask bit (the row-engine → columnar boundary).
+pub fn push_nullable(col: &mut Column, mask: &mut ValidityMask, v: &Value) {
+    match v {
+        Value::Null(dt) => {
+            debug_assert_eq!(*dt, col.dtype(), "push_nullable: dtype mismatch");
+            col.push(&dt.default_value());
+            mask.push(false);
+        }
+        other => {
+            col.push(other);
+            mask.push(true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    #[test]
+    fn set_get_count() {
+        let mut m = ValidityMask::new_valid(70);
+        assert_eq!(m.count_valid(), 70);
+        assert!(m.all_valid());
+        m.set(0, false);
+        m.set(69, false);
+        assert!(!m.get(0) && !m.get(69) && m.get(1));
+        assert_eq!(m.count_null(), 2);
+        assert!(!m.all_valid());
+    }
+
+    #[test]
+    fn push_and_extend_across_word_boundary() {
+        let mut m = ValidityMask::new_null(0);
+        for i in 0..130 {
+            m.push(i % 3 == 0);
+        }
+        assert_eq!(m.len(), 130);
+        assert_eq!(m.count_valid(), (0..130).filter(|i| i % 3 == 0).count());
+        let mut a = ValidityMask::from_bools(&[true, false]);
+        a.extend(&m);
+        assert_eq!(a.len(), 132);
+        assert!(a.get(0) && !a.get(1) && a.get(2));
+    }
+
+    #[test]
+    fn bitwise_and_or() {
+        let a = ValidityMask::from_bools(&[true, true, false, false]);
+        let b = ValidityMask::from_bools(&[true, false, true, false]);
+        assert_eq!(a.and(&b).to_bools(), vec![true, false, false, false]);
+        assert_eq!(a.or(&b).to_bools(), vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn gather_filter_slice() {
+        let m = ValidityMask::from_bools(&[true, false, true, false, true]);
+        assert_eq!(m.take(&[4, 1, 0]).to_bools(), vec![true, false, true]);
+        assert_eq!(
+            m.take_opt(&[Some(0), None, Some(1)]).to_bools(),
+            vec![true, false, false]
+        );
+        assert_eq!(
+            m.filter(&[true, true, false, false, true]).to_bools(),
+            vec![true, false, true]
+        );
+        assert_eq!(m.slice(1, 3).to_bools(), vec![false, true, false]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for n in [0usize, 1, 63, 64, 65, 200] {
+            let m = ValidityMask::from_bools(
+                &(0..n).map(|i| i % 7 != 0).collect::<Vec<_>>(),
+            );
+            let mut buf = Vec::new();
+            m.encode(&mut buf);
+            assert_eq!(buf.len(), m.encoded_size());
+            let mut pos = 0;
+            let back = ValidityMask::decode(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len());
+            assert_eq!(back, m, "n={n}");
+        }
+        // truncated buffers error
+        let m = ValidityMask::new_valid(100);
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        for cut in [0, 4, 9, buf.len() - 1] {
+            let mut pos = 0;
+            assert!(ValidityMask::decode(&buf[..cut], &mut pos).is_err());
+        }
+    }
+
+    #[test]
+    fn normalize_and_combine() {
+        assert!(normalize_mask(Some(ValidityMask::new_valid(10))).is_none());
+        let m = ValidityMask::from_bools(&[true, false]);
+        assert!(normalize_mask(Some(m.clone())).is_some());
+        assert!(combine_masks(None, None).is_none());
+        assert_eq!(combine_masks(Some(&m), None), Some(m.clone()));
+        let n = ValidityMask::from_bools(&[false, true]);
+        assert_eq!(
+            combine_masks(Some(&m), Some(&n)).unwrap().to_bools(),
+            vec![false, false]
+        );
+    }
+
+    #[test]
+    fn extend_opt_mask_materializes_lazily() {
+        let mut acc = None;
+        extend_opt_mask(&mut acc, 0, None, 3);
+        assert!(acc.is_none());
+        let inc = ValidityMask::from_bools(&[false, true]);
+        extend_opt_mask(&mut acc, 3, Some(&inc), 2);
+        let got = acc.clone().unwrap();
+        assert_eq!(got.to_bools(), vec![true, true, true, false, true]);
+        extend_opt_mask(&mut acc, 5, None, 1);
+        assert_eq!(acc.unwrap().to_bools(), vec![true, true, true, false, true, true]);
+    }
+
+    #[test]
+    fn scrub_writes_defaults() {
+        let mask = ValidityMask::from_bools(&[true, false, true]);
+        let mut c = Column::I64(vec![1, 2, 3]);
+        scrub_invalid(&mut c, &mask);
+        assert_eq!(c.as_i64(), &[1, 0, 3]);
+        let mut c = Column::Str(vec!["a".into(), "b".into(), "c".into()]);
+        scrub_invalid(&mut c, &mask);
+        assert_eq!(c.as_str_col(), &["a".to_string(), "".into(), "c".into()]);
+        let mut c = Column::F64(vec![1.0, f64::NAN, 3.0]);
+        scrub_invalid(&mut c, &mask);
+        assert_eq!(c.as_f64(), &[1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn nullable_column_accessors() {
+        let c = NullableColumn::new(
+            Column::I64(vec![5, 0, 7]),
+            Some(ValidityMask::from_bools(&[true, false, true])),
+        );
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.null_count(), 1);
+        assert!(c.is_valid(0) && !c.is_valid(1));
+        assert_eq!(c.get(0), Value::I64(5));
+        assert_eq!(c.get(1), Value::Null(DType::I64));
+        // all-valid masks normalize away
+        let c = NullableColumn::new(
+            Column::I64(vec![1]),
+            Some(ValidityMask::new_valid(1)),
+        );
+        assert!(c.validity.is_none());
+    }
+
+    #[test]
+    fn push_nullable_defaults_and_bits() {
+        let mut col = Column::new_empty(DType::F64);
+        let mut mask = ValidityMask::new_null(0);
+        push_nullable(&mut col, &mut mask, &Value::F64(1.5));
+        push_nullable(&mut col, &mut mask, &Value::Null(DType::F64));
+        assert_eq!(col.as_f64(), &[1.5, 0.0]);
+        assert_eq!(mask.to_bools(), vec![true, false]);
+    }
+}

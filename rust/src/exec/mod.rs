@@ -3,17 +3,21 @@
 //! Every rank interprets the *same* optimized plan over its partition of
 //! the data, calling into [`crate::ops`] wherever the paper's generated C
 //! would issue MPI collectives. The per-rank state is a [`LocalFrame`]:
-//! a flat `name → Column` environment, i.e. every data-frame column is an
-//! individual array variable (dual representation).
+//! a flat `name → Column (+ optional validity mask)` environment, i.e.
+//! every data-frame column is an individual array variable plus its null
+//! bitmap (dual representation, validity-mask null model).
 
-use crate::column::{decode_column, encode_column, Column};
+use crate::column::{
+    decode_nullable_column, encode_nullable_column, extend_opt_mask, normalize_mask, Column,
+    NullableColumn, ValidityMask,
+};
 use crate::comm::{block_range, run_spmd, Comm};
-use crate::expr::{eval, ColumnEnv};
+use crate::expr::{eval_nullable, ColumnEnv};
 use crate::ir::{Plan, SourceRef};
-use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy};
+use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy, MaskedCol};
 use crate::passes::{optimize, PassOptions};
 use crate::table::{Schema, Table};
-use crate::types::{DType, SortOrder};
+use crate::types::SortOrder;
 use anyhow::{bail, Context, Result};
 
 /// Execution options: worker (rank) count, optimizer toggles and the
@@ -35,14 +39,26 @@ impl Default for ExecOptions {
     }
 }
 
-/// One rank's chunk of a distributed data frame.
+/// One rank's chunk of a distributed data frame. `masks[i]` is column i's
+/// validity (`None` = fully valid — the canonical form).
 #[derive(Debug, Clone)]
 pub struct LocalFrame {
     pub schema: Schema,
     pub cols: Vec<Column>,
+    pub masks: Vec<Option<ValidityMask>>,
 }
 
 impl LocalFrame {
+    /// A frame with no nulls anywhere.
+    pub fn new(schema: Schema, cols: Vec<Column>) -> LocalFrame {
+        let masks = vec![None; cols.len()];
+        LocalFrame {
+            schema,
+            cols,
+            masks,
+        }
+    }
+
     pub fn num_rows(&self) -> usize {
         self.cols.first().map_or(0, |c| c.len())
     }
@@ -55,9 +71,18 @@ impl LocalFrame {
         Ok(&self.cols[i])
     }
 
+    /// `(values, mask)` view of one column — the ops-layer argument shape.
+    pub fn masked(&self, name: &str) -> Result<MaskedCol<'_>> {
+        let i = self
+            .schema
+            .index_of(name)
+            .with_context(|| format!("local frame: no column :{name}"))?;
+        Ok((&self.cols[i], self.masks[i].as_ref()))
+    }
+
     /// Materialize this rank's chunk as a table (debug/inspection).
     pub fn into_table(self) -> Result<Table> {
-        Table::new(self.schema, self.cols)
+        Table::new_masked(self.schema, self.cols, self.masks)
     }
 }
 
@@ -67,6 +92,11 @@ impl ColumnEnv for LocalFrame {
     }
     fn num_rows(&self) -> usize {
         LocalFrame::num_rows(self)
+    }
+    fn validity(&self, name: &str) -> Option<&ValidityMask> {
+        self.schema
+            .index_of(name)
+            .and_then(|i| self.masks[i].as_ref())
     }
 }
 
@@ -83,10 +113,10 @@ pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
     let schema = plan.schema()?;
     let results: Vec<Result<Vec<u8>>> = run_spmd(opts.workers, |comm| -> Result<Vec<u8>> {
         let frame = exec_node(plan, &comm, opts)?;
-        // every rank serializes its chunk; leader assembles
+        // every rank serializes its chunk (masks included); leader assembles
         let mut buf = Vec::new();
-        for c in &frame.cols {
-            encode_column(c, &mut buf);
+        for (c, m) in frame.cols.iter().zip(&frame.masks) {
+            encode_nullable_column(c, m.as_ref(), &mut buf);
         }
         let gathered = comm.gather_bytes(0, buf);
         if comm.is_root() {
@@ -97,16 +127,19 @@ pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
                 .iter()
                 .map(|(_, t)| Column::new_empty(*t))
                 .collect();
+            let mut masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
             for rank_buf in gathered {
                 let mut pos = 0;
-                for c in cols.iter_mut() {
-                    let chunk = decode_column(&rank_buf, &mut pos)?;
+                for (c, m) in cols.iter_mut().zip(masks.iter_mut()) {
+                    let before = c.len();
+                    let (chunk, cm) = decode_nullable_column(&rank_buf, &mut pos)?;
                     c.extend(&chunk);
+                    extend_opt_mask(m, before, cm.as_ref(), chunk.len());
                 }
             }
             let mut out = Vec::new();
-            for c in &cols {
-                encode_column(c, &mut out);
+            for (c, m) in cols.iter().zip(&masks) {
+                encode_nullable_column(c, normalize_mask(m.clone()).as_ref(), &mut out);
             }
             Ok(out)
         } else {
@@ -117,10 +150,13 @@ pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
     let root_buf = results.into_iter().next().context("no ranks ran")??;
     let mut pos = 0;
     let mut cols = Vec::new();
+    let mut masks = Vec::new();
     for _ in 0..schema.len() {
-        cols.push(decode_column(&root_buf, &mut pos)?);
+        let (c, m) = decode_nullable_column(&root_buf, &mut pos)?;
+        cols.push(c);
+        masks.push(m);
     }
-    Table::new(schema, cols)
+    Table::new_masked(schema, cols, masks)
 }
 
 /// Optimize and execute, returning only the global row count (no driver
@@ -147,57 +183,81 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         Plan::Project { input, columns } => {
             if let Plan::Source { src, schema, .. } = input.as_ref() {
                 let names: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
-                let sub = Schema::new(
+                let sub = Schema::new_nullable(
                     columns
                         .iter()
                         .map(|c| (c.clone(), schema.dtype_of(c).unwrap()))
+                        .collect(),
+                    columns
+                        .iter()
+                        .map(|c| schema.nullable_of(c).unwrap_or(false))
                         .collect(),
                 );
                 return exec_source(src, &sub, &names, comm);
             }
             let frame = exec_node(input, comm, opts)?;
             let mut cols = Vec::new();
+            let mut masks = Vec::new();
             let mut fields = Vec::new();
+            let mut nullable = Vec::new();
             for c in columns {
                 let i = frame
                     .schema
                     .index_of(c)
                     .with_context(|| format!("project: no column :{c}"))?;
                 fields.push(frame.schema.fields()[i].clone());
+                nullable.push(frame.schema.nullable_at(i));
                 cols.push(frame.cols[i].clone());
+                masks.push(frame.masks[i].clone());
             }
             Ok(LocalFrame {
-                schema: Schema::new(fields),
+                schema: Schema::new_nullable(fields, nullable),
                 cols,
+                masks,
             })
         }
         Plan::Filter { input, predicate } => {
             let frame = exec_node(input, comm, opts)?;
             // expr_arr = map(pred, cols) — the paper's Fig. 4 expression
-            // array; eval_mask avoids cloning bare column refs (§Perf)
-            let mask = crate::expr::eval_mask(predicate, &frame)?;
-            let cols = frame.cols.iter().map(|c| c.filter(&mask)).collect();
+            // array; eval_mask ANDs the predicate's own validity (null
+            // predicate lanes drop the row, SQL WHERE semantics)
+            let keep = crate::expr::eval_mask(predicate, &frame)?;
+            let cols = frame.cols.iter().map(|c| c.filter(&keep)).collect();
+            let masks = frame
+                .masks
+                .iter()
+                .map(|m| normalize_mask(m.as_ref().map(|m| m.filter(&keep))))
+                .collect();
             Ok(LocalFrame {
                 schema: frame.schema.clone(),
                 cols,
+                masks,
             })
         }
         Plan::WithColumn { input, name, expr } => {
             let frame = exec_node(input, comm, opts)?;
-            let new_col = eval(expr, &frame)?;
-            let mut fields: Vec<(String, DType)> = Vec::new();
+            let (new_col, new_mask) = eval_nullable(expr, &frame)?;
+            let mut fields = Vec::new();
+            let mut nullable = Vec::new();
             let mut cols = Vec::new();
-            for ((n, t), c) in frame.schema.fields().iter().zip(&frame.cols) {
+            let mut masks = Vec::new();
+            for (i, ((n, t), c)) in frame.schema.fields().iter().zip(&frame.cols).enumerate()
+            {
                 if n != name {
                     fields.push((n.clone(), *t));
+                    nullable.push(frame.schema.nullable_at(i));
                     cols.push(c.clone());
+                    masks.push(frame.masks[i].clone());
                 }
             }
             fields.push((name.clone(), new_col.dtype()));
+            nullable.push(new_mask.is_some());
             cols.push(new_col);
+            masks.push(new_mask);
             Ok(LocalFrame {
-                schema: Schema::new(fields),
+                schema: Schema::new_nullable(fields, nullable),
                 cols,
+                masks,
             })
         }
         Plan::Rename { input, from, to } => {
@@ -215,8 +275,12 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 })
                 .collect();
             Ok(LocalFrame {
-                schema: Schema::new(fields),
+                schema: Schema::new_nullable(
+                    fields,
+                    frame.schema.nullable_flags().to_vec(),
+                ),
                 cols: frame.cols,
+                masks: frame.masks,
             })
         }
         Plan::Join {
@@ -227,81 +291,100 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         } => {
             let lframe = exec_node(left, comm, opts)?;
             let rframe = exec_node(right, comm, opts)?;
-            // key/payload column *references* — the packed-key ops shuffle
-            // straight out of the frame, no clones at the exec boundary
-            let lkey_cols: Vec<&Column> = on
+            // key/payload column *references* with masks — the packed-key
+            // ops shuffle straight out of the frame, no clones at the exec
+            // boundary
+            let lkeys: Vec<MaskedCol> = on
                 .iter()
-                .map(|(lk, _)| lframe.col(lk))
+                .map(|(lk, _)| lframe.masked(lk))
                 .collect::<Result<_>>()?;
-            let rkey_cols: Vec<&Column> = on
+            let rkeys: Vec<MaskedCol> = on
                 .iter()
-                .map(|(_, rk)| rframe.col(rk))
+                .map(|(_, rk)| rframe.masked(rk))
                 .collect::<Result<_>>()?;
             // payload columns exclude the key columns (reinserted after)
-            let lpay: Vec<&Column> = lframe
-                .schema
-                .fields()
-                .iter()
-                .zip(&lframe.cols)
-                .filter(|((n, _), _)| !on.iter().any(|(lk, _)| lk == n))
-                .map(|(_, c)| c)
-                .collect();
-            let rpay: Vec<&Column> = rframe
-                .schema
-                .fields()
-                .iter()
-                .zip(&rframe.cols)
-                .filter(|((n, _), _)| !on.iter().any(|(_, rk)| rk == n))
-                .map(|(_, c)| c)
-                .collect();
-            let (keys_out, lout, rout) = ops::distributed_join_on(
-                comm, &lkey_cols, &lpay, &rkey_cols, &rpay, *how,
-            )?;
+            fn payload_refs<'f>(
+                frame: &'f LocalFrame,
+                on: &[(String, String)],
+                is_left: bool,
+            ) -> Vec<MaskedCol<'f>> {
+                frame
+                    .schema
+                    .fields()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (n, _))| {
+                        !on.iter()
+                            .any(|(lk, rk)| if is_left { lk == n } else { rk == n })
+                    })
+                    .map(|(i, _)| (&frame.cols[i], frame.masks[i].as_ref()))
+                    .collect()
+            }
+            let lpay = payload_refs(&lframe, on, true);
+            let rpay = payload_refs(&rframe, on, false);
+            let (keys_out, lout, rout) =
+                ops::distributed_join_on(comm, &lkeys, &lpay, &rkeys, &rpay, *how)?;
             // assemble output per the join schema: left fields in order
             // (each key slot takes its joined key column), then — unless the
             // join type drops them — right fields minus the right keys
             let schema = plan.schema()?;
             let mut cols = Vec::with_capacity(schema.len());
-            let mut li = 0usize;
+            let mut masks = Vec::with_capacity(schema.len());
+            let mut push = |c: NullableColumn| {
+                cols.push(c.values);
+                masks.push(c.validity);
+            };
+            // key columns come back in `on`-pair order; left payloads in
+            // left schema order minus the keys
+            let mut keyed: Vec<Option<NullableColumn>> =
+                keys_out.into_iter().map(Some).collect();
+            let mut louts = lout.into_iter();
             for (n, _) in lframe.schema.fields() {
                 if let Some(j) = on.iter().position(|(lk, _)| lk == n) {
-                    cols.push(keys_out[j].clone());
+                    push(keyed[j].take().expect("one key column per pair"));
                 } else {
-                    cols.push(lout[li].clone());
-                    li += 1;
+                    push(louts.next().expect("left payload column"));
                 }
             }
             if how.keeps_right_columns() {
-                let mut ri = 0usize;
+                let mut routs = rout.into_iter();
                 for (n, _) in rframe.schema.fields() {
                     if on.iter().any(|(_, rk)| rk == n) {
                         continue;
                     }
-                    cols.push(rout[ri].clone());
-                    ri += 1;
+                    push(routs.next().expect("right payload column"));
                 }
             }
-            Ok(LocalFrame { schema, cols })
+            Ok(LocalFrame {
+                schema,
+                cols,
+                masks,
+            })
         }
         Plan::Aggregate { input, keys, aggs } => {
             let frame = exec_node(input, comm, opts)?;
-            let key_cols: Vec<&Column> = keys
+            let key_cols: Vec<MaskedCol> = keys
                 .iter()
-                .map(|k| frame.col(k))
+                .map(|k| frame.masked(k))
                 .collect::<Result<_>>()?;
             // evaluate the expression array of every aggregate locally
-            // (pre-shuffle), exactly like the paper's desugaring
-            let mut expr_cols = Vec::with_capacity(aggs.len());
+            // (pre-shuffle), exactly like the paper's desugaring; null
+            // lanes are scrubbed to canonical defaults by eval_nullable
+            let mut expr_cols: Vec<(Column, Option<ValidityMask>)> =
+                Vec::with_capacity(aggs.len());
             let mut specs = Vec::with_capacity(aggs.len());
             for a in aggs {
-                let c = eval(&a.input, &frame)?;
+                let (c, m) = eval_nullable(&a.input, &frame)?;
                 specs.push(AggSpec {
                     func: a.func,
                     input_dtype: c.dtype(),
                 });
-                expr_cols.push(c);
+                expr_cols.push((c, m));
             }
-            let expr_refs: Vec<&Column> = expr_cols.iter().collect();
+            let expr_refs: Vec<MaskedCol> = expr_cols
+                .iter()
+                .map(|(c, m)| (c, m.as_ref()))
+                .collect();
             let (key_out, out_cols) = ops::distributed_aggregate_keys(
                 comm,
                 &key_cols,
@@ -310,9 +393,17 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 opts.agg_strategy,
             )?;
             let schema = plan.schema()?;
-            let mut cols = key_out;
-            cols.extend(out_cols);
-            Ok(LocalFrame { schema, cols })
+            let mut cols = Vec::with_capacity(schema.len());
+            let mut masks = Vec::with_capacity(schema.len());
+            for c in key_out.into_iter().chain(out_cols) {
+                cols.push(c.values);
+                masks.push(c.validity);
+            }
+            Ok(LocalFrame {
+                schema,
+                cols,
+                masks,
+            })
         }
         Plan::Concat { inputs } => {
             let mut frames = Vec::new();
@@ -321,17 +412,22 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             }
             let first = frames.remove(0);
             let mut cols = first.cols;
+            let mut masks = first.masks;
             for f in frames {
-                for (a, b) in cols.iter_mut().zip(&f.cols) {
+                for (i, (a, b)) in cols.iter_mut().zip(&f.cols).enumerate() {
+                    let before = a.len();
                     a.extend(b);
+                    extend_opt_mask(&mut masks[i], before, f.masks[i].as_ref(), b.len());
                 }
             }
             Ok(LocalFrame {
                 schema: first.schema,
                 cols,
+                masks,
             })
         }
         Plan::Cumsum { input, column, out } => {
+            // schema typing rejects nullable inputs, so the mask is None
             let frame = exec_node(input, comm, opts)?;
             let src = frame.col(column)?;
             let new_col = match src {
@@ -354,52 +450,69 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
         }
         Plan::Sort { input, keys } => {
             let frame = exec_node(input, comm, opts)?;
-            let key_cols: Vec<&Column> = keys
+            let key_cols: Vec<MaskedCol> = keys
                 .iter()
-                .map(|(k, _)| frame.col(k))
+                .map(|(k, _)| frame.masked(k))
                 .collect::<Result<_>>()?;
             let orders: Vec<SortOrder> = keys.iter().map(|(_, o)| *o).collect();
-            let others: Vec<&Column> = frame
+            let others: Vec<MaskedCol> = frame
                 .schema
                 .fields()
                 .iter()
-                .zip(&frame.cols)
-                .filter(|((n, _), _)| !keys.iter().any(|(k, _)| k == n))
-                .map(|(_, c)| c)
+                .enumerate()
+                .filter(|(_, (n, _))| !keys.iter().any(|(k, _)| k == n))
+                .map(|(i, _)| (&frame.cols[i], frame.masks[i].as_ref()))
                 .collect();
             let (skeys, scols) =
                 ops::distributed_sort_keys(comm, &key_cols, &orders, &others)?;
             let mut cols = Vec::with_capacity(frame.cols.len());
-            let mut oi = 0usize;
+            let mut masks = Vec::with_capacity(frame.cols.len());
+            // distributed_sort_keys returns keys in `keys` order and
+            // payload in frame order minus keys; reassemble frame order
+            let mut sorted_keys: Vec<Option<NullableColumn>> =
+                skeys.into_iter().map(Some).collect();
+            let mut os = scols.into_iter();
             for (n, _) in frame.schema.fields() {
                 if let Some(j) = keys.iter().position(|(k, _)| k == n) {
-                    cols.push(skeys[j].clone());
+                    let c = sorted_keys[j].take().expect("sorted key column");
+                    cols.push(c.values);
+                    masks.push(c.validity);
                 } else {
-                    cols.push(scols[oi].clone());
-                    oi += 1;
+                    let c = os.next().expect("sorted payload column");
+                    cols.push(c.values);
+                    masks.push(c.validity);
                 }
             }
             Ok(LocalFrame {
                 schema: frame.schema,
                 cols,
+                masks,
             })
         }
         Plan::Rebalance { input } => {
             let frame = exec_node(input, comm, opts)?;
-            let cols = ops::rebalance_block(comm, &frame.cols)?;
+            let refs: Vec<MaskedCol> = frame
+                .cols
+                .iter()
+                .zip(&frame.masks)
+                .map(|(c, m)| (c, m.as_ref()))
+                .collect();
+            let (cols, masks) = ops::rebalance_block_nullable(comm, &refs)?;
             Ok(LocalFrame {
                 schema: frame.schema,
                 cols,
+                masks: masks.into_iter().map(normalize_mask).collect(),
             })
         }
         Plan::MatrixAssembly { input, columns } => {
+            // schema typing rejects nullable feature columns
             let frame = exec_node(input, comm, opts)?;
             let schema = plan.schema()?;
             let cols: Vec<Column> = columns
                 .iter()
                 .map(|c| frame.col(c).map(|col| Column::F64(col.to_f64_vec())))
                 .collect::<Result<_>>()?;
-            Ok(LocalFrame { schema, cols })
+            Ok(LocalFrame::new(schema, cols))
         }
         Plan::MlCall { input, params } => {
             let frame = exec_node(input, comm, opts)?;
@@ -415,7 +528,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 .collect();
             cols.push(Column::I64(result.cluster_ids));
             if comm.is_root() {
-                Ok(LocalFrame { schema, cols })
+                Ok(LocalFrame::new(schema, cols))
             } else {
                 // replicated output: only the leader reports it upward so the
                 // gather in `collect` doesn't duplicate rows
@@ -424,10 +537,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                     .iter()
                     .map(|(_, t)| Column::new_empty(*t))
                     .collect();
-                Ok(LocalFrame {
-                    schema,
-                    cols: empty,
-                })
+                Ok(LocalFrame::new(schema, empty))
             }
         }
     }
@@ -442,46 +552,53 @@ fn exec_source(
     match src {
         SourceRef::InMemory(table) => {
             let (start, len) = block_range(table.num_rows(), comm.nranks(), comm.rank());
-            let cols = names
-                .iter()
-                .map(|n| {
-                    table
-                        .column(n)
-                        .with_context(|| format!("source: no column :{n}"))
-                        .map(|c| c.slice(start, len))
-                })
-                .collect::<Result<_>>()?;
+            let mut cols = Vec::with_capacity(names.len());
+            let mut masks = Vec::with_capacity(names.len());
+            for n in names {
+                let c = table
+                    .column(n)
+                    .with_context(|| format!("source: no column :{n}"))?;
+                cols.push(c.slice(start, len));
+                masks.push(normalize_mask(
+                    table.mask(n).map(|m| m.slice(start, len)),
+                ));
+            }
             Ok(LocalFrame {
                 schema: schema.clone(),
                 cols,
+                masks,
             })
         }
         SourceRef::Hfs(path) => {
             let (_, nrows) = crate::io::read_hfs_schema(path)?;
             let (start, len) = block_range(nrows, comm.nranks(), comm.rank());
             let cols = crate::io::read_hfs_slice(path, names, start, len)?;
-            Ok(LocalFrame {
-                schema: schema.clone(),
-                cols,
-            })
+            Ok(LocalFrame::new(schema.clone(), cols))
         }
     }
 }
 
 fn append_column(frame: LocalFrame, out: &str, new_col: Column) -> Result<LocalFrame> {
-    let mut fields: Vec<(String, DType)> = Vec::new();
+    let mut fields = Vec::new();
+    let mut nullable = Vec::new();
     let mut cols = Vec::new();
-    for ((n, t), c) in frame.schema.fields().iter().zip(&frame.cols) {
+    let mut masks = Vec::new();
+    for (i, ((n, t), c)) in frame.schema.fields().iter().zip(&frame.cols).enumerate() {
         if n != out {
             fields.push((n.clone(), *t));
+            nullable.push(frame.schema.nullable_at(i));
             cols.push(c.clone());
+            masks.push(frame.masks[i].clone());
         }
     }
     fields.push((out.to_string(), new_col.dtype()));
+    nullable.push(false);
     cols.push(new_col);
+    masks.push(None);
     Ok(LocalFrame {
-        schema: Schema::new(fields),
+        schema: Schema::new_nullable(fields, nullable),
         cols,
+        masks,
     })
 }
 
@@ -526,6 +643,25 @@ mod tests {
         for w in [1, 2, 3, 5] {
             let t = collect(source_mem("t", table()), &opts(w)).unwrap();
             assert_eq!(t, table(), "workers={w}");
+        }
+    }
+
+    #[test]
+    fn masked_source_roundtrip() {
+        let t = Table::from_pairs(vec![
+            ("id", Column::I64((0..10).collect())),
+            ("v", Column::I64((0..10).map(|i| i * 10).collect())),
+        ])
+        .unwrap()
+        .with_null_mask(
+            "v",
+            ValidityMask::from_bools(&(0..10).map(|i| i % 3 != 0).collect::<Vec<_>>()),
+        )
+        .unwrap();
+        for w in [1, 2, 4] {
+            let got = collect(source_mem("t", t.clone()), &opts(w)).unwrap();
+            assert_eq!(got, t, "workers={w}");
+            assert_eq!(got.null_count("v"), 4);
         }
     }
 
@@ -575,6 +711,87 @@ mod tests {
         let got = collect(plan, &opts(3)).unwrap();
         assert_eq!(got.column("id").unwrap().as_i64(), &[1, 3, 5]);
         assert_eq!(got.column("tag").unwrap().as_i64(), &[10, 30, 50]);
+    }
+
+    #[test]
+    fn left_join_preserves_dtype_with_mask() {
+        // the acceptance shape: join output keeps Int64 + validity mask and
+        // null positions survive the distributed sort + driver gather
+        let right = Table::from_pairs(vec![
+            ("rid", Column::I64(vec![0, 2, 4, 6])),
+            ("tag", Column::I64(vec![100, 102, 104, 106])),
+        ])
+        .unwrap();
+        for w in [1, 2, 3] {
+            let plan = Plan::Sort {
+                input: Box::new(Plan::Join {
+                    left: Box::new(source_mem("t", table())),
+                    right: Box::new(source_mem("r", right.clone())),
+                    on: vec![("id".into(), "rid".into())],
+                    how: crate::ir::JoinType::Left,
+                }),
+                keys: vec![("id".into(), SortOrder::Asc)],
+            };
+            let got = collect(plan, &opts(w)).unwrap();
+            assert_eq!(
+                got.schema().dtype_of("tag"),
+                Some(crate::types::DType::I64),
+                "workers={w}: dtype must be preserved"
+            );
+            assert_eq!(got.schema().nullable_of("tag"), Some(true));
+            let tags = got.column("tag").unwrap().as_i64();
+            let mask = got.mask("tag").unwrap();
+            for i in 0..8 {
+                if i % 2 == 0 {
+                    assert!(mask.get(i), "workers={w} row {i}");
+                    assert_eq!(tags[i], 100 + i as i64);
+                } else {
+                    assert!(!mask.get(i), "workers={w} row {i}");
+                    assert_eq!(tags[i], 0, "null lanes hold the default");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn is_null_fill_null_filter_pipeline() {
+        let right = Table::from_pairs(vec![
+            ("rid", Column::I64(vec![0, 2, 4, 6])),
+            ("tag", Column::I64(vec![100, 102, 104, 106])),
+        ])
+        .unwrap();
+        let join = Plan::Join {
+            left: Box::new(source_mem("t", table())),
+            right: Box::new(source_mem("r", right)),
+            on: vec![("id".into(), "rid".into())],
+            how: crate::ir::JoinType::Left,
+        };
+        // drop_null semantics: filter on IS NOT NULL
+        let plan = Plan::Sort {
+            input: Box::new(Plan::Filter {
+                input: Box::new(join.clone()),
+                predicate: col("tag").is_not_null(),
+            }),
+            keys: vec![("id".into(), SortOrder::Asc)],
+        };
+        let got = collect(plan, &opts(3)).unwrap();
+        assert_eq!(got.column("id").unwrap().as_i64(), &[0, 2, 4, 6]);
+        assert_eq!(got.null_count("tag"), 0);
+        // fill_null makes the column fully valid with the fill value
+        let plan = Plan::Sort {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(join),
+                name: "tag".into(),
+                expr: col("tag").fill_null(-1i64),
+            }),
+            keys: vec![("id".into(), SortOrder::Asc)],
+        };
+        let got = collect(plan, &opts(2)).unwrap();
+        assert_eq!(got.schema().nullable_of("tag"), Some(false));
+        assert_eq!(
+            got.column("tag").unwrap().as_i64(),
+            &[100, -1, 102, -1, 104, -1, 106, -1]
+        );
     }
 
     #[test]

@@ -64,6 +64,13 @@ impl AggExpr {
         }
     }
 
+    /// May this output column be NULL? Order/moment statistics over a
+    /// nullable input have no value for an all-null group; `sum`/`count`
+    /// collapse to their empty value (0) instead.
+    pub fn output_nullable(&self, schema: &Schema) -> Result<bool> {
+        Ok(func_output_nullable(self.func) && self.input.nullable(schema)?)
+    }
+
     /// Output dtype under `schema` (the "dummy calls … to find the output
     /// type" step of paper §4.1, done statically here).
     pub fn output_dtype(&self, schema: &Schema) -> Result<DType> {
@@ -97,6 +104,15 @@ impl fmt::Display for AggExpr {
     }
 }
 
+/// Reductions whose all-null-group result is NULL rather than an empty
+/// value (`sum`/`count`/`count_distinct` → 0).
+pub fn func_output_nullable(func: AggFn) -> bool {
+    matches!(
+        func,
+        AggFn::Mean | AggFn::Var | AggFn::Min | AggFn::Max | AggFn::First
+    )
+}
+
 /// Running state of one reduction for one group — supports both one-pass
 /// accumulation (post-shuffle) and partial-state merge (pre-aggregation).
 #[derive(Debug, Clone, PartialEq)]
@@ -104,8 +120,8 @@ pub enum AggState {
     Sum { sum: f64, int: bool },
     Count { n: i64 },
     Mean { sum: f64, n: i64 },
-    Min { v: f64, int: bool },
-    Max { v: f64, int: bool },
+    Min { v: f64, int: bool, n: i64 },
+    Max { v: f64, int: bool, n: i64 },
     Var { sum: f64, sumsq: f64, n: i64 },
     CountDistinct { seen: std::collections::BTreeSet<i64> },
     First { v: Option<Value> },
@@ -121,10 +137,12 @@ impl AggState {
             AggFn::Min => AggState::Min {
                 v: f64::INFINITY,
                 int,
+                n: 0,
             },
             AggFn::Max => AggState::Max {
                 v: f64::NEG_INFINITY,
                 int,
+                n: 0,
             },
             AggFn::Var => AggState::Var {
                 sum: 0.0,
@@ -135,6 +153,21 @@ impl AggState {
                 seen: Default::default(),
             },
             AggFn::First => AggState::First { v: None },
+        }
+    }
+
+    /// Has this state folded no rows at all? True only for groups whose
+    /// inputs were entirely null (null rows are skipped) — the condition
+    /// under which nullable reductions emit NULL. `Sum`/`Count` report
+    /// `false`: their empty value (0) is a real result.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            AggState::Mean { n, .. }
+            | AggState::Var { n, .. }
+            | AggState::Min { n, .. }
+            | AggState::Max { n, .. } => *n == 0,
+            AggState::First { v } => v.is_none(),
+            _ => false,
         }
     }
 
@@ -156,10 +189,22 @@ impl AggState {
                 *sum += v[i] as f64;
                 *n += 1;
             }
-            (AggState::Min { v: m, .. }, C::F64(v)) => *m = m.min(v[i]),
-            (AggState::Min { v: m, .. }, C::I64(v)) => *m = m.min(v[i] as f64),
-            (AggState::Max { v: m, .. }, C::F64(v)) => *m = m.max(v[i]),
-            (AggState::Max { v: m, .. }, C::I64(v)) => *m = m.max(v[i] as f64),
+            (AggState::Min { v: m, n, .. }, C::F64(v)) => {
+                *m = m.min(v[i]);
+                *n += 1;
+            }
+            (AggState::Min { v: m, n, .. }, C::I64(v)) => {
+                *m = m.min(v[i] as f64);
+                *n += 1;
+            }
+            (AggState::Max { v: m, n, .. }, C::F64(v)) => {
+                *m = m.max(v[i]);
+                *n += 1;
+            }
+            (AggState::Max { v: m, n, .. }, C::I64(v)) => {
+                *m = m.max(v[i] as f64);
+                *n += 1;
+            }
             (AggState::Var { sum, sumsq, n }, C::F64(v)) => {
                 let x = v[i];
                 *sum += x;
@@ -179,8 +224,13 @@ impl AggState {
         }
     }
 
-    /// Fold one row's expression value into the state.
+    /// Fold one row's expression value into the state. Null inputs are
+    /// skipped by every reduction (the row-engine counterpart of the
+    /// masked columnar loop).
     pub fn update(&mut self, v: &Value) {
+        if v.is_null() {
+            return;
+        }
         match self {
             AggState::Sum { sum, .. } => *sum += v.as_f64().unwrap_or(0.0),
             AggState::Count { n } => *n += 1,
@@ -188,8 +238,14 @@ impl AggState {
                 *sum += v.as_f64().unwrap_or(0.0);
                 *n += 1;
             }
-            AggState::Min { v: m, .. } => *m = m.min(v.as_f64().unwrap_or(f64::INFINITY)),
-            AggState::Max { v: m, .. } => *m = m.max(v.as_f64().unwrap_or(f64::NEG_INFINITY)),
+            AggState::Min { v: m, n, .. } => {
+                *m = m.min(v.as_f64().unwrap_or(f64::INFINITY));
+                *n += 1;
+            }
+            AggState::Max { v: m, n, .. } => {
+                *m = m.max(v.as_f64().unwrap_or(f64::NEG_INFINITY));
+                *n += 1;
+            }
             AggState::Var { sum, sumsq, n } => {
                 let x = v.as_f64().unwrap_or(0.0);
                 *sum += x;
@@ -220,8 +276,20 @@ impl AggState {
                 *a += b;
                 *na += nb;
             }
-            (AggState::Min { v: a, .. }, AggState::Min { v: b, .. }) => *a = a.min(*b),
-            (AggState::Max { v: a, .. }, AggState::Max { v: b, .. }) => *a = a.max(*b),
+            (
+                AggState::Min { v: a, n: na, .. },
+                AggState::Min { v: b, n: nb, .. },
+            ) => {
+                *a = a.min(*b);
+                *na += nb;
+            }
+            (
+                AggState::Max { v: a, n: na, .. },
+                AggState::Max { v: b, n: nb, .. },
+            ) => {
+                *a = a.max(*b);
+                *na += nb;
+            }
             (
                 AggState::Var {
                     sum: a,
@@ -266,15 +334,15 @@ impl AggState {
             } else {
                 sum / *n as f64
             }),
-            AggState::Min { v, int } => {
-                if *int && v.is_finite() {
+            AggState::Min { v, int, n } => {
+                if *int && *n > 0 {
                     Value::I64(*v as i64)
                 } else {
                     Value::F64(*v)
                 }
             }
-            AggState::Max { v, int } => {
-                if *int && v.is_finite() {
+            AggState::Max { v, int, n } => {
+                if *int && *n > 0 {
                     Value::I64(*v as i64)
                 } else {
                     Value::F64(*v)
@@ -301,8 +369,9 @@ impl AggState {
                 buf.extend_from_slice(&sum.to_le_bytes());
                 buf.extend_from_slice(&n.to_le_bytes());
             }
-            AggState::Min { v, .. } | AggState::Max { v, .. } => {
-                buf.extend_from_slice(&v.to_le_bytes())
+            AggState::Min { v, n, .. } | AggState::Max { v, n, .. } => {
+                buf.extend_from_slice(&v.to_le_bytes());
+                buf.extend_from_slice(&n.to_le_bytes());
             }
             AggState::Var { sum, sumsq, n } => {
                 buf.extend_from_slice(&sum.to_le_bytes());
@@ -355,14 +424,28 @@ impl AggState {
                     n: i64::from_le_bytes(b),
                 }
             }
-            AggFn::Min => AggState::Min {
-                v: f64_at(pos),
-                int,
-            },
-            AggFn::Max => AggState::Max {
-                v: f64_at(pos),
-                int,
-            },
+            AggFn::Min => {
+                let v = f64_at(pos);
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                AggState::Min {
+                    v,
+                    int,
+                    n: i64::from_le_bytes(b),
+                }
+            }
+            AggFn::Max => {
+                let v = f64_at(pos);
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&buf[*pos..*pos + 8]);
+                *pos += 8;
+                AggState::Max {
+                    v,
+                    int,
+                    n: i64::from_le_bytes(b),
+                }
+            }
             AggFn::Var => {
                 let sum = f64_at(pos);
                 let sumsq = f64_at(pos);
@@ -550,6 +633,37 @@ mod tests {
             assert_eq!(pos, buf.len(), "{func:?} consumed {pos} of {}", buf.len());
             assert_eq!(back.finish(), s.finish(), "{func:?}");
         }
+    }
+
+    #[test]
+    fn null_inputs_are_skipped_and_emptiness_tracked() {
+        let mut s = AggState::new(AggFn::Mean, DType::F64);
+        assert!(s.is_empty());
+        s.update(&Value::Null(DType::F64));
+        assert!(s.is_empty(), "null update must not count");
+        s.update(&Value::F64(4.0));
+        s.update(&Value::Null(DType::F64));
+        assert!(!s.is_empty());
+        assert_eq!(s.finish(), Value::F64(4.0));
+        // count skips nulls too (SQL COUNT(col) semantics)
+        let mut c = AggState::new(AggFn::Count, DType::I64);
+        c.update(&Value::Null(DType::I64));
+        c.update(&Value::I64(1));
+        assert_eq!(c.finish(), Value::I64(1));
+        // min emptiness survives encode/decode and merge
+        let mut m = AggState::new(AggFn::Min, DType::I64);
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        let mut pos = 0;
+        let back = AggState::decode(AggFn::Min, DType::I64, &buf, &mut pos);
+        assert!(back.is_empty());
+        let mut other = AggState::new(AggFn::Min, DType::I64);
+        other.update(&Value::I64(-5));
+        m.merge(&other);
+        assert!(!m.is_empty());
+        assert_eq!(m.finish(), Value::I64(-5));
+        assert!(func_output_nullable(AggFn::Min));
+        assert!(!func_output_nullable(AggFn::Sum));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! never sees whole tables, only `name → &Column` lookups.
 
 use super::Expr;
-use crate::column::{self, Column};
+use crate::column::{self, combine_masks, normalize_mask, Column, ValidityMask};
 use crate::types::Value;
 use anyhow::{bail, Context, Result};
 
@@ -16,6 +16,11 @@ pub trait ColumnEnv {
     /// Number of rows in this environment's block (needed so literal-only
     /// expressions can still broadcast to the right length).
     fn num_rows(&self) -> usize;
+    /// Validity mask of a column (`None` = fully valid). Environments
+    /// without a null model keep the default.
+    fn validity(&self, _name: &str) -> Option<&ValidityMask> {
+        None
+    }
 }
 
 /// Environment over a slice of `(name, column)` pairs (tests, small ops).
@@ -46,6 +51,9 @@ impl ColumnEnv for crate::table::Table {
     }
     fn num_rows(&self) -> usize {
         crate::table::Table::num_rows(self)
+    }
+    fn validity(&self, name: &str) -> Option<&ValidityMask> {
+        crate::table::Table::mask(self, name)
     }
 }
 
@@ -80,14 +88,98 @@ pub fn eval(expr: &Expr, env: &dyn ColumnEnv) -> Result<Column> {
 }
 
 /// Evaluate a boolean predicate to a mask without cloning borrowed columns.
+/// Null predicate lanes count as *false* (SQL `WHERE` semantics): the value
+/// mask is ANDed with the predicate's validity.
 pub fn eval_mask(expr: &Expr, env: &dyn ColumnEnv) -> Result<Vec<bool>> {
-    match eval_inner(expr, env)? {
-        Evaled::Borrowed(c) => Ok(c.as_bool().to_vec()),
-        Evaled::Owned(Column::Bool(v)) => Ok(v),
+    let mut mask = match eval_inner(expr, env)? {
+        Evaled::Borrowed(c) => c.as_bool().to_vec(),
+        Evaled::Owned(Column::Bool(v)) => v,
         Evaled::Owned(c) => anyhow::bail!("predicate evaluated to {}", c.dtype()),
-        Evaled::Scalar(Value::Bool(b)) => Ok(vec![b; env.num_rows()]),
+        Evaled::Scalar(Value::Bool(b)) => vec![b; env.num_rows()],
         Evaled::Scalar(v) => anyhow::bail!("predicate evaluated to scalar {v}"),
+    };
+    if let Some(valid) = eval_validity(expr, env)? {
+        for (m, i) in mask.iter_mut().zip(0..valid.len()) {
+            *m = *m && valid.get(i);
+        }
     }
+    Ok(mask)
+}
+
+/// Evaluate `expr` to `(values, validity)` — the nullable counterpart of
+/// [`eval`]. Values under null lanes are scrubbed to dtype defaults so the
+/// result is in canonical form.
+pub fn eval_nullable(
+    expr: &Expr,
+    env: &dyn ColumnEnv,
+) -> Result<(Column, Option<ValidityMask>)> {
+    let mut values = eval(expr, env)?;
+    let validity = eval_validity(expr, env)?;
+    if let Some(m) = &validity {
+        column::scrub_invalid(&mut values, m);
+    }
+    Ok((values, validity))
+}
+
+/// Validity of `expr`'s result (`None` = fully valid): element-wise
+/// operators AND their operands' masks (null in ⇒ null out); `&&`/`||`
+/// follow SQL's three-valued (Kleene) logic, where a dominant operand
+/// (`FALSE AND x`, `TRUE OR x`) yields a *valid* result even when the
+/// other side is null; `IS NULL` / `fill_null` are always valid.
+pub fn eval_validity(expr: &Expr, env: &dyn ColumnEnv) -> Result<Option<ValidityMask>> {
+    Ok(match expr {
+        Expr::Col(name) => {
+            if env.column(name).is_none() {
+                bail!("unknown column :{name}");
+            }
+            env.validity(name).cloned()
+        }
+        Expr::Lit(_) | Expr::IsNull(_) | Expr::FillNull(..) => None,
+        Expr::Arith(a, _, b) | Expr::Cmp(a, _, b) => normalize_mask(combine_masks(
+            eval_validity(a, env)?.as_ref(),
+            eval_validity(b, env)?.as_ref(),
+        )),
+        Expr::And(a, b) => kleene_validity(a, b, env, true)?,
+        Expr::Or(a, b) => kleene_validity(a, b, env, false)?,
+        Expr::Not(a) | Expr::Math(_, a) | Expr::BoolToInt(a) => eval_validity(a, env)?,
+        Expr::Udf(_, args) => {
+            let mut acc: Option<ValidityMask> = None;
+            for a in args {
+                acc = combine_masks(acc.as_ref(), eval_validity(a, env)?.as_ref());
+            }
+            normalize_mask(acc)
+        }
+    })
+}
+
+/// Kleene validity of `a AND b` / `a OR b`: the result is valid where both
+/// operands are, *and* where one valid operand dominates (false for AND,
+/// true for OR — `FALSE AND NULL = FALSE`, `TRUE OR NULL = TRUE`). Needs
+/// the operand values, so it only runs when a mask is actually present.
+fn kleene_validity(
+    a: &Expr,
+    b: &Expr,
+    env: &dyn ColumnEnv,
+    is_and: bool,
+) -> Result<Option<ValidityMask>> {
+    let va = eval_validity(a, env)?;
+    let vb = eval_validity(b, env)?;
+    if va.is_none() && vb.is_none() {
+        return Ok(None);
+    }
+    let ca = eval(a, env)?;
+    let cb = eval(b, env)?;
+    let (xs, ys) = (ca.as_bool(), cb.as_bool());
+    let mut m = ValidityMask::new_null(xs.len());
+    for i in 0..xs.len() {
+        let av = va.as_ref().map_or(true, |v| v.get(i));
+        let bv = vb.as_ref().map_or(true, |v| v.get(i));
+        let dominant = |valid: bool, value: bool| valid && (value != is_and);
+        if (av && bv) || dominant(av, xs[i]) || dominant(bv, ys[i]) {
+            m.set(i, true);
+        }
+    }
+    Ok(normalize_mask(Some(m)))
 }
 
 fn broadcast(v: &Value, n: usize) -> Column {
@@ -96,6 +188,7 @@ fn broadcast(v: &Value, n: usize) -> Column {
         Value::F64(x) => Column::F64(vec![*x; n]),
         Value::Bool(x) => Column::Bool(vec![*x; n]),
         Value::Str(x) => Column::Str(vec![x.clone(); n]),
+        Value::Null(_) => panic!("broadcast of a bare null literal"),
     }
 }
 
@@ -180,6 +273,15 @@ fn eval_inner<'a>(expr: &Expr, env: &'a dyn ColumnEnv) -> Result<Evaled<'a>> {
                 Some(x) => Evaled::Owned(column::bool_to_i64(x)),
                 None => bail!("bool_to_int over non-column"),
             }
+        }
+        Expr::IsNull(a) => {
+            // values are irrelevant: IS NULL is the negated validity
+            let valid = eval_validity(a, env)?;
+            Evaled::Owned(column::is_null_column(valid.as_ref(), env.num_rows()))
+        }
+        Expr::FillNull(a, v) => {
+            let (col, valid) = eval_nullable(a, env)?;
+            Evaled::Owned(column::fill_null(&col, valid.as_ref(), v)?)
         }
         Expr::Udf(udf, args) => {
             let cols: Vec<Vec<f64>> = args

@@ -13,8 +13,8 @@
 mod agg;
 mod eval;
 
-pub use agg::{AggExpr, AggFn, AggState};
-pub use eval::{eval, eval_mask, ColumnEnv, SliceEnv};
+pub use agg::{func_output_nullable, AggExpr, AggFn, AggState};
+pub use eval::{eval, eval_mask, eval_nullable, eval_validity, ColumnEnv, SliceEnv};
 
 use crate::column::{ArithOp, CmpOp, MathFn};
 use crate::table::Schema;
@@ -64,6 +64,12 @@ pub enum Expr {
     Math(MathFn, Box<Expr>),
     /// Cast Bool → Int64 (inserted by desugaring of `sum(:x == k)`).
     BoolToInt(Box<Expr>),
+    /// `IS NULL` — true exactly where the operand's validity bit is clear.
+    /// Never null itself.
+    IsNull(Box<Expr>),
+    /// `fill_null(expr, v)` — replace null lanes with the literal,
+    /// producing a fully valid column of the operand's dtype.
+    FillNull(Box<Expr>, Value),
     /// Scalar UDF applied element-wise over evaluated argument columns.
     Udf(Udf, Vec<Expr>),
 }
@@ -80,6 +86,8 @@ impl PartialEq for Expr {
             (Not(a), Not(b)) => a == b,
             (Math(f1, a), Math(f2, b)) => f1 == f2 && a == b,
             (BoolToInt(a), BoolToInt(b)) => a == b,
+            (IsNull(a), IsNull(b)) => a == b,
+            (FillNull(a1, v1), FillNull(a2, v2)) => a1 == a2 && v1 == v2,
             (Udf(u1, a1), Udf(u2, a2)) => u1.name == u2.name && a1 == a2,
             _ => false,
         }
@@ -140,6 +148,18 @@ impl Expr {
     pub fn math(self, f: MathFn) -> Expr {
         Expr::Math(f, Box::new(self))
     }
+    /// `IS NULL` predicate over this expression.
+    pub fn is_null(self) -> Expr {
+        Expr::IsNull(Box::new(self))
+    }
+    /// `IS NOT NULL` (sugar for `!is_null()`).
+    pub fn is_not_null(self) -> Expr {
+        Expr::Not(Box::new(Expr::IsNull(Box::new(self))))
+    }
+    /// Replace null lanes with `v`.
+    pub fn fill_null<V: Into<Value>>(self, v: V) -> Expr {
+        Expr::FillNull(Box::new(self), v.into())
+    }
 
     /// The set of column names this expression reads — the liveness facts
     /// the DataFrame-Pass uses for pushdown validity and column pruning.
@@ -159,7 +179,11 @@ impl Expr {
                 a.visit_cols(f);
                 b.visit_cols(f);
             }
-            Expr::Not(a) | Expr::Math(_, a) | Expr::BoolToInt(a) => a.visit_cols(f),
+            Expr::Not(a)
+            | Expr::Math(_, a)
+            | Expr::BoolToInt(a)
+            | Expr::IsNull(a)
+            | Expr::FillNull(a, _) => a.visit_cols(f),
             Expr::Udf(_, args) => args.iter().for_each(|a| a.visit_cols(f)),
         }
     }
@@ -191,6 +215,10 @@ impl Expr {
             Expr::Not(a) => Expr::Not(Box::new(a.rename_columns(rename)?)),
             Expr::Math(f, a) => Expr::Math(*f, Box::new(a.rename_columns(rename)?)),
             Expr::BoolToInt(a) => Expr::BoolToInt(Box::new(a.rename_columns(rename)?)),
+            Expr::IsNull(a) => Expr::IsNull(Box::new(a.rename_columns(rename)?)),
+            Expr::FillNull(a, v) => {
+                Expr::FillNull(Box::new(a.rename_columns(rename)?), v.clone())
+            }
             Expr::Udf(u, args) => Expr::Udf(
                 u.clone(),
                 args.iter()
@@ -255,6 +283,19 @@ impl Expr {
                 }
                 Ok(DType::I64)
             }
+            Expr::IsNull(a) => {
+                let _ = a.dtype(schema)?; // operand must type-check
+                Ok(DType::Bool)
+            }
+            Expr::FillNull(a, v) => {
+                let t = a.dtype(schema)?;
+                let vt = v.dtype();
+                let ok = vt == t || (t.is_numeric() && vt.is_numeric());
+                if v.is_null() || !ok {
+                    bail!("fill_null: cannot fill {t} with {v:?}");
+                }
+                Ok(t)
+            }
             Expr::Udf(_, args) => {
                 for a in args {
                     let t = a.dtype(schema)?;
@@ -265,6 +306,31 @@ impl Expr {
                 Ok(DType::F64)
             }
         }
+    }
+
+    /// Static nullability under `schema` — mirrors the runtime validity
+    /// propagation: a column reference is nullable iff its schema field is;
+    /// element-wise operators propagate (null in ⇒ null out); `IS NULL` and
+    /// `fill_null` are never null.
+    pub fn nullable(&self, schema: &Schema) -> Result<bool> {
+        Ok(match self {
+            Expr::Col(c) => schema
+                .nullable_of(c)
+                .ok_or_else(|| anyhow::anyhow!("unknown column :{c} in {schema}"))?,
+            Expr::Lit(_) => false,
+            Expr::IsNull(_) | Expr::FillNull(..) => false,
+            Expr::Arith(a, _, b) | Expr::Cmp(a, _, b) | Expr::And(a, b) | Expr::Or(a, b) => {
+                a.nullable(schema)? || b.nullable(schema)?
+            }
+            Expr::Not(a) | Expr::Math(_, a) | Expr::BoolToInt(a) => a.nullable(schema)?,
+            Expr::Udf(_, args) => {
+                let mut any = false;
+                for a in args {
+                    any |= a.nullable(schema)?;
+                }
+                any
+            }
+        })
     }
 
     /// Constant folding — one of the optimizations HiFrames gets "for free"
@@ -362,6 +428,17 @@ impl Expr {
                 Expr::Math(*f, Box::new(a))
             }
             Expr::BoolToInt(a) => Expr::BoolToInt(Box::new(a.fold_constants())),
+            Expr::IsNull(a) => {
+                let a = a.fold_constants();
+                // a non-null literal is never null
+                if let Expr::Lit(v) = &a {
+                    if !v.is_null() {
+                        return Expr::Lit(Value::Bool(false));
+                    }
+                }
+                Expr::IsNull(Box::new(a))
+            }
+            Expr::FillNull(a, v) => Expr::FillNull(Box::new(a.fold_constants()), v.clone()),
             Expr::Udf(u, args) => Expr::Udf(
                 u.clone(),
                 args.iter().map(|a| a.fold_constants()).collect(),
@@ -402,6 +479,8 @@ impl fmt::Display for Expr {
             Expr::Not(a) => write!(f, "!{a}"),
             Expr::Math(m, a) => write!(f, "{m:?}({a})"),
             Expr::BoolToInt(a) => write!(f, "int({a})"),
+            Expr::IsNull(a) => write!(f, "is_null({a})"),
+            Expr::FillNull(a, v) => write!(f, "fill_null({a}, {v})"),
             Expr::Udf(u, args) => {
                 write!(f, "{}(", u.name)?;
                 for (i, a) in args.iter().enumerate() {

@@ -19,8 +19,10 @@
 //! | `HPAT.Kmeans(samples, k)`                  | [`DataFrame::kmeans`]                  |
 //!
 //! Join types follow [`JoinType`]: `Inner`, `Left`, `Right`, `Outer`,
-//! `Semi`, `Anti`. Null-introduced columns of outer joins are promoted per
-//! [`crate::types::DType::null_joined`] (numerics → Float64 with NaN holes).
+//! `Semi`, `Anti`. Null-introduced columns of outer joins keep their native
+//! dtype and become *nullable* (validity-mask null model); inspect and
+//! repair nulls with [`DataFrame::is_null`], [`DataFrame::fill_null`] and
+//! [`DataFrame::drop_null`].
 //!
 //! A `DataFrame` is a lazy logical plan; [`DataFrame::collect`] compiles it
 //! through the full pass pipeline and runs it SPMD. Scalar helpers
@@ -147,6 +149,38 @@ impl DataFrame {
             name: name.to_string(),
             expr,
         })
+    }
+
+    /// Append a Bool column `:<column>_is_null` marking the null rows of
+    /// `column` (true = null). The probe side of `IS NULL` analyses.
+    pub fn is_null(&self, column: &str) -> DataFrame {
+        self.with_column(
+            &format!("{column}_is_null"),
+            crate::expr::col(column).is_null(),
+        )
+    }
+
+    /// Replace the nulls of `column` with `value` in place; the column
+    /// becomes non-nullable with its dtype unchanged.
+    pub fn fill_null<V: Into<crate::types::Value>>(&self, column: &str, value: V) -> DataFrame {
+        self.with_column(column, crate::expr::col(column).fill_null(value))
+    }
+
+    /// Keep only the rows where *every* listed column is non-null
+    /// (Pandas `dropna(subset=...)`).
+    pub fn drop_null(&self, columns: &[&str]) -> DataFrame {
+        let mut pred: Option<Expr> = None;
+        for c in columns {
+            let p = crate::expr::col(c).is_not_null();
+            pred = Some(match pred {
+                Some(acc) => acc.and(p),
+                None => p,
+            });
+        }
+        match pred {
+            Some(p) => self.filter(p),
+            None => self.clone(),
+        }
     }
 
     /// `rename!(df, :from, :to)`.
@@ -590,7 +624,7 @@ mod tests {
     }
 
     #[test]
-    fn left_join_fills_nan() {
+    fn left_join_masks_missing_rows() {
         let hf = ctx();
         let left = hf.table(
             "l",
@@ -604,16 +638,27 @@ mod tests {
             ])
             .unwrap(),
         );
-        let out = left
-            .join_on(&right, &[("id", "rid")], JoinType::Left)
-            .sort_by("id")
-            .collect()
-            .unwrap();
+        let joined = left.join_on(&right, &[("id", "rid")], JoinType::Left);
+        let out = joined.sort_by("id").collect().unwrap();
         assert_eq!(out.column("id").unwrap().as_i64(), &[1, 2, 3]);
-        let w = out.column("w").unwrap().as_f64(); // null-promoted
-        assert_eq!(w[0], 10.0);
-        assert!(w[1].is_nan());
-        assert_eq!(w[2], 30.0);
+        // dtype preserved; the unmatched row is null under the mask
+        assert_eq!(out.schema().dtype_of("w"), Some(crate::types::DType::I64));
+        assert_eq!(out.column("w").unwrap().as_i64(), &[10, 0, 30]);
+        assert_eq!(out.mask("w").unwrap().to_bools(), vec![true, false, true]);
+
+        // frame-level null APIs over the same join
+        let flagged = joined.is_null("w").sort_by("id").collect().unwrap();
+        assert_eq!(
+            flagged.column("w_is_null").unwrap().as_bool(),
+            &[false, true, false]
+        );
+        let filled = joined.fill_null("w", -7i64).sort_by("id").collect().unwrap();
+        assert_eq!(filled.column("w").unwrap().as_i64(), &[10, -7, 30]);
+        assert_eq!(filled.null_count("w"), 0);
+        assert_eq!(filled.schema().nullable_of("w"), Some(false));
+        let kept = joined.drop_null(&["w"]).sort_by("id").collect().unwrap();
+        assert_eq!(kept.column("id").unwrap().as_i64(), &[1, 3]);
+        assert_eq!(kept.null_count("w"), 0);
     }
 
     #[test]

@@ -8,8 +8,14 @@ use crate::types::DType;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// Write `table` as CSV with a `name:dtype` header line.
+/// Write `table` as CSV with a `name:dtype` header line. The format has no
+/// null representation — `fill_null`/`drop_null` nullable data first.
 pub fn write_csv(path: &Path, table: &Table) -> Result<()> {
+    for (i, (name, _)) in table.schema().fields().iter().enumerate() {
+        if table.mask_at(i).is_some() {
+            bail!("csv write: column {name} has nulls — fill_null/drop_null first");
+        }
+    }
     let mut out = String::new();
     let header: Vec<String> = table
         .schema()

@@ -48,8 +48,15 @@ fn tag_dtype(tag: u8) -> Result<DType> {
     })
 }
 
-/// Write `table` to `path`.
+/// Write `table` to `path`. The HFS format has no validity-mask section,
+/// so nullable data is rejected rather than silently flattening nulls into
+/// dtype defaults — `fill_null` (or `drop_null`) before writing.
 pub fn write_hfs(path: &Path, table: &Table) -> Result<()> {
+    for (i, (name, _)) in table.schema().fields().iter().enumerate() {
+        if table.mask_at(i).is_some() {
+            bail!("hfs write: column {name} has nulls — fill_null/drop_null first");
+        }
+    }
     let f = File::create(path).with_context(|| format!("hfs create {}", path.display()))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;

@@ -70,8 +70,8 @@ pub enum Plan {
     /// Equi-join over a composite key list with a join type:
     /// `join(l, r, [:lk1 == :rk1, :lk2 == :rk2], how)`. Output key columns
     /// keep the left names; for Left/Right/Outer the nullable side's payload
-    /// columns are *null-introduced* ([`DType::null_joined`]); Semi/Anti
-    /// keep only the left schema.
+    /// columns keep their native dtype and become *nullable* (validity
+    /// masks); Semi/Anti keep only the left schema.
     Join {
         left: Box<Plan>,
         right: Box<Plan>,
@@ -140,25 +140,31 @@ impl Plan {
             Plan::Project { input, columns } => {
                 let s = input.schema()?;
                 let mut fields = Vec::new();
+                let mut nullable = Vec::new();
                 for c in columns {
                     let dt = s
                         .dtype_of(c)
                         .with_context(|| format!("project: unknown column :{c}"))?;
                     fields.push((c.clone(), dt));
+                    nullable.push(s.nullable_of(c).unwrap_or(false));
                 }
-                Ok(Schema::new(fields))
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::WithColumn { input, name, expr } => {
                 let s = input.schema()?;
                 let dt = expr.dtype(&s)?;
-                let mut fields: Vec<(String, DType)> = s
-                    .fields()
-                    .iter()
-                    .filter(|(n, _)| n != name)
-                    .cloned()
-                    .collect();
+                let nl = expr.nullable(&s)?;
+                let mut fields: Vec<(String, DType)> = Vec::new();
+                let mut nullable = Vec::new();
+                for (i, (n, t)) in s.fields().iter().enumerate() {
+                    if n != name {
+                        fields.push((n.clone(), *t));
+                        nullable.push(s.nullable_at(i));
+                    }
+                }
                 fields.push((name.clone(), dt));
-                Ok(Schema::new(fields))
+                nullable.push(nl);
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Rename { input, from, to } => {
                 let s = input.schema()?;
@@ -168,7 +174,7 @@ impl Plan {
                 if s.dtype_of(to).is_some() {
                     bail!("rename: column :{to} already exists");
                 }
-                Ok(Schema::new(
+                Ok(Schema::new_nullable(
                     s.fields()
                         .iter()
                         .map(|(n, t)| {
@@ -179,6 +185,7 @@ impl Plan {
                             }
                         })
                         .collect(),
+                    s.nullable_flags().to_vec(),
                 ))
             }
             Plan::Join {
@@ -218,33 +225,34 @@ impl Plan {
                 if !how.keeps_right_columns() {
                     return Ok(ls);
                 }
-                // output: all left columns in order (keys keep their dtype —
-                // an equi-join key is never null), then right columns minus
-                // its keys. The null-introducing side(s) get promoted dtypes.
+                // output: all left columns in order, then right columns
+                // minus its keys. Dtypes are *preserved*; the
+                // null-introducing side(s) become nullable instead of
+                // promoting to F64/NaN. A key slot is nullable iff either
+                // input key is (null keys match null keys).
                 let mut fields = Vec::new();
-                for (n, t) in ls.fields() {
-                    let t = if !lkeys.contains(n.as_str()) && how.nullable_left() {
-                        t.null_joined()
+                let mut nullable = Vec::new();
+                for (i, (n, t)) in ls.fields().iter().enumerate() {
+                    fields.push((n.clone(), *t));
+                    if let Some((_, rk)) = on.iter().find(|(lk, _)| lk == n) {
+                        nullable.push(
+                            ls.nullable_at(i) || rs.nullable_of(rk).unwrap_or(false),
+                        );
                     } else {
-                        *t
-                    };
-                    fields.push((n.clone(), t));
+                        nullable.push(ls.nullable_at(i) || how.nullable_left());
+                    }
                 }
-                for (n, t) in rs.fields() {
+                for (i, (n, t)) in rs.fields().iter().enumerate() {
                     if rkeys.contains(n.as_str()) {
                         continue;
                     }
                     if ls.dtype_of(n).is_some() {
                         bail!("join: column :{n} exists on both sides — rename first");
                     }
-                    let t = if how.nullable_right() {
-                        t.null_joined()
-                    } else {
-                        *t
-                    };
-                    fields.push((n.clone(), t));
+                    fields.push((n.clone(), *t));
+                    nullable.push(rs.nullable_at(i) || how.nullable_right());
                 }
-                Ok(Schema::new(fields))
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Aggregate { input, keys, aggs } => {
                 let s = input.schema()?;
@@ -252,6 +260,7 @@ impl Plan {
                     bail!("aggregate: needs at least one key column");
                 }
                 let mut fields = Vec::new();
+                let mut nullable = Vec::new();
                 for key in keys {
                     let kt = s
                         .dtype_of(key)
@@ -263,14 +272,17 @@ impl Plan {
                         bail!("aggregate: duplicate key :{key}");
                     }
                     fields.push((key.clone(), kt));
+                    // a nullable key keeps its null group in the output
+                    nullable.push(s.nullable_of(key).unwrap_or(false));
                 }
                 for a in aggs {
                     if fields.iter().any(|(n, _)| n == &a.out) {
                         bail!("aggregate: duplicate output column :{}", a.out);
                     }
                     fields.push((a.out.clone(), a.output_dtype(&s)?));
+                    nullable.push(a.output_nullable(&s)?);
                 }
-                Ok(Schema::new(fields))
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Concat { inputs } => {
                 let first = inputs
@@ -293,14 +305,20 @@ impl Plan {
                 if !dt.is_numeric() {
                     bail!("cumsum over non-numeric column :{column}");
                 }
-                let mut fields: Vec<(String, DType)> = s
-                    .fields()
-                    .iter()
-                    .filter(|(n, _)| n != out)
-                    .cloned()
-                    .collect();
+                if s.nullable_of(column) == Some(true) {
+                    bail!("cumsum over nullable column :{column} — fill_null first");
+                }
+                let mut fields: Vec<(String, DType)> = Vec::new();
+                let mut nullable = Vec::new();
+                for (i, (n, t)) in s.fields().iter().enumerate() {
+                    if n != out {
+                        fields.push((n.clone(), *t));
+                        nullable.push(s.nullable_at(i));
+                    }
+                }
                 fields.push((out.clone(), dt));
-                Ok(Schema::new(fields))
+                nullable.push(false);
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Stencil {
                 input,
@@ -315,20 +333,26 @@ impl Plan {
                 if !dt.is_numeric() {
                     bail!("stencil over non-numeric column :{column}");
                 }
+                if s.nullable_of(column) == Some(true) {
+                    bail!("stencil over nullable column :{column} — fill_null first");
+                }
                 if weights.is_empty() || weights.len() % 2 == 0 {
                     bail!(
                         "stencil weights must have odd length, got {}",
                         weights.len()
                     );
                 }
-                let mut fields: Vec<(String, DType)> = s
-                    .fields()
-                    .iter()
-                    .filter(|(n, _)| n != out)
-                    .cloned()
-                    .collect();
+                let mut fields: Vec<(String, DType)> = Vec::new();
+                let mut nullable = Vec::new();
+                for (i, (n, t)) in s.fields().iter().enumerate() {
+                    if n != out {
+                        fields.push((n.clone(), *t));
+                        nullable.push(s.nullable_at(i));
+                    }
+                }
                 fields.push((out.clone(), DType::F64));
-                Ok(Schema::new(fields))
+                nullable.push(false);
+                Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Sort { input, keys } => {
                 let s = input.schema()?;
@@ -355,6 +379,9 @@ impl Plan {
                         .with_context(|| format!("matrix assembly: unknown column :{c}"))?;
                     if !(dt.is_numeric() || dt == DType::Bool) {
                         bail!("matrix assembly: column :{c} is {dt}, not castable");
+                    }
+                    if s.nullable_of(c) == Some(true) {
+                        bail!("matrix assembly: column :{c} is nullable — fill_null first");
                     }
                     fields.push((format!("f{i}"), DType::F64));
                 }
@@ -619,8 +646,8 @@ mod tests {
     }
 
     #[test]
-    fn schema_outer_joins_introduce_nulls() {
-        // Left join: right payload promoted (I64 tag → F64), keys keep dtype
+    fn schema_outer_joins_introduce_nullability_not_promotion() {
+        // Left join: right payload keeps its dtype and becomes *nullable*
         let j = Plan::Join {
             left: Box::new(src()),
             right: Box::new(right_src()),
@@ -628,10 +655,13 @@ mod tests {
             how: JoinType::Left,
         };
         let s = j.schema().unwrap();
-        assert_eq!(s.dtype_of("id"), Some(DType::I64)); // key never null
+        assert_eq!(s.dtype_of("id"), Some(DType::I64)); // key slot
+        assert_eq!(s.nullable_of("id"), Some(false)); // non-null inputs → non-null key
         assert_eq!(s.dtype_of("x"), Some(DType::F64)); // left side intact
-        assert_eq!(s.dtype_of("tag"), Some(DType::F64)); // promoted
-        // Right join: left payload promoted instead
+        assert_eq!(s.nullable_of("x"), Some(false));
+        assert_eq!(s.dtype_of("tag"), Some(DType::I64)); // dtype preserved!
+        assert_eq!(s.nullable_of("tag"), Some(true)); // …but nullable
+        // Right join: left payload becomes nullable instead
         let j = Plan::Join {
             left: Box::new(src()),
             right: Box::new(right_src()),
@@ -639,9 +669,10 @@ mod tests {
             how: JoinType::Right,
         };
         let s = j.schema().unwrap();
-        assert_eq!(s.dtype_of("id"), Some(DType::I64));
-        assert_eq!(s.dtype_of("tag"), Some(DType::I64)); // right side intact
-        // Outer: both payloads promoted
+        assert_eq!(s.nullable_of("x"), Some(true));
+        assert_eq!(s.dtype_of("tag"), Some(DType::I64));
+        assert_eq!(s.nullable_of("tag"), Some(false)); // right side intact
+        // Outer: both payloads nullable, dtypes still native
         let j = Plan::Join {
             left: Box::new(src()),
             right: Box::new(right_src()),
@@ -650,7 +681,54 @@ mod tests {
         };
         let s = j.schema().unwrap();
         assert_eq!(s.dtype_of("id"), Some(DType::I64));
-        assert_eq!(s.dtype_of("tag"), Some(DType::F64));
+        assert_eq!(s.nullable_of("id"), Some(false));
+        assert_eq!(s.dtype_of("tag"), Some(DType::I64));
+        assert_eq!(s.nullable_of("x"), Some(true));
+        assert_eq!(s.nullable_of("tag"), Some(true));
+    }
+
+    #[test]
+    fn nullable_inputs_propagate_and_gate_block_ops() {
+        // a left join output feeding further ops: nullable columns propagate
+        // through WithColumn expressions, and block-distribution ops reject
+        // nullable inputs until fill_null
+        let join = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(right_src()),
+            on: vec![("id".into(), "cid".into())],
+            how: JoinType::Left,
+        };
+        let wc = Plan::WithColumn {
+            input: Box::new(join.clone()),
+            name: "t2".into(),
+            expr: col("tag").add(lit(1i64)),
+        };
+        assert_eq!(wc.schema().unwrap().nullable_of("t2"), Some(true));
+        let filled = Plan::WithColumn {
+            input: Box::new(join.clone()),
+            name: "t3".into(),
+            expr: col("tag").fill_null(0i64),
+        };
+        assert_eq!(filled.schema().unwrap().nullable_of("t3"), Some(false));
+        // cumsum over the nullable column is a schema-time error
+        let bad = Plan::Cumsum {
+            input: Box::new(join.clone()),
+            column: "tag".into(),
+            out: "cs".into(),
+        };
+        assert!(bad.schema().is_err());
+        let bad = Plan::Stencil {
+            input: Box::new(join.clone()),
+            column: "y".into(),
+            out: "sma".into(),
+            weights: vec![1.0],
+        };
+        assert!(bad.schema().is_err());
+        let bad = Plan::MatrixAssembly {
+            input: Box::new(join),
+            columns: vec!["tag".into()],
+        };
+        assert!(bad.schema().is_err());
     }
 
     #[test]

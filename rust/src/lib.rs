@@ -47,7 +47,7 @@ pub mod types;
 
 /// Convenience re-exports for examples and tests.
 pub mod prelude {
-    pub use crate::column::{ArithOp, CmpOp, Column, MathFn};
+    pub use crate::column::{ArithOp, CmpOp, Column, MathFn, NullableColumn, ValidityMask};
     pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf};
     pub use crate::frame::*;
     pub use crate::table::{Schema, Table};

@@ -3,6 +3,13 @@
 //! (the paper's `agg1_table[key]` loop in Fig. 5, with the key generalized
 //! from one i64 to a [`KeyRow`]).
 //!
+//! Null model: null key cells form their own group (null == null, the
+//! Pandas rule), routed through the validity-flagged packed layout; null
+//! *input* rows are skipped by every reduction (`sum`/`mean`/… over the
+//! valid rows only, `count` = valid count). A group whose inputs are all
+//! null yields 0 for `sum`/`count` and NULL for `mean`/`var`/`min`/`max`/
+//! `first` (see [`agg_output_nullable`]).
+//!
 //! Two strategies, ablated in `benches/ablations.rs`:
 //! * **raw shuffle** — ship `(key cols, expr values)` rows, aggregate after.
 //!   This is exactly the paper's codegen.
@@ -11,12 +18,13 @@
 //!   `[key row, states…]` records, merge after. A classic combiner; wins
 //!   when keys repeat within ranks (§Perf).
 
+use super::join::{global_any, MaskedCol};
 use super::keys::{
-    cmp_key_rows, decode_key_row, encode_key_cells, group_packed, key_columns, key_rows,
-    skip_key_row, KeyRow, PackedKeys,
+    cmp_key_rows, decode_key_row, encode_key_cells_nullable, group_packed, key_columns,
+    key_rows_nullable, skip_key_row, KeyRow, PackedKeys,
 };
-use super::shuffle::shuffle_by_packed;
-use crate::column::Column;
+use super::shuffle::shuffle_by_packed_nullable;
+use crate::column::{Column, NullableColumn, ValidityMask};
 use crate::comm::Comm;
 use crate::expr::{AggFn, AggState};
 use crate::fxhash::FxHashMap;
@@ -38,61 +46,89 @@ pub struct AggSpec {
     pub input_dtype: DType,
 }
 
+/// May this reduction produce NULL (when its group's inputs are all null)?
+/// `sum`/`count`/`count_distinct` have natural empty values (0); the order
+/// and moment statistics do not.
+pub fn agg_output_nullable(func: AggFn) -> bool {
+    crate::expr::func_output_nullable(func)
+}
+
 /// Aggregate `expr_cols[i]` under `specs[i]` grouped by the composite key
-/// columns, distributed over `comm`. Returns the local shard of the result:
-/// unique key tuples owned by this rank (one output column per key column,
-/// dtype preserved) plus one value column per spec. Output distribution:
-/// `1D_VAR`.
+/// columns (all with optional validity masks), distributed over `comm`.
+/// Returns the local shard of the result: unique key tuples owned by this
+/// rank (one output column per key column, dtype preserved, null keys kept)
+/// plus one value column per spec. Output distribution: `1D_VAR`.
 pub fn distributed_aggregate_keys(
     comm: &Comm,
-    key_cols: &[&Column],
-    expr_cols: &[&Column],
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
     specs: &[AggSpec],
     strategy: AggStrategy,
-) -> Result<(Vec<Column>, Vec<Column>)> {
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     assert_eq!(expr_cols.len(), specs.len());
     if key_cols.is_empty() {
         bail!("aggregate: key column list must be non-empty");
     }
     let p = comm.nranks();
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+    // flagged-vs-plain key layout must be agreed globally: the owner rank of
+    // a key tuple is a function of its packed bytes
+    let with_flags = global_any(comm, km.iter().any(|m| m.is_some()));
+    let packed = PackedKeys::pack_masked(&kc, &km, with_flags)?;
     match strategy {
         AggStrategy::RawShuffle => {
-            let packed = PackedKeys::pack(key_cols)?;
-            let mut all: Vec<&Column> = key_cols.to_vec();
-            all.extend_from_slice(expr_cols);
-            let all = shuffle_by_packed(comm, &packed, &all)?;
-            let (kc, ec) = all.split_at(key_cols.len());
-            let krefs: Vec<&Column> = kc.iter().collect();
-            let erefs: Vec<&Column> = ec.iter().collect();
+            let mut all: Vec<&Column> = kc.clone();
+            let mut masks: Vec<Option<&ValidityMask>> = km.clone();
+            for (c, m) in expr_cols {
+                all.push(c);
+                masks.push(*m);
+            }
+            let (all, rmasks) = shuffle_by_packed_nullable(comm, &packed, &all, &masks)?;
+            let (rkc, rec) = all.split_at(key_cols.len());
+            let (rkm, rem) = rmasks.split_at(key_cols.len());
+            let krefs: Vec<MaskedCol> = rkc
+                .iter()
+                .zip(rkm)
+                .map(|(c, m)| (c, m.as_ref()))
+                .collect();
+            let erefs: Vec<MaskedCol> = rec
+                .iter()
+                .zip(rem)
+                .map(|(c, m)| (c, m.as_ref()))
+                .collect();
             local_packed_aggregate(&krefs, &erefs, specs)
         }
         AggStrategy::PreAggregate => {
-            // fold locally into partial states per packed key group
-            let packed = PackedKeys::pack(key_cols)?;
+            // fold locally into partial states per packed key group,
+            // skipping null input rows
             let groups = group_packed(&packed);
             let mut states: Vec<Vec<AggState>> = Vec::with_capacity(groups.num_groups());
             for (i, &g) in groups.group_of_row.iter().enumerate() {
                 if g as usize == states.len() {
                     states.push(new_states(specs));
                 }
-                for (s, &c) in states[g as usize].iter_mut().zip(expr_cols) {
-                    s.update_col(c, i);
+                for (s, (c, m)) in states[g as usize].iter_mut().zip(expr_cols) {
+                    if m.map_or(true, |m| m.get(i)) {
+                        s.update_col(c, i);
+                    }
                 }
             }
             // serialize per destination: [key row, state0, state1, …]
             // records, key cells wire-encoded straight from the columns
+            // (null cells as the null tag)
             let mut bufs: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
             for (g, &rep) in groups.rep_rows.iter().enumerate() {
                 let buf = &mut bufs[packed.owner(rep as usize, p)];
-                encode_key_cells(key_cols, rep as usize, buf);
+                encode_key_cells_nullable(&kc, &km, rep as usize, buf);
                 for s in &states[g] {
                     s.encode(buf);
                 }
             }
             let received = comm.alltoallv_bytes(bufs);
             // merge incoming partials, keyed on the raw encoded key bytes
-            // (the wire format is injective, so byte equality is tuple
-            // equality — one small allocation per distinct group, not per row)
+            // (the wire format is injective — the null tag included — so
+            // byte equality is tuple equality)
             let mut merged: FxHashMap<Vec<u8>, Vec<AggState>> = FxHashMap::default();
             for buf in received {
                 let mut pos = 0;
@@ -117,6 +153,7 @@ pub fn distributed_aggregate_keys(
                 }
             }
             // decode one tuple per surviving group; deterministic asc order
+            // (nulls first, per KeyVal's ordering)
             let mut entries: Vec<(KeyRow, Vec<AggState>)> = Vec::with_capacity(merged.len());
             for (kb, st) in merged {
                 let mut pos = 0;
@@ -124,48 +161,47 @@ pub fn distributed_aggregate_keys(
             }
             entries.sort_by(|a, b| cmp_key_rows(&a.0, &b.0, &[]));
             let mut rows: Vec<KeyRow> = Vec::with_capacity(entries.len());
-            let mut outs: Vec<Column> = specs
-                .iter()
-                .map(|sp| Column::new_empty(agg_output_dtype(sp)))
-                .collect();
+            let mut outs = new_outputs(specs);
             for (k, st) in entries {
                 rows.push(k);
-                for (out, s) in outs.iter_mut().zip(&st) {
-                    out.push(&s.finish());
-                }
+                push_outputs(&mut outs, specs, &st);
             }
-            let key_out = key_columns(&rows, key_cols);
-            Ok((key_out, outs))
+            let key_out = key_columns(&rows, &kc);
+            Ok((key_out, finish_outputs(outs)))
         }
     }
 }
 
 /// Purely local aggregation over a *packed* key set — the HiFrames
 /// post-shuffle half: dense group ids from [`group_packed`], one state
-/// vector per group, key columns rebuilt by gathering the group
-/// representatives (no per-row tuple, no per-group re-push of cells).
-/// Output rows are sorted by ascending key tuple so runs are reproducible —
-/// the same order as the KeyRow reference path.
+/// vector per group (null input rows skipped), key columns rebuilt by
+/// gathering the group representatives. Output rows are sorted by ascending
+/// key tuple (nulls first) so runs are reproducible — the same order as the
+/// KeyRow reference path.
 pub fn local_packed_aggregate(
-    key_cols: &[&Column],
-    expr_cols: &[&Column],
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
     specs: &[AggSpec],
-) -> Result<(Vec<Column>, Vec<Column>)> {
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     if key_cols.is_empty() {
         bail!("aggregate: key column list must be non-empty");
     }
-    let packed = PackedKeys::pack(key_cols)?;
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+    let packed = PackedKeys::pack_nullable(&kc, &km)?;
     let groups = group_packed(&packed);
     let mut states: Vec<Vec<AggState>> = Vec::with_capacity(groups.num_groups());
     for (i, &g) in groups.group_of_row.iter().enumerate() {
         if g as usize == states.len() {
             states.push(new_states(specs));
         }
-        for (s, &c) in states[g as usize].iter_mut().zip(expr_cols) {
-            s.update_col(c, i);
+        for (s, (c, m)) in states[g as usize].iter_mut().zip(expr_cols) {
+            if m.map_or(true, |m| m.get(i)) {
+                s.update_col(c, i);
+            }
         }
     }
-    // deterministic output order: ascending key tuples
+    // deterministic output order: ascending key tuples (nulls first)
     let mut order: Vec<usize> = (0..groups.num_groups()).collect();
     order.sort_by(|&a, &b| {
         packed.cmp_rows(
@@ -175,38 +211,42 @@ pub fn local_packed_aggregate(
         )
     });
     let rep_idx: Vec<usize> = order.iter().map(|&g| groups.rep_rows[g] as usize).collect();
-    let key_out: Vec<Column> = key_cols.iter().map(|c| c.take(&rep_idx)).collect();
-    let mut outs: Vec<Column> = specs
+    let key_out: Vec<NullableColumn> = key_cols
         .iter()
-        .map(|sp| Column::new_empty(agg_output_dtype(sp)))
+        .map(|(c, m)| {
+            NullableColumn::new(c.take(&rep_idx), m.map(|m| m.take(&rep_idx)))
+        })
         .collect();
+    let mut outs = new_outputs(specs);
     for &g in &order {
-        for (out, s) in outs.iter_mut().zip(&states[g]) {
-            out.push(&s.finish());
-        }
+        push_outputs(&mut outs, specs, &states[g]);
     }
-    Ok((key_out, outs))
+    Ok((key_out, finish_outputs(outs)))
 }
 
 /// Purely local hash aggregation over composite keys via materialized
 /// [`KeyRow`] tuples — the reference implementation, kept as the serial
 /// baseline's path so engine-agreement tests cross-check the packed fast
 /// path ([`local_packed_aggregate`]) against an independent one. Output rows
-/// are sorted by key tuple so runs are reproducible.
+/// are sorted by key tuple (nulls first) so runs are reproducible.
 pub fn local_hash_aggregate_keys(
-    key_cols: &[&Column],
-    expr_cols: &[Column],
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
     specs: &[AggSpec],
-) -> Result<(Vec<Column>, Vec<Column>)> {
-    let rows = key_rows(key_cols)?;
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+    let rows = key_rows_nullable(&kc, &km)?;
     let mut table: FxHashMap<KeyRow, Vec<AggState>> = FxHashMap::default();
     for (i, k) in rows.into_iter().enumerate() {
         let states = table.entry(k).or_insert_with(|| new_states(specs));
-        for (s, c) in states.iter_mut().zip(expr_cols) {
-            s.update_col(c, i);
+        for (s, (c, m)) in states.iter_mut().zip(expr_cols) {
+            if m.map_or(true, |m| m.get(i)) {
+                s.update_col(c, i);
+            }
         }
     }
-    Ok(finish_table(table, specs, key_cols))
+    Ok(finish_table(table, specs, &kc))
 }
 
 /// Single-i64-key local aggregation — the seed API, kept as a wrapper.
@@ -216,9 +256,13 @@ pub fn local_hash_aggregate(
     specs: &[AggSpec],
 ) -> (Vec<i64>, Vec<Column>) {
     let kc = Column::I64(keys.to_vec());
-    let (kcols, outs) = local_hash_aggregate_keys(&[&kc], expr_cols, specs)
+    let erefs: Vec<MaskedCol> = expr_cols.iter().map(|c| (c, None)).collect();
+    let (kcols, outs) = local_hash_aggregate_keys(&[(&kc, None)], &erefs, specs)
         .expect("i64 keys are always groupable");
-    (kcols[0].as_i64().to_vec(), outs)
+    (
+        kcols[0].values.as_i64().to_vec(),
+        outs.into_iter().map(|c| c.values).collect(),
+    )
 }
 
 /// Single-i64-key distributed aggregation — the seed API, kept as a wrapper.
@@ -230,9 +274,13 @@ pub fn distributed_aggregate(
     strategy: AggStrategy,
 ) -> Result<(Vec<i64>, Vec<Column>)> {
     let kc = Column::I64(keys.to_vec());
-    let erefs: Vec<&Column> = expr_cols.iter().collect();
-    let (kcols, outs) = distributed_aggregate_keys(comm, &[&kc], &erefs, specs, strategy)?;
-    Ok((kcols[0].as_i64().to_vec(), outs))
+    let erefs: Vec<MaskedCol> = expr_cols.iter().map(|c| (c, None)).collect();
+    let (kcols, outs) =
+        distributed_aggregate_keys(comm, &[(&kc, None)], &erefs, specs, strategy)?;
+    Ok((
+        kcols[0].values.as_i64().to_vec(),
+        outs.into_iter().map(|c| c.values).collect(),
+    ))
 }
 
 fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
@@ -253,27 +301,58 @@ fn agg_output_dtype(sp: &AggSpec) -> DType {
     }
 }
 
+fn new_outputs(specs: &[AggSpec]) -> Vec<(Column, ValidityMask)> {
+    specs
+        .iter()
+        .map(|sp| {
+            (
+                Column::new_empty(agg_output_dtype(sp)),
+                ValidityMask::new_null(0),
+            )
+        })
+        .collect()
+}
+
+/// Append one group's finished reductions: an all-null group's order/moment
+/// statistics become NULL, everything else pushes its scalar.
+fn push_outputs(
+    outs: &mut [(Column, ValidityMask)],
+    specs: &[AggSpec],
+    states: &[AggState],
+) {
+    for (((out, mask), sp), s) in outs.iter_mut().zip(specs).zip(states) {
+        if agg_output_nullable(sp.func) && s.is_empty() {
+            out.push(&out.dtype().default_value());
+            mask.push(false);
+        } else {
+            out.push(&s.finish());
+            mask.push(true);
+        }
+    }
+}
+
+fn finish_outputs(outs: Vec<(Column, ValidityMask)>) -> Vec<NullableColumn> {
+    outs.into_iter()
+        .map(|(c, m)| NullableColumn::new(c, Some(m)))
+        .collect()
+}
+
 fn finish_table(
     table: FxHashMap<KeyRow, Vec<AggState>>,
     specs: &[AggSpec],
     key_templates: &[&Column],
-) -> (Vec<Column>, Vec<Column>) {
-    // deterministic output order (lexicographically sorted key tuples) so
-    // runs are reproducible
+) -> (Vec<NullableColumn>, Vec<NullableColumn>) {
+    // deterministic output order (lexicographically sorted key tuples,
+    // nulls first) so runs are reproducible
     let mut keys: Vec<&KeyRow> = table.keys().collect();
     keys.sort();
-    let mut outs: Vec<Column> = specs
-        .iter()
-        .map(|sp| Column::new_empty(agg_output_dtype(sp)))
-        .collect();
+    let mut outs = new_outputs(specs);
     for k in &keys {
-        for (out, state) in outs.iter_mut().zip(&table[*k]) {
-            out.push(&state.finish());
-        }
+        push_outputs(&mut outs, specs, &table[*k]);
     }
     let sorted_rows: Vec<KeyRow> = keys.into_iter().cloned().collect();
     let key_out = key_columns(&sorted_rows, key_templates);
-    (key_out, outs)
+    (key_out, finish_outputs(outs))
 }
 
 #[cfg(test)]
@@ -316,15 +395,19 @@ mod tests {
         let k1 = Column::I64(vec![1, 1, 1, 2]);
         let k2 = Column::Str(vec!["a".into(), "b".into(), "a".into(), "a".into()]);
         let vals = Column::F64(vec![10.0, 20.0, 30.0, 40.0]);
-        let (kcols, outs) =
-            local_hash_aggregate_keys(&[&k1, &k2], &[vals], &specs()[..1]).unwrap();
+        let (kcols, outs) = local_hash_aggregate_keys(
+            &[(&k1, None), (&k2, None)],
+            &[(&vals, None)],
+            &specs()[..1],
+        )
+        .unwrap();
         // sorted key-tuple order: (1,a), (1,b), (2,a)
-        assert_eq!(kcols[0].as_i64(), &[1, 1, 2]);
+        assert_eq!(kcols[0].values.as_i64(), &[1, 1, 2]);
         assert_eq!(
-            kcols[1].as_str_col(),
+            kcols[1].values.as_str_col(),
             &["a".to_string(), "b".into(), "a".into()]
         );
-        assert_eq!(outs[0].as_f64(), &[40.0, 20.0, 40.0]);
+        assert_eq!(outs[0].values.as_f64(), &[40.0, 20.0, 40.0]);
         // single-column grouping would have produced 2 groups, not 3
     }
 
@@ -338,21 +421,48 @@ mod tests {
         let vals = Column::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
         let sp = specs();
         for key_set in [vec![&k1], vec![&k1, &k3], vec![&k1, &k2], vec![&k1, &k2, &k3]] {
-            let (pk, po) = local_packed_aggregate(
-                &key_set,
-                &[&vals, &vals, &vals],
-                &sp,
-            )
-            .unwrap();
-            let (rk, ro) = local_hash_aggregate_keys(
-                &key_set,
-                &[vals.clone(), vals.clone(), vals.clone()],
-                &sp,
-            )
-            .unwrap();
+            let masked: Vec<MaskedCol> = key_set.iter().map(|&c| (c, None)).collect();
+            let evals: Vec<MaskedCol> = vec![(&vals, None); 3];
+            let (pk, po) = local_packed_aggregate(&masked, &evals, &sp).unwrap();
+            let (rk, ro) = local_hash_aggregate_keys(&masked, &evals, &sp).unwrap();
             assert_eq!(pk, rk, "key columns for {} keys", key_set.len());
             assert_eq!(po, ro, "agg outputs for {} keys", key_set.len());
         }
+    }
+
+    #[test]
+    fn null_skipping_and_null_key_groups_match_reference() {
+        use crate::column::ValidityMask;
+        // nullable key: rows 0 and 3 have null keys (scrubbed to 0);
+        // nullable input: rows 1 and 4 are null inputs
+        let k = Column::I64(vec![0, 7, 7, 0, 9]);
+        let kmask = ValidityMask::from_bools(&[false, true, true, false, true]);
+        let v = Column::F64(vec![1.0, 0.0, 3.0, 4.0, 0.0]);
+        let vmask = ValidityMask::from_bools(&[true, false, true, true, false]);
+        let sp = vec![
+            AggSpec { func: AggFn::Sum, input_dtype: DType::F64 },
+            AggSpec { func: AggFn::Count, input_dtype: DType::F64 },
+            AggSpec { func: AggFn::Mean, input_dtype: DType::F64 },
+        ];
+        let keys: Vec<MaskedCol> = vec![(&k, Some(&kmask))];
+        let evals: Vec<MaskedCol> = vec![(&v, Some(&vmask)); 3];
+        let (pk, po) = local_packed_aggregate(&keys, &evals, &sp).unwrap();
+        let (rk, ro) = local_hash_aggregate_keys(&keys, &evals, &sp).unwrap();
+        assert_eq!(pk, rk);
+        assert_eq!(po, ro);
+        // groups in nulls-first order: null, 7, 9
+        assert_eq!(pk[0].values.as_i64(), &[0, 7, 9]);
+        assert_eq!(
+            pk[0].validity.as_ref().unwrap().to_bools(),
+            vec![false, true, true]
+        );
+        // null group: rows 0,3 valid inputs sum 5.0 count 2
+        assert_eq!(po[0].values.as_f64(), &[5.0, 3.0, 0.0]);
+        assert_eq!(po[1].values.as_i64(), &[2, 1, 0]);
+        // group 9 has only a null input → mean is NULL, sum/count are 0
+        assert!(po[2].is_valid(0) && po[2].is_valid(1));
+        assert!(!po[2].is_valid(2), "all-null group's mean must be NULL");
+        assert!(po[0].validity.is_none() && po[1].validity.is_none());
     }
 
     #[test]
@@ -408,6 +518,62 @@ mod tests {
     }
 
     #[test]
+    fn distributed_nullable_keys_single_owner_per_group() {
+        use crate::column::ValidityMask;
+        // nullable keys where only rank 0 holds a mask: the null group and
+        // every valid key must still each land on exactly one rank, for both
+        // strategies (global layout agreement)
+        for strategy in [AggStrategy::RawShuffle, AggStrategy::PreAggregate] {
+            let out = run_spmd(3, |c| {
+                let keys = Column::I64(vec![0, 1, 2, 3]);
+                let mask = if c.rank() == 0 {
+                    Some(ValidityMask::from_bools(&[false, true, true, true]))
+                } else {
+                    None
+                };
+                // scrub to canonical form like the exec layer does
+                let mut kvals = keys.clone();
+                if let Some(m) = &mask {
+                    crate::column::scrub_invalid(&mut kvals, m);
+                }
+                let vals = Column::F64(vec![1.0; 4]);
+                let (kc, outs) = distributed_aggregate_keys(
+                    &c,
+                    &[(&kvals, mask.as_ref())],
+                    &[(&vals, None)],
+                    &specs()[..2],
+                    strategy,
+                )
+                .unwrap();
+                let mut rows = Vec::new();
+                for i in 0..kc[0].len() {
+                    rows.push((
+                        kc[0].is_valid(i),
+                        kc[0].values.as_i64()[i],
+                        outs[1].values.as_i64()[i],
+                    ));
+                }
+                rows
+            });
+            let mut all: Vec<(bool, i64, i64)> = out.into_iter().flatten().collect();
+            all.sort();
+            // groups: null (1 row from rank 0), 0 (2 rows: ranks 1,2),
+            // 1 (2 valid + rank 0's), 2, 3 likewise
+            assert_eq!(
+                all,
+                vec![
+                    (false, 0, 1),
+                    (true, 0, 2),
+                    (true, 1, 3),
+                    (true, 2, 3),
+                    (true, 3, 3)
+                ],
+                "strategy {strategy:?}"
+            );
+        }
+    }
+
+    #[test]
     fn distributed_composite_strategies_agree() {
         // keys (i % 3, i % 2 as bool) with value i, over 3 ranks of 8 rows
         let expected_groups = 6usize;
@@ -420,16 +586,16 @@ mod tests {
                 let vals = Column::F64(ids.iter().map(|&i| i as f64).collect());
                 let (kcols, outs) = distributed_aggregate_keys(
                     &c,
-                    &[&k1, &k2],
-                    &[&vals],
+                    &[(&k1, None), (&k2, None)],
+                    &[(&vals, None)],
                     &specs()[..1],
                     strategy,
                 )
                 .unwrap();
                 (
-                    kcols[0].as_i64().to_vec(),
-                    kcols[1].as_bool().to_vec(),
-                    outs[0].as_f64().to_vec(),
+                    kcols[0].values.as_i64().to_vec(),
+                    kcols[1].values.as_bool().to_vec(),
+                    outs[0].values.as_f64().to_vec(),
                 )
             });
             let mut rows: Vec<(i64, bool, f64)> = out
@@ -497,6 +663,25 @@ mod tests {
         assert_eq!(k, vec![5]);
         assert_eq!(outs[0].as_i64(), &[-2]);
         assert_eq!(outs[1].as_i64(), &[9]);
+    }
+
+    #[test]
+    fn min_over_all_null_group_is_null_not_inf() {
+        use crate::column::ValidityMask;
+        let spec = vec![AggSpec {
+            func: AggFn::Min,
+            input_dtype: DType::I64,
+        }];
+        let k = Column::I64(vec![1, 1]);
+        let v = Column::I64(vec![0, 0]);
+        let vm = ValidityMask::new_null(2);
+        let (kc, outs) =
+            local_hash_aggregate_keys(&[(&k, None)], &[(&v, Some(&vm))], &spec).unwrap();
+        assert_eq!(kc[0].values.as_i64(), &[1]);
+        // the dtype is preserved (no F64 ∞ leak) and the value is NULL
+        assert_eq!(outs[0].dtype(), DType::I64);
+        assert!(!outs[0].is_valid(0));
+        assert_eq!(outs[0].values.as_i64(), &[0]);
     }
 
     #[test]

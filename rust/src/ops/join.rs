@@ -13,12 +13,25 @@
 //! property tests.
 
 use super::keys::{KeyRow, PackedKeys};
-use super::shuffle::shuffle_by_packed;
-use crate::column::Column;
+use super::shuffle::shuffle_by_packed_nullable;
+use crate::column::{Column, NullableColumn, ValidityMask};
 use crate::comm::Comm;
 use crate::fxhash::FxHashMap;
 use crate::types::JoinType;
 use anyhow::{bail, Result};
+
+/// One column with its optional validity mask — the argument shape of the
+/// nullable relational operators.
+pub type MaskedCol<'a> = (&'a Column, Option<&'a ValidityMask>);
+
+/// Does any rank contribute `local` = true? Layout decisions that feed the
+/// hash-routing (flagged vs. unflagged packed keys) must be *globally*
+/// consistent, or equal keys would land on different owner ranks.
+pub(crate) fn global_any(comm: &Comm, local: bool) -> bool {
+    comm.allgather_bytes(vec![local as u8])
+        .iter()
+        .any(|b| b.first().copied().unwrap_or(0) != 0)
+}
 
 /// Local sort-merge inner join over single i64 keys (the seed's kernel).
 /// Returns `(left_indices, right_indices)` — one entry per output row (the
@@ -161,90 +174,142 @@ pub fn local_join_pairs(
     out
 }
 
-/// Distributed equi-join over composite keys.
+/// Distributed equi-join over composite keys with validity masks.
 ///
-/// `lkey_cols`/`rkey_cols` are the key columns in `on`-pair order (equal
-/// dtypes per pair, validated by plan typing); `lpay`/`rpay` the non-key
-/// payload columns. Returns:
+/// `lkeys`/`rkeys` are the key columns (with optional masks) in `on`-pair
+/// order (equal dtypes per pair, validated by plan typing); `lpay`/`rpay`
+/// the non-key payload columns. Null keys are ordinary key values (null
+/// matches null — the Pandas merge rule), routed/compared through the
+/// validity-flagged packed layout; the flag choice is agreed globally so
+/// equal keys colocate no matter which rank holds a mask. Returns:
 ///
-/// * one output key column per pair (key dtype preserved — keys are never
-///   null in an equi-join: each output row has the key from whichever side
-///   is present);
-/// * the left payload columns (null-promoted via
-///   [`Column::take_nullable`] when `how.nullable_left()`);
-/// * the right payload columns (empty for Semi/Anti, null-promoted when
+/// * one output key column per pair (key dtype preserved; value and
+///   validity from whichever side is present);
+/// * the left payload columns (dtype preserved; unmatched rows get cleared
+///   validity bits when `how.nullable_left()`);
+/// * the right payload columns (empty for Semi/Anti, null-introduced when
 ///   `how.nullable_right()`).
 ///
 /// Output distribution is `1D_VAR`.
 pub fn distributed_join_on(
     comm: &Comm,
-    lkey_cols: &[&Column],
-    lpay: &[&Column],
-    rkey_cols: &[&Column],
-    rpay: &[&Column],
+    lkeys: &[MaskedCol],
+    lpay: &[MaskedCol],
+    rkeys: &[MaskedCol],
+    rpay: &[MaskedCol],
     how: JoinType,
-) -> Result<(Vec<Column>, Vec<Column>, Vec<Column>)> {
-    if lkey_cols.len() != rkey_cols.len() || lkey_cols.is_empty() {
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
+    if lkeys.len() != rkeys.len() || lkeys.is_empty() {
         bail!("join: key column lists must be non-empty and equal length");
     }
+    // every rank (and both sides) must agree on the flagged-vs-plain key
+    // layout, or the hash routing would split equal keys across ranks
+    let local_flag = lkeys.iter().chain(rkeys).any(|(_, m)| m.is_some());
+    let with_flags = global_any(comm, local_flag);
+
+    fn split<'a>(
+        side: &[MaskedCol<'a>],
+    ) -> (Vec<&'a Column>, Vec<Option<&'a ValidityMask>>) {
+        (
+            side.iter().map(|(c, _)| *c).collect(),
+            side.iter().map(|(_, m)| *m).collect(),
+        )
+    }
+    let (lkc, lkm) = split(lkeys);
+    let (rkc, rkm) = split(rkeys);
+    let lpacked_pre = PackedKeys::pack_masked(&lkc, &lkm, with_flags)?;
+    let rpacked_pre = PackedKeys::pack_masked(&rkc, &rkm, with_flags)?;
+
     // route both sides by the hash of their packed key set — no per-row
     // tuples, and no column clones on the way into the shuffle
-    let lpacked_pre = PackedKeys::pack(lkey_cols)?;
-    let rpacked_pre = PackedKeys::pack(rkey_cols)?;
-    let mut lall: Vec<&Column> = lkey_cols.to_vec();
-    lall.extend_from_slice(lpay);
-    let mut rall: Vec<&Column> = rkey_cols.to_vec();
-    rall.extend_from_slice(rpay);
-    let lall = shuffle_by_packed(comm, &lpacked_pre, &lall)?;
-    let rall = shuffle_by_packed(comm, &rpacked_pre, &rall)?;
-    let (lk, lc) = lall.split_at(lkey_cols.len());
-    let (rk, rc) = rall.split_at(rkey_cols.len());
+    let mut lall: Vec<&Column> = lkc.clone();
+    let mut lmasks: Vec<Option<&ValidityMask>> = lkm.clone();
+    for (c, m) in lpay {
+        lall.push(c);
+        lmasks.push(*m);
+    }
+    let mut rall: Vec<&Column> = rkc.clone();
+    let mut rmasks: Vec<Option<&ValidityMask>> = rkm.clone();
+    for (c, m) in rpay {
+        rall.push(c);
+        rmasks.push(*m);
+    }
+    let (lall, lrmasks) = shuffle_by_packed_nullable(comm, &lpacked_pre, &lall, &lmasks)?;
+    let (rall, rrmasks) = shuffle_by_packed_nullable(comm, &rpacked_pre, &rall, &rmasks)?;
+    let (lk, lc) = lall.split_at(lkeys.len());
+    let (lkm2, lcm) = lrmasks.split_at(lkeys.len());
+    let (rk, rc) = rall.split_at(rkeys.len());
+    let (rkm2, rcm) = rrmasks.split_at(rkeys.len());
 
     let lkrefs: Vec<&Column> = lk.iter().collect();
     let rkrefs: Vec<&Column> = rk.iter().collect();
-    let lpacked = PackedKeys::pack(&lkrefs)?;
-    let rpacked = PackedKeys::pack(&rkrefs)?;
+    let lkmrefs: Vec<Option<&ValidityMask>> = lkm2.iter().map(|m| m.as_ref()).collect();
+    let rkmrefs: Vec<Option<&ValidityMask>> = rkm2.iter().map(|m| m.as_ref()).collect();
+    // post-shuffle: only the two local sides must agree on the layout
+    let local_flags = lkmrefs.iter().chain(&rkmrefs).any(|m| m.is_some());
+    let lpacked = PackedKeys::pack_masked(&lkrefs, &lkmrefs, local_flags)?;
+    let rpacked = PackedKeys::pack_masked(&rkrefs, &rkmrefs, local_flags)?;
     let pairs = packed_join_pairs(&lpacked, &rpacked, how);
 
-    // output key columns: value from whichever side is present, gathered
-    // straight from the shuffled key columns
-    let keys_out: Vec<Column> = lk
-        .iter()
-        .zip(rk.iter())
-        .map(|(a, b)| take_merged(a, b, &pairs))
+    // output key columns: value + validity from whichever side is present,
+    // gathered straight from the shuffled key columns
+    let keys_out: Vec<NullableColumn> = (0..lk.len())
+        .map(|j| {
+            take_merged(
+                (&lk[j], lkmrefs[j]),
+                (&rk[j], rkmrefs[j]),
+                &pairs,
+            )
+        })
         .collect();
 
     let lidx: Vec<Option<usize>> = pairs.iter().map(|&(lo, _)| lo).collect();
-    let left_out: Vec<Column> = if how.nullable_left() {
-        lc.iter().map(|c| c.take_nullable(&lidx)).collect()
+    let left_out: Vec<NullableColumn> = if how.nullable_left() {
+        lc.iter()
+            .zip(lcm)
+            .map(|(c, m)| c.take_opt_masked(m.as_ref(), &lidx))
+            .collect()
     } else {
         let li: Vec<usize> = lidx.iter().map(|o| o.expect("left index")).collect();
-        lc.iter().map(|c| c.take(&li)).collect()
+        lc.iter()
+            .zip(lcm)
+            .map(|(c, m)| {
+                NullableColumn::new(c.take(&li), m.as_ref().map(|m| m.take(&li)))
+            })
+            .collect()
     };
 
-    let right_out: Vec<Column> = if !how.keeps_right_columns() {
+    let right_out: Vec<NullableColumn> = if !how.keeps_right_columns() {
         Vec::new()
     } else {
         let ridx: Vec<Option<usize>> = pairs.iter().map(|&(_, ro)| ro).collect();
         if how.nullable_right() {
-            rc.iter().map(|c| c.take_nullable(&ridx)).collect()
+            rc.iter()
+                .zip(rcm)
+                .map(|(c, m)| c.take_opt_masked(m.as_ref(), &ridx))
+                .collect()
         } else {
             let ri: Vec<usize> = ridx.iter().map(|o| o.expect("right index")).collect();
-            rc.iter().map(|c| c.take(&ri)).collect()
+            rc.iter()
+                .zip(rcm)
+                .map(|(c, m)| {
+                    NullableColumn::new(c.take(&ri), m.as_ref().map(|m| m.take(&ri)))
+                })
+                .collect()
         }
     };
     Ok((keys_out, left_out, right_out))
 }
 
 /// Gather one output key column from a join's `(left, right)` index pairs:
-/// each output row takes the key cell from whichever side is present. Both
-/// columns have the key dtype (validated by plan typing), so the output
-/// dtype is preserved — join keys are never null.
+/// each output row takes the key cell (value *and* validity bit) from
+/// whichever side is present. Both columns have the key dtype (validated by
+/// plan typing), so the output dtype is preserved.
 fn take_merged(
-    left: &Column,
-    right: &Column,
+    left: MaskedCol,
+    right: MaskedCol,
     pairs: &[(Option<usize>, Option<usize>)],
-) -> Column {
+) -> NullableColumn {
     fn pick<'v, T>(a: &'v [T], b: &'v [T], lo: Option<usize>, ro: Option<usize>) -> &'v T {
         match (lo, ro) {
             (Some(i), _) => &a[i],
@@ -252,7 +317,9 @@ fn take_merged(
             (None, None) => unreachable!("join pair with no sides"),
         }
     }
-    match (left, right) {
+    let (lcol, lmask) = left;
+    let (rcol, rmask) = right;
+    let values = match (lcol, rcol) {
         (Column::I64(a), Column::I64(b)) => Column::I64(
             pairs
                 .iter()
@@ -276,7 +343,30 @@ fn take_merged(
             a.dtype(),
             b.dtype()
         ),
-    }
+    };
+    let validity = if lmask.is_some() || rmask.is_some() {
+        let mut m = ValidityMask::new_null(pairs.len());
+        for (o, &(lo, ro)) in pairs.iter().enumerate() {
+            let ok = match (lo, ro) {
+                (Some(i), _) => lmask.map_or(true, |m| m.get(i)),
+                (None, Some(j)) => rmask.map_or(true, |m| m.get(j)),
+                (None, None) => unreachable!("join pair with no sides"),
+            };
+            if ok {
+                m.set(o, true);
+            }
+        }
+        Some(m)
+    } else {
+        None
+    };
+    NullableColumn::new(values, validity)
+}
+
+/// Borrowed masked views over plain columns (no masks) — adapter for
+/// mask-free call sites.
+pub fn plain<'a>(cols: &[&'a Column]) -> Vec<MaskedCol<'a>> {
+    cols.iter().map(|&c| (c, None)).collect()
 }
 
 /// Distributed inner equi-join over single i64 keys — the seed API, now a
@@ -291,17 +381,21 @@ pub fn distributed_join(
 ) -> Result<(Vec<i64>, Vec<Column>, Vec<Column>)> {
     let lkc = Column::I64(lkeys.to_vec());
     let rkc = Column::I64(rkeys.to_vec());
-    let lrefs: Vec<&Column> = lcols.iter().collect();
-    let rrefs: Vec<&Column> = rcols.iter().collect();
+    let lrefs: Vec<MaskedCol> = lcols.iter().map(|c| (c, None)).collect();
+    let rrefs: Vec<MaskedCol> = rcols.iter().map(|c| (c, None)).collect();
     let (keys, lout, rout) = distributed_join_on(
         comm,
-        &[&lkc],
+        &[(&lkc, None)],
         &lrefs,
-        &[&rkc],
+        &[(&rkc, None)],
         &rrefs,
         JoinType::Inner,
     )?;
-    Ok((keys[0].as_i64().to_vec(), lout, rout))
+    Ok((
+        keys[0].values.as_i64().to_vec(),
+        lout.into_iter().map(|c| c.values).collect(),
+        rout.into_iter().map(|c| c.values).collect(),
+    ))
 }
 
 #[cfg(test)]
@@ -515,7 +609,7 @@ mod tests {
     }
 
     #[test]
-    fn distributed_left_join_null_fills() {
+    fn distributed_left_join_masks_unmatched() {
         // left keys 0..6 over 2 ranks; right covers only even keys
         let lk_all: Vec<i64> = (0..6).collect();
         let rk_all: Vec<i64> = vec![0, 2, 4];
@@ -528,38 +622,97 @@ mod tests {
             let rval = Column::I64(rk_all[rs..rs + rl].iter().map(|k| k + 200).collect());
             let (keys, lc, rc) = distributed_join_on(
                 &c,
-                &[&lkc],
-                &[&lval],
-                &[&rkc],
-                &[&rval],
+                &[(&lkc, None)],
+                &[(&lval, None)],
+                &[(&rkc, None)],
+                &[(&rval, None)],
                 JoinType::Left,
             )
             .unwrap();
+            // the right payload keeps its Int64 dtype — nulls live in the mask
+            assert_eq!(rc[0].dtype(), crate::types::DType::I64);
+            assert!(lc[0].validity.is_none(), "left side of a left join never null");
             (
-                keys[0].as_i64().to_vec(),
-                lc[0].as_i64().to_vec(),
-                rc[0].as_f64().to_vec(), // null-promoted
+                keys[0].values.as_i64().to_vec(),
+                lc[0].values.as_i64().to_vec(),
+                rc[0].values.as_i64().to_vec(),
+                (0..rc[0].len()).map(|i| rc[0].is_valid(i)).collect::<Vec<_>>(),
             )
         });
-        let mut rows: Vec<(i64, i64, String)> = out
+        let mut rows: Vec<(i64, i64, i64, bool)> = out
             .iter()
-            .flat_map(|(k, l, r)| {
+            .flat_map(|(k, l, r, v)| {
                 k.iter()
                     .zip(l.iter())
-                    .zip(r.iter())
-                    .map(|((&k, &l), &r)| (k, l, format!("{r}")))
+                    .zip(r.iter().zip(v.iter()))
+                    .map(|((&k, &l), (&r, &v))| (k, l, r, v))
             })
             .collect();
         rows.sort();
         assert_eq!(rows.len(), 6); // every left row survives
-        for (k, l, r) in &rows {
+        for (k, l, r, valid) in &rows {
             assert_eq!(*l, k + 100);
             if k % 2 == 0 {
-                assert_eq!(r, &format!("{}", *k as f64 + 200.0));
+                assert!(valid, "matched row {k} must be valid");
+                assert_eq!(*r, k + 200);
             } else {
-                assert_eq!(r, "NaN");
+                assert!(!valid, "unmatched row {k} must be null");
+                assert_eq!(*r, 0, "null lanes hold the dtype default");
             }
         }
+    }
+
+    #[test]
+    fn distributed_join_on_nullable_keys_colocate() {
+        // nullable I64 keys: null keys from both sides must meet (null ==
+        // null) even when only SOME ranks hold masks — the global layout
+        // agreement. Left rows 0..6 with nulls on odd ranks' rows; right has
+        // one null-keyed row and keys {2, 4}.
+        use crate::column::ValidityMask;
+        let out = run_spmd(3, |c| {
+            let lvals: Vec<i64> = vec![0, 2 + c.rank() as i64];
+            let lkc = Column::I64(lvals.clone());
+            // rank 1 nulls its first key; other ranks are fully valid
+            let lmask = if c.rank() == 1 {
+                Some(ValidityMask::from_bools(&[false, true]))
+            } else {
+                None
+            };
+            let lpay = Column::I64(vec![10 * c.rank() as i64, 10 * c.rank() as i64 + 1]);
+            // right side only on rank 0: a null key and key 2
+            let (rkc, rmask, rpay) = if c.rank() == 0 {
+                (
+                    Column::I64(vec![0, 2]),
+                    Some(ValidityMask::from_bools(&[false, true])),
+                    Column::I64(vec![777, 222]),
+                )
+            } else {
+                (Column::I64(vec![]), None, Column::I64(vec![]))
+            };
+            let (keys, _, rc) = distributed_join_on(
+                &c,
+                &[(&lkc, lmask.as_ref())],
+                &[(&lpay, None)],
+                &[(&rkc, rmask.as_ref())],
+                &[(&rpay, None)],
+                JoinType::Inner,
+            )
+            .unwrap();
+            let mut rows = Vec::new();
+            for i in 0..keys[0].len() {
+                rows.push((
+                    keys[0].is_valid(i),
+                    keys[0].values.as_i64()[i],
+                    rc[0].values.as_i64()[i],
+                ));
+            }
+            rows
+        });
+        let mut all: Vec<(bool, i64, i64)> = out.into_iter().flatten().collect();
+        all.sort();
+        // rank 1's null key matches the right null key (777); key 2 appears
+        // once on the left (rank 0's second row) matching 222
+        assert_eq!(all, vec![(false, 0, 777), (true, 2, 222)]);
     }
 
     #[test]
@@ -576,9 +729,10 @@ mod tests {
                 let lkc = Column::I64(lk_all[ls..ls + ll].to_vec());
                 let rkc = Column::I64(rk_all[rs..rs + rl].to_vec());
                 let (keys, _, rc) =
-                    distributed_join_on(&c, &[&lkc], &[], &[&rkc], &[], how).unwrap();
+                    distributed_join_on(&c, &[(&lkc, None)], &[], &[(&rkc, None)], &[], how)
+                        .unwrap();
                 assert!(rc.is_empty());
-                keys[0].as_i64().to_vec()
+                keys[0].values.as_i64().to_vec()
             });
             let mut got: Vec<i64> = out.into_iter().flatten().collect();
             got.sort();

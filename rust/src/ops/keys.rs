@@ -22,16 +22,21 @@
 //! Float64 columns are rejected as keys at plan-typing time, so every key
 //! cell has exact equality.
 
-use crate::column::Column;
+use crate::column::{Column, NullableColumn, ValidityMask};
 use crate::fxhash::{self, FxHashMap, FxHasher};
 use crate::types::{DType, SortOrder, Value};
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
 use std::hash::{BuildHasher, BuildHasherDefault};
 
-/// One cell of a composite key. Variants cover exactly the groupable dtypes.
+/// One cell of a composite key. Variants cover exactly the groupable dtypes
+/// plus the null cell. `Null` is declared *first* so the derived `Ord`
+/// places nulls before every value — the nulls-first rule every key path
+/// (KeyRow and packed) shares. Null keys equal each other (a null group /
+/// null-key join matches, the Pandas rule rather than SQL's).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum KeyVal {
+    Null,
     I64(i64),
     Bool(bool),
     Str(String),
@@ -44,7 +49,8 @@ impl KeyVal {
             Value::I64(x) => KeyVal::I64(*x),
             Value::Bool(x) => KeyVal::Bool(*x),
             Value::Str(x) => KeyVal::Str(x.clone()),
-            Value::F64(_) => bail!("Float64 cannot be a relational key"),
+            Value::Null(dt) if dt.is_groupable() => KeyVal::Null,
+            Value::F64(_) | Value::Null(_) => bail!("Float64 cannot be a relational key"),
         })
     }
 
@@ -53,7 +59,21 @@ impl KeyVal {
             KeyVal::I64(x) => Value::I64(*x),
             KeyVal::Bool(x) => Value::Bool(*x),
             KeyVal::Str(x) => Value::Str(x.clone()),
+            KeyVal::Null => panic!("KeyVal::Null needs a dtype — use to_value_typed"),
         }
+    }
+
+    /// [`KeyVal::to_value`] with the column dtype supplied, so null cells
+    /// can round-trip as typed [`Value::Null`]s.
+    pub fn to_value_typed(&self, dt: DType) -> Value {
+        match self {
+            KeyVal::Null => Value::Null(dt),
+            other => other.to_value(),
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, KeyVal::Null)
     }
 }
 
@@ -62,23 +82,39 @@ pub type KeyRow = Vec<KeyVal>;
 
 /// Materialize per-row key tuples from the key columns (all equal length).
 pub fn key_rows(cols: &[&Column]) -> Result<Vec<KeyRow>> {
+    let masks: Vec<Option<&ValidityMask>> = vec![None; cols.len()];
+    key_rows_nullable(cols, &masks)
+}
+
+/// Materialize per-row key tuples from nullable key columns: invalid rows
+/// become [`KeyVal::Null`] cells.
+pub fn key_rows_nullable(
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+) -> Result<Vec<KeyRow>> {
+    debug_assert_eq!(cols.len(), masks.len());
     let n = cols.first().map_or(0, |c| c.len());
     let mut out: Vec<KeyRow> = (0..n).map(|_| Vec::with_capacity(cols.len())).collect();
-    for c in cols {
+    for (c, mask) in cols.iter().zip(masks) {
+        let valid = |i: usize| mask.map_or(true, |m| m.get(i));
         match c {
             Column::I64(v) => {
-                for (row, x) in out.iter_mut().zip(v) {
-                    row.push(KeyVal::I64(*x));
+                for (i, (row, x)) in out.iter_mut().zip(v).enumerate() {
+                    row.push(if valid(i) { KeyVal::I64(*x) } else { KeyVal::Null });
                 }
             }
             Column::Bool(v) => {
-                for (row, x) in out.iter_mut().zip(v) {
-                    row.push(KeyVal::Bool(*x));
+                for (i, (row, x)) in out.iter_mut().zip(v).enumerate() {
+                    row.push(if valid(i) { KeyVal::Bool(*x) } else { KeyVal::Null });
                 }
             }
             Column::Str(v) => {
-                for (row, x) in out.iter_mut().zip(v) {
-                    row.push(KeyVal::Str(x.clone()));
+                for (i, (row, x)) in out.iter_mut().zip(v).enumerate() {
+                    row.push(if valid(i) {
+                        KeyVal::Str(x.clone())
+                    } else {
+                        KeyVal::Null
+                    });
                 }
             }
             Column::F64(_) => bail!("Float64 cannot be a relational key"),
@@ -114,7 +150,8 @@ pub fn cmp_key_rows(a: &[KeyVal], b: &[KeyVal], orders: &[SortOrder]) -> Orderin
     Ordering::Equal
 }
 
-/// Wire-encode one key tuple (tag byte + payload per cell).
+/// Wire-encode one key tuple (tag byte + payload per cell; tag 3 = null,
+/// no payload).
 pub fn encode_key_row(row: &[KeyVal], buf: &mut Vec<u8>) {
     for v in row {
         match v {
@@ -131,6 +168,7 @@ pub fn encode_key_row(row: &[KeyVal], buf: &mut Vec<u8>) {
                 buf.extend_from_slice(&(x.len() as u32).to_le_bytes());
                 buf.extend_from_slice(x.as_bytes());
             }
+            KeyVal::Null => buf.push(3),
         }
     }
 }
@@ -172,6 +210,7 @@ pub fn decode_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<KeyRo
                 *pos += len;
                 row.push(KeyVal::Str(s));
             }
+            3 => row.push(KeyVal::Null),
             t => bail!("key row decode: bad tag {t}"),
         }
     }
@@ -181,7 +220,25 @@ pub fn decode_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<KeyRo
 /// Wire-encode the key cells of row `i` of `cols` — byte-identical to
 /// [`encode_key_row`] on the materialized tuple, without building it.
 pub fn encode_key_cells(cols: &[&Column], i: usize, buf: &mut Vec<u8>) {
-    for c in cols {
+    let masks: Vec<Option<&ValidityMask>> = vec![None; cols.len()];
+    encode_key_cells_nullable(cols, &masks, i, buf);
+}
+
+/// [`encode_key_cells`] over nullable key columns: invalid cells encode as
+/// the null tag, matching [`encode_key_row`] on [`KeyVal::Null`].
+pub fn encode_key_cells_nullable(
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+    i: usize,
+    buf: &mut Vec<u8>,
+) {
+    for (c, mask) in cols.iter().zip(masks) {
+        if let Some(m) = mask {
+            if !m.get(i) {
+                buf.push(3);
+                continue;
+            }
+        }
         match c {
             Column::I64(v) => {
                 buf.push(0);
@@ -233,6 +290,7 @@ pub fn skip_key_row(ncols: usize, buf: &[u8], pos: &mut usize) -> Result<()> {
                 need(pos, len)?;
                 *pos += len;
             }
+            3 => {}
             t => bail!("key row skip: bad tag {t}"),
         }
     }
@@ -273,40 +331,63 @@ fn escape_str_into(s: &str, out: &mut Vec<u8>) {
 /// Shared fixed-width packing loop (Int64/Bool columns only): concatenated
 /// order-preserving cells, with optional per-column bit inversion (the
 /// descending directions of [`SortKeys`]; missing entries mean no
-/// inversion). Returns `(row_width, packed_rows)`.
-fn pack_fixed(cols: &[&Column], invert: &[bool]) -> (usize, Vec<u8>) {
+/// inversion). With `with_flags`, every cell is preceded by a validity flag
+/// byte (0 = null, 1 = valid) so byte order places nulls *before* all
+/// values — and the inversion covers the flag too, so descending columns
+/// order nulls last. Null cells pack the canonical default value bytes, so
+/// two nulls compare equal. Returns `(row_width, packed_rows)`.
+fn pack_fixed(
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+    with_flags: bool,
+    invert: &[bool],
+) -> (usize, Vec<u8>) {
     let n = cols.first().map_or(0, |c| c.len());
+    let flag = usize::from(with_flags);
     let width: usize = cols
         .iter()
-        .map(|c| match c.dtype() {
-            DType::I64 => 8,
-            _ => 1,
+        .map(|c| {
+            flag + match c.dtype() {
+                DType::I64 => 8,
+                _ => 1,
+            }
         })
         .sum();
     let mut data = vec![0u8; n * width];
     let mut off = 0usize;
     for (k, &c) in cols.iter().enumerate() {
         let inv = invert.get(k).copied().unwrap_or(false);
+        let mask = masks.get(k).copied().flatten();
+        let valid = |i: usize| mask.map_or(true, |m| m.get(i));
         match c {
             Column::I64(v) => {
                 for (i, &x) in v.iter().enumerate() {
-                    let mut b = pack_i64_be(x);
+                    let ok = valid(i);
+                    let mut b = pack_i64_be(if ok { x } else { 0 });
+                    let at = i * width + off;
+                    if with_flags {
+                        data[at] = if inv { !(ok as u8) } else { ok as u8 };
+                    }
                     if inv {
                         for byte in &mut b {
                             *byte = !*byte;
                         }
                     }
-                    let at = i * width + off;
-                    data[at..at + 8].copy_from_slice(&b);
+                    data[at + flag..at + flag + 8].copy_from_slice(&b);
                 }
-                off += 8;
+                off += flag + 8;
             }
             Column::Bool(v) => {
                 for (i, &x) in v.iter().enumerate() {
-                    let b = x as u8;
-                    data[i * width + off] = if inv { !b } else { b };
+                    let ok = valid(i);
+                    let b = (ok && x) as u8;
+                    let at = i * width + off;
+                    if with_flags {
+                        data[at] = if inv { !(ok as u8) } else { ok as u8 };
+                    }
+                    data[at + flag] = if inv { !b } else { b };
                 }
-                off += 1;
+                off += flag + 1;
             }
             _ => unreachable!("fixed packing requires Int64/Bool columns"),
         }
@@ -331,12 +412,37 @@ pub enum PackedKeys<'a> {
 }
 
 impl<'a> PackedKeys<'a> {
-    /// Pack the key columns (all equal length; Float64 rejected).
+    /// Pack non-nullable key columns (all equal length; Float64 rejected).
     pub fn pack(cols: &[&'a Column]) -> Result<PackedKeys<'a>> {
+        let masks: Vec<Option<&ValidityMask>> = vec![None; cols.len()];
+        Self::pack_masked(cols, &masks, false)
+    }
+
+    /// Pack possibly-nullable key columns. The flagged layout is used only
+    /// when a mask is actually present, so fully-valid key sets keep the
+    /// zero-copy / plain layouts.
+    pub fn pack_nullable(
+        cols: &[&'a Column],
+        masks: &[Option<&'a ValidityMask>],
+    ) -> Result<PackedKeys<'a>> {
+        Self::pack_masked(cols, masks, masks.iter().any(|m| m.is_some()))
+    }
+
+    /// Pack with an explicit layout choice: `with_flags` prefixes every cell
+    /// with a validity flag byte (0 = null sorts first, 1 = valid). The two
+    /// sides of a join must agree on `with_flags` (pass
+    /// `left_has_mask || right_has_mask`) so their rows stay mutually
+    /// comparable.
+    pub fn pack_masked(
+        cols: &[&'a Column],
+        masks: &[Option<&'a ValidityMask>],
+        with_flags: bool,
+    ) -> Result<PackedKeys<'a>> {
+        debug_assert_eq!(cols.len(), masks.len());
         if cols.iter().any(|c| c.dtype() == DType::F64) {
             bail!("Float64 cannot be a relational key");
         }
-        if cols.len() == 1 {
+        if !with_flags && cols.len() == 1 {
             if let Column::I64(v) = cols[0] {
                 return Ok(PackedKeys::I64(v.as_slice()));
             }
@@ -344,17 +450,26 @@ impl<'a> PackedKeys<'a> {
         let n = cols.first().map_or(0, |c| c.len());
         debug_assert!(cols.iter().all(|c| c.len() == n));
         if cols.iter().all(|c| matches!(c.dtype(), DType::I64 | DType::Bool)) {
-            let (width, data) = pack_fixed(cols, &[]);
+            let (width, data) = pack_fixed(cols, masks, with_flags, &[]);
             return Ok(PackedKeys::Fixed { width, data });
         }
         // String fallback: variable-width rows; intern each distinct string's
-        // escaped encoding once for this operator.
+        // escaped encoding once for this operator. Null cells are the flag
+        // byte alone — comparison decides at the flag, then continues into
+        // the next cell.
         let mut interned: FxHashMap<&'a str, Vec<u8>> = FxHashMap::default();
         let mut data: Vec<u8> = Vec::new();
         let mut offsets: Vec<usize> = Vec::with_capacity(n + 1);
         offsets.push(0);
         for i in 0..n {
-            for &c in cols {
+            for (ci, &c) in cols.iter().enumerate() {
+                let ok = masks[ci].map_or(true, |m| m.get(i));
+                if with_flags {
+                    data.push(ok as u8);
+                    if !ok {
+                        continue;
+                    }
+                }
                 match c {
                     Column::I64(v) => data.extend_from_slice(&pack_i64_be(v[i])),
                     Column::Bool(v) => data.push(v[i] as u8),
@@ -516,6 +631,22 @@ impl SortKeys {
     /// Pack `cols` under `orders` (missing directions default to ascending).
     /// `Ok(None)` = String key present, use the KeyRow path.
     pub fn pack(cols: &[&Column], orders: &[SortOrder]) -> Result<Option<SortKeys>> {
+        let masks: Vec<Option<&ValidityMask>> = vec![None; cols.len()];
+        Self::pack_nullable(cols, &masks, orders, false)
+    }
+
+    /// [`SortKeys::pack`] over nullable key columns. `with_flags` must be
+    /// true whenever *any* rank's chunk of the key set can carry a mask
+    /// (decided from the static schema), so the packed row width — the
+    /// splitter wire format — is identical on every rank. Flag bytes invert
+    /// with their column's direction: ascending orders nulls first,
+    /// descending orders them last.
+    pub fn pack_nullable(
+        cols: &[&Column],
+        masks: &[Option<&ValidityMask>],
+        orders: &[SortOrder],
+        with_flags: bool,
+    ) -> Result<Option<SortKeys>> {
         if cols.iter().any(|c| c.dtype() == DType::F64) {
             bail!("Float64 cannot be a relational key");
         }
@@ -531,7 +662,8 @@ impl SortKeys {
                 )
             })
             .collect();
-        let (width, data) = pack_fixed(cols, &invert);
+        let with_flags = with_flags || masks.iter().any(|m| m.is_some());
+        let (width, data) = pack_fixed(cols, masks, with_flags, &invert);
         Ok(Some(SortKeys {
             width,
             data,
@@ -590,18 +722,27 @@ impl SortKeys {
 }
 
 /// Rebuild key columns (one per key position) from key tuples, pushing in
-/// row order. `templates` supplies the dtype of each position.
-pub fn key_columns(rows: &[KeyRow], templates: &[&Column]) -> Vec<Column> {
+/// row order. `templates` supplies the dtype of each position; null cells
+/// push the dtype default and clear the validity bit.
+pub fn key_columns(rows: &[KeyRow], templates: &[&Column]) -> Vec<NullableColumn> {
     let mut cols: Vec<Column> = templates
         .iter()
         .map(|c| Column::new_empty(c.dtype()))
         .collect();
+    let mut masks: Vec<ValidityMask> = templates
+        .iter()
+        .map(|_| ValidityMask::new_null(0))
+        .collect();
     for row in rows {
-        for (col, cell) in cols.iter_mut().zip(row) {
-            col.push(&cell.to_value());
+        for ((col, mask), cell) in cols.iter_mut().zip(masks.iter_mut()).zip(row) {
+            let v = cell.to_value_typed(col.dtype());
+            crate::column::push_nullable(col, mask, &v);
         }
     }
-    cols
+    cols.into_iter()
+        .zip(masks)
+        .map(|(c, m)| NullableColumn::new(c, Some(m)))
+        .collect()
 }
 
 #[cfg(test)]
@@ -673,8 +814,154 @@ mod tests {
         let b = Column::Str(vec!["p".into(), "q".into()]);
         let rows = key_rows(&[&a, &b]).unwrap();
         let cols = key_columns(&rows, &[&a, &b]);
-        assert_eq!(cols[0], a);
-        assert_eq!(cols[1], b);
+        assert_eq!(cols[0].values, a);
+        assert!(cols[0].validity.is_none());
+        assert_eq!(cols[1].values, b);
+        // null cells round-trip as default value + cleared bit
+        let rows = vec![
+            vec![KeyVal::Null, KeyVal::Str("p".into())],
+            vec![KeyVal::I64(7), KeyVal::Null],
+        ];
+        let cols = key_columns(&rows, &[&a, &b]);
+        assert_eq!(cols[0].values.as_i64(), &[0, 7]);
+        assert_eq!(cols[0].validity.as_ref().unwrap().to_bools(), vec![false, true]);
+        assert_eq!(cols[1].values.as_str_col(), &["p".to_string(), "".into()]);
+        assert_eq!(cols[1].validity.as_ref().unwrap().to_bools(), vec![true, false]);
+    }
+
+    #[test]
+    fn null_keyval_orders_first_and_roundtrips() {
+        // derived Ord: Null before every value
+        assert!(KeyVal::Null < KeyVal::I64(i64::MIN));
+        assert!(KeyVal::Null < KeyVal::Bool(false));
+        assert!(KeyVal::Null < KeyVal::Str(String::new()));
+        assert_eq!(KeyVal::Null, KeyVal::Null);
+        // wire roundtrip incl. the null tag
+        let row = vec![KeyVal::Null, KeyVal::I64(-3), KeyVal::Null, KeyVal::Str("x".into())];
+        let mut buf = Vec::new();
+        encode_key_row(&row, &mut buf);
+        let mut pos = 0;
+        assert_eq!(decode_key_row(4, &buf, &mut pos).unwrap(), row);
+        assert_eq!(pos, buf.len());
+        let mut pos = 0;
+        skip_key_row(4, &buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        // Value conversion
+        assert_eq!(
+            KeyVal::from_value(&Value::Null(DType::I64)).unwrap(),
+            KeyVal::Null
+        );
+        assert_eq!(
+            KeyVal::Null.to_value_typed(DType::Str),
+            Value::Null(DType::Str)
+        );
+    }
+
+    #[test]
+    fn nullable_packed_agrees_with_nullable_key_rows() {
+        use crate::column::ValidityMask;
+        // every dtype, nulls scattered; values under nulls pre-scrubbed to
+        // defaults (the canonical form the operators maintain)
+        let a = Column::I64(vec![0, -1, 0, 1, i64::MAX, 0]);
+        let am = ValidityMask::from_bools(&[false, true, true, true, true, false]);
+        let b = Column::Bool(vec![false, false, true, true, false, false]);
+        let bm = ValidityMask::from_bools(&[false, true, true, true, false, true]);
+        let s = Column::Str(vec![
+            "".into(),
+            "a".into(),
+            "".into(),
+            "a\0b".into(),
+            "".into(),
+            "z".into(),
+        ]);
+        let sm = ValidityMask::from_bools(&[true, true, false, true, false, true]);
+        let cases: Vec<(Vec<&Column>, Vec<Option<&ValidityMask>>)> = vec![
+            (vec![&a], vec![Some(&am)]),
+            (vec![&a, &b], vec![Some(&am), Some(&bm)]),
+            (vec![&a, &b], vec![None, Some(&bm)]),
+            (vec![&a, &s], vec![Some(&am), Some(&sm)]),
+            (vec![&a, &b, &s], vec![Some(&am), None, Some(&sm)]),
+        ];
+        for (cols, masks) in cases {
+            let packed = PackedKeys::pack_nullable(&cols, &masks).unwrap();
+            let rows = key_rows_nullable(&cols, &masks).unwrap();
+            assert_eq!(packed.len(), rows.len());
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    assert_eq!(
+                        packed.eq_rows(i, &packed, j),
+                        rows[i] == rows[j],
+                        "eq {i},{j} ({} cols)",
+                        cols.len()
+                    );
+                    assert_eq!(
+                        packed.cmp_rows(i, &packed, j),
+                        cmp_key_rows(&rows[i], &rows[j], &[]),
+                        "cmp {i},{j} ({} cols)",
+                        cols.len()
+                    );
+                    if rows[i] == rows[j] {
+                        assert_eq!(packed.hash_row(i), packed.hash_row(j));
+                        assert_eq!(packed.owner(i, 5), packed.owner(j, 5));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nullable_packed_layouts_and_cross_side_flag() {
+        use crate::column::ValidityMask;
+        let a = Column::I64(vec![1, 0]);
+        let am = ValidityMask::from_bools(&[true, false]);
+        // mask present → flagged Fixed layout even for a single i64 key
+        assert!(matches!(
+            PackedKeys::pack_nullable(&[&a], &[Some(&am)]).unwrap(),
+            PackedKeys::Fixed { width: 9, .. }
+        ));
+        // no mask → zero-copy layout preserved
+        assert!(matches!(
+            PackedKeys::pack_nullable(&[&a], &[None]).unwrap(),
+            PackedKeys::I64(_)
+        ));
+        // the two sides of a join must force a common layout: a mask-free
+        // side packed with flags is comparable to the masked side
+        let l = Column::I64(vec![0, 7]);
+        let lp = PackedKeys::pack_masked(&[&l], &[None], true).unwrap();
+        let rp = PackedKeys::pack_masked(&[&a], &[Some(&am)], true).unwrap();
+        assert!(lp.eq_rows(1, &lp, 1));
+        assert!(!lp.eq_rows(0, &rp, 1), "valid 0 must not equal null");
+        assert_eq!(rp.cmp_rows(1, &lp, 0), Ordering::Less, "null sorts first");
+        assert_eq!(rp.cmp_rows(1, &rp, 1), Ordering::Equal, "null == null");
+    }
+
+    #[test]
+    fn nullable_sort_keys_direction_aware() {
+        use crate::column::ValidityMask;
+        let a = Column::I64(vec![0, 5, 0, -2]);
+        let am = ValidityMask::from_bools(&[false, true, true, true]);
+        use crate::types::SortOrder::*;
+        let rows = key_rows_nullable(&[&a], &[Some(&am)]).unwrap();
+        for orders in [vec![Asc], vec![Desc]] {
+            let sk = SortKeys::pack_nullable(&[&a], &[Some(&am)], &orders, false)
+                .unwrap()
+                .unwrap();
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(
+                        sk.row(i).cmp(sk.row(j)),
+                        cmp_key_rows(&rows[i], &rows[j], &orders),
+                        "{orders:?} {i},{j}"
+                    );
+                }
+            }
+        }
+        // with_flags=true must widen the row even when this chunk has no
+        // mask (cross-rank splitter width agreement)
+        let sk = SortKeys::pack_nullable(&[&a], &[None], &[Asc], true)
+            .unwrap()
+            .unwrap();
+        assert_eq!(sk.width(), 9);
     }
 
     #[test]

@@ -29,16 +29,19 @@ pub mod sort;
 pub mod stencil;
 
 pub use aggregate::{
-    distributed_aggregate, distributed_aggregate_keys, local_hash_aggregate_keys,
-    local_packed_aggregate,
+    agg_output_nullable, distributed_aggregate, distributed_aggregate_keys,
+    local_hash_aggregate_keys, local_packed_aggregate,
 };
 pub use join::{
     distributed_join, distributed_join_on, local_join_pairs, local_sort_merge_join,
-    packed_join_pairs,
+    packed_join_pairs, MaskedCol,
 };
 pub use keys::{group_packed, KeyGroups, KeyRow, KeyVal, PackedKeys, SortKeys};
-pub use rebalance::rebalance_block;
+pub use rebalance::{rebalance_block, rebalance_block_nullable};
 pub use scan::{cumsum_f64, cumsum_i64};
-pub use shuffle::{shuffle_by_key, shuffle_by_owner, shuffle_by_packed};
+pub use shuffle::{
+    shuffle_by_key, shuffle_by_owner, shuffle_by_owner_nullable, shuffle_by_packed,
+    shuffle_by_packed_nullable,
+};
 pub use sort::{distributed_sort_by_key, distributed_sort_keys};
 pub use stencil::{stencil_1d, stencil_serial};

@@ -2,15 +2,29 @@
 //! to `1D_BLOCK` (equal chunks) *preserving global row order* — the
 //! collective the Distributed-Pass inserts "only when necessary" (§4.4).
 
-use crate::column::{decode_column, encode_column, Column};
+use crate::column::{
+    decode_nullable_column, encode_nullable_column, extend_opt_mask, Column, ValidityMask,
+};
 use crate::comm::{block_range, Comm};
 use anyhow::Result;
 
 /// Redistribute `cols` (this rank's contiguous chunk of a globally ordered
 /// frame) into 1D_BLOCK. Returns the new local chunk.
 pub fn rebalance_block(comm: &Comm, cols: &[Column]) -> Result<Vec<Column>> {
+    let refs: Vec<(&Column, Option<&ValidityMask>)> =
+        cols.iter().map(|c| (c, None)).collect();
+    let (out, _) = rebalance_block_nullable(comm, &refs)?;
+    Ok(out)
+}
+
+/// Nullable [`rebalance_block`]: every column ships with its optional
+/// validity mask, so null positions keep their global row order.
+pub fn rebalance_block_nullable(
+    comm: &Comm,
+    cols: &[(&Column, Option<&ValidityMask>)],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
     let p = comm.nranks();
-    let local_len = cols.first().map_or(0, |c| c.len());
+    let local_len = cols.first().map_or(0, |(c, _)| c.len());
 
     // establish global offsets: allgather chunk lengths
     let lens: Vec<u64> = comm
@@ -30,8 +44,12 @@ pub fn rebalance_block(comm: &Comm, cols: &[Column]) -> Result<Vec<Column>> {
         let lo = my_start.max(tstart);
         let hi = (my_start + local_len).min(tend);
         if lo < hi {
-            for c in cols {
-                encode_column(&c.slice(lo - my_start, hi - lo), buf);
+            for (c, m) in cols {
+                encode_nullable_column(
+                    &c.slice(lo - my_start, hi - lo),
+                    m.map(|m| m.slice(lo - my_start, hi - lo)).as_ref(),
+                    buf,
+                );
             }
         } else {
             // explicit empty marker: zero columns — receiver detects by len
@@ -40,18 +58,24 @@ pub fn rebalance_block(comm: &Comm, cols: &[Column]) -> Result<Vec<Column>> {
     }
     let received = comm.alltoallv_bytes(bufs);
 
-    let mut out: Vec<Column> = cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    let mut out: Vec<Column> = cols
+        .iter()
+        .map(|(c, _)| Column::new_empty(c.dtype()))
+        .collect();
+    let mut out_masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
     for buf in received {
         if buf.is_empty() {
             continue;
         }
         let mut pos = 0;
-        for oc in out.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
+        for (oc, om) in out.iter_mut().zip(out_masks.iter_mut()) {
+            let before = oc.len();
+            let (c, m) = decode_nullable_column(&buf, &mut pos)?;
             oc.extend(&c);
+            extend_opt_mask(om, before, m.as_ref(), c.len());
         }
     }
-    Ok(out)
+    Ok((out, out_masks))
 }
 
 #[cfg(test)]

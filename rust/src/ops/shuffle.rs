@@ -1,7 +1,10 @@
 //! Hash-partition shuffle: route each row to `key mod nranks` (the paper's
 //! hash partitioning, Fig. 5) and exchange with one `alltoallv`.
 
-use crate::column::{decode_column, encode_column_take, Column};
+use crate::column::{
+    decode_column, decode_nullable_column, encode_column_take, encode_nullable_column_take,
+    extend_opt_mask, Column, ValidityMask,
+};
 use crate::comm::Comm;
 use anyhow::Result;
 
@@ -65,14 +68,45 @@ pub fn shuffle_by_key(comm: &Comm, keys: &[i64], cols: &[Column]) -> Result<(Vec
 /// [`crate::ops::keys::PackedKeys::owners`]) and ship key columns alongside
 /// the payload. Takes column *references* so the exec layer never clones a
 /// column just to shuffle it. Returns the received columns in the same
-/// column order, per-source chunks concatenated in rank order.
+/// column order, per-source chunks concatenated in rank order. Thin wrapper
+/// over [`shuffle_by_owner_nullable`] (mask-free columns pay one flag byte
+/// each on the wire).
 pub fn shuffle_by_owner(
     comm: &Comm,
     owners: &[usize],
     cols: &[&Column],
 ) -> Result<Vec<Column>> {
+    let masks: Vec<Option<&ValidityMask>> = vec![None; cols.len()];
+    let (out, _) = shuffle_by_owner_nullable(comm, owners, cols, &masks)?;
+    Ok(out)
+}
+
+/// Hash-partition shuffle over a packed key set: route every row of `cols`
+/// to the owner rank of its key tuple. The keys travel as ordinary columns
+/// (the leading ones of `cols`); only the routing vector comes from the
+/// packed representation, so no per-row key tuple is ever materialized.
+pub fn shuffle_by_packed(
+    comm: &Comm,
+    keys: &crate::ops::keys::PackedKeys<'_>,
+    cols: &[&Column],
+) -> Result<Vec<Column>> {
+    let owners = keys.owners(comm.nranks());
+    shuffle_by_owner(comm, &owners, cols)
+}
+
+/// Nullable variant of [`shuffle_by_owner`]: each column travels with its
+/// optional validity mask (the nullable wire framing), so null positions
+/// survive the redistribution. Received masks stay `None` until a source
+/// chunk actually carries one (lazy materialization).
+pub fn shuffle_by_owner_nullable(
+    comm: &Comm,
+    owners: &[usize],
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
     let p = comm.nranks();
     debug_assert!(cols.iter().all(|c| c.len() == owners.len()));
+    debug_assert_eq!(cols.len(), masks.len());
 
     let mut counts = vec![0usize; p];
     for &d in owners {
@@ -87,8 +121,8 @@ pub fn shuffle_by_owner(
     let mut bufs = Vec::with_capacity(p);
     for idx in &buckets {
         let mut buf = Vec::new();
-        for &c in cols {
-            encode_column_take(c, idx, &mut buf);
+        for (&c, &m) in cols.iter().zip(masks.iter()) {
+            encode_nullable_column_take(c, m, idx, &mut buf);
         }
         bufs.push(buf);
     }
@@ -97,27 +131,28 @@ pub fn shuffle_by_owner(
 
     let mut out_cols: Vec<Column> =
         cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    let mut out_masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
     for buf in received {
         let mut pos = 0;
-        for oc in out_cols.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
+        for (oc, om) in out_cols.iter_mut().zip(out_masks.iter_mut()) {
+            let before = oc.len();
+            let (c, m) = decode_nullable_column(&buf, &mut pos)?;
             oc.extend(&c);
+            extend_opt_mask(om, before, m.as_ref(), c.len());
         }
     }
-    Ok(out_cols)
+    Ok((out_cols, out_masks))
 }
 
-/// Hash-partition shuffle over a packed key set: route every row of `cols`
-/// to the owner rank of its key tuple. The keys travel as ordinary columns
-/// (the leading ones of `cols`); only the routing vector comes from the
-/// packed representation, so no per-row key tuple is ever materialized.
-pub fn shuffle_by_packed(
+/// Nullable variant of [`shuffle_by_packed`].
+pub fn shuffle_by_packed_nullable(
     comm: &Comm,
     keys: &crate::ops::keys::PackedKeys<'_>,
     cols: &[&Column],
-) -> Result<Vec<Column>> {
+    masks: &[Option<&ValidityMask>],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
     let owners = keys.owners(comm.nranks());
-    shuffle_by_owner(comm, &owners, cols)
+    shuffle_by_owner_nullable(comm, &owners, cols, masks)
 }
 
 #[cfg(test)]
@@ -235,6 +270,49 @@ mod tests {
             }
         }
         assert_eq!(total, 36);
+    }
+
+    #[test]
+    fn nullable_shuffle_preserves_null_positions() {
+        use crate::column::ValidityMask;
+        use crate::ops::keys::PackedKeys;
+        let out = run_spmd(3, |c| {
+            // key i with value i*10, null where i % 3 == rank (so every rank
+            // contributes different null positions)
+            let keys: Vec<i64> = (0..9).collect();
+            let kcol = Column::I64(keys.clone());
+            let vcol = Column::I64(keys.iter().map(|&k| k * 10).collect());
+            let vmask = ValidityMask::from_bools(
+                &keys
+                    .iter()
+                    .map(|&k| (k % 3) as usize != c.rank())
+                    .collect::<Vec<_>>(),
+            );
+            let packed = PackedKeys::pack(&[&kcol]).unwrap();
+            let (cols, masks) = shuffle_by_packed_nullable(
+                &c,
+                &packed,
+                &[&kcol, &vcol],
+                &[None, Some(&vmask)],
+            )
+            .unwrap();
+            assert!(masks[0].is_none(), "key column never grew a mask");
+            (
+                cols[0].as_i64().to_vec(),
+                cols[1].as_i64().to_vec(),
+                masks[1].clone().unwrap().to_bools(),
+            )
+        });
+        let mut total = 0;
+        for (ks, vs, valid) in &out {
+            for ((k, v), ok) in ks.iter().zip(vs).zip(valid) {
+                assert_eq!(*v, k * 10, "payload stays attached");
+                // the row is null exactly when its origin rank == k % 3;
+                // each key appears once per source rank
+                total += usize::from(!ok);
+            }
+        }
+        assert_eq!(total, 9, "one null per (key, origin-rank) pair");
     }
 
     #[test]

@@ -11,41 +11,57 @@
 //! travel as raw packed rows. Key lists containing String columns fall back
 //! to materialized [`KeyRow`] tuples shipped through the [`keys`] wire
 //! codec, ordered by [`cmp_key_rows`].
+//!
+//! Null keys order as the smallest value (nulls *first* ascending, last
+//! descending) in both paths: the packed layout's validity flag byte
+//! precedes the value bytes, [`KeyVal::Null`] is the smallest `KeyVal`.
+//! Because the flagged row width must match on every rank (splitters are
+//! raw rows), the flag choice is agreed globally up front.
 
+use super::join::{global_any, MaskedCol};
 use super::keys::{self, cmp_key_rows, decode_key_row, encode_key_row, KeyRow, SortKeys};
-use crate::column::{decode_column, encode_column, Column};
+use crate::column::{
+    decode_nullable_column, encode_nullable_column, extend_opt_mask, Column, NullableColumn,
+    ValidityMask,
+};
 use crate::comm::Comm;
 use crate::types::SortOrder;
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
 
 /// Sort `(key_cols, payload)` globally by the key tuples under `orders`
-/// (one direction per key column). Rank r ends up holding the r-th range of
-/// the sorted order (contiguous, 1D_VAR). Returns the sorted key columns
-/// (dtypes preserved) and payload columns.
+/// (one direction per key column); every column may carry a validity mask.
+/// Rank r ends up holding the r-th range of the sorted order (contiguous,
+/// 1D_VAR). Returns the sorted key columns (dtypes preserved, masks kept)
+/// and payload columns.
 pub fn distributed_sort_keys(
     comm: &Comm,
-    key_cols: &[&Column],
+    key_cols: &[MaskedCol],
     orders: &[SortOrder],
-    payload: &[&Column],
-) -> Result<(Vec<Column>, Vec<Column>)> {
+    payload: &[MaskedCol],
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     if key_cols.is_empty() {
         bail!("sort: key column list must be non-empty");
     }
-    if let Some(sk) = SortKeys::pack(key_cols, orders)? {
-        return sort_packed(comm, sk, key_cols, orders, payload);
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+    // flagged-vs-plain packed width must be identical on every rank: the
+    // splitters travel as raw rows of that width
+    let with_flags = global_any(comm, km.iter().any(|m| m.is_some()));
+    if let Some(sk) = SortKeys::pack_nullable(&kc, &km, orders, with_flags)? {
+        return sort_packed(comm, sk, key_cols, orders, payload, with_flags);
     }
     let p = comm.nranks();
-    let krows = keys::key_rows(key_cols)?;
+    let krows = keys::key_rows_nullable(&kc, &km)?;
     // local sort (stable — Timsort-family, as in the paper)
     let mut idx: Vec<usize> = (0..krows.len()).collect();
     idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
     let skrows: Vec<KeyRow> = idx.iter().map(|&i| krows[i].clone()).collect();
-    let skey_cols: Vec<Column> = key_cols.iter().map(|c| c.take(&idx)).collect();
-    let spay: Vec<Column> = payload.iter().map(|c| c.take(&idx)).collect();
+    let skey: Vec<NullableColumn> = take_masked(key_cols, &idx);
+    let spay: Vec<NullableColumn> = take_masked(payload, &idx);
 
     if p == 1 {
-        return Ok((skey_cols, spay));
+        return Ok((skey, spay));
     }
 
     // regular sampling: p sample tuples per non-empty rank → root picks
@@ -100,12 +116,8 @@ pub fn distributed_sort_keys(
         };
         if end > start {
             let buf = &mut bufs[dst];
-            for c in &skey_cols {
-                encode_column(&c.slice(start, end - start), buf);
-            }
-            for c in &spay {
-                encode_column(&c.slice(start, end - start), buf);
-            }
+            encode_run(&skey, start, end, buf);
+            encode_run(&spay, start, end, buf);
         }
         start = end;
         if start >= skrows.len() {
@@ -116,34 +128,14 @@ pub fn distributed_sort_keys(
 
     // collect received runs and merge by one final local sort (runs are
     // sorted; a k-way merge is a §Perf refinement that measured <5% here)
-    let mut rkeys: Vec<Column> = key_cols
-        .iter()
-        .map(|c| Column::new_empty(c.dtype()))
-        .collect();
-    let mut rpay: Vec<Column> = payload
-        .iter()
-        .map(|c| Column::new_empty(c.dtype()))
-        .collect();
-    for buf in received {
-        if buf.is_empty() {
-            continue;
-        }
-        let mut pos = 0;
-        for oc in rkeys.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
-            oc.extend(&c);
-        }
-        for oc in rpay.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
-            oc.extend(&c);
-        }
-    }
-    let rrows = keys::key_rows(&rkeys.iter().collect::<Vec<_>>())?;
+    let (rkeys, rpay) = decode_runs(&kc, payload, received)?;
+    let rk_refs: Vec<&Column> = rkeys.iter().map(|c| &c.values).collect();
+    let rk_masks: Vec<Option<&ValidityMask>> =
+        rkeys.iter().map(|c| c.validity.as_ref()).collect();
+    let rrows = keys::key_rows_nullable(&rk_refs, &rk_masks)?;
     let mut idx: Vec<usize> = (0..rrows.len()).collect();
     idx.sort_by(|&a, &b| cmp_key_rows(&rrows[a], &rrows[b], orders));
-    let fkeys: Vec<Column> = rkeys.iter().map(|c| c.take(&idx)).collect();
-    let fpay: Vec<Column> = rpay.iter().map(|c| c.take(&idx)).collect();
-    Ok((fkeys, fpay))
+    Ok((take_owned(&rkeys, &idx), take_owned(&rpay, &idx)))
 }
 
 /// Packed sample-sort (Int64/Bool keys): every ordering decision is a byte
@@ -152,27 +144,29 @@ pub fn distributed_sort_keys(
 fn sort_packed(
     comm: &Comm,
     sk: SortKeys,
-    key_cols: &[&Column],
+    key_cols: &[MaskedCol],
     orders: &[SortOrder],
-    payload: &[&Column],
-) -> Result<(Vec<Column>, Vec<Column>)> {
+    payload: &[MaskedCol],
+    with_flags: bool,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     let p = comm.nranks();
     let n = sk.len();
     // local argsort (stable — Timsort-family, as in the paper)
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
-    let skey_cols: Vec<Column> = key_cols.iter().map(|c| c.take(&idx)).collect();
-    let spay: Vec<Column> = payload.iter().map(|c| c.take(&idx)).collect();
+    let skey: Vec<NullableColumn> = take_masked(key_cols, &idx);
+    let spay: Vec<NullableColumn> = take_masked(payload, &idx);
 
     if p == 1 {
-        return Ok((skey_cols, spay));
+        return Ok((skey, spay));
     }
     let ssk = sk.take(&idx);
     let w = ssk.width();
 
     // regular sampling: p packed sample rows per non-empty rank → root
-    // picks p-1 splitter rows (raw bytes; width is schema-determined, so
-    // every rank slices the broadcast identically)
+    // picks p-1 splitter rows (raw bytes; width is schema-determined and
+    // the flag choice was agreed globally, so every rank slices the
+    // broadcast identically)
     let mut sample_buf = Vec::new();
     if n > 0 {
         for s in 0..p {
@@ -213,12 +207,8 @@ fn sort_packed(
         };
         if end > start {
             let buf = &mut bufs[dst];
-            for c in &skey_cols {
-                encode_column(&c.slice(start, end - start), buf);
-            }
-            for c in &spay {
-                encode_column(&c.slice(start, end - start), buf);
-            }
+            encode_run(&skey, start, end, buf);
+            encode_run(&spay, start, end, buf);
         }
         start = end;
         if start >= n {
@@ -228,35 +218,79 @@ fn sort_packed(
     let received = comm.alltoallv_bytes(bufs);
 
     // collect received runs and merge by one final packed local sort
-    let mut rkeys: Vec<Column> = key_cols
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let (rkeys, rpay) = decode_runs(&kc, payload, received)?;
+    let rk_refs: Vec<&Column> = rkeys.iter().map(|c| &c.values).collect();
+    let rk_masks: Vec<Option<&ValidityMask>> =
+        rkeys.iter().map(|c| c.validity.as_ref()).collect();
+    let rsk = SortKeys::pack_nullable(&rk_refs, &rk_masks, orders, with_flags)?
+        .expect("Int64/Bool keys stay packable");
+    let mut idx: Vec<usize> = (0..rsk.len()).collect();
+    idx.sort_by(|&a, &b| rsk.row(a).cmp(rsk.row(b)));
+    Ok((take_owned(&rkeys, &idx), take_owned(&rpay, &idx)))
+}
+
+fn take_masked(cols: &[MaskedCol], idx: &[usize]) -> Vec<NullableColumn> {
+    cols.iter()
+        .map(|(c, m)| NullableColumn::new(c.take(idx), m.map(|m| m.take(idx))))
+        .collect()
+}
+
+fn take_owned(cols: &[NullableColumn], idx: &[usize]) -> Vec<NullableColumn> {
+    cols.iter()
+        .map(|c| {
+            NullableColumn::new(
+                c.values.take(idx),
+                c.validity.as_ref().map(|m| m.take(idx)),
+            )
+        })
+        .collect()
+}
+
+fn encode_run(cols: &[NullableColumn], start: usize, end: usize, buf: &mut Vec<u8>) {
+    for c in cols {
+        encode_nullable_column(
+            &c.values.slice(start, end - start),
+            c.validity
+                .as_ref()
+                .map(|m| m.slice(start, end - start))
+                .as_ref(),
+            buf,
+        );
+    }
+}
+
+fn decode_runs(
+    key_templates: &[&Column],
+    payload: &[MaskedCol],
+    received: Vec<Vec<u8>>,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    let mut rkeys: Vec<(Column, Option<ValidityMask>)> = key_templates
         .iter()
-        .map(|c| Column::new_empty(c.dtype()))
+        .map(|c| (Column::new_empty(c.dtype()), None))
         .collect();
-    let mut rpay: Vec<Column> = payload
+    let mut rpay: Vec<(Column, Option<ValidityMask>)> = payload
         .iter()
-        .map(|c| Column::new_empty(c.dtype()))
+        .map(|(c, _)| (Column::new_empty(c.dtype()), None))
         .collect();
     for buf in received {
         if buf.is_empty() {
             continue;
         }
         let mut pos = 0;
-        for oc in rkeys.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
+        for (oc, om) in rkeys.iter_mut().chain(rpay.iter_mut()) {
+            let before = oc.len();
+            let (c, m) = decode_nullable_column(&buf, &mut pos)?;
             oc.extend(&c);
-        }
-        for oc in rpay.iter_mut() {
-            let c = decode_column(&buf, &mut pos)?;
-            oc.extend(&c);
+            extend_opt_mask(om, before, m.as_ref(), c.len());
         }
     }
-    let rrefs: Vec<&Column> = rkeys.iter().collect();
-    let rsk = SortKeys::pack(&rrefs, orders)?.expect("Int64/Bool keys stay packable");
-    let mut idx: Vec<usize> = (0..rsk.len()).collect();
-    idx.sort_by(|&a, &b| rsk.row(a).cmp(rsk.row(b)));
-    let fkeys: Vec<Column> = rkeys.iter().map(|c| c.take(&idx)).collect();
-    let fpay: Vec<Column> = rpay.iter().map(|c| c.take(&idx)).collect();
-    Ok((fkeys, fpay))
+    let wrap = |v: Vec<(Column, Option<ValidityMask>)>| {
+        v.into_iter()
+            .map(|(c, m)| NullableColumn::new(c, m))
+            .collect()
+    };
+    Ok((wrap(rkeys), wrap(rpay)))
 }
 
 /// Sort `(keys, cols)` globally ascending by a single i64 key — the seed
@@ -267,9 +301,13 @@ pub fn distributed_sort_by_key(
     cols: &[Column],
 ) -> Result<(Vec<i64>, Vec<Column>)> {
     let kc = Column::I64(keys.to_vec());
-    let crefs: Vec<&Column> = cols.iter().collect();
-    let (kcols, pay) = distributed_sort_keys(comm, &[&kc], &[SortOrder::Asc], &crefs)?;
-    Ok((kcols[0].as_i64().to_vec(), pay))
+    let crefs: Vec<MaskedCol> = cols.iter().map(|c| (c, None)).collect();
+    let (kcols, pay) =
+        distributed_sort_keys(comm, &[(&kc, None)], &[SortOrder::Asc], &crefs)?;
+    Ok((
+        kcols[0].values.as_i64().to_vec(),
+        pay.into_iter().map(|c| c.values).collect(),
+    ))
 }
 
 #[cfg(test)]
@@ -314,12 +352,15 @@ mod tests {
                 let kb = Column::I64(b[s..s + l].to_vec());
                 let (kcols, _) = distributed_sort_keys(
                     &c,
-                    &[&ka, &kb],
+                    &[(&ka, None), (&kb, None)],
                     &[SortOrder::Desc, SortOrder::Asc],
                     &[],
                 )
                 .unwrap();
-                (kcols[0].as_i64().to_vec(), kcols[1].as_i64().to_vec())
+                (
+                    kcols[0].values.as_i64().to_vec(),
+                    kcols[1].values.as_i64().to_vec(),
+                )
             });
             let got: Vec<(i64, i64)> = out
                 .iter()
@@ -338,8 +379,8 @@ mod tests {
             let (s, l) = block_range(words.len(), 2, c.rank());
             let kc = Column::Str(words[s..s + l].iter().map(|w| w.to_string()).collect());
             let (kcols, _) =
-                distributed_sort_keys(&c, &[&kc], &[SortOrder::Asc], &[]).unwrap();
-            kcols[0].as_str_col().to_vec()
+                distributed_sort_keys(&c, &[(&kc, None)], &[SortOrder::Asc], &[]).unwrap();
+            kcols[0].values.as_str_col().to_vec()
         });
         let got: Vec<String> = out.into_iter().flatten().collect();
         let mut expect: Vec<String> = words.iter().map(|w| w.to_string()).collect();
@@ -358,12 +399,15 @@ mod tests {
             let ki = Column::I64(ids[s..s + l].to_vec());
             let (kcols, _) = distributed_sort_keys(
                 &c,
-                &[&kf, &ki],
+                &[(&kf, None), (&ki, None)],
                 &[SortOrder::Desc, SortOrder::Asc],
                 &[],
             )
             .unwrap();
-            (kcols[0].as_bool().to_vec(), kcols[1].as_i64().to_vec())
+            (
+                kcols[0].values.as_bool().to_vec(),
+                kcols[1].values.as_i64().to_vec(),
+            )
         });
         let got: Vec<(bool, i64)> = out
             .iter()
@@ -387,6 +431,71 @@ mod tests {
         let mut expect = data.clone();
         expect.sort_unstable();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn nullable_keys_sort_nulls_first_across_ranks() {
+        // values 0..24 with every multiple of 5 null (scrubbed to 0); only
+        // some ranks hold masks, exercising the global flag agreement
+        let data: Vec<i64> = (0..24).map(|i| if i % 5 == 0 { 0 } else { i }).collect();
+        let nulls: Vec<bool> = (0..24).map(|i| i % 5 == 0).collect();
+        for p in [2usize, 3] {
+            let out = run_spmd(p, |c| {
+                let (s, l) = block_range(data.len(), p, c.rank());
+                let kc = Column::I64(data[s..s + l].to_vec());
+                let local_nulls = &nulls[s..s + l];
+                let mask = if local_nulls.iter().any(|&b| b) {
+                    Some(ValidityMask::from_bools(
+                        &local_nulls.iter().map(|&b| !b).collect::<Vec<_>>(),
+                    ))
+                } else {
+                    None
+                };
+                let pay = Column::I64(data[s..s + l].iter().map(|&v| v * 3).collect());
+                let (kcols, pcols) = distributed_sort_keys(
+                    &c,
+                    &[(&kc, mask.as_ref())],
+                    &[SortOrder::Asc],
+                    &[(&pay, None)],
+                )
+                .unwrap();
+                let valid: Vec<bool> =
+                    (0..kcols[0].len()).map(|i| kcols[0].is_valid(i)).collect();
+                (
+                    kcols[0].values.as_i64().to_vec(),
+                    valid,
+                    pcols[0].values.as_i64().to_vec(),
+                )
+            });
+            let rows: Vec<(bool, i64, i64)> = out
+                .iter()
+                .flat_map(|(k, v, pl)| {
+                    k.iter()
+                        .zip(v.iter())
+                        .zip(pl.iter())
+                        .map(|((&k, &v), &pl)| (v, k, pl))
+                })
+                .collect();
+            // all nulls first, then ascending values; payload attached
+            let n_null = nulls.iter().filter(|&&b| b).count();
+            assert_eq!(rows.len(), 24, "p={p}");
+            for (i, (valid, k, _)) in rows.iter().enumerate() {
+                assert_eq!(*valid, i >= n_null, "p={p} row {i}");
+                if !*valid {
+                    assert_eq!(*k, 0, "null lanes hold the dtype default");
+                }
+            }
+            let valid_keys: Vec<i64> =
+                rows.iter().filter(|(v, _, _)| *v).map(|(_, k, _)| *k).collect();
+            let mut expect: Vec<i64> = (0..24).filter(|i| i % 5 != 0).collect();
+            expect.sort_unstable();
+            assert_eq!(valid_keys, expect, "p={p}");
+            for (v, k, pl) in &rows {
+                if *v {
+                    assert_eq!(*pl, k * 3);
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //!   into conjuncts and only the conjuncts that survive the join type move.
 //!   A conjunct over one side is *null-sensitive* when that side can be
 //!   null-introduced (Left join → right side, Right join → left side, Outer
-//!   → both): pre-join filtering would not remove the unmatched rows whose
-//!   null-filled columns make the post-join predicate false, so those
-//!   conjuncts must stay above the join.
+//!   → both): unmatched rows carry cleared validity bits post-join, where
+//!   ordinary comparisons evaluate to NULL (dropped by the filter) and
+//!   `IS NULL` evaluates to true — pre-join filtering sees neither, so
+//!   those conjuncts must stay above the join.
 //! * **push predicate through with-column / rename / project** — the
 //!   "liveness" plumbing that lets predicates travel past array code.
 //! * **column pruning** — dead-column elimination with whole-program
@@ -606,8 +607,9 @@ mod tests {
     #[test]
     fn left_join_blocks_null_sensitive_right_conjunct() {
         // amount > 100 over a LEFT join is null-sensitive: unmatched
-        // customers have amount = NaN post-join and must still be dropped by
-        // the filter, which a pre-join push would not do.
+        // customers have a null amount post-join (cleared validity bit →
+        // the comparison is NULL → the filter drops the row), which a
+        // pre-join push of the conjunct would not reproduce.
         let plan = Plan::Filter {
             input: Box::new(join_of(JoinType::Left)),
             predicate: col("amount").gt(lit(100.0)),
@@ -621,6 +623,48 @@ mod tests {
                 other => panic!("expected join under filter, got:\n{other}"),
             },
             other => panic!("expected filter to stay above left join, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn left_join_blocks_is_null_probe_on_right_side() {
+        // the Q05 migration shape: IS NULL over the null-introduced side
+        // selects exactly the unmatched rows — it must never push below the
+        // join (pre-join, no right row is null)
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Left)),
+            predicate: col("amount").is_null(),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Filter { input, predicate } => {
+                assert_eq!(*predicate, col("amount").is_null());
+                assert!(matches!(**input, Plan::Join { .. }));
+            }
+            other => panic!("expected IS NULL to stay above left join, got:\n{other}"),
+        }
+        // IS NOT NULL (the drop_null desugaring) stays put too
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Left)),
+            predicate: col("amount").is_not_null(),
+        };
+        let opt = pushdown_predicates(plan);
+        assert!(
+            matches!(&opt, Plan::Filter { input, .. } if matches!(&**input, Plan::Join { .. })),
+            "got:\n{opt}"
+        );
+        // …while over an INNER join the probe pushes into the right input
+        // (an inner join introduces no nulls, so the rewrite is sound)
+        let plan = Plan::Filter {
+            input: Box::new(join_of(JoinType::Inner)),
+            predicate: col("amount").is_not_null(),
+        };
+        let opt = pushdown_predicates(plan);
+        match &opt {
+            Plan::Join { right, .. } => {
+                assert!(matches!(**right, Plan::Filter { .. }))
+            }
+            other => panic!("expected pushdown through inner join, got:\n{other}"),
         }
     }
 

@@ -1,31 +1,47 @@
 //! Schemas and materialized tables.
 //!
 //! A [`Table`] is what a data frame *materializes to*: named columns of equal
-//! length. During execution nothing ever holds a `Table` on the hot path —
-//! the executor environment maps `name → Column` (dual representation) — but
+//! length, each with an optional validity mask (the null model). During
+//! execution nothing ever holds a `Table` on the hot path — the executor
+//! environment maps `name → Column (+ mask)` (dual representation) — but
 //! sources, sinks, tests and the baseline engines exchange `Table`s.
+//!
+//! Canonical form: all-valid masks are stored as `None` and values under
+//! null bits are dtype defaults, so `Table` equality compares both values
+//! *and* null positions — the engine-agreement tests lean on this.
 
-use crate::column::Column;
+use crate::column::{normalize_mask, Column, ValidityMask};
 use crate::types::{DType, Value};
 use anyhow::{bail, Result};
 use std::fmt;
 
-/// An ordered list of `(column name, dtype)` pairs.
+/// An ordered list of `(column name, dtype)` pairs plus per-column
+/// nullability. Sources start non-nullable; Left/Right/Outer joins mark the
+/// null-introduced side nullable while keeping its native dtype.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Schema {
     fields: Vec<(String, DType)>,
+    nullable: Vec<bool>,
 }
 
 impl Schema {
     pub fn new(fields: Vec<(String, DType)>) -> Schema {
-        Schema { fields }
+        let n = fields.len();
+        Schema {
+            fields,
+            nullable: vec![false; n],
+        }
+    }
+
+    /// Construct with explicit per-field nullability.
+    pub fn new_nullable(fields: Vec<(String, DType)>, nullable: Vec<bool>) -> Schema {
+        assert_eq!(fields.len(), nullable.len(), "schema: nullable flag count");
+        Schema { fields, nullable }
     }
 
     /// Convenience constructor: `Schema::of(&[("id", DType::I64), ...])`.
     pub fn of(fields: &[(&str, DType)]) -> Schema {
-        Schema {
-            fields: fields.iter().map(|(n, t)| (n.to_string(), *t)).collect(),
-        }
+        Schema::new(fields.iter().map(|(n, t)| (n.to_string(), *t)).collect())
     }
 
     pub fn fields(&self) -> &[(String, DType)] {
@@ -55,12 +71,35 @@ impl Schema {
             .map(|(_, t)| *t)
     }
 
+    /// May this column contain nulls?
+    pub fn nullable_of(&self, name: &str) -> Option<bool> {
+        self.index_of(name).map(|i| self.nullable[i])
+    }
+
+    pub fn nullable_at(&self, i: usize) -> bool {
+        self.nullable[i]
+    }
+
+    pub fn nullable_flags(&self) -> &[bool] {
+        &self.nullable
+    }
+
     pub fn push(&mut self, name: &str, dtype: DType) {
+        self.push_field(name, dtype, false);
+    }
+
+    pub fn push_field(&mut self, name: &str, dtype: DType, nullable: bool) {
         self.fields.push((name.to_string(), dtype));
+        self.nullable.push(nullable);
+    }
+
+    pub fn set_nullable(&mut self, i: usize, nullable: bool) {
+        self.nullable[i] = nullable;
     }
 
     /// Schema equality up to column order is NOT allowed for concatenation —
-    /// the paper requires identical schemas for `[df1; df2]`.
+    /// the paper requires identical schemas for `[df1; df2]`. Nullability is
+    /// part of the schema.
     pub fn same_as(&self, other: &Schema) -> bool {
         self == other
     }
@@ -73,21 +112,36 @@ impl fmt::Display for Schema {
             if i > 0 {
                 write!(f, ", ")?;
             }
-            write!(f, ":{n}={t}")?;
+            let q = if self.nullable[i] { "?" } else { "" };
+            write!(f, ":{n}={t}{q}")?;
         }
         write!(f, "}}")
     }
 }
 
-/// A materialized table: schema + columns of identical length.
+/// A materialized table: schema + columns of identical length + optional
+/// per-column validity masks.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Table {
     schema: Schema,
     columns: Vec<Column>,
+    masks: Vec<Option<ValidityMask>>,
 }
 
 impl Table {
     pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        let masks = vec![None; columns.len()];
+        Table::new_masked(schema, columns, masks)
+    }
+
+    /// Construct with validity masks (one slot per column; `None` = fully
+    /// valid). All-valid masks are normalized away; a present mask promotes
+    /// its schema field to nullable.
+    pub fn new_masked(
+        schema: Schema,
+        columns: Vec<Column>,
+        masks: Vec<Option<ValidityMask>>,
+    ) -> Result<Table> {
         if schema.len() != columns.len() {
             bail!(
                 "table: {} fields but {} columns",
@@ -95,8 +149,12 @@ impl Table {
                 columns.len()
             );
         }
+        if masks.len() != columns.len() {
+            bail!("table: {} columns but {} mask slots", columns.len(), masks.len());
+        }
+        let mut schema = schema;
         let mut n = None;
-        for ((name, dt), col) in schema.fields().iter().zip(&columns) {
+        for (i, ((name, dt), col)) in schema.fields().iter().zip(&columns).enumerate() {
             if col.dtype() != *dt {
                 bail!("table: column {name} declared {dt} but is {}", col.dtype());
             }
@@ -107,8 +165,28 @@ impl Table {
                 }
                 _ => {}
             }
+            if let Some(m) = &masks[i] {
+                if m.len() != col.len() {
+                    bail!(
+                        "table: column {name} mask length {} != {}",
+                        m.len(),
+                        col.len()
+                    );
+                }
+            }
         }
-        Ok(Table { schema, columns })
+        let masks: Vec<Option<ValidityMask>> =
+            masks.into_iter().map(normalize_mask).collect();
+        for (i, m) in masks.iter().enumerate() {
+            if m.is_some() {
+                schema.set_nullable(i, true);
+            }
+        }
+        Ok(Table {
+            schema,
+            columns,
+            masks,
+        })
     }
 
     /// Build from `(name, column)` pairs, inferring the schema.
@@ -123,13 +201,37 @@ impl Table {
         Table::new(schema, columns)
     }
 
+    /// Attach a validity mask to one column (test/data construction helper).
+    /// Values under null bits are scrubbed to dtype defaults so the table is
+    /// canonical.
+    pub fn with_null_mask(mut self, name: &str, mask: ValidityMask) -> Result<Table> {
+        let Some(i) = self.schema.index_of(name) else {
+            bail!("with_null_mask: unknown column {name}");
+        };
+        if mask.len() != self.columns[i].len() {
+            bail!("with_null_mask: mask length mismatch for {name}");
+        }
+        crate::column::scrub_invalid(&mut self.columns[i], &mask);
+        let m = normalize_mask(Some(mask));
+        if m.is_some() {
+            self.schema.set_nullable(i, true);
+        }
+        self.masks[i] = m;
+        Ok(self)
+    }
+
     pub fn empty(schema: Schema) -> Table {
-        let columns = schema
+        let columns: Vec<Column> = schema
             .fields()
             .iter()
             .map(|(_, t)| Column::new_empty(*t))
             .collect();
-        Table { schema, columns }
+        let masks = vec![None; columns.len()];
+        Table {
+            schema,
+            columns,
+            masks,
+        }
     }
 
     pub fn schema(&self) -> &Schema {
@@ -156,12 +258,46 @@ impl Table {
         &self.columns
     }
 
+    /// Validity mask of one column (`None` = fully valid).
+    pub fn mask(&self, name: &str) -> Option<&ValidityMask> {
+        self.schema
+            .index_of(name)
+            .and_then(|i| self.masks[i].as_ref())
+    }
+
+    pub fn mask_at(&self, i: usize) -> Option<&ValidityMask> {
+        self.masks[i].as_ref()
+    }
+
+    pub fn masks(&self) -> &[Option<ValidityMask>] {
+        &self.masks
+    }
+
+    /// Number of null rows in one column (0 for unknown/absent mask).
+    pub fn null_count(&self, name: &str) -> usize {
+        self.mask(name).map_or(0, |m| m.count_null())
+    }
+
     pub fn into_columns(self) -> (Schema, Vec<Column>) {
         (self.schema, self.columns)
     }
 
+    /// Decompose into all parts, masks included.
+    pub fn into_parts(self) -> (Schema, Vec<Column>, Vec<Option<ValidityMask>>) {
+        (self.schema, self.columns, self.masks)
+    }
+
+    /// Row `i` as typed values; null lanes surface as [`Value::Null`] — the
+    /// columnar → row-engine boundary.
     pub fn row(&self, i: usize) -> Vec<Value> {
-        self.columns.iter().map(|c| c.get(i)).collect()
+        self.columns
+            .iter()
+            .zip(&self.masks)
+            .map(|(c, m)| match m {
+                Some(m) if !m.get(i) => Value::Null(c.dtype()),
+                _ => c.get(i),
+            })
+            .collect()
     }
 
     /// Row-slice `[start, start+len)` of every column (1D_BLOCK partitioning).
@@ -169,6 +305,11 @@ impl Table {
         Table {
             schema: self.schema.clone(),
             columns: self.columns.iter().map(|c| c.slice(start, len)).collect(),
+            masks: self
+                .masks
+                .iter()
+                .map(|m| normalize_mask(m.as_ref().map(|m| m.slice(start, len))))
+                .collect(),
         }
     }
 
@@ -177,6 +318,11 @@ impl Table {
         Table {
             schema: self.schema.clone(),
             columns: self.columns.iter().map(|c| c.filter(mask)).collect(),
+            masks: self
+                .masks
+                .iter()
+                .map(|m| normalize_mask(m.as_ref().map(|m| m.filter(mask))))
+                .collect(),
         }
     }
 
@@ -190,69 +336,94 @@ impl Table {
             );
         }
         let mut cols = self.columns.clone();
-        for (a, b) in cols.iter_mut().zip(&other.columns) {
+        let mut masks = self.masks.clone();
+        for (i, (a, b)) in cols.iter_mut().zip(&other.columns).enumerate() {
+            let before = a.len();
             a.extend(b);
+            crate::column::extend_opt_mask(
+                &mut masks[i],
+                before,
+                other.masks[i].as_ref(),
+                b.len(),
+            );
         }
+        let masks = masks.into_iter().map(normalize_mask).collect();
         Ok(Table {
             schema: self.schema.clone(),
             columns: cols,
+            masks,
         })
     }
 
     /// Keep only `names`, in order (projection).
     pub fn project(&self, names: &[&str]) -> Result<Table> {
         let mut fields = Vec::new();
+        let mut nullable = Vec::new();
         let mut cols = Vec::new();
+        let mut masks = Vec::new();
         for &n in names {
             let Some(i) = self.schema.index_of(n) else {
                 bail!("project: unknown column {n}");
             };
             fields.push(self.schema.fields()[i].clone());
+            nullable.push(self.schema.nullable_at(i));
             cols.push(self.columns[i].clone());
+            masks.push(self.masks[i].clone());
         }
         Ok(Table {
-            schema: Schema::new(fields),
+            schema: Schema::new_nullable(fields, nullable),
             columns: cols,
+            masks,
         })
     }
 
-    /// Sort the whole table by an I64 key column (ascending, stable) —
-    /// canonicalization for engine-agreement tests.
-    pub fn sorted_by(&self, key: &str) -> Result<Table> {
-        let Some(kc) = self.column(key) else {
-            bail!("sorted_by: unknown column {key}")
-        };
-        let keys = kc.as_i64();
-        let mut idx: Vec<usize> = (0..self.num_rows()).collect();
-        idx.sort_by_key(|&i| keys[i]);
-        Ok(Table {
+    fn take_all(&self, idx: &[usize]) -> Table {
+        Table {
             schema: self.schema.clone(),
-            columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
-        })
+            columns: self.columns.iter().map(|c| c.take(idx)).collect(),
+            masks: self
+                .masks
+                .iter()
+                .map(|m| normalize_mask(m.as_ref().map(|m| m.take(idx))))
+                .collect(),
+        }
+    }
+
+    /// Sort the whole table by one key column (ascending, stable, nulls
+    /// first) — canonicalization for engine-agreement tests. Thin wrapper
+    /// over [`Table::sorted_by_keys`], so null keys order exactly like the
+    /// engines' nulls-first rule instead of by their scrubbed default.
+    pub fn sorted_by(&self, key: &str) -> Result<Table> {
+        self.sorted_by_keys(&[(key, crate::types::SortOrder::Asc)])
     }
 
     /// Sort by a composite key list with per-key directions (stable) — the
-    /// serial counterpart of the distributed `sort_by_keys`.
+    /// serial counterpart of the distributed `sort_by_keys`. Null keys order
+    /// before every value (nulls-first under ascending).
     pub fn sorted_by_keys(&self, keys: &[(&str, crate::types::SortOrder)]) -> Result<Table> {
-        let key_cols: Vec<&Column> = keys
-            .iter()
-            .map(|(k, _)| {
-                self.column(k)
-                    .ok_or_else(|| anyhow::anyhow!("sorted_by_keys: unknown column {k}"))
-            })
-            .collect::<Result<_>>()?;
+        let mut key_cols = Vec::new();
+        let mut key_masks = Vec::new();
+        for (k, _) in keys {
+            let Some(i) = self.schema.index_of(k) else {
+                bail!("sorted_by_keys: unknown column {k}");
+            };
+            key_cols.push(&self.columns[i]);
+            key_masks.push(self.masks[i].as_ref());
+        }
         let orders: Vec<crate::types::SortOrder> = keys.iter().map(|(_, o)| *o).collect();
-        let rows = crate::ops::keys::key_rows(&key_cols)?;
+        let rows = crate::ops::keys::key_rows_nullable(&key_cols, &key_masks)?;
         let mut idx: Vec<usize> = (0..self.num_rows()).collect();
         idx.sort_by(|&a, &b| crate::ops::keys::cmp_key_rows(&rows[a], &rows[b], &orders));
-        Ok(Table {
-            schema: self.schema.clone(),
-            columns: self.columns.iter().map(|c| c.take(&idx)).collect(),
-        })
+        Ok(self.take_all(&idx))
     }
 
     pub fn byte_size(&self) -> usize {
-        self.columns.iter().map(|c| c.byte_size()).sum()
+        self.columns.iter().map(|c| c.byte_size()).sum::<usize>()
+            + self
+                .masks
+                .iter()
+                .map(|m| m.as_ref().map_or(0, |m| m.byte_size()))
+                .sum::<usize>()
     }
 }
 
@@ -296,6 +467,13 @@ mod tests {
         )
         .is_err());
         assert!(Table::new(Schema::of(&[("a", DType::I64)]), vec![]).is_err());
+        // mask length must match its column
+        assert!(Table::new_masked(
+            Schema::of(&[("a", DType::I64)]),
+            vec![Column::I64(vec![1, 2])],
+            vec![Some(ValidityMask::new_valid(3))],
+        )
+        .is_err());
     }
 
     #[test]
@@ -307,6 +485,69 @@ mod tests {
         assert!(t.column("nope").is_none());
         assert_eq!(t.row(0), vec![Value::I64(3), Value::F64(0.3)]);
         assert_eq!(t.schema().dtype_of("x"), Some(DType::F64));
+        assert_eq!(t.schema().nullable_of("x"), Some(false));
+        assert!(t.mask("x").is_none());
+        assert_eq!(t.null_count("x"), 0);
+    }
+
+    #[test]
+    fn masked_table_roundtrip() {
+        let t = Table::from_pairs(vec![("v", Column::I64(vec![10, 99, 30]))])
+            .unwrap()
+            .with_null_mask("v", ValidityMask::from_bools(&[true, false, true]))
+            .unwrap();
+        assert_eq!(t.schema().nullable_of("v"), Some(true));
+        assert_eq!(t.null_count("v"), 1);
+        // values under nulls are scrubbed to the dtype default
+        assert_eq!(t.column("v").unwrap().as_i64(), &[10, 0, 30]);
+        assert_eq!(t.row(1), vec![Value::Null(DType::I64)]);
+        // all-valid masks normalize away
+        let u = Table::from_pairs(vec![("v", Column::I64(vec![1]))])
+            .unwrap()
+            .with_null_mask("v", ValidityMask::new_valid(1))
+            .unwrap();
+        assert!(u.mask("v").is_none());
+        assert_eq!(u.schema().nullable_of("v"), Some(false));
+    }
+
+    #[test]
+    fn masks_follow_slice_filter_concat_sort() {
+        let t = Table::from_pairs(vec![
+            ("id", Column::I64(vec![3, 1, 2, 4])),
+            ("v", Column::I64(vec![0, 10, 0, 40])),
+        ])
+        .unwrap()
+        .with_null_mask("v", ValidityMask::from_bools(&[false, true, false, true]))
+        .unwrap();
+        assert_eq!(t.slice(0, 2).null_count("v"), 1);
+        let f = t.filter(&[true, true, false, false]);
+        assert_eq!(f.null_count("v"), 1);
+        let c = t.concat(&t).unwrap();
+        assert_eq!(c.null_count("v"), 4);
+        let s = t.sorted_by("id").unwrap();
+        assert_eq!(s.column("id").unwrap().as_i64(), &[1, 2, 3, 4]);
+        assert_eq!(
+            s.mask("v").unwrap().to_bools(),
+            vec![true, false, false, true]
+        );
+        // concat with a mask-free table of the *same nullable schema* works
+        let (schema, cols, _) = t.clone().into_parts();
+        let nomask = Table::new_masked(schema, cols, vec![None, None]).unwrap();
+        let c2 = t.concat(&nomask).unwrap();
+        assert_eq!(c2.null_count("v"), 2);
+        assert_eq!(c2.mask("v").unwrap().len(), 8);
+    }
+
+    #[test]
+    fn nullable_schema_display_and_equality() {
+        let a = Schema::new_nullable(
+            vec![("v".into(), DType::I64)],
+            vec![true],
+        );
+        let b = Schema::of(&[("v", DType::I64)]);
+        assert_ne!(a, b); // nullability is part of the schema
+        assert_eq!(format!("{a}"), "{:v=Int64?}");
+        assert_eq!(format!("{b}"), "{:v=Int64}");
     }
 
     #[test]
@@ -344,6 +585,21 @@ mod tests {
         assert_eq!(s.column("g").unwrap().as_i64(), &[2, 2, 1, 1]);
         assert_eq!(s.column("x").unwrap().as_i64(), &[20, 40, 10, 30]);
         assert!(t.sorted_by_keys(&[("nope", Asc)]).is_err());
+    }
+
+    #[test]
+    fn null_keys_sort_first() {
+        use crate::types::SortOrder::*;
+        let t = Table::from_pairs(vec![("k", Column::I64(vec![5, 0, 1]))])
+            .unwrap()
+            .with_null_mask("k", ValidityMask::from_bools(&[true, false, true]))
+            .unwrap();
+        let s = t.sorted_by_keys(&[("k", Asc)]).unwrap();
+        assert_eq!(s.row(0), vec![Value::Null(DType::I64)]);
+        assert_eq!(s.column("k").unwrap().as_i64(), &[0, 1, 5]);
+        // descending puts nulls last
+        let d = t.sorted_by_keys(&[("k", Desc)]).unwrap();
+        assert_eq!(d.row(2), vec![Value::Null(DType::I64)]);
     }
 
     #[test]

@@ -43,14 +43,15 @@ impl DType {
         matches!(self, DType::I64 | DType::Bool | DType::Str)
     }
 
-    /// The dtype a column takes when a Left/Right/Outer join makes its side
-    /// *null-introducing*. With no native null representation, numerics and
-    /// booleans are promoted to Float64 (missing = NaN, the Pandas rule for
-    /// int columns on outer merges) and strings stay strings (missing = "").
-    pub fn null_joined(self) -> DType {
+    /// The canonical value stored under a null lane (the validity-mask null
+    /// model keeps native dtypes; invalid rows hold this default so every
+    /// engine agrees byte-for-byte on masked columns).
+    pub fn default_value(self) -> Value {
         match self {
-            DType::Str => DType::Str,
-            _ => DType::F64,
+            DType::I64 => Value::I64(0),
+            DType::F64 => Value::F64(0.0),
+            DType::Bool => Value::Bool(false),
+            DType::Str => Value::Str(String::new()),
         }
     }
 
@@ -87,7 +88,7 @@ pub enum JoinType {
     /// Keep only matching key pairs (cross product within equal keys).
     Inner,
     /// Every left row survives; unmatched rows get null-introduced right
-    /// columns (see [`DType::null_joined`]).
+    /// columns (native dtype + validity mask).
     Left,
     /// Every right row survives; unmatched rows get null-introduced left
     /// columns.
@@ -148,13 +149,17 @@ impl fmt::Display for SortOrder {
 }
 
 /// A scalar value: expression literals, aggregate results, row cells in the
-/// row-oriented baseline engine.
+/// row-oriented baseline engine. [`Value::Null`] is a *typed* null — the
+/// row-engine counterpart of a cleared validity-mask bit (it remembers its
+/// column dtype so schemas survive the row path).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     I64(i64),
     F64(f64),
     Bool(bool),
     Str(String),
+    /// A missing value of the given column dtype.
+    Null(DType),
 }
 
 impl Value {
@@ -164,7 +169,12 @@ impl Value {
             Value::F64(_) => DType::F64,
             Value::Bool(_) => DType::Bool,
             Value::Str(_) => DType::Str,
+            Value::Null(dt) => *dt,
         }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null(_))
     }
 
     pub fn as_f64(&self) -> Option<f64> {
@@ -172,7 +182,7 @@ impl Value {
             Value::I64(v) => Some(*v as f64),
             Value::F64(v) => Some(*v),
             Value::Bool(b) => Some(*b as i64 as f64),
-            Value::Str(_) => None,
+            Value::Str(_) | Value::Null(_) => None,
         }
     }
 
@@ -181,7 +191,7 @@ impl Value {
             Value::I64(v) => Some(*v),
             Value::F64(v) => Some(*v as i64),
             Value::Bool(b) => Some(*b as i64),
-            Value::Str(_) => None,
+            Value::Str(_) | Value::Null(_) => None,
         }
     }
 
@@ -200,6 +210,7 @@ impl fmt::Display for Value {
             Value::F64(v) => write!(f, "{v}"),
             Value::Bool(v) => write!(f, "{v}"),
             Value::Str(v) => write!(f, "{v}"),
+            Value::Null(_) => write!(f, "null"),
         }
     }
 }
@@ -239,15 +250,15 @@ mod tests {
     }
 
     #[test]
-    fn dtype_groupable_and_null_promotion() {
+    fn dtype_groupable_and_defaults() {
         assert!(DType::I64.is_groupable());
         assert!(DType::Str.is_groupable());
         assert!(DType::Bool.is_groupable());
         assert!(!DType::F64.is_groupable());
-        assert_eq!(DType::I64.null_joined(), DType::F64);
-        assert_eq!(DType::Bool.null_joined(), DType::F64);
-        assert_eq!(DType::F64.null_joined(), DType::F64);
-        assert_eq!(DType::Str.null_joined(), DType::Str);
+        assert_eq!(DType::I64.default_value(), Value::I64(0));
+        assert_eq!(DType::Bool.default_value(), Value::Bool(false));
+        assert_eq!(DType::Str.default_value(), Value::Str(String::new()));
+        assert_eq!(DType::F64.default_value(), Value::F64(0.0));
     }
 
     #[test]
@@ -289,6 +300,7 @@ mod tests {
             Value::F64(1.0),
             Value::Bool(true),
             Value::Str("a".into()),
+            Value::Null(DType::I64),
         ] {
             let d = v.dtype();
             assert_eq!(format!("{d}").is_empty(), false);
@@ -300,5 +312,17 @@ mod tests {
         assert_eq!(Value::I64(7).to_string(), "7");
         assert_eq!(Value::Str("hi".into()).to_string(), "hi");
         assert_eq!(DType::F64.to_string(), "Float64");
+        assert_eq!(Value::Null(DType::Str).to_string(), "null");
+    }
+
+    #[test]
+    fn null_value_semantics() {
+        let n = Value::Null(DType::I64);
+        assert!(n.is_null());
+        assert_eq!(n.dtype(), DType::I64);
+        assert_eq!(n.as_f64(), None);
+        assert_eq!(n.as_i64(), None);
+        assert_eq!(n.as_bool(), None);
+        assert!(!Value::I64(0).is_null());
     }
 }

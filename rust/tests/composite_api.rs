@@ -26,8 +26,9 @@ fn left_table(rng: &mut Rng, n: usize) -> Table {
     .unwrap()
 }
 
-/// Compare tables cell-by-cell, treating NaN == NaN (outer joins produce
-/// NaN holes by design).
+/// Compare tables cell-by-cell: values, dtypes, nullability flags and null
+/// positions (validity masks) must all agree. Floats compare with a small
+/// tolerance (NaN == NaN for genuine float data).
 fn assert_tables_equal(a: &Table, b: &Table, label: &str) {
     assert_eq!(a.num_rows(), b.num_rows(), "{label}: row counts");
     assert_eq!(a.schema().names(), b.schema().names(), "{label}: schemas");
@@ -37,6 +38,12 @@ fn assert_tables_equal(a: &Table, b: &Table, label: &str) {
             b.schema().dtype_of(name),
             "{label}: dtype of {name}"
         );
+        assert_eq!(
+            a.schema().nullable_of(name),
+            b.schema().nullable_of(name),
+            "{label}: nullability of {name}"
+        );
+        assert_eq!(a.mask(name), b.mask(name), "{label}: null positions of {name}");
         let (ca, cb) = (a.column(name).unwrap(), b.column(name).unwrap());
         match (ca, cb) {
             (Column::F64(x), Column::F64(y)) => {
@@ -157,13 +164,18 @@ fn left_join_keeps_every_left_row() {
         .sorted_by("id")
         .unwrap();
     assert_tables_equal(&ours, &oracle, "left join");
-    // spot-check the NaN holes land on non-multiples of 3
-    let w = ours.column("w").unwrap().as_f64();
-    for (i, v) in w.iter().enumerate() {
+    // dtype preserved: the sparse dimension column stays Int64 and the
+    // holes land on non-multiples of 3 in the validity mask
+    assert_eq!(ours.schema().dtype_of("w"), Some(DType::I64));
+    let w = ours.column("w").unwrap().as_i64();
+    let mask = ours.mask("w").unwrap();
+    for i in 0..50usize {
         if i % 3 == 0 {
-            assert_eq!(*v, (i * 10) as f64);
+            assert!(mask.get(i), "row {i} should be valid");
+            assert_eq!(w[i], (i * 10) as i64);
         } else {
-            assert!(v.is_nan(), "row {i} should be a hole");
+            assert!(!mask.get(i), "row {i} should be a null hole");
+            assert_eq!(w[i], 0, "null lanes hold the dtype default");
         }
     }
 }
@@ -236,7 +248,9 @@ fn optimizer_preserves_typed_join_semantics() {
     let a = collect_optimized(&optimize(plan.clone(), &on.passes).unwrap(), &on).unwrap();
     let b = collect_optimized(&optimize(plan, &off.passes).unwrap(), &off).unwrap();
     assert_tables_equal(&a, &b, "optimized vs unoptimized left join");
-    // the filter dropped every unmatched row (w = NaN > 10.0 is false)
+    // the filter dropped every unmatched row (a null w compares as NULL,
+    // which the filter treats as false)
     assert!(a.num_rows() > 0);
+    assert_eq!(a.null_count("w"), 0);
     assert!(a.column("w").unwrap().as_f64().iter().all(|v| *v > 10.0));
 }

@@ -1,0 +1,546 @@
+//! Validity-mask null subsystem, end to end:
+//!
+//! * (a) masks round-trip through the nullable column codec;
+//! * (b) outer/left/right joins on I64/Bool/Str keys preserve native dtypes
+//!   and all three engines (HiFrames ≥2 workers, serial, sparklike) agree
+//!   on values *and* null positions;
+//! * (c) nullable `PackedKeys` order nulls first, identically to the KeyRow
+//!   path;
+//! * aggregation skips null inputs and forms null-key groups consistently.
+
+use hiframes::baseline::{serial, sparklike::SparkLike};
+use hiframes::column::{
+    decode_nullable_column, encode_nullable_column, scrub_invalid, ValidityMask,
+};
+use hiframes::datagen::Rng;
+use hiframes::ops::keys::{cmp_key_rows, key_rows_nullable, PackedKeys};
+use hiframes::prelude::*;
+use hiframes::prop::{forall_cases, gen};
+use hiframes::types::{JoinType, SortOrder};
+
+// ---------------------------------------------------------------------------
+// (a) codec round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mask_roundtrips_through_codec() {
+    forall_cases(
+        "mask-codec-roundtrip",
+        48,
+        |rng| {
+            let n = rng.usize(200);
+            let dtype = rng.usize(4) as u8;
+            let col = match dtype {
+                0 => Column::I64((0..n).map(|_| rng.i64_range(-1000, 1000)).collect()),
+                1 => Column::F64((0..n).map(|_| rng.normal()).collect()),
+                2 => Column::Bool((0..n).map(|_| rng.bool(0.5)).collect()),
+                _ => Column::Str((0..n).map(|i| format!("s{}", i % 7)).collect()),
+            };
+            let mask = ValidityMask::from_bools(&gen::mask(rng, n, 0.7));
+            (col, mask)
+        },
+        |(col, mask)| {
+            let mut col = col.clone();
+            scrub_invalid(&mut col, mask);
+            // masked framing
+            let mut buf = Vec::new();
+            encode_nullable_column(&col, Some(mask), &mut buf);
+            // a second mask-free column in the same buffer (framing safety)
+            encode_nullable_column(&col, None, &mut buf);
+            let mut pos = 0;
+            let (c1, m1) =
+                decode_nullable_column(&buf, &mut pos).map_err(|e| e.to_string())?;
+            let (c2, m2) =
+                decode_nullable_column(&buf, &mut pos).map_err(|e| e.to_string())?;
+            if pos != buf.len() {
+                return Err(format!("decoder consumed {pos} of {}", buf.len()));
+            }
+            if c1 != col || c2 != col {
+                return Err("column values changed on the wire".into());
+            }
+            if m1.as_ref() != Some(mask) {
+                return Err("mask changed on the wire".into());
+            }
+            if m2.is_some() {
+                return Err("mask invented for mask-free column".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (b) outer joins: dtype preservation + three-way engine agreement
+// ---------------------------------------------------------------------------
+
+/// Values, dtypes, nullable flags and masks must all be identical.
+fn tables_identical(a: &Table, b: &Table, label: &str) -> Result<(), String> {
+    if a.num_rows() != b.num_rows() {
+        return Err(format!("{label}: rows {} vs {}", a.num_rows(), b.num_rows()));
+    }
+    if a.schema().names() != b.schema().names() {
+        return Err(format!("{label}: schema names differ"));
+    }
+    for (name, dt) in a.schema().fields() {
+        if b.schema().dtype_of(name) != Some(*dt) {
+            return Err(format!("{label}: dtype of {name} differs"));
+        }
+        if a.schema().nullable_of(name) != b.schema().nullable_of(name) {
+            return Err(format!("{label}: nullability of {name} differs"));
+        }
+        if a.mask(name) != b.mask(name) {
+            return Err(format!("{label}: null positions of {name} differ"));
+        }
+        let (ca, cb) = (a.column(name).unwrap(), b.column(name).unwrap());
+        match (ca, cb) {
+            (Column::F64(x), Column::F64(y)) => {
+                for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                    let same = (u.is_nan() && v.is_nan())
+                        || (u - v).abs() <= 1e-9 * (1.0 + u.abs());
+                    if !same {
+                        return Err(format!("{label}: {name}[{i}] {u} vs {v}"));
+                    }
+                }
+            }
+            _ => {
+                if ca != cb {
+                    return Err(format!("{label}: column {name} differs"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn key_column(rng: &mut Rng, dtype: u8, n: usize, cardinality: i64) -> Column {
+    match dtype {
+        0 => Column::I64((0..n).map(|_| rng.i64_range(0, cardinality)).collect()),
+        1 => Column::Bool((0..n).map(|_| rng.bool(0.5)).collect()),
+        _ => Column::Str(
+            (0..n)
+                .map(|_| format!("k{}", rng.i64_range(0, cardinality)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_outer_joins_preserve_dtype_and_engines_agree() {
+    forall_cases(
+        "outer-join-3way-nulls",
+        10,
+        |rng| {
+            let kdt = rng.usize(3) as u8;
+            let nl = 20 + rng.usize(60);
+            let nr = 10 + rng.usize(40);
+            // left: key + I64 payload with ~20% nulls
+            let lkey = key_column(rng, kdt, nl, 8);
+            let lpay = Column::I64((0..nl).map(|_| rng.i64_range(0, 100)).collect());
+            let lmask = ValidityMask::from_bools(&gen::mask(rng, nl, 0.8));
+            // right: key (same dtype) + Bool payload, fully valid
+            let rkey = key_column(rng, kdt, nr, 8);
+            let rpay = Column::Bool((0..nr).map(|_| rng.bool(0.5)).collect());
+            let l = Table::from_pairs(vec![("k", lkey), ("lv", lpay)])
+                .unwrap()
+                .with_null_mask("lv", lmask)
+                .unwrap();
+            let r = Table::from_pairs(vec![("rk", rkey), ("rv", rpay)]).unwrap();
+            let how = *rng.choose(&[JoinType::Left, JoinType::Right, JoinType::Outer]);
+            (l, r, how)
+        },
+        |(l, r, how)| {
+            let kdt = l.schema().dtype_of("k").unwrap();
+            // canonical order: nulls-first multi-key sort over every column
+            // that is a groupable dtype (payloads included so the row order
+            // is fully determined)
+            let canon: &[(&str, SortOrder)] = &[
+                ("k", SortOrder::Asc),
+                ("lv", SortOrder::Asc),
+                ("rv", SortOrder::Asc),
+            ];
+            let hf2 = HiFrames::with_workers(2);
+            let hf3 = HiFrames::with_workers(3);
+            let mut collected = Vec::new();
+            for hf in [&hf2, &hf3] {
+                let t = hf
+                    .table("l", l.clone())
+                    .join_on(&hf.table("r", r.clone()), &[("k", "rk")], *how)
+                    .collect()
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                collected.push(t);
+            }
+            let srl = serial::join_on(l, r, &[("k", "rk")], *how)
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(canon)
+                .map_err(|e| e.to_string())?;
+            let eng = SparkLike::new(2, 3);
+            let spk = eng
+                .collect(
+                    &eng.join_on(
+                        &eng.parallelize(l),
+                        &eng.parallelize(r),
+                        &[("k", "rk")],
+                        *how,
+                    )
+                    .map_err(|e| e.to_string())?,
+                )
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(canon)
+                .map_err(|e| e.to_string())?;
+            // acceptance: native dtypes everywhere, no F64 promotion
+            for t in collected.iter().chain([&srl, &spk]) {
+                if t.schema().dtype_of("k") != Some(kdt) {
+                    return Err(format!("{how:?}: key dtype changed"));
+                }
+                if t.schema().dtype_of("lv") != Some(DType::I64) {
+                    return Err(format!("{how:?}: left payload promoted"));
+                }
+                if t.schema().dtype_of("rv") != Some(DType::Bool) {
+                    return Err(format!("{how:?}: right payload promoted"));
+                }
+            }
+            tables_identical(&collected[0], &srl, &format!("{how:?} w=2 vs serial"))?;
+            tables_identical(&collected[1], &srl, &format!("{how:?} w=3 vs serial"))?;
+            tables_identical(&srl, &spk, &format!("{how:?} serial vs sparklike"))
+        },
+    );
+}
+
+#[test]
+fn prop_nullable_keys_route_and_group_consistently() {
+    // nullable *key* columns: the null group must agree across engines and
+    // across worker counts, for join and aggregate alike
+    forall_cases(
+        "nullable-keys-3way",
+        10,
+        |rng| {
+            let n = 20 + rng.usize(60);
+            let key = Column::I64((0..n).map(|_| rng.i64_range(0, 6)).collect());
+            let kmask = ValidityMask::from_bools(&gen::mask(rng, n, 0.85));
+            let x = Column::F64((0..n).map(|_| rng.normal()).collect());
+            Table::from_pairs(vec![("k", key), ("x", x)])
+                .unwrap()
+                .with_null_mask("k", kmask)
+                .unwrap()
+        },
+        |t| {
+            let aggs = vec![
+                AggExpr::new("n", AggFn::Count, col("x")),
+                AggExpr::new("s", AggFn::Sum, col("x")),
+            ];
+            let canon: &[(&str, SortOrder)] = &[("k", SortOrder::Asc)];
+            let srl = serial::aggregate_by(t, &["k"], &aggs)
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(canon)
+                .map_err(|e| e.to_string())?;
+            for workers in [2usize, 3] {
+                let hf = HiFrames::with_workers(workers);
+                let ours = hf
+                    .table("t", t.clone())
+                    .aggregate_by(&["k"], aggs.clone())
+                    .collect()
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                tables_identical(&ours, &srl, &format!("agg w={workers} vs serial"))?;
+            }
+            let eng = SparkLike::new(2, 3);
+            let spk = eng
+                .collect(
+                    &eng.aggregate_by(&eng.parallelize(t), &["k"], &aggs)
+                        .map_err(|e| e.to_string())?,
+                )
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(canon)
+                .map_err(|e| e.to_string())?;
+            tables_identical(&srl, &spk, "agg serial vs sparklike")?;
+            // the null-key group exists iff the input had null keys, and it
+            // sorts first
+            if t.null_count("k") > 0 {
+                if srl.null_count("k") != 1 {
+                    return Err("expected exactly one null-key group".into());
+                }
+                if srl.mask("k").unwrap().get(0) {
+                    return Err("null group must sort first".into());
+                }
+            }
+            // a self-join over the nullable key: null keys match null keys,
+            // identically across engines
+            let j_srl = serial::join_on(
+                t,
+                &Table::from_pairs(vec![
+                    ("rk", t.column("k").unwrap().clone()),
+                    ("y", t.column("x").unwrap().clone()),
+                ])
+                .map_err(|e| e.to_string())?
+                .with_null_mask(
+                    "rk",
+                    t.mask("k")
+                        .cloned()
+                        .unwrap_or_else(|| ValidityMask::new_valid(t.num_rows())),
+                )
+                .map_err(|e| e.to_string())?,
+                &[("k", "rk")],
+                JoinType::Inner,
+            )
+            .map_err(|e| e.to_string())?;
+            let nulls = t.null_count("k");
+            let null_matches = j_srl.null_count("k");
+            // every null left row matches every null right row
+            if null_matches != nulls * nulls {
+                return Err(format!(
+                    "null-key join produced {null_matches} rows for {nulls} nulls"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) packed ordering: nulls first, packed == KeyRow
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_nullable_packed_keys_order_nulls_first_like_key_rows() {
+    forall_cases(
+        "nullable-packed-vs-keyrow",
+        32,
+        |rng| {
+            let n = 1 + rng.usize(40);
+            let ncols = 1 + rng.usize(3);
+            let mut cols = Vec::new();
+            let mut masks = Vec::new();
+            for _ in 0..ncols {
+                let dt = rng.usize(3) as u8;
+                let mut c = key_column(rng, dt, n, 5);
+                let m = if rng.bool(0.7) {
+                    let m = ValidityMask::from_bools(&gen::mask(rng, n, 0.7));
+                    scrub_invalid(&mut c, &m);
+                    Some(m)
+                } else {
+                    None
+                };
+                cols.push(c);
+                masks.push(m);
+            }
+            (cols, masks)
+        },
+        |(cols, masks)| {
+            let crefs: Vec<&Column> = cols.iter().collect();
+            let mrefs: Vec<Option<&ValidityMask>> =
+                masks.iter().map(|m| m.as_ref()).collect();
+            let packed =
+                PackedKeys::pack_nullable(&crefs, &mrefs).map_err(|e| e.to_string())?;
+            let rows = key_rows_nullable(&crefs, &mrefs).map_err(|e| e.to_string())?;
+            let n = rows.len();
+            for i in 0..n {
+                for j in 0..n {
+                    let pc = packed.cmp_rows(i, &packed, j);
+                    let rc = cmp_key_rows(&rows[i], &rows[j], &[]);
+                    if pc != rc {
+                        return Err(format!("cmp({i},{j}): packed {pc:?} vs keyrow {rc:?}"));
+                    }
+                    if packed.eq_rows(i, &packed, j) != (rows[i] == rows[j]) {
+                        return Err(format!("eq({i},{j}) disagrees"));
+                    }
+                    if rows[i] == rows[j]
+                        && packed.hash_row(i) != packed.hash_row(j)
+                    {
+                        return Err(format!("hash({i},{j}) differs for equal tuples"));
+                    }
+                }
+            }
+            // nulls-first: any row with a null first cell sorts ≤ every row
+            // with a valid first cell when the remaining cells tie is
+            // covered by cmp parity above; check the direct statement too
+            for i in 0..n {
+                for j in 0..n {
+                    if rows[i][0].is_null() && !rows[j][0].is_null() {
+                        let by_first = rows[i][0].cmp(&rows[j][0]);
+                        if by_first != std::cmp::Ordering::Less {
+                            return Err("null first cell must order first".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// aggregation null-skipping + nullable outputs across ≥2 workers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aggregate_skips_null_inputs_and_nullable_outputs_agree() {
+    // keys 0..4; values null whenever value % 3 == 0; group 4 is entirely
+    // null so mean/min come back NULL while sum/count collapse to 0
+    let n = 40usize;
+    let keys = Column::I64((0..n as i64).map(|i| i % 5).collect());
+    let vals = Column::I64((0..n as i64).map(|i| i * 7 % 23).collect());
+    let vmask = ValidityMask::from_bools(
+        &(0..n as i64)
+            .map(|i| (i * 7 % 23) % 3 != 0 && i % 5 != 4)
+            .collect::<Vec<_>>(),
+    );
+    let t = Table::from_pairs(vec![("k", keys), ("v", vals)])
+        .unwrap()
+        .with_null_mask("v", vmask)
+        .unwrap();
+    let aggs = vec![
+        AggExpr::new("n", AggFn::Count, col("v")),
+        AggExpr::new("s", AggFn::Sum, col("v")),
+        AggExpr::new("m", AggFn::Mean, col("v")),
+        AggExpr::new("lo", AggFn::Min, col("v")),
+    ];
+    let canon: &[(&str, SortOrder)] = &[("k", SortOrder::Asc)];
+    let srl = serial::aggregate_by(&t, &["k"], &aggs)
+        .unwrap()
+        .sorted_by_keys(canon)
+        .unwrap();
+    // count counts only valid rows
+    let counts = srl.column("n").unwrap().as_i64();
+    let valid_total: i64 = counts.iter().sum();
+    assert_eq!(valid_total as usize, n - t.null_count("v"));
+    // group 4: all inputs null → count 0, sum 0, mean/min NULL
+    assert_eq!(counts[4], 0);
+    assert_eq!(srl.column("s").unwrap().as_i64()[4], 0);
+    assert!(!srl.mask("m").unwrap().get(4), "mean of all-null group is NULL");
+    assert!(!srl.mask("lo").unwrap().get(4), "min of all-null group is NULL");
+    assert_eq!(srl.schema().dtype_of("lo"), Some(DType::I64), "min keeps I64");
+    for workers in [2usize, 3] {
+        let hf = HiFrames::with_workers(workers);
+        let ours = hf
+            .table("t", t.clone())
+            .aggregate_by(&["k"], aggs.clone())
+            .collect()
+            .unwrap()
+            .sorted_by_keys(canon)
+            .unwrap();
+        tables_identical(&ours, &srl, &format!("workers={workers}")).unwrap();
+    }
+    let eng = SparkLike::new(2, 3);
+    let spk = eng
+        .collect(&eng.aggregate_by(&eng.parallelize(&t), &["k"], &aggs).unwrap())
+        .unwrap()
+        .sorted_by_keys(canon)
+        .unwrap();
+    tables_identical(&srl, &spk, "serial vs sparklike").unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// three-valued boolean logic (Kleene): TRUE OR NULL = TRUE
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kleene_or_keeps_rows_selected_by_is_null() {
+    // ids 0..12; right covers multiples of 3 with w = id*100 → w is null
+    // elsewhere. The classic idiom `w.is_null() || w > 500` must keep BOTH
+    // the null rows and the big-w rows (TRUE OR NULL = TRUE); the naive
+    // null-propagating OR would drop every null row.
+    let l = Table::from_pairs(vec![("id", Column::I64((0..12).collect()))]).unwrap();
+    let r = Table::from_pairs(vec![
+        ("rid", Column::I64((0..12).filter(|i| i % 3 == 0).collect())),
+        (
+            "w",
+            Column::I64((0..12).filter(|i| i % 3 == 0).map(|i| i * 100).collect()),
+        ),
+    ])
+    .unwrap();
+    let pred = col("w").is_null().or(col("w").gt(lit(500i64)));
+    let expect: Vec<i64> = (0..12)
+        .filter(|i| i % 3 != 0 || i * 100 > 500)
+        .collect();
+    // serial
+    let joined = serial::join_on(&l, &r, &[("id", "rid")], JoinType::Left).unwrap();
+    let srl = serial::filter(&joined, &pred)
+        .unwrap()
+        .sorted_by("id")
+        .unwrap();
+    assert_eq!(srl.column("id").unwrap().as_i64(), expect.as_slice());
+    // distributed, ≥2 workers
+    for workers in [2usize, 3] {
+        let hf = HiFrames::with_workers(workers);
+        let ours = hf
+            .table("l", l.clone())
+            .join_on(&hf.table("r", r.clone()), &[("id", "rid")], JoinType::Left)
+            .filter(pred.clone())
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(
+            ours.column("id").unwrap().as_i64(),
+            expect.as_slice(),
+            "workers={workers}"
+        );
+    }
+    // sparklike row engine
+    let eng = SparkLike::new(2, 3);
+    let jr = eng
+        .join_on(
+            &eng.parallelize(&l),
+            &eng.parallelize(&r),
+            &[("id", "rid")],
+            JoinType::Left,
+        )
+        .unwrap();
+    let spk = eng
+        .collect(&eng.filter(&jr, &pred).unwrap())
+        .unwrap()
+        .sorted_by("id")
+        .unwrap();
+    assert_eq!(spk.column("id").unwrap().as_i64(), expect.as_slice());
+    // and FALSE AND NULL = FALSE: the dual must drop every row without
+    // erroring (dominant false short-circuits the null)
+    let none = serial::filter(
+        &joined,
+        &col("id").lt(lit(0i64)).and(col("w").gt(lit(0i64))),
+    )
+    .unwrap();
+    assert_eq!(none.num_rows(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// frame-level APIs survive the distributed path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fill_drop_is_null_roundtrip_distributed() {
+    let l = Table::from_pairs(vec![("id", Column::I64((0..30).collect()))]).unwrap();
+    let r = Table::from_pairs(vec![
+        ("rid", Column::I64((0..30).filter(|i| i % 4 == 0).collect())),
+        (
+            "w",
+            Column::Str(
+                (0..30)
+                    .filter(|i| i % 4 == 0)
+                    .map(|i| format!("w{i}"))
+                    .collect(),
+            ),
+        ),
+    ])
+    .unwrap();
+    for workers in [2usize, 3] {
+        let hf = HiFrames::with_workers(workers);
+        let joined = hf
+            .table("l", l.clone())
+            .join_on(&hf.table("r", r.clone()), &[("id", "rid")], JoinType::Left);
+        let out = joined.sort_by("id").collect().unwrap();
+        assert_eq!(out.schema().dtype_of("w"), Some(DType::Str));
+        assert_eq!(out.null_count("w"), 30 - 8);
+        let filled = joined.fill_null("w", "?").sort_by("id").collect().unwrap();
+        assert_eq!(filled.null_count("w"), 0);
+        assert_eq!(filled.column("w").unwrap().as_str_col()[1], "?");
+        let dropped = joined.drop_null(&["w"]).collect().unwrap();
+        assert_eq!(dropped.num_rows(), 8);
+        let probed = joined.is_null("w").sort_by("id").collect().unwrap();
+        let flags = probed.column("w_is_null").unwrap().as_bool();
+        for (i, f) in flags.iter().enumerate() {
+            assert_eq!(*f, i % 4 != 0, "row {i}");
+        }
+    }
+}
