@@ -2,6 +2,10 @@
 //! the paper's Table 1 in one runnable program.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! For the module map and the frame API → IR → passes → ops → exec → comm
+//! data-flow walk, see ARCHITECTURE.md at the repository root (DESIGN.md
+//! has the per-subsystem protocols).
 
 use hiframes::prelude::*;
 
@@ -125,6 +129,17 @@ fn main() -> anyhow::Result<()> {
     // SEMI join: which rows have a matching dimension entry?
     let semi = df1.join_on(&sparse, &[("id", "sid")], JoinType::Semi);
     println!("semi join rows: {}", semi.count()?);
+
+    // skew-aware join: force the heavy-hitter broadcast path with an
+    // explicit frequency threshold (on large skewed sources the planner
+    // selects it automatically — ARCHITECTURE.md / DESIGN.md §4.3)
+    let skew_joined = df1
+        .join_with(&sparse)
+        .on("id", "sid")
+        .how(JoinType::Left)
+        .skew_hint(0.2)
+        .build();
+    println!("skew-hinted left join rows: {}", skew_joined.count()?);
 
     // the optimized plan for the join query, as the compiler sees it
     println!("\noptimized plan for the join query:");

@@ -295,6 +295,46 @@ mod tests {
     }
 
     #[test]
+    fn skewed_q05_auto_selects_broadcast_and_matches_serial() {
+        use crate::exec::collect_serial;
+        use crate::passes::{optimize, PassOptions};
+        // Zipf-skewed clickstream: the planner must flip the clicks⋈item
+        // join to the skew-broadcast strategy on its own…
+        let db = generate(&GenOptions {
+            scale_factor: 0.15,
+            click_skew: 1.5,
+            ..Default::default()
+        });
+        let hf = HiFrames::with_workers(3);
+        let frame = hiframes_relational(&hf, &db).sort_by("wcs_user_sk");
+        let optimized =
+            optimize(frame.plan().clone(), &PassOptions::default()).unwrap();
+        assert!(
+            format!("{optimized}").contains("skew-broadcast"),
+            "planner did not engage the skew path:\n{optimized}"
+        );
+        // …and the distributed result (skew path active) must be
+        // byte-identical to the serial baseline (masks included — Table
+        // equality compares values *and* null positions)
+        let ours = frame.collect().unwrap();
+        let serial = collect_serial(frame.plan().clone()).unwrap();
+        assert!(ours.num_rows() > 0);
+        assert_eq!(ours, serial);
+        // the uniform clickstream must NOT flip (below the threshold)
+        let db = generate(&GenOptions {
+            scale_factor: 0.15,
+            ..Default::default()
+        });
+        let frame = hiframes_relational(&hf, &db);
+        let optimized =
+            optimize(frame.plan().clone(), &PassOptions::default()).unwrap();
+        assert!(
+            !format!("{optimized}").contains("skew-broadcast"),
+            "uniform keys flipped unexpectedly:\n{optimized}"
+        );
+    }
+
+    #[test]
     fn skew_increases_imbalance() {
         let uniform = generate(&GenOptions {
             scale_factor: 0.3,

@@ -12,6 +12,8 @@
 //! * [`Comm::halo_exchange`] — near-neighbor exchange for stencils
 //!   (the `MPI_Isend/Irecv/Wait` pattern).
 //! * [`Comm::gather_bytes`] / [`Comm::bcast_bytes`] / [`Comm::allgather_bytes`].
+//! * [`Comm::allreduce_bytes_or`] — `MPI_Allreduce(MPI_BOR)` over byte
+//!   vectors; the skew-aware join's global matched-flag merge.
 
 use super::Comm;
 
@@ -68,6 +70,7 @@ impl Comm {
         acc
     }
 
+    /// Integer twin of [`Comm::exscan_f64`].
     pub fn exscan_i64(&self, value: i64, op: ReduceOp) -> i64 {
         self.count_collective();
         for d in self.rank() + 1..self.nranks() {
@@ -106,6 +109,7 @@ impl Comm {
         acc
     }
 
+    /// Integer twin of [`Comm::allreduce_f64`].
     pub fn allreduce_i64(&self, value: i64, op: ReduceOp) -> i64 {
         self.count_collective();
         for d in 0..self.nranks() {
@@ -205,6 +209,35 @@ impl Comm {
             }
         }
         out
+    }
+
+    /// Element-wise bitwise-OR allreduce over equal-length byte vectors —
+    /// `MPI_Allreduce(MPI_BOR)`. The skew-aware join uses it to merge the
+    /// per-rank "which replicated build rows did *I* match" flags into the
+    /// global matched set before emitting the unmatched rows of a
+    /// Right/Outer join exactly once.
+    pub fn allreduce_bytes_or(&self, payload: Vec<u8>) -> Vec<u8> {
+        self.count_collective();
+        for d in 0..self.nranks() {
+            if d != self.rank() {
+                self.send(d, payload.clone());
+            }
+        }
+        let mut acc = payload;
+        for s in 0..self.nranks() {
+            if s != self.rank() {
+                let b = self.recv(s);
+                assert_eq!(
+                    b.len(),
+                    acc.len(),
+                    "allreduce_bytes_or: length mismatch"
+                );
+                for (a, v) in acc.iter_mut().zip(b) {
+                    *a |= v;
+                }
+            }
+        }
+        acc
     }
 
     /// Near-neighbor halo exchange for 1-D stencils: send `to_prev` to rank
@@ -351,6 +384,26 @@ mod tests {
                 vec![vec![0u8, 0], vec![1, 1], vec![2, 2], vec![3, 3]]
             );
         }
+    }
+
+    #[test]
+    fn allreduce_bytes_or_merges_flags() {
+        let out = run_spmd(3, |c| {
+            // rank r sets byte r (and everyone sets byte 3)
+            let mut flags = vec![0u8; 4];
+            flags[c.rank()] = 1;
+            flags[3] = 1;
+            c.allreduce_bytes_or(flags)
+        });
+        for per_rank in out {
+            assert_eq!(per_rank, vec![1u8, 1, 1, 1]);
+        }
+        // empty payloads are a no-op on every rank
+        let out = run_spmd(2, |c| {
+            let _ = c.rank();
+            c.allreduce_bytes_or(Vec::new())
+        });
+        assert!(out.iter().all(|v| v.is_empty()));
     }
 
     #[test]

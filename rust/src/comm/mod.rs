@@ -30,6 +30,7 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// `(messages, bytes, barriers, collectives)` at this instant.
     pub fn snapshot(&self) -> (u64, u64, u64, u64) {
         (
             self.messages.load(Ordering::Relaxed),
@@ -53,18 +54,22 @@ pub struct Comm {
 }
 
 impl Comm {
+    /// This rank's id (`MPI_Comm_rank`).
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// World size (`MPI_Comm_size`).
     pub fn nranks(&self) -> usize {
         self.nranks
     }
 
+    /// Shared communication counters (read by the benches).
     pub fn stats(&self) -> &CommStats {
         &self.stats
     }
 
+    /// Is this rank 0 (the driver/leader rank)?
     pub fn is_root(&self) -> bool {
         self.rank == 0
     }
@@ -196,9 +201,12 @@ impl<T> Default for OnceCellSync<T> {
 }
 
 impl<T> OnceCellSync<T> {
+    /// Store a value (overwriting any previous one).
     pub fn set(&self, v: T) {
         *self.0.lock().unwrap() = Some(v);
     }
+
+    /// Remove and return the stored value, if any.
     pub fn take(&self) -> Option<T> {
         self.0.lock().unwrap().take()
     }

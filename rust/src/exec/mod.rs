@@ -288,6 +288,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             right,
             on,
             how,
+            strategy,
         } => {
             let lframe = exec_node(left, comm, opts)?;
             let rframe = exec_node(right, comm, opts)?;
@@ -322,8 +323,9 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             }
             let lpay = payload_refs(&lframe, on, true);
             let rpay = payload_refs(&rframe, on, false);
-            let (keys_out, lout, rout) =
-                ops::distributed_join_on(comm, &lkeys, &lpay, &rkeys, &rpay, *how)?;
+            let (keys_out, lout, rout) = ops::distributed_join_on_strategy(
+                comm, &lkeys, &lpay, &rkeys, &rpay, *how, *strategy,
+            )?;
             // assemble output per the join schema: left fields in order
             // (each key slot takes its joined key column), then — unless the
             // join type drops them — right fields minus the right keys
@@ -705,6 +707,7 @@ mod tests {
                 right: Box::new(source_mem("r", right)),
                 on: vec![("id".into(), "rid".into())],
                 how: crate::ir::JoinType::Inner,
+                strategy: crate::ir::JoinStrategy::Hash,
             }),
             keys: vec![("id".into(), SortOrder::Asc)],
         };
@@ -729,6 +732,7 @@ mod tests {
                     right: Box::new(source_mem("r", right.clone())),
                     on: vec![("id".into(), "rid".into())],
                     how: crate::ir::JoinType::Left,
+                    strategy: crate::ir::JoinStrategy::Hash,
                 }),
                 keys: vec![("id".into(), SortOrder::Asc)],
             };
@@ -765,6 +769,7 @@ mod tests {
             right: Box::new(source_mem("r", right)),
             on: vec![("id".into(), "rid".into())],
             how: crate::ir::JoinType::Left,
+            strategy: crate::ir::JoinStrategy::Hash,
         };
         // drop_null semantics: filter on IS NOT NULL
         let plan = Plan::Sort {

@@ -56,6 +56,9 @@ pub struct AggExpr {
 }
 
 impl AggExpr {
+    /// `:out = func(input)` — one output column of an aggregate
+    /// (`AggExpr::new("xc", AggFn::Sum, col("x").lt(lit(1.0)))` is the
+    /// paper's `:xc = sum(:x < 1.0)`).
     pub fn new(out: &str, func: AggFn, input: Expr) -> AggExpr {
         AggExpr {
             out: out.to_string(),
@@ -128,6 +131,8 @@ pub enum AggState {
 }
 
 impl AggState {
+    /// The empty accumulator for `func` over a `input_dtype` column (the
+    /// identity every partial-aggregation merge starts from).
     pub fn new(func: AggFn, input_dtype: DType) -> AggState {
         let int = input_dtype == DType::I64 || input_dtype == DType::Bool;
         match func {

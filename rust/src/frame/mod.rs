@@ -24,6 +24,12 @@
 //! repair nulls with [`DataFrame::is_null`], [`DataFrame::fill_null`] and
 //! [`DataFrame::drop_null`].
 //!
+//! Joins additionally carry a physical [`JoinStrategy`]: the optimizer
+//! auto-selects the skew-aware heavy-hitter broadcast path when source
+//! statistics warrant it, and `df.join_with(&r).on(..).skew_hint(0.05)
+//! .build()` forces it with an explicit frequency threshold (see
+//! ARCHITECTURE.md and DESIGN.md §4.3).
+//!
 //! A `DataFrame` is a lazy logical plan; [`DataFrame::collect`] compiles it
 //! through the full pass pipeline and runs it SPMD. Scalar helpers
 //! ([`DataFrame::mean`], [`DataFrame::var`]) mirror the paper's feature
@@ -31,7 +37,7 @@
 
 use crate::exec::{collect, ExecOptions};
 use crate::expr::{AggExpr, AggFn, Expr};
-use crate::ir::{source_hfs, source_mem, JoinType, MlParams, Plan, SortOrder};
+use crate::ir::{source_hfs, source_mem, JoinStrategy, JoinType, MlParams, Plan, SortOrder};
 use crate::ops::stencil::{sma_weights, wma_weights_124};
 use crate::table::{Schema, Table};
 use anyhow::Result;
@@ -51,6 +57,8 @@ impl Default for HiFrames {
 }
 
 impl HiFrames {
+    /// Context with explicit [`ExecOptions`] (worker count, pass toggles,
+    /// aggregation strategy).
     pub fn new(opts: ExecOptions) -> HiFrames {
         HiFrames {
             opts: Arc::new(opts),
@@ -65,6 +73,7 @@ impl HiFrames {
         })
     }
 
+    /// The execution options shared by every frame of this context.
     pub fn options(&self) -> &ExecOptions {
         &self.opts
     }
@@ -216,6 +225,7 @@ impl DataFrame {
                 .map(|(l, r)| (l.to_string(), r.to_string()))
                 .collect(),
             how,
+            strategy: JoinStrategy::Hash,
         })
     }
 
@@ -228,6 +238,7 @@ impl DataFrame {
             right: other.plan.clone(),
             on: Vec::new(),
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         }
     }
 
@@ -386,6 +397,7 @@ pub struct JoinBuilder {
     right: Plan,
     on: Vec<(String, String)>,
     how: JoinType,
+    strategy: JoinStrategy,
 }
 
 impl JoinBuilder {
@@ -401,6 +413,25 @@ impl JoinBuilder {
         self
     }
 
+    /// Force the skew-aware broadcast path: keys whose global frequency
+    /// share reaches `threshold` (a fraction, clamped to `[0.001, 1.0]`)
+    /// are detected by the runtime sampling pass and joined via
+    /// broadcast/replication instead of the hash shuffle. Overrides the
+    /// planner's automatic selection; the output relation is identical
+    /// either way.
+    pub fn skew_hint(mut self, threshold: f64) -> JoinBuilder {
+        self.strategy = JoinStrategy::skew_with_threshold(threshold);
+        self
+    }
+
+    /// Set the physical [`JoinStrategy`] explicitly (default
+    /// [`JoinStrategy::Hash`], which the optimizer may upgrade when source
+    /// statistics show skew).
+    pub fn strategy(mut self, strategy: JoinStrategy) -> JoinBuilder {
+        self.strategy = strategy;
+        self
+    }
+
     /// Finish: produce the lazy joined [`DataFrame`]. Key-pair validation
     /// (non-empty, matching groupable dtypes) happens at schema time, like
     /// every other plan error.
@@ -412,6 +443,7 @@ impl JoinBuilder {
                 right: Box::new(self.right),
                 on: self.on,
                 how: self.how,
+                strategy: self.strategy,
             },
         }
     }
@@ -727,6 +759,44 @@ mod tests {
             .unwrap();
         assert_eq!(anti.num_rows(), 3); // the three id=1 rows
         assert!(anti.column("id").unwrap().as_i64().iter().all(|&i| i == 1));
+    }
+
+    #[test]
+    fn skew_hint_sets_strategy_and_matches_hash_join() {
+        let hf = ctx();
+        let left = df(&hf); // ids 1,2,1,3,2,1 — id 1 is the hot key
+        let right = hf.table(
+            "r",
+            Table::from_pairs(vec![
+                ("cid", Column::I64(vec![1, 2])),
+                ("w", Column::I64(vec![10, 20])),
+            ])
+            .unwrap(),
+        );
+        let hinted = left
+            .join_with(&right)
+            .on("id", "cid")
+            .how(JoinType::Left)
+            .skew_hint(0.25)
+            .build();
+        match hinted.plan() {
+            Plan::Join { strategy, .. } => assert_eq!(
+                *strategy,
+                JoinStrategy::SkewBroadcast {
+                    threshold_permille: 250
+                }
+            ),
+            other => panic!("expected join plan, got:\n{other}"),
+        }
+        let skew = hinted.sort_by("id").collect().unwrap();
+        let hash = left
+            .join_on(&right, &[("id", "cid")], JoinType::Left)
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(skew.column("id").unwrap(), hash.column("id").unwrap());
+        assert_eq!(skew.mask("w"), hash.mask("w"));
+        assert_eq!(skew.num_rows(), 6);
     }
 
     #[test]

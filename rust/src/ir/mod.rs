@@ -9,7 +9,7 @@ use crate::distribution::Dist;
 use crate::expr::{AggExpr, Expr};
 use crate::table::{Schema, Table};
 use crate::types::DType;
-pub use crate::types::{JoinType, SortOrder};
+pub use crate::types::{JoinStrategy, JoinType, SortOrder};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
 use std::fmt;
@@ -78,6 +78,10 @@ pub enum Plan {
         /// `(left_key, right_key)` pairs; equal, groupable dtypes per pair.
         on: Vec<(String, String)>,
         how: JoinType,
+        /// Physical strategy hint: plain hash shuffle or the skew-aware
+        /// heavy-hitter broadcast path. Purely an execution hint — it never
+        /// changes the output relation, only how rows are routed.
+        strategy: JoinStrategy,
     },
     /// `aggregate(df, [:k1, :k2], :out = fn(expr), …)` — group-by over a
     /// composite key list.
@@ -193,6 +197,7 @@ impl Plan {
                 right,
                 on,
                 how,
+                ..
             } => {
                 let ls = left.schema()?;
                 let rs = right.schema()?;
@@ -474,12 +479,25 @@ impl Plan {
             Plan::Rename { from, to, .. } => {
                 writeln!(f, "{pad}Rename(:{from} -> :{to}) [{dist}]")?
             }
-            Plan::Join { on, how, .. } => {
+            Plan::Join {
+                on, how, strategy, ..
+            } => {
                 let pairs: Vec<String> = on
                     .iter()
                     .map(|(lk, rk)| format!(":{lk} == :{rk}"))
                     .collect();
-                writeln!(f, "{pad}Join({}, how={how}) [{dist}]", pairs.join(" && "))?
+                match strategy {
+                    JoinStrategy::Hash => writeln!(
+                        f,
+                        "{pad}Join({}, how={how}) [{dist}]",
+                        pairs.join(" && ")
+                    )?,
+                    other => writeln!(
+                        f,
+                        "{pad}Join({}, how={how}, strategy={other}) [{dist}]",
+                        pairs.join(" && ")
+                    )?,
+                }
             }
             Plan::Aggregate { keys, aggs, .. } => {
                 let ks: Vec<String> = keys.iter().map(|k| format!(":{k}")).collect();
@@ -605,6 +623,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into())],
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         };
         assert_eq!(j.schema().unwrap().names(), vec!["id", "x", "y", "tag"]);
 
@@ -613,6 +632,7 @@ mod tests {
             right: Box::new(src()),
             on: vec![("id".into(), "id".into())],
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         };
         assert!(collide.schema().is_err()); // :x on both sides
     }
@@ -625,6 +645,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("x".into(), "cid".into())],
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         };
         assert!(bad.schema().is_err()); // F64 key and mismatch
         // empty key list
@@ -633,6 +654,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![],
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         };
         assert!(empty.schema().is_err());
         // duplicate left key
@@ -641,6 +663,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into()), ("id".into(), "tag".into())],
             how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
         };
         assert!(dup.schema().is_err());
     }
@@ -653,6 +676,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into())],
             how: JoinType::Left,
+            strategy: JoinStrategy::Hash,
         };
         let s = j.schema().unwrap();
         assert_eq!(s.dtype_of("id"), Some(DType::I64)); // key slot
@@ -667,6 +691,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into())],
             how: JoinType::Right,
+            strategy: JoinStrategy::Hash,
         };
         let s = j.schema().unwrap();
         assert_eq!(s.nullable_of("x"), Some(true));
@@ -678,6 +703,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into())],
             how: JoinType::Outer,
+            strategy: JoinStrategy::Hash,
         };
         let s = j.schema().unwrap();
         assert_eq!(s.dtype_of("id"), Some(DType::I64));
@@ -697,6 +723,7 @@ mod tests {
             right: Box::new(right_src()),
             on: vec![("id".into(), "cid".into())],
             how: JoinType::Left,
+            strategy: JoinStrategy::Hash,
         };
         let wc = Plan::WithColumn {
             input: Box::new(join.clone()),
@@ -739,6 +766,7 @@ mod tests {
                 right: Box::new(right_src()),
                 on: vec![("id".into(), "cid".into())],
                 how,
+                strategy: JoinStrategy::Hash,
             };
             assert_eq!(j.schema().unwrap().names(), vec!["id", "x"], "{how:?}");
         }

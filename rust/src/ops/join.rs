@@ -1,23 +1,41 @@
-//! Equi-join over composite keys with join types.
+//! Equi-join over composite keys with join types and a skew-aware
+//! broadcast path.
 //!
-//! Both sides are hash-partitioned by their key *tuple* so equal keys meet
-//! on `owner_of_key(keys)` (the paper's hash partitioning, Fig. 5,
-//! generalized from `_df_id[i] % npes` to an Fx hash over the key list).
-//! The local join is a hash join producing `(left, right)` index pairs where
-//! a missing side (`None`) marks the null-introduced rows of Left / Right /
-//! Outer joins. Because the shuffle colocates equal keys, the unmatched-row
+//! **Hash path** (the default, [`crate::types::JoinStrategy::Hash`]): both
+//! sides are hash-partitioned by their key *tuple* so equal keys meet on
+//! `owner_of_key(keys)` (the paper's hash partitioning, Fig. 5, generalized
+//! from `_df_id[i] % npes` to an Fx hash over the key list). The local join
+//! is a hash join producing `(left, right)` index pairs where a missing
+//! side (`None`) marks the null-introduced rows of Left / Right / Outer
+//! joins. Because the shuffle colocates equal keys, the unmatched-row
 //! bookkeeping is purely rank-local.
+//!
+//! **Skew path** ([`crate::types::JoinStrategy::SkewBroadcast`]): hash
+//! partitioning collapses onto one rank when a few keys dominate the probe
+//! side (paper §5.1, the TPCx-BB Q05 imbalance). A distributed sampling
+//! pass ([`crate::ops::skew::detect_heavy_hitters`]) agrees on the set of
+//! heavy key tuples; rows are then split per side — heavy *probe* (left)
+//! rows stay on their home rank un-shuffled, heavy *build* (right) rows are
+//! replicated to every rank, light rows of both sides take the ordinary
+//! hash shuffle — and the two partial joins are unioned. For Right/Outer
+//! joins the replicated build rows' matched flags are OR-merged globally
+//! so unmatched build rows are emitted exactly once (on their origin
+//! rank). See DESIGN.md §4.3 for the per-join-type argument.
 //!
 //! The seed's single-key sort-merge join ([`local_sort_merge_join`]) is kept
 //! both as the historical reference implementation and as an oracle in the
 //! property tests.
 
 use super::keys::{KeyRow, PackedKeys};
-use super::shuffle::shuffle_by_packed_nullable;
-use crate::column::{Column, NullableColumn, ValidityMask};
+use super::shuffle::{shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable};
+use super::skew::{detect_heavy_hitters, HeavySet};
+use crate::column::{
+    decode_nullable_column, encode_nullable_column_take, extend_opt_mask, normalize_mask,
+    Column, NullableColumn, ValidityMask,
+};
 use crate::comm::Comm;
 use crate::fxhash::FxHashMap;
-use crate::types::JoinType;
+use crate::types::{JoinStrategy, JoinType};
 use anyhow::{bail, Result};
 
 /// One column with its optional validity mask — the argument shape of the
@@ -87,6 +105,28 @@ pub fn packed_join_pairs(
     rkeys: &PackedKeys<'_>,
     how: JoinType,
 ) -> Vec<(Option<usize>, Option<usize>)> {
+    let (mut out, right_matched) = packed_join_pairs_partial(lkeys, rkeys, how);
+    if matches!(how, JoinType::Right | JoinType::Outer) {
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                out.push((None, Some(j)));
+            }
+        }
+    }
+    out
+}
+
+/// [`packed_join_pairs`] without the trailing unmatched-right emission:
+/// returns the pairs built from the left-side probe plus the per-right-row
+/// matched flags. The hash path appends the unmatched right rows locally
+/// (shuffled keys colocate); the skew path must first OR-merge the flags of
+/// the *replicated* build rows across ranks, because any rank may have
+/// matched them.
+pub fn packed_join_pairs_partial(
+    lkeys: &PackedKeys<'_>,
+    rkeys: &PackedKeys<'_>,
+    how: JoinType,
+) -> (Vec<(Option<usize>, Option<usize>)>, Vec<bool>) {
     let mut index: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
     for j in 0..rkeys.len() {
         index.entry(rkeys.hash_row(j)).or_default().push(j as u32);
@@ -120,14 +160,7 @@ pub fn packed_join_pairs(
             _ => {}
         }
     }
-    if matches!(how, JoinType::Right | JoinType::Outer) {
-        for (j, m) in right_matched.iter().enumerate() {
-            if !m {
-                out.push((None, Some(j)));
-            }
-        }
-    }
-    out
+    (out, right_matched)
 }
 
 /// Local hash join over key tuples with join-type semantics. Returns one
@@ -199,9 +232,32 @@ pub fn distributed_join_on(
     rpay: &[MaskedCol],
     how: JoinType,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
+    distributed_join_on_strategy(comm, lkeys, lpay, rkeys, rpay, how, JoinStrategy::Hash)
+}
+
+/// [`distributed_join_on`] with an explicit [`JoinStrategy`].
+///
+/// `JoinStrategy::Hash` is the plain hash-partitioned join. With
+/// `JoinStrategy::SkewBroadcast { .. }` a sampling pass first agrees on the
+/// heavy-hitter key set (see [`crate::ops::skew`]); if none is found the
+/// join degrades to the hash path at the cost of one allgather, otherwise
+/// rows split into a shuffled light partition and a broadcast heavy
+/// partition whose results are unioned. Output multisets are identical for
+/// both strategies; only the routing (and therefore the per-rank row
+/// distribution of the `1D_VAR` output) differs.
+pub fn distributed_join_on_strategy(
+    comm: &Comm,
+    lkeys: &[MaskedCol],
+    lpay: &[MaskedCol],
+    rkeys: &[MaskedCol],
+    rpay: &[MaskedCol],
+    how: JoinType,
+    strategy: JoinStrategy,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
     if lkeys.len() != rkeys.len() || lkeys.is_empty() {
         bail!("join: key column lists must be non-empty and equal length");
     }
+    let nk = lkeys.len();
     // every rank (and both sides) must agree on the flagged-vs-plain key
     // layout, or the hash routing would split equal keys across ranks
     let local_flag = lkeys.iter().chain(rkeys).any(|(_, m)| m.is_some());
@@ -220,8 +276,7 @@ pub fn distributed_join_on(
     let lpacked_pre = PackedKeys::pack_masked(&lkc, &lkm, with_flags)?;
     let rpacked_pre = PackedKeys::pack_masked(&rkc, &rkm, with_flags)?;
 
-    // route both sides by the hash of their packed key set — no per-row
-    // tuples, and no column clones on the way into the shuffle
+    // all columns (keys first), as references — no clones into the shuffle
     let mut lall: Vec<&Column> = lkc.clone();
     let mut lmasks: Vec<Option<&ValidityMask>> = lkm.clone();
     for (c, m) in lpay {
@@ -234,31 +289,214 @@ pub fn distributed_join_on(
         rall.push(c);
         rmasks.push(*m);
     }
-    let (lall, lrmasks) = shuffle_by_packed_nullable(comm, &lpacked_pre, &lall, &lmasks)?;
-    let (rall, rrmasks) = shuffle_by_packed_nullable(comm, &rpacked_pre, &rall, &rmasks)?;
-    let (lk, lc) = lall.split_at(lkeys.len());
-    let (lkm2, lcm) = lrmasks.split_at(lkeys.len());
-    let (rk, rc) = rall.split_at(rkeys.len());
-    let (rkm2, rcm) = rrmasks.split_at(rkeys.len());
 
-    let lkrefs: Vec<&Column> = lk.iter().collect();
-    let rkrefs: Vec<&Column> = rk.iter().collect();
-    let lkmrefs: Vec<Option<&ValidityMask>> = lkm2.iter().map(|m| m.as_ref()).collect();
-    let rkmrefs: Vec<Option<&ValidityMask>> = rkm2.iter().map(|m| m.as_ref()).collect();
-    // post-shuffle: only the two local sides must agree on the layout
-    let local_flags = lkmrefs.iter().chain(&rkmrefs).any(|m| m.is_some());
-    let lpacked = PackedKeys::pack_masked(&lkrefs, &lkmrefs, local_flags)?;
-    let rpacked = PackedKeys::pack_masked(&rkrefs, &rkmrefs, local_flags)?;
-    let pairs = packed_join_pairs(&lpacked, &rpacked, how);
+    // heavy-hitter detection (skew strategy only). The detected set is
+    // identical on every rank, so every rank takes the same branch below —
+    // the collective schedules stay aligned. A single-rank world skips
+    // straight to the local hash join: there is no imbalance to fix, and
+    // the sampling/replication machinery would be pure overhead.
+    let heavy = match strategy.threshold() {
+        Some(threshold) if comm.nranks() > 1 => {
+            detect_heavy_hitters(comm, &lpacked_pre, threshold)
+        }
+        _ => HeavySet::empty(),
+    };
 
-    // output key columns: value + validity from whichever side is present,
-    // gathered straight from the shuffled key columns
-    let keys_out: Vec<NullableColumn> = (0..lk.len())
+    if heavy.is_empty() {
+        // ---- plain hash path: shuffle everything, join locally ----
+        let (lcols, lms) =
+            shuffle_by_packed_nullable(comm, &lpacked_pre, &lall, &lmasks)?;
+        let (rcols, rms) =
+            shuffle_by_packed_nullable(comm, &rpacked_pre, &rall, &rmasks)?;
+        let (pairs, _) = join_partition(nk, &lcols, &lms, &rcols, &rms, how, true)?;
+        return Ok(assemble_outputs(nk, &lcols, &lms, &rcols, &rms, &pairs, how));
+    }
+
+    // ---- skew path ----
+    let p = comm.nranks();
+    let (lheavy_idx, llight_idx) = partition_heavy(&heavy, &lpacked_pre);
+    let (rheavy_idx, rlight_idx) = partition_heavy(&heavy, &rpacked_pre);
+
+    // light rows of both sides: the ordinary hash shuffle (owners from the
+    // globally agreed pre-shuffle packing, so equal light keys colocate)
+    let llight_owners: Vec<usize> =
+        llight_idx.iter().map(|&i| lpacked_pre.owner(i, p)).collect();
+    let rlight_owners: Vec<usize> =
+        rlight_idx.iter().map(|&i| rpacked_pre.owner(i, p)).collect();
+    let (l1, lm1) =
+        shuffle_rows_by_owner_nullable(comm, &llight_owners, &llight_idx, &lall, &lmasks)?;
+    let (r1, rm1) =
+        shuffle_rows_by_owner_nullable(comm, &rlight_owners, &rlight_idx, &rall, &rmasks)?;
+    let (pairs1, _) = join_partition(nk, &l1, &lm1, &r1, &rm1, how, true)?;
+    let (k1, lo1, ro1) = assemble_outputs(nk, &l1, &lm1, &r1, &rm1, &pairs1, how);
+
+    // heavy partition: probe rows stay local (they are already spread over
+    // the ranks by the input distribution — that *is* the load balancing),
+    // build rows replicate to every rank so each local probe sees the full
+    // matching set
+    let (l2, lm2) = take_rows(&lall, &lmasks, &lheavy_idx);
+    let (r2, rm2, my_start) = replicate_rows(comm, &rall, &rmasks, &rheavy_idx)?;
+    let (mut pairs2, right_matched) =
+        join_partition(nk, &l2, &lm2, &r2, &rm2, how, false)?;
+    if matches!(how, JoinType::Right | JoinType::Outer) {
+        // a replicated build row may be matched on any rank: OR-merge the
+        // flags and emit each globally-unmatched row exactly once, on the
+        // rank that originally contributed it
+        let flags: Vec<u8> = right_matched.iter().map(|&b| b as u8).collect();
+        let global = comm.allreduce_bytes_or(flags);
+        for j in my_start..my_start + rheavy_idx.len() {
+            if global[j] == 0 {
+                pairs2.push((None, Some(j)));
+            }
+        }
+    }
+    let (k2, lo2, ro2) = assemble_outputs(nk, &l2, &lm2, &r2, &rm2, &pairs2, how);
+
+    // union of the two partitions (light first, then heavy)
+    let keys_out = k1
+        .into_iter()
+        .zip(k2)
+        .map(|(a, b)| concat_nullable(a, &b))
+        .collect();
+    let left_out = lo1
+        .into_iter()
+        .zip(lo2)
+        .map(|(a, b)| concat_nullable(a, &b))
+        .collect();
+    let right_out = ro1
+        .into_iter()
+        .zip(ro2)
+        .map(|(a, b)| concat_nullable(a, &b))
+        .collect();
+    Ok((keys_out, left_out, right_out))
+}
+
+/// Split row indices of a packed key set into `(heavy, light)` by heavy-set
+/// membership, preserving row order within each partition.
+fn partition_heavy(heavy: &HeavySet, keys: &PackedKeys) -> (Vec<usize>, Vec<usize>) {
+    let mut h = Vec::new();
+    let mut l = Vec::new();
+    for i in 0..keys.len() {
+        if heavy.contains(keys, i) {
+            h.push(i);
+        } else {
+            l.push(i);
+        }
+    }
+    (h, l)
+}
+
+/// Gather the `idx` rows of every column (and its mask) into owned columns.
+fn take_rows(
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+    idx: &[usize],
+) -> (Vec<Column>, Vec<Option<ValidityMask>>) {
+    let out_cols: Vec<Column> = cols.iter().map(|c| c.take(idx)).collect();
+    let out_masks: Vec<Option<ValidityMask>> = masks
+        .iter()
+        .map(|m| normalize_mask((*m).map(|vm| vm.take(idx))))
+        .collect();
+    (out_cols, out_masks)
+}
+
+/// Replicate the `idx` rows of every column to all ranks (one allgather of
+/// the nullable column framing). Returns the replicated columns/masks —
+/// identical on every rank, source chunks concatenated in rank order — and
+/// the row offset where this rank's own contribution starts (its rows span
+/// `my_start..my_start + idx.len()`).
+fn replicate_rows(
+    comm: &Comm,
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+    idx: &[usize],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>, usize)> {
+    let mut buf = Vec::new();
+    for (&c, &m) in cols.iter().zip(masks.iter()) {
+        encode_nullable_column_take(c, m, idx, &mut buf);
+    }
+    let chunks = comm.allgather_bytes(buf);
+    let mut out_cols: Vec<Column> =
+        cols.iter().map(|c| Column::new_empty(c.dtype())).collect();
+    let mut out_masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
+    let mut my_start = 0usize;
+    for (r, chunk) in chunks.iter().enumerate() {
+        let mut pos = 0usize;
+        let mut chunk_rows = 0usize;
+        for (oc, om) in out_cols.iter_mut().zip(out_masks.iter_mut()) {
+            let before = oc.len();
+            let (c, m) = decode_nullable_column(chunk, &mut pos)?;
+            chunk_rows = c.len();
+            oc.extend(&c);
+            extend_opt_mask(om, before, m.as_ref(), c.len());
+        }
+        if r < comm.rank() {
+            my_start += chunk_rows;
+        }
+    }
+    Ok((out_cols, out_masks, my_start))
+}
+
+/// Pack the local key columns of both sides (first `nk` columns, with a
+/// locally agreed flag layout) and run the packed hash join. With
+/// `emit_right_unmatched`, Right/Outer append their locally-unmatched right
+/// rows — correct whenever the two sides' equal keys are fully colocated
+/// (the hash path and the light partition); the heavy partition passes
+/// `false` and resolves unmatched build rows globally instead.
+fn join_partition(
+    nk: usize,
+    lcols: &[Column],
+    lmasks: &[Option<ValidityMask>],
+    rcols: &[Column],
+    rmasks: &[Option<ValidityMask>],
+    how: JoinType,
+    emit_right_unmatched: bool,
+) -> Result<(Vec<(Option<usize>, Option<usize>)>, Vec<bool>)> {
+    let lkrefs: Vec<&Column> = lcols[..nk].iter().collect();
+    let rkrefs: Vec<&Column> = rcols[..nk].iter().collect();
+    let lkm: Vec<Option<&ValidityMask>> =
+        lmasks[..nk].iter().map(|m| m.as_ref()).collect();
+    let rkm: Vec<Option<&ValidityMask>> =
+        rmasks[..nk].iter().map(|m| m.as_ref()).collect();
+    // post-routing: only the two local sides must agree on the layout
+    let flags = lkm.iter().chain(&rkm).any(|m| m.is_some());
+    let lpacked = PackedKeys::pack_masked(&lkrefs, &lkm, flags)?;
+    let rpacked = PackedKeys::pack_masked(&rkrefs, &rkm, flags)?;
+    let (mut pairs, right_matched) = packed_join_pairs_partial(&lpacked, &rpacked, how);
+    if emit_right_unmatched && matches!(how, JoinType::Right | JoinType::Outer) {
+        for (j, m) in right_matched.iter().enumerate() {
+            if !m {
+                pairs.push((None, Some(j)));
+            }
+        }
+    }
+    Ok((pairs, right_matched))
+}
+
+/// Build the join's output columns from its `(left, right)` index pairs:
+/// one merged key column per pair (value *and* validity from whichever side
+/// is present), then the left payload, then — unless the join type drops
+/// them — the right payload, null-introducing the missing side per `how`.
+fn assemble_outputs(
+    nk: usize,
+    lcols: &[Column],
+    lmasks: &[Option<ValidityMask>],
+    rcols: &[Column],
+    rmasks: &[Option<ValidityMask>],
+    pairs: &[(Option<usize>, Option<usize>)],
+    how: JoinType,
+) -> (Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>) {
+    let (lk, lc) = lcols.split_at(nk);
+    let (lkm, lcm) = lmasks.split_at(nk);
+    let (rk, rc) = rcols.split_at(nk);
+    let (rkm, rcm) = rmasks.split_at(nk);
+
+    let keys_out: Vec<NullableColumn> = (0..nk)
         .map(|j| {
             take_merged(
-                (&lk[j], lkmrefs[j]),
-                (&rk[j], rkmrefs[j]),
-                &pairs,
+                (&lk[j], lkm[j].as_ref()),
+                (&rk[j], rkm[j].as_ref()),
+                pairs,
             )
         })
         .collect();
@@ -298,7 +536,21 @@ pub fn distributed_join_on(
                 .collect()
         }
     };
-    Ok((keys_out, left_out, right_out))
+    (keys_out, left_out, right_out)
+}
+
+/// Append `b`'s rows to `a` (values and validity) — the partition union of
+/// the skew path.
+fn concat_nullable(a: NullableColumn, b: &NullableColumn) -> NullableColumn {
+    let NullableColumn {
+        mut values,
+        validity,
+    } = a;
+    let before = values.len();
+    let mut mask = validity;
+    values.extend(&b.values);
+    extend_opt_mask(&mut mask, before, b.validity.as_ref(), b.values.len());
+    NullableColumn::new(values, mask)
 }
 
 /// Gather one output key column from a join's `(left, right)` index pairs:
@@ -713,6 +965,234 @@ mod tests {
         // rank 1's null key matches the right null key (777); key 2 appears
         // once on the left (rank 0's second row) matching 222
         assert_eq!(all, vec![(false, 0, 777), (true, 2, 222)]);
+    }
+
+    /// Run a single-key i64 join end to end under `strategy` and return the
+    /// global output multiset as sorted row strings (`valid:value` per
+    /// cell) — the strategy-agnostic comparison form. Payload cells carry
+    /// the global source row id, so row identity survives any routing.
+    fn run_join_multiset(
+        workers: usize,
+        lk_all: &[i64],
+        lvalid_all: Option<&[bool]>,
+        rk_all: &[i64],
+        rvalid_all: Option<&[bool]>,
+        how: JoinType,
+        strategy: JoinStrategy,
+    ) -> Vec<String> {
+        let out = run_spmd(workers, |c| {
+            let (ls, ll) = crate::comm::block_range(lk_all.len(), workers, c.rank());
+            let (rs, rl) = crate::comm::block_range(rk_all.len(), workers, c.rank());
+            // canonical form: values under null bits are the dtype default
+            let lvals: Vec<i64> = (ls..ls + ll)
+                .map(|i| {
+                    if lvalid_all.map_or(true, |v| v[i]) {
+                        lk_all[i]
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let lkc = Column::I64(lvals);
+            let lmask =
+                lvalid_all.map(|v| ValidityMask::from_bools(&v[ls..ls + ll]));
+            let lpayc = Column::I64((ls..ls + ll).map(|i| i as i64 * 10 + 1).collect());
+            let rvals: Vec<i64> = (rs..rs + rl)
+                .map(|i| {
+                    if rvalid_all.map_or(true, |v| v[i]) {
+                        rk_all[i]
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let rkc = Column::I64(rvals);
+            let rmask =
+                rvalid_all.map(|v| ValidityMask::from_bools(&v[rs..rs + rl]));
+            let rpayc =
+                Column::I64((rs..rs + rl).map(|i| i as i64 * 100 + 2).collect());
+            let (keys, lout, rout) = distributed_join_on_strategy(
+                &c,
+                &[(&lkc, lmask.as_ref())],
+                &[(&lpayc, None)],
+                &[(&rkc, rmask.as_ref())],
+                &[(&rpayc, None)],
+                how,
+                strategy,
+            )
+            .unwrap();
+            let mut rows = Vec::new();
+            for o in 0..keys[0].len() {
+                let mut srow = format!(
+                    "k={}:{}",
+                    keys[0].is_valid(o),
+                    keys[0].values.as_i64()[o]
+                );
+                if let Some(col) = lout.first() {
+                    srow.push_str(&format!(
+                        " l={}:{}",
+                        col.is_valid(o),
+                        col.values.as_i64()[o]
+                    ));
+                }
+                if let Some(col) = rout.first() {
+                    srow.push_str(&format!(
+                        " r={}:{}",
+                        col.is_valid(o),
+                        col.values.as_i64()[o]
+                    ));
+                }
+                rows.push(srow);
+            }
+            rows
+        });
+        let mut all: Vec<String> = out.into_iter().flatten().collect();
+        all.sort();
+        all
+    }
+
+    #[test]
+    fn skew_strategy_agrees_with_hash_all_join_types() {
+        // heavy key 7 (50 % of left rows), a heavy *null* key (25 %), the
+        // rest sparse; the right side has duplicate heavy build rows (the
+        // both-sides-heavy case), a null build row and an unmatched key
+        let n = 240usize;
+        let mut lk = Vec::new();
+        let mut lvalid = Vec::new();
+        for i in 0..n {
+            match i % 4 {
+                0 | 1 => {
+                    lk.push(7i64);
+                    lvalid.push(true);
+                }
+                2 => {
+                    lk.push((i % 60) as i64);
+                    lvalid.push(true);
+                }
+                _ => {
+                    lk.push(0);
+                    lvalid.push(false); // null-keyed probe rows
+                }
+            }
+        }
+        let mut rk: Vec<i64> = (0..30).collect();
+        let mut rvalid = vec![true; 30];
+        rk.push(7);
+        rvalid.push(true); // duplicate heavy build rows
+        rk.push(7);
+        rvalid.push(true);
+        rk.push(0);
+        rvalid.push(false); // null build row (matches the null probes)
+        rk.push(99);
+        rvalid.push(true); // unmatched build row
+        for how in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::Outer,
+            JoinType::Semi,
+            JoinType::Anti,
+        ] {
+            for workers in [2usize, 3] {
+                let hash = run_join_multiset(
+                    workers,
+                    &lk,
+                    Some(&lvalid),
+                    &rk,
+                    Some(&rvalid),
+                    how,
+                    JoinStrategy::Hash,
+                );
+                let skew = run_join_multiset(
+                    workers,
+                    &lk,
+                    Some(&lvalid),
+                    &rk,
+                    Some(&rvalid),
+                    how,
+                    JoinStrategy::skew_with_threshold(0.15),
+                );
+                assert!(!hash.is_empty(), "{how:?}: empty oracle");
+                assert_eq!(hash, skew, "{how:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn skew_strategy_without_heavy_keys_degrades_to_hash() {
+        // uniform keys: the sampling pass finds nothing heavy, so the skew
+        // strategy takes the plain hash path (same output either way)
+        let lk: Vec<i64> = (0..120).collect();
+        let rk: Vec<i64> = (0..120).filter(|i| i % 2 == 0).collect();
+        for workers in [1usize, 3] {
+            let hash = run_join_multiset(
+                workers,
+                &lk,
+                None,
+                &rk,
+                None,
+                JoinType::Inner,
+                JoinStrategy::Hash,
+            );
+            let skew = run_join_multiset(
+                workers,
+                &lk,
+                None,
+                &rk,
+                None,
+                JoinType::Inner,
+                JoinStrategy::skew_with_threshold(0.1),
+            );
+            assert_eq!(hash.len(), 60);
+            assert_eq!(hash, skew, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn skew_path_all_heavy_and_single_rank() {
+        // threshold 1‰ marks every left key heavy → the light left
+        // partition is empty and only unmatched-right flows through the
+        // light shuffle; workers=1 exercises the single-rank fast-out
+        // (skew degrades to the plain local hash join)
+        let lk: Vec<i64> = vec![1, 1, 2, 2, 3, 3];
+        let rk: Vec<i64> = vec![1, 3, 9];
+        for how in [JoinType::Outer, JoinType::Right, JoinType::Anti] {
+            for workers in [1usize, 2] {
+                let hash = run_join_multiset(
+                    workers,
+                    &lk,
+                    None,
+                    &rk,
+                    None,
+                    how,
+                    JoinStrategy::Hash,
+                );
+                let skew = run_join_multiset(
+                    workers,
+                    &lk,
+                    None,
+                    &rk,
+                    None,
+                    how,
+                    JoinStrategy::skew_with_threshold(0.001),
+                );
+                assert_eq!(hash, skew, "{how:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_heavy_splits_by_membership() {
+        // single rank: detection is exact, so the partition is exact too
+        run_spmd(1, |c| {
+            let col = Column::I64(vec![5, 1, 5, 2, 5, 3]);
+            let packed = PackedKeys::pack(&[&col]).unwrap();
+            let heavy = detect_heavy_hitters(&c, &packed, 0.5);
+            assert_eq!(heavy.len(), 1);
+            let (h, l) = partition_heavy(&heavy, &packed);
+            assert_eq!(h, vec![0, 2, 4]);
+            assert_eq!(l, vec![1, 3, 5]);
+        });
     }
 
     #[test]

@@ -565,6 +565,46 @@ impl<'a> PackedKeys<'a> {
             _ => panic!("packed key layout mismatch"),
         }
     }
+
+    /// Append the canonical byte encoding of row `i` — the wire form of one
+    /// key tuple in *this* layout (the skew sampling pass ships these
+    /// through its allgather). Two `PackedKeys` over dtype-identical column
+    /// lists with the same flag choice encode equal tuples identically, so
+    /// the bytes are comparable across the two sides of a join and across
+    /// ranks.
+    pub fn append_row_bytes(&self, i: usize, buf: &mut Vec<u8>) {
+        match self {
+            PackedKeys::I64(v) => buf.extend_from_slice(&v[i].to_le_bytes()),
+            _ => buf.extend_from_slice(self.row_bytes(i)),
+        }
+    }
+
+    /// Does row `i` equal a tuple previously encoded by
+    /// [`PackedKeys::append_row_bytes`] on this layout? Allocation-free —
+    /// the heavy-set membership test of the skew-aware join.
+    #[inline]
+    pub fn row_matches(&self, i: usize, encoded: &[u8]) -> bool {
+        match self {
+            PackedKeys::I64(v) => encoded == v[i].to_le_bytes().as_slice(),
+            _ => encoded == self.row_bytes(i),
+        }
+    }
+
+    /// [`PackedKeys::hash_row`] of an *encoded* tuple (see
+    /// [`PackedKeys::append_row_bytes`]): hashes a foreign row exactly as a
+    /// local row of this layout would hash, so heavy-set membership agrees
+    /// on every rank and on both join sides.
+    pub fn hash_encoded_row(&self, encoded: &[u8]) -> u64 {
+        match self {
+            PackedKeys::I64(_) => {
+                let v = i64::from_le_bytes(
+                    encoded.try_into().expect("encoded i64 key: 8 bytes"),
+                );
+                fxhash::hash_u64(v as u64)
+            }
+            _ => fxhash::hash_bytes(encoded),
+        }
+    }
 }
 
 /// Dense group ids over a packed key set: `group_of_row[i]` is the group of
@@ -1055,6 +1095,38 @@ mod tests {
         let other = PackedKeys::pack(&[&b]).unwrap();
         assert!(packed.eq_rows(1, &other, 0));
         assert_eq!(packed.owner(1, 5), other.owner(0, 5));
+    }
+
+    #[test]
+    fn row_bytes_roundtrip_all_layouts() {
+        use crate::column::ValidityMask;
+        let a = Column::I64(vec![5, -5, 5]);
+        let b = Column::Bool(vec![true, false, true]);
+        let s = Column::Str(vec!["x".into(), "".into(), "x".into()]);
+        let am = ValidityMask::from_bools(&[true, false, true]);
+        let masks: Vec<Option<&ValidityMask>> = vec![Some(&am)];
+        let cases: Vec<PackedKeys> = vec![
+            PackedKeys::pack(&[&a]).unwrap(),                      // I64
+            PackedKeys::pack(&[&a, &b]).unwrap(),                  // Fixed
+            PackedKeys::pack(&[&a, &s]).unwrap(),                  // Bytes
+            PackedKeys::pack_masked(&[&a], &masks, true).unwrap(), // flagged
+        ];
+        for packed in &cases {
+            for i in 0..3 {
+                let mut enc = Vec::new();
+                packed.append_row_bytes(i, &mut enc);
+                // encoding identifies the row…
+                for j in 0..3 {
+                    assert_eq!(
+                        packed.row_matches(j, &enc),
+                        packed.eq_rows(i, packed, j),
+                        "rows {i},{j}"
+                    );
+                }
+                // …and hashes exactly like the row itself
+                assert_eq!(packed.hash_encoded_row(&enc), packed.hash_row(i));
+            }
+        }
     }
 
     #[test]

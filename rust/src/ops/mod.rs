@@ -9,7 +9,11 @@
 //!   at the API boundary, on the wire, and by the baseline engines.
 //! * [`join`] — post-shuffle hash join over packed keys with
 //!   Inner/Left/Right/Outer/Semi/Anti semantics (plus the seed's single-key
-//!   sort-merge kernel and the KeyRow hash join as oracles).
+//!   sort-merge kernel and the KeyRow hash join as oracles), and the
+//!   skew-aware broadcast path that splits heavy-hitter keys out of the
+//!   shuffle.
+//! * [`skew`] — distributed heavy-hitter detection: per-rank key sampling
+//!   merged through one allgather into a globally agreed [`skew::HeavySet`].
 //! * [`aggregate`] — post-shuffle hash aggregation over packed key groups,
 //!   with optional local pre-aggregation (decomposed partial states).
 //! * [`scan`] — cumulative sum via local partials + `exscan`.
@@ -25,6 +29,7 @@ pub mod keys;
 pub mod rebalance;
 pub mod scan;
 pub mod shuffle;
+pub mod skew;
 pub mod sort;
 pub mod stencil;
 
@@ -33,15 +38,17 @@ pub use aggregate::{
     local_hash_aggregate_keys, local_packed_aggregate,
 };
 pub use join::{
-    distributed_join, distributed_join_on, local_join_pairs, local_sort_merge_join,
-    packed_join_pairs, MaskedCol,
+    distributed_join, distributed_join_on, distributed_join_on_strategy,
+    local_join_pairs, local_sort_merge_join, packed_join_pairs,
+    packed_join_pairs_partial, MaskedCol,
 };
 pub use keys::{group_packed, KeyGroups, KeyRow, KeyVal, PackedKeys, SortKeys};
 pub use rebalance::{rebalance_block, rebalance_block_nullable};
 pub use scan::{cumsum_f64, cumsum_i64};
 pub use shuffle::{
     shuffle_by_key, shuffle_by_owner, shuffle_by_owner_nullable, shuffle_by_packed,
-    shuffle_by_packed_nullable,
+    shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable,
 };
+pub use skew::{detect_heavy_hitters, HeavySet};
 pub use sort::{distributed_sort_by_key, distributed_sort_keys};
 pub use stencil::{stencil_1d, stencil_serial};

@@ -104,22 +104,64 @@ pub fn shuffle_by_owner_nullable(
     cols: &[&Column],
     masks: &[Option<&ValidityMask>],
 ) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
-    let p = comm.nranks();
     debug_assert!(cols.iter().all(|c| c.len() == owners.len()));
-    debug_assert_eq!(cols.len(), masks.len());
+    let buckets = bucket_rows(owners, None, comm.nranks());
+    shuffle_buckets(comm, &buckets, cols, masks)
+}
 
+/// [`shuffle_by_owner_nullable`] over a row *subset*: ship only the rows
+/// `idx` (with `owners[k]` the destination of row `idx[k]`), encoding
+/// straight from the source columns — no intermediate materialization of
+/// the subset. The skew-aware join routes its light partition through this
+/// so the majority of both tables is copied exactly once (into the wire
+/// buffers), matching the zero-copy hash path.
+pub fn shuffle_rows_by_owner_nullable(
+    comm: &Comm,
+    owners: &[usize],
+    idx: &[usize],
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
+    debug_assert_eq!(owners.len(), idx.len());
+    let buckets = bucket_rows(owners, Some(idx), comm.nranks());
+    shuffle_buckets(comm, &buckets, cols, masks)
+}
+
+/// Bucket row ids per destination rank — one counting pass then one fill
+/// pass. With `idx`, `owners[k]` routes row `idx[k]`; without, row `k`.
+fn bucket_rows(owners: &[usize], idx: Option<&[usize]>, p: usize) -> Vec<Vec<usize>> {
     let mut counts = vec![0usize; p];
     for &d in owners {
         counts[d] += 1;
     }
     let mut buckets: Vec<Vec<usize>> =
         counts.iter().map(|&c| Vec::with_capacity(c)).collect();
-    for (i, &d) in owners.iter().enumerate() {
-        buckets[d].push(i);
+    match idx {
+        Some(idx) => {
+            for (k, &d) in owners.iter().enumerate() {
+                buckets[d].push(idx[k]);
+            }
+        }
+        None => {
+            for (i, &d) in owners.iter().enumerate() {
+                buckets[d].push(i);
+            }
+        }
     }
+    buckets
+}
 
-    let mut bufs = Vec::with_capacity(p);
-    for idx in &buckets {
+/// Encode each destination's bucketed rows (nullable framing), exchange
+/// with one `alltoallv`, and concatenate the received chunks in rank order.
+fn shuffle_buckets(
+    comm: &Comm,
+    buckets: &[Vec<usize>],
+    cols: &[&Column],
+    masks: &[Option<&ValidityMask>],
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
+    debug_assert_eq!(cols.len(), masks.len());
+    let mut bufs = Vec::with_capacity(buckets.len());
+    for idx in buckets {
         let mut buf = Vec::new();
         for (&c, &m) in cols.iter().zip(masks.iter()) {
             encode_nullable_column_take(c, m, idx, &mut buf);
@@ -313,6 +355,50 @@ mod tests {
             }
         }
         assert_eq!(total, 9, "one null per (key, origin-rank) pair");
+    }
+
+    #[test]
+    fn subset_shuffle_matches_full_shuffle_of_taken_rows() {
+        use crate::column::ValidityMask;
+        // odd rows only, with a mask on the payload: routing the subset
+        // straight from the source columns must equal take-then-shuffle
+        let out = run_spmd(3, |c| {
+            let keys: Vec<i64> = (0..12).map(|i| i + c.rank() as i64).collect();
+            let kcol = Column::I64(keys.clone());
+            let vcol = Column::I64(keys.iter().map(|&k| k * 11).collect());
+            let vmask = ValidityMask::from_bools(
+                &keys.iter().map(|&k| k % 4 != 0).collect::<Vec<_>>(),
+            );
+            let idx: Vec<usize> = (0..keys.len()).filter(|i| i % 2 == 1).collect();
+            let owners: Vec<usize> =
+                idx.iter().map(|&i| (keys[i] as usize) % 3).collect();
+            let (cols, masks) = shuffle_rows_by_owner_nullable(
+                &c,
+                &owners,
+                &idx,
+                &[&kcol, &vcol],
+                &[None, Some(&vmask)],
+            )
+            .unwrap();
+            (
+                c.rank(),
+                cols[0].as_i64().to_vec(),
+                cols[1].as_i64().to_vec(),
+                masks[1].clone().map(|m| m.to_bools()),
+            )
+        });
+        let mut total = 0usize;
+        for (rank, ks, vs, valid) in &out {
+            for (j, (k, v)) in ks.iter().zip(vs).enumerate() {
+                assert_eq!((*k as usize) % 3, *rank, "key {k} on wrong rank");
+                assert_eq!(*v, *k * 11, "payload stays attached");
+                let ok = valid.as_ref().map_or(true, |b| b[j]);
+                assert_eq!(ok, *k % 4 != 0, "mask bit travels with key {k}");
+                total += 1;
+            }
+        }
+        // 3 ranks × 6 odd-indexed rows each
+        assert_eq!(total, 18);
     }
 
     #[test]

@@ -77,6 +77,7 @@ fn push_one(node: Plan) -> Plan {
             right,
             on,
             how,
+            strategy,
         } => {
             let lnames: BTreeSet<String> = left
                 .schema()
@@ -139,6 +140,7 @@ fn push_one(node: Plan) -> Plan {
                         right,
                         on,
                         how,
+                        strategy,
                     }),
                     predicate,
                 };
@@ -164,6 +166,7 @@ fn push_one(node: Plan) -> Plan {
                 right,
                 on,
                 how,
+                strategy,
             };
             if stay.is_empty() {
                 join
@@ -352,6 +355,7 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
             right,
             on,
             how,
+            strategy,
         } => {
             let lnames: BTreeSet<String> = left
                 .schema()?
@@ -383,6 +387,7 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
                 right: Box::new(prune(*right, &rn)?),
                 on,
                 how,
+                strategy,
             }
         }
         Plan::Aggregate { input, keys, aggs } => {
@@ -518,6 +523,7 @@ mod tests {
             right: Box::new(orders()),
             on: vec![("id".into(), "customerId".into())],
             how,
+            strategy: crate::ir::JoinStrategy::Hash,
         }
     }
 

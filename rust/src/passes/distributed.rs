@@ -207,6 +207,7 @@ mod tests {
                 right: Box::new(src()),
                 on: vec![("id".into(), "id".into())],
                 how,
+                strategy: crate::ir::JoinStrategy::Hash,
             };
             assert_eq!(j.dist(), Dist::OneDVar, "{how:?}");
         }

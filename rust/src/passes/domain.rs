@@ -84,11 +84,13 @@ pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
             right,
             on,
             how,
+            strategy,
         } => Plan::Join {
             left: Box::new(map_plan(*left, f)),
             right: Box::new(map_plan(*right, f)),
             on,
             how,
+            strategy,
         },
         Plan::Aggregate { input, keys, aggs } => Plan::Aggregate {
             input: Box::new(map_plan(*input, f)),
@@ -214,6 +216,7 @@ mod tests {
             }),
             on: vec![("id".into(), "cid".into())],
             how: crate::ir::JoinType::Inner,
+            strategy: crate::ir::JoinStrategy::Hash,
         };
         let mut count = 0usize;
         // count via a side-channel: map_plan takes Fn, so use a Cell

@@ -5,6 +5,7 @@
 //! | Macro-Pass        | expression desugaring/typing in [`crate::expr`] + [`domain::fold_expressions`] |
 //! | Domain-Pass       | [`domain`]: normalization, filter fusion, constant folding |
 //! | DataFrame-Pass    | [`dataframe`]: predicate pushdown through join, column pruning |
+//! | (physical planning) | [`skew`]: skew-aware join strategy selection from source stats |
 //! | Distributed-Pass  | [`distributed`]: distribution inference + rebalance insertion |
 //! | CGen              | [`crate::exec`]: lowering to the SPMD physical interpreter |
 //!
@@ -14,6 +15,7 @@
 pub mod dataframe;
 pub mod distributed;
 pub mod domain;
+pub mod skew;
 
 use crate::ir::Plan;
 use anyhow::Result;
@@ -37,6 +39,9 @@ pub struct PassOptions {
     pub fuse_filters: bool,
     pub pushdown: bool,
     pub prune_columns: bool,
+    /// Auto-select the skew-aware broadcast join where source statistics
+    /// show heavy-hitter probe keys ([`skew::select_skew_joins`]).
+    pub skew_join: bool,
     pub rebalance: RebalanceMode,
 }
 
@@ -47,6 +52,7 @@ impl Default for PassOptions {
             fuse_filters: true,
             pushdown: true,
             prune_columns: true,
+            skew_join: true,
             rebalance: RebalanceMode::Lazy,
         }
     }
@@ -60,6 +66,7 @@ impl PassOptions {
             fuse_filters: false,
             pushdown: false,
             prune_columns: false,
+            skew_join: false,
             rebalance: RebalanceMode::Lazy,
         }
     }
@@ -85,6 +92,11 @@ pub fn optimize(plan: Plan, opts: &PassOptions) -> Result<Plan> {
     }
     if opts.prune_columns {
         p = dataframe::prune_columns(p)?;
+    }
+    if opts.skew_join {
+        // after pushdown/pruning so the walk to the source sees the final
+        // chain; the runtime sampling pass re-detects the heavy set anyway
+        p = skew::select_skew_joins(p);
     }
     p = distributed::insert_rebalances(p, opts.rebalance);
     // the optimized plan must still type-check — cheap invariant guard

@@ -1,0 +1,276 @@
+//! Skew planner pass: pick a [`JoinStrategy`] per join from source
+//! statistics.
+//!
+//! Paper §5.1 reports that the TPCx-BB Q05 clickstream⋈item join collapses
+//! under hash partitioning when the item keys are Zipf-distributed: the few
+//! hot keys all land on one rank ("high load imbalance among processors, a
+//! well-known problem in the parallel database literature"). The runtime
+//! mitigation is the sampled heavy-hitter broadcast path in
+//! [`crate::ops::skew`]; this pass decides *when* to engage it.
+//!
+//! For every `Join` whose strategy is still [`JoinStrategy::Hash`] (the
+//! construction default), the pass tries to estimate the maximum key-tuple
+//! frequency share of the probe (left) side from the plan itself: it walks
+//! through statistic-preserving nodes (`Filter`, `Sort`, `Rebalance`,
+//! key-keeping `Project`/`WithColumn`, name-mapping `Rename`) down to an
+//! in-memory `Source`, and takes a strided sample of the key tuple there.
+//! If the sampled share of the most frequent tuple reaches the default
+//! threshold, the join is flipped to [`JoinStrategy::skew_default`]; the
+//! exact heavy-hitter *set* is then re-detected at run time by the
+//! distributed sampling pass, so this estimate only has to be right about
+//! "is there skew at all". Joins whose inputs have no reachable statistics
+//! (aggregates, other joins, HFS files) and explicitly hinted joins
+//! (`df.join_with(..).skew_hint(..)`) are left untouched.
+
+use super::domain::map_plan;
+use crate::column::{Column, ValidityMask};
+use crate::fxhash::FxHashMap;
+use crate::ir::{JoinStrategy, Plan, SourceRef};
+use crate::ops::keys::encode_key_cells_nullable;
+
+/// Rows sampled from the source table for the planner's frequency estimate.
+pub const PLANNER_SAMPLE: usize = 1024;
+
+/// Sources smaller than this never flip: the broadcast path's extra
+/// collectives cannot pay off on tiny inputs, and a strided sample over a
+/// handful of rows is all noise.
+pub const MIN_STAT_ROWS: usize = 1000;
+
+/// Flip `Hash` joins to `SkewBroadcast` where source statistics show a
+/// heavy-hitter probe-key distribution (see the module docs).
+pub fn select_skew_joins(plan: Plan) -> Plan {
+    map_plan(plan, &|node| {
+        let Plan::Join {
+            left,
+            right,
+            on,
+            how,
+            strategy,
+        } = node
+        else {
+            return node;
+        };
+        let strategy = if strategy == JoinStrategy::Hash {
+            let keys: Vec<String> = on.iter().map(|(lk, _)| lk.clone()).collect();
+            let threshold =
+                JoinStrategy::DEFAULT_SKEW_THRESHOLD_PERMILLE as f64 / 1000.0;
+            match max_key_share(&left, &keys) {
+                Some(share) if share >= threshold => JoinStrategy::skew_default(),
+                _ => JoinStrategy::Hash,
+            }
+        } else {
+            strategy
+        };
+        Plan::Join {
+            left,
+            right,
+            on,
+            how,
+            strategy,
+        }
+    })
+}
+
+/// Estimated frequency share of the most common key tuple of `keys` in
+/// `plan`'s output, or `None` when no statistics are reachable. The walk
+/// treats `Filter` as statistics-preserving (an approximation — a selective
+/// filter can change the key distribution, but the runtime sampling pass
+/// corrects the heavy set anyway).
+pub fn max_key_share(plan: &Plan, keys: &[String]) -> Option<f64> {
+    match plan {
+        Plan::Source {
+            src: SourceRef::InMemory(t),
+            ..
+        } => {
+            let n = t.num_rows();
+            if n < MIN_STAT_ROWS {
+                return None;
+            }
+            let cols: Vec<&Column> = keys
+                .iter()
+                .map(|k| t.column(k))
+                .collect::<Option<Vec<_>>>()?;
+            if cols.iter().any(|c| !c.dtype().is_groupable()) {
+                return None;
+            }
+            let masks: Vec<Option<&ValidityMask>> =
+                keys.iter().map(|k| t.mask(k)).collect();
+            let s = n.min(PLANNER_SAMPLE);
+            // strided sample: deterministic (the optimizer must be a pure
+            // function of the plan) and uniform over a block-ordered table
+            let mut counts: FxHashMap<Vec<u8>, usize> = FxHashMap::default();
+            let mut max = 0usize;
+            for k in 0..s {
+                let i = k * n / s;
+                let mut row = Vec::new();
+                encode_key_cells_nullable(&cols, &masks, i, &mut row);
+                let c = counts.entry(row).or_insert(0);
+                *c += 1;
+                if *c > max {
+                    max = *c;
+                }
+            }
+            Some(max as f64 / s as f64)
+        }
+        Plan::Filter { input, .. }
+        | Plan::Sort { input, .. }
+        | Plan::Rebalance { input } => max_key_share(input, keys),
+        Plan::Project { input, columns } => {
+            if keys.iter().all(|k| columns.contains(k)) {
+                max_key_share(input, keys)
+            } else {
+                None
+            }
+        }
+        Plan::WithColumn { input, name, .. } => {
+            if keys.contains(name) {
+                None // the key column is (re)computed — stats unreachable
+            } else {
+                max_key_share(input, keys)
+            }
+        }
+        Plan::Rename { input, from, to } => {
+            let mapped: Vec<String> = keys
+                .iter()
+                .map(|k| if k == to { from.clone() } else { k.clone() })
+                .collect();
+            max_key_share(input, &mapped)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::datagen::{micro_table, skewed_table};
+    use crate::ir::{source_mem, JoinType};
+    use crate::table::Table;
+
+    fn dim(n: i64) -> Plan {
+        source_mem(
+            "dim",
+            Table::from_pairs(vec![
+                ("rid", Column::I64((0..n).collect())),
+                ("w", Column::I64((0..n).map(|i| i * 10).collect())),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn join_over(left: Plan) -> Plan {
+        Plan::Join {
+            left: Box::new(left),
+            right: Box::new(dim(100)),
+            on: vec![("id".into(), "rid".into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        }
+    }
+
+    fn strategy_of(plan: &Plan) -> JoinStrategy {
+        match plan {
+            Plan::Join { strategy, .. } => *strategy,
+            other => panic!("expected join at root, got:\n{other}"),
+        }
+    }
+
+    #[test]
+    fn flips_above_threshold_not_below() {
+        // Zipf(1.5) keys: the top key holds ~40 % of the rows — well above
+        // the 10 % default threshold
+        let skewed = source_mem("l", skewed_table(4000, 100, 1.5, 7));
+        let opt = select_skew_joins(join_over(skewed));
+        assert_eq!(strategy_of(&opt), JoinStrategy::skew_default());
+        // uniform keys over 1000 distinct values: far below the threshold
+        let uniform = source_mem("l", micro_table(4000, 1000, 7));
+        let opt = select_skew_joins(join_over(uniform));
+        assert_eq!(strategy_of(&opt), JoinStrategy::Hash);
+    }
+
+    #[test]
+    fn small_sources_never_flip() {
+        // heavy skew but only 60 rows: below MIN_STAT_ROWS, stays Hash
+        let tiny = source_mem(
+            "l",
+            Table::from_pairs(vec![("id", Column::I64(vec![7; 60]))]).unwrap(),
+        );
+        let opt = select_skew_joins(join_over(tiny));
+        assert_eq!(strategy_of(&opt), JoinStrategy::Hash);
+    }
+
+    #[test]
+    fn explicit_hint_is_left_alone() {
+        let uniform = source_mem("l", micro_table(4000, 1000, 7));
+        let hinted = Plan::Join {
+            left: Box::new(uniform),
+            right: Box::new(dim(100)),
+            on: vec![("id".into(), "rid".into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::skew_with_threshold(0.5),
+        };
+        let opt = select_skew_joins(hinted);
+        assert_eq!(opt.size(), 3);
+        assert_eq!(
+            strategy_of(&opt),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 500
+            }
+        );
+    }
+
+    #[test]
+    fn walks_through_filter_rename_project() {
+        use crate::expr::{col, lit};
+        let base = source_mem("l", skewed_table(4000, 100, 1.5, 9));
+        let chained = Plan::Rename {
+            input: Box::new(Plan::Project {
+                input: Box::new(Plan::Filter {
+                    input: Box::new(base),
+                    predicate: col("x").lt(lit(2.0)),
+                }),
+                columns: vec!["id".into()],
+            }),
+            from: "id".into(),
+            to: "key".into(),
+        };
+        let share = max_key_share(&chained, &["key".into()]).unwrap();
+        assert!(share > 0.1, "share {share}");
+        // project that drops the key stops the walk
+        let dropped = Plan::Project {
+            input: Box::new(source_mem("l", skewed_table(4000, 100, 1.5, 9))),
+            columns: vec!["x".into()],
+        };
+        assert!(max_key_share(&dropped, &["id".into()]).is_none());
+        // a WithColumn that recomputes the key stops it too
+        let recomputed = Plan::WithColumn {
+            input: Box::new(source_mem("l", skewed_table(4000, 100, 1.5, 9))),
+            name: "id".into(),
+            expr: col("id").rem(lit(2i64)),
+        };
+        assert!(max_key_share(&recomputed, &["id".into()]).is_none());
+    }
+
+    #[test]
+    fn nullable_heavy_key_counts_null_group() {
+        use crate::column::ValidityMask;
+        // 2000 rows, all distinct values, but 60 % of them null-masked: the
+        // null "key" is the heavy hitter
+        let n = 2000usize;
+        let t = Table::from_pairs(vec![(
+            "id",
+            Column::I64((0..n as i64).collect()),
+        )])
+        .unwrap()
+        .with_null_mask(
+            "id",
+            ValidityMask::from_bools(
+                &(0..n).map(|i| i % 5 < 2).collect::<Vec<_>>(),
+            ),
+        )
+        .unwrap();
+        let share = max_key_share(&source_mem("l", t), &["id".into()]).unwrap();
+        assert!(share > 0.5, "null share {share}");
+    }
+}

@@ -132,6 +132,80 @@ impl fmt::Display for JoinType {
     }
 }
 
+/// Physical distribution strategy of a [`crate::ir::Plan::Join`] — the IR
+/// hint the skew-aware join subsystem is keyed on. The planner pass flips
+/// `Hash` to `SkewBroadcast` when source statistics show a heavy-hitter key
+/// distribution; users can force either via the join builder
+/// (`df.join_with(..).skew_hint(..)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum JoinStrategy {
+    /// Hash-partition both sides by their key tuple (the default; the
+    /// paper's `_df_id[i] % npes` routing).
+    #[default]
+    Hash,
+    /// Skew-aware: a sampling pass estimates per-key frequency at run time;
+    /// keys whose global frequency share exceeds
+    /// `threshold_permille / 1000` take a broadcast path (heavy build-side
+    /// rows replicated to every rank, heavy probe-side rows kept local),
+    /// while light keys go through the ordinary hash shuffle. The threshold
+    /// is stored in per-mille so the strategy stays `Copy + Eq + Hash`.
+    SkewBroadcast {
+        /// Heavy-hitter frequency threshold, in thousandths (1..=1000).
+        threshold_permille: u16,
+    },
+}
+
+impl JoinStrategy {
+    /// Default heavy-hitter threshold: a key holding ≥ 10 % of the probe
+    /// side concentrates at least that share of the join on one rank under
+    /// hash partitioning, which already dominates wall-clock at ≥ 4 ranks.
+    pub const DEFAULT_SKEW_THRESHOLD_PERMILLE: u16 = 100;
+
+    /// `SkewBroadcast` with the default threshold.
+    pub fn skew_default() -> JoinStrategy {
+        JoinStrategy::SkewBroadcast {
+            threshold_permille: JoinStrategy::DEFAULT_SKEW_THRESHOLD_PERMILLE,
+        }
+    }
+
+    /// `SkewBroadcast` with a fractional threshold (clamped to
+    /// `[0.001, 1.0]`; ±infinity clamps like any other out-of-range value,
+    /// while `NaN` — which would slip through the clamp and cast to 0,
+    /// classifying every sampled key as heavy — falls back to the default).
+    pub fn skew_with_threshold(threshold: f64) -> JoinStrategy {
+        let permille = if threshold.is_nan() {
+            JoinStrategy::DEFAULT_SKEW_THRESHOLD_PERMILLE
+        } else {
+            (threshold * 1000.0).round().clamp(1.0, 1000.0) as u16
+        };
+        JoinStrategy::SkewBroadcast {
+            threshold_permille: permille,
+        }
+    }
+
+    /// The heavy-hitter frequency threshold as a fraction, or `None` for
+    /// the plain hash strategy.
+    pub fn threshold(self) -> Option<f64> {
+        match self {
+            JoinStrategy::Hash => None,
+            JoinStrategy::SkewBroadcast { threshold_permille } => {
+                Some(threshold_permille as f64 / 1000.0)
+            }
+        }
+    }
+}
+
+impl fmt::Display for JoinStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JoinStrategy::Hash => write!(f, "hash"),
+            JoinStrategy::SkewBroadcast { threshold_permille } => {
+                write!(f, "skew-broadcast({}/1000)", threshold_permille)
+            }
+        }
+    }
+}
+
 /// Per-key sort direction for [`crate::ir::Plan::Sort`]'s key list.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SortOrder {
@@ -259,6 +333,58 @@ mod tests {
         assert_eq!(DType::Bool.default_value(), Value::Bool(false));
         assert_eq!(DType::Str.default_value(), Value::Str(String::new()));
         assert_eq!(DType::F64.default_value(), Value::F64(0.0));
+    }
+
+    #[test]
+    fn join_strategy_threshold_and_display() {
+        assert_eq!(JoinStrategy::default(), JoinStrategy::Hash);
+        assert_eq!(JoinStrategy::Hash.threshold(), None);
+        assert_eq!(
+            JoinStrategy::skew_default().threshold(),
+            Some(JoinStrategy::DEFAULT_SKEW_THRESHOLD_PERMILLE as f64 / 1000.0)
+        );
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(0.25),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 250
+            }
+        );
+        // clamping at both ends
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(0.0),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 1
+            }
+        );
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(9.0),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 1000
+            }
+        );
+        // NaN falls back to the default instead of casting to 0; ±infinity
+        // clamps like any other out-of-range value
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(f64::NAN),
+            JoinStrategy::skew_default()
+        );
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(f64::INFINITY),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 1000
+            }
+        );
+        assert_eq!(
+            JoinStrategy::skew_with_threshold(f64::NEG_INFINITY),
+            JoinStrategy::SkewBroadcast {
+                threshold_permille: 1
+            }
+        );
+        assert_eq!(JoinStrategy::Hash.to_string(), "hash");
+        assert_eq!(
+            JoinStrategy::skew_default().to_string(),
+            "skew-broadcast(100/1000)"
+        );
     }
 
     #[test]
