@@ -8,6 +8,7 @@
 
 use hiframes::baseline::{serial, sparklike::SparkLike, sparklike::WindowKind};
 use hiframes::bench::*;
+use hiframes::ir::WindowAgg;
 use hiframes::ops::stencil::{sma_weights, wma_weights_124};
 use hiframes::prelude::*;
 use std::sync::Arc;
@@ -99,6 +100,56 @@ fn main() {
         }
         table.run("hiframes", "wma", rows, 1, reps, || {
             df.stencil("x", "w", wma_weights_124())
+                .count()
+                .unwrap()
+        });
+
+        // ---------------- partitioned WMA (hash window) ----------------
+        // the same WMA per hash partition: HiFrames colocates each group
+        // with the PackedKeys shuffle + per-group scan, the sparklike
+        // engine pays the row shuffle + per-partition sort — the
+        // "hash-vs-window" trajectory of the ranked/sessionized queries
+        let groups = (rows / 4096).max(64);
+        let tp = Table::from_pairs(vec![
+            (
+                "g",
+                Column::I64((0..rows).map(|i| (i % groups) as i64).collect()),
+            ),
+            ("o", Column::I64((0..rows as i64).collect())),
+            ("x", hiframes::datagen::series(rows, 7)),
+        ])
+        .unwrap();
+        let aggs = vec![WindowAgg::new(
+            "w",
+            WindowFunc::Weighted(wma_weights_124()),
+            WindowFrame::Rolling {
+                preceding: 1,
+                following: 1,
+            },
+            col("x"),
+        )];
+        table.run("serial", "pwma", rows, 1, reps, || {
+            serial::window(&tp, &["g"], &[("o", SortOrder::Asc)], &aggs)
+                .unwrap()
+                .num_rows()
+        });
+        {
+            let eng = SparkLike::new(workers, workers * 2);
+            let rdd = eng.parallelize(&tp);
+            table.run("sparklike", "pwma", rows, 0, reps, || {
+                eng.window_over(&rdd, &["g"], &[("o", SortOrder::Asc)], &aggs)
+                    .unwrap()
+                    .num_rows()
+            });
+        }
+        let dfp = hf.table("tp", tp.clone());
+        table.run("hiframes", "pwma", rows, 1, reps, || {
+            dfp.window()
+                .partition_by(&["g"])
+                .order_by(&[("o", SortOrder::Asc)])
+                .rolling_between(1, 1)
+                .agg("w", WindowFunc::Weighted(wma_weights_124()), col("x"))
+                .build()
                 .count()
                 .unwrap()
         });

@@ -6,14 +6,16 @@
 //! ([`filter_udf_rows`], [`rolling_apply`]) walk rows through boxed
 //! closures — reproducing the Pandas SMA-vs-WMA gap of Fig. 8b.
 
-use crate::column::{Column, NullableColumn, ValidityMask};
+use crate::column::{normalize_mask, Column, NullableColumn, ValidityMask};
 use crate::expr::{eval_mask, eval_nullable, AggExpr, Expr};
+use crate::ir::WindowAgg;
 use crate::ops::aggregate::{local_hash_aggregate_keys, AggSpec};
 use crate::ops::join::local_join_pairs;
 use crate::ops::keys::key_rows_nullable;
 use crate::ops::stencil::stencil_serial;
+use crate::ops::window::{partition_runs, window_group, window_over_groups};
 use crate::table::{Schema, Table};
-use crate::types::JoinType;
+use crate::types::{JoinType, SortOrder};
 use anyhow::{bail, Context, Result};
 
 /// Vectorized filter (`df[df[:id] .< 100, :]`). Null predicate lanes drop
@@ -310,6 +312,104 @@ pub fn wma(table: &Table, column: &str, out: &str, weights: &[f64]) -> Result<Ta
     with_new_column(table, out, Column::F64(stencil_serial(&xs, weights)))
 }
 
+/// Window functions (the Pandas `groupby().rolling()/shift/rank` family),
+/// mirroring the HiFrames engine's semantics exactly: with partition keys
+/// the rows are reordered by (partition keys asc nulls-first, order keys)
+/// with a *stable* sort, then each aggregate runs per group; without them
+/// the window is global in row order (and `order_by` must be empty).
+pub fn window(
+    table: &Table,
+    partition_by: &[&str],
+    order_by: &[(&str, SortOrder)],
+    aggs: &[WindowAgg],
+) -> Result<Table> {
+    if partition_by.is_empty() && !order_by.is_empty() {
+        bail!("window: order_by requires partition_by");
+    }
+    // evaluate the aggregate inputs over the *incoming* row order
+    let mut expr_cols: Vec<(Column, Option<ValidityMask>)> = Vec::with_capacity(aggs.len());
+    for a in aggs {
+        expr_cols.push(eval_nullable(&a.input, table)?);
+    }
+    // reorder (partitioned) or keep (global)
+    let n = table.num_rows();
+    let (idx, group_starts, breaks): (Vec<usize>, Vec<usize>, Vec<bool>) =
+        if partition_by.is_empty() {
+            ((0..n).collect(), if n > 0 { vec![0] } else { vec![] }, vec![])
+        } else {
+            let mut key_cols: Vec<&Column> = Vec::new();
+            let mut key_masks: Vec<Option<&ValidityMask>> = Vec::new();
+            let mut orders: Vec<SortOrder> = Vec::new();
+            for k in partition_by {
+                key_cols.push(table.column(k).with_context(|| format!("window key {k}"))?);
+                key_masks.push(table.mask(k));
+                orders.push(SortOrder::Asc);
+            }
+            for (k, o) in order_by {
+                key_cols.push(table.column(k).with_context(|| format!("window key {k}"))?);
+                key_masks.push(table.mask(k));
+                orders.push(*o);
+            }
+            let krows = key_rows_nullable(&key_cols, &key_masks)?;
+            partition_runs(&krows, partition_by.len(), &orders)
+        };
+    // the global case keeps row order: a straight clone beats an
+    // element-wise identity gather
+    let reorder = |c: &Column, m: Option<&ValidityMask>| {
+        if partition_by.is_empty() {
+            (c.clone(), m.cloned())
+        } else {
+            (c.take(&idx), normalize_mask(m.map(|m| m.take(&idx))))
+        }
+    };
+    // per-agg grouped kernels over the (re)ordered expression columns
+    let mut outs: Vec<NullableColumn> = Vec::with_capacity(aggs.len());
+    for (a, (ec, em)) in aggs.iter().zip(&expr_cols) {
+        let (ec, em) = reorder(ec, em.as_ref());
+        let breaks_opt = if partition_by.is_empty() {
+            None
+        } else {
+            Some(breaks.as_slice())
+        };
+        outs.push(if partition_by.is_empty() {
+            window_group(&ec, em.as_ref(), &a.frame, &a.func, breaks_opt)?
+        } else {
+            window_over_groups(
+                &ec,
+                em.as_ref(),
+                &a.frame,
+                &a.func,
+                &group_starts,
+                breaks_opt,
+            )?
+        });
+    }
+    // assemble: input fields minus replaced outs (reordered), then outs,
+    // with the static nullable flags of the plan typing rule
+    let mut fields: Vec<(String, crate::types::DType)> = Vec::new();
+    let mut nullable: Vec<bool> = Vec::new();
+    let mut cols: Vec<Column> = Vec::new();
+    let mut masks: Vec<Option<ValidityMask>> = Vec::new();
+    for (i, (name, t)) in table.schema().fields().iter().enumerate() {
+        if aggs.iter().any(|a| &a.out == name) {
+            continue;
+        }
+        let (c, m) = reorder(&table.columns()[i], table.mask_at(i));
+        fields.push((name.clone(), *t));
+        nullable.push(table.schema().nullable_at(i));
+        cols.push(c);
+        masks.push(m);
+    }
+    for (a, o) in aggs.iter().zip(outs) {
+        let input_nullable = a.input.nullable(table.schema())?;
+        fields.push((a.out.clone(), o.values.dtype()));
+        nullable.push(a.func.output_nullable(&a.frame, input_nullable));
+        cols.push(o.values);
+        masks.push(o.validity);
+    }
+    Table::new_masked(Schema::new_nullable(fields, nullable), cols, masks)
+}
+
 fn with_new_column(table: &Table, out: &str, col: Column) -> Result<Table> {
     let mut pairs: Vec<(&str, Column)> = Vec::new();
     for (n, _) in table.schema().fields() {
@@ -398,6 +498,67 @@ mod tests {
         .unwrap();
         assert_eq!(a.num_rows(), 2);
         assert_eq!(a.schema().names(), vec!["k1", "k2", "s"]);
+    }
+
+    #[test]
+    fn partitioned_window_orders_groups_and_shifts() {
+        use crate::types::{WindowFrame, WindowFunc};
+        let t2 = Table::from_pairs(vec![
+            ("g", Column::I64(vec![1, 2, 1, 2, 1])),
+            ("o", Column::I64(vec![5, 1, 3, 2, 4])),
+            ("v", Column::I64(vec![10, 20, 30, 40, 50])),
+        ])
+        .unwrap();
+        let aggs = vec![
+            WindowAgg::new("prev", WindowFunc::Value, WindowFrame::Shift(1), col("v")),
+            WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("v"),
+            ),
+            WindowAgg::new(
+                "r",
+                WindowFunc::Rank,
+                WindowFrame::CumulativeToCurrent,
+                lit(0i64),
+            ),
+        ];
+        let out = window(
+            &t2,
+            &["g"],
+            &[("o", crate::types::SortOrder::Asc)],
+            &aggs,
+        )
+        .unwrap();
+        // sorted: g=1 -> (o=3,v=30),(o=4,v=50),(o=5,v=10); g=2 -> (1,20),(2,40)
+        assert_eq!(out.column("v").unwrap().as_i64(), &[30, 50, 10, 20, 40]);
+        assert_eq!(out.column("prev").unwrap().as_i64(), &[0, 30, 50, 0, 20]);
+        let m = out.mask("prev").unwrap();
+        assert!(!m.get(0) && !m.get(3), "group heads are null");
+        assert_eq!(out.column("cs").unwrap().as_i64(), &[30, 80, 90, 20, 60]);
+        assert_eq!(out.column("r").unwrap().as_i64(), &[1, 2, 3, 1, 2]);
+        // global window: row order preserved, order_by rejected
+        let g = window(
+            &t2,
+            &[],
+            &[],
+            &[WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("v"),
+            )],
+        )
+        .unwrap();
+        assert_eq!(g.column("cs").unwrap().as_i64(), &[10, 30, 60, 100, 150]);
+        assert!(window(
+            &t2,
+            &[],
+            &[("o", crate::types::SortOrder::Asc)],
+            &aggs
+        )
+        .is_err());
     }
 
     #[test]

@@ -24,10 +24,12 @@ use super::rowexpr::{compile_row_expr, eval_row, RowExpr};
 use super::Row;
 use crate::column::Column;
 use crate::expr::{AggExpr, AggFn, AggState, Expr};
+use crate::ir::WindowAgg;
 use crate::ops::join::local_join_pairs;
 use crate::ops::keys::{hash_key_row, KeyRow, KeyVal};
+use crate::ops::window::{partition_runs, rank_from_breaks};
 use crate::table::{Schema, Table};
-use crate::types::{DType, JoinType, Value};
+use crate::types::{DType, JoinType, SortOrder, Value, WindowFrame, WindowFunc};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -624,6 +626,160 @@ impl SparkLike {
         })
     }
 
+    /// Partitioned window functions (Spark's `OVER (PARTITION BY … ORDER BY
+    /// …)`): rows route by the hash of their partition-key tuple through the
+    /// serialized shuffle store, each reduce partition sorts its rows by
+    /// (partition keys asc nulls-first, order keys) with a stable sort and
+    /// evaluates every frame with boxed per-row loops — the row-eval parity
+    /// side of the three-engine window agreement tests. Global windows (no
+    /// partition keys) keep using [`SparkLike::window_one_executor`]'s
+    /// single-executor gather, the map-reduce limitation of Fig. 8b.
+    pub fn window_over(
+        &self,
+        rdd: &Rdd,
+        partition_by: &[&str],
+        order_by: &[(&str, SortOrder)],
+        aggs: &[WindowAgg],
+    ) -> Result<Rdd> {
+        if partition_by.is_empty() {
+            bail!("window_over: needs partition keys (global windows gather to one executor)");
+        }
+        let pi: Vec<usize> = partition_by
+            .iter()
+            .map(|k| {
+                rdd.schema
+                    .index_of(k)
+                    .with_context(|| format!("window: no column {k}"))
+            })
+            .collect::<Result<_>>()?;
+        let oi: Vec<usize> = order_by
+            .iter()
+            .map(|(k, _)| {
+                rdd.schema
+                    .index_of(k)
+                    .with_context(|| format!("window: no column {k}"))
+            })
+            .collect::<Result<_>>()?;
+        for &i in pi.iter().chain(&oi) {
+            let kt = rdd.schema.fields()[i].1;
+            if !kt.is_groupable() {
+                bail!("window key must be Int64/Bool/String, got {kt}");
+            }
+        }
+        let mut orders: Vec<SortOrder> = vec![SortOrder::Asc; pi.len()];
+        orders.extend(order_by.iter().map(|(_, o)| *o));
+
+        // compile the aggregate inputs; record (func, frame, out dtype,
+        // static nullable) per aggregate — the same typing rule as the IR
+        let mut exprs: Vec<RowExpr> = Vec::with_capacity(aggs.len());
+        let mut metas: Vec<(WindowFunc, WindowFrame, DType)> = Vec::with_capacity(aggs.len());
+        let mut fields: Vec<(String, DType)> = Vec::new();
+        let mut nullable: Vec<bool> = Vec::new();
+        let mut kept_idx: Vec<usize> = Vec::new();
+        for (i, (n, t)) in rdd.schema.fields().iter().enumerate() {
+            if aggs.iter().any(|a| &a.out == n) {
+                continue;
+            }
+            kept_idx.push(i);
+            fields.push((n.clone(), *t));
+            nullable.push(rdd.schema.nullable_at(i));
+        }
+        for a in aggs {
+            exprs.push(compile_row_expr(&a.input, &rdd.schema)?);
+            let dt = a.input.dtype(&rdd.schema)?;
+            let odt = a.func.output_dtype(dt);
+            metas.push((a.func.clone(), a.frame.clone(), odt));
+            fields.push((a.out.clone(), odt));
+            nullable.push(
+                a.func
+                    .output_nullable(&a.frame, a.input.nullable(&rdd.schema)?),
+            );
+        }
+        let schema = Schema::new_nullable(fields, nullable);
+        let nin = rdd.schema.len();
+
+        // map: evaluate the inputs per row (boxed row eval), append them to
+        // the row tail so they ride the shuffle; key by the partition tuple
+        let exprs = Arc::new(exprs);
+        let e2 = exprs.clone();
+        let pi_map = pi.clone();
+        let keyed: Vec<Vec<(i64, Row)>> =
+            self.run_stage(rdd.parts.clone(), move |_, rows: Vec<Row>| {
+                rows.into_iter()
+                    .map(|mut r| {
+                        let tail: Vec<Value> = e2
+                            .iter()
+                            .map(|e| eval_row(e, &r).expect("window expr"))
+                            .collect();
+                        r.extend(tail);
+                        let h = hash_key_row(&row_key(&r, &pi_map)) as i64;
+                        (h, r)
+                    })
+                    .collect::<Vec<(i64, Row)>>()
+            });
+        let shuffled = self.shuffle_rows(keyed, self.partitions);
+
+        // reduce: per partition sort + per-group frame evaluation
+        let metas = Arc::new(metas);
+        let m2 = metas.clone();
+        let oi2 = oi.clone();
+        let pi2 = pi.clone();
+        let orders2 = orders.clone();
+        let kept2 = kept_idx.clone();
+        let parts: Vec<Vec<Row>> =
+            self.run_stage(shuffled, move |_, rows: Vec<(i64, Row)>| {
+                let mut rows: Vec<Row> = rows.into_iter().map(|(_, r)| r).collect();
+                let krows: Vec<KeyRow> = rows
+                    .iter()
+                    .map(|r| {
+                        pi2.iter()
+                            .chain(&oi2)
+                            .map(|&i| KeyVal::from_value(&r[i]).expect("window key"))
+                            .collect()
+                    })
+                    .collect();
+                // the same run/break rule as the hiframes exec path and the
+                // serial engine — shared so the engines cannot diverge
+                let (idx, group_starts, breaks) =
+                    partition_runs(&krows, pi2.len(), &orders2);
+                let n = idx.len();
+                let sorted: Vec<Row> = idx
+                    .iter()
+                    .map(|&i| std::mem::take(&mut rows[i]))
+                    .collect();
+                let mut out_cols: Vec<Vec<Value>> = Vec::with_capacity(m2.len());
+                for (j, (func, frame, odt)) in m2.iter().enumerate() {
+                    let vals: Vec<Value> =
+                        sorted.iter().map(|r| r[nin + j].clone()).collect();
+                    let mut col: Vec<Value> = Vec::with_capacity(n);
+                    for (gi, &start) in group_starts.iter().enumerate() {
+                        let end = group_starts.get(gi + 1).copied().unwrap_or(n);
+                        col.extend(row_window_group(
+                            &vals[start..end],
+                            frame,
+                            func,
+                            &breaks[start..end],
+                            *odt,
+                        ));
+                    }
+                    out_cols.push(col);
+                }
+                sorted
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let mut out: Row =
+                            kept2.iter().map(|&ci| r[ci].clone()).collect();
+                        for c in &out_cols {
+                            out.push(c[i].clone());
+                        }
+                        out
+                    })
+                    .collect::<Vec<Row>>()
+            });
+        Ok(Rdd { schema, parts })
+    }
+
     /// Materialize an RDD back on the driver. Null cells become cleared
     /// validity bits over dtype-default values (canonical columnar form).
     pub fn collect(&self, rdd: &Rdd) -> Result<Table> {
@@ -696,6 +852,156 @@ fn row_key(row: &Row, key_idx: &[usize]) -> KeyRow {
         .iter()
         .map(|&i| KeyVal::from_value(&row[i]).expect("F64 join/group key"))
         .collect()
+}
+
+/// One group's window outputs from row cells — the per-row twin of the
+/// columnar kernels in [`crate::ops::window`]: identical skip-null rules,
+/// identical accumulation order, so values *and* null positions agree.
+fn row_window_group(
+    vals: &[Value],
+    frame: &WindowFrame,
+    func: &WindowFunc,
+    breaks: &[bool],
+    out_dtype: DType,
+) -> Vec<Value> {
+    let n = vals.len();
+    match func {
+        WindowFunc::RowNumber => (1..=n as i64).map(Value::I64).collect(),
+        WindowFunc::Rank => rank_from_breaks(breaks)
+            .as_i64()
+            .iter()
+            .map(|&r| Value::I64(r))
+            .collect(),
+        WindowFunc::Value => {
+            let WindowFrame::Shift(k) = frame else {
+                panic!("window value() requires a shift frame")
+            };
+            (0..n)
+                .map(|i| {
+                    let j = i as i64 - k;
+                    if j >= 0 && (j as usize) < n {
+                        vals[j as usize].clone()
+                    } else {
+                        Value::Null(out_dtype)
+                    }
+                })
+                .collect()
+        }
+        _ => {
+            let bounds: Box<dyn Fn(usize) -> (usize, usize)> = match frame {
+                WindowFrame::Rolling {
+                    preceding,
+                    following,
+                } => {
+                    let (p, f) = (*preceding, *following);
+                    Box::new(move |i: usize| (i.saturating_sub(p), (i + f + 1).min(n)))
+                }
+                WindowFrame::CumulativeToCurrent => Box::new(move |i: usize| (0, i + 1)),
+                WindowFrame::Shift(_) => panic!("shift frames only carry value()"),
+            };
+            (0..n)
+                .map(|i| {
+                    let (lo, hi) = bounds(i);
+                    match func {
+                        WindowFunc::Count => Value::I64(
+                            vals[lo..hi].iter().filter(|v| !v.is_null()).count() as i64,
+                        ),
+                        WindowFunc::Sum if out_dtype == DType::I64 => {
+                            let mut acc = 0i64;
+                            for v in &vals[lo..hi] {
+                                if let Some(x) = if v.is_null() { None } else { v.as_i64() } {
+                                    acc += x;
+                                }
+                            }
+                            Value::I64(acc)
+                        }
+                        WindowFunc::Sum => {
+                            let mut acc = 0.0;
+                            for v in &vals[lo..hi] {
+                                if let Some(x) = if v.is_null() { None } else { v.as_f64() } {
+                                    acc += x;
+                                }
+                            }
+                            Value::F64(acc)
+                        }
+                        WindowFunc::Mean => {
+                            let mut acc = 0.0;
+                            let mut cnt = 0usize;
+                            for v in &vals[lo..hi] {
+                                if let Some(x) = if v.is_null() { None } else { v.as_f64() } {
+                                    acc += x;
+                                    cnt += 1;
+                                }
+                            }
+                            if cnt == 0 {
+                                Value::Null(DType::F64)
+                            } else {
+                                Value::F64(acc / cnt as f64)
+                            }
+                        }
+                        WindowFunc::Min | WindowFunc::Max if out_dtype == DType::I64 => {
+                            let want_min = matches!(func, WindowFunc::Min);
+                            let mut best: Option<i64> = None;
+                            for v in &vals[lo..hi] {
+                                if let Some(x) = if v.is_null() { None } else { v.as_i64() } {
+                                    best = Some(match best {
+                                        None => x,
+                                        Some(b) if want_min => b.min(x),
+                                        Some(b) => b.max(x),
+                                    });
+                                }
+                            }
+                            best.map(Value::I64).unwrap_or(Value::Null(DType::I64))
+                        }
+                        WindowFunc::Min | WindowFunc::Max => {
+                            let want_min = matches!(func, WindowFunc::Min);
+                            let mut best: Option<f64> = None;
+                            for v in &vals[lo..hi] {
+                                if let Some(x) = if v.is_null() { None } else { v.as_f64() } {
+                                    best = Some(match best {
+                                        None => x,
+                                        Some(b) if want_min => b.min(x),
+                                        Some(b) => b.max(x),
+                                    });
+                                }
+                            }
+                            best.map(Value::F64).unwrap_or(Value::Null(DType::F64))
+                        }
+                        WindowFunc::Weighted(w) => {
+                            let WindowFrame::Rolling { preceding, .. } = frame else {
+                                panic!("weighted() requires a rolling frame")
+                            };
+                            let mut acc = 0.0;
+                            let mut used = 0.0;
+                            let mut seen = false;
+                            let wtotal: f64 = w.iter().sum();
+                            for (j, &wj) in w.iter().enumerate() {
+                                let idx = i as isize + j as isize - *preceding as isize;
+                                if idx >= 0 && (idx as usize) < n {
+                                    let v = &vals[idx as usize];
+                                    if let Some(x) =
+                                        if v.is_null() { None } else { v.as_f64() }
+                                    {
+                                        acc += wj * x;
+                                        used += wj;
+                                        seen = true;
+                                    }
+                                }
+                            }
+                            if !seen {
+                                Value::Null(DType::F64)
+                            } else if used != 0.0 {
+                                Value::F64(acc * wtotal / used)
+                            } else {
+                                Value::F64(0.0)
+                            }
+                        }
+                        _ => unreachable!("positional/value funcs handled above"),
+                    }
+                })
+                .collect()
+        }
+    }
 }
 
 /// Key every row by the Fx hash of its key tuple (routing only; the reduce
@@ -1001,6 +1307,58 @@ mod tests {
         for (got, want) in s.iter().zip(&[0.2, 0.4, 0.1, 0.3]) {
             assert!((got - want).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn partitioned_window_rows() {
+        let eng = SparkLike::new(2, 3);
+        let t = Table::from_pairs(vec![
+            ("g", Column::I64(vec![1, 2, 1, 2, 1])),
+            ("o", Column::I64(vec![5, 1, 3, 2, 4])),
+            ("v", Column::I64(vec![10, 20, 30, 40, 50])),
+        ])
+        .unwrap();
+        let aggs = vec![
+            WindowAgg::new(
+                "prev",
+                WindowFunc::Value,
+                WindowFrame::Shift(1),
+                crate::expr::col("v"),
+            ),
+            WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                crate::expr::col("v"),
+            ),
+            WindowAgg::new(
+                "r",
+                WindowFunc::Rank,
+                WindowFrame::CumulativeToCurrent,
+                crate::expr::lit(0i64),
+            ),
+        ];
+        let w = eng
+            .window_over(
+                &eng.parallelize(&t),
+                &["g"],
+                &[("o", SortOrder::Asc)],
+                &aggs,
+            )
+            .unwrap();
+        assert_eq!(w.schema.nullable_of("prev"), Some(true));
+        assert_eq!(w.schema.nullable_of("cs"), Some(false));
+        let out = eng
+            .collect(&w)
+            .unwrap()
+            .sorted_by_keys(&[("g", SortOrder::Asc), ("o", SortOrder::Asc)])
+            .unwrap();
+        assert_eq!(out.column("v").unwrap().as_i64(), &[30, 50, 10, 20, 40]);
+        assert_eq!(out.column("prev").unwrap().as_i64(), &[0, 30, 50, 0, 20]);
+        let m = out.mask("prev").unwrap();
+        assert!(!m.get(0) && !m.get(3), "group heads null");
+        assert_eq!(out.column("cs").unwrap().as_i64(), &[30, 80, 90, 20, 60]);
+        assert_eq!(out.column("r").unwrap().as_i64(), &[1, 2, 3, 1, 2]);
     }
 
     #[test]

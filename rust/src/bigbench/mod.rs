@@ -13,5 +13,6 @@ pub mod gen;
 pub mod q05;
 pub mod q25;
 pub mod q26;
+pub mod q67;
 
 pub use gen::{generate, BbTables, GenOptions};

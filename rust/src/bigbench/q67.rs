@@ -1,0 +1,121 @@
+//! TPCx-BB/TPC-DS-style Q67 — ranked sales per category, the query family
+//! the unified window subsystem opens: `rank() OVER (PARTITION BY category
+//! ORDER BY n DESC)` cannot be phrased as a join/aggregate tree, and the
+//! map-reduce baseline must shuffle + sort whole partitions to answer it.
+//!
+//! Shape:
+//! 1. `store_sales ⋈ item` on the item surrogate key;
+//! 2. aggregate the sale count per `(category, item)`;
+//! 3. window: partition by category, order by `(n desc, item asc)` —
+//!    `rank()` plus `lead(n, 1)` (each item's gap to the runner-up);
+//! 4. keep the top [`TOP_K`] items of every category.
+
+use super::BbTables;
+use crate::baseline::serial;
+use crate::expr::{col, lit, AggExpr, AggFn};
+use crate::frame::{DataFrame, HiFrames};
+use crate::ir::{SortOrder, WindowAgg, WindowFrame, WindowFunc};
+use crate::table::Table;
+use crate::types::JoinType;
+use anyhow::Result;
+
+/// Items kept per category.
+pub const TOP_K: i64 = 3;
+
+/// HiFrames implementation: join → multi-key aggregate → partitioned
+/// window (rank + lead) → filter to the top K per category.
+pub fn hiframes_query(hf: &HiFrames, db: &BbTables) -> DataFrame {
+    let ss = hf.table("store_sales", db.store_sales.clone());
+    let item = hf.table("item", db.item.clone());
+    ss.join_on(&item, &[("ss_item_sk", "i_item_sk")], JoinType::Inner)
+        .group_by(&["i_category", "ss_item_sk"])
+        .agg("n", AggFn::Count, col("ss_item_sk"))
+        .build()
+        .window()
+        .partition_by(&["i_category"])
+        .order_by(&[("n", SortOrder::Desc), ("ss_item_sk", SortOrder::Asc)])
+        .rank("r")
+        .agg_expr("next_n", col("n").lead(1))
+        .build()
+        .filter(col("r").le(lit(TOP_K)))
+}
+
+/// The serial (Pandas-like) oracle for the same query.
+pub fn serial_query(db: &BbTables) -> Result<Table> {
+    let joined = serial::join_on(
+        &db.store_sales,
+        &db.item,
+        &[("ss_item_sk", "i_item_sk")],
+        JoinType::Inner,
+    )?;
+    let agg = serial::aggregate_by(
+        &joined,
+        &["i_category", "ss_item_sk"],
+        &[AggExpr::new("n", AggFn::Count, col("ss_item_sk"))],
+    )?;
+    let win = serial::window(
+        &agg,
+        &["i_category"],
+        &[("n", SortOrder::Desc), ("ss_item_sk", SortOrder::Asc)],
+        &[
+            WindowAgg::new(
+                "r",
+                WindowFunc::Rank,
+                WindowFrame::CumulativeToCurrent,
+                lit(0i64),
+            ),
+            WindowAgg::new("next_n", WindowFunc::Value, WindowFrame::Shift(-1), col("n")),
+        ],
+    )?;
+    serial::filter(&win, &col("r").le(lit(TOP_K)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigbench::{generate, GenOptions};
+    use crate::types::SortOrder;
+
+    #[test]
+    fn hiframes_matches_serial_across_workers() {
+        let db = generate(&GenOptions {
+            scale_factor: 0.02,
+            ..Default::default()
+        });
+        let expect = serial_query(&db)
+            .unwrap()
+            .sorted_by_keys(&[
+                ("i_category", SortOrder::Asc),
+                ("r", SortOrder::Asc),
+            ])
+            .unwrap();
+        assert!(expect.num_rows() > 0);
+        for workers in [1usize, 3] {
+            let hf = HiFrames::with_workers(workers);
+            let got = hiframes_query(&hf, &db)
+                .collect()
+                .unwrap()
+                .sorted_by_keys(&[
+                    ("i_category", SortOrder::Asc),
+                    ("r", SortOrder::Asc),
+                ])
+                .unwrap();
+            assert_eq!(got.num_rows(), expect.num_rows(), "workers={workers}");
+            for c in ["i_category", "ss_item_sk", "n", "r", "next_n"] {
+                assert_eq!(
+                    got.column(c).unwrap(),
+                    expect.column(c).unwrap(),
+                    "workers={workers} column {c}"
+                );
+                assert_eq!(
+                    got.mask(c),
+                    expect.mask(c),
+                    "workers={workers} mask {c}"
+                );
+            }
+            // every category keeps at most TOP_K ranked rows, rank starts at 1
+            let ranks = got.column("r").unwrap().as_i64();
+            assert!(ranks.iter().all(|&r| r >= 1 && r <= TOP_K));
+        }
+    }
+}

@@ -94,6 +94,63 @@ pub fn arith(a: &Column, b: &Column, op: ArithOp) -> Column {
     }
 }
 
+/// [`arith`] where the right operand carries a validity mask — the
+/// window/fill arithmetic hazard fix: an Int64 division (or modulo) by a
+/// *nullable* divisor would trap on the scrubbed canonical default 0 in
+/// invalid lanes. Those lanes' results are null anyway (the expression
+/// layer ANDs the operand masks and re-scrubs), so the invalid divisor
+/// lanes are evaluated against a neutral 1 instead of trapping. Every
+/// other dtype/operator combination defers to [`arith`] unchanged —
+/// including genuine division by a *valid* zero, which still traps like
+/// plain Rust integer division.
+pub fn arith_masked(
+    a: &Column,
+    b: &Column,
+    op: ArithOp,
+    b_valid: Option<&ValidityMask>,
+) -> Column {
+    if let (Column::I64(y), Some(m), ArithOp::Div | ArithOp::Mod) = (b, b_valid, op) {
+        if matches!(a, Column::I64(_)) {
+            debug_assert_eq!(y.len(), m.len());
+            let safe: Vec<i64> = y
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if m.get(i) { v } else { 1 })
+                .collect();
+            return arith(a, &Column::I64(safe), op);
+        }
+    }
+    arith(a, b, op)
+}
+
+/// [`arith_scalar`] where the *column* operand is the divisor of an
+/// integer modulo (`scalar % col` with `scalar_on_left`) and carries a
+/// validity mask — the same trap as [`arith_masked`], through the scalar
+/// fast path: `arith_scalar`'s Int64 route admits `Mod`, so a scrubbed
+/// null 0 in the column would panic. Invalid lanes are evaluated against a
+/// neutral 1 (their results are null anyway); everything else defers to
+/// [`arith_scalar`]. (`scalar / col` is safe — that route goes Float64.)
+pub fn arith_scalar_masked(
+    a: &Column,
+    s: f64,
+    op: ArithOp,
+    scalar_on_left: bool,
+    a_valid: Option<&ValidityMask>,
+) -> Column {
+    if scalar_on_left && op == ArithOp::Mod && s.fract() == 0.0 {
+        if let (Column::I64(y), Some(m)) = (a, a_valid) {
+            debug_assert_eq!(y.len(), m.len());
+            let safe: Vec<i64> = y
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if m.get(i) { v } else { 1 })
+                .collect();
+            return arith_scalar(&Column::I64(safe), s, op, true);
+        }
+    }
+    arith_scalar(a, s, op, scalar_on_left)
+}
+
 /// Arithmetic against a scalar (broadcast) — the "simple mathematical
 /// operators instead of element-wise operators" sugar of paper §3.1.
 pub fn arith_scalar(a: &Column, s: f64, op: ArithOp, scalar_on_left: bool) -> Column {
@@ -473,6 +530,35 @@ mod tests {
     fn bool_cast() {
         let m = Column::Bool(vec![true, false, true]);
         assert_eq!(bool_to_i64(&m).as_i64(), &[1, 0, 1]);
+    }
+
+    #[test]
+    fn masked_int_division_does_not_trap() {
+        let a = Column::I64(vec![10, 20, 30]);
+        let b = Column::I64(vec![2, 0, 5]); // lane 1 = scrubbed null default
+        let m = ValidityMask::from_bools(&[true, false, true]);
+        let q = arith_masked(&a, &b, ArithOp::Div, Some(&m));
+        assert_eq!(q.as_i64(), &[5, 20, 6]); // null lane evaluated against 1
+        let r = arith_masked(&a, &b, ArithOp::Mod, Some(&m));
+        assert_eq!(r.as_i64(), &[0, 0, 0]);
+        // no mask / non-div ops defer to the plain kernel
+        let c = Column::I64(vec![2, 4, 5]);
+        assert_eq!(
+            arith_masked(&a, &c, ArithOp::Div, None).as_i64(),
+            &[5, 5, 6]
+        );
+        assert_eq!(
+            arith_masked(&a, &b, ArithOp::Add, Some(&m)).as_i64(),
+            &[12, 20, 35]
+        );
+        // scalar-on-left modulo rides the Int64 fast path — same hazard
+        let r = arith_scalar_masked(&b, 7.0, ArithOp::Mod, true, Some(&m));
+        assert_eq!(r.as_i64(), &[1, 0, 2]); // 7%2, 7%1 (neutral), 7%5
+        // scalar divisor and scalar-on-right stay on the plain kernel
+        assert_eq!(
+            arith_scalar_masked(&b, 2.0, ArithOp::Mod, false, Some(&m)).as_i64(),
+            &[0, 0, 1]
+        );
     }
 
     #[test]

@@ -13,12 +13,12 @@ use crate::column::{
 };
 use crate::comm::{block_range, run_spmd, Comm};
 use crate::expr::{eval_nullable, ColumnEnv};
-use crate::ir::{Plan, SourceRef};
+use crate::ir::{Plan, SourceRef, WindowAgg};
 use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy, MaskedCol};
 use crate::passes::{optimize, PassOptions};
 use crate::table::{Schema, Table};
 use crate::types::SortOrder;
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 /// Execution options: worker (rank) count, optimizer toggles and the
 /// aggregation strategy (ablations flip these).
@@ -323,8 +323,21 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             }
             let lpay = payload_refs(&lframe, on, true);
             let rpay = payload_refs(&rframe, on, false);
+            // the plan schema knows statically whether any key slot can be
+            // null — every rank shares it, so no layout allgather is needed
+            let keys_nullable = on.iter().any(|(lk, rk)| {
+                lframe.schema.nullable_of(lk).unwrap_or(false)
+                    || rframe.schema.nullable_of(rk).unwrap_or(false)
+            });
             let (keys_out, lout, rout) = ops::distributed_join_on_strategy(
-                comm, &lkeys, &lpay, &rkeys, &rpay, *how, *strategy,
+                comm,
+                &lkeys,
+                &lpay,
+                &rkeys,
+                &rpay,
+                *how,
+                *strategy,
+                ops::KeyNullability::Static(keys_nullable),
             )?;
             // assemble output per the join schema: left fields in order
             // (each key slot takes its joined key column), then — unless the
@@ -387,12 +400,16 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 .iter()
                 .map(|(c, m)| (c, m.as_ref()))
                 .collect();
+            let keys_nullable = keys
+                .iter()
+                .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
             let (key_out, out_cols) = ops::distributed_aggregate_keys(
                 comm,
                 &key_cols,
                 &expr_refs,
                 &specs,
                 opts.agg_strategy,
+                ops::KeyNullability::Static(keys_nullable),
             )?;
             let schema = plan.schema()?;
             let mut cols = Vec::with_capacity(schema.len());
@@ -428,27 +445,186 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Cumsum { input, column, out } => {
-            // schema typing rejects nullable inputs, so the mask is None
-            let frame = exec_node(input, comm, opts)?;
-            let src = frame.col(column)?;
-            let new_col = match src {
-                Column::I64(v) => Column::I64(ops::cumsum_i64(comm, v)),
-                Column::F64(v) => Column::F64(ops::cumsum_f64(comm, v)),
-                other => bail!("cumsum over {} column", other.dtype()),
-            };
-            append_column(frame, out, new_col)
-        }
-        Plan::Stencil {
+        Plan::Window {
             input,
-            column,
-            out,
-            weights,
+            partition_by,
+            order_by,
+            aggs,
         } => {
             let frame = exec_node(input, comm, opts)?;
-            let xs = frame.col(column)?.to_f64_vec();
-            let new_col = Column::F64(ops::stencil_1d(comm, &xs, weights));
-            append_column(frame, out, new_col)
+            let out_schema = plan.schema()?;
+            // evaluate the aggregate input expressions locally (pre-shuffle,
+            // the paper's expression-array desugaring); record each one's
+            // *static* nullability so every rank picks the same kernel path.
+            // position functions (rank/row_number) never read their input —
+            // their placeholder expression is not materialized at all
+            let mut expr_cols: Vec<Option<(Column, Option<ValidityMask>)>> =
+                Vec::with_capacity(aggs.len());
+            let mut static_nulls: Vec<bool> = Vec::with_capacity(aggs.len());
+            for a in aggs {
+                expr_cols.push(if a.func.is_positional() {
+                    None
+                } else {
+                    Some(eval_nullable(&a.input, &frame)?)
+                });
+                static_nulls.push(a.input.nullable(&frame.schema)?);
+            }
+            if partition_by.is_empty() {
+                // global window: rows keep their 1D-block order; each
+                // aggregate lowers to a halo exchange or an exscan scan
+                let mut outs: Vec<NullableColumn> = Vec::with_capacity(aggs.len());
+                for (a, (ec, stat)) in
+                    aggs.iter().zip(expr_cols.iter().zip(&static_nulls))
+                {
+                    let out = match ec {
+                        Some((c, m)) => ops::window_1d(
+                            comm,
+                            c,
+                            m.as_ref(),
+                            &a.frame,
+                            &a.func,
+                            *stat,
+                        )?,
+                        // mirrors window_1d's positional path without
+                        // materializing the placeholder input column
+                        None => match &a.func {
+                            crate::ir::WindowFunc::RowNumber => {
+                                let start = comm.exscan_i64(
+                                    frame.num_rows() as i64,
+                                    crate::comm::ReduceOp::Sum,
+                                );
+                                NullableColumn::from_column(ops::row_numbers(
+                                    frame.num_rows(),
+                                    start,
+                                ))
+                            }
+                            other => anyhow::bail!(
+                                "global {other} requires partition_by \
+                                 (rejected at plan typing)"
+                            ),
+                        },
+                    };
+                    outs.push(out);
+                }
+                return assemble_window_output(frame, aggs, outs, out_schema);
+            }
+            // ---- partitioned window: PackedKeys shuffle colocates each
+            // partition, a local stable sort orders it, per-group scans
+            // compute the frames — no halo crosses a partition boundary ----
+            let key_refs: Vec<MaskedCol> = partition_by
+                .iter()
+                .map(|k| frame.masked(k))
+                .collect::<Result<_>>()?;
+            let kc: Vec<&Column> = key_refs.iter().map(|(c, _)| *c).collect();
+            let km: Vec<Option<&ValidityMask>> =
+                key_refs.iter().map(|(_, m)| *m).collect();
+            let keys_nullable = partition_by
+                .iter()
+                .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
+            let with_flags = ops::KeyNullability::Static(keys_nullable)
+                .with_flags(comm, km.iter().any(|m| m.is_some()));
+            let packed = ops::PackedKeys::pack_masked(&kc, &km, with_flags)?;
+            // ship every frame column plus the evaluated expression columns;
+            // position functions (rank/row_number) never read their input,
+            // so their placeholder columns stay off the wire
+            let mut all: Vec<&Column> = frame.cols.iter().collect();
+            let mut masks: Vec<Option<&ValidityMask>> =
+                frame.masks.iter().map(|m| m.as_ref()).collect();
+            let mut ship_idx: Vec<Option<usize>> = Vec::with_capacity(aggs.len());
+            for ec in &expr_cols {
+                match ec {
+                    Some((c, m)) => {
+                        ship_idx.push(Some(all.len()));
+                        all.push(c);
+                        masks.push(m.as_ref());
+                    }
+                    None => ship_idx.push(None),
+                }
+            }
+            let (shuffled, shuffled_masks) =
+                ops::shuffle_by_packed_nullable(comm, &packed, &all, &masks)?;
+            let ncols = frame.cols.len();
+            // local stable sort by (partition keys asc nulls-first, order
+            // keys in their directions); stability keeps arrival (global
+            // row) order within ties, so every engine agrees
+            let mut sort_cols: Vec<&Column> = Vec::new();
+            let mut sort_masks: Vec<Option<&ValidityMask>> = Vec::new();
+            let mut orders: Vec<SortOrder> = Vec::new();
+            for k in partition_by {
+                let i = frame.schema.index_of(k).expect("validated by typing");
+                sort_cols.push(&shuffled[i]);
+                sort_masks.push(shuffled_masks[i].as_ref());
+                orders.push(SortOrder::Asc);
+            }
+            for (k, o) in order_by {
+                let i = frame.schema.index_of(k).expect("validated by typing");
+                sort_cols.push(&shuffled[i]);
+                sort_masks.push(shuffled_masks[i].as_ref());
+                orders.push(*o);
+            }
+            let krows = ops::keys::key_rows_nullable(&sort_cols, &sort_masks)?;
+            let (idx, group_starts, breaks) =
+                ops::partition_runs(&krows, partition_by.len(), &orders);
+            let take = |c: &Column, m: &Option<ValidityMask>| {
+                (
+                    c.take(&idx),
+                    normalize_mask(m.as_ref().map(|m| m.take(&idx))),
+                )
+            };
+            let mut cols_sorted: Vec<Column> = Vec::with_capacity(ncols);
+            let mut masks_sorted: Vec<Option<ValidityMask>> = Vec::with_capacity(ncols);
+            for i in 0..ncols {
+                let (c, m) = take(&shuffled[i], &shuffled_masks[i]);
+                cols_sorted.push(c);
+                masks_sorted.push(m);
+            }
+            let mut outs: Vec<NullableColumn> = Vec::with_capacity(aggs.len());
+            for (a, si) in aggs.iter().zip(&ship_idx) {
+                let out = match si {
+                    Some(si) => {
+                        let (ec, em) = take(&shuffled[*si], &shuffled_masks[*si]);
+                        ops::window_over_groups(
+                            &ec,
+                            em.as_ref(),
+                            &a.frame,
+                            &a.func,
+                            &group_starts,
+                            Some(&breaks),
+                        )?
+                    }
+                    // positional functions never read values: emit the
+                    // per-run ranks / row numbers directly
+                    None => {
+                        let n_rows = idx.len();
+                        let mut vals =
+                            Column::new_empty(crate::types::DType::I64);
+                        for (gi, &start) in group_starts.iter().enumerate() {
+                            let end =
+                                group_starts.get(gi + 1).copied().unwrap_or(n_rows);
+                            let part = match &a.func {
+                                crate::ir::WindowFunc::RowNumber => {
+                                    ops::row_numbers(end - start, 0)
+                                }
+                                crate::ir::WindowFunc::Rank => {
+                                    ops::rank_from_breaks(&breaks[start..end])
+                                }
+                                other => {
+                                    unreachable!("non-positional {other} not shipped")
+                                }
+                            };
+                            vals.extend(&part);
+                        }
+                        NullableColumn::from_column(vals)
+                    }
+                };
+                outs.push(out);
+            }
+            let sorted_frame = LocalFrame {
+                schema: frame.schema.clone(),
+                cols: cols_sorted,
+                masks: masks_sorted,
+            };
+            assemble_window_output(sorted_frame, aggs, outs, out_schema)
         }
         Plan::Sort { input, keys } => {
             let frame = exec_node(input, comm, opts)?;
@@ -465,8 +641,16 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 .filter(|(_, (n, _))| !keys.iter().any(|(k, _)| k == n))
                 .map(|(i, _)| (&frame.cols[i], frame.masks[i].as_ref()))
                 .collect();
-            let (skeys, scols) =
-                ops::distributed_sort_keys(comm, &key_cols, &orders, &others)?;
+            let keys_nullable = keys
+                .iter()
+                .any(|(k, _)| frame.schema.nullable_of(k).unwrap_or(false));
+            let (skeys, scols) = ops::distributed_sort_keys(
+                comm,
+                &key_cols,
+                &orders,
+                &others,
+                ops::KeyNullability::Static(keys_nullable),
+            )?;
             let mut cols = Vec::with_capacity(frame.cols.len());
             let mut masks = Vec::with_capacity(frame.cols.len());
             // distributed_sort_keys returns keys in `keys` order and
@@ -580,25 +764,30 @@ fn exec_source(
     }
 }
 
-fn append_column(frame: LocalFrame, out: &str, new_col: Column) -> Result<LocalFrame> {
-    let mut fields = Vec::new();
-    let mut nullable = Vec::new();
-    let mut cols = Vec::new();
-    let mut masks = Vec::new();
-    for (i, ((n, t), c)) in frame.schema.fields().iter().zip(&frame.cols).enumerate() {
-        if n != out {
-            fields.push((n.clone(), *t));
-            nullable.push(frame.schema.nullable_at(i));
-            cols.push(c.clone());
-            masks.push(frame.masks[i].clone());
+/// Assemble a window node's local output: the input frame's columns (minus
+/// any replaced by an aggregate's `out` name) followed by the aggregate
+/// outputs, in the order the plan schema fixed.
+fn assemble_window_output(
+    frame: LocalFrame,
+    aggs: &[WindowAgg],
+    outs: Vec<NullableColumn>,
+    schema: Schema,
+) -> Result<LocalFrame> {
+    let mut cols = Vec::with_capacity(schema.len());
+    let mut masks = Vec::with_capacity(schema.len());
+    for (i, (n, _)) in frame.schema.fields().iter().enumerate() {
+        if aggs.iter().any(|a| &a.out == n) {
+            continue;
         }
+        cols.push(frame.cols[i].clone());
+        masks.push(frame.masks[i].clone());
     }
-    fields.push((out.to_string(), new_col.dtype()));
-    nullable.push(false);
-    cols.push(new_col);
-    masks.push(None);
+    for o in outs {
+        cols.push(o.values);
+        masks.push(o.validity);
+    }
     Ok(LocalFrame {
-        schema: Schema::new_nullable(fields, nullable),
+        schema,
         cols,
         masks,
     })
@@ -825,13 +1014,27 @@ mod tests {
         }
     }
 
+    fn global_window(input: Plan, aggs: Vec<WindowAgg>) -> Plan {
+        Plan::Window {
+            input: Box::new(input),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs,
+        }
+    }
+
     #[test]
     fn cumsum_ordered() {
-        let plan = Plan::Cumsum {
-            input: Box::new(source_mem("t", table())),
-            column: "id".into(),
-            out: "cs".into(),
-        };
+        use crate::ir::{WindowFrame, WindowFunc};
+        let plan = global_window(
+            source_mem("t", table()),
+            vec![WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("id"),
+            )],
+        );
         let got = collect(plan, &opts(3)).unwrap();
         assert_eq!(
             got.column("cs").unwrap().as_i64(),
@@ -841,17 +1044,24 @@ mod tests {
 
     #[test]
     fn stencil_after_filter_gets_rebalanced() {
-        // filter (1D_VAR) then stencil (needs 1D_BLOCK): the optimizer must
-        // insert a rebalance and the result must match the serial oracle
-        let plan = Plan::Stencil {
-            input: Box::new(Plan::Filter {
+        use crate::ir::{WindowFrame, WindowFunc};
+        // filter (1D_VAR) then a halo window (needs 1D_BLOCK): the optimizer
+        // must insert a rebalance and the result must match the serial oracle
+        let plan = global_window(
+            Plan::Filter {
                 input: Box::new(source_mem("t", table())),
                 predicate: col("id").ne_(lit(3i64)),
-            }),
-            column: "x".into(),
-            out: "sma".into(),
-            weights: vec![1.0 / 3.0; 3],
-        };
+            },
+            vec![WindowAgg::new(
+                "sma",
+                WindowFunc::Weighted(vec![1.0 / 3.0; 3]),
+                WindowFrame::Rolling {
+                    preceding: 1,
+                    following: 1,
+                },
+                col("x"),
+            )],
+        );
         let expect = collect_serial(plan.clone()).unwrap();
         let got = collect(plan, &opts(4)).unwrap();
         let (e, g) = (
@@ -861,6 +1071,48 @@ mod tests {
         assert_eq!(e.len(), g.len());
         for (a, b) in e.iter().zip(g) {
             assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn partitioned_window_shift_and_rank() {
+        use crate::ir::{WindowFrame, WindowFunc};
+        // partition by id % 2, order by id desc: shifts stay inside their
+        // partition and ranks follow the order keys
+        let plan = Plan::Window {
+            input: Box::new(Plan::WithColumn {
+                input: Box::new(source_mem("t", table())),
+                name: "p".into(),
+                expr: col("id").rem(lit(2i64)),
+            }),
+            partition_by: vec!["p".into()],
+            order_by: vec![("id".into(), SortOrder::Desc)],
+            aggs: vec![
+                WindowAgg::new("prev", WindowFunc::Value, WindowFrame::Shift(1), col("id")),
+                WindowAgg::new(
+                    "r",
+                    WindowFunc::Rank,
+                    WindowFrame::CumulativeToCurrent,
+                    lit(0i64),
+                ),
+            ],
+        };
+        for w in [1usize, 3] {
+            let got = collect(plan.clone(), &opts(w)).unwrap();
+            let got = got
+                .sorted_by_keys(&[
+                    ("p", SortOrder::Asc),
+                    ("id", SortOrder::Desc),
+                ])
+                .unwrap();
+            // partition 0: ids 6,4,2,0 — prev = null,6,4,2; rank 1..4
+            // partition 1: ids 7,5,3,1 — prev = null,7,5,3
+            assert_eq!(got.column("id").unwrap().as_i64(), &[6, 4, 2, 0, 7, 5, 3, 1]);
+            assert_eq!(got.column("prev").unwrap().as_i64(), &[0, 6, 4, 2, 0, 7, 5, 3]);
+            let m = got.mask("prev").unwrap();
+            assert!(!m.get(0) && !m.get(4), "workers={w}: partition heads null");
+            assert!(m.get(1) && m.get(5));
+            assert_eq!(got.column("r").unwrap().as_i64(), &[1, 2, 3, 4, 1, 2, 3, 4]);
         }
     }
 

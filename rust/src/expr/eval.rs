@@ -202,14 +202,46 @@ fn eval_inner<'a>(expr: &Expr, env: &'a dyn ColumnEnv) -> Result<Evaled<'a>> {
         Expr::Arith(a, op, b) => {
             let (ea, eb) = (eval_inner(a, env)?, eval_inner(b, env)?);
             match (ea.as_col(), eb.as_col(), &ea, &eb) {
-                (Some(x), Some(y), _, _) => Evaled::Owned(column::arith(x, y, *op)),
+                (Some(x), Some(y), _, _) => {
+                    // Int64 division/modulo by a nullable divisor must not
+                    // trap on the scrubbed default 0: evaluate under the
+                    // divisor's validity (the lanes are null-out anyway).
+                    // Only the I64 ÷ I64 route can trap, so the extra
+                    // validity walk is gated on it.
+                    let hazardous = matches!(
+                        op,
+                        column::ArithOp::Div | column::ArithOp::Mod
+                    ) && matches!((x, y), (Column::I64(_), Column::I64(_)));
+                    if hazardous {
+                        let bv = eval_validity(b, env)?;
+                        Evaled::Owned(column::arith_masked(x, y, *op, bv.as_ref()))
+                    } else {
+                        Evaled::Owned(column::arith(x, y, *op))
+                    }
+                }
                 (Some(x), None, _, Evaled::Scalar(s)) => {
+                    // the scalar is the divisor here, never the null hazard
                     let sf = s.as_f64().context("non-numeric literal in arith")?;
                     Evaled::Owned(column::arith_scalar(x, sf, *op, false))
                 }
                 (None, Some(y), Evaled::Scalar(s), _) => {
                     let sf = s.as_f64().context("non-numeric literal in arith")?;
-                    Evaled::Owned(column::arith_scalar(y, sf, *op, true))
+                    // `scalar % nullable_int_col` traps through the Int64
+                    // scalar fast path — same hazard, same mask treatment
+                    if matches!(op, column::ArithOp::Mod)
+                        && matches!(y, Column::I64(_))
+                    {
+                        let bv = eval_validity(b, env)?;
+                        Evaled::Owned(column::arith_scalar_masked(
+                            y,
+                            sf,
+                            *op,
+                            true,
+                            bv.as_ref(),
+                        ))
+                    } else {
+                        Evaled::Owned(column::arith_scalar(y, sf, *op, true))
+                    }
                 }
                 _ => {
                     // fold_constants normally removes this; evaluate anyway
@@ -439,5 +471,35 @@ mod tests {
         with_env(|env| {
             assert!(eval(&col("nope"), env).is_err());
         });
+    }
+
+    #[test]
+    fn nullable_divisor_is_masked_not_trapped() {
+        // the window/fill arithmetic hazard: a nullable Int64 divisor holds
+        // the scrubbed default 0 under its null lanes — division must
+        // evaluate under the mask instead of trapping
+        let t = crate::table::Table::from_pairs(vec![
+            ("a", Column::I64(vec![10, 20, 30])),
+            ("b", Column::I64(vec![2, 0, 5])),
+        ])
+        .unwrap()
+        .with_null_mask("b", ValidityMask::from_bools(&[true, false, true]))
+        .unwrap();
+        let (vals, mask) = eval_nullable(&col("a").div(col("b")), &t).unwrap();
+        assert_eq!(vals.as_i64(), &[5, 0, 6]); // null lane re-scrubbed
+        assert_eq!(mask.unwrap().to_bools(), vec![true, false, true]);
+        let (vals, mask) = eval_nullable(&col("a").rem(col("b")), &t).unwrap();
+        assert_eq!(vals.as_i64(), &[0, 0, 0]);
+        assert_eq!(mask.unwrap().to_bools(), vec![true, false, true]);
+        // scalar-on-left modulo hits the Int64 scalar fast path — the mask
+        // treatment must cover it too
+        let (vals, mask) = eval_nullable(&lit(7i64).rem(col("b")), &t).unwrap();
+        assert_eq!(vals.as_i64(), &[1, 0, 2]);
+        assert_eq!(mask.unwrap().to_bools(), vec![true, false, true]);
+        // fill_null first keeps working as the documented workaround
+        let (vals, mask) =
+            eval_nullable(&col("a").div(col("b").fill_null(1i64)), &t).unwrap();
+        assert_eq!(vals.as_i64(), &[5, 20, 6]);
+        assert!(mask.is_none());
     }
 }

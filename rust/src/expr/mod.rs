@@ -18,7 +18,7 @@ pub use eval::{eval, eval_mask, eval_nullable, eval_validity, ColumnEnv, SliceEn
 
 use crate::column::{ArithOp, CmpOp, MathFn};
 use crate::table::Schema;
-use crate::types::{DType, Value};
+use crate::types::{DType, Value, WindowFrame, WindowFunc};
 use anyhow::{bail, Result};
 use std::collections::BTreeSet;
 use std::fmt;
@@ -94,6 +94,20 @@ impl PartialEq for Expr {
     }
 }
 
+/// An expression wrapped in a window frame + function — what the
+/// expression-level window sugar (`col("x").shift(1)`, `.cum_sum()`, …)
+/// produces. It is *not* an [`Expr`]: window computations need neighbor
+/// rows (communication), so they live on their own plan node
+/// ([`crate::ir::Plan::Window`]) rather than inside the element-wise
+/// evaluator. Consume one with `df.with_window(out, wexpr)` or the fluent
+/// `df.window()…agg_expr(out, wexpr)` builder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowExpr {
+    pub input: Expr,
+    pub frame: WindowFrame,
+    pub func: WindowFunc,
+}
+
 /// Builders mirroring the paper's surface syntax.
 pub fn col(name: &str) -> Expr {
     Expr::Col(name.to_string())
@@ -159,6 +173,50 @@ impl Expr {
     /// Replace null lanes with `v`.
     pub fn fill_null<V: Into<Value>>(self, v: V) -> Expr {
         Expr::FillNull(Box::new(self), v.into())
+    }
+
+    // ---- window sugar: these leave the element-wise expression world and
+    // ---- produce a [`WindowExpr`] for `df.with_window` / `df.window()` ----
+
+    /// The value `offset` rows back (positive = lag, negative = lead); the
+    /// out-of-range edge rows are NULL.
+    pub fn shift(self, offset: i64) -> WindowExpr {
+        WindowExpr {
+            input: self,
+            frame: WindowFrame::Shift(offset),
+            func: WindowFunc::Value,
+        }
+    }
+
+    /// `lag(n)` — the value `n` rows earlier (`shift(n)`).
+    pub fn lag(self, n: usize) -> WindowExpr {
+        self.shift(n as i64)
+    }
+
+    /// `lead(n)` — the value `n` rows later (`shift(-n)`).
+    pub fn lead(self, n: usize) -> WindowExpr {
+        self.shift(-(n as i64))
+    }
+
+    /// Running (cumulative) sum up to and including the current row.
+    pub fn cum_sum(self) -> WindowExpr {
+        WindowExpr {
+            input: self,
+            frame: WindowFrame::CumulativeToCurrent,
+            func: WindowFunc::Sum,
+        }
+    }
+
+    /// `func` over the rolling frame `[i-preceding, i+following]`.
+    pub fn rolling(self, preceding: usize, following: usize, func: WindowFunc) -> WindowExpr {
+        WindowExpr {
+            input: self,
+            frame: WindowFrame::Rolling {
+                preceding,
+                following,
+            },
+            func,
+        }
     }
 
     /// The set of column names this expression reads — the liveness facts
@@ -573,6 +631,27 @@ mod tests {
     fn display_roundtrips_structure() {
         let e = col("a").add(lit(1i64)).lt(col("b"));
         assert_eq!(format!("{e}"), "((:a + 1) < :b)");
+    }
+
+    #[test]
+    fn window_sugar_builds_frames() {
+        let w = col("x").lag(2);
+        assert_eq!(w.frame, WindowFrame::Shift(2));
+        assert_eq!(w.func, WindowFunc::Value);
+        assert_eq!(w.input, col("x"));
+        assert_eq!(col("x").lead(1).frame, WindowFrame::Shift(-1));
+        assert_eq!(col("x").shift(-3).frame, WindowFrame::Shift(-3));
+        let c = col("a").add(col("b")).cum_sum();
+        assert_eq!(c.frame, WindowFrame::CumulativeToCurrent);
+        assert_eq!(c.func, WindowFunc::Sum);
+        let r = col("x").rolling(2, 0, WindowFunc::Mean);
+        assert_eq!(
+            r.frame,
+            WindowFrame::Rolling {
+                preceding: 2,
+                following: 0
+            }
+        );
     }
 
     #[test]

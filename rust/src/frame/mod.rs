@@ -12,8 +12,9 @@
 //! | `aggregate(df, [:k1,:k2], …)`              | [`DataFrame::aggregate_by`] / [`DataFrame::group_by`] (builder) |
 //! | `sort(df, [:k1 desc, :k2])`                | [`DataFrame::sort_by_keys`] ([`DataFrame::sort_by`] = one key asc) |
 //! | `[df1; df2]`                               | [`DataFrame::concat`]                  |
-//! | `cumsum(df[:x])`                           | [`DataFrame::cumsum`]                  |
-//! | `stencil(x -> …, df[:x])` (SMA/WMA)        | [`DataFrame::stencil`] / [`sma`] / [`wma`] |
+//! | `cumsum(df[:x])`                           | [`DataFrame::cumsum`] (wrapper over the window node) |
+//! | `stencil(x -> …, df[:x])` (SMA/WMA)        | [`DataFrame::stencil`] / [`sma`] / [`wma`] (wrappers) |
+//! | window functions / `OVER (PARTITION BY …)` | [`DataFrame::window`] (builder) / [`DataFrame::with_window`] |
 //! | `df[:id3] = (…)/var(…)` (array compute)    | [`DataFrame::with_column`]             |
 //! | `transpose(typed_hcat(Float64, …))`        | [`DataFrame::matrix_assembly`]         |
 //! | `HPAT.Kmeans(samples, k)`                  | [`DataFrame::kmeans`]                  |
@@ -36,8 +37,11 @@
 //! scaling idiom.
 
 use crate::exec::{collect, ExecOptions};
-use crate::expr::{AggExpr, AggFn, Expr};
-use crate::ir::{source_hfs, source_mem, JoinStrategy, JoinType, MlParams, Plan, SortOrder};
+use crate::expr::{col, AggExpr, AggFn, Expr, WindowExpr};
+use crate::ir::{
+    source_hfs, source_mem, JoinStrategy, JoinType, MlParams, Plan, SortOrder, WindowAgg,
+    WindowFrame, WindowFunc,
+};
 use crate::ops::stencil::{sma_weights, wma_weights_124};
 use crate::table::{Schema, Table};
 use anyhow::Result;
@@ -277,31 +281,59 @@ impl DataFrame {
         })
     }
 
-    /// `df[:out] = cumsum(df[:col])`.
+    /// Materialize one windowed expression as `:out` over a *global* window
+    /// (rows in block order, no partitioning):
+    /// `df.with_window("prev", col("x").shift(1))`,
+    /// `df.with_window("cs", col("x").cum_sum())`.
+    pub fn with_window(&self, out: &str, w: WindowExpr) -> DataFrame {
+        self.wrap(Plan::Window {
+            input: Box::new(self.plan.clone()),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs: vec![WindowAgg::new(out, w.func, w.frame, w.input)],
+        })
+    }
+
+    /// Fluent window-function entry point (the SQL `OVER` clause):
+    /// `df.window().partition_by(&["store"]).order_by(&[("sales",
+    /// SortOrder::Desc)]).rank("r").build()`, or rolling frames via
+    /// `.rolling(3).agg("s3", WindowFunc::Sum, col("x"))`. Without
+    /// `partition_by` the window is global and runs in block row order.
+    pub fn window(&self) -> WindowBuilder {
+        WindowBuilder {
+            ctx: self.ctx.clone(),
+            input: self.plan.clone(),
+            partition_by: Vec::new(),
+            order_by: Vec::new(),
+            frame: WindowFrame::CumulativeToCurrent,
+            aggs: Vec::new(),
+        }
+    }
+
+    /// `df[:out] = cumsum(df[:col])` — thin wrapper over the unified
+    /// [`Plan::Window`] node (`cumulative` frame, `sum` function); kept for
+    /// the paper's Table 1 surface.
     pub fn cumsum(&self, column: &str, out: &str) -> DataFrame {
-        self.wrap(Plan::Cumsum {
-            input: Box::new(self.plan.clone()),
-            column: column.to_string(),
-            out: out.to_string(),
-        })
+        self.with_window(out, col(column).cum_sum())
     }
 
-    /// General 1-D stencil with explicit weights.
+    /// General 1-D stencil with explicit weights — thin wrapper over the
+    /// unified [`Plan::Window`] node (`rolling[r,r]` frame, `weighted`
+    /// function with truncated-renormalized edges, bit-for-bit the
+    /// historical stencil semantics).
     pub fn stencil(&self, column: &str, out: &str, weights: Vec<f64>) -> DataFrame {
-        self.wrap(Plan::Stencil {
-            input: Box::new(self.plan.clone()),
-            column: column.to_string(),
-            out: out.to_string(),
-            weights,
-        })
+        let r = weights.len() / 2;
+        self.with_window(out, col(column).rolling(r, r, WindowFunc::Weighted(weights)))
     }
 
-    /// Simple moving average of window `w` (`stencil(x->(x[-1]+x[0]+x[1])/3)`).
+    /// Simple moving average of window `w` (`stencil(x->(x[-1]+x[0]+x[1])/3)`)
+    /// — thin wrapper over [`DataFrame::stencil`].
     pub fn sma(&self, column: &str, out: &str, window: usize) -> DataFrame {
         self.stencil(column, out, sma_weights(window))
     }
 
-    /// The paper's weighted moving average `(x[-1]+2x[0]+x[1])/4`.
+    /// The paper's weighted moving average `(x[-1]+2x[0]+x[1])/4` — thin
+    /// wrapper over [`DataFrame::stencil`].
     pub fn wma(&self, column: &str, out: &str) -> DataFrame {
         self.stencil(column, out, wma_weights_124())
     }
@@ -479,6 +511,124 @@ impl GroupBy {
     }
 }
 
+/// Fluent builder for window functions (created by [`DataFrame::window`]) —
+/// the SQL `OVER (PARTITION BY … ORDER BY … ROWS …)` clause as a builder.
+///
+/// Frame setters ([`WindowBuilder::rolling`], [`WindowBuilder::cumulative`],
+/// [`WindowBuilder::shift`]) set the *current* frame; each subsequent
+/// [`WindowBuilder::agg`] uses it, so several frames can coexist in one
+/// window node. [`WindowBuilder::agg_expr`] takes a self-contained
+/// [`WindowExpr`] (`col("x").lag(1)`, …) regardless of the current frame.
+pub struct WindowBuilder {
+    ctx: HiFrames,
+    input: Plan,
+    partition_by: Vec<String>,
+    order_by: Vec<(String, SortOrder)>,
+    frame: WindowFrame,
+    aggs: Vec<WindowAgg>,
+}
+
+impl WindowBuilder {
+    /// Colocate rows by these keys; every frame stays inside its partition.
+    /// Without this the window is *global* over the block row order.
+    pub fn partition_by(mut self, keys: &[&str]) -> WindowBuilder {
+        self.partition_by = keys.iter().map(|k| k.to_string()).collect();
+        self
+    }
+
+    /// Order rows within each partition (requires `partition_by`; ties keep
+    /// their incoming global row order — the sort is stable).
+    pub fn order_by(mut self, keys: &[(&str, SortOrder)]) -> WindowBuilder {
+        self.order_by = keys.iter().map(|(k, o)| (k.to_string(), *o)).collect();
+        self
+    }
+
+    /// Trailing frame of `window` rows (`ROWS window-1 PRECEDING ..
+    /// CURRENT ROW`) for the following `agg` calls.
+    pub fn rolling(mut self, window: usize) -> WindowBuilder {
+        self.frame = WindowFrame::Rolling {
+            preceding: window.saturating_sub(1),
+            following: 0,
+        };
+        self
+    }
+
+    /// General frame `ROWS preceding PRECEDING .. following FOLLOWING`.
+    pub fn rolling_between(mut self, preceding: usize, following: usize) -> WindowBuilder {
+        self.frame = WindowFrame::Rolling {
+            preceding,
+            following,
+        };
+        self
+    }
+
+    /// Running frame `ROWS UNBOUNDED PRECEDING .. CURRENT ROW` (the
+    /// default).
+    pub fn cumulative(mut self) -> WindowBuilder {
+        self.frame = WindowFrame::CumulativeToCurrent;
+        self
+    }
+
+    /// Single-row frame at `offset` back (positive = lag, negative = lead)
+    /// for the following `agg` calls (use with [`WindowFunc::Value`]).
+    pub fn shift(mut self, offset: i64) -> WindowBuilder {
+        self.frame = WindowFrame::Shift(offset);
+        self
+    }
+
+    /// Add `:out = func(input)` over the current frame.
+    pub fn agg(mut self, out: &str, func: WindowFunc, input: Expr) -> WindowBuilder {
+        self.aggs
+            .push(WindowAgg::new(out, func, self.frame.clone(), input));
+        self
+    }
+
+    /// Add a self-contained windowed expression (its own frame):
+    /// `.agg_expr("prev", col("x").lag(1))`.
+    pub fn agg_expr(mut self, out: &str, w: WindowExpr) -> WindowBuilder {
+        self.aggs.push(WindowAgg::new(out, w.func, w.frame, w.input));
+        self
+    }
+
+    /// Competition rank (1, 1, 3, …) of each row within its partition under
+    /// the `order_by` keys.
+    pub fn rank(mut self, out: &str) -> WindowBuilder {
+        self.aggs.push(WindowAgg::new(
+            out,
+            WindowFunc::Rank,
+            WindowFrame::CumulativeToCurrent,
+            crate::expr::lit(0i64),
+        ));
+        self
+    }
+
+    /// 1-based position of each row within its partition (global row number
+    /// for an un-partitioned window).
+    pub fn row_number(mut self, out: &str) -> WindowBuilder {
+        self.aggs.push(WindowAgg::new(
+            out,
+            WindowFunc::RowNumber,
+            WindowFrame::CumulativeToCurrent,
+            crate::expr::lit(0i64),
+        ));
+        self
+    }
+
+    /// Finish: produce the lazy windowed [`DataFrame`]. Frame/function
+    /// validation happens at schema time, like every other plan error.
+    pub fn build(self) -> DataFrame {
+        DataFrame {
+            ctx: self.ctx,
+            plan: Plan::Window {
+                input: Box::new(self.input),
+                partition_by: self.partition_by,
+                order_by: self.order_by,
+                aggs: self.aggs,
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -579,6 +729,83 @@ mod tests {
         let out = df(&hf).sma("x", "sma", 3).collect().unwrap();
         let sma = out.column("sma").unwrap().as_f64();
         assert!((sma[1] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_sugar_shift_and_cum_sum() {
+        let hf = ctx();
+        // global lag: first row is NULL, values shift down by one
+        let out = df(&hf)
+            .with_window("prev", col("x").lag(1))
+            .collect()
+            .unwrap();
+        assert_eq!(out.schema().nullable_of("prev"), Some(true));
+        let prev = out.column("prev").unwrap().as_f64();
+        let mask = out.mask("prev").unwrap();
+        assert!(!mask.get(0));
+        assert!((prev[1] - 0.5).abs() < 1e-12);
+        assert!((prev[5] - 4.5).abs() < 1e-12);
+        // cum_sum sugar matches the cumsum wrapper exactly
+        let a = df(&hf).cumsum("x", "cs").collect().unwrap();
+        let b = df(&hf)
+            .with_window("cs", col("x").cum_sum())
+            .collect()
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn window_builder_partitioned_rank_and_rolling() {
+        let hf = ctx();
+        // order keys must be groupable (Int64 here — F64 order keys are
+        // rejected at typing, like every other relational key)
+        let t = hf.table(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2, 1, 3, 2, 1])),
+                ("v", Column::I64(vec![5, 15, 25, 35, 45, 55])),
+            ])
+            .unwrap(),
+        );
+        let out = t
+            .window()
+            .partition_by(&["id"])
+            .order_by(&[("v", SortOrder::Desc)])
+            .rank("r")
+            .rolling(2)
+            .agg("s2", WindowFunc::Sum, col("v"))
+            .build()
+            // sorts are stable, so within each id the window's own v-desc
+            // order survives the canonicalizing sort
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        // id groups: 1 -> v [55, 25, 5], 2 -> [45, 15], 3 -> [35]
+        assert_eq!(out.column("id").unwrap().as_i64(), &[1, 1, 1, 2, 2, 3]);
+        assert_eq!(out.column("v").unwrap().as_i64(), &[55, 25, 5, 45, 15, 35]);
+        assert_eq!(out.column("r").unwrap().as_i64(), &[1, 2, 3, 1, 2, 1]);
+        // trailing window of 2 within the partition's desc order
+        assert_eq!(
+            out.column("s2").unwrap().as_i64(),
+            &[55, 80, 30, 45, 60, 35]
+        );
+        // eager typing: order_by without partition_by is rejected, and so
+        // are F64 order keys
+        assert!(t
+            .window()
+            .order_by(&[("id", SortOrder::Asc)])
+            .rank("r")
+            .build()
+            .schema()
+            .is_err());
+        assert!(df(&hf)
+            .window()
+            .partition_by(&["id"])
+            .order_by(&[("x", SortOrder::Desc)])
+            .rank("r")
+            .build()
+            .schema()
+            .is_err());
     }
 
     #[test]

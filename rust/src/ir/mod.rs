@@ -9,7 +9,7 @@ use crate::distribution::Dist;
 use crate::expr::{AggExpr, Expr};
 use crate::table::{Schema, Table};
 use crate::types::DType;
-pub use crate::types::{JoinStrategy, JoinType, SortOrder};
+pub use crate::types::{JoinStrategy, JoinType, SortOrder, WindowFrame, WindowFunc};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
 use std::fmt;
@@ -36,6 +36,42 @@ pub struct MlParams {
     pub iters: usize,
     /// Execute via PJRT artifacts (L2/L1 path) or the pure-rust kernel.
     pub use_pjrt: bool,
+}
+
+/// One output column of a [`Plan::Window`]: `:out = func frame(input)`.
+/// The input expression is evaluated *before* the window (the paper's
+/// expression-array desugaring), so any expression — not just a bare column
+/// reference — can feed a window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowAgg {
+    pub out: String,
+    pub func: WindowFunc,
+    pub frame: WindowFrame,
+    pub input: Expr,
+}
+
+impl WindowAgg {
+    pub fn new(out: &str, func: WindowFunc, frame: WindowFrame, input: Expr) -> WindowAgg {
+        WindowAgg {
+            out: out.to_string(),
+            func,
+            frame,
+            input,
+        }
+    }
+
+    /// Does this aggregate need neighbor rows beyond the local block (i.e.
+    /// a halo exchange when the window is global)? Position functions and
+    /// scans never do.
+    pub fn needs_halo(&self) -> bool {
+        !self.func.is_positional() && self.frame.halo() != (0, 0)
+    }
+}
+
+impl fmt::Display for WindowAgg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, ":{} = {} {}({})", self.out, self.func, self.frame, self.input)
+    }
 }
 
 /// A logical plan tree. Each node's output is a data frame whose columns
@@ -92,18 +128,24 @@ pub enum Plan {
     },
     /// Vertical concatenation `[df1; df2]` (same schema).
     Concat { inputs: Vec<Box<Plan>> },
-    /// `cumsum(df[:col])` materialized as a new column.
-    Cumsum {
+    /// Window functions over frames (the unified analytics node subsuming
+    /// the former `Cumsum`/`Stencil` special cases): each [`WindowAgg`]
+    /// applies a [`WindowFunc`] over a [`WindowFrame`] around every row.
+    /// With an empty `partition_by` the window is *global* — rows keep
+    /// their 1D-block order and the lowering is a halo exchange / `exscan`
+    /// (the communication patterns map-reduce cannot express, §4.5). With
+    /// partition keys the rows of each partition are colocated by a hash
+    /// shuffle, ordered locally by `order_by` (partition order is
+    /// rank-local, like every relational output), and scanned per group —
+    /// no halo ever crosses a partition boundary.
+    Window {
         input: Box<Plan>,
-        column: String,
-        out: String,
-    },
-    /// 1-D stencil over a column (SMA/WMA): `out[i] = Σ w[j]·col[i+j-r]`.
-    Stencil {
-        input: Box<Plan>,
-        column: String,
-        out: String,
-        weights: Vec<f64>,
+        /// Hash-colocation keys; empty = one global window in row order.
+        partition_by: Vec<String>,
+        /// Within-partition ordering (requires `partition_by`; global
+        /// windows run in the frame's existing row order — sort first).
+        order_by: Vec<(String, SortOrder)>,
+        aggs: Vec<WindowAgg>,
     },
     /// Global sort by a composite key list with per-key directions (result
     /// canonicalization; TPCx-BB multi-column ORDER BY / top-N).
@@ -302,61 +344,104 @@ impl Plan {
                 }
                 Ok(first)
             }
-            Plan::Cumsum { input, column, out } => {
-                let s = input.schema()?;
-                let dt = s
-                    .dtype_of(column)
-                    .with_context(|| format!("cumsum: unknown column :{column}"))?;
-                if !dt.is_numeric() {
-                    bail!("cumsum over non-numeric column :{column}");
-                }
-                if s.nullable_of(column) == Some(true) {
-                    bail!("cumsum over nullable column :{column} — fill_null first");
-                }
-                let mut fields: Vec<(String, DType)> = Vec::new();
-                let mut nullable = Vec::new();
-                for (i, (n, t)) in s.fields().iter().enumerate() {
-                    if n != out {
-                        fields.push((n.clone(), *t));
-                        nullable.push(s.nullable_at(i));
-                    }
-                }
-                fields.push((out.clone(), dt));
-                nullable.push(false);
-                Ok(Schema::new_nullable(fields, nullable))
-            }
-            Plan::Stencil {
+            Plan::Window {
                 input,
-                column,
-                out,
-                weights,
+                partition_by,
+                order_by,
+                aggs,
             } => {
                 let s = input.schema()?;
-                let dt = s
-                    .dtype_of(column)
-                    .with_context(|| format!("stencil: unknown column :{column}"))?;
-                if !dt.is_numeric() {
-                    bail!("stencil over non-numeric column :{column}");
+                if aggs.is_empty() {
+                    bail!("window: needs at least one aggregate");
                 }
-                if s.nullable_of(column) == Some(true) {
-                    bail!("stencil over nullable column :{column} — fill_null first");
-                }
-                if weights.is_empty() || weights.len() % 2 == 0 {
+                if partition_by.is_empty() && !order_by.is_empty() {
                     bail!(
-                        "stencil weights must have odd length, got {}",
-                        weights.len()
+                        "window: order_by requires partition_by — global windows \
+                         run in block row order (sort the frame first)"
                     );
                 }
+                let mut seen_keys: BTreeSet<&str> = BTreeSet::new();
+                for key in partition_by {
+                    let kt = s
+                        .dtype_of(key)
+                        .with_context(|| format!("window: unknown partition key :{key}"))?;
+                    if !kt.is_groupable() {
+                        bail!("window partition key :{key} must be Int64/Bool/String, got {kt}");
+                    }
+                    if !seen_keys.insert(key.as_str()) {
+                        bail!("window: duplicate partition key :{key}");
+                    }
+                }
+                for (key, _) in order_by {
+                    let kt = s
+                        .dtype_of(key)
+                        .with_context(|| format!("window: unknown order key :{key}"))?;
+                    if !kt.is_groupable() {
+                        bail!("window order key :{key} must be Int64/Bool/String, got {kt}");
+                    }
+                }
+                // validate each aggregate and compute its output field
+                let mut outs: Vec<(String, DType, bool)> = Vec::new();
+                for a in aggs {
+                    let dt = a.input.dtype(&s)?;
+                    let nl = a.input.nullable(&s)?;
+                    if a.func.needs_numeric_input() && !dt.is_numeric() {
+                        bail!("window {}: non-numeric input column ({dt})", a.func);
+                    }
+                    match (&a.func, &a.frame) {
+                        (WindowFunc::Value, WindowFrame::Shift(_)) => {}
+                        (WindowFunc::Value, f) => {
+                            bail!("window value() requires a shift frame, got {f}")
+                        }
+                        (_, WindowFrame::Shift(_)) => bail!(
+                            "window shift frame only carries value() — use \
+                             col(..).shift(n)/lag(n)/lead(n)"
+                        ),
+                        (WindowFunc::Weighted(w), WindowFrame::Rolling { preceding, following }) => {
+                            if w.is_empty() || w.len() != preceding + following + 1 {
+                                bail!(
+                                    "window weighted({}) does not match rolling[{preceding},\
+                                     {following}] (need {} weights)",
+                                    w.len(),
+                                    preceding + following + 1
+                                );
+                            }
+                        }
+                        (WindowFunc::Weighted(_), f) => {
+                            bail!("window weighted() requires a rolling frame, got {f}")
+                        }
+                        _ => {}
+                    }
+                    if matches!(a.func, WindowFunc::Rank) && order_by.is_empty() {
+                        bail!("window rank() requires order_by keys");
+                    }
+                    if partition_by.iter().any(|k| k == &a.out)
+                        || order_by.iter().any(|(k, _)| k == &a.out)
+                    {
+                        bail!("window: output :{} collides with a window key", a.out);
+                    }
+                    if outs.iter().any(|(n, _, _)| n == &a.out) {
+                        bail!("window: duplicate output column :{}", a.out);
+                    }
+                    outs.push((
+                        a.out.clone(),
+                        a.func.output_dtype(dt),
+                        a.func.output_nullable(&a.frame, nl),
+                    ));
+                }
+                // input fields (minus replaced outputs), then the outputs
                 let mut fields: Vec<(String, DType)> = Vec::new();
                 let mut nullable = Vec::new();
                 for (i, (n, t)) in s.fields().iter().enumerate() {
-                    if n != out {
+                    if !outs.iter().any(|(o, _, _)| o == n) {
                         fields.push((n.clone(), *t));
                         nullable.push(s.nullable_at(i));
                     }
                 }
-                fields.push((out.clone(), DType::F64));
-                nullable.push(false);
+                for (n, t, nl) in outs {
+                    fields.push((n, t));
+                    nullable.push(nl);
+                }
                 Ok(Schema::new_nullable(fields, nullable))
             }
             Plan::Sort { input, keys } => {
@@ -413,8 +498,7 @@ impl Plan {
             | Plan::WithColumn { input, .. }
             | Plan::Rename { input, .. }
             | Plan::Aggregate { input, .. }
-            | Plan::Cumsum { input, .. }
-            | Plan::Stencil { input, .. }
+            | Plan::Window { input, .. }
             | Plan::Sort { input, .. }
             | Plan::Rebalance { input }
             | Plan::MatrixAssembly { input, .. }
@@ -441,9 +525,20 @@ impl Plan {
             // element-wise ops preserve their input's distribution
             Plan::Project { input, .. }
             | Plan::WithColumn { input, .. }
-            | Plan::Rename { input, .. }
-            | Plan::Cumsum { input, .. } => input.dist(),
-            Plan::Stencil { input, .. } => input.dist(),
+            | Plan::Rename { input, .. } => input.dist(),
+            // a global window is element-wise over the row order; a
+            // partitioned window shuffles, so its chunks are data dependent
+            Plan::Window {
+                input,
+                partition_by,
+                ..
+            } => {
+                if partition_by.is_empty() {
+                    input.dist()
+                } else {
+                    Dist::OneDVar.meet(input.dist())
+                }
+            }
             // sort range-repartitions → chunk sizes are data-dependent
             Plan::Sort { input, .. } => Dist::OneDVar.meet(input.dist()),
             Plan::Rebalance { .. } => Dist::OneD,
@@ -455,8 +550,17 @@ impl Plan {
 
     /// Does this node require its input in `1D_BLOCK` (paper §4.4: "some
     /// operations … require 1D_BLOCK distribution for their input arrays")?
+    /// Global windows with a halo-carrying frame do — their near-neighbor
+    /// exchange assumes block-sized chunks (with a gather fallback for tiny
+    /// blocks); scans (`exscan`) and partitioned windows (shuffle) don't.
     pub fn requires_block_input(&self) -> bool {
-        matches!(self, Plan::MatrixAssembly { .. } | Plan::Stencil { .. })
+        match self {
+            Plan::MatrixAssembly { .. } => true,
+            Plan::Window {
+                partition_by, aggs, ..
+            } => partition_by.is_empty() && aggs.iter().any(|a| a.needs_halo()),
+            _ => false,
+        }
     }
 
     /// Number of nodes (plan-size metric for pass tests).
@@ -512,18 +616,31 @@ impl Plan {
             Plan::Concat { inputs } => {
                 writeln!(f, "{pad}Concat({} inputs) [{dist}]", inputs.len())?
             }
-            Plan::Cumsum { column, out, .. } => {
-                writeln!(f, "{pad}Cumsum(:{column} -> :{out}) [{dist}]")?
-            }
-            Plan::Stencil {
-                column,
-                out,
-                weights,
+            Plan::Window {
+                partition_by,
+                order_by,
+                aggs,
                 ..
-            } => writeln!(
-                f,
-                "{pad}Stencil(:{column} -> :{out}, w={weights:?}) [{dist}]"
-            )?,
+            } => {
+                let parts: Vec<String> = aggs.iter().map(|a| a.to_string()).collect();
+                if partition_by.is_empty() {
+                    writeln!(f, "{pad}Window({}) [{dist}]", parts.join(", "))?
+                } else {
+                    let ks: Vec<String> =
+                        partition_by.iter().map(|k| format!(":{k}")).collect();
+                    let os: Vec<String> = order_by
+                        .iter()
+                        .map(|(k, o)| format!(":{k} {o}"))
+                        .collect();
+                    writeln!(
+                        f,
+                        "{pad}Window(partition_by=[{}], order_by=[{}]; {}) [{dist}]",
+                        ks.join(", "),
+                        os.join(", "),
+                        parts.join(", ")
+                    )?
+                }
+            }
             Plan::Sort { keys, .. } => {
                 let ks: Vec<String> = keys
                     .iter()
@@ -714,10 +831,11 @@ mod tests {
     }
 
     #[test]
-    fn nullable_inputs_propagate_and_gate_block_ops() {
+    fn nullable_inputs_propagate_and_window_accepts_them() {
         // a left join output feeding further ops: nullable columns propagate
-        // through WithColumn expressions, and block-distribution ops reject
-        // nullable inputs until fill_null
+        // through WithColumn expressions; windows accept nullable inputs and
+        // type the outputs through the null-aware rules (matrix assembly
+        // still rejects nullable features until fill_null)
         let join = Plan::Join {
             left: Box::new(src()),
             right: Box::new(right_src()),
@@ -737,20 +855,37 @@ mod tests {
             expr: col("tag").fill_null(0i64),
         };
         assert_eq!(filled.schema().unwrap().nullable_of("t3"), Some(false));
-        // cumsum over the nullable column is a schema-time error
-        let bad = Plan::Cumsum {
+        // cumulative sum over the nullable column: accepted, never NULL
+        let cs = Plan::Window {
             input: Box::new(join.clone()),
-            column: "tag".into(),
-            out: "cs".into(),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs: vec![WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("tag"),
+            )],
         };
-        assert!(bad.schema().is_err());
-        let bad = Plan::Stencil {
+        let s = cs.schema().unwrap();
+        assert_eq!(s.dtype_of("cs"), Some(DType::I64));
+        assert_eq!(s.nullable_of("cs"), Some(false));
+        // rolling mean over the nullable column: output stays nullable
+        let rm = Plan::Window {
             input: Box::new(join.clone()),
-            column: "y".into(),
-            out: "sma".into(),
-            weights: vec![1.0],
+            partition_by: vec![],
+            order_by: vec![],
+            aggs: vec![WindowAgg::new(
+                "m",
+                WindowFunc::Mean,
+                WindowFrame::Rolling {
+                    preceding: 1,
+                    following: 1,
+                },
+                col("tag"),
+            )],
         };
-        assert!(bad.schema().is_err());
+        assert_eq!(rm.schema().unwrap().nullable_of("m"), Some(true));
         let bad = Plan::MatrixAssembly {
             input: Box::new(join),
             columns: vec!["tag".into()],
@@ -834,22 +969,128 @@ mod tests {
         assert_eq!(s.dtype_of("x"), Some(DType::F64));
     }
 
+    fn window_of(aggs: Vec<WindowAgg>) -> Plan {
+        Plan::Window {
+            input: Box::new(src()),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs,
+        }
+    }
+
     #[test]
-    fn schema_stencil_weights_validated() {
-        let bad = Plan::Stencil {
-            input: Box::new(src()),
-            column: "x".into(),
-            out: "sma".into(),
-            weights: vec![0.5, 0.5],
-        };
+    fn schema_window_validates_frames_and_funcs() {
+        // weighted taps must match the rolling width
+        let bad = window_of(vec![WindowAgg::new(
+            "sma",
+            WindowFunc::Weighted(vec![0.5, 0.5]),
+            WindowFrame::Rolling {
+                preceding: 1,
+                following: 1,
+            },
+            col("x"),
+        )]);
         assert!(bad.schema().is_err());
-        let good = Plan::Stencil {
-            input: Box::new(src()),
-            column: "x".into(),
-            out: "sma".into(),
-            weights: vec![1.0 / 3.0; 3],
-        };
+        let good = window_of(vec![WindowAgg::new(
+            "sma",
+            WindowFunc::Weighted(vec![1.0 / 3.0; 3]),
+            WindowFrame::Rolling {
+                preceding: 1,
+                following: 1,
+            },
+            col("x"),
+        )]);
         assert_eq!(good.schema().unwrap().dtype_of("sma"), Some(DType::F64));
+        // value() needs a shift frame; shift frames carry only value()
+        assert!(window_of(vec![WindowAgg::new(
+            "v",
+            WindowFunc::Value,
+            WindowFrame::CumulativeToCurrent,
+            col("x"),
+        )])
+        .schema()
+        .is_err());
+        assert!(window_of(vec![WindowAgg::new(
+            "v",
+            WindowFunc::Sum,
+            WindowFrame::Shift(1),
+            col("x"),
+        )])
+        .schema()
+        .is_err());
+        // shift introduces edge nulls
+        let sh = window_of(vec![WindowAgg::new(
+            "prev",
+            WindowFunc::Value,
+            WindowFrame::Shift(1),
+            col("x"),
+        )]);
+        let s = sh.schema().unwrap();
+        assert_eq!(s.dtype_of("prev"), Some(DType::F64));
+        assert_eq!(s.nullable_of("prev"), Some(true));
+        // rank needs order_by; order_by needs partition_by; empty aggs bail
+        assert!(window_of(vec![WindowAgg::new(
+            "r",
+            WindowFunc::Rank,
+            WindowFrame::CumulativeToCurrent,
+            col("id"),
+        )])
+        .schema()
+        .is_err());
+        let no_part = Plan::Window {
+            input: Box::new(src()),
+            partition_by: vec![],
+            order_by: vec![("id".into(), SortOrder::Asc)],
+            aggs: vec![WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("x"),
+            )],
+        };
+        assert!(no_part.schema().is_err());
+        assert!(window_of(vec![]).schema().is_err());
+        // F64 partition keys rejected like every other relational key
+        let bad_key = Plan::Window {
+            input: Box::new(src()),
+            partition_by: vec!["x".into()],
+            order_by: vec![],
+            aggs: vec![WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("x"),
+            )],
+        };
+        assert!(bad_key.schema().is_err());
+    }
+
+    #[test]
+    fn schema_partitioned_window_with_rank() {
+        let w = Plan::Window {
+            input: Box::new(src()),
+            partition_by: vec!["id".into()],
+            order_by: vec![("id".into(), SortOrder::Asc)],
+            aggs: vec![
+                WindowAgg::new(
+                    "r",
+                    WindowFunc::Rank,
+                    WindowFrame::CumulativeToCurrent,
+                    lit(0i64),
+                ),
+                WindowAgg::new(
+                    "cs",
+                    WindowFunc::Sum,
+                    WindowFrame::CumulativeToCurrent,
+                    col("x"),
+                ),
+            ],
+        };
+        let s = w.schema().unwrap();
+        assert_eq!(s.names(), vec!["id", "x", "r", "cs"]);
+        assert_eq!(s.dtype_of("r"), Some(DType::I64));
+        assert_eq!(s.dtype_of("cs"), Some(DType::F64));
+        assert_eq!(w.dist(), crate::distribution::Dist::OneDVar);
     }
 
     #[test]
@@ -879,13 +1120,42 @@ mod tests {
 
     #[test]
     fn requires_block() {
-        let st = Plan::Stencil {
-            input: Box::new(src()),
-            column: "x".into(),
-            out: "o".into(),
-            weights: vec![1.0],
-        };
+        // halo-carrying global window (rolling) requires 1D_BLOCK input
+        let st = window_of(vec![WindowAgg::new(
+            "o",
+            WindowFunc::Mean,
+            WindowFrame::Rolling {
+                preceding: 1,
+                following: 1,
+            },
+            col("x"),
+        )]);
         assert!(st.requires_block_input());
+        assert_eq!(st.dist(), Dist::OneD); // element-wise over row order
+        // scans and position functions need no halo → no block requirement
+        let cs = window_of(vec![WindowAgg::new(
+            "o",
+            WindowFunc::Sum,
+            WindowFrame::CumulativeToCurrent,
+            col("x"),
+        )]);
+        assert!(!cs.requires_block_input());
+        // partitioned windows shuffle instead of exchanging halos
+        let pw = Plan::Window {
+            input: Box::new(src()),
+            partition_by: vec!["id".into()],
+            order_by: vec![],
+            aggs: vec![WindowAgg::new(
+                "o",
+                WindowFunc::Mean,
+                WindowFrame::Rolling {
+                    preceding: 2,
+                    following: 0,
+                },
+                col("x"),
+            )],
+        };
+        assert!(!pw.requires_block_input());
         assert!(!src().requires_block_input());
     }
 

@@ -48,8 +48,8 @@ pub mod types;
 /// Convenience re-exports for examples and tests.
 pub mod prelude {
     pub use crate::column::{ArithOp, CmpOp, Column, MathFn, NullableColumn, ValidityMask};
-    pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf};
+    pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf, WindowExpr};
     pub use crate::frame::*;
     pub use crate::table::{Schema, Table};
-    pub use crate::types::{DType, JoinType, SortOrder, Value};
+    pub use crate::types::{DType, JoinType, SortOrder, Value, WindowFrame, WindowFunc};
 }

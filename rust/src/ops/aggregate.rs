@@ -18,10 +18,10 @@
 //!   `[key row, states…]` records, merge after. A classic combiner; wins
 //!   when keys repeat within ranks (§Perf).
 
-use super::join::{global_any, MaskedCol};
+use super::join::MaskedCol;
 use super::keys::{
     cmp_key_rows, decode_key_row, encode_key_cells_nullable, group_packed, key_columns,
-    key_rows_nullable, skip_key_row, KeyRow, PackedKeys,
+    key_rows_nullable, skip_key_row, KeyNullability, KeyRow, PackedKeys,
 };
 use super::shuffle::shuffle_by_packed_nullable;
 use crate::column::{Column, NullableColumn, ValidityMask};
@@ -64,6 +64,7 @@ pub fn distributed_aggregate_keys(
     expr_cols: &[MaskedCol],
     specs: &[AggSpec],
     strategy: AggStrategy,
+    nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     assert_eq!(expr_cols.len(), specs.len());
     if key_cols.is_empty() {
@@ -72,9 +73,10 @@ pub fn distributed_aggregate_keys(
     let p = comm.nranks();
     let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
     let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
-    // flagged-vs-plain key layout must be agreed globally: the owner rank of
-    // a key tuple is a function of its packed bytes
-    let with_flags = global_any(comm, km.iter().any(|m| m.is_some()));
+    // flagged-vs-plain key layout must be agreed globally (the owner rank of
+    // a key tuple is a function of its packed bytes); statically typed plans
+    // resolve the choice from the schema with no collective
+    let with_flags = nullability.with_flags(comm, km.iter().any(|m| m.is_some()));
     let packed = PackedKeys::pack_masked(&kc, &km, with_flags)?;
     match strategy {
         AggStrategy::RawShuffle => {
@@ -275,8 +277,15 @@ pub fn distributed_aggregate(
 ) -> Result<(Vec<i64>, Vec<Column>)> {
     let kc = Column::I64(keys.to_vec());
     let erefs: Vec<MaskedCol> = expr_cols.iter().map(|c| (c, None)).collect();
-    let (kcols, outs) =
-        distributed_aggregate_keys(comm, &[(&kc, None)], &erefs, specs, strategy)?;
+    // a caller-built plain i64 key is non-nullable by construction
+    let (kcols, outs) = distributed_aggregate_keys(
+        comm,
+        &[(&kc, None)],
+        &erefs,
+        specs,
+        strategy,
+        KeyNullability::Static(false),
+    )?;
     Ok((
         kcols[0].values.as_i64().to_vec(),
         outs.into_iter().map(|c| c.values).collect(),
@@ -543,6 +552,7 @@ mod tests {
                     &[(&vals, None)],
                     &specs()[..2],
                     strategy,
+                    KeyNullability::Runtime,
                 )
                 .unwrap();
                 let mut rows = Vec::new();
@@ -590,6 +600,7 @@ mod tests {
                     &[(&vals, None)],
                     &specs()[..1],
                     strategy,
+                    KeyNullability::Static(false),
                 )
                 .unwrap();
                 (

@@ -26,7 +26,7 @@
 //! both as the historical reference implementation and as an oracle in the
 //! property tests.
 
-use super::keys::{KeyRow, PackedKeys};
+use super::keys::{KeyNullability, KeyRow, PackedKeys};
 use super::shuffle::{shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable};
 use super::skew::{detect_heavy_hitters, HeavySet};
 use crate::column::{
@@ -41,15 +41,6 @@ use anyhow::{bail, Result};
 /// One column with its optional validity mask — the argument shape of the
 /// nullable relational operators.
 pub type MaskedCol<'a> = (&'a Column, Option<&'a ValidityMask>);
-
-/// Does any rank contribute `local` = true? Layout decisions that feed the
-/// hash-routing (flagged vs. unflagged packed keys) must be *globally*
-/// consistent, or equal keys would land on different owner ranks.
-pub(crate) fn global_any(comm: &Comm, local: bool) -> bool {
-    comm.allgather_bytes(vec![local as u8])
-        .iter()
-        .any(|b| b.first().copied().unwrap_or(0) != 0)
-}
 
 /// Local sort-merge inner join over single i64 keys (the seed's kernel).
 /// Returns `(left_indices, right_indices)` — one entry per output row (the
@@ -232,7 +223,16 @@ pub fn distributed_join_on(
     rpay: &[MaskedCol],
     how: JoinType,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
-    distributed_join_on_strategy(comm, lkeys, lpay, rkeys, rpay, how, JoinStrategy::Hash)
+    distributed_join_on_strategy(
+        comm,
+        lkeys,
+        lpay,
+        rkeys,
+        rpay,
+        how,
+        JoinStrategy::Hash,
+        KeyNullability::Runtime,
+    )
 }
 
 /// [`distributed_join_on`] with an explicit [`JoinStrategy`].
@@ -245,6 +245,7 @@ pub fn distributed_join_on(
 /// partition whose results are unioned. Output multisets are identical for
 /// both strategies; only the routing (and therefore the per-rank row
 /// distribution of the `1D_VAR` output) differs.
+#[allow(clippy::too_many_arguments)]
 pub fn distributed_join_on_strategy(
     comm: &Comm,
     lkeys: &[MaskedCol],
@@ -253,15 +254,17 @@ pub fn distributed_join_on_strategy(
     rpay: &[MaskedCol],
     how: JoinType,
     strategy: JoinStrategy,
+    nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
     if lkeys.len() != rkeys.len() || lkeys.is_empty() {
         bail!("join: key column lists must be non-empty and equal length");
     }
     let nk = lkeys.len();
     // every rank (and both sides) must agree on the flagged-vs-plain key
-    // layout, or the hash routing would split equal keys across ranks
+    // layout, or the hash routing would split equal keys across ranks;
+    // statically typed plans resolve this from the schema with no collective
     let local_flag = lkeys.iter().chain(rkeys).any(|(_, m)| m.is_some());
-    let with_flags = global_any(comm, local_flag);
+    let with_flags = nullability.with_flags(comm, local_flag);
 
     fn split<'a>(
         side: &[MaskedCol<'a>],
@@ -1019,6 +1022,7 @@ mod tests {
                 &[(&rpayc, None)],
                 how,
                 strategy,
+                KeyNullability::Runtime,
             )
             .unwrap();
             let mut rows = Vec::new();

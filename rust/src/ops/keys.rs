@@ -23,11 +23,57 @@
 //! cell has exact equality.
 
 use crate::column::{Column, NullableColumn, ValidityMask};
+use crate::comm::Comm;
 use crate::fxhash::{self, FxHashMap, FxHasher};
 use crate::types::{DType, SortOrder, Value};
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
 use std::hash::{BuildHasher, BuildHasherDefault};
+
+/// Does any rank contribute `local` = true? Layout decisions that feed the
+/// hash-routing (flagged vs. unflagged packed keys) must be *globally*
+/// consistent, or equal keys would land on different owner ranks.
+pub(crate) fn global_any(comm: &Comm, local: bool) -> bool {
+    comm.allgather_bytes(vec![local as u8])
+        .iter()
+        .any(|b| b.first().copied().unwrap_or(0) != 0)
+}
+
+/// How an operator learns whether its key columns can carry nulls — the
+/// input to the flagged-vs-plain packed-layout choice, which must be
+/// identical on every rank (owner hashing is a function of the packed
+/// bytes).
+///
+/// The schema's *static* nullable flags are replicated knowledge: every
+/// rank compiled the same plan, so when the caller knows them the layout
+/// can be chosen with **no collective at all**. Only schema-less callers
+/// (ops-level tests, ad-hoc kernels) need the runtime allgather.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyNullability {
+    /// The plan schema says whether any key column is nullable — a global
+    /// fact; `Static(false)` skips the allgather *and* keeps the plain
+    /// layout (canonical form guarantees no runtime mask exists then).
+    Static(bool),
+    /// Unknown statically: agree at run time with one allgather.
+    Runtime,
+}
+
+impl KeyNullability {
+    /// Resolve the flagged-layout choice. `local_has_mask` is whether this
+    /// rank's key columns actually carry a validity mask.
+    pub fn with_flags(self, comm: &Comm, local_has_mask: bool) -> bool {
+        match self {
+            KeyNullability::Static(nullable) => {
+                debug_assert!(
+                    nullable || !local_has_mask,
+                    "validity mask present on statically non-nullable key columns"
+                );
+                nullable
+            }
+            KeyNullability::Runtime => global_any(comm, local_has_mask),
+        }
+    }
+}
 
 /// One cell of a composite key. Variants cover exactly the groupable dtypes
 /// plus the null cell. `Null` is declared *first* so the derived `Ord`

@@ -18,6 +18,11 @@
 //!   with optional local pre-aggregation (decomposed partial states).
 //! * [`scan`] — cumulative sum via local partials + `exscan`.
 //! * [`stencil`] — SMA/WMA windows via near-neighbor halo exchange.
+//! * [`window`] — the generalized window-function runtime
+//!   ([`crate::ir::Plan::Window`]): rolling/shift frames via asymmetric
+//!   halo exchange (reusing the stencil internals), cumulative frames via
+//!   `exscan`, plus the per-partition grouped kernels the partitioned
+//!   shuffle path scans with.
 //! * [`rebalance`] — `1D_VAR` → `1D_BLOCK` redistribution preserving global
 //!   row order.
 //! * [`sort`] — sample-sort global ordering (result canonicalization,
@@ -32,6 +37,7 @@ pub mod shuffle;
 pub mod skew;
 pub mod sort;
 pub mod stencil;
+pub mod window;
 
 pub use aggregate::{
     agg_output_nullable, distributed_aggregate, distributed_aggregate_keys,
@@ -42,7 +48,7 @@ pub use join::{
     local_join_pairs, local_sort_merge_join, packed_join_pairs,
     packed_join_pairs_partial, MaskedCol,
 };
-pub use keys::{group_packed, KeyGroups, KeyRow, KeyVal, PackedKeys, SortKeys};
+pub use keys::{group_packed, KeyGroups, KeyNullability, KeyRow, KeyVal, PackedKeys, SortKeys};
 pub use rebalance::{rebalance_block, rebalance_block_nullable};
 pub use scan::{cumsum_f64, cumsum_i64};
 pub use shuffle::{
@@ -52,3 +58,7 @@ pub use shuffle::{
 pub use skew::{detect_heavy_hitters, HeavySet};
 pub use sort::{distributed_sort_by_key, distributed_sort_keys};
 pub use stencil::{stencil_1d, stencil_serial};
+pub use window::{
+    partition_runs, rank_from_breaks, row_numbers, shift_window, window_1d, window_group,
+    window_over_groups,
+};

@@ -18,8 +18,10 @@
 //! Because the flagged row width must match on every rank (splitters are
 //! raw rows), the flag choice is agreed globally up front.
 
-use super::join::{global_any, MaskedCol};
-use super::keys::{self, cmp_key_rows, decode_key_row, encode_key_row, KeyRow, SortKeys};
+use super::join::MaskedCol;
+use super::keys::{
+    self, cmp_key_rows, decode_key_row, encode_key_row, KeyNullability, KeyRow, SortKeys,
+};
 use crate::column::{
     decode_nullable_column, encode_nullable_column, extend_opt_mask, Column, NullableColumn,
     ValidityMask,
@@ -39,15 +41,17 @@ pub fn distributed_sort_keys(
     key_cols: &[MaskedCol],
     orders: &[SortOrder],
     payload: &[MaskedCol],
+    nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     if key_cols.is_empty() {
         bail!("sort: key column list must be non-empty");
     }
     let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
     let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
-    // flagged-vs-plain packed width must be identical on every rank: the
-    // splitters travel as raw rows of that width
-    let with_flags = global_any(comm, km.iter().any(|m| m.is_some()));
+    // flagged-vs-plain packed width must be identical on every rank (the
+    // splitters travel as raw rows of that width); statically typed plans
+    // resolve the choice from the schema with no collective
+    let with_flags = nullability.with_flags(comm, km.iter().any(|m| m.is_some()));
     if let Some(sk) = SortKeys::pack_nullable(&kc, &km, orders, with_flags)? {
         return sort_packed(comm, sk, key_cols, orders, payload, with_flags);
     }
@@ -302,8 +306,14 @@ pub fn distributed_sort_by_key(
 ) -> Result<(Vec<i64>, Vec<Column>)> {
     let kc = Column::I64(keys.to_vec());
     let crefs: Vec<MaskedCol> = cols.iter().map(|c| (c, None)).collect();
-    let (kcols, pay) =
-        distributed_sort_keys(comm, &[(&kc, None)], &[SortOrder::Asc], &crefs)?;
+    // a caller-built plain i64 key is non-nullable by construction
+    let (kcols, pay) = distributed_sort_keys(
+        comm,
+        &[(&kc, None)],
+        &[SortOrder::Asc],
+        &crefs,
+        KeyNullability::Static(false),
+    )?;
     Ok((
         kcols[0].values.as_i64().to_vec(),
         pay.into_iter().map(|c| c.values).collect(),
@@ -355,6 +365,7 @@ mod tests {
                     &[(&ka, None), (&kb, None)],
                     &[SortOrder::Desc, SortOrder::Asc],
                     &[],
+                    KeyNullability::Runtime,
                 )
                 .unwrap();
                 (
@@ -378,8 +389,14 @@ mod tests {
         let out = run_spmd(2, |c| {
             let (s, l) = block_range(words.len(), 2, c.rank());
             let kc = Column::Str(words[s..s + l].iter().map(|w| w.to_string()).collect());
-            let (kcols, _) =
-                distributed_sort_keys(&c, &[(&kc, None)], &[SortOrder::Asc], &[]).unwrap();
+            let (kcols, _) = distributed_sort_keys(
+                &c,
+                &[(&kc, None)],
+                &[SortOrder::Asc],
+                &[],
+                KeyNullability::Runtime,
+            )
+            .unwrap();
             kcols[0].values.as_str_col().to_vec()
         });
         let got: Vec<String> = out.into_iter().flatten().collect();
@@ -402,6 +419,7 @@ mod tests {
                 &[(&kf, None), (&ki, None)],
                 &[SortOrder::Desc, SortOrder::Asc],
                 &[],
+                KeyNullability::Runtime,
             )
             .unwrap();
             (
@@ -457,6 +475,7 @@ mod tests {
                     &[(&kc, mask.as_ref())],
                     &[SortOrder::Asc],
                     &[(&pay, None)],
+                    KeyNullability::Runtime,
                 )
                 .unwrap();
                 let valid: Vec<bool> =
@@ -496,6 +515,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn static_nullability_skips_the_layout_allgather() {
+        // a statically non-nullable key set resolves the packed layout from
+        // the schema: same order, one collective fewer than the runtime gate
+        let data: Vec<i64> = (0..30).map(|i| (i * 17) % 13).collect();
+        let run = |nullability: KeyNullability| {
+            crate::comm::run_spmd_with_stats(3, |c| {
+                let (s, l) = block_range(data.len(), 3, c.rank());
+                let kc = Column::I64(data[s..s + l].to_vec());
+                let (kcols, _) = distributed_sort_keys(
+                    &c,
+                    &[(&kc, None)],
+                    &[SortOrder::Asc],
+                    &[],
+                    nullability,
+                )
+                .unwrap();
+                kcols[0].values.as_i64().to_vec()
+            })
+        };
+        let (a, stats_static) = run(KeyNullability::Static(false));
+        let (b, stats_runtime) = run(KeyNullability::Runtime);
+        assert_eq!(a, b);
+        assert!(
+            stats_static.snapshot().3 < stats_runtime.snapshot().3,
+            "static gate must skip the layout allgather"
+        );
+        // Static(true) forces the flagged layout with no collective either,
+        // and stays order-identical for fully valid keys
+        let (c_, _) = run(KeyNullability::Static(true));
+        assert_eq!(a, c_);
     }
 
     #[test]

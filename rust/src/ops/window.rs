@@ -1,0 +1,1106 @@
+//! Generalized window kernels — the runtime of [`crate::ir::Plan::Window`]
+//! (paper §4.5, generalizing the `cumsum`/stencil codegen): rolling frames
+//! lower to a near-neighbor *halo exchange* (asymmetric: `preceding` rows
+//! from the left neighbor, `following` rows from the right), cumulative
+//! frames lower to `MPI_Exscan` scans, and shift frames are a one-sided
+//! halo whose out-of-range edge rows become NULL via the validity mask.
+//! This is precisely the communication class map-reduce engines cannot
+//! express (Fig. 8b) — the sparklike baseline gathers everything onto one
+//! executor instead.
+//!
+//! Null model: window aggregates skip null input lanes (like group-by
+//! aggregates); an all-null frame yields 0 for `sum`/`count` and NULL for
+//! `mean`/`min`/`max`/`weighted`. The weighted function renormalizes by the
+//! weight mass of the lanes actually used, which makes edge truncation and
+//! null skipping the *same* rule — and keeps the non-null path bit-for-bit
+//! identical to the historical stencil ([`crate::ops::stencil`], whose
+//! serial/halo internals it reuses).
+//!
+//! Partitioned windows never reach this module's communication paths: the
+//! exec layer colocates each partition with a `PackedKeys` hash shuffle and
+//! calls [`window_over_groups`] on the locally sorted runs, so no halo ever
+//! crosses a partition boundary.
+
+use super::keys::{cmp_key_rows, KeyRow};
+use super::scan::{cumsum_f64, cumsum_i64};
+use super::stencil::stencil_1d;
+use crate::column::{
+    decode_nullable_column, encode_nullable_column, extend_opt_mask, normalize_mask, Column,
+    NullableColumn, ValidityMask,
+};
+use crate::comm::{Comm, ReduceOp};
+use crate::types::{SortOrder, WindowFrame, WindowFunc};
+use anyhow::{bail, Context, Result};
+
+#[inline]
+fn is_valid(mask: Option<&ValidityMask>, i: usize) -> bool {
+    mask.map_or(true, |m| m.get(i))
+}
+
+/// 1-based row numbers `start+1 ..= start+n` as an Int64 column.
+pub fn row_numbers(n: usize, start: i64) -> Column {
+    Column::I64((0..n as i64).map(|i| start + i + 1).collect())
+}
+
+/// Competition ranks (1, 1, 3, …) from order-key change flags: `breaks[i]`
+/// is true where row `i`'s order-key tuple differs from row `i-1`'s (the
+/// first row of a run always counts as a break).
+pub fn rank_from_breaks(breaks: &[bool]) -> Column {
+    let mut out: Vec<i64> = Vec::with_capacity(breaks.len());
+    for (i, &b) in breaks.iter().enumerate() {
+        if i == 0 || b {
+            out.push(i as i64 + 1);
+        } else {
+            let prev = out[i - 1];
+            out.push(prev);
+        }
+    }
+    Column::I64(out)
+}
+
+/// `out[i] = col[i - offset]` (positive = lag, negative = lead); rows whose
+/// source falls outside the array — or is itself null — come back NULL.
+/// Works for every dtype (shift is pure index routing).
+pub fn shift_window(col: &Column, mask: Option<&ValidityMask>, offset: i64) -> NullableColumn {
+    let n = col.len();
+    let idx: Vec<Option<usize>> = (0..n)
+        .map(|i| {
+            let j = i as i64 - offset;
+            if j >= 0 && (j as usize) < n {
+                Some(j as usize)
+            } else {
+                None
+            }
+        })
+        .collect();
+    col.take_opt_masked(mask, &idx)
+}
+
+/// Rolling aggregate over `[i-preceding, i+following]` with truncated edges
+/// and null-skipping (see the module docs for the all-null rules).
+pub fn rolling_window(
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    preceding: usize,
+    following: usize,
+    func: &WindowFunc,
+) -> Result<NullableColumn> {
+    let n = col.len();
+    let lo = |i: usize| i.saturating_sub(preceding);
+    let hi = |i: usize| (i + following + 1).min(n);
+    match func {
+        WindowFunc::Count => {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                out.push((lo(i)..hi(i)).filter(|&j| is_valid(mask, j)).count() as i64);
+            }
+            Ok(NullableColumn::from_column(Column::I64(out)))
+        }
+        WindowFunc::Sum => match col {
+            Column::I64(xs) => {
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut acc = 0i64;
+                    for j in lo(i)..hi(i) {
+                        if is_valid(mask, j) {
+                            acc += xs[j];
+                        }
+                    }
+                    out.push(acc);
+                }
+                Ok(NullableColumn::from_column(Column::I64(out)))
+            }
+            Column::F64(xs) => {
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for j in lo(i)..hi(i) {
+                        if is_valid(mask, j) {
+                            acc += xs[j];
+                        }
+                    }
+                    out.push(acc);
+                }
+                Ok(NullableColumn::from_column(Column::F64(out)))
+            }
+            other => bail!("window sum over {} column", other.dtype()),
+        },
+        WindowFunc::Mean => {
+            let xs = col.to_f64_vec();
+            let mut out = Vec::with_capacity(n);
+            let mut m = ValidityMask::new_valid(n);
+            for i in 0..n {
+                let mut acc = 0.0;
+                let mut cnt = 0usize;
+                for j in lo(i)..hi(i) {
+                    if is_valid(mask, j) {
+                        acc += xs[j];
+                        cnt += 1;
+                    }
+                }
+                if cnt == 0 {
+                    out.push(0.0);
+                    m.set(i, false);
+                } else {
+                    out.push(acc / cnt as f64);
+                }
+            }
+            Ok(NullableColumn::new(
+                Column::F64(out),
+                normalize_mask(Some(m)),
+            ))
+        }
+        WindowFunc::Min | WindowFunc::Max => {
+            let want_min = matches!(func, WindowFunc::Min);
+            match col {
+                Column::I64(xs) => {
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for i in 0..n {
+                        let mut best: Option<i64> = None;
+                        for j in lo(i)..hi(i) {
+                            if is_valid(mask, j) {
+                                best = Some(match best {
+                                    None => xs[j],
+                                    Some(b) if want_min => b.min(xs[j]),
+                                    Some(b) => b.max(xs[j]),
+                                });
+                            }
+                        }
+                        match best {
+                            Some(b) => out.push(b),
+                            None => {
+                                out.push(0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::I64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                Column::F64(xs) => {
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for i in 0..n {
+                        let mut best: Option<f64> = None;
+                        for j in lo(i)..hi(i) {
+                            if is_valid(mask, j) {
+                                best = Some(match best {
+                                    None => xs[j],
+                                    Some(b) if want_min => b.min(xs[j]),
+                                    Some(b) => b.max(xs[j]),
+                                });
+                            }
+                        }
+                        match best {
+                            Some(b) => out.push(b),
+                            None => {
+                                out.push(0.0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::F64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                other => bail!("window min/max over {} column", other.dtype()),
+            }
+        }
+        WindowFunc::Weighted(w) => {
+            // truncated + renormalized — identical arithmetic (same term
+            // order) to `stencil_serial` on a fully valid column
+            let xs = col.to_f64_vec();
+            let wtotal: f64 = w.iter().sum();
+            let mut out = Vec::with_capacity(n);
+            let mut m = ValidityMask::new_valid(n);
+            for i in 0..n {
+                let mut acc = 0.0;
+                let mut used = 0.0;
+                let mut seen = false;
+                for (j, &wj) in w.iter().enumerate() {
+                    let idx = i as isize + j as isize - preceding as isize;
+                    if idx >= 0 && (idx as usize) < n && is_valid(mask, idx as usize) {
+                        acc += wj * xs[idx as usize];
+                        used += wj;
+                        seen = true;
+                    }
+                }
+                if !seen {
+                    out.push(0.0);
+                    m.set(i, false);
+                } else {
+                    out.push(if used != 0.0 { acc * wtotal / used } else { 0.0 });
+                }
+            }
+            Ok(NullableColumn::new(
+                Column::F64(out),
+                normalize_mask(Some(m)),
+            ))
+        }
+        other => bail!("rolling frame cannot carry {other}"),
+    }
+}
+
+/// Serial cumulative (`ROWS UNBOUNDED PRECEDING .. CURRENT ROW`) scan with
+/// null-skipping: every row sees the reduction over the *valid* rows up to
+/// and including itself.
+pub fn cumulative_window(
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    func: &WindowFunc,
+) -> Result<NullableColumn> {
+    let n = col.len();
+    match func {
+        WindowFunc::Sum => match col {
+            Column::I64(xs) => {
+                let mut run = 0i64;
+                let mut out = Vec::with_capacity(n);
+                for (i, &x) in xs.iter().enumerate() {
+                    if is_valid(mask, i) {
+                        run += x;
+                    }
+                    out.push(run);
+                }
+                Ok(NullableColumn::from_column(Column::I64(out)))
+            }
+            Column::F64(xs) => {
+                let mut run = 0.0;
+                let mut out = Vec::with_capacity(n);
+                for (i, &x) in xs.iter().enumerate() {
+                    if is_valid(mask, i) {
+                        run += x;
+                    }
+                    out.push(run);
+                }
+                Ok(NullableColumn::from_column(Column::F64(out)))
+            }
+            other => bail!("window sum over {} column", other.dtype()),
+        },
+        WindowFunc::Count => {
+            let mut run = 0i64;
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                if is_valid(mask, i) {
+                    run += 1;
+                }
+                out.push(run);
+            }
+            Ok(NullableColumn::from_column(Column::I64(out)))
+        }
+        WindowFunc::Mean => {
+            let xs = col.to_f64_vec();
+            let mut sum = 0.0;
+            let mut cnt = 0i64;
+            let mut out = Vec::with_capacity(n);
+            let mut m = ValidityMask::new_valid(n);
+            for (i, &x) in xs.iter().enumerate() {
+                if is_valid(mask, i) {
+                    sum += x;
+                    cnt += 1;
+                }
+                if cnt == 0 {
+                    out.push(0.0);
+                    m.set(i, false);
+                } else {
+                    out.push(sum / cnt as f64);
+                }
+            }
+            Ok(NullableColumn::new(
+                Column::F64(out),
+                normalize_mask(Some(m)),
+            ))
+        }
+        WindowFunc::Min | WindowFunc::Max => {
+            let want_min = matches!(func, WindowFunc::Min);
+            match col {
+                Column::I64(xs) => {
+                    let mut best: Option<i64> = None;
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for (i, &x) in xs.iter().enumerate() {
+                        if is_valid(mask, i) {
+                            best = Some(match best {
+                                None => x,
+                                Some(b) if want_min => b.min(x),
+                                Some(b) => b.max(x),
+                            });
+                        }
+                        match best {
+                            Some(b) => out.push(b),
+                            None => {
+                                out.push(0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::I64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                Column::F64(xs) => {
+                    let mut best: Option<f64> = None;
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for (i, &x) in xs.iter().enumerate() {
+                        if is_valid(mask, i) {
+                            best = Some(match best {
+                                None => x,
+                                Some(b) if want_min => b.min(x),
+                                Some(b) => b.max(x),
+                            });
+                        }
+                        match best {
+                            Some(b) => out.push(b),
+                            None => {
+                                out.push(0.0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::F64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                other => bail!("window min/max over {} column", other.dtype()),
+            }
+        }
+        other => bail!("cumulative frame cannot carry {other}"),
+    }
+}
+
+/// One partition's (or the whole serial array's) window aggregate.
+/// `order_breaks` carries the order-key change flags Rank needs (aligned to
+/// the rows of `col`); other functions ignore it.
+pub fn window_group(
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    frame: &WindowFrame,
+    func: &WindowFunc,
+    order_breaks: Option<&[bool]>,
+) -> Result<NullableColumn> {
+    match func {
+        WindowFunc::RowNumber => Ok(NullableColumn::from_column(row_numbers(col.len(), 0))),
+        WindowFunc::Rank => {
+            let breaks =
+                order_breaks.context("window rank(): order-key change flags missing")?;
+            Ok(NullableColumn::from_column(rank_from_breaks(breaks)))
+        }
+        WindowFunc::Value => match frame {
+            WindowFrame::Shift(k) => Ok(shift_window(col, mask, *k)),
+            other => bail!("window value() requires a shift frame, got {other}"),
+        },
+        _ => match frame {
+            WindowFrame::Rolling {
+                preceding,
+                following,
+            } => rolling_window(col, mask, *preceding, *following, func),
+            WindowFrame::CumulativeToCurrent => cumulative_window(col, mask, func),
+            WindowFrame::Shift(_) => {
+                bail!("window shift frame only carries value()")
+            }
+        },
+    }
+}
+
+/// Stable argsort + partition-run boundaries over materialized key tuples
+/// (`np` leading cells = partition keys, the rest = order keys): returns
+/// `(sort index, group start positions, order-key change flags)` — the
+/// shared sorting step of the exec partitioned lowering and the serial
+/// baseline, so the break rule cannot diverge between engines.
+pub fn partition_runs(
+    krows: &[KeyRow],
+    np: usize,
+    orders: &[SortOrder],
+) -> (Vec<usize>, Vec<usize>, Vec<bool>) {
+    let mut idx: Vec<usize> = (0..krows.len()).collect();
+    idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
+    let mut group_starts: Vec<usize> = Vec::new();
+    let mut breaks: Vec<bool> = Vec::with_capacity(idx.len());
+    for (pos, &ri) in idx.iter().enumerate() {
+        let new_group = pos == 0 || krows[idx[pos - 1]][..np] != krows[ri][..np];
+        if new_group {
+            group_starts.push(pos);
+        }
+        breaks.push(new_group || krows[idx[pos - 1]][np..] != krows[ri][np..]);
+    }
+    (idx, group_starts, breaks)
+}
+
+/// Apply one window aggregate independently over sorted partition runs:
+/// `group_starts` are the ascending start indices of each run (first entry
+/// 0 when rows exist); `order_breaks` spans all rows. The per-group results
+/// are concatenated back in row order — the partitioned-exec and serial-
+/// baseline shared kernel.
+pub fn window_over_groups(
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    frame: &WindowFrame,
+    func: &WindowFunc,
+    group_starts: &[usize],
+    order_breaks: Option<&[bool]>,
+) -> Result<NullableColumn> {
+    let n = col.len();
+    let mut out = Column::new_empty(func.output_dtype(col.dtype()));
+    let mut om: Option<ValidityMask> = None;
+    for (gi, &start) in group_starts.iter().enumerate() {
+        let end = group_starts.get(gi + 1).copied().unwrap_or(n);
+        let sub = col.slice(start, end - start);
+        let subm = mask.map(|m| m.slice(start, end - start));
+        let breaks: Option<Vec<bool>> = order_breaks.map(|b| b[start..end].to_vec());
+        let res = window_group(&sub, subm.as_ref(), frame, func, breaks.as_deref())?;
+        let before = out.len();
+        out.extend(&res.values);
+        extend_opt_mask(&mut om, before, res.validity.as_ref(), res.values.len());
+    }
+    Ok(NullableColumn::new(out, normalize_mask(om)))
+}
+
+/// Distributed *global* window over this rank's contiguous block of a
+/// globally ordered column. Rolling/shift frames exchange an asymmetric
+/// halo with near neighbors (gather fallback when a block is smaller than
+/// the frame reach); cumulative frames run local scans + `exscan`.
+/// `statically_nullable` is the plan-schema nullability of the input
+/// expression — a *global* fact every rank shares, used to pick code paths
+/// without an extra collective.
+pub fn window_1d(
+    comm: &Comm,
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    frame: &WindowFrame,
+    func: &WindowFunc,
+    statically_nullable: bool,
+) -> Result<NullableColumn> {
+    if let WindowFunc::RowNumber = func {
+        let start = comm.exscan_i64(col.len() as i64, ReduceOp::Sum);
+        return Ok(NullableColumn::from_column(row_numbers(col.len(), start)));
+    }
+    if let WindowFunc::Rank = func {
+        bail!("global rank() requires partition_by (rejected at plan typing)");
+    }
+    if comm.nranks() == 1 {
+        return window_group(col, mask, frame, func, None);
+    }
+    match frame {
+        WindowFrame::CumulativeToCurrent => cumulative_1d(comm, col, mask, func),
+        WindowFrame::Rolling {
+            preceding,
+            following,
+        } => {
+            // historical stencil fast path: symmetric weighted window over a
+            // statically non-nullable column rides the raw-f64 halo kernel,
+            // bit-for-bit identical to the pre-Window `Plan::Stencil` output
+            if let WindowFunc::Weighted(w) = func {
+                if !statically_nullable && preceding == following {
+                    return Ok(NullableColumn::from_column(Column::F64(stencil_1d(
+                        comm,
+                        &col.to_f64_vec(),
+                        w,
+                    ))));
+                }
+            }
+            halo_window(comm, col, mask, *preceding, *following, frame, func)
+        }
+        WindowFrame::Shift(k) => {
+            let (p, f) = frame.halo();
+            if *k == 0 {
+                return Ok(NullableColumn::new(
+                    col.clone(),
+                    mask.cloned(),
+                ));
+            }
+            halo_window(comm, col, mask, p, f, frame, func)
+        }
+    }
+}
+
+/// Asymmetric halo exchange + padded serial kernel. The halo is exactly
+/// `preceding` rows wide on every interior left boundary and `following`
+/// rows on every interior right boundary, so frame truncation inside the
+/// padded array coincides with *global* array edges — the stencil argument,
+/// generalized.
+fn halo_window(
+    comm: &Comm,
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    preceding: usize,
+    following: usize,
+    frame: &WindowFrame,
+    func: &WindowFunc,
+) -> Result<NullableColumn> {
+    let n = col.len();
+    // blocks smaller than the frame reach cannot satisfy a 1-hop halo
+    let min_len = comm.allreduce_i64(n as i64, ReduceOp::Min);
+    if (min_len as usize) < preceding.max(following) {
+        return gather_fallback(comm, col, mask, frame, func);
+    }
+    let encode_slice = |start: usize, len: usize| {
+        let mut b = Vec::new();
+        encode_nullable_column(
+            &col.slice(start, len),
+            mask.map(|m| m.slice(start, len)).as_ref(),
+            &mut b,
+        );
+        b
+    };
+    // prev rank needs my first `following` rows; next rank my last `preceding`
+    let send_prev = following.min(n);
+    let send_next = preceding.min(n);
+    let to_prev = encode_slice(0, send_prev);
+    let to_next = encode_slice(n - send_next, send_next);
+    let (from_prev, from_next) = comm.halo_exchange(to_prev, to_next);
+    let decode = |b: Option<Vec<u8>>| -> Result<(Column, Option<ValidityMask>)> {
+        match b {
+            Some(buf) => {
+                let mut pos = 0;
+                decode_nullable_column(&buf, &mut pos)
+            }
+            None => Ok((Column::new_empty(col.dtype()), None)),
+        }
+    };
+    let (left_col, left_mask) = decode(from_prev)?;
+    let (right_col, right_mask) = decode(from_next)?;
+    let left = left_col.len();
+
+    // padded := [left halo | local | right halo]
+    let mut padded = left_col;
+    let mut padded_mask = left_mask;
+    let before = padded.len();
+    padded.extend(col);
+    extend_opt_mask(&mut padded_mask, before, mask, n);
+    let before = padded.len();
+    padded.extend(&right_col);
+    extend_opt_mask(&mut padded_mask, before, right_mask.as_ref(), right_col.len());
+
+    let full = window_group(&padded, padded_mask.as_ref(), frame, func, None)?;
+    let vals = full.values.slice(left, n);
+    let m = full.validity.map(|m| m.slice(left, n));
+    Ok(NullableColumn::new(vals, normalize_mask(m)))
+}
+
+/// Correctness-first fallback for tiny blocks: gather the whole (nullable)
+/// column on the root, run the serial kernel, broadcast, slice.
+fn gather_fallback(
+    comm: &Comm,
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    frame: &WindowFrame,
+    func: &WindowFunc,
+) -> Result<NullableColumn> {
+    let mut b = Vec::new();
+    encode_nullable_column(col, mask, &mut b);
+    let gathered = comm.gather_bytes(0, b);
+    let mut out_buf = Vec::new();
+    if comm.is_root() {
+        let mut full = Column::new_empty(col.dtype());
+        let mut full_mask: Option<ValidityMask> = None;
+        for buf in &gathered {
+            let mut pos = 0;
+            let (c, m) = decode_nullable_column(buf, &mut pos)?;
+            let before = full.len();
+            full.extend(&c);
+            extend_opt_mask(&mut full_mask, before, m.as_ref(), c.len());
+        }
+        let res = window_group(&full, full_mask.as_ref(), frame, func, None)?;
+        encode_nullable_column(&res.values, res.validity.as_ref(), &mut out_buf);
+    }
+    let out_buf = comm.bcast_bytes(0, out_buf);
+    let mut pos = 0;
+    let (full_vals, full_mask) = decode_nullable_column(&out_buf, &mut pos)?;
+    let off = comm.exscan_i64(col.len() as i64, ReduceOp::Sum) as usize;
+    let vals = full_vals.slice(off, col.len());
+    let m = full_mask.map(|m| m.slice(off, col.len()));
+    Ok(NullableColumn::new(vals, normalize_mask(m)))
+}
+
+/// Distributed cumulative scans: local running reductions + one or two
+/// `exscan` collectives. Every rank follows the same collective sequence
+/// regardless of its local mask, so mixed-null rank sets stay in lockstep.
+fn cumulative_1d(
+    comm: &Comm,
+    col: &Column,
+    mask: Option<&ValidityMask>,
+    func: &WindowFunc,
+) -> Result<NullableColumn> {
+    let n = col.len();
+    match func {
+        WindowFunc::Sum => match col {
+            // mask-free sums ARE the paper's cumsum — delegate to the scan
+            // kernels so the collective protocol lives in one place
+            Column::I64(xs) => {
+                if mask.is_none() {
+                    return Ok(NullableColumn::from_column(Column::I64(cumsum_i64(
+                        comm, xs,
+                    ))));
+                }
+                let mut run = 0i64;
+                let mut out = Vec::with_capacity(n);
+                for (i, &x) in xs.iter().enumerate() {
+                    if is_valid(mask, i) {
+                        run += x;
+                    }
+                    out.push(run);
+                }
+                let off = comm.exscan_i64(run, ReduceOp::Sum);
+                if off != 0 {
+                    for v in &mut out {
+                        *v += off;
+                    }
+                }
+                Ok(NullableColumn::from_column(Column::I64(out)))
+            }
+            Column::F64(xs) => {
+                if mask.is_none() {
+                    return Ok(NullableColumn::from_column(Column::F64(cumsum_f64(
+                        comm, xs,
+                    ))));
+                }
+                let mut run = 0.0;
+                let mut out = Vec::with_capacity(n);
+                for (i, &x) in xs.iter().enumerate() {
+                    if is_valid(mask, i) {
+                        run += x;
+                    }
+                    out.push(run);
+                }
+                let off = comm.exscan_f64(run, ReduceOp::Sum);
+                if off != 0.0 {
+                    for v in &mut out {
+                        *v += off;
+                    }
+                }
+                Ok(NullableColumn::from_column(Column::F64(out)))
+            }
+            other => bail!("window sum over {} column", other.dtype()),
+        },
+        WindowFunc::Count => {
+            let mut run = 0i64;
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                if is_valid(mask, i) {
+                    run += 1;
+                }
+                out.push(run);
+            }
+            let off = comm.exscan_i64(run, ReduceOp::Sum);
+            if off != 0 {
+                for v in &mut out {
+                    *v += off;
+                }
+            }
+            Ok(NullableColumn::from_column(Column::I64(out)))
+        }
+        WindowFunc::Mean => {
+            let xs = col.to_f64_vec();
+            let mut sums = Vec::with_capacity(n);
+            let mut cnts = Vec::with_capacity(n);
+            let mut s = 0.0;
+            let mut c = 0i64;
+            for (i, &x) in xs.iter().enumerate() {
+                if is_valid(mask, i) {
+                    s += x;
+                    c += 1;
+                }
+                sums.push(s);
+                cnts.push(c);
+            }
+            let soff = comm.exscan_f64(s, ReduceOp::Sum);
+            let coff = comm.exscan_i64(c, ReduceOp::Sum);
+            let mut out = Vec::with_capacity(n);
+            let mut m = ValidityMask::new_valid(n);
+            for i in 0..n {
+                let total_c = cnts[i] + coff;
+                if total_c == 0 {
+                    out.push(0.0);
+                    m.set(i, false);
+                } else {
+                    out.push((sums[i] + soff) / total_c as f64);
+                }
+            }
+            Ok(NullableColumn::new(
+                Column::F64(out),
+                normalize_mask(Some(m)),
+            ))
+        }
+        WindowFunc::Min | WindowFunc::Max => {
+            let want_min = matches!(func, WindowFunc::Min);
+            let op = if want_min { ReduceOp::Min } else { ReduceOp::Max };
+            // prior-rank state: (reduction over earlier ranks, their count)
+            match col {
+                Column::I64(xs) => {
+                    let mut best: Option<i64> = None;
+                    let mut run: Vec<Option<i64>> = Vec::with_capacity(n);
+                    for (i, &x) in xs.iter().enumerate() {
+                        if is_valid(mask, i) {
+                            best = Some(match best {
+                                None => x,
+                                Some(b) if want_min => b.min(x),
+                                Some(b) => b.max(x),
+                            });
+                        }
+                        run.push(best);
+                    }
+                    let ident = if want_min { i64::MAX } else { i64::MIN };
+                    let local_cnt = mask.map_or(n, |m| m.count_valid()) as i64;
+                    let prev = comm.exscan_i64(best.unwrap_or(ident), op);
+                    let prev_cnt = comm.exscan_i64(local_cnt, ReduceOp::Sum);
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for (i, b) in run.iter().enumerate() {
+                        let v = match (prev_cnt > 0, b) {
+                            (true, Some(b)) => Some(if want_min {
+                                prev.min(*b)
+                            } else {
+                                prev.max(*b)
+                            }),
+                            (true, None) => Some(prev),
+                            (false, Some(b)) => Some(*b),
+                            (false, None) => None,
+                        };
+                        match v {
+                            Some(v) => out.push(v),
+                            None => {
+                                out.push(0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::I64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                Column::F64(xs) => {
+                    let mut best: Option<f64> = None;
+                    let mut run: Vec<Option<f64>> = Vec::with_capacity(n);
+                    for (i, &x) in xs.iter().enumerate() {
+                        if is_valid(mask, i) {
+                            best = Some(match best {
+                                None => x,
+                                Some(b) if want_min => b.min(x),
+                                Some(b) => b.max(x),
+                            });
+                        }
+                        run.push(best);
+                    }
+                    let ident = if want_min {
+                        f64::INFINITY
+                    } else {
+                        f64::NEG_INFINITY
+                    };
+                    let local_cnt = mask.map_or(n, |m| m.count_valid()) as i64;
+                    let prev = comm.exscan_f64(best.unwrap_or(ident), op);
+                    let prev_cnt = comm.exscan_i64(local_cnt, ReduceOp::Sum);
+                    let mut out = Vec::with_capacity(n);
+                    let mut m = ValidityMask::new_valid(n);
+                    for (i, b) in run.iter().enumerate() {
+                        let v = match (prev_cnt > 0, b) {
+                            (true, Some(b)) => Some(if want_min {
+                                prev.min(*b)
+                            } else {
+                                prev.max(*b)
+                            }),
+                            (true, None) => Some(prev),
+                            (false, Some(b)) => Some(*b),
+                            (false, None) => None,
+                        };
+                        match v {
+                            Some(v) => out.push(v),
+                            None => {
+                                out.push(0.0);
+                                m.set(i, false);
+                            }
+                        }
+                    }
+                    Ok(NullableColumn::new(
+                        Column::F64(out),
+                        normalize_mask(Some(m)),
+                    ))
+                }
+                other => bail!("window min/max over {} column", other.dtype()),
+            }
+        }
+        other => bail!("cumulative frame cannot carry {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{block_range, run_spmd};
+    use crate::ops::stencil::{sma_weights, stencil_serial, wma_weights_124};
+
+    fn masked(xs: Vec<i64>, nulls: &[usize]) -> (Column, Option<ValidityMask>) {
+        let n = xs.len();
+        let mut m = ValidityMask::new_valid(n);
+        for &i in nulls {
+            m.set(i, false);
+        }
+        (Column::I64(xs), normalize_mask(Some(m)))
+    }
+
+    #[test]
+    fn rolling_sum_mean_min_serial() {
+        let (c, m) = masked(vec![1, 2, 3, 4, 5], &[2]);
+        let s = rolling_window(&c, m.as_ref(), 1, 1, &WindowFunc::Sum).unwrap();
+        // windows: [1,2]=3, [1,2,_]=3, [2,_,4]=6, [_,4,5]=9, [4,5]=9
+        assert_eq!(s.values.as_i64(), &[3, 3, 6, 9, 9]);
+        assert!(s.validity.is_none());
+        let mn = rolling_window(&c, m.as_ref(), 1, 1, &WindowFunc::Min).unwrap();
+        assert_eq!(mn.values.as_i64(), &[1, 1, 2, 4, 4]);
+        let cnt = rolling_window(&c, m.as_ref(), 1, 1, &WindowFunc::Count).unwrap();
+        assert_eq!(cnt.values.as_i64(), &[2, 2, 2, 2, 2]);
+        let mean = rolling_window(&c, m.as_ref(), 1, 1, &WindowFunc::Mean).unwrap();
+        assert!((mean.values.as_f64()[2] - 3.0).abs() < 1e-12); // (2+4)/2
+    }
+
+    #[test]
+    fn rolling_all_null_window_goes_null() {
+        let (c, m) = masked(vec![7, 8, 9], &[0, 1, 2]);
+        let mean = rolling_window(&c, m.as_ref(), 1, 0, &WindowFunc::Mean).unwrap();
+        assert_eq!(mean.null_count(), 3);
+        let s = rolling_window(&c, m.as_ref(), 1, 0, &WindowFunc::Sum).unwrap();
+        assert!(s.validity.is_none());
+        assert_eq!(s.values.as_i64(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn weighted_matches_stencil_serial_on_valid_input() {
+        let xs: Vec<f64> = (0..23).map(|i| ((i * 7) % 5) as f64 - 1.5).collect();
+        let c = Column::F64(xs.clone());
+        for w in [sma_weights(3), wma_weights_124(), sma_weights(5)] {
+            let r = w.len() / 2;
+            let got = rolling_window(&c, None, r, r, &WindowFunc::Weighted(w.clone())).unwrap();
+            let expect = stencil_serial(&xs, &w);
+            assert_eq!(got.values.as_f64(), expect.as_slice());
+            assert!(got.validity.is_none());
+        }
+    }
+
+    #[test]
+    fn shift_serial_edges_null() {
+        let (c, m) = masked(vec![10, 20, 30, 40], &[1]);
+        let lag = shift_window(&c, m.as_ref(), 1);
+        assert_eq!(lag.values.as_i64(), &[0, 10, 0, 30]);
+        assert_eq!(
+            lag.validity.unwrap().to_bools(),
+            vec![false, true, false, true]
+        );
+        let lead = shift_window(&c, m.as_ref(), -2);
+        assert_eq!(lead.values.as_i64(), &[30, 40, 0, 0]);
+        assert_eq!(
+            lead.validity.unwrap().to_bools(),
+            vec![true, true, false, false]
+        );
+    }
+
+    #[test]
+    fn cumulative_serial_null_skip() {
+        let (c, m) = masked(vec![1, 2, 3, 4], &[0, 2]);
+        let s = cumulative_window(&c, m.as_ref(), &WindowFunc::Sum).unwrap();
+        assert_eq!(s.values.as_i64(), &[0, 2, 2, 6]);
+        let mean = cumulative_window(&c, m.as_ref(), &WindowFunc::Mean).unwrap();
+        assert!(!mean.is_valid(0)); // nothing valid yet
+        assert!((mean.values.as_f64()[3] - 3.0).abs() < 1e-12); // (2+4)/2
+        let mx = cumulative_window(&c, m.as_ref(), &WindowFunc::Max).unwrap();
+        assert_eq!(mx.values.as_i64()[3], 4);
+        assert!(!mx.is_valid(0));
+    }
+
+    #[test]
+    fn rank_and_row_number() {
+        assert_eq!(
+            rank_from_breaks(&[true, false, true, false, true]).as_i64(),
+            &[1, 1, 3, 3, 5]
+        );
+        assert_eq!(row_numbers(3, 10).as_i64(), &[11, 12, 13]);
+    }
+
+    #[test]
+    fn grouped_windows_respect_boundaries() {
+        // two groups: [0..3) and [3..6); shift must not leak across them
+        let c = Column::I64(vec![1, 2, 3, 10, 20, 30]);
+        let out = window_over_groups(
+            &c,
+            None,
+            &WindowFrame::Shift(1),
+            &WindowFunc::Value,
+            &[0, 3],
+            None,
+        )
+        .unwrap();
+        assert_eq!(out.values.as_i64(), &[0, 1, 2, 0, 10, 20]);
+        assert_eq!(
+            out.validity.unwrap().to_bools(),
+            vec![false, true, true, false, true, true]
+        );
+        let cs = window_over_groups(
+            &c,
+            None,
+            &WindowFrame::CumulativeToCurrent,
+            &WindowFunc::Sum,
+            &[0, 3],
+            None,
+        )
+        .unwrap();
+        assert_eq!(cs.values.as_i64(), &[1, 3, 6, 10, 30, 60]);
+    }
+
+    fn spmd_window(
+        p: usize,
+        xs: &[i64],
+        nulls: &[usize],
+        frame: WindowFrame,
+        func: WindowFunc,
+    ) -> NullableColumn {
+        let (full, full_mask) = masked(xs.to_vec(), nulls);
+        let statically_nullable = !nulls.is_empty();
+        let out = run_spmd(p, |c| {
+            let (s, l) = block_range(xs.len(), p, c.rank());
+            let col = full.slice(s, l);
+            let m = normalize_mask(full_mask.as_ref().map(|m| m.slice(s, l)));
+            window_1d(&c, &col, m.as_ref(), &frame, &func, statically_nullable).unwrap()
+        });
+        let mut vals = Column::new_empty(out[0].values.dtype());
+        let mut m: Option<ValidityMask> = None;
+        for part in out {
+            let before = vals.len();
+            vals.extend(&part.values);
+            extend_opt_mask(&mut m, before, part.validity.as_ref(), part.values.len());
+        }
+        NullableColumn::new(vals, normalize_mask(m))
+    }
+
+    #[test]
+    fn distributed_matches_serial_all_funcs() {
+        let xs: Vec<i64> = (0..37).map(|i| (i * 13) % 11 - 5).collect();
+        let nulls: Vec<usize> = (0..37).filter(|i| i % 5 == 0).collect();
+        let (full, full_mask) = masked(xs.clone(), &nulls);
+        let cases: Vec<(WindowFrame, WindowFunc)> = vec![
+            (
+                WindowFrame::Rolling {
+                    preceding: 2,
+                    following: 1,
+                },
+                WindowFunc::Sum,
+            ),
+            (
+                WindowFrame::Rolling {
+                    preceding: 1,
+                    following: 1,
+                },
+                WindowFunc::Mean,
+            ),
+            (
+                WindowFrame::Rolling {
+                    preceding: 3,
+                    following: 0,
+                },
+                WindowFunc::Min,
+            ),
+            (
+                WindowFrame::Rolling {
+                    preceding: 0,
+                    following: 2,
+                },
+                WindowFunc::Max,
+            ),
+            (
+                WindowFrame::Rolling {
+                    preceding: 2,
+                    following: 2,
+                },
+                WindowFunc::Count,
+            ),
+            (WindowFrame::CumulativeToCurrent, WindowFunc::Sum),
+            (WindowFrame::CumulativeToCurrent, WindowFunc::Mean),
+            (WindowFrame::CumulativeToCurrent, WindowFunc::Min),
+            (WindowFrame::CumulativeToCurrent, WindowFunc::Max),
+            (WindowFrame::CumulativeToCurrent, WindowFunc::Count),
+            (WindowFrame::Shift(2), WindowFunc::Value),
+            (WindowFrame::Shift(-3), WindowFunc::Value),
+        ];
+        for (frame, func) in cases {
+            let expect = window_group(&full, full_mask.as_ref(), &frame, &func, None).unwrap();
+            for p in [1usize, 2, 4] {
+                let got = spmd_window(p, &xs, &nulls, frame.clone(), func.clone());
+                assert_eq!(
+                    got.values, expect.values,
+                    "{frame} {func} p={p} values"
+                );
+                assert_eq!(
+                    got.validity, expect.validity,
+                    "{frame} {func} p={p} masks"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_weighted_matches_stencil() {
+        let xs: Vec<i64> = (0..29).map(|i| (i * 7) % 13).collect();
+        let w = wma_weights_124();
+        let expect = stencil_serial(
+            &xs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &w,
+        );
+        for p in [1usize, 2, 3] {
+            let got = spmd_window(
+                p,
+                &xs,
+                &[],
+                WindowFrame::Rolling {
+                    preceding: 1,
+                    following: 1,
+                },
+                WindowFunc::Weighted(w.clone()),
+            );
+            assert_eq!(got.values.as_f64(), expect.as_slice(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn tiny_blocks_take_gather_fallback() {
+        // 5 rows on 4 ranks with a frame reaching 3 back → fallback path
+        let xs = vec![5i64, 1, 4, 2, 3];
+        let nulls = vec![1usize];
+        let (full, full_mask) = masked(xs.clone(), &nulls);
+        let frame = WindowFrame::Rolling {
+            preceding: 3,
+            following: 0,
+        };
+        let expect =
+            window_group(&full, full_mask.as_ref(), &frame, &WindowFunc::Min, None).unwrap();
+        let got = spmd_window(4, &xs, &nulls, frame, WindowFunc::Min);
+        assert_eq!(got.values, expect.values);
+        assert_eq!(got.validity, expect.validity);
+    }
+
+    #[test]
+    fn distributed_row_number() {
+        let out = run_spmd(3, |c| {
+            let (s, l) = block_range(10, 3, c.rank());
+            let col = Column::I64(vec![0; l]);
+            let _ = s;
+            window_1d(
+                &c,
+                &col,
+                None,
+                &WindowFrame::CumulativeToCurrent,
+                &WindowFunc::RowNumber,
+                false,
+            )
+            .unwrap()
+        });
+        let got: Vec<i64> = out
+            .iter()
+            .flat_map(|nc| nc.values.as_i64().to_vec())
+            .collect();
+        assert_eq!(got, (1..=10).collect::<Vec<i64>>());
+    }
+}

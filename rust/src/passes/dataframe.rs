@@ -420,36 +420,43 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
             }
             Plan::Concat { inputs: out }
         }
-        Plan::Cumsum { input, column, out } => {
-            if !needed.contains(&out) {
-                return prune(*input, needed);
-            }
-            let mut n: BTreeSet<String> =
-                needed.iter().filter(|c| **c != out).cloned().collect();
-            n.insert(column.clone());
-            Plan::Cumsum {
-                input: Box::new(prune(*input, &n)?),
-                column,
-                out,
-            }
-        }
-        Plan::Stencil {
+        Plan::Window {
             input,
-            column,
-            out,
-            weights,
+            partition_by,
+            order_by,
+            aggs,
         } => {
-            if !needed.contains(&out) {
+            // a *global* window whose outputs are all dead is the identity on
+            // the surviving columns; a partitioned window also reorders rows,
+            // so it must stay even when its outputs are unused
+            if partition_by.is_empty() && aggs.iter().all(|a| !needed.contains(&a.out)) {
                 return prune(*input, needed);
             }
-            let mut n: BTreeSet<String> =
-                needed.iter().filter(|c| **c != out).cloned().collect();
-            n.insert(column.clone());
-            Plan::Stencil {
+            let kept: Vec<_> = aggs
+                .iter()
+                .filter(|a| needed.contains(&a.out))
+                .cloned()
+                .collect();
+            let aggs = if kept.is_empty() { aggs } else { kept };
+            let mut n: BTreeSet<String> = needed
+                .iter()
+                .filter(|c| !aggs.iter().any(|a| &a.out == *c))
+                .cloned()
+                .collect();
+            for key in &partition_by {
+                n.insert(key.clone());
+            }
+            for (key, _) in &order_by {
+                n.insert(key.clone());
+            }
+            for a in &aggs {
+                n.extend(a.input.columns_used());
+            }
+            Plan::Window {
                 input: Box::new(prune(*input, &n)?),
-                column,
-                out,
-                weights,
+                partition_by,
+                order_by,
+                aggs,
             }
         }
         Plan::Sort { input, keys } => {
@@ -871,6 +878,59 @@ mod tests {
         };
         let opt = prune_columns(plan).unwrap();
         assert_eq!(opt.schema().unwrap().names(), vec!["customerId", "total"]);
+    }
+
+    #[test]
+    fn prune_window_keeps_keys_and_inputs_drops_dead_global() {
+        use crate::ir::{WindowAgg, WindowFrame, WindowFunc};
+        let wide = || {
+            source_mem(
+                "wide",
+                Table::from_pairs(vec![
+                    ("k", Column::I64(vec![1, 2])),
+                    ("o", Column::I64(vec![7, 8])),
+                    ("x", Column::F64(vec![0.5, 1.5])),
+                    ("unused", Column::F64(vec![9.0, 9.0])),
+                ])
+                .unwrap(),
+            )
+        };
+        // partitioned window: partition/order keys and agg inputs survive
+        // the projection inserted over the source; :unused does not
+        let plan = Plan::Project {
+            input: Box::new(Plan::Window {
+                input: Box::new(wide()),
+                partition_by: vec!["k".into()],
+                order_by: vec![("o".into(), crate::ir::SortOrder::Asc)],
+                aggs: vec![WindowAgg::new(
+                    "cs",
+                    WindowFunc::Sum,
+                    WindowFrame::CumulativeToCurrent,
+                    col("x"),
+                )],
+            }),
+            columns: vec!["cs".into()],
+        };
+        let opt = prune_columns(plan).unwrap();
+        let txt = format!("{opt}");
+        assert!(txt.contains("Project(k, o, x)"), "plan:\n{txt}");
+        // a dead *global* window is the identity — eliminated entirely
+        let plan = Plan::Project {
+            input: Box::new(Plan::Window {
+                input: Box::new(wide()),
+                partition_by: vec![],
+                order_by: vec![],
+                aggs: vec![WindowAgg::new(
+                    "cs",
+                    WindowFunc::Sum,
+                    WindowFrame::CumulativeToCurrent,
+                    col("x"),
+                )],
+            }),
+            columns: vec!["k".into()],
+        };
+        let opt = prune_columns(plan).unwrap();
+        assert!(!format!("{opt}").contains("Window"), "plan:\n{opt}");
     }
 
     #[test]

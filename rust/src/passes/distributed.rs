@@ -4,7 +4,8 @@
 //! Inference itself lives on the IR ([`Plan::dist`]) since a tree needs only
 //! one bottom-up meet pass. What this pass *adds* is the paper's novel
 //! rebalancing policy: `1D_VAR` outputs flow freely until a consumer that
-//! requires `1D_BLOCK` (stencil, matrix assembly), where a [`Plan::Rebalance`]
+//! requires `1D_BLOCK` (halo-carrying global windows, matrix assembly),
+//! where a [`Plan::Rebalance`]
 //! is inserted — "the best approach is to rebalance only when necessary".
 //! [`RebalanceMode::Always`] reproduces the costly alternative the paper
 //! rejects, for the ablation bench.
@@ -36,22 +37,24 @@ fn lazy_rule(node: Plan) -> Plan {
         return node;
     }
     match node {
-        Plan::Stencil {
+        Plan::Window {
             input,
-            column,
-            out,
-            weights,
+            partition_by,
+            order_by,
+            aggs,
         } => {
+            // only reached for halo-carrying global windows
+            // (requires_block_input gates above)
             let input = if needs_rebalance(&input) {
                 wrap(input)
             } else {
                 input
             };
-            Plan::Stencil {
+            Plan::Window {
                 input,
-                column,
-                out,
-                weights,
+                partition_by,
+                order_by,
+                aggs,
             }
         }
         Plan::MatrixAssembly { input, columns } => {
@@ -118,28 +121,61 @@ mod tests {
         }
     }
 
+    fn rolling_window(input: Plan) -> Plan {
+        Plan::Window {
+            input: Box::new(input),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs: vec![crate::ir::WindowAgg::new(
+                "sma",
+                crate::ir::WindowFunc::Weighted(vec![1.0 / 3.0; 3]),
+                crate::ir::WindowFrame::Rolling {
+                    preceding: 1,
+                    following: 1,
+                },
+                col("x"),
+            )],
+        }
+    }
+
     #[test]
-    fn lazy_inserts_before_stencil_only_when_var() {
-        // stencil directly over a source (1D_BLOCK): no rebalance
-        let p = Plan::Stencil {
-            input: Box::new(src()),
-            column: "x".into(),
-            out: "sma".into(),
-            weights: vec![1.0 / 3.0; 3],
-        };
-        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+    fn lazy_inserts_before_halo_window_only_when_var() {
+        // halo window directly over a source (1D_BLOCK): no rebalance
+        let opt = insert_rebalances(rolling_window(src()), RebalanceMode::Lazy);
         assert_eq!(count_rebalances(&opt), 0);
 
-        // stencil over a filter (1D_VAR): rebalance required
-        let p = Plan::Stencil {
-            input: Box::new(filtered()),
-            column: "x".into(),
-            out: "sma".into(),
-            weights: vec![1.0 / 3.0; 3],
-        };
-        let opt = insert_rebalances(p, RebalanceMode::Lazy);
+        // halo window over a filter (1D_VAR): rebalance required
+        let opt = insert_rebalances(rolling_window(filtered()), RebalanceMode::Lazy);
         assert_eq!(count_rebalances(&opt), 1);
         assert_eq!(opt.dist(), Dist::OneD);
+
+        // scans and partitioned windows need no rebalance
+        let scan = Plan::Window {
+            input: Box::new(filtered()),
+            partition_by: vec![],
+            order_by: vec![],
+            aggs: vec![crate::ir::WindowAgg::new(
+                "cs",
+                crate::ir::WindowFunc::Sum,
+                crate::ir::WindowFrame::CumulativeToCurrent,
+                col("x"),
+            )],
+        };
+        let opt = insert_rebalances(scan, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 0);
+        let part = Plan::Window {
+            input: Box::new(filtered()),
+            partition_by: vec!["id".into()],
+            order_by: vec![],
+            aggs: vec![crate::ir::WindowAgg::new(
+                "cs",
+                crate::ir::WindowFunc::Sum,
+                crate::ir::WindowFrame::CumulativeToCurrent,
+                col("x"),
+            )],
+        };
+        let opt = insert_rebalances(part, RebalanceMode::Lazy);
+        assert_eq!(count_rebalances(&opt), 0);
     }
 
     #[test]
@@ -226,12 +262,7 @@ mod tests {
 
     #[test]
     fn idempotent_on_lazy() {
-        let p = Plan::Stencil {
-            input: Box::new(filtered()),
-            column: "x".into(),
-            out: "o".into(),
-            weights: vec![1.0],
-        };
+        let p = rolling_window(filtered());
         let once = insert_rebalances(p, RebalanceMode::Lazy);
         let twice = insert_rebalances(once.clone(), RebalanceMode::Lazy);
         assert_eq!(count_rebalances(&once), count_rebalances(&twice));

@@ -5,7 +5,7 @@
 //! data, one output allocation).
 
 use crate::expr::AggExpr;
-use crate::ir::Plan;
+use crate::ir::{Plan, WindowAgg};
 
 /// Fold constants in every expression of the plan.
 pub fn fold_expressions(plan: Plan) -> Plan {
@@ -25,6 +25,23 @@ pub fn fold_expressions(plan: Plan) -> Plan {
             aggs: aggs
                 .into_iter()
                 .map(|a| AggExpr {
+                    input: a.input.fold_constants(),
+                    ..a
+                })
+                .collect(),
+        },
+        Plan::Window {
+            input,
+            partition_by,
+            order_by,
+            aggs,
+        } => Plan::Window {
+            input,
+            partition_by,
+            order_by,
+            aggs: aggs
+                .into_iter()
+                .map(|a| WindowAgg {
                     input: a.input.fold_constants(),
                     ..a
                 })
@@ -103,21 +120,16 @@ pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
                 .map(|p| Box::new(map_plan(*p, f)))
                 .collect(),
         },
-        Plan::Cumsum { input, column, out } => Plan::Cumsum {
-            input: Box::new(map_plan(*input, f)),
-            column,
-            out,
-        },
-        Plan::Stencil {
+        Plan::Window {
             input,
-            column,
-            out,
-            weights,
-        } => Plan::Stencil {
+            partition_by,
+            order_by,
+            aggs,
+        } => Plan::Window {
             input: Box::new(map_plan(*input, f)),
-            column,
-            out,
-            weights,
+            partition_by,
+            order_by,
+            aggs,
         },
         Plan::Sort { input, keys } => Plan::Sort {
             input: Box::new(map_plan(*input, f)),

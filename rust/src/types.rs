@@ -206,6 +206,160 @@ impl fmt::Display for JoinStrategy {
     }
 }
 
+/// Frame specification of a window computation — which rows around row `i`
+/// feed its output (the unified analytics surface subsuming the former
+/// `cumsum`/`stencil` special cases). Frames are *row-based* (`ROWS
+/// BETWEEN`), matching the paper's 1D-block stencil/scan codegen.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WindowFrame {
+    /// `ROWS BETWEEN preceding PRECEDING AND following FOLLOWING` — the
+    /// current row is always included, so the frame is never empty. Edge
+    /// windows truncate to the rows that exist (Pandas `min_periods=1`;
+    /// the weighted function additionally renormalizes, keeping the old
+    /// stencil semantics bit-for-bit).
+    Rolling { preceding: usize, following: usize },
+    /// `ROWS UNBOUNDED PRECEDING .. CURRENT ROW` — running scans
+    /// (cumulative sum/min/max/…), lowered to `MPI_Exscan` instead of a
+    /// halo exchange.
+    CumulativeToCurrent,
+    /// The single row at `i - offset`: positive = lag, negative = lead,
+    /// zero = identity. Out-of-range rows (the leading/trailing `|offset|`
+    /// edge) produce NULL via the validity mask.
+    Shift(i64),
+}
+
+impl WindowFrame {
+    /// Rows needed from before/after the local block — the halo widths of
+    /// the distributed lowering. Scans need no halo (they use `exscan`).
+    pub fn halo(&self) -> (usize, usize) {
+        match self {
+            WindowFrame::Rolling {
+                preceding,
+                following,
+            } => (*preceding, *following),
+            WindowFrame::CumulativeToCurrent => (0, 0),
+            WindowFrame::Shift(k) => {
+                if *k >= 0 {
+                    (*k as usize, 0)
+                } else {
+                    (0, k.unsigned_abs() as usize)
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for WindowFrame {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WindowFrame::Rolling {
+                preceding,
+                following,
+            } => write!(f, "rolling[{preceding},{following}]"),
+            WindowFrame::CumulativeToCurrent => write!(f, "cumulative"),
+            WindowFrame::Shift(k) => write!(f, "shift({k})"),
+        }
+    }
+}
+
+/// Aggregate/projection function applied over a [`WindowFrame`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum WindowFunc {
+    /// Sum of the valid frame rows (0 when all are null — never NULL).
+    Sum,
+    /// Mean of the valid frame rows (NULL when all are null).
+    Mean,
+    /// Min of the valid frame rows (NULL when all are null).
+    Min,
+    /// Max of the valid frame rows (NULL when all are null).
+    Max,
+    /// Number of valid frame rows (never NULL).
+    Count,
+    /// Weighted combination `Σ w[j]·x[i+j-preceding]` with truncated edges
+    /// renormalized by the weight mass actually used — the WMA/SMA stencil.
+    /// Requires a [`WindowFrame::Rolling`] frame whose width equals
+    /// `weights.len()`. Null lanes are skipped and renormalized away, so a
+    /// nullable input yields NULL only for an all-null frame.
+    Weighted(Vec<f64>),
+    /// The frame's single value itself — the function of `shift`/`lag`/
+    /// `lead`. Requires a [`WindowFrame::Shift`] frame.
+    Value,
+    /// Competition rank (1,1,3,…) of the row within its partition under the
+    /// window's `order_by` keys. Requires a non-empty `order_by`; the frame
+    /// is ignored. Never NULL.
+    Rank,
+    /// 1-based position of the row within its partition (global row number
+    /// for an un-partitioned window). The frame is ignored. Never NULL.
+    RowNumber,
+}
+
+impl WindowFunc {
+    /// Output dtype given the input expression's dtype.
+    pub fn output_dtype(&self, input: DType) -> DType {
+        match self {
+            WindowFunc::Sum | WindowFunc::Min | WindowFunc::Max | WindowFunc::Value => input,
+            WindowFunc::Mean | WindowFunc::Weighted(_) => DType::F64,
+            WindowFunc::Count | WindowFunc::Rank | WindowFunc::RowNumber => DType::I64,
+        }
+    }
+
+    /// Does this function require a numeric input column?
+    pub fn needs_numeric_input(&self) -> bool {
+        matches!(
+            self,
+            WindowFunc::Sum
+                | WindowFunc::Mean
+                | WindowFunc::Min
+                | WindowFunc::Max
+                | WindowFunc::Weighted(_)
+        )
+    }
+
+    /// Does the output ignore the input values entirely (pure position
+    /// functions)?
+    pub fn is_positional(&self) -> bool {
+        matches!(self, WindowFunc::Rank | WindowFunc::RowNumber)
+    }
+
+    /// May the output be NULL, given the frame and the input nullability?
+    /// `sum`/`count` have natural empty values (0) and the position
+    /// functions never look at values; `mean`/`min`/`max`/`weighted` go
+    /// NULL on an all-null frame; a non-trivial shift always nulls its
+    /// leading/trailing edge.
+    pub fn output_nullable(&self, frame: &WindowFrame, input_nullable: bool) -> bool {
+        if let WindowFrame::Shift(k) = frame {
+            return *k != 0 || input_nullable;
+        }
+        match self {
+            WindowFunc::Sum
+            | WindowFunc::Count
+            | WindowFunc::Rank
+            | WindowFunc::RowNumber => false,
+            WindowFunc::Mean
+            | WindowFunc::Min
+            | WindowFunc::Max
+            | WindowFunc::Weighted(_)
+            | WindowFunc::Value => input_nullable,
+        }
+    }
+}
+
+impl fmt::Display for WindowFunc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WindowFunc::Sum => write!(f, "sum"),
+            WindowFunc::Mean => write!(f, "mean"),
+            WindowFunc::Min => write!(f, "min"),
+            WindowFunc::Max => write!(f, "max"),
+            WindowFunc::Count => write!(f, "count"),
+            WindowFunc::Weighted(w) => write!(f, "weighted({} taps)", w.len()),
+            WindowFunc::Value => write!(f, "value"),
+            WindowFunc::Rank => write!(f, "rank"),
+            WindowFunc::RowNumber => write!(f, "row_number"),
+        }
+    }
+}
+
 /// Per-key sort direction for [`crate::ir::Plan::Sort`]'s key list.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SortOrder {
@@ -439,6 +593,47 @@ mod tests {
         assert_eq!(Value::Str("hi".into()).to_string(), "hi");
         assert_eq!(DType::F64.to_string(), "Float64");
         assert_eq!(Value::Null(DType::Str).to_string(), "null");
+    }
+
+    #[test]
+    fn window_frame_halos_and_typing() {
+        assert_eq!(
+            WindowFrame::Rolling {
+                preceding: 2,
+                following: 1
+            }
+            .halo(),
+            (2, 1)
+        );
+        assert_eq!(WindowFrame::CumulativeToCurrent.halo(), (0, 0));
+        assert_eq!(WindowFrame::Shift(3).halo(), (3, 0));
+        assert_eq!(WindowFrame::Shift(-2).halo(), (0, 2));
+        assert_eq!(WindowFunc::Sum.output_dtype(DType::I64), DType::I64);
+        assert_eq!(WindowFunc::Mean.output_dtype(DType::I64), DType::F64);
+        assert_eq!(WindowFunc::Count.output_dtype(DType::F64), DType::I64);
+        assert_eq!(WindowFunc::Value.output_dtype(DType::Str), DType::Str);
+        let roll = WindowFrame::Rolling {
+            preceding: 1,
+            following: 1,
+        };
+        // sum/count never null; mean/min/max follow the input; shift edges null
+        assert!(!WindowFunc::Sum.output_nullable(&roll, true));
+        assert!(!WindowFunc::Count.output_nullable(&roll, true));
+        assert!(WindowFunc::Mean.output_nullable(&roll, true));
+        assert!(!WindowFunc::Min.output_nullable(&roll, false));
+        assert!(WindowFunc::Value.output_nullable(&WindowFrame::Shift(1), false));
+        assert!(!WindowFunc::Value.output_nullable(&WindowFrame::Shift(0), false));
+        assert!(WindowFunc::Rank.is_positional());
+        assert!(WindowFunc::Weighted(vec![1.0]).needs_numeric_input());
+        assert_eq!(WindowFrame::Shift(-1).to_string(), "shift(-1)");
+        assert_eq!(
+            WindowFrame::Rolling {
+                preceding: 2,
+                following: 0
+            }
+            .to_string(),
+            "rolling[2,0]"
+        );
     }
 
     #[test]

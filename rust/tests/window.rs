@@ -1,0 +1,329 @@
+//! Window-function property suite: the HiFrames SPMD executor, the serial
+//! pandas-like engine and the sparklike map-reduce engine must agree on
+//! window values *and* null positions — rolling aggregates, shifts across
+//! rank boundaries, partitioned windows with keys split across ranks,
+//! nullable inputs, and frames wider than a rank's local chunk.
+
+use hiframes::baseline::{serial, sparklike::SparkLike};
+use hiframes::datagen::Rng;
+use hiframes::ir::WindowAgg;
+use hiframes::ops::stencil::{stencil_serial, wma_weights_124};
+use hiframes::prelude::*;
+use hiframes::prop::forall_cases;
+
+/// Random frame: group key `g` (sometimes nullable), unique order key `o`,
+/// nullable Int64 value `v`, exact-in-f64 value `x`.
+fn random_table(rng: &mut Rng, n: usize, null_v: f64, null_g: bool) -> Table {
+    let g: Vec<i64> = (0..n).map(|_| rng.i64_range(0, 5)).collect();
+    // unique order keys → every engine agrees on a total row order
+    let o: Vec<i64> = (0..n as i64).map(|i| (i * 7919) % n as i64).collect();
+    let v: Vec<i64> = (0..n).map(|_| rng.i64_range(-50, 50)).collect();
+    let x: Vec<f64> = v.iter().map(|&a| a as f64 * 0.5).collect();
+    let mut t = Table::from_pairs(vec![
+        ("g", Column::I64(g)),
+        ("o", Column::I64(o)),
+        ("v", Column::I64(v)),
+        ("x", Column::F64(x)),
+    ])
+    .unwrap();
+    if null_v > 0.0 {
+        let keep: Vec<bool> = (0..n).map(|_| rng.f64() >= null_v).collect();
+        t = t
+            .with_null_mask("v", ValidityMask::from_bools(&keep))
+            .unwrap();
+    }
+    if null_g {
+        let keep: Vec<bool> = (0..n).map(|_| rng.f64() >= 0.1).collect();
+        t = t
+            .with_null_mask("g", ValidityMask::from_bools(&keep))
+            .unwrap();
+    }
+    t
+}
+
+/// Exact table comparison over the named columns (values and masks). All
+/// numeric inputs are integers/halves, so even the F64 window outputs are
+/// bit-identical across engines.
+fn columns_equal(a: &Table, b: &Table, cols: &[&str], label: &str) -> Result<(), String> {
+    if a.num_rows() != b.num_rows() {
+        return Err(format!("{label}: rows {} vs {}", a.num_rows(), b.num_rows()));
+    }
+    for c in cols {
+        if a.column(c) != b.column(c) {
+            return Err(format!("{label}: column {c} differs"));
+        }
+        if a.mask(c) != b.mask(c) {
+            return Err(format!("{label}: mask of {c} differs"));
+        }
+    }
+    Ok(())
+}
+
+/// Apply the same aggregate list through the fluent builder.
+fn hiframes_window(
+    df: &DataFrame,
+    partition_by: &[&str],
+    order_by: &[(&str, SortOrder)],
+    aggs: &[WindowAgg],
+) -> DataFrame {
+    let mut b = df.window().partition_by(partition_by).order_by(order_by);
+    for a in aggs {
+        b = b.agg_expr(
+            &a.out,
+            WindowExpr {
+                input: a.input.clone(),
+                frame: a.frame.clone(),
+                func: a.func.clone(),
+            },
+        );
+    }
+    b.build()
+}
+
+#[test]
+fn stencil_wrapper_byte_identical_to_legacy_kernel() {
+    // acceptance: df.stencil through the Window node reproduces the
+    // pre-refactor stencil output bit-for-bit
+    let xs: Vec<f64> = (0..257).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+    let t = Table::from_pairs(vec![("x", Column::F64(xs.clone()))]).unwrap();
+    let expect = stencil_serial(&xs, &wma_weights_124());
+    for workers in [1usize, 2, 4] {
+        let hf = HiFrames::with_workers(workers);
+        let got = hf
+            .table("t", t.clone())
+            .stencil("x", "w", wma_weights_124())
+            .collect()
+            .unwrap();
+        assert_eq!(
+            got.column("w").unwrap().as_f64(),
+            expect.as_slice(),
+            "workers={workers}"
+        );
+        assert_eq!(got.mask("w"), None);
+        // the serial baseline engine computes the same thing
+        let srl = serial::wma(&t, "x", "w", &wma_weights_124()).unwrap();
+        assert_eq!(srl.column("w").unwrap().as_f64(), expect.as_slice());
+    }
+}
+
+#[test]
+fn global_windows_match_serial() {
+    forall_cases(
+        "window-global",
+        10,
+        |rng| {
+            let n = 20 + rng.usize(180);
+            let p = rng.usize(4);
+            let f = rng.usize(3);
+            (random_table(rng, n, 0.2, false), p, f)
+        },
+        |(t, p, f)| {
+            let aggs = vec![
+                WindowAgg::new("rs", WindowFunc::Sum, roll(*p, *f), col("v")),
+                WindowAgg::new("rm", WindowFunc::Mean, roll(*p, *f), col("v")),
+                WindowAgg::new("rlo", WindowFunc::Min, roll(*p, *f), col("x")),
+                WindowAgg::new("prev", WindowFunc::Value, WindowFrame::Shift(1), col("v")),
+                WindowAgg::new("nxt2", WindowFunc::Value, WindowFrame::Shift(-2), col("v")),
+                WindowAgg::new(
+                    "cs",
+                    WindowFunc::Sum,
+                    WindowFrame::CumulativeToCurrent,
+                    col("v"),
+                ),
+            ];
+            let expect = serial::window(t, &[], &[], &aggs).map_err(|e| e.to_string())?;
+            let outs = ["rs", "rm", "rlo", "prev", "nxt2", "cs", "v", "g"];
+            for workers in [2usize, 4] {
+                let hf = HiFrames::with_workers(workers);
+                let got = hiframes_window(&hf.table("t", t.clone()), &[], &[], &aggs)
+                    .collect()
+                    .map_err(|e| e.to_string())?;
+                columns_equal(&got, &expect, &outs, &format!("global w={workers}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn roll(preceding: usize, following: usize) -> WindowFrame {
+    WindowFrame::Rolling {
+        preceding,
+        following,
+    }
+}
+
+#[test]
+fn partitioned_windows_three_way() {
+    forall_cases(
+        "window-partitioned",
+        10,
+        |rng| {
+            let n = 30 + rng.usize(170);
+            let null_g = rng.usize(2) == 0;
+            random_table(rng, n, 0.2, null_g)
+        },
+        |t| {
+            let aggs = vec![
+                WindowAgg::new("rs", WindowFunc::Sum, roll(2, 0), col("v")),
+                WindowAgg::new("rm", WindowFunc::Mean, roll(1, 1), col("x")),
+                WindowAgg::new("prev", WindowFunc::Value, WindowFrame::Shift(1), col("v")),
+                WindowAgg::new(
+                    "cs",
+                    WindowFunc::Sum,
+                    WindowFrame::CumulativeToCurrent,
+                    col("v"),
+                ),
+                WindowAgg::new(
+                    "r",
+                    WindowFunc::Rank,
+                    WindowFrame::CumulativeToCurrent,
+                    lit(0i64),
+                ),
+            ];
+            let part = ["g"];
+            let order = [("o", SortOrder::Asc)];
+            let canon = [("g", SortOrder::Asc), ("o", SortOrder::Asc)];
+            let outs = ["g", "o", "v", "rs", "rm", "prev", "cs", "r"];
+            let expect = serial::window(t, &part, &order, &aggs)
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(&canon)
+                .map_err(|e| e.to_string())?;
+            // hiframes across worker counts (partitions split across ranks)
+            for workers in [2usize, 3] {
+                let hf = HiFrames::with_workers(workers);
+                let got = hiframes_window(&hf.table("t", t.clone()), &part, &order, &aggs)
+                    .collect()
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(&canon)
+                    .map_err(|e| e.to_string())?;
+                columns_equal(&got, &expect, &outs, &format!("hiframes w={workers}"))?;
+            }
+            // sparklike row-eval parity
+            let eng = SparkLike::new(2, 3);
+            let spk = eng
+                .window_over(&eng.parallelize(t), &part, &order, &aggs)
+                .map_err(|e| e.to_string())?;
+            let spk = eng
+                .collect(&spk)
+                .map_err(|e| e.to_string())?
+                .sorted_by_keys(&canon)
+                .map_err(|e| e.to_string())?;
+            columns_equal(&spk, &expect, &outs, "sparklike")
+        },
+    );
+}
+
+#[test]
+fn frames_wider_than_a_local_chunk_fall_back() {
+    // 4 workers over 6 rows with a 5-deep frame: every block is smaller
+    // than the frame reach, so the gather fallback must kick in and still
+    // match the serial oracle
+    let t = Table::from_pairs(vec![
+        ("v", Column::I64(vec![5, -3, 8, 0, 2, 7])),
+        ("x", Column::F64(vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0])),
+    ])
+    .unwrap()
+    .with_null_mask("v", ValidityMask::from_bools(&[true, false, true, true, true, false]))
+    .unwrap();
+    let aggs = vec![
+        WindowAgg::new("s", WindowFunc::Sum, roll(5, 0), col("v")),
+        WindowAgg::new("m", WindowFunc::Min, roll(0, 4), col("v")),
+        WindowAgg::new("far", WindowFunc::Value, WindowFrame::Shift(4), col("x")),
+    ];
+    let expect = serial::window(&t, &[], &[], &aggs).unwrap();
+    for workers in [4usize, 6] {
+        let hf = HiFrames::with_workers(workers);
+        let got = hiframes_window(&hf.table("t", t.clone()), &[], &[], &aggs)
+            .collect()
+            .unwrap();
+        columns_equal(&got, &expect, &["s", "m", "far"], &format!("w={workers}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn shift_crosses_rank_boundaries() {
+    // lag/lead pull values across rank edges: only the *global* edges are
+    // null, never the internal block boundaries
+    let n = 30usize;
+    let t = Table::from_pairs(vec![(
+        "v",
+        Column::I64((0..n as i64).map(|i| i * 3).collect()),
+    )])
+    .unwrap();
+    for workers in [2usize, 3, 5] {
+        let hf = HiFrames::with_workers(workers);
+        let got = hf
+            .table("t", t.clone())
+            .window()
+            .agg_expr("prev", col("v").lag(1))
+            .agg_expr("ahead", col("v").lead(3))
+            .row_number("rn")
+            .build()
+            .collect()
+            .unwrap();
+        let prev = got.column("prev").unwrap().as_i64();
+        let ahead = got.column("ahead").unwrap().as_i64();
+        let pm = got.mask("prev").unwrap();
+        let am = got.mask("ahead").unwrap();
+        for i in 0..n {
+            if i == 0 {
+                assert!(!pm.get(i), "workers={workers}");
+            } else {
+                assert!(pm.get(i), "workers={workers} row {i}");
+                assert_eq!(prev[i], (i as i64 - 1) * 3, "workers={workers}");
+            }
+            if i + 3 < n {
+                assert!(am.get(i), "workers={workers} row {i}");
+                assert_eq!(ahead[i], (i as i64 + 3) * 3, "workers={workers}");
+            } else {
+                assert!(!am.get(i), "workers={workers}");
+            }
+        }
+        assert_eq!(
+            got.column("rn").unwrap().as_i64(),
+            (1..=n as i64).collect::<Vec<_>>().as_slice(),
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn nullable_windows_type_and_collect_end_to_end() {
+    // a left join introduces a nullable column; windows accept it directly
+    // (the old Cumsum/Stencil nodes rejected nullable inputs)
+    let hf = HiFrames::with_workers(3);
+    let left = hf.table(
+        "l",
+        Table::from_pairs(vec![("id", Column::I64(vec![0, 1, 2, 3, 4, 5]))]).unwrap(),
+    );
+    let right = hf.table(
+        "r",
+        Table::from_pairs(vec![
+            ("rid", Column::I64(vec![0, 2, 4])),
+            ("w", Column::I64(vec![10, 20, 30])),
+        ])
+        .unwrap(),
+    );
+    let joined = left.join_on(&right, &[("id", "rid")], JoinType::Left);
+    assert_eq!(joined.schema().unwrap().nullable_of("w"), Some(true));
+    // global windows run in row order: canonicalize with a sort *first*
+    // (the optimizer then inserts the rebalance the rolling frame needs)
+    let out = joined
+        .sort_by("id")
+        .window()
+        .agg_expr("cs", col("w").cum_sum())
+        .rolling_between(1, 1)
+        .agg("rm", WindowFunc::Mean, col("w"))
+        .build()
+        .collect()
+        .unwrap();
+    // cum over [10,_,20,_,30,_] — sums skip nulls, never NULL
+    assert_eq!(out.schema().nullable_of("cs"), Some(false));
+    assert_eq!(out.column("cs").unwrap().as_i64(), &[10, 10, 30, 30, 60, 60]);
+    // rolling mean: centered window always sees ≥1 valid here
+    let rm = out.column("rm").unwrap().as_f64();
+    assert!((rm[0] - 10.0).abs() < 1e-12);
+    assert!((rm[1] - 15.0).abs() < 1e-12);
+    assert_eq!(out.null_count("rm"), 0);
+}
