@@ -52,6 +52,7 @@ fn main() {
                 workers,
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
+                mem_budget: None,
             };
             table.run(label, "pushdown", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()
@@ -79,6 +80,7 @@ fn main() {
                 workers,
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
+                mem_budget: None,
             };
             table.run(label, "lazy-1dvar", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()
@@ -104,6 +106,7 @@ fn main() {
                 workers,
                 passes: PassOptions::default(),
                 agg_strategy: strat,
+                mem_budget: None,
             };
             table.run(label, "pre-agg", rows, 1, reps, || {
                 collect_optimized(&plan, &opts).unwrap().num_rows()
@@ -139,6 +142,7 @@ fn main() {
                 workers,
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
+                mem_budget: None,
             };
             table.run(label, "pruning", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()

@@ -60,5 +60,33 @@ fn main() {
                 println!("{sys} scaling: {}", series.join("  "));
             }
         }
+
+        // ---- out-of-core smoke: the same query under a tight per-rank
+        // memory budget (HIFRAMES_MEM_BUDGET, default 5% of the fact
+        // table); the spill counters ride along in BENCH_fig12_spill.json
+        // so CI tracks that the operators really went to disk ----
+        let budget = hiframes::config::mem_budget_from_env()
+            .unwrap_or_else(|| (db.store_sales.byte_size() / 20).max(1));
+        let w = sweep.last().copied().unwrap_or(1);
+        let hf = HiFrames::new(hiframes::exec::ExecOptions {
+            workers: w,
+            mem_budget: Some(budget),
+            ..Default::default()
+        });
+        let mut spill_table = BenchTable::new(
+            &format!("Fig 12 (spill): Q26 under a {budget}-byte per-rank budget, {w} workers"),
+            "hiframes",
+        );
+        hiframes::metrics::spill_stats().reset();
+        spill_table.run("hiframes", "q26-budgeted", rows, 1, reps, || {
+            q26::hiframes_relational(&hf, &db, &p).collect().unwrap().num_rows()
+        });
+        let sp = hiframes::metrics::spill_stats().snapshot();
+        spill_table.add_counter("mem_budget_bytes", budget as u64);
+        spill_table.add_counter("bytes_spilled", sp.bytes_spilled);
+        spill_table.add_counter("partitions_spilled", sp.partitions_spilled);
+        spill_table.add_counter("spill_passes", sp.spill_passes);
+        spill_table.add_counter("merge_passes", sp.merge_passes);
+        spill_table.finish("fig12_spill");
     });
 }

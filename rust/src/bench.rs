@@ -61,6 +61,7 @@ pub struct BenchTable {
     pub title: String,
     pub baseline_system: String,
     cells: Vec<Cell>,
+    counters: Vec<(String, u64)>,
 }
 
 impl BenchTable {
@@ -70,7 +71,16 @@ impl BenchTable {
             title: title.to_string(),
             baseline_system: baseline_system.to_string(),
             cells: Vec::new(),
+            counters: Vec::new(),
         }
+    }
+
+    /// Attach a named run-level counter (e.g. spill bytes) to the results
+    /// file. Counters ride along in `BENCH_*.json` as a `"counters"`
+    /// object; tables without counters serialize exactly as before.
+    pub fn add_counter(&mut self, name: &str, value: u64) {
+        eprintln!("  counter {name} = {value}");
+        self.counters.push((name.to_string(), value));
     }
 
     /// Measure `f` and record it as `system` doing `op` over `rows` rows.
@@ -212,6 +222,14 @@ impl BenchTable {
             json_str(&self.baseline_system)
         ));
         s.push_str(&format!("  \"smoke\": {},\n", bench_smoke()));
+        if !self.counters.is_empty() {
+            let body: Vec<String> = self
+                .counters
+                .iter()
+                .map(|(k, v)| format!("{}: {v}", json_str(k)))
+                .collect();
+            s.push_str(&format!("  \"counters\": {{{}}},\n", body.join(", ")));
+        }
         s.push_str("  \"cells\": [\n");
         for (i, c) in self.cells.iter().enumerate() {
             s.push_str(&format!(
@@ -314,6 +332,21 @@ mod tests {
         assert!(body.contains("json \\\"table\\\""));
         // two cells → exactly one separating comma inside the array
         assert_eq!(body.matches("},").count(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_json_emits_counters_when_present() {
+        let dir = std::env::temp_dir().join("hiframes_bench_json_counter_test");
+        let mut t = BenchTable::new("counters", "base");
+        t.record("base", "op1", 10, vec![0.1]);
+        t.add_counter("bytes_spilled", 4096);
+        t.add_counter("spill_passes", 3);
+        let path = t.write_json_to(&dir, "testfig_ctr").unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains(
+            "\"counters\": {\"bytes_spilled\": 4096, \"spill_passes\": 3},"
+        ));
         std::fs::remove_file(&path).ok();
     }
 

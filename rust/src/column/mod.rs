@@ -233,13 +233,20 @@ impl Column {
         }
     }
 
-    /// Approximate heap size in bytes (metrics / spill accounting).
+    /// Approximate heap size in bytes (metrics / spill-budget accounting).
+    /// `Str` counts the UTF-8 payload plus the 24-byte `String` header
+    /// (ptr/len/cap) so string-heavy tables aren't systematically
+    /// under-budgeted; validity-mask bitmap bytes are accounted separately
+    /// by [`ValidityMask::byte_size`] (see `ops::spill::nullable_bytes`).
     pub fn byte_size(&self) -> usize {
         match self {
             Column::I64(v) => v.len() * 8,
             Column::F64(v) => v.len() * 8,
             Column::Bool(v) => v.len(),
-            Column::Str(v) => v.iter().map(|s| s.len() + 8).sum(),
+            Column::Str(v) => v
+                .iter()
+                .map(|s| s.len() + std::mem::size_of::<String>())
+                .sum(),
         }
     }
 }
@@ -374,7 +381,11 @@ mod tests {
     fn byte_sizes() {
         assert_eq!(Column::I64(vec![0; 10]).byte_size(), 80);
         assert_eq!(Column::Bool(vec![false; 10]).byte_size(), 10);
-        assert!(Column::Str(vec!["ab".into()]).byte_size() >= 10);
+        // payload + String header, so budget accounting sees the real cost
+        assert_eq!(
+            Column::Str(vec!["ab".into()]).byte_size(),
+            2 + std::mem::size_of::<String>()
+        );
     }
 
     #[test]

@@ -98,6 +98,36 @@ impl Config {
     }
 }
 
+/// Parse a byte size: a plain integer, optionally suffixed with `k`, `m`
+/// or `g` (binary units, case-insensitive, optional trailing `b` as in
+/// `64mb`). Returns `None` for empty, zero or unparseable input — zero is
+/// the documented "unlimited" spelling for budget knobs.
+pub fn parse_byte_size(s: &str) -> Option<usize> {
+    let mut s = s.trim();
+    if s.len() > 1 && s.as_bytes()[s.len() - 1].eq_ignore_ascii_case(&b'b') {
+        s = &s[..s.len() - 1];
+    }
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.as_bytes()[s.len() - 1].to_ascii_lowercase() {
+        b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'm' => (&s[..s.len() - 1], 1usize << 20),
+        b'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1),
+    };
+    let n: usize = num.trim().parse().ok()?;
+    n.checked_mul(mult).filter(|&n| n > 0)
+}
+
+/// Per-rank memory budget from `HIFRAMES_MEM_BUDGET` (e.g. `64m`, `1g`,
+/// `500000`). `None` — unset, empty, or `0` — means unlimited: every
+/// operator stays on the in-memory path. See `ops/spill.rs` and
+/// DESIGN.md §4.5.
+pub fn mem_budget_from_env() -> Option<usize> {
+    parse_byte_size(&std::env::var("HIFRAMES_MEM_BUDGET").ok()?)
+}
+
 /// Default worker count for this machine: physical-ish parallelism capped
 /// at 8 (the benches sweep explicitly; this is just the default).
 pub fn default_workers() -> usize {
@@ -160,5 +190,20 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn byte_sizes_parse() {
+        assert_eq!(parse_byte_size("12345"), Some(12345));
+        assert_eq!(parse_byte_size(" 4k "), Some(4096));
+        assert_eq!(parse_byte_size("2K"), Some(2048));
+        assert_eq!(parse_byte_size("3m"), Some(3 << 20));
+        assert_eq!(parse_byte_size("64mb"), Some(64 << 20));
+        assert_eq!(parse_byte_size("1G"), Some(1 << 30));
+        assert_eq!(parse_byte_size("0"), None, "zero means unlimited");
+        assert_eq!(parse_byte_size("0k"), None);
+        assert_eq!(parse_byte_size(""), None);
+        assert_eq!(parse_byte_size("nope"), None);
+        assert_eq!(parse_byte_size("b"), None);
     }
 }

@@ -20,13 +20,19 @@ use crate::table::{Schema, Table};
 use crate::types::SortOrder;
 use anyhow::{Context, Result};
 
-/// Execution options: worker (rank) count, optimizer toggles and the
-/// aggregation strategy (ablations flip these).
+/// Execution options: worker (rank) count, optimizer toggles, the
+/// aggregation strategy (ablations flip these) and the per-rank memory
+/// budget gating out-of-core execution.
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
     pub workers: usize,
     pub passes: PassOptions,
     pub agg_strategy: AggStrategy,
+    /// Per-rank memory budget in bytes for join/aggregate/sort working
+    /// sets; operators exceeding it spill to disk (see `ops/spill.rs` and
+    /// DESIGN.md §4.5). `None` (or `Some(0)`) = unlimited, the in-memory
+    /// paths bit for bit. Defaults from `HIFRAMES_MEM_BUDGET`.
+    pub mem_budget: Option<usize>,
 }
 
 impl Default for ExecOptions {
@@ -35,6 +41,7 @@ impl Default for ExecOptions {
             workers: crate::config::default_workers(),
             passes: PassOptions::default(),
             agg_strategy: AggStrategy::RawShuffle,
+            mem_budget: crate::config::mem_budget_from_env(),
         }
     }
 }
@@ -329,7 +336,9 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 lframe.schema.nullable_of(lk).unwrap_or(false)
                     || rframe.schema.nullable_of(rk).unwrap_or(false)
             });
-            let (keys_out, lout, rout) = ops::distributed_join_on_strategy(
+            let spill =
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+            let (keys_out, lout, rout) = ops::distributed_join_on_budgeted(
                 comm,
                 &lkeys,
                 &lpay,
@@ -338,6 +347,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 *how,
                 *strategy,
                 ops::KeyNullability::Static(keys_nullable),
+                &spill,
             )?;
             // assemble output per the join schema: left fields in order
             // (each key slot takes its joined key column), then — unless the
@@ -403,13 +413,16 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             let keys_nullable = keys
                 .iter()
                 .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
-            let (key_out, out_cols) = ops::distributed_aggregate_keys(
+            let spill =
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+            let (key_out, out_cols) = ops::distributed_aggregate_keys_budgeted(
                 comm,
                 &key_cols,
                 &expr_refs,
                 &specs,
                 opts.agg_strategy,
                 ops::KeyNullability::Static(keys_nullable),
+                &spill,
             )?;
             let schema = plan.schema()?;
             let mut cols = Vec::with_capacity(schema.len());
@@ -644,12 +657,15 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             let keys_nullable = keys
                 .iter()
                 .any(|(k, _)| frame.schema.nullable_of(k).unwrap_or(false));
-            let (skeys, scols) = ops::distributed_sort_keys(
+            let spill =
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+            let (skeys, scols) = ops::distributed_sort_keys_budgeted(
                 comm,
                 &key_cols,
                 &orders,
                 &others,
                 ops::KeyNullability::Static(keys_nullable),
+                &spill,
             )?;
             let mut cols = Vec::with_capacity(frame.cols.len());
             let mut masks = Vec::with_capacity(frame.cols.len());
@@ -800,6 +816,8 @@ pub fn collect_serial(plan: Plan) -> Result<Table> {
         workers: 1,
         passes: PassOptions::none(),
         agg_strategy: AggStrategy::RawShuffle,
+        // the oracle always runs in memory, whatever the env says
+        mem_budget: None,
     };
     let optimized = optimize(plan, &opts.passes)?;
     collect_optimized(&optimized, &opts)

@@ -1,6 +1,8 @@
 //! Timing and throughput instrumentation used by benches, examples and the
-//! bench runs.
+//! bench runs, plus the out-of-core spill counters surfaced in
+//! `BENCH_*.json` (see [`crate::ops::spill`]).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// A simple stopwatch.
@@ -94,6 +96,76 @@ pub fn mrows_per_sec(rows: usize, secs: f64) -> f64 {
     rows as f64 / secs / 1e6
 }
 
+/// Process-global counters for the out-of-core spill subsystem. All ranks
+/// share one instance (ranks are threads), so readings are whole-process
+/// totals; tests assert monotonic deltas rather than exact values because
+/// the test harness runs cases in parallel.
+#[derive(Debug, Default)]
+pub struct SpillStats {
+    bytes_spilled: AtomicU64,
+    partitions_spilled: AtomicU64,
+    spill_passes: AtomicU64,
+    merge_passes: AtomicU64,
+}
+
+/// One consistent-enough reading of [`SpillStats`] (fields are sampled
+/// individually; pair with quiescent points or delta assertions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillSnapshot {
+    pub bytes_spilled: u64,
+    pub partitions_spilled: u64,
+    pub spill_passes: u64,
+    pub merge_passes: u64,
+}
+
+impl SpillStats {
+    const fn new() -> SpillStats {
+        SpillStats {
+            bytes_spilled: AtomicU64::new(0),
+            partitions_spilled: AtomicU64::new(0),
+            spill_passes: AtomicU64::new(0),
+            merge_passes: AtomicU64::new(0),
+        }
+    }
+
+    /// One hash-partition pass that wrote `partitions` non-empty partition
+    /// files totalling `bytes` on disk.
+    pub fn record_spill_pass(&self, partitions: u64, bytes: u64) {
+        self.spill_passes.fetch_add(1, Ordering::Relaxed);
+        self.partitions_spilled.fetch_add(partitions, Ordering::Relaxed);
+        self.bytes_spilled.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// One merge pass (k-way run merge or partition-at-a-time merge).
+    pub fn record_merge_pass(&self) {
+        self.merge_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SpillSnapshot {
+        SpillSnapshot {
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            partitions_spilled: self.partitions_spilled.load(Ordering::Relaxed),
+            spill_passes: self.spill_passes.load(Ordering::Relaxed),
+            merge_passes: self.merge_passes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (bench runs reset between tables).
+    pub fn reset(&self) {
+        self.bytes_spilled.store(0, Ordering::Relaxed);
+        self.partitions_spilled.store(0, Ordering::Relaxed);
+        self.spill_passes.store(0, Ordering::Relaxed);
+        self.merge_passes.store(0, Ordering::Relaxed);
+    }
+}
+
+static SPILL: SpillStats = SpillStats::new();
+
+/// The process-global spill counters.
+pub fn spill_stats() -> &'static SpillStats {
+    &SPILL
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +198,27 @@ mod tests {
     #[test]
     fn throughput() {
         assert_eq!(mrows_per_sec(2_000_000, 2.0), 1.0);
+    }
+
+    #[test]
+    fn spill_stats_accumulate() {
+        // The global instance is shared across parallel tests; use a local
+        // one for exact arithmetic.
+        let s = SpillStats::new();
+        assert_eq!(s.snapshot().bytes_spilled, 0);
+        s.record_spill_pass(4, 1000);
+        s.record_spill_pass(2, 500);
+        s.record_merge_pass();
+        let snap = s.snapshot();
+        assert_eq!(snap.bytes_spilled, 1500);
+        assert_eq!(snap.partitions_spilled, 6);
+        assert_eq!(snap.spill_passes, 2);
+        assert_eq!(snap.merge_passes, 1);
+        s.reset();
+        assert_eq!(s.snapshot().spill_passes, 0);
+        // The global accessor hands out the same instance.
+        let before = spill_stats().snapshot();
+        spill_stats().record_merge_pass();
+        assert!(spill_stats().snapshot().merge_passes > before.merge_passes);
     }
 }

@@ -18,16 +18,18 @@
 //!   `[key row, states…]` records, merge after. A classic combiner; wins
 //!   when keys repeat within ranks (§Perf).
 
-use super::join::MaskedCol;
+use super::join::{concat_nullable, MaskedCol};
 use super::keys::{
     cmp_key_rows, decode_key_row, encode_key_cells_nullable, group_packed, key_columns,
     key_rows_nullable, skip_key_row, KeyNullability, KeyRow, PackedKeys,
 };
 use super::shuffle::shuffle_by_packed_nullable;
+use super::spill::{masked_bytes, nullable_bytes, PartitionStore, SpillCtx, MAX_SPILL_DEPTH};
 use crate::column::{Column, NullableColumn, ValidityMask};
 use crate::comm::Comm;
 use crate::expr::{AggFn, AggState};
 use crate::fxhash::FxHashMap;
+use crate::metrics::spill_stats;
 use crate::types::DType;
 use anyhow::{bail, Result};
 
@@ -66,6 +68,35 @@ pub fn distributed_aggregate_keys(
     strategy: AggStrategy,
     nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    distributed_aggregate_keys_budgeted(
+        comm,
+        key_cols,
+        expr_cols,
+        specs,
+        strategy,
+        nullability,
+        &SpillCtx::unlimited(),
+    )
+}
+
+/// [`distributed_aggregate_keys`] under a per-rank memory budget. When the
+/// post-shuffle working set exceeds `spill`'s budget, the raw-shuffle
+/// strategy's local aggregation becomes two-phase: rows are hash-
+/// partitioned to disk on the key tuple, each partition is aggregated in
+/// memory (recursing up to [`MAX_SPILL_DEPTH`] on oversized partitions),
+/// and the per-partition results are merged partition-at-a-time. The
+/// pre-aggregation strategy keeps its in-memory combiner — its hash table
+/// holds one decomposed state per *distinct* key, which is exactly the
+/// shape that shrinks under the budget's pressure.
+pub fn distributed_aggregate_keys_budgeted(
+    comm: &Comm,
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
+    specs: &[AggSpec],
+    strategy: AggStrategy,
+    nullability: KeyNullability,
+    spill: &SpillCtx,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     assert_eq!(expr_cols.len(), specs.len());
     if key_cols.is_empty() {
         bail!("aggregate: key column list must be non-empty");
@@ -99,7 +130,7 @@ pub fn distributed_aggregate_keys(
                 .zip(rem)
                 .map(|(c, m)| (c, m.as_ref()))
                 .collect();
-            local_packed_aggregate(&krefs, &erefs, specs)
+            local_packed_aggregate_budgeted(&krefs, &erefs, specs, spill)
         }
         AggStrategy::PreAggregate => {
             // fold locally into partial states per packed key group,
@@ -224,6 +255,108 @@ pub fn local_packed_aggregate(
         push_outputs(&mut outs, specs, &states[g]);
     }
     Ok((key_out, finish_outputs(outs)))
+}
+
+/// [`local_packed_aggregate`] under a memory budget: in-memory when the
+/// working set fits, two-phase spillable aggregation otherwise.
+pub fn local_packed_aggregate_budgeted(
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
+    specs: &[AggSpec],
+    spill: &SpillCtx,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    if key_cols.is_empty() {
+        bail!("aggregate: key column list must be non-empty");
+    }
+    if !spill.should_spill(masked_bytes(key_cols) + masked_bytes(expr_cols)) {
+        return local_packed_aggregate(key_cols, expr_cols, specs);
+    }
+    spill_aggregate(key_cols, expr_cols, specs, spill, 0)
+}
+
+/// Two-phase spillable aggregation, **byte-identical** to
+/// [`local_packed_aggregate`]:
+///
+/// * Rows are hash-partitioned to disk on the full key tuple, so every
+///   group lives inside exactly one partition, and each partition keeps
+///   its rows in original relative order — each group therefore folds its
+///   inputs in exactly the in-memory order (floating-point accumulation
+///   included).
+/// * Per-partition results are concatenated and re-sorted by the same
+///   packed key-tuple comparator the in-memory path sorts by; group keys
+///   are globally unique, so the order (and every output byte) matches.
+fn spill_aggregate(
+    key_cols: &[MaskedCol],
+    expr_cols: &[MaskedCol],
+    specs: &[AggSpec],
+    spill: &SpillCtx,
+    level: u32,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+    let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+    let packed = PackedKeys::pack_nullable(&kc, &km)?;
+    let n = packed.len();
+    let hashes: Vec<u64> = (0..n).map(|i| packed.hash_row(i)).collect();
+    drop(packed);
+
+    let total = masked_bytes(key_cols) + masked_bytes(expr_cols);
+    let nparts = spill.budget().partition_count(total);
+    let all: Vec<MaskedCol> = key_cols.iter().chain(expr_cols).copied().collect();
+    let mut store = PartitionStore::partition(spill, "agg", nparts, level, &hashes, &all)?;
+
+    let nk = key_cols.len();
+    let mut acc: Option<(Vec<NullableColumn>, Vec<NullableColumn>)> = None;
+    for p in 0..nparts {
+        let (cols, masks) = store.read_part(p)?;
+        spill_stats().record_merge_pass();
+        let (kcols, ecols) = cols.split_at(nk);
+        let (kms, ems) = masks.split_at(nk);
+        let krefs: Vec<MaskedCol> = kcols.iter().zip(kms).map(|(c, m)| (c, m.as_ref())).collect();
+        let erefs: Vec<MaskedCol> = ecols.iter().zip(ems).map(|(c, m)| (c, m.as_ref())).collect();
+        let part_rows = kcols.first().map_or(0, |c| c.len());
+        let recurse = level + 1 < MAX_SPILL_DEPTH
+            && part_rows < n
+            && spill.should_spill(nullable_bytes(&cols, &masks));
+        let (pk, pv) = if recurse {
+            spill_aggregate(&krefs, &erefs, specs, spill, level + 1)?
+        } else {
+            local_packed_aggregate(&krefs, &erefs, specs)?
+        };
+        acc = Some(match acc {
+            None => (pk, pv),
+            Some((ak, av)) => (
+                ak.into_iter()
+                    .zip(&pk)
+                    .map(|(a, b)| concat_nullable(a, b))
+                    .collect(),
+                av.into_iter()
+                    .zip(&pv)
+                    .map(|(a, b)| concat_nullable(a, b))
+                    .collect(),
+            ),
+        });
+    }
+    let (keys, vals) = acc.expect("partition_count is at least 2");
+
+    // Global group order: the same ascending packed-tuple comparator the
+    // in-memory path uses. Keys are unique, so unstable sort is exact.
+    let kc2: Vec<&Column> = keys.iter().map(|c| &c.values).collect();
+    let km2: Vec<Option<&ValidityMask>> = keys.iter().map(|c| c.validity.as_ref()).collect();
+    let packed2 = PackedKeys::pack_nullable(&kc2, &km2)?;
+    let mut order: Vec<usize> = (0..packed2.len()).collect();
+    order.sort_unstable_by(|&a, &b| packed2.cmp_rows(a, &packed2, b));
+    drop(packed2);
+    let reorder = |cols: Vec<NullableColumn>| -> Vec<NullableColumn> {
+        cols.into_iter()
+            .map(|c| {
+                NullableColumn::new(
+                    c.values.take(&order),
+                    c.validity.as_ref().map(|m| m.take(&order)),
+                )
+            })
+            .collect()
+    };
+    Ok((reorder(keys), reorder(vals)))
 }
 
 /// Purely local hash aggregation over composite keys via materialized

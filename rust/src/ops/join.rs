@@ -29,6 +29,8 @@
 use super::keys::{KeyNullability, KeyRow, PackedKeys};
 use super::shuffle::{shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable};
 use super::skew::{detect_heavy_hitters, HeavySet};
+use super::spill::{nullable_bytes, PartitionStore, SpillCtx, MAX_SPILL_DEPTH};
+use crate::metrics::spill_stats;
 use crate::column::{
     decode_nullable_column, encode_nullable_column_take, extend_opt_mask, normalize_mask,
     Column, NullableColumn, ValidityMask,
@@ -256,6 +258,38 @@ pub fn distributed_join_on_strategy(
     strategy: JoinStrategy,
     nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
+    distributed_join_on_budgeted(
+        comm,
+        lkeys,
+        lpay,
+        rkeys,
+        rpay,
+        how,
+        strategy,
+        nullability,
+        &SpillCtx::unlimited(),
+    )
+}
+
+/// [`distributed_join_on_strategy`] under a per-rank memory budget. When
+/// the post-shuffle build side exceeds `spill`'s budget, the local join
+/// becomes a grace hash join: both sides are hash-partitioned to disk
+/// (level-salted so recursion splits along fresh boundaries), partitions
+/// are joined one at a time, and oversized partitions recurse up to
+/// [`MAX_SPILL_DEPTH`]. The output is byte-identical to the in-memory
+/// path for every join type — see `grace_join_pairs` for the argument.
+#[allow(clippy::too_many_arguments)]
+pub fn distributed_join_on_budgeted(
+    comm: &Comm,
+    lkeys: &[MaskedCol],
+    lpay: &[MaskedCol],
+    rkeys: &[MaskedCol],
+    rpay: &[MaskedCol],
+    how: JoinType,
+    strategy: JoinStrategy,
+    nullability: KeyNullability,
+    spill: &SpillCtx,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>, Vec<NullableColumn>)> {
     if lkeys.len() != rkeys.len() || lkeys.is_empty() {
         bail!("join: key column lists must be non-empty and equal length");
     }
@@ -311,7 +345,7 @@ pub fn distributed_join_on_strategy(
             shuffle_by_packed_nullable(comm, &lpacked_pre, &lall, &lmasks)?;
         let (rcols, rms) =
             shuffle_by_packed_nullable(comm, &rpacked_pre, &rall, &rmasks)?;
-        let (pairs, _) = join_partition(nk, &lcols, &lms, &rcols, &rms, how, true)?;
+        let (pairs, _) = join_partition(nk, &lcols, &lms, &rcols, &rms, how, true, spill)?;
         return Ok(assemble_outputs(nk, &lcols, &lms, &rcols, &rms, &pairs, how));
     }
 
@@ -330,7 +364,7 @@ pub fn distributed_join_on_strategy(
         shuffle_rows_by_owner_nullable(comm, &llight_owners, &llight_idx, &lall, &lmasks)?;
     let (r1, rm1) =
         shuffle_rows_by_owner_nullable(comm, &rlight_owners, &rlight_idx, &rall, &rmasks)?;
-    let (pairs1, _) = join_partition(nk, &l1, &lm1, &r1, &rm1, how, true)?;
+    let (pairs1, _) = join_partition(nk, &l1, &lm1, &r1, &rm1, how, true, spill)?;
     let (k1, lo1, ro1) = assemble_outputs(nk, &l1, &lm1, &r1, &rm1, &pairs1, how);
 
     // heavy partition: probe rows stay local (they are already spread over
@@ -340,7 +374,7 @@ pub fn distributed_join_on_strategy(
     let (l2, lm2) = take_rows(&lall, &lmasks, &lheavy_idx);
     let (r2, rm2, my_start) = replicate_rows(comm, &rall, &rmasks, &rheavy_idx)?;
     let (mut pairs2, right_matched) =
-        join_partition(nk, &l2, &lm2, &r2, &rm2, how, false)?;
+        join_partition(nk, &l2, &lm2, &r2, &rm2, how, false, spill)?;
     if matches!(how, JoinType::Right | JoinType::Outer) {
         // a replicated build row may be matched on any rank: OR-merge the
         // flags and emit each globally-unmatched row exactly once, on the
@@ -446,6 +480,7 @@ fn replicate_rows(
 /// rows — correct whenever the two sides' equal keys are fully colocated
 /// (the hash path and the light partition); the heavy partition passes
 /// `false` and resolves unmatched build rows globally instead.
+#[allow(clippy::too_many_arguments)]
 fn join_partition(
     nk: usize,
     lcols: &[Column],
@@ -454,18 +489,21 @@ fn join_partition(
     rmasks: &[Option<ValidityMask>],
     how: JoinType,
     emit_right_unmatched: bool,
+    spill: &SpillCtx,
 ) -> Result<(Vec<(Option<usize>, Option<usize>)>, Vec<bool>)> {
-    let lkrefs: Vec<&Column> = lcols[..nk].iter().collect();
-    let rkrefs: Vec<&Column> = rcols[..nk].iter().collect();
-    let lkm: Vec<Option<&ValidityMask>> =
-        lmasks[..nk].iter().map(|m| m.as_ref()).collect();
-    let rkm: Vec<Option<&ValidityMask>> =
-        rmasks[..nk].iter().map(|m| m.as_ref()).collect();
     // post-routing: only the two local sides must agree on the layout
-    let flags = lkm.iter().chain(&rkm).any(|m| m.is_some());
-    let lpacked = PackedKeys::pack_masked(&lkrefs, &lkm, flags)?;
-    let rpacked = PackedKeys::pack_masked(&rkrefs, &rkm, flags)?;
-    let (mut pairs, right_matched) = packed_join_pairs_partial(&lpacked, &rpacked, how);
+    let flags = lmasks[..nk]
+        .iter()
+        .chain(&rmasks[..nk])
+        .any(|m| m.is_some());
+    let build_bytes = nullable_bytes(rcols, rmasks);
+    let (mut pairs, right_matched) = if spill.should_spill(build_bytes) {
+        grace_join_pairs(nk, lcols, lmasks, rcols, rmasks, how, flags, spill, 0)?
+    } else {
+        let lpacked = pack_key_prefix(lcols, lmasks, nk, flags)?;
+        let rpacked = pack_key_prefix(rcols, rmasks, nk, flags)?;
+        packed_join_pairs_partial(&lpacked, &rpacked, how)
+    };
     if emit_right_unmatched && matches!(how, JoinType::Right | JoinType::Outer) {
         for (j, m) in right_matched.iter().enumerate() {
             if !m {
@@ -474,6 +512,120 @@ fn join_partition(
         }
     }
     Ok((pairs, right_matched))
+}
+
+/// Pack the first `nk` columns (the keys) with an explicit flag layout.
+fn pack_key_prefix<'a>(
+    cols: &'a [Column],
+    masks: &'a [Option<ValidityMask>],
+    nk: usize,
+    flags: bool,
+) -> Result<PackedKeys<'a>> {
+    let krefs: Vec<&Column> = cols[..nk].iter().collect();
+    let km: Vec<Option<&ValidityMask>> = masks[..nk].iter().map(|m| m.as_ref()).collect();
+    PackedKeys::pack_masked(&krefs, &km, flags)
+}
+
+/// Grace hash join of one colocated partition whose build side exceeds the
+/// memory budget: hash-partition both sides to disk on the key hash
+/// ([`super::spill::part_of`], salted by `level`), join partition at a
+/// time, and recurse on partitions that are still oversized (duplicate
+/// keys can defeat partitioning, so recursion stops at [`MAX_SPILL_DEPTH`]
+/// or when a partition stops shrinking).
+///
+/// Returns the same `(probe pairs, right_matched)` contract as
+/// [`packed_join_pairs_partial`], **byte-identical** to it:
+///
+/// * Equal key tuples have equal hashes, so every match lives inside one
+///   partition; the per-partition joins find exactly the global match set,
+///   and Semi/Anti first-match semantics are local to a partition.
+/// * The in-memory probe emits pairs sorted by `(left, right)` — probe
+///   rows ascending, and for one probe row its matches ascending (the
+///   build index lists candidates in insertion order) — with at most one
+///   `(Some(i), None)` per probe row and never both forms for one `i`.
+///   Mapping each partition's pairs back through its spilled original-row
+///   indices and sorting by `(left, right)` therefore reproduces the
+///   in-memory emission exactly.
+/// * `right_matched` is the union of the per-partition flags mapped the
+///   same way (Semi/Anti never set them, matching the in-memory path).
+#[allow(clippy::too_many_arguments)]
+fn grace_join_pairs(
+    nk: usize,
+    lcols: &[Column],
+    lmasks: &[Option<ValidityMask>],
+    rcols: &[Column],
+    rmasks: &[Option<ValidityMask>],
+    how: JoinType,
+    flags: bool,
+    spill: &SpillCtx,
+    level: u32,
+) -> Result<(Vec<(Option<usize>, Option<usize>)>, Vec<bool>)> {
+    let ln = lcols.first().map_or(0, |c| c.len());
+    let rn = rcols.first().map_or(0, |c| c.len());
+    let lpacked = pack_key_prefix(lcols, lmasks, nk, flags)?;
+    let rpacked = pack_key_prefix(rcols, rmasks, nk, flags)?;
+    let lhashes: Vec<u64> = (0..ln).map(|i| lpacked.hash_row(i)).collect();
+    let rhashes: Vec<u64> = (0..rn).map(|j| rpacked.hash_row(j)).collect();
+    drop(lpacked);
+    drop(rpacked);
+
+    let nparts = spill.budget().partition_count(nullable_bytes(rcols, rmasks));
+    // Spill each side's columns plus one synthetic I64 column holding the
+    // original row index, so partition-local pairs map back exactly.
+    let lid = Column::I64((0..ln as i64).collect());
+    let rid = Column::I64((0..rn as i64).collect());
+    let mut lset: Vec<MaskedCol> = lcols.iter().zip(lmasks).map(|(c, m)| (c, m.as_ref())).collect();
+    lset.push((&lid, None));
+    let mut rset: Vec<MaskedCol> = rcols.iter().zip(rmasks).map(|(c, m)| (c, m.as_ref())).collect();
+    rset.push((&rid, None));
+    let mut lstore = PartitionStore::partition(spill, "join-probe", nparts, level, &lhashes, &lset)?;
+    let mut rstore = PartitionStore::partition(spill, "join-build", nparts, level, &rhashes, &rset)?;
+
+    let mut pairs: Vec<(Option<usize>, Option<usize>)> = Vec::new();
+    let mut right_matched = vec![false; rn];
+    for p in 0..nparts {
+        if lstore.part_rows(p) == 0 && rstore.part_rows(p) == 0 {
+            continue;
+        }
+        let (mut lp, mut lpm) = lstore.read_part(p)?;
+        let (mut rp, mut rpm) = rstore.read_part(p)?;
+        let lmap = pop_index_column(&mut lp, &mut lpm);
+        let rmap = pop_index_column(&mut rp, &mut rpm);
+        spill_stats().record_merge_pass();
+
+        let recurse = level + 1 < MAX_SPILL_DEPTH
+            && rmap.len() < rn
+            && spill.should_spill(nullable_bytes(&rp, &rpm));
+        let (ppairs, pmatched) = if recurse {
+            grace_join_pairs(nk, &lp, &lpm, &rp, &rpm, how, flags, spill, level + 1)?
+        } else {
+            let lpk = pack_key_prefix(&lp, &lpm, nk, flags)?;
+            let rpk = pack_key_prefix(&rp, &rpm, nk, flags)?;
+            packed_join_pairs_partial(&lpk, &rpk, how)
+        };
+        for (lo, ro) in ppairs {
+            pairs.push((lo.map(|i| lmap[i]), ro.map(|j| rmap[j])));
+        }
+        for (j, m) in pmatched.iter().enumerate() {
+            if *m {
+                right_matched[rmap[j]] = true;
+            }
+        }
+    }
+    // Reconstruct the in-memory probe emission order (see doc comment):
+    // `(Option<usize>, Option<usize>)` tuple order IS that order.
+    pairs.sort_unstable();
+    Ok((pairs, right_matched))
+}
+
+/// Detach the trailing synthetic row-index column written by
+/// [`grace_join_pairs`]'s spill pass.
+fn pop_index_column(cols: &mut Vec<Column>, masks: &mut Vec<Option<ValidityMask>>) -> Vec<usize> {
+    masks.pop();
+    match cols.pop() {
+        Some(Column::I64(v)) => v.into_iter().map(|x| x as usize).collect(),
+        other => unreachable!("spill index column missing: {other:?}"),
+    }
 }
 
 /// Build the join's output columns from its `(left, right)` index pairs:
@@ -543,8 +695,8 @@ fn assemble_outputs(
 }
 
 /// Append `b`'s rows to `a` (values and validity) — the partition union of
-/// the skew path.
-fn concat_nullable(a: NullableColumn, b: &NullableColumn) -> NullableColumn {
+/// the skew path and of the spill operators' partition-at-a-time merges.
+pub(crate) fn concat_nullable(a: NullableColumn, b: &NullableColumn) -> NullableColumn {
     let NullableColumn {
         mut values,
         validity,

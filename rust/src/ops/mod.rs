@@ -27,6 +27,10 @@
 //!   row order.
 //! * [`sort`] — sample-sort global ordering (result canonicalization,
 //!   TPCx-BB top-N steps).
+//! * [`spill`] — out-of-core substrate: per-rank memory budgets, hash
+//!   partitioning to disk over the codec wire format, spill-file lifecycle.
+//!   Join, aggregate and sort fall back to grace partitioning / external
+//!   merge when their working set exceeds the budget.
 
 pub mod aggregate;
 pub mod join;
@@ -36,16 +40,17 @@ pub mod scan;
 pub mod shuffle;
 pub mod skew;
 pub mod sort;
+pub mod spill;
 pub mod stencil;
 pub mod window;
 
 pub use aggregate::{
     agg_output_nullable, distributed_aggregate, distributed_aggregate_keys,
-    local_hash_aggregate_keys, local_packed_aggregate,
+    distributed_aggregate_keys_budgeted, local_hash_aggregate_keys, local_packed_aggregate,
 };
 pub use join::{
-    distributed_join, distributed_join_on, distributed_join_on_strategy,
-    local_join_pairs, local_sort_merge_join, packed_join_pairs,
+    distributed_join, distributed_join_on, distributed_join_on_budgeted,
+    distributed_join_on_strategy, local_join_pairs, local_sort_merge_join, packed_join_pairs,
     packed_join_pairs_partial, MaskedCol,
 };
 pub use keys::{group_packed, KeyGroups, KeyNullability, KeyRow, KeyVal, PackedKeys, SortKeys};
@@ -56,7 +61,8 @@ pub use shuffle::{
     shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable,
 };
 pub use skew::{detect_heavy_hitters, HeavySet};
-pub use sort::{distributed_sort_by_key, distributed_sort_keys};
+pub use sort::{distributed_sort_by_key, distributed_sort_keys, distributed_sort_keys_budgeted};
+pub use spill::{MemoryBudget, PartitionStore, SpillCtx, SpillFile, MAX_SPILL_DEPTH};
 pub use stencil::{stencil_1d, stencil_serial};
 pub use window::{
     partition_runs, rank_from_breaks, row_numbers, shift_window, window_1d, window_group,

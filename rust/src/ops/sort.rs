@@ -17,16 +17,23 @@
 //! precedes the value bytes, [`KeyVal::Null`] is the smallest `KeyVal`.
 //! Because the flagged row width must match on every rank (splitters are
 //! raw rows), the flag choice is agreed globally up front.
+//!
+//! Under a spill budget ([`super::spill::SpillCtx`]) the packed path's two
+//! local sort phases switch to an external merge sort — contiguous sorted
+//! runs on disk plus a streaming k-way merge — that reproduces the stable
+//! in-memory order byte for byte (see [`external_merge_sort`]).
 
 use super::join::MaskedCol;
 use super::keys::{
     self, cmp_key_rows, decode_key_row, encode_key_row, KeyNullability, KeyRow, SortKeys,
 };
+use super::spill::{masked_bytes, FrameReader, SpillCtx, SPILL_CHUNK_ROWS};
 use crate::column::{
-    decode_nullable_column, encode_nullable_column, extend_opt_mask, Column, NullableColumn,
-    ValidityMask,
+    decode_nullable_column, encode_nullable_column, encode_nullable_column_take, extend_opt_mask,
+    Column, NullableColumn, ValidityMask,
 };
 use crate::comm::Comm;
+use crate::metrics::spill_stats;
 use crate::types::SortOrder;
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
@@ -43,6 +50,31 @@ pub fn distributed_sort_keys(
     payload: &[MaskedCol],
     nullability: KeyNullability,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
+    distributed_sort_keys_budgeted(
+        comm,
+        key_cols,
+        orders,
+        payload,
+        nullability,
+        &SpillCtx::unlimited(),
+    )
+}
+
+/// [`distributed_sort_keys`] under a spill budget: when a rank's working
+/// set exceeds `spill`'s budget, the packed path's two local sort phases
+/// fall back to an external merge sort (sorted runs on disk + streaming
+/// k-way merge) instead of materializing the full argsorted copy. The
+/// String-key KeyRow fallback stays in memory — out-of-core ordering is
+/// defined over the fixed-width [`SortKeys`] layout. With an unlimited
+/// budget every step is byte-identical to [`distributed_sort_keys`].
+pub fn distributed_sort_keys_budgeted(
+    comm: &Comm,
+    key_cols: &[MaskedCol],
+    orders: &[SortOrder],
+    payload: &[MaskedCol],
+    nullability: KeyNullability,
+    spill: &SpillCtx,
+) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     if key_cols.is_empty() {
         bail!("sort: key column list must be non-empty");
     }
@@ -53,7 +85,7 @@ pub fn distributed_sort_keys(
     // resolve the choice from the schema with no collective
     let with_flags = nullability.with_flags(comm, km.iter().any(|m| m.is_some()));
     if let Some(sk) = SortKeys::pack_nullable(&kc, &km, orders, with_flags)? {
-        return sort_packed(comm, sk, key_cols, orders, payload, with_flags);
+        return sort_packed(comm, sk, key_cols, orders, payload, with_flags, spill);
     }
     let p = comm.nranks();
     let krows = keys::key_rows_nullable(&kc, &km)?;
@@ -152,19 +184,22 @@ fn sort_packed(
     orders: &[SortOrder],
     payload: &[MaskedCol],
     with_flags: bool,
+    spill: &SpillCtx,
 ) -> Result<(Vec<NullableColumn>, Vec<NullableColumn>)> {
     let p = comm.nranks();
     let n = sk.len();
-    // local argsort (stable — Timsort-family, as in the paper)
-    let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
-    let skey: Vec<NullableColumn> = take_masked(key_cols, &idx);
-    let spay: Vec<NullableColumn> = take_masked(payload, &idx);
+    let nk = key_cols.len();
+    // local sort (stable — Timsort-family, as in the paper — when the
+    // working set fits the budget; external merge sort otherwise)
+    let all: Vec<MaskedCol> = key_cols.iter().chain(payload.iter()).copied().collect();
+    let (mut sorted, ssk) = sort_rows_budgeted(&sk, &all, nk, orders, with_flags, p > 1, spill)?;
+    let spay = sorted.split_off(nk);
+    let skey = sorted;
 
     if p == 1 {
         return Ok((skey, spay));
     }
-    let ssk = sk.take(&idx);
+    let ssk = ssk.expect("sorted keys requested for the multi-rank path");
     let w = ssk.width();
 
     // regular sampling: p packed sample rows per non-empty rank → root
@@ -221,7 +256,8 @@ fn sort_packed(
     }
     let received = comm.alltoallv_bytes(bufs);
 
-    // collect received runs and merge by one final packed local sort
+    // collect received runs and merge by one final packed local sort —
+    // again in memory or external, depending on the budget
     let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
     let (rkeys, rpay) = decode_runs(&kc, payload, received)?;
     let rk_refs: Vec<&Column> = rkeys.iter().map(|c| &c.values).collect();
@@ -229,9 +265,215 @@ fn sort_packed(
         rkeys.iter().map(|c| c.validity.as_ref()).collect();
     let rsk = SortKeys::pack_nullable(&rk_refs, &rk_masks, orders, with_flags)?
         .expect("Int64/Bool keys stay packable");
-    let mut idx: Vec<usize> = (0..rsk.len()).collect();
-    idx.sort_by(|&a, &b| rsk.row(a).cmp(rsk.row(b)));
-    Ok((take_owned(&rkeys, &idx), take_owned(&rpay, &idx)))
+    let rall: Vec<MaskedCol> = rkeys
+        .iter()
+        .chain(rpay.iter())
+        .map(|c| c.as_masked())
+        .collect();
+    let (mut rsorted, _) = sort_rows_budgeted(&rsk, &rall, nk, orders, with_flags, false, spill)?;
+    let rp = rsorted.split_off(nk);
+    Ok((rsorted, rp))
+}
+
+/// Stable sort of `cols`' rows by `sk`'s packed bytes: the plain in-memory
+/// argsort + gather when the working set fits the budget, the external
+/// merge sort otherwise. The `nk` leading columns are the sort keys (the
+/// external path re-packs them chunk-at-a-time while merging). With
+/// `need_keys` the packed keys of the sorted order are returned too — on
+/// the external path they are re-packed from the sorted key columns, which
+/// is byte-identical to `sk.take(&idx)` because packing is a pure row-wise
+/// function of (values, validity, orders, with_flags): invalid lanes pack
+/// as flag 0 + value 0 whatever they store, and a mask normalized away
+/// packs like an all-valid mask.
+fn sort_rows_budgeted(
+    sk: &SortKeys,
+    cols: &[MaskedCol],
+    nk: usize,
+    orders: &[SortOrder],
+    with_flags: bool,
+    need_keys: bool,
+    spill: &SpillCtx,
+) -> Result<(Vec<NullableColumn>, Option<SortKeys>)> {
+    if !spill.should_spill(masked_bytes(cols)) {
+        let mut idx: Vec<usize> = (0..sk.len()).collect();
+        idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
+        let keys = if need_keys { Some(sk.take(&idx)) } else { None };
+        return Ok((take_masked(cols, &idx), keys));
+    }
+    let sorted = external_merge_sort(sk, cols, nk, orders, with_flags, spill)?;
+    let keys = if need_keys {
+        let krefs: Vec<&Column> = sorted[..nk].iter().map(|c| &c.values).collect();
+        let kmasks: Vec<Option<&ValidityMask>> =
+            sorted[..nk].iter().map(|c| c.validity.as_ref()).collect();
+        Some(
+            SortKeys::pack_nullable(&krefs, &kmasks, orders, with_flags)?
+                .expect("Int64/Bool keys stay packable"),
+        )
+    } else {
+        None
+    };
+    Ok((sorted, keys))
+}
+
+/// External merge sort of `cols` by `sk`: contiguous run slices sized to
+/// the budget are stable-sorted in memory, spilled in sorted order, and
+/// streamed back through a k-way merge that pops the smallest current head
+/// row, breaking key ties toward the earlier run.
+///
+/// Byte-identity with the in-memory stable argsort: the runs partition the
+/// original row order into *contiguous* slices, so among tied head rows
+/// "earlier run" is exactly "earlier original position", and each run is
+/// itself stably sorted — by induction the merged output is the global
+/// stable sort. Values (null-lane fillers included) and validity bits
+/// roundtrip bit-exactly through the nullable codec, and each run reader
+/// holds only one decoded chunk ([`SPILL_CHUNK_ROWS`] rows), so peak
+/// memory is O(runs × chunk) instead of O(n).
+fn external_merge_sort(
+    sk: &SortKeys,
+    cols: &[MaskedCol],
+    nk: usize,
+    orders: &[SortOrder],
+    with_flags: bool,
+    spill: &SpillCtx,
+) -> Result<Vec<NullableColumn>> {
+    let n = sk.len();
+    let nruns = spill.budget().partition_count(masked_bytes(cols));
+    let run_rows = n.div_ceil(nruns).max(1);
+
+    let mut files = Vec::with_capacity(nruns);
+    let mut spilled_bytes = 0u64;
+    let mut frame = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + run_rows).min(n);
+        let mut idx: Vec<usize> = (start..end).collect();
+        idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
+        let mut file = spill.new_file("sort-run")?;
+        for chunk in idx.chunks(SPILL_CHUNK_ROWS) {
+            frame.clear();
+            for &(c, m) in cols {
+                encode_nullable_column_take(c, m, chunk, &mut frame);
+            }
+            file.write_frame(chunk.len(), &frame)?;
+        }
+        file.finish()?;
+        spilled_bytes += file.bytes();
+        files.push(file);
+        start = end;
+    }
+    spill_stats().record_spill_pass(files.len() as u64, spilled_bytes);
+
+    let mut cursors = Vec::with_capacity(files.len());
+    for file in &mut files {
+        let mut cur = RunCursor {
+            reader: file.reader()?,
+            cols: Vec::new(),
+            masks: Vec::new(),
+            keys: None,
+            pos: 0,
+        };
+        cur.refill(cols.len(), nk, orders, with_flags)?;
+        cursors.push(cur);
+    }
+    spill_stats().record_merge_pass();
+
+    let mut out: Vec<(Column, ValidityMask)> = cols
+        .iter()
+        .map(|&(c, _)| (Column::new_empty(c.dtype()), ValidityMask::new_valid(0)))
+        .collect();
+    loop {
+        let mut best: Option<usize> = None;
+        for r in 0..cursors.len() {
+            if cursors[r].exhausted() {
+                continue;
+            }
+            best = Some(match best {
+                // strict "smaller wins" keeps key ties on the earlier run
+                Some(b) if cursors[r].key() >= cursors[b].key() => b,
+                _ => r,
+            });
+        }
+        let Some(b) = best else { break };
+        let cur = &cursors[b];
+        for ((oc, om), (c, m)) in out.iter_mut().zip(cur.cols.iter().zip(&cur.masks)) {
+            oc.push(&c.get(cur.pos));
+            om.push(m.as_ref().map_or(true, |m| m.get(cur.pos)));
+        }
+        cursors[b].advance(cols.len(), nk, orders, with_flags)?;
+    }
+    Ok(out
+        .into_iter()
+        .map(|(c, m)| NullableColumn::new(c, Some(m)))
+        .collect())
+}
+
+/// One run's streaming state in the k-way merge: the current decoded chunk
+/// plus that chunk's rows re-packed under the same (orders, with_flags) as
+/// the global [`SortKeys`] — packing is row-wise, so a chunk-local packed
+/// row equals the global packing of the same row.
+struct RunCursor {
+    reader: FrameReader,
+    cols: Vec<Column>,
+    masks: Vec<Option<ValidityMask>>,
+    keys: Option<SortKeys>,
+    pos: usize,
+}
+
+impl RunCursor {
+    fn exhausted(&self) -> bool {
+        self.keys.as_ref().map_or(true, |k| self.pos >= k.len())
+    }
+
+    fn key(&self) -> &[u8] {
+        self.keys
+            .as_ref()
+            .expect("cursor checked non-exhausted")
+            .row(self.pos)
+    }
+
+    fn refill(
+        &mut self,
+        ncols: usize,
+        nk: usize,
+        orders: &[SortOrder],
+        with_flags: bool,
+    ) -> Result<()> {
+        self.pos = 0;
+        self.keys = None;
+        let Some(frame) = self.reader.next_frame()? else {
+            return Ok(());
+        };
+        let mut at = 0usize;
+        self.cols.clear();
+        self.masks.clear();
+        for _ in 0..ncols {
+            let (c, m) = decode_nullable_column(&frame, &mut at)?;
+            self.cols.push(c);
+            self.masks.push(m);
+        }
+        let krefs: Vec<&Column> = self.cols[..nk].iter().collect();
+        let kmasks: Vec<Option<&ValidityMask>> =
+            self.masks[..nk].iter().map(|m| m.as_ref()).collect();
+        self.keys = Some(
+            SortKeys::pack_nullable(&krefs, &kmasks, orders, with_flags)?
+                .expect("Int64/Bool keys stay packable"),
+        );
+        Ok(())
+    }
+
+    fn advance(
+        &mut self,
+        ncols: usize,
+        nk: usize,
+        orders: &[SortOrder],
+        with_flags: bool,
+    ) -> Result<()> {
+        self.pos += 1;
+        if self.exhausted() {
+            self.refill(ncols, nk, orders, with_flags)?;
+        }
+        Ok(())
+    }
 }
 
 fn take_masked(cols: &[MaskedCol], idx: &[usize]) -> Vec<NullableColumn> {
@@ -548,6 +790,56 @@ mod tests {
         // and stays order-identical for fully valid keys
         let (c_, _) = run(KeyNullability::Static(true));
         assert_eq!(a, c_);
+    }
+
+    #[test]
+    fn budgeted_sort_is_byte_identical_and_spills() {
+        use super::super::spill::{MemoryBudget, SpillCtx};
+        // duplicate-heavy keys + a row-id payload make any stability
+        // violation or row reorder visible; nulls exercise the flagged
+        // layout through the spill codec roundtrip
+        let mut rng = Rng::new(41);
+        let data: Vec<i64> = (0..240).map(|_| rng.i64_range(0, 8)).collect();
+        let nulls: Vec<bool> = (0..240).map(|i| i % 7 == 0).collect();
+        let run = |budget: Option<usize>| {
+            run_spmd(3, |c| {
+                let (s, l) = block_range(data.len(), 3, c.rank());
+                let kc = Column::I64(data[s..s + l].to_vec());
+                let mask = ValidityMask::from_bools(
+                    &nulls[s..s + l].iter().map(|&b| !b).collect::<Vec<_>>(),
+                );
+                let pay = Column::I64((s as i64..(s + l) as i64).collect());
+                let spill = SpillCtx::new(MemoryBudget::from_opt(budget), c.rank());
+                let (kcols, pcols) = distributed_sort_keys_budgeted(
+                    &c,
+                    &[(&kc, Some(&mask))],
+                    &[SortOrder::Asc],
+                    &[(&pay, None)],
+                    KeyNullability::Runtime,
+                    &spill,
+                )
+                .unwrap();
+                (0..kcols[0].len())
+                    .map(|i| {
+                        (
+                            kcols[0].values.as_i64()[i],
+                            kcols[0].is_valid(i),
+                            pcols[0].values.as_i64()[i],
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            })
+        };
+        let base = run(None);
+        let before = spill_stats().snapshot();
+        let tight = run(Some(256)); // ~2KB per rank >> 256B: both phases spill
+        let after = spill_stats().snapshot();
+        assert_eq!(base, tight, "budgeted sort diverged from in-memory sort");
+        // counters are global, so only the delta around the tight run is
+        // ours to assert on (and concurrent tests can only add to it)
+        assert!(after.bytes_spilled > before.bytes_spilled);
+        assert!(after.spill_passes > before.spill_passes);
+        assert!(after.merge_passes > before.merge_passes);
     }
 
     #[test]

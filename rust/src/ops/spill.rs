@@ -1,0 +1,632 @@
+//! Out-of-core execution substrate: per-rank memory budgets and disk spill.
+//!
+//! HiFrames' operators materialize their inputs in RAM, which caps the
+//! largest serviceable dataset at cluster memory. This module is the
+//! foundation that lifts that ceiling (ROADMAP "out-of-core execution"):
+//!
+//! * [`MemoryBudget`] — a per-rank byte budget (configured through
+//!   `HIFRAMES_MEM_BUDGET` / [`crate::config::mem_budget_from_env`]),
+//!   tracked against [`Column::byte_size`] + validity-mask bytes.
+//! * [`SpillFile`] — an on-disk sequence of u64-length-framed chunks, each
+//!   chunk holding one `column/codec.rs` nullable encoding per column (the
+//!   same wire format the shuffle and HFS use, so null positions survive
+//!   the disk roundtrip bit-exactly).
+//! * [`PartitionStore`] — hash-partitions a set of columns into `P` spill
+//!   files using a level-salted finalizer mix ([`part_of`]) that is
+//!   *independent* of the shuffle's `hash % nranks` routing (post-shuffle,
+//!   all local rows agree mod `nranks`, so partitioning by the raw hash
+//!   modulus would put everything in one bucket).
+//! * [`SpillCtx`] — per-rank operator context owning the lazily created
+//!   spill directory; dropping it (success *or* error path) deletes the
+//!   files. Directories embed pid + rank so concurrent runs never collide,
+//!   and a once-per-process sweep removes droppings of dead processes.
+//!
+//! The grace hash join ([`super::join`]), the two-phase spillable
+//! aggregation ([`super::aggregate`]) and the external merge sort
+//! ([`super::sort`]) all sit on these primitives; see DESIGN.md §4.5 for
+//! the byte-identity arguments.
+
+use super::join::MaskedCol;
+use crate::column::{
+    decode_nullable_column, encode_nullable_column_take, extend_opt_mask, Column, ValidityMask,
+};
+use crate::metrics::spill_stats;
+use crate::types::DType;
+use anyhow::{Context, Result};
+use std::cell::{Cell, RefCell};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Once;
+
+/// Recursion cap for grace-join / aggregation re-partitioning. Each level
+/// re-salts the partition hash, so hitting the cap means the data is
+/// pathologically duplicate-heavy; operators then process the partition
+/// in memory rather than recursing forever.
+pub const MAX_SPILL_DEPTH: u32 = 4;
+
+/// Most partitions a single spill pass will fan out to.
+const MAX_FANOUT: usize = 32;
+
+/// Rows per framed chunk inside a spill file — bounds decode working-set
+/// size for the streaming readers (k-way merge reads one chunk per run).
+pub(crate) const SPILL_CHUNK_ROWS: usize = 8192;
+
+// ---------------------------------------------------------------------------
+// Budget
+// ---------------------------------------------------------------------------
+
+/// Per-rank memory budget in bytes. `None` = unlimited (today's in-memory
+/// behavior, bit for bit).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryBudget {
+    limit: Option<usize>,
+}
+
+impl MemoryBudget {
+    pub fn unlimited() -> MemoryBudget {
+        MemoryBudget { limit: None }
+    }
+
+    /// A budget of `n` bytes; `0` means unlimited (mirrors the env knob,
+    /// where `HIFRAMES_MEM_BUDGET=0` disables budgeting).
+    pub fn bytes(n: usize) -> MemoryBudget {
+        MemoryBudget {
+            limit: if n == 0 { None } else { Some(n) },
+        }
+    }
+
+    pub fn from_opt(n: Option<usize>) -> MemoryBudget {
+        MemoryBudget {
+            limit: n.filter(|&n| n > 0),
+        }
+    }
+
+    pub fn limit(&self) -> Option<usize> {
+        self.limit
+    }
+
+    pub fn is_limited(&self) -> bool {
+        self.limit.is_some()
+    }
+
+    /// Does holding `bytes` in memory exceed the budget?
+    pub fn exceeded_by(&self, bytes: usize) -> bool {
+        self.limit.map_or(false, |l| bytes > l)
+    }
+
+    /// Partition fan-out for spilling `total_bytes`: enough partitions that
+    /// each is expected to fit in budget, at least 2 (a 1-way "partition"
+    /// makes no progress), capped so tiny budgets don't open thousands of
+    /// files.
+    pub fn partition_count(&self, total_bytes: usize) -> usize {
+        match self.limit {
+            None => 1,
+            Some(l) => total_bytes.div_ceil(l.max(1)).clamp(2, MAX_FANOUT),
+        }
+    }
+}
+
+/// Budget-relevant bytes of a masked column set: values + validity words.
+pub fn masked_bytes(cols: &[MaskedCol]) -> usize {
+    cols.iter()
+        .map(|&(c, m)| c.byte_size() + m.map_or(0, |m| m.byte_size()))
+        .sum()
+}
+
+/// Budget-relevant bytes of owned columns + optional masks.
+pub fn nullable_bytes(cols: &[Column], masks: &[Option<ValidityMask>]) -> usize {
+    cols.iter().map(|c| c.byte_size()).sum::<usize>()
+        + masks
+            .iter()
+            .map(|m| m.as_ref().map_or(0, |m| m.byte_size()))
+            .sum::<usize>()
+}
+
+// ---------------------------------------------------------------------------
+// Partition hash
+// ---------------------------------------------------------------------------
+
+/// Spill partition of a key hash: a level-salted 64-bit finalizer mix
+/// (murmur3 fmix64) over the row hash, reduced mod `nparts`.
+///
+/// Two properties matter:
+/// * **independent of rank routing** — after a shuffle every local row
+///   satisfies `hash % nranks == rank`, so the raw modulus would collapse
+///   all rows into one bucket; the full-avalanche mix decorrelates the
+///   partition index from the low bits.
+/// * **level-salted** — recursive re-partitioning at `level + 1` splits a
+///   partition along fresh boundaries; without the salt every row of a
+///   partition would rehash into the same child forever.
+pub fn part_of(hash: u64, nparts: usize, level: u32) -> usize {
+    let mut x = hash ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(level as u64 + 1);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    (x % nparts.max(1) as u64) as usize
+}
+
+// ---------------------------------------------------------------------------
+// Spill directories (hygiene)
+// ---------------------------------------------------------------------------
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn spill_root() -> PathBuf {
+    std::env::temp_dir().join("hiframes-spill")
+}
+
+/// Remove spill directories left behind by processes that no longer exist.
+/// Runs once per process, the first time any rank creates a spill dir.
+pub fn sweep_stale_spill_dirs() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let Ok(entries) = std::fs::read_dir(spill_root()) else {
+            return;
+        };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(pid) = name
+                .to_str()
+                .and_then(|s| s.strip_prefix("pid"))
+                .and_then(|s| s.parse::<u32>().ok())
+            else {
+                continue;
+            };
+            if pid != std::process::id() && !pid_alive(pid) {
+                let _ = std::fs::remove_dir_all(e.path());
+            }
+        }
+    });
+}
+
+#[cfg(target_os = "linux")]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+/// Off Linux there is no portable liveness probe in std; never sweep other
+/// processes' directories (our own are covered by `Drop`).
+#[cfg(not(target_os = "linux"))]
+fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// A per-rank spill directory: `$TMPDIR/hiframes-spill/pid<pid>/rank<r>-<n>`.
+/// The pid segment keeps concurrent runs apart; the sequence number keeps
+/// concurrent operators of one run apart. Dropped ⇒ recursively deleted.
+struct SpillDir {
+    path: PathBuf,
+}
+
+impl SpillDir {
+    fn create(rank: usize) -> Result<SpillDir> {
+        sweep_stale_spill_dirs();
+        let seq = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = spill_root()
+            .join(format!("pid{}", std::process::id()))
+            .join(format!("rank{rank}-{seq}"));
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("spill: creating {}", path.display()))?;
+        Ok(SpillDir { path })
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spill files
+// ---------------------------------------------------------------------------
+
+/// One on-disk spill file: a sequence of `u64 payload_len` + payload
+/// frames (HFS-style chunked layout). Frame payloads are produced by the
+/// nullable column codec, so masks roundtrip with their columns. The file
+/// is deleted on drop.
+pub struct SpillFile {
+    path: PathBuf,
+    writer: Option<BufWriter<File>>,
+    rows: usize,
+    bytes: u64,
+}
+
+impl SpillFile {
+    fn create(path: PathBuf) -> Result<SpillFile> {
+        let f = File::create(&path)
+            .with_context(|| format!("spill: creating {}", path.display()))?;
+        Ok(SpillFile {
+            path,
+            writer: Some(BufWriter::new(f)),
+            rows: 0,
+            bytes: 0,
+        })
+    }
+
+    /// Rows written so far (caller-reported per frame).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Bytes written so far, framing included.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Append one framed chunk covering `rows` rows.
+    pub fn write_frame(&mut self, rows: usize, payload: &[u8]) -> Result<()> {
+        let w = self
+            .writer
+            .as_mut()
+            .context("spill: write after finish")?;
+        w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        w.write_all(payload)?;
+        self.rows += rows;
+        self.bytes += 8 + payload.len() as u64;
+        Ok(())
+    }
+
+    /// Flush and close the write side.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(mut w) = self.writer.take() {
+            w.flush().context("spill: flush")?;
+        }
+        Ok(())
+    }
+
+    /// Open a streaming reader over the frames (closes the writer first).
+    pub fn reader(&mut self) -> Result<FrameReader> {
+        self.finish()?;
+        let f = File::open(&self.path)
+            .with_context(|| format!("spill: reopening {}", self.path.display()))?;
+        Ok(FrameReader {
+            inner: BufReader::new(f),
+        })
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        self.writer = None;
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Streaming frame iterator over a [`SpillFile`].
+pub struct FrameReader {
+    inner: BufReader<File>,
+}
+
+impl FrameReader {
+    /// Next frame payload, or `None` at end of file.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut len = [0u8; 8];
+        match self.inner.read_exact(&mut len) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e).context("spill: reading frame length"),
+        }
+        let n = u64::from_le_bytes(len) as usize;
+        let mut buf = vec![0u8; n];
+        self.inner
+            .read_exact(&mut buf)
+            .context("spill: truncated frame payload")?;
+        Ok(Some(buf))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operator context
+// ---------------------------------------------------------------------------
+
+/// Per-rank, per-operator spill context: the budget plus a lazily created
+/// [`SpillDir`]. Each rank builds its own (it is deliberately `!Sync`);
+/// dropping it — normally or on an operator error path — removes every
+/// spill file it handed out.
+pub struct SpillCtx {
+    budget: MemoryBudget,
+    rank: usize,
+    dir: RefCell<Option<SpillDir>>,
+    seq: Cell<u64>,
+}
+
+impl SpillCtx {
+    pub fn new(budget: MemoryBudget, rank: usize) -> SpillCtx {
+        SpillCtx {
+            budget,
+            rank,
+            dir: RefCell::new(None),
+            seq: Cell::new(0),
+        }
+    }
+
+    /// The no-op context: never spills; operators take the in-memory path.
+    pub fn unlimited() -> SpillCtx {
+        SpillCtx::new(MemoryBudget::unlimited(), 0)
+    }
+
+    pub fn budget(&self) -> MemoryBudget {
+        self.budget
+    }
+
+    /// Should an operator holding `bytes` spill?
+    pub fn should_spill(&self, bytes: usize) -> bool {
+        self.budget.exceeded_by(bytes)
+    }
+
+    /// Create a fresh spill file (creating the per-rank directory on first
+    /// use). `tag` is a human-readable label embedded in the file name.
+    pub fn new_file(&self, tag: &str) -> Result<SpillFile> {
+        let mut dir = self.dir.borrow_mut();
+        if dir.is_none() {
+            *dir = Some(SpillDir::create(self.rank)?);
+        }
+        let seq = self.seq.get();
+        self.seq.set(seq + 1);
+        let path = dir
+            .as_ref()
+            .unwrap()
+            .path
+            .join(format!("{seq:04}-{tag}.spill"));
+        SpillFile::create(path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partition store
+// ---------------------------------------------------------------------------
+
+/// A set of columns hash-partitioned onto disk: partition `p` holds the
+/// rows whose [`part_of`] (at this store's level) equals `p`. Reading a
+/// partition back yields the rows in their original relative order —
+/// frames are written and concatenated in ascending row order, which the
+/// operators' byte-identity reconstructions rely on.
+pub struct PartitionStore {
+    parts: Vec<SpillFile>,
+    dtypes: Vec<DType>,
+    level: u32,
+}
+
+impl PartitionStore {
+    /// Hash-partition `cols` (all of equal length) into `nparts` spill
+    /// files under `ctx`, routing row `i` by `part_of(hashes[i], nparts,
+    /// level)`. Updates the global spill counters.
+    pub fn partition(
+        ctx: &SpillCtx,
+        tag: &str,
+        nparts: usize,
+        level: u32,
+        hashes: &[u64],
+        cols: &[MaskedCol],
+    ) -> Result<PartitionStore> {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nparts];
+        for (i, &h) in hashes.iter().enumerate() {
+            buckets[part_of(h, nparts, level)].push(i);
+        }
+        let mut parts = Vec::with_capacity(nparts);
+        let mut buf = Vec::new();
+        let mut spilled_bytes = 0u64;
+        let mut spilled_parts = 0u64;
+        for (p, bucket) in buckets.iter().enumerate() {
+            let mut file = ctx.new_file(&format!("{tag}-l{level}-p{p}"))?;
+            for chunk in bucket.chunks(SPILL_CHUNK_ROWS) {
+                buf.clear();
+                for &(c, m) in cols {
+                    encode_nullable_column_take(c, m, chunk, &mut buf);
+                }
+                file.write_frame(chunk.len(), &buf)?;
+            }
+            file.finish()?;
+            spilled_bytes += file.bytes();
+            if file.rows() > 0 {
+                spilled_parts += 1;
+            }
+            parts.push(file);
+        }
+        spill_stats().record_spill_pass(spilled_parts, spilled_bytes);
+        Ok(PartitionStore {
+            parts,
+            dtypes: cols.iter().map(|&(c, _)| c.dtype()).collect(),
+            level,
+        })
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    pub fn part_rows(&self, p: usize) -> usize {
+        self.parts[p].rows()
+    }
+
+    /// In-memory byte estimate of partition `p` (its on-disk size is the
+    /// codec encoding, a close proxy for the decoded column bytes).
+    pub fn part_bytes(&self, p: usize) -> usize {
+        self.parts[p].bytes() as usize
+    }
+
+    /// Read partition `p` back into memory, concatenating frames in write
+    /// order. Empty partitions come back as typed empty columns.
+    pub fn read_part(&mut self, p: usize) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
+        let ncols = self.dtypes.len();
+        let mut cols: Vec<Column> = self
+            .dtypes
+            .iter()
+            .map(|&dt| Column::new_empty(dt))
+            .collect();
+        let mut masks: Vec<Option<ValidityMask>> = vec![None; ncols];
+        let mut reader = self.parts[p].reader()?;
+        while let Some(frame) = reader.next_frame()? {
+            let mut pos = 0;
+            for k in 0..ncols {
+                let (c, m) = decode_nullable_column(&frame, &mut pos)?;
+                extend_opt_mask(&mut masks[k], cols[k].len(), m.as_ref(), c.len());
+                cols[k].extend(&c);
+            }
+        }
+        Ok((cols, masks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_math() {
+        let b = MemoryBudget::unlimited();
+        assert!(!b.is_limited());
+        assert!(!b.exceeded_by(usize::MAX));
+        assert_eq!(b.partition_count(1 << 30), 1);
+
+        let b = MemoryBudget::bytes(1000);
+        assert!(b.is_limited());
+        assert!(!b.exceeded_by(1000));
+        assert!(b.exceeded_by(1001));
+        assert_eq!(b.partition_count(1000), 2); // minimum useful fan-out
+        assert_eq!(b.partition_count(4500), 5);
+        assert_eq!(b.partition_count(usize::MAX), 32); // capped
+
+        assert_eq!(MemoryBudget::bytes(0), MemoryBudget::unlimited());
+        assert_eq!(MemoryBudget::from_opt(Some(0)), MemoryBudget::unlimited());
+        assert_eq!(MemoryBudget::from_opt(Some(7)).limit(), Some(7));
+        assert_eq!(MemoryBudget::from_opt(None).limit(), None);
+    }
+
+    #[test]
+    fn part_of_decorrelates_rank_modulus() {
+        // Post-shuffle pathology: every local hash agrees mod nranks.
+        // part_of must still spread them across partitions.
+        let nranks = 4u64;
+        let hashes: Vec<u64> = (0..256u64).map(|i| i * nranks + 1).collect();
+        let mut seen = [0usize; 8];
+        for &h in &hashes {
+            seen[part_of(h, 8, 0)] += 1;
+        }
+        assert!(
+            seen.iter().all(|&c| c > 0),
+            "partition histogram degenerate: {seen:?}"
+        );
+        // Level salt moves partition boundaries.
+        assert!(
+            hashes
+                .iter()
+                .any(|&h| part_of(h, 8, 0) != part_of(h, 8, 1)),
+            "level salt had no effect"
+        );
+        // Deterministic.
+        assert_eq!(part_of(42, 8, 3), part_of(42, 8, 3));
+    }
+
+    #[test]
+    fn spill_file_roundtrip_and_cleanup() {
+        let ctx = SpillCtx::new(MemoryBudget::bytes(1), 0);
+        let mut f = ctx.new_file("t").unwrap();
+        let path = f.path.clone();
+        f.write_frame(2, b"ab").unwrap();
+        f.write_frame(1, b"xyz").unwrap();
+        assert_eq!(f.rows(), 3);
+        assert_eq!(f.bytes(), 8 + 2 + 8 + 3);
+        let mut r = f.reader().unwrap();
+        assert_eq!(r.next_frame().unwrap().unwrap(), b"ab");
+        assert_eq!(r.next_frame().unwrap().unwrap(), b"xyz");
+        assert!(r.next_frame().unwrap().is_none());
+        assert!(path.exists());
+        drop(r);
+        drop(f);
+        assert!(!path.exists(), "spill file not deleted on drop");
+    }
+
+    #[test]
+    fn partition_store_roundtrips_all_rows() {
+        let ctx = SpillCtx::new(MemoryBudget::bytes(1), 0);
+        let vals = Column::I64((0..100).collect());
+        let mask = ValidityMask::from_bools(&(0..100).map(|i| i % 3 != 0).collect::<Vec<_>>());
+        let names = Column::Str((0..100).map(|i| format!("s{i}")).collect());
+        let hashes: Vec<u64> = (0..100u64).map(|i| i.wrapping_mul(0x9e3779b9)).collect();
+        let cols: Vec<MaskedCol> = vec![(&vals, Some(&mask)), (&names, None)];
+        let mut store = PartitionStore::partition(&ctx, "t", 4, 0, &hashes, &cols).unwrap();
+        assert_eq!(store.num_parts(), 4);
+
+        let mut got_rows = 0;
+        let mut seen = vec![false; 100];
+        for p in 0..4 {
+            let (cols, masks) = store.read_part(p).unwrap();
+            assert_eq!(cols.len(), 2);
+            assert_eq!(cols[0].dtype(), DType::I64);
+            assert_eq!(cols[1].dtype(), DType::Str);
+            let ids = cols[0].as_i64();
+            got_rows += ids.len();
+            let mut last = None;
+            for (j, &id) in ids.iter().enumerate() {
+                let i = id as usize;
+                assert!(!seen[i], "row {i} duplicated");
+                seen[i] = true;
+                // Relative order inside a partition is original row order.
+                assert!(last.map_or(true, |l| l < i), "order broken in part {p}");
+                last = Some(i);
+                assert_eq!(part_of(hashes[i], 4, 0), p);
+                assert_eq!(
+                    masks[0].as_ref().map_or(true, |m| m.get(j)),
+                    i % 3 != 0,
+                    "mask wrong for row {i}"
+                );
+                assert_eq!(cols[1].as_str_col()[j], format!("s{i}"));
+            }
+        }
+        assert_eq!(got_rows, 100);
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn empty_partition_is_typed() {
+        let ctx = SpillCtx::new(MemoryBudget::bytes(1), 0);
+        let vals = Column::F64(vec![]);
+        let cols: Vec<MaskedCol> = vec![(&vals, None)];
+        let mut store = PartitionStore::partition(&ctx, "t", 3, 1, &[], &cols).unwrap();
+        for p in 0..3 {
+            let (cols, masks) = store.read_part(p).unwrap();
+            assert_eq!(cols[0].dtype(), DType::F64);
+            assert_eq!(cols[0].len(), 0);
+            assert!(masks[0].is_none());
+        }
+    }
+
+    #[test]
+    fn ctx_drop_removes_directory() {
+        let ctx = SpillCtx::new(MemoryBudget::bytes(1), 7);
+        let f = ctx.new_file("probe").unwrap();
+        let dir = f.path.parent().unwrap().to_path_buf();
+        assert!(dir.exists());
+        let name = dir.file_name().unwrap().to_str().unwrap().to_string();
+        assert!(name.starts_with("rank7-"), "dir name {name:?}");
+        assert!(dir
+            .parent()
+            .unwrap()
+            .file_name()
+            .unwrap()
+            .to_str()
+            .unwrap()
+            .starts_with("pid"));
+        drop(f);
+        drop(ctx);
+        assert!(!dir.exists(), "spill dir not deleted on ctx drop");
+    }
+
+    #[test]
+    fn stale_sweep_is_safe_to_call() {
+        // The sweep runs at most once per process and must tolerate a
+        // missing root; liveness-based removal is exercised implicitly.
+        sweep_stale_spill_dirs();
+        sweep_stale_spill_dirs();
+    }
+}

@@ -46,11 +46,13 @@ fn optimized_and_unoptimized_agree() {
         workers: 3,
         passes: PassOptions::default(),
         agg_strategy: AggStrategy::RawShuffle,
+        mem_budget: None,
     };
     let opts_off = ExecOptions {
         workers: 3,
         passes: PassOptions::none(),
         agg_strategy: AggStrategy::RawShuffle,
+        mem_budget: None,
     };
     let a = collect_optimized(&optimize(plan.clone(), &opts_on.passes).unwrap(), &opts_on).unwrap();
     let b =
@@ -92,6 +94,7 @@ fn rebalance_modes_same_result() {
                 ..Default::default()
             },
             agg_strategy: AggStrategy::RawShuffle,
+            mem_budget: None,
         };
         let optimized = optimize(df.plan().clone(), &opts.passes).unwrap();
         let out = collect_optimized(&optimized, &opts).unwrap();

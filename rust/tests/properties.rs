@@ -365,11 +365,13 @@ fn prop_optimizer_preserves_semantics() {
                 workers: 3,
                 passes: PassOptions::default(),
                 agg_strategy: hiframes::ops::aggregate::AggStrategy::PreAggregate,
+                mem_budget: None,
             };
             let off = ExecOptions {
                 workers: 2,
                 passes: PassOptions::none(),
                 agg_strategy: hiframes::ops::aggregate::AggStrategy::RawShuffle,
+                mem_budget: None,
             };
             let a = collect_optimized(&optimize(plan.clone(), &on.passes).unwrap(), &on)
                 .map_err(|e| e.to_string())?;
