@@ -267,5 +267,56 @@ fn main() {
                 .unwrap()
         });
         sk.finish("fig8a_skew");
+
+        // ------------- shared-subplan dedup micro-bench (diamond plan) -----
+        // A diamond: one expensive aggregate arm consumed twice (as join
+        // probe and, re-keyed, as build). With hash-consing on, the arm
+        // materializes once per rank and the second consumer reads the memo;
+        // with it off, the arena holds two copies of the arm and both
+        // execute. A final instrumented run attaches the reuse counters to
+        // BENCH_fig8a_dedup.json as proof the dedup engaged.
+        let drows = agg_rows;
+        let dt = micro_table(drows, 5_000, 5);
+        let p = workers.max(2);
+        let diamond = |hf: &HiFrames| {
+            let a = hf
+                .table("t", dt.clone())
+                .group_by(&["id"])
+                .agg("s", AggFn::Sum, col("x"))
+                .agg("n", AggFn::Count, col("x"))
+                .build();
+            let b = a
+                .rename("id", "rid")
+                .rename("s", "s2")
+                .select(&["rid", "s2"]);
+            a.join_on(&b, &[("id", "rid")], JoinType::Inner)
+        };
+        let dedup_hf = HiFrames::with_workers(p);
+        let nodedup_hf = HiFrames::new(ExecOptions {
+            workers: p,
+            passes: PassOptions {
+                dedup_subplans: false,
+                ..PassOptions::default()
+            },
+            ..Default::default()
+        });
+        let mut dd = BenchTable::new(
+            &format!(
+                "Fig 8a addendum: shared-subplan diamond ({drows} rows, {p} workers)"
+            ),
+            "no-dedup",
+        );
+        dd.run("no-dedup", "diamond", drows, 1, reps, || {
+            diamond(&nodedup_hf).count().unwrap()
+        });
+        dd.run("dedup", "diamond", drows, 1, reps, || {
+            diamond(&dedup_hf).count().unwrap()
+        });
+        let df = diamond(&dedup_hf);
+        let (_, stats) =
+            hiframes::exec::collect_stats(df.plan().clone(), dedup_hf.options()).unwrap();
+        dd.add_counter("nodes_executed", stats.nodes_executed);
+        dd.add_counter("subplans_reused", stats.reuse_hits);
+        dd.finish("fig8a_dedup");
     });
 }

@@ -189,6 +189,18 @@ impl SparkLike {
         })
     }
 
+    /// Batch `withColumn`: apply several `(name, expr)` pairs left to
+    /// right, each one a separate stage, so later expressions can reference
+    /// earlier outputs — the RDD mirror of
+    /// [`crate::frame::DataFrame::with_columns`].
+    pub fn with_columns(&self, rdd: &Rdd, columns: &[(&str, Expr)]) -> Result<Rdd> {
+        let mut out = rdd.clone();
+        for (name, expr) in columns {
+            out = self.with_column(&out, name, expr)?;
+        }
+        Ok(out)
+    }
+
     /// Projection.
     pub fn select(&self, rdd: &Rdd, columns: &[&str]) -> Result<Rdd> {
         let idx: Vec<usize> = columns
@@ -1186,6 +1198,25 @@ mod tests {
         assert!((s[0] - 1.2).abs() < 1e-9);
         assert!((s[1] - 1.6).abs() < 1e-9);
         assert_eq!(t.column("n").unwrap().as_i64(), &[4, 4]);
+    }
+
+    #[test]
+    fn with_columns_batch_matches_chained() {
+        let eng = SparkLike::new(2, 4);
+        let rdd = eng.parallelize(&table());
+        let batch = eng
+            .with_columns(
+                &rdd,
+                &[
+                    ("y", col("x").add(lit(1.0))),
+                    ("z", col("y").mul(lit(2.0))),
+                ],
+            )
+            .unwrap();
+        let step = eng.with_column(&rdd, "y", &col("x").add(lit(1.0))).unwrap();
+        let step = eng.with_column(&step, "z", &col("y").mul(lit(2.0))).unwrap();
+        assert_eq!(eng.collect(&batch).unwrap(), eng.collect(&step).unwrap());
+        assert_eq!(batch.schema.names(), vec!["id", "x", "y", "z"]);
     }
 
     #[test]

@@ -61,23 +61,24 @@ pub fn hiframes_relational(hf: &HiFrames, db: &BbTables) -> DataFrame {
         &[("c_current_cdemo_sk", "cd_demo_sk")],
         JoinType::Left,
     );
-    with_demo
-        .with_column(
+    with_demo.with_columns(&[
+        (
             "college_education",
             crate::expr::Expr::BoolToInt(Box::new(
                 col("cd_education").fill_null(0i64).ge(lit(3i64)),
             )),
-        )
-        .with_column(
+        ),
+        (
             "male",
             crate::expr::Expr::BoolToInt(Box::new(
                 col("cd_gender").fill_null(0i64).eq_(lit(1i64)),
             )),
-        )
-        .with_column(
+        ),
+        (
             "label",
             crate::expr::Expr::BoolToInt(Box::new(col("clicks_in_category").gt(lit(0i64)))),
-        )
+        ),
+    ])
 }
 
 /// Feature column names for the logreg stage.
@@ -143,24 +144,28 @@ pub fn sparklike_relational(eng: &SparkLike, db: &BbTables) -> Result<Rdd> {
         &[("c_current_cdemo_sk", "cd_demo_sk")],
         JoinType::Left,
     )?;
-    let a = eng.with_column(
+    eng.with_columns(
         &with_demo,
-        "college_education",
-        &crate::expr::Expr::BoolToInt(Box::new(
-            col("cd_education").fill_null(0i64).ge(lit(3i64)),
-        )),
-    )?;
-    let b = eng.with_column(
-        &a,
-        "male",
-        &crate::expr::Expr::BoolToInt(Box::new(
-            col("cd_gender").fill_null(0i64).eq_(lit(1i64)),
-        )),
-    )?;
-    eng.with_column(
-        &b,
-        "label",
-        &crate::expr::Expr::BoolToInt(Box::new(col("clicks_in_category").gt(lit(0i64)))),
+        &[
+            (
+                "college_education",
+                crate::expr::Expr::BoolToInt(Box::new(
+                    col("cd_education").fill_null(0i64).ge(lit(3i64)),
+                )),
+            ),
+            (
+                "male",
+                crate::expr::Expr::BoolToInt(Box::new(
+                    col("cd_gender").fill_null(0i64).eq_(lit(1i64)),
+                )),
+            ),
+            (
+                "label",
+                crate::expr::Expr::BoolToInt(Box::new(
+                    col("clicks_in_category").gt(lit(0i64)),
+                )),
+            ),
+        ],
     )
 }
 

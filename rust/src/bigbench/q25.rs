@@ -47,7 +47,7 @@ fn channel_hiframes(
         .rename(date, "date")
         .rename(paid, "paid")
         .select(&["cid", "ticket", "date", "paid"])
-        .with_column("chan", lit(chan))
+        .with_columns(&[("chan", lit(chan))])
 }
 
 /// The relational stage as a HiFrames data frame.
@@ -139,7 +139,7 @@ fn channel_sparklike(
         ],
     );
     let sel = eng.select(&renamed, &["cid", "ticket", "date", "paid"])?;
-    eng.with_column(&sel, "chan", &lit(chan))
+    eng.with_columns(&sel, &[("chan", lit(chan))])
 }
 
 /// The relational stage on the sparklike engine.

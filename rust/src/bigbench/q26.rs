@@ -185,6 +185,54 @@ mod tests {
     }
 
     #[test]
+    fn explain_snapshot_q26() {
+        let db = generate(&GenOptions {
+            scale_factor: 0.05,
+            ..Default::default()
+        });
+        let p = Q26Params::default();
+        let hf = HiFrames::with_workers(2);
+        let q = hiframes_relational(&hf, &db, &p);
+        let text = q.explain();
+        // golden properties: byte-stable across calls and across contexts
+        // (node numbers are execution-order positions, so the render is
+        // canonical for the plan + options)
+        assert_eq!(text, q.explain(), "explain must be deterministic");
+        let hf3 = HiFrames::with_workers(3);
+        assert_eq!(
+            hiframes_relational(&hf3, &db, &p).explain(),
+            text,
+            "worker count must not change the logical plan"
+        );
+        // every line renders as `%i = Op(…) [dist]`
+        for (i, line) in text.lines().enumerate() {
+            assert!(
+                line.starts_with(&format!("%{i} = ")),
+                "bad line {i}: {line}\n{text}"
+            );
+            assert!(line.contains('['), "missing dist annotation: {line}");
+        }
+        // the pipeline appears in execution order: sources, then the
+        // category filter below the join, then aggregate, then HAVING
+        let idx = |needle: &str| {
+            text.lines()
+                .position(|l| l.contains(needle))
+                .unwrap_or_else(|| panic!("missing {needle:?} in:\n{text}"))
+        };
+        assert!(idx("Source(store_sales)") < idx("Join("));
+        assert!(idx("Source(item)") < idx("Join("));
+        assert!(
+            idx("i_category") < idx("Join("),
+            "category filter must stay below the join:\n{text}"
+        );
+        assert!(idx("Join(") < idx("Aggregate("));
+        assert!(
+            idx("Aggregate(") < idx(":cnt >"),
+            "HAVING filter must sit above the aggregate:\n{text}"
+        );
+    }
+
+    #[test]
     fn full_pipeline_produces_centroids() {
         let db = generate(&GenOptions {
             scale_factor: 0.3,

@@ -8,7 +8,9 @@
 //! 2. aggregate the sale count per `(category, item)`;
 //! 3. window: partition by category, order by `(n desc, item asc)` —
 //!    `rank()` plus `lead(n, 1)` (each item's gap to the runner-up);
-//! 4. keep the top [`TOP_K`] items of every category.
+//! 4. keep the top [`TOP_K`] items of every category and derive the
+//!    `gap = n - next_n` margin column in one batched
+//!    [`DataFrame::with_columns`] call.
 
 use super::BbTables;
 use crate::baseline::serial;
@@ -38,6 +40,7 @@ pub fn hiframes_query(hf: &HiFrames, db: &BbTables) -> DataFrame {
         .agg_expr("next_n", col("n").lead(1))
         .build()
         .filter(col("r").le(lit(TOP_K)))
+        .with_columns(&[("gap", col("n").sub(col("next_n").fill_null(0i64)))])
 }
 
 /// The serial (Pandas-like) oracle for the same query.
@@ -113,6 +116,21 @@ mod tests {
                     "workers={workers} mask {c}"
                 );
             }
+            // the batched derived column: gap = n - fill_null(next_n, 0)
+            let n = expect.column("n").unwrap().as_i64();
+            let next = expect.column("next_n").unwrap().as_i64();
+            let nm = expect.mask("next_n");
+            let want_gap: Vec<i64> = n
+                .iter()
+                .zip(next)
+                .enumerate()
+                .map(|(i, (a, b))| a - if nm.map_or(true, |m| m.get(i)) { *b } else { 0 })
+                .collect();
+            assert_eq!(
+                got.column("gap").unwrap().as_i64(),
+                &want_gap[..],
+                "workers={workers} gap"
+            );
             // every category keeps at most TOP_K ranked rows, rank starts at 1
             let ranks = got.column("r").unwrap().as_i64();
             assert!(ranks.iter().all(|&r| r >= 1 && r <= TOP_K));

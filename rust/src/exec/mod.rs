@@ -1,11 +1,18 @@
 //! SPMD execution — the CGen analogue (paper §4.5).
 //!
-//! Every rank interprets the *same* optimized plan over its partition of
-//! the data, calling into [`crate::ops`] wherever the paper's generated C
-//! would issue MPI collectives. The per-rank state is a [`LocalFrame`]:
-//! a flat `name → Column (+ optional validity mask)` environment, i.e.
-//! every data-frame column is an individual array variable plus its null
-//! bitmap (dual representation, validity-mask null model).
+//! Every rank interprets the *same* optimized [`PlanGraph`] over its
+//! partition of the data, walking the graph's topological execution order
+//! and calling into [`crate::ops`] wherever the paper's generated C would
+//! issue MPI collectives. The per-rank state is a [`LocalFrame`]: a flat
+//! `name → Column (+ optional validity mask)` environment, i.e. every
+//! data-frame column is an individual array variable plus its null bitmap
+//! (dual representation, validity-mask null model).
+//!
+//! Because the graph hash-conses identical subplans, a shared node is
+//! materialized **once per rank** and its frame handed to every consumer
+//! (cloned until the last use, which takes ownership). The
+//! [`GraphRunStats`] returned alongside each result — and mirrored into
+//! [`crate::metrics::plan_stats`] — count those reuses.
 
 use crate::column::{
     decode_nullable_column, encode_nullable_column, extend_opt_mask, normalize_mask, Column,
@@ -13,12 +20,15 @@ use crate::column::{
 };
 use crate::comm::{block_range, run_spmd, Comm};
 use crate::expr::{eval_nullable, ColumnEnv};
+use crate::fxhash::{FxHashMap, FxHashSet};
+use crate::ir::graph::{Node, NodeId, PlanGraph, Store};
 use crate::ir::{Plan, SourceRef, WindowAgg};
 use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy, MaskedCol};
-use crate::passes::{optimize, PassOptions};
+use crate::passes::{optimize_graph, PassOptions};
 use crate::table::{Schema, Table};
 use crate::types::SortOrder;
 use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
 
 /// Execution options: worker (rank) count, optimizer toggles, the
 /// aggregation strategy (ablations flip these) and the per-rank memory
@@ -107,54 +117,156 @@ impl ColumnEnv for LocalFrame {
     }
 }
 
+/// Per-run execution counters, summed over all ranks by the driver. The
+/// shared-subplan dedup and the plan cache surface here (and in
+/// [`crate::metrics::plan_stats`]) so tests and benches can assert "the
+/// diamond's shared arm ran exactly once per rank".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GraphRunStats {
+    /// Graph nodes actually interpreted (per rank, summed over ranks).
+    pub nodes_executed: u64,
+    /// Memo fetches beyond a node's first — each one is a subplan that
+    /// hash-consing saved from re-execution.
+    pub reuse_hits: u64,
+    /// `Plan::Cache` nodes satisfied from a [`PlanCache`] without
+    /// executing their subplan (counted once per run, not per rank).
+    pub cache_hits: u64,
+}
+
+/// One pinned result of an explicit `df.cache()` materialization point.
+#[derive(Debug)]
+struct CacheEntry {
+    /// Clones of every source reference under the cached subplan. In-memory
+    /// sources key their identity by `Arc` address ([`crate::ir::graph`]),
+    /// so the entry must keep those `Arc`s alive: a freed table's address
+    /// could be recycled by a brand-new table and alias the cache key.
+    _pins: Vec<SourceRef>,
+    table: Arc<Table>,
+}
+
+/// Cross-`collect` store for `Plan::Cache` results, keyed by the cached
+/// subplan's structural key (position-independent, deterministic for one
+/// process). A [`crate::frame::HiFrames`] context owns one and threads it
+/// through every collect, pinning shared subplans across separate queries.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: Mutex<FxHashMap<String, CacheEntry>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every pinned result (and with it the source pins).
+    pub fn clear(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+
+    fn lookup(&self, key: &str) -> Option<Arc<Table>> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|e| Arc::clone(&e.table))
+    }
+
+    fn insert(&self, key: String, pins: Vec<SourceRef>, table: Table) {
+        self.entries.lock().unwrap().insert(
+            key,
+            CacheEntry {
+                _pins: pins,
+                table: Arc::new(table),
+            },
+        );
+    }
+}
+
 /// Optimize `plan` and execute it on `opts.workers` ranks; gather the
 /// result on the leader and return it as a table (rank-order concatenation
 /// preserves global row order for ordered plans).
 pub fn collect(plan: Plan, opts: &ExecOptions) -> Result<Table> {
-    let optimized = optimize(plan, &opts.passes)?;
-    collect_optimized(&optimized, opts)
+    let g = optimize_graph(plan, &opts.passes)?;
+    Ok(collect_graph(&g, opts, None)?.0)
 }
 
-/// Execute an already-optimized plan (ablations call this directly).
+/// [`collect`] plus the per-run execution counters (tests and benches).
+pub fn collect_stats(plan: Plan, opts: &ExecOptions) -> Result<(Table, GraphRunStats)> {
+    let g = optimize_graph(plan, &opts.passes)?;
+    collect_graph(&g, opts, None)
+}
+
+/// Optimize and execute with an explicit [`PlanCache`]: `Plan::Cache`
+/// nodes publish their result into `cache` on first execution and are
+/// substituted by it on later runs.
+pub fn collect_cached(
+    plan: Plan,
+    opts: &ExecOptions,
+    cache: &PlanCache,
+) -> Result<(Table, GraphRunStats)> {
+    let g = optimize_graph(plan, &opts.passes)?;
+    collect_graph(&g, opts, Some(cache))
+}
+
+/// Execute an already-optimized plan (ablations call this directly). The
+/// tree is interned into a graph with the options' dedup policy first.
 pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
-    let schema = plan.schema()?;
-    let results: Vec<Result<Vec<u8>>> = run_spmd(opts.workers, |comm| -> Result<Vec<u8>> {
-        let frame = exec_node(plan, &comm, opts)?;
-        // every rank serializes its chunk (masks included); leader assembles
-        let mut buf = Vec::new();
-        for (c, m) in frame.cols.iter().zip(&frame.masks) {
-            encode_nullable_column(c, m.as_ref(), &mut buf);
-        }
-        let gathered = comm.gather_bytes(0, buf);
-        if comm.is_root() {
-            // concatenate per-rank chunks column-wise, rank order
-            let mut cols: Vec<Column> = frame
-                .schema
-                .fields()
-                .iter()
-                .map(|(_, t)| Column::new_empty(*t))
-                .collect();
-            let mut masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
-            for rank_buf in gathered {
-                let mut pos = 0;
-                for (c, m) in cols.iter_mut().zip(masks.iter_mut()) {
-                    let before = c.len();
-                    let (chunk, cm) = decode_nullable_column(&rank_buf, &mut pos)?;
-                    c.extend(&chunk);
-                    extend_opt_mask(m, before, cm.as_ref(), chunk.len());
+    let g = PlanGraph::from_plan(plan, opts.passes.dedup_subplans);
+    Ok(collect_graph(&g, opts, None)?.0)
+}
+
+/// Execute an optimized [`PlanGraph`] on `opts.workers` ranks, returning
+/// the gathered table and the summed per-rank counters.
+pub fn collect_graph(
+    g: &PlanGraph,
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+) -> Result<(Table, GraphRunStats)> {
+    let prog = Program::prepare(g, cache)?;
+    let schema = prog.schemas[&prog.graph.completion].clone();
+    let results: Vec<Result<(Vec<u8>, GraphRunStats)>> =
+        run_spmd(opts.workers, |comm| -> Result<(Vec<u8>, GraphRunStats)> {
+            let (frame, stats) = exec_graph(&prog, &comm, opts, cache)?;
+            // every rank serializes its chunk (masks included); leader
+            // assembles
+            let mut buf = Vec::new();
+            for (c, m) in frame.cols.iter().zip(&frame.masks) {
+                encode_nullable_column(c, m.as_ref(), &mut buf);
+            }
+            let gathered = comm.gather_bytes(0, buf);
+            if comm.is_root() {
+                let (cols, masks) = concat_rank_chunks(&frame.schema, gathered)?;
+                let mut out = Vec::new();
+                for (c, m) in cols.iter().zip(&masks) {
+                    encode_nullable_column(c, normalize_mask(m.clone()).as_ref(), &mut out);
                 }
+                Ok((out, stats))
+            } else {
+                Ok((Vec::new(), stats))
             }
-            let mut out = Vec::new();
-            for (c, m) in cols.iter().zip(&masks) {
-                encode_nullable_column(c, normalize_mask(m.clone()).as_ref(), &mut out);
-            }
-            Ok(out)
-        } else {
-            Ok(Vec::new())
+        });
+    let mut total = GraphRunStats {
+        cache_hits: prog.cache_hits,
+        ..GraphRunStats::default()
+    };
+    let mut root_buf: Option<Vec<u8>> = None;
+    for (rank, r) in results.into_iter().enumerate() {
+        let (buf, stats) = r?;
+        total.nodes_executed += stats.nodes_executed;
+        total.reuse_hits += stats.reuse_hits;
+        if rank == 0 {
+            root_buf = Some(buf);
         }
-    });
-    // take rank 0's assembled buffer
-    let root_buf = results.into_iter().next().context("no ranks ran")??;
+    }
+    let root_buf = root_buf.context("no ranks ran")?;
     let mut pos = 0;
     let mut cols = Vec::new();
     let mut masks = Vec::new();
@@ -163,32 +275,234 @@ pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
         cols.push(c);
         masks.push(m);
     }
-    Table::new_masked(schema, cols, masks)
+    crate::metrics::plan_stats().record_run(
+        total.nodes_executed,
+        total.reuse_hits,
+        total.cache_hits,
+    );
+    Ok((Table::new_masked(schema, cols, masks)?, total))
 }
 
 /// Optimize and execute, returning only the global row count (no driver
 /// gather) — the fair timing primitive for operation benchmarks, analogous
 /// to Spark's `.count()` action.
 pub fn collect_count(plan: Plan, opts: &ExecOptions) -> Result<usize> {
-    let optimized = optimize(plan, &opts.passes)?;
+    let g = optimize_graph(plan, &opts.passes)?;
+    let prog = Program::prepare(&g, None)?;
     let counts: Vec<Result<usize>> = run_spmd(opts.workers, |comm| -> Result<usize> {
-        let frame = exec_node(&optimized, &comm, opts)?;
+        let (frame, _) = exec_graph(&prog, &comm, opts, None)?;
         Ok(frame.num_rows())
     });
     counts.into_iter().try_fold(0usize, |acc, r| r.map(|n| acc + n))
 }
 
-/// Interpret one plan node on this rank.
-pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFrame> {
-    match plan {
-        Plan::Source { src, schema, .. } => {
+/// Serial reference execution of a plan (single rank) — the oracle the
+/// engine-agreement tests compare against. Runs the exact user tree: no
+/// passes, no subplan dedup, always in memory.
+pub fn collect_serial(plan: Plan) -> Result<Table> {
+    let opts = ExecOptions {
+        workers: 1,
+        passes: PassOptions::none(),
+        agg_strategy: AggStrategy::RawShuffle,
+        // the oracle always runs in memory, whatever the env says
+        mem_budget: None,
+    };
+    collect(plan, &opts)
+}
+
+/// A graph plus everything the driver pre-computes once so the per-rank
+/// interpreter never re-derives schemas, demand counts or cache keys.
+struct Program {
+    graph: PlanGraph,
+    schemas: FxHashMap<NodeId, Schema>,
+    /// Demand count per node (consumer edges + 1 for the completion).
+    /// Edges from a `Project` straight into a `Source` are *not* counted:
+    /// the projection reads the needed column subset from the source
+    /// directly (the pruning fast path), so the full source frame is never
+    /// materialized for it.
+    uses: FxHashMap<NodeId, usize>,
+    /// Structural cache key for every surviving `Cache` node.
+    cache_keys: FxHashMap<NodeId, String>,
+    /// Source pins for every surviving `Cache` node (see [`CacheEntry`]).
+    cache_pins: FxHashMap<NodeId, Vec<SourceRef>>,
+    /// `Cache` nodes substituted by a cached table before execution.
+    cache_hits: u64,
+}
+
+impl Program {
+    /// Substitute cache hits (a hit `Cache` node becomes an in-memory
+    /// source over the pinned table), key the surviving `Cache` nodes, and
+    /// pre-compute schemas and demand counts.
+    ///
+    /// Keys are computed on the **pre-substitution** optimized graph: that
+    /// is the form every future run optimizes to, so lookup and insert
+    /// agree even when caches nest.
+    fn prepare(g: &PlanGraph, cache: Option<&PlanCache>) -> Result<Program> {
+        let mut store = Store::like(&g.store);
+        let mut map: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+        let mut cache_keys: FxHashMap<NodeId, String> = FxHashMap::default();
+        let mut cache_pins: FxHashMap<NodeId, Vec<SourceRef>> = FxHashMap::default();
+        let mut cache_hits = 0u64;
+        for &id in &g.execution_order {
+            let node = g.store[id].clone().remap(&map);
+            let new = if matches!(node, Node::Cache { .. }) {
+                let key = g.store.structural_key(id);
+                match cache.and_then(|c| c.lookup(&key)) {
+                    Some(table) => {
+                        cache_hits += 1;
+                        let schema = table.schema().clone();
+                        store.intern(Node::Source {
+                            name: "cached".to_string(),
+                            src: SourceRef::InMemory(table),
+                            schema,
+                        })
+                    }
+                    None => {
+                        let nid = store.intern(node);
+                        if cache.is_some() {
+                            cache_keys.insert(nid, key);
+                            cache_pins.insert(nid, source_refs_under(&g.store, id));
+                        }
+                        nid
+                    }
+                }
+            } else {
+                store.intern(node)
+            };
+            map.insert(id, new);
+        }
+        let graph = PlanGraph::new(store, map[&g.completion]);
+        let schemas = graph.schemas()?;
+        let uses = use_counts(&graph);
+        Ok(Program {
+            graph,
+            schemas,
+            uses,
+            cache_keys,
+            cache_pins,
+            cache_hits,
+        })
+    }
+}
+
+/// Every source reference reachable under `root` (cache entry pins).
+fn source_refs_under(store: &Store, root: NodeId) -> Vec<SourceRef> {
+    let mut out = Vec::new();
+    let mut seen: FxHashSet<NodeId> = FxHashSet::default();
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        if !seen.insert(id) {
+            continue;
+        }
+        if let Node::Source { src, .. } = &store[id] {
+            out.push(src.clone());
+        }
+        stack.extend(store[id].children());
+    }
+    out
+}
+
+/// Demand count per node, with multiplicity (a self-join demands its
+/// shared input twice) and +1 for the completion's own fetch. The edge
+/// from a `Project` into a `Source` is skipped — the projection's fast
+/// path reads the column subset from the source directly.
+fn use_counts(g: &PlanGraph) -> FxHashMap<NodeId, usize> {
+    let mut uses: FxHashMap<NodeId, usize> = FxHashMap::default();
+    for &id in &g.execution_order {
+        let node = &g.store[id];
+        if let Node::Project { input, .. } = node {
+            if matches!(g.store[*input], Node::Source { .. }) {
+                continue;
+            }
+        }
+        for c in node.children() {
+            *uses.entry(c).or_default() += 1;
+        }
+    }
+    *uses.entry(g.completion).or_default() += 1;
+    uses
+}
+
+/// One rank's interpreter state: the node memo and the remaining-use
+/// bookkeeping that drives take-on-last-use.
+struct RankState {
+    memo: FxHashMap<NodeId, LocalFrame>,
+    remaining: FxHashMap<NodeId, usize>,
+    fetched: FxHashSet<NodeId>,
+    stats: GraphRunStats,
+}
+
+impl RankState {
+    /// Hand `id`'s materialized frame to one consumer. The last consumer
+    /// takes ownership (no clone); earlier ones clone. Every fetch after
+    /// the first is a reuse hash-consing bought us.
+    fn fetch(&mut self, id: NodeId) -> LocalFrame {
+        let r = self
+            .remaining
+            .get_mut(&id)
+            .expect("fetch of an undemanded node");
+        *r -= 1;
+        if !self.fetched.insert(id) {
+            self.stats.reuse_hits += 1;
+        }
+        if *r == 0 {
+            self.memo.remove(&id).expect("node executed before use")
+        } else {
+            self.memo
+                .get(&id)
+                .expect("node executed before use")
+                .clone()
+        }
+    }
+}
+
+/// Interpret the whole program on this rank: walk the topological order,
+/// materializing each demanded node exactly once.
+fn exec_graph(
+    prog: &Program,
+    comm: &Comm,
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+) -> Result<(LocalFrame, GraphRunStats)> {
+    let mut st = RankState {
+        memo: FxHashMap::default(),
+        remaining: prog.uses.clone(),
+        fetched: FxHashSet::default(),
+        stats: GraphRunStats::default(),
+    };
+    for &id in &prog.graph.execution_order {
+        if prog.uses.get(&id).copied().unwrap_or(0) == 0 {
+            // only demanded through Project fast paths — never materialized
+            continue;
+        }
+        let frame = exec_one(prog, id, &mut st, comm, opts, cache)?;
+        st.stats.nodes_executed += 1;
+        st.memo.insert(id, frame);
+    }
+    let out = st.fetch(prog.graph.completion);
+    Ok((out, st.stats))
+}
+
+/// Interpret one graph node on this rank, fetching child frames from the
+/// memo.
+fn exec_one(
+    prog: &Program,
+    id: NodeId,
+    st: &mut RankState,
+    comm: &Comm,
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+) -> Result<LocalFrame> {
+    let node = &prog.graph.store[id];
+    match node {
+        Node::Source { src, schema, .. } => {
             let names: Vec<&str> = schema.names();
             exec_source(src, schema, &names, comm)
         }
         // pruning inserts Project(Source): read only the needed columns —
         // this is where column pruning actually saves I/O
-        Plan::Project { input, columns } => {
-            if let Plan::Source { src, schema, .. } = input.as_ref() {
+        Node::Project { input, columns } => {
+            if let Node::Source { src, schema, .. } = &prog.graph.store[*input] {
                 let names: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
                 let sub = Schema::new_nullable(
                     columns
@@ -202,7 +516,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 );
                 return exec_source(src, &sub, &names, comm);
             }
-            let frame = exec_node(input, comm, opts)?;
+            let frame = st.fetch(*input);
             let mut cols = Vec::new();
             let mut masks = Vec::new();
             let mut fields = Vec::new();
@@ -223,8 +537,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Filter { input, predicate } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::Filter { input, predicate } => {
+            let frame = st.fetch(*input);
             // expr_arr = map(pred, cols) — the paper's Fig. 4 expression
             // array; eval_mask ANDs the predicate's own validity (null
             // predicate lanes drop the row, SQL WHERE semantics)
@@ -241,8 +555,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::WithColumn { input, name, expr } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::WithColumn { input, name, expr } => {
+            let frame = st.fetch(*input);
             let (new_col, new_mask) = eval_nullable(expr, &frame)?;
             let mut fields = Vec::new();
             let mut nullable = Vec::new();
@@ -267,8 +581,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Rename { input, from, to } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::Rename { input, from, to } => {
+            let frame = st.fetch(*input);
             let fields = frame
                 .schema
                 .fields()
@@ -290,15 +604,15 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks: frame.masks,
             })
         }
-        Plan::Join {
+        Node::Join {
             left,
             right,
             on,
             how,
             strategy,
         } => {
-            let lframe = exec_node(left, comm, opts)?;
-            let rframe = exec_node(right, comm, opts)?;
+            let lframe = st.fetch(*left);
+            let rframe = st.fetch(*right);
             // key/payload column *references* with masks — the packed-key
             // ops shuffle straight out of the frame, no clones at the exec
             // boundary
@@ -352,7 +666,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             // assemble output per the join schema: left fields in order
             // (each key slot takes its joined key column), then — unless the
             // join type drops them — right fields minus the right keys
-            let schema = plan.schema()?;
+            let schema = prog.schemas[&id].clone();
             let mut cols = Vec::with_capacity(schema.len());
             let mut masks = Vec::with_capacity(schema.len());
             let mut push = |c: NullableColumn| {
@@ -386,8 +700,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Aggregate { input, keys, aggs } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::Aggregate { input, keys, aggs } => {
+            let frame = st.fetch(*input);
             let key_cols: Vec<MaskedCol> = keys
                 .iter()
                 .map(|k| frame.masked(k))
@@ -424,7 +738,7 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 ops::KeyNullability::Static(keys_nullable),
                 &spill,
             )?;
-            let schema = plan.schema()?;
+            let schema = prog.schemas[&id].clone();
             let mut cols = Vec::with_capacity(schema.len());
             let mut masks = Vec::with_capacity(schema.len());
             for c in key_out.into_iter().chain(out_cols) {
@@ -437,10 +751,10 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Concat { inputs } => {
+        Node::Concat { inputs } => {
             let mut frames = Vec::new();
             for p in inputs {
-                frames.push(exec_node(p, comm, opts)?);
+                frames.push(st.fetch(*p));
             }
             let first = frames.remove(0);
             let mut cols = first.cols;
@@ -458,14 +772,14 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Window {
+        Node::Window {
             input,
             partition_by,
             order_by,
             aggs,
         } => {
-            let frame = exec_node(input, comm, opts)?;
-            let out_schema = plan.schema()?;
+            let frame = st.fetch(*input);
+            let out_schema = prog.schemas[&id].clone();
             // evaluate the aggregate input expressions locally (pre-shuffle,
             // the paper's expression-array desugaring); record each one's
             // *static* nullability so every rank picks the same kernel path.
@@ -639,8 +953,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
             };
             assemble_window_output(sorted_frame, aggs, outs, out_schema)
         }
-        Plan::Sort { input, keys } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::Sort { input, keys } => {
+            let frame = st.fetch(*input);
             let key_cols: Vec<MaskedCol> = keys
                 .iter()
                 .map(|(k, _)| frame.masked(k))
@@ -691,8 +1005,8 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks,
             })
         }
-        Plan::Rebalance { input } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::Rebalance { input } => {
+            let frame = st.fetch(*input);
             let refs: Vec<MaskedCol> = frame
                 .cols
                 .iter()
@@ -706,23 +1020,23 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 masks: masks.into_iter().map(normalize_mask).collect(),
             })
         }
-        Plan::MatrixAssembly { input, columns } => {
+        Node::MatrixAssembly { input, columns } => {
             // schema typing rejects nullable feature columns
-            let frame = exec_node(input, comm, opts)?;
-            let schema = plan.schema()?;
+            let frame = st.fetch(*input);
+            let schema = prog.schemas[&id].clone();
             let cols: Vec<Column> = columns
                 .iter()
                 .map(|c| frame.col(c).map(|col| Column::F64(col.to_f64_vec())))
                 .collect::<Result<_>>()?;
             Ok(LocalFrame::new(schema, cols))
         }
-        Plan::MlCall { input, params } => {
-            let frame = exec_node(input, comm, opts)?;
+        Node::MlCall { input, params } => {
+            let frame = st.fetch(*input);
             let features: Vec<Vec<f64>> =
                 frame.cols.iter().map(|c| c.to_f64_vec()).collect();
             let result = crate::ml::run_mlcall(comm, &features, params)?;
             // result: k rows × (d features + cluster id), replicated
-            let schema = plan.schema()?;
+            let schema = prog.schemas[&id].clone();
             let mut cols: Vec<Column> = result
                 .centroids
                 .into_iter()
@@ -742,7 +1056,53 @@ pub fn exec_node(plan: &Plan, comm: &Comm, opts: &ExecOptions) -> Result<LocalFr
                 Ok(LocalFrame::new(schema, empty))
             }
         }
+        Node::Cache { input } => {
+            // identity at exec level; with a PlanCache attached, publish
+            // the full table (gathered on the leader) under the node's
+            // structural key so later collects substitute it
+            let frame = st.fetch(*input);
+            if let (Some(cache), Some(key)) = (cache, prog.cache_keys.get(&id)) {
+                let mut buf = Vec::new();
+                for (c, m) in frame.cols.iter().zip(&frame.masks) {
+                    encode_nullable_column(c, m.as_ref(), &mut buf);
+                }
+                let gathered = comm.gather_bytes(0, buf);
+                if comm.is_root() {
+                    let schema = prog.schemas[&id].clone();
+                    let (cols, masks) = concat_rank_chunks(&schema, gathered)?;
+                    let masks: Vec<Option<ValidityMask>> =
+                        masks.into_iter().map(normalize_mask).collect();
+                    let table = Table::new_masked(schema, cols, masks)?;
+                    let pins = prog.cache_pins.get(&id).cloned().unwrap_or_default();
+                    cache.insert(key.clone(), pins, table);
+                }
+            }
+            Ok(frame)
+        }
     }
+}
+
+/// Concatenate per-rank encoded chunks column-wise, in rank order.
+fn concat_rank_chunks(
+    schema: &Schema,
+    gathered: Vec<Vec<u8>>,
+) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
+    let mut cols: Vec<Column> = schema
+        .fields()
+        .iter()
+        .map(|(_, t)| Column::new_empty(*t))
+        .collect();
+    let mut masks: Vec<Option<ValidityMask>> = vec![None; cols.len()];
+    for rank_buf in gathered {
+        let mut pos = 0;
+        for (c, m) in cols.iter_mut().zip(masks.iter_mut()) {
+            let before = c.len();
+            let (chunk, cm) = decode_nullable_column(&rank_buf, &mut pos)?;
+            c.extend(&chunk);
+            extend_opt_mask(m, before, cm.as_ref(), chunk.len());
+        }
+    }
+    Ok((cols, masks))
 }
 
 fn exec_source(
@@ -807,20 +1167,6 @@ fn assemble_window_output(
         cols,
         masks,
     })
-}
-
-/// Serial reference execution of a plan (single rank) — the oracle the
-/// engine-agreement tests compare against.
-pub fn collect_serial(plan: Plan) -> Result<Table> {
-    let opts = ExecOptions {
-        workers: 1,
-        passes: PassOptions::none(),
-        agg_strategy: AggStrategy::RawShuffle,
-        // the oracle always runs in memory, whatever the env says
-        mem_budget: None,
-    };
-    let optimized = optimize(plan, &opts.passes)?;
-    collect_optimized(&optimized, &opts)
 }
 
 #[cfg(test)]
@@ -1172,5 +1518,77 @@ mod tests {
         let got = collect(plan, &opts(2)).unwrap();
         assert_eq!(got.num_cols(), 1);
         assert_eq!(got.num_rows(), 8);
+    }
+
+    fn diamond() -> Plan {
+        // filter shared by both join arms — hash-consing merges them
+        let f = Plan::Filter {
+            input: Box::new(source_mem("t", table())),
+            predicate: col("x").lt(lit(0.35)),
+        };
+        let renamed = Plan::Rename {
+            input: Box::new(Plan::Rename {
+                input: Box::new(f.clone()),
+                from: "id".into(),
+                to: "rid".into(),
+            }),
+            from: "x".into(),
+            to: "y".into(),
+        };
+        Plan::Sort {
+            input: Box::new(Plan::Join {
+                left: Box::new(f),
+                right: Box::new(renamed),
+                on: vec![("id".into(), "rid".into())],
+                how: crate::ir::JoinType::Inner,
+                strategy: crate::ir::JoinStrategy::Hash,
+            }),
+            keys: vec![("id".into(), SortOrder::Asc)],
+        }
+    }
+
+    #[test]
+    fn diamond_reuses_shared_subplan() {
+        let plan = diamond();
+        let serial = collect_serial(plan.clone()).unwrap();
+        for w in [2usize, 3] {
+            let (got, stats) = collect_stats(plan.clone(), &opts(w)).unwrap();
+            assert_eq!(got, serial, "workers={w}");
+            // the shared filter is fetched twice per rank: one reuse each
+            assert_eq!(stats.reuse_hits, w as u64, "workers={w}");
+        }
+        // without dedup the same plan executes the filter twice, no reuse
+        let mut o = opts(2);
+        o.passes.dedup_subplans = false;
+        let (got, stats) = collect_stats(plan, &o).unwrap();
+        assert_eq!(got, serial);
+        assert_eq!(stats.reuse_hits, 0);
+    }
+
+    #[test]
+    fn plan_cache_publishes_and_substitutes() {
+        let cache = PlanCache::new();
+        let plan = Plan::Sort {
+            input: Box::new(Plan::Cache {
+                input: Box::new(Plan::Filter {
+                    input: Box::new(source_mem("t", table())),
+                    predicate: col("x").lt(lit(0.35)),
+                }),
+            }),
+            keys: vec![("id".into(), SortOrder::Asc)],
+        };
+        let o = opts(2);
+        let (a, s1) = collect_cached(plan.clone(), &o, &cache).unwrap();
+        assert_eq!(s1.cache_hits, 0);
+        assert_eq!(cache.len(), 1, "first run publishes the entry");
+        let (b, s2) = collect_cached(plan.clone(), &o, &cache).unwrap();
+        assert_eq!(s2.cache_hits, 1, "second run substitutes it");
+        assert!(s2.nodes_executed < s1.nodes_executed);
+        assert_eq!(a, b);
+        cache.clear();
+        assert!(cache.is_empty());
+        // without a cache the node is a plain identity barrier
+        let plain = collect(plan, &o).unwrap();
+        assert_eq!(plain, a);
     }
 }

@@ -15,7 +15,7 @@
 //! | `cumsum(df[:x])`                           | [`DataFrame::cumsum`] (wrapper over the window node) |
 //! | `stencil(x -> …, df[:x])` (SMA/WMA)        | [`DataFrame::stencil`] / [`sma`] / [`wma`] (wrappers) |
 //! | window functions / `OVER (PARTITION BY …)` | [`DataFrame::window`] (builder) / [`DataFrame::with_window`] |
-//! | `df[:id3] = (…)/var(…)` (array compute)    | [`DataFrame::with_column`]             |
+//! | `df[:id3] = (…)/var(…)` (array compute)    | [`DataFrame::with_column`] / [`DataFrame::with_columns`] |
 //! | `transpose(typed_hcat(Float64, …))`        | [`DataFrame::matrix_assembly`]         |
 //! | `HPAT.Kmeans(samples, k)`                  | [`DataFrame::kmeans`]                  |
 //!
@@ -32,11 +32,14 @@
 //! ARCHITECTURE.md and DESIGN.md §4.3).
 //!
 //! A `DataFrame` is a lazy logical plan; [`DataFrame::collect`] compiles it
-//! through the full pass pipeline and runs it SPMD. Scalar helpers
-//! ([`DataFrame::mean`], [`DataFrame::var`]) mirror the paper's feature
-//! scaling idiom.
+//! through the full pass pipeline into a [`PlanGraph`](crate::ir::graph::PlanGraph)
+//! and runs it SPMD. [`DataFrame::explain`] renders that optimized graph
+//! one line per node; [`DataFrame::cache`] marks an explicit
+//! materialization point whose result the context's [`PlanCache`] pins
+//! across separate `collect()` calls. Scalar helpers ([`DataFrame::mean`],
+//! [`DataFrame::var`]) mirror the paper's feature scaling idiom.
 
-use crate::exec::{collect, ExecOptions};
+use crate::exec::{collect_cached, ExecOptions, PlanCache};
 use crate::expr::{col, AggExpr, AggFn, Expr, WindowExpr};
 use crate::ir::{
     source_hfs, source_mem, JoinStrategy, JoinType, MlParams, Plan, SortOrder, WindowAgg,
@@ -48,10 +51,12 @@ use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
 
-/// The HiFrames context: execution options shared by the frames it creates.
+/// The HiFrames context: execution options and the [`PlanCache`] shared by
+/// the frames it creates.
 #[derive(Clone)]
 pub struct HiFrames {
     opts: Arc<ExecOptions>,
+    cache: Arc<PlanCache>,
 }
 
 impl Default for HiFrames {
@@ -66,6 +71,7 @@ impl HiFrames {
     pub fn new(opts: ExecOptions) -> HiFrames {
         HiFrames {
             opts: Arc::new(opts),
+            cache: Arc::new(PlanCache::new()),
         }
     }
 
@@ -80,6 +86,13 @@ impl HiFrames {
     /// The execution options shared by every frame of this context.
     pub fn options(&self) -> &ExecOptions {
         &self.opts
+    }
+
+    /// The context's [`PlanCache`]: results of [`DataFrame::cache`] points
+    /// live here, pinned across separate `collect()` calls until
+    /// [`PlanCache::clear`].
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
     }
 
     /// Wrap an in-memory table as a data frame source.
@@ -155,13 +168,26 @@ impl DataFrame {
         })
     }
 
-    /// `df[:name] = expr` — array computation over columns.
+    /// `df[:name] = expr` — array computation over columns. Thin
+    /// single-column wrapper over [`DataFrame::with_columns`].
     pub fn with_column(&self, name: &str, expr: Expr) -> DataFrame {
-        self.wrap(Plan::WithColumn {
-            input: Box::new(self.plan.clone()),
-            name: name.to_string(),
-            expr,
-        })
+        self.with_columns(&[(name, expr)])
+    }
+
+    /// Batch array computation: add (or replace) several columns in one
+    /// call, left to right, so later expressions can reference earlier
+    /// outputs: `df.with_columns(&[("a", col("x").add(lit(1.0))),
+    /// ("b", col("a").mul(lit(2.0)))])`.
+    pub fn with_columns(&self, columns: &[(&str, Expr)]) -> DataFrame {
+        let mut plan = self.plan.clone();
+        for (name, expr) in columns {
+            plan = Plan::WithColumn {
+                input: Box::new(plan),
+                name: name.to_string(),
+                expr: expr.clone(),
+            };
+        }
+        self.wrap(plan)
     }
 
     /// Append a Bool column `:<column>_is_null` marking the null rows of
@@ -375,9 +401,37 @@ impl DataFrame {
         })
     }
 
+    /// Mark an explicit materialization point: the subplan below executes
+    /// at most once per context — its gathered result is published into the
+    /// context's [`PlanCache`] on the first `collect()` touching it, and
+    /// every later `collect()` (of this frame or any other sharing the
+    /// subplan) is served from the cache. A no-op for semantics: the cache
+    /// node changes neither schema nor rows.
+    pub fn cache(&self) -> DataFrame {
+        self.wrap(Plan::Cache {
+            input: Box::new(self.plan.clone()),
+        })
+    }
+
+    /// Render the *optimized* plan graph this frame would execute: one line
+    /// per node in execution order, `[shared]` on hash-consed multi-consumer
+    /// nodes, the selected join strategies, and `[spill]` on operators that
+    /// can go out-of-core when a memory budget is active. Output is stable
+    /// for a given plan and options. Planning errors render as a one-line
+    /// `explain error: …` instead of panicking.
+    pub fn explain(&self) -> String {
+        let budgeted = matches!(self.ctx.opts.mem_budget, Some(b) if b > 0);
+        match crate::passes::optimize_graph(self.plan.clone(), &self.ctx.opts.passes) {
+            Ok(g) => g.render(budgeted),
+            Err(e) => format!("explain error: {e}"),
+        }
+    }
+
     /// Compile (all passes) + SPMD execute + gather on the leader.
+    /// [`DataFrame::cache`] points are looked up in (and published to) the
+    /// context's [`PlanCache`].
     pub fn collect(&self) -> Result<Table> {
-        collect(self.plan.clone(), &self.ctx.opts)
+        Ok(collect_cached(self.plan.clone(), &self.ctx.opts, &self.ctx.cache)?.0)
     }
 
     /// Scalar mean of a column (the paper's `mean(c_i_points[:id3])` —
@@ -1024,6 +1078,72 @@ mod tests {
         assert_eq!(skew.column("id").unwrap(), hash.column("id").unwrap());
         assert_eq!(skew.mask("w"), hash.mask("w"));
         assert_eq!(skew.num_rows(), 6);
+    }
+
+    #[test]
+    fn with_columns_batch_matches_chained() {
+        let hf = ctx();
+        let batch = df(&hf)
+            .with_columns(&[
+                ("y", col("x").add(lit(1.0))),
+                ("z", col("y").mul(lit(2.0))),
+            ])
+            .collect()
+            .unwrap();
+        let chained = df(&hf)
+            .with_column("y", col("x").add(lit(1.0)))
+            .with_column("z", col("y").mul(lit(2.0)))
+            .collect()
+            .unwrap();
+        assert_eq!(batch, chained);
+        assert_eq!(batch.schema().names(), vec!["id", "x", "y", "z"]);
+        // empty batch is the identity
+        let same = df(&hf).with_columns(&[]).collect().unwrap();
+        assert_eq!(same, df(&hf).collect().unwrap());
+    }
+
+    #[test]
+    fn explain_renders_shared_nodes_stably() {
+        let hf = ctx();
+        let d = df(&hf);
+        let shared = d.filter(col("x").lt(lit(4.0)));
+        let right = shared.rename("id", "rid").rename("x", "y");
+        let j = shared
+            .join_on(&right, &[("id", "rid")], JoinType::Inner)
+            .sort_by("id");
+        let a = j.explain();
+        assert_eq!(a, j.explain(), "explain must be deterministic");
+        assert!(a.contains("[shared]"), "diamond arm not marked shared:\n{a}");
+        assert!(a.contains("Join"), "{a}");
+        assert!(a.contains("Sort"), "{a}");
+        // planning errors render instead of panicking
+        assert!(d.select(&["missing"]).explain().starts_with("explain error:"));
+    }
+
+    #[test]
+    fn cache_pins_results_across_collects() {
+        let hf = ctx();
+        let cached = df(&hf).filter(col("x").gt(lit(1.0))).cache();
+        let a = cached.sort_by("id").collect().unwrap();
+        assert_eq!(hf.plan_cache().len(), 1);
+        // the semantics are unchanged by the cache node
+        let plain = df(&hf)
+            .filter(col("x").gt(lit(1.0)))
+            .sort_by("id")
+            .collect()
+            .unwrap();
+        assert_eq!(a, plain);
+        // a second collect (and a different query over the same cached
+        // subplan) are served from the context's PlanCache
+        let before = crate::metrics::plan_stats().snapshot();
+        let b = cached.sort_by("id").collect().unwrap();
+        assert_eq!(a, b);
+        let c = cached.select(&["id"]).collect().unwrap();
+        assert_eq!(c.num_rows(), a.num_rows());
+        let after = crate::metrics::plan_stats().snapshot();
+        assert!(after.plan_cache_hits >= before.plan_cache_hits + 2);
+        hf.plan_cache().clear();
+        assert!(hf.plan_cache().is_empty());
     }
 
     #[test]

@@ -52,6 +52,9 @@ impl FxHasher {
 /// `HashMap` with the Fx hasher.
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
 
+/// `HashSet` with the Fx hasher.
+pub type FxHashSet<K> = std::collections::HashSet<K, BuildHasherDefault<FxHasher>>;
+
 /// One-shot Fx hash of a single word (the packed single-I64 key path).
 #[inline]
 pub fn hash_u64(x: u64) -> u64 {

@@ -1,0 +1,1167 @@
+//! Arena-graph logical IR: the DAG form of [`Plan`].
+//!
+//! `Box<Plan>` trees duplicate every upstream operator of a self-join and
+//! re-execute shared scans once per consumer. This module gives plans the
+//! MIR shape the ROADMAP names (toasty's `LogicalPlan`): nodes live in a
+//! [`Store`] arena, reference children by [`NodeId`], and are *hash-consed*
+//! on construction — interning a node whose operator, parameters and child
+//! ids match an existing node returns the existing id, so identical
+//! subplans collapse to one node and the executor materializes them once
+//! per rank.
+//!
+//! Hash-consing rule: a node's identity is its operator + parameters +
+//! child `NodeId`s. In-memory sources are identified by table *pointer*
+//! (two `source_mem` calls over equal data stay distinct; a cloned
+//! `DataFrame` shares), HFS sources by path. Nodes whose expressions embed
+//! scalar UDFs are never deduplicated — UDF identity is a closure, which
+//! only debug-prints its name, and a name collision must not merge
+//! different functions.
+//!
+//! A [`PlanGraph`] pairs a store with a `completion` node (the plan's
+//! output) and a children-first `execution_order`; the executor walks that
+//! order with a `NodeId → frame` memo. Passes transform graphs with
+//! [`PlanGraph::rewrite`], which rebuilds into a fresh store bottom-up and
+//! re-interns — sharing discovered upstream is preserved, and rewrites
+//! that make two subplans equal merge them for free.
+
+use super::{MlParams, Plan, SourceRef, WindowAgg};
+use crate::distribution::Dist;
+use crate::expr::{AggExpr, Expr};
+use crate::fxhash::FxHashMap;
+use crate::table::Schema;
+use crate::types::{JoinStrategy, JoinType, SortOrder};
+use anyhow::Result;
+use std::fmt;
+use std::ops::Index;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Index of a node in a [`Store`] arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One plan operator with children by [`NodeId`] — the graph counterpart
+/// of [`Plan`], field-for-field.
+#[derive(Debug, Clone)]
+pub enum Node {
+    Source {
+        name: String,
+        src: SourceRef,
+        schema: Schema,
+    },
+    Filter {
+        input: NodeId,
+        predicate: Expr,
+    },
+    Project {
+        input: NodeId,
+        columns: Vec<String>,
+    },
+    WithColumn {
+        input: NodeId,
+        name: String,
+        expr: Expr,
+    },
+    Rename {
+        input: NodeId,
+        from: String,
+        to: String,
+    },
+    Join {
+        left: NodeId,
+        right: NodeId,
+        on: Vec<(String, String)>,
+        how: JoinType,
+        strategy: JoinStrategy,
+    },
+    Aggregate {
+        input: NodeId,
+        keys: Vec<String>,
+        aggs: Vec<AggExpr>,
+    },
+    Concat {
+        inputs: Vec<NodeId>,
+    },
+    Window {
+        input: NodeId,
+        partition_by: Vec<String>,
+        order_by: Vec<(String, SortOrder)>,
+        aggs: Vec<WindowAgg>,
+    },
+    Sort {
+        input: NodeId,
+        keys: Vec<(String, SortOrder)>,
+    },
+    Rebalance {
+        input: NodeId,
+    },
+    MatrixAssembly {
+        input: NodeId,
+        columns: Vec<String>,
+    },
+    MlCall {
+        input: NodeId,
+        params: MlParams,
+    },
+    Cache {
+        input: NodeId,
+    },
+}
+
+impl Node {
+    /// Children in execution order (same order as [`Plan::children`]).
+    pub fn children(&self) -> Vec<NodeId> {
+        match self {
+            Node::Source { .. } => vec![],
+            Node::Filter { input, .. }
+            | Node::Project { input, .. }
+            | Node::WithColumn { input, .. }
+            | Node::Rename { input, .. }
+            | Node::Aggregate { input, .. }
+            | Node::Window { input, .. }
+            | Node::Sort { input, .. }
+            | Node::Rebalance { input }
+            | Node::MatrixAssembly { input, .. }
+            | Node::MlCall { input, .. }
+            | Node::Cache { input } => vec![*input],
+            Node::Join { left, right, .. } => vec![*left, *right],
+            Node::Concat { inputs } => inputs.clone(),
+        }
+    }
+
+    /// Rebuild with every child id sent through `map` (ids absent from the
+    /// map are kept — rewrites only map already-processed nodes).
+    pub fn remap(self, map: &FxHashMap<NodeId, NodeId>) -> Node {
+        let m = |id: NodeId| map.get(&id).copied().unwrap_or(id);
+        match self {
+            n @ Node::Source { .. } => n,
+            Node::Filter { input, predicate } => Node::Filter {
+                input: m(input),
+                predicate,
+            },
+            Node::Project { input, columns } => Node::Project {
+                input: m(input),
+                columns,
+            },
+            Node::WithColumn { input, name, expr } => Node::WithColumn {
+                input: m(input),
+                name,
+                expr,
+            },
+            Node::Rename { input, from, to } => Node::Rename {
+                input: m(input),
+                from,
+                to,
+            },
+            Node::Join {
+                left,
+                right,
+                on,
+                how,
+                strategy,
+            } => Node::Join {
+                left: m(left),
+                right: m(right),
+                on,
+                how,
+                strategy,
+            },
+            Node::Aggregate { input, keys, aggs } => Node::Aggregate {
+                input: m(input),
+                keys,
+                aggs,
+            },
+            Node::Concat { inputs } => Node::Concat {
+                inputs: inputs.into_iter().map(m).collect(),
+            },
+            Node::Window {
+                input,
+                partition_by,
+                order_by,
+                aggs,
+            } => Node::Window {
+                input: m(input),
+                partition_by,
+                order_by,
+                aggs,
+            },
+            Node::Sort { input, keys } => Node::Sort {
+                input: m(input),
+                keys,
+            },
+            Node::Rebalance { input } => Node::Rebalance { input: m(input) },
+            Node::MatrixAssembly { input, columns } => Node::MatrixAssembly {
+                input: m(input),
+                columns,
+            },
+            Node::MlCall { input, params } => Node::MlCall {
+                input: m(input),
+                params,
+            },
+            Node::Cache { input } => Node::Cache { input: m(input) },
+        }
+    }
+
+    /// Operator + parameters, children excluded — the "local" half of the
+    /// hash-consing identity. Also the building block of the structural
+    /// cache key ([`Store::structural_key`]).
+    fn local_signature(&self) -> String {
+        match self {
+            Node::Source { name, src, schema } => {
+                let ident = match src {
+                    // pointer identity: equal-valued but separately loaded
+                    // tables must NOT merge (they may diverge), while every
+                    // clone of one DataFrame shares its Arc
+                    SourceRef::InMemory(t) => format!("mem:{:p}", Arc::as_ptr(t)),
+                    SourceRef::Hfs(p) => format!("hfs:{}", p.display()),
+                };
+                format!("source|{name}|{ident}|{schema}")
+            }
+            Node::Filter { predicate, .. } => format!("filter|{predicate:?}"),
+            Node::Project { columns, .. } => format!("project|{columns:?}"),
+            Node::WithColumn { name, expr, .. } => {
+                format!("withcolumn|{name}|{expr:?}")
+            }
+            Node::Rename { from, to, .. } => format!("rename|{from}|{to}"),
+            Node::Join {
+                on, how, strategy, ..
+            } => format!("join|{on:?}|{how:?}|{strategy:?}"),
+            Node::Aggregate { keys, aggs, .. } => {
+                format!("aggregate|{keys:?}|{aggs:?}")
+            }
+            Node::Concat { .. } => "concat".to_string(),
+            Node::Window {
+                partition_by,
+                order_by,
+                aggs,
+                ..
+            } => format!("window|{partition_by:?}|{order_by:?}|{aggs:?}"),
+            Node::Sort { keys, .. } => format!("sort|{keys:?}"),
+            Node::Rebalance { .. } => "rebalance".to_string(),
+            Node::MatrixAssembly { columns, .. } => {
+                format!("matrix|{columns:?}")
+            }
+            Node::MlCall { params, .. } => format!("mlcall|{params:?}"),
+            Node::Cache { .. } => "cache".to_string(),
+        }
+    }
+
+    /// Full hash-consing signature: local identity + child ids.
+    pub fn signature(&self) -> String {
+        let kids: Vec<String> = self.children().iter().map(|c| c.0.to_string()).collect();
+        format!("{}<-{}", self.local_signature(), kids.join(","))
+    }
+
+    /// Output schema given the already-computed child schemas. Delegates to
+    /// [`Plan::schema`] through shallow source stubs so the tree typing
+    /// rules stay the single source of truth.
+    pub fn local_schema(&self, kids: &[Schema]) -> Result<Schema> {
+        fn stub(s: &Schema) -> Box<Plan> {
+            Box::new(Plan::Source {
+                name: "·".to_string(),
+                src: SourceRef::Hfs(PathBuf::new()),
+                schema: s.clone(),
+            })
+        }
+        let shallow = match self {
+            Node::Source { schema, .. } => return Ok(schema.clone()),
+            Node::Cache { .. } => return Ok(kids[0].clone()),
+            Node::Filter { predicate, .. } => Plan::Filter {
+                input: stub(&kids[0]),
+                predicate: predicate.clone(),
+            },
+            Node::Project { columns, .. } => Plan::Project {
+                input: stub(&kids[0]),
+                columns: columns.clone(),
+            },
+            Node::WithColumn { name, expr, .. } => Plan::WithColumn {
+                input: stub(&kids[0]),
+                name: name.clone(),
+                expr: expr.clone(),
+            },
+            Node::Rename { from, to, .. } => Plan::Rename {
+                input: stub(&kids[0]),
+                from: from.clone(),
+                to: to.clone(),
+            },
+            Node::Join {
+                on, how, strategy, ..
+            } => Plan::Join {
+                left: stub(&kids[0]),
+                right: stub(&kids[1]),
+                on: on.clone(),
+                how: *how,
+                strategy: *strategy,
+            },
+            Node::Aggregate { keys, aggs, .. } => Plan::Aggregate {
+                input: stub(&kids[0]),
+                keys: keys.clone(),
+                aggs: aggs.clone(),
+            },
+            Node::Concat { .. } => Plan::Concat {
+                inputs: kids.iter().map(|s| stub(s)).collect(),
+            },
+            Node::Window {
+                partition_by,
+                order_by,
+                aggs,
+                ..
+            } => Plan::Window {
+                input: stub(&kids[0]),
+                partition_by: partition_by.clone(),
+                order_by: order_by.clone(),
+                aggs: aggs.clone(),
+            },
+            Node::Sort { keys, .. } => Plan::Sort {
+                input: stub(&kids[0]),
+                keys: keys.clone(),
+            },
+            Node::Rebalance { .. } => Plan::Rebalance {
+                input: stub(&kids[0]),
+            },
+            Node::MatrixAssembly { columns, .. } => Plan::MatrixAssembly {
+                input: stub(&kids[0]),
+                columns: columns.clone(),
+            },
+            Node::MlCall { params, .. } => Plan::MlCall {
+                input: stub(&kids[0]),
+                params: params.clone(),
+            },
+        };
+        shallow.schema()
+    }
+
+    /// Graph counterpart of [`Plan::requires_block_input`].
+    pub fn requires_block_input(&self) -> bool {
+        match self {
+            Node::MatrixAssembly { .. } => true,
+            Node::Window {
+                partition_by, aggs, ..
+            } => partition_by.is_empty() && aggs.iter().any(|a| a.needs_halo()),
+            _ => false,
+        }
+    }
+
+    /// One-line description with children rendered as `%<position>` — the
+    /// canonical text form. Positions (not raw arena ids) make isomorphic
+    /// graphs print identically, which the pushdown fixpoint and the
+    /// explain snapshots rely on.
+    fn describe(&self, pos: &FxHashMap<NodeId, usize>) -> String {
+        let r = |id: &NodeId| format!("%{}", pos[id]);
+        match self {
+            Node::Source { name, .. } => format!("Source({name})"),
+            Node::Filter { input, predicate } => {
+                format!("Filter({}, {predicate})", r(input))
+            }
+            Node::Project { input, columns } => {
+                format!("Project({}, {})", r(input), columns.join(", "))
+            }
+            Node::WithColumn { input, name, expr } => {
+                format!("WithColumn({}, :{name} = {expr})", r(input))
+            }
+            Node::Rename { input, from, to } => {
+                format!("Rename({}, :{from} -> :{to})", r(input))
+            }
+            Node::Join {
+                left,
+                right,
+                on,
+                how,
+                strategy,
+            } => {
+                let pairs: Vec<String> = on
+                    .iter()
+                    .map(|(lk, rk)| format!(":{lk} == :{rk}"))
+                    .collect();
+                match strategy {
+                    JoinStrategy::Hash => format!(
+                        "Join({}, {}, {}, how={how})",
+                        r(left),
+                        r(right),
+                        pairs.join(" && ")
+                    ),
+                    other => format!(
+                        "Join({}, {}, {}, how={how}, strategy={other})",
+                        r(left),
+                        r(right),
+                        pairs.join(" && ")
+                    ),
+                }
+            }
+            Node::Aggregate { input, keys, aggs } => {
+                let ks: Vec<String> = keys.iter().map(|k| format!(":{k}")).collect();
+                let parts: Vec<String> = aggs.iter().map(|a| a.to_string()).collect();
+                format!(
+                    "Aggregate({}, {}; {})",
+                    r(input),
+                    ks.join(", "),
+                    parts.join(", ")
+                )
+            }
+            Node::Concat { inputs } => {
+                let refs: Vec<String> = inputs.iter().map(|i| r(i)).collect();
+                format!("Concat({})", refs.join(", "))
+            }
+            Node::Window {
+                input,
+                partition_by,
+                order_by,
+                aggs,
+            } => {
+                let parts: Vec<String> = aggs.iter().map(|a| a.to_string()).collect();
+                if partition_by.is_empty() {
+                    format!("Window({}, {})", r(input), parts.join(", "))
+                } else {
+                    let ks: Vec<String> =
+                        partition_by.iter().map(|k| format!(":{k}")).collect();
+                    let os: Vec<String> = order_by
+                        .iter()
+                        .map(|(k, o)| format!(":{k} {o}"))
+                        .collect();
+                    format!(
+                        "Window({}, partition_by=[{}], order_by=[{}]; {})",
+                        r(input),
+                        ks.join(", "),
+                        os.join(", "),
+                        parts.join(", ")
+                    )
+                }
+            }
+            Node::Sort { input, keys } => {
+                let ks: Vec<String> = keys
+                    .iter()
+                    .map(|(k, o)| format!(":{k} {o}"))
+                    .collect();
+                format!("Sort({}, {})", r(input), ks.join(", "))
+            }
+            Node::Rebalance { input } => format!("Rebalance({})", r(input)),
+            Node::MatrixAssembly { input, columns } => {
+                format!("MatrixAssembly({}, {})", r(input), columns.join(", "))
+            }
+            Node::MlCall { input, params } => format!(
+                "MlCall({}, {}, k={}, iters={}, pjrt={})",
+                r(input),
+                params.model,
+                params.k,
+                params.iters,
+                params.use_pjrt
+            ),
+            Node::Cache { input } => format!("Cache({})", r(input)),
+        }
+    }
+}
+
+/// Append-only node arena with optional hash-consing.
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    nodes: Vec<Node>,
+    /// `signature → id` interning map; `None` disables dedup (the serial
+    /// oracle and `PassOptions::none()` run with exact tree shapes).
+    dedup: Option<FxHashMap<String, NodeId>>,
+}
+
+impl Store {
+    /// Arena with hash-consing on.
+    pub fn new() -> Store {
+        Store {
+            nodes: Vec::new(),
+            dedup: Some(FxHashMap::default()),
+        }
+    }
+
+    /// Arena that interns every node fresh (plain tree flattening).
+    pub fn without_dedup() -> Store {
+        Store {
+            nodes: Vec::new(),
+            dedup: None,
+        }
+    }
+
+    /// Empty arena with the same dedup setting as `other` (rewrites keep
+    /// the policy of the graph they transform).
+    pub fn like(other: &Store) -> Store {
+        if other.dedup.is_some() {
+            Store::new()
+        } else {
+            Store::without_dedup()
+        }
+    }
+
+    pub fn dedup_enabled(&self) -> bool {
+        self.dedup.is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node, hash-consing when enabled: an identical node (operator,
+    /// parameters, children) returns the existing [`NodeId`]. Nodes whose
+    /// expressions carry UDFs are never merged (closure identity is not
+    /// observable — see the module docs).
+    pub fn intern(&mut self, node: Node) -> NodeId {
+        if let Some(map) = &mut self.dedup {
+            let sig = node.signature();
+            if !sig.contains("udf:") {
+                if let Some(&id) = map.get(&sig) {
+                    return id;
+                }
+                let id = NodeId(self.nodes.len() as u32);
+                map.insert(sig, id);
+                self.nodes.push(node);
+                return id;
+            }
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    /// Output schema of `id`, computed bottom-up with a memo so shared
+    /// subgraphs type once.
+    pub fn schema_of(&self, id: NodeId) -> Result<Schema> {
+        let mut memo: FxHashMap<NodeId, Schema> = FxHashMap::default();
+        self.schema_rec(id, &mut memo)
+    }
+
+    fn schema_rec(&self, id: NodeId, memo: &mut FxHashMap<NodeId, Schema>) -> Result<Schema> {
+        if let Some(s) = memo.get(&id) {
+            return Ok(s.clone());
+        }
+        let kids: Vec<Schema> = self[id]
+            .children()
+            .into_iter()
+            .map(|c| self.schema_rec(c, memo))
+            .collect::<Result<_>>()?;
+        let s = self[id].local_schema(&kids)?;
+        memo.insert(id, s.clone());
+        Ok(s)
+    }
+
+    /// Distribution of `id` (graph form of [`Plan::dist`], memoized so the
+    /// meet over a DAG stays linear).
+    pub fn dist_of(&self, id: NodeId) -> Dist {
+        let mut memo: FxHashMap<NodeId, Dist> = FxHashMap::default();
+        self.dist_rec(id, &mut memo)
+    }
+
+    fn dist_rec(&self, id: NodeId, memo: &mut FxHashMap<NodeId, Dist>) -> Dist {
+        if let Some(d) = memo.get(&id) {
+            return *d;
+        }
+        let d = match &self[id] {
+            Node::Source { .. } => Dist::OneD,
+            Node::Filter { input, .. } | Node::Aggregate { input, .. } => {
+                Dist::OneDVar.meet(self.dist_rec(*input, memo))
+            }
+            Node::Join { left, right, .. } => Dist::OneDVar
+                .meet(self.dist_rec(*left, memo))
+                .meet(self.dist_rec(*right, memo)),
+            Node::Concat { inputs } => {
+                Dist::meet_all(inputs.iter().map(|i| self.dist_rec(*i, memo)))
+                    .meet(Dist::OneDVar)
+            }
+            Node::Project { input, .. }
+            | Node::WithColumn { input, .. }
+            | Node::Rename { input, .. }
+            | Node::Cache { input } => self.dist_rec(*input, memo),
+            Node::Window {
+                input,
+                partition_by,
+                ..
+            } => {
+                if partition_by.is_empty() {
+                    self.dist_rec(*input, memo)
+                } else {
+                    Dist::OneDVar.meet(self.dist_rec(*input, memo))
+                }
+            }
+            Node::Sort { input, .. } => Dist::OneDVar.meet(self.dist_rec(*input, memo)),
+            Node::Rebalance { .. } => Dist::OneD,
+            Node::MatrixAssembly { input, .. } => self.dist_rec(*input, memo),
+            Node::MlCall { .. } => Dist::Rep,
+        };
+        memo.insert(id, d);
+        d
+    }
+
+    /// Position-independent structural identity of the subgraph rooted at
+    /// `id` — the plan-cache key. Two plans built in different sessions
+    /// over the same sources (same table Arcs / HFS paths) produce the
+    /// same key for the same logical subplan.
+    pub fn structural_key(&self, id: NodeId) -> String {
+        let mut memo: FxHashMap<NodeId, String> = FxHashMap::default();
+        self.key_rec(id, &mut memo)
+    }
+
+    fn key_rec(&self, id: NodeId, memo: &mut FxHashMap<NodeId, String>) -> String {
+        if let Some(k) = memo.get(&id) {
+            return k.clone();
+        }
+        let kids: Vec<String> = self[id]
+            .children()
+            .into_iter()
+            .map(|c| self.key_rec(c, memo))
+            .collect();
+        let k = format!("({} {})", self[id].local_signature(), kids.join(" "));
+        memo.insert(id, k.clone());
+        k
+    }
+
+    /// Expand the subgraph at `id` back to a [`Plan`] tree (shared nodes
+    /// are cloned into each consumer — the tree has no way to share).
+    pub fn to_plan(&self, id: NodeId) -> Plan {
+        let mut memo: FxHashMap<NodeId, Plan> = FxHashMap::default();
+        self.plan_rec(id, &mut memo)
+    }
+
+    fn plan_rec(&self, id: NodeId, memo: &mut FxHashMap<NodeId, Plan>) -> Plan {
+        if let Some(p) = memo.get(&id) {
+            return p.clone();
+        }
+        let kids: Vec<Plan> = self[id]
+            .children()
+            .into_iter()
+            .map(|c| self.plan_rec(c, memo))
+            .collect();
+        let mut kids = kids.into_iter();
+        fn one(kids: &mut std::vec::IntoIter<Plan>) -> Box<Plan> {
+            Box::new(kids.next().expect("node arity"))
+        }
+        let p = match &self[id] {
+            Node::Source { name, src, schema } => Plan::Source {
+                name: name.clone(),
+                src: src.clone(),
+                schema: schema.clone(),
+            },
+            Node::Filter { predicate, .. } => Plan::Filter {
+                input: one(&mut kids),
+                predicate: predicate.clone(),
+            },
+            Node::Project { columns, .. } => Plan::Project {
+                input: one(&mut kids),
+                columns: columns.clone(),
+            },
+            Node::WithColumn { name, expr, .. } => Plan::WithColumn {
+                input: one(&mut kids),
+                name: name.clone(),
+                expr: expr.clone(),
+            },
+            Node::Rename { from, to, .. } => Plan::Rename {
+                input: one(&mut kids),
+                from: from.clone(),
+                to: to.clone(),
+            },
+            Node::Join {
+                on, how, strategy, ..
+            } => Plan::Join {
+                left: one(&mut kids),
+                right: one(&mut kids),
+                on: on.clone(),
+                how: *how,
+                strategy: *strategy,
+            },
+            Node::Aggregate { keys, aggs, .. } => Plan::Aggregate {
+                input: one(&mut kids),
+                keys: keys.clone(),
+                aggs: aggs.clone(),
+            },
+            Node::Concat { .. } => Plan::Concat {
+                inputs: kids.by_ref().map(Box::new).collect(),
+            },
+            Node::Window {
+                partition_by,
+                order_by,
+                aggs,
+                ..
+            } => Plan::Window {
+                input: one(&mut kids),
+                partition_by: partition_by.clone(),
+                order_by: order_by.clone(),
+                aggs: aggs.clone(),
+            },
+            Node::Sort { keys, .. } => Plan::Sort {
+                input: one(&mut kids),
+                keys: keys.clone(),
+            },
+            Node::Rebalance { .. } => Plan::Rebalance {
+                input: one(&mut kids),
+            },
+            Node::MatrixAssembly { columns, .. } => Plan::MatrixAssembly {
+                input: one(&mut kids),
+                columns: columns.clone(),
+            },
+            Node::MlCall { params, .. } => Plan::MlCall {
+                input: one(&mut kids),
+                params: params.clone(),
+            },
+            Node::Cache { .. } => Plan::Cache {
+                input: one(&mut kids),
+            },
+        };
+        memo.insert(id, p.clone());
+        p
+    }
+}
+
+impl Index<NodeId> for Store {
+    type Output = Node;
+    fn index(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+}
+
+/// A complete logical plan as a DAG: arena + output node + topological
+/// execution order (children strictly before consumers; only nodes
+/// reachable from `completion` appear).
+#[derive(Debug, Clone)]
+pub struct PlanGraph {
+    pub store: Store,
+    /// The node whose output is the plan's result.
+    pub completion: NodeId,
+    /// Children-first topological order over the reachable nodes; the
+    /// executor materializes exactly this sequence.
+    pub execution_order: Vec<NodeId>,
+}
+
+impl PlanGraph {
+    /// Wrap a store + output node, computing the execution order (iterative
+    /// post-order DFS; each shared node appears once). Unreachable arena
+    /// garbage — e.g. nodes orphaned by a rewrite — is simply skipped.
+    pub fn new(store: Store, completion: NodeId) -> PlanGraph {
+        let mut order = Vec::new();
+        let mut visited: FxHashMap<NodeId, ()> = FxHashMap::default();
+        let mut stack: Vec<(NodeId, usize)> = vec![(completion, 0)];
+        visited.insert(completion, ());
+        while let Some((id, cursor)) = stack.pop() {
+            let kids = store[id].children();
+            if cursor < kids.len() {
+                stack.push((id, cursor + 1));
+                let k = kids[cursor];
+                if visited.insert(k, ()).is_none() {
+                    stack.push((k, 0));
+                }
+            } else {
+                order.push(id);
+            }
+        }
+        PlanGraph {
+            store,
+            completion,
+            execution_order: order,
+        }
+    }
+
+    /// Intern a [`Plan`] tree. With `dedup` on, identical subtrees (e.g.
+    /// both sides of a self-join) collapse into one node.
+    pub fn from_plan(plan: &Plan, dedup: bool) -> PlanGraph {
+        fn intern_rec(store: &mut Store, plan: &Plan) -> NodeId {
+            let kids: Vec<NodeId> = plan
+                .children()
+                .iter()
+                .map(|c| intern_rec(store, c))
+                .collect();
+            let node = node_from_plan(plan, &kids);
+            store.intern(node)
+        }
+        let mut store = if dedup {
+            Store::new()
+        } else {
+            Store::without_dedup()
+        };
+        let completion = intern_rec(&mut store, plan);
+        PlanGraph::new(store, completion)
+    }
+
+    /// Expand back to a tree (inverse of [`PlanGraph::from_plan`] up to
+    /// sharing).
+    pub fn to_plan(&self) -> Plan {
+        self.store.to_plan(self.completion)
+    }
+
+    /// Number of distinct (reachable) nodes.
+    pub fn node_count(&self) -> usize {
+        self.execution_order.len()
+    }
+
+    pub fn schema(&self) -> Result<Schema> {
+        self.store.schema_of(self.completion)
+    }
+
+    /// Schema of every reachable node, computed bottom-up in one pass.
+    pub fn schemas(&self) -> Result<FxHashMap<NodeId, Schema>> {
+        let mut out: FxHashMap<NodeId, Schema> = FxHashMap::default();
+        for &id in &self.execution_order {
+            let kids: Vec<Schema> = self.store[id]
+                .children()
+                .into_iter()
+                .map(|c| out[&c].clone())
+                .collect();
+            let s = self.store[id].local_schema(&kids)?;
+            out.insert(id, s);
+        }
+        Ok(out)
+    }
+
+    /// Consumer-edge count per node, with multiplicity (a self-join counts
+    /// its shared input twice); the completion node gets one implicit use
+    /// (the driver reads it). `> 1` ⇒ the node is shared.
+    pub fn consumer_counts(&self) -> FxHashMap<NodeId, usize> {
+        let mut counts: FxHashMap<NodeId, usize> = FxHashMap::default();
+        for &id in &self.execution_order {
+            for c in self.store[id].children() {
+                *counts.entry(c).or_insert(0) += 1;
+            }
+        }
+        *counts.entry(self.completion).or_insert(0) += 1;
+        counts
+    }
+
+    /// Functional bottom-up rewrite: each node (children already remapped
+    /// into the new store) goes through `rule`, and the result is interned.
+    /// Sharing survives by construction — a shared node is processed once
+    /// and every consumer is remapped to its single image.
+    pub fn rewrite<F>(&self, mut rule: F) -> PlanGraph
+    where
+        F: FnMut(&mut Store, Node) -> Node,
+    {
+        self.rewrite_indexed(|st, _, n| rule(st, n))
+    }
+
+    /// [`PlanGraph::rewrite`] variant that also hands the rule the node's
+    /// id in the *old* graph (for rules keyed on precomputed per-node
+    /// facts, e.g. the plan-cache substitution).
+    pub fn rewrite_indexed<F>(&self, mut rule: F) -> PlanGraph
+    where
+        F: FnMut(&mut Store, NodeId, Node) -> Node,
+    {
+        let mut out = Store::like(&self.store);
+        let mut map: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+        for &id in &self.execution_order {
+            let node = self.store[id].clone().remap(&map);
+            let node = rule(&mut out, id, node);
+            let nid = out.intern(node);
+            map.insert(id, nid);
+        }
+        PlanGraph::new(out, map[&self.completion])
+    }
+
+    /// One line per node in execution order: `%i = Op(%child…, params)
+    /// [dist]` plus `[shared]` on multi-consumer nodes and — when
+    /// `annotate_spill` is set (a memory budget is active) — `[spill]` on
+    /// the operators that can go out-of-core. Output is canonical: node
+    /// numbers are execution-order positions, so isomorphic graphs render
+    /// byte-identically.
+    pub fn render(&self, annotate_spill: bool) -> String {
+        let pos: FxHashMap<NodeId, usize> = self
+            .execution_order
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i))
+            .collect();
+        let shared = self.consumer_counts();
+        let mut out = String::new();
+        for (i, &id) in self.execution_order.iter().enumerate() {
+            let node = &self.store[id];
+            let dist = self.store.dist_of(id);
+            out.push_str(&format!("%{i} = {} [{dist}]", node.describe(&pos)));
+            if shared.get(&id).copied().unwrap_or(0) > 1 {
+                out.push_str(" [shared]");
+            }
+            if annotate_spill
+                && matches!(
+                    node,
+                    Node::Join { .. } | Node::Aggregate { .. } | Node::Sort { .. }
+                )
+            {
+                out.push_str(" [spill]");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl fmt::Display for PlanGraph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render(false))
+    }
+}
+
+/// Shallow [`Plan`] → [`Node`] conversion given already-interned children
+/// (in [`Plan::children`] order).
+fn node_from_plan(plan: &Plan, kids: &[NodeId]) -> Node {
+    match plan {
+        Plan::Source { name, src, schema } => Node::Source {
+            name: name.clone(),
+            src: src.clone(),
+            schema: schema.clone(),
+        },
+        Plan::Filter { predicate, .. } => Node::Filter {
+            input: kids[0],
+            predicate: predicate.clone(),
+        },
+        Plan::Project { columns, .. } => Node::Project {
+            input: kids[0],
+            columns: columns.clone(),
+        },
+        Plan::WithColumn { name, expr, .. } => Node::WithColumn {
+            input: kids[0],
+            name: name.clone(),
+            expr: expr.clone(),
+        },
+        Plan::Rename { from, to, .. } => Node::Rename {
+            input: kids[0],
+            from: from.clone(),
+            to: to.clone(),
+        },
+        Plan::Join {
+            on, how, strategy, ..
+        } => Node::Join {
+            left: kids[0],
+            right: kids[1],
+            on: on.clone(),
+            how: *how,
+            strategy: *strategy,
+        },
+        Plan::Aggregate { keys, aggs, .. } => Node::Aggregate {
+            input: kids[0],
+            keys: keys.clone(),
+            aggs: aggs.clone(),
+        },
+        Plan::Concat { .. } => Node::Concat {
+            inputs: kids.to_vec(),
+        },
+        Plan::Window {
+            partition_by,
+            order_by,
+            aggs,
+            ..
+        } => Node::Window {
+            input: kids[0],
+            partition_by: partition_by.clone(),
+            order_by: order_by.clone(),
+            aggs: aggs.clone(),
+        },
+        Plan::Sort { keys, .. } => Node::Sort {
+            input: kids[0],
+            keys: keys.clone(),
+        },
+        Plan::Rebalance { .. } => Node::Rebalance { input: kids[0] },
+        Plan::MatrixAssembly { columns, .. } => Node::MatrixAssembly {
+            input: kids[0],
+            columns: columns.clone(),
+        },
+        Plan::MlCall { params, .. } => Node::MlCall {
+            input: kids[0],
+            params: params.clone(),
+        },
+        Plan::Cache { .. } => Node::Cache { input: kids[0] },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::expr::{col, lit};
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn src() -> Plan {
+        source_mem(
+            "t",
+            Table::from_pairs(vec![
+                ("id", Column::I64(vec![1, 2])),
+                ("x", Column::F64(vec![0.5, 1.5])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn self_join(base: &Plan) -> Plan {
+        // rename both right columns to dodge the collision check
+        let renamed = Plan::Rename {
+            input: Box::new(Plan::Rename {
+                input: Box::new(base.clone()),
+                from: "id".into(),
+                to: "rid".into(),
+            }),
+            from: "x".into(),
+            to: "y".into(),
+        };
+        Plan::Join {
+            left: Box::new(base.clone()),
+            right: Box::new(renamed),
+            on: vec![("id".into(), "rid".into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        }
+    }
+
+    #[test]
+    fn hash_consing_merges_self_join_scan() {
+        let plan = self_join(&src());
+        // tree: join + 2 renames + 2 copies of the scan = 5 nodes
+        assert_eq!(plan.size(), 5);
+        let g = PlanGraph::from_plan(&plan, true);
+        // graph: the two scan copies share one node
+        assert_eq!(g.node_count(), 4);
+        let shared = g.consumer_counts();
+        let n_shared = g
+            .execution_order
+            .iter()
+            .filter(|id| shared[id] > 1)
+            .count();
+        assert_eq!(n_shared, 1);
+        // without dedup the flattening is exactly the tree
+        let g2 = PlanGraph::from_plan(&plan, false);
+        assert_eq!(g2.node_count(), 5);
+    }
+
+    #[test]
+    fn separately_loaded_equal_tables_stay_distinct() {
+        // same values, different Arc: pointer identity must keep them apart
+        let j = Plan::Join {
+            left: Box::new(src()),
+            right: Box::new(Plan::Rename {
+                input: Box::new(Plan::Rename {
+                    input: Box::new(src()),
+                    from: "id".into(),
+                    to: "rid".into(),
+                }),
+                from: "x".into(),
+                to: "y".into(),
+            }),
+            on: vec![("id".into(), "rid".into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        };
+        let g = PlanGraph::from_plan(&j, true);
+        assert_eq!(g.node_count(), 5);
+    }
+
+    #[test]
+    fn round_trip_preserves_tree() {
+        let plan = self_join(&src());
+        for dedup in [true, false] {
+            let g = PlanGraph::from_plan(&plan, dedup);
+            assert_eq!(format!("{}", g.to_plan()), format!("{plan}"));
+            assert_eq!(g.to_plan().size(), plan.size());
+        }
+    }
+
+    #[test]
+    fn execution_order_is_children_first() {
+        let g = PlanGraph::from_plan(&self_join(&src()), true);
+        let pos: FxHashMap<NodeId, usize> = g
+            .execution_order
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i))
+            .collect();
+        for &id in &g.execution_order {
+            for c in g.store[id].children() {
+                assert!(pos[&c] < pos[&id], "child after consumer");
+            }
+        }
+        assert_eq!(*g.execution_order.last().unwrap(), g.completion);
+    }
+
+    #[test]
+    fn schema_and_dist_match_tree() {
+        let plan = self_join(&src());
+        let g = PlanGraph::from_plan(&plan, true);
+        assert_eq!(g.schema().unwrap(), plan.schema().unwrap());
+        assert_eq!(g.store.dist_of(g.completion), plan.dist());
+        let schemas = g.schemas().unwrap();
+        assert_eq!(schemas[&g.completion], plan.schema().unwrap());
+    }
+
+    #[test]
+    fn render_golden_diamond() {
+        // diamond: one filtered scan feeding both sides of a join — the
+        // exact text is the explain() contract, keep it stable
+        let base = Plan::Filter {
+            input: Box::new(src()),
+            predicate: col("x").lt(lit(9.0)),
+        };
+        let plan = self_join(&base);
+        let g = PlanGraph::from_plan(&plan, true);
+        let expected = "\
+%0 = Source(t) [1D]
+%1 = Filter(%0, (:x < 9)) [1D_VAR] [shared]
+%2 = Rename(%1, :id -> :rid) [1D_VAR]
+%3 = Rename(%2, :x -> :y) [1D_VAR]
+%4 = Join(%1, %3, :id == :rid, how=inner) [1D_VAR]
+";
+        assert_eq!(g.render(false), expected);
+        // spill annotation marks the out-of-core-capable operators
+        assert!(g.render(true).contains("how=inner) [1D_VAR] [spill]"));
+        // Display is the unannotated rendering
+        assert_eq!(format!("{g}"), g.render(false));
+    }
+
+    #[test]
+    fn structural_key_is_position_independent() {
+        let plan = self_join(&src());
+        let a = PlanGraph::from_plan(&plan, true);
+        let b = PlanGraph::from_plan(&plan, false);
+        assert_eq!(
+            a.store.structural_key(a.completion),
+            b.store.structural_key(b.completion)
+        );
+        // wrapping in Cache changes the key of the root but not the input
+        let cached = Plan::Cache {
+            input: Box::new(plan),
+        };
+        let c = PlanGraph::from_plan(&cached, true);
+        let Node::Cache { input } = &c.store[c.completion] else {
+            panic!("expected cache at completion");
+        };
+        assert_eq!(
+            c.store.structural_key(*input),
+            a.store.structural_key(a.completion)
+        );
+    }
+
+    #[test]
+    fn rewrite_preserves_sharing() {
+        let plan = self_join(&src());
+        let g = PlanGraph::from_plan(&plan, true);
+        // identity rewrite: same node count, same render
+        let g2 = g.rewrite(|_, n| n);
+        assert_eq!(g2.node_count(), g.node_count());
+        assert_eq!(g2.render(false), g.render(false));
+    }
+
+    #[test]
+    fn udf_nodes_never_merge() {
+        use crate::expr::Udf;
+        let mk = || Plan::Filter {
+            input: Box::new(src()),
+            predicate: Expr::Udf(Udf::new("f", |v| v[0] * 2.0), vec![col("x")])
+                .lt(lit(1.0)),
+        };
+        let plan = Plan::Concat {
+            inputs: vec![Box::new(mk()), Box::new(mk())],
+        };
+        let g = PlanGraph::from_plan(&plan, true);
+        // the scan merges; the two udf filters must not
+        assert_eq!(g.node_count(), 4);
+    }
+}

@@ -16,6 +16,8 @@ use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+pub mod graph;
+
 /// Where a source data frame's rows come from.
 #[derive(Debug, Clone)]
 pub enum SourceRef {
@@ -167,6 +169,13 @@ pub enum Plan {
         input: Box<Plan>,
         params: MlParams,
     },
+    /// Explicit materialization point (`df.cache()`): relationally the
+    /// identity, but the executor memoizes through it and the plan cache
+    /// keys cached tables by the structural identity of `input` — so users
+    /// can pin a shared subplan that hash-consing cannot see across
+    /// separate `collect()` calls. Opaque to pushdown and pruning (the
+    /// pinned result must not depend on what a particular consumer reads).
+    Cache { input: Box<Plan> },
 }
 
 impl Plan {
@@ -486,6 +495,7 @@ impl Plan {
                 let _ = params;
                 Ok(Schema::new(fields))
             }
+            Plan::Cache { input } => input.schema(),
         }
     }
 
@@ -502,7 +512,8 @@ impl Plan {
             | Plan::Sort { input, .. }
             | Plan::Rebalance { input }
             | Plan::MatrixAssembly { input, .. }
-            | Plan::MlCall { input, .. } => vec![input],
+            | Plan::MlCall { input, .. }
+            | Plan::Cache { input } => vec![input],
             Plan::Join { left, right, .. } => vec![left, right],
             Plan::Concat { inputs } => inputs.iter().map(|b| b.as_ref()).collect(),
         }
@@ -545,6 +556,8 @@ impl Plan {
             Plan::MatrixAssembly { input, .. } => input.dist(),
             // model output is replicated on every rank
             Plan::MlCall { .. } => Dist::Rep,
+            // identity: rows stay where the input left them
+            Plan::Cache { input } => input.dist(),
         }
     }
 
@@ -566,6 +579,85 @@ impl Plan {
     /// Number of nodes (plan-size metric for pass tests).
     pub fn size(&self) -> usize {
         1 + self.children().iter().map(|c| c.size()).sum::<usize>()
+    }
+
+    /// Rebuild this node with each direct child replaced by `f(child)` —
+    /// the one-level counterpart of [`crate::passes::domain::map_plan`],
+    /// for passes that need to control their own recursion order (the
+    /// join-reorder pass walks top-down so it can see whole join chains).
+    pub fn map_children(self, f: &mut dyn FnMut(Plan) -> Plan) -> Plan {
+        let mut one = |b: Box<Plan>| Box::new(f(*b));
+        match self {
+            s @ Plan::Source { .. } => s,
+            Plan::Filter { input, predicate } => Plan::Filter {
+                input: one(input),
+                predicate,
+            },
+            Plan::Project { input, columns } => Plan::Project {
+                input: one(input),
+                columns,
+            },
+            Plan::WithColumn { input, name, expr } => Plan::WithColumn {
+                input: one(input),
+                name,
+                expr,
+            },
+            Plan::Rename { input, from, to } => Plan::Rename {
+                input: one(input),
+                from,
+                to,
+            },
+            Plan::Join {
+                left,
+                right,
+                on,
+                how,
+                strategy,
+            } => {
+                let left = one(left);
+                let right = one(right);
+                Plan::Join {
+                    left,
+                    right,
+                    on,
+                    how,
+                    strategy,
+                }
+            }
+            Plan::Aggregate { input, keys, aggs } => Plan::Aggregate {
+                input: one(input),
+                keys,
+                aggs,
+            },
+            Plan::Concat { inputs } => Plan::Concat {
+                inputs: inputs.into_iter().map(&mut one).collect(),
+            },
+            Plan::Window {
+                input,
+                partition_by,
+                order_by,
+                aggs,
+            } => Plan::Window {
+                input: one(input),
+                partition_by,
+                order_by,
+                aggs,
+            },
+            Plan::Sort { input, keys } => Plan::Sort {
+                input: one(input),
+                keys,
+            },
+            Plan::Rebalance { input } => Plan::Rebalance { input: one(input) },
+            Plan::MatrixAssembly { input, columns } => Plan::MatrixAssembly {
+                input: one(input),
+                columns,
+            },
+            Plan::MlCall { input, params } => Plan::MlCall {
+                input: one(input),
+                params,
+            },
+            Plan::Cache { input } => Plan::Cache { input: one(input) },
+        }
     }
 
     fn fmt_indent(&self, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
@@ -657,6 +749,7 @@ impl Plan {
                 "{pad}MlCall({}, k={}, iters={}, pjrt={}) [{dist}]",
                 params.model, params.k, params.iters, params.use_pjrt
             )?,
+            Plan::Cache { .. } => writeln!(f, "{pad}Cache [{dist}]")?,
         }
         for c in self.children() {
             c.fmt_indent(f, depth + 1)?;

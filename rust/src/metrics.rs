@@ -166,6 +166,65 @@ pub fn spill_stats() -> &'static SpillStats {
     &SPILL
 }
 
+/// Process-global counters for the graph executor: how many plan nodes ran,
+/// how many shared-subplan materializations were reused instead of
+/// re-executed, and how many `cache()` points were served from a
+/// [`crate::exec::PlanCache`]. Same conventions as [`SpillStats`]: all
+/// ranks share one instance, so prefer delta assertions.
+#[derive(Debug, Default)]
+pub struct PlanStats {
+    nodes_executed: AtomicU64,
+    subplans_reused: AtomicU64,
+    plan_cache_hits: AtomicU64,
+}
+
+/// One consistent-enough reading of [`PlanStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanSnapshot {
+    pub nodes_executed: u64,
+    pub subplans_reused: u64,
+    pub plan_cache_hits: u64,
+}
+
+impl PlanStats {
+    const fn new() -> PlanStats {
+        PlanStats {
+            nodes_executed: AtomicU64::new(0),
+            subplans_reused: AtomicU64::new(0),
+            plan_cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one collect run's totals (already summed over ranks) in.
+    pub fn record_run(&self, nodes_executed: u64, subplans_reused: u64, cache_hits: u64) {
+        self.nodes_executed.fetch_add(nodes_executed, Ordering::Relaxed);
+        self.subplans_reused.fetch_add(subplans_reused, Ordering::Relaxed);
+        self.plan_cache_hits.fetch_add(cache_hits, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PlanSnapshot {
+        PlanSnapshot {
+            nodes_executed: self.nodes_executed.load(Ordering::Relaxed),
+            subplans_reused: self.subplans_reused.load(Ordering::Relaxed),
+            plan_cache_hits: self.plan_cache_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (bench runs reset between tables).
+    pub fn reset(&self) {
+        self.nodes_executed.store(0, Ordering::Relaxed);
+        self.subplans_reused.store(0, Ordering::Relaxed);
+        self.plan_cache_hits.store(0, Ordering::Relaxed);
+    }
+}
+
+static PLAN: PlanStats = PlanStats::new();
+
+/// The process-global graph-executor counters.
+pub fn plan_stats() -> &'static PlanStats {
+    &PLAN
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +279,21 @@ mod tests {
         let before = spill_stats().snapshot();
         spill_stats().record_merge_pass();
         assert!(spill_stats().snapshot().merge_passes > before.merge_passes);
+    }
+
+    #[test]
+    fn plan_stats_accumulate() {
+        let s = PlanStats::new();
+        s.record_run(10, 2, 1);
+        s.record_run(4, 0, 0);
+        let snap = s.snapshot();
+        assert_eq!(snap.nodes_executed, 14);
+        assert_eq!(snap.subplans_reused, 2);
+        assert_eq!(snap.plan_cache_hits, 1);
+        s.reset();
+        assert_eq!(s.snapshot().nodes_executed, 0);
+        let before = plan_stats().snapshot();
+        plan_stats().record_run(1, 1, 0);
+        assert!(plan_stats().snapshot().subplans_reused > before.subplans_reused);
     }
 }

@@ -26,25 +26,36 @@
 //!   unused columns … while Spark SQL performs column pruning only within
 //!   the SQL context"), over key *sets* for joins/aggregates/sorts.
 
-use super::domain::map_plan;
-use crate::ir::{JoinType, Plan};
-use crate::expr::Expr;
+use crate::expr::{AggExpr, Expr};
+use crate::fxhash::FxHashMap;
+use crate::ir::graph::{Node, NodeId, PlanGraph, Store};
+use crate::ir::{JoinType, Plan, WindowAgg};
+use crate::table::Schema;
 use anyhow::Result;
 use std::collections::BTreeSet;
 
-/// Apply predicate pushdown rules to fixpoint (bounded by plan size).
+/// Apply predicate pushdown rules to fixpoint (tree entry point — a thin
+/// round trip through [`pushdown_graph`]).
 pub fn pushdown_predicates(plan: Plan) -> Plan {
-    let mut p = plan;
-    // each successful rewrite strictly moves a Filter toward the leaves, so
-    // size() iterations are enough for a fixpoint
-    for _ in 0..p.size() {
-        let before = format!("{p}");
-        p = map_plan(p, &push_one);
-        if format!("{p}") == before {
+    pushdown_graph(&PlanGraph::from_plan(&plan, false)).to_plan()
+}
+
+/// Graph form of predicate pushdown, run to fixpoint. Each successful
+/// rewrite strictly moves a Filter toward the leaves, so `node_count()`
+/// sweeps bound the fixpoint; the canonical positional rendering makes
+/// the no-change check exact even as arena ids shift between sweeps.
+pub fn pushdown_graph(g: &PlanGraph) -> PlanGraph {
+    let mut cur = g.clone();
+    for _ in 0..cur.node_count() {
+        let before = cur.render(false);
+        let next = cur.rewrite(push_one_rule);
+        let stable = next.render(false) == before;
+        cur = next;
+        if stable {
             break;
         }
     }
-    p
+    cur
 }
 
 /// Flatten nested `And`s into a conjunct list.
@@ -64,27 +75,29 @@ fn and_all(mut conjs: Vec<Expr>) -> Expr {
     conjs.into_iter().fold(first, |acc, c| acc.and(c))
 }
 
-/// One local pushdown step on a node (children already rewritten).
-fn push_one(node: Plan) -> Plan {
-    let Plan::Filter { input, predicate } = node else {
+/// One local pushdown step on a node (children already rewritten; new
+/// interior nodes are interned by the rule, the returned node by the
+/// rewrite driver).
+fn push_one_rule(st: &mut Store, node: Node) -> Node {
+    let Node::Filter { input, predicate } = node else {
         return node;
     };
-    match *input {
+    match st.node(input).clone() {
         // ---- the paper's rule: Filter(Join) → Join(Filter, ·),
         // ---- generalized to join types via per-conjunct analysis --------
-        Plan::Join {
+        Node::Join {
             left,
             right,
             on,
             how,
             strategy,
         } => {
-            let lnames: BTreeSet<String> = left
-                .schema()
+            let lnames: BTreeSet<String> = st
+                .schema_of(left)
                 .map(|s| s.names().iter().map(|n| n.to_string()).collect())
                 .unwrap_or_default();
-            let rnames: BTreeSet<String> = right
-                .schema()
+            let rnames: BTreeSet<String> = st
+                .schema_of(right)
                 .map(|s| s.names().iter().map(|n| n.to_string()).collect())
                 .unwrap_or_default();
             // which sides accept pre-join filtering without changing the
@@ -134,21 +147,12 @@ fn push_one(node: Plan) -> Plan {
             if push_left.is_empty() && push_right.is_empty() {
                 // nothing moves: keep the original predicate verbatim so the
                 // fixpoint loop's plan-text comparison stabilizes
-                return Plan::Filter {
-                    input: Box::new(Plan::Join {
-                        left,
-                        right,
-                        on,
-                        how,
-                        strategy,
-                    }),
-                    predicate,
-                };
+                return Node::Filter { input, predicate };
             }
             let left = if push_left.is_empty() {
                 left
             } else {
-                Box::new(Plan::Filter {
+                st.intern(Node::Filter {
                     input: left,
                     predicate: and_all(push_left),
                 })
@@ -156,12 +160,12 @@ fn push_one(node: Plan) -> Plan {
             let right = if push_right.is_empty() {
                 right
             } else {
-                Box::new(Plan::Filter {
+                st.intern(Node::Filter {
                     input: right,
                     predicate: and_all(push_right),
                 })
             };
-            let join = Plan::Join {
+            let join = Node::Join {
                 left,
                 right,
                 on,
@@ -171,14 +175,15 @@ fn push_one(node: Plan) -> Plan {
             if stay.is_empty() {
                 join
             } else {
-                Plan::Filter {
-                    input: Box::new(join),
+                let join = st.intern(join);
+                Node::Filter {
+                    input: join,
                     predicate: and_all(stay),
                 }
             }
         }
         // ---- liveness plumbing: move past array code it doesn't read ----
-        Plan::WithColumn {
+        Node::WithColumn {
             input: wc_input,
             name,
             expr,
@@ -186,26 +191,20 @@ fn push_one(node: Plan) -> Plan {
             if predicate.columns_used().contains(&name) {
                 // predicate reads the computed column: blocked (the paper's
                 // "transformation could change the result" case)
-                Plan::Filter {
-                    input: Box::new(Plan::WithColumn {
-                        input: wc_input,
-                        name,
-                        expr,
-                    }),
-                    predicate,
-                }
+                Node::Filter { input, predicate }
             } else {
-                Plan::WithColumn {
-                    input: Box::new(Plan::Filter {
-                        input: wc_input,
-                        predicate,
-                    }),
+                let filtered = st.intern(Node::Filter {
+                    input: wc_input,
+                    predicate,
+                });
+                Node::WithColumn {
+                    input: filtered,
                     name,
                     expr,
                 }
             }
         }
-        Plan::Rename {
+        Node::Rename {
             input: rn_input,
             from,
             to,
@@ -218,159 +217,245 @@ fn push_one(node: Plan) -> Plan {
                 }
             });
             match renamed {
-                Some(rpred) => Plan::Rename {
-                    input: Box::new(Plan::Filter {
+                Some(rpred) => {
+                    let filtered = st.intern(Node::Filter {
                         input: rn_input,
                         predicate: rpred,
-                    }),
-                    from,
-                    to,
-                },
-                None => Plan::Filter {
-                    input: Box::new(Plan::Rename {
-                        input: rn_input,
+                    });
+                    Node::Rename {
+                        input: filtered,
                         from,
                         to,
-                    }),
-                    predicate,
-                },
+                    }
+                }
+                None => Node::Filter { input, predicate },
             }
         }
-        Plan::Project {
+        Node::Project {
             input: pj_input,
             columns,
-        } => Plan::Project {
-            input: Box::new(Plan::Filter {
+        } => {
+            let filtered = st.intern(Node::Filter {
                 input: pj_input,
                 predicate,
-            }),
-            columns,
-        },
+            });
+            Node::Project {
+                input: filtered,
+                columns,
+            }
+        }
         // concat distributes the filter into every branch
-        Plan::Concat { inputs } => Plan::Concat {
+        Node::Concat { inputs } => Node::Concat {
             inputs: inputs
                 .into_iter()
                 .map(|p| {
-                    Box::new(Plan::Filter {
+                    st.intern(Node::Filter {
                         input: p,
                         predicate: predicate.clone(),
                     })
                 })
                 .collect(),
         },
-        other => Plan::Filter {
-            input: Box::new(other),
-            predicate,
-        },
+        // Cache is a deliberate barrier: the user pinned that exact
+        // subplan, so the filter stays above it (like any opaque node)
+        _ => Node::Filter { input, predicate },
     }
 }
 
-/// Column pruning: walk top-down with the set of columns each consumer
-/// needs; drop dead [`Plan::WithColumn`]s and insert projections over
-/// sources so ranks never materialize unused columns.
+/// Column pruning (tree entry point — a thin round trip through
+/// [`prune_graph`]).
 pub fn prune_columns(plan: Plan) -> Result<Plan> {
-    let all: BTreeSet<String> = plan
-        .schema()?
-        .names()
-        .iter()
-        .map(|n| n.to_string())
-        .collect();
-    prune(plan, &all)
+    Ok(prune_graph(&PlanGraph::from_plan(&plan, false))?.to_plan())
 }
 
-fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
-    Ok(match plan {
-        Plan::Source { name, src, schema } => {
-            let keep: Vec<String> = schema
-                .names()
-                .iter()
-                .filter(|n| needed.contains(**n))
-                .map(|n| n.to_string())
-                .collect();
-            let src_node = Plan::Source {
-                name,
-                src,
-                schema: schema.clone(),
-            };
-            if keep.len() < schema.len() && !keep.is_empty() {
-                Plan::Project {
-                    input: Box::new(src_node),
-                    columns: keep,
-                }
-            } else {
-                src_node
-            }
+/// Graph column pruning: compute the set of columns each node's consumers
+/// need (union over all consumers — a shared node keeps any column *some*
+/// consumer reads), then rebuild bottom-up, dropping dead
+/// [`Node::WithColumn`]s / dead global windows and inserting projections
+/// over sources so ranks never materialize unused columns.
+pub fn prune_graph(g: &PlanGraph) -> Result<PlanGraph> {
+    let schemas = g.schemas()?;
+    // ---- phase 1: needed sets, consumers before producers ----------------
+    let mut needed: FxHashMap<NodeId, BTreeSet<String>> = FxHashMap::default();
+    needed.insert(
+        g.completion,
+        schemas[&g.completion]
+            .names()
+            .iter()
+            .map(|n| n.to_string())
+            .collect(),
+    );
+    for &id in g.execution_order.iter().rev() {
+        let need = needed.entry(id).or_default().clone();
+        for (child, n) in child_needs(&g.store[id], &need, &schemas) {
+            needed.entry(child).or_default().extend(n);
         }
-        Plan::Filter { input, predicate } => {
+    }
+    // ---- phase 2: bottom-up rebuild with the final needed sets -----------
+    let mut out = Store::like(&g.store);
+    let mut map: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+    for &id in &g.execution_order {
+        let need = &needed[&id];
+        let new_id = match g.store[id].clone().remap(&map) {
+            Node::Source { name, src, schema } => {
+                let keep: Vec<String> = schema
+                    .names()
+                    .iter()
+                    .filter(|n| need.contains(**n))
+                    .map(|n| n.to_string())
+                    .collect();
+                let wrap = keep.len() < schema.len() && !keep.is_empty();
+                let src_id = out.intern(Node::Source { name, src, schema });
+                if wrap {
+                    out.intern(Node::Project {
+                        input: src_id,
+                        columns: keep,
+                    })
+                } else {
+                    src_id
+                }
+            }
+            Node::Project { input, columns } => {
+                let keep: Vec<String> = columns
+                    .iter()
+                    .filter(|c| need.contains(*c))
+                    .cloned()
+                    .collect();
+                let keep = if keep.is_empty() { columns } else { keep };
+                out.intern(Node::Project {
+                    input,
+                    columns: keep,
+                })
+            }
+            Node::WithColumn { input, name, expr } => {
+                if !need.contains(&name) {
+                    // dead column computation — alias to the pruned child
+                    input
+                } else {
+                    out.intern(Node::WithColumn { input, name, expr })
+                }
+            }
+            Node::Aggregate { input, keys, aggs } => {
+                let aggs = kept_agg_exprs(&aggs, need);
+                out.intern(Node::Aggregate { input, keys, aggs })
+            }
+            Node::Window {
+                input,
+                partition_by,
+                order_by,
+                aggs,
+            } => {
+                // a *global* window whose outputs are all dead is the
+                // identity on the surviving columns; a partitioned window
+                // also reorders rows, so it must stay even when its outputs
+                // are unused
+                if partition_by.is_empty() && aggs.iter().all(|a| !need.contains(&a.out)) {
+                    input
+                } else {
+                    let aggs = kept_window_aggs(&aggs, need);
+                    out.intern(Node::Window {
+                        input,
+                        partition_by,
+                        order_by,
+                        aggs,
+                    })
+                }
+            }
+            other => out.intern(other),
+        };
+        map.insert(id, new_id);
+    }
+    Ok(PlanGraph::new(out, map[&g.completion]))
+}
+
+/// Aggregates whose output some consumer needs (all kept when none are —
+/// an aggregate must produce at least one column).
+fn kept_agg_exprs(aggs: &[AggExpr], needed: &BTreeSet<String>) -> Vec<AggExpr> {
+    let kept: Vec<AggExpr> = aggs
+        .iter()
+        .filter(|a| needed.contains(&a.out))
+        .cloned()
+        .collect();
+    if kept.is_empty() {
+        aggs.to_vec()
+    } else {
+        kept
+    }
+}
+
+fn kept_window_aggs(aggs: &[WindowAgg], needed: &BTreeSet<String>) -> Vec<WindowAgg> {
+    let kept: Vec<WindowAgg> = aggs
+        .iter()
+        .filter(|a| needed.contains(&a.out))
+        .cloned()
+        .collect();
+    if kept.is_empty() {
+        aggs.to_vec()
+    } else {
+        kept
+    }
+}
+
+/// What `node` demands of each child, given what its own consumers need.
+/// Mirrors the per-operator rules of the original top-down tree prune.
+fn child_needs(
+    node: &Node,
+    needed: &BTreeSet<String>,
+    schemas: &FxHashMap<NodeId, Schema>,
+) -> Vec<(NodeId, BTreeSet<String>)> {
+    match node {
+        Node::Source { .. } => vec![],
+        Node::Filter { input, predicate } => {
             let mut n = needed.clone();
             n.extend(predicate.columns_used());
-            Plan::Filter {
-                input: Box::new(prune(*input, &n)?),
-                predicate,
-            }
+            vec![(*input, n)]
         }
-        Plan::Project { input, columns } => {
+        Node::Project { input, columns } => {
             let keep: Vec<String> = columns
                 .iter()
                 .filter(|c| needed.contains(*c))
                 .cloned()
                 .collect();
-            let keep = if keep.is_empty() { columns } else { keep };
-            let n: BTreeSet<String> = keep.iter().cloned().collect();
-            Plan::Project {
-                input: Box::new(prune(*input, &n)?),
-                columns: keep,
-            }
+            let keep = if keep.is_empty() { columns.clone() } else { keep };
+            vec![(*input, keep.into_iter().collect())]
         }
-        Plan::WithColumn { input, name, expr } => {
-            if !needed.contains(&name) {
-                // dead column computation — eliminate entirely
-                prune(*input, needed)?
+        Node::WithColumn { input, name, expr } => {
+            if !needed.contains(name) {
+                vec![(*input, needed.clone())]
             } else {
                 let mut n: BTreeSet<String> =
-                    needed.iter().filter(|c| **c != name).cloned().collect();
+                    needed.iter().filter(|c| **c != *name).cloned().collect();
                 n.extend(expr.columns_used());
-                Plan::WithColumn {
-                    input: Box::new(prune(*input, &n)?),
-                    name,
-                    expr,
-                }
+                vec![(*input, n)]
             }
         }
-        Plan::Rename { input, from, to } => {
+        Node::Rename { input, from, to } => {
             let mut n: BTreeSet<String> = needed
                 .iter()
-                .map(|c| if c == &to { from.clone() } else { c.clone() })
+                .map(|c| if c == to { from.clone() } else { c.clone() })
                 .collect();
             // keep `from` alive even if output name unused downstream
             n.insert(from.clone());
-            Plan::Rename {
-                input: Box::new(prune(*input, &n)?),
-                from,
-                to,
-            }
+            vec![(*input, n)]
         }
-        Plan::Join {
+        Node::Join {
             left,
             right,
             on,
             how,
-            strategy,
+            ..
         } => {
-            let lnames: BTreeSet<String> = left
-                .schema()?
+            let lnames: BTreeSet<String> = schemas[left]
                 .names()
                 .iter()
                 .map(|n| n.to_string())
                 .collect();
-            let rnames: BTreeSet<String> = right
-                .schema()?
+            let rnames: BTreeSet<String> = schemas[right]
                 .names()
                 .iter()
                 .map(|n| n.to_string())
                 .collect();
-            let mut ln: BTreeSet<String> =
-                needed.intersection(&lnames).cloned().collect();
+            let mut ln: BTreeSet<String> = needed.intersection(&lnames).cloned().collect();
             // a Semi/Anti join only reads the right side's key columns, so
             // everything else on the right is prunable regardless of `needed`
             let mut rn: BTreeSet<String> = if how.keeps_right_columns() {
@@ -378,120 +463,74 @@ fn prune(plan: Plan, needed: &BTreeSet<String>) -> Result<Plan> {
             } else {
                 BTreeSet::new()
             };
-            for (lk, rk) in &on {
+            for (lk, rk) in on {
                 ln.insert(lk.clone());
                 rn.insert(rk.clone());
             }
-            Plan::Join {
-                left: Box::new(prune(*left, &ln)?),
-                right: Box::new(prune(*right, &rn)?),
-                on,
-                how,
-                strategy,
-            }
+            vec![(*left, ln), (*right, rn)]
         }
-        Plan::Aggregate { input, keys, aggs } => {
-            let kept: Vec<_> = aggs
-                .iter()
-                .filter(|a| needed.contains(&a.out))
-                .cloned()
-                .collect();
-            let aggs = if kept.is_empty() { aggs } else { kept };
+        Node::Aggregate { input, keys, aggs } => {
+            let aggs = kept_agg_exprs(aggs, needed);
             let mut n = BTreeSet::new();
-            for key in &keys {
+            for key in keys {
                 n.insert(key.clone());
             }
             for a in &aggs {
                 n.extend(a.input.columns_used());
             }
-            Plan::Aggregate {
-                input: Box::new(prune(*input, &n)?),
-                keys,
-                aggs,
-            }
+            vec![(*input, n)]
         }
-        Plan::Concat { inputs } => {
-            // all branches must keep identical schemas: prune each with the
-            // same needed set, but only if every column can be dropped from
-            // every branch (sources guarantee that here)
-            let mut out = Vec::new();
-            for p in inputs {
-                out.push(Box::new(prune(*p, needed)?));
-            }
-            Plan::Concat { inputs: out }
-        }
-        Plan::Window {
+        // all branches must keep identical schemas: each gets the same set
+        Node::Concat { inputs } => inputs.iter().map(|i| (*i, needed.clone())).collect(),
+        Node::Window {
             input,
             partition_by,
             order_by,
             aggs,
         } => {
-            // a *global* window whose outputs are all dead is the identity on
-            // the surviving columns; a partitioned window also reorders rows,
-            // so it must stay even when its outputs are unused
             if partition_by.is_empty() && aggs.iter().all(|a| !needed.contains(&a.out)) {
-                return prune(*input, needed);
+                return vec![(*input, needed.clone())];
             }
-            let kept: Vec<_> = aggs
-                .iter()
-                .filter(|a| needed.contains(&a.out))
-                .cloned()
-                .collect();
-            let aggs = if kept.is_empty() { aggs } else { kept };
+            let aggs = kept_window_aggs(aggs, needed);
             let mut n: BTreeSet<String> = needed
                 .iter()
                 .filter(|c| !aggs.iter().any(|a| &a.out == *c))
                 .cloned()
                 .collect();
-            for key in &partition_by {
+            for key in partition_by {
                 n.insert(key.clone());
             }
-            for (key, _) in &order_by {
+            for (key, _) in order_by {
                 n.insert(key.clone());
             }
             for a in &aggs {
                 n.extend(a.input.columns_used());
             }
-            Plan::Window {
-                input: Box::new(prune(*input, &n)?),
-                partition_by,
-                order_by,
-                aggs,
-            }
+            vec![(*input, n)]
         }
-        Plan::Sort { input, keys } => {
+        Node::Sort { input, keys } => {
             let mut n = needed.clone();
-            for (key, _) in &keys {
+            for (key, _) in keys {
                 n.insert(key.clone());
             }
-            Plan::Sort {
-                input: Box::new(prune(*input, &n)?),
-                keys,
-            }
+            vec![(*input, n)]
         }
-        Plan::Rebalance { input } => Plan::Rebalance {
-            input: Box::new(prune(*input, needed)?),
-        },
-        Plan::MatrixAssembly { input, columns } => {
-            let n: BTreeSet<String> = columns.iter().cloned().collect();
-            Plan::MatrixAssembly {
-                input: Box::new(prune(*input, &n)?),
-                columns,
-            }
+        Node::Rebalance { input } => vec![(*input, needed.clone())],
+        Node::MatrixAssembly { input, columns } => {
+            vec![(*input, columns.iter().cloned().collect())]
         }
-        Plan::MlCall { input, params } => {
-            let n: BTreeSet<String> = input
-                .schema()?
+        // Cache pins the *whole* subplan result (the cached table is shared
+        // across queries with different needs), MlCall reads every column —
+        // both demand the full child schema
+        Node::MlCall { input, .. } | Node::Cache { input } => {
+            let n: BTreeSet<String> = schemas[input]
                 .names()
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
-            Plan::MlCall {
-                input: Box::new(prune(*input, &n)?),
-                params,
-            }
+            vec![(*input, n)]
         }
-    })
+    }
 }
 
 #[cfg(test)]

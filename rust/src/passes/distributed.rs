@@ -10,34 +10,43 @@
 //! [`RebalanceMode::Always`] reproduces the costly alternative the paper
 //! rejects, for the ablation bench.
 
-use super::domain::map_plan;
 use super::RebalanceMode;
 use crate::distribution::Dist;
+use crate::ir::graph::{Node, NodeId, PlanGraph, Store};
 use crate::ir::Plan;
 
-/// Insert [`Plan::Rebalance`] nodes per `mode`.
+/// Insert [`Plan::Rebalance`] nodes per `mode` (tree entry point — a thin
+/// round trip through [`insert_rebalances_graph`]).
 pub fn insert_rebalances(plan: Plan, mode: RebalanceMode) -> Plan {
+    insert_rebalances_graph(&PlanGraph::from_plan(&plan, false), mode).to_plan()
+}
+
+/// Graph rewrite: insert [`Node::Rebalance`] per `mode`. A rebalance
+/// feeding a shared consumer stays shared — the balanced result is
+/// materialized once per rank like any other node.
+pub fn insert_rebalances_graph(g: &PlanGraph, mode: RebalanceMode) -> PlanGraph {
     match mode {
-        RebalanceMode::Lazy => map_plan(plan, &lazy_rule),
-        RebalanceMode::Always => map_plan(plan, &always_rule),
+        RebalanceMode::Lazy => g.rewrite(lazy_rule),
+        RebalanceMode::Always => g.rewrite(always_rule),
     }
 }
 
-fn needs_rebalance(child: &Plan) -> bool {
-    child.dist() == Dist::OneDVar
-}
-
-fn wrap(child: Box<Plan>) -> Box<Plan> {
-    Box::new(Plan::Rebalance { input: child })
+/// Rebalance `input` when its distribution is `1D_VAR`.
+fn wrap_if_var(st: &mut Store, input: NodeId) -> NodeId {
+    if st.dist_of(input) == Dist::OneDVar {
+        st.intern(Node::Rebalance { input })
+    } else {
+        input
+    }
 }
 
 /// Lazy: only consumers that require `1D_BLOCK` inputs get a rebalance.
-fn lazy_rule(node: Plan) -> Plan {
+fn lazy_rule(st: &mut Store, node: Node) -> Node {
     if !node.requires_block_input() {
         return node;
     }
     match node {
-        Plan::Window {
+        Node::Window {
             input,
             partition_by,
             order_by,
@@ -45,25 +54,17 @@ fn lazy_rule(node: Plan) -> Plan {
         } => {
             // only reached for halo-carrying global windows
             // (requires_block_input gates above)
-            let input = if needs_rebalance(&input) {
-                wrap(input)
-            } else {
-                input
-            };
-            Plan::Window {
+            let input = wrap_if_var(st, input);
+            Node::Window {
                 input,
                 partition_by,
                 order_by,
                 aggs,
             }
         }
-        Plan::MatrixAssembly { input, columns } => {
-            let input = if needs_rebalance(&input) {
-                wrap(input)
-            } else {
-                input
-            };
-            Plan::MatrixAssembly { input, columns }
+        Node::MatrixAssembly { input, columns } => {
+            let input = wrap_if_var(st, input);
+            Node::MatrixAssembly { input, columns }
         }
         other => other,
     }
@@ -71,17 +72,19 @@ fn lazy_rule(node: Plan) -> Plan {
 
 /// Always: every relational (1D_VAR-producing) node gets rebalanced right
 /// away — the strawman the paper argues against.
-fn always_rule(node: Plan) -> Plan {
+fn always_rule(st: &mut Store, node: Node) -> Node {
     let is_relational = matches!(
         node,
-        Plan::Filter { .. } | Plan::Join { .. } | Plan::Aggregate { .. } | Plan::Concat { .. }
+        Node::Filter { .. } | Node::Join { .. } | Node::Aggregate { .. } | Node::Concat { .. }
     );
-    if is_relational && node.dist() == Dist::OneDVar {
-        Plan::Rebalance {
-            input: Box::new(node),
-        }
+    if !is_relational {
+        return node;
+    }
+    let id = st.intern(node);
+    if st.dist_of(id) == Dist::OneDVar {
+        Node::Rebalance { input: id }
     } else {
-        node
+        st.node(id).clone()
     }
 }
 

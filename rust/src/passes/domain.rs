@@ -5,21 +5,28 @@
 //! data, one output allocation).
 
 use crate::expr::AggExpr;
+use crate::ir::graph::{Node, PlanGraph};
 use crate::ir::{Plan, WindowAgg};
 
-/// Fold constants in every expression of the plan.
+/// Fold constants in every expression of the plan (tree entry point — a
+/// thin round trip through [`fold_expressions_graph`]).
 pub fn fold_expressions(plan: Plan) -> Plan {
-    map_plan(plan, &|node| match node {
-        Plan::Filter { input, predicate } => Plan::Filter {
+    fold_expressions_graph(&PlanGraph::from_plan(&plan, false)).to_plan()
+}
+
+/// Graph rewrite: fold constants in every node's expressions.
+pub fn fold_expressions_graph(g: &PlanGraph) -> PlanGraph {
+    g.rewrite(|_, node| match node {
+        Node::Filter { input, predicate } => Node::Filter {
             input,
             predicate: predicate.fold_constants(),
         },
-        Plan::WithColumn { input, name, expr } => Plan::WithColumn {
+        Node::WithColumn { input, name, expr } => Node::WithColumn {
             input,
             name,
             expr: expr.fold_constants(),
         },
-        Plan::Aggregate { input, keys, aggs } => Plan::Aggregate {
+        Node::Aggregate { input, keys, aggs } => Node::Aggregate {
             input,
             keys,
             aggs: aggs
@@ -30,12 +37,12 @@ pub fn fold_expressions(plan: Plan) -> Plan {
                 })
                 .collect(),
         },
-        Plan::Window {
+        Node::Window {
             input,
             partition_by,
             order_by,
             aggs,
-        } => Plan::Window {
+        } => Node::Window {
             input,
             partition_by,
             order_by,
@@ -51,21 +58,28 @@ pub fn fold_expressions(plan: Plan) -> Plan {
     })
 }
 
-/// `Filter(Filter(x, p1), p2)` → `Filter(x, p1 && p2)`.
+/// `Filter(Filter(x, p1), p2)` → `Filter(x, p1 && p2)` (tree entry point).
 pub fn fuse_filters(plan: Plan) -> Plan {
-    map_plan(plan, &|node| match node {
-        Plan::Filter { input, predicate } => match *input {
-            Plan::Filter {
+    fuse_filters_graph(&PlanGraph::from_plan(&plan, false)).to_plan()
+}
+
+/// Graph rewrite: fuse stacked filters. Bottom-up interning means the
+/// inner filter was already processed, so chains of any length collapse in
+/// one sweep (the orphaned inner node becomes unreachable arena garbage).
+pub fn fuse_filters_graph(g: &PlanGraph) -> PlanGraph {
+    g.rewrite(|st, node| match node {
+        Node::Filter { input, predicate } => match st.node(input) {
+            Node::Filter {
                 input: inner,
                 predicate: inner_pred,
-            } => Plan::Filter {
-                input: inner,
-                predicate: inner_pred.and(predicate),
-            },
-            other => Plan::Filter {
-                input: Box::new(other),
-                predicate,
-            },
+            } => {
+                let (inner, inner_pred) = (*inner, inner_pred.clone());
+                Node::Filter {
+                    input: inner,
+                    predicate: inner_pred.and(predicate),
+                }
+            }
+            _ => Node::Filter { input, predicate },
         },
         other => other,
     })
@@ -145,6 +159,9 @@ pub fn map_plan(plan: Plan, f: &dyn Fn(Plan) -> Plan) -> Plan {
         Plan::MlCall { input, params } => Plan::MlCall {
             input: Box::new(map_plan(*input, f)),
             params,
+        },
+        Plan::Cache { input } => Plan::Cache {
+            input: Box::new(map_plan(*input, f)),
         },
     };
     f(rebuilt)

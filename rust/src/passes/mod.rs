@@ -15,8 +15,10 @@
 pub mod dataframe;
 pub mod distributed;
 pub mod domain;
+pub mod reorder;
 pub mod skew;
 
+use crate::ir::graph::PlanGraph;
 use crate::ir::Plan;
 use anyhow::Result;
 
@@ -42,6 +44,15 @@ pub struct PassOptions {
     /// Auto-select the skew-aware broadcast join where source statistics
     /// show heavy-hitter probe keys ([`skew::select_skew_joins`]).
     pub skew_join: bool,
+    /// Reorder inner-join chains by estimated build-side cost
+    /// ([`reorder::reorder_joins_graph`]). Off by default: the rewrite
+    /// preserves the result as a multiset but not its engine-defined row
+    /// order, so it is opt-in like in most engines' early releases.
+    pub join_reorder: bool,
+    /// Hash-cons identical subplans into one graph node, materialized once
+    /// per rank ([`PlanGraph::from_plan`]). On by default; `none()` turns
+    /// it off so the unoptimized configuration executes the exact tree.
+    pub dedup_subplans: bool,
     pub rebalance: RebalanceMode,
 }
 
@@ -53,6 +64,8 @@ impl Default for PassOptions {
             pushdown: true,
             prune_columns: true,
             skew_join: true,
+            join_reorder: false,
+            dedup_subplans: true,
             rebalance: RebalanceMode::Lazy,
         }
     }
@@ -67,41 +80,55 @@ impl PassOptions {
             pushdown: false,
             prune_columns: false,
             skew_join: false,
+            join_reorder: false,
+            dedup_subplans: false,
             rebalance: RebalanceMode::Lazy,
         }
     }
 }
 
-/// Run the full pipeline over a logical plan.
-pub fn optimize(plan: Plan, opts: &PassOptions) -> Result<Plan> {
-    // type-check the incoming plan first: passes assume a well-typed tree
+/// Run the full pipeline over a logical plan, returning the optimized
+/// graph (the form the executor walks and `explain` renders).
+pub fn optimize_graph(plan: Plan, opts: &PassOptions) -> Result<PlanGraph> {
+    // type-check the incoming plan first: passes assume a well-typed plan
     plan.schema()?;
-    let mut p = plan;
+    let mut g = PlanGraph::from_plan(&plan, opts.dedup_subplans);
     if opts.fold_constants {
-        p = domain::fold_expressions(p);
+        g = domain::fold_expressions_graph(&g);
     }
     if opts.fuse_filters {
-        p = domain::fuse_filters(p);
+        g = domain::fuse_filters_graph(&g);
     }
     if opts.pushdown {
-        p = dataframe::pushdown_predicates(p);
+        g = dataframe::pushdown_graph(&g);
         if opts.fuse_filters {
             // pushdown can stack filters on one input; re-fuse
-            p = domain::fuse_filters(p);
+            g = domain::fuse_filters_graph(&g);
         }
     }
     if opts.prune_columns {
-        p = dataframe::prune_columns(p)?;
+        g = dataframe::prune_graph(&g)?;
+    }
+    if opts.join_reorder {
+        // before strategy selection: the skew flip depends on which side
+        // ends up as the probe
+        g = reorder::reorder_joins_graph(&g);
     }
     if opts.skew_join {
         // after pushdown/pruning so the walk to the source sees the final
         // chain; the runtime sampling pass re-detects the heavy set anyway
-        p = skew::select_skew_joins(p);
+        g = skew::select_skew_joins_graph(&g);
     }
-    p = distributed::insert_rebalances(p, opts.rebalance);
+    g = distributed::insert_rebalances_graph(&g, opts.rebalance);
     // the optimized plan must still type-check — cheap invariant guard
-    p.schema()?;
-    Ok(p)
+    g.schema()?;
+    Ok(g)
+}
+
+/// Run the full pipeline over a logical plan (tree entry point — shared
+/// subplans are re-expanded on the way out).
+pub fn optimize(plan: Plan, opts: &PassOptions) -> Result<Plan> {
+    Ok(optimize_graph(plan, opts)?.to_plan())
 }
 
 #[cfg(test)]

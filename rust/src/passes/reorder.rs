@@ -1,0 +1,327 @@
+//! Cost-based join ordering over the plan graph.
+//!
+//! HiFrames' pipeline (paper §4) assumes the *compiler* picks the physical
+//! join order; user programs write multi-way joins in whatever order reads
+//! best. This pass reorders **left-deep chains of inner hash joins** so the
+//! smallest estimated build side joins first, shrinking every intermediate
+//! result. The estimates are free: the same strided source samples the skew
+//! planner takes ([`super::skew::plan_key_stats`]) give row counts and a
+//! sampled NDV per build side.
+//!
+//! Safety argument (why the rewrite is byte-identical up to row order):
+//! a chain `((base ⋈ r1) ⋈ r2) ⋈ r3` is only reordered when every link's
+//! *left* key columns come from `base` itself — then no link's key depends
+//! on a column another link contributes, the inner joins commute as
+//! multiset operations, and any permutation yields the same rows. The
+//! output *column order* does change (each join appends its right side's
+//! payload), so the rewritten chain is wrapped in a `Project` restoring the
+//! original column order; row order is engine-defined for hash joins either
+//! way, exactly as for the unreordered plan. Chains with unknown costs (no
+//! reachable statistics on some build side) are left untouched.
+
+use super::skew::plan_key_stats;
+use crate::ir::graph::PlanGraph;
+use crate::ir::{JoinStrategy, JoinType, Plan};
+use std::collections::BTreeSet;
+
+/// One `⋈ right ON on` link of a left-deep inner-join chain.
+struct Link {
+    right: Plan,
+    on: Vec<(String, String)>,
+    strategy: JoinStrategy,
+}
+
+/// Reorder inner-join chains in `g` by estimated build-side cost. The
+/// rewrite is chain-local, so it round-trips through the tree form and
+/// re-interns with the graph's own dedup policy.
+pub fn reorder_joins_graph(g: &PlanGraph) -> PlanGraph {
+    let dedup = g.store.dedup_enabled();
+    PlanGraph::from_plan(&reorder_joins_plan(g.to_plan()), dedup)
+}
+
+/// Tree form of the reorder pass: top-down, so a chain is seen whole at
+/// its root before recursion dismantles it.
+pub fn reorder_joins_plan(plan: Plan) -> Plan {
+    match try_reorder_chain(plan) {
+        Ok(done) => done,
+        Err(p) => p.map_children(&mut |c| reorder_joins_plan(c)),
+    }
+}
+
+/// Split a left-deep chain of inner hash joins into `(base, links)`,
+/// innermost link first. `Err` returns the plan untouched when it is not
+/// such a join at all.
+fn flatten(plan: Plan) -> Result<(Plan, Vec<Link>), Plan> {
+    match plan {
+        Plan::Join {
+            left,
+            right,
+            on,
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        } => {
+            let link = Link {
+                right: *right,
+                on,
+                strategy: JoinStrategy::Hash,
+            };
+            match flatten(*left) {
+                Ok((base, mut links)) => {
+                    links.push(link);
+                    Ok((base, links))
+                }
+                Err(base) => Ok((base, vec![link])),
+            }
+        }
+        other => Err(other),
+    }
+}
+
+/// Reassemble a flattened chain in the given link order.
+fn rebuild(base: Plan, links: Vec<Link>) -> Plan {
+    let mut p = base;
+    for l in links {
+        p = Plan::Join {
+            left: Box::new(p),
+            right: Box::new(l.right),
+            on: l.on,
+            how: JoinType::Inner,
+            strategy: l.strategy,
+        };
+    }
+    p
+}
+
+/// `Ok(reordered)` when `plan` roots an eligible chain that benefits from
+/// reordering (children already recursed); `Err(plan)` — unchanged — when
+/// it does not, so the caller recurses normally.
+fn try_reorder_chain(plan: Plan) -> Result<Plan, Plan> {
+    // snapshot the user-visible column order before dismantling
+    let out_cols: Vec<String> = match plan.schema() {
+        Ok(s) => s.names().iter().map(|n| n.to_string()).collect(),
+        Err(_) => return Err(plan),
+    };
+    let (base, links) = flatten(plan)?;
+    if links.len() < 2 {
+        return Err(rebuild(base, links));
+    }
+    // eligibility: every link keys on base columns only, so no link depends
+    // on a column another link contributes and the joins commute
+    let base_names: BTreeSet<String> = match base.schema() {
+        Ok(s) => s.names().iter().map(|n| n.to_string()).collect(),
+        Err(_) => return Err(rebuild(base, links)),
+    };
+    let all_keys_from_base = links
+        .iter()
+        .all(|l| l.on.iter().all(|(lk, _)| base_names.contains(lk)));
+    if !all_keys_from_base {
+        return Err(rebuild(base, links));
+    }
+    // cost per build side: sampled row count, then key multiplicity
+    // (rows / sampled NDV — a near-unique dimension key beats a repeated
+    // fact key at equal size). No stats on any side ⇒ keep the user order.
+    let mut est: Vec<(usize, f64)> = Vec::new();
+    for l in &links {
+        let keys: Vec<String> = l.on.iter().map(|(_, rk)| rk.clone()).collect();
+        match plan_key_stats(&l.right, &keys) {
+            Some(s) => est.push((s.rows, s.rows as f64 / s.ndv.max(1) as f64)),
+            None => return Err(rebuild(base, links)),
+        }
+    }
+    let mut order: Vec<usize> = (0..links.len()).collect();
+    order.sort_by(|&a, &b| {
+        est[a]
+            .0
+            .cmp(&est[b].0)
+            .then(
+                est[a]
+                    .1
+                    .partial_cmp(&est[b].1)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.cmp(&b))
+    });
+    if order.iter().enumerate().all(|(i, &j)| i == j) {
+        return Err(rebuild(base, links)); // user order is already optimal
+    }
+    // recurse into the subplans, then rebuild smallest-build-side-first
+    let base = reorder_joins_plan(base);
+    let links: Vec<Link> = links
+        .into_iter()
+        .map(|mut l| {
+            l.right = reorder_joins_plan(l.right);
+            l
+        })
+        .collect();
+    let mut p = base.clone();
+    for &i in &order {
+        let l = &links[i];
+        p = Plan::Join {
+            left: Box::new(p),
+            right: Box::new(l.right.clone()),
+            on: l.on.clone(),
+            how: JoinType::Inner,
+            strategy: l.strategy,
+        };
+    }
+    match p.schema() {
+        Ok(s) => {
+            let cols: Vec<String> = s.names().iter().map(|n| n.to_string()).collect();
+            if cols == out_cols {
+                Ok(p)
+            } else {
+                // same column set, different order — restore the original
+                Ok(Plan::Project {
+                    input: Box::new(p),
+                    columns: out_cols,
+                })
+            }
+        }
+        // paranoia: a permutation that fails to type-check (should be
+        // unreachable given the eligibility test) keeps the user order
+        Err(_) => Ok(rebuild(base, links)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ir::source_mem;
+    use crate::table::Table;
+
+    fn base() -> Plan {
+        source_mem(
+            "base",
+            Table::from_pairs(vec![
+                ("id", Column::I64((0..40).collect())),
+                ("x", Column::F64((0..40).map(|i| i as f64).collect())),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn dim(name: &str, key: &str, payload: &str, n: i64) -> Plan {
+        source_mem(
+            name,
+            Table::from_pairs(vec![
+                (key, Column::I64((0..n).map(|i| i % 40).collect())),
+                (payload, Column::I64((0..n).collect())),
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn chain(big_first: bool) -> Plan {
+        let big = dim("big", "a", "av", 300);
+        let small = dim("small", "b", "bv", 20);
+        let (first, fon, second, son) = if big_first {
+            (big, ("id", "a"), small, ("id", "b"))
+        } else {
+            (small, ("id", "b"), big, ("id", "a"))
+        };
+        Plan::Join {
+            left: Box::new(Plan::Join {
+                left: Box::new(base()),
+                right: Box::new(first),
+                on: vec![(fon.0.into(), fon.1.into())],
+                how: JoinType::Inner,
+                strategy: JoinStrategy::Hash,
+            }),
+            right: Box::new(second),
+            on: vec![(son.0.into(), son.1.into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        }
+    }
+
+    #[test]
+    fn smallest_build_side_moves_first() {
+        let orig = chain(true);
+        let orig_cols = orig.schema().unwrap().names().join(",");
+        let opt = reorder_joins_plan(orig);
+        // reordered chain is wrapped in a Project restoring column order
+        let Plan::Project { input, columns } = opt else {
+            panic!("expected project wrapper");
+        };
+        assert_eq!(columns.join(","), orig_cols);
+        let Plan::Join { left, right, .. } = *input else {
+            panic!("expected outer join");
+        };
+        assert!(
+            matches!(&*right, Plan::Source { name, .. } if name == "big"),
+            "big should join last"
+        );
+        let Plan::Join { right: inner_r, .. } = *left else {
+            panic!("expected inner join");
+        };
+        assert!(
+            matches!(&*inner_r, Plan::Source { name, .. } if name == "small"),
+            "small should join first"
+        );
+    }
+
+    #[test]
+    fn optimal_user_order_untouched() {
+        let orig = chain(false); // small already first
+        let before = format!("{orig}");
+        let opt = reorder_joins_plan(orig);
+        assert_eq!(format!("{opt}"), before);
+    }
+
+    #[test]
+    fn dependent_keys_block_reordering() {
+        // second link keys on the *first dimension's* payload — the links
+        // no longer commute, the chain must stay in user order
+        let p = Plan::Join {
+            left: Box::new(Plan::Join {
+                left: Box::new(base()),
+                right: Box::new(dim("big", "a", "av", 300)),
+                on: vec![("id".into(), "a".into())],
+                how: JoinType::Inner,
+                strategy: JoinStrategy::Hash,
+            }),
+            right: Box::new(dim("small", "b", "bv", 20)),
+            on: vec![("av".into(), "b".into())],
+            how: JoinType::Inner,
+            strategy: JoinStrategy::Hash,
+        };
+        let before = format!("{p}");
+        let opt = reorder_joins_plan(p);
+        assert_eq!(format!("{opt}"), before);
+    }
+
+    #[test]
+    fn non_inner_links_terminate_the_chain() {
+        // outer root join is Left: not a chain link — and its left child
+        // chain is only one link long, so nothing moves
+        let p = Plan::Join {
+            left: Box::new(Plan::Join {
+                left: Box::new(base()),
+                right: Box::new(dim("big", "a", "av", 300)),
+                on: vec![("id".into(), "a".into())],
+                how: JoinType::Inner,
+                strategy: JoinStrategy::Hash,
+            }),
+            right: Box::new(dim("small", "b", "bv", 20)),
+            on: vec![("id".into(), "b".into())],
+            how: JoinType::Left,
+            strategy: JoinStrategy::Hash,
+        };
+        let before = format!("{p}");
+        let opt = reorder_joins_plan(p);
+        assert_eq!(format!("{opt}"), before);
+    }
+
+    #[test]
+    fn graph_round_trip_preserves_dedup_policy() {
+        let g = PlanGraph::from_plan(&chain(true), true);
+        let out = reorder_joins_graph(&g);
+        assert!(out.store.dedup_enabled());
+        // the reordered graph still evaluates to the same schema
+        assert_eq!(
+            out.schema().unwrap().names(),
+            g.schema().unwrap().names()
+        );
+    }
+}

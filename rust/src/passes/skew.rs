@@ -22,11 +22,12 @@
 //! (aggregates, other joins, HFS files) and explicitly hinted joins
 //! (`df.join_with(..).skew_hint(..)`) are left untouched.
 
-use super::domain::map_plan;
 use crate::column::{Column, ValidityMask};
 use crate::fxhash::FxHashMap;
+use crate::ir::graph::{Node, NodeId, PlanGraph, Store};
 use crate::ir::{JoinStrategy, Plan, SourceRef};
 use crate::ops::keys::encode_key_cells_nullable;
+use crate::table::Table;
 
 /// Rows sampled from the source table for the planner's frequency estimate.
 pub const PLANNER_SAMPLE: usize = 1024;
@@ -36,11 +37,69 @@ pub const PLANNER_SAMPLE: usize = 1024;
 /// handful of rows is all noise.
 pub const MIN_STAT_ROWS: usize = 1000;
 
+/// Sampled key-tuple statistics of one source table — shared by the skew
+/// planner (max-share drives the broadcast flip) and the join-reorder cost
+/// model (rows and NDV drive the build-side estimate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KeyStats {
+    /// Exact row count of the source.
+    pub rows: usize,
+    /// Distinct key tuples *in the sample* (a lower bound on the true NDV).
+    pub ndv: usize,
+    /// Sampled frequency share of the most common key tuple.
+    pub max_share: f64,
+}
+
+/// Strided-sample statistics of the key tuple `keys` in `t`, or `None`
+/// when the keys are missing or not groupable. No minimum-size gate here —
+/// the reorder cost model wants estimates for small dimension tables too;
+/// callers that need the gate (the skew flip) apply it on `rows`.
+pub fn source_key_stats(t: &Table, keys: &[String]) -> Option<KeyStats> {
+    let n = t.num_rows();
+    if n == 0 {
+        return None;
+    }
+    let cols: Vec<&Column> = keys
+        .iter()
+        .map(|k| t.column(k))
+        .collect::<Option<Vec<_>>>()?;
+    if cols.iter().any(|c| !c.dtype().is_groupable()) {
+        return None;
+    }
+    let masks: Vec<Option<&ValidityMask>> = keys.iter().map(|k| t.mask(k)).collect();
+    let s = n.min(PLANNER_SAMPLE);
+    // strided sample: deterministic (the optimizer must be a pure
+    // function of the plan) and uniform over a block-ordered table
+    let mut counts: FxHashMap<Vec<u8>, usize> = FxHashMap::default();
+    let mut max = 0usize;
+    for k in 0..s {
+        let i = k * n / s;
+        let mut row = Vec::new();
+        encode_key_cells_nullable(&cols, &masks, i, &mut row);
+        let c = counts.entry(row).or_insert(0);
+        *c += 1;
+        if *c > max {
+            max = *c;
+        }
+    }
+    Some(KeyStats {
+        rows: n,
+        ndv: counts.len(),
+        max_share: max as f64 / s as f64,
+    })
+}
+
 /// Flip `Hash` joins to `SkewBroadcast` where source statistics show a
-/// heavy-hitter probe-key distribution (see the module docs).
+/// heavy-hitter probe-key distribution (tree entry point — a thin round
+/// trip through [`select_skew_joins_graph`]).
 pub fn select_skew_joins(plan: Plan) -> Plan {
-    map_plan(plan, &|node| {
-        let Plan::Join {
+    select_skew_joins_graph(&PlanGraph::from_plan(&plan, false)).to_plan()
+}
+
+/// Graph rewrite: per-join strategy selection (see the module docs).
+pub fn select_skew_joins_graph(g: &PlanGraph) -> PlanGraph {
+    g.rewrite(|st, node| {
+        let Node::Join {
             left,
             right,
             on,
@@ -54,14 +113,14 @@ pub fn select_skew_joins(plan: Plan) -> Plan {
             let keys: Vec<String> = on.iter().map(|(lk, _)| lk.clone()).collect();
             let threshold =
                 JoinStrategy::DEFAULT_SKEW_THRESHOLD_PERMILLE as f64 / 1000.0;
-            match max_key_share(&left, &keys) {
+            match max_key_share_graph(st, left, &keys) {
                 Some(share) if share >= threshold => JoinStrategy::skew_default(),
                 _ => JoinStrategy::Hash,
             }
         } else {
             strategy
         };
-        Plan::Join {
+        Node::Join {
             left,
             right,
             on,
@@ -72,52 +131,36 @@ pub fn select_skew_joins(plan: Plan) -> Plan {
 }
 
 /// Estimated frequency share of the most common key tuple of `keys` in
-/// `plan`'s output, or `None` when no statistics are reachable. The walk
-/// treats `Filter` as statistics-preserving (an approximation — a selective
-/// filter can change the key distribution, but the runtime sampling pass
-/// corrects the heavy set anyway).
+/// `plan`'s output, or `None` when no statistics are reachable or the
+/// source is below [`MIN_STAT_ROWS`]. The walk treats `Filter` as
+/// statistics-preserving (an approximation — a selective filter can change
+/// the key distribution, but the runtime sampling pass corrects the heavy
+/// set anyway).
 pub fn max_key_share(plan: &Plan, keys: &[String]) -> Option<f64> {
+    let stats = plan_key_stats(plan, keys)?;
+    if stats.rows < MIN_STAT_ROWS {
+        return None;
+    }
+    Some(stats.max_share)
+}
+
+/// Walk `plan` through statistic-preserving nodes down to an in-memory
+/// source and sample the key tuple there (`None` when no statistics are
+/// reachable — aggregates, other joins, HFS files). No size gate; see
+/// [`source_key_stats`].
+pub fn plan_key_stats(plan: &Plan, keys: &[String]) -> Option<KeyStats> {
     match plan {
         Plan::Source {
             src: SourceRef::InMemory(t),
             ..
-        } => {
-            let n = t.num_rows();
-            if n < MIN_STAT_ROWS {
-                return None;
-            }
-            let cols: Vec<&Column> = keys
-                .iter()
-                .map(|k| t.column(k))
-                .collect::<Option<Vec<_>>>()?;
-            if cols.iter().any(|c| !c.dtype().is_groupable()) {
-                return None;
-            }
-            let masks: Vec<Option<&ValidityMask>> =
-                keys.iter().map(|k| t.mask(k)).collect();
-            let s = n.min(PLANNER_SAMPLE);
-            // strided sample: deterministic (the optimizer must be a pure
-            // function of the plan) and uniform over a block-ordered table
-            let mut counts: FxHashMap<Vec<u8>, usize> = FxHashMap::default();
-            let mut max = 0usize;
-            for k in 0..s {
-                let i = k * n / s;
-                let mut row = Vec::new();
-                encode_key_cells_nullable(&cols, &masks, i, &mut row);
-                let c = counts.entry(row).or_insert(0);
-                *c += 1;
-                if *c > max {
-                    max = *c;
-                }
-            }
-            Some(max as f64 / s as f64)
-        }
+        } => source_key_stats(t, keys),
         Plan::Filter { input, .. }
         | Plan::Sort { input, .. }
-        | Plan::Rebalance { input } => max_key_share(input, keys),
+        | Plan::Rebalance { input }
+        | Plan::Cache { input } => plan_key_stats(input, keys),
         Plan::Project { input, columns } => {
             if keys.iter().all(|k| columns.contains(k)) {
-                max_key_share(input, keys)
+                plan_key_stats(input, keys)
             } else {
                 None
             }
@@ -126,7 +169,7 @@ pub fn max_key_share(plan: &Plan, keys: &[String]) -> Option<f64> {
             if keys.contains(name) {
                 None // the key column is (re)computed — stats unreachable
             } else {
-                max_key_share(input, keys)
+                plan_key_stats(input, keys)
             }
         }
         Plan::Rename { input, from, to } => {
@@ -134,7 +177,52 @@ pub fn max_key_share(plan: &Plan, keys: &[String]) -> Option<f64> {
                 .iter()
                 .map(|k| if k == to { from.clone() } else { k.clone() })
                 .collect();
-            max_key_share(input, &mapped)
+            plan_key_stats(input, &mapped)
+        }
+        _ => None,
+    }
+}
+
+/// Graph counterpart of [`max_key_share`].
+pub fn max_key_share_graph(st: &Store, id: NodeId, keys: &[String]) -> Option<f64> {
+    let stats = node_key_stats(st, id, keys)?;
+    if stats.rows < MIN_STAT_ROWS {
+        return None;
+    }
+    Some(stats.max_share)
+}
+
+/// Graph counterpart of [`plan_key_stats`].
+pub fn node_key_stats(st: &Store, id: NodeId, keys: &[String]) -> Option<KeyStats> {
+    match st.node(id) {
+        Node::Source {
+            src: SourceRef::InMemory(t),
+            ..
+        } => source_key_stats(t, keys),
+        Node::Filter { input, .. }
+        | Node::Sort { input, .. }
+        | Node::Rebalance { input }
+        | Node::Cache { input } => node_key_stats(st, *input, keys),
+        Node::Project { input, columns } => {
+            if keys.iter().all(|k| columns.contains(k)) {
+                node_key_stats(st, *input, keys)
+            } else {
+                None
+            }
+        }
+        Node::WithColumn { input, name, .. } => {
+            if keys.contains(name) {
+                None // the key column is (re)computed — stats unreachable
+            } else {
+                node_key_stats(st, *input, keys)
+            }
+        }
+        Node::Rename { input, from, to } => {
+            let mapped: Vec<String> = keys
+                .iter()
+                .map(|k| if k == to { from.clone() } else { k.clone() })
+                .collect();
+            node_key_stats(st, *input, &mapped)
         }
         _ => None,
     }

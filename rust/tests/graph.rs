@@ -1,0 +1,253 @@
+//! Property suite for the arena-graph executor: diamond-shaped plans and
+//! self-joins must agree across all three engines at ≥2 workers, the
+//! shared-subplan memo must execute each hash-consed arm exactly once per
+//! rank (exact reuse-counter assertions), and the cost-based join-reorder
+//! pass must be byte-identical to the unreordered plan everywhere.
+
+use hiframes::baseline::sparklike::SparkLike;
+use hiframes::datagen::Rng;
+use hiframes::exec::{collect_serial, collect_stats, ExecOptions};
+use hiframes::passes::optimize_graph;
+use hiframes::prelude::*;
+use hiframes::prop::forall_cases;
+use hiframes::types::{JoinType, SortOrder};
+
+/// Random all-integer table (exact equality across engines, no float eps).
+fn random_table(rng: &mut Rng, n: usize, key_range: i64) -> Table {
+    Table::from_pairs(vec![
+        (
+            "id",
+            Column::I64((0..n).map(|_| rng.i64_range(0, key_range)).collect()),
+        ),
+        (
+            "x",
+            Column::I64((0..n).map(|_| rng.i64_range(-50, 50)).collect()),
+        ),
+    ])
+    .unwrap()
+}
+
+fn canon(t: &Table, keys: &[&str]) -> Table {
+    let ks: Vec<(&str, SortOrder)> = keys.iter().map(|k| (*k, SortOrder::Asc)).collect();
+    t.sorted_by_keys(&ks).unwrap()
+}
+
+#[test]
+fn prop_diamond_three_engines_agree_and_share_once() {
+    forall_cases(
+        "graph-diamond-3way",
+        10,
+        |rng| {
+            let n = 40 + rng.usize(200);
+            (random_table(rng, n, 20), rng.i64_range(-20, 20))
+        },
+        |(t, thr)| {
+            let pred = col("x").lt(lit(*thr));
+            // diamond: one filter arm consumed twice — directly as the join
+            // probe and through a with_columns/select chain as the build
+            for workers in [2usize, 3] {
+                let hf = HiFrames::with_workers(workers);
+                let d = hf.table("t", t.clone());
+                let shared = d.filter(pred.clone());
+                let right = shared
+                    .with_columns(&[("rid", col("id")), ("y", col("x"))])
+                    .select(&["rid", "y"]);
+                let q = shared.join_on(&right, &[("id", "rid")], JoinType::Inner);
+                let plan = q.plan().clone();
+
+                let opts = ExecOptions {
+                    workers,
+                    ..Default::default()
+                };
+                let (ours, stats) =
+                    collect_stats(plan.clone(), &opts).map_err(|e| e.to_string())?;
+                // the filter arm has exactly two consumers, so each rank
+                // re-fetches it exactly once: reuse == workers
+                if stats.reuse_hits != workers as u64 {
+                    return Err(format!(
+                        "workers={workers}: expected {workers} reuse hits, got {stats:?}"
+                    ));
+                }
+
+                // dedup off executes the duplicated arm again: no reuse,
+                // strictly more nodes
+                let mut raw = opts.clone();
+                raw.passes.dedup_subplans = false;
+                let (raw_out, raw_stats) =
+                    collect_stats(plan.clone(), &raw).map_err(|e| e.to_string())?;
+                if raw_stats.reuse_hits != 0 {
+                    return Err(format!("dedup off but reuse {raw_stats:?}"));
+                }
+                if raw_stats.nodes_executed <= stats.nodes_executed {
+                    return Err(format!(
+                        "dedup saved nothing: {stats:?} vs {raw_stats:?}"
+                    ));
+                }
+
+                // three-engine agreement (exact: all-i64 columns)
+                let srl = collect_serial(plan.clone()).map_err(|e| e.to_string())?;
+                let eng = SparkLike::new(2, workers + 1);
+                let f = eng
+                    .filter(&eng.parallelize(t), &pred)
+                    .map_err(|e| e.to_string())?;
+                let r = eng
+                    .with_columns(&f, &[("rid", col("id")), ("y", col("x"))])
+                    .and_then(|r| eng.select(&r, &["rid", "y"]))
+                    .map_err(|e| e.to_string())?;
+                let spk = eng
+                    .join_on(&f, &r, &[("id", "rid")], JoinType::Inner)
+                    .and_then(|j| eng.collect(&j))
+                    .map_err(|e| e.to_string())?;
+                let keys = ["id", "x", "y"];
+                let a = canon(&ours, &keys);
+                if a != canon(&raw_out, &keys) {
+                    return Err(format!("workers={workers}: dedup changed the result"));
+                }
+                if a != canon(&srl, &keys) {
+                    return Err(format!("workers={workers}: hiframes != serial"));
+                }
+                if a != canon(&spk, &keys) {
+                    return Err(format!("workers={workers}: hiframes != sparklike"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_self_join_three_engines_agree_and_share_once() {
+    forall_cases(
+        "graph-selfjoin-3way",
+        10,
+        |rng| {
+            let n = 30 + rng.usize(150);
+            random_table(rng, n, 12)
+        },
+        |t| {
+            for workers in [2usize, 3] {
+                let hf = HiFrames::with_workers(workers);
+                // true self-join: both join inputs are the *same* plan, so
+                // hash-consing gives the join one child node used twice
+                let p = hf.table("t", t.clone()).select(&["id"]);
+                let q = p.join_on(&p, &[("id", "id")], JoinType::Inner);
+                let plan = q.plan().clone();
+
+                let opts = ExecOptions {
+                    workers,
+                    ..Default::default()
+                };
+                let (ours, stats) =
+                    collect_stats(plan.clone(), &opts).map_err(|e| e.to_string())?;
+                if stats.reuse_hits != workers as u64 {
+                    return Err(format!(
+                        "workers={workers}: self-join side must materialize once \
+                         per rank, got {stats:?}"
+                    ));
+                }
+
+                let srl = collect_serial(plan.clone()).map_err(|e| e.to_string())?;
+                let eng = SparkLike::new(2, workers + 1);
+                let sp = eng
+                    .select(&eng.parallelize(t), &["id"])
+                    .map_err(|e| e.to_string())?;
+                let spk = eng
+                    .join_on(&sp, &sp, &[("id", "id")], JoinType::Inner)
+                    .and_then(|j| eng.collect(&j))
+                    .map_err(|e| e.to_string())?;
+                let a = canon(&ours, &["id"]);
+                if a != canon(&srl, &["id"]) {
+                    return Err(format!("workers={workers}: hiframes != serial"));
+                }
+                if a != canon(&spk, &["id"]) {
+                    return Err(format!("workers={workers}: hiframes != sparklike"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fixed three-way inner-join chain where the user order is pessimal: the
+/// big dimension joins first. The cost pass must flip it — and flip nothing
+/// about the result.
+fn chain_tables() -> (Table, Table, Table) {
+    let base = Table::from_pairs(vec![
+        ("id", Column::I64((0..40).collect())),
+        ("v", Column::I64((0..40).map(|i| i * 7).collect())),
+    ])
+    .unwrap();
+    let big = Table::from_pairs(vec![
+        ("a", Column::I64((0..300).map(|i| i % 40).collect())),
+        ("av", Column::I64((0..300).collect())),
+    ])
+    .unwrap();
+    let small = Table::from_pairs(vec![
+        ("b", Column::I64((0..20).map(|i| i % 40).collect())),
+        ("bv", Column::I64((0..20).collect())),
+    ])
+    .unwrap();
+    (base, big, small)
+}
+
+#[test]
+fn join_reorder_is_byte_identical_on_all_engines() {
+    let (base, big, small) = chain_tables();
+    let keys = ["id", "v", "av", "bv"];
+    let mut golden: Option<Table> = None;
+    for workers in [2usize, 3] {
+        let hf = HiFrames::with_workers(workers);
+        let q = hf
+            .table("base", base.clone())
+            .join(&hf.table("big", big.clone()), "id", "a")
+            .join(&hf.table("small", small.clone()), "id", "b");
+        let plan = q.plan().clone();
+
+        let off = ExecOptions {
+            workers,
+            ..Default::default()
+        };
+        let mut on = off.clone();
+        on.passes.join_reorder = true;
+
+        // the pass really moves the small build side first…
+        let g_off = optimize_graph(plan.clone(), &off.passes).unwrap();
+        let g_on = optimize_graph(plan.clone(), &on.passes).unwrap();
+        let pos = |g: &str, needle: &str| {
+            g.lines()
+                .position(|l| l.contains(needle))
+                .unwrap_or_else(|| panic!("missing {needle:?} in:\n{g}"))
+        };
+        let (r_off, r_on) = (g_off.render(false), g_on.render(false));
+        assert!(pos(&r_off, "Source(big)") < pos(&r_off, "Source(small)"));
+        assert!(
+            pos(&r_on, "Source(small)") < pos(&r_on, "Source(big)"),
+            "join_reorder did not flip the chain:\n{r_on}"
+        );
+        assert!(
+            r_on.contains("Project("),
+            "reordered chain must restore column order:\n{r_on}"
+        );
+
+        // …and changes nothing observable: byte-identical relations across
+        // reorder on/off, the serial oracle and the sparklike engine
+        let t_off = canon(&hiframes::exec::collect(plan.clone(), &off).unwrap(), &keys);
+        let t_on = canon(&hiframes::exec::collect(plan.clone(), &on).unwrap(), &keys);
+        assert_eq!(t_off.schema().names(), vec!["id", "v", "av", "bv"]);
+        assert_eq!(t_on, t_off, "workers={workers}: reorder changed the result");
+        let srl = canon(&collect_serial(plan.clone()).unwrap(), &keys);
+        assert_eq!(t_on, srl, "workers={workers}: reorder != serial oracle");
+        let eng = SparkLike::new(2, workers + 1);
+        let j1 = eng
+            .join(&eng.parallelize(&base), &eng.parallelize(&big), "id", "a")
+            .unwrap();
+        let j2 = eng.join(&j1, &eng.parallelize(&small), "id", "b").unwrap();
+        let spk = canon(&eng.collect(&j2).unwrap(), &keys);
+        assert_eq!(t_on, spk, "workers={workers}: reorder != sparklike");
+        // byte-identical across worker counts too
+        match &golden {
+            Some(g) => assert_eq!(&t_on, g, "result differs across worker counts"),
+            None => golden = Some(t_on),
+        }
+    }
+}
