@@ -53,6 +53,7 @@ fn main() {
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
                 mem_budget: None,
+                profile: false,
             };
             table.run(label, "pushdown", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()
@@ -81,6 +82,7 @@ fn main() {
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
                 mem_budget: None,
+                profile: false,
             };
             table.run(label, "lazy-1dvar", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()
@@ -107,6 +109,7 @@ fn main() {
                 passes: PassOptions::default(),
                 agg_strategy: strat,
                 mem_budget: None,
+                profile: false,
             };
             table.run(label, "pre-agg", rows, 1, reps, || {
                 collect_optimized(&plan, &opts).unwrap().num_rows()
@@ -143,6 +146,7 @@ fn main() {
                 passes,
                 agg_strategy: AggStrategy::RawShuffle,
                 mem_budget: None,
+                profile: false,
             };
             table.run(label, "pruning", rows, 1, reps, || {
                 collect_optimized(&optimized, &opts).unwrap().num_rows()

@@ -75,6 +75,33 @@ fn main() {
                 });
             }
         }
+        // HIFRAMES_PROFILE=1: profile one Q26 run, fold the summary into the
+        // results JSON and drop a Chrome trace next to it (CI smoke-checks
+        // both — see `.github/workflows/ci.yml`).
+        if hiframes::config::profile_from_env() {
+            let db = bigbench::generate(&bigbench::GenOptions {
+                scale_factor: sfs[0],
+                click_skew: 0.0,
+                seed: 42,
+            });
+            let hf = HiFrames::with_workers(workers);
+            let (_, prof) = q26::hiframes_relational(&hf, &db, &q26::Q26Params::default())
+                .collect_profiled()
+                .unwrap();
+            table.add_counter("profile_nodes_executed", prof.executed_nodes() as u64);
+            table.add_counter("profile_elapsed_us", prof.elapsed_ns() / 1_000);
+            table.add_counter("profile_shuffle_bytes", prof.total_bytes_shuffled());
+            table.add_counter("profile_spill_bytes", prof.total_bytes_spilled());
+            table.add_counter("profile_collectives", prof.total_collectives());
+            table.add_counter(
+                "profile_max_imbalance_x100",
+                (prof.max_imbalance() * 100.0) as u64,
+            );
+            match prof.write_chrome_trace("fig11_q26") {
+                Ok(path) => eprintln!("[fig11] Chrome trace written to {}", path.display()),
+                Err(e) => eprintln!("[fig11] could not write Chrome trace: {e}"),
+            }
+        }
         table.finish("fig11");
 
         // Q05 skew experiment: imbalance factor under Zipf keys

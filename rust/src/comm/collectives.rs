@@ -31,6 +31,7 @@ impl Comm {
     pub fn alltoallv_bytes(&self, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
         assert_eq!(bufs.len(), self.nranks(), "alltoallv: need one buf per rank");
         self.count_collective();
+        let _t = self.collective_timer();
         for (d, buf) in bufs.into_iter().enumerate() {
             self.send(d, buf);
         }
@@ -41,6 +42,7 @@ impl Comm {
     pub fn alltoall_counts(&self, counts: &[u64]) -> Vec<u64> {
         assert_eq!(counts.len(), self.nranks());
         self.count_collective();
+        let _t = self.collective_timer();
         for (d, &c) in counts.iter().enumerate() {
             self.send(d, c.to_le_bytes().to_vec());
         }
@@ -57,6 +59,7 @@ impl Comm {
     /// identity, which is what the paper's cumsum codegen wants.
     pub fn exscan_f64(&self, value: f64, op: ReduceOp) -> f64 {
         self.count_collective();
+        let _t = self.collective_timer();
         // Post value to all higher ranks, then fold contributions from lower.
         for d in self.rank() + 1..self.nranks() {
             self.send(d, value.to_le_bytes().to_vec());
@@ -73,6 +76,7 @@ impl Comm {
     /// Integer twin of [`Comm::exscan_f64`].
     pub fn exscan_i64(&self, value: i64, op: ReduceOp) -> i64 {
         self.count_collective();
+        let _t = self.collective_timer();
         for d in self.rank() + 1..self.nranks() {
             self.send(d, value.to_le_bytes().to_vec());
         }
@@ -88,6 +92,7 @@ impl Comm {
     /// Allreduce of one f64 (sum/min/max on every rank).
     pub fn allreduce_f64(&self, value: f64, op: ReduceOp) -> f64 {
         self.count_collective();
+        let _t = self.collective_timer();
         for d in 0..self.nranks() {
             if d != self.rank() {
                 self.send(d, value.to_le_bytes().to_vec());
@@ -112,6 +117,7 @@ impl Comm {
     /// Integer twin of [`Comm::allreduce_f64`].
     pub fn allreduce_i64(&self, value: i64, op: ReduceOp) -> i64 {
         self.count_collective();
+        let _t = self.collective_timer();
         for d in 0..self.nranks() {
             if d != self.rank() {
                 self.send(d, value.to_le_bytes().to_vec());
@@ -131,6 +137,7 @@ impl Comm {
     /// Element-wise allreduce of an f64 vector (k-means centroid partials).
     pub fn allreduce_f64_vec(&self, values: &[f64], op: ReduceOp) -> Vec<f64> {
         self.count_collective();
+        let _t = self.collective_timer();
         let mut payload = Vec::with_capacity(values.len() * 8);
         for v in values {
             payload.extend_from_slice(&v.to_le_bytes());
@@ -162,6 +169,7 @@ impl Comm {
     /// Gather byte-buffers on `root`; non-root ranks get an empty vec.
     pub fn gather_bytes(&self, root: usize, payload: Vec<u8>) -> Vec<Vec<u8>> {
         self.count_collective();
+        let _t = self.collective_timer();
         if self.rank() == root {
             let mut out: Vec<Vec<u8>> = (0..self.nranks()).map(|_| Vec::new()).collect();
             out[root] = payload;
@@ -180,6 +188,7 @@ impl Comm {
     /// Broadcast a byte-buffer from `root` to every rank.
     pub fn bcast_bytes(&self, root: usize, payload: Vec<u8>) -> Vec<u8> {
         self.count_collective();
+        let _t = self.collective_timer();
         if self.rank() == root {
             for d in 0..self.nranks() {
                 if d != root {
@@ -195,6 +204,7 @@ impl Comm {
     /// Allgather: every rank receives every rank's buffer, in rank order.
     pub fn allgather_bytes(&self, payload: Vec<u8>) -> Vec<Vec<u8>> {
         self.count_collective();
+        let _t = self.collective_timer();
         for d in 0..self.nranks() {
             if d != self.rank() {
                 self.send(d, payload.clone());
@@ -218,6 +228,7 @@ impl Comm {
     /// Right/Outer join exactly once.
     pub fn allreduce_bytes_or(&self, payload: Vec<u8>) -> Vec<u8> {
         self.count_collective();
+        let _t = self.collective_timer();
         for d in 0..self.nranks() {
             if d != self.rank() {
                 self.send(d, payload.clone());
@@ -251,6 +262,7 @@ impl Comm {
         to_next: Vec<u8>,
     ) -> (Option<Vec<u8>>, Option<Vec<u8>>) {
         self.count_collective();
+        let _t = self.collective_timer();
         let r = self.rank();
         let n = self.nranks();
         if r > 0 {

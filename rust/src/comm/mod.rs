@@ -16,9 +16,11 @@ mod collectives;
 
 pub use collectives::*;
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
 
 /// Shared communication counters (read by the benches).
 #[derive(Debug, Default)]
@@ -41,6 +43,24 @@ impl CommStats {
     }
 }
 
+/// Per-scope communication deltas — what one rank sent and how long it
+/// waited in collectives while a profiling scope was open. The graph
+/// executor opens a scope around each node execution (`scope_begin` /
+/// `scope_end`) to attribute traffic to the issuing plan node; this is the
+/// per-query tagging the ROADMAP serving item asks for. See DESIGN.md §4.7.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CommScope {
+    /// Point-to-point messages sent by this rank inside the scope.
+    pub messages: u64,
+    /// Payload bytes sent by this rank inside the scope.
+    pub bytes: u64,
+    /// Collective operations issued inside the scope.
+    pub collectives: u64,
+    /// Wall time spent inside those collectives (nanoseconds; includes
+    /// wait time, which is the skew signal).
+    pub collective_ns: u64,
+}
+
 /// One rank's endpoint of the world: `MPI_COMM_WORLD` from that rank's view.
 pub struct Comm {
     rank: usize,
@@ -51,6 +71,10 @@ pub struct Comm {
     receivers: Vec<Receiver<Vec<u8>>>,
     barrier: Arc<Barrier>,
     stats: Arc<CommStats>,
+    /// Active profiling scope, if any. `RefCell` (not atomic): a `Comm` is
+    /// owned by exactly one rank thread. `None` on the unprofiled path, so
+    /// the only overhead when off is one borrow + `is_some` check.
+    scope: RefCell<Option<CommScope>>,
 }
 
 impl Comm {
@@ -80,6 +104,10 @@ impl Comm {
         self.stats
             .bytes
             .fetch_add(payload.len() as u64, Ordering::Relaxed);
+        if let Some(s) = self.scope.borrow_mut().as_mut() {
+            s.messages += 1;
+            s.bytes += payload.len() as u64;
+        }
         self.senders[dst]
             .send(payload)
             .expect("comm: send to dead rank");
@@ -100,6 +128,48 @@ impl Comm {
 
     pub(crate) fn count_collective(&self) {
         self.stats.collectives.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.scope.borrow_mut().as_mut() {
+            s.collectives += 1;
+        }
+    }
+
+    /// Open a fresh profiling scope: subsequent sends and collectives on
+    /// this rank accumulate into it until [`Self::scope_end`]. Scopes do
+    /// not nest — beginning a new one discards any open scope.
+    pub fn scope_begin(&self) {
+        *self.scope.borrow_mut() = Some(CommScope::default());
+    }
+
+    /// Close the active scope and return its deltas (zeros if none open).
+    pub fn scope_end(&self) -> CommScope {
+        self.scope.borrow_mut().take().unwrap_or_default()
+    }
+
+    /// RAII timer charging its lifetime to the active scope's collective
+    /// wall time. When no scope is open (`start == None`) the drop is a
+    /// no-op and `Instant::now` is never called — the unprofiled path
+    /// stays clock-free.
+    pub(crate) fn collective_timer(&self) -> CollectiveTimer<'_> {
+        CollectiveTimer {
+            comm: self,
+            start: self.scope.borrow().is_some().then(Instant::now),
+        }
+    }
+}
+
+/// See [`Comm::collective_timer`].
+pub(crate) struct CollectiveTimer<'a> {
+    comm: &'a Comm,
+    start: Option<Instant>,
+}
+
+impl Drop for CollectiveTimer<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            if let Some(s) = self.comm.scope.borrow_mut().as_mut() {
+                s.collective_ns += start.elapsed().as_nanos() as u64;
+            }
+        }
     }
 }
 
@@ -175,6 +245,7 @@ fn build_world(nranks: usize, stats: Arc<CommStats>) -> Vec<Comm> {
             receivers: rx_row.into_iter().map(|r| r.unwrap()).collect(),
             barrier: barrier.clone(),
             stats: stats.clone(),
+            scope: RefCell::new(None),
         });
     }
     comms
@@ -256,6 +327,38 @@ mod tests {
         let (msgs, bytes, _, _) = stats.snapshot();
         assert_eq!(msgs, 2);
         assert_eq!(bytes, 200);
+    }
+
+    #[test]
+    fn scope_attributes_sends_and_collectives() {
+        let (out, stats) = run_spmd_with_stats(2, |c| {
+            // traffic before the scope: global stats only
+            c.send(1 - c.rank(), vec![0u8; 10]);
+            c.recv(1 - c.rank());
+            c.scope_begin();
+            c.send(1 - c.rank(), vec![0u8; 25]);
+            c.recv(1 - c.rank());
+            let _ = c.allreduce_i64(c.rank() as i64, ReduceOp::Sum);
+            let scope = c.scope_end();
+            // after the scope: untracked again
+            c.send(1 - c.rank(), vec![0u8; 7]);
+            c.recv(1 - c.rank());
+            scope
+        });
+        for s in &out {
+            assert_eq!(s.messages, 2, "scoped send + allreduce exchange");
+            assert!(s.bytes >= 25, "scoped bytes include the 25B payload");
+            assert_eq!(s.collectives, 1);
+        }
+        // the global sink still saw everything: per rank, two unscoped
+        // sends (10B, 7B) plus the two scoped messages counted above
+        let (msgs, bytes, _, colls) = stats.snapshot();
+        assert_eq!(msgs, 2 * 2 + out.iter().map(|s| s.messages).sum::<u64>());
+        assert!(bytes >= 2 * (10 + 25 + 7));
+        assert_eq!(colls, 2);
+        // no open scope -> zeros
+        let zero = run_spmd(1, |c| c.scope_end());
+        assert_eq!(zero[0], CommScope::default());
     }
 
     #[test]

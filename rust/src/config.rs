@@ -128,6 +128,17 @@ pub fn mem_budget_from_env() -> Option<usize> {
     parse_byte_size(&std::env::var("HIFRAMES_MEM_BUDGET").ok()?)
 }
 
+/// Query profiling default from `HIFRAMES_PROFILE` (`1`/`true`/`yes`).
+/// When on, every `collect()` records a [`crate::trace::QueryProfile`]
+/// (per-node/per-rank spans); off — the default — the executor takes the
+/// span-free hot path. See DESIGN.md §4.7.
+pub fn profile_from_env() -> bool {
+    matches!(
+        std::env::var("HIFRAMES_PROFILE").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
+
 /// Default worker count for this machine: physical-ish parallelism capped
 /// at 8 (the benches sweep explicitly; this is just the default).
 pub fn default_workers() -> usize {
@@ -185,6 +196,17 @@ mod tests {
             .with_env_overrides(&[]);
         assert_eq!(c.get_usize("testkey_uniq", 0).unwrap(), 99);
         std::env::remove_var("HIFRAMES_TESTKEY_UNIQ");
+    }
+
+    #[test]
+    fn profile_env_parses() {
+        // No set_var round-trip here: flipping HIFRAMES_PROFILE mid-run
+        // would change sibling tests' ExecOptions defaults. Profiling is
+        // result-identical either way, but keep the suite deterministic.
+        match std::env::var("HIFRAMES_PROFILE").as_deref() {
+            Ok("1") | Ok("true") | Ok("yes") => assert!(profile_from_env()),
+            _ => assert!(!profile_from_env()),
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::column::{
     decode_nullable_column, encode_nullable_column, extend_opt_mask, normalize_mask, Column,
     NullableColumn, ValidityMask,
 };
-use crate::comm::{block_range, run_spmd, Comm};
+use crate::comm::{block_range, run_spmd, run_spmd_with_stats, Comm, CommScope};
 use crate::expr::{eval_nullable, ColumnEnv};
 use crate::fxhash::{FxHashMap, FxHashSet};
 use crate::ir::graph::{Node, NodeId, PlanGraph, Store};
@@ -26,9 +26,12 @@ use crate::ir::{Plan, SourceRef, WindowAgg};
 use crate::ops::{self, aggregate::AggSpec, aggregate::AggStrategy, MaskedCol};
 use crate::passes::{optimize_graph, PassOptions};
 use crate::table::{Schema, Table};
+use crate::trace::{self, QueryProfile};
 use crate::types::SortOrder;
 use anyhow::{Context, Result};
+use std::rc::Rc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Execution options: worker (rank) count, optimizer toggles, the
 /// aggregation strategy (ablations flip these) and the per-rank memory
@@ -43,6 +46,11 @@ pub struct ExecOptions {
     /// DESIGN.md §4.5). `None` (or `Some(0)`) = unlimited, the in-memory
     /// paths bit for bit. Defaults from `HIFRAMES_MEM_BUDGET`.
     pub mem_budget: Option<usize>,
+    /// Record a per-node/per-rank [`QueryProfile`] for every collect (see
+    /// `trace.rs` and DESIGN.md §4.7). Never changes results — profiled
+    /// and unprofiled collects are byte-identical. Defaults from
+    /// `HIFRAMES_PROFILE`.
+    pub profile: bool,
 }
 
 impl Default for ExecOptions {
@@ -52,6 +60,7 @@ impl Default for ExecOptions {
             passes: PassOptions::default(),
             agg_strategy: AggStrategy::RawShuffle,
             mem_budget: crate::config::mem_budget_from_env(),
+            profile: crate::config::profile_from_env(),
         }
     }
 }
@@ -224,47 +233,117 @@ pub fn collect_optimized(plan: &Plan, opts: &ExecOptions) -> Result<Table> {
 }
 
 /// Execute an optimized [`PlanGraph`] on `opts.workers` ranks, returning
-/// the gathered table and the summed per-rank counters.
+/// the gathered table and the summed per-rank counters. Records a profile
+/// only when `opts.profile` is set (and discards it — use
+/// [`collect_graph_profiled`] to get it back).
 pub fn collect_graph(
     g: &PlanGraph,
     opts: &ExecOptions,
     cache: Option<&PlanCache>,
 ) -> Result<(Table, GraphRunStats)> {
+    let (table, stats, _) = collect_graph_inner(g, opts, cache, opts.profile)?;
+    Ok((table, stats))
+}
+
+/// [`collect_graph`] with profiling forced on: also returns the per-node/
+/// per-rank [`QueryProfile`] of this run.
+pub fn collect_graph_profiled(
+    g: &PlanGraph,
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+) -> Result<(Table, GraphRunStats, QueryProfile)> {
+    let (table, stats, prof) = collect_graph_inner(g, opts, cache, true)?;
+    Ok((table, stats, prof.expect("profiled run must produce a profile")))
+}
+
+/// Optimize, execute with a [`PlanCache`], and profile — the engine behind
+/// `df.collect_profiled()` / `df.explain_analyze()`.
+pub fn collect_cached_profiled(
+    plan: Plan,
+    opts: &ExecOptions,
+    cache: &PlanCache,
+) -> Result<(Table, GraphRunStats, QueryProfile)> {
+    let g = optimize_graph(plan, &opts.passes)?;
+    collect_graph_profiled(&g, opts, Some(cache))
+}
+
+/// The one executor under every `collect_*` flavor. With `profile` off the
+/// rank closure runs span-free (no clocks, no comm scopes — the hot path
+/// is unchanged); with it on, each rank returns one [`trace::NodeSpan`]
+/// per executed node plus the final-gather comm deltas, and the driver
+/// merges them into a [`QueryProfile`] over the executed graph's render.
+fn collect_graph_inner(
+    g: &PlanGraph,
+    opts: &ExecOptions,
+    cache: Option<&PlanCache>,
+    profile: bool,
+) -> Result<(Table, GraphRunStats, Option<QueryProfile>)> {
     let prog = Program::prepare(g, cache)?;
     let schema = prog.schemas[&prog.graph.completion].clone();
-    let results: Vec<Result<(Vec<u8>, GraphRunStats)>> =
-        run_spmd(opts.workers, |comm| -> Result<(Vec<u8>, GraphRunStats)> {
-            let (frame, stats) = exec_graph(&prog, &comm, opts, cache)?;
+    let clock = profile.then(trace::QueryClock::start);
+    type RankOut = Result<(Vec<u8>, GraphRunStats, Vec<trace::NodeSpan>, CommScope)>;
+    let (results, world_stats): (Vec<RankOut>, _) =
+        run_spmd_with_stats(opts.workers, |comm| -> RankOut {
+            let (frame, stats, spans) = exec_graph(&prog, &comm, opts, cache, clock.as_ref())?;
             // every rank serializes its chunk (masks included); leader
             // assembles
             let mut buf = Vec::new();
             for (c, m) in frame.cols.iter().zip(&frame.masks) {
                 encode_nullable_column(c, m.as_ref(), &mut buf);
             }
+            // the result gather happens after the last node, so its bytes
+            // are profiled as their own pseudo-span, not charged to a node
+            if clock.is_some() {
+                comm.scope_begin();
+            }
             let gathered = comm.gather_bytes(0, buf);
+            let gscope = if clock.is_some() {
+                comm.scope_end()
+            } else {
+                CommScope::default()
+            };
             if comm.is_root() {
                 let (cols, masks) = concat_rank_chunks(&frame.schema, gathered)?;
                 let mut out = Vec::new();
                 for (c, m) in cols.iter().zip(&masks) {
                     encode_nullable_column(c, normalize_mask(m.clone()).as_ref(), &mut out);
                 }
-                Ok((out, stats))
+                Ok((out, stats, spans, gscope))
             } else {
-                Ok((Vec::new(), stats))
+                Ok((Vec::new(), stats, spans, gscope))
             }
         });
     let mut total = GraphRunStats {
         cache_hits: prog.cache_hits,
         ..GraphRunStats::default()
     };
+    let mut prof = clock.map(|_| {
+        let budgeted = matches!(opts.mem_budget, Some(b) if b > 0);
+        QueryProfile::new(
+            opts.workers,
+            prog.graph.render_lines(budgeted),
+            prog.cache_hits,
+        )
+    });
     let mut root_buf: Option<Vec<u8>> = None;
     for (rank, r) in results.into_iter().enumerate() {
-        let (buf, stats) = r?;
+        let (buf, stats, spans, gscope) = r?;
         total.nodes_executed += stats.nodes_executed;
         total.reuse_hits += stats.reuse_hits;
+        if let Some(p) = prof.as_mut() {
+            // ranks are merged in rank order, keeping each node's spans
+            // rank-sorted
+            for s in spans {
+                p.add_span(s);
+            }
+            p.add_gather(gscope);
+        }
         if rank == 0 {
             root_buf = Some(buf);
         }
+    }
+    if let Some(p) = prof.as_mut() {
+        p.comm_totals = world_stats.snapshot();
     }
     let root_buf = root_buf.context("no ranks ran")?;
     let mut pos = 0;
@@ -280,7 +359,7 @@ pub fn collect_graph(
         total.reuse_hits,
         total.cache_hits,
     );
-    Ok((Table::new_masked(schema, cols, masks)?, total))
+    Ok((Table::new_masked(schema, cols, masks)?, total, prof))
 }
 
 /// Optimize and execute, returning only the global row count (no driver
@@ -290,7 +369,7 @@ pub fn collect_count(plan: Plan, opts: &ExecOptions) -> Result<usize> {
     let g = optimize_graph(plan, &opts.passes)?;
     let prog = Program::prepare(&g, None)?;
     let counts: Vec<Result<usize>> = run_spmd(opts.workers, |comm| -> Result<usize> {
-        let (frame, _) = exec_graph(&prog, &comm, opts, None)?;
+        let (frame, _, _) = exec_graph(&prog, &comm, opts, None, None)?;
         Ok(frame.num_rows())
     });
     counts.into_iter().try_fold(0usize, |acc, r| r.map(|n| acc + n))
@@ -304,8 +383,10 @@ pub fn collect_serial(plan: Plan) -> Result<Table> {
         workers: 1,
         passes: PassOptions::none(),
         agg_strategy: AggStrategy::RawShuffle,
-        // the oracle always runs in memory, whatever the env says
+        // the oracle always runs in memory and unprofiled, whatever the
+        // env says
         mem_budget: None,
+        profile: false,
     };
     collect(plan, &opts)
 }
@@ -430,6 +511,9 @@ struct RankState {
     remaining: FxHashMap<NodeId, usize>,
     fetched: FxHashSet<NodeId>,
     stats: GraphRunStats,
+    /// Profiling sink the current node's `SpillCtx` reports into (`None`
+    /// on the unprofiled path; replaced per node when profiling).
+    spill_scope: Option<Rc<trace::SpillScope>>,
 }
 
 impl RankState {
@@ -457,30 +541,75 @@ impl RankState {
 }
 
 /// Interpret the whole program on this rank: walk the topological order,
-/// materializing each demanded node exactly once.
+/// materializing each demanded node exactly once. With `clock` set (the
+/// profiled path) every execution is bracketed by a comm scope + spill
+/// scope + wall timer and recorded as a [`trace::NodeSpan`]; with it
+/// `None` the loop body is exactly the pre-profiler code.
 fn exec_graph(
     prog: &Program,
     comm: &Comm,
     opts: &ExecOptions,
     cache: Option<&PlanCache>,
-) -> Result<(LocalFrame, GraphRunStats)> {
+    clock: Option<&trace::QueryClock>,
+) -> Result<(LocalFrame, GraphRunStats, Vec<trace::NodeSpan>)> {
     let mut st = RankState {
         memo: FxHashMap::default(),
         remaining: prog.uses.clone(),
         fetched: FxHashSet::default(),
         stats: GraphRunStats::default(),
+        spill_scope: None,
     };
-    for &id in &prog.graph.execution_order {
+    let mut spans: Vec<trace::NodeSpan> = Vec::new();
+    for (pos, &id) in prog.graph.execution_order.iter().enumerate() {
         if prog.uses.get(&id).copied().unwrap_or(0) == 0 {
             // only demanded through Project fast paths — never materialized
             continue;
         }
-        let frame = exec_one(prog, id, &mut st, comm, opts, cache)?;
+        let frame = if let Some(clk) = clock {
+            // rows_in: rows consumed from already-materialized inputs
+            // (before exec_one's fetches can take them out of the memo);
+            // a self-join's doubly-consumed input counts twice
+            let rows_in: u64 = prog.graph.store[id]
+                .children()
+                .iter()
+                .filter_map(|c| st.memo.get(c))
+                .map(|f| f.num_rows() as u64)
+                .sum();
+            let reuse_before = st.stats.reuse_hits;
+            st.spill_scope = Some(Rc::new(trace::SpillScope::default()));
+            comm.scope_begin();
+            let start_ns = clk.now_ns();
+            let t = Instant::now();
+            let frame = exec_one(prog, id, &mut st, comm, opts, cache)?;
+            let wall_ns = t.elapsed().as_nanos() as u64;
+            let cs = comm.scope_end();
+            let sc = st.spill_scope.take().expect("spill scope set above");
+            spans.push(trace::NodeSpan {
+                pos,
+                rank: comm.rank(),
+                start_ns,
+                wall_ns,
+                rows_in,
+                rows_out: frame.num_rows() as u64,
+                messages: cs.messages,
+                bytes_shuffled: cs.bytes,
+                collectives: cs.collectives,
+                collective_ns: cs.collective_ns,
+                bytes_spilled: sc.bytes_spilled.get(),
+                partitions_spilled: sc.partitions_spilled.get(),
+                spill_passes: sc.spill_passes.get(),
+                merge_passes: sc.merge_passes.get(),
+                reuse_hits: st.stats.reuse_hits - reuse_before,
+            });
+            frame
+        } else {
+            exec_one(prog, id, &mut st, comm, opts, cache)?
+        };
         st.stats.nodes_executed += 1;
         st.memo.insert(id, frame);
     }
     let out = st.fetch(prog.graph.completion);
-    Ok((out, st.stats))
+    Ok((out, st.stats, spans))
 }
 
 /// Interpret one graph node on this rank, fetching child frames from the
@@ -651,7 +780,8 @@ fn exec_one(
                     || rframe.schema.nullable_of(rk).unwrap_or(false)
             });
             let spill =
-                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank())
+                    .with_scope(st.spill_scope.clone());
             let (keys_out, lout, rout) = ops::distributed_join_on_budgeted(
                 comm,
                 &lkeys,
@@ -728,7 +858,8 @@ fn exec_one(
                 .iter()
                 .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
             let spill =
-                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank())
+                    .with_scope(st.spill_scope.clone());
             let (key_out, out_cols) = ops::distributed_aggregate_keys_budgeted(
                 comm,
                 &key_cols,
@@ -972,7 +1103,8 @@ fn exec_one(
                 .iter()
                 .any(|(k, _)| frame.schema.nullable_of(k).unwrap_or(false));
             let spill =
-                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank());
+                ops::SpillCtx::new(ops::MemoryBudget::from_opt(opts.mem_budget), comm.rank())
+                    .with_scope(st.spill_scope.clone());
             let (skeys, scols) = ops::distributed_sort_keys_budgeted(
                 comm,
                 &key_cols,
@@ -1563,6 +1695,36 @@ mod tests {
         let (got, stats) = collect_stats(plan, &o).unwrap();
         assert_eq!(got, serial);
         assert_eq!(stats.reuse_hits, 0);
+    }
+
+    #[test]
+    fn profiled_collect_matches_and_attributes() {
+        let plan = diamond();
+        let o = opts(2);
+        let base = collect(plan.clone(), &o).unwrap();
+        let g = optimize_graph(plan, &o.passes).unwrap();
+        let (t, stats, prof) = collect_graph_profiled(&g, &o, None).unwrap();
+        assert_eq!(t, base, "profiling must not change results");
+        assert_eq!(prof.workers, 2);
+        // each executed node ran once per rank, spans in rank order
+        assert_eq!(prof.executed_nodes() as u64 * 2, stats.nodes_executed);
+        for n in prof.nodes.iter().filter(|n| n.executed()) {
+            assert_eq!(n.spans.len(), 2, "{}", n.label);
+            assert_eq!(n.spans[0].rank, 0);
+            assert_eq!(n.spans[1].rank, 1);
+        }
+        assert_eq!(prof.total_reuse_hits(), stats.reuse_hits);
+        // every byte on the wire is attributed to a node or to the final
+        // result gather — nothing leaks out of the scopes
+        assert_eq!(
+            prof.total_bytes_shuffled() + prof.gather_bytes,
+            prof.comm_totals.1
+        );
+        // render carries the stats surface explain_analyze promises
+        let text = prof.render();
+        for needle in ["wall ", "rows ", "shuffle ", "spill ", "imb ", "-- 2 ranks"] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 
     #[test]

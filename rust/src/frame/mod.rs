@@ -47,6 +47,7 @@ use crate::ir::{
 };
 use crate::ops::stencil::{sma_weights, wma_weights_124};
 use crate::table::{Schema, Table};
+use crate::trace::QueryProfile;
 use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
@@ -427,11 +428,35 @@ impl DataFrame {
         }
     }
 
+    /// Run the query with profiling on and render the executed graph with
+    /// per-node runtime annotations: max wall time over ranks, rows in/out,
+    /// shuffle and spill bytes, and the per-rank imbalance factor
+    /// (max/mean wall time — `SKEW`-flagged above
+    /// [`crate::trace::SKEW_IMBALANCE`]), plus a run-summary footer. The
+    /// line structure is byte-stable for a plan + options; only the time
+    /// and imbalance values vary run to run.
+    pub fn explain_analyze(&self) -> Result<String> {
+        Ok(self.collect_profiled()?.1.render())
+    }
+
     /// Compile (all passes) + SPMD execute + gather on the leader.
     /// [`DataFrame::cache`] points are looked up in (and published to) the
     /// context's [`PlanCache`].
     pub fn collect(&self) -> Result<Table> {
         Ok(collect_cached(self.plan.clone(), &self.ctx.opts, &self.ctx.cache)?.0)
+    }
+
+    /// [`DataFrame::collect`] with profiling forced on: also returns the
+    /// run's [`QueryProfile`] (per-node/per-rank wall time, rows, shuffle/
+    /// spill bytes, collective time, reuse and cache hits). The table is
+    /// byte-identical to an unprofiled `collect()`. See DESIGN.md §4.7.
+    pub fn collect_profiled(&self) -> Result<(Table, QueryProfile)> {
+        let (table, _, prof) = crate::exec::collect_cached_profiled(
+            self.plan.clone(),
+            &self.ctx.opts,
+            &self.ctx.cache,
+        )?;
+        Ok((table, prof))
     }
 
     /// Scalar mean of a column (the paper's `mean(c_i_points[:id3])` —

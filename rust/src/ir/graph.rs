@@ -867,6 +867,18 @@ impl PlanGraph {
     /// numbers are execution-order positions, so isomorphic graphs render
     /// byte-identically.
     pub fn render(&self, annotate_spill: bool) -> String {
+        let mut out = String::new();
+        for line in self.render_lines(annotate_spill) {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// [`Self::render`] as one `String` per node, in execution order — the
+    /// profiler keys its per-node annotations to these lines (the index in
+    /// the returned vec IS the `%i` position).
+    pub fn render_lines(&self, annotate_spill: bool) -> Vec<String> {
         let pos: FxHashMap<NodeId, usize> = self
             .execution_order
             .iter()
@@ -874,13 +886,13 @@ impl PlanGraph {
             .map(|(i, &id)| (id, i))
             .collect();
         let shared = self.consumer_counts();
-        let mut out = String::new();
+        let mut lines = Vec::with_capacity(self.execution_order.len());
         for (i, &id) in self.execution_order.iter().enumerate() {
             let node = &self.store[id];
             let dist = self.store.dist_of(id);
-            out.push_str(&format!("%{i} = {} [{dist}]", node.describe(&pos)));
+            let mut line = format!("%{i} = {} [{dist}]", node.describe(&pos));
             if shared.get(&id).copied().unwrap_or(0) > 1 {
-                out.push_str(" [shared]");
+                line.push_str(" [shared]");
             }
             if annotate_spill
                 && matches!(
@@ -888,11 +900,11 @@ impl PlanGraph {
                     Node::Join { .. } | Node::Aggregate { .. } | Node::Sort { .. }
                 )
             {
-                out.push_str(" [spill]");
+                line.push_str(" [spill]");
             }
-            out.push('\n');
+            lines.push(line);
         }
-        out
+        lines
     }
 }
 

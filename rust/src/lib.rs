@@ -43,6 +43,7 @@ pub mod passes;
 pub mod prop;
 pub mod runtime;
 pub mod table;
+pub mod trace;
 pub mod types;
 
 /// Convenience re-exports for examples and tests.
@@ -51,5 +52,6 @@ pub mod prelude {
     pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf, WindowExpr};
     pub use crate::frame::*;
     pub use crate::table::{Schema, Table};
+    pub use crate::trace::QueryProfile;
     pub use crate::types::{DType, JoinType, SortOrder, Value, WindowFrame, WindowFunc};
 }

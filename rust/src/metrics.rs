@@ -61,8 +61,13 @@ pub struct Stats {
 
 impl Stats {
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
-        assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(!samples.is_empty(), "Stats::from_samples: no samples");
+        assert!(
+            samples.iter().all(|x| !x.is_nan()),
+            "Stats::from_samples: NaN sample (a timed closure returned NaN \
+             seconds); drop or repair the sample before summarizing"
+        );
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len() as f64;
         let mean = samples.iter().sum::<f64>() / n;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
@@ -81,12 +86,21 @@ impl Stats {
         }
     }
 
-    /// Render like `12.3ms ±0.4`.
+    /// Render like `12.345ms ±0.400`, auto-scaling the unit (µs/ms/s) to
+    /// the median so sub-millisecond micro-benches and multi-second scale
+    /// runs both stay readable. The stddev shares the median's unit.
     pub fn display_ms(&self) -> String {
+        let (scale, unit) = if self.median < 1e-3 {
+            (1e6, "µs")
+        } else if self.median < 1.0 {
+            (1e3, "ms")
+        } else {
+            (1.0, "s")
+        };
         format!(
-            "{:9.3}ms ±{:.3}",
-            self.median * 1e3,
-            self.stddev * 1e3
+            "{:9.3}{unit} ±{:.3}",
+            self.median * scale,
+            self.stddev * scale
         )
     }
 }
@@ -98,8 +112,11 @@ pub fn mrows_per_sec(rows: usize, secs: f64) -> f64 {
 
 /// Process-global counters for the out-of-core spill subsystem. All ranks
 /// share one instance (ranks are threads), so readings are whole-process
-/// totals; tests assert monotonic deltas rather than exact values because
-/// the test harness runs cases in parallel.
+/// totals; tests asserting on *this* sink use monotonic deltas because the
+/// test harness runs cases in parallel. For exact per-query values, run
+/// with `ExecOptions::profile` on: the same recordings are then also
+/// routed into the query's [`crate::trace::QueryProfile`] through the
+/// per-node [`crate::trace::SpillScope`], which nothing else writes to.
 #[derive(Debug, Default)]
 pub struct SpillStats {
     bytes_spilled: AtomicU64,
@@ -238,6 +255,24 @@ mod tests {
         assert_eq!(s.mean, 2.0);
         let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn stats_reject_nan() {
+        Stats::from_samples(vec![1.0, f64::NAN, 2.0]);
+    }
+
+    #[test]
+    fn display_auto_scales_units() {
+        let us = Stats::from_samples(vec![250e-6]);
+        assert!(us.display_ms().contains("µs"), "{}", us.display_ms());
+        let ms = Stats::from_samples(vec![0.012]);
+        assert!(ms.display_ms().contains("ms"), "{}", ms.display_ms());
+        let s = Stats::from_samples(vec![2.5]);
+        let d = s.display_ms();
+        assert!(d.trim_end().ends_with("±0.000") && d.contains('s'), "{d}");
+        assert!(!d.contains("ms"), "seconds must not render as ms: {d}");
     }
 
     #[test]

@@ -29,7 +29,6 @@ use crate::column::{Column, NullableColumn, ValidityMask};
 use crate::comm::Comm;
 use crate::expr::{AggFn, AggState};
 use crate::fxhash::FxHashMap;
-use crate::metrics::spill_stats;
 use crate::types::DType;
 use anyhow::{bail, Result};
 
@@ -308,7 +307,7 @@ fn spill_aggregate(
     let mut acc: Option<(Vec<NullableColumn>, Vec<NullableColumn>)> = None;
     for p in 0..nparts {
         let (cols, masks) = store.read_part(p)?;
-        spill_stats().record_merge_pass();
+        spill.record_merge_pass();
         let (kcols, ecols) = cols.split_at(nk);
         let (kms, ems) = masks.split_at(nk);
         let krefs: Vec<MaskedCol> = kcols.iter().zip(kms).map(|(c, m)| (c, m.as_ref())).collect();

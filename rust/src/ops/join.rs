@@ -30,7 +30,6 @@ use super::keys::{KeyNullability, KeyRow, PackedKeys};
 use super::shuffle::{shuffle_by_packed_nullable, shuffle_rows_by_owner_nullable};
 use super::skew::{detect_heavy_hitters, HeavySet};
 use super::spill::{nullable_bytes, PartitionStore, SpillCtx, MAX_SPILL_DEPTH};
-use crate::metrics::spill_stats;
 use crate::column::{
     decode_nullable_column, encode_nullable_column_take, extend_opt_mask, normalize_mask,
     Column, NullableColumn, ValidityMask,
@@ -591,7 +590,7 @@ fn grace_join_pairs(
         let (mut rp, mut rpm) = rstore.read_part(p)?;
         let lmap = pop_index_column(&mut lp, &mut lpm);
         let rmap = pop_index_column(&mut rp, &mut rpm);
-        spill_stats().record_merge_pass();
+        spill.record_merge_pass();
 
         let recurse = level + 1 < MAX_SPILL_DEPTH
             && rmap.len() < rn

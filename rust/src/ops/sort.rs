@@ -33,7 +33,6 @@ use crate::column::{
     Column, NullableColumn, ValidityMask,
 };
 use crate::comm::Comm;
-use crate::metrics::spill_stats;
 use crate::types::SortOrder;
 use anyhow::{bail, Result};
 use std::cmp::Ordering;
@@ -361,7 +360,7 @@ fn external_merge_sort(
         files.push(file);
         start = end;
     }
-    spill_stats().record_spill_pass(files.len() as u64, spilled_bytes);
+    spill.record_spill_pass(files.len() as u64, spilled_bytes);
 
     let mut cursors = Vec::with_capacity(files.len());
     for file in &mut files {
@@ -375,7 +374,7 @@ fn external_merge_sort(
         cur.refill(cols.len(), nk, orders, with_flags)?;
         cursors.push(cur);
     }
-    spill_stats().record_merge_pass();
+    spill.record_merge_pass();
 
     let mut out: Vec<(Column, ValidityMask)> = cols
         .iter()
@@ -567,6 +566,7 @@ mod tests {
     use super::*;
     use crate::comm::{block_range, run_spmd};
     use crate::datagen::Rng;
+    use crate::metrics::spill_stats;
 
     #[test]
     fn sorts_globally() {

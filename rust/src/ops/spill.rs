@@ -31,12 +31,14 @@ use crate::column::{
     decode_nullable_column, encode_nullable_column_take, extend_opt_mask, Column, ValidityMask,
 };
 use crate::metrics::spill_stats;
+use crate::trace::SpillScope;
 use crate::types::DType;
 use anyhow::{Context, Result};
 use std::cell::{Cell, RefCell};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Once;
 
@@ -333,6 +335,11 @@ pub struct SpillCtx {
     rank: usize,
     dir: RefCell<Option<SpillDir>>,
     seq: Cell<u64>,
+    /// Per-node profiling sink (`None` on the unprofiled path). Spill
+    /// counters always reach the process-global [`spill_stats`] sink; when
+    /// a scope is attached they are *also* attributed to the plan node the
+    /// executor is currently running. See DESIGN.md §4.7.
+    scope: Option<Rc<SpillScope>>,
 }
 
 impl SpillCtx {
@@ -342,6 +349,31 @@ impl SpillCtx {
             rank,
             dir: RefCell::new(None),
             seq: Cell::new(0),
+            scope: None,
+        }
+    }
+
+    /// Attach a per-node profiling scope (builder-style).
+    pub fn with_scope(mut self, scope: Option<Rc<SpillScope>>) -> SpillCtx {
+        self.scope = scope;
+        self
+    }
+
+    /// Record one spill pass that wrote `partitions` non-empty partitions
+    /// totalling `bytes` on disk — into the global sink and, when
+    /// profiling, the attached per-node scope.
+    pub fn record_spill_pass(&self, partitions: u64, bytes: u64) {
+        spill_stats().record_spill_pass(partitions, bytes);
+        if let Some(scope) = &self.scope {
+            scope.record_spill_pass(partitions, bytes);
+        }
+    }
+
+    /// Record one merge/rehydration pass over spilled data.
+    pub fn record_merge_pass(&self) {
+        spill_stats().record_merge_pass();
+        if let Some(scope) = &self.scope {
+            scope.record_merge_pass();
         }
     }
 
@@ -395,7 +427,8 @@ pub struct PartitionStore {
 impl PartitionStore {
     /// Hash-partition `cols` (all of equal length) into `nparts` spill
     /// files under `ctx`, routing row `i` by `part_of(hashes[i], nparts,
-    /// level)`. Updates the global spill counters.
+    /// level)`. Updates the spill counters through `ctx` (global sink +
+    /// per-node profiling scope when attached).
     pub fn partition(
         ctx: &SpillCtx,
         tag: &str,
@@ -428,7 +461,7 @@ impl PartitionStore {
             }
             parts.push(file);
         }
-        spill_stats().record_spill_pass(spilled_parts, spilled_bytes);
+        ctx.record_spill_pass(spilled_parts, spilled_bytes);
         Ok(PartitionStore {
             parts,
             dtypes: cols.iter().map(|&(c, _)| c.dtype()).collect(),
@@ -585,6 +618,21 @@ mod tests {
         }
         assert_eq!(got_rows, 100);
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn scope_receives_spill_counters() {
+        let scope = Rc::new(SpillScope::default());
+        let ctx = SpillCtx::new(MemoryBudget::bytes(1), 0).with_scope(Some(scope.clone()));
+        let vals = Column::I64((0..50).collect());
+        let hashes: Vec<u64> = (0..50u64).map(|i| i.wrapping_mul(0x9e3779b9)).collect();
+        let cols: Vec<MaskedCol> = vec![(&vals, None)];
+        let _store = PartitionStore::partition(&ctx, "t", 4, 0, &hashes, &cols).unwrap();
+        ctx.record_merge_pass();
+        assert_eq!(scope.spill_passes.get(), 1);
+        assert!(scope.bytes_spilled.get() > 0);
+        assert!(scope.partitions_spilled.get() > 0);
+        assert_eq!(scope.merge_passes.get(), 1);
     }
 
     #[test]

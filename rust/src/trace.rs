@@ -1,0 +1,573 @@
+//! Query profiler — per-node, per-rank runtime attribution.
+//!
+//! One profiled `collect()` produces a [`QueryProfile`]: for every node of
+//! the executed [`PlanGraph`](crate::ir::graph::PlanGraph), one
+//! [`NodeSpan`] per rank recording wall time, rows in/out, bytes shuffled,
+//! collective count/time, spill counters and memo-reuse hits. The graph
+//! executor's memo walk records the spans (`exec/mod.rs`); the comm layer
+//! attributes its counters to the active node through the scope mechanism
+//! on [`Comm`](crate::comm::Comm) (`scope_begin`/`scope_end`); spilling
+//! operators route their counters through [`SpillScope`] (attached to the
+//! per-operator `SpillCtx`) in addition to the process-global
+//! [`crate::metrics::spill_stats`] sink.
+//!
+//! Three surfaces (see DESIGN.md §4.7):
+//! * `df.explain_analyze()` — the optimized graph annotated with
+//!   aggregated runtime stats plus a per-rank imbalance factor
+//!   ([`QueryProfile::render`]).
+//! * `df.collect_profiled()` — `(Table, QueryProfile)` programmatically.
+//! * [`QueryProfile::to_chrome_trace`] — a `chrome://tracing` / Perfetto
+//!   compatible JSON timeline: one track per rank, one slice per node
+//!   execution.
+//!
+//! Profiling is **off by default** (`ExecOptions::profile` /
+//! `HIFRAMES_PROFILE=1`) and never changes results: the spans are pure
+//! observations of the unchanged execution, so profiled and unprofiled
+//! collects are byte-identical.
+
+use crate::comm::CommScope;
+use std::cell::Cell;
+use std::time::Instant;
+
+/// Per-rank imbalance (max/mean node wall time) above which
+/// [`QueryProfile::render`] flags a node as skewed.
+pub const SKEW_IMBALANCE: f64 = 1.5;
+
+/// Shared t=0 for one profiled query. Every rank stamps its spans relative
+/// to this clock (the driver starts it just before launching the world), so
+/// the per-rank tracks of the Chrome trace align on a common timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryClock {
+    start: Instant,
+}
+
+impl QueryClock {
+    pub fn start() -> QueryClock {
+        QueryClock {
+            start: Instant::now(),
+        }
+    }
+
+    /// Nanoseconds since the query started.
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// One node execution on one rank.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NodeSpan {
+    /// Execution-order position of the node — the `%i` of the render.
+    pub pos: usize,
+    pub rank: usize,
+    /// Start offset from the [`QueryClock`], nanoseconds.
+    pub start_ns: u64,
+    pub wall_ns: u64,
+    /// Rows consumed from materialized inputs (sources report 0).
+    pub rows_in: u64,
+    pub rows_out: u64,
+    /// Point-to-point messages this rank sent while executing the node.
+    pub messages: u64,
+    /// Bytes this rank put on the wire while executing the node.
+    pub bytes_shuffled: u64,
+    /// Collective calls issued while executing the node.
+    pub collectives: u64,
+    /// Wall time spent inside those collectives (includes wait time —
+    /// the skew signal).
+    pub collective_ns: u64,
+    pub bytes_spilled: u64,
+    pub partitions_spilled: u64,
+    pub spill_passes: u64,
+    pub merge_passes: u64,
+    /// Memo fetches beyond first while executing this node — inputs that
+    /// subplan sharing saved from re-execution.
+    pub reuse_hits: u64,
+}
+
+/// Per-node spill counters for the active profiling scope. `Cell`-based:
+/// each rank thread owns its own instance (shared `Rc` between the
+/// executor and the operator's `SpillCtx`), never crossing threads.
+#[derive(Debug, Default)]
+pub struct SpillScope {
+    pub bytes_spilled: Cell<u64>,
+    pub partitions_spilled: Cell<u64>,
+    pub spill_passes: Cell<u64>,
+    pub merge_passes: Cell<u64>,
+}
+
+impl SpillScope {
+    /// Mirror of [`crate::metrics::SpillStats::record_spill_pass`].
+    pub fn record_spill_pass(&self, partitions: u64, bytes: u64) {
+        self.spill_passes.set(self.spill_passes.get() + 1);
+        self.partitions_spilled
+            .set(self.partitions_spilled.get() + partitions);
+        self.bytes_spilled.set(self.bytes_spilled.get() + bytes);
+    }
+
+    /// Mirror of [`crate::metrics::SpillStats::record_merge_pass`].
+    pub fn record_merge_pass(&self) {
+        self.merge_passes.set(self.merge_passes.get() + 1);
+    }
+}
+
+/// One graph node's profile: its canonical render line plus one span per
+/// rank that materialized it (rank order). Nodes only demanded through the
+/// `Project(Source)` fast path are never materialized and have no spans.
+#[derive(Debug, Clone)]
+pub struct NodeProfile {
+    /// Execution-order position (matches the `%i` prefix of `label`).
+    pub pos: usize,
+    /// The node's `df.explain()` render line.
+    pub label: String,
+    pub spans: Vec<NodeSpan>,
+}
+
+impl NodeProfile {
+    pub fn executed(&self) -> bool {
+        !self.spans.is_empty()
+    }
+
+    pub fn wall_max_ns(&self) -> u64 {
+        self.spans.iter().map(|s| s.wall_ns).max().unwrap_or(0)
+    }
+
+    pub fn wall_mean_ns(&self) -> f64 {
+        if self.spans.is_empty() {
+            return 0.0;
+        }
+        self.spans.iter().map(|s| s.wall_ns).sum::<u64>() as f64 / self.spans.len() as f64
+    }
+
+    /// Per-rank imbalance factor: max/mean wall time across ranks. `1.0`
+    /// for balanced nodes (and degenerate cases: one rank, zero time);
+    /// large values flag skew — one rank did most of the work.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.wall_mean_ns();
+        if self.spans.len() <= 1 || mean <= 0.0 {
+            return 1.0;
+        }
+        self.wall_max_ns() as f64 / mean
+    }
+
+    pub fn rows_in(&self) -> u64 {
+        self.spans.iter().map(|s| s.rows_in).sum()
+    }
+
+    pub fn rows_out(&self) -> u64 {
+        self.spans.iter().map(|s| s.rows_out).sum()
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.spans.iter().map(|s| s.messages).sum()
+    }
+
+    pub fn bytes_shuffled(&self) -> u64 {
+        self.spans.iter().map(|s| s.bytes_shuffled).sum()
+    }
+
+    pub fn collectives(&self) -> u64 {
+        self.spans.iter().map(|s| s.collectives).sum()
+    }
+
+    /// Max over ranks — the critical-path collective time for this node.
+    pub fn collective_ns_max(&self) -> u64 {
+        self.spans.iter().map(|s| s.collective_ns).max().unwrap_or(0)
+    }
+
+    pub fn bytes_spilled(&self) -> u64 {
+        self.spans.iter().map(|s| s.bytes_spilled).sum()
+    }
+
+    pub fn spill_passes(&self) -> u64 {
+        self.spans.iter().map(|s| s.spill_passes).sum()
+    }
+
+    pub fn merge_passes(&self) -> u64 {
+        self.spans.iter().map(|s| s.merge_passes).sum()
+    }
+
+    pub fn reuse_hits(&self) -> u64 {
+        self.spans.iter().map(|s| s.reuse_hits).sum()
+    }
+}
+
+/// The merged runtime profile of one `collect()`: one [`NodeProfile`] per
+/// node of the executed graph (execution order), the unattributed driver
+/// gather, and the whole-world communication totals.
+#[derive(Debug, Clone)]
+pub struct QueryProfile {
+    pub workers: usize,
+    /// `Plan::Cache` nodes served from the `PlanCache` without executing.
+    pub cache_hits: u64,
+    pub nodes: Vec<NodeProfile>,
+    /// Bytes of the final leader gather (result assembly — after the last
+    /// node, so not attributable to any of them). Summed over ranks.
+    pub gather_bytes: u64,
+    /// Max over ranks of the wall time spent in that final gather.
+    pub gather_ns: u64,
+    /// Whole-world [`crate::comm::CommStats`] totals for the run:
+    /// `(messages, bytes, barriers, collectives)`. Invariant:
+    /// `sum(node bytes) + gather_bytes == comm_totals.1`.
+    pub comm_totals: (u64, u64, u64, u64),
+}
+
+impl QueryProfile {
+    /// An empty profile over the graph's render lines (one per node in
+    /// execution order); the driver fills spans in with [`Self::add_span`].
+    pub fn new(workers: usize, labels: Vec<String>, cache_hits: u64) -> QueryProfile {
+        QueryProfile {
+            workers,
+            cache_hits,
+            nodes: labels
+                .into_iter()
+                .enumerate()
+                .map(|(pos, label)| NodeProfile {
+                    pos,
+                    label,
+                    spans: Vec::new(),
+                })
+                .collect(),
+            gather_bytes: 0,
+            gather_ns: 0,
+            comm_totals: (0, 0, 0, 0),
+        }
+    }
+
+    /// File one rank's span under its node. Ranks are merged in rank order,
+    /// so each node's `spans` stay rank-sorted.
+    pub fn add_span(&mut self, span: NodeSpan) {
+        self.nodes
+            .get_mut(span.pos)
+            .expect("span position inside the executed graph")
+            .spans
+            .push(span);
+    }
+
+    /// Fold one rank's final-gather deltas in.
+    pub fn add_gather(&mut self, scope: CommScope) {
+        self.gather_bytes += scope.bytes;
+        self.gather_ns = self.gather_ns.max(scope.collective_ns);
+    }
+
+    pub fn executed_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.executed()).count()
+    }
+
+    /// End of the last span on any rank, relative to the query clock —
+    /// the executed portion's elapsed wall time.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.nodes
+            .iter()
+            .flat_map(|n| &n.spans)
+            .map(|s| s.start_ns + s.wall_ns)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn total_bytes_shuffled(&self) -> u64 {
+        self.nodes.iter().map(|n| n.bytes_shuffled()).sum()
+    }
+
+    pub fn total_bytes_spilled(&self) -> u64 {
+        self.nodes.iter().map(|n| n.bytes_spilled()).sum()
+    }
+
+    pub fn total_collectives(&self) -> u64 {
+        self.nodes.iter().map(|n| n.collectives()).sum()
+    }
+
+    pub fn total_reuse_hits(&self) -> u64 {
+        self.nodes.iter().map(|n| n.reuse_hits()).sum()
+    }
+
+    /// Worst per-node imbalance factor across executed nodes.
+    pub fn max_imbalance(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.executed())
+            .map(|n| n.imbalance())
+            .fold(1.0, f64::max)
+    }
+
+    /// The `explain_analyze` text: every graph render line annotated with
+    /// aggregated runtime stats (` | `-separated fields), plus a `-- `
+    /// summary footer. Structure is deterministic for a plan + options;
+    /// only the time and imbalance values vary run to run (golden tests
+    /// mask the tokens after `wall`, `imb` and `elapsed`).
+    pub fn render(&self) -> String {
+        let width = self.nodes.iter().map(|n| n.label.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for n in &self.nodes {
+            if !n.executed() {
+                out.push_str(&format!(
+                    "{:<width$} | (not materialized)\n",
+                    n.label,
+                    width = width
+                ));
+                continue;
+            }
+            let imb = n.imbalance();
+            let skew = if imb > SKEW_IMBALANCE && self.workers > 1 {
+                " SKEW"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<width$} | wall {} | rows {}->{} | shuffle {} | spill {} | imb {:.2}x{}\n",
+                n.label,
+                fmt_ns(n.wall_max_ns()),
+                n.rows_in(),
+                n.rows_out(),
+                fmt_bytes(n.bytes_shuffled()),
+                fmt_bytes(n.bytes_spilled()),
+                imb,
+                skew,
+                width = width
+            ));
+        }
+        out.push_str(&format!(
+            "-- {} ranks | {}/{} nodes executed | elapsed {} | shuffle {} | spill {} | \
+             collectives {} | reuse {} | cache hits {}\n",
+            self.workers,
+            self.executed_nodes(),
+            self.nodes.len(),
+            fmt_ns(self.elapsed_ns()),
+            fmt_bytes(self.total_bytes_shuffled()),
+            fmt_bytes(self.total_bytes_spilled()),
+            self.total_collectives(),
+            self.total_reuse_hits(),
+            self.cache_hits,
+        ));
+        out
+    }
+
+    /// Serialize as Chrome trace-event JSON (`chrome://tracing`, Perfetto):
+    /// one process, one track (`tid`) per rank, one `"X"` (complete) slice
+    /// per node execution with the counters in `args`. Times are in
+    /// microseconds relative to the query clock. Hand-rolled JSON — the
+    /// offline image has no serde.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut ev: Vec<String> = Vec::new();
+        ev.push(
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{\"name\":\"hiframes query\"}}"
+                .to_string(),
+        );
+        for r in 0..self.workers {
+            ev.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{r},\
+                 \"args\":{{\"name\":\"rank {r}\"}}}}"
+            ));
+        }
+        for n in &self.nodes {
+            for s in &n.spans {
+                ev.push(format!(
+                    "{{\"name\":{},\"cat\":\"node\",\"ph\":\"X\",\"ts\":{:.3},\
+                     \"dur\":{:.3},\"pid\":0,\"tid\":{},\"args\":{{\
+                     \"pos\":{},\"rows_in\":{},\"rows_out\":{},\
+                     \"bytes_shuffled\":{},\"bytes_spilled\":{},\
+                     \"collectives\":{},\"collective_us\":{:.3},\
+                     \"reuse_hits\":{}}}}}",
+                    json_str(&n.label),
+                    s.start_ns as f64 / 1e3,
+                    s.wall_ns as f64 / 1e3,
+                    s.rank,
+                    n.pos,
+                    s.rows_in,
+                    s.rows_out,
+                    s.bytes_shuffled,
+                    s.bytes_spilled,
+                    s.collectives,
+                    s.collective_ns as f64 / 1e3,
+                    s.reuse_hits,
+                ));
+            }
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}\n",
+            ev.join(",\n")
+        )
+    }
+
+    /// Write the Chrome trace as `TRACE_<name>.json` under
+    /// `HIFRAMES_BENCH_OUT` (cwd when unset) — the bench/CI convention,
+    /// mirroring `BENCH_<figure>.json`.
+    pub fn write_chrome_trace(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("HIFRAMES_BENCH_OUT").unwrap_or_else(|_| ".".into());
+        let dir = std::path::Path::new(&dir);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("TRACE_{name}.json"));
+        std::fs::write(&path, self.to_chrome_trace())?;
+        Ok(path)
+    }
+}
+
+/// Auto-scaled duration: `…ns`, `…µs`, `…ms` or `…s`.
+pub fn fmt_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if v < 1e3 {
+        format!("{ns}ns")
+    } else if v < 1e6 {
+        format!("{:.2}µs", v / 1e3)
+    } else if v < 1e9 {
+        format!("{:.2}ms", v / 1e6)
+    } else {
+        format!("{:.2}s", v / 1e9)
+    }
+}
+
+/// Auto-scaled byte count: `…B`, `…KiB`, `…MiB` or `…GiB`.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let v = b as f64;
+    if v < K {
+        format!("{b}B")
+    } else if v < K * K {
+        format!("{:.1}KiB", v / K)
+    } else if v < K * K * K {
+        format!("{:.1}MiB", v / (K * K))
+    } else {
+        format!("{:.1}GiB", v / (K * K * K))
+    }
+}
+
+/// Minimal JSON string quoting (same contract as the bench writer: labels
+/// are engine-generated, so only quotes/backslashes/control chars occur).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(pos: usize, rank: usize, wall_ns: u64) -> NodeSpan {
+        NodeSpan {
+            pos,
+            rank,
+            wall_ns,
+            ..NodeSpan::default()
+        }
+    }
+
+    #[test]
+    fn imbalance_math() {
+        let mut n = NodeProfile {
+            pos: 0,
+            label: "%0 = Source(t) [1D_BLOCK]".into(),
+            spans: vec![span(0, 0, 100), span(0, 1, 300)],
+        };
+        // max 300 / mean 200
+        assert!((n.imbalance() - 1.5).abs() < 1e-9);
+        n.spans.pop();
+        assert_eq!(n.imbalance(), 1.0, "single rank is balanced by definition");
+        n.spans.clear();
+        assert_eq!(n.imbalance(), 1.0);
+        assert!(!n.executed());
+    }
+
+    #[test]
+    fn aggregation_sums_and_maxes() {
+        let mut p = QueryProfile::new(2, vec!["%0 = A".into(), "%1 = B".into()], 0);
+        p.add_span(NodeSpan {
+            pos: 0,
+            rank: 0,
+            start_ns: 0,
+            wall_ns: 50,
+            rows_in: 1,
+            rows_out: 2,
+            bytes_shuffled: 10,
+            ..NodeSpan::default()
+        });
+        p.add_span(NodeSpan {
+            pos: 0,
+            rank: 1,
+            start_ns: 20,
+            wall_ns: 80,
+            rows_in: 3,
+            rows_out: 4,
+            bytes_shuffled: 30,
+            ..NodeSpan::default()
+        });
+        assert_eq!(p.executed_nodes(), 1);
+        assert_eq!(p.nodes[0].rows_in(), 4);
+        assert_eq!(p.nodes[0].rows_out(), 6);
+        assert_eq!(p.nodes[0].bytes_shuffled(), 40);
+        assert_eq!(p.nodes[0].wall_max_ns(), 80);
+        assert_eq!(p.elapsed_ns(), 100);
+        assert!(!p.nodes[1].executed());
+    }
+
+    #[test]
+    fn render_structure() {
+        let mut p = QueryProfile::new(2, vec!["%0 = A [REP]".into(), "%1 = B [REP]".into()], 1);
+        p.add_span(span(0, 0, 1_000));
+        p.add_span(span(0, 1, 500_000));
+        let text = p.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("%0 = A [REP]"));
+        assert!(lines[0].contains(" | wall "));
+        assert!(lines[0].contains(" | imb "));
+        assert!(lines[0].ends_with("SKEW"), "{}", lines[0]);
+        assert!(lines[1].contains("(not materialized)"));
+        assert!(lines[2].starts_with("-- 2 ranks | 1/2 nodes executed"));
+        assert!(lines[2].contains("cache hits 1"));
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut p = QueryProfile::new(2, vec!["%0 = \"A\"\\B".into()], 0);
+        p.add_span(span(0, 0, 1_500));
+        p.add_span(span(0, 1, 2_500));
+        let t = p.to_chrome_trace();
+        assert!(t.starts_with('{') && t.trim_end().ends_with('}'));
+        assert!(t.contains("\"traceEvents\""));
+        // one thread_name metadata event per rank
+        assert_eq!(t.matches("\"thread_name\"").count(), 2);
+        // one X slice per span
+        assert_eq!(t.matches("\"ph\":\"X\"").count(), 2);
+        // quotes and backslashes in labels are escaped
+        assert!(t.contains("\\\"A\\\"\\\\B"));
+        // balanced braces/brackets (cheap well-formedness check)
+        let opens = t.matches('{').count() + t.matches('[').count();
+        let closes = t.matches('}').count() + t.matches(']').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn spill_scope_accumulates() {
+        let s = SpillScope::default();
+        s.record_spill_pass(4, 1000);
+        s.record_spill_pass(2, 500);
+        s.record_merge_pass();
+        assert_eq!(s.bytes_spilled.get(), 1500);
+        assert_eq!(s.partitions_spilled.get(), 6);
+        assert_eq!(s.spill_passes.get(), 2);
+        assert_eq!(s.merge_passes.get(), 1);
+    }
+
+    #[test]
+    fn units_auto_scale() {
+        assert_eq!(fmt_ns(999), "999ns");
+        assert_eq!(fmt_ns(1_500), "1.50µs");
+        assert_eq!(fmt_ns(2_000_000), "2.00ms");
+        assert_eq!(fmt_ns(3_500_000_000), "3.50s");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.0MiB");
+        assert_eq!(fmt_bytes(5 << 30), "5.0GiB");
+    }
+}

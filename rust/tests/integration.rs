@@ -47,12 +47,14 @@ fn optimized_and_unoptimized_agree() {
         passes: PassOptions::default(),
         agg_strategy: AggStrategy::RawShuffle,
         mem_budget: None,
+        profile: false,
     };
     let opts_off = ExecOptions {
         workers: 3,
         passes: PassOptions::none(),
         agg_strategy: AggStrategy::RawShuffle,
         mem_budget: None,
+        profile: false,
     };
     let a = collect_optimized(&optimize(plan.clone(), &opts_on.passes).unwrap(), &opts_on).unwrap();
     let b =
@@ -95,6 +97,7 @@ fn rebalance_modes_same_result() {
             },
             agg_strategy: AggStrategy::RawShuffle,
             mem_budget: None,
+            profile: false,
         };
         let optimized = optimize(df.plan().clone(), &opts.passes).unwrap();
         let out = collect_optimized(&optimized, &opts).unwrap();

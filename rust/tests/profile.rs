@@ -1,0 +1,308 @@
+//! Query-profiler integration tests: profiling must be a pure observation.
+//! Profiled and unprofiled collects are byte-identical on join, aggregate,
+//! window and spilling pipelines; per-node row counts sum to the plan's
+//! actual cardinalities; shuffle bytes attributed to nodes (plus the final
+//! gather) account for *every* byte the communicator saw; and the Q26
+//! `explain_analyze` / Chrome-trace surfaces keep their documented shape.
+//! Budgets and profiling are passed explicitly through `ExecOptions` —
+//! never the env knobs — so parallel test cases cannot race.
+
+use hiframes::bigbench::{generate, q26, GenOptions};
+use hiframes::datagen::Rng;
+use hiframes::exec::ExecOptions;
+use hiframes::prelude::*;
+
+fn hf(workers: usize, mem_budget: Option<usize>) -> HiFrames {
+    HiFrames::new(ExecOptions {
+        workers,
+        mem_budget,
+        profile: false,
+        ..Default::default()
+    })
+}
+
+/// A fact/dim pair (same shape as `tests/spill.rs`): duplicate-heavy group
+/// keys, a float measure, a ~2/3-matching dimension with a nullable payload.
+fn fact_dim(rows: usize) -> (Table, Table) {
+    let mut rng = Rng::new(7);
+    let grp: Vec<i64> = (0..rows).map(|_| rng.i64_range(0, 40)).collect();
+    let left = Table::from_pairs(vec![
+        ("id", Column::I64((0..rows as i64).collect())),
+        ("grp", Column::I64(grp)),
+        (
+            "val",
+            Column::F64((0..rows).map(|i| (i as f64 * 1.7) % 31.0).collect()),
+        ),
+    ])
+    .unwrap();
+    let rid: Vec<i64> = (0..rows as i64).filter(|i| i % 3 != 0).collect();
+    let tag: Vec<i64> = rid.iter().map(|i| i * 5).collect();
+    let tag_valid: Vec<bool> = rid.iter().map(|i| i % 7 != 0).collect();
+    let right = Table::from_pairs(vec![
+        ("rid", Column::I64(rid)),
+        ("tag", Column::I64(tag)),
+    ])
+    .unwrap()
+    .with_null_mask("tag", ValidityMask::from_bools(&tag_valid))
+    .unwrap();
+    (left, right)
+}
+
+#[test]
+fn profiled_collect_is_byte_identical() {
+    let (left, right) = fact_dim(600);
+    for workers in [2usize, 3] {
+        let hf = hf(workers, None);
+        let l = hf.table("l", left.clone());
+        let r = hf.table("r", right.clone());
+        let queries = [
+            l.join(&r, "id", "rid").sort_by("id"),
+            l.join(&r, "id", "rid")
+                .aggregate("grp", vec![AggExpr::new("sv", AggFn::Sum, col("val"))])
+                .sort_by("grp"),
+            l.window()
+                .partition_by(&["grp"])
+                .order_by(&[("id", SortOrder::Asc)])
+                .rolling(3)
+                .agg("s3", WindowFunc::Sum, col("val"))
+                .build(),
+        ];
+        for (qi, q) in queries.iter().enumerate() {
+            let plain = q.collect().unwrap();
+            let (profiled, prof) = q.collect_profiled().unwrap();
+            assert_eq!(
+                profiled, plain,
+                "workers={workers} query={qi}: profiling changed the result"
+            );
+            assert!(prof.executed_nodes() > 0, "workers={workers} query={qi}");
+            // SPMD: every materialized node ran on every rank, rank order
+            for n in prof.nodes.iter().filter(|n| n.executed()) {
+                let ranks: Vec<usize> = n.spans.iter().map(|s| s.rank).collect();
+                assert_eq!(
+                    ranks,
+                    (0..workers).collect::<Vec<_>>(),
+                    "workers={workers} query={qi} node {}",
+                    n.label
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn node_row_counts_sum_to_cardinalities() {
+    let (left, right) = fact_dim(400);
+    let hf = hf(2, None);
+    let l = hf.table("l", left);
+    let r = hf.table("r", right);
+    let expected_join_rows = l.join(&r, "id", "rid").collect().unwrap().num_rows() as u64;
+    let q = l
+        .join(&r, "id", "rid")
+        .aggregate("grp", vec![AggExpr::new("sv", AggFn::Sum, col("val"))]);
+    let (t, prof) = q.collect_profiled().unwrap();
+
+    let node = |needle: &str| {
+        prof.nodes
+            .iter()
+            .find(|n| n.label.contains(needle))
+            .unwrap_or_else(|| panic!("no {needle} node in:\n{}", prof.render()))
+    };
+    let join = node("Join(");
+    assert!(join.executed());
+    assert_eq!(
+        join.rows_out(),
+        expected_join_rows,
+        "join output rows must sum to the join cardinality:\n{}",
+        prof.render()
+    );
+    let agg = node("Aggregate(");
+    assert_eq!(
+        agg.rows_out(),
+        t.num_rows() as u64,
+        "aggregate output rows must sum to the result cardinality:\n{}",
+        prof.render()
+    );
+    // the aggregate consumes exactly the materialized join output
+    assert_eq!(agg.rows_in(), join.rows_out(), "\n{}", prof.render());
+}
+
+#[test]
+fn shuffle_bytes_attribute_to_nodes() {
+    let (left, right) = fact_dim(500);
+    let hf = hf(2, None);
+    let q = hf
+        .table("l", left)
+        .join(&hf.table("r", right), "id", "rid")
+        .aggregate("grp", vec![AggExpr::new("sv", AggFn::Sum, col("val"))]);
+    let (_, prof) = q.collect_profiled().unwrap();
+    // every byte the world's communicator counted is attributed: either to
+    // the node that sent it or to the final leader gather
+    assert_eq!(
+        prof.total_bytes_shuffled() + prof.gather_bytes,
+        prof.comm_totals.1,
+        "unattributed comm bytes:\n{}",
+        prof.render()
+    );
+    let join = prof
+        .nodes
+        .iter()
+        .find(|n| n.label.contains("Join("))
+        .unwrap();
+    assert!(
+        join.bytes_shuffled() > 0,
+        "hash join at 2 workers must shuffle:\n{}",
+        prof.render()
+    );
+    assert!(prof.gather_bytes > 0, "result gather moves bytes");
+    assert!(prof.comm_totals.1 >= prof.total_bytes_shuffled());
+}
+
+#[test]
+fn spill_attributes_exactly_to_budgeted_operators() {
+    let (left, right) = fact_dim(3000);
+    let input_bytes = left.byte_size() + right.byte_size();
+    let budget = input_bytes / 20; // 5%: forces join + sort out of core
+    let hf_tight = hf(2, Some(budget));
+    let q = hf_tight
+        .table("l", left.clone())
+        .join(&hf_tight.table("r", right.clone()), "id", "rid")
+        .sort_by_keys(&[("grp", SortOrder::Asc), ("id", SortOrder::Asc)]);
+    let plain = q.collect().unwrap();
+    let (t1, p1) = q.collect_profiled().unwrap();
+    let (t2, p2) = q.collect_profiled().unwrap();
+    assert_eq!(t1, plain, "profiling changed the spilling result");
+    assert_eq!(t2, plain);
+    assert!(p1.total_bytes_spilled() > 0, "budget {budget} did not spill");
+    // spill only ever lands on the out-of-core-capable operators
+    for n in p1.nodes.iter().filter(|n| n.bytes_spilled() > 0) {
+        assert!(
+            ["Join(", "Aggregate(", "Sort("]
+                .iter()
+                .any(|op| n.label.contains(op)),
+            "spill attributed to a non-spilling node: {}",
+            n.label
+        );
+    }
+    // the per-query scope is isolated from every other test in this
+    // process, so counters are *exact* — identical runs report identical
+    // per-node spill profiles (unlike the global `spill_stats()` sink)
+    for (a, b) in p1.nodes.iter().zip(p2.nodes.iter()) {
+        assert_eq!(a.bytes_spilled(), b.bytes_spilled(), "node {}", a.label);
+        assert_eq!(a.spill_passes(), b.spill_passes(), "node {}", a.label);
+        assert_eq!(a.merge_passes(), b.merge_passes(), "node {}", a.label);
+    }
+    // and an unbudgeted run of the same plan reports exactly zero
+    let hf_loose = hf(2, None);
+    let q = hf_loose
+        .table("l", left)
+        .join(&hf_loose.table("r", right), "id", "rid")
+        .sort_by_keys(&[("grp", SortOrder::Asc), ("id", SortOrder::Asc)]);
+    let (t3, p3) = q.collect_profiled().unwrap();
+    assert_eq!(t3, plain, "budgeted and unbudgeted results diverged");
+    assert_eq!(p3.total_bytes_spilled(), 0);
+    assert!(p3.nodes.iter().all(|n| n.spill_passes() == 0));
+}
+
+/// Mask the run-varying tokens (times, imbalance) of an `explain_analyze`
+/// render, keeping the structural fields (labels, rows, bytes, counts).
+fn mask(text: &str) -> String {
+    text.lines()
+        .map(|line| {
+            line.split(" | ")
+                .map(|f| {
+                    if f.starts_with("wall ") {
+                        "wall <T>".to_string()
+                    } else if f.starts_with("imb ") {
+                        "imb <X>".to_string()
+                    } else if f.starts_with("elapsed ") {
+                        "elapsed <T>".to_string()
+                    } else {
+                        f.to_string()
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" | ")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn q26_explain_analyze_golden() {
+    let db = generate(&GenOptions {
+        scale_factor: 0.05,
+        ..Default::default()
+    });
+    let p = q26::Q26Params::default();
+    let ctx = hf(2, None);
+    let q = q26::hiframes_relational(&ctx, &db, &p);
+
+    let text = q.explain_analyze().unwrap();
+    // golden: with times and imbalance masked, the render is byte-stable
+    assert_eq!(
+        mask(&text),
+        mask(&q.explain_analyze().unwrap()),
+        "explain_analyze structure must be deterministic"
+    );
+
+    let lines: Vec<&str> = text.lines().collect();
+    let (footer, nodes) = lines.split_last().unwrap();
+    assert!(
+        footer.starts_with("-- 2 ranks | "),
+        "bad footer: {footer}"
+    );
+    for field in ["nodes executed", "elapsed ", "shuffle ", "spill ", "cache hits "] {
+        assert!(footer.contains(field), "footer misses {field:?}: {footer}");
+    }
+
+    // each node line is the plain `explain()` line plus ` | `-separated
+    // runtime annotations
+    let explain = q.explain();
+    assert_eq!(nodes.len(), explain.lines().count());
+    let mut executed = 0;
+    for (nl, el) in nodes.iter().zip(explain.lines()) {
+        let label = nl.split(" | ").next().unwrap().trim_end();
+        assert_eq!(label, el, "annotated line must wrap the explain line");
+        if nl.contains("(not materialized)") {
+            continue;
+        }
+        executed += 1;
+        for field in ["| wall ", "| rows ", "| shuffle ", "| spill ", "| imb "] {
+            assert!(nl.contains(field), "node line misses {field:?}: {nl}");
+        }
+    }
+    assert!(executed >= 3, "Q26 runs sources, join and aggregate:\n{text}");
+}
+
+#[test]
+fn q26_chrome_trace_is_well_formed() {
+    let db = generate(&GenOptions {
+        scale_factor: 0.05,
+        ..Default::default()
+    });
+    let p = q26::Q26Params::default();
+    let ctx = hf(2, None);
+    let (_, prof) = q26::hiframes_relational(&ctx, &db, &p)
+        .collect_profiled()
+        .unwrap();
+    let trace = prof.to_chrome_trace();
+    let spans: usize = prof.nodes.iter().map(|n| n.spans.len()).sum();
+    assert!(spans >= 2, "expected spans on both ranks:\n{}", prof.render());
+
+    assert!(trace.contains("\"traceEvents\""));
+    assert!(trace.contains("\"displayTimeUnit\":\"ms\""));
+    // one named track per rank, one complete slice per recorded span
+    assert_eq!(trace.matches("\"thread_name\"").count(), 2);
+    assert_eq!(trace.matches("\"ph\":\"X\"").count(), spans);
+    for n in prof.nodes.iter().filter(|n| n.executed()) {
+        assert_eq!(n.spans.len(), 2, "one slice per rank for {}", n.label);
+    }
+    // cheap well-formedness: the structural chars all pair up (labels are
+    // escaped by the writer; CI's smoke step runs a real JSON parse)
+    assert_eq!(
+        trace.matches('{').count(),
+        trace.matches('}').count(),
+        "unbalanced braces"
+    );
+    assert_eq!(trace.matches('[').count(), trace.matches(']').count());
+}

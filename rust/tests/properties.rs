@@ -366,12 +366,14 @@ fn prop_optimizer_preserves_semantics() {
                 passes: PassOptions::default(),
                 agg_strategy: hiframes::ops::aggregate::AggStrategy::PreAggregate,
                 mem_budget: None,
+                profile: false,
             };
             let off = ExecOptions {
                 workers: 2,
                 passes: PassOptions::none(),
                 agg_strategy: hiframes::ops::aggregate::AggStrategy::RawShuffle,
                 mem_budget: None,
+                profile: false,
             };
             let a = collect_optimized(&optimize(plan.clone(), &on.passes).unwrap(), &on)
                 .map_err(|e| e.to_string())?;
