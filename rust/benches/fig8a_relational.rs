@@ -9,11 +9,15 @@
 
 use hiframes::baseline::{serial, sparklike::SparkLike};
 use hiframes::bench::*;
-use hiframes::column::Column;
+use hiframes::column::{
+    decode_column, encode_column_with, set_dict_encoding, Column, DictEncoding,
+};
 use hiframes::datagen::{micro_table, skewed_table};
 use hiframes::exec::ExecOptions;
 use hiframes::fxhash::FxHashMap;
-use hiframes::ops::keys::{group_packed, key_rows, owner_of_key, KeyRow, PackedKeys};
+use hiframes::ops::keys::{
+    cmp_key_rows, group_packed, key_rows, owner_of_key, KeyRow, PackedKeys, SortKeys,
+};
 use hiframes::passes::PassOptions;
 use hiframes::prelude::*;
 
@@ -318,5 +322,120 @@ fn main() {
         dd.add_counter("nodes_executed", stats.nodes_executed);
         dd.add_counter("subplans_reused", stats.reuse_hits);
         dd.finish("fig8a_dedup");
+
+        // ------------- radix argsort micro-bench (vectorized kernel floor) --
+        // The LSD radix argsort measured against the stable comparison
+        // argsort it replaced, over the packed order-preserving SortKeys
+        // rows of the local sample-sort phase. "comparison" is the old path
+        // — still callable, the in-bench fallback — and "radix" the new
+        // kernel (forced, bypassing the width/row-count dispatch so the two
+        // cells measure exactly one kernel each).
+        let n = agg_rows.min(1_000_000);
+        let ids: Vec<i64> = (0..n as i64).map(|i| i.wrapping_mul(0x9E37) % 100_000).collect();
+        let k1 = Column::I64(ids.clone());
+        let k2 = Column::Bool(ids.iter().map(|&i| i % 3 == 0).collect());
+        let orders = [SortOrder::Asc, SortOrder::Desc];
+        let sk1 = SortKeys::pack(&[&k1], &orders[..1]).unwrap().unwrap();
+        let sk2 = SortKeys::pack(&[&k1, &k2], &orders).unwrap().unwrap();
+        let mut rx = BenchTable::new(
+            &format!("Fig 8a addendum: radix vs comparison argsort ({n} rows)"),
+            "comparison",
+        );
+        rx.run("comparison", "argsort-i64", n, 1, reps, || {
+            sk1.comparison_argsort().len()
+        });
+        rx.run("radix", "argsort-i64", n, 1, reps, || sk1.radix_argsort().len());
+        rx.run("comparison", "argsort-multi", n, 1, reps, || {
+            sk2.comparison_argsort().len()
+        });
+        rx.run("radix", "argsort-multi", n, 1, reps, || sk2.radix_argsort().len());
+        // dictionary-coded string sort keys vs the KeyRow comparison sort
+        // they replaced in the window/local-sort paths
+        let sn = (n / 4).max(10_000);
+        let strs = Column::Str((0..sn).map(|i| format!("key-{}", i % 997)).collect());
+        let krows = key_rows(&[&strs]).unwrap();
+        let sorders = [SortOrder::Asc];
+        rx.run("comparison", "argsort-str", sn, 1, reps, || {
+            let mut idx: Vec<usize> = (0..krows.len()).collect();
+            idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], &sorders));
+            idx.len()
+        });
+        rx.run("radix", "argsort-str", sn, 1, reps, || {
+            SortKeys::from_key_rows(&krows, &sorders).argsort().len()
+        });
+        rx.finish("fig8a_radix");
+
+        // ------------- dictionary wire micro-bench (string shuffle frames) --
+        // Plain escaped string frames vs dictionary frames on a
+        // duplicate-heavy column — the wire every string shuffle and spill
+        // ships. The explicit-mode encoder is the in-bench fallback toggle:
+        // "plain" forces Off, "dict" forces the dictionary frame (Auto picks
+        // by size at runtime and would choose "dict" here).
+        let dn = agg_rows.min(1_000_000);
+        let sv = Column::Str((0..dn).map(|i| format!("city-{:04}", i % 500)).collect());
+        let mut plain_frame = Vec::new();
+        encode_column_with(&sv, DictEncoding::Off, &mut plain_frame);
+        let mut dict_frame = Vec::new();
+        encode_column_with(&sv, DictEncoding::Force, &mut dict_frame);
+        let mut dc = BenchTable::new(
+            &format!("Fig 8a addendum: string wire encoding ({dn} rows, 500 distinct)"),
+            "plain",
+        );
+        dc.run("plain", "encode", dn, 1, reps, || {
+            let mut buf = Vec::new();
+            encode_column_with(&sv, DictEncoding::Off, &mut buf);
+            buf.len()
+        });
+        dc.run("dict", "encode", dn, 1, reps, || {
+            let mut buf = Vec::new();
+            encode_column_with(&sv, DictEncoding::Force, &mut buf);
+            buf.len()
+        });
+        dc.run("plain", "decode", dn, 1, reps, || {
+            let mut pos = 0;
+            decode_column(&plain_frame, &mut pos).unwrap().len()
+        });
+        dc.run("dict", "decode", dn, 1, reps, || {
+            let mut pos = 0;
+            decode_column(&dict_frame, &mut pos).unwrap().len()
+        });
+        // end-to-end: a string-keyed distributed join with the dictionary
+        // wire off vs on (the toggle is process-global; the bench harness
+        // is single-threaded so this cannot race)
+        let jrows = (join_rows / 2).max(5_000);
+        let jl = Table::from_pairs(vec![
+            (
+                "k",
+                Column::Str((0..jrows).map(|i| format!("key-{}", i % 2_000)).collect()),
+            ),
+            ("v", Column::I64((0..jrows as i64).collect())),
+        ])
+        .unwrap();
+        let jr = Table::from_pairs(vec![
+            (
+                "rk",
+                Column::Str((0..2_000).map(|i| format!("key-{i}")).collect()),
+            ),
+            ("w", Column::I64((0..2_000i64).collect())),
+        ])
+        .unwrap();
+        let djl = hf.table("l", jl);
+        let djr = hf.table("r", jr);
+        dc.run("plain", "str-join", jrows, 1, reps, || {
+            set_dict_encoding(DictEncoding::Off);
+            djl.join_on(&djr, &[("k", "rk")], JoinType::Inner)
+                .count()
+                .unwrap()
+        });
+        dc.run("dict", "str-join", jrows, 1, reps, || {
+            set_dict_encoding(DictEncoding::Force);
+            djl.join_on(&djr, &[("k", "rk")], JoinType::Inner)
+                .count()
+                .unwrap()
+        });
+        set_dict_encoding(DictEncoding::Auto);
+        dc.add_counter("plain_frame_bytes", plain_frame.len() as u64);
+        dc.add_counter("dict_frame_bytes", dict_frame.len() as u64);
+        dc.finish("fig8a_dict");
     });
 }

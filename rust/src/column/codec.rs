@@ -2,13 +2,27 @@
 //! by the HFS file format. Layout per column:
 //!
 //! ```text
-//!   u8  dtype tag          (0=I64, 1=F64, 2=Bool, 3=Str)
+//!   u8  dtype tag          (0=I64, 1=F64, 2=Bool, 3=Str, 4=Str dictionary)
 //!   u64 row count
 //!   payload:
 //!     I64/F64: little-endian 8-byte values
 //!     Bool:    one byte per value
 //!     Str:     u32 length + UTF-8 bytes, per value
+//!     StrDict: u32 dictionary entry count, then per entry u32 length +
+//!              UTF-8 bytes (first-seen order), then u8 code width
+//!              (1 / 2 / 4 bytes) and one little-endian code per row
 //! ```
+//!
+//! String columns choose between the plain and dictionary frames with a
+//! *deterministic size heuristic*: the dictionary frame is used exactly when
+//! it is smaller than the plain frame for the rows being encoded. The choice
+//! is a pure function of the encoded row sequence, so the fused take path
+//! ([`encode_column_take`]) stays byte-identical to take-then-encode, and
+//! every decoder works off the tag alone. Duplicate-heavy shuffle/spill
+//! traffic (string join keys, group keys) ships each distinct string once
+//! plus one small code per row instead of escaping the bytes per row.
+//! `HIFRAMES_DICT=0` (or [`set_dict_encoding`]) disables the dictionary
+//! frame for A/B runs; decode always understands both.
 //!
 //! The paper packs rows into per-destination MPI buffers (Fig. 5, "pack data
 //! in buffers for different processors"); this codec is our wire format and
@@ -16,28 +30,181 @@
 //! was a §Perf item.
 
 use super::{Column, ValidityMask};
+use crate::fxhash::FxHashMap;
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU8, Ordering as AtomicOrdering};
+use std::sync::OnceLock;
 
 const TAG_I64: u8 = 0;
 const TAG_F64: u8 = 1;
 const TAG_BOOL: u8 = 2;
 const TAG_STR: u8 = 3;
+const TAG_STR_DICT: u8 = 4;
+
+/// Wire-level dictionary policy for `Str` columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DictEncoding {
+    /// Size heuristic: dictionary frame iff it is strictly smaller.
+    Auto,
+    /// Always the plain frame (the pre-dictionary wire format).
+    Off,
+    /// Always the dictionary frame (fuzzing / width-promotion tests).
+    Force,
+}
+
+/// Process-wide override; `u8::MAX` = unset, fall back to the env default.
+static DICT_OVERRIDE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_dict_default() -> DictEncoding {
+    static CELL: OnceLock<DictEncoding> = OnceLock::new();
+    *CELL.get_or_init(|| match std::env::var("HIFRAMES_DICT").as_deref() {
+        Ok("0") | Ok("false") | Ok("no") | Ok("off") => DictEncoding::Off,
+        Ok("force") => DictEncoding::Force,
+        _ => DictEncoding::Auto,
+    })
+}
+
+/// Current dictionary policy (`HIFRAMES_DICT` unless overridden).
+pub fn dict_encoding() -> DictEncoding {
+    match DICT_OVERRIDE.load(AtomicOrdering::Relaxed) {
+        0 => DictEncoding::Auto,
+        1 => DictEncoding::Off,
+        2 => DictEncoding::Force,
+        _ => env_dict_default(),
+    }
+}
+
+/// Override the dictionary policy process-wide (A/B sweeps in tests and
+/// benches). Either choice decodes identically — the tag is in the stream —
+/// so flipping this mid-run can never corrupt data, only change frame sizes.
+pub fn set_dict_encoding(mode: DictEncoding) {
+    let v = match mode {
+        DictEncoding::Auto => 0,
+        DictEncoding::Off => 1,
+        DictEncoding::Force => 2,
+    };
+    DICT_OVERRIDE.store(v, AtomicOrdering::Relaxed);
+}
+
+/// The dictionary plan for one string-row sequence: distinct strings in
+/// first-seen order and the resulting frame size, or `None` when the plain
+/// frame wins (or the policy says off). Pure function of (rows, mode).
+struct DictPlan<'a> {
+    codes: Vec<u32>,
+    distinct: Vec<&'a str>,
+    code_width: usize,
+}
+
+fn code_width_for(distinct: usize) -> usize {
+    if distinct <= 1 << 8 {
+        1
+    } else if distinct <= 1 << 16 {
+        2
+    } else {
+        4
+    }
+}
+
+fn plan_str_rows<'a>(
+    rows: impl Iterator<Item = &'a str>,
+    mode: DictEncoding,
+) -> Option<DictPlan<'a>> {
+    if mode == DictEncoding::Off {
+        return None;
+    }
+    let mut map: FxHashMap<&str, u32> = FxHashMap::default();
+    let mut distinct: Vec<&str> = Vec::new();
+    let mut codes: Vec<u32> = Vec::new();
+    let mut plain_payload = 0usize;
+    let mut distinct_payload = 0usize;
+    for s in rows {
+        plain_payload += 4 + s.len();
+        let next = distinct.len() as u32;
+        let code = *map.entry(s).or_insert_with(|| {
+            distinct_payload += 4 + s.len();
+            distinct.push(s);
+            next
+        });
+        codes.push(code);
+    }
+    let code_width = code_width_for(distinct.len());
+    // dict frame = u32 entry count + entries + u8 code width + codes
+    let dict_payload = 4 + distinct_payload + 1 + codes.len() * code_width;
+    if mode == DictEncoding::Force || dict_payload < plain_payload {
+        Some(DictPlan {
+            codes,
+            distinct,
+            code_width,
+        })
+    } else {
+        None
+    }
+}
 
 /// Exact encoded byte size (used to pre-size send buffers in one pass).
+/// For `Str` columns this runs the same deterministic dictionary heuristic
+/// as [`encode_column`], so the size stays exact under either frame.
 pub fn encoded_size(col: &Column) -> usize {
     9 + match col {
         Column::I64(v) => v.len() * 8,
         Column::F64(v) => v.len() * 8,
         Column::Bool(v) => v.len(),
-        Column::Str(v) => v.iter().map(|s| 4 + s.len()).sum(),
+        Column::Str(v) => match plan_str_rows(v.iter().map(|s| s.as_str()), dict_encoding()) {
+            Some(p) => {
+                4 + p.distinct.iter().map(|s| 4 + s.len()).sum::<usize>()
+                    + 1
+                    + p.codes.len() * p.code_width
+            }
+            None => v.iter().map(|s| 4 + s.len()).sum(),
+        },
     }
 }
 
-/// Append the encoding of `col` to `buf`.
+/// Write the string rows as either a plain or dictionary frame (tag + row
+/// count included) according to `plan`.
+fn encode_str_rows<'a>(
+    n: usize,
+    rows: impl Iterator<Item = &'a str>,
+    plan: Option<DictPlan<'a>>,
+    buf: &mut Vec<u8>,
+) {
+    match plan {
+        Some(p) => {
+            buf.push(TAG_STR_DICT);
+            buf.extend_from_slice(&(n as u64).to_le_bytes());
+            buf.extend_from_slice(&(p.distinct.len() as u32).to_le_bytes());
+            for s in &p.distinct {
+                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                buf.extend_from_slice(s.as_bytes());
+            }
+            buf.push(p.code_width as u8);
+            for &c in &p.codes {
+                buf.extend_from_slice(&c.to_le_bytes()[..p.code_width]);
+            }
+        }
+        None => {
+            buf.push(TAG_STR);
+            buf.extend_from_slice(&(n as u64).to_le_bytes());
+            for s in rows {
+                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                buf.extend_from_slice(s.as_bytes());
+            }
+        }
+    }
+}
+
+/// Append the encoding of `col` to `buf` under the current dictionary
+/// policy ([`dict_encoding`]).
 pub fn encode_column(col: &Column, buf: &mut Vec<u8>) {
-    buf.reserve(encoded_size(col));
+    encode_column_with(col, dict_encoding(), buf)
+}
+
+/// [`encode_column`] with an explicit dictionary policy — lets the fuzz
+/// suite and benches compare frames without touching process-global state.
+pub fn encode_column_with(col: &Column, mode: DictEncoding, buf: &mut Vec<u8>) {
     match col {
         Column::I64(v) => {
+            buf.reserve(9 + v.len() * 8);
             buf.push(TAG_I64);
             buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
             // Bulk-copy the raw words; i64 -> LE bytes is a no-op transmute
@@ -47,6 +214,7 @@ pub fn encode_column(col: &Column, buf: &mut Vec<u8>) {
             }
         }
         Column::F64(v) => {
+            buf.reserve(9 + v.len() * 8);
             buf.push(TAG_F64);
             buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
             for x in v {
@@ -54,17 +222,14 @@ pub fn encode_column(col: &Column, buf: &mut Vec<u8>) {
             }
         }
         Column::Bool(v) => {
+            buf.reserve(9 + v.len());
             buf.push(TAG_BOOL);
             buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
             buf.extend(v.iter().map(|&b| b as u8));
         }
         Column::Str(v) => {
-            buf.push(TAG_STR);
-            buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
-            for s in v {
-                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
-                buf.extend_from_slice(s.as_bytes());
-            }
+            let plan = plan_str_rows(v.iter().map(|s| s.as_str()), mode);
+            encode_str_rows(v.len(), v.iter().map(|s| s.as_str()), plan, buf);
         }
     }
 }
@@ -113,6 +278,43 @@ pub fn decode_column(buf: &[u8], pos: &mut usize) -> Result<Column> {
             }
             Column::Str(v)
         }
+        TAG_STR_DICT => {
+            let d = u32::from_le_bytes(read_4(buf, pos)?) as usize;
+            let mut dict = Vec::with_capacity(d);
+            for _ in 0..d {
+                let len = u32::from_le_bytes(read_4(buf, pos)?) as usize;
+                if *pos + len > buf.len() {
+                    bail!("codec: truncated dictionary entry");
+                }
+                dict.push(
+                    std::str::from_utf8(&buf[*pos..*pos + len])
+                        .context("codec: invalid utf-8 in dictionary")?
+                        .to_string(),
+                );
+                *pos += len;
+            }
+            let cw = *buf.get(*pos).context("codec: truncated (code width)")? as usize;
+            *pos += 1;
+            if !matches!(cw, 1 | 2 | 4) {
+                bail!("codec: bad dictionary code width {cw}");
+            }
+            if *pos + n * cw > buf.len() {
+                bail!("codec: truncated dictionary codes");
+            }
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut c = 0u32;
+                for (k, &b) in buf[*pos..*pos + cw].iter().enumerate() {
+                    c |= (b as u32) << (8 * k);
+                }
+                *pos += cw;
+                let s = dict
+                    .get(c as usize)
+                    .with_context(|| format!("codec: dictionary code {c} out of range"))?;
+                v.push(s.clone());
+            }
+            Column::Str(v)
+        }
         t => bail!("codec: unknown dtype tag {t}"),
     };
     Ok(col)
@@ -120,11 +322,13 @@ pub fn decode_column(buf: &[u8], pos: &mut usize) -> Result<Column> {
 
 /// Encode only the rows at `idx` of `col` — the shuffle pack path fused
 /// with the gather, eliminating the intermediate `take()` column (§Perf:
-/// one full copy of all shuffled bytes removed).
+/// one full copy of all shuffled bytes removed). The string dictionary
+/// heuristic runs over exactly the gathered row sequence, so the output is
+/// byte-identical to `encode_column(&col.take(idx))`.
 pub fn encode_column_take(col: &Column, idx: &[usize], buf: &mut Vec<u8>) {
     match col {
         Column::I64(v) => {
-            buf.push(0);
+            buf.push(TAG_I64);
             buf.extend_from_slice(&(idx.len() as u64).to_le_bytes());
             buf.reserve(idx.len() * 8);
             for &i in idx {
@@ -132,7 +336,7 @@ pub fn encode_column_take(col: &Column, idx: &[usize], buf: &mut Vec<u8>) {
             }
         }
         Column::F64(v) => {
-            buf.push(1);
+            buf.push(TAG_F64);
             buf.extend_from_slice(&(idx.len() as u64).to_le_bytes());
             buf.reserve(idx.len() * 8);
             for &i in idx {
@@ -140,17 +344,14 @@ pub fn encode_column_take(col: &Column, idx: &[usize], buf: &mut Vec<u8>) {
             }
         }
         Column::Bool(v) => {
-            buf.push(2);
+            buf.push(TAG_BOOL);
             buf.extend_from_slice(&(idx.len() as u64).to_le_bytes());
             buf.extend(idx.iter().map(|&i| v[i] as u8));
         }
         Column::Str(v) => {
-            buf.push(3);
-            buf.extend_from_slice(&(idx.len() as u64).to_le_bytes());
-            for &i in idx {
-                buf.extend_from_slice(&(v[i].len() as u32).to_le_bytes());
-                buf.extend_from_slice(v[i].as_bytes());
-            }
+            let rows = || idx.iter().map(|&i| v[i].as_str());
+            let plan = plan_str_rows(rows(), dict_encoding());
+            encode_str_rows(idx.len(), rows(), plan, buf);
         }
     }
 }

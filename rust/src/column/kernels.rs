@@ -368,7 +368,12 @@ pub fn is_null_column(mask: Option<&ValidityMask>, len: usize) -> Column {
     match mask {
         Some(m) => {
             debug_assert_eq!(m.len(), len);
-            Column::Bool((0..len).map(|i| !m.get(i)).collect())
+            // word-at-a-time expand, then flip (valid → not-null)
+            let mut out = m.to_bools();
+            for b in &mut out {
+                *b = !*b;
+            }
+            Column::Bool(out)
         }
         None => Column::Bool(vec![false; len]),
     }

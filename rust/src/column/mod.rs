@@ -8,8 +8,9 @@ mod kernels;
 mod validity;
 
 pub use codec::{
-    decode_column, decode_nullable_column, encode_column, encode_column_take,
-    encode_nullable_column, encode_nullable_column_take, encoded_size,
+    decode_column, decode_nullable_column, dict_encoding, encode_column, encode_column_take,
+    encode_column_with, encode_nullable_column, encode_nullable_column_take, encoded_size,
+    set_dict_encoding, DictEncoding,
 };
 pub use kernels::*;
 pub use validity::{
@@ -164,13 +165,21 @@ impl Column {
             Column::I64(v) => Column::I64(filter_vec(v, mask)),
             Column::F64(v) => Column::F64(filter_vec(v, mask)),
             Column::Bool(v) => Column::Bool(filter_vec(v, mask)),
-            Column::Str(v) => Column::Str(
-                v.iter()
-                    .zip(mask)
-                    .filter(|(_, &m)| m)
-                    .map(|(x, _)| x.clone())
-                    .collect(),
-            ),
+            Column::Str(v) => {
+                // Same word-at-a-time selection as `filter_vec`, minus the
+                // bulk memcpy (strings must be cloned one by one).
+                let mut out = Vec::with_capacity(count_true(mask));
+                for (ci, chunk) in mask.chunks(64).enumerate() {
+                    let mut kw = bool_word(chunk);
+                    let base = ci * 64;
+                    while kw != 0 {
+                        let b = kw.trailing_zeros() as usize;
+                        kw &= kw - 1;
+                        out.push(v[base + b].clone());
+                    }
+                }
+                Column::Str(out)
+            }
         }
     }
 
@@ -251,21 +260,58 @@ impl Column {
     }
 }
 
+/// Pack up to 64 bools into one selection word (bit `b` set ⇔ `chunk[b]`).
+/// The shared primitive of the word-at-a-time kernels here and in
+/// [`ValidityMask`]: once a chunk is a word, all-zero words are skipped,
+/// all-ones words become bulk copies, and sparse words iterate only their
+/// set bits via `trailing_zeros`.
+#[inline]
+pub(crate) fn bool_word(chunk: &[bool]) -> u64 {
+    debug_assert!(chunk.len() <= 64);
+    let mut w = 0u64;
+    for (b, &bit) in chunk.iter().enumerate() {
+        w |= (bit as u64) << b;
+    }
+    w
+}
+
+/// The all-ones selection word for a (possibly partial) chunk of `n` bits.
+#[inline]
+pub(crate) fn full_word(n: usize) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
 fn filter_vec<T: Copy>(v: &[T], mask: &[bool]) -> Vec<T> {
-    // Branch-friendly single pass; the perf pass found this ~2x faster than
-    // iterator zip+filter chains on 20M-row masks (measured on the fig8a filter cell).
+    // Word-at-a-time selection: the mask is packed into u64 words so runs of
+    // zeros cost one test, runs of ones become a bulk `extend_from_slice`,
+    // and mixed words visit only their set bits. Replaced the per-bool
+    // branch loop (itself ~2x over iterator chains on 20M-row masks).
     let mut out = Vec::with_capacity(count_true(mask));
-    for i in 0..v.len() {
-        if mask[i] {
-            out.push(v[i]);
+    for (ci, chunk) in mask.chunks(64).enumerate() {
+        let mut kw = bool_word(chunk);
+        let base = ci * 64;
+        if kw == full_word(chunk.len()) {
+            out.extend_from_slice(&v[base..base + chunk.len()]);
+            continue;
+        }
+        while kw != 0 {
+            let b = kw.trailing_zeros() as usize;
+            kw &= kw - 1;
+            out.push(v[base + b]);
         }
     }
     out
 }
 
-/// Population count of a boolean mask.
+/// Population count of a boolean mask (word-packed popcount).
 pub fn count_true(mask: &[bool]) -> usize {
-    mask.iter().map(|&b| b as usize).sum()
+    mask.chunks(64)
+        .map(|c| bool_word(c).count_ones() as usize)
+        .sum()
 }
 
 impl fmt::Display for Column {

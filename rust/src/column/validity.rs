@@ -51,15 +51,13 @@ impl ValidityMask {
         }
     }
 
-    /// Build from a bool slice (`true` = valid).
+    /// Build from a bool slice (`true` = valid) — one packed word per 64
+    /// input bits, no per-bit set calls.
     pub fn from_bools(bits: &[bool]) -> ValidityMask {
-        let mut m = ValidityMask::new_null(bits.len());
-        for (i, &b) in bits.iter().enumerate() {
-            if b {
-                m.set(i, true);
-            }
+        ValidityMask {
+            words: bits.chunks(64).map(super::bool_word).collect(),
+            len: bits.len(),
         }
-        m
     }
 
     pub fn len(&self) -> usize {
@@ -112,9 +110,15 @@ impl ValidityMask {
     }
 
     /// Is every row valid? (A canonical table never stores such a mask —
-    /// see [`normalize_mask`].)
+    /// see [`normalize_mask`].) Word-parallel: full words must be all ones,
+    /// the tail word must match the tail mask exactly.
     pub fn all_valid(&self) -> bool {
-        self.count_valid() == self.len
+        let full = self.len / 64;
+        if self.words[..full].iter().any(|&w| w != u64::MAX) {
+            return false;
+        }
+        let tail = self.len % 64;
+        tail == 0 || self.words[full] == (1u64 << tail) - 1
     }
 
     /// Bitwise AND (null if either is null) — the null-propagation rule of
@@ -146,71 +150,119 @@ impl ValidityMask {
         }
     }
 
-    /// Append all of `other` (vertical concatenation).
+    /// Append all of `other` (vertical concatenation): word-wise shift-or
+    /// instead of one push per bit. `other`'s words land at bit offset
+    /// `self.len % 64`, each split across at most two destination words.
     pub fn extend(&mut self, other: &ValidityMask) {
-        for i in 0..other.len {
-            self.push(other.get(i));
-        }
-    }
-
-    /// Append `n` valid rows.
-    pub fn extend_valid(&mut self, n: usize) {
-        for _ in 0..n {
-            self.push(true);
-        }
-    }
-
-    /// Gather rows at `idx`.
-    pub fn take(&self, idx: &[usize]) -> ValidityMask {
-        let mut m = ValidityMask::new_null(idx.len());
-        for (o, &i) in idx.iter().enumerate() {
-            if self.get(i) {
-                m.set(o, true);
+        let shift = self.len % 64;
+        self.len += other.len;
+        if shift == 0 {
+            self.words.extend_from_slice(&other.words);
+        } else {
+            for &w in &other.words {
+                *self.words.last_mut().expect("shift != 0 implies a word") |= w << shift;
+                self.words.push(w >> (64 - shift));
             }
         }
-        m
+        // the split may have produced one spare all-tail word
+        self.words.truncate(words_for(self.len));
+        self.clear_tail();
+    }
+
+    /// Append `n` valid rows (word-wise run of ones).
+    pub fn extend_valid(&mut self, n: usize) {
+        let start = self.len;
+        self.len += n;
+        self.words.resize(words_for(self.len), 0);
+        let mut i = start;
+        while i < self.len {
+            let b = i % 64;
+            let take = (64 - b).min(self.len - i);
+            self.words[i / 64] |= super::full_word(take) << b;
+            i += take;
+        }
+    }
+
+    /// Gather rows at `idx` — branch-free bit extract/deposit per index.
+    pub fn take(&self, idx: &[usize]) -> ValidityMask {
+        let mut words = vec![0u64; words_for(idx.len())];
+        for (o, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.len);
+            words[o / 64] |= (self.words[i / 64] >> (i % 64) & 1) << (o % 64);
+        }
+        ValidityMask {
+            words,
+            len: idx.len(),
+        }
     }
 
     /// Gather with optional indices: `None` entries become null — the
     /// null-introducing gather of Left/Right/Outer join output assembly.
     pub fn take_opt(&self, idx: &[Option<usize>]) -> ValidityMask {
-        let mut m = ValidityMask::new_null(idx.len());
+        let mut words = vec![0u64; words_for(idx.len())];
         for (o, oi) in idx.iter().enumerate() {
             if let Some(i) = oi {
-                if self.get(*i) {
-                    m.set(o, true);
-                }
+                words[o / 64] |= (self.words[i / 64] >> (i % 64) & 1) << (o % 64);
             }
         }
-        m
+        ValidityMask {
+            words,
+            len: idx.len(),
+        }
     }
 
-    /// Keep rows where `keep` is true.
+    /// Keep rows where `keep` is true — the keep chunk is packed into a
+    /// selection word, then only its set bits are visited (zero words cost
+    /// one test) while the surviving validity bits are deposited in order.
     pub fn filter(&self, keep: &[bool]) -> ValidityMask {
         assert_eq!(keep.len(), self.len, "validity filter: length mismatch");
-        let mut m = ValidityMask::new_null(0);
-        for (i, &k) in keep.iter().enumerate() {
-            if k {
-                m.push(self.get(i));
+        let mut words = vec![0u64; self.words.len()];
+        let mut out = 0usize;
+        for (w, chunk) in keep.chunks(64).enumerate() {
+            let mut kw = super::bool_word(chunk);
+            let vw = self.words[w];
+            while kw != 0 {
+                let b = kw.trailing_zeros() as usize;
+                kw &= kw - 1;
+                words[out / 64] |= (vw >> b & 1) << (out % 64);
+                out += 1;
             }
         }
-        m
+        words.truncate(words_for(out));
+        ValidityMask { words, len: out }
     }
 
-    /// Contiguous sub-range `[start, start+len)`.
+    /// Contiguous sub-range `[start, start+len)` — each output word is the
+    /// shift-or of (at most) two source words.
     pub fn slice(&self, start: usize, len: usize) -> ValidityMask {
-        let mut m = ValidityMask::new_null(len);
-        for o in 0..len {
-            if self.get(start + o) {
-                m.set(o, true);
-            }
+        debug_assert!(start + len <= self.len);
+        let nw = words_for(len);
+        let (sw, shift) = (start / 64, start % 64);
+        let word_at = |i: usize| self.words.get(i).copied().unwrap_or(0);
+        let mut words = Vec::with_capacity(nw);
+        for o in 0..nw {
+            let lo = word_at(sw + o) >> shift;
+            let hi = if shift == 0 {
+                0
+            } else {
+                word_at(sw + o + 1) << (64 - shift)
+            };
+            words.push(lo | hi);
         }
+        let mut m = ValidityMask { words, len };
+        m.clear_tail();
         m
     }
 
-    /// Expand to one bool per row (`true` = valid).
+    /// Expand to one bool per row (`true` = valid) — word-at-a-time shifts,
+    /// no per-row bounds math.
     pub fn to_bools(&self) -> Vec<bool> {
-        (0..self.len).map(|i| self.get(i)).collect()
+        let mut out = Vec::with_capacity(self.len);
+        for (w, &word) in self.words.iter().enumerate() {
+            let n = (self.len - w * 64).min(64);
+            out.extend((0..n).map(|b| word >> b & 1 == 1));
+        }
+        out
     }
 
     /// Approximate heap size in bytes.

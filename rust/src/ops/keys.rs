@@ -12,9 +12,12 @@
 //! * [`PackedKeys`] — the HiFrames fast path: a columnar, allocation-free
 //!   encoding of the whole key column set at once. A single Int64 key is a
 //!   zero-copy borrow of the column; multi-column Int64/Bool keys byte-pack
-//!   into fixed-width order-preserving rows; keys containing String columns
-//!   fall back to variable-width order-preserving rows with a per-operator
-//!   string interner. Hashing (routing rows to their owner rank — the
+//!   into fixed-width order-preserving rows; a single String key column is
+//!   dictionary-encoded (one escaped entry per distinct string, `u32` codes
+//!   per row, per-entry hashes computed once); other keys containing String
+//!   columns fall back to variable-width order-preserving rows with a
+//!   per-operator string interner. Hashing (routing rows to their owner
+//!   rank — the
 //!   composite generalization of the paper's `_df_id[i] % npes`), equality
 //!   and ascending tuple order are all answered without materializing a
 //!   single `Vec<KeyVal>`.
@@ -455,6 +458,16 @@ pub enum PackedKeys<'a> {
     /// with per-operator string interning (each distinct string is escaped
     /// once).
     Bytes { offsets: Vec<usize>, data: Vec<u8> },
+    /// Single String key column, dictionary-encoded: `dict[k]` is the exact
+    /// `Bytes`-layout encoding of one distinct row value and `hashes[k]` its
+    /// fx hash, so hashing/equality/order agree byte-for-byte with the
+    /// `Bytes` layout (the two are mutually comparable) while hashing costs
+    /// one lookup per row instead of one escaped-byte hash.
+    Dict {
+        codes: Vec<u32>,
+        dict: Vec<Vec<u8>>,
+        hashes: Vec<u64>,
+    },
 }
 
 impl<'a> PackedKeys<'a> {
@@ -498,6 +511,52 @@ impl<'a> PackedKeys<'a> {
         if cols.iter().all(|c| matches!(c.dtype(), DType::I64 | DType::Bool)) {
             let (width, data) = pack_fixed(cols, masks, with_flags, &[]);
             return Ok(PackedKeys::Fixed { width, data });
+        }
+        // Single String key column: dictionary-encode. Each dict entry is the
+        // exact Bytes-layout row encoding (flag byte + escaped string when
+        // flagged, escaped string alone otherwise), built and hashed once per
+        // distinct value; rows carry u32 codes.
+        if cols.len() == 1 {
+            if let Column::Str(v) = cols[0] {
+                let mask = masks[0];
+                let mut by_str: FxHashMap<&'a str, u32> = FxHashMap::default();
+                let mut null_code: Option<u32> = None;
+                let mut dict: Vec<Vec<u8>> = Vec::new();
+                let mut hashes: Vec<u64> = Vec::new();
+                let mut codes: Vec<u32> = Vec::with_capacity(n);
+                let push_entry =
+                    |dict: &mut Vec<Vec<u8>>, hashes: &mut Vec<u64>, entry: Vec<u8>| {
+                        hashes.push(fxhash::hash_bytes(&entry));
+                        dict.push(entry);
+                        (dict.len() - 1) as u32
+                    };
+                for (i, s) in v.iter().enumerate() {
+                    let ok = mask.map_or(true, |m| m.get(i));
+                    let code = if with_flags && !ok {
+                        *null_code.get_or_insert_with(|| {
+                            push_entry(&mut dict, &mut hashes, vec![0u8])
+                        })
+                    } else {
+                        match by_str.entry(s.as_str()) {
+                            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+                            std::collections::hash_map::Entry::Vacant(e) => {
+                                let mut enc = Vec::new();
+                                if with_flags {
+                                    enc.push(1u8);
+                                }
+                                escape_str_into(s, &mut enc);
+                                *e.insert(push_entry(&mut dict, &mut hashes, enc))
+                            }
+                        }
+                    };
+                    codes.push(code);
+                }
+                return Ok(PackedKeys::Dict {
+                    codes,
+                    dict,
+                    hashes,
+                });
+            }
         }
         // String fallback: variable-width rows; intern each distinct string's
         // escaped encoding once for this operator. Null cells are the flag
@@ -546,6 +605,7 @@ impl<'a> PackedKeys<'a> {
                 }
             }
             PackedKeys::Bytes { offsets, .. } => offsets.len() - 1,
+            PackedKeys::Dict { codes, .. } => codes.len(),
         }
     }
 
@@ -560,6 +620,7 @@ impl<'a> PackedKeys<'a> {
             PackedKeys::I64(_) => unreachable!("I64 layout has no byte rows"),
             PackedKeys::Fixed { width, data } => &data[i * width..(i + 1) * width],
             PackedKeys::Bytes { offsets, data } => &data[offsets[i]..offsets[i + 1]],
+            PackedKeys::Dict { codes, dict, .. } => &dict[codes[i] as usize],
         }
     }
 
@@ -569,6 +630,7 @@ impl<'a> PackedKeys<'a> {
     pub fn hash_row(&self, i: usize) -> u64 {
         match self {
             PackedKeys::I64(v) => fxhash::hash_u64(v[i] as u64),
+            PackedKeys::Dict { codes, hashes, .. } => hashes[codes[i] as usize],
             _ => fxhash::hash_bytes(self.row_bytes(i)),
         }
     }
@@ -590,10 +652,14 @@ impl<'a> PackedKeys<'a> {
     pub fn eq_rows(&self, i: usize, other: &PackedKeys, j: usize) -> bool {
         match (self, other) {
             (PackedKeys::I64(a), PackedKeys::I64(b)) => a[i] == b[j],
+            // Dict rows carry exact Bytes-layout encodings, so the two string
+            // layouts are mutually comparable (a join may dict-encode one
+            // side only, e.g. when one side's strings are low-cardinality).
             (PackedKeys::Fixed { .. }, PackedKeys::Fixed { .. })
-            | (PackedKeys::Bytes { .. }, PackedKeys::Bytes { .. }) => {
-                self.row_bytes(i) == other.row_bytes(j)
-            }
+            | (
+                PackedKeys::Bytes { .. } | PackedKeys::Dict { .. },
+                PackedKeys::Bytes { .. } | PackedKeys::Dict { .. },
+            ) => self.row_bytes(i) == other.row_bytes(j),
             _ => panic!("packed key layout mismatch"),
         }
     }
@@ -605,9 +671,10 @@ impl<'a> PackedKeys<'a> {
         match (self, other) {
             (PackedKeys::I64(a), PackedKeys::I64(b)) => a[i].cmp(&b[j]),
             (PackedKeys::Fixed { .. }, PackedKeys::Fixed { .. })
-            | (PackedKeys::Bytes { .. }, PackedKeys::Bytes { .. }) => {
-                self.row_bytes(i).cmp(other.row_bytes(j))
-            }
+            | (
+                PackedKeys::Bytes { .. } | PackedKeys::Dict { .. },
+                PackedKeys::Bytes { .. } | PackedKeys::Dict { .. },
+            ) => self.row_bytes(i).cmp(other.row_bytes(j)),
             _ => panic!("packed key layout mismatch"),
         }
     }
@@ -805,6 +872,191 @@ impl SortKeys {
         }
         lo - start
     }
+
+    /// *Local-only* packed sort keys built from materialized key tuples:
+    /// String cells are dictionary-encoded with an order-preserving
+    /// per-column dictionary (sorted distinct strings, code = rank, packed
+    /// big-endian), so rows stay fixed-width and radix-sortable even for
+    /// string keys. Byte order of the rows equals [`cmp_key_rows`] under
+    /// `orders`. The codes are assigned from *this* tuple set — never ship
+    /// these rows or compare them against another `SortKeys` instance.
+    pub fn from_key_rows(krows: &[KeyRow], orders: &[SortOrder]) -> SortKeys {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Shape {
+            Empty,
+            I64,
+            Bool,
+            Str,
+        }
+        let n = krows.len();
+        let ncols = krows.first().map_or(0, |r| r.len());
+        let mut shapes = vec![Shape::Empty; ncols];
+        let mut has_null = vec![false; ncols];
+        for row in krows {
+            for (k, cell) in row.iter().enumerate() {
+                match cell {
+                    KeyVal::Null => has_null[k] = true,
+                    KeyVal::I64(_) => shapes[k] = Shape::I64,
+                    KeyVal::Bool(_) => shapes[k] = Shape::Bool,
+                    KeyVal::Str(_) => shapes[k] = Shape::Str,
+                }
+            }
+        }
+        // order-preserving dictionary per String column: sorted distinct
+        // strings, code = rank — u32 big-endian code order == string order
+        let dicts: Vec<Option<FxHashMap<&str, u32>>> = (0..ncols)
+            .map(|k| {
+                if shapes[k] != Shape::Str {
+                    return None;
+                }
+                let mut distinct: Vec<&str> = krows
+                    .iter()
+                    .filter_map(|r| match &r[k] {
+                        KeyVal::Str(s) => Some(s.as_str()),
+                        _ => None,
+                    })
+                    .collect();
+                distinct.sort_unstable();
+                distinct.dedup();
+                Some(
+                    distinct
+                        .into_iter()
+                        .enumerate()
+                        .map(|(rank, s)| (s, rank as u32))
+                        .collect(),
+                )
+            })
+            .collect();
+        let cell_width = |k: usize| {
+            usize::from(has_null[k])
+                + match shapes[k] {
+                    Shape::Empty => 0,
+                    Shape::I64 => 8,
+                    Shape::Bool => 1,
+                    Shape::Str => 4,
+                }
+        };
+        let width: usize = (0..ncols).map(cell_width).sum();
+        let mut data = vec![0u8; n * width];
+        for (i, row) in krows.iter().enumerate() {
+            let mut at = i * width;
+            for (k, cell) in row.iter().enumerate() {
+                let flag = usize::from(has_null[k]);
+                let cw = cell_width(k);
+                let out = &mut data[at..at + cw];
+                if flag == 1 {
+                    out[0] = !cell.is_null() as u8;
+                }
+                match cell {
+                    KeyVal::Null => {} // value lane stays zero; nulls compare equal
+                    KeyVal::I64(x) => out[flag..].copy_from_slice(&pack_i64_be(*x)),
+                    KeyVal::Bool(b) => out[flag] = *b as u8,
+                    KeyVal::Str(s) => out[flag..].copy_from_slice(
+                        &dicts[k].as_ref().expect("Str column has a dictionary")[s.as_str()]
+                            .to_be_bytes(),
+                    ),
+                }
+                if matches!(
+                    orders.get(k).copied().unwrap_or(SortOrder::Asc),
+                    SortOrder::Desc
+                ) {
+                    for b in out {
+                        *b = !*b;
+                    }
+                }
+                at += cw;
+            }
+        }
+        SortKeys {
+            width,
+            data,
+            len: n,
+        }
+    }
+
+    /// Stable argsort of all rows — radix or comparison by the crossover
+    /// heuristic; both paths are stable, so the permutation is identical.
+    pub fn argsort(&self) -> Vec<usize> {
+        self.argsort_range(0, self.len)
+    }
+
+    /// Stable argsort of the row range `[start, end)` (the external-merge
+    /// run sort works on contiguous slices). Returned indices are global.
+    pub fn argsort_range(&self, start: usize, end: usize) -> Vec<usize> {
+        if radix_wins(end - start, self.width) {
+            self.radix_argsort_range(start, end)
+        } else {
+            self.comparison_argsort_range(start, end)
+        }
+    }
+
+    /// The comparison fallback: stable `sort_by` over packed row bytes.
+    pub fn comparison_argsort(&self) -> Vec<usize> {
+        self.comparison_argsort_range(0, self.len)
+    }
+
+    fn comparison_argsort_range(&self, start: usize, end: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (start..end).collect();
+        idx.sort_by(|&a, &b| self.row(a).cmp(self.row(b)));
+        idx
+    }
+
+    /// LSD radix argsort: one stable counting sort per byte position, least
+    /// significant (rightmost) first, over the fixed-width packed rows.
+    /// Because the rows are order-preserving byte encodings, the final
+    /// lexicographic byte order *is* the sort order, and per-pass stability
+    /// makes the whole argsort stable — byte-identical to
+    /// [`SortKeys::comparison_argsort`]. Passes whose byte is constant
+    /// across the range (flag bytes, high bytes of small ints) are skipped.
+    pub fn radix_argsort(&self) -> Vec<usize> {
+        self.radix_argsort_range(0, self.len)
+    }
+
+    fn radix_argsort_range(&self, start: usize, end: usize) -> Vec<usize> {
+        let n = end - start;
+        let w = self.width;
+        let mut cur: Vec<usize> = (start..end).collect();
+        if n <= 1 || w == 0 {
+            return cur;
+        }
+        let mut nxt: Vec<usize> = vec![0; n];
+        for b in (0..w).rev() {
+            let mut counts = [0usize; 256];
+            for &i in &cur {
+                counts[self.data[i * w + b] as usize] += 1;
+            }
+            // constant byte column ⇒ the pass is a stable no-op
+            if counts[self.data[cur[0] * w + b] as usize] == n {
+                continue;
+            }
+            let mut offs = [0usize; 256];
+            let mut acc = 0usize;
+            for (o, &c) in offs.iter_mut().zip(&counts) {
+                *o = acc;
+                acc += c;
+            }
+            for &i in &cur {
+                let slot = &mut offs[self.data[i * w + b] as usize];
+                nxt[*slot] = i;
+                *slot += 1;
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        cur
+    }
+}
+
+/// Crossover heuristic between the LSD radix argsort (cost ≈ `width · (n +
+/// 256)`) and the comparison argsort (cost ≈ `n · log n` memcmps of up to
+/// `width` bytes): radix needs enough rows to amortize its per-pass
+/// histograms and loses on very wide rows. Both sides are stable, so the
+/// choice never changes the output.
+fn radix_wins(n: usize, width: usize) -> bool {
+    if n < 64 || width == 0 {
+        return false;
+    }
+    let log_n = usize::BITS as usize - n.leading_zeros() as usize;
+    width * (n + 256) < 4 * n * log_n
 }
 
 /// Rebuild key columns (one per key position) from key tuples, pushing in

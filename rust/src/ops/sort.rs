@@ -88,9 +88,10 @@ pub fn distributed_sort_keys_budgeted(
     }
     let p = comm.nranks();
     let krows = keys::key_rows_nullable(&kc, &km)?;
-    // local sort (stable — Timsort-family, as in the paper)
-    let mut idx: Vec<usize> = (0..krows.len()).collect();
-    idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
+    // local sort: dictionary-encode the tuples into fixed-width rows and
+    // radix-argsort them (stable, byte-identical to a comparison sort of
+    // the tuples under `orders`)
+    let idx = SortKeys::from_key_rows(&krows, orders).argsort();
     let skrows: Vec<KeyRow> = idx.iter().map(|&i| krows[i].clone()).collect();
     let skey: Vec<NullableColumn> = take_masked(key_cols, &idx);
     let spay: Vec<NullableColumn> = take_masked(payload, &idx);
@@ -168,8 +169,7 @@ pub fn distributed_sort_keys_budgeted(
     let rk_masks: Vec<Option<&ValidityMask>> =
         rkeys.iter().map(|c| c.validity.as_ref()).collect();
     let rrows = keys::key_rows_nullable(&rk_refs, &rk_masks)?;
-    let mut idx: Vec<usize> = (0..rrows.len()).collect();
-    idx.sort_by(|&a, &b| cmp_key_rows(&rrows[a], &rrows[b], orders));
+    let idx = SortKeys::from_key_rows(&rrows, orders).argsort();
     Ok((take_owned(&rkeys, &idx), take_owned(&rpay, &idx)))
 }
 
@@ -294,8 +294,7 @@ fn sort_rows_budgeted(
     spill: &SpillCtx,
 ) -> Result<(Vec<NullableColumn>, Option<SortKeys>)> {
     if !spill.should_spill(masked_bytes(cols)) {
-        let mut idx: Vec<usize> = (0..sk.len()).collect();
-        idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
+        let idx = sk.argsort();
         let keys = if need_keys { Some(sk.take(&idx)) } else { None };
         return Ok((take_masked(cols, &idx), keys));
     }
@@ -345,8 +344,7 @@ fn external_merge_sort(
     let mut start = 0usize;
     while start < n {
         let end = (start + run_rows).min(n);
-        let mut idx: Vec<usize> = (start..end).collect();
-        idx.sort_by(|&a, &b| sk.row(a).cmp(sk.row(b)));
+        let idx = sk.argsort_range(start, end);
         let mut file = spill.new_file("sort-run")?;
         for chunk in idx.chunks(SPILL_CHUNK_ROWS) {
             frame.clear();

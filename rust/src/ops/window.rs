@@ -21,7 +21,7 @@
 //! calls [`window_over_groups`] on the locally sorted runs, so no halo ever
 //! crosses a partition boundary.
 
-use super::keys::{cmp_key_rows, KeyRow};
+use super::keys::{KeyRow, SortKeys};
 use super::scan::{cumsum_f64, cumsum_i64};
 use super::stencil::stencil_1d;
 use crate::column::{
@@ -418,8 +418,9 @@ pub fn partition_runs(
     np: usize,
     orders: &[SortOrder],
 ) -> (Vec<usize>, Vec<usize>, Vec<bool>) {
-    let mut idx: Vec<usize> = (0..krows.len()).collect();
-    idx.sort_by(|&a, &b| cmp_key_rows(&krows[a], &krows[b], orders));
+    // dictionary-encoded fixed-width rows + radix argsort — stable and
+    // byte-identical to a comparison sort of the tuples under `orders`
+    let idx = SortKeys::from_key_rows(krows, orders).argsort();
     let mut group_starts: Vec<usize> = Vec::new();
     let mut breaks: Vec<bool> = Vec::with_capacity(idx.len());
     for (pos, &ri) in idx.iter().enumerate() {

@@ -4,8 +4,16 @@
 //! subset we need: seeded generators, a `forall` driver that runs N cases,
 //! and on failure reports the seed + a best-effort shrink (halving vector
 //! inputs while the property still fails). Every property suite in
-//! `rust/tests/properties.rs` and the module-level invariant tests build on
+//! `rust/tests/properties.rs`, the differential kernel-fuzz suite in
+//! `rust/tests/kernels.rs`, and the module-level invariant tests build on
 //! this.
+//!
+//! Knobs (environment):
+//! * `HIFRAMES_PROP_CASES` — cases per property (default 64). CI's
+//!   kernel-fuzz step sets 256 for a heavier randomized pass.
+//! * `HIFRAMES_PROP_SEED` — base seed (default `0xC0FFEE`). A failure
+//!   panic prints the exact `HIFRAMES_PROP_SEED=<s> HIFRAMES_PROP_CASES=1`
+//!   pair that replays just the failing case.
 
 use crate::datagen::Rng;
 
@@ -17,8 +25,41 @@ pub fn default_cases() -> usize {
         .unwrap_or(64)
 }
 
-/// Run `prop` on `cases` random inputs drawn by `gen`. Panics with the seed
-/// and debug representation of the (shrunk, if possible) counter-example.
+/// Scale a suite's per-property multiplier by the configured case count:
+/// a property declared with `mult` runs `mult` cases when
+/// `HIFRAMES_PROP_CASES` is at the default 64, and proportionally more
+/// under a heavier CI pass (always at least one case).
+pub fn scaled_cases(mult: usize) -> usize {
+    (mult * default_cases()).div_ceil(64).max(1)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("HIFRAMES_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64)
+}
+
+fn case_seed(base: u64, case: usize) -> u64 {
+    base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// The failure report: which case of how many, the derived RNG seed, and
+/// the exact environment that replays *only* the failing case — with
+/// `HIFRAMES_PROP_CASES=1`, case 0 under base seed `base + case` derives
+/// the same [`case_seed`] as the failure.
+fn failure_header(name: &str, case: usize, cases: usize, base: u64) -> String {
+    format!(
+        "property '{name}' failed (case {case} of {cases}, seed {seed:#x})\n\
+         reproduce with HIFRAMES_PROP_SEED={repro} HIFRAMES_PROP_CASES=1",
+        seed = case_seed(base, case),
+        repro = base.wrapping_add(case as u64),
+    )
+}
+
+/// Run `prop` on [`default_cases`] random inputs drawn by `gen`. Panics
+/// with the seed, the re-run command, and the debug representation of the
+/// counter-example.
 pub fn forall<T, G, P>(name: &str, gen: G, prop: P)
 where
     T: std::fmt::Debug + Clone,
@@ -28,26 +69,22 @@ where
     forall_cases(name, default_cases(), gen, prop)
 }
 
-/// Like [`forall`] with an explicit case count.
+/// Like [`forall`] with an explicit case count (pair with [`scaled_cases`]
+/// to declare a per-property multiplier that tracks the CI knob).
 pub fn forall_cases<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
 where
     T: std::fmt::Debug + Clone,
     G: Fn(&mut Rng) -> T,
     P: Fn(&T) -> Result<(), String>,
 {
-    let base_seed = std::env::var("HIFRAMES_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xC0FFEE_u64);
+    let base = base_seed();
     for case in 0..cases {
-        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let mut rng = Rng::new(seed);
+        let mut rng = Rng::new(case_seed(base, case));
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(
-                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
-                 counter-example: {input:?}\n\
-                 reproduce with HIFRAMES_PROP_SEED={base_seed}"
+                "{}: {msg}\ncounter-example: {input:?}",
+                failure_header(name, case, cases, base)
             );
         }
     }
@@ -62,19 +99,15 @@ where
     P: Fn(&[T]) -> Result<(), String>,
 {
     let cases = default_cases();
-    let base_seed = std::env::var("HIFRAMES_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xC0FFEE_u64);
+    let base = base_seed();
     for case in 0..cases {
-        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let mut rng = Rng::new(seed);
+        let mut rng = Rng::new(case_seed(base, case));
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             let shrunk = shrink_vec(&input, &prop);
             panic!(
-                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
-                 shrunk counter-example ({} of {} elems): {shrunk:?}",
+                "{}: {msg}\nshrunk counter-example ({} of {} elems): {shrunk:?}",
+                failure_header(name, case, cases, base),
                 shrunk.len(),
                 input.len()
             );
@@ -169,6 +202,60 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn failure_message_carries_seed_and_repro_command() {
+        // Fail at case 3: the panic must name the case, the derived seed in
+        // hex, and the one-case re-run environment.
+        let fails_at_3 = std::sync::atomic::AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall_cases(
+                "fails-at-case-3",
+                8,
+                |rng| rng.i64_range(0, 10),
+                |_| {
+                    let c = fails_at_3.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if c == 3 {
+                        Err("boom".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        }));
+        let err = result.expect_err("property must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .expect("panic payload is a String")
+            .clone();
+        let base = base_seed();
+        let seed = case_seed(base, 3);
+        assert!(msg.contains("case 3 of 8"), "missing case count: {msg}");
+        assert!(
+            msg.contains(&format!("{seed:#x}")),
+            "missing derived seed: {msg}"
+        );
+        assert!(
+            msg.contains(&format!(
+                "HIFRAMES_PROP_SEED={} HIFRAMES_PROP_CASES=1",
+                base.wrapping_add(3)
+            )),
+            "missing repro command: {msg}"
+        );
+        // and the advertised re-run really replays the same case seed
+        assert_eq!(case_seed(base.wrapping_add(3), 0), seed);
+    }
+
+    #[test]
+    fn scaled_cases_tracks_the_env_knob() {
+        // Under the default 64-case configuration the multiplier passes
+        // through unchanged; the scaling never rounds to zero.
+        if default_cases() == 64 {
+            assert_eq!(scaled_cases(16), 16);
+            assert_eq!(scaled_cases(256), 256);
+        }
+        assert!(scaled_cases(1) >= 1);
     }
 
     #[test]

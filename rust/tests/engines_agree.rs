@@ -4,9 +4,14 @@
 //! correctness signal in the repo: the engines share no operator code.
 
 use hiframes::baseline::{serial, sparklike::SparkLike};
+use hiframes::column::{set_dict_encoding, DictEncoding};
 use hiframes::datagen::Rng;
+use hiframes::exec::{collect, collect_serial, ExecOptions};
+use hiframes::ir::{source_mem, Plan, WindowAgg};
+use hiframes::metrics::spill_stats;
 use hiframes::prelude::*;
 use hiframes::prop::forall_cases;
+use hiframes::types::JoinStrategy;
 
 fn random_table(rng: &mut Rng, n: usize, key_range: i64) -> Table {
     Table::from_pairs(vec![
@@ -286,4 +291,316 @@ fn udf_results_identical_across_engines() {
             tables_equal_approx(&a, &c, "hiframes vs sparklike udf")
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// String-keyed sweep: dictionary-encoded keys across all three engines.
+// Tables are compared with `==` — byte-identical values AND validity masks.
+// The dict toggle is safe to flip process-wide: every assertion requires the
+// results to be identical under either wire format.
+// ---------------------------------------------------------------------------
+
+/// Duplicate-heavy nullable string keys: empty strings, embedded NULs, and
+/// random suffixes that keep cardinality realistic.
+fn random_str_keys(rng: &mut Rng, n: usize) -> (Vec<String>, Vec<bool>) {
+    const POOL: [&str; 7] = ["", "east", "west", "w\0est", "\0", "north", "s"];
+    let keys = (0..n)
+        .map(|_| {
+            let base = *rng.choose(&POOL);
+            if rng.bool(0.3) {
+                format!("{base}-{}", rng.i64_range(0, 12))
+            } else {
+                base.to_string()
+            }
+        })
+        .collect();
+    let mask = (0..n).map(|_| rng.bool(0.9)).collect();
+    (keys, mask)
+}
+
+fn str_table(rng: &mut Rng, n: usize, key: &str, val: &str) -> Table {
+    let (keys, mask) = random_str_keys(rng, n);
+    Table::from_pairs(vec![
+        (key, Column::Str(keys)),
+        (val, Column::I64((0..n).map(|_| rng.i64_range(-50, 50)).collect())),
+    ])
+    .unwrap()
+    .with_null_mask(key, ValidityMask::from_bools(&mask))
+    .unwrap()
+}
+
+fn tables_identical(a: &Table, b: &Table, label: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{label}: tables differ (values or masks)"))
+    }
+}
+
+#[test]
+fn string_keyed_join_three_way_all_types() {
+    forall_cases(
+        "str-join-3way",
+        6,
+        |rng| {
+            let nl = 30 + rng.usize(120);
+            let nr = 10 + rng.usize(60);
+            (str_table(rng, nl, "k", "v"), str_table(rng, nr, "rk", "w"))
+        },
+        |(l, r)| {
+            for mode in [DictEncoding::Off, DictEncoding::Auto] {
+                set_dict_encoding(mode);
+                for how in [
+                    JoinType::Inner,
+                    JoinType::Left,
+                    JoinType::Right,
+                    JoinType::Outer,
+                    JoinType::Semi,
+                    JoinType::Anti,
+                ] {
+                    // Semi/Anti keep only the left columns
+                    let canon: &[(&str, SortOrder)] =
+                        if matches!(how, JoinType::Semi | JoinType::Anti) {
+                            &[("k", SortOrder::Asc), ("v", SortOrder::Asc)]
+                        } else {
+                            &[
+                                ("k", SortOrder::Asc),
+                                ("v", SortOrder::Asc),
+                                ("w", SortOrder::Asc),
+                            ]
+                        };
+                    let label = |engines: &str| format!("{how} [{mode:?}]: {engines}");
+                    let hf = HiFrames::with_workers(3);
+                    let ours = hf
+                        .table("l", l.clone())
+                        .join_on(&hf.table("r", r.clone()), &[("k", "rk")], how)
+                        .sort_by_keys(canon)
+                        .collect()
+                        .map_err(|e| e.to_string())?;
+                    let srl = serial::join_on(l, r, &[("k", "rk")], how)
+                        .map_err(|e| e.to_string())?
+                        .sorted_by_keys(canon)
+                        .map_err(|e| e.to_string())?;
+                    let eng = SparkLike::new(2, 3);
+                    let spk = eng
+                        .join_on(&eng.parallelize(l), &eng.parallelize(r), &[("k", "rk")], how)
+                        .and_then(|rdd| eng.collect(&rdd))
+                        .map_err(|e| e.to_string())?
+                        .sorted_by_keys(canon)
+                        .map_err(|e| e.to_string())?;
+                    tables_identical(&ours, &srl, &label("hiframes vs serial"))?;
+                    tables_identical(&srl, &spk, &label("serial vs sparklike"))?;
+                }
+            }
+            set_dict_encoding(DictEncoding::Auto);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn string_keyed_aggregate_three_way() {
+    forall_cases(
+        "str-aggregate-3way",
+        8,
+        |rng| {
+            let n = 50 + rng.usize(200);
+            str_table(rng, n, "k", "v")
+        },
+        |t| {
+            // order-independent aggregates only: the three engines may fold
+            // groups in different orders, and the outputs must still be
+            // byte-identical
+            let aggs = vec![
+                AggExpr::new("n", AggFn::Count, col("v")),
+                AggExpr::new("lo", AggFn::Min, col("v")),
+                AggExpr::new("hi", AggFn::Max, col("v")),
+            ];
+            let canon: &[(&str, SortOrder)] = &[("k", SortOrder::Asc)];
+            for mode in [DictEncoding::Off, DictEncoding::Auto] {
+                set_dict_encoding(mode);
+                let hf = HiFrames::with_workers(3);
+                let ours = hf
+                    .table("t", t.clone())
+                    .aggregate_by(&["k"], aggs.clone())
+                    .sort_by_keys(canon)
+                    .collect()
+                    .map_err(|e| e.to_string())?;
+                let srl = serial::aggregate_by(t, &["k"], &aggs)
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                let eng = SparkLike::new(2, 3);
+                let spk = eng
+                    .aggregate_by(&eng.parallelize(t), &["k"], &aggs)
+                    .and_then(|rdd| eng.collect(&rdd))
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                tables_identical(&ours, &srl, &format!("[{mode:?}] hiframes vs serial"))?;
+                tables_identical(&srl, &spk, &format!("[{mode:?}] serial vs sparklike"))?;
+            }
+            set_dict_encoding(DictEncoding::Auto);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn string_keyed_sort_agrees_with_serial() {
+    forall_cases(
+        "str-sort",
+        8,
+        |rng| {
+            let n = 50 + rng.usize(250);
+            (str_table(rng, n, "k", "v"), rng.bool(0.5))
+        },
+        |(t, desc)| {
+            let dir = if *desc { SortOrder::Desc } else { SortOrder::Asc };
+            // v breaks ties, so the row order is fully determined
+            let keys: &[(&str, SortOrder)] = &[("k", dir), ("v", SortOrder::Asc)];
+            for mode in [DictEncoding::Off, DictEncoding::Auto] {
+                set_dict_encoding(mode);
+                for workers in [2usize, 3] {
+                    let hf = HiFrames::with_workers(workers);
+                    let ours = hf
+                        .table("t", t.clone())
+                        .sort_by_keys(keys)
+                        .collect()
+                        .map_err(|e| e.to_string())?;
+                    let srl = t.sorted_by_keys(keys).map_err(|e| e.to_string())?;
+                    tables_identical(
+                        &ours,
+                        &srl,
+                        &format!("[{mode:?}] workers={workers} sort vs serial"),
+                    )?;
+                }
+            }
+            set_dict_encoding(DictEncoding::Auto);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn string_partitioned_window_three_way() {
+    forall_cases(
+        "str-window-3way",
+        8,
+        |rng| {
+            let n = 30 + rng.usize(150);
+            let (keys, mask) = random_str_keys(rng, n);
+            // a globally-unique order column makes the within-partition
+            // order (and so every running sum) fully deterministic
+            let mut o: Vec<i64> = (0..n as i64).collect();
+            for i in (1..n).rev() {
+                o.swap(i, rng.usize(i + 1));
+            }
+            Table::from_pairs(vec![
+                ("k", Column::Str(keys)),
+                ("o", Column::I64(o)),
+                (
+                    "v",
+                    Column::I64((0..n).map(|_| rng.i64_range(-50, 50)).collect()),
+                ),
+            ])
+            .unwrap()
+            .with_null_mask("k", ValidityMask::from_bools(&mask))
+            .unwrap()
+        },
+        |t| {
+            let aggs = vec![WindowAgg::new(
+                "cs",
+                WindowFunc::Sum,
+                WindowFrame::CumulativeToCurrent,
+                col("v"),
+            )];
+            let order: &[(&str, SortOrder)] = &[("o", SortOrder::Asc)];
+            let canon: &[(&str, SortOrder)] = &[("k", SortOrder::Asc), ("o", SortOrder::Asc)];
+            for mode in [DictEncoding::Off, DictEncoding::Auto] {
+                set_dict_encoding(mode);
+                let hf = HiFrames::with_workers(3);
+                let ours = hf
+                    .table("t", t.clone())
+                    .window()
+                    .partition_by(&["k"])
+                    .order_by(order)
+                    .agg("cs", WindowFunc::Sum, col("v"))
+                    .build()
+                    .collect()
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                let srl = serial::window(t, &["k"], order, &aggs)
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                let eng = SparkLike::new(2, 3);
+                let spk = eng
+                    .window_over(&eng.parallelize(t), &["k"], order, &aggs)
+                    .and_then(|rdd| eng.collect(&rdd))
+                    .map_err(|e| e.to_string())?
+                    .sorted_by_keys(canon)
+                    .map_err(|e| e.to_string())?;
+                // engines may order output columns differently; compare the
+                // shared columns byte-for-byte, masks included
+                for c in ["k", "o", "v", "cs"] {
+                    for (other, engines) in
+                        [(&srl, "hiframes vs serial"), (&spk, "hiframes vs sparklike")]
+                    {
+                        if ours.column(c) != other.column(c) || ours.mask(c) != other.mask(c) {
+                            return Err(format!("[{mode:?}] {engines}: column {c} differs"));
+                        }
+                    }
+                }
+            }
+            set_dict_encoding(DictEncoding::Auto);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn string_keyed_spill_run_ships_dict_frames() {
+    // the out-of-core path must agree with the serial oracle while string
+    // key columns ride the dictionary wire format through shuffle and spill
+    set_dict_encoding(DictEncoding::Auto);
+    let mut rng = Rng::new(42);
+    let left = str_table(&mut rng, 3000, "k", "v");
+    let right = str_table(&mut rng, 1000, "rk", "w");
+    let plan = Plan::Sort {
+        input: Box::new(Plan::Join {
+            left: Box::new(source_mem("l", left.clone())),
+            right: Box::new(source_mem("r", right.clone())),
+            on: vec![("k".into(), "rk".into())],
+            how: JoinType::Left,
+            strategy: JoinStrategy::Hash,
+        }),
+        keys: vec![
+            ("k".into(), SortOrder::Asc),
+            ("v".into(), SortOrder::Asc),
+            ("w".into(), SortOrder::Asc),
+        ],
+    };
+    let serial = collect_serial(plan.clone()).unwrap();
+    let input_bytes = left.byte_size() + right.byte_size();
+    for frac in [0.25f64, 0.05] {
+        let budget = ((input_bytes as f64) * frac) as usize;
+        let o = ExecOptions {
+            workers: 2,
+            mem_budget: Some(budget),
+            ..Default::default()
+        };
+        let before = spill_stats().snapshot();
+        let got = collect(plan.clone(), &o).unwrap();
+        let after = spill_stats().snapshot();
+        assert_eq!(got, serial, "frac={frac}");
+        if frac <= 0.05 {
+            // counters are process-global; assert a monotonic delta only
+            assert!(
+                after.bytes_spilled > before.bytes_spilled,
+                "frac={frac}: nothing spilled"
+            );
+        }
+    }
 }

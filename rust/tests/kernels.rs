@@ -1,0 +1,591 @@
+//! Differential kernel-fuzz suite for the vectorized kernel floor.
+//!
+//! Every fast-path kernel is checked byte-for-byte against a scalar
+//! reference on randomized inputs:
+//! * LSD radix argsort vs. stable comparison argsort over packed
+//!   [`SortKeys`] rows — mixed dtypes, mixed directions, `i64::MIN/MAX`,
+//!   nulls-first flag bytes, duplicate-heavy and already-sorted inputs,
+//!   plus an explicit stability witness.
+//! * Bit-parallel [`ValidityMask`] kernels (filter/take/slice/extend/
+//!   and/or/popcount) vs. per-bit references, at word-boundary lengths
+//!   (63/64/65, 127/128/129) and all-valid / all-null densities.
+//! * Dictionary-encoded string wire frames and dictionary-encoded packed
+//!   string keys vs. the escaped-bytes path — empty strings, embedded
+//!   NULs, and high cardinality forcing code-width promotion.
+//!
+//! Seeds and case counts come from `HIFRAMES_PROP_SEED` /
+//! `HIFRAMES_PROP_CASES` (CI's kernel-fuzz step runs 256 cases); a failure
+//! panic prints the one-case re-run command.
+
+use hiframes::column::{
+    decode_column, encode_column, encode_column_take, encode_column_with, DictEncoding,
+};
+use hiframes::datagen::Rng;
+use hiframes::ops::keys::{cmp_key_rows, key_rows_nullable};
+use hiframes::ops::{group_packed, PackedKeys, SortKeys};
+use hiframes::prelude::*;
+use hiframes::prop::{forall, forall_cases, scaled_cases};
+use std::cmp::Ordering;
+
+const EXTREMES: [i64; 6] = [i64::MIN, i64::MIN + 1, -1, 0, 1, i64::MAX];
+
+fn gen_i64s(rng: &mut Rng, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+    (0..n)
+        .map(|_| {
+            if rng.bool(0.15) {
+                *rng.choose(&EXTREMES)
+            } else {
+                rng.i64_range(lo, hi)
+            }
+        })
+        .collect()
+}
+
+fn gen_strs(rng: &mut Rng, n: usize) -> Vec<String> {
+    const POOL: [&str; 8] = ["", "a", "ab", "ba", "b\0", "\0", "a\0b", "zzz"];
+    (0..n)
+        .map(|_| {
+            let base = *rng.choose(&POOL);
+            if rng.bool(0.3) {
+                format!("{base}{}", rng.i64_range(0, 40))
+            } else {
+                base.to_string()
+            }
+        })
+        .collect()
+}
+
+fn gen_orders(rng: &mut Rng, ncols: usize) -> Vec<SortOrder> {
+    (0..ncols)
+        .map(|_| {
+            if rng.bool(0.5) {
+                SortOrder::Desc
+            } else {
+                SortOrder::Asc
+            }
+        })
+        .collect()
+}
+
+fn opt_mask(rng: &mut Rng, n: usize, p_some: f64) -> Option<Vec<bool>> {
+    if rng.bool(p_some) {
+        Some((0..n).map(|_| rng.bool(0.8)).collect())
+    } else {
+        None
+    }
+}
+
+/// The stable-argsort reference every radix result must reproduce exactly.
+fn stable_argsort(n: usize, mut cmp: impl FnMut(usize, usize) -> Ordering) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| cmp(a, b));
+    idx
+}
+
+// ---------------------------------------------------------------------------
+// Radix argsort vs. comparison argsort
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct FixedKeysCase {
+    a: Vec<i64>,
+    b: Vec<bool>,
+    mask_a: Option<Vec<bool>>,
+    orders: Vec<SortOrder>,
+    with_flags: bool,
+}
+
+fn gen_fixed_case(rng: &mut Rng, lo: i64, hi: i64) -> FixedKeysCase {
+    let n = rng.usize(300);
+    FixedKeysCase {
+        a: gen_i64s(rng, n, lo, hi),
+        b: (0..n).map(|_| rng.bool(0.5)).collect(),
+        mask_a: opt_mask(rng, n, 0.5),
+        orders: gen_orders(rng, 2),
+        with_flags: rng.bool(0.5),
+    }
+}
+
+fn check_fixed_case(case: &FixedKeysCase) -> Result<(), String> {
+    let a = Column::I64(case.a.clone());
+    let b = Column::Bool(case.b.clone());
+    let mask = case.mask_a.as_ref().map(|m| ValidityMask::from_bools(m));
+    let masks = [mask.as_ref(), None];
+    let sk = SortKeys::pack_nullable(&[&a, &b], &masks, &case.orders, case.with_flags)
+        .map_err(|e| e.to_string())?
+        .expect("Int64/Bool keys pack to fixed width");
+    let radix = sk.radix_argsort();
+    let reference = sk.comparison_argsort();
+    if radix != reference {
+        return Err(format!("radix {radix:?} != comparison {reference:?}"));
+    }
+    if sk.argsort() != reference {
+        return Err("argsort dispatch disagrees with comparison sort".into());
+    }
+    // stability witness: equal packed rows must keep original index order
+    for w in radix.windows(2) {
+        if sk.row(w[0]) == sk.row(w[1]) && w[0] > w[1] {
+            return Err(format!("unstable on equal rows: {} before {}", w[0], w[1]));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn radix_matches_comparison_on_wide_keys() {
+    forall(
+        "radix-vs-comparison-wide",
+        |rng| gen_fixed_case(rng, -5000, 5000),
+        check_fixed_case,
+    );
+}
+
+#[test]
+fn radix_matches_comparison_on_duplicate_heavy_keys() {
+    forall(
+        "radix-vs-comparison-duplicates",
+        |rng| gen_fixed_case(rng, -2, 3),
+        check_fixed_case,
+    );
+}
+
+#[test]
+fn radix_argsort_range_matches_stable_slice_sort() {
+    forall(
+        "radix-argsort-range",
+        |rng| {
+            let case = gen_fixed_case(rng, -40, 40);
+            let n = case.a.len();
+            let start = if n == 0 { 0 } else { rng.usize(n) };
+            let end = start + rng.usize(n - start + 1);
+            (case, start, end)
+        },
+        |(case, start, end)| {
+            let a = Column::I64(case.a.clone());
+            let b = Column::Bool(case.b.clone());
+            let sk = SortKeys::pack(&[&a, &b], &case.orders)
+                .map_err(|e| e.to_string())?
+                .expect("fixed keys");
+            let got = sk.argsort_range(*start, *end);
+            let mut want: Vec<usize> = (*start..*end).collect();
+            want.sort_by(|&x, &y| sk.row(x).cmp(sk.row(y)));
+            if got != want {
+                return Err(format!("range [{start}, {end}): {got:?} != {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn radix_on_sorted_input_is_identity() {
+    // already-sorted duplicate runs: the stable sort is the identity, and
+    // the constant high bytes exercise the skip-pass fast path
+    let col = Column::I64((0..1000).map(|i| i / 4).collect());
+    let sk = SortKeys::pack(&[&col], &[SortOrder::Asc])
+        .unwrap()
+        .expect("fixed keys");
+    let identity: Vec<usize> = (0..1000).collect();
+    assert_eq!(sk.radix_argsort(), identity);
+    assert_eq!(sk.argsort(), identity);
+}
+
+#[test]
+fn null_flag_bytes_order_nulls_first_asc_last_desc() {
+    let vals = Column::I64(vec![5, 3, 5, 1]);
+    let mask = ValidityMask::from_bools(&[true, false, true, false]);
+    let asc = SortKeys::pack_nullable(&[&vals], &[Some(&mask)], &[SortOrder::Asc], true)
+        .unwrap()
+        .expect("fixed keys");
+    assert_eq!(asc.radix_argsort(), vec![1, 3, 0, 2]);
+    assert_eq!(asc.radix_argsort(), asc.comparison_argsort());
+    let desc = SortKeys::pack_nullable(&[&vals], &[Some(&mask)], &[SortOrder::Desc], true)
+        .unwrap()
+        .expect("fixed keys");
+    assert_eq!(desc.radix_argsort(), vec![0, 2, 1, 3]);
+    assert_eq!(desc.radix_argsort(), desc.comparison_argsort());
+}
+
+#[test]
+fn string_sort_keys_match_cmp_key_rows_oracle() {
+    forall(
+        "string-sort-keys-vs-cmp-key-rows",
+        |rng| {
+            let n = rng.usize(150);
+            let s = gen_strs(rng, n);
+            let v = gen_i64s(rng, n, -10, 10);
+            let mask_s = opt_mask(rng, n, 0.5);
+            let orders = gen_orders(rng, 2);
+            (s, v, mask_s, orders)
+        },
+        |(s, v, mask_s, orders)| {
+            let cs = Column::Str(s.clone());
+            let cv = Column::I64(v.clone());
+            let mask = mask_s.as_ref().map(|m| ValidityMask::from_bools(m));
+            let krows = key_rows_nullable(&[&cs, &cv], &[mask.as_ref(), None])
+                .map_err(|e| e.to_string())?;
+            let sk = SortKeys::from_key_rows(&krows, orders);
+            let got = sk.argsort();
+            let want = stable_argsort(krows.len(), |a, b| {
+                cmp_key_rows(&krows[a], &krows[b], orders)
+            });
+            if got != want {
+                return Err(format!("dict sort keys {got:?} != key-row oracle {want:?}"));
+            }
+            if sk.radix_argsort() != want || sk.comparison_argsort() != want {
+                return Err("radix/comparison disagree on dict-coded string keys".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Bit-parallel validity-mask kernels vs. per-bit references
+// ---------------------------------------------------------------------------
+
+const BOUNDARY_LENS: [usize; 13] = [0, 1, 2, 31, 32, 33, 63, 64, 65, 127, 128, 129, 200];
+
+#[derive(Debug, Clone)]
+struct MaskCase {
+    bits: Vec<bool>,
+    bits2: Vec<bool>,
+    keep: Vec<bool>,
+    idx: Vec<usize>,
+    opt_idx: Vec<Option<usize>>,
+    start: usize,
+    slice_len: usize,
+    grow: usize,
+}
+
+fn gen_mask_case(rng: &mut Rng) -> MaskCase {
+    let len = if rng.bool(0.25) {
+        rng.usize(300)
+    } else {
+        *rng.choose(&BOUNDARY_LENS)
+    };
+    // all-valid, all-null, and mixed densities
+    let p = *rng.choose(&[0.0, 0.1, 0.5, 0.9, 1.0]);
+    let bits: Vec<bool> = (0..len).map(|_| rng.bool(p)).collect();
+    let bits2: Vec<bool> = (0..len).map(|_| rng.bool(0.5)).collect();
+    let keep: Vec<bool> = (0..len).map(|_| rng.bool(0.5)).collect();
+    let n_idx = rng.usize(2 * len + 1);
+    let idx: Vec<usize> = (0..n_idx).map(|_| rng.usize(len.max(1))).collect();
+    let opt_idx: Vec<Option<usize>> = (0..n_idx)
+        .map(|_| {
+            if rng.bool(0.3) {
+                None
+            } else {
+                Some(rng.usize(len.max(1)))
+            }
+        })
+        .collect();
+    let start = rng.usize(len + 1);
+    let slice_len = rng.usize(len - start + 1);
+    MaskCase {
+        idx: if len == 0 { Vec::new() } else { idx },
+        opt_idx: if len == 0 { Vec::new() } else { opt_idx },
+        bits,
+        bits2,
+        keep,
+        start,
+        slice_len,
+        grow: rng.usize(130),
+    }
+}
+
+fn check_mask_case(case: &MaskCase) -> Result<(), String> {
+    let bits = &case.bits;
+    let m = ValidityMask::from_bools(bits);
+    let eq = |what: &str, got: Vec<bool>, want: Vec<bool>| {
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("{what}: {got:?} != {want:?}"))
+        }
+    };
+    eq("to_bools roundtrip", m.to_bools(), bits.clone())?;
+    if (0..bits.len()).any(|i| m.get(i) != bits[i]) {
+        return Err("get(i) disagrees with source bits".into());
+    }
+    if m.count_valid() != bits.iter().filter(|&&b| b).count() {
+        return Err("count_valid != per-bit popcount".into());
+    }
+    if m.all_valid() != bits.iter().all(|&b| b) {
+        return Err("all_valid != per-bit all()".into());
+    }
+    let m2 = ValidityMask::from_bools(&case.bits2);
+    let zip_with = |f: fn(bool, bool) -> bool| -> Vec<bool> {
+        bits.iter().zip(&case.bits2).map(|(&x, &y)| f(x, y)).collect()
+    };
+    eq("and", m.and(&m2).to_bools(), zip_with(|x, y| x && y))?;
+    eq("or", m.or(&m2).to_bools(), zip_with(|x, y| x || y))?;
+    let filtered: Vec<bool> = bits
+        .iter()
+        .zip(&case.keep)
+        .filter(|&(_, &k)| k)
+        .map(|(&b, _)| b)
+        .collect();
+    eq("filter", m.filter(&case.keep).to_bools(), filtered)?;
+    let taken: Vec<bool> = case.idx.iter().map(|&i| bits[i]).collect();
+    eq("take", m.take(&case.idx).to_bools(), taken)?;
+    let opt_taken: Vec<bool> = case
+        .opt_idx
+        .iter()
+        .map(|o| o.map_or(false, |i| bits[i]))
+        .collect();
+    eq("take_opt", m.take_opt(&case.opt_idx).to_bools(), opt_taken)?;
+    let sliced = bits[case.start..case.start + case.slice_len].to_vec();
+    eq("slice", m.slice(case.start, case.slice_len).to_bools(), sliced)?;
+    let mut grown = m.clone();
+    grown.extend(&m2);
+    let mut want: Vec<bool> = bits.clone();
+    want.extend_from_slice(&case.bits2);
+    eq("extend", grown.to_bools(), want.clone())?;
+    grown.extend_valid(case.grow);
+    want.extend((0..case.grow).map(|_| true));
+    eq("extend_valid", grown.to_bools(), want)
+}
+
+#[test]
+fn mask_kernels_match_per_bit_references() {
+    forall("mask-kernels", gen_mask_case, check_mask_case);
+}
+
+#[test]
+fn column_filter_matches_retain_reference() {
+    forall(
+        "column-filter",
+        |rng| {
+            let len = *rng.choose(&BOUNDARY_LENS);
+            let v = gen_i64s(rng, len, -100, 100);
+            let s = gen_strs(rng, len);
+            let p = *rng.choose(&[0.0, 0.5, 1.0]);
+            let keep: Vec<bool> = (0..len).map(|_| rng.bool(p)).collect();
+            (v, s, keep)
+        },
+        |(v, s, keep)| {
+            let pick = |b: &[bool]| -> Vec<usize> {
+                b.iter()
+                    .enumerate()
+                    .filter(|&(_, &k)| k)
+                    .map(|(i, _)| i)
+                    .collect()
+            };
+            let kept = pick(keep);
+            let got = Column::I64(v.clone()).filter(keep);
+            let want = Column::I64(kept.iter().map(|&i| v[i]).collect());
+            if got != want {
+                return Err(format!("I64 filter: {got:?} != {want:?}"));
+            }
+            let got = Column::Str(s.clone()).filter(keep);
+            let want = Column::Str(kept.iter().map(|&i| s[i].clone()).collect());
+            if got != want {
+                return Err(format!("Str filter: {got:?} != {want:?}"));
+            }
+            if hiframes::column::count_true(keep) != kept.len() {
+                return Err("count_true != per-bit count".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Dictionary-encoded string keys and wire frames vs. the escaped-bytes path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dict_wire_roundtrips_under_every_mode() {
+    forall(
+        "dict-wire-roundtrip",
+        |rng| {
+            let n = rng.usize(200);
+            gen_strs(rng, n)
+        },
+        |v| {
+            let col = Column::Str(v.clone());
+            let mut sizes = Vec::new();
+            for mode in [DictEncoding::Off, DictEncoding::Force, DictEncoding::Auto] {
+                let mut buf = Vec::new();
+                encode_column_with(&col, mode, &mut buf);
+                let mut pos = 0;
+                let back = decode_column(&buf, &mut pos).map_err(|e| e.to_string())?;
+                if back != col {
+                    return Err(format!("{mode:?} roundtrip changed the column"));
+                }
+                if pos != buf.len() {
+                    return Err(format!("{mode:?} decode consumed {pos} of {} bytes", buf.len()));
+                }
+                sizes.push(buf.len());
+            }
+            // Auto picks the dictionary frame only when strictly smaller
+            if sizes[2] > sizes[0] {
+                return Err(format!("auto frame {} > plain frame {}", sizes[2], sizes[0]));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dict_code_width_promotes_with_cardinality() {
+    // distinct counts straddling the u8 and u16 code-width limits; Force
+    // keeps the dictionary frame even when plain encoding would be smaller
+    for distinct in [200usize, 300, 70_000] {
+        let v: Vec<String> = (0..distinct + 50).map(|i| format!("k{}", i % distinct)).collect();
+        let col = Column::Str(v);
+        let mut buf = Vec::new();
+        encode_column_with(&col, DictEncoding::Force, &mut buf);
+        assert_eq!(buf[0], 4, "Force must emit the dictionary tag");
+        let mut pos = 0;
+        let back = decode_column(&buf, &mut pos).unwrap();
+        assert_eq!(back, col, "promotion roundtrip at {distinct} distinct codes");
+    }
+}
+
+#[test]
+fn dict_frame_wins_on_duplicates_and_loses_on_unique_strings() {
+    let dup: Vec<String> = (0..500).map(|i| format!("long-shared-payload-{}", i % 4)).collect();
+    let mut buf = Vec::new();
+    encode_column_with(&Column::Str(dup), DictEncoding::Auto, &mut buf);
+    assert_eq!(buf[0], 4, "duplicate-heavy strings should dict-encode");
+    let unique: Vec<String> = (0..500).map(|i| format!("unique-{i}")).collect();
+    buf.clear();
+    encode_column_with(&Column::Str(unique), DictEncoding::Auto, &mut buf);
+    assert_eq!(buf[0], 3, "unique strings should stay plain");
+}
+
+#[test]
+fn encode_take_matches_take_then_encode() {
+    forall(
+        "dict-encode-take",
+        |rng| {
+            let n = rng.usize(150);
+            let v = gen_strs(rng, n);
+            let n_idx = rng.usize(2 * v.len() + 1);
+            let idx: Vec<usize> = (0..n_idx).map(|_| rng.usize(v.len().max(1))).collect();
+            (v.clone(), if v.is_empty() { Vec::new() } else { idx })
+        },
+        |(v, idx)| {
+            let col = Column::Str(v.clone());
+            let mut direct = Vec::new();
+            encode_column_take(&col, idx, &mut direct);
+            let mut staged = Vec::new();
+            encode_column(&col.take(idx), &mut staged);
+            if direct != staged {
+                return Err("encode_column_take != take-then-encode".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_dict_keys_agree_with_key_row_oracle() {
+    forall_cases(
+        "packed-dict-keys",
+        scaled_cases(32),
+        |rng| {
+            let n = rng.usize(40);
+            let m = rng.usize(40);
+            let any_mask = rng.bool(0.6);
+            (
+                gen_strs(rng, n),
+                gen_strs(rng, m),
+                if any_mask { opt_mask(rng, n, 0.7) } else { None },
+                if any_mask { opt_mask(rng, m, 0.7) } else { None },
+            )
+        },
+        |(l, r, lmask, rmask)| {
+            let (cl, cr) = (Column::Str(l.clone()), Column::Str(r.clone()));
+            let ml = lmask.as_ref().map(|m| ValidityMask::from_bools(m));
+            let mr = rmask.as_ref().map(|m| ValidityMask::from_bools(m));
+            // both join sides must agree on the flag-byte layout
+            let flags = ml.is_some() || mr.is_some();
+            let pl = PackedKeys::pack_masked(&[&cl], &[ml.as_ref()], flags)
+                .map_err(|e| e.to_string())?;
+            let pr = PackedKeys::pack_masked(&[&cr], &[mr.as_ref()], flags)
+                .map_err(|e| e.to_string())?;
+            if !matches!(pl, PackedKeys::Dict { .. }) {
+                return Err("single string key column must pack to the Dict layout".into());
+            }
+            let kl = key_rows_nullable(&[&cl], &[ml.as_ref()]).map_err(|e| e.to_string())?;
+            let kr = key_rows_nullable(&[&cr], &[mr.as_ref()]).map_err(|e| e.to_string())?;
+            for (i, krow_l) in kl.iter().enumerate() {
+                for (j, krow_r) in kr.iter().enumerate() {
+                    let want = cmp_key_rows(krow_l, krow_r, &[]);
+                    if pl.cmp_rows(i, &pr, j) != want {
+                        return Err(format!("cmp_rows({i}, {j}) != key-row oracle {want:?}"));
+                    }
+                    if pl.eq_rows(i, &pr, j) != (want == Ordering::Equal) {
+                        return Err(format!("eq_rows({i}, {j}) != key-row oracle"));
+                    }
+                    if want == Ordering::Equal && pl.hash_row(i) != pr.hash_row(j) {
+                        return Err(format!("equal rows {i}/{j} hash differently"));
+                    }
+                }
+            }
+            // dense grouping over dict codes matches distinct key-row count
+            let mut distinct = kl.clone();
+            distinct.sort_by(|a, b| cmp_key_rows(a, b, &[]));
+            distinct.dedup();
+            if group_packed(&pl).num_groups() != distinct.len() {
+                return Err("group_packed group count != distinct key rows".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dict_layout_is_byte_identical_to_bytes_layout() {
+    forall_cases(
+        "dict-vs-bytes-layout",
+        scaled_cases(32),
+        |rng| {
+            let n = rng.usize(40);
+            (gen_strs(rng, n), opt_mask(rng, n, 0.5))
+        },
+        |(v, maskbits)| {
+            let col = Column::Str(v.clone());
+            let mask = maskbits.as_ref().map(|m| ValidityMask::from_bools(m));
+            let dict = PackedKeys::pack_nullable(&[&col], &[mask.as_ref()])
+                .map_err(|e| e.to_string())?;
+            // mirror the Dict rows as an explicit Bytes layout: the dict
+            // entries are exact Bytes-layout encodings, so the two must be
+            // mutually comparable and hash identically
+            let mut offsets = vec![0usize];
+            let mut data = Vec::new();
+            for i in 0..dict.len() {
+                dict.append_row_bytes(i, &mut data);
+                offsets.push(data.len());
+            }
+            let bytes = PackedKeys::Bytes { offsets, data };
+            for i in 0..dict.len() {
+                if dict.hash_row(i) != bytes.hash_row(i) {
+                    return Err(format!("row {i} hashes differently across layouts"));
+                }
+                let mut enc = Vec::new();
+                bytes.append_row_bytes(i, &mut enc);
+                if !dict.row_matches(i, &enc) {
+                    return Err(format!("row {i}: row_matches rejects its own encoding"));
+                }
+                if dict.hash_encoded_row(&enc) != dict.hash_row(i) {
+                    return Err(format!("row {i}: encoded-row hash disagrees"));
+                }
+                for j in 0..dict.len() {
+                    if dict.cmp_rows(i, &bytes, j) != bytes.cmp_rows(i, &dict, j) {
+                        return Err(format!("cmp_rows({i}, {j}) not layout-symmetric"));
+                    }
+                    let both_valid = maskbits.as_ref().map_or(true, |m| m[i] && m[j]);
+                    let both_null = maskbits.as_ref().map_or(false, |m| !m[i] && !m[j]);
+                    if dict.eq_rows(i, &bytes, j) != (v[i] == v[j] && both_valid || both_null) {
+                        return Err(format!("eq_rows({i}, {j}) != string/null oracle"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
