@@ -10,6 +10,7 @@
 //! Q05) used by the end-to-end example.
 
 pub mod gen;
+pub mod q01;
 pub mod q05;
 pub mod q25;
 pub mod q26;

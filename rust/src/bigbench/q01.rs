@@ -1,0 +1,206 @@
+//! TPCx-BB-style Q01 — top spenders per category, the workload the
+//! incremental subsystem (DESIGN.md §4.9) targets: a dashboard-style
+//! standing query over a ticking fact table. Web sales arrive in
+//! micro-batches; after every tick the dashboard wants the current top
+//! [`TOP_K`] `(item, customer)` pairs of each category by revenue.
+//!
+//! Shape:
+//! 1. aggregate `web_sales` per `(ws_item_sk, ws_bill_customer_sk)` —
+//!    order count `n` and revenue `rev = sum(ws_net_paid)`;
+//! 2. left-join the `item` dimension for `i_category`;
+//! 3. window: partition by category, order by `(rev desc, keys asc)`,
+//!    `rank()`;
+//! 4. keep rank ≤ [`TOP_K`].
+//!
+//! [`hiframes_query`] runs it as one batch collect; [`standing_query`]
+//! drives the same plan through a [`Session`], pushing the fact table in
+//! `n_ticks` micro-batches. The aggregate is the only stateful node — the
+//! join and window replay over its (dimension-sized) output — so per-tick
+//! work tracks the delta, not the accumulated history.
+
+use super::BbTables;
+use crate::baseline::serial;
+use crate::expr::{col, lit, AggExpr, AggFn};
+use crate::frame::{DataFrame, HiFrames};
+use crate::ir::{SortOrder, WindowAgg, WindowFrame, WindowFunc};
+use crate::stream::{Session, TickReport};
+use crate::table::Table;
+use crate::types::JoinType;
+use anyhow::Result;
+
+/// `(item, customer)` pairs kept per category.
+pub const TOP_K: i64 = 5;
+
+/// The standing plan over whatever `web_sales` rows the source holds.
+fn plan(hf: &HiFrames, db: &BbTables, web_sales: Table) -> DataFrame {
+    let ws = hf.table("web_sales", web_sales);
+    let item = hf.table("item", db.item.clone());
+    ws.group_by(&["ws_item_sk", "ws_bill_customer_sk"])
+        .agg("n", AggFn::Count, col("ws_net_paid"))
+        .agg("rev", AggFn::Sum, col("ws_net_paid"))
+        .build()
+        .join_on(&item, &[("ws_item_sk", "i_item_sk")], JoinType::Left)
+        .window()
+        .partition_by(&["i_category"])
+        .order_by(&[
+            ("rev", SortOrder::Desc),
+            ("ws_item_sk", SortOrder::Asc),
+            ("ws_bill_customer_sk", SortOrder::Asc),
+        ])
+        .rank("r")
+        .build()
+        .filter(col("r").le(lit(TOP_K)))
+}
+
+/// HiFrames implementation, one batch collect over the whole fact table.
+pub fn hiframes_query(hf: &HiFrames, db: &BbTables) -> DataFrame {
+    plan(hf, db, db.web_sales.clone())
+}
+
+/// The same query as a standing [`Session`]: seed with an empty fact
+/// table, push `web_sales` in `n_ticks` micro-batches, tick after each.
+/// Returns the final output — byte-identical to
+/// `hiframes_query(...).collect()` — and the per-tick reports.
+pub fn standing_query(
+    hf: &HiFrames,
+    db: &BbTables,
+    n_ticks: usize,
+) -> Result<(Table, Vec<TickReport>)> {
+    let mut session = standing_session(hf, db)?;
+    let total = db.web_sales.num_rows();
+    let chunk = total.div_ceil(n_ticks.max(1));
+    let mut out = session.tick()?; // tick 0: empty dashboard
+    let mut start = 0;
+    while start < total {
+        let len = chunk.min(total - start);
+        session.push("web_sales", db.web_sales.slice(start, len))?;
+        start += len;
+        out = session.tick()?;
+    }
+    Ok((out, session.reports().to_vec()))
+}
+
+/// The standing-query session itself (empty fact table; caller pushes).
+pub fn standing_session(hf: &HiFrames, db: &BbTables) -> Result<Session> {
+    let seed = Table::empty(db.web_sales.schema().clone());
+    hf.session(&plan(hf, db, seed))
+}
+
+/// The serial (Pandas-like) oracle for the batch query.
+pub fn serial_query(db: &BbTables) -> Result<Table> {
+    let agg = serial::aggregate_by(
+        &db.web_sales,
+        &["ws_item_sk", "ws_bill_customer_sk"],
+        &[
+            AggExpr::new("n", AggFn::Count, col("ws_net_paid")),
+            AggExpr::new("rev", AggFn::Sum, col("ws_net_paid")),
+        ],
+    )?;
+    let joined =
+        serial::join_on(&agg, &db.item, &[("ws_item_sk", "i_item_sk")], JoinType::Left)?;
+    let win = serial::window(
+        &joined,
+        &["i_category"],
+        &[
+            ("rev", SortOrder::Desc),
+            ("ws_item_sk", SortOrder::Asc),
+            ("ws_bill_customer_sk", SortOrder::Asc),
+        ],
+        &[WindowAgg::new(
+            "r",
+            WindowFunc::Rank,
+            WindowFrame::CumulativeToCurrent,
+            lit(0i64),
+        )],
+    )?;
+    serial::filter(&win, &col("r").le(lit(TOP_K)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigbench::{generate, GenOptions};
+    use crate::exec::ExecOptions;
+    use crate::ops::aggregate::AggStrategy;
+    use crate::passes::PassOptions;
+    use crate::types::SortOrder;
+
+    fn db() -> BbTables {
+        generate(&GenOptions {
+            scale_factor: 0.02,
+            ..Default::default()
+        })
+    }
+
+    /// Context matching the knobs a [`Session`] forces, so batch collects
+    /// in it are byte-comparable with ticked output.
+    fn ctx(workers: usize) -> HiFrames {
+        HiFrames::new(ExecOptions {
+            workers,
+            agg_strategy: AggStrategy::RawShuffle,
+            mem_budget: None,
+            profile: false,
+            passes: PassOptions {
+                skew_join: false,
+                ..Default::default()
+            },
+        })
+    }
+
+    const SORT: [(&str, SortOrder); 3] = [
+        ("i_category", SortOrder::Asc),
+        ("r", SortOrder::Asc),
+        ("ws_item_sk", SortOrder::Asc),
+    ];
+
+    #[test]
+    fn ticked_standing_query_matches_batch() {
+        let db = db();
+        for workers in [2usize, 3] {
+            let hf = ctx(workers);
+            let batch = hiframes_query(&hf, &db).collect().unwrap();
+            assert!(batch.num_rows() > 0);
+            let (ticked, reports) = standing_query(&hf, &db, 7).unwrap();
+            assert_eq!(batch.schema().names(), ticked.schema().names());
+            for i in 0..batch.num_cols() {
+                assert_eq!(
+                    batch.column_at(i),
+                    ticked.column_at(i),
+                    "workers={workers} column {i}"
+                );
+                assert_eq!(
+                    batch.mask_at(i),
+                    ticked.mask_at(i),
+                    "workers={workers} mask {i}"
+                );
+            }
+            // the aggregate keeps state: later ticks must avoid re-folding
+            let last = reports.last().unwrap();
+            assert!(!last.fallback, "q01 must not fall back");
+            assert!(
+                last.rows_avoided > 0,
+                "workers={workers}: no rows avoided: {last:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hiframes_matches_serial() {
+        let db = db();
+        let expect = serial_query(&db).unwrap().sorted_by_keys(&SORT).unwrap();
+        assert!(expect.num_rows() > 0);
+        let hf = ctx(3);
+        let got = hiframes_query(&hf, &db)
+            .collect()
+            .unwrap()
+            .sorted_by_keys(&SORT)
+            .unwrap();
+        assert_eq!(got.num_rows(), expect.num_rows());
+        for c in ["i_category", "ws_item_sk", "ws_bill_customer_sk", "n", "rev", "r"] {
+            assert_eq!(got.column(c).unwrap(), expect.column(c).unwrap(), "column {c}");
+            assert_eq!(got.mask(c), expect.mask(c), "mask {c}");
+        }
+        let ranks = got.column("r").unwrap().as_i64();
+        assert!(ranks.iter().all(|&r| r >= 1 && r <= TOP_K));
+    }
+}

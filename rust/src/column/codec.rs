@@ -57,11 +57,13 @@ static DICT_OVERRIDE: AtomicU8 = AtomicU8::new(u8::MAX);
 
 fn env_dict_default() -> DictEncoding {
     static CELL: OnceLock<DictEncoding> = OnceLock::new();
-    *CELL.get_or_init(|| match std::env::var("HIFRAMES_DICT").as_deref() {
-        Ok("0") | Ok("false") | Ok("no") | Ok("off") => DictEncoding::Off,
-        Ok("force") => DictEncoding::Force,
-        _ => DictEncoding::Auto,
-    })
+    *CELL.get_or_init(
+        || match crate::config::env_knob("HIFRAMES_DICT").as_deref() {
+            Some("0") | Some("false") | Some("no") | Some("off") => DictEncoding::Off,
+            Some("force") => DictEncoding::Force,
+            _ => DictEncoding::Auto,
+        },
+    )
 }
 
 /// Current dictionary policy (`HIFRAMES_DICT` unless overridden).

@@ -120,12 +120,33 @@ pub fn parse_byte_size(s: &str) -> Option<usize> {
     n.checked_mul(mult).filter(|&n| n > 0)
 }
 
+/// Raw value of one `HIFRAMES_*` environment knob. Unset and blank both
+/// mean "use the default" (`None`); anything else comes back trimmed. Every
+/// env knob (`HIFRAMES_MEM_BUDGET`, `HIFRAMES_DICT`, `HIFRAMES_PROFILE`,
+/// `HIFRAMES_TICK_ROWS`, …) reads through this one helper so unset/blank
+/// handling can't drift between knobs.
+pub fn env_knob(var: &str) -> Option<String> {
+    let v = std::env::var(var).ok()?;
+    let t = v.trim();
+    if t.is_empty() {
+        None
+    } else {
+        Some(t.to_string())
+    }
+}
+
+/// Uniform rejection message for a malformed knob value: names the
+/// variable, echoes the offending text, and says what was expected.
+pub fn knob_error(var: &str, value: &str, expected: &str) -> anyhow::Error {
+    anyhow::anyhow!("{var}={value:?}: expected {expected}")
+}
+
 /// Per-rank memory budget from `HIFRAMES_MEM_BUDGET` (e.g. `64m`, `1g`,
 /// `500000`). `None` — unset, empty, or `0` — means unlimited: every
 /// operator stays on the in-memory path. See `ops/spill.rs` and
 /// DESIGN.md §4.5.
 pub fn mem_budget_from_env() -> Option<usize> {
-    parse_byte_size(&std::env::var("HIFRAMES_MEM_BUDGET").ok()?)
+    parse_byte_size(&env_knob("HIFRAMES_MEM_BUDGET")?)
 }
 
 /// Query profiling default from `HIFRAMES_PROFILE` (`1`/`true`/`yes`).
@@ -134,9 +155,34 @@ pub fn mem_budget_from_env() -> Option<usize> {
 /// span-free hot path. See DESIGN.md §4.7.
 pub fn profile_from_env() -> bool {
     matches!(
-        std::env::var("HIFRAMES_PROFILE").as_deref(),
-        Ok("1") | Ok("true") | Ok("yes")
+        env_knob("HIFRAMES_PROFILE").as_deref(),
+        Some("1") | Some("true") | Some("yes")
     )
+}
+
+/// Parse one `HIFRAMES_TICK_ROWS` value: a positive row count. Split from
+/// [`tick_rows_from_env`] so the rejection messages are testable without
+/// mutating the process environment.
+pub fn parse_tick_rows(s: &str) -> Result<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => Err(knob_error(
+            "HIFRAMES_TICK_ROWS",
+            s,
+            "a positive row count (e.g. 1024)",
+        )),
+    }
+}
+
+/// Default micro-batch size for streaming drivers from
+/// `HIFRAMES_TICK_ROWS`: how many rows the fig13 bench (and any other
+/// ticking driver) pushes per `Session::tick`. `None` — unset or blank —
+/// leaves the driver's own default in force; a set but malformed value is
+/// an error (knobs fail loudly, they are never silently ignored).
+pub fn tick_rows_from_env() -> Result<Option<usize>> {
+    env_knob("HIFRAMES_TICK_ROWS")
+        .map(|v| parse_tick_rows(&v))
+        .transpose()
 }
 
 /// Default worker count for this machine: physical-ish parallelism capped
@@ -212,6 +258,47 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn env_knob_trims_and_blanks() {
+        // Unique throwaway keys so parallel tests can't collide.
+        std::env::set_var("HIFRAMES_KNOBTEST_UNIQ", "  42  ");
+        assert_eq!(env_knob("HIFRAMES_KNOBTEST_UNIQ").as_deref(), Some("42"));
+        std::env::set_var("HIFRAMES_KNOBTEST_UNIQ", "   ");
+        assert_eq!(env_knob("HIFRAMES_KNOBTEST_UNIQ"), None, "blank = unset");
+        std::env::remove_var("HIFRAMES_KNOBTEST_UNIQ");
+        assert_eq!(env_knob("HIFRAMES_KNOBTEST_UNIQ"), None);
+    }
+
+    #[test]
+    fn tick_rows_accepts_positive_counts() {
+        assert_eq!(parse_tick_rows("1").unwrap(), 1);
+        assert_eq!(parse_tick_rows(" 1024 ").unwrap(), 1024);
+    }
+
+    #[test]
+    fn tick_rows_rejects_malformed_values_with_named_messages() {
+        for bad in ["0", "-3", "1.5", "abc", "1k", ""] {
+            let err = parse_tick_rows(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("HIFRAMES_TICK_ROWS") && err.contains("positive row count"),
+                "rejection for {bad:?} must name the knob and the expected form: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn tick_rows_env_parses() {
+        // Like profile_env_parses: no set_var round-trip on a knob that a
+        // sibling test's driver might read mid-run.
+        match env_knob("HIFRAMES_TICK_ROWS") {
+            None => assert!(tick_rows_from_env().unwrap().is_none()),
+            Some(v) => match parse_tick_rows(&v) {
+                Ok(n) => assert_eq!(tick_rows_from_env().unwrap(), Some(n)),
+                Err(_) => assert!(tick_rows_from_env().is_err()),
+            },
+        }
     }
 
     #[test]

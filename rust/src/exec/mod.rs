@@ -393,15 +393,15 @@ pub fn collect_serial(plan: Plan) -> Result<Table> {
 
 /// A graph plus everything the driver pre-computes once so the per-rank
 /// interpreter never re-derives schemas, demand counts or cache keys.
-struct Program {
-    graph: PlanGraph,
-    schemas: FxHashMap<NodeId, Schema>,
+pub(crate) struct Program {
+    pub(crate) graph: PlanGraph,
+    pub(crate) schemas: FxHashMap<NodeId, Schema>,
     /// Demand count per node (consumer edges + 1 for the completion).
     /// Edges from a `Project` straight into a `Source` are *not* counted:
     /// the projection reads the needed column subset from the source
     /// directly (the pruning fast path), so the full source frame is never
     /// materialized for it.
-    uses: FxHashMap<NodeId, usize>,
+    pub(crate) uses: FxHashMap<NodeId, usize>,
     /// Structural cache key for every surviving `Cache` node.
     cache_keys: FxHashMap<NodeId, String>,
     /// Source pins for every surviving `Cache` node (see [`CacheEntry`]).
@@ -418,7 +418,7 @@ impl Program {
     /// Keys are computed on the **pre-substitution** optimized graph: that
     /// is the form every future run optimizes to, so lookup and insert
     /// agree even when caches nest.
-    fn prepare(g: &PlanGraph, cache: Option<&PlanCache>) -> Result<Program> {
+    pub(crate) fn prepare(g: &PlanGraph, cache: Option<&PlanCache>) -> Result<Program> {
         let mut store = Store::like(&g.store);
         let mut map: FxHashMap<NodeId, NodeId> = FxHashMap::default();
         let mut cache_keys: FxHashMap<NodeId, String> = FxHashMap::default();
@@ -610,6 +610,33 @@ fn exec_graph(
     }
     let out = st.fetch(prog.graph.completion);
     Ok((out, st.stats, spans))
+}
+
+/// Interpret one graph node with its child frames supplied directly (the
+/// stream interpreter's replay path: it keeps its own memo across ticks and
+/// hands a node exactly the inputs it demands for this tick). Builds a
+/// throwaway [`RankState`] whose memo holds only `frames`, with remaining-use
+/// counts equal to each child's edge multiplicity so `fetch` bookkeeping
+/// balances.
+pub(crate) fn exec_one_with_inputs(
+    prog: &Program,
+    id: NodeId,
+    frames: FxHashMap<NodeId, LocalFrame>,
+    comm: &Comm,
+    opts: &ExecOptions,
+) -> Result<LocalFrame> {
+    let mut remaining: FxHashMap<NodeId, usize> = FxHashMap::default();
+    for c in prog.graph.store[id].children() {
+        *remaining.entry(c).or_default() += 1;
+    }
+    let mut st = RankState {
+        memo: frames,
+        remaining,
+        fetched: FxHashSet::default(),
+        stats: GraphRunStats::default(),
+        spill_scope: None,
+    };
+    exec_one(prog, id, &mut st, comm, opts, None)
 }
 
 /// Interpret one graph node on this rank, fetching child frames from the
@@ -1215,7 +1242,7 @@ fn exec_one(
 }
 
 /// Concatenate per-rank encoded chunks column-wise, in rank order.
-fn concat_rank_chunks(
+pub(crate) fn concat_rank_chunks(
     schema: &Schema,
     gathered: Vec<Vec<u8>>,
 ) -> Result<(Vec<Column>, Vec<Option<ValidityMask>>)> {
@@ -1237,7 +1264,7 @@ fn concat_rank_chunks(
     Ok((cols, masks))
 }
 
-fn exec_source(
+pub(crate) fn exec_source(
     src: &SourceRef,
     schema: &Schema,
     names: &[&str],
@@ -1275,7 +1302,7 @@ fn exec_source(
 /// Assemble a window node's local output: the input frame's columns (minus
 /// any replaced by an aggregate's `out` name) followed by the aggregate
 /// outputs, in the order the plan schema fixed.
-fn assemble_window_output(
+pub(crate) fn assemble_window_output(
     frame: LocalFrame,
     aggs: &[WindowAgg],
     outs: Vec<NullableColumn>,

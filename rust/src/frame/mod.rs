@@ -114,6 +114,15 @@ impl HiFrames {
         })
     }
 
+    /// Compile `df` into a standing query: a [`Session`](crate::stream::Session)
+    /// keeps the optimized plan and per-rank operator state alive so that
+    /// [`push`](crate::stream::Session::push)ed record batches flow through
+    /// incrementally on every [`tick`](crate::stream::Session::tick)
+    /// (DESIGN.md §4.9).
+    pub fn session(&self, df: &DataFrame) -> Result<crate::stream::Session> {
+        crate::stream::Session::new(df.plan().clone(), self.options().clone())
+    }
+
     /// Read with an explicit expected schema (checked against the file) —
     /// the typed `DataSource(DataFrame{:id=Int64,…})` form.
     pub fn read_hfs_typed(&self, name: &str, path: &Path, schema: Schema) -> Result<DataFrame> {

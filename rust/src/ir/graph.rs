@@ -831,6 +831,18 @@ impl PlanGraph {
         counts
     }
 
+    /// Every `Source` node in execution order as `(id, name)` — the handles
+    /// a streaming [`crate::stream::Session`] exposes for `push`.
+    pub fn source_nodes(&self) -> Vec<(NodeId, String)> {
+        self.execution_order
+            .iter()
+            .filter_map(|&id| match &self.store[id] {
+                Node::Source { name, .. } => Some((id, name.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Functional bottom-up rewrite: each node (children already remapped
     /// into the new store) goes through `rule`, and the result is interned.
     /// Sharing survives by construction — a shared node is processed once
@@ -911,6 +923,49 @@ impl PlanGraph {
 impl fmt::Display for PlanGraph {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(&self.render(false))
+    }
+}
+
+/// Per-source version counters on a compiled graph's `Source` nodes. A
+/// streaming [`crate::stream::Session`] bumps a source's generation on every
+/// appended batch; operator state downstream is valid only for the
+/// generation vector it was built against, so comparing snapshots tells an
+/// incremental walk exactly which sources moved since the last tick.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SourceGenerations {
+    gens: FxHashMap<NodeId, u64>,
+}
+
+impl SourceGenerations {
+    /// Zero generation for every `Source` node in `g`.
+    pub fn new(g: &PlanGraph) -> SourceGenerations {
+        SourceGenerations {
+            gens: g.source_nodes().into_iter().map(|(id, _)| (id, 0)).collect(),
+        }
+    }
+
+    /// Bump `id`'s generation (one appended batch) and return the new value.
+    pub fn bump(&mut self, id: NodeId) -> u64 {
+        let g = self.gens.entry(id).or_insert(0);
+        *g += 1;
+        *g
+    }
+
+    /// Current generation of `id` (0 if never bumped / not a source).
+    pub fn get(&self, id: NodeId) -> u64 {
+        self.gens.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Sources whose generation moved relative to `since`, ascending by id.
+    pub fn changed_since(&self, since: &SourceGenerations) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = self
+            .gens
+            .iter()
+            .filter(|(id, g)| **g != since.get(**id))
+            .map(|(id, _)| *id)
+            .collect();
+        out.sort();
+        out
     }
 }
 

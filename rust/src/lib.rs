@@ -42,6 +42,7 @@ pub mod ops;
 pub mod passes;
 pub mod prop;
 pub mod runtime;
+pub mod stream;
 pub mod table;
 pub mod trace;
 pub mod types;
@@ -51,6 +52,7 @@ pub mod prelude {
     pub use crate::column::{ArithOp, CmpOp, Column, MathFn, NullableColumn, ValidityMask};
     pub use crate::expr::{col, lit, AggExpr, AggFn, Expr, Udf, WindowExpr};
     pub use crate::frame::*;
+    pub use crate::stream::{Session, TickReport};
     pub use crate::table::{Schema, Table};
     pub use crate::trace::QueryProfile;
     pub use crate::types::{DType, JoinType, SortOrder, Value, WindowFrame, WindowFunc};

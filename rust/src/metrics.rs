@@ -242,6 +242,73 @@ pub fn plan_stats() -> &'static PlanStats {
     &PLAN
 }
 
+/// Process-global counters for the incremental stream executor: ticks run,
+/// rows actually pushed through operators vs rows the stateful operators
+/// avoided re-touching, and how often a session fell back to a tracked full
+/// recompute. Same conventions as [`SpillStats`]: all ranks share one
+/// instance, so prefer delta assertions in tests.
+#[derive(Debug, Default)]
+pub struct StreamStats {
+    ticks: AtomicU64,
+    rows_processed: AtomicU64,
+    rows_avoided: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// One consistent-enough reading of [`StreamStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSnapshot {
+    pub ticks: u64,
+    pub rows_processed: u64,
+    pub rows_avoided: u64,
+    pub fallbacks: u64,
+}
+
+impl StreamStats {
+    const fn new() -> StreamStats {
+        StreamStats {
+            ticks: AtomicU64::new(0),
+            rows_processed: AtomicU64::new(0),
+            rows_avoided: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one tick's totals (already summed over ranks) in.
+    pub fn record_tick(&self, rows_processed: u64, rows_avoided: u64, fallback: bool) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        self.rows_processed.fetch_add(rows_processed, Ordering::Relaxed);
+        self.rows_avoided.fetch_add(rows_avoided, Ordering::Relaxed);
+        if fallback {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> StreamSnapshot {
+        StreamSnapshot {
+            ticks: self.ticks.load(Ordering::Relaxed),
+            rows_processed: self.rows_processed.load(Ordering::Relaxed),
+            rows_avoided: self.rows_avoided.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (bench runs reset between tables).
+    pub fn reset(&self) {
+        self.ticks.store(0, Ordering::Relaxed);
+        self.rows_processed.store(0, Ordering::Relaxed);
+        self.rows_avoided.store(0, Ordering::Relaxed);
+        self.fallbacks.store(0, Ordering::Relaxed);
+    }
+}
+
+static STREAM: StreamStats = StreamStats::new();
+
+/// The process-global incremental-execution counters.
+pub fn stream_stats() -> &'static StreamStats {
+    &STREAM
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,5 +397,22 @@ mod tests {
         let before = plan_stats().snapshot();
         plan_stats().record_run(1, 1, 0);
         assert!(plan_stats().snapshot().subplans_reused > before.subplans_reused);
+    }
+
+    #[test]
+    fn stream_stats_accumulate() {
+        let s = StreamStats::new();
+        s.record_tick(100, 900, false);
+        s.record_tick(50, 0, true);
+        let snap = s.snapshot();
+        assert_eq!(snap.ticks, 2);
+        assert_eq!(snap.rows_processed, 150);
+        assert_eq!(snap.rows_avoided, 900);
+        assert_eq!(snap.fallbacks, 1);
+        s.reset();
+        assert_eq!(s.snapshot().ticks, 0);
+        let before = stream_stats().snapshot();
+        stream_stats().record_tick(1, 2, false);
+        assert!(stream_stats().snapshot().ticks > before.ticks);
     }
 }

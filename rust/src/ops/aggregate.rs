@@ -424,7 +424,7 @@ pub fn distributed_aggregate(
     ))
 }
 
-fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
+pub(crate) fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
     specs
         .iter()
         .map(|sp| AggState::new(sp.func, sp.input_dtype))
@@ -432,7 +432,7 @@ fn new_states(specs: &[AggSpec]) -> Vec<AggState> {
 }
 
 /// Output dtype of one aggregation spec.
-fn agg_output_dtype(sp: &AggSpec) -> DType {
+pub(crate) fn agg_output_dtype(sp: &AggSpec) -> DType {
     match (sp.func, sp.input_dtype) {
         (AggFn::Count | AggFn::CountDistinct, _) => DType::I64,
         (AggFn::Mean | AggFn::Var, _) => DType::F64,
@@ -442,7 +442,7 @@ fn agg_output_dtype(sp: &AggSpec) -> DType {
     }
 }
 
-fn new_outputs(specs: &[AggSpec]) -> Vec<(Column, ValidityMask)> {
+pub(crate) fn new_outputs(specs: &[AggSpec]) -> Vec<(Column, ValidityMask)> {
     specs
         .iter()
         .map(|sp| {
@@ -456,7 +456,7 @@ fn new_outputs(specs: &[AggSpec]) -> Vec<(Column, ValidityMask)> {
 
 /// Append one group's finished reductions: an all-null group's order/moment
 /// statistics become NULL, everything else pushes its scalar.
-fn push_outputs(
+pub(crate) fn push_outputs(
     outs: &mut [(Column, ValidityMask)],
     specs: &[AggSpec],
     states: &[AggState],
@@ -472,7 +472,7 @@ fn push_outputs(
     }
 }
 
-fn finish_outputs(outs: Vec<(Column, ValidityMask)>) -> Vec<NullableColumn> {
+pub(crate) fn finish_outputs(outs: Vec<(Column, ValidityMask)>) -> Vec<NullableColumn> {
     outs.into_iter()
         .map(|(c, m)| NullableColumn::new(c, Some(m)))
         .collect()

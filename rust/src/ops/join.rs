@@ -480,7 +480,7 @@ fn replicate_rows(
 /// (the hash path and the light partition); the heavy partition passes
 /// `false` and resolves unmatched build rows globally instead.
 #[allow(clippy::too_many_arguments)]
-fn join_partition(
+pub(crate) fn join_partition(
     nk: usize,
     lcols: &[Column],
     lmasks: &[Option<ValidityMask>],
@@ -631,7 +631,7 @@ fn pop_index_column(cols: &mut Vec<Column>, masks: &mut Vec<Option<ValidityMask>
 /// one merged key column per pair (value *and* validity from whichever side
 /// is present), then the left payload, then — unless the join type drops
 /// them — the right payload, null-introducing the missing side per `how`.
-fn assemble_outputs(
+pub(crate) fn assemble_outputs(
     nk: usize,
     lcols: &[Column],
     lmasks: &[Option<ValidityMask>],

@@ -1,0 +1,1469 @@
+//! Incremental micro-batch execution — standing queries over ticking data
+//! (DESIGN.md §4.9).
+//!
+//! A [`Session`] keeps a compiled [`PlanGraph`] alive across calls. Sources
+//! stay appendable ([`Session::push`]) and every [`Session::tick`] flows
+//! only the newly pushed record batches through the graph, keeping stateful
+//! operator state per rank:
+//!
+//! * **group-by** holds a packed-key → [`AggState`] map and folds only the
+//!   delta rows (the existing null-skip rules apply unchanged);
+//! * **hash joins** keep both post-shuffle sides accumulated; when the
+//!   build side did not tick, inner/left joins probe only the new rows and
+//!   append the result suffix to a cached output;
+//! * **partitioned windows** re-scan only the partitions a tick touched,
+//!   serving untouched partitions from a per-partition output cache.
+//!
+//! Everything else — sorts, concats, global windows, stateful-over-stateful
+//! shapes — is *recomputed* from full inputs each tick with the ordinary
+//! batch interpreter ([`crate::exec`]), and plans with no incremental
+//! handle at all (HFS sources, `cache()` points) fall back to a tracked
+//! whole-plan recompute. Either way the contract is the same: after any N
+//! ticks, `tick()`'s output is byte-identical — values *and* validity
+//! masks — to a cold batch `collect()` over the union of all pushed
+//! batches.
+//!
+//! Agreement rests on two facts the batch executor already guarantees.
+//! First, key routing is schema-determined: every shuffle site passes
+//! `KeyNullability::Static`, so the packed-key layout (and hence each
+//! tuple's owner rank) never depends on which rows have arrived. Second,
+//! arrival order is mode-independent: sources are split by monotone
+//! contiguous [`crate::comm::block_range`] blocks and shuffles concatenate
+//! received chunks in source-rank order, so processing ticks in push order
+//! yields, on every rank, exactly the post-shuffle row order of the batch
+//! run — which pins down fold order, build insertion order and the window
+//! sort's stable tie-break alike.
+
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::column::{
+    decode_nullable_column, encode_nullable_column, extend_opt_mask, normalize_mask, Column,
+    NullableColumn, ValidityMask,
+};
+use crate::comm::{run_spmd_with_stats, Comm};
+use crate::exec::{self, ExecOptions, LocalFrame, Program};
+use crate::expr::{eval_nullable, AggExpr, AggState};
+use crate::fxhash::{FxHashMap, FxHashSet};
+use crate::ir::graph::{Node, NodeId, PlanGraph, SourceGenerations};
+use crate::ir::{Plan, SourceRef, WindowAgg, WindowFunc};
+use crate::ops::{
+    self,
+    aggregate::{finish_outputs, new_outputs, new_states, push_outputs, AggSpec, AggStrategy},
+    join::{assemble_outputs, concat_nullable, join_partition},
+    keys::{cmp_key_rows, key_rows_nullable, KeyRow},
+    MaskedCol,
+};
+use crate::table::{Schema, Table};
+use crate::types::{JoinStrategy, JoinType, SortOrder};
+
+/// How the incremental walk treats one plan node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Source or row-wise operator over a delta-capable input: the tick's
+    /// new rows flow straight through (and, where a recomputing consumer
+    /// demands it, the operator also re-runs over the accumulated union).
+    Delta,
+    /// Aggregate / hash-join / partitioned-window directly over delta
+    /// inputs: absorbs the tick into per-rank state and emits its full
+    /// current output.
+    Stateful,
+    /// Everything else: re-executed by the batch interpreter over full
+    /// inputs every tick.
+    Recompute,
+}
+
+/// Per-tick accounting, also mirrored into
+/// [`crate::metrics::stream_stats`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TickReport {
+    /// 1-based tick number.
+    pub tick: u64,
+    /// Wall-clock seconds for the whole tick (driver side).
+    pub wall_secs: f64,
+    /// Rows the operators actually touched this tick (summed over ranks).
+    pub rows_processed: u64,
+    /// Rows held in operator state that did *not* need re-touching.
+    pub rows_avoided: u64,
+    /// True when this tick ran the whole-plan recompute fallback.
+    pub fallback: bool,
+}
+
+/// One appendable source: the plan-time schema plus the accumulated union
+/// of the initial table and every pushed batch, in push order.
+struct SourceState {
+    id: NodeId,
+    name: String,
+    schema: Schema,
+    cols: Vec<Column>,
+    masks: Vec<Option<ValidityMask>>,
+    len: usize,
+    /// Union row where the not-yet-ticked region starts.
+    delta_from: usize,
+    /// Cached union snapshot; invalidated by `push`.
+    union_arc: Option<Arc<Table>>,
+}
+
+impl SourceState {
+    /// The rows pushed since the last tick, as a table under the plan-time
+    /// schema (empty when nothing ticked).
+    fn delta_table(&self) -> Result<Table> {
+        let n = self.len - self.delta_from;
+        let cols: Vec<Column> = self.cols.iter().map(|c| c.slice(self.delta_from, n)).collect();
+        let masks: Vec<Option<ValidityMask>> = self
+            .masks
+            .iter()
+            .map(|m| normalize_mask(m.as_ref().map(|m| m.slice(self.delta_from, n))))
+            .collect();
+        Table::new_masked(self.schema.clone(), cols, masks)
+    }
+
+    /// Snapshot of the full union (initial table + every pushed batch).
+    fn union_table(&mut self) -> Result<Arc<Table>> {
+        if let Some(t) = &self.union_arc {
+            return Ok(t.clone());
+        }
+        let masks: Vec<Option<ValidityMask>> =
+            self.masks.iter().map(|m| normalize_mask(m.clone())).collect();
+        let t = Arc::new(Table::new_masked(
+            self.schema.clone(),
+            self.cols.clone(),
+            masks,
+        )?);
+        self.union_arc = Some(t.clone());
+        Ok(t)
+    }
+}
+
+/// One rank's persistent operator state, kept across ticks.
+#[derive(Default)]
+struct PerRankState {
+    agg: FxHashMap<NodeId, AggAbsorber>,
+    join: FxHashMap<NodeId, JoinAbsorber>,
+    win: FxHashMap<NodeId, WinAbsorber>,
+}
+
+/// A standing query: compiled once, ticked many times.
+pub struct Session {
+    opts: ExecOptions,
+    prog: Program,
+    roles: FxHashMap<NodeId, Role>,
+    need_delta: FxHashSet<NodeId>,
+    need_full: FxHashSet<NodeId>,
+    /// Sources whose union snapshot a recomputing consumer demands.
+    union_needed: FxHashSet<NodeId>,
+    /// Whole-plan recompute fallback, with the reason.
+    fallback: Option<String>,
+    /// Completion is delta-capable: gather only each tick's new output rows
+    /// and append them driver-side.
+    delta_append: bool,
+    sources: Vec<SourceState>,
+    gens: SourceGenerations,
+    ranks: Vec<Mutex<PerRankState>>,
+    /// Driver-side accumulated output (delta-append mode only).
+    out_cols: Vec<Column>,
+    out_masks: Vec<Option<ValidityMask>>,
+    ticks: u64,
+    reports: Vec<TickReport>,
+}
+
+impl Session {
+    /// Compile `plan` into a standing query. The executor knobs are forced
+    /// to their tick-replicable settings: raw-shuffle aggregation (the
+    /// pre-aggregated merge order depends on batch boundaries), no sampled
+    /// skew joins, no spilling.
+    pub(crate) fn new(plan: Plan, mut opts: ExecOptions) -> Result<Session> {
+        opts.agg_strategy = AggStrategy::RawShuffle;
+        opts.passes.skew_join = false;
+        opts.mem_budget = None;
+        opts.profile = false;
+        let g = crate::passes::optimize_graph(plan, &opts.passes)?;
+        let prog = Program::prepare(&g, None)?;
+        let (roles, mut fallback) = classify(&prog);
+        let delta_append =
+            fallback.is_none() && roles[&prog.graph.completion] == Role::Delta;
+        let n_stateful = roles.values().filter(|r| **r == Role::Stateful).count();
+        if fallback.is_none() && n_stateful == 0 && !delta_append {
+            fallback = Some("no stateful operator over an appendable source".to_string());
+        }
+        let (need_delta, need_full) = if fallback.is_none() {
+            demands(&prog, &roles, delta_append)
+        } else {
+            (FxHashSet::default(), FxHashSet::default())
+        };
+        let union_needed = union_sources(&prog, &need_full);
+        let mut sources = Vec::new();
+        for (id, name) in prog.graph.source_nodes() {
+            let Node::Source { src, schema, .. } = &prog.graph.store[id] else {
+                unreachable!("source_nodes returns Source ids");
+            };
+            let SourceRef::InMemory(table) = src else {
+                continue; // HFS sources are not appendable (fallback set above)
+            };
+            let (_, cols, masks) = table.as_ref().clone().into_parts();
+            let len = table.num_rows();
+            sources.push(SourceState {
+                id,
+                name,
+                schema: schema.clone(),
+                cols,
+                masks,
+                len,
+                delta_from: 0,
+                union_arc: Some(table.clone()),
+            });
+        }
+        let gens = SourceGenerations::new(&prog.graph);
+        let ranks = (0..opts.workers).map(|_| Mutex::new(PerRankState::default())).collect();
+        let out_schema = prog.schemas[&prog.graph.completion].clone();
+        let out_cols = out_schema.fields().iter().map(|(_, t)| Column::new_empty(*t)).collect();
+        let out_masks = vec![None; out_schema.len()];
+        Ok(Session {
+            opts,
+            prog,
+            roles,
+            need_delta,
+            need_full,
+            union_needed,
+            fallback,
+            delta_append,
+            sources,
+            gens,
+            ranks,
+            out_cols,
+            out_masks,
+            ticks: 0,
+            reports: Vec::new(),
+        })
+    }
+
+    /// Append one record batch to the named source. The batch must match
+    /// the source's plan-time schema (names and dtypes, in order) and may
+    /// only carry nulls in columns the plan marked nullable — the compiled
+    /// key routing depends on those flags. Several pushes between ticks
+    /// accumulate in push order.
+    pub fn push(&mut self, source: &str, batch: Table) -> Result<()> {
+        if self.sources.iter().filter(|s| s.name == source).count() > 1 {
+            bail!("session: source name :{source} is ambiguous");
+        }
+        let s = self
+            .sources
+            .iter_mut()
+            .find(|s| s.name == source)
+            .with_context(|| format!("session: no appendable source named :{source}"))?;
+        if batch.schema().fields() != s.schema.fields() {
+            bail!(
+                "session push to :{source}: batch schema {:?} does not match \
+                 the source's plan schema {:?}",
+                batch.schema().fields(),
+                s.schema.fields()
+            );
+        }
+        for (i, (n, _)) in s.schema.fields().iter().enumerate() {
+            if !s.schema.nullable_at(i) {
+                if let Some(m) = batch.mask_at(i) {
+                    if m.count_null() > 0 {
+                        bail!(
+                            "session push to :{source}: column :{n} is non-nullable \
+                             in the plan but the batch carries {} null rows",
+                            m.count_null()
+                        );
+                    }
+                }
+            }
+        }
+        let n = batch.num_rows();
+        let (_, bcols, bmasks) = batch.into_parts();
+        for (i, (a, b)) in s.cols.iter_mut().zip(&bcols).enumerate() {
+            let before = a.len();
+            a.extend(b);
+            extend_opt_mask(&mut s.masks[i], before, bmasks[i].as_ref(), n);
+        }
+        s.len += n;
+        s.union_arc = None;
+        self.gens.bump(s.id);
+        Ok(())
+    }
+
+    /// Run one micro-batch: flow the rows pushed since the last tick
+    /// through the graph and return the standing query's full current
+    /// output — byte-identical to a cold batch `collect()` over the union
+    /// of all pushed batches.
+    pub fn tick(&mut self) -> Result<Table> {
+        let t0 = Instant::now();
+        self.ticks += 1;
+        if self.fallback.is_some() {
+            let rows: u64 = self.sources.iter().map(|s| s.len as u64).sum();
+            for s in &mut self.sources {
+                s.delta_from = s.len;
+            }
+            let out = self.collect_batch()?;
+            crate::metrics::stream_stats().record_tick(rows, 0, true);
+            self.reports.push(TickReport {
+                tick: self.ticks,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                rows_processed: rows,
+                rows_avoided: 0,
+                fallback: true,
+            });
+            return Ok(out);
+        }
+        let mut delta_arcs: FxHashMap<NodeId, Arc<Table>> = FxHashMap::default();
+        let mut union_arcs: FxHashMap<NodeId, Arc<Table>> = FxHashMap::default();
+        for s in &mut self.sources {
+            delta_arcs.insert(s.id, Arc::new(s.delta_table()?));
+            if self.union_needed.contains(&s.id) {
+                union_arcs.insert(s.id, s.union_table()?);
+            }
+            s.delta_from = s.len;
+        }
+        let prog = &self.prog;
+        let opts = &self.opts;
+        let roles = &self.roles;
+        let need_delta = &self.need_delta;
+        let need_full = &self.need_full;
+        let ranks = &self.ranks;
+        let delta_append = self.delta_append;
+        let completion = prog.graph.completion;
+        type RankOut = Result<(Vec<u8>, u64, u64)>;
+        let (results, _) = run_spmd_with_stats(opts.workers, |comm| -> RankOut {
+            let mut guard = ranks[comm.rank()].lock().unwrap();
+            let st = &mut *guard;
+            let mut dmemo: FxHashMap<NodeId, LocalFrame> = FxHashMap::default();
+            let mut fmemo: FxHashMap<NodeId, LocalFrame> = FxHashMap::default();
+            let mut processed = 0u64;
+            let mut avoided = 0u64;
+            for &id in &prog.graph.execution_order {
+                let nd = need_delta.contains(&id);
+                let nf = need_full.contains(&id);
+                if !nd && !nf {
+                    continue;
+                }
+                let node = &prog.graph.store[id];
+                match roles[&id] {
+                    Role::Delta => match node {
+                        Node::Source { schema, .. } => {
+                            let names: Vec<&str> = schema.names();
+                            if nd {
+                                let src = SourceRef::InMemory(delta_arcs[&id].clone());
+                                dmemo.insert(id, exec::exec_source(&src, schema, &names, &comm)?);
+                            }
+                            if nf {
+                                let src = SourceRef::InMemory(union_arcs[&id].clone());
+                                fmemo.insert(id, exec::exec_source(&src, schema, &names, &comm)?);
+                            }
+                        }
+                        // the batch interpreter's column-pruning fast path
+                        // reads straight from the source table; mirror it
+                        // against this tick's delta / union snapshots
+                        Node::Project { input, columns }
+                            if matches!(prog.graph.store[*input], Node::Source { .. }) =>
+                        {
+                            let Node::Source { schema, .. } = &prog.graph.store[*input] else {
+                                unreachable!("guard matched Source");
+                            };
+                            let names: Vec<&str> =
+                                columns.iter().map(|s| s.as_str()).collect();
+                            let sub = Schema::new_nullable(
+                                columns
+                                    .iter()
+                                    .map(|c| (c.clone(), schema.dtype_of(c).unwrap()))
+                                    .collect(),
+                                columns
+                                    .iter()
+                                    .map(|c| schema.nullable_of(c).unwrap_or(false))
+                                    .collect(),
+                            );
+                            if nd {
+                                let src = SourceRef::InMemory(delta_arcs[input].clone());
+                                dmemo.insert(id, exec::exec_source(&src, &sub, &names, &comm)?);
+                            }
+                            if nf {
+                                let src = SourceRef::InMemory(union_arcs[input].clone());
+                                fmemo.insert(id, exec::exec_source(&src, &sub, &names, &comm)?);
+                            }
+                        }
+                        _ => {
+                            let input = node.children()[0];
+                            if nd {
+                                let mut m = FxHashMap::default();
+                                let f = dmemo
+                                    .get(&input)
+                                    .context("stream: delta input missing")?
+                                    .clone();
+                                m.insert(input, f);
+                                dmemo.insert(
+                                    id,
+                                    exec::exec_one_with_inputs(prog, id, m, &comm, opts)?,
+                                );
+                            }
+                            if nf {
+                                let mut m = FxHashMap::default();
+                                let f = fmemo
+                                    .get(&input)
+                                    .context("stream: full input missing")?
+                                    .clone();
+                                m.insert(input, f);
+                                fmemo.insert(
+                                    id,
+                                    exec::exec_one_with_inputs(prog, id, m, &comm, opts)?,
+                                );
+                            }
+                        }
+                    },
+                    Role::Stateful => {
+                        let out_schema = prog.schemas[&id].clone();
+                        match node {
+                            Node::Aggregate { input, keys, aggs } => {
+                                let frame = dmemo
+                                    .get(input)
+                                    .context("stream: aggregate delta input missing")?;
+                                let ab = st.agg.entry(id).or_default();
+                                let (out, p, a) =
+                                    ab.absorb(out_schema, keys, aggs, frame, &comm)?;
+                                processed += p;
+                                avoided += a;
+                                fmemo.insert(id, out);
+                            }
+                            Node::Join {
+                                left, right, on, how, ..
+                            } => {
+                                let lf = dmemo
+                                    .get(left)
+                                    .context("stream: join left delta missing")?;
+                                let rf = dmemo
+                                    .get(right)
+                                    .context("stream: join right delta missing")?;
+                                let jb = st.join.entry(id).or_default();
+                                let (out, p, a) =
+                                    jb.absorb(out_schema, on, *how, lf, rf, &comm)?;
+                                processed += p;
+                                avoided += a;
+                                fmemo.insert(id, out);
+                            }
+                            Node::Window {
+                                input,
+                                partition_by,
+                                order_by,
+                                aggs,
+                            } => {
+                                let frame = dmemo
+                                    .get(input)
+                                    .context("stream: window delta input missing")?;
+                                let wb = st.win.entry(id).or_default();
+                                let (out, p, a) = wb.absorb(
+                                    out_schema,
+                                    partition_by,
+                                    order_by,
+                                    aggs,
+                                    frame,
+                                    &comm,
+                                )?;
+                                processed += p;
+                                avoided += a;
+                                fmemo.insert(id, out);
+                            }
+                            _ => unreachable!("stateful role is aggregate/join/window only"),
+                        }
+                    }
+                    Role::Recompute => {
+                        let mut m: FxHashMap<NodeId, LocalFrame> = FxHashMap::default();
+                        let mut in_rows = 0u64;
+                        for c in node.children() {
+                            if !m.contains_key(&c) {
+                                let f = fmemo
+                                    .get(&c)
+                                    .context("stream: recompute input missing")?
+                                    .clone();
+                                in_rows += f.num_rows() as u64;
+                                m.insert(c, f);
+                            }
+                        }
+                        let f = exec::exec_one_with_inputs(prog, id, m, &comm, opts)?;
+                        processed += in_rows;
+                        fmemo.insert(id, f);
+                    }
+                }
+            }
+            let frame = if delta_append {
+                dmemo.remove(&completion)
+            } else {
+                fmemo.remove(&completion)
+            }
+            .context("stream: completion frame missing")?;
+            drop(guard);
+            // final gather, mirroring the batch executor byte for byte
+            let mut buf = Vec::new();
+            for (c, m) in frame.cols.iter().zip(&frame.masks) {
+                encode_nullable_column(c, m.as_ref(), &mut buf);
+            }
+            let gathered = comm.gather_bytes(0, buf);
+            if comm.is_root() {
+                let (cols, masks) = exec::concat_rank_chunks(&frame.schema, gathered)?;
+                let mut out = Vec::new();
+                for (c, m) in cols.iter().zip(&masks) {
+                    encode_nullable_column(c, normalize_mask(m.clone()).as_ref(), &mut out);
+                }
+                Ok((out, processed, avoided))
+            } else {
+                Ok((Vec::new(), processed, avoided))
+            }
+        });
+        let mut root_buf: Option<Vec<u8>> = None;
+        let mut tot_p = 0u64;
+        let mut tot_a = 0u64;
+        for (rank, r) in results.into_iter().enumerate() {
+            let (buf, p, a) = r?;
+            tot_p += p;
+            tot_a += a;
+            if rank == 0 {
+                root_buf = Some(buf);
+            }
+        }
+        let root_buf = root_buf.context("no ranks ran")?;
+        let schema = self.prog.schemas[&completion].clone();
+        let mut pos = 0;
+        let mut cols = Vec::new();
+        let mut masks = Vec::new();
+        for _ in 0..schema.len() {
+            let (c, m) = decode_nullable_column(&root_buf, &mut pos)?;
+            cols.push(c);
+            masks.push(m);
+        }
+        let table = if self.delta_append {
+            for (i, (a, b)) in self.out_cols.iter_mut().zip(&cols).enumerate() {
+                let before = a.len();
+                a.extend(b);
+                extend_opt_mask(&mut self.out_masks[i], before, masks[i].as_ref(), b.len());
+            }
+            Table::new_masked(schema, self.out_cols.clone(), self.out_masks.clone())?
+        } else {
+            Table::new_masked(schema, cols, masks)?
+        };
+        crate::metrics::stream_stats().record_tick(tot_p, tot_a, false);
+        self.reports.push(TickReport {
+            tick: self.ticks,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            rows_processed: tot_p,
+            rows_avoided: tot_a,
+            fallback: false,
+        });
+        Ok(table)
+    }
+
+    /// Cold batch recompute over the union of all pushed batches: the same
+    /// compiled graph with each appendable source's plan-time table swapped
+    /// for its current union snapshot (no re-optimization, so key layouts
+    /// and routing are identical). This is both the whole-plan fallback
+    /// path and the agreement oracle the tests compare `tick()` against.
+    pub fn collect_batch(&mut self) -> Result<Table> {
+        let mut unions: FxHashMap<NodeId, Arc<Table>> = FxHashMap::default();
+        for s in &mut self.sources {
+            unions.insert(s.id, s.union_table()?);
+        }
+        let g: PlanGraph = self.prog.graph.rewrite_indexed(|_, id, n| match n {
+            Node::Source { name, schema, .. } if unions.contains_key(&id) => Node::Source {
+                name,
+                src: SourceRef::InMemory(unions[&id].clone()),
+                schema,
+            },
+            other => other,
+        });
+        Ok(exec::collect_graph(&g, &self.opts, None)?.0)
+    }
+
+    /// Render the compiled plan with each node's incremental role —
+    /// `[delta]`, `[stateful]` or `[recompute]` — plus the session mode and
+    /// the last tick's counters.
+    pub fn explain_incremental(&self) -> String {
+        let mut out = String::new();
+        let mode = if self.fallback.is_some() {
+            "full-recompute fallback"
+        } else if self.delta_append {
+            "incremental (delta-append output)"
+        } else {
+            "incremental"
+        };
+        out.push_str(&format!(
+            "standing query: {} appendable source(s), mode: {mode}\n",
+            self.sources.len()
+        ));
+        if let Some(reason) = &self.fallback {
+            out.push_str(&format!("fallback reason: {reason}\n"));
+        }
+        for (i, line) in self.prog.graph.render_lines(false).iter().enumerate() {
+            let id = self.prog.graph.execution_order[i];
+            let marker = if self.fallback.is_some() {
+                "[recompute]"
+            } else {
+                match self.roles[&id] {
+                    Role::Delta => "[delta]",
+                    Role::Stateful => "[stateful]",
+                    Role::Recompute => "[recompute]",
+                }
+            };
+            out.push_str(&format!("{line} {marker}\n"));
+        }
+        for s in &self.sources {
+            out.push_str(&format!(
+                "source :{} rows={} generation={}\n",
+                s.name,
+                s.len,
+                self.gens.get(s.id)
+            ));
+        }
+        if let Some(r) = self.reports.last() {
+            out.push_str(&format!(
+                "last tick #{}: rows_processed={} rows_avoided={} fallback={}\n",
+                r.tick, r.rows_processed, r.rows_avoided, r.fallback
+            ));
+        }
+        out
+    }
+
+    /// Per-tick reports, oldest first.
+    pub fn reports(&self) -> &[TickReport] {
+        &self.reports
+    }
+
+    /// The most recent tick's report.
+    pub fn last_report(&self) -> Option<&TickReport> {
+        self.reports.last()
+    }
+
+    /// True when this plan runs the tracked whole-plan recompute fallback.
+    pub fn is_fallback(&self) -> bool {
+        self.fallback.is_some()
+    }
+
+    /// Number of ticks run so far.
+    pub fn num_ticks(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// Assign every node its incremental role; returns a whole-plan fallback
+/// reason when the graph has no incremental handle at all.
+fn classify(prog: &Program) -> (FxHashMap<NodeId, Role>, Option<String>) {
+    let mut roles: FxHashMap<NodeId, Role> = FxHashMap::default();
+    let mut fallback: Option<String> = None;
+    for &id in &prog.graph.execution_order {
+        let node = &prog.graph.store[id];
+        let role = match node {
+            Node::Source { src, name, .. } => match src {
+                SourceRef::InMemory(_) => Role::Delta,
+                SourceRef::Hfs(_) => {
+                    fallback.get_or_insert_with(|| {
+                        format!("source :{name} reads HFS (not appendable)")
+                    });
+                    Role::Recompute
+                }
+            },
+            Node::Filter { input, .. }
+            | Node::Project { input, .. }
+            | Node::WithColumn { input, .. }
+            | Node::Rename { input, .. } => {
+                if roles[input] == Role::Delta {
+                    Role::Delta
+                } else {
+                    Role::Recompute
+                }
+            }
+            Node::Aggregate { input, keys, .. } => {
+                if roles[input] == Role::Delta
+                    && !keys.is_empty()
+                    && !key_from_with_column(prog, *input, keys)
+                {
+                    Role::Stateful
+                } else {
+                    Role::Recompute
+                }
+            }
+            Node::Join {
+                left,
+                right,
+                on,
+                strategy,
+                ..
+            } => {
+                let lk: Vec<String> = on.iter().map(|(l, _)| l.clone()).collect();
+                let rk: Vec<String> = on.iter().map(|(_, r)| r.clone()).collect();
+                if roles[left] == Role::Delta
+                    && roles[right] == Role::Delta
+                    && matches!(strategy, JoinStrategy::Hash)
+                    && !key_from_with_column(prog, *left, &lk)
+                    && !key_from_with_column(prog, *right, &rk)
+                {
+                    Role::Stateful
+                } else {
+                    Role::Recompute
+                }
+            }
+            Node::Window {
+                input, partition_by, ..
+            } => {
+                if roles[input] == Role::Delta
+                    && !partition_by.is_empty()
+                    && !key_from_with_column(prog, *input, partition_by)
+                {
+                    Role::Stateful
+                } else {
+                    Role::Recompute
+                }
+            }
+            Node::Cache { .. } => {
+                fallback.get_or_insert_with(|| "plan contains a cache() point".to_string());
+                Role::Recompute
+            }
+            _ => Role::Recompute,
+        };
+        roles.insert(id, role);
+    }
+    (roles, fallback)
+}
+
+/// Does any of `keys` trace back to a `WithColumn` output along the
+/// delta chain starting at `id`? Computed columns get their *runtime*
+/// nullability (mask presence) as their frame-schema flag, which can
+/// change from tick to tick and change the packed-key layout — so a
+/// stateful operator keyed on one is demoted to [`Role::Recompute`],
+/// where the batch interpreter's own behavior is reproduced exactly.
+/// Source / Filter / Project / Rename all carry plan-time flags through
+/// unchanged, keeping the static-routing theorem intact.
+fn key_from_with_column(prog: &Program, start: NodeId, keys: &[String]) -> bool {
+    let mut keys: Vec<String> = keys.to_vec();
+    let mut id = start;
+    loop {
+        match &prog.graph.store[id] {
+            Node::WithColumn { input, name, .. } => {
+                if keys.iter().any(|k| k == name) {
+                    return true;
+                }
+                id = *input;
+            }
+            Node::Rename { input, from, to } => {
+                for k in keys.iter_mut() {
+                    if k == to {
+                        *k = from.clone();
+                    }
+                }
+                id = *input;
+            }
+            Node::Filter { input, .. } | Node::Project { input, .. } => id = *input,
+            _ => return false,
+        }
+    }
+}
+
+/// Reverse demand analysis: which nodes must produce this tick's delta
+/// frame, and which must produce their full accumulated frame. A node can
+/// carry both demands (a delta chain feeding both a stateful operator and
+/// a recomputing one).
+fn demands(
+    prog: &Program,
+    roles: &FxHashMap<NodeId, Role>,
+    delta_append: bool,
+) -> (FxHashSet<NodeId>, FxHashSet<NodeId>) {
+    let mut need_delta: FxHashSet<NodeId> = FxHashSet::default();
+    let mut need_full: FxHashSet<NodeId> = FxHashSet::default();
+    if delta_append {
+        need_delta.insert(prog.graph.completion);
+    } else {
+        need_full.insert(prog.graph.completion);
+    }
+    for &id in prog.graph.execution_order.iter().rev() {
+        let nd = need_delta.contains(&id);
+        let nf = need_full.contains(&id);
+        if !nd && !nf {
+            continue;
+        }
+        let node = &prog.graph.store[id];
+        // a Project straight over a Source reads the source snapshot
+        // directly (pruning fast path) — no demand on the Source node
+        if let Node::Project { input, .. } = node {
+            if matches!(prog.graph.store[*input], Node::Source { .. }) {
+                continue;
+            }
+        }
+        match roles[&id] {
+            Role::Delta => {
+                for c in node.children() {
+                    if nd {
+                        need_delta.insert(c);
+                    }
+                    if nf {
+                        need_full.insert(c);
+                    }
+                }
+            }
+            Role::Stateful => {
+                for c in node.children() {
+                    need_delta.insert(c);
+                }
+            }
+            Role::Recompute => {
+                for c in node.children() {
+                    need_full.insert(c);
+                }
+            }
+        }
+    }
+    (need_delta, need_full)
+}
+
+/// Sources whose full union snapshot must be materialized each tick:
+/// demanded full directly, or read through a pruning Project that is.
+fn union_sources(prog: &Program, need_full: &FxHashSet<NodeId>) -> FxHashSet<NodeId> {
+    let mut out: FxHashSet<NodeId> = FxHashSet::default();
+    for &id in &prog.graph.execution_order {
+        match &prog.graph.store[id] {
+            Node::Source { .. } if need_full.contains(&id) => {
+                out.insert(id);
+            }
+            Node::Project { input, .. }
+                if need_full.contains(&id)
+                    && matches!(prog.graph.store[*input], Node::Source { .. }) =>
+            {
+                out.insert(*input);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Append `(new_cols, new_masks)` onto an accumulated column set,
+/// initializing it on first use.
+fn append_side(
+    cols: &mut Vec<Column>,
+    masks: &mut Vec<Option<ValidityMask>>,
+    new_cols: &[Column],
+    new_masks: &[Option<ValidityMask>],
+) {
+    if cols.is_empty() {
+        *cols = new_cols.to_vec();
+        *masks = new_masks.to_vec();
+        return;
+    }
+    for (i, (a, b)) in cols.iter_mut().zip(new_cols).enumerate() {
+        let before = a.len();
+        a.extend(b);
+        extend_opt_mask(&mut masks[i], before, new_masks[i].as_ref(), b.len());
+    }
+}
+
+/// Non-key columns of `frame` as masked references (the batch join's
+/// payload selection, verbatim).
+fn payload_refs<'f>(
+    frame: &'f LocalFrame,
+    on: &[(String, String)],
+    is_left: bool,
+) -> Vec<MaskedCol<'f>> {
+    frame
+        .schema
+        .fields()
+        .iter()
+        .enumerate()
+        .filter(|(_, (n, _))| {
+            !on.iter()
+                .any(|(lk, rk)| if is_left { lk == n } else { rk == n })
+        })
+        .map(|(i, _)| (&frame.cols[i], frame.masks[i].as_ref()))
+        .collect()
+}
+
+/// Incremental group-by state: packed-key tuples → per-aggregate
+/// [`AggState`] vectors, plus the accumulated post-shuffle key columns the
+/// emitted key rows are gathered from (so under-null key cells reproduce
+/// the batch path byte for byte).
+#[derive(Default)]
+struct AggAbsorber {
+    group_of: FxHashMap<KeyRow, usize>,
+    rows: Vec<KeyRow>,
+    /// Group → global first-occurrence row in the accumulated key columns.
+    reps: Vec<usize>,
+    states: Vec<Vec<AggState>>,
+    key_cols: Vec<Column>,
+    key_masks: Vec<Option<ValidityMask>>,
+    acc_len: usize,
+}
+
+impl AggAbsorber {
+    fn absorb(
+        &mut self,
+        out_schema: Schema,
+        keys: &[String],
+        aggs: &[AggExpr],
+        frame: &LocalFrame,
+        comm: &Comm,
+    ) -> Result<(LocalFrame, u64, u64)> {
+        // pre-shuffle half: the batch interpreter's Aggregate block over
+        // the delta rows only
+        let key_cols: Vec<MaskedCol> =
+            keys.iter().map(|k| frame.masked(k)).collect::<Result<_>>()?;
+        let mut expr_cols: Vec<(Column, Option<ValidityMask>)> = Vec::with_capacity(aggs.len());
+        let mut specs = Vec::with_capacity(aggs.len());
+        for a in aggs {
+            let (c, m) = eval_nullable(&a.input, frame)?;
+            specs.push(AggSpec {
+                func: a.func,
+                input_dtype: c.dtype(),
+            });
+            expr_cols.push((c, m));
+        }
+        let keys_nullable = keys
+            .iter()
+            .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
+        let kc: Vec<&Column> = key_cols.iter().map(|(c, _)| *c).collect();
+        let km: Vec<Option<&ValidityMask>> = key_cols.iter().map(|(_, m)| *m).collect();
+        let with_flags = ops::KeyNullability::Static(keys_nullable)
+            .with_flags(comm, km.iter().any(|m| m.is_some()));
+        let packed = ops::PackedKeys::pack_masked(&kc, &km, with_flags)?;
+        let mut all: Vec<&Column> = kc.clone();
+        let mut masks: Vec<Option<&ValidityMask>> = km.clone();
+        for (c, m) in &expr_cols {
+            all.push(c);
+            masks.push(m.as_ref());
+        }
+        let (recv, rmasks) = ops::shuffle_by_packed_nullable(comm, &packed, &all, &masks)?;
+        let nk = keys.len();
+        let (rkc, rec) = recv.split_at(nk);
+        let (rkm, rem) = rmasks.split_at(nk);
+        let n_new = rkc.first().map_or(0, |c| c.len());
+        let krefs: Vec<&Column> = rkc.iter().collect();
+        let kmrefs: Vec<Option<&ValidityMask>> = rkm.iter().map(|m| m.as_ref()).collect();
+        let krows = key_rows_nullable(&krefs, &kmrefs)?;
+        let old_acc = self.acc_len;
+        append_side(&mut self.key_cols, &mut self.key_masks, rkc, rkm);
+        self.acc_len += n_new;
+        // fold the delta in arrival order (identical to the batch arrival
+        // order), skipping null input lanes exactly like the batch fold
+        for (i, krow) in krows.into_iter().enumerate() {
+            let g = match self.group_of.get(&krow) {
+                Some(&g) => g,
+                None => {
+                    let g = self.rows.len();
+                    self.group_of.insert(krow.clone(), g);
+                    self.rows.push(krow);
+                    self.reps.push(old_acc + i);
+                    self.states.push(new_states(&specs));
+                    g
+                }
+            };
+            for (j, s) in self.states[g].iter_mut().enumerate() {
+                if rem[j].as_ref().map_or(true, |m| m.get(i)) {
+                    s.update_col(&rec[j], i);
+                }
+            }
+        }
+        // emit the full current output: ascending key tuples (nulls
+        // first), key cells gathered from each group's first occurrence —
+        // the batch take-path, so wire-scrubbed under-null cells agree
+        let mut order: Vec<usize> = (0..self.rows.len()).collect();
+        order.sort_by(|&a, &b| cmp_key_rows(&self.rows[a], &self.rows[b], &[]));
+        let rep_idx: Vec<usize> = order.iter().map(|&g| self.reps[g]).collect();
+        let key_out: Vec<NullableColumn> = self
+            .key_cols
+            .iter()
+            .zip(&self.key_masks)
+            .map(|(c, m)| {
+                NullableColumn::new(c.take(&rep_idx), m.as_ref().map(|m| m.take(&rep_idx)))
+            })
+            .collect();
+        let mut outs = new_outputs(&specs);
+        for &g in &order {
+            push_outputs(&mut outs, &specs, &self.states[g]);
+        }
+        let mut cols = Vec::with_capacity(out_schema.len());
+        let mut out_masks = Vec::with_capacity(out_schema.len());
+        for c in key_out.into_iter().chain(finish_outputs(outs)) {
+            cols.push(c.values);
+            out_masks.push(c.validity);
+        }
+        Ok((
+            LocalFrame {
+                schema: out_schema,
+                cols,
+                masks: out_masks,
+            },
+            n_new as u64,
+            old_acc as u64,
+        ))
+    }
+}
+
+/// Incremental hash-join state: both post-shuffle sides accumulated in
+/// arrival order (keys first, the batch wire layout) plus the cached
+/// assembled output. When the build side did not tick, inner/left joins
+/// probe only the delta and append the suffix; any build-side tick (or a
+/// right/outer join) re-joins the accumulated partitions locally — still
+/// shuffling only the delta.
+#[derive(Default)]
+struct JoinAbsorber {
+    lcols: Vec<Column>,
+    lmasks: Vec<Option<ValidityMask>>,
+    rcols: Vec<Column>,
+    rmasks: Vec<Option<ValidityMask>>,
+    out: Option<LocalFrame>,
+}
+
+impl JoinAbsorber {
+    fn absorb(
+        &mut self,
+        out_schema: Schema,
+        on: &[(String, String)],
+        how: JoinType,
+        lframe: &LocalFrame,
+        rframe: &LocalFrame,
+        comm: &Comm,
+    ) -> Result<(LocalFrame, u64, u64)> {
+        let nk = on.len();
+        let lkeys: Vec<MaskedCol> = on
+            .iter()
+            .map(|(lk, _)| lframe.masked(lk))
+            .collect::<Result<_>>()?;
+        let rkeys: Vec<MaskedCol> = on
+            .iter()
+            .map(|(_, rk)| rframe.masked(rk))
+            .collect::<Result<_>>()?;
+        let lpay = payload_refs(lframe, on, true);
+        let rpay = payload_refs(rframe, on, false);
+        let keys_nullable = on.iter().any(|(lk, rk)| {
+            lframe.schema.nullable_of(lk).unwrap_or(false)
+                || rframe.schema.nullable_of(rk).unwrap_or(false)
+        });
+        let local_flag = lkeys.iter().chain(&rkeys).any(|(_, m)| m.is_some());
+        let with_flags =
+            ops::KeyNullability::Static(keys_nullable).with_flags(comm, local_flag);
+        let lkc: Vec<&Column> = lkeys.iter().map(|(c, _)| *c).collect();
+        let lkm: Vec<Option<&ValidityMask>> = lkeys.iter().map(|(_, m)| *m).collect();
+        let rkc: Vec<&Column> = rkeys.iter().map(|(c, _)| *c).collect();
+        let rkm: Vec<Option<&ValidityMask>> = rkeys.iter().map(|(_, m)| *m).collect();
+        let lpacked = ops::PackedKeys::pack_masked(&lkc, &lkm, with_flags)?;
+        let rpacked = ops::PackedKeys::pack_masked(&rkc, &rkm, with_flags)?;
+        let mut lall: Vec<&Column> = lkc.clone();
+        let mut lm: Vec<Option<&ValidityMask>> = lkm.clone();
+        for (c, m) in &lpay {
+            lall.push(c);
+            lm.push(*m);
+        }
+        let mut rall: Vec<&Column> = rkc.clone();
+        let mut rm: Vec<Option<&ValidityMask>> = rkm.clone();
+        for (c, m) in &rpay {
+            rall.push(c);
+            rm.push(*m);
+        }
+        let (dl, dlm) = ops::shuffle_by_packed_nullable(comm, &lpacked, &lall, &lm)?;
+        let (dr, drm) = ops::shuffle_by_packed_nullable(comm, &rpacked, &rall, &rm)?;
+        let n_dl = dl.first().map_or(0, |c| c.len());
+        let n_dr = dr.first().map_or(0, |c| c.len());
+        let old_l = self.lcols.first().map_or(0, |c| c.len());
+        let old_r = self.rcols.first().map_or(0, |c| c.len());
+        let spill = ops::SpillCtx::new(ops::MemoryBudget::from_opt(None), comm.rank());
+        if self.out.is_some() && n_dl == 0 && n_dr == 0 {
+            // nothing arrived on this rank: the cached output still holds
+            return Ok((
+                self.out.clone().expect("cached join output"),
+                0,
+                (old_l + old_r) as u64,
+            ));
+        }
+        let fast =
+            self.out.is_some() && n_dr == 0 && matches!(how, JoinType::Inner | JoinType::Left);
+        if fast {
+            // build side unchanged: probe only the delta-left rows and
+            // append the resulting suffix (batch pair order is sorted by
+            // probe row, so new probe rows only ever extend the output)
+            let (pairs, _) =
+                join_partition(nk, &dl, &dlm, &self.rcols, &self.rmasks, how, true, &spill)?;
+            let (keys_out, lout, rout) =
+                assemble_outputs(nk, &dl, &dlm, &self.rcols, &self.rmasks, &pairs, how);
+            let suffix = reassemble_join(
+                out_schema,
+                &lframe.schema,
+                &rframe.schema,
+                on,
+                how,
+                keys_out,
+                lout,
+                rout,
+            );
+            let out = self.out.as_mut().expect("cached join output");
+            for (i, (a, b)) in out.cols.iter_mut().zip(&suffix.cols).enumerate() {
+                let before = a.len();
+                a.extend(b);
+                extend_opt_mask(&mut out.masks[i], before, suffix.masks[i].as_ref(), b.len());
+            }
+            append_side(&mut self.lcols, &mut self.lmasks, &dl, &dlm);
+            Ok((out.clone(), n_dl as u64, old_l as u64))
+        } else {
+            append_side(&mut self.lcols, &mut self.lmasks, &dl, &dlm);
+            append_side(&mut self.rcols, &mut self.rmasks, &dr, &drm);
+            let (pairs, _) = join_partition(
+                nk,
+                &self.lcols,
+                &self.lmasks,
+                &self.rcols,
+                &self.rmasks,
+                how,
+                true,
+                &spill,
+            )?;
+            let (keys_out, lout, rout) = assemble_outputs(
+                nk,
+                &self.lcols,
+                &self.lmasks,
+                &self.rcols,
+                &self.rmasks,
+                &pairs,
+                how,
+            );
+            let out = reassemble_join(
+                out_schema,
+                &lframe.schema,
+                &rframe.schema,
+                on,
+                how,
+                keys_out,
+                lout,
+                rout,
+            );
+            self.out = Some(out.clone());
+            Ok((out, (old_l + old_r + n_dl + n_dr) as u64, 0))
+        }
+    }
+}
+
+/// Map a join's `(keys_out, left_out, right_out)` columns back into the
+/// output schema's column order — the batch interpreter's reassembly,
+/// verbatim.
+#[allow(clippy::too_many_arguments)]
+fn reassemble_join(
+    out_schema: Schema,
+    lschema: &Schema,
+    rschema: &Schema,
+    on: &[(String, String)],
+    how: JoinType,
+    keys_out: Vec<NullableColumn>,
+    lout: Vec<NullableColumn>,
+    rout: Vec<NullableColumn>,
+) -> LocalFrame {
+    let mut cols = Vec::with_capacity(out_schema.len());
+    let mut masks = Vec::with_capacity(out_schema.len());
+    let mut push = |c: NullableColumn| {
+        cols.push(c.values);
+        masks.push(c.validity);
+    };
+    let mut keyed: Vec<Option<NullableColumn>> = keys_out.into_iter().map(Some).collect();
+    let mut louts = lout.into_iter();
+    for (n, _) in lschema.fields() {
+        if let Some(j) = on.iter().position(|(lk, _)| lk == n) {
+            push(keyed[j].take().expect("one key column per pair"));
+        } else {
+            push(louts.next().expect("left payload column"));
+        }
+    }
+    if how.keeps_right_columns() {
+        let mut routs = rout.into_iter();
+        for (n, _) in rschema.fields() {
+            if on.iter().any(|(_, rk)| rk == n) {
+                continue;
+            }
+            push(routs.next().expect("right payload column"));
+        }
+    }
+    LocalFrame {
+        schema: out_schema,
+        cols,
+        masks,
+    }
+}
+
+/// Incremental partitioned-window state: the accumulated post-shuffle rows
+/// in shipped layout (frame columns + shipped expression columns), their
+/// sort-key rows, and a per-partition cache of finished aggregate outputs.
+/// A tick re-sorts (cheap, index-only) but re-*scans* only the partitions
+/// it touched.
+#[derive(Default)]
+struct WinAbsorber {
+    cols: Vec<Column>,
+    masks: Vec<Option<ValidityMask>>,
+    krows: Vec<KeyRow>,
+    cache: FxHashMap<KeyRow, Vec<NullableColumn>>,
+}
+
+impl WinAbsorber {
+    fn absorb(
+        &mut self,
+        out_schema: Schema,
+        partition_by: &[String],
+        order_by: &[(String, SortOrder)],
+        aggs: &[WindowAgg],
+        frame: &LocalFrame,
+        comm: &Comm,
+    ) -> Result<(LocalFrame, u64, u64)> {
+        // pre-shuffle half of the batch interpreter's partitioned-window
+        // block, over the delta rows only
+        let mut expr_cols: Vec<Option<(Column, Option<ValidityMask>)>> =
+            Vec::with_capacity(aggs.len());
+        for a in aggs {
+            expr_cols.push(if a.func.is_positional() {
+                None
+            } else {
+                Some(eval_nullable(&a.input, frame)?)
+            });
+        }
+        let key_refs: Vec<MaskedCol> = partition_by
+            .iter()
+            .map(|k| frame.masked(k))
+            .collect::<Result<_>>()?;
+        let kc: Vec<&Column> = key_refs.iter().map(|(c, _)| *c).collect();
+        let km: Vec<Option<&ValidityMask>> = key_refs.iter().map(|(_, m)| *m).collect();
+        let keys_nullable = partition_by
+            .iter()
+            .any(|k| frame.schema.nullable_of(k).unwrap_or(false));
+        let with_flags = ops::KeyNullability::Static(keys_nullable)
+            .with_flags(comm, km.iter().any(|m| m.is_some()));
+        let packed = ops::PackedKeys::pack_masked(&kc, &km, with_flags)?;
+        let mut all: Vec<&Column> = frame.cols.iter().collect();
+        let mut masks: Vec<Option<&ValidityMask>> =
+            frame.masks.iter().map(|m| m.as_ref()).collect();
+        let mut ship_idx: Vec<Option<usize>> = Vec::with_capacity(aggs.len());
+        for ec in &expr_cols {
+            match ec {
+                Some((c, m)) => {
+                    ship_idx.push(Some(all.len()));
+                    all.push(c);
+                    masks.push(m.as_ref());
+                }
+                None => ship_idx.push(None),
+            }
+        }
+        let (shuffled, shuffled_masks) =
+            ops::shuffle_by_packed_nullable(comm, &packed, &all, &masks)?;
+        let n_new = shuffled.first().map_or(0, |c| c.len());
+        // delta sort-key rows, composed exactly like the batch sort
+        let mut sort_cols: Vec<&Column> = Vec::new();
+        let mut sort_masks: Vec<Option<&ValidityMask>> = Vec::new();
+        let mut orders: Vec<SortOrder> = Vec::new();
+        for k in partition_by {
+            let i = frame.schema.index_of(k).expect("validated by typing");
+            sort_cols.push(&shuffled[i]);
+            sort_masks.push(shuffled_masks[i].as_ref());
+            orders.push(SortOrder::Asc);
+        }
+        for (k, o) in order_by {
+            let i = frame.schema.index_of(k).expect("validated by typing");
+            sort_cols.push(&shuffled[i]);
+            sort_masks.push(shuffled_masks[i].as_ref());
+            orders.push(*o);
+        }
+        let new_krows = key_rows_nullable(&sort_cols, &sort_masks)?;
+        let old_len = self.krows.len();
+        self.krows.extend(new_krows);
+        append_side(&mut self.cols, &mut self.masks, &shuffled, &shuffled_masks);
+        let np = partition_by.len();
+        // the stable sort keys arrival order within ties, and accumulated
+        // arrival order equals batch arrival order — so this argsort is
+        // the batch argsort
+        let (idx, group_starts, breaks) = ops::partition_runs(&self.krows, np, &orders);
+        let n_rows = idx.len();
+        let mut outs_parts: Vec<Option<NullableColumn>> = vec![None; aggs.len()];
+        let mut processed = n_new as u64;
+        let mut avoided = 0u64;
+        for (gi, &start) in group_starts.iter().enumerate() {
+            let end = group_starts.get(gi + 1).copied().unwrap_or(n_rows);
+            let part_idx = &idx[start..end];
+            let pkey: KeyRow = self.krows[idx[start]][..np].to_vec();
+            let touched = part_idx.iter().any(|&j| j >= old_len);
+            let part_outs: Vec<NullableColumn> = if touched {
+                processed += (end - start) as u64;
+                let mut v = Vec::with_capacity(aggs.len());
+                for (a, si) in aggs.iter().zip(&ship_idx) {
+                    let out = match si {
+                        Some(si) => {
+                            let ec = self.cols[*si].take(part_idx);
+                            let em = normalize_mask(
+                                self.masks[*si].as_ref().map(|m| m.take(part_idx)),
+                            );
+                            ops::window_over_groups(
+                                &ec,
+                                em.as_ref(),
+                                &a.frame,
+                                &a.func,
+                                &[0],
+                                Some(&breaks[start..end]),
+                            )?
+                        }
+                        None => {
+                            let part = match &a.func {
+                                WindowFunc::RowNumber => ops::row_numbers(end - start, 0),
+                                WindowFunc::Rank => {
+                                    ops::rank_from_breaks(&breaks[start..end])
+                                }
+                                other => unreachable!("non-positional {other} not shipped"),
+                            };
+                            NullableColumn::from_column(part)
+                        }
+                    };
+                    v.push(out);
+                }
+                self.cache.insert(pkey, v.clone());
+                v
+            } else {
+                avoided += (end - start) as u64;
+                self.cache
+                    .get(&pkey)
+                    .context("stream: window cache miss on untouched partition")?
+                    .clone()
+            };
+            for (acc, p) in outs_parts.iter_mut().zip(part_outs) {
+                *acc = Some(match acc.take() {
+                    None => p,
+                    Some(a) => concat_nullable(a, &p),
+                });
+            }
+        }
+        let outs: Vec<NullableColumn> = aggs
+            .iter()
+            .zip(outs_parts)
+            .map(|(a, o)| match o {
+                Some(o) => o,
+                None => NullableColumn::from_column(Column::new_empty(
+                    out_schema
+                        .dtype_of(&a.out)
+                        .expect("window output column in schema"),
+                )),
+            })
+            .collect();
+        let ncols = frame.cols.len();
+        let mut cols_sorted: Vec<Column> = Vec::with_capacity(ncols);
+        let mut masks_sorted: Vec<Option<ValidityMask>> = Vec::with_capacity(ncols);
+        for i in 0..ncols {
+            cols_sorted.push(self.cols[i].take(&idx));
+            masks_sorted.push(normalize_mask(self.masks[i].as_ref().map(|m| m.take(&idx))));
+        }
+        let sorted_frame = LocalFrame {
+            schema: frame.schema.clone(),
+            cols: cols_sorted,
+            masks: masks_sorted,
+        };
+        let out = exec::assemble_window_output(sorted_frame, aggs, outs, out_schema)?;
+        Ok((out, processed, avoided))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{col, lit, AggFn};
+    use crate::frame::HiFrames;
+    use crate::types::Value;
+
+    fn t(pairs: Vec<(&str, Column)>) -> Table {
+        Table::from_pairs(pairs).unwrap()
+    }
+
+    #[test]
+    fn roles_and_explain_mark_stateful_nodes() {
+        let hf = HiFrames::with_workers(2);
+        let df = hf
+            .table("events", t(vec![("k", Column::I64(vec![])), ("v", Column::I64(vec![]))]))
+            .group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .build();
+        let s = hf.session(&df).unwrap();
+        assert!(!s.is_fallback());
+        let plan = s.explain_incremental();
+        assert!(plan.contains("[stateful]"), "{plan}");
+        assert!(plan.contains("[delta]"), "{plan}");
+    }
+
+    #[test]
+    fn sort_rooted_plan_falls_back() {
+        let hf = HiFrames::with_workers(2);
+        let df = hf
+            .table("events", t(vec![("k", Column::I64(vec![1, 2]))]))
+            .sort_by_keys(&[("k", SortOrder::Desc)]);
+        let s = hf.session(&df).unwrap();
+        assert!(s.is_fallback());
+        assert!(s.explain_incremental().contains("fallback reason"), "explain names the reason");
+    }
+
+    #[test]
+    fn push_rejects_schema_and_null_violations() {
+        let hf = HiFrames::with_workers(2);
+        let df = hf
+            .table("events", t(vec![("k", Column::I64(vec![])), ("v", Column::I64(vec![]))]))
+            .group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .build();
+        let mut s = hf.session(&df).unwrap();
+        let err = s
+            .push("nope", t(vec![("k", Column::I64(vec![1]))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no appendable source"), "{err}");
+        let err = s
+            .push("events", t(vec![("k", Column::I64(vec![1]))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // nulls in a column the plan typed non-nullable are rejected
+        let bad = t(vec![("k", Column::I64(vec![1, 0])), ("v", Column::I64(vec![5, 0]))])
+            .with_null_mask("v", ValidityMask::from_bools(&[true, false]))
+            .unwrap();
+        let err = s.push("events", bad).unwrap_err().to_string();
+        assert!(err.contains("non-nullable"), "{err}");
+    }
+
+    #[test]
+    fn group_by_session_agrees_with_batch_over_three_ticks() {
+        let hf = HiFrames::with_workers(2);
+        let schema_df = hf
+            .table("events", t(vec![("k", Column::I64(vec![])), ("v", Column::I64(vec![]))]))
+            .group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .agg("n", AggFn::Count, col("v"))
+            .build();
+        let mut s = hf.session(&schema_df).unwrap();
+        let batches = [
+            t(vec![("k", Column::I64(vec![1, 2, 1])), ("v", Column::I64(vec![10, 20, 30]))]),
+            t(vec![("k", Column::I64(vec![3])), ("v", Column::I64(vec![7]))]),
+            t(vec![("k", Column::I64(vec![2, 3])), ("v", Column::I64(vec![1, 2]))]),
+        ];
+        for b in batches {
+            s.push("events", b).unwrap();
+            let ticked = s.tick().unwrap();
+            let oracle = s.collect_batch().unwrap();
+            assert_eq!(ticked.num_rows(), oracle.num_rows());
+            for i in 0..ticked.num_cols() {
+                assert_eq!(ticked.column_at(i), oracle.column_at(i), "col {i}");
+                assert_eq!(ticked.mask_at(i), oracle.mask_at(i), "mask {i}");
+            }
+        }
+        assert_eq!(s.num_ticks(), 3);
+        let r = s.last_report().unwrap();
+        assert!(!r.fallback);
+        assert!(r.rows_avoided > 0, "later ticks must avoid refolding old rows");
+    }
+
+    #[test]
+    fn delta_append_filter_plan_accumulates_rows() {
+        let hf = HiFrames::with_workers(3);
+        let df = hf
+            .table("events", t(vec![("v", Column::I64(vec![]))]))
+            .filter(col("v").ge(lit(10i64)));
+        let mut s = hf.session(&df).unwrap();
+        assert!(!s.is_fallback());
+        s.push("events", t(vec![("v", Column::I64(vec![5, 11, 3]))])).unwrap();
+        let out = s.tick().unwrap();
+        assert_eq!(out.column("v").unwrap().get(0), Value::I64(11));
+        s.push("events", t(vec![("v", Column::I64(vec![42]))])).unwrap();
+        let out = s.tick().unwrap();
+        assert_eq!(out.num_rows(), 2);
+        let oracle = s.collect_batch().unwrap();
+        assert_eq!(out.column("v").unwrap(), oracle.column("v").unwrap());
+    }
+}

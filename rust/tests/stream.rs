@@ -1,0 +1,389 @@
+//! Incremental micro-batch execution (DESIGN.md §4.9): after any number of
+//! ticks, a standing query's `tick()` output must be **byte-identical** —
+//! values and validity masks — to a cold batch `collect()` over the union
+//! of all pushed batches. The suite sweeps tick sizes (1 row, a prime, the
+//! whole input at once) × worker counts × nullable keys across every
+//! stateful operator (group-by with all aggregate functions, inner/left
+//! hash join, partitioned window) plus the delta-append row-wise path, the
+//! multi-operator standing-query shape, and the tracked full-recompute
+//! fallback.
+
+use hiframes::datagen::Rng;
+use hiframes::exec::ExecOptions;
+use hiframes::frame::DataFrame;
+use hiframes::ops::aggregate::AggStrategy;
+use hiframes::passes::PassOptions;
+use hiframes::prelude::*;
+use hiframes::types::JoinType;
+
+/// The session forces tick-replicable knobs (raw-shuffle aggregation, no
+/// skew joins, no spilling); the cold-collect oracle context must match so
+/// "cold batch collect" means the same physical plan.
+fn opts(workers: usize) -> ExecOptions {
+    ExecOptions {
+        workers,
+        agg_strategy: AggStrategy::RawShuffle,
+        mem_budget: None,
+        profile: false,
+        passes: PassOptions {
+            skew_join: false,
+            ..Default::default()
+        },
+    }
+}
+
+fn ctx(workers: usize) -> HiFrames {
+    HiFrames::new(opts(workers))
+}
+
+fn assert_identical(a: &Table, b: &Table, what: &str) {
+    assert_eq!(a.schema().names(), b.schema().names(), "{what}: schema");
+    assert_eq!(a.num_rows(), b.num_rows(), "{what}: row count");
+    for i in 0..a.num_cols() {
+        assert_eq!(a.column_at(i), b.column_at(i), "{what}: column {i}");
+        assert_eq!(a.mask_at(i), b.mask_at(i), "{what}: mask {i}");
+    }
+}
+
+/// `n` event rows: key `k` in [0, 6) (nullable when asked, ~1/5 null),
+/// `v` i64 in [-50, 50), `x` exact-binary f64.
+fn events_master(n: usize, nullable_key: bool, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let k: Vec<i64> = (0..n).map(|_| rng.i64_range(0, 6)).collect();
+    let v: Vec<i64> = (0..n).map(|_| rng.i64_range(-50, 50)).collect();
+    let x: Vec<f64> = (0..n)
+        .map(|_| rng.i64_range(0, 1000) as f64 / 8.0)
+        .collect();
+    let valid: Vec<bool> = (0..n).map(|_| rng.i64_range(0, 5) != 0).collect();
+    let mut t = Table::from_pairs(vec![
+        ("k", Column::I64(k)),
+        ("v", Column::I64(v)),
+        ("x", Column::F64(x)),
+    ])
+    .unwrap();
+    if nullable_key {
+        t = t
+            .with_null_mask("k", ValidityMask::from_bools(&valid))
+            .unwrap();
+    }
+    t
+}
+
+/// Drive `master` through a fresh session of `pipeline` in `tick_rows`
+/// chunks, asserting byte-identity against the session's own batch oracle
+/// at checkpoints and against an external cold collect at the end.
+fn check_ticked(
+    workers: usize,
+    tick_rows: usize,
+    master: &Table,
+    pipeline: &dyn Fn(DataFrame) -> DataFrame,
+    expect_incremental: bool,
+) {
+    let hf = ctx(workers);
+    let seed = Table::empty(master.schema().clone());
+    let df = pipeline(hf.table("events", seed));
+    let mut s = hf.session(&df).unwrap();
+    assert_eq!(
+        !s.is_fallback(),
+        expect_incremental,
+        "w={workers} t={tick_rows}: unexpected mode\n{}",
+        s.explain_incremental()
+    );
+    let mut start = 0;
+    let mut ticks = 0usize;
+    while start < master.num_rows() {
+        let len = tick_rows.min(master.num_rows() - start);
+        s.push("events", master.slice(start, len)).unwrap();
+        start += len;
+        ticks += 1;
+        let out = s.tick().unwrap();
+        if ticks % 5 == 0 || start == master.num_rows() {
+            let oracle = s.collect_batch().unwrap();
+            assert_identical(
+                &out,
+                &oracle,
+                &format!("w={workers} tick_rows={tick_rows} after {start} rows"),
+            );
+        }
+    }
+    // an empty tick must leave the output unchanged
+    let stable = s.tick().unwrap();
+    let cold = pipeline(hf.table("events", master.clone()))
+        .collect()
+        .unwrap();
+    assert_identical(
+        &stable,
+        &cold,
+        &format!("w={workers} tick_rows={tick_rows} final vs cold collect"),
+    );
+}
+
+const TICK_SIZES: [usize; 3] = [1, 7, usize::MAX];
+
+#[test]
+fn group_by_all_agg_fns_agree_across_tick_sizes() {
+    let pipeline = |df: DataFrame| {
+        df.group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .agg("n", AggFn::Count, col("v"))
+            .agg("m", AggFn::Mean, col("x"))
+            .agg("lo", AggFn::Min, col("v"))
+            .agg("hi", AggFn::Max, col("v"))
+            .agg("vr", AggFn::Var, col("x"))
+            .agg("f", AggFn::First, col("v"))
+            .build()
+    };
+    for workers in [2usize, 3] {
+        for nullable in [false, true] {
+            let master = events_master(61, nullable, 7 + workers as u64);
+            for tick_rows in TICK_SIZES {
+                check_ticked(workers, tick_rows, &master, &pipeline, true);
+            }
+        }
+    }
+}
+
+#[test]
+fn group_by_with_nullable_agg_inputs_agrees() {
+    // nulls in the aggregated column exercise the null-skip fold rules
+    let mut rng = Rng::new(11);
+    let n = 53;
+    let valid: Vec<bool> = (0..n).map(|_| rng.i64_range(0, 3) != 0).collect();
+    let master = events_master(n, true, 23)
+        .with_null_mask("v", ValidityMask::from_bools(&valid))
+        .unwrap();
+    let pipeline = |df: DataFrame| {
+        df.group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .agg("n", AggFn::Count, col("v"))
+            .agg("m", AggFn::Mean, col("v"))
+            .build()
+    };
+    for tick_rows in TICK_SIZES {
+        check_ticked(2, tick_rows, &master, &pipeline, true);
+    }
+}
+
+/// Two-source joins need their own driver: pushes alternate between the
+/// probe and build sides so some ticks leave the build side untouched
+/// (the append-only probe fast path) and some grow it (full local
+/// re-join).
+fn check_join(workers: usize, tick_rows: usize, how: JoinType) {
+    let hf = ctx(workers);
+    let lmaster = events_master(47, true, 31);
+    let mut rng = Rng::new(5);
+    let m = 19;
+    let rk: Vec<i64> = (0..m).map(|_| rng.i64_range(0, 6)).collect();
+    let rz: Vec<i64> = (0..m).map(|_| rng.i64_range(0, 100)).collect();
+    let rmaster = Table::from_pairs(vec![("rk", Column::I64(rk)), ("z", Column::I64(rz))])
+        .unwrap();
+    let lseed = Table::empty(lmaster.schema().clone());
+    let rseed = Table::empty(rmaster.schema().clone());
+    let build = |l: DataFrame, r: &DataFrame| l.join_on(r, &[("k", "rk")], how);
+    let left = hf.table("l", lseed);
+    let right = hf.table("r", rseed);
+    let df = build(left, &right);
+    let mut s = hf.session(&df).unwrap();
+    assert!(!s.is_fallback(), "{}", s.explain_incremental());
+    let (mut ls, mut rs) = (0usize, 0usize);
+    let mut ticks = 0usize;
+    while ls < lmaster.num_rows() || rs < rmaster.num_rows() {
+        // grow the build side only every third tick
+        if ticks % 3 == 2 && rs < rmaster.num_rows() {
+            let len = tick_rows.min(rmaster.num_rows() - rs);
+            s.push("r", rmaster.slice(rs, len)).unwrap();
+            rs += len;
+        } else if ls < lmaster.num_rows() {
+            let len = tick_rows.min(lmaster.num_rows() - ls);
+            s.push("l", lmaster.slice(ls, len)).unwrap();
+            ls += len;
+        } else {
+            let len = tick_rows.min(rmaster.num_rows() - rs);
+            s.push("r", rmaster.slice(rs, len)).unwrap();
+            rs += len;
+        }
+        ticks += 1;
+        let out = s.tick().unwrap();
+        if ticks % 4 == 0 || (ls == lmaster.num_rows() && rs == rmaster.num_rows()) {
+            let oracle = s.collect_batch().unwrap();
+            assert_identical(
+                &out,
+                &oracle,
+                &format!("join {how:?} w={workers} tick_rows={tick_rows} tick {ticks}"),
+            );
+        }
+    }
+    let cold = build(
+        hf.table("l", lmaster.clone()),
+        &hf.table("r", rmaster.clone()),
+    )
+    .collect()
+    .unwrap();
+    let last = s.tick().unwrap();
+    assert_identical(
+        &last,
+        &cold,
+        &format!("join {how:?} w={workers} tick_rows={tick_rows} vs cold collect"),
+    );
+}
+
+#[test]
+fn inner_join_agrees_across_tick_sizes() {
+    for workers in [2usize, 3] {
+        for tick_rows in TICK_SIZES {
+            check_join(workers, tick_rows, JoinType::Inner);
+        }
+    }
+}
+
+#[test]
+fn left_join_agrees_across_tick_sizes() {
+    for workers in [2usize, 3] {
+        for tick_rows in TICK_SIZES {
+            check_join(workers, tick_rows, JoinType::Left);
+        }
+    }
+}
+
+#[test]
+fn partitioned_window_agrees_across_tick_sizes() {
+    let pipeline = |df: DataFrame| {
+        df.window()
+            .partition_by(&["k"])
+            .order_by(&[("v", SortOrder::Asc), ("x", SortOrder::Desc)])
+            .rank("r")
+            .agg("cs", WindowFunc::Sum, col("v"))
+            .build()
+    };
+    for workers in [2usize, 3] {
+        for nullable in [false, true] {
+            let master = events_master(43, nullable, 17 + workers as u64);
+            for tick_rows in TICK_SIZES {
+                check_ticked(workers, tick_rows, &master, &pipeline, true);
+            }
+        }
+    }
+}
+
+#[test]
+fn row_wise_delta_append_agrees() {
+    // no stateful operator at all: the completion itself is delta-capable,
+    // so ticks gather only new output rows and append driver-side
+    let pipeline = |df: DataFrame| {
+        df.filter(col("v").ge(lit(0i64)))
+            .with_column("v2", col("v").add(col("v")))
+            .select(&["k", "v2"])
+    };
+    for workers in [2usize, 3] {
+        let master = events_master(37, true, 41);
+        for tick_rows in TICK_SIZES {
+            check_ticked(workers, tick_rows, &master, &pipeline, true);
+        }
+    }
+}
+
+#[test]
+fn standing_query_pipeline_agrees() {
+    // the BigBench Q01 shape: multi-column aggregate -> left join against a
+    // dimension -> partitioned rank -> top-K filter. The aggregate keeps
+    // state; the join and window replay over its (small) output.
+    let hf = ctx(3);
+    let master = events_master(59, false, 3);
+    let dim = Table::from_pairs(vec![
+        ("dk", Column::I64(vec![0, 1, 2, 3, 4, 5])),
+        ("cat", Column::I64(vec![10, 10, 20, 20, 30, 30])),
+    ])
+    .unwrap();
+    let pipeline = |events: DataFrame, dim: &DataFrame| {
+        events
+            .group_by(&["k"])
+            .agg("n", AggFn::Count, col("v"))
+            .agg("rev", AggFn::Sum, col("v"))
+            .build()
+            .join_on(dim, &[("k", "dk")], JoinType::Left)
+            .window()
+            .partition_by(&["cat"])
+            .order_by(&[("rev", SortOrder::Desc), ("k", SortOrder::Asc)])
+            .rank("r")
+            .build()
+            .filter(col("r").le(lit(2i64)))
+    };
+    let seed = Table::empty(master.schema().clone());
+    let df = pipeline(hf.table("events", seed), &hf.table("dim", dim.clone()));
+    let mut s = hf.session(&df).unwrap();
+    assert!(!s.is_fallback(), "{}", s.explain_incremental());
+    assert!(
+        s.explain_incremental().contains("[stateful]"),
+        "aggregate must keep state:\n{}",
+        s.explain_incremental()
+    );
+    let mut start = 0;
+    while start < master.num_rows() {
+        let len = 7.min(master.num_rows() - start);
+        s.push("events", master.slice(start, len)).unwrap();
+        start += len;
+        let out = s.tick().unwrap();
+        let oracle = s.collect_batch().unwrap();
+        assert_identical(&out, &oracle, &format!("standing query after {start} rows"));
+    }
+    let cold = pipeline(hf.table("events", master.clone()), &hf.table("dim", dim))
+        .collect()
+        .unwrap();
+    let last = s.tick().unwrap();
+    assert_identical(&last, &cold, "standing query vs cold collect");
+    let r = s.last_report().unwrap();
+    assert!(!r.fallback);
+    assert!(
+        r.rows_avoided > 0,
+        "the aggregate must avoid refolding absorbed rows: {r:?}"
+    );
+}
+
+#[test]
+fn unsupported_plan_falls_back_to_tracked_full_recompute() {
+    // a Sort at the root has no incremental handle: the session must agree
+    // with the batch oracle anyway, via whole-plan recompute, and say so
+    let pipeline = |df: DataFrame| {
+        df.group_by(&["k"])
+            .agg("s", AggFn::Sum, col("v"))
+            .build()
+            .sort_by_keys(&[("s", SortOrder::Desc), ("k", SortOrder::Asc)])
+    };
+    let master = events_master(31, true, 13);
+    check_ticked(2, 7, &master, &pipeline, false);
+
+    // and the global counters record the fallbacks
+    let before = hiframes::metrics::stream_stats().snapshot();
+    let hf = ctx(2);
+    let df = pipeline(hf.table("events", Table::empty(master.schema().clone())));
+    let mut s = hf.session(&df).unwrap();
+    assert!(s.is_fallback());
+    s.push("events", master.slice(0, 9)).unwrap();
+    s.tick().unwrap();
+    let after = hiframes::metrics::stream_stats().snapshot();
+    assert!(after.fallbacks > before.fallbacks, "{before:?} -> {after:?}");
+}
+
+#[test]
+fn later_ticks_avoid_work() {
+    // the whole point: per-tick processed rows must track the delta, not
+    // the accumulated history
+    let hf = ctx(2);
+    let master = events_master(60, false, 29);
+    let df = hf
+        .table("events", Table::empty(master.schema().clone()))
+        .group_by(&["k"])
+        .agg("s", AggFn::Sum, col("v"))
+        .build();
+    let mut s = hf.session(&df).unwrap();
+    for i in 0..6 {
+        s.push("events", master.slice(i * 10, 10)).unwrap();
+        s.tick().unwrap();
+    }
+    let reports = s.reports();
+    assert_eq!(reports.len(), 6);
+    let last = reports[5];
+    assert_eq!(last.rows_processed, 10, "only the delta is folded");
+    assert_eq!(last.rows_avoided, 50, "absorbed history is not re-read");
+    assert!(reports[0].rows_avoided == 0);
+}
